@@ -1,0 +1,50 @@
+"""Layer-1: the gradient *encode* combine as a Pallas kernel.
+
+Worker `n`'s coded block is `Σ_k c_k · g_k[block]` — a coefficient-weighted
+reduction over the `s+1` shard gradients it holds. The kernel tiles the
+coordinate axis (`L` can be large) and keeps the small coefficient vector
+resident; one pass per output tile.
+
+In the deployed system the Rust coordinator performs this combine (the
+paper's cost model omits encode/decode cost because it is ~`(s+1)·L` flops
+against `(M/N)·b·L` for the gradients). The kernel exists so the *fused*
+"coded gradient" artifact (`model.coded_grad`) can compute
+`Σ_k c_k · ∇F(D_k; θ)` entirely inside one HLO module — used by the
+single-level fast path and benchmarked in §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Coordinate-axis tile.
+BL = 512
+
+
+def _encode_kernel(c_ref, g_ref, o_ref):
+    # o[l] = Σ_k c[k] · g[k, l] for one tile of l.
+    o_ref[...] = jnp.sum(c_ref[...][:, None] * g_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("bl",))
+def pl_encode(coeffs, grads, bl=BL):
+    """Weighted reduction `coeffs @ grads` with `coeffs: [K]`,
+    `grads: [K, L] → [L]`, tiled over `L`."""
+    k, l = grads.shape
+    assert coeffs.shape == (k,), f"coeffs {coeffs.shape} vs grads {grads.shape}"
+    lp = (l + bl - 1) // bl * bl
+    gp = jnp.pad(grads, ((0, 0), (0, lp - l))) if lp != l else grads
+    out = pl.pallas_call(
+        _encode_kernel,
+        grid=(lp // bl,),
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k, bl), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bl,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((lp,), jnp.float32),
+        interpret=True,
+    )(coeffs, gp)
+    return out[:l]

@@ -1,0 +1,105 @@
+"""Layer-1: tiled Pallas matmul — the compute hot-spot of every model here.
+
+The shard-gradient graphs (Layer 2) are matmul-dominated: `Xθ`, `Xᵀr`,
+MLP forward (`X·W1`, `A·W2`) and backward (`Aᵀ·dZ2`, `dZ2·W2ᵀ`, `Xᵀ·dZ1`).
+All of them route through `pl_matmul`, a Pallas kernel with an explicit
+HBM→VMEM tiling schedule via `BlockSpec`:
+
+* grid `(M/bm, N/bn, K/bk)`, MXU-aligned default tiles `128×128×128`;
+* the output tile lives in VMEM across the `k` sweep (revisiting grid —
+  the accumulator never round-trips to HBM);
+* f32 accumulation.
+
+TPU mapping notes (DESIGN.md §Hardware-Adaptation): the paper is
+hardware-agnostic (cost model in CPU cycles), so there is no CUDA kernel
+to port; the adaptation is the choice of VMEM-resident accumulator tiles
+and 128-alignment for the MXU systolic array. On this CPU-only image the
+kernel runs under `interpret=True` (real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute); numerics are identical.
+
+`pl_matmul` carries a `jax.custom_vjp` whose backward pass is two more
+`pl_matmul` calls, so `jax.grad` of any Layer-2 model lowers *every*
+matmul — forward and backward — through this kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile sizes (see module docstring).
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile; k is the innermost grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(a, rows, cols):
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def _ceil_mul(v, m):
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _matmul_pallas(x, y, bm=BM, bn=BN, bk=BK):
+    """Raw tiled matmul on padded operands."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul shape mismatch {x.shape} @ {y.shape}"
+    mp, np_, kp = _ceil_mul(m, bm), _ceil_mul(n, bn), _ceil_mul(k, bk)
+    xp = _pad_to(x, mp, kp)
+    yp = _pad_to(y, kp, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def pl_matmul(x, y):
+    """`x @ y` through the Pallas kernel, differentiable (VJP is two more
+    Pallas matmuls)."""
+    return _matmul_pallas(x, y)
+
+
+def _fwd(x, y):
+    return _matmul_pallas(x, y), (x, y)
+
+
+def _bwd(res, g):
+    x, y = res
+    gx = _matmul_pallas(g, y.T)
+    gy = _matmul_pallas(x.T, g)
+    return gx, gy
+
+
+pl_matmul.defvjp(_fwd, _bwd)
+
+
+def vmem_footprint_bytes(bm=BM, bn=BN, bk=BK, dtype_bytes=4):
+    """Estimated VMEM residency of one grid step: x-tile + y-tile +
+    accumulator tile (used for the §Perf roofline table)."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)

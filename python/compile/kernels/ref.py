@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels and the Layer-2 models.
+
+Everything here is the *specification*; pytest asserts the Pallas/L2
+implementations match it (`assert_allclose`), which is the core
+correctness signal of the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def encode_ref(coeffs, grads):
+    return jnp.einsum("k,kl->l", coeffs, grads)
+
+
+# ---------------------------------------------------------------- linreg
+
+def linreg_loss_ref(theta, x, y):
+    """½‖Xθ − y‖² summed over the shard; y: [m, 1]."""
+    r = x @ theta - y[:, 0]
+    return 0.5 * jnp.sum(r * r)
+
+
+def linreg_grad_ref(theta, x, y):
+    r = x @ theta - y[:, 0]
+    return x.T @ r
+
+
+# ------------------------------------------------------------------- mlp
+
+def mlp_unflatten(theta, d, h, c):
+    """Split the flat parameter vector into (W1, b1, W2, b2)."""
+    i = 0
+    w1 = theta[i : i + d * h].reshape(d, h)
+    i += d * h
+    b1 = theta[i : i + h]
+    i += h
+    w2 = theta[i : i + h * c].reshape(h, c)
+    i += h * c
+    b2 = theta[i : i + c]
+    return w1, b1, w2, b2
+
+
+def mlp_dim(d, h, c):
+    return d * h + h + h * c + c
+
+
+def mlp_loss_ref(theta, x, y, *, hidden):
+    """Summed softmax cross-entropy of the one-hidden-layer ReLU MLP.
+    `y` is one-hot `[m, c]`."""
+    d = x.shape[1]
+    c = y.shape[1]
+    w1, b1, w2, b2 = mlp_unflatten(theta, d, hidden, c)
+    z1 = x @ w1 + b1
+    a = jax.nn.relu(z1)
+    logits = a @ w2 + b2
+    logz = jax.scipy.special.logsumexp(logits, axis=1)
+    return jnp.sum(logz - jnp.sum(y * logits, axis=1))
+
+
+def mlp_grad_ref(theta, x, y, *, hidden):
+    return jax.grad(mlp_loss_ref)(theta, x, y, hidden=hidden)

@@ -1,0 +1,74 @@
+"""Layer-2: the per-worker shard-gradient compute graphs.
+
+Each model family exposes `*_loss(theta, x, y)` and `*_grad(theta, x, y)`
+over a **flat** parameter vector and one data shard; gradients are sums
+(not means) over the shard's samples so the master's decoded gradient is
+exactly `∇F = Σ_n ∇F(D_n; θ)`.
+
+All matmuls — forward and backward — lower through the Layer-1 Pallas
+kernel (`kernels.matmul.pl_matmul`, which carries a custom VJP built from
+itself). `jax.grad` of these functions therefore produces an HLO module
+whose hot loops are the Pallas tiles.
+
+`coded_grad` additionally fuses the gradient-code combine
+(`kernels.encode.pl_encode`) so a worker's entire contribution for a
+single-level code is one executable call.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.encode import pl_encode
+from .kernels.matmul import pl_matmul
+
+# ---------------------------------------------------------------- linreg
+
+
+def linreg_loss(theta, x, y):
+    """½‖Xθ − y‖² summed over the shard (y: [m, 1])."""
+    pred = pl_matmul(x, theta[:, None])[:, 0]
+    r = pred - y[:, 0]
+    return 0.5 * jnp.sum(r * r)
+
+
+def linreg_grad(theta, x, y):
+    """Closed-form `Xᵀ(Xθ − y)` through the Pallas kernel."""
+    pred = pl_matmul(x, theta[:, None])[:, 0]
+    r = pred - y[:, 0]
+    return pl_matmul(x.T, r[:, None])[:, 0]
+
+
+# ------------------------------------------------------------------- mlp
+
+
+def mlp_loss(theta, x, y, *, hidden):
+    """Summed softmax-CE of the one-hidden-layer ReLU MLP (y one-hot)."""
+    d = x.shape[1]
+    c = y.shape[1]
+    w1, b1, w2, b2 = ref.mlp_unflatten(theta, d, hidden, c)
+    z1 = pl_matmul(x, w1) + b1
+    a = jax.nn.relu(z1)
+    logits = pl_matmul(a, w2) + b2
+    logz = jax.scipy.special.logsumexp(logits, axis=1)
+    return jnp.sum(logz - jnp.sum(y * logits, axis=1))
+
+
+def mlp_grad(theta, x, y, *, hidden):
+    """`jax.grad` of `mlp_loss` — backward matmuls are Pallas too (custom
+    VJP on `pl_matmul`)."""
+    return jax.grad(mlp_loss)(theta, x, y, hidden=hidden)
+
+
+# ---------------------------------------------------- fused coded gradient
+
+
+def coded_grad(theta, xs, ys, coeffs, *, hidden):
+    """Worker-side fused contribution for a single-level code:
+    `Σ_k coeffs[k] · ∇F(D_k; θ)` with `xs: [K, m, d]`, `ys: [K, m, c]`.
+
+    The shard gradients are computed by the Pallas-backed model and the
+    combine by the Pallas encode kernel, all in one HLO module.
+    """
+    grads = jax.vmap(lambda xk, yk: mlp_grad(theta, xk, yk, hidden=hidden))(xs, ys)
+    return pl_encode(coeffs, grads)

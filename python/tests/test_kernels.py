@@ -1,0 +1,131 @@
+"""Layer-1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes (divisible and ragged vs the tile sizes) and the
+values' scale; assert_allclose against ref.py is the core signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.encode import pl_encode
+from compile.kernels.matmul import pl_matmul, vmem_footprint_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+# ------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_hypothesis(m, k, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(k1, m, k)
+    y = rand(k2, k, n)
+    got = pl_matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    assert got.shape == want.shape
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (128, 128, 128),  # exactly one tile
+        (256, 384, 128),  # multi-tile, divisible
+        (1, 1, 1),        # degenerate
+        (127, 129, 3),    # ragged on every axis
+        (130, 64, 200),
+    ],
+)
+def test_matmul_shapes(m, k, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * 7 + k * 3 + n))
+    x = rand(k1, m, k)
+    y = rand(k2, k, n)
+    # Tiled accumulation reorders the f32 sums vs XLA's dot — allow the
+    # corresponding rounding slack (grows with k).
+    assert_allclose(
+        np.asarray(pl_matmul(x, y)),
+        np.asarray(ref.matmul_ref(x, y)),
+        rtol=1e-4,
+        atol=1e-3,
+    )
+
+
+def test_matmul_large_scale_values():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = rand(k1, 64, 64, scale=100.0)
+    y = rand(k2, 64, 64, scale=100.0)
+    assert_allclose(
+        np.asarray(pl_matmul(x, y)),
+        np.asarray(ref.matmul_ref(x, y)),
+        rtol=1e-4,
+        atol=1e-2,
+    )
+
+
+def test_matmul_gradient_flows_through_custom_vjp():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = rand(k1, 17, 9)
+    y = rand(k2, 9, 5)
+
+    def f(x, y):
+        return jnp.sum(pl_matmul(x, y) ** 2)
+
+    def f_ref(x, y):
+        return jnp.sum(ref.matmul_ref(x, y) ** 2)
+
+    gx, gy = jax.grad(f, argnums=(0, 1))(x, y)
+    gx_ref, gy_ref = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    assert_allclose(np.asarray(gx), np.asarray(gx_ref), rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(gy), np.asarray(gy_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_footprint_within_budget():
+    # Default tiles must fit comfortably in 16 MiB VMEM.
+    assert vmem_footprint_bytes() <= 16 * 1024 * 1024 // 4
+
+
+# -------------------------------------------------------------- encode
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 8),
+    l=st.integers(1, 2000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_encode_matches_ref_hypothesis(k, l, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    coeffs = rand(k1, k)
+    grads = rand(k2, k, l)
+    got = pl_encode(coeffs, grads)
+    want = ref.encode_ref(coeffs, grads)
+    assert got.shape == (l,)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_encode_exact_tile_boundary():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    coeffs = rand(k1, 3)
+    grads = rand(k2, 3, 1024)  # exactly two 512-tiles
+    assert_allclose(
+        np.asarray(pl_encode(coeffs, grads)),
+        np.asarray(ref.encode_ref(coeffs, grads)),
+        rtol=1e-5,
+        atol=1e-5,
+    )

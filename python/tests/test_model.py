@@ -1,0 +1,132 @@
+"""Layer-2 model correctness: Pallas-backed graphs vs pure-jnp reference
+gradients (jax.grad of ref losses), plus the decomposition property the
+coding layer relies on (shard gradients sum to the full gradient)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def data(seed, m, d, c=None):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (m, d), dtype=jnp.float32) / np.sqrt(d)
+    if c is None:
+        y = jax.random.normal(k2, (m, 1), dtype=jnp.float32)
+        return x, y
+    labels = jax.random.randint(k2, (m,), 0, c)
+    y = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    return x, y
+
+
+# ------------------------------------------------------------- linreg
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 64), d=st.integers(1, 96), seed=st.integers(0, 10**6))
+def test_linreg_grad_matches_ref(m, d, seed):
+    x, y = data(seed, m, d)
+    theta = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,), dtype=jnp.float32)
+    got = model.linreg_grad(theta, x, y)
+    want = ref.linreg_grad_ref(theta, x, y)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+    # And the closed-form grad equals autodiff of the Pallas loss.
+    auto = jax.grad(model.linreg_loss)(theta, x, y)
+    assert_allclose(np.asarray(got), np.asarray(auto), rtol=1e-4, atol=1e-4)
+
+
+def test_linreg_loss_matches_ref():
+    x, y = data(7, 32, 16)
+    theta = jax.random.normal(jax.random.PRNGKey(8), (16,), dtype=jnp.float32)
+    assert_allclose(
+        float(model.linreg_loss(theta, x, y)),
+        float(ref.linreg_loss_ref(theta, x, y)),
+        rtol=1e-5,
+    )
+
+
+# ------------------------------------------------------------------ mlp
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 32),
+    d=st.integers(2, 24),
+    h=st.integers(2, 48),
+    c=st.integers(2, 8),
+    seed=st.integers(0, 10**6),
+)
+def test_mlp_grad_matches_ref(m, d, h, c, seed):
+    x, y = data(seed, m, d, c)
+    dim = ref.mlp_dim(d, h, c)
+    theta = 0.3 * jax.random.normal(jax.random.PRNGKey(seed + 1), (dim,), dtype=jnp.float32)
+    got = model.mlp_grad(theta, x, y, hidden=h)
+    want = ref.mlp_grad_ref(theta, x, y, hidden=h)
+    assert got.shape == (dim,)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_mlp_loss_matches_ref():
+    x, y = data(3, 16, 8, 5)
+    dim = ref.mlp_dim(8, 12, 5)
+    theta = 0.3 * jax.random.normal(jax.random.PRNGKey(4), (dim,), dtype=jnp.float32)
+    assert_allclose(
+        float(model.mlp_loss(theta, x, y, hidden=12)),
+        float(ref.mlp_loss_ref(theta, x, y, hidden=12)),
+        rtol=1e-5,
+    )
+
+
+def test_shard_grads_sum_to_full_gradient():
+    """The decomposition property gradient coding relies on."""
+    d, h, c, m, shards = 6, 10, 3, 24, 4
+    x, y = data(11, m, d, c)
+    dim = ref.mlp_dim(d, h, c)
+    theta = 0.3 * jax.random.normal(jax.random.PRNGKey(12), (dim,), dtype=jnp.float32)
+    per = m // shards
+    total = jnp.zeros(dim)
+    for s in range(shards):
+        xs = x[s * per : (s + 1) * per]
+        ys = y[s * per : (s + 1) * per]
+        total = total + model.mlp_grad(theta, xs, ys, hidden=h)
+    full = model.mlp_grad(theta, x, y, hidden=h)
+    assert_allclose(np.asarray(total), np.asarray(full), rtol=1e-3, atol=1e-3)
+
+
+def test_coded_grad_fuses_encode():
+    d, h, c, m, k = 5, 8, 3, 6, 3
+    dim = ref.mlp_dim(d, h, c)
+    key = jax.random.PRNGKey(21)
+    ks = jax.random.split(key, 4)
+    theta = 0.3 * jax.random.normal(ks[0], (dim,), dtype=jnp.float32)
+    xs = jax.random.normal(ks[1], (k, m, d), dtype=jnp.float32)
+    labels = jax.random.randint(ks[2], (k, m), 0, c)
+    ys = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    coeffs = jax.random.normal(ks[3], (k,), dtype=jnp.float32)
+    got = model.coded_grad(theta, xs, ys, coeffs, hidden=h)
+    want = sum(
+        coeffs[i] * ref.mlp_grad_ref(theta, xs[i], ys[i], hidden=h) for i in range(k)
+    )
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_mlp_gd_reduces_loss():
+    """A few full-batch GD steps on the Pallas-backed model must descend."""
+    d, h, c, m = 8, 16, 4, 64
+    x, y = data(31, m, d, c)
+    dim = ref.mlp_dim(d, h, c)
+    theta = 0.1 * jax.random.normal(jax.random.PRNGKey(32), (dim,), dtype=jnp.float32)
+    loss0 = float(model.mlp_loss(theta, x, y, hidden=h))
+    grad = functools.partial(model.mlp_grad, hidden=h)
+    for _ in range(40):
+        theta = theta - 0.02 * grad(theta, x, y)
+    loss1 = float(model.mlp_loss(theta, x, y, hidden=h))
+    assert loss1 < 0.8 * loss0, (loss0, loss1)

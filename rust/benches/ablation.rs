@@ -1,0 +1,185 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! 1. Subgradient iteration budget vs solution quality (cold start —
+//!    measures the solver itself, without the closed-form safety net's
+//!    candidates winning the playoff).
+//! 2. Warm start (closed form) vs cold start (uniform).
+//! 3. Coding granularity: free coordinates vs chunked layers vs whole
+//!    tensors (footnotes 2–3 extension).
+//! 4. Heterogeneous per-coordinate work: weighted optimizer vs
+//!    count-based optimizer under a skewed workload (footnote 4).
+//! 5. Non-i.i.d. robustness: the paper assumes i.i.d. workers; how much
+//!    does the i.i.d.-optimized partition lose when one worker is
+//!    persistently k× slower?
+//!
+//! Run: `cargo bench --bench ablation`
+
+use bcgc::bench_harness::{banner, Table};
+use bcgc::distribution::order_stats::shifted_exp_exact;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::distribution::CycleTimeDistribution;
+use bcgc::optimizer::closed_form;
+use bcgc::optimizer::evaluate::compare_schemes;
+use bcgc::optimizer::layered::{chunked_layer_sizes, layer_aligned_partition, mlp_layer_sizes};
+use bcgc::optimizer::rounding::round_to_blocks;
+use bcgc::optimizer::runtime_model::{expected_tau_hat, ProblemSpec, WorkModel};
+use bcgc::optimizer::subgradient::{self, SubgradientOptions};
+use bcgc::optimizer::weighted;
+use bcgc::util::rng::Rng;
+
+fn main() {
+    banner("ablations", "design-choice studies (see bench source for details)");
+    let n = 20usize;
+    let l = 20_000usize;
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let spec = ProblemSpec::paper_default(n, l);
+    let os = shifted_exp_exact(&dist, n);
+
+    // ---------------------------------------------- 1. iteration budget
+    println!("\n[1] subgradient iterations vs quality (cold start, no playoff net)");
+    let mut t1 = Table::new(&["iters", "E[tau] (CRN)", "vs closed form x^(f)"]);
+    let xf = closed_form::x_freq(&spec, &os).unwrap();
+    let mut crn = Rng::new(505);
+    let xf_val =
+        expected_tau_hat(&spec, &xf, &dist, WorkModel::GradientCoding, 3000, &mut crn).mean();
+    for iters in [100usize, 500, 2000, 8000] {
+        let mut rng = Rng::new(42); // same stochastic path prefix
+        let opts = SubgradientOptions {
+            iters,
+            playoff_trials: 1, // effectively disable the playoff net
+            ..Default::default()
+        };
+        let sol = subgradient::solve(&spec, &dist, None, &opts, &mut rng).unwrap();
+        let mut crn = Rng::new(505);
+        let val = expected_tau_hat(&spec, &sol.x, &dist, WorkModel::GradientCoding, 3000, &mut crn)
+            .mean();
+        t1.row(&[
+            iters.to_string(),
+            format!("{:.3e}", val),
+            format!("{:+.1}%", (val / xf_val - 1.0) * 100.0),
+        ]);
+    }
+    t1.print();
+
+    // ---------------------------------------------- 2. warm vs cold
+    println!("\n[2] warm start (x^(f)) vs cold start (uniform), 2000 iters");
+    let mut t2 = Table::new(&["start", "E[tau] (CRN)"]);
+    for (name, warm) in [("cold (uniform)", None), ("warm (x^(f))", Some(xf.clone()))] {
+        let mut rng = Rng::new(43);
+        let opts = SubgradientOptions { iters: 2000, playoff_trials: 1, ..Default::default() };
+        let sol = subgradient::solve(&spec, &dist, warm, &opts, &mut rng).unwrap();
+        let mut crn = Rng::new(606);
+        let val = expected_tau_hat(&spec, &sol.x, &dist, WorkModel::GradientCoding, 3000, &mut crn)
+            .mean();
+        t2.row(&[name.to_string(), format!("{:.3e}", val)]);
+    }
+    t2.print();
+
+    // ---------------------------------------------- 3. coding granularity
+    println!("\n[3] coding granularity (footnotes 2-3): free vs chunked vs whole tensors");
+    let layers = mlp_layer_sizes(64, 256, 10); // L = 19210
+    let l3: usize = layers.iter().sum();
+    let spec3 = ProblemSpec::paper_default(n, l3);
+    let os3 = shifted_exp_exact(&dist, n);
+    let x3 = closed_form::x_time(&spec3, &os3).unwrap();
+    let schemes = vec![
+        ("free coordinates".to_string(), round_to_blocks(&x3, l3)),
+        (
+            "512-chunked layers".to_string(),
+            layer_aligned_partition(&x3, &chunked_layer_sizes(&layers, 512)).unwrap(),
+        ),
+        (
+            "whole tensors (4 layers)".to_string(),
+            layer_aligned_partition(&x3, &layers).unwrap(),
+        ),
+    ];
+    let mut rng = Rng::new(44);
+    let rows = compare_schemes(&spec3, &schemes, &dist, 3000, &mut rng);
+    let mut t3 = Table::new(&["granularity", "E[tau]", "levels used", "penalty vs free"]);
+    let free = rows[0].mean();
+    for (row, (_, p)) in rows.iter().zip(schemes.iter()) {
+        t3.row(&[
+            row.label.clone(),
+            format!("{:.3e}", row.mean()),
+            p.levels_used().to_string(),
+            format!("{:+.1}%", (row.mean() / free - 1.0) * 100.0),
+        ]);
+    }
+    t3.print();
+
+    // ---------------------------------------------- 4. weighted work
+    println!("\n[4] heterogeneous per-coordinate work (footnote 4): head 10% costs 10x");
+    let lw = 2000usize;
+    let specw = ProblemSpec::paper_default(n, lw);
+    let mut weights = vec![1.0; lw];
+    for w in weights.iter_mut().take(lw / 10) {
+        *w = 10.0;
+    }
+    let weighted_p = weighted::closed_form_weighted(&specw, &os.t, &weights).unwrap();
+    let count_p = round_to_blocks(&closed_form::x_time(&specw, &os).unwrap(), lw);
+    let mut t4 = Table::new(&["optimizer", "E[tau_w] (CRN, 3000 trials)"]);
+    let mut rngw = Rng::new(77);
+    let trials = 3000;
+    let mut acc_w = 0.0;
+    let mut acc_c = 0.0;
+    for _ in 0..trials {
+        let times = dist.sample_vec(n, &mut rngw);
+        acc_w += weighted::tau_weighted(&specw, &weighted_p.s_vector(), &weights, &times);
+        acc_c += weighted::tau_weighted(&specw, &count_p.s_vector(), &weights, &times);
+    }
+    t4.row(&["mass-aware (weighted)".into(), format!("{:.3e}", acc_w / trials as f64)]);
+    t4.row(&["count-based (paper base)".into(), format!("{:.3e}", acc_c / trials as f64)]);
+    t4.print();
+    println!(
+        "\nmass-aware gain over count-based: {:.1}%",
+        (1.0 - acc_w / acc_c) * 100.0
+    );
+
+    // ---------------------------------------------- 5. non-iid robustness
+    println!("\n[5] non-iid robustness: worker 0 persistently k-times slower");
+    println!("    (schemes optimized under the iid assumption, evaluated non-iid)");
+    use bcgc::optimizer::runtime_model::tau_hat;
+    let xf_blocks = round_to_blocks(&xf, l);
+    // Remedy variant: floor every block at redundancy ≥ 1 (the level-0
+    // block is the only one that must wait for *every* worker, so it is
+    // the single point of failure under a persistent straggler).
+    let floored = {
+        let mut sizes = xf_blocks.sizes().to_vec();
+        sizes[1] += sizes[0];
+        sizes[0] = 0;
+        bcgc::optimizer::blocks::BlockPartition::new(sizes)
+    };
+    let single = bcgc::optimizer::baselines::single_bcgc(&spec, &os);
+    let uncoded = bcgc::optimizer::baselines::uncoded(&spec);
+    let mut t5 = Table::new(&[
+        "slowdown k",
+        "E[tau] x^(f)",
+        "E[tau] x^(f), s>=1 floor",
+        "E[tau] single-BCGC",
+        "E[tau] uncoded",
+    ]);
+    for k in [1.0f64, 2.0, 5.0, 10.0] {
+        let mut rng5 = Rng::new(808);
+        let trials = 3000;
+        let mut acc = [0.0f64; 4];
+        for _ in 0..trials {
+            let mut times = dist.sample_vec(n, &mut rng5);
+            times[0] *= k; // persistent straggler, violating iid
+            for (a, p) in acc.iter_mut().zip([&xf_blocks, &floored, &single, &uncoded]) {
+                *a += tau_hat(&spec, &p.as_f64(), &times, WorkModel::GradientCoding);
+            }
+        }
+        t5.row(&[
+            format!("{k}x"),
+            format!("{:.3e}", acc[0] / trials as f64),
+            format!("{:.3e}", acc[1] / trials as f64),
+            format!("{:.3e}", acc[2] / trials as f64),
+            format!("{:.3e}", acc[3] / trials as f64),
+        ]);
+    }
+    t5.print();
+    println!("\nfinding: the iid-optimal partition's level-0 block must wait for ALL");
+    println!("workers, so a ≥5x persistent straggler erases its lead; flooring every");
+    println!("block at s ≥ 1 (one coordinate-shift of the partition) restores");
+    println!("robustness at a small iid-regime premium. Uncoded degrades linearly.");
+}

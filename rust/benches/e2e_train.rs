@@ -1,0 +1,75 @@
+//! End-to-end coordinator benchmark: coded distributed GD throughput and
+//! the coordination overhead split (decode, virtual-runtime accounting),
+//! coded vs uncoded, on the host backend (PJRT compute time would
+//! dominate and mask coordination costs; the PJRT path is validated in
+//! tests and exercised by `examples/train_mlp.rs`).
+//!
+//! Run: `cargo bench --bench e2e_train`
+
+use bcgc::bench_harness::{banner, fmt_ns, Table};
+use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+use bcgc::data::synthetic;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::optimizer::solver::{solve, SchemeKind, SolveOptions};
+use bcgc::runtime::host::{HostExecutor, HostModel};
+use bcgc::runtime::host_factory;
+use bcgc::util::rng::Rng;
+
+fn main() {
+    banner(
+        "E2E — coded distributed GD throughput (host backend)",
+        "N=8 workers, 16-class MLP (d=32, h=64), 60 steps per scheme.",
+    );
+    let n = 8usize;
+    let (d, h, c, shard) = (32usize, 64usize, 16usize, 64usize);
+    let dim = HostExecutor::mlp_dim(d, h, c);
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let spec = ProblemSpec::new(n, dim, shard * n, 1.0);
+    let steps = 60usize;
+
+    let mut table = Table::new(&[
+        "scheme",
+        "steps/s",
+        "wall/iter",
+        "decode/iter",
+        "decode share",
+        "E[virtual runtime]",
+        "cache hit rate",
+    ]);
+    for kind in [
+        SchemeKind::Uncoded,
+        SchemeKind::SingleBlock,
+        SchemeKind::ClosedFormFreq,
+        SchemeKind::OptimalSubgradient,
+    ] {
+        let mut rng = Rng::new(11);
+        let ds = synthetic::classification(d, c, shard * n, n, 0.2, 5).unwrap();
+        let factory = host_factory(ds, HostModel::Mlp { hidden: h });
+        let blocks = solve(&spec, &dist, kind, &SolveOptions::fast(), &mut rng).unwrap();
+        let mut cfg = TrainConfig::new(spec, blocks);
+        cfg.steps = steps;
+        cfg.lr = 1e-3;
+        cfg.eval_every = 0;
+        cfg.seed = 11;
+        let t0 = std::time::Instant::now();
+        let report = Trainer::new(cfg, Box::new(dist.clone()), factory).run().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let wall_iter = report.wall_ns_stats().mean();
+        let decode_iter = report.decode_ns_stats().mean();
+        let hits = report.decode_cache_hits as f64;
+        let total = hits + report.decode_cache_misses as f64;
+        table.row(&[
+            kind.label().to_string(),
+            format!("{:.1}", steps as f64 / wall),
+            fmt_ns(wall_iter),
+            fmt_ns(decode_iter),
+            format!("{:.2}%", 100.0 * decode_iter / wall_iter),
+            format!("{:.0}", report.virtual_runtime_stats().mean()),
+            format!("{:.0}%", 100.0 * hits / total.max(1.0)),
+        ]);
+    }
+    table.print();
+    println!("\nthe decode share is the coordinator's overhead on the real hot path;");
+    println!("virtual runtime is the paper's Eq. (2) metric (lower = better scheme).");
+}

@@ -1,0 +1,57 @@
+//! Fig. 3 reproduction: the optimized block structures
+//! x̂†, x̂^(t), x̂^(f) at N = 20, L = 2·10⁴, μ = 10⁻³, t0 = 50.
+//!
+//! The paper's qualitative claim: the first block (no redundancy) and the
+//! last block (tolerating N−1 stragglers) contain most of the L
+//! coordinates. Printed as block tables plus an ASCII profile of the
+//! per-level sizes.
+//!
+//! Run: `cargo bench --bench fig3_blocks`
+
+use bcgc::bench_harness::{banner, Table};
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::runtime_model::{expected_runtime, ProblemSpec};
+use bcgc::optimizer::solver::{solve, SchemeKind, SolveOptions};
+use bcgc::util::rng::Rng;
+
+fn bar(value: usize, max: usize, width: usize) -> String {
+    let filled = (value * width + max / 2) / max.max(1);
+    "#".repeat(filled)
+}
+
+fn main() {
+    banner(
+        "Fig. 3 — optimized block structures",
+        "N=20, L=2e4, shifted-exponential(mu=1e-3, t0=50), M=50, b=1.",
+    );
+    let spec = ProblemSpec::paper_default(20, 20_000);
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let mut rng = Rng::new(2021);
+    let opts = SolveOptions::default();
+
+    for kind in SchemeKind::proposed() {
+        let p = solve(&spec, &dist, kind, &opts, &mut rng).unwrap();
+        let stats = expected_runtime(&spec, &p, &dist, 4000, &mut rng);
+        println!(
+            "\n--- {} ---   E[runtime] = {:.0} ± {:.0}",
+            kind.label(),
+            stats.mean(),
+            stats.ci95_half_width()
+        );
+        let max = p.sizes().iter().copied().max().unwrap_or(1);
+        let mut table = Table::new(&["s (tolerated stragglers)", "x_s", "profile"]);
+        for (s, &sz) in p.sizes().iter().enumerate() {
+            if sz > 0 {
+                table.row(&[s.to_string(), sz.to_string(), bar(sz, max, 40)]);
+            }
+        }
+        table.print();
+        // The paper's shape claim.
+        let ends = p.sizes()[0] + p.sizes()[19];
+        println!(
+            "first+last blocks hold {:.0}% of the {} coordinates",
+            100.0 * ends as f64 / p.total() as f64,
+            p.total()
+        );
+    }
+}

@@ -1,0 +1,66 @@
+//! Fig. 4(b) reproduction: expected overall runtime vs the straggler rate
+//! μ ∈ 10^{-3} … 10^{-2} (log-spaced), at t0 = 50, L = 2·10⁴, M = 50,
+//! b = 1. The paper does not state N for this sweep; we use N = 30
+//! (mid-range of Fig. 4(a)) — see DESIGN.md §5.
+//!
+//! Paper headline to reproduce in shape: all series decrease with μ
+//! (E[T] = 1/μ + t0 shrinks); ~44% reduction vs the best baseline at
+//! μ = 10^{-2.6}.
+//!
+//! Run: `cargo bench --bench fig4b_vs_mu`
+
+use bcgc::bench_harness::{banner, Table};
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::evaluate::{compare_schemes, reduction_vs_best_baseline};
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::optimizer::solver::{solve, SchemeKind, SolveOptions};
+use bcgc::util::rng::Rng;
+
+fn main() {
+    banner(
+        "Fig. 4(b) — E[overall runtime] vs straggler rate mu",
+        "N=30, L=2e4, t0=50, M=50, b=1; mu log-spaced in [1e-3, 1e-2]; 2000 CRN trials/point.",
+    );
+    let n = 30usize;
+    let kinds: Vec<SchemeKind> = SchemeKind::proposed()
+        .into_iter()
+        .chain(SchemeKind::baselines())
+        .collect();
+
+    let mut headers: Vec<String> = vec!["mu".into()];
+    headers.extend(kinds.iter().map(|k| k.label().to_string()));
+    headers.push("reduction vs best baseline".into());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+
+    let mut prev_proposed = f64::INFINITY;
+    for exp in [-3.0f64, -2.8, -2.6, -2.4, -2.2, -2.0] {
+        let mu = 10f64.powf(exp);
+        let dist = ShiftedExponential::new(mu, 50.0);
+        let spec = ProblemSpec::paper_default(n, 20_000);
+        let mut rng = Rng::new(4242 + (exp * -10.0) as u64);
+        let opts = SolveOptions::default();
+        let mut schemes = Vec::new();
+        for &kind in &kinds {
+            let p = solve(&spec, &dist, kind, &opts, &mut rng).unwrap();
+            schemes.push((kind.label().to_string(), p));
+        }
+        let rows = compare_schemes(&spec, &schemes, &dist, 2000, &mut rng);
+        let proposed_best = rows[..3].iter().map(|r| r.mean()).fold(f64::INFINITY, f64::min);
+        let baselines: Vec<f64> = rows[3..].iter().map(|r| r.mean()).collect();
+        let red = reduction_vs_best_baseline(proposed_best, &baselines);
+        let mut cells: Vec<String> = vec![format!("1e{exp:.1}")];
+        cells.extend(rows.iter().map(|r| format!("{:.0}", r.mean())));
+        cells.push(format!("{red:.0}%"));
+        table.row(&cells);
+
+        assert!(
+            proposed_best <= prev_proposed * 1.02,
+            "proposed runtime should decrease with mu"
+        );
+        prev_proposed = proposed_best;
+    }
+    table.print();
+    println!("\nexpected shape: every series decreases with mu (mean cycle time 1/mu + t0);");
+    println!("paper quotes ~44% reduction vs best baseline at mu = 1e-2.6.");
+}

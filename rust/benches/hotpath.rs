@@ -1,0 +1,122 @@
+//! Micro-benchmarks of the coordinator hot path, used by the §Perf pass:
+//! runtime-model evaluation, simplex projection, block encode, decode
+//! (cold/cached), straggler sampling, event-sim playout.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use bcgc::bench_harness::{banner, black_box, fmt_ns, Bencher, Table};
+use bcgc::coding::decoder::DecodeCache;
+use bcgc::coding::scheme::CodingScheme;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::distribution::CycleTimeDistribution;
+use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::optimizer::projection::{project_simplex, project_simplex_bisect};
+use bcgc::optimizer::rounding::round_to_blocks;
+use bcgc::optimizer::runtime_model::{sort_times, tau_hat_sorted, ProblemSpec, WorkModel};
+use bcgc::sim::{simulate_iteration, SimConfig};
+use bcgc::util::rng::Rng;
+
+fn main() {
+    banner("hot path micro-benchmarks", "N=20 (paper's Fig. 3 scale) unless noted.");
+    let n = 20usize;
+    let l = 20_000usize;
+    let spec = ProblemSpec::paper_default(n, l);
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let mut rng = Rng::new(3);
+    let b = Bencher::new(5, 25);
+
+    // A representative optimized partition.
+    let os = bcgc::distribution::order_stats::shifted_exp_exact(&dist, n);
+    let xf = bcgc::optimizer::closed_form::x_freq(&spec, &os).unwrap();
+    let blocks = round_to_blocks(&xf, l);
+    let scheme = CodingScheme::new(blocks.clone(), &mut rng).unwrap();
+    let x = blocks.as_f64();
+    let mut times = dist.sample_vec(n, &mut rng);
+    sort_times(&mut times);
+
+    let mut table = Table::new(&["op", "median", "p10", "p90"]);
+    let mut add = |name: &str, s: bcgc::bench_harness::Sample| {
+        table.row(&[
+            name.to_string(),
+            fmt_ns(s.median_ns()),
+            fmt_ns(s.p10_ns()),
+            fmt_ns(s.p90_ns()),
+        ]);
+    };
+
+    add("tau_hat eval (Eq. 5)", b.run("tau", || {
+        black_box(tau_hat_sorted(&spec, &x, &times, WorkModel::GradientCoding))
+    }));
+
+    let v: Vec<f64> = (0..n).map(|_| rng.normal_with(1000.0, 300.0)).collect();
+    add("simplex projection (sort)", b.run("proj", || black_box(project_simplex(&v, l as f64))));
+    add(
+        "simplex projection (bisect)",
+        b.run("projb", || black_box(project_simplex_bisect(&v, l as f64, 1e-9))),
+    );
+
+    // Worker-side block encode over full-dim shard grads.
+    let max_s = scheme.blocks().max_level();
+    let shard_grads: Vec<Vec<f64>> = (0..max_s + 1)
+        .map(|_| (0..l).map(|_| rng.normal()).collect())
+        .collect();
+    let ranges = scheme.ranges();
+    add("encode all blocks (1 worker)", b.run("encode", || {
+        let mut acc = 0.0;
+        for r in &ranges {
+            let out = scheme.encode_block_range(0, r, &shard_grads);
+            acc += out[0];
+        }
+        acc
+    }));
+
+    // Master-side decode of the largest block, cold vs cached.
+    let r_big = *ranges.iter().max_by_key(|r| r.len()).unwrap();
+    let code = scheme.code(r_big.s);
+    let survivors: Vec<usize> = (0..n - r_big.s).collect();
+    let contributions: Vec<Vec<f64>> = (0..n - r_big.s)
+        .map(|_| (0..r_big.len()).map(|_| rng.normal()).collect())
+        .collect();
+    add("decode vector solve (cold)", b.run("dcold", || {
+        black_box(bcgc::coding::decoder::decode_vector(code, &survivors).unwrap())
+    }));
+    let mut cache = DecodeCache::new(64);
+    let _ = cache.get(code, &survivors).unwrap();
+    add("decode block (cached vec + combine)", b.run("dhot", || {
+        let a = cache.get(code, &survivors).unwrap().to_vec();
+        let picked: Vec<&[f64]> = contributions.iter().map(|c| c.as_slice()).collect();
+        black_box(bcgc::coding::decoder::decode(&a, &picked))
+    }));
+
+    add("straggler sample+sort (N=20)", b.run("sample", || {
+        let mut t = dist.sample_vec(n, &mut rng);
+        sort_times(&mut t);
+        t[0]
+    }));
+
+    add("event-sim playout (N=20)", b.run("sim", || {
+        black_box(simulate_iteration(&spec, &blocks, &times, &SimConfig::default()))
+    }));
+
+    // Scaling spot-check at N=50.
+    {
+        let n2 = 50usize;
+        let spec2 = ProblemSpec::paper_default(n2, l);
+        let dist2 = ShiftedExponential::new(1e-3, 50.0);
+        let os2 = bcgc::distribution::order_stats::shifted_exp_exact(&dist2, n2);
+        let xf2 = bcgc::optimizer::closed_form::x_freq(&spec2, &os2).unwrap();
+        let blocks2 = round_to_blocks(&xf2, l);
+        let mut t2 = dist2.sample_vec(n2, &mut rng);
+        sort_times(&mut t2);
+        let x2 = blocks2.as_f64();
+        add("tau_hat eval (N=50)", b.run("tau50", || {
+            black_box(tau_hat_sorted(&spec2, &x2, &t2, WorkModel::GradientCoding))
+        }));
+        add("event-sim playout (N=50)", b.run("sim50", || {
+            black_box(simulate_iteration(&spec2, &blocks2, &t2, &SimConfig::default()))
+        }));
+    }
+
+    table.print();
+    let _ = BlockPartition::single_level(2, 0, 2); // keep import used
+}

@@ -1,0 +1,92 @@
+//! §V complexity claims: the stochastic projected subgradient method
+//! costs O(N log N) per iteration here (the paper bounds it O(N²) with a
+//! dense projection), the closed forms cost O(N) given the order-stat
+//! vectors, and decode-vector solves are cached on the hot path.
+//!
+//! Run: `cargo bench --bench opt_complexity`
+
+use bcgc::bench_harness::{banner, black_box, fmt_ns, Bencher, Table};
+use bcgc::coding::decoder::{decode_vector, DecodeCache};
+use bcgc::coding::encoder::GradientCode;
+use bcgc::distribution::order_stats::shifted_exp_exact;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::distribution::CycleTimeDistribution;
+use bcgc::optimizer::closed_form;
+use bcgc::optimizer::projection::project_simplex;
+use bcgc::optimizer::runtime_model::{sort_times, tau_hat_argmax, ProblemSpec, WorkModel};
+use bcgc::util::rng::Rng;
+
+fn main() {
+    banner(
+        "§V — optimizer cost scaling",
+        "per-iteration subgradient step, closed-form solve, decode solve vs N.",
+    );
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let b = Bencher::new(3, 15);
+
+    let mut table = Table::new(&[
+        "N",
+        "subgradient iter",
+        "x^(t) closed form",
+        "order stats (exact)",
+        "decode solve (cold)",
+        "decode (cached)",
+    ]);
+    for n in [10usize, 20, 50, 100] {
+        let spec = ProblemSpec::paper_default(n, 20_000);
+        let os = shifted_exp_exact(&dist, n);
+        let mut rng = Rng::new(n as u64);
+        let mut x = vec![20_000.0 / n as f64; n];
+        let mut t = vec![0.0; n];
+
+        // One full subgradient iteration: sample, sort, argmax, step, project.
+        let s_iter = b.run("subgrad", || {
+            for v in t.iter_mut() {
+                *v = dist.sample(&mut rng);
+            }
+            sort_times(&mut t);
+            let (nstar, _) = tau_hat_argmax(&spec, &x, &t, WorkModel::GradientCoding);
+            let ta = t[n - 1 - nstar];
+            for (i, xi) in x.iter_mut().enumerate() {
+                if i <= nstar {
+                    *xi -= 1e-4 * ta * (i + 1) as f64;
+                }
+            }
+            x = project_simplex(&x, 20_000.0);
+            x[0]
+        });
+
+        let s_cf = b.run("closed-form", || {
+            black_box(closed_form::x_time(&spec, &os).unwrap())
+        });
+
+        let s_os = b.run("order-stats", || {
+            black_box(shifted_exp_exact(&dist, n))
+        });
+
+        // Decode solves at a mid redundancy level.
+        let s = n / 3;
+        let code = GradientCode::cyclic_mds(n, s, &mut rng).unwrap();
+        let survivors: Vec<usize> = (0..n - s).collect();
+        let s_cold = b.run("decode-cold", || {
+            black_box(decode_vector(&code, &survivors).unwrap())
+        });
+        let mut cache = DecodeCache::new(64);
+        let _ = cache.get(&code, &survivors).unwrap();
+        let s_hot = b.run("decode-hot", || {
+            cache.get(&code, &survivors).map(|a| a[0]).unwrap()
+        });
+
+        table.row(&[
+            n.to_string(),
+            fmt_ns(s_iter.median_ns()),
+            fmt_ns(s_cf.median_ns()),
+            fmt_ns(s_os.median_ns()),
+            fmt_ns(s_cold.median_ns()),
+            fmt_ns(s_hot.median_ns()),
+        ]);
+    }
+    table.print();
+    println!("\nsubgradient iteration should scale ~N log N; closed form ~N;");
+    println!("cached decode should be orders of magnitude under the cold solve.");
+}

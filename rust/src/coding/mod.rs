@@ -1,0 +1,18 @@
+//! Gradient coding codec — a from-scratch implementation of Tandon et
+//! al.'s gradient codes [1], generalized to *per-block* redundancy levels
+//! as required by the paper's coordinate gradient coding scheme (§III).
+//!
+//! For a redundancy level `s`, worker `n` holds the `s+1` data subsets
+//! `I_n = {j ⊕ (n−1) : j ∈ [s+1]}` (cyclic allocation, [`assignment`])
+//! and sends the coded combination `Σ_i B[n,i]·g_i` of their partial
+//! gradients; the master recovers `Σ_i g_i` from **any** `N − s` workers
+//! by solving for a decode vector `a` with `aᵀ·B_S = 1ᵀ` ([`decoder`]).
+//!
+//! Two constructions are provided ([`encoder`]):
+//! * **Cyclic MDS** (Tandon Alg. 1) — works for every `(N, s)`.
+//! * **Fractional repetition** — simpler, requires `(s+1) | N`.
+
+pub mod assignment;
+pub mod decoder;
+pub mod encoder;
+pub mod scheme;

@@ -1,0 +1,242 @@
+//! Typed experiment configuration, loadable from a TOML-subset file
+//! (see `configs/` for the shipped experiment definitions).
+
+use std::path::Path;
+
+use crate::config::toml_lite::TomlDoc;
+use crate::distribution::{
+    gamma::Gamma, lognormal::LogNormal, pareto::Pareto, shifted_exp::ShiftedExponential,
+    weibull::Weibull, CycleTimeDistribution, Deterministic, TwoPoint,
+};
+use crate::optimizer::runtime_model::ProblemSpec;
+use crate::{Error, Result};
+
+/// A fully-specified experiment: problem dimensions, straggler model,
+/// Monte-Carlo budget and seed.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub workers: usize,
+    pub coords: usize,
+    pub samples: usize,
+    pub cycles_per_coord: f64,
+    pub trials: usize,
+    pub seed: u64,
+    pub distribution: DistConfig,
+}
+
+/// Straggler-model choice (mirrors `distribution::*`).
+#[derive(Debug, Clone)]
+pub enum DistConfig {
+    ShiftedExp { mu: f64, t0: f64 },
+    Weibull { shape: f64, scale: f64, shift: f64 },
+    Pareto { alpha: f64, xm: f64 },
+    TwoPoint { fast: f64, slow: f64, p_slow: f64 },
+    Deterministic { value: f64 },
+    LogNormal { mu: f64, sigma: f64, shift: f64 },
+    Gamma { shape: f64, scale: f64, shift: f64 },
+}
+
+impl DistConfig {
+    /// Instantiate the distribution object.
+    pub fn build(&self) -> Box<dyn CycleTimeDistribution> {
+        match *self {
+            DistConfig::ShiftedExp { mu, t0 } => Box::new(ShiftedExponential::new(mu, t0)),
+            DistConfig::Weibull { shape, scale, shift } => {
+                Box::new(Weibull::new(shape, scale, shift))
+            }
+            DistConfig::Pareto { alpha, xm } => Box::new(Pareto::new(alpha, xm)),
+            DistConfig::TwoPoint { fast, slow, p_slow } => {
+                Box::new(TwoPoint::new(fast, slow, p_slow))
+            }
+            DistConfig::Deterministic { value } => Box::new(Deterministic::new(value)),
+            DistConfig::LogNormal { mu, sigma, shift } => {
+                Box::new(LogNormal::new(mu, sigma, shift))
+            }
+            DistConfig::Gamma { shape, scale, shift } => Box::new(Gamma::new(shape, scale, shift)),
+        }
+    }
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "default".into(),
+            workers: 20,
+            coords: 20_000,
+            samples: 50,
+            cycles_per_coord: 1.0,
+            trials: 2000,
+            seed: 2021,
+            distribution: DistConfig::ShiftedExp { mu: 1e-3, t0: 50.0 },
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a TOML-subset document.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = doc.get_str("name") {
+            cfg.name = v.to_string();
+        }
+        if let Some(v) = doc.get_i64("workers") {
+            cfg.workers = usize::try_from(v)
+                .map_err(|_| Error::Config("workers must be positive".into()))?;
+        }
+        if let Some(v) = doc.get_i64("coords") {
+            cfg.coords =
+                usize::try_from(v).map_err(|_| Error::Config("coords must be positive".into()))?;
+        }
+        if let Some(v) = doc.get_i64("samples") {
+            cfg.samples = usize::try_from(v)
+                .map_err(|_| Error::Config("samples must be positive".into()))?;
+        }
+        if let Some(v) = doc.get_f64("cycles_per_coord") {
+            cfg.cycles_per_coord = v;
+        }
+        if let Some(v) = doc.get_i64("trials") {
+            cfg.trials =
+                usize::try_from(v).map_err(|_| Error::Config("trials must be positive".into()))?;
+        }
+        if let Some(v) = doc.get_i64("seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(kind) = doc.get_str("distribution.kind") {
+            cfg.distribution = match kind {
+                "shifted_exp" => DistConfig::ShiftedExp {
+                    mu: doc
+                        .get_f64("distribution.mu")
+                        .ok_or_else(|| Error::Config("shifted_exp needs mu".into()))?,
+                    t0: doc.get_f64("distribution.t0").unwrap_or(50.0),
+                },
+                "weibull" => DistConfig::Weibull {
+                    shape: doc
+                        .get_f64("distribution.shape")
+                        .ok_or_else(|| Error::Config("weibull needs shape".into()))?,
+                    scale: doc
+                        .get_f64("distribution.scale")
+                        .ok_or_else(|| Error::Config("weibull needs scale".into()))?,
+                    shift: doc.get_f64("distribution.shift").unwrap_or(0.0),
+                },
+                "pareto" => DistConfig::Pareto {
+                    alpha: doc
+                        .get_f64("distribution.alpha")
+                        .ok_or_else(|| Error::Config("pareto needs alpha".into()))?,
+                    xm: doc
+                        .get_f64("distribution.xm")
+                        .ok_or_else(|| Error::Config("pareto needs xm".into()))?,
+                },
+                "two_point" => DistConfig::TwoPoint {
+                    fast: doc
+                        .get_f64("distribution.fast")
+                        .ok_or_else(|| Error::Config("two_point needs fast".into()))?,
+                    slow: doc
+                        .get_f64("distribution.slow")
+                        .ok_or_else(|| Error::Config("two_point needs slow".into()))?,
+                    p_slow: doc.get_f64("distribution.p_slow").unwrap_or(0.5),
+                },
+                "lognormal" => DistConfig::LogNormal {
+                    mu: doc
+                        .get_f64("distribution.mu")
+                        .ok_or_else(|| Error::Config("lognormal needs mu".into()))?,
+                    sigma: doc
+                        .get_f64("distribution.sigma")
+                        .ok_or_else(|| Error::Config("lognormal needs sigma".into()))?,
+                    shift: doc.get_f64("distribution.shift").unwrap_or(0.0),
+                },
+                "gamma" => DistConfig::Gamma {
+                    shape: doc
+                        .get_f64("distribution.shape")
+                        .ok_or_else(|| Error::Config("gamma needs shape".into()))?,
+                    scale: doc
+                        .get_f64("distribution.scale")
+                        .ok_or_else(|| Error::Config("gamma needs scale".into()))?,
+                    shift: doc.get_f64("distribution.shift").unwrap_or(0.0),
+                },
+                "deterministic" => DistConfig::Deterministic {
+                    value: doc
+                        .get_f64("distribution.value")
+                        .ok_or_else(|| Error::Config("deterministic needs value".into()))?,
+                },
+                other => {
+                    return Err(Error::Config(format!("unknown distribution kind {other:?}")))
+                }
+            };
+        }
+        if cfg.workers == 0 || cfg.coords == 0 || cfg.samples == 0 {
+            return Err(Error::Config("workers/coords/samples must be ≥ 1".into()));
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_doc(&TomlDoc::load(path)?)
+    }
+
+    /// The [`ProblemSpec`] these dimensions define.
+    pub fn spec(&self) -> ProblemSpec {
+        ProblemSpec::new(self.workers, self.coords, self.samples, self.cycles_per_coord)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip() {
+        let cfg = ExperimentConfig::default();
+        let spec = cfg.spec();
+        assert_eq!(spec.n, 20);
+        assert_eq!(spec.coords, 20_000);
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let doc = TomlDoc::parse(
+            r#"
+            name = "fig4a"
+            workers = 30
+            coords = 20000
+            samples = 50
+            trials = 1000
+            seed = 7
+            [distribution]
+            kind = "shifted_exp"
+            mu = 1e-3
+            t0 = 50
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.workers, 30);
+        assert_eq!(cfg.seed, 7);
+        let d = cfg.distribution.build();
+        assert!((d.mean() - 1050.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_distribution_rejected() {
+        let doc = TomlDoc::parse("[distribution]\nkind = \"cauchy\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn all_dist_kinds_build() {
+        for (kind, extra) in [
+            ("shifted_exp", "mu = 0.001"),
+            ("weibull", "shape = 1.2\nscale = 5\nshift = 1"),
+            ("pareto", "alpha = 2.0\nxm = 1.0"),
+            ("two_point", "fast = 1\nslow = 6"),
+            ("deterministic", "value = 2"),
+            ("lognormal", "mu = 3\nsigma = 0.5\nshift = 10"),
+            ("gamma", "shape = 2\nscale = 100\nshift = 25"),
+        ] {
+            let text = format!("[distribution]\nkind = \"{kind}\"\n{extra}");
+            let cfg = ExperimentConfig::from_doc(&TomlDoc::parse(&text).unwrap()).unwrap();
+            let _ = cfg.distribution.build();
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment configuration substrate: a TOML-subset parser plus typed
+//! configs (no `serde`/`toml` crates in the offline environment).
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, `#` comments.
+
+pub mod experiment;
+pub mod toml_lite;
+
+pub use experiment::ExperimentConfig;
+pub use toml_lite::{TomlValue, TomlDoc};

@@ -1,0 +1,41 @@
+//! Message types exchanged between master and workers
+//! (std `mpsc`; no async runtime is available offline, and the message
+//! rates here — `N × blocks` per iteration — don't need one).
+
+use std::sync::Arc;
+
+/// Master → worker.
+pub enum WorkerTask {
+    /// Compute and stream all coded blocks for one GD iteration.
+    Compute {
+        iter: usize,
+        /// Current model parameters (shared, read-only).
+        theta: Arc<Vec<f32>>,
+        /// This worker's sampled CPU cycle time `T_n` for the iteration
+        /// (drives virtual completion stamps and real pacing).
+        cycle_time: f64,
+    },
+    /// Clean shutdown.
+    Shutdown,
+}
+
+/// Worker → master: one coded block.
+pub struct BlockContribution {
+    pub iter: usize,
+    pub worker: usize,
+    /// Index into the scheme's non-empty block ranges.
+    pub block_idx: usize,
+    /// Virtual completion time of this block at this worker:
+    /// `(M/N)·b·T_n·Σ_{l ≤ block end}(s_l+1)` — Eq. (2)'s inner term.
+    pub virtual_time: f64,
+    /// The coded partial derivatives for the block's coordinates.
+    pub coded: Vec<f64>,
+}
+
+/// Worker → master control-plane event.
+pub enum WorkerEvent {
+    Block(BlockContribution),
+    /// The worker failed (executor error, poisoned state…); carries a
+    /// description. The master treats it as a permanent straggler.
+    Failed { worker: usize, iter: usize, reason: String },
+}

@@ -1,0 +1,225 @@
+//! Master-side iteration engine: broadcast, collect, decode-on-arrival.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coding::decoder::{decode, DecodeCache};
+use crate::coding::scheme::CodingScheme;
+use crate::coordinator::channel::{BlockContribution, WorkerEvent, WorkerTask};
+use crate::{Error, Result};
+
+/// Outcome of one collected iteration.
+pub struct IterOutcome {
+    /// The exact full gradient `Σ_n g_n`.
+    pub gradient: Vec<f64>,
+    /// Wall ns the master spent inside decode solves/combines.
+    pub decode_ns: u64,
+    /// Contributions that arrived after their block had decoded.
+    pub late_contributions: usize,
+    /// Workers that reported failure this iteration.
+    pub failed: Vec<usize>,
+}
+
+/// Decode-on-arrival collector; owns the decode-vector cache across
+/// iterations (survivor patterns repeat, so cached solves dominate).
+pub struct Master {
+    scheme: Arc<CodingScheme>,
+    dim: usize,
+    cache: DecodeCache,
+    /// Receive timeout before declaring the iteration stalled.
+    pub timeout: Duration,
+}
+
+struct BlockState {
+    need: usize,
+    arrivals: Vec<(usize, Vec<f64>)>, // (worker, coded)
+    decoded: bool,
+}
+
+impl Master {
+    pub fn new(scheme: Arc<CodingScheme>, dim: usize) -> Self {
+        Self { scheme, dim, cache: DecodeCache::new(4096), timeout: Duration::from_secs(30) }
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits, self.cache.misses)
+    }
+
+    /// Broadcast one iteration's tasks.
+    pub fn broadcast(
+        &self,
+        iter: usize,
+        theta: Arc<Vec<f32>>,
+        times: &[f64],
+        tasks: &[Sender<WorkerTask>],
+    ) {
+        for (w, tx) in tasks.iter().enumerate() {
+            // A send error just means that worker died; the coded scheme
+            // absorbs it like any straggler.
+            let _ = tx.send(WorkerTask::Compute {
+                iter,
+                theta: theta.clone(),
+                cycle_time: times[w],
+            });
+        }
+    }
+
+    /// Collect events for iteration `iter` until every block decodes.
+    ///
+    /// Faithful to §III: block `b` (redundancy `s`) decodes using the
+    /// first `N − s` contributions to arrive; later ones are counted as
+    /// `late_contributions` and dropped.
+    pub fn collect(
+        &mut self,
+        iter: usize,
+        events: &Receiver<WorkerEvent>,
+        live_workers: usize,
+    ) -> Result<IterOutcome> {
+        let ranges = self.scheme.ranges();
+        let n = self.scheme.n();
+        let mut blocks: Vec<BlockState> = ranges
+            .iter()
+            .map(|r| BlockState { need: n - r.s, arrivals: Vec::new(), decoded: false })
+            .collect();
+        let mut gradient = vec![0.0f64; self.dim];
+        let mut decoded_count = 0usize;
+        let mut late = 0usize;
+        let mut decode_ns = 0u64;
+        let mut failed: Vec<usize> = Vec::new();
+        // Messages still expected from live workers (used to detect
+        // unrecoverable stalls without waiting for the timeout).
+        let mut outstanding: HashMap<usize, usize> =
+            (0..n).map(|w| (w, ranges.len())).collect();
+        let mut live = live_workers;
+
+        while decoded_count < blocks.len() {
+            let ev = match events.recv_timeout(self.timeout) {
+                Ok(ev) => ev,
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(Error::Runtime(format!(
+                        "iteration {iter}: stalled ({decoded_count}/{} blocks decoded)",
+                        blocks.len()
+                    )));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Runtime(format!(
+                        "iteration {iter}: all workers disconnected"
+                    )));
+                }
+            };
+            match ev {
+                WorkerEvent::Failed { worker, iter: ev_iter, reason } => {
+                    if ev_iter == iter {
+                        log::warn!("worker {worker} failed in iter {iter}: {reason}");
+                        failed.push(worker);
+                        outstanding.remove(&worker);
+                        live = live.saturating_sub(1);
+                        self.check_still_satisfiable(&blocks, &outstanding, iter)?;
+                    }
+                }
+                WorkerEvent::Block(c) => {
+                    if c.iter != iter {
+                        continue; // stale from a previous iteration
+                    }
+                    self.on_block(
+                        c,
+                        &mut blocks,
+                        &mut gradient,
+                        &mut decoded_count,
+                        &mut late,
+                        &mut decode_ns,
+                        &mut outstanding,
+                    )?;
+                }
+            }
+            let _ = live;
+        }
+        Ok(IterOutcome { gradient, decode_ns, late_contributions: late, failed })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_block(
+        &mut self,
+        c: BlockContribution,
+        blocks: &mut [BlockState],
+        gradient: &mut [f64],
+        decoded_count: &mut usize,
+        late: &mut usize,
+        decode_ns: &mut u64,
+        outstanding: &mut HashMap<usize, usize>,
+    ) -> Result<()> {
+        if let Some(left) = outstanding.get_mut(&c.worker) {
+            *left -= 1;
+            if *left == 0 {
+                outstanding.remove(&c.worker);
+            }
+        }
+        let ranges = self.scheme.ranges();
+        let b = &mut blocks[c.block_idx];
+        if b.decoded {
+            *late += 1;
+            return Ok(());
+        }
+        b.arrivals.push((c.worker, c.coded));
+        if b.arrivals.len() < b.need {
+            return Ok(());
+        }
+        // Decode now: the first `need` arrivals are the survivors.
+        // Canonicalize to ascending worker order — decode vectors are
+        // order-aligned, and the cache keys by survivor *set*, so the
+        // same set must always be presented in the same order.
+        let t0 = Instant::now();
+        let r = &ranges[c.block_idx];
+        b.arrivals.sort_by_key(|(w, _)| *w);
+        let survivors: Vec<usize> = b.arrivals.iter().map(|(w, _)| *w).collect();
+        // Borrow the cached decode vector without copying it (§Perf opt 3):
+        // the scheme handle is an independent Arc, so the cache's mutable
+        // borrow of `self` does not conflict.
+        let scheme = self.scheme.clone();
+        let code = scheme.code(r.s);
+        let a = self.cache.get(code, &survivors)?;
+        let picked: Vec<&[f64]> = b.arrivals.iter().map(|(_, v)| v.as_slice()).collect();
+        let block_grad = decode(a, &picked);
+        gradient[r.start..r.end].copy_from_slice(&block_grad);
+        b.decoded = true;
+        b.arrivals.clear();
+        b.arrivals.shrink_to_fit();
+        *decoded_count += 1;
+        *decode_ns += t0.elapsed().as_nanos() as u64;
+        Ok(())
+    }
+
+    /// After a failure, verify every undecoded block can still reach its
+    /// quorum from arrivals + outstanding messages.
+    fn check_still_satisfiable(
+        &self,
+        blocks: &[BlockState],
+        outstanding: &HashMap<usize, usize>,
+        iter: usize,
+    ) -> Result<()> {
+        for (idx, b) in blocks.iter().enumerate() {
+            if b.decoded {
+                continue;
+            }
+            // Workers that can still deliver this block: have not failed
+            // and have not yet sent it.
+            let possible = b.arrivals.len()
+                + outstanding
+                    .values()
+                    .filter(|&&left| left > 0)
+                    .count();
+            if possible < b.need {
+                return Err(Error::Runtime(format!(
+                    "iteration {iter}: block {idx} unrecoverable \
+                     ({} arrivals, {} possible, need {})",
+                    b.arrivals.len(),
+                    possible,
+                    b.need
+                )));
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,126 @@
+//! Coordinator metrics: per-iteration accounting plus the training
+//! report the examples and the e2e bench print.
+
+use crate::util::stats::RunningStats;
+
+/// One GD iteration's accounting.
+#[derive(Debug, Clone)]
+pub struct IterMetrics {
+    pub iter: usize,
+    /// Eq. (2) overall runtime under the sampled `T` (model time units).
+    pub virtual_runtime: f64,
+    /// Wall-clock nanoseconds spent in the iteration (compute + decode).
+    pub wall_ns: u64,
+    /// Wall-clock nanoseconds the master spent decoding.
+    pub decode_ns: u64,
+    /// Blocks decoded (= non-empty blocks of the partition).
+    pub blocks_decoded: usize,
+    /// Coded contributions that arrived after their block was already
+    /// decoded (pure overhead under the partial-straggler model).
+    pub late_contributions: usize,
+    /// Gradient L2 norm (diagnostic).
+    pub grad_norm: f64,
+}
+
+/// Full training run report.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub iters: Vec<IterMetrics>,
+    /// `(iteration, loss)` at each evaluation point.
+    pub loss_curve: Vec<(usize, f32)>,
+    /// Decode-vector cache statistics.
+    pub decode_cache_hits: u64,
+    pub decode_cache_misses: u64,
+    /// Workers that failed permanently during the run.
+    pub failed_workers: Vec<usize>,
+}
+
+impl TrainReport {
+    pub fn steps(&self) -> usize {
+        self.iters.len()
+    }
+
+    pub fn virtual_runtime_stats(&self) -> RunningStats {
+        let mut s = RunningStats::new();
+        for m in &self.iters {
+            s.push(m.virtual_runtime);
+        }
+        s
+    }
+
+    pub fn wall_ns_stats(&self) -> RunningStats {
+        let mut s = RunningStats::new();
+        for m in &self.iters {
+            s.push(m.wall_ns as f64);
+        }
+        s
+    }
+
+    pub fn decode_ns_stats(&self) -> RunningStats {
+        let mut s = RunningStats::new();
+        for m in &self.iters {
+            s.push(m.decode_ns as f64);
+        }
+        s
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.loss_curve.last().map(|&(_, l)| l)
+    }
+
+    pub fn first_loss(&self) -> Option<f32> {
+        self.loss_curve.first().map(|&(_, l)| l)
+    }
+
+    /// Render the loss curve as a compact text block (for EXPERIMENTS.md).
+    pub fn render_loss_curve(&self) -> String {
+        let mut out = String::from("iter,loss\n");
+        for (it, loss) in &self.loss_curve {
+            out.push_str(&format!("{it},{loss:.6}\n"));
+        }
+        out
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "steps={} E[virt]={:.1} wall/iter={} decode/iter={} loss {}→{} cache {}/{} hit",
+            self.steps(),
+            self.virtual_runtime_stats().mean(),
+            crate::bench_harness::fmt_ns(self.wall_ns_stats().mean()),
+            crate::bench_harness::fmt_ns(self.decode_ns_stats().mean()),
+            self.first_loss().map(|l| format!("{l:.3}")).unwrap_or_else(|| "-".into()),
+            self.final_loss().map(|l| format!("{l:.3}")).unwrap_or_else(|| "-".into()),
+            self.decode_cache_hits,
+            self.decode_cache_hits + self.decode_cache_misses,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_aggregates() {
+        let mut r = TrainReport::default();
+        for i in 0..3 {
+            r.iters.push(IterMetrics {
+                iter: i,
+                virtual_runtime: (i + 1) as f64,
+                wall_ns: 1000,
+                decode_ns: 100,
+                blocks_decoded: 2,
+                late_contributions: 0,
+                grad_norm: 1.0,
+            });
+        }
+        r.loss_curve.push((0, 5.0));
+        r.loss_curve.push((2, 1.0));
+        assert_eq!(r.steps(), 3);
+        assert!((r.virtual_runtime_stats().mean() - 2.0).abs() < 1e-12);
+        assert_eq!(r.final_loss(), Some(1.0));
+        assert!(r.summary().contains("steps=3"));
+        assert!(r.render_loss_curve().contains("2,1.000000"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Model parameter state owned by the master.
+
+use std::sync::Arc;
+
+use crate::util::rng::Rng;
+
+/// The master's copy of θ, broadcast to workers each iteration.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    theta: Arc<Vec<f32>>,
+}
+
+impl ModelState {
+    /// Zero initialization.
+    pub fn zeros(dim: usize) -> Self {
+        Self { theta: Arc::new(vec![0.0; dim]) }
+    }
+
+    /// He-style Gaussian init scaled by `scale`.
+    pub fn random(dim: usize, scale: f64, rng: &mut Rng) -> Self {
+        Self { theta: Arc::new((0..dim).map(|_| (rng.normal() * scale) as f32).collect()) }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// Shared read-only handle for broadcast.
+    pub fn shared(&self) -> Arc<Vec<f32>> {
+        self.theta.clone()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Gradient-descent step `θ ← θ − lr·g` (gradient in f64 from decode).
+    pub fn step(&mut self, grad: &[f64], lr: f64) {
+        assert_eq!(grad.len(), self.theta.len());
+        let theta = Arc::make_mut(&mut self.theta);
+        for (t, &g) in theta.iter_mut().zip(grad.iter()) {
+            *t -= (lr * g) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_updates_in_place() {
+        let mut st = ModelState::zeros(3);
+        let broadcast = st.shared(); // outstanding reference
+        st.step(&[1.0, -2.0, 0.5], 0.1);
+        assert_eq!(st.as_slice(), &[-0.1, 0.2, -0.05]);
+        // The broadcast copy is unaffected (copy-on-write).
+        assert_eq!(broadcast.as_slice(), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn random_init_uses_scale() {
+        let mut rng = Rng::new(5);
+        let st = ModelState::random(1000, 0.01, &mut rng);
+        let max = st.as_slice().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(max < 0.1);
+        assert!(max > 0.0);
+    }
+}

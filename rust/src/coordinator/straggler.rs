@@ -1,0 +1,114 @@
+//! Per-iteration straggler sampling and the virtual-runtime accounting of
+//! Eq. (2) — the substitution for a physical heterogeneous cluster
+//! (DESIGN.md §4).
+
+use crate::coding::scheme::CodingScheme;
+use crate::distribution::CycleTimeDistribution;
+use crate::optimizer::runtime_model::{sort_times, ProblemSpec};
+use crate::util::rng::Rng;
+
+/// Samples each iteration's worker cycle times.
+pub struct StragglerSampler {
+    dist: Box<dyn CycleTimeDistribution>,
+    rng: Rng,
+}
+
+impl StragglerSampler {
+    pub fn new(dist: Box<dyn CycleTimeDistribution>, seed: u64) -> Self {
+        Self { dist, rng: Rng::new(seed) }
+    }
+
+    /// Draw `T_1..T_N` for one iteration.
+    pub fn sample(&mut self, n: usize) -> Vec<f64> {
+        self.dist.sample_vec(n, &mut self.rng)
+    }
+
+    pub fn distribution(&self) -> &dyn CycleTimeDistribution {
+        self.dist.as_ref()
+    }
+}
+
+/// Eq. (2): the iteration's overall virtual runtime under the scheme —
+/// when the *(N−s)*-fastest worker finishes each block, maximized over
+/// blocks.
+pub fn virtual_runtime(spec: &ProblemSpec, scheme: &CodingScheme, times: &[f64]) -> f64 {
+    let n = spec.n;
+    debug_assert_eq!(times.len(), n);
+    let mut sorted = times.to_vec();
+    sort_times(&mut sorted);
+    let unit = spec.unit_work();
+    let mut cum = 0.0;
+    let mut best = 0.0f64;
+    for r in scheme.ranges() {
+        cum += ((r.s + 1) * r.len()) as f64;
+        let v = sorted[n - 1 - r.s] * cum;
+        if v > best {
+            best = v;
+        }
+    }
+    unit * best
+}
+
+/// Per-worker virtual completion stamps for every block (the stamps the
+/// workers attach to their [`super::channel::BlockContribution`]s):
+/// worker `w`'s block `j` completes at `unit·T_w·Σ_{l ≤ end_j}(s_l+1)`.
+pub fn block_completion_stamps(
+    spec: &ProblemSpec,
+    scheme: &CodingScheme,
+    cycle_time: f64,
+) -> Vec<f64> {
+    let unit = spec.unit_work();
+    let mut cum = 0.0;
+    scheme
+        .ranges()
+        .iter()
+        .map(|r| {
+            cum += ((r.s + 1) * r.len()) as f64;
+            unit * cycle_time * cum
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::shifted_exp::ShiftedExponential;
+    use crate::optimizer::blocks::BlockPartition;
+    use crate::optimizer::runtime_model::tau_s;
+
+    #[test]
+    fn virtual_runtime_matches_eq2() {
+        let mut rng = Rng::new(1);
+        let spec = ProblemSpec::new(4, 4, 4, 1.0);
+        let p = BlockPartition::from_s_vector(4, &[1, 1, 2, 2]).unwrap();
+        let scheme = CodingScheme::new(p, &mut rng).unwrap();
+        let t = vec![0.1, 0.1, 0.25, 1.0];
+        let vr = virtual_runtime(&spec, &scheme, &t);
+        let eq2 = tau_s(&spec, &[1, 1, 2, 2], &t);
+        assert!((vr - eq2).abs() < 1e-12);
+        assert!((vr - 1.0).abs() < 1e-12); // Fig. 1(d)'s value
+    }
+
+    #[test]
+    fn stamps_are_monotone_and_scale_with_cycle_time() {
+        let mut rng = Rng::new(2);
+        let spec = ProblemSpec::new(4, 10, 4, 1.0);
+        let p = BlockPartition::new(vec![4, 3, 2, 1]);
+        let scheme = CodingScheme::new(p, &mut rng).unwrap();
+        let s1 = block_completion_stamps(&spec, &scheme, 1.0);
+        let s2 = block_completion_stamps(&spec, &scheme, 2.0);
+        assert_eq!(s1.len(), 4);
+        assert!(s1.windows(2).all(|w| w[0] < w[1]));
+        for (a, b) in s1.iter().zip(s2.iter()) {
+            assert!((b - 2.0 * a).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sampler_is_deterministic_per_seed() {
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let mut a = StragglerSampler::new(Box::new(d.clone()), 7);
+        let mut b = StragglerSampler::new(Box::new(d), 7);
+        assert_eq!(a.sample(5), b.sample(5));
+    }
+}

@@ -1,0 +1,198 @@
+//! The end-to-end trainer: spawns the worker topology, runs coded
+//! gradient descent, and produces a [`TrainReport`].
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coding::scheme::CodingScheme;
+use crate::coordinator::channel::{WorkerEvent, WorkerTask};
+use crate::coordinator::master::Master;
+use crate::coordinator::metrics::{IterMetrics, TrainReport};
+use crate::coordinator::state::ModelState;
+use crate::coordinator::straggler::{virtual_runtime, StragglerSampler};
+use crate::coordinator::worker::{self, WorkerContext};
+use crate::coordinator::PacingMode;
+use crate::distribution::CycleTimeDistribution;
+use crate::optimizer::blocks::BlockPartition;
+use crate::optimizer::runtime_model::ProblemSpec;
+use crate::runtime::ExecutorFactory;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// Training configuration.
+pub struct TrainConfig {
+    pub spec: ProblemSpec,
+    pub blocks: BlockPartition,
+    pub steps: usize,
+    pub lr: f64,
+    /// Evaluate the loss every `eval_every` steps (0 = never).
+    pub eval_every: usize,
+    pub pacing: PacingMode,
+    pub seed: u64,
+    /// Worker ids that are never spawned — failure injection. The coded
+    /// scheme must tolerate up to `min_s` of them.
+    pub dead_workers: Vec<usize>,
+    /// θ init scale (Gaussian); 0 = zeros.
+    pub init_scale: f64,
+    /// How long the master waits on an empty event channel before
+    /// declaring the iteration stalled.
+    pub stall_timeout: std::time::Duration,
+}
+
+impl TrainConfig {
+    pub fn new(spec: ProblemSpec, blocks: BlockPartition) -> Self {
+        Self {
+            spec,
+            blocks,
+            steps: 100,
+            lr: 1e-2,
+            eval_every: 10,
+            pacing: PacingMode::Virtual,
+            seed: 2021,
+            dead_workers: Vec::new(),
+            init_scale: 0.05,
+            stall_timeout: std::time::Duration::from_secs(30),
+        }
+    }
+}
+
+/// Coded distributed GD driver.
+pub struct Trainer {
+    cfg: TrainConfig,
+    dist: Box<dyn CycleTimeDistribution>,
+    factory: ExecutorFactory,
+}
+
+impl Trainer {
+    pub fn new(
+        cfg: TrainConfig,
+        dist: Box<dyn CycleTimeDistribution>,
+        factory: ExecutorFactory,
+    ) -> Self {
+        Self { cfg, dist, factory }
+    }
+
+    /// Run the full training loop.
+    pub fn run(self) -> Result<TrainReport> {
+        let Trainer { cfg, dist, factory } = self;
+        let n = cfg.spec.n;
+        if cfg.blocks.n() != n {
+            return Err(Error::InvalidArgument("blocks.n() != spec.n".into()));
+        }
+        let mut rng = Rng::new(cfg.seed);
+        let scheme = Arc::new(CodingScheme::new(cfg.blocks.clone(), &mut rng)?);
+
+        // Master-side executor for loss evaluation (worker id n = master).
+        let mut eval_exec = if cfg.eval_every > 0 { Some(factory(n)?) } else { None };
+        let dim = if let Some(e) = &eval_exec {
+            e.dim()
+        } else {
+            factory(n)?.dim()
+        };
+        if dim != cfg.spec.coords {
+            log::warn!(
+                "model dim {} != spec.coords {} — virtual-runtime accounting uses the model dim",
+                dim,
+                cfg.spec.coords
+            );
+        }
+        if cfg.blocks.total() != dim {
+            return Err(Error::InvalidArgument(format!(
+                "block partition covers {} coordinates but the model has {dim}",
+                cfg.blocks.total()
+            )));
+        }
+
+        // Topology: per-worker task channels + one shared event channel.
+        let (event_tx, event_rx) = mpsc::channel::<WorkerEvent>();
+        let mut task_txs = Vec::with_capacity(n);
+        let mut handles = Vec::new();
+        let mut live = 0usize;
+        for w in 0..n {
+            let (tx, rx) = mpsc::channel::<WorkerTask>();
+            task_txs.push(tx);
+            if cfg.dead_workers.contains(&w) {
+                continue; // injected failure: worker never comes up
+            }
+            live += 1;
+            let ctx = WorkerContext {
+                id: w,
+                spec: cfg.spec,
+                scheme: scheme.clone(),
+                factory: factory.clone(),
+                tasks: rx,
+                events: event_tx.clone(),
+                pacing: cfg.pacing,
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("bcgc-worker-{w}"))
+                    .spawn(move || worker::run(ctx))
+                    .map_err(|e| Error::Runtime(format!("spawn: {e}")))?,
+            );
+        }
+        drop(event_tx);
+
+        let mut master = Master::new(scheme.clone(), dim);
+        master.timeout = cfg.stall_timeout;
+        let mut sampler = StragglerSampler::new(dist, rng.next_u64());
+        let mut state = if cfg.init_scale > 0.0 {
+            ModelState::random(dim, cfg.init_scale, &mut rng)
+        } else {
+            ModelState::zeros(dim)
+        };
+
+        let mut report = TrainReport::default();
+        let mut failed_set: Vec<usize> = cfg.dead_workers.clone();
+
+        if cfg.eval_every > 0 {
+            if let Some(e) = eval_exec.as_mut() {
+                report.loss_curve.push((0, e.loss(state.as_slice())?));
+            }
+        }
+
+        for iter in 0..cfg.steps {
+            let t_iter = Instant::now();
+            let times = sampler.sample(n);
+            master.broadcast(iter, state.shared(), &times, &task_txs);
+            let outcome = master.collect(iter, &event_rx, live)?;
+            for w in outcome.failed {
+                if !failed_set.contains(&w) {
+                    failed_set.push(w);
+                    live -= 1;
+                }
+            }
+            let grad_norm = outcome.gradient.iter().map(|g| g * g).sum::<f64>().sqrt();
+            state.step(&outcome.gradient, cfg.lr);
+            report.iters.push(IterMetrics {
+                iter,
+                virtual_runtime: virtual_runtime(&cfg.spec, &scheme, &times),
+                wall_ns: t_iter.elapsed().as_nanos() as u64,
+                decode_ns: outcome.decode_ns,
+                blocks_decoded: scheme.ranges().len(),
+                late_contributions: outcome.late_contributions,
+                grad_norm,
+            });
+            if cfg.eval_every > 0 && (iter + 1) % cfg.eval_every == 0 {
+                if let Some(e) = eval_exec.as_mut() {
+                    report.loss_curve.push((iter + 1, e.loss(state.as_slice())?));
+                }
+            }
+        }
+
+        // Shutdown.
+        for tx in &task_txs {
+            let _ = tx.send(WorkerTask::Shutdown);
+        }
+        drop(task_txs);
+        for h in handles {
+            let _ = h.join();
+        }
+        let (hits, misses) = master.cache_stats();
+        report.decode_cache_hits = hits;
+        report.decode_cache_misses = misses;
+        report.failed_workers = failed_set;
+        Ok(report)
+    }
+}

@@ -1,0 +1,92 @@
+//! Worker thread: sequentially computes, encodes and streams coded
+//! gradient blocks for each GD iteration.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::coding::scheme::CodingScheme;
+use crate::coordinator::channel::{BlockContribution, WorkerEvent, WorkerTask};
+use crate::coordinator::straggler::block_completion_stamps;
+use crate::coordinator::PacingMode;
+use crate::optimizer::runtime_model::ProblemSpec;
+use crate::runtime::ExecutorFactory;
+
+/// Everything a worker thread needs (moved into the thread at spawn).
+pub struct WorkerContext {
+    pub id: usize,
+    pub spec: ProblemSpec,
+    pub scheme: Arc<CodingScheme>,
+    pub factory: ExecutorFactory,
+    pub tasks: Receiver<WorkerTask>,
+    pub events: Sender<WorkerEvent>,
+    pub pacing: PacingMode,
+}
+
+/// Worker main loop. Returns when the task channel closes or a Shutdown
+/// arrives; executor errors are reported to the master as
+/// [`WorkerEvent::Failed`] (the coded scheme tolerates them like any
+/// other straggler, up to each block's redundancy).
+pub fn run(ctx: WorkerContext) {
+    let WorkerContext { id, spec, scheme, factory, tasks, events, pacing } = ctx;
+    let mut exec = match factory(id) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = events.send(WorkerEvent::Failed {
+                worker: id,
+                iter: 0,
+                reason: format!("executor init: {e}"),
+            });
+            return;
+        }
+    };
+    let held = scheme.worker_subsets(id).to_vec();
+    let ranges = scheme.ranges();
+
+    while let Ok(task) = tasks.recv() {
+        let (iter, theta, cycle_time) = match task {
+            WorkerTask::Compute { iter, theta, cycle_time } => (iter, theta, cycle_time),
+            WorkerTask::Shutdown => return,
+        };
+        // Real compute: partial gradients of every held subset (batched
+        // so the executor can stage θ once — §Perf opt 2). Encoding
+        // consumes the f32 results directly (§Perf opt 1).
+        let grads = match exec.grad_shards(&theta, &held) {
+            Ok(g) => g,
+            Err(e) => {
+                let _ = events.send(WorkerEvent::Failed {
+                    worker: id,
+                    iter,
+                    reason: format!("grad_shards: {e}"),
+                });
+                continue;
+            }
+        };
+        // Stream coded blocks in coordinate order (the paper's sequential
+        // emission), stamping each with its virtual completion time.
+        let stamps = block_completion_stamps(&spec, &scheme, cycle_time);
+        let mut elapsed_virtual = 0.0f64;
+        for (block_idx, r) in ranges.iter().enumerate() {
+            let coded = scheme.encode_block_range_f32(id, r, &grads);
+            if let PacingMode::RealScaled { ns_per_unit } = pacing {
+                let wait_units = stamps[block_idx] - elapsed_virtual;
+                elapsed_virtual = stamps[block_idx];
+                let ns = (wait_units * ns_per_unit).max(0.0);
+                if ns > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_nanos(ns as u64));
+                }
+            }
+            if events
+                .send(WorkerEvent::Block(BlockContribution {
+                    iter,
+                    worker: id,
+                    block_idx,
+                    virtual_time: stamps[block_idx],
+                    coded,
+                }))
+                .is_err()
+            {
+                return; // master gone
+            }
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Datasets: synthetic generators and the `N`-way sample partition of the
+//! paper's sample-allocation phase.
+
+pub mod partition;
+pub mod synthetic;
+
+use std::ops::Range;
+
+/// An in-memory supervised dataset, row-major `f32` (the dtype of the AOT
+/// artifacts), pre-partitioned into `N` contiguous shards `D_1..D_N`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Feature dimension `d`.
+    pub features: usize,
+    /// Target dimension (1 for regression, #classes one-hot for
+    /// classification).
+    pub targets: usize,
+    /// `M × d` features.
+    pub x: Vec<f32>,
+    /// `M × targets` labels.
+    pub y: Vec<f32>,
+    /// Shard boundaries (length `N`, contiguous, equal size).
+    pub shards: Vec<Range<usize>>,
+}
+
+impl Dataset {
+    /// Total sample count `M`.
+    pub fn samples(&self) -> usize {
+        self.x.len() / self.features
+    }
+
+    /// Number of shards `N`.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Samples per shard `M/N`.
+    pub fn shard_size(&self) -> usize {
+        self.shards.first().map_or(0, |r| r.end - r.start)
+    }
+
+    /// Feature rows of one shard.
+    pub fn shard_x(&self, shard: usize) -> &[f32] {
+        let r = &self.shards[shard];
+        &self.x[r.start * self.features..r.end * self.features]
+    }
+
+    /// Label rows of one shard.
+    pub fn shard_y(&self, shard: usize) -> &[f32] {
+        let r = &self.shards[shard];
+        &self.y[r.start * self.targets..r.end * self.targets]
+    }
+}

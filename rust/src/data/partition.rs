@@ -1,0 +1,41 @@
+//! The master's dataset partition `D = D_1 ∪ … ∪ D_N` (equal sizes).
+
+use std::ops::Range;
+
+use crate::{Error, Result};
+
+/// Split `samples` into `n` contiguous equal shards. Errors unless
+/// `n | samples` (the paper assumes subsets of size exactly `M/N`).
+pub fn equal_shards(samples: usize, n: usize) -> Result<Vec<Range<usize>>> {
+    if n == 0 {
+        return Err(Error::InvalidArgument("need at least one shard".into()));
+    }
+    if samples % n != 0 {
+        return Err(Error::InvalidArgument(format!(
+            "samples {samples} not divisible by N={n}"
+        )));
+    }
+    let size = samples / n;
+    Ok((0..n).map(|i| i * size..(i + 1) * size).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_tile_the_range() {
+        let shards = equal_shards(12, 4).unwrap();
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[0], 0..3);
+        assert_eq!(shards[3], 9..12);
+        let covered: usize = shards.iter().map(|r| r.end - r.start).sum();
+        assert_eq!(covered, 12);
+    }
+
+    #[test]
+    fn indivisible_rejected() {
+        assert!(equal_shards(10, 3).is_err());
+        assert!(equal_shards(10, 0).is_err());
+    }
+}

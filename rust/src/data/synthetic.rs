@@ -1,0 +1,141 @@
+//! Synthetic dataset generators for the examples and the end-to-end
+//! experiment (the paper trains on a generic dataset; we generate
+//! well-conditioned teacher-model data so loss curves are meaningful).
+
+use std::sync::Arc;
+
+use crate::data::{partition, Dataset};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Linear-regression data: `y = X·θ* + ε`, `X ~ N(0, I)/√d`,
+/// `ε ~ N(0, noise²)`.
+pub fn linear_regression(
+    features: usize,
+    samples: usize,
+    shards: usize,
+    noise: f64,
+    seed: u64,
+) -> Result<(Arc<Dataset>, Vec<f32>)> {
+    let mut rng = Rng::new(seed);
+    let scale = 1.0 / (features as f64).sqrt();
+    let theta_true: Vec<f32> = (0..features).map(|_| rng.normal() as f32).collect();
+    let mut x = vec![0.0f32; samples * features];
+    let mut y = vec![0.0f32; samples];
+    for m in 0..samples {
+        let mut dot = 0.0f64;
+        for d in 0..features {
+            let v = rng.normal() * scale;
+            x[m * features + d] = v as f32;
+            dot += v * theta_true[d] as f64;
+        }
+        y[m] = (dot + rng.normal() * noise) as f32;
+    }
+    let ds = Dataset {
+        features,
+        targets: 1,
+        x,
+        y,
+        shards: partition::equal_shards(samples, shards)?,
+    };
+    Ok((Arc::new(ds), theta_true))
+}
+
+/// Classification data from a random linear teacher with softmax
+/// sampling-free labeling (argmax of logits + Gaussian margin noise),
+/// one-hot encoded labels.
+pub fn classification(
+    features: usize,
+    classes: usize,
+    samples: usize,
+    shards: usize,
+    margin_noise: f64,
+    seed: u64,
+) -> Result<Arc<Dataset>> {
+    assert!(classes >= 2);
+    let mut rng = Rng::new(seed);
+    let scale = 1.0 / (features as f64).sqrt();
+    // Teacher weights: features × classes.
+    let teacher: Vec<f64> = (0..features * classes).map(|_| rng.normal()).collect();
+    let mut x = vec![0.0f32; samples * features];
+    let mut y = vec![0.0f32; samples * classes];
+    let mut logits = vec![0.0f64; classes];
+    for m in 0..samples {
+        for d in 0..features {
+            x[m * features + d] = (rng.normal() * scale) as f32;
+        }
+        for (c, logit) in logits.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for d in 0..features {
+                acc += x[m * features + d] as f64 * teacher[d * classes + c];
+            }
+            *logit = acc + rng.normal() * margin_noise;
+        }
+        let best = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(c, _)| c)
+            .unwrap();
+        y[m * classes + best] = 1.0;
+    }
+    let ds = Dataset {
+        features,
+        targets: classes,
+        x,
+        y,
+        shards: partition::equal_shards(samples, shards)?,
+    };
+    Ok(Arc::new(ds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linreg_shapes_and_recoverability() {
+        let (ds, theta) = linear_regression(16, 64, 4, 0.0, 7).unwrap();
+        assert_eq!(ds.samples(), 64);
+        assert_eq!(ds.num_shards(), 4);
+        assert_eq!(ds.shard_size(), 16);
+        assert_eq!(theta.len(), 16);
+        // Noise-free: y must equal X·θ* exactly (up to f32 rounding).
+        for m in 0..ds.samples() {
+            let mut dot = 0.0f64;
+            for d in 0..16 {
+                dot += ds.x[m * 16 + d] as f64 * theta[d] as f64;
+            }
+            assert!((dot - ds.y[m] as f64).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn classification_one_hot() {
+        let ds = classification(8, 5, 40, 4, 0.1, 3).unwrap();
+        assert_eq!(ds.targets, 5);
+        for m in 0..40 {
+            let row = &ds.y[m * 5..(m + 1) * 5];
+            let ones = row.iter().filter(|&&v| v == 1.0).count();
+            let zeros = row.iter().filter(|&&v| v == 0.0).count();
+            assert_eq!(ones, 1);
+            assert_eq!(zeros, 4);
+        }
+        // All classes appear with enough samples (teacher is random but
+        // 40 samples over 5 classes nearly surely hits each; tolerate 1 miss).
+        let mut seen = vec![0usize; 5];
+        for m in 0..40 {
+            let c = ds.y[m * 5..(m + 1) * 5].iter().position(|&v| v == 1.0).unwrap();
+            seen[c] += 1;
+        }
+        assert!(seen.iter().filter(|&&c| c > 0).count() >= 4, "{seen:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a, _) = linear_regression(4, 8, 2, 0.1, 42).unwrap();
+        let (b, _) = linear_regression(4, 8, 2, 0.1, 42).unwrap();
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+}

@@ -1,0 +1,171 @@
+//! Shifted log-normal cycle-time model — the classic "multiplicative
+//! noise" straggler family observed in shared clusters (beyond the
+//! paper's shifted-exponential assumption).
+
+use super::CycleTimeDistribution;
+use crate::util::rng::Rng;
+
+/// `T = shift + e^{μ + σZ}`, `Z ~ N(0,1)`.
+#[derive(Debug, Clone)]
+pub struct LogNormal {
+    pub mu: f64,
+    pub sigma: f64,
+    pub shift: f64,
+}
+
+impl LogNormal {
+    pub fn new(mu: f64, sigma: f64, shift: f64) -> Self {
+        assert!(sigma > 0.0 && shift >= 0.0);
+        Self { mu, sigma, shift }
+    }
+}
+
+impl CycleTimeDistribution for LogNormal {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        self.shift + (self.mu + self.sigma * rng.normal()).exp()
+    }
+
+    fn mean(&self) -> f64 {
+        self.shift + (self.mu + 0.5 * self.sigma * self.sigma).exp()
+    }
+
+    fn cdf(&self, t: f64) -> f64 {
+        if t <= self.shift {
+            return 0.0;
+        }
+        let z = ((t - self.shift).ln() - self.mu) / self.sigma;
+        normal_cdf(z)
+    }
+
+    fn label(&self) -> String {
+        format!("LogNormal(mu={}, sigma={}, shift={})", self.mu, self.sigma, self.shift)
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..1.0).contains(&q));
+        self.shift + (self.mu + self.sigma * normal_quantile(q)).exp()
+    }
+}
+
+/// Standard normal CDF via `erfc` (Abramowitz–Stegun 7.1.26 polynomial).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * erfc(-z / std::f64::consts::SQRT_2)
+}
+
+fn erfc(x: f64) -> f64 {
+    // A&S 7.1.26, |ε| ≤ 1.5e-7; reflected for negative x.
+    let sign_neg = x < 0.0;
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736 + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    let e = poly * (-x * x).exp();
+    if sign_neg {
+        2.0 - e
+    } else {
+        e
+    }
+}
+
+/// Standard normal quantile (Acklam's rational approximation, |ε|<1.2e-8
+/// after one Newton polish step).
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0);
+    // Acklam coefficients.
+    const A: [f64; 6] = [
+        -3.969_683_028_665_376e1,
+        2.209_460_984_245_205e2,
+        -2.759_285_104_469_687e2,
+        1.383_577_518_672_690e2,
+        -3.066_479_806_614_716e1,
+        2.506_628_277_459_239,
+    ];
+    const B: [f64; 5] = [
+        -5.447_609_879_822_406e1,
+        1.615_858_368_580_409e2,
+        -1.556_989_798_598_866e2,
+        6.680_131_188_771_972e1,
+        -1.328_068_155_288_572e1,
+    ];
+    const C: [f64; 6] = [
+        -7.784_894_002_430_293e-3,
+        -3.223_964_580_411_365e-1,
+        -2.400_758_277_161_838,
+        -2.549_732_539_343_734,
+        4.374_664_141_464_968,
+        2.938_163_982_698_783,
+    ];
+    const D: [f64; 4] = [
+        7.784_695_709_041_462e-3,
+        3.224_671_290_700_398e-1,
+        2.445_134_137_142_996,
+        3.754_408_661_907_416,
+    ];
+    let p_low = 0.02425;
+    let x = if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // One Newton polish against the CDF.
+    let e = normal_cdf(x) - p;
+    let pdf = (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt();
+    x - e / pdf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::RunningStats;
+
+    #[test]
+    fn mean_matches_monte_carlo() {
+        let d = LogNormal::new(6.0, 0.5, 50.0);
+        let mut rng = Rng::new(8);
+        let mut st = RunningStats::new();
+        for _ in 0..300_000 {
+            st.push(d.sample(&mut rng));
+        }
+        assert!(
+            (st.mean() - d.mean()).abs() < 4.0 * st.ci95_half_width(),
+            "mc={} exact={}",
+            st.mean(),
+            d.mean()
+        );
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let d = LogNormal::new(2.0, 1.2, 5.0);
+        for q in [0.01, 0.1, 0.5, 0.9, 0.99] {
+            let t = d.quantile(q);
+            assert!((d.cdf(t) - q).abs() < 5e-6, "q={q}: cdf={}", d.cdf(t));
+        }
+    }
+
+    #[test]
+    fn normal_helpers_sane() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-9);
+        // The A&S erfc polynomial is accurate to ~1.5e-7 in probability,
+        // i.e. ~3e-6 in x around the 97.5% point.
+        assert!((normal_cdf(1.959_963_985) - 0.975).abs() < 1e-6);
+        assert!((normal_quantile(0.975) - 1.959_963_985).abs() < 1e-5);
+        assert!((normal_quantile(0.5)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn median_is_shift_plus_exp_mu() {
+        let d = LogNormal::new(3.0, 0.7, 10.0);
+        assert!((d.median() - (10.0 + 3.0f64.exp())).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,279 @@
+//! Straggler model substrate: per-worker CPU **cycle-time** distributions.
+//!
+//! The paper's system model (§II): at any instant the CPU cycle times
+//! `T_n, n ∈ [N]` of the workers are i.i.d. random variables; the master
+//! knows the distribution but not the realizations. The *partial straggler*
+//! model is general — a two-point distribution recovers the classical full
+//! (persistent) straggler model as a special case.
+//!
+//! Implemented families:
+//! * [`shifted_exp::ShiftedExponential`] — `P[T ≤ t] = 1 − e^{−μ(t−t0)}`,
+//!   the model of §V-C/§VI and of refs [4], [5], [8], [9].
+//! * [`weibull::Weibull`], [`pareto::Pareto`] — heavier / lighter tails for
+//!   robustness experiments beyond the paper.
+//! * [`TwoPoint`] — fast/slow mixture (α-partial stragglers of [1], and the
+//!   full-straggler limit when `slow = ∞`).
+//! * [`Deterministic`] — degenerate (used by Fig. 1 and unit tests).
+//! * [`Empirical`] — resampling from a recorded trace.
+
+pub mod gamma;
+pub mod lognormal;
+pub mod order_stats;
+pub mod pareto;
+pub mod shifted_exp;
+pub mod weibull;
+
+use crate::util::rng::Rng;
+
+/// A distribution of worker CPU cycle times (seconds per cycle).
+///
+/// All times must be strictly positive with probability 1 — the runtime
+/// model divides by them and takes reciprocals (`t'` in Theorem 3).
+pub trait CycleTimeDistribution: Send + Sync {
+    /// Draw one cycle time.
+    fn sample(&self, rng: &mut Rng) -> f64;
+
+    /// `E[T]` (may be `f64::INFINITY`, e.g. Pareto with α ≤ 1).
+    fn mean(&self) -> f64;
+
+    /// `P[T ≤ t]`.
+    fn cdf(&self, t: f64) -> f64;
+
+    /// Human-readable description for logs and reports.
+    fn label(&self) -> String;
+
+    /// Draw `n` i.i.d. cycle times.
+    fn sample_vec(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+
+    /// Quantile via bisection on the CDF (overridable with closed forms).
+    fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..1.0).contains(&q), "quantile q must be in [0,1)");
+        // Expand an upper bracket, then bisect.
+        let mut lo = 0.0_f64;
+        let mut hi = 1.0_f64;
+        let mut iters = 0;
+        while self.cdf(hi) < q {
+            hi *= 2.0;
+            iters += 1;
+            assert!(iters < 2048, "quantile bracket failed for q={q}");
+        }
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if self.cdf(mid) < q {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Median cycle time.
+    fn median(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    /// Downcast hook: `Some` when the distribution is the
+    /// shifted-exponential family, unlocking exact order-statistic
+    /// formulas (Eq. 11 / Lemma 2) instead of Monte Carlo.
+    fn as_shifted_exp(&self) -> Option<&shifted_exp::ShiftedExponential> {
+        None
+    }
+
+    /// Monte-Carlo estimate of `(E[T | T ≤ split], E[T | T > split])`,
+    /// used by the Tandon α-partial baseline (α = ratio of the two).
+    fn conditional_means(&self, split: f64, trials: usize, rng: &mut Rng) -> (f64, f64) {
+        let mut below = (0.0, 0u64);
+        let mut above = (0.0, 0u64);
+        for _ in 0..trials {
+            let t = self.sample(rng);
+            if t <= split {
+                below.0 += t;
+                below.1 += 1;
+            } else {
+                above.0 += t;
+                above.1 += 1;
+            }
+        }
+        (
+            if below.1 > 0 { below.0 / below.1 as f64 } else { f64::NAN },
+            if above.1 > 0 { above.0 / above.1 as f64 } else { f64::NAN },
+        )
+    }
+}
+
+/// Degenerate distribution: every worker always takes `value` s/cycle.
+#[derive(Debug, Clone)]
+pub struct Deterministic {
+    pub value: f64,
+}
+
+impl Deterministic {
+    pub fn new(value: f64) -> Self {
+        assert!(value > 0.0);
+        Self { value }
+    }
+}
+
+impl CycleTimeDistribution for Deterministic {
+    fn sample(&self, _rng: &mut Rng) -> f64 {
+        self.value
+    }
+
+    fn mean(&self) -> f64 {
+        self.value
+    }
+
+    fn cdf(&self, t: f64) -> f64 {
+        if t >= self.value {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("Deterministic({})", self.value)
+    }
+
+    fn quantile(&self, _q: f64) -> f64 {
+        self.value
+    }
+}
+
+/// Two-point fast/slow mixture: `T = slow` w.p. `p_slow`, else `fast`.
+///
+/// With `slow = f64::INFINITY` this is the full (persistent) straggler
+/// model; with finite `slow = α · fast` it is the α-partial straggler model
+/// of Tandon et al. [1].
+#[derive(Debug, Clone)]
+pub struct TwoPoint {
+    pub fast: f64,
+    pub slow: f64,
+    pub p_slow: f64,
+}
+
+impl TwoPoint {
+    pub fn new(fast: f64, slow: f64, p_slow: f64) -> Self {
+        assert!(fast > 0.0 && slow >= fast && (0.0..=1.0).contains(&p_slow));
+        Self { fast, slow, p_slow }
+    }
+
+    /// α-partial stragglers: slow workers are `alpha`× slower.
+    pub fn alpha_partial(fast: f64, alpha: f64, p_slow: f64) -> Self {
+        Self::new(fast, fast * alpha, p_slow)
+    }
+}
+
+impl CycleTimeDistribution for TwoPoint {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        if rng.uniform() < self.p_slow {
+            self.slow
+        } else {
+            self.fast
+        }
+    }
+
+    fn mean(&self) -> f64 {
+        (1.0 - self.p_slow) * self.fast + self.p_slow * self.slow
+    }
+
+    fn cdf(&self, t: f64) -> f64 {
+        if t >= self.slow {
+            1.0
+        } else if t >= self.fast {
+            1.0 - self.p_slow
+        } else {
+            0.0
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("TwoPoint(fast={}, slow={}, p_slow={})", self.fast, self.slow, self.p_slow)
+    }
+}
+
+/// Resample uniformly from a recorded trace of cycle times.
+#[derive(Debug, Clone)]
+pub struct Empirical {
+    samples: Vec<f64>,
+    mean: f64,
+}
+
+impl Empirical {
+    pub fn new(samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty(), "empirical distribution needs samples");
+        assert!(samples.iter().all(|&s| s > 0.0), "cycle times must be positive");
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        Self { samples, mean }
+    }
+}
+
+impl CycleTimeDistribution for Empirical {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        self.samples[rng.below(self.samples.len() as u64) as usize]
+    }
+
+    fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    fn cdf(&self, t: f64) -> f64 {
+        self.samples.iter().filter(|&&s| s <= t).count() as f64 / self.samples.len() as f64
+    }
+
+    fn label(&self) -> String {
+        format!("Empirical(n={})", self.samples.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_is_constant() {
+        let d = Deterministic::new(2.0);
+        let mut rng = Rng::new(0);
+        for _ in 0..10 {
+            assert_eq!(d.sample(&mut rng), 2.0);
+        }
+        assert_eq!(d.median(), 2.0);
+    }
+
+    #[test]
+    fn two_point_mean_and_cdf() {
+        let d = TwoPoint::alpha_partial(1.0, 6.0, 0.25);
+        assert!((d.mean() - (0.75 + 0.25 * 6.0)).abs() < 1e-12);
+        assert_eq!(d.cdf(0.5), 0.0);
+        assert_eq!(d.cdf(1.0), 0.75);
+        assert_eq!(d.cdf(6.0), 1.0);
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let slow = (0..n).filter(|_| d.sample(&mut rng) > 1.0).count();
+        let frac = slow as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn empirical_resamples_support() {
+        let d = Empirical::new(vec![1.0, 2.0, 3.0]);
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let s = d.sample(&mut rng);
+            assert!([1.0, 2.0, 3.0].contains(&s));
+        }
+        assert!((d.mean() - 2.0).abs() < 1e-12);
+        assert!((d.cdf(2.0) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generic_quantile_bisection() {
+        let d = TwoPoint::new(1.0, 4.0, 0.5);
+        // Median sits at the fast atom boundary for q slightly below 0.5.
+        let q25 = d.quantile(0.25);
+        assert!((q25 - 1.0).abs() < 1e-6, "q25={q25}");
+    }
+}

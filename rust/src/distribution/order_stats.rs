@@ -1,0 +1,245 @@
+//! Order-statistic expectations — the parameters of the closed-form
+//! approximate solutions (Theorems 2 and 3).
+//!
+//! * `t_n  = E[T_(n)]`      — Theorem 2's vector `t`.
+//! * `t'_n = 1 / E[1/T_(n)]` — Theorem 3's vector `t'` ("deterministic
+//!   CPU frequencies", since `F_n = 1/T_n`).
+//!
+//! For the shifted-exponential model both have exact forms:
+//! Eq. (11) `t_n = (H_N − H_{N−n})/μ + t0` (Rényi's representation), and
+//! Lemma 2's alternating exponential-integral sum for `t'_n`. The Lemma-2
+//! sum cancels catastrophically for large `n` (terms grow like `2^n·e^{μt0·N}`
+//! while the result is O(1)), so production code evaluates the underlying
+//! order-statistic integral by Gauss–Legendre quadrature — mathematically
+//! identical, numerically stable — and we cross-validate the three routes
+//! (closed form, quadrature, Monte Carlo) in tests.
+
+use super::shifted_exp::ShiftedExponential;
+use super::CycleTimeDistribution;
+use crate::util::rng::Rng;
+use crate::util::special::{expint_e1, harmonic, integrate_gl, ln_binomial};
+
+/// Expected order statistics of `N` i.i.d. cycle times.
+///
+/// Index convention: `t[k]` is `E[T_(k+1)]`, i.e. `t[0]` is the fastest
+/// worker's expected time and `t[N-1]` the slowest's.
+#[derive(Debug, Clone)]
+pub struct OrderStats {
+    /// `t_n = E[T_(n)]`, n = 1..N (0-indexed storage).
+    pub t: Vec<f64>,
+    /// `t'_n = 1/E[1/T_(n)]`, n = 1..N (0-indexed storage).
+    pub t_prime: Vec<f64>,
+}
+
+impl OrderStats {
+    pub fn n(&self) -> usize {
+        self.t.len()
+    }
+
+    /// `E[T_(n)]` with the paper's 1-based index.
+    pub fn t_of(&self, n: usize) -> f64 {
+        self.t[n - 1]
+    }
+
+    /// `t'_n` with the paper's 1-based index.
+    pub fn t_prime_of(&self, n: usize) -> f64 {
+        self.t_prime[n - 1]
+    }
+}
+
+/// Monte-Carlo estimate for an arbitrary distribution.
+///
+/// Draws `trials` rounds of `n` i.i.d. times, sorts each round and
+/// accumulates both `T_(k)` and `1/T_(k)`.
+pub fn estimate(
+    dist: &dyn CycleTimeDistribution,
+    n: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> OrderStats {
+    assert!(n >= 1 && trials >= 1);
+    let mut sum_t = vec![0.0; n];
+    let mut sum_inv = vec![0.0; n];
+    let mut buf = vec![0.0; n];
+    for _ in 0..trials {
+        for b in buf.iter_mut() {
+            *b = dist.sample(rng);
+        }
+        buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (k, &v) in buf.iter().enumerate() {
+            sum_t[k] += v;
+            sum_inv[k] += 1.0 / v;
+        }
+    }
+    let inv_trials = 1.0 / trials as f64;
+    OrderStats {
+        t: sum_t.iter().map(|s| s * inv_trials).collect(),
+        t_prime: sum_inv.iter().map(|s| 1.0 / (s * inv_trials)).collect(),
+    }
+}
+
+/// Exact order statistics for the shifted-exponential model.
+///
+/// `t` from Eq. (11); `t'` by quadrature of the order-statistic integral
+/// (see module docs — equivalent to Lemma 2 but stable for any `N`).
+pub fn shifted_exp_exact(dist: &ShiftedExponential, n: usize) -> OrderStats {
+    let h_n = harmonic(n);
+    let t: Vec<f64> = (1..=n)
+        .map(|k| (h_n - harmonic(n - k)) / dist.mu + dist.t0)
+        .collect();
+    let t_prime: Vec<f64> = (1..=n)
+        .map(|k| 1.0 / expected_inv_order_stat_quadrature(dist, n, k))
+        .collect();
+    OrderStats { t, t_prime }
+}
+
+/// `E[1/T_(k)]` for the shifted-exponential model via the substitution
+/// `x = e^{−μ(t−t0)}`:
+///
+/// `E[1/T_(k)] = μ·k·C(N,k) ∫₀¹ x^{N−k} (1−x)^{k−1} / (μ t0 − ln x) dx`.
+///
+/// (The paper's Lemma 2 prints `C(N, k−1)`; the order-statistic density
+/// gives `C(N, k)`, which is what Monte Carlo confirms — see tests.)
+pub fn expected_inv_order_stat_quadrature(
+    dist: &ShiftedExponential,
+    n: usize,
+    k: usize,
+) -> f64 {
+    assert!((1..=n).contains(&k));
+    let mu_t0 = dist.mu * dist.t0;
+    assert!(mu_t0 > 0.0, "t0 = 0 makes E[1/T_(k)] divergent-prone; paper requires t0 > 0");
+    let ln_c = ln_binomial(n, k);
+    let a = (n - k) as f64; // x exponent
+    let b = (k - 1) as f64; // (1-x) exponent
+    // Integrand in log-space to avoid under/overflow at the endpoints.
+    let f = |x: f64| -> f64 {
+        if x <= 0.0 || x >= 1.0 {
+            return 0.0;
+        }
+        let ln_core = a * x.ln() + b * (1.0 - x).ln();
+        ln_core.exp() / (mu_t0 - x.ln())
+    };
+    // The integrand is smooth on (0,1) but can be sharply peaked near the
+    // endpoints for large N; split the domain for robustness.
+    let order = 96;
+    let split = 0.5;
+    let integral = integrate_gl(f, 0.0, split, order) + integrate_gl(f, split, 1.0, order);
+    dist.mu * k as f64 * ln_c.exp() * integral
+}
+
+/// Lemma 2's closed form for `t'_k` (alternating Ei sum). Only numerically
+/// trustworthy for small `k` (≲ 20); retained to validate the quadrature
+/// route and to reproduce the paper's formula verbatim.
+pub fn lemma2_t_prime_closed_form(dist: &ShiftedExponential, n: usize, k: usize) -> f64 {
+    assert!((1..=n).contains(&k));
+    let mu_t0 = dist.mu * dist.t0;
+    assert!(mu_t0 > 0.0);
+    // E[1/T_(k)] = μ k C(N,k) Σ_{i=0}^{k−1} (−1)^i C(k−1,i) e^{μt0·m_i} E1(μt0·m_i),
+    // with m_i = N − k + i + 1  (derivation in module docs; E1(y) = −Ei(−y)).
+    let c_nk = ln_binomial(n, k).exp();
+    let mut sum = 0.0;
+    for i in 0..k {
+        let m = (n - k + i + 1) as f64;
+        let y = mu_t0 * m;
+        let term = ln_binomial(k - 1, i).exp() * y.exp() * expint_e1(y);
+        if i % 2 == 0 {
+            sum += term;
+        } else {
+            sum -= term;
+        }
+    }
+    let e_inv = dist.mu * k as f64 * c_nk * sum;
+    1.0 / e_inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dist() -> ShiftedExponential {
+        ShiftedExponential::new(1e-3, 50.0)
+    }
+
+    #[test]
+    fn t_closed_form_matches_monte_carlo() {
+        let d = dist();
+        let n = 10;
+        let exact = shifted_exp_exact(&d, n);
+        let mut rng = Rng::new(1234);
+        let mc = estimate(&d, n, 60_000, &mut rng);
+        for k in 0..n {
+            let rel = (exact.t[k] - mc.t[k]).abs() / exact.t[k];
+            assert!(rel < 0.02, "k={k}: exact={} mc={}", exact.t[k], mc.t[k]);
+        }
+    }
+
+    #[test]
+    fn t_prime_quadrature_matches_monte_carlo() {
+        let d = dist();
+        let n = 10;
+        let exact = shifted_exp_exact(&d, n);
+        let mut rng = Rng::new(4321);
+        let mc = estimate(&d, n, 60_000, &mut rng);
+        for k in 0..n {
+            let rel = (exact.t_prime[k] - mc.t_prime[k]).abs() / exact.t_prime[k];
+            assert!(rel < 0.02, "k={k}: exact={} mc={}", exact.t_prime[k], mc.t_prime[k]);
+        }
+    }
+
+    #[test]
+    fn lemma2_closed_form_matches_quadrature_small_k() {
+        let d = dist();
+        let n = 12;
+        for k in 1..=8 {
+            let cf = lemma2_t_prime_closed_form(&d, n, k);
+            let quad = 1.0 / expected_inv_order_stat_quadrature(&d, n, k);
+            let rel = (cf - quad).abs() / quad;
+            assert!(rel < 1e-6, "k={k}: closed={cf} quad={quad}");
+        }
+    }
+
+    #[test]
+    fn order_stats_are_monotone() {
+        let d = dist();
+        let os = shifted_exp_exact(&d, 30);
+        for k in 1..30 {
+            assert!(os.t[k] > os.t[k - 1]);
+            assert!(os.t_prime[k] > os.t_prime[k - 1]);
+        }
+        // t'_k ≤ t_k by Jensen (E[1/T] ≥ 1/E[T]).
+        for k in 0..30 {
+            assert!(os.t_prime[k] <= os.t[k] + 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn extreme_order_stats_match_known_forms() {
+        let d = dist();
+        let n = 25;
+        let os = shifted_exp_exact(&d, n);
+        // Min of n shifted exponentials: t0 + 1/(nμ).
+        let want_min = d.t0 + 1.0 / (n as f64 * d.mu);
+        assert!((os.t[0] - want_min).abs() < 1e-9);
+        // Max: t0 + H_n/μ.
+        let want_max = d.t0 + harmonic(n) / d.mu;
+        assert!((os.t[n - 1] - want_max).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monte_carlo_generic_distributions() {
+        use crate::distribution::{pareto::Pareto, weibull::Weibull};
+        let mut rng = Rng::new(5);
+        for d in [
+            Box::new(Weibull::new(1.5, 10.0, 1.0)) as Box<dyn CycleTimeDistribution>,
+            Box::new(Pareto::new(3.0, 2.0)),
+        ] {
+            let os = estimate(d.as_ref(), 8, 20_000, &mut rng);
+            // Monotone and positive.
+            for k in 1..8 {
+                assert!(os.t[k] >= os.t[k - 1]);
+                assert!(os.t_prime[k] >= os.t_prime[k - 1]);
+                assert!(os.t_prime[k] > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Pareto cycle-time model — heavy-tailed stragglers (beyond the paper).
+
+use super::CycleTimeDistribution;
+use crate::util::rng::Rng;
+
+/// Pareto with minimum `xm > 0` and tail index `alpha > 0`:
+/// `P[T ≤ t] = 1 − (xm/t)^α` for `t ≥ xm`.
+#[derive(Debug, Clone)]
+pub struct Pareto {
+    pub alpha: f64,
+    pub xm: f64,
+}
+
+impl Pareto {
+    pub fn new(alpha: f64, xm: f64) -> Self {
+        assert!(alpha > 0.0 && xm > 0.0);
+        Self { alpha, xm }
+    }
+}
+
+impl CycleTimeDistribution for Pareto {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        // Inverse CDF: xm · U^{−1/α}.
+        self.xm * rng.uniform_open().powf(-1.0 / self.alpha)
+    }
+
+    fn mean(&self) -> f64 {
+        if self.alpha <= 1.0 {
+            f64::INFINITY
+        } else {
+            self.alpha * self.xm / (self.alpha - 1.0)
+        }
+    }
+
+    fn cdf(&self, t: f64) -> f64 {
+        if t < self.xm {
+            0.0
+        } else {
+            1.0 - (self.xm / t).powf(self.alpha)
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("Pareto(alpha={}, xm={})", self.alpha, self.xm)
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..1.0).contains(&q));
+        self.xm * (1.0 - q).powf(-1.0 / self.alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::RunningStats;
+
+    #[test]
+    fn mean_finite_iff_alpha_gt_one() {
+        assert!(Pareto::new(0.9, 1.0).mean().is_infinite());
+        assert!((Pareto::new(3.0, 2.0).mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_matches_mean() {
+        let p = Pareto::new(4.0, 1.0);
+        let mut rng = Rng::new(9);
+        let mut st = RunningStats::new();
+        for _ in 0..300_000 {
+            let t = p.sample(&mut rng);
+            assert!(t >= 1.0);
+            st.push(t);
+        }
+        assert!((st.mean() - p.mean()).abs() < 5.0 * st.ci95_half_width());
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let p = Pareto::new(2.5, 0.7);
+        for q in [0.05, 0.5, 0.95] {
+            assert!((p.cdf(p.quantile(q)) - q).abs() < 1e-12);
+        }
+    }
+}

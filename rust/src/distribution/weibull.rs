@@ -1,0 +1,88 @@
+//! Shifted Weibull cycle-time model (robustness experiments beyond the
+//! paper's shifted-exponential assumption; shape < 1 gives heavier tails).
+
+use super::CycleTimeDistribution;
+use crate::util::rng::Rng;
+use crate::util::special::ln_gamma;
+
+/// `T = shift + scale · W`, `W ~ Weibull(shape)` with CDF `1 − e^{−w^k}`.
+#[derive(Debug, Clone)]
+pub struct Weibull {
+    pub shape: f64,
+    pub scale: f64,
+    pub shift: f64,
+}
+
+impl Weibull {
+    pub fn new(shape: f64, scale: f64, shift: f64) -> Self {
+        assert!(shape > 0.0 && scale > 0.0 && shift >= 0.0);
+        Self { shape, scale, shift }
+    }
+}
+
+impl CycleTimeDistribution for Weibull {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        // Inverse CDF: W = (−ln U)^{1/k}.
+        let u = rng.uniform_open();
+        self.shift + self.scale * (-u.ln()).powf(1.0 / self.shape)
+    }
+
+    fn mean(&self) -> f64 {
+        self.shift + self.scale * ln_gamma(1.0 + 1.0 / self.shape).exp()
+    }
+
+    fn cdf(&self, t: f64) -> f64 {
+        if t <= self.shift {
+            0.0
+        } else {
+            1.0 - (-((t - self.shift) / self.scale).powf(self.shape)).exp()
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("Weibull(k={}, scale={}, shift={})", self.shape, self.scale, self.shift)
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..1.0).contains(&q));
+        self.shift + self.scale * (-(1.0 - q).ln()).powf(1.0 / self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::RunningStats;
+
+    #[test]
+    fn shape_one_is_exponential() {
+        let w = Weibull::new(1.0, 100.0, 5.0);
+        // mean = shift + scale·Γ(2) = shift + scale
+        assert!((w.mean() - 105.0).abs() < 1e-9);
+        assert!((w.cdf(105.0) - (1.0 - (-1.0f64).exp())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_mean_matches() {
+        let w = Weibull::new(0.7, 10.0, 1.0);
+        let mut rng = Rng::new(3);
+        let mut st = RunningStats::new();
+        for _ in 0..300_000 {
+            st.push(w.sample(&mut rng));
+        }
+        assert!(
+            (st.mean() - w.mean()).abs() < 4.0 * st.ci95_half_width(),
+            "mc={} vs exact={}",
+            st.mean(),
+            w.mean()
+        );
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let w = Weibull::new(2.0, 3.0, 0.5);
+        for q in [0.1, 0.5, 0.9] {
+            assert!((w.cdf(w.quantile(q)) - q).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! # `bcgc` — Optimization-based Block Coordinate Gradient Coding
+//!
+//! A straggler-tolerant distributed gradient-descent framework reproducing
+//! Wang, Cui, Li, Zou & Xiong, *"Optimization-based Block Coordinate Gradient
+//! Coding"*, IEEE GLOBECOM 2021.
+//!
+//! The system is a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: a
+//!   master/worker runtime ([`coordinator`]) that streams *coded* gradient
+//!   blocks from workers with heterogeneous, random speeds and decodes each
+//!   block as soon as enough workers have delivered it, plus the paper's full
+//!   coding-parameter optimizer suite ([`optimizer`]).
+//! * **Layer 2 (JAX, build time)** — per-worker shard-gradient compute
+//!   graphs, AOT-lowered to HLO text under `artifacts/` and executed from
+//!   Rust via PJRT ([`runtime`]).
+//! * **Layer 1 (Pallas, build time)** — the tiled matmul / encode kernels
+//!   inside the Layer-2 graphs.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't inherit the xla rpath in
+//! // debug profiles; the same flow is executed by examples/quickstart.rs)
+//! use bcgc::prelude::*;
+//! use bcgc::distribution::order_stats::shifted_exp_exact;
+//!
+//! // One master, 12 workers with shifted-exponential cycle times.
+//! let dist = ShiftedExponential::new(1e-3, 50.0);
+//! let spec = ProblemSpec::new(12, 20_000, 50, 1.0);
+//!
+//! // Closed-form approximate solution x^(f) (Theorem 3) and its blocks.
+//! let os = shifted_exp_exact(&dist, spec.n);
+//! let xf = bcgc::optimizer::closed_form::x_freq(&spec, &os).unwrap();
+//! let blocks = bcgc::optimizer::rounding::round_to_blocks(&xf, spec.coords);
+//! assert_eq!(blocks.total(), 20_000);
+//! ```
+//!
+//! See `examples/` for end-to-end coded training and the figure
+//! reproductions in `rust/benches/`.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod distribution;
+pub mod linalg;
+pub mod optimizer;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+
+/// Convenient re-exports of the types most programs need.
+pub mod prelude {
+    pub use crate::coding::scheme::CodingScheme;
+    pub use crate::coordinator::trainer::{TrainConfig, Trainer};
+    pub use crate::distribution::{
+        shifted_exp::ShiftedExponential, CycleTimeDistribution,
+    };
+    pub use crate::optimizer::{
+        blocks::BlockPartition, runtime_model::ProblemSpec, solver::SchemeKind,
+    };
+    pub use crate::util::rng::Rng;
+}
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+    #[error("linear algebra failure: {0}")]
+    Linalg(String),
+    #[error("coding failure: {0}")]
+    Coding(String),
+    #[error("optimizer failure: {0}")]
+    Optimizer(String),
+    #[error("runtime failure: {0}")]
+    Runtime(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Self {
+        Error::Runtime(format!("{e:#}"))
+    }
+}

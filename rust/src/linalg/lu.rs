@@ -1,0 +1,220 @@
+//! LU decomposition with partial pivoting, and the solves built on it.
+
+use super::matrix::Matrix;
+use crate::{Error, Result};
+
+/// LU factorization `P·A = L·U` of a square matrix.
+pub struct Lu {
+    /// Combined L (unit lower, below diagonal) and U (upper) factors.
+    lu: Matrix,
+    /// Row permutation: `perm[i]` is the original row now in position `i`.
+    perm: Vec<usize>,
+    /// Sign of the permutation (for determinants).
+    sign: f64,
+}
+
+impl Lu {
+    /// Factor a square matrix. Fails on (numerical) singularity.
+    pub fn factor(a: &Matrix) -> Result<Lu> {
+        let n = a.rows();
+        if a.cols() != n {
+            return Err(Error::Linalg(format!("LU of non-square {}x{}", a.rows(), a.cols())));
+        }
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // Partial pivot: largest |entry| in column k at/below the diagonal.
+            let mut p = k;
+            let mut max = lu[(k, k)].abs();
+            for i in k + 1..n {
+                let v = lu[(i, k)].abs();
+                if v > max {
+                    max = v;
+                    p = i;
+                }
+            }
+            if max < 1e-12 {
+                return Err(Error::Linalg(format!("singular matrix at pivot {k} (|pivot|={max:.3e})")));
+            }
+            if p != k {
+                for j in 0..n {
+                    let tmp = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = tmp;
+                }
+                perm.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu[(k, k)];
+            for i in k + 1..n {
+                let m = lu[(i, k)] / pivot;
+                lu[(i, k)] = m;
+                if m != 0.0 {
+                    for j in k + 1..n {
+                        let u = lu[(k, j)];
+                        lu[(i, j)] -= m * u;
+                    }
+                }
+            }
+        }
+        Ok(Lu { lu, perm, sign })
+    }
+
+    /// Solve `A·x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        // Forward substitution with permuted b (L has unit diagonal).
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut acc = b[self.perm[i]];
+            for j in 0..i {
+                acc -= self.lu[(i, j)] * y[j];
+            }
+            y[i] = acc;
+        }
+        // Back substitution.
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut acc = y[i];
+            for j in i + 1..n {
+                acc -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = acc / self.lu[(i, i)];
+        }
+        x
+    }
+
+    /// Solve `xᵀ·A = bᵀ`  (i.e. `Aᵀ·x = b`), used for decode-vector solves.
+    pub fn solve_transposed(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        // Aᵀ = Uᵀ·Lᵀ·P, so solve Uᵀ·y = b, then Lᵀ·z = y, then x = Pᵀ·z.
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut acc = b[i];
+            for j in 0..i {
+                acc -= self.lu[(j, i)] * y[j];
+            }
+            y[i] = acc / self.lu[(i, i)];
+        }
+        let mut z = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut acc = y[i];
+            for j in i + 1..n {
+                acc -= self.lu[(j, i)] * z[j];
+            }
+            z[i] = acc;
+        }
+        let mut x = vec![0.0; n];
+        for i in 0..n {
+            x[self.perm[i]] = z[i];
+        }
+        x
+    }
+
+    /// Determinant of the factored matrix.
+    pub fn det(&self) -> f64 {
+        let n = self.lu.rows();
+        (0..n).map(|i| self.lu[(i, i)]).product::<f64>() * self.sign
+    }
+}
+
+/// Convenience: solve `A·x = b` in one call.
+pub fn solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    Ok(Lu::factor(a)?.solve(b))
+}
+
+/// Convenience: inverse (used only in tests / diagnostics).
+pub fn inverse(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    let lu = Lu::factor(a)?;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = lu.solve(&e);
+        e[j] = 0.0;
+        for i in 0..n {
+            inv[(i, j)] = col[i];
+        }
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solve_known_system() {
+        let a = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = solve(&a, &[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(Lu::factor(&a).is_err());
+    }
+
+    #[test]
+    fn random_roundtrip() {
+        let mut rng = Rng::new(99);
+        for n in [1usize, 2, 3, 5, 8, 16, 33] {
+            let mut a = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    a[(i, j)] = rng.normal();
+                }
+                a[(i, i)] += 3.0; // keep well-conditioned
+            }
+            let xtrue: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&xtrue);
+            let x = solve(&a, &b).unwrap();
+            for (xi, ti) in x.iter().zip(xtrue.iter()) {
+                assert!((xi - ti).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_solve_matches() {
+        let mut rng = Rng::new(5);
+        let n = 7;
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.normal();
+            }
+            a[(i, i)] += 4.0;
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve_transposed(&b);
+        // xᵀ A should equal bᵀ
+        let recon = a.vecmat(&x);
+        for (r, want) in recon.iter().zip(b.iter()) {
+            assert!((r - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn det_and_inverse() {
+        let a = Matrix::from_rows(&[&[4.0, 3.0], &[6.0, 3.0]]);
+        let lu = Lu::factor(&a).unwrap();
+        assert!((lu.det() + 6.0).abs() < 1e-12);
+        let inv = inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        for i in 0..2 {
+            for j in 0..2 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - want).abs() < 1e-12);
+            }
+        }
+    }
+}

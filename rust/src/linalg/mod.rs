@@ -1,0 +1,12 @@
+//! Small dense linear-algebra substrate (no external crates).
+//!
+//! The gradient-coding codec needs exact construction and inversion of the
+//! encoding matrix blocks (Tandon et al.'s Algorithm 1 solves an `s×s`
+//! system per row; decoding solves an `(N−s)`-sized system per survivor
+//! set), so we implement a row-major [`Matrix`] with LU-based solves.
+
+pub mod lu;
+pub mod matrix;
+
+pub use lu::Lu;
+pub use matrix::Matrix;

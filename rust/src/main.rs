@@ -1,0 +1,268 @@
+//! `bcgc` — launcher CLI for the block coordinate gradient coding system.
+//!
+//! Subcommands:
+//! * `optimize`  — compute a scheme's block partition for given (N, L, μ, t0).
+//! * `compare`   — expected-runtime table of all schemes at one operating point.
+//! * `simulate`  — discrete-event playout of one iteration.
+//! * `train`     — run coded distributed GD (host or PJRT backend).
+//! * `artifacts` — list the AOT artifact manifest.
+
+use std::sync::Arc;
+
+use bcgc::cli::Args;
+use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+use bcgc::coordinator::PacingMode;
+use bcgc::data::synthetic;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::evaluate::{compare_schemes, reduction_vs_best_baseline};
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::optimizer::solver::{self, SchemeKind, SolveOptions};
+use bcgc::runtime::{host, host_factory, pjrt_factory};
+use bcgc::sim::{simulate_iteration, SimConfig};
+use bcgc::util::rng::Rng;
+use bcgc::{bench_harness::Table, Result};
+
+fn main() {
+    bcgc::util::logging::init();
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("optimize") => cmd_optimize(args),
+        Some("compare") => cmd_compare(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("train") => cmd_train(args),
+        Some("artifacts") => cmd_artifacts(args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "bcgc — optimization-based block coordinate gradient coding\n\n\
+         USAGE: bcgc <subcommand> [options]\n\n\
+         SUBCOMMANDS\n\
+           optimize   --workers N --coords L [--mu 1e-3 --t0 50 --scheme x_f|x_t|subgradient|...]\n\
+           compare    --workers N --coords L [--mu 1e-3 --t0 50 --trials 2000]\n\
+           simulate   --workers N --coords L [--mu 1e-3 --t0 50 --comm-latency 0]\n\
+           train      --workers N [--steps 100 --lr 0.01 --model mlp|linreg --backend host|pjrt]\n\
+           artifacts  [--dir artifacts]\n"
+    );
+}
+
+fn scheme_kind(name: &str) -> Result<SchemeKind> {
+    Ok(match name {
+        "subgradient" | "x_dag" => SchemeKind::OptimalSubgradient,
+        "x_t" | "time" => SchemeKind::ClosedFormTime,
+        "x_f" | "freq" => SchemeKind::ClosedFormFreq,
+        "single" | "single-bcgc" => SchemeKind::SingleBlock,
+        "tandon" => SchemeKind::TandonAlpha,
+        "ferdinand" | "ferdinand-l" => SchemeKind::FerdinandFull,
+        "ferdinand-l2" => SchemeKind::FerdinandHalf,
+        "uncoded" => SchemeKind::Uncoded,
+        other => {
+            return Err(bcgc::Error::InvalidArgument(format!("unknown scheme {other:?}")))
+        }
+    })
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let n: usize = args.get("workers", 20)?;
+    let coords: usize = args.get("coords", 20_000)?;
+    let mu: f64 = args.get("mu", 1e-3)?;
+    let t0: f64 = args.get("t0", 50.0)?;
+    let kind = scheme_kind(args.value("scheme").unwrap_or("x_f"))?;
+    let spec = ProblemSpec::paper_default(n, coords);
+    let dist = ShiftedExponential::new(mu, t0);
+    let mut rng = Rng::new(args.get("seed", 2021u64)?);
+    let p = solver::solve(&spec, &dist, kind, &SolveOptions::default(), &mut rng)?;
+    println!("scheme : {}", kind.label());
+    println!("blocks : {p}");
+    println!("levels : {:?}", p.sizes());
+    let stats =
+        bcgc::optimizer::runtime_model::expected_runtime(&spec, &p, &dist, 4000, &mut rng);
+    println!("E[runtime] ≈ {:.1} ± {:.1}", stats.mean(), stats.ci95_half_width());
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    // Either --config <file.toml> (see configs/) or inline flags.
+    let (spec, dist, trials, seed): (ProblemSpec, Box<dyn bcgc::distribution::CycleTimeDistribution>, usize, u64) =
+        if let Some(path) = args.value("config") {
+            let cfg = bcgc::config::ExperimentConfig::load(std::path::Path::new(path))?;
+            println!("experiment: {} ({})", cfg.name, cfg.distribution.build().label());
+            (cfg.spec(), cfg.distribution.build(), cfg.trials, cfg.seed)
+        } else {
+            let n: usize = args.get("workers", 20)?;
+            let coords: usize = args.get("coords", 20_000)?;
+            let mu: f64 = args.get("mu", 1e-3)?;
+            let t0: f64 = args.get("t0", 50.0)?;
+            (
+                ProblemSpec::paper_default(n, coords),
+                Box::new(ShiftedExponential::new(mu, t0)),
+                args.get("trials", 2000)?,
+                args.get("seed", 2021u64)?,
+            )
+        };
+    let mut rng = Rng::new(seed);
+    let opts = SolveOptions::default();
+
+    let mut schemes = Vec::new();
+    for kind in SchemeKind::proposed().into_iter().chain(SchemeKind::baselines()) {
+        let p = solver::solve(&spec, dist.as_ref(), kind, &opts, &mut rng)?;
+        schemes.push((kind.label().to_string(), p));
+    }
+    let rows = compare_schemes(&spec, &schemes, dist.as_ref(), trials, &mut rng);
+    let mut table = Table::new(&["scheme", "E[runtime]", "95% CI", "levels used"]);
+    for (row, (_, p)) in rows.iter().zip(schemes.iter()) {
+        table.row(&[
+            row.label.clone(),
+            format!("{:.1}", row.mean()),
+            format!("±{:.1}", row.stats.ci95_half_width()),
+            format!("{}", p.levels_used()),
+        ]);
+    }
+    table.print();
+    let ours = rows[..3].iter().map(|r| r.mean()).fold(f64::INFINITY, f64::min);
+    let base: Vec<f64> = rows[3..].iter().map(|r| r.mean()).collect();
+    println!(
+        "\nbest proposed vs best baseline: {:.1}% reduction",
+        reduction_vs_best_baseline(ours, &base)
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let n: usize = args.get("workers", 20)?;
+    let coords: usize = args.get("coords", 20_000)?;
+    let mu: f64 = args.get("mu", 1e-3)?;
+    let t0: f64 = args.get("t0", 50.0)?;
+    let comm: f64 = args.get("comm-latency", 0.0)?;
+    let spec = ProblemSpec::paper_default(n, coords);
+    let dist = ShiftedExponential::new(mu, t0);
+    let mut rng = Rng::new(args.get("seed", 2021u64)?);
+    let p = solver::solve(
+        &spec,
+        &dist,
+        SchemeKind::ClosedFormFreq,
+        &SolveOptions::default(),
+        &mut rng,
+    )?;
+    use bcgc::distribution::CycleTimeDistribution;
+    let times = dist.sample_vec(n, &mut rng);
+    let out = simulate_iteration(&spec, &p, &times, &SimConfig { comm_latency: comm });
+    println!("blocks            : {p}");
+    println!("completion time   : {:.2}", out.completion_time);
+    println!("messages (late)   : {} ({})", out.messages, out.late_messages);
+    println!("block decode times: {:?}", out.block_decode_times);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let n: usize = args.get("workers", 8)?;
+    let steps: usize = args.get("steps", 100)?;
+    let lr: f64 = args.get("lr", 0.02)?;
+    let mu: f64 = args.get("mu", 1e-3)?;
+    let t0: f64 = args.get("t0", 50.0)?;
+    let model = args.value("model").unwrap_or("mlp").to_string();
+    let backend = args.value("backend").unwrap_or("host").to_string();
+    let seed: u64 = args.get("seed", 2021)?;
+
+    let (factory, dim) = match (model.as_str(), backend.as_str()) {
+        ("linreg", "host") => {
+            let d: usize = args.get("features", 128)?;
+            let (ds, _) = synthetic::linear_regression(d, n * 64, n, 0.05, seed)?;
+            (host_factory(ds, host::HostModel::LinearRegression), d)
+        }
+        ("mlp", "host") => {
+            let d: usize = args.get("features", 32)?;
+            let h: usize = args.get("hidden", 64)?;
+            let c: usize = args.get("classes", 10)?;
+            let ds = synthetic::classification(d, c, n * 64, n, 0.2, seed)?;
+            (host_factory(ds, host::HostModel::Mlp { hidden: h }), host::HostExecutor::mlp_dim(d, h, c))
+        }
+        (m, "pjrt") => {
+            let dir = std::path::PathBuf::from(args.value("artifact-dir").unwrap_or("artifacts"));
+            let manifest = bcgc::runtime::artifact::Manifest::load(&dir)?;
+            let entry_name = args
+                .value("entry")
+                .map(str::to_string)
+                .unwrap_or_else(|| {
+                    manifest
+                        .names()
+                        .find(|nm| nm.starts_with(m))
+                        .unwrap_or("mlp_d64_h256_c10_s128")
+                        .to_string()
+                });
+            let e = manifest.get(&entry_name)?.clone();
+            let ds = if e.kind == "linreg" {
+                synthetic::linear_regression(e.features, e.shard * n, n, 0.05, seed)?.0
+            } else {
+                synthetic::classification(e.features, e.targets, e.shard * n, n, 0.2, seed)?
+            };
+            (pjrt_factory(dir, entry_name, ds), e.param_dim)
+        }
+        (m, b) => {
+            return Err(bcgc::Error::InvalidArgument(format!(
+                "unsupported model/backend combo {m}/{b}"
+            )))
+        }
+    };
+
+    let spec = ProblemSpec::new(n, dim, n * 64, 1.0);
+    let dist = ShiftedExponential::new(mu, t0);
+    let mut rng = Rng::new(seed);
+    let blocks = solver::solve(
+        &spec,
+        &dist,
+        scheme_kind(args.value("scheme").unwrap_or("x_f"))?,
+        &SolveOptions::fast(),
+        &mut rng,
+    )?;
+    println!("blocks: {blocks}");
+
+    let mut cfg = TrainConfig::new(spec, blocks);
+    cfg.steps = steps;
+    cfg.lr = lr;
+    cfg.eval_every = args.get("eval-every", 10)?;
+    cfg.seed = seed;
+    if args.flag("real-pacing") {
+        cfg.pacing = PacingMode::RealScaled { ns_per_unit: args.get("ns-per-unit", 50.0)? };
+    }
+    let report = Trainer::new(cfg, Box::new(dist), factory).run()?;
+    println!("{}", report.summary());
+    println!("\nloss curve:\n{}", report.render_loss_curve());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.value("dir").unwrap_or("artifacts"));
+    let manifest = bcgc::runtime::artifact::Manifest::load(&dir)?;
+    let mut table = Table::new(&["entry", "kind", "features", "targets", "shard", "param_dim"]);
+    for name in manifest.names() {
+        let e = manifest.get(name)?;
+        table.row(&[
+            e.name.clone(),
+            e.kind.clone(),
+            e.features.to_string(),
+            e.targets.to_string(),
+            e.shard.to_string(),
+            e.param_dim.to_string(),
+        ]);
+    }
+    table.print();
+    let _ = Arc::new(()); // keep Arc import local usage
+    Ok(())
+}

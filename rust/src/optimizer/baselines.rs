@@ -1,0 +1,221 @@
+//! The §VI baseline schemes.
+//!
+//! * **Uncoded** — `s_l = 0` everywhere; the master waits for all workers.
+//! * **Single-BCGC** — Problem 2 with `‖x‖₀ = 1`: one redundancy level for
+//!   all coordinates, the level chosen optimally. This is the optimized
+//!   version of Tandon et al.'s scheme for *full* stragglers.
+//! * **Tandon α-partial** — Tandon et al.'s gradient code with the level
+//!   chosen under the α-partial two-speed model (`α = E[T|T>med]/E[T|T≤med]`,
+//!   the paper's α = 6 recipe at the shifted-exponential median).
+//! * **Ferdinand hierarchical (r layers)** — the optimal *MDS-coded
+//!   computation* allocation of [8] (work factor `N/(N−n)`, layer
+//!   granularity `L/r`), transplanted onto gradient coding. The paper's
+//!   point — which the benches reproduce — is that this allocation is
+//!   mismatched for general gradients.
+
+use crate::distribution::order_stats::OrderStats;
+use crate::distribution::{CycleTimeDistribution, TwoPoint};
+use crate::optimizer::blocks::BlockPartition;
+use crate::optimizer::closed_form::x_from_deterministic_t;
+use crate::optimizer::evaluate::order_stats_for;
+use crate::optimizer::rounding::{round_to_blocks, round_to_blocks_granular};
+use crate::optimizer::runtime_model::{ProblemSpec, WorkModel};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// All coordinates uncoded (`s = 0`).
+pub fn uncoded(spec: &ProblemSpec) -> BlockPartition {
+    BlockPartition::single_level(spec.n, 0, spec.coords)
+}
+
+/// Single-BCGC: the best *uniform* redundancy level.
+///
+/// With `x = L·e_s` the expected runtime is
+/// `E[τ̂] = unit · (s+1) · L · E[T_(N−s)]`, so the optimal level is
+/// `argmin_s (s+1)·t_{N−s}` — exact given the order-stat means.
+pub fn single_bcgc(spec: &ProblemSpec, os: &OrderStats) -> BlockPartition {
+    let n = spec.n;
+    let best = (0..n)
+        .min_by(|&a, &b| {
+            let va = (a + 1) as f64 * os.t[n - 1 - a];
+            let vb = (b + 1) as f64 * os.t[n - 1 - b];
+            va.partial_cmp(&vb).unwrap()
+        })
+        .unwrap();
+    BlockPartition::single_level(n, best, spec.coords)
+}
+
+/// The level single-BCGC picks (exposed for diagnostics/benches).
+pub fn single_bcgc_level(spec: &ProblemSpec, os: &OrderStats) -> usize {
+    single_bcgc(spec, os).max_level()
+}
+
+/// Tandon et al.'s gradient coding tuned for α-partial stragglers.
+///
+/// Following §VI: split at the median `t` (`P[T ≤ t] = 0.5`), measure
+/// `α = E[T|T>t] / E[T|T≤t]`, then model every worker as the two-point
+/// fast/slow mixture and choose the uniform level optimal under *that*
+/// model (computed exactly from binomial order statistics of the
+/// two-point distribution).
+pub fn tandon_alpha_partial(
+    spec: &ProblemSpec,
+    dist: &dyn CycleTimeDistribution,
+    rng: &mut Rng,
+) -> BlockPartition {
+    let n = spec.n;
+    let med = dist.median();
+    let (below, above) = dist.conditional_means(med, 200_000, rng);
+    let two_point = TwoPoint::new(below, above.max(below), 0.5);
+    // Exact order-stat means of the two-point model:
+    // T_(k) = slow iff fewer than k of the N draws are fast,
+    // i.e. P[T_(k) = slow] = P[Binom(N, 1−p_slow) ≤ k−1].
+    let t2: Vec<f64> = (1..=n)
+        .map(|k| {
+            let p_slow_rank = binom_cdf(n, 0.5, k - 1);
+            two_point.fast * (1.0 - p_slow_rank) + two_point.slow * p_slow_rank
+        })
+        .collect();
+    let best = (0..n)
+        .min_by(|&a, &b| {
+            let va = (a + 1) as f64 * t2[n - 1 - a];
+            let vb = (b + 1) as f64 * t2[n - 1 - b];
+            va.partial_cmp(&vb).unwrap()
+        })
+        .unwrap();
+    BlockPartition::single_level(n, best, spec.coords)
+}
+
+/// `P[Binom(n, p) ≤ k]`.
+fn binom_cdf(n: usize, p: f64, k: usize) -> f64 {
+    use crate::util::special::ln_binomial;
+    let mut acc = 0.0;
+    for i in 0..=k.min(n) {
+        let ln_p = ln_binomial(n, i)
+            + i as f64 * p.ln()
+            + (n - i) as f64 * (1.0 - p).ln();
+        acc += ln_p.exp();
+    }
+    acc.min(1.0)
+}
+
+/// Ferdinand & Draper's hierarchical coded computation with `r` layers,
+/// transplanted to gradient coding (see module docs). `r` must divide `L`.
+///
+/// The allocation is the closed-form equalizer under the **MDS** work
+/// model at the deterministic order-stat times, rounded at layer
+/// granularity `L/r`; it is then *used* (and evaluated by callers) as a
+/// gradient-coding block partition.
+pub fn ferdinand_hierarchical(
+    spec: &ProblemSpec,
+    os: &OrderStats,
+    r: usize,
+) -> Result<BlockPartition> {
+    assert!(r >= 1 && spec.coords % r == 0, "r must divide L");
+    let (x, _) = x_from_deterministic_t(spec, &os.t, WorkModel::MdsCoded)?;
+    let granularity = spec.coords / r;
+    Ok(if granularity == 1 {
+        round_to_blocks(&x, spec.coords)
+    } else {
+        round_to_blocks_granular(&x, spec.coords, granularity)
+    })
+}
+
+/// Bundle of every §VI baseline, labelled as in Fig. 4.
+pub fn all_baselines(
+    spec: &ProblemSpec,
+    dist: &dyn CycleTimeDistribution,
+    rng: &mut Rng,
+) -> Result<Vec<(String, BlockPartition)>> {
+    let os = order_stats_for(dist, spec.n, 20_000, rng);
+    Ok(vec![
+        ("single-BCGC".into(), single_bcgc(spec, &os)),
+        ("Tandon et al. (alpha=median ratio)".into(), tandon_alpha_partial(spec, dist, rng)),
+        ("Ferdinand et al. (r=L)".into(), ferdinand_hierarchical(spec, &os, spec.coords)?),
+        (
+            "Ferdinand et al. (r=L/2)".into(),
+            ferdinand_hierarchical(spec, &os, spec.coords / 2)?,
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::order_stats::shifted_exp_exact;
+    use crate::distribution::shifted_exp::ShiftedExponential;
+    use crate::optimizer::evaluate::compare_schemes;
+
+    fn setup() -> (ProblemSpec, ShiftedExponential, OrderStats) {
+        let spec = ProblemSpec::paper_default(10, 2000);
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let os = shifted_exp_exact(&d, 10);
+        (spec, d, os)
+    }
+
+    #[test]
+    fn single_bcgc_beats_other_uniform_levels() {
+        let (spec, d, os) = setup();
+        let star = single_bcgc(&spec, &os);
+        let mut rng = Rng::new(12);
+        let schemes: Vec<(String, BlockPartition)> = (0..10)
+            .map(|s| (format!("s={s}"), BlockPartition::single_level(10, s, 2000)))
+            .collect();
+        let out = compare_schemes(&spec, &schemes, &d, 4000, &mut rng);
+        let best = out
+            .iter()
+            .min_by(|a, b| a.mean().partial_cmp(&b.mean()).unwrap())
+            .unwrap();
+        // The analytic argmin must match the MC argmin.
+        assert_eq!(best.label, format!("s={}", star.max_level()));
+    }
+
+    #[test]
+    fn binom_cdf_sane() {
+        assert!((binom_cdf(4, 0.5, 4) - 1.0).abs() < 1e-12);
+        assert!((binom_cdf(4, 0.5, 0) - 0.0625).abs() < 1e-12);
+        // symmetry: P[X ≤ 1] + P[X ≤ 2 complement]…
+        let c2 = binom_cdf(5, 0.5, 2);
+        assert!((c2 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tandon_alpha_uses_one_level() {
+        let (spec, d, _) = setup();
+        let mut rng = Rng::new(77);
+        let p = tandon_alpha_partial(&spec, &d, &mut rng);
+        assert_eq!(p.levels_used(), 1);
+        assert_eq!(p.total(), 2000);
+    }
+
+    #[test]
+    fn ferdinand_layers_divide() {
+        let (spec, _, os) = setup();
+        let full = ferdinand_hierarchical(&spec, &os, spec.coords).unwrap();
+        assert_eq!(full.total(), 2000);
+        let half = ferdinand_hierarchical(&spec, &os, spec.coords / 2).unwrap();
+        assert_eq!(half.total(), 2000);
+        assert!(half.sizes().iter().all(|s| s % 2 == 0));
+    }
+
+    #[test]
+    fn proposed_beats_baselines_in_expectation() {
+        // The headline qualitative claim of Fig. 4, in miniature.
+        let (spec, d, os) = setup();
+        let mut rng = Rng::new(31);
+        let xt = crate::optimizer::closed_form::x_time(&spec, &os).unwrap();
+        let proposed = crate::optimizer::rounding::round_to_blocks(&xt, spec.coords);
+        let mut schemes = vec![("proposed x^(t)".to_string(), proposed)];
+        schemes.extend(all_baselines(&spec, &d, &mut rng).unwrap());
+        let out = compare_schemes(&spec, &schemes, &d, 6000, &mut rng);
+        let ours = out[0].mean();
+        for row in &out[1..] {
+            assert!(
+                ours <= row.mean() * 1.001,
+                "proposed {} should beat {} ({})",
+                ours,
+                row.label,
+                row.mean()
+            );
+        }
+    }
+}

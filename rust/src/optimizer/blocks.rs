@@ -1,0 +1,179 @@
+//! Block partitions — Theorem 1's change of variables between the
+//! per-coordinate redundancy vector `s ∈ {0..N−1}^L` (monotone by
+//! Lemma 1) and the block-size vector `x ∈ N^N` with `Σ x_n = L`.
+
+use crate::{Error, Result};
+
+/// A partition of the `L` coordinates into `N` blocks; block `n` holds
+/// `sizes[n]` coordinates, each encoded to tolerate `n` stragglers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockPartition {
+    sizes: Vec<usize>,
+}
+
+/// A contiguous run of coordinates sharing a redundancy level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockRange {
+    /// Redundancy level (tolerated stragglers) of this block.
+    pub s: usize,
+    /// First coordinate (0-based, inclusive).
+    pub start: usize,
+    /// One past the last coordinate (exclusive).
+    pub end: usize,
+}
+
+impl BlockRange {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+impl BlockPartition {
+    /// Build from block sizes `x_0..x_{N−1}`.
+    pub fn new(sizes: Vec<usize>) -> Self {
+        assert!(!sizes.is_empty());
+        Self { sizes }
+    }
+
+    /// All `L` coordinates at a single redundancy level `s` (single-BCGC).
+    pub fn single_level(n: usize, s: usize, coords: usize) -> Self {
+        assert!(s < n);
+        let mut sizes = vec![0; n];
+        sizes[s] = coords;
+        Self { sizes }
+    }
+
+    /// Eq. (6): `x_n = #{l : s_l = n}` from a (monotone) s-vector.
+    pub fn from_s_vector(n: usize, s: &[usize]) -> Result<Self> {
+        let mut sizes = vec![0usize; n];
+        for (l, &sl) in s.iter().enumerate() {
+            if sl >= n {
+                return Err(Error::InvalidArgument(format!("s[{l}]={sl} out of range (N={n})")));
+            }
+            sizes[sl] += 1;
+        }
+        Ok(Self { sizes })
+    }
+
+    /// Eq. (7): `s_l = min{ i : Σ_{n≤i} x_n ≥ l }`.
+    pub fn s_vector(&self) -> Vec<usize> {
+        let mut s = Vec::with_capacity(self.total());
+        for (level, &cnt) in self.sizes.iter().enumerate() {
+            s.extend(std::iter::repeat(level).take(cnt));
+        }
+        s
+    }
+
+    /// Number of workers / redundancy levels `N`.
+    pub fn n(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Total number of coordinates `L = Σ x_n`.
+    pub fn total(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    /// Raw block sizes.
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Highest redundancy level with a non-empty block (the `max_l s_l`
+    /// that sizes the sample-allocation phase).
+    pub fn max_level(&self) -> usize {
+        self.sizes.iter().rposition(|&c| c > 0).unwrap_or(0)
+    }
+
+    /// Non-empty blocks as contiguous coordinate ranges, in level order.
+    pub fn ranges(&self) -> Vec<BlockRange> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        for (level, &cnt) in self.sizes.iter().enumerate() {
+            if cnt > 0 {
+                out.push(BlockRange { s: level, start, end: start + cnt });
+                start += cnt;
+            }
+        }
+        out
+    }
+
+    /// Number of distinct redundancy levels in use.
+    pub fn levels_used(&self) -> usize {
+        self.sizes.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Block sizes as f64 (for the continuous optimizer).
+    pub fn as_f64(&self) -> Vec<f64> {
+        self.sizes.iter().map(|&c| c as f64).collect()
+    }
+}
+
+impl std::fmt::Display for BlockPartition {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        let mut first = true;
+        for r in self.ranges() {
+            if !first {
+                write!(f, ", ")?;
+            }
+            first = false;
+            write!(f, "s={}:{}", r.s, r.len())?;
+        }
+        write!(f, "] (L={}, N={})", self.total(), self.n())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s_vector_roundtrip() {
+        // Fig. 2 left example: s* = (1,1,2,2,2,3) at N=4, L=6 → x = (0,2,3,1).
+        let s = vec![1usize, 1, 2, 2, 2, 3];
+        let p = BlockPartition::from_s_vector(4, &s).unwrap();
+        assert_eq!(p.sizes(), &[0, 2, 3, 1]);
+        assert_eq!(p.s_vector(), s);
+        assert_eq!(p.total(), 6);
+        assert_eq!(p.max_level(), 3);
+        assert_eq!(p.levels_used(), 3);
+    }
+
+    #[test]
+    fn fig2_right_example() {
+        // s* = (0,1,1,1,3,3) → x = (1,3,0,2).
+        let s = vec![0usize, 1, 1, 1, 3, 3];
+        let p = BlockPartition::from_s_vector(4, &s).unwrap();
+        assert_eq!(p.sizes(), &[1, 3, 0, 2]);
+        assert_eq!(p.s_vector(), s);
+    }
+
+    #[test]
+    fn ranges_skip_empty_blocks() {
+        let p = BlockPartition::new(vec![1, 3, 0, 2]);
+        let r = p.ranges();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r[0], BlockRange { s: 0, start: 0, end: 1 });
+        assert_eq!(r[1], BlockRange { s: 1, start: 1, end: 4 });
+        assert_eq!(r[2], BlockRange { s: 3, start: 4, end: 6 });
+    }
+
+    #[test]
+    fn single_level_partition() {
+        let p = BlockPartition::single_level(5, 2, 100);
+        assert_eq!(p.total(), 100);
+        assert_eq!(p.max_level(), 2);
+        assert_eq!(p.levels_used(), 1);
+        assert!(p.s_vector().iter().all(|&s| s == 2));
+    }
+
+    #[test]
+    fn invalid_s_rejected() {
+        assert!(BlockPartition::from_s_vector(3, &[0, 3]).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Analytic bounds on the optimal expected runtime — the quantities the
+//! paper's Theorem-4 proof manipulates, exposed as a module so benches,
+//! tests and users can sandwich any scheme's measured performance.
+//!
+//! * **Lower bound** (Jensen): `τ̂*_avg-ct ≥ τ̂(x^(t), t) = unit·m^(t)` —
+//!   no scheme, including the true optimum, can beat the deterministic
+//!   equalizer at the expected order statistics.
+//! * **Upper envelopes** (Theorem 4, shifted-exponential):
+//!   `E[τ̂(x^(t),T)]/τ̂* ≤ (H_N+1)(H_N+μt0)/(μt0)²` and
+//!   `E[τ̂(x^(f),T)]/τ̂* ≤ H_N/(μt0) + 1`.
+
+use crate::distribution::order_stats::OrderStats;
+use crate::distribution::shifted_exp::ShiftedExponential;
+use crate::optimizer::closed_form::m_of_t;
+use crate::optimizer::runtime_model::ProblemSpec;
+use crate::util::special::harmonic;
+
+/// Provable lower bound on `E[τ̂(x, T)]` over all feasible `x`
+/// (`unit_work · m^(t)`).
+pub fn runtime_lower_bound(spec: &ProblemSpec, os: &OrderStats) -> f64 {
+    spec.unit_work() * m_of_t(spec, &os.t)
+}
+
+/// Theorem 4's multiplicative-gap envelope for `x^(t)`:
+/// `(H_N+1)(H_N+μt0)/(μt0)²`.
+pub fn gap_envelope_time(dist: &ShiftedExponential, n: usize) -> f64 {
+    let h = harmonic(n);
+    let mt = dist.mu * dist.t0;
+    (h + 1.0) * (h + mt) / (mt * mt)
+}
+
+/// Theorem 4's multiplicative-gap envelope for `x^(f)`: `H_N/(μt0) + 1`.
+pub fn gap_envelope_freq(dist: &ShiftedExponential, n: usize) -> f64 {
+    harmonic(n) / (dist.mu * dist.t0) + 1.0
+}
+
+/// Both envelopes sandwiching a measured expectation: returns
+/// `(gap, envelope_t, envelope_f)` where `gap = measured / lower bound`.
+pub fn gap_report(
+    spec: &ProblemSpec,
+    dist: &ShiftedExponential,
+    os: &OrderStats,
+    measured: f64,
+) -> (f64, f64, f64) {
+    (
+        measured / runtime_lower_bound(spec, os),
+        gap_envelope_time(dist, spec.n),
+        gap_envelope_freq(dist, spec.n),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::order_stats::shifted_exp_exact;
+    use crate::distribution::CycleTimeDistribution;
+    use crate::optimizer::closed_form::x_time;
+    use crate::optimizer::rounding::round_to_blocks;
+    use crate::optimizer::runtime_model::expected_runtime;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lower_bound_is_below_every_scheme() {
+        let n = 12;
+        let dist = ShiftedExponential::new(1e-3, 50.0);
+        let os = shifted_exp_exact(&dist, n);
+        let spec = ProblemSpec::paper_default(n, 3000);
+        let lb = runtime_lower_bound(&spec, &os);
+        let mut rng = Rng::new(3);
+        // Closed form, single levels, random partitions — all ≥ LB.
+        let mut candidates =
+            vec![round_to_blocks(&x_time(&spec, &os).unwrap(), 3000)];
+        for s in [0usize, 3, n - 1] {
+            candidates.push(crate::optimizer::blocks::BlockPartition::single_level(n, s, 3000));
+        }
+        for p in candidates {
+            let mean = expected_runtime(&spec, &p, &dist, 3000, &mut rng).mean();
+            assert!(mean >= lb * 0.999, "{p}: {mean} < LB {lb}");
+        }
+    }
+
+    #[test]
+    fn envelopes_grow_polylog() {
+        let dist = ShiftedExponential::new(1e-3, 50.0);
+        let e10 = gap_envelope_freq(&dist, 10);
+        let e100 = gap_envelope_freq(&dist, 100);
+        // H_100/H_10 ≈ 1.77: far from the 10× of linear growth.
+        assert!(e100 / e10 < 2.0);
+        let t10 = gap_envelope_time(&dist, 10);
+        let t100 = gap_envelope_time(&dist, 100);
+        assert!(t100 / t10 < 4.0); // (log N)² growth
+    }
+
+    #[test]
+    fn measured_gap_inside_envelope() {
+        let n = 10;
+        let dist = ShiftedExponential::new(1e-3, 50.0);
+        let os = shifted_exp_exact(&dist, n);
+        let spec = ProblemSpec::paper_default(n, 4000);
+        let p = round_to_blocks(&x_time(&spec, &os).unwrap(), 4000);
+        let mut rng = Rng::new(4);
+        let measured = expected_runtime(&spec, &p, &dist, 4000, &mut rng).mean();
+        let (gap, env_t, _env_f) = gap_report(&spec, &dist, &os, measured);
+        assert!(gap >= 1.0 && gap <= env_t, "gap {gap} outside [1, {env_t}]");
+        let _ = dist.mean();
+    }
+}

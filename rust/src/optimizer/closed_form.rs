@@ -1,0 +1,184 @@
+//! Closed-form approximate solutions — Theorems 2 and 3.
+//!
+//! Replacing the random `T` in Problem 3 by a deterministic increasing
+//! vector `t` makes the optimum an *equalization*: every level's term
+//! `t_{N−n} · Σ_{i≤n} w_i x_i` equals a common value `m`, which telescopes
+//! to the closed form
+//!
+//! `x_0 = m/(w_0·t_N)`,  `x_n = (m/w_n)·(1/t_{N−n} − 1/t_{N+1−n})`,
+//! `m = L / Σ_n (levels' reciprocal contributions)`.
+//!
+//! With the gradient-coding work factors `w_i = i+1` this is exactly
+//! Theorem 2/3's expression. The generalized form (any positive `w_i`)
+//! also powers the Ferdinand hierarchical baseline (MDS factors).
+
+use crate::distribution::order_stats::OrderStats;
+use crate::optimizer::runtime_model::{ProblemSpec, WorkModel};
+use crate::{Error, Result};
+
+/// Optimal continuous block sizes for deterministic, strictly increasing
+/// per-rank times `t` (`t[k] = t_{k+1}` in paper indexing) under the given
+/// work model. Returns `x` with `Σ x = L` and the equalized objective
+/// value `m` (so `τ̂(x, t) = unit_work · m`).
+pub fn x_from_deterministic_t(
+    spec: &ProblemSpec,
+    t: &[f64],
+    model: WorkModel,
+) -> Result<(Vec<f64>, f64)> {
+    let n = spec.n;
+    if t.len() != n {
+        return Err(Error::InvalidArgument(format!("t has {} entries, need N={n}", t.len())));
+    }
+    if t.iter().any(|&v| v <= 0.0) {
+        return Err(Error::InvalidArgument("t must be strictly positive".into()));
+    }
+    for k in 1..n {
+        if t[k] < t[k - 1] {
+            return Err(Error::InvalidArgument("t must be nondecreasing".into()));
+        }
+    }
+    // Denominator of m: x_0 contributes 1/(w_0 t_N); level n ≥ 1 contributes
+    // (1/w_n)(1/t_{N−n} − 1/t_{N+1−n}). (With w_i = i+1 this matches the
+    // paper's 1/(n(n+1)t_{N+1−n}) telescoped form.)
+    let w = |i: usize| model.factor(i, n);
+    let mut denom = 1.0 / (w(0) * t[n - 1]);
+    for lvl in 1..n {
+        // t_{N−lvl} is t[n−1−lvl] (0-based), t_{N+1−lvl} is t[n−lvl].
+        denom += (1.0 / t[n - 1 - lvl] - 1.0 / t[n - lvl]) / w(lvl);
+    }
+    let m = spec.coords as f64 / denom;
+    let mut x = vec![0.0; n];
+    x[0] = m / (w(0) * t[n - 1]);
+    for lvl in 1..n {
+        x[lvl] = m / w(lvl) * (1.0 / t[n - 1 - lvl] - 1.0 / t[n - lvl]);
+    }
+    Ok((x, m))
+}
+
+/// Theorem 2: `x^(t)` — deterministic expected order-stat **times**
+/// `t_n = E[T_(n)]`.
+pub fn x_time(spec: &ProblemSpec, os: &OrderStats) -> Result<Vec<f64>> {
+    Ok(x_from_deterministic_t(spec, &os.t, WorkModel::GradientCoding)?.0)
+}
+
+/// Theorem 3: `x^(f)` — deterministic expected order-stat **frequencies**
+/// `t'_n = 1/E[1/T_(n)]`.
+pub fn x_freq(spec: &ProblemSpec, os: &OrderStats) -> Result<Vec<f64>> {
+    Ok(x_from_deterministic_t(spec, &os.t_prime, WorkModel::GradientCoding)?.0)
+}
+
+/// The paper's explicit `m^(t)` (Theorem 2) — exposed for tests.
+pub fn m_of_t(spec: &ProblemSpec, t: &[f64]) -> f64 {
+    let n = spec.n;
+    let mut denom = 1.0 / (n as f64 * t[0]);
+    for k in 1..n {
+        // Σ_{n=1}^{N−1} 1/(n(n+1)·t_{N+1−n})
+        denom += 1.0 / (k as f64 * (k + 1) as f64 * t[n - k]);
+    }
+    spec.coords as f64 / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::order_stats::shifted_exp_exact;
+    use crate::distribution::shifted_exp::ShiftedExponential;
+    use crate::optimizer::projection::project_simplex;
+    use crate::optimizer::runtime_model::tau_hat_sorted;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, coords: usize) -> (ProblemSpec, OrderStats) {
+        let spec = ProblemSpec::paper_default(n, coords);
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        (spec, shifted_exp_exact(&d, n))
+    }
+
+    #[test]
+    fn x_sums_to_l_and_is_nonnegative() {
+        let (spec, os) = setup(20, 20_000);
+        for x in [x_time(&spec, &os).unwrap(), x_freq(&spec, &os).unwrap()] {
+            let sum: f64 = x.iter().sum();
+            assert!((sum - 20_000.0).abs() < 1e-6, "sum={sum}");
+            assert!(x.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn m_matches_paper_formula() {
+        let (spec, os) = setup(10, 5_000);
+        let (_, m_general) =
+            x_from_deterministic_t(&spec, &os.t, WorkModel::GradientCoding).unwrap();
+        let m_paper = m_of_t(&spec, &os.t);
+        assert!(
+            (m_general - m_paper).abs() / m_paper < 1e-12,
+            "{m_general} vs {m_paper}"
+        );
+    }
+
+    #[test]
+    fn objective_is_equalized_at_optimum() {
+        // At x^(t), every level's term t_{N−n}·Σ w_i x_i equals m.
+        let (spec, os) = setup(12, 8_000);
+        let (x, m) = x_from_deterministic_t(&spec, &os.t, WorkModel::GradientCoding).unwrap();
+        let mut cum = 0.0;
+        for lvl in 0..spec.n {
+            cum += (lvl + 1) as f64 * x[lvl];
+            let term = os.t[spec.n - 1 - lvl] * cum;
+            assert!((term - m).abs() / m < 1e-9, "level {lvl}: {term} vs {m}");
+        }
+        // And τ̂(x, t) = unit · m.
+        let tau = tau_hat_sorted(&spec, &x, &os.t, WorkModel::GradientCoding);
+        assert!((tau - spec.unit_work() * m).abs() / tau < 1e-12);
+    }
+
+    #[test]
+    fn optimum_beats_random_feasible_points() {
+        // Theorem 2 optimality: τ̂(x,t) ≥ m for every feasible x.
+        let (spec, os) = setup(8, 1_000);
+        let (_, m) = x_from_deterministic_t(&spec, &os.t, WorkModel::GradientCoding).unwrap();
+        let mut rng = Rng::new(55);
+        for _ in 0..500 {
+            let raw: Vec<f64> = (0..spec.n).map(|_| rng.uniform() * 500.0).collect();
+            let x = project_simplex(&raw, spec.coords as f64);
+            let tau = tau_hat_sorted(&spec, &x, &os.t, WorkModel::GradientCoding);
+            assert!(tau >= spec.unit_work() * m - 1e-6);
+        }
+    }
+
+    #[test]
+    fn mds_model_closed_form_also_equalizes() {
+        let (spec, os) = setup(10, 2_000);
+        let (x, m) = x_from_deterministic_t(&spec, &os.t, WorkModel::MdsCoded).unwrap();
+        let mut cum = 0.0;
+        for lvl in 0..spec.n {
+            cum += WorkModel::MdsCoded.factor(lvl, spec.n) * x[lvl];
+            let term = os.t[spec.n - 1 - lvl] * cum;
+            assert!((term - m).abs() / m < 1e-9);
+        }
+        let sum: f64 = x.iter().sum();
+        assert!((sum - 2_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn first_and_last_blocks_dominate_paper_shape() {
+        // Fig. 3's observation: the first block (no redundancy) and the
+        // last block (full redundancy) hold a disproportionate share of
+        // the coordinates — each well above the uniform L/N share.
+        let (spec, os) = setup(20, 20_000);
+        let x = x_time(&spec, &os).unwrap();
+        let uniform = 20_000.0 / 20.0;
+        assert!(x[0] > 2.0 * uniform, "x0 = {}", x[0]);
+        assert!(x[19] > 2.0 * uniform, "x19 = {}", x[19]);
+        let ends = x[0] + x[19];
+        let total: f64 = x.iter().sum();
+        assert!(ends / total > 1.0 / 3.0, "ends fraction = {}", ends / total);
+    }
+
+    #[test]
+    fn rejects_bad_t() {
+        let spec = ProblemSpec::paper_default(3, 10);
+        assert!(x_from_deterministic_t(&spec, &[1.0, 0.5, 2.0], WorkModel::GradientCoding)
+            .is_err());
+        assert!(x_from_deterministic_t(&spec, &[1.0, 2.0], WorkModel::GradientCoding).is_err());
+    }
+}

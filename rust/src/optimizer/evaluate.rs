@@ -1,0 +1,112 @@
+//! Monte-Carlo evaluation of schemes with **common random numbers**:
+//! every scheme sees the same stream of `T` draws, so paired comparisons
+//! (Fig. 4's curves, the §VI reduction percentages) are far lower
+//! variance than independent estimation.
+
+use crate::distribution::order_stats::{estimate, shifted_exp_exact, OrderStats};
+use crate::distribution::CycleTimeDistribution;
+use crate::optimizer::blocks::BlockPartition;
+use crate::optimizer::runtime_model::{sort_times, tau_hat_sorted, ProblemSpec, WorkModel};
+use crate::util::rng::Rng;
+use crate::util::stats::RunningStats;
+
+/// Expected order statistics: exact when the distribution supports it,
+/// Monte Carlo (with `trials` rounds) otherwise.
+pub fn order_stats_for(
+    dist: &dyn CycleTimeDistribution,
+    n: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> OrderStats {
+    if let Some(se) = dist.as_shifted_exp() {
+        shifted_exp_exact(se, n)
+    } else {
+        estimate(dist, n, trials, rng)
+    }
+}
+
+/// Result row for one scheme in a comparison.
+#[derive(Debug, Clone)]
+pub struct SchemeRuntime {
+    pub label: String,
+    pub stats: RunningStats,
+}
+
+impl SchemeRuntime {
+    pub fn mean(&self) -> f64 {
+        self.stats.mean()
+    }
+}
+
+/// Evaluate several block partitions under identical `T` draws.
+pub fn compare_schemes(
+    spec: &ProblemSpec,
+    schemes: &[(String, BlockPartition)],
+    dist: &dyn CycleTimeDistribution,
+    trials: usize,
+    rng: &mut Rng,
+) -> Vec<SchemeRuntime> {
+    let xs: Vec<Vec<f64>> = schemes.iter().map(|(_, p)| p.as_f64()).collect();
+    let mut stats: Vec<RunningStats> = schemes.iter().map(|_| RunningStats::new()).collect();
+    let mut t = vec![0.0; spec.n];
+    for _ in 0..trials {
+        for v in t.iter_mut() {
+            *v = dist.sample(rng);
+        }
+        sort_times(&mut t);
+        for (x, st) in xs.iter().zip(stats.iter_mut()) {
+            st.push(tau_hat_sorted(spec, x, &t, WorkModel::GradientCoding));
+        }
+    }
+    schemes
+        .iter()
+        .zip(stats)
+        .map(|((label, _), stats)| SchemeRuntime { label: label.clone(), stats })
+        .collect()
+}
+
+/// Percent reduction of `ours` relative to the best of `baselines`.
+pub fn reduction_vs_best_baseline(ours: f64, baselines: &[f64]) -> f64 {
+    let best = baselines.iter().cloned().fold(f64::INFINITY, f64::min);
+    (1.0 - ours / best) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::shifted_exp::ShiftedExponential;
+
+    #[test]
+    fn common_random_numbers_are_paired() {
+        let spec = ProblemSpec::paper_default(6, 600);
+        let dist = ShiftedExponential::new(1e-3, 50.0);
+        let a = BlockPartition::single_level(6, 0, 600);
+        let b = BlockPartition::single_level(6, 0, 600);
+        let mut rng = Rng::new(8);
+        let out = compare_schemes(
+            &spec,
+            &[("a".into(), a), ("b".into(), b)],
+            &dist,
+            500,
+            &mut rng,
+        );
+        // Identical schemes under CRN give *identical* estimates.
+        assert_eq!(out[0].mean(), out[1].mean());
+    }
+
+    #[test]
+    fn reduction_math() {
+        assert!((reduction_vs_best_baseline(63.0, &[100.0, 120.0]) - 37.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn order_stats_dispatch_exact_for_shifted_exp() {
+        let dist = ShiftedExponential::new(1e-3, 50.0);
+        let mut rng = Rng::new(9);
+        let os = order_stats_for(&dist, 10, 10, &mut rng); // tiny trials: must not matter
+        let exact = crate::distribution::order_stats::shifted_exp_exact(&dist, 10);
+        for k in 0..10 {
+            assert_eq!(os.t[k], exact.t[k]);
+        }
+    }
+}

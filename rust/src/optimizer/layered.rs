@@ -1,0 +1,156 @@
+//! Layer-aligned blocks — the paper's footnotes 2–3 extension.
+//!
+//! For a neural network the natural coding unit is a *layer* (one
+//! parameter tensor), not a scalar coordinate: workers materialize and
+//! emit whole layer gradients. The redundancy vector is then constrained
+//! to be constant within each layer, i.e. block boundaries must land on
+//! layer boundaries.
+//!
+//! Given the unconstrained continuous optimum `x` (from the closed form
+//! or the subgradient solver), [`layer_aligned_partition`] snaps it to
+//! layer granularity: walking layers in coordinate order, each layer is
+//! assigned the level whose continuous cumulative range covers the
+//! layer's midpoint (levels stay monotone by construction — Lemma 1
+//! shape is preserved).
+
+use crate::optimizer::blocks::BlockPartition;
+use crate::{Error, Result};
+
+/// Snap a continuous per-level allocation `x` (summing to `Σ layer_sizes`)
+/// to layer boundaries. Returns a [`BlockPartition`] whose level vector
+/// is constant within each layer.
+pub fn layer_aligned_partition(x: &[f64], layer_sizes: &[usize]) -> Result<BlockPartition> {
+    let n = x.len();
+    if layer_sizes.is_empty() || layer_sizes.iter().any(|&s| s == 0) {
+        return Err(Error::InvalidArgument("layer sizes must be positive".into()));
+    }
+    let total: usize = layer_sizes.iter().sum();
+    let x_total: f64 = x.iter().sum();
+    if (x_total - total as f64).abs() > 1e-6 * total as f64 {
+        return Err(Error::InvalidArgument(format!(
+            "allocation sums to {x_total}, layers to {total}"
+        )));
+    }
+    // Continuous level thresholds.
+    let mut thresh = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for &xi in x {
+        acc += xi.max(0.0);
+        thresh.push(acc);
+    }
+    let mut sizes = vec![0usize; n];
+    let mut level = 0usize;
+    let mut covered = 0usize;
+    for &ls in layer_sizes {
+        let mid = covered as f64 + ls as f64 / 2.0;
+        while level + 1 < n && mid > thresh[level] {
+            level += 1;
+        }
+        sizes[level] += ls;
+        covered += ls;
+    }
+    Ok(BlockPartition::new(sizes))
+}
+
+/// Parameter-tensor sizes of the reference MLP
+/// (`[W1 (d·h), b1 (h), W2 (h·c), b2 (c)]`) — the layer structure the
+/// e2e example trains.
+pub fn mlp_layer_sizes(d: usize, h: usize, c: usize) -> Vec<usize> {
+    vec![d * h, h, h * c, c]
+}
+
+/// Split large tensors into `chunk`-sized sub-layers: coding granularity
+/// between "whole tensor" and "scalar coordinate" (how a deployment
+/// would actually size emission units).
+pub fn chunked_layer_sizes(layer_sizes: &[usize], chunk: usize) -> Vec<usize> {
+    assert!(chunk > 0);
+    let mut out = Vec::new();
+    for &ls in layer_sizes {
+        let mut left = ls;
+        while left > chunk {
+            out.push(chunk);
+            left -= chunk;
+        }
+        out.push(left);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::order_stats::shifted_exp_exact;
+    use crate::distribution::shifted_exp::ShiftedExponential;
+    use crate::optimizer::closed_form::x_time;
+    use crate::optimizer::evaluate::compare_schemes;
+    use crate::optimizer::rounding::round_to_blocks;
+    use crate::optimizer::runtime_model::ProblemSpec;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn partition_covers_all_layers_and_is_layer_constant() {
+        let layers = mlp_layer_sizes(64, 256, 10); // 16384, 256, 2560, 10
+        let total: usize = layers.iter().sum();
+        let n = 8;
+        let x = vec![total as f64 / n as f64; n];
+        let p = layer_aligned_partition(&x, &layers).unwrap();
+        assert_eq!(p.total(), total);
+        // Level changes only at layer boundaries.
+        let s = p.s_vector();
+        let mut idx = 0;
+        for &ls in &layers {
+            let lvl = s[idx];
+            assert!(s[idx..idx + ls].iter().all(|&v| v == lvl));
+            idx += ls;
+        }
+    }
+
+    #[test]
+    fn chunking_tightens_the_constraint() {
+        let layers = mlp_layer_sizes(64, 256, 10);
+        let chunked = chunked_layer_sizes(&layers, 512);
+        assert_eq!(chunked.iter().sum::<usize>(), layers.iter().sum::<usize>());
+        assert!(chunked.len() > layers.len());
+        assert!(chunked.iter().all(|&c| c <= 512));
+    }
+
+    #[test]
+    fn layered_cost_approaches_free_cost_as_chunks_shrink() {
+        let n = 10usize;
+        let dist = ShiftedExponential::new(1e-3, 50.0);
+        let os = shifted_exp_exact(&dist, n);
+        let layers = mlp_layer_sizes(16, 64, 4); // 1024, 64, 256, 4 → L=1348
+        let l: usize = layers.iter().sum();
+        let spec = ProblemSpec::paper_default(n, l);
+        let x = x_time(&spec, &os).unwrap();
+
+        let free = round_to_blocks(&x, l);
+        let coarse = layer_aligned_partition(&x, &layers).unwrap();
+        let fine =
+            layer_aligned_partition(&x, &chunked_layer_sizes(&layers, 64)).unwrap();
+
+        let mut rng = Rng::new(9);
+        let rows = compare_schemes(
+            &spec,
+            &[
+                ("free".into(), free),
+                ("fine".into(), fine),
+                ("coarse".into(), coarse),
+            ],
+            &dist,
+            4000,
+            &mut rng,
+        );
+        let (free_c, fine_c, coarse_c) = (rows[0].mean(), rows[1].mean(), rows[2].mean());
+        // Monotone: free ≤ fine-chunked ≤ whole-tensor (small MC slack).
+        assert!(free_c <= fine_c * 1.02, "free {free_c} vs fine {fine_c}");
+        assert!(fine_c <= coarse_c * 1.02, "fine {fine_c} vs coarse {coarse_c}");
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        assert!(layer_aligned_partition(&[1.0], &[]).is_err());
+        assert!(layer_aligned_partition(&[1.0, 1.0], &[1, 0]).is_err());
+        assert!(layer_aligned_partition(&[1.0, 1.0], &[5, 5]).is_err());
+    }
+}

@@ -1,0 +1,32 @@
+//! The paper's optimization contribution (§IV–§V): choose how much
+//! straggler redundancy each gradient coordinate gets.
+//!
+//! Pipeline:
+//! 1. [`runtime_model`] — the overall-runtime random variable
+//!    `τ(s,T)` (Eq. 2) and its block form `τ̂(x,T)` (Eq. 5), with pluggable
+//!    per-level work models (gradient coding vs MDS-coded computation).
+//! 2. [`blocks`] — the `s ↔ x` change of variables (Theorem 1).
+//! 3. [`subgradient`] + [`projection`] — the stochastic projected
+//!    subgradient method for Problem 3 (§V-A), giving `x†`.
+//! 4. [`closed_form`] — Theorems 2/3: `x^(t)` (deterministic order-stat
+//!    times) and `x^(f)` (deterministic order-stat frequencies).
+//! 5. [`rounding`] — relax-and-round back to integer block sizes
+//!    (Problem 2), per [12, p. 386].
+//! 6. [`baselines`] — §VI comparison schemes (single-BCGC, Tandon
+//!    α-partial, Ferdinand hierarchical r = L and r = L/2, uncoded).
+//! 7. [`solver`] — one facade enum over all of the above.
+//! 8. [`evaluate`] — Monte-Carlo estimation of `E[τ̂(x,T)]` with common
+//!    random numbers across schemes.
+
+pub mod baselines;
+pub mod blocks;
+pub mod bounds;
+pub mod closed_form;
+pub mod evaluate;
+pub mod layered;
+pub mod projection;
+pub mod rounding;
+pub mod runtime_model;
+pub mod solver;
+pub mod subgradient;
+pub mod weighted;

@@ -1,0 +1,136 @@
+//! Euclidean projection onto the scaled simplex
+//! `Δ_L = { x ∈ R^N : x ≥ 0, Σ x_n = L }` — the feasible set of
+//! Problem 3 (constraints (3) and (9)).
+//!
+//! The projection has the semi-closed form `x_n = max(v_n − θ, 0)` with
+//! the scalar `θ` pinned by `Σ_n max(v_n − θ, 0) = L`. The paper solves
+//! for `θ` by bisection; we implement both the bisection and the exact
+//! `O(N log N)` sort-based pivot (Held–Wolfe–Crowder) and test they agree.
+
+/// Exact sort-based projection of `v` onto `Δ_target`.
+pub fn project_simplex(v: &[f64], target: f64) -> Vec<f64> {
+    assert!(target > 0.0);
+    let n = v.len();
+    let mut u = v.to_vec();
+    u.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending
+    // Find the pivot: largest k with u_k − (Σ_{j≤k} u_j − target)/k > 0.
+    let mut cumsum = 0.0;
+    let mut theta = 0.0;
+    for (k, &uk) in u.iter().enumerate() {
+        cumsum += uk;
+        let cand = (cumsum - target) / (k + 1) as f64;
+        if uk - cand > 0.0 {
+            theta = cand;
+        } else {
+            break;
+        }
+    }
+    let _ = n;
+    v.iter().map(|&vi| (vi - theta).max(0.0)).collect()
+}
+
+/// Bisection-based projection (the paper's semi-closed-form route).
+pub fn project_simplex_bisect(v: &[f64], target: f64, tol: f64) -> Vec<f64> {
+    assert!(target > 0.0);
+    let sum = |theta: f64| -> f64 { v.iter().map(|&vi| (vi - theta).max(0.0)).sum() };
+    // Bracket θ: at θ = min(v) − target/N the sum is ≥ target; at max(v) it is 0.
+    let vmax = v.iter().cloned().fold(f64::MIN, f64::max);
+    let vmin = v.iter().cloned().fold(f64::MAX, f64::min);
+    let mut lo = vmin - target / v.len() as f64 - 1.0;
+    let mut hi = vmax;
+    debug_assert!(sum(lo) >= target);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if sum(mid) > target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo < tol {
+            break;
+        }
+    }
+    let theta = 0.5 * (lo + hi);
+    v.iter().map(|&vi| (vi - theta).max(0.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_feasible(x: &[f64], target: f64, tol: f64) {
+        assert!(x.iter().all(|&xi| xi >= 0.0));
+        let s: f64 = x.iter().sum();
+        assert!((s - target).abs() < tol, "sum={s}, target={target}");
+    }
+
+    #[test]
+    fn already_feasible_is_fixed_point() {
+        let x = vec![2.0, 3.0, 5.0];
+        let p = project_simplex(&x, 10.0);
+        for (a, b) in p.iter().zip(x.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn negative_entries_clipped() {
+        let v = vec![-5.0, 0.0, 5.0];
+        let p = project_simplex(&v, 3.0);
+        assert_feasible(&p, 3.0, 1e-9);
+        assert_eq!(p[0], 0.0);
+    }
+
+    #[test]
+    fn matches_bisection_on_random_inputs() {
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let n = 2 + rng.below(30) as usize;
+            let v: Vec<f64> = (0..n).map(|_| rng.normal_with(0.0, 10.0)).collect();
+            let target = 1.0 + rng.uniform() * 100.0;
+            let a = project_simplex(&v, target);
+            let b = project_simplex_bisect(&v, target, 1e-12);
+            assert_feasible(&a, target, 1e-9);
+            assert_feasible(&b, target, 1e-6);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn projection_is_distance_minimizing() {
+        // Compare against a dense grid search over the 2-simplex.
+        let v = vec![4.0, -1.0, 2.5];
+        let target = 3.0;
+        let p = project_simplex(&v, target);
+        let d_opt: f64 = p.iter().zip(v.iter()).map(|(a, b)| (a - b) * (a - b)).sum();
+        let steps = 300;
+        for i in 0..=steps {
+            for j in 0..=(steps - i) {
+                let x0 = target * i as f64 / steps as f64;
+                let x1 = target * j as f64 / steps as f64;
+                let x2 = target - x0 - x1;
+                let d: f64 = [(x0 - v[0]), (x1 - v[1]), (x2 - v[2])]
+                    .iter()
+                    .map(|e| e * e)
+                    .sum();
+                assert!(d >= d_opt - 1e-6, "grid point beats projection");
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let v: Vec<f64> = (0..8).map(|_| rng.normal_with(2.0, 5.0)).collect();
+            let p1 = project_simplex(&v, 20.0);
+            let p2 = project_simplex(&p1, 20.0);
+            for (a, b) in p1.iter().zip(p2.iter()) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+}

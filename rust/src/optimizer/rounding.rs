@@ -1,0 +1,111 @@
+//! Relax-and-round ([12, pp. 386]): turn a continuous solution of
+//! Problem 3 into integer block sizes feasible for Problem 2.
+//!
+//! Floor every entry, then hand the remaining `L − Σ⌊x⌋` coordinates to
+//! the entries with the largest fractional parts (ties broken toward
+//! lower redundancy, which never increases work). Since `N ≪ L`, the
+//! rounding perturbs each block by < 1 coordinate — negligible, as the
+//! paper notes.
+
+use crate::optimizer::blocks::BlockPartition;
+
+/// Round a continuous feasible point to integer block sizes summing to
+/// exactly `coords`.
+pub fn round_to_blocks(x: &[f64], coords: usize) -> BlockPartition {
+    let n = x.len();
+    assert!(n > 0);
+    let mut sizes: Vec<usize> = x.iter().map(|&v| v.max(0.0).floor() as usize).collect();
+    let mut assigned: usize = sizes.iter().sum();
+    // Guard: the continuous point may sum to slightly more than L after
+    // clipping; shave from the largest blocks.
+    while assigned > coords {
+        let i = (0..n).max_by_key(|&i| sizes[i]).unwrap();
+        sizes[i] -= 1;
+        assigned -= 1;
+    }
+    // Distribute the remainder by largest fractional part.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let fa = x[a].max(0.0) - x[a].max(0.0).floor();
+        let fb = x[b].max(0.0) - x[b].max(0.0).floor();
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    let mut k = 0;
+    while assigned < coords {
+        sizes[order[k % n]] += 1;
+        assigned += 1;
+        k += 1;
+    }
+    BlockPartition::new(sizes)
+}
+
+/// Round with a *constrained granularity*: every block size must be a
+/// multiple of `granularity` (used by the Ferdinand `r = L/2` baseline,
+/// where two coordinates share a layer, and by the neural-network variant
+/// where a block must align with a layer boundary).
+pub fn round_to_blocks_granular(x: &[f64], coords: usize, granularity: usize) -> BlockPartition {
+    assert!(granularity >= 1);
+    assert!(
+        coords % granularity == 0,
+        "coords={coords} not divisible by granularity={granularity}"
+    );
+    let scaled: Vec<f64> = x.iter().map(|&v| v / granularity as f64).collect();
+    let units = round_to_blocks(&scaled, coords / granularity);
+    BlockPartition::new(units.sizes().iter().map(|&u| u * granularity).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn preserves_total() {
+        let x = vec![10.4, 0.3, 5.2, 4.1];
+        let p = round_to_blocks(&x, 20);
+        assert_eq!(p.total(), 20);
+        // Largest fractional part (0.4) gets the spare coordinate.
+        assert_eq!(p.sizes(), &[11, 0, 5, 4]);
+    }
+
+    #[test]
+    fn integer_input_unchanged() {
+        let x = vec![3.0, 7.0, 0.0];
+        let p = round_to_blocks(&x, 10);
+        assert_eq!(p.sizes(), &[3, 7, 0]);
+    }
+
+    #[test]
+    fn random_continuous_points_round_feasibly() {
+        let mut rng = Rng::new(41);
+        for _ in 0..200 {
+            let n = 2 + rng.below(20) as usize;
+            let coords = 10 + rng.below(10_000) as usize;
+            let raw: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+            let sum: f64 = raw.iter().sum();
+            let x: Vec<f64> = raw.iter().map(|&v| v / sum * coords as f64).collect();
+            let p = round_to_blocks(&x, coords);
+            assert_eq!(p.total(), coords);
+            // Each block moved by less than 1 from the continuous value
+            // (up to the shaving guard, which only triggers on clip excess).
+            for (i, &s) in p.sizes().iter().enumerate() {
+                assert!((s as f64 - x[i]).abs() < 1.0 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn granular_rounding_multiples() {
+        let x = vec![10.9, 4.3, 4.8];
+        let p = round_to_blocks_granular(&x, 20, 2);
+        assert_eq!(p.total(), 20);
+        assert!(p.sizes().iter().all(|s| s % 2 == 0));
+    }
+
+    #[test]
+    fn oversum_input_is_shaved() {
+        let x = vec![7.0, 8.0]; // sums to 15 > 10
+        let p = round_to_blocks(&x, 10);
+        assert_eq!(p.total(), 10);
+    }
+}

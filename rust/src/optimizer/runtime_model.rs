@@ -1,0 +1,281 @@
+//! The overall-runtime random variable — Eq. (2) and Eq. (5).
+//!
+//! Workers compute coordinates sequentially (order `1..L`); the master
+//! recovers coordinate `l` once the `N − s_l` fastest workers have emitted
+//! their `l`-th coded partial derivative. With per-coordinate cumulative
+//! work `Σ_{i≤l}(s_i+1)` units (one unit = `(M/N)·b` CPU cycles), the
+//! overall runtime is
+//!
+//! `τ(s,T) = (M/N)·b · max_l { T_(N−s_l) · Σ_{i≤l}(s_i+1) }`         (2)
+//!
+//! and, in block form with `x_n` coordinates at level `n`,
+//!
+//! `τ̂(x,T) = (M/N)·b · max_n { T_(N−n) · Σ_{i≤n}(i+1)·x_i }`        (5)
+//!
+//! The per-level *work factor* `(i+1)` is specific to gradient coding
+//! (each of the `s+1` held subsets is `M/N` samples). The Ferdinand et al.
+//! hierarchical **MDS-coded computation** baseline has factor `N/(N−i)`
+//! instead (an `(N, k=N−i)` MDS code splits a coordinate's full `M·b` work
+//! `k` ways); [`WorkModel`] abstracts the two.
+
+use crate::distribution::CycleTimeDistribution;
+use crate::optimizer::blocks::BlockPartition;
+use crate::util::rng::Rng;
+use crate::util::stats::RunningStats;
+
+/// Global problem dimensions (paper notation).
+#[derive(Debug, Clone, Copy)]
+pub struct ProblemSpec {
+    /// Number of workers `N`.
+    pub n: usize,
+    /// Number of model coordinates `L`.
+    pub coords: usize,
+    /// Number of samples `M`.
+    pub samples: usize,
+    /// CPU cycles per (coordinate × sample) `b`.
+    pub cycles_per_coord: f64,
+}
+
+impl ProblemSpec {
+    pub fn new(n: usize, coords: usize, samples: usize, cycles_per_coord: f64) -> Self {
+        assert!(n >= 1 && coords >= 1 && samples >= 1 && cycles_per_coord > 0.0);
+        Self { n, coords, samples, cycles_per_coord }
+    }
+
+    /// The paper's §VI experiment scale: `M = 50`, `b = 1`.
+    pub fn paper_default(n: usize, coords: usize) -> Self {
+        Self::new(n, coords, 50, 1.0)
+    }
+
+    /// One unit of per-coordinate work: `(M/N)·b` cycles.
+    #[inline]
+    pub fn unit_work(&self) -> f64 {
+        self.samples as f64 / self.n as f64 * self.cycles_per_coord
+    }
+}
+
+/// Per-level work model (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkModel {
+    /// Gradient coding: level `i` costs `(i+1)` units per coordinate.
+    GradientCoding,
+    /// `(N, N−i)` MDS-coded computation: `N/(N−i)` units per coordinate.
+    MdsCoded,
+}
+
+impl WorkModel {
+    /// Work factor of level `i` out of `n` levels.
+    #[inline]
+    pub fn factor(self, i: usize, n: usize) -> f64 {
+        match self {
+            WorkModel::GradientCoding => (i + 1) as f64,
+            WorkModel::MdsCoded => n as f64 / (n - i) as f64,
+        }
+    }
+}
+
+/// Sort a cycle-time sample ascending (`T_(1) ≤ … ≤ T_(N)`).
+pub fn sort_times(t: &mut [f64]) {
+    t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+/// `τ̂(x, T)` (Eq. 5) for **sorted** times and (possibly fractional) block
+/// sizes. `x.len() == t_sorted.len() == N`.
+pub fn tau_hat_sorted(spec: &ProblemSpec, x: &[f64], t_sorted: &[f64], model: WorkModel) -> f64 {
+    let n = spec.n;
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(t_sorted.len(), n);
+    let mut cum = 0.0;
+    let mut best = 0.0f64;
+    for i in 0..n {
+        cum += model.factor(i, n) * x[i];
+        // T_(N−i): 0-based index N−1−i.
+        let v = t_sorted[n - 1 - i] * cum;
+        if v > best {
+            best = v;
+        }
+    }
+    spec.unit_work() * best
+}
+
+/// `τ̂(x, T)` with unsorted times (sorts a copy).
+pub fn tau_hat(spec: &ProblemSpec, x: &[f64], times: &[f64], model: WorkModel) -> f64 {
+    let mut t = times.to_vec();
+    sort_times(&mut t);
+    tau_hat_sorted(spec, x, &t, model)
+}
+
+/// `τ(s, T)` (Eq. 2) straight from a per-coordinate redundancy vector.
+/// Kept for Theorem-1 equivalence tests; `O(L)`.
+pub fn tau_s(spec: &ProblemSpec, s: &[usize], times: &[f64]) -> f64 {
+    let n = spec.n;
+    let mut t = times.to_vec();
+    sort_times(&mut t);
+    let mut cum = 0.0;
+    let mut best = 0.0f64;
+    for &sl in s {
+        debug_assert!(sl < n);
+        cum += (sl + 1) as f64;
+        let v = t[n - 1 - sl] * cum;
+        if v > best {
+            best = v;
+        }
+    }
+    spec.unit_work() * best
+}
+
+/// The level achieving the max in Eq. (5) (the subgradient's active piece).
+/// Returns `(argmax level, τ̂ value without the unit-work prefactor)`.
+pub fn tau_hat_argmax(
+    spec: &ProblemSpec,
+    x: &[f64],
+    t_sorted: &[f64],
+    model: WorkModel,
+) -> (usize, f64) {
+    let n = spec.n;
+    let mut cum = 0.0;
+    let mut best = f64::NEG_INFINITY;
+    let mut arg = 0;
+    for i in 0..n {
+        cum += model.factor(i, n) * x[i];
+        let v = t_sorted[n - 1 - i] * cum;
+        if v > best {
+            best = v;
+            arg = i;
+        }
+    }
+    (arg, best)
+}
+
+/// Monte-Carlo estimate of `E_T[τ̂(x,T)]` with `trials` i.i.d. samples of
+/// `T`. Pass the same seeded [`Rng`] across schemes for common random
+/// numbers (variance-free *comparisons*).
+pub fn expected_tau_hat(
+    spec: &ProblemSpec,
+    x: &[f64],
+    dist: &dyn CycleTimeDistribution,
+    model: WorkModel,
+    trials: usize,
+    rng: &mut Rng,
+) -> RunningStats {
+    let mut stats = RunningStats::new();
+    let mut t = vec![0.0; spec.n];
+    for _ in 0..trials {
+        for v in t.iter_mut() {
+            *v = dist.sample(rng);
+        }
+        sort_times(&mut t);
+        stats.push(tau_hat_sorted(spec, x, &t, model));
+    }
+    stats
+}
+
+/// Convenience: expected runtime of an integer [`BlockPartition`].
+pub fn expected_runtime(
+    spec: &ProblemSpec,
+    blocks: &BlockPartition,
+    dist: &dyn CycleTimeDistribution,
+    trials: usize,
+    rng: &mut Rng,
+) -> RunningStats {
+    expected_tau_hat(spec, &blocks.as_f64(), dist, WorkModel::GradientCoding, trials, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::shifted_exp::ShiftedExponential;
+
+    /// Fig. 1's setting: N=4, L=4, T = (1/10, 1/10, 1/4, 1)·T0, M/N·b = 1.
+    fn fig1_spec() -> (ProblemSpec, Vec<f64>) {
+        (ProblemSpec::new(4, 4, 4, 1.0), vec![0.1, 0.1, 0.25, 1.0])
+    }
+
+    #[test]
+    fn fig1_uncoded_waits_for_slowest() {
+        let (spec, t) = fig1_spec();
+        // s = (0,0,0,0): cum work l, decode needs all workers ⇒ T_(4)·4 = 4.
+        let tau = tau_s(&spec, &[0, 0, 0, 0], &t);
+        assert!((tau - 4.0).abs() < 1e-12, "tau={tau}");
+    }
+
+    #[test]
+    fn fig1_uniform_s1_and_s2() {
+        let (spec, t) = fig1_spec();
+        // s=1 uniformly: worker work per coord = 2 ⇒ cum = 2l; need 3 fastest
+        // ⇒ T_(3)=0.25. τ = max_l 0.25·2l = 0.25·8 = 2.
+        let tau1 = tau_s(&spec, &[1, 1, 1, 1], &t);
+        assert!((tau1 - 2.0).abs() < 1e-12, "tau1={tau1}");
+        // s=2: cum = 3l, need 2 fastest ⇒ T_(2)=0.1 ⇒ τ = 0.1·12 = 1.2.
+        let tau2 = tau_s(&spec, &[2, 2, 2, 2], &t);
+        assert!((tau2 - 1.2).abs() < 1e-12, "tau2={tau2}");
+    }
+
+    #[test]
+    fn fig1_proposed_coordinate_scheme_is_faster() {
+        let (spec, t) = fig1_spec();
+        // Proposed s = (1,1,2,2): cum = 2,4,7,10;
+        // levels: l≤2 uses T_(3)=0.25, l≥3 uses T_(2)=0.1.
+        // max(0.25·2, 0.25·4, 0.1·7, 0.1·10) = max(0.5, 1.0, 0.7, 1.0) = 1.0.
+        let tau = tau_s(&spec, &[1, 1, 2, 2], &t);
+        assert!((tau - 1.0).abs() < 1e-12, "tau={tau}");
+        // Strictly better than both uniform schemes (1.2 and 2.0).
+        assert!(tau < 1.2);
+    }
+
+    #[test]
+    fn tau_s_equals_tau_hat_via_theorem1() {
+        let (spec, t) = fig1_spec();
+        let s = [1usize, 1, 2, 2];
+        let p = BlockPartition::from_s_vector(4, &s).unwrap();
+        let a = tau_s(&spec, &s, &t);
+        let b = tau_hat(&spec, &p.as_f64(), &t, WorkModel::GradientCoding);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_levels_do_not_change_tau() {
+        // Adding a zero-size level between blocks must not alter the max —
+        // its term is dominated by the previous non-empty level.
+        let spec = ProblemSpec::new(5, 10, 5, 1.0);
+        let t = vec![0.2, 0.3, 0.5, 0.8, 1.3];
+        let with_gap = [3.0, 0.0, 4.0, 0.0, 3.0];
+        let tau = tau_hat(&spec, &with_gap, &t, WorkModel::GradientCoding);
+        // Manual: cum levels: l0:3 (T_(5)), l2: 3+12=15 (T_(3)), l4: 15+15=30 (T_(1)).
+        let want: f64 = [1.3 * 3.0, 0.5 * 15.0, 0.2 * 30.0]
+            .into_iter()
+            .fold(f64::MIN, f64::max);
+        assert!((tau - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mds_work_factors() {
+        assert_eq!(WorkModel::MdsCoded.factor(0, 4), 1.0);
+        assert_eq!(WorkModel::MdsCoded.factor(2, 4), 2.0);
+        assert_eq!(WorkModel::GradientCoding.factor(2, 4), 3.0);
+    }
+
+    #[test]
+    fn argmax_matches_value() {
+        let spec = ProblemSpec::new(4, 8, 4, 1.0);
+        let x = [2.0, 2.0, 2.0, 2.0];
+        let mut t = vec![0.4, 0.1, 0.9, 0.2];
+        sort_times(&mut t);
+        let (arg, raw) = tau_hat_argmax(&spec, &x, &t, WorkModel::GradientCoding);
+        let full = tau_hat_sorted(&spec, &x, &t, WorkModel::GradientCoding);
+        assert!((raw * spec.unit_work() - full).abs() < 1e-12);
+        assert!(arg < 4);
+    }
+
+    #[test]
+    fn expected_runtime_scales_with_mean() {
+        let spec = ProblemSpec::paper_default(8, 100);
+        let p = BlockPartition::single_level(8, 0, 100);
+        let d_fast = ShiftedExponential::new(1e-2, 10.0);
+        let d_slow = ShiftedExponential::new(1e-3, 10.0);
+        let mut rng = Rng::new(3);
+        let fast = expected_runtime(&spec, &p, &d_fast, 3000, &mut rng).mean();
+        let slow = expected_runtime(&spec, &p, &d_slow, 3000, &mut rng).mean();
+        assert!(slow > fast * 2.0, "slow={slow} fast={fast}");
+    }
+}

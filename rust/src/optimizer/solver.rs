@@ -1,0 +1,155 @@
+//! One facade over every scheme in the paper's §VI comparison.
+
+use crate::distribution::CycleTimeDistribution;
+use crate::optimizer::blocks::BlockPartition;
+use crate::optimizer::evaluate::order_stats_for;
+use crate::optimizer::rounding::round_to_blocks;
+use crate::optimizer::runtime_model::ProblemSpec;
+use crate::optimizer::subgradient::{self, SubgradientOptions};
+use crate::optimizer::{baselines, closed_form};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Every scheme the benches and CLI can produce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchemeKind {
+    /// `x̂†` — stochastic projected subgradient, rounded (§V-A).
+    OptimalSubgradient,
+    /// `x̂^(t)` — Theorem 2 closed form, rounded.
+    ClosedFormTime,
+    /// `x̂^(f)` — Theorem 3 closed form, rounded.
+    ClosedFormFreq,
+    /// Best single-level scheme (optimized Tandon for full stragglers).
+    SingleBlock,
+    /// Tandon et al. under the α-partial two-speed model.
+    TandonAlpha,
+    /// Ferdinand et al. hierarchical, per-coordinate layers (r = L).
+    FerdinandFull,
+    /// Ferdinand et al. hierarchical, two coordinates per layer (r = L/2).
+    FerdinandHalf,
+    /// No redundancy at all.
+    Uncoded,
+}
+
+impl SchemeKind {
+    /// Paper-style display label.
+    pub fn label(self) -> &'static str {
+        match self {
+            SchemeKind::OptimalSubgradient => "proposed x^dag (subgradient)",
+            SchemeKind::ClosedFormTime => "proposed x^(t) (Thm 2)",
+            SchemeKind::ClosedFormFreq => "proposed x^(f) (Thm 3)",
+            SchemeKind::SingleBlock => "single-BCGC",
+            SchemeKind::TandonAlpha => "Tandon et al. GC",
+            SchemeKind::FerdinandFull => "Ferdinand et al. (r=L)",
+            SchemeKind::FerdinandHalf => "Ferdinand et al. (r=L/2)",
+            SchemeKind::Uncoded => "uncoded",
+        }
+    }
+
+    /// The three proposed schemes of §V.
+    pub fn proposed() -> [SchemeKind; 3] {
+        [
+            SchemeKind::OptimalSubgradient,
+            SchemeKind::ClosedFormTime,
+            SchemeKind::ClosedFormFreq,
+        ]
+    }
+
+    /// The four §VI baselines.
+    pub fn baselines() -> [SchemeKind; 4] {
+        [
+            SchemeKind::SingleBlock,
+            SchemeKind::TandonAlpha,
+            SchemeKind::FerdinandFull,
+            SchemeKind::FerdinandHalf,
+        ]
+    }
+}
+
+/// Solver configuration (subgradient iterations etc.).
+#[derive(Debug, Clone, Default)]
+pub struct SolveOptions {
+    pub subgradient: SubgradientOptions,
+    /// Monte-Carlo rounds for order-stat estimation on non-shifted-exp
+    /// distributions.
+    pub order_stat_trials: usize,
+}
+
+impl SolveOptions {
+    pub fn fast() -> Self {
+        Self {
+            subgradient: SubgradientOptions { iters: 1500, playoff_trials: 800, ..Default::default() },
+            order_stat_trials: 10_000,
+        }
+    }
+}
+
+/// Produce the integer block partition for a scheme.
+pub fn solve(
+    spec: &ProblemSpec,
+    dist: &dyn CycleTimeDistribution,
+    kind: SchemeKind,
+    opts: &SolveOptions,
+    rng: &mut Rng,
+) -> Result<BlockPartition> {
+    let trials = if opts.order_stat_trials == 0 { 20_000 } else { opts.order_stat_trials };
+    match kind {
+        SchemeKind::OptimalSubgradient => {
+            let os = order_stats_for(dist, spec.n, trials, rng);
+            // Warm-start from the better closed form.
+            let warm = closed_form::x_freq(spec, &os)?;
+            let sol = subgradient::solve(spec, dist, Some(warm), &opts.subgradient, rng)?;
+            Ok(round_to_blocks(&sol.x, spec.coords))
+        }
+        SchemeKind::ClosedFormTime => {
+            let os = order_stats_for(dist, spec.n, trials, rng);
+            Ok(round_to_blocks(&closed_form::x_time(spec, &os)?, spec.coords))
+        }
+        SchemeKind::ClosedFormFreq => {
+            let os = order_stats_for(dist, spec.n, trials, rng);
+            Ok(round_to_blocks(&closed_form::x_freq(spec, &os)?, spec.coords))
+        }
+        SchemeKind::SingleBlock => {
+            let os = order_stats_for(dist, spec.n, trials, rng);
+            Ok(baselines::single_bcgc(spec, &os))
+        }
+        SchemeKind::TandonAlpha => Ok(baselines::tandon_alpha_partial(spec, dist, rng)),
+        SchemeKind::FerdinandFull => {
+            let os = order_stats_for(dist, spec.n, trials, rng);
+            baselines::ferdinand_hierarchical(spec, &os, spec.coords)
+        }
+        SchemeKind::FerdinandHalf => {
+            let os = order_stats_for(dist, spec.n, trials, rng);
+            baselines::ferdinand_hierarchical(spec, &os, spec.coords / 2)
+        }
+        SchemeKind::Uncoded => Ok(baselines::uncoded(spec)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::shifted_exp::ShiftedExponential;
+
+    #[test]
+    fn all_schemes_produce_feasible_partitions() {
+        let spec = ProblemSpec::paper_default(8, 400);
+        let dist = ShiftedExponential::new(1e-3, 50.0);
+        let mut rng = Rng::new(4);
+        let opts = SolveOptions::fast();
+        for kind in [
+            SchemeKind::OptimalSubgradient,
+            SchemeKind::ClosedFormTime,
+            SchemeKind::ClosedFormFreq,
+            SchemeKind::SingleBlock,
+            SchemeKind::TandonAlpha,
+            SchemeKind::FerdinandFull,
+            SchemeKind::FerdinandHalf,
+            SchemeKind::Uncoded,
+        ] {
+            let p = solve(&spec, &dist, kind, &opts, &mut rng).unwrap();
+            assert_eq!(p.total(), 400, "{}", kind.label());
+            assert_eq!(p.n(), 8);
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Heterogeneous per-coordinate work — the paper's footnote 4 extension.
+//!
+//! The base model charges every coordinate the same `b` cycles; real
+//! models do not (an embedding row is cheaper than an attention matmul
+//! column). With per-coordinate weights `w_l` (relative cycle counts,
+//! mean-normalized), Eq. (2) becomes
+//!
+//! `τ_w(s,T) = (M/N)·b · max_l { T_(N−s_l) · Σ_{i≤l}(s_i+1)·w_i }`.
+//!
+//! Lemma 1 (monotone optimal `s`) survives unchanged — the exchange
+//! argument never uses equal weights — so the optimum is still a *block*
+//! scheme, but blocks now hold **work mass** rather than coordinate
+//! counts: solve the continuous problem over work mass `W = Σ w_l`
+//! (identical machinery, `L → W`), then cut coordinate boundaries where
+//! the cumulative weight crosses the optimal per-level masses.
+
+use crate::optimizer::blocks::BlockPartition;
+use crate::optimizer::runtime_model::{sort_times, ProblemSpec};
+use crate::{Error, Result};
+
+/// `τ_w(s, T)` with per-coordinate weights (Eq. 2 + footnote 4).
+pub fn tau_weighted(spec: &ProblemSpec, s: &[usize], weights: &[f64], times: &[f64]) -> f64 {
+    let n = spec.n;
+    assert_eq!(s.len(), weights.len());
+    let mut t = times.to_vec();
+    sort_times(&mut t);
+    let mut cum = 0.0;
+    let mut best = 0.0f64;
+    for (&sl, &wl) in s.iter().zip(weights.iter()) {
+        debug_assert!(sl < n);
+        cum += (sl + 1) as f64 * wl;
+        let v = t[n - 1 - sl] * cum;
+        if v > best {
+            best = v;
+        }
+    }
+    spec.unit_work() * best
+}
+
+/// Total work mass `W = Σ w_l` (the continuous problem's "L").
+pub fn total_mass(weights: &[f64]) -> f64 {
+    weights.iter().sum()
+}
+
+/// Cut a continuous per-level **work-mass** allocation `x_mass`
+/// (`Σ x_mass = Σ weights`) into a coordinate [`BlockPartition`]:
+/// coordinate `l` lands in the first level whose cumulative mass covers
+/// the cumulative weight through `l` (ties toward lower redundancy).
+pub fn partition_by_mass(x_mass: &[f64], weights: &[f64]) -> Result<BlockPartition> {
+    let n = x_mass.len();
+    if weights.is_empty() {
+        return Err(Error::InvalidArgument("no coordinates".into()));
+    }
+    if weights.iter().any(|&w| w <= 0.0) {
+        return Err(Error::InvalidArgument("weights must be positive".into()));
+    }
+    let w_total = total_mass(weights);
+    let x_total: f64 = x_mass.iter().sum();
+    if (x_total - w_total).abs() > 1e-6 * w_total {
+        return Err(Error::InvalidArgument(format!(
+            "mass allocation sums to {x_total}, weights to {w_total}"
+        )));
+    }
+    // Cumulative level thresholds.
+    let mut thresh = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for &m in x_mass {
+        acc += m;
+        thresh.push(acc);
+    }
+    let mut sizes = vec![0usize; n];
+    let mut level = 0usize;
+    let mut wcum = 0.0;
+    for &w in weights {
+        wcum += w;
+        // Midpoint rule avoids boundary jitter from float accumulation.
+        let probe = wcum - 0.5 * w;
+        while level + 1 < n && probe > thresh[level] {
+            level += 1;
+        }
+        sizes[level] += 1;
+    }
+    Ok(BlockPartition::new(sizes))
+}
+
+/// Convenience: solve the weighted problem with the closed form —
+/// identical to Theorem 2/3 with `L` replaced by the total work mass —
+/// and cut coordinate boundaries.
+pub fn closed_form_weighted(
+    spec: &ProblemSpec,
+    t: &[f64],
+    weights: &[f64],
+) -> Result<BlockPartition> {
+    use crate::optimizer::closed_form::x_from_deterministic_t;
+    use crate::optimizer::runtime_model::WorkModel;
+    let mass_spec = ProblemSpec {
+        coords: total_mass(weights).round().max(1.0) as usize,
+        ..*spec
+    };
+    // Scale the closed-form output to the exact (non-integer) mass.
+    let (x, _) = x_from_deterministic_t(&mass_spec, t, WorkModel::GradientCoding)?;
+    let scale = total_mass(weights) / x.iter().sum::<f64>();
+    let x_mass: Vec<f64> = x.iter().map(|v| v * scale).collect();
+    partition_by_mass(&x_mass, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::order_stats::shifted_exp_exact;
+    use crate::distribution::shifted_exp::ShiftedExponential;
+    use crate::optimizer::closed_form::x_time;
+    use crate::optimizer::rounding::round_to_blocks;
+    use crate::optimizer::runtime_model::tau_s;
+    use crate::testing::{gens, Runner};
+
+    #[test]
+    fn uniform_weights_reduce_to_base_model() {
+        Runner::new(80, 0xBEEF).run("weighted-uniform", |rng| {
+            let n = gens::usize_in(rng, 2, 8);
+            let l = gens::usize_in(rng, 2, 50);
+            let s = gens::monotone_s(rng, n, l);
+            let times = gens::positive_times(rng, n);
+            let spec = ProblemSpec::new(n, l, n, 1.0);
+            let w = vec![1.0; l];
+            let a = tau_weighted(&spec, &s, &w, &times);
+            let b = tau_s(&spec, &s, &times);
+            if (a - b).abs() > 1e-9 * a.max(1.0) {
+                return Err(format!("{a} vs {b}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn partition_by_mass_respects_weights() {
+        // Two levels, half the mass each; heavy coordinates up front mean
+        // fewer coordinates in the first block.
+        let weights = vec![4.0, 4.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let x_mass = vec![8.0, 8.0];
+        let p = partition_by_mass(&x_mass, &weights).unwrap();
+        assert_eq!(p.total(), 10);
+        // First two coords already carry mass 8 ⇒ block 0 = {0, 1}.
+        assert_eq!(p.sizes()[0], 2);
+        assert_eq!(p.sizes()[1], 8);
+    }
+
+    #[test]
+    fn weighted_closed_form_beats_unweighted_under_skew() {
+        // Heavy head: the first 10% of coordinates carry 10× work. The
+        // weighted optimizer should cut boundaries by mass and win (or
+        // tie) against the count-based partition evaluated under τ_w.
+        let n = 10usize;
+        let l = 2000usize;
+        let dist = ShiftedExponential::new(1e-3, 50.0);
+        let os = shifted_exp_exact(&dist, n);
+        let spec = ProblemSpec::paper_default(n, l);
+        let mut weights = vec![1.0; l];
+        for w in weights.iter_mut().take(l / 10) {
+            *w = 10.0;
+        }
+        let weighted = closed_form_weighted(&spec, &os.t, &weights).unwrap();
+        let unweighted = round_to_blocks(&x_time(&spec, &os).unwrap(), l);
+
+        let mut rng = crate::util::rng::Rng::new(12);
+        use crate::distribution::CycleTimeDistribution;
+        let mut acc_w = 0.0;
+        let mut acc_u = 0.0;
+        let trials = 2000;
+        for _ in 0..trials {
+            let times = dist.sample_vec(n, &mut rng);
+            acc_w += tau_weighted(&spec, &weighted.s_vector(), &weights, &times);
+            acc_u += tau_weighted(&spec, &unweighted.s_vector(), &weights, &times);
+        }
+        assert!(
+            acc_w <= acc_u * 1.01,
+            "weighted {} should not trail unweighted {}",
+            acc_w / trials as f64,
+            acc_u / trials as f64
+        );
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        assert!(partition_by_mass(&[1.0], &[]).is_err());
+        assert!(partition_by_mass(&[1.0, 1.0], &[1.0, -1.0]).is_err());
+        assert!(partition_by_mass(&[1.0, 1.0], &[5.0, 5.0]).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Artifact manifest: the contract between `python/compile/aot.py`
+//! (which lowers the Layer-2 JAX graphs to HLO text) and the Rust
+//! runtime (which loads and executes them).
+//!
+//! `artifacts/manifest.toml` lists one entry per compiled model variant:
+//!
+//! ```toml
+//! [mlp_d64_h256_c10_s128]
+//! kind = "mlp"
+//! grad_file = "mlp_d64_h256_c10_s128.grad.hlo.txt"
+//! loss_file = "mlp_d64_h256_c10_s128.loss.hlo.txt"
+//! features = 64
+//! targets = 10
+//! shard = 128
+//! param_dim = 19210
+//! ```
+//!
+//! Both entries take `(theta[param_dim], x[shard, features],
+//! y[shard, targets])` and return a 1-tuple: the flattened gradient
+//! (`grad_file`) or the scalar summed loss (`loss_file`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::toml_lite::TomlDoc;
+use crate::{Error, Result};
+
+/// One compiled model variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub grad_file: String,
+    pub loss_file: String,
+    pub features: usize,
+    pub targets: usize,
+    pub shard: usize,
+    pub param_dim: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `manifest.toml` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.toml");
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "no manifest at {} — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let doc = TomlDoc::load(&path)?;
+        Self::from_doc(dir, &doc)
+    }
+
+    /// Parse from an already-loaded document (exposed for tests).
+    pub fn from_doc(dir: &Path, doc: &TomlDoc) -> Result<Manifest> {
+        // Section names are the part before the first '.'.
+        let mut names: Vec<String> = Vec::new();
+        for key in doc.keys() {
+            if let Some((section, _)) = key.split_once('.') {
+                if !names.iter().any(|n| n == section) {
+                    names.push(section.to_string());
+                }
+            }
+        }
+        let mut entries = BTreeMap::new();
+        for name in names {
+            let get_str = |field: &str| -> Result<String> {
+                doc.get_str(&format!("{name}.{field}"))
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Runtime(format!("manifest entry {name} missing {field}")))
+            };
+            let get_usize = |field: &str| -> Result<usize> {
+                doc.get_i64(&format!("{name}.{field}"))
+                    .and_then(|v| usize::try_from(v).ok())
+                    .ok_or_else(|| Error::Runtime(format!("manifest entry {name} missing {field}")))
+            };
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    kind: get_str("kind")?,
+                    grad_file: get_str("grad_file")?,
+                    loss_file: get_str("loss_file")?,
+                    features: get_usize("features")?,
+                    targets: get_usize("targets")?,
+                    shard: get_usize("shard")?,
+                    param_dim: get_usize("param_dim")?,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries.get(name).ok_or_else(|| {
+            Error::Runtime(format!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.entries.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn grad_path(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.grad_file)
+    }
+
+    pub fn loss_path(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.loss_file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest_doc() {
+        let doc = TomlDoc::parse(
+            r#"
+            [linreg_d8_s4]
+            kind = "linreg"
+            grad_file = "linreg_d8_s4.grad.hlo.txt"
+            loss_file = "linreg_d8_s4.loss.hlo.txt"
+            features = 8
+            targets = 1
+            shard = 4
+            param_dim = 8
+            "#,
+        )
+        .unwrap();
+        let m = Manifest::from_doc(Path::new("/tmp/a"), &doc).unwrap();
+        let e = m.get("linreg_d8_s4").unwrap();
+        assert_eq!(e.features, 8);
+        assert_eq!(e.param_dim, 8);
+        assert_eq!(m.grad_path(e), PathBuf::from("/tmp/a/linreg_d8_s4.grad.hlo.txt"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn missing_field_rejected() {
+        let doc = TomlDoc::parse("[e]\nkind = \"x\"").unwrap();
+        assert!(Manifest::from_doc(Path::new("/tmp"), &doc).is_err());
+    }
+}

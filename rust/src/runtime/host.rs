@@ -1,0 +1,321 @@
+//! Pure-Rust executor: the same models as the AOT artifacts, implemented
+//! directly. Serves three purposes: (1) artifact-free unit/integration
+//! tests of the coordinator, (2) a numerical oracle for the PJRT path,
+//! (3) a reference point for the §Perf comparisons.
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::runtime::GradExecutor;
+use crate::{Error, Result};
+
+/// Which model family the executor computes.
+#[derive(Debug, Clone)]
+pub enum HostModel {
+    /// `f(θ) = ½‖Xθ − y‖²` summed over the shard; `g = Xᵀ(Xθ − y)`.
+    LinearRegression,
+    /// One-hidden-layer ReLU MLP with softmax cross-entropy (summed).
+    /// Parameter layout: `[W1 (d×h) | b1 (h) | W2 (h×c) | b2 (c)]`.
+    Mlp { hidden: usize },
+}
+
+/// Pure-host implementation of [`GradExecutor`].
+pub struct HostExecutor {
+    data: Arc<Dataset>,
+    model: HostModel,
+    dim: usize,
+}
+
+impl HostExecutor {
+    pub fn new(data: Arc<Dataset>, model: HostModel) -> Result<Self> {
+        let dim = match &model {
+            HostModel::LinearRegression => {
+                if data.targets != 1 {
+                    return Err(Error::Runtime("linreg needs scalar targets".into()));
+                }
+                data.features
+            }
+            HostModel::Mlp { hidden } => {
+                let (d, h, c) = (data.features, *hidden, data.targets);
+                d * h + h + h * c + c
+            }
+        };
+        Ok(Self { data, model, dim })
+    }
+
+    /// Parameter dimension for an MLP of the given shape.
+    pub fn mlp_dim(features: usize, hidden: usize, classes: usize) -> usize {
+        features * hidden + hidden + hidden * classes + classes
+    }
+
+    fn grad_range(&self, theta: &[f32], lo: usize, hi: usize) -> Result<(f64, Vec<f32>)> {
+        match &self.model {
+            HostModel::LinearRegression => Ok(linreg_loss_grad(&self.data, theta, lo, hi)),
+            HostModel::Mlp { hidden } => mlp_loss_grad(&self.data, theta, *hidden, lo, hi),
+        }
+    }
+}
+
+impl GradExecutor for HostExecutor {
+    fn grad_shard(&mut self, theta: &[f32], shard: usize) -> Result<Vec<f32>> {
+        if theta.len() != self.dim {
+            return Err(Error::Runtime(format!(
+                "theta has {} entries, model needs {}",
+                theta.len(),
+                self.dim
+            )));
+        }
+        let r = self.data.shards[shard].clone();
+        Ok(self.grad_range(theta, r.start, r.end)?.1)
+    }
+
+    fn loss(&mut self, theta: &[f32]) -> Result<f32> {
+        let m = self.data.samples();
+        Ok(self.grad_range(theta, 0, m)?.0 as f32)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_shards(&self) -> usize {
+        self.data.num_shards()
+    }
+}
+
+/// `(loss, grad)` of ½‖Xθ−y‖² over sample rows `[lo, hi)`.
+fn linreg_loss_grad(data: &Dataset, theta: &[f32], lo: usize, hi: usize) -> (f64, Vec<f32>) {
+    let d = data.features;
+    let mut grad = vec![0.0f32; d];
+    let mut loss = 0.0f64;
+    for m in lo..hi {
+        let row = &data.x[m * d..(m + 1) * d];
+        let mut pred = 0.0f32;
+        for (xi, ti) in row.iter().zip(theta.iter()) {
+            pred += xi * ti;
+        }
+        let resid = pred - data.y[m];
+        loss += 0.5 * (resid as f64) * (resid as f64);
+        for (g, xi) in grad.iter_mut().zip(row.iter()) {
+            *g += resid * xi;
+        }
+    }
+    (loss, grad)
+}
+
+/// `(loss, grad)` of the summed softmax-CE MLP over rows `[lo, hi)`.
+fn mlp_loss_grad(
+    data: &Dataset,
+    theta: &[f32],
+    hidden: usize,
+    lo: usize,
+    hi: usize,
+) -> Result<(f64, Vec<f32>)> {
+    let d = data.features;
+    let h = hidden;
+    let c = data.targets;
+    let (w1, rest) = theta.split_at(d * h);
+    let (b1, rest) = rest.split_at(h);
+    let (w2, b2) = rest.split_at(h * c);
+    if b2.len() != c {
+        return Err(Error::Runtime("theta length mismatch for MLP".into()));
+    }
+
+    let mut grad = vec![0.0f32; theta.len()];
+    let (gw1, grest) = grad.split_at_mut(d * h);
+    let (gb1, grest) = grest.split_at_mut(h);
+    let (gw2, gb2) = grest.split_at_mut(h * c);
+
+    let mut loss = 0.0f64;
+    let mut z1 = vec![0.0f32; h];
+    let mut a = vec![0.0f32; h];
+    let mut logits = vec![0.0f32; c];
+    let mut dz2 = vec![0.0f32; c];
+    let mut da = vec![0.0f32; h];
+
+    for m in lo..hi {
+        let x = &data.x[m * d..(m + 1) * d];
+        let y = &data.y[m * c..(m + 1) * c];
+        // z1 = xᵀW1 + b1; a = relu(z1)
+        z1.copy_from_slice(b1);
+        for (di, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w1[di * h..(di + 1) * h];
+            for (zj, &wj) in z1.iter_mut().zip(wrow.iter()) {
+                *zj += xv * wj;
+            }
+        }
+        for (aj, &zj) in a.iter_mut().zip(z1.iter()) {
+            *aj = zj.max(0.0);
+        }
+        // logits = aᵀW2 + b2
+        logits.copy_from_slice(b2);
+        for (hj, &av) in a.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let wrow = &w2[hj * c..(hj + 1) * c];
+            for (lk, &wk) in logits.iter_mut().zip(wrow.iter()) {
+                *lk += av * wk;
+            }
+        }
+        // softmax CE (stable)
+        let maxl = logits.iter().cloned().fold(f32::MIN, f32::max);
+        let mut sum = 0.0f64;
+        for &l in logits.iter() {
+            sum += ((l - maxl) as f64).exp();
+        }
+        let logsum = sum.ln() + maxl as f64;
+        for k in 0..c {
+            let p = ((logits[k] as f64) - logsum).exp();
+            dz2[k] = (p as f32) - y[k];
+            if y[k] > 0.0 {
+                loss += y[k] as f64 * (logsum - logits[k] as f64);
+            }
+        }
+        // gW2 += a·dz2ᵀ; gb2 += dz2; da = W2·dz2
+        for hj in 0..h {
+            let av = a[hj];
+            let wrow = &w2[hj * c..(hj + 1) * c];
+            let grow = &mut gw2[hj * c..(hj + 1) * c];
+            let mut acc = 0.0f32;
+            for k in 0..c {
+                if av != 0.0 {
+                    grow[k] += av * dz2[k];
+                }
+                acc += wrow[k] * dz2[k];
+            }
+            da[hj] = acc;
+        }
+        for (g, &v) in gb2.iter_mut().zip(dz2.iter()) {
+            *g += v;
+        }
+        // dz1 = da ⊙ relu'(z1); gW1 += x·dz1ᵀ; gb1 += dz1
+        for hj in 0..h {
+            if z1[hj] <= 0.0 {
+                da[hj] = 0.0;
+            }
+        }
+        for (di, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let grow = &mut gw1[di * h..(di + 1) * h];
+            for (gj, &dj) in grow.iter_mut().zip(da.iter()) {
+                *gj += xv * dj;
+            }
+        }
+        for (g, &v) in gb1.iter_mut().zip(da.iter()) {
+            *g += v;
+        }
+    }
+    Ok((loss, grad))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn linreg_gradient_matches_finite_differences() {
+        let (ds, _) = synthetic::linear_regression(6, 12, 3, 0.3, 11).unwrap();
+        let mut exec = HostExecutor::new(ds.clone(), HostModel::LinearRegression).unwrap();
+        let mut rng = Rng::new(2);
+        let theta: Vec<f32> = (0..6).map(|_| rng.normal() as f32 * 0.5).collect();
+        // Analytic full gradient = sum of shard gradients.
+        let mut g = vec![0.0f64; 6];
+        for s in 0..3 {
+            for (gi, v) in g.iter_mut().zip(exec.grad_shard(&theta, s).unwrap()) {
+                *gi += v as f64;
+            }
+        }
+        let eps = 1e-3f32;
+        for i in 0..6 {
+            let mut tp = theta.clone();
+            tp[i] += eps;
+            let mut tm = theta.clone();
+            tm[i] -= eps;
+            let fd = (exec.loss(&tp).unwrap() as f64 - exec.loss(&tm).unwrap() as f64)
+                / (2.0 * eps as f64);
+            assert!((fd - g[i]).abs() < 2e-2 * (1.0 + g[i].abs()), "i={i}: fd={fd} g={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn mlp_gradient_matches_finite_differences() {
+        let ds = synthetic::classification(5, 3, 12, 3, 0.1, 4).unwrap();
+        let mut exec = HostExecutor::new(ds.clone(), HostModel::Mlp { hidden: 7 }).unwrap();
+        let dim = exec.dim();
+        assert_eq!(dim, 5 * 7 + 7 + 7 * 3 + 3);
+        let mut rng = Rng::new(5);
+        let theta: Vec<f32> = (0..dim).map(|_| rng.normal() as f32 * 0.3).collect();
+        let mut g = vec![0.0f64; dim];
+        for s in 0..3 {
+            for (gi, v) in g.iter_mut().zip(exec.grad_shard(&theta, s).unwrap()) {
+                *gi += v as f64;
+            }
+        }
+        let eps = 1e-2f32;
+        let mut checked = 0;
+        for i in (0..dim).step_by(dim / 17 + 1) {
+            let mut tp = theta.clone();
+            tp[i] += eps;
+            let mut tm = theta.clone();
+            tm[i] -= eps;
+            let fd = (exec.loss(&tp).unwrap() as f64 - exec.loss(&tm).unwrap() as f64)
+                / (2.0 * eps as f64);
+            assert!(
+                (fd - g[i]).abs() < 5e-2 * (1.0 + g[i].abs()),
+                "i={i}: fd={fd} analytic={}",
+                g[i]
+            );
+            checked += 1;
+        }
+        assert!(checked > 10);
+    }
+
+    #[test]
+    fn shard_grads_sum_to_full_grad() {
+        let ds = synthetic::classification(4, 3, 24, 6, 0.2, 9).unwrap();
+        let mut exec = HostExecutor::new(ds.clone(), HostModel::Mlp { hidden: 5 }).unwrap();
+        let dim = exec.dim();
+        let mut rng = Rng::new(6);
+        let theta: Vec<f32> = (0..dim).map(|_| rng.normal() as f32 * 0.2).collect();
+        let mut summed = vec![0.0f64; dim];
+        for s in 0..6 {
+            for (acc, v) in summed.iter_mut().zip(exec.grad_shard(&theta, s).unwrap()) {
+                *acc += v as f64;
+            }
+        }
+        // Whole-range gradient computed in one pass.
+        let (_, full) = mlp_loss_grad(&ds, &theta, 5, 0, 24).unwrap();
+        for (a, b) in summed.iter().zip(full.iter()) {
+            assert!((a - *b as f64).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gradient_descent_reduces_loss() {
+        let (ds, _) = synthetic::linear_regression(8, 32, 4, 0.05, 21).unwrap();
+        let mut exec = HostExecutor::new(ds, HostModel::LinearRegression).unwrap();
+        let mut theta = vec![0.0f32; 8];
+        let l0 = exec.loss(&theta).unwrap();
+        for _ in 0..50 {
+            let mut g = vec![0.0f32; 8];
+            for s in 0..4 {
+                for (gi, v) in g.iter_mut().zip(exec.grad_shard(&theta, s).unwrap()) {
+                    *gi += v;
+                }
+            }
+            for (t, gi) in theta.iter_mut().zip(g.iter()) {
+                *t -= 0.02 * gi;
+            }
+        }
+        let l1 = exec.loss(&theta).unwrap();
+        assert!(l1 < l0 * 0.2, "loss {l0} -> {l1}");
+    }
+}

@@ -1,0 +1,74 @@
+//! Execution runtime: how a worker actually computes a shard's partial
+//! gradient.
+//!
+//! Two interchangeable backends implement [`GradExecutor`]:
+//!
+//! * [`pjrt::PjrtExecutor`] — the production path: loads the AOT-compiled
+//!   HLO text artifacts produced by `python/compile/aot.py` (Layer 2 JAX
+//!   graphs wrapping Layer 1 Pallas kernels) and executes them on the
+//!   PJRT CPU client via the `xla` crate. Python is never involved at
+//!   runtime.
+//! * [`host::HostExecutor`] — a pure-Rust mirror of the same models
+//!   (linear regression, MLP). Used for artifact-free unit tests and as a
+//!   numerical cross-check oracle against the PJRT path.
+//!
+//! Each worker thread owns its executor instance; a thread-safe
+//! [`ExecutorFactory`] builds them inside the thread, so executors
+//! themselves need not be `Send`.
+
+pub mod artifact;
+pub mod host;
+pub mod pjrt;
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::Result;
+
+/// Computes partial gradients of `F(D_i; θ)` (a **sum**, not mean, over
+/// the shard's samples — gradient coding needs `∇F = Σ_i ∇F_i` exactly).
+pub trait GradExecutor {
+    /// Gradient of the model loss on shard `shard`, at parameters `theta`.
+    /// Returns a vector of the model's parameter dimension.
+    fn grad_shard(&mut self, theta: &[f32], shard: usize) -> Result<Vec<f32>>;
+
+    /// Gradients for several shards at the same `theta`. Backends
+    /// override this to stage `theta` once (the PJRT executor converts
+    /// it to a device literal a single time — §Perf opt 2).
+    fn grad_shards(&mut self, theta: &[f32], shards: &[usize]) -> Result<Vec<Vec<f32>>> {
+        shards.iter().map(|&s| self.grad_shard(theta, s)).collect()
+    }
+
+    /// Full-dataset loss at `theta` (for monitoring / tests).
+    fn loss(&mut self, theta: &[f32]) -> Result<f32>;
+
+    /// Parameter dimension `L`.
+    fn dim(&self) -> usize;
+
+    /// Number of shards the dataset is partitioned into (`N`).
+    fn num_shards(&self) -> usize;
+}
+
+/// Builds a per-worker executor inside the worker's thread.
+/// Argument is the 0-based worker id.
+pub type ExecutorFactory = Arc<dyn Fn(usize) -> Result<Box<dyn GradExecutor>> + Send + Sync>;
+
+/// Factory for pure-host executors over a shared dataset.
+pub fn host_factory(dataset: Arc<Dataset>, model: host::HostModel) -> ExecutorFactory {
+    Arc::new(move |_worker| {
+        Ok(Box::new(host::HostExecutor::new(dataset.clone(), model.clone())?)
+            as Box<dyn GradExecutor>)
+    })
+}
+
+/// Factory for PJRT executors loading a named artifact.
+pub fn pjrt_factory(
+    artifact_dir: std::path::PathBuf,
+    entry: String,
+    dataset: Arc<Dataset>,
+) -> ExecutorFactory {
+    Arc::new(move |_worker| {
+        Ok(Box::new(pjrt::PjrtExecutor::load(&artifact_dir, &entry, dataset.clone())?)
+            as Box<dyn GradExecutor>)
+    })
+}

@@ -1,0 +1,197 @@
+//! Event-driven simulation of one coded GD iteration.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::optimizer::blocks::BlockPartition;
+use crate::optimizer::runtime_model::ProblemSpec;
+
+/// Simulator knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Fixed per-message master-link latency (0 = the paper's model,
+    /// which omits communication time).
+    pub comm_latency: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { comm_latency: 0.0 }
+    }
+}
+
+/// Simulation result.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Virtual time at which the full gradient was assembled.
+    pub completion_time: f64,
+    /// Per-block decode times (level order over non-empty blocks).
+    pub block_decode_times: Vec<f64>,
+    /// Total messages delivered (N × non-empty blocks).
+    pub messages: usize,
+    /// Messages that arrived after their block had already decoded.
+    pub late_messages: usize,
+}
+
+#[derive(PartialEq)]
+struct Event {
+    time: f64,
+    worker: usize,
+    block: usize,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on time (BinaryHeap is a max-heap).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then_with(|| other.worker.cmp(&self.worker))
+            .then_with(|| other.block.cmp(&self.block))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Play out one iteration: worker `w` finishes block `j` at
+/// `unit·T_w·cum_j` and its message reaches the master `comm_latency`
+/// later; block `j` (redundancy `s_j`) decodes on its `(N−s_j)`-th
+/// arrival; the iteration completes when the last block decodes.
+pub fn simulate_iteration(
+    spec: &ProblemSpec,
+    blocks: &BlockPartition,
+    times: &[f64],
+    cfg: &SimConfig,
+) -> SimOutcome {
+    let n = spec.n;
+    assert_eq!(times.len(), n);
+    let ranges = blocks.ranges();
+    let unit = spec.unit_work();
+
+    // Cumulative work through each non-empty block.
+    let mut cum = Vec::with_capacity(ranges.len());
+    let mut acc = 0.0;
+    for r in &ranges {
+        acc += ((r.s + 1) * r.len()) as f64;
+        cum.push(acc);
+    }
+
+    let mut heap = BinaryHeap::with_capacity(n * ranges.len());
+    for (w, &t) in times.iter().enumerate() {
+        for (j, &c) in cum.iter().enumerate() {
+            heap.push(Event { time: unit * t * c + cfg.comm_latency, worker: w, block: j });
+        }
+    }
+
+    let mut arrivals = vec![0usize; ranges.len()];
+    let mut decode_time = vec![f64::NAN; ranges.len()];
+    let mut decoded = 0usize;
+    let mut late = 0usize;
+    let mut messages = 0usize;
+    let mut completion = 0.0f64;
+
+    while let Some(ev) = heap.pop() {
+        messages += 1;
+        let j = ev.block;
+        if !decode_time[j].is_nan() {
+            late += 1;
+            continue;
+        }
+        arrivals[j] += 1;
+        let need = n - ranges[j].s;
+        if arrivals[j] == need {
+            decode_time[j] = ev.time;
+            decoded += 1;
+            completion = completion.max(ev.time);
+            if decoded == ranges.len() {
+                // Count the rest as late without popping one by one.
+                late += heap.len();
+                messages += heap.len();
+                break;
+            }
+        }
+    }
+    SimOutcome {
+        completion_time: completion,
+        block_decode_times: decode_time,
+        messages,
+        late_messages: late,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::{shifted_exp::ShiftedExponential, CycleTimeDistribution};
+    use crate::optimizer::runtime_model::tau_hat;
+    use crate::optimizer::runtime_model::WorkModel;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_eq2_closed_form_exactly() {
+        let mut rng = Rng::new(17);
+        let dist = ShiftedExponential::new(1e-3, 50.0);
+        for _ in 0..200 {
+            let n = 2 + rng.below(12) as usize;
+            let coords = (n + rng.below(50) as usize) * 2;
+            let spec = ProblemSpec::new(n, coords, n * 2, 1.0);
+            // Random partition.
+            let raw: Vec<f64> = (0..n).map(|_| rng.exponential(1.0)).collect();
+            let sum: f64 = raw.iter().sum();
+            let x: Vec<f64> = raw.iter().map(|v| v / sum * coords as f64).collect();
+            let blocks = crate::optimizer::rounding::round_to_blocks(&x, coords);
+            let times = dist.sample_vec(n, &mut rng);
+            let sim = simulate_iteration(&spec, &blocks, &times, &SimConfig::default());
+            let closed = tau_hat(&spec, &blocks.as_f64(), &times, WorkModel::GradientCoding);
+            assert!(
+                (sim.completion_time - closed).abs() < 1e-9 * closed.max(1.0),
+                "sim={} closed={}",
+                sim.completion_time,
+                closed
+            );
+        }
+    }
+
+    #[test]
+    fn fig1_example_timeline() {
+        let spec = ProblemSpec::new(4, 4, 4, 1.0);
+        let blocks = BlockPartition::from_s_vector(4, &[1, 1, 2, 2]).unwrap();
+        let times = vec![0.1, 0.1, 0.25, 1.0];
+        let out = simulate_iteration(&spec, &blocks, &times, &SimConfig::default());
+        assert!((out.completion_time - 1.0).abs() < 1e-12);
+        // Two non-empty blocks.
+        assert_eq!(out.block_decode_times.len(), 2);
+        // Block 0 (s=1, cum work 4): T_(3)·4 = 1.0; block 1 (s=2, cum 10): T_(2)·10 = 1.0.
+        assert!((out.block_decode_times[0] - 1.0).abs() < 1e-12);
+        assert!((out.block_decode_times[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_latency_shifts_completion() {
+        let spec = ProblemSpec::new(4, 4, 4, 1.0);
+        let blocks = BlockPartition::from_s_vector(4, &[1, 1, 2, 2]).unwrap();
+        let times = vec![0.1, 0.1, 0.25, 1.0];
+        let base = simulate_iteration(&spec, &blocks, &times, &SimConfig::default());
+        let delayed =
+            simulate_iteration(&spec, &blocks, &times, &SimConfig { comm_latency: 0.5 });
+        assert!((delayed.completion_time - base.completion_time - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn late_messages_accounted() {
+        let spec = ProblemSpec::new(3, 3, 3, 1.0);
+        let blocks = BlockPartition::from_s_vector(3, &[1, 1, 1]).unwrap();
+        let times = vec![0.1, 0.2, 10.0];
+        let out = simulate_iteration(&spec, &blocks, &times, &SimConfig::default());
+        // One block needing 2 of 3; the slow worker's message is late.
+        assert_eq!(out.late_messages, 1);
+        assert_eq!(out.messages, 3);
+    }
+}

@@ -1,0 +1,13 @@
+//! Discrete-event virtual-time simulator of the coded streaming protocol.
+//!
+//! Independently validates Eq. (2): instead of evaluating the closed-form
+//! max, it *plays out* the protocol — workers emit block-completion
+//! events on a virtual clock, the master decodes each block at its
+//! quorum — and reports when the full gradient was assembled. The two
+//! must agree exactly when communication is free, and the simulator
+//! additionally supports per-message latency (an extension the closed
+//! form cannot express).
+
+pub mod event_sim;
+
+pub use event_sim::{simulate_iteration, SimConfig, SimOutcome};

@@ -1,0 +1,148 @@
+//! Property-testing mini-framework (no `proptest`/`quickcheck` offline).
+//!
+//! A [`Runner`] drives N seeded cases through a user property; failures
+//! are re-reported with the generating seed so they can be replayed by
+//! constructing `Rng::new(seed)`. Generators are just closures over
+//! [`Rng`]; [`gens`] collects the common ones used by the test suites.
+
+use crate::util::rng::Rng;
+
+/// Property-test driver.
+pub struct Runner {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        // Fixed seed: deterministic CI. Override locally to fuzz more.
+        Self { cases: 100, seed: 0xBC6C }
+    }
+}
+
+impl Runner {
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Self { cases, seed }
+    }
+
+    /// Run `prop` on `cases` independently-seeded RNGs. The property
+    /// returns `Err(message)` to fail; panics are *not* caught (they
+    /// still identify the case via the logged seed in the message of
+    /// `assert!` calls the caller writes).
+    pub fn run<F>(&self, name: &str, mut prop: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        let mut meta = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let case_seed = meta.next_u64();
+            let mut rng = Rng::new(case_seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "property {name:?} failed on case {case} (replay with Rng::new({case_seed:#x})): {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use super::*;
+
+    /// Integer in `[lo, hi]`.
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Float in `[lo, hi)`.
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        rng.uniform_range(lo, hi)
+    }
+
+    /// A monotone nondecreasing redundancy vector `s` of length `l` with
+    /// levels `< n` (Lemma-1-shaped input).
+    pub fn monotone_s(rng: &mut Rng, n: usize, l: usize) -> Vec<usize> {
+        let mut s: Vec<usize> = (0..l).map(|_| rng.below(n as u64) as usize).collect();
+        s.sort_unstable();
+        s
+    }
+
+    /// Arbitrary (not necessarily monotone) redundancy vector.
+    pub fn any_s(rng: &mut Rng, n: usize, l: usize) -> Vec<usize> {
+        (0..l).map(|_| rng.below(n as u64) as usize).collect()
+    }
+
+    /// A strictly positive, strictly increasing time vector of length `n`.
+    pub fn increasing_times(rng: &mut Rng, n: usize) -> Vec<f64> {
+        let mut t = Vec::with_capacity(n);
+        let mut acc = 0.01 + rng.uniform() * 10.0;
+        for _ in 0..n {
+            acc += 0.01 + rng.exponential(1.0);
+            t.push(acc);
+        }
+        t
+    }
+
+    /// Positive i.i.d. times (unsorted).
+    pub fn positive_times(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| 0.01 + rng.exponential(0.5)).collect()
+    }
+
+    /// A feasible continuous block vector (`x ≥ 0`, `Σx = l`).
+    pub fn feasible_x(rng: &mut Rng, n: usize, l: f64) -> Vec<f64> {
+        let raw: Vec<f64> = (0..n).map(|_| rng.exponential(1.0)).collect();
+        let sum: f64 = raw.iter().sum();
+        raw.iter().map(|&v| v / sum * l).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_passes_trivial_property() {
+        Runner::default().run("trivial", |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("uniform out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn runner_reports_failures_with_seed() {
+        Runner::new(3, 1).run("always-fails", |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        Runner::default().run("gen-bounds", |rng| {
+            let n = gens::usize_in(rng, 2, 9);
+            if !(2..=9).contains(&n) {
+                return Err(format!("usize_in out of range: {n}"));
+            }
+            let s = gens::monotone_s(rng, n, 30);
+            if s.windows(2).any(|w| w[0] > w[1]) {
+                return Err("monotone_s not monotone".into());
+            }
+            if s.iter().any(|&v| v >= n) {
+                return Err("monotone_s out of range".into());
+            }
+            let t = gens::increasing_times(rng, n);
+            if t.windows(2).any(|w| w[0] >= w[1]) {
+                return Err("times not strictly increasing".into());
+            }
+            let x = gens::feasible_x(rng, n, 100.0);
+            let sum: f64 = x.iter().sum();
+            if (sum - 100.0).abs() > 1e-9 || x.iter().any(|&v| v < 0.0) {
+                return Err("feasible_x infeasible".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,64 @@
+//! Minimal `log` backend (no `env_logger` in the offline environment).
+//!
+//! Level is chosen by the `BCGC_LOG` environment variable
+//! (`error|warn|info|debug|trace`), defaulting to `info`.
+
+use std::io::Write;
+use std::time::Instant;
+
+use once_cell::sync::OnceCell;
+
+static START: OnceCell<Instant> = OnceCell::new();
+
+struct StderrLogger {
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:10.4}s {:5} {}] {}",
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger. Idempotent; safe to call from tests and examples.
+pub fn init() {
+    let _ = START.set(Instant::now());
+    let level = match std::env::var("BCGC_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = Box::new(StderrLogger { level });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging works");
+    }
+}

@@ -1,0 +1,332 @@
+//! Special functions needed by the paper's closed forms.
+//!
+//! * Harmonic numbers `H_n` — Eq. (11): `t_n = (H_N − H_{N−n})/μ + t0`.
+//! * Exponential integrals `E1` / `Ei` — Lemma 2's closed form for
+//!   `t'_n = 1/E[1/T_(n)]` under the shifted-exponential model.
+//! * Log-gamma / binomial coefficients — order-statistic densities.
+//! * Gauss–Legendre quadrature + adaptive Simpson — numerically stable
+//!   evaluation of the order-statistic integrals (the Lemma-2 alternating
+//!   sum cancels catastrophically for large `N`; the integral form does
+//!   not, and we cross-validate the two in tests).
+
+/// Euler–Mascheroni constant.
+pub const EULER_GAMMA: f64 = 0.577_215_664_901_532_9;
+
+/// `H_n = Σ_{i=1}^n 1/i`, with `H_0 = 0`.
+pub fn harmonic(n: usize) -> f64 {
+    // Direct summation is exact enough and n is at most a few thousand here.
+    (1..=n).map(|i| 1.0 / i as f64).sum()
+}
+
+/// Log-gamma via the Lanczos approximation (g = 7, n = 9 coefficients).
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return pi.ln() - (pi * x).sin().ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + G + 0.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// `ln C(n, k)`.
+pub fn ln_binomial(n: usize, k: usize) -> f64 {
+    assert!(k <= n, "ln_binomial: k={k} > n={n}");
+    ln_gamma(n as f64 + 1.0) - ln_gamma(k as f64 + 1.0) - ln_gamma((n - k) as f64 + 1.0)
+}
+
+/// `C(n, k)` as f64 (exact for small args, smooth for large).
+pub fn binomial(n: usize, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    ln_binomial(n, k).exp()
+}
+
+/// Exponential integral `E1(x) = ∫_x^∞ e^{−t}/t dt`, for `x > 0`.
+///
+/// Series for `x ≤ 1`, modified Lentz continued fraction for `x > 1`.
+pub fn expint_e1(x: f64) -> f64 {
+    assert!(x > 0.0, "expint_e1 requires x > 0, got {x}");
+    if x <= 1.0 {
+        // E1(x) = −γ − ln x + Σ_{k≥1} (−1)^{k+1} x^k / (k · k!)
+        let mut sum = 0.0;
+        let mut term = 1.0; // x^k / k!
+        for k in 1..=60 {
+            term *= x / k as f64;
+            let add = term / k as f64;
+            if k % 2 == 1 {
+                sum += add;
+            } else {
+                sum -= add;
+            }
+            if add.abs() < 1e-18 * sum.abs().max(1e-300) {
+                break;
+            }
+        }
+        -EULER_GAMMA - x.ln() + sum
+    } else {
+        // Continued fraction: E1(x) = e^{−x} · 1/(x + 1 − 1/(x + 3 − 4/(x + 5 − …)))
+        // via the modified Lentz algorithm.
+        let tiny = 1e-300;
+        let mut b = x + 1.0;
+        let mut c = 1.0 / tiny;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..200 {
+            let a = -(i as f64) * (i as f64);
+            b += 2.0;
+            d = 1.0 / (a * d + b);
+            c = b + a / c;
+            let del = c * d;
+            h *= del;
+            if (del - 1.0).abs() < 1e-15 {
+                break;
+            }
+        }
+        (-x).exp() * h
+    }
+}
+
+/// Exponential integral `Ei(x) = −PV ∫_{−x}^∞ e^{−t}/t dt`.
+///
+/// For `x < 0` (the only regime Lemma 2 needs): `Ei(x) = −E1(−x)`.
+/// For `x > 0` we provide the power series / asymptotic forms for
+/// completeness and testing.
+pub fn expint_ei(x: f64) -> f64 {
+    if x < 0.0 {
+        return -expint_e1(-x);
+    }
+    assert!(x != 0.0, "Ei(0) diverges");
+    if x < 40.0 {
+        // Ei(x) = γ + ln x + Σ_{k≥1} x^k / (k · k!)
+        let mut sum = 0.0;
+        let mut term = 1.0;
+        for k in 1..=200 {
+            term *= x / k as f64;
+            let add = term / k as f64;
+            sum += add;
+            if add < 1e-18 * sum {
+                break;
+            }
+        }
+        EULER_GAMMA + x.ln() + sum
+    } else {
+        // Asymptotic: Ei(x) ≈ e^x/x · Σ k!/x^k
+        let mut sum = 1.0;
+        let mut term = 1.0;
+        for k in 1..=60 {
+            let next = term * k as f64 / x;
+            if next >= term {
+                break; // divergent tail — stop at the smallest term
+            }
+            term = next;
+            sum += term;
+        }
+        x.exp() / x * sum
+    }
+}
+
+/// Fixed-order Gauss–Legendre nodes and weights on `[-1, 1]`.
+///
+/// Nodes are found by Newton iteration on `P_n` with the standard
+/// Chebyshev-like initial guess; accurate to ~1e-15 for n ≤ 256.
+pub fn gauss_legendre(n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n >= 2);
+    let mut nodes = vec![0.0; n];
+    let mut weights = vec![0.0; n];
+    let m = n.div_ceil(2);
+    for i in 0..m {
+        // Initial guess for the i-th root (descending).
+        let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+        let mut dp = 0.0;
+        for _ in 0..100 {
+            // Evaluate P_n(x) and P'_n(x) by recurrence.
+            let mut p0 = 1.0;
+            let mut p1 = x;
+            for k in 2..=n {
+                let pk = ((2 * k - 1) as f64 * x * p1 - (k - 1) as f64 * p0) / k as f64;
+                p0 = p1;
+                p1 = pk;
+            }
+            dp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+            let dx = p1 / dp;
+            x -= dx;
+            if dx.abs() < 1e-16 {
+                break;
+            }
+        }
+        nodes[i] = -x;
+        nodes[n - 1 - i] = x;
+        let w = 2.0 / ((1.0 - x * x) * dp * dp);
+        weights[i] = w;
+        weights[n - 1 - i] = w;
+    }
+    (nodes, weights)
+}
+
+/// `∫_a^b f` with fixed-order Gauss–Legendre quadrature.
+pub fn integrate_gl<F: Fn(f64) -> f64>(f: F, a: f64, b: f64, order: usize) -> f64 {
+    let (nodes, weights) = gauss_legendre(order);
+    let half = 0.5 * (b - a);
+    let mid = 0.5 * (a + b);
+    let mut acc = 0.0;
+    for (x, w) in nodes.iter().zip(weights.iter()) {
+        acc += w * f(mid + half * x);
+    }
+    acc * half
+}
+
+/// Adaptive Simpson quadrature with absolute tolerance `tol`.
+pub fn integrate_adaptive<F: Fn(f64) -> f64>(f: F, a: f64, b: f64, tol: f64) -> f64 {
+    fn simpson<F: Fn(f64) -> f64>(f: &F, a: f64, b: f64) -> (f64, f64, f64, f64) {
+        let m = 0.5 * (a + b);
+        let fa = f(a);
+        let fm = f(m);
+        let fb = f(b);
+        ((b - a) / 6.0 * (fa + 4.0 * fm + fb), fa, fm, fb)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn rec<F: Fn(f64) -> f64>(
+        f: &F,
+        a: f64,
+        b: f64,
+        fa: f64,
+        fm: f64,
+        fb: f64,
+        whole: f64,
+        tol: f64,
+        depth: usize,
+    ) -> f64 {
+        let m = 0.5 * (a + b);
+        let lm = 0.5 * (a + m);
+        let rm = 0.5 * (m + b);
+        let flm = f(lm);
+        let frm = f(rm);
+        let left = (m - a) / 6.0 * (fa + 4.0 * flm + fm);
+        let right = (b - m) / 6.0 * (fm + 4.0 * frm + fb);
+        let delta = left + right - whole;
+        if depth == 0 || delta.abs() <= 15.0 * tol {
+            left + right + delta / 15.0
+        } else {
+            rec(f, a, m, fa, flm, fm, left, tol * 0.5, depth - 1)
+                + rec(f, m, b, fm, frm, fb, right, tol * 0.5, depth - 1)
+        }
+    }
+    let (whole, fa, fm, fb) = simpson(&f, a, b);
+    rec(&f, a, b, fa, fm, fb, whole, tol, 50)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harmonic_basics() {
+        assert_eq!(harmonic(0), 0.0);
+        assert!((harmonic(1) - 1.0).abs() < 1e-15);
+        assert!((harmonic(4) - (1.0 + 0.5 + 1.0 / 3.0 + 0.25)).abs() < 1e-12);
+        // H_n ~ ln n + γ
+        let n = 10_000;
+        let approx = (n as f64).ln() + EULER_GAMMA + 1.0 / (2.0 * n as f64);
+        assert!((harmonic(n) - approx).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        for n in 1..15usize {
+            let fact: f64 = (1..n).map(|i| i as f64).product();
+            assert!(
+                (ln_gamma(n as f64) - fact.ln()).abs() < 1e-10,
+                "n={n}"
+            );
+        }
+        // Γ(1/2) = √π
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binomial_small_exact() {
+        assert!((binomial(10, 3) - 120.0).abs() < 1e-9);
+        assert!((binomial(20, 10) - 184_756.0).abs() < 1e-6);
+        assert_eq!(binomial(5, 9), 0.0);
+    }
+
+    #[test]
+    fn e1_known_values() {
+        // Reference values (Abramowitz & Stegun / mpmath).
+        let cases = [
+            (0.1, 1.822_923_958_1),
+            (0.5, 0.559_773_594_8),
+            (1.0, 0.219_383_934_4),
+            (2.0, 0.048_900_510_7),
+            (5.0, 0.001_148_295_6),
+            (10.0, 4.156_968_93e-6),
+        ];
+        for (x, want) in cases {
+            let got = expint_e1(x);
+            // Reference values are quoted to ~10 significant digits.
+            assert!(
+                ((got - want) / want).abs() < 1e-7,
+                "E1({x}) = {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn ei_negative_is_minus_e1() {
+        for x in [0.1, 0.7, 3.0, 12.0] {
+            assert!((expint_ei(-x) + expint_e1(x)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn ei_positive_known_values() {
+        let cases = [(0.5, 0.454_219_904_7), (1.0, 1.895_117_816_4), (5.0, 40.185_275_355_8)];
+        for (x, want) in cases {
+            let got = expint_ei(x);
+            assert!((got - want).abs() < 1e-8 * want, "Ei({x}) = {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn e1_vs_quadrature() {
+        // E1(x) = ∫_x^∞ e^{-t}/t dt; integrate to a far cutoff.
+        for x in [0.3, 1.5, 4.0] {
+            let q = integrate_adaptive(|t| (-t).exp() / t, x, x + 60.0, 1e-13);
+            assert!((expint_e1(x) - q).abs() < 1e-10, "x={x}");
+        }
+    }
+
+    #[test]
+    fn gauss_legendre_integrates_polynomials_exactly() {
+        // Order-n GL is exact for degree ≤ 2n−1.
+        let val = integrate_gl(|x| x.powi(7) - 3.0 * x.powi(4) + x, -1.0, 2.0, 8);
+        // ∫ x^7 = x^8/8; ∫ x^4 = x^5/5; ∫ x = x²/2 over [-1,2]
+        let exact = (256.0 - 1.0) / 8.0 - 3.0 * (32.0 + 1.0) / 5.0 + (4.0 - 1.0) / 2.0;
+        assert!((val - exact).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adaptive_simpson_smooth() {
+        let v = integrate_adaptive(|x: f64| x.sin(), 0.0, std::f64::consts::PI, 1e-12);
+        assert!((v - 2.0).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,144 @@
+//! Property tests over the gradient-coding codec (proptest-lite runner).
+
+use bcgc::coding::decoder::{decode, decode_vector};
+use bcgc::coding::encoder::GradientCode;
+use bcgc::coding::scheme::CodingScheme;
+use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::testing::{gens, Runner};
+
+/// Encode all workers' contributions for random shard gradients.
+fn contributions(code: &GradientCode, grads: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    (0..code.n)
+        .map(|w| {
+            let held: Vec<&[f64]> =
+                code.supports[w].iter().map(|&i| grads[i].as_slice()).collect();
+            code.encode(w, &held)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_exact_recovery_random_survivor_sets() {
+    Runner::new(150, 0xC0DE).run("exact-recovery", |rng| {
+        let n = gens::usize_in(rng, 2, 12);
+        let s = gens::usize_in(rng, 0, n - 1);
+        let dim = gens::usize_in(rng, 1, 5);
+        let code = GradientCode::cyclic_mds(n, s, rng).map_err(|e| e.to_string())?;
+        let grads: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..dim).map(|_| rng.normal()).collect()).collect();
+        let want: Vec<f64> = (0..dim).map(|d| grads.iter().map(|g| g[d]).sum()).collect();
+        let contribs = contributions(&code, &grads);
+        // Random survivor set of exactly N − s workers.
+        let survivors = rng.sample_indices(n, n - s);
+        let a = decode_vector(&code, &survivors).map_err(|e| e.to_string())?;
+        let picked: Vec<&[f64]> = survivors.iter().map(|&w| contribs[w].as_slice()).collect();
+        let got = decode(&a, &picked);
+        for d in 0..dim {
+            let err = (got[d] - want[d]).abs() / (1.0 + want[d].abs());
+            if err > 1e-5 {
+                return Err(format!(
+                    "n={n} s={s} S={survivors:?} dim {d}: got {} want {} (err {err:.2e})",
+                    got[d], want[d]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decode_vector_supported_on_survivors_only() {
+    Runner::new(80, 0xD0DE).run("decode-support", |rng| {
+        let n = gens::usize_in(rng, 3, 10);
+        let s = gens::usize_in(rng, 1, n - 1);
+        let code = GradientCode::cyclic_mds(n, s, rng).map_err(|e| e.to_string())?;
+        let survivors = rng.sample_indices(n, n - s);
+        let a = decode_vector(&code, &survivors).map_err(|e| e.to_string())?;
+        if a.len() != n - s {
+            return Err(format!("decode vector length {} != {}", a.len(), n - s));
+        }
+        // aᵀ·B_S must reproduce the all-ones row exactly.
+        let b_s = code.b.select_rows(&survivors);
+        let recon = b_s.vecmat(&a);
+        if recon.iter().any(|r| (r - 1.0).abs() > 1e-6) {
+            return Err(format!("aᵀB_S != 1: {recon:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fractional_repetition_group_structure() {
+    Runner::new(60, 0xF0F0).run("frac-rep", |rng| {
+        // Pick (s+1) | N pairs.
+        let s = gens::usize_in(rng, 1, 4);
+        let groups = gens::usize_in(rng, 1, 4);
+        let n = (s + 1) * groups;
+        let code = GradientCode::fractional_repetition(n, s).map_err(|e| e.to_string())?;
+        let grads: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.normal()]).collect();
+        let want: f64 = grads.iter().map(|g| g[0]).sum();
+        let contribs = contributions(&code, &grads);
+        let survivors = rng.sample_indices(n, n - s);
+        let a = decode_vector(&code, &survivors).map_err(|e| e.to_string())?;
+        let picked: Vec<&[f64]> = survivors.iter().map(|&w| contribs[w].as_slice()).collect();
+        let got = decode(&a, &picked);
+        if (got[0] - want).abs() > 1e-9 * (1.0 + want.abs()) {
+            return Err(format!("got {} want {want}", got[0]));
+        }
+        // Frac-rep decode vectors are 0/1 selections.
+        if a.iter().any(|&v| v != 0.0 && v != 1.0) {
+            return Err(format!("non-binary decode vector {a:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheme_block_encode_consistent_with_code_encode() {
+    Runner::new(60, 0xABCD).run("scheme-encode", |rng| {
+        let n = gens::usize_in(rng, 2, 8);
+        let coords = gens::usize_in(rng, n, 60);
+        let x = gens::feasible_x(rng, n, coords as f64);
+        let blocks = bcgc::optimizer::rounding::round_to_blocks(&x, coords);
+        let scheme = CodingScheme::new(blocks, rng).map_err(|e| e.to_string())?;
+        let max_s = scheme.blocks().max_level();
+        let w = gens::usize_in(rng, 0, n - 1);
+        // Full-length shard grads for the worker's held subsets.
+        let shard_grads: Vec<Vec<f64>> = (0..max_s + 1)
+            .map(|_| (0..coords).map(|_| rng.normal()).collect())
+            .collect();
+        for r in scheme.ranges() {
+            let fast = scheme.encode_block_range(w, &r, &shard_grads);
+            // Slow path: restrict then use the code's generic encode.
+            let restricted: Vec<Vec<f64>> = shard_grads[..r.s + 1]
+                .iter()
+                .map(|g| g[r.start..r.end].to_vec())
+                .collect();
+            let refs: Vec<&[f64]> = restricted.iter().map(|v| v.as_slice()).collect();
+            let slow = scheme.code(r.s).encode(w, &refs);
+            for (a, b) in fast.iter().zip(slow.iter()) {
+                if (a - b).abs() > 1e-12 {
+                    return Err(format!("encode mismatch at block s={}", r.s));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_theorem1_s_x_bijection() {
+    Runner::new(120, 0x1234).run("theorem1-bijection", |rng| {
+        let n = gens::usize_in(rng, 2, 10);
+        let l = gens::usize_in(rng, 1, 200);
+        let s = gens::monotone_s(rng, n, l);
+        let p = BlockPartition::from_s_vector(n, &s).map_err(|e| e.to_string())?;
+        if p.s_vector() != s {
+            return Err("s → x → s roundtrip failed".into());
+        }
+        if p.total() != l {
+            return Err("total mismatch".into());
+        }
+        Ok(())
+    });
+}

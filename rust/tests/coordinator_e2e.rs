@@ -1,0 +1,197 @@
+//! Coordinator end-to-end: coded distributed GD over the thread topology
+//! produces *exactly* the uncoded full gradient (up to f32/f64 transport
+//! noise) regardless of straggler pattern, and training converges.
+
+use std::sync::Arc;
+
+use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+use bcgc::coordinator::PacingMode;
+use bcgc::data::synthetic;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::distribution::Deterministic;
+use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::runtime::host::{HostExecutor, HostModel};
+use bcgc::runtime::{host_factory, GradExecutor};
+
+fn mlp_setup(n: usize, seed: u64) -> (Arc<bcgc::data::Dataset>, usize) {
+    let ds = synthetic::classification(8, 4, 16 * n, n, 0.2, seed).unwrap();
+    let dim = HostExecutor::mlp_dim(8, 16, 4);
+    (ds, dim)
+}
+
+fn run_once(
+    blocks: BlockPartition,
+    n: usize,
+    steps: usize,
+    dead: Vec<usize>,
+    seed: u64,
+) -> bcgc::coordinator::metrics::TrainReport {
+    let (ds, dim) = mlp_setup(n, seed);
+    let factory = host_factory(ds, HostModel::Mlp { hidden: 16 });
+    let spec = ProblemSpec::new(n, dim, 16 * n, 1.0);
+    let mut cfg = TrainConfig::new(spec, blocks);
+    cfg.steps = steps;
+    cfg.lr = 2e-3; // summed (not mean) loss ⇒ conservative step size
+    cfg.eval_every = (steps / 4).max(1);
+    cfg.seed = seed;
+    cfg.dead_workers = dead;
+    Trainer::new(cfg, Box::new(ShiftedExponential::new(1e-3, 50.0)), factory).run().unwrap()
+}
+
+#[test]
+fn coded_training_reduces_loss_multi_level() {
+    let n = 6;
+    let (_, dim) = mlp_setup(n, 3);
+    // A genuinely multi-level partition.
+    let mut sizes = vec![0usize; n];
+    sizes[0] = dim / 2;
+    sizes[2] = dim / 4;
+    sizes[n - 1] = dim - sizes[0] - sizes[2];
+    let report = run_once(BlockPartition::new(sizes), n, 200, vec![], 3);
+    let first = report.first_loss().unwrap();
+    let last = report.final_loss().unwrap();
+    assert!(last < first * 0.85, "loss {first} -> {last}");
+    assert_eq!(report.steps(), 200);
+    assert!(report.failed_workers.is_empty());
+}
+
+#[test]
+fn coded_gradient_equals_uncoded_gradient_trajectory() {
+    // Same seed ⇒ same data, same init, same T stream. A multi-level
+    // coded run and an uncoded run must produce (nearly) identical loss
+    // curves because the decoded gradient is exact.
+    let n = 4;
+    let (_, dim) = mlp_setup(n, 11);
+    let uncoded = run_once(BlockPartition::single_level(n, 0, dim), n, 20, vec![], 11);
+    let mut sizes = vec![0usize; n];
+    sizes[1] = dim / 3;
+    sizes[3] = dim - dim / 3;
+    let coded = run_once(BlockPartition::new(sizes), n, 20, vec![], 11);
+    for ((i1, l1), (i2, l2)) in uncoded.loss_curve.iter().zip(coded.loss_curve.iter()) {
+        assert_eq!(i1, i2);
+        assert!(
+            (l1 - l2).abs() < 2e-2 * (1.0 + l1.abs()),
+            "iter {i1}: uncoded {l1} vs coded {l2}"
+        );
+    }
+}
+
+#[test]
+fn survives_dead_workers_up_to_min_redundancy() {
+    let n = 5;
+    let (_, dim) = mlp_setup(n, 7);
+    // All blocks tolerate ≥ 2 stragglers.
+    let mut sizes = vec![0usize; n];
+    sizes[2] = dim / 2;
+    sizes[4] = dim - dim / 2;
+    let report = run_once(BlockPartition::new(sizes), n, 15, vec![1, 3], 7);
+    let first = report.first_loss().unwrap();
+    let last = report.final_loss().unwrap();
+    assert!(last < first, "loss {first} -> {last}");
+    assert!(report.failed_workers.contains(&1));
+    assert!(report.failed_workers.contains(&3));
+}
+
+#[test]
+fn stalls_are_detected_not_hung() {
+    let n = 4;
+    let (ds, dim) = mlp_setup(n, 9);
+    let factory = host_factory(ds, HostModel::Mlp { hidden: 16 });
+    let spec = ProblemSpec::new(n, dim, 16 * n, 1.0);
+    // Level-0 block cannot tolerate any dead worker.
+    let mut cfg = TrainConfig::new(spec, BlockPartition::single_level(n, 0, dim));
+    cfg.steps = 3;
+    cfg.dead_workers = vec![2];
+    cfg.seed = 9;
+    cfg.stall_timeout = std::time::Duration::from_millis(500);
+    let err = Trainer::new(cfg, Box::new(Deterministic::new(1.0)), factory)
+        .run()
+        .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("unrecoverable") || msg.contains("stalled"), "{msg}");
+}
+
+#[test]
+fn real_pacing_mode_runs() {
+    let n = 4;
+    let (ds, dim) = mlp_setup(n, 13);
+    let factory = host_factory(ds, HostModel::Mlp { hidden: 16 });
+    let spec = ProblemSpec::new(n, dim, 16 * n, 1.0);
+    let mut sizes = vec![0usize; n];
+    sizes[1] = dim;
+    let mut cfg = TrainConfig::new(spec, BlockPartition::new(sizes));
+    cfg.steps = 5;
+    cfg.eval_every = 5;
+    cfg.seed = 13;
+    // Tiny scale so the test stays fast but sleeps actually happen.
+    cfg.pacing = PacingMode::RealScaled { ns_per_unit: 0.05 };
+    let report = Trainer::new(cfg, Box::new(Deterministic::new(1.0)), factory).run().unwrap();
+    assert_eq!(report.steps(), 5);
+}
+
+#[test]
+fn virtual_runtime_metrics_recorded() {
+    let n = 4;
+    let (_, dim) = mlp_setup(n, 17);
+    let report = run_once(BlockPartition::single_level(n, 1, dim), n, 10, vec![], 17);
+    let stats = report.virtual_runtime_stats();
+    assert_eq!(stats.count(), 10);
+    assert!(stats.mean() > 0.0);
+    assert!(report.decode_cache_misses >= 1);
+    assert!(report.decode_ns_stats().mean() > 0.0);
+}
+
+#[test]
+fn eval_every_zero_disables_loss_curve() {
+    let n = 4;
+    let (ds, dim) = mlp_setup(n, 19);
+    let factory = host_factory(ds, HostModel::Mlp { hidden: 16 });
+    let spec = ProblemSpec::new(n, dim, 16 * n, 1.0);
+    let mut cfg = TrainConfig::new(spec, BlockPartition::single_level(n, 1, dim));
+    cfg.steps = 4;
+    cfg.eval_every = 0;
+    let report =
+        Trainer::new(cfg, Box::new(Deterministic::new(1.0)), factory).run().unwrap();
+    assert!(report.loss_curve.is_empty());
+}
+
+#[test]
+fn decoded_gradient_norm_matches_direct_sum() {
+    // One iteration from θ0 = 0: the recorded grad_norm must equal the
+    // norm of the directly-computed Σ_i g_i.
+    let n = 4;
+    let ds = synthetic::classification(8, 4, 16 * n, n, 0.2, 23).unwrap();
+    let dim = HostExecutor::mlp_dim(8, 16, 4);
+    let factory = host_factory(ds.clone(), HostModel::Mlp { hidden: 16 });
+
+    let spec = ProblemSpec::new(n, dim, 16 * n, 1.0);
+    let mut sizes = vec![0usize; n];
+    sizes[1] = dim / 2;
+    sizes[2] = dim - dim / 2;
+    let mut cfg = TrainConfig::new(spec, BlockPartition::new(sizes));
+    cfg.steps = 1;
+    cfg.eval_every = 0;
+    cfg.init_scale = 0.0; // θ0 = 0
+    cfg.seed = 23;
+    let report = Trainer::new(cfg, Box::new(Deterministic::new(1.0)), factory)
+        .run()
+        .unwrap();
+
+    let mut exec = HostExecutor::new(ds, HostModel::Mlp { hidden: 16 }).unwrap();
+    let theta0 = vec![0.0f32; dim];
+    let mut g = vec![0.0f64; dim];
+    for s in 0..n {
+        for (acc, v) in g.iter_mut().zip(exec.grad_shard(&theta0, s).unwrap()) {
+            *acc += v as f64;
+        }
+    }
+    let norm: f64 = g.iter().map(|x| x * x).sum::<f64>().sqrt();
+    assert!(norm > 0.0);
+    assert!(
+        (report.iters[0].grad_norm - norm).abs() < 1e-6 * (1.0 + norm),
+        "decoded {} vs direct {}",
+        report.iters[0].grad_norm,
+        norm
+    );
+}

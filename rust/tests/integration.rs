@@ -1,0 +1,131 @@
+//! Cross-module integration: optimizer → codec → simulator agree with
+//! the analytic runtime model, and the full solve-evaluate loop
+//! reproduces the paper's qualitative ordering on a small instance.
+
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::distribution::CycleTimeDistribution;
+use bcgc::optimizer::evaluate::{compare_schemes, reduction_vs_best_baseline};
+use bcgc::optimizer::runtime_model::{tau_hat, ProblemSpec, WorkModel};
+use bcgc::optimizer::solver::{solve, SchemeKind, SolveOptions};
+use bcgc::sim::{simulate_iteration, SimConfig};
+use bcgc::util::rng::Rng;
+
+#[test]
+fn solver_to_simulator_consistency() {
+    // For every scheme the facade produces, the event simulator's playout
+    // matches the closed-form Eq. (5) on fresh random draws.
+    let spec = ProblemSpec::paper_default(10, 1000);
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let mut rng = Rng::new(101);
+    let opts = SolveOptions::fast();
+    for kind in [
+        SchemeKind::ClosedFormTime,
+        SchemeKind::ClosedFormFreq,
+        SchemeKind::SingleBlock,
+        SchemeKind::FerdinandFull,
+        SchemeKind::Uncoded,
+    ] {
+        let p = solve(&spec, &dist, kind, &opts, &mut rng).unwrap();
+        for _ in 0..50 {
+            let times = dist.sample_vec(10, &mut rng);
+            let sim = simulate_iteration(&spec, &p, &times, &SimConfig::default());
+            let closed = tau_hat(&spec, &p.as_f64(), &times, WorkModel::GradientCoding);
+            assert!(
+                (sim.completion_time - closed).abs() < 1e-9 * closed.max(1.0),
+                "{}: sim {} vs closed {}",
+                kind.label(),
+                sim.completion_time,
+                closed
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_qualitative_ordering_small_instance() {
+    // Proposed ≼ single-BCGC ≼ uncoded, and a meaningful reduction vs the
+    // best baseline — Fig. 4's story at a test-sized operating point.
+    let spec = ProblemSpec::paper_default(12, 2000);
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let mut rng = Rng::new(55);
+    let opts = SolveOptions::fast();
+
+    let mut schemes = Vec::new();
+    for kind in [
+        SchemeKind::ClosedFormFreq,
+        SchemeKind::SingleBlock,
+        SchemeKind::TandonAlpha,
+        SchemeKind::FerdinandFull,
+        SchemeKind::Uncoded,
+    ] {
+        schemes.push((
+            kind.label().to_string(),
+            solve(&spec, &dist, kind, &opts, &mut rng).unwrap(),
+        ));
+    }
+    let rows = compare_schemes(&spec, &schemes, &dist, 6000, &mut rng);
+    let proposed = rows[0].mean();
+    let single = rows[1].mean();
+    let uncoded = rows[4].mean();
+    assert!(proposed <= single * 1.001, "proposed {proposed} vs single {single}");
+    assert!(single < uncoded, "single {single} vs uncoded {uncoded}");
+    let baselines: Vec<f64> = rows[1..].iter().map(|r| r.mean()).collect();
+    let red = reduction_vs_best_baseline(proposed, &baselines);
+    assert!(red > 5.0, "expected a meaningful reduction, got {red:.1}%");
+}
+
+#[test]
+fn config_file_drives_experiment() {
+    use bcgc::config::{ExperimentConfig, TomlDoc};
+    let doc = TomlDoc::parse(
+        r#"
+        name = "itest"
+        workers = 6
+        coords = 600
+        trials = 200
+        seed = 3
+        [distribution]
+        kind = "shifted_exp"
+        mu = 1e-3
+        t0 = 50
+        "#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+    let spec = cfg.spec();
+    let dist = cfg.distribution.build();
+    let mut rng = Rng::new(cfg.seed);
+    let p = solve(&spec, dist.as_ref(), SchemeKind::ClosedFormFreq, &SolveOptions::fast(), &mut rng)
+        .unwrap();
+    assert_eq!(p.total(), 600);
+    let stats = bcgc::optimizer::runtime_model::expected_runtime(
+        &spec, &p, dist.as_ref(), cfg.trials, &mut rng,
+    );
+    assert!(stats.mean() > 0.0);
+}
+
+#[test]
+fn mds_vs_gc_work_model_crossover() {
+    // Sanity of the Ferdinand transplant: under the MDS work model its
+    // own allocation is optimal (equalized), but evaluated under the GC
+    // model it is strictly worse than the GC closed form.
+    let spec = ProblemSpec::paper_default(10, 2000);
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let mut rng = Rng::new(77);
+    let opts = SolveOptions::fast();
+    let gc = solve(&spec, &dist, SchemeKind::ClosedFormTime, &opts, &mut rng).unwrap();
+    let mds = solve(&spec, &dist, SchemeKind::FerdinandFull, &opts, &mut rng).unwrap();
+    let rows = compare_schemes(
+        &spec,
+        &[("gc".into(), gc), ("mds".into(), mds)],
+        &dist,
+        6000,
+        &mut rng,
+    );
+    assert!(
+        rows[0].mean() < rows[1].mean(),
+        "GC closed form {} should beat MDS transplant {}",
+        rows[0].mean(),
+        rows[1].mean()
+    );
+}

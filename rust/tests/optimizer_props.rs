@@ -1,0 +1,187 @@
+//! Property tests over the optimizer: the paper's structural results
+//! (Lemma 1, Theorem 1, Theorem 2 optimality) plus solver invariants.
+
+use bcgc::distribution::order_stats::{estimate, shifted_exp_exact};
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::optimizer::closed_form;
+use bcgc::optimizer::projection::project_simplex;
+use bcgc::optimizer::rounding::round_to_blocks;
+use bcgc::optimizer::runtime_model::{tau_hat, tau_s, ProblemSpec, WorkModel};
+use bcgc::testing::{gens, Runner};
+
+#[test]
+fn prop_theorem1_tau_equivalence() {
+    // τ(s, T) == τ̂(x(s), T) for every monotone s and every T.
+    Runner::new(200, 0x7411).run("tau-equivalence", |rng| {
+        let n = gens::usize_in(rng, 2, 12);
+        let l = gens::usize_in(rng, 1, 120);
+        let s = gens::monotone_s(rng, n, l);
+        let times = gens::positive_times(rng, n);
+        let spec = ProblemSpec::new(n, l, n, 1.0);
+        let p = BlockPartition::from_s_vector(n, &s).map_err(|e| e.to_string())?;
+        let a = tau_s(&spec, &s, &times);
+        let b = tau_hat(&spec, &p.as_f64(), &times, WorkModel::GradientCoding);
+        if (a - b).abs() > 1e-9 * a.max(1.0) {
+            return Err(format!("τ={a} vs τ̂={b}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lemma1_sorting_never_hurts() {
+    // For ANY (possibly non-monotone) s, the sorted version has
+    // τ(sorted(s), T) ≤ τ(s, T): the exchange argument behind Lemma 1.
+    Runner::new(200, 0x7412).run("lemma1-sorting", |rng| {
+        let n = gens::usize_in(rng, 2, 10);
+        let l = gens::usize_in(rng, 2, 80);
+        let s = gens::any_s(rng, n, l);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        let times = gens::positive_times(rng, n);
+        let spec = ProblemSpec::new(n, l, n, 1.0);
+        let orig = tau_s(&spec, &s, &times);
+        let improved = tau_s(&spec, &sorted, &times);
+        if improved > orig * (1.0 + 1e-12) {
+            return Err(format!("sorting increased runtime: {orig} -> {improved} (s={s:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_theorem2_closed_form_is_deterministic_optimum() {
+    // At deterministic t, x^(t) achieves m and every feasible x is ≥ m.
+    Runner::new(100, 0x7413).run("theorem2-optimality", |rng| {
+        let n = gens::usize_in(rng, 2, 12);
+        let l = gens::usize_in(rng, n, 500);
+        let t = gens::increasing_times(rng, n);
+        let spec = ProblemSpec::new(n, l, n, 1.0);
+        let (xt, m) =
+            closed_form::x_from_deterministic_t(&spec, &t, WorkModel::GradientCoding)
+                .map_err(|e| e.to_string())?;
+        let opt = tau_hat(&spec, &xt, &t, WorkModel::GradientCoding);
+        if (opt - spec.unit_work() * m).abs() > 1e-6 * opt {
+            return Err(format!("x^(t) does not achieve m: {opt} vs {}", spec.unit_work() * m));
+        }
+        for _ in 0..20 {
+            let x = gens::feasible_x(rng, n, l as f64);
+            let v = tau_hat(&spec, &x, &t, WorkModel::GradientCoding);
+            if v < opt * (1.0 - 1e-9) {
+                return Err(format!("feasible x beats closed form: {v} < {opt}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rounding_feasible_and_close() {
+    Runner::new(150, 0x7414).run("rounding", |rng| {
+        let n = gens::usize_in(rng, 2, 20);
+        let l = gens::usize_in(rng, n, 5000);
+        let x = gens::feasible_x(rng, n, l as f64);
+        let p = round_to_blocks(&x, l);
+        if p.total() != l {
+            return Err(format!("rounded total {} != {l}", p.total()));
+        }
+        for (i, &sz) in p.sizes().iter().enumerate() {
+            if (sz as f64 - x[i]).abs() >= 1.0 + 1e-9 {
+                return Err(format!("block {i} moved by ≥1: {} vs {}", sz, x[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_projection_feasibility_and_optimality_vs_candidates() {
+    Runner::new(150, 0x7415).run("projection", |rng| {
+        let n = gens::usize_in(rng, 2, 15);
+        let l = 1.0 + rng.uniform() * 1000.0;
+        let v: Vec<f64> = (0..n).map(|_| rng.normal_with(0.0, l)).collect();
+        let p = project_simplex(&v, l);
+        let sum: f64 = p.iter().sum();
+        if (sum - l).abs() > 1e-6 * l || p.iter().any(|&x| x < 0.0) {
+            return Err(format!("infeasible projection (sum {sum}, target {l})"));
+        }
+        // No random feasible point is closer to v.
+        let d_opt: f64 = p.iter().zip(v.iter()).map(|(a, b)| (a - b) * (a - b)).sum();
+        for _ in 0..20 {
+            let q = gens::feasible_x(rng, n, l);
+            let d: f64 = q.iter().zip(v.iter()).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d < d_opt - 1e-9 {
+                return Err(format!("candidate closer than projection: {d} < {d_opt}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_order_stats_monotone_and_jensen() {
+    Runner::new(20, 0x7416).run("order-stats", |rng| {
+        let n = gens::usize_in(rng, 2, 30);
+        let mu = 10f64.powf(rng.uniform_range(-3.5, -1.0));
+        let t0 = rng.uniform_range(1.0, 100.0);
+        let d = ShiftedExponential::new(mu, t0);
+        let os = shifted_exp_exact(&d, n);
+        for k in 1..n {
+            if os.t[k] < os.t[k - 1] || os.t_prime[k] < os.t_prime[k - 1] {
+                return Err(format!("order stats not monotone at k={k}"));
+            }
+        }
+        // Jensen: t'_k ≤ t_k.
+        for k in 0..n {
+            if os.t_prime[k] > os.t[k] * (1.0 + 1e-9) {
+                return Err(format!("Jensen violated at k={k}: {} > {}", os.t_prime[k], os.t[k]));
+            }
+        }
+        // Cross-check against Monte Carlo at moderate size.
+        if n <= 12 {
+            let mc = estimate(&d, n, 30_000, rng);
+            for k in 0..n {
+                let rel = (os.t[k] - mc.t[k]).abs() / os.t[k];
+                if rel > 0.05 {
+                    return Err(format!("exact vs MC t mismatch at k={k}: rel {rel}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_theorem4_shape_xf_beats_xt_in_expectation() {
+    // x^(f) ⪯ x^(t) under shifted-exponential (Theorem 4's ordering),
+    // checked with common random numbers at several operating points.
+    Runner::new(12, 0x7417).run("xf-vs-xt", |rng| {
+        use bcgc::optimizer::evaluate::compare_schemes;
+        let n = gens::usize_in(rng, 5, 30);
+        let l = 4000;
+        let mu = 10f64.powf(rng.uniform_range(-3.2, -2.0));
+        let d = ShiftedExponential::new(mu, 50.0);
+        let spec = ProblemSpec::paper_default(n, l);
+        let os = shifted_exp_exact(&d, n);
+        let xt = round_to_blocks(&closed_form::x_time(&spec, &os).unwrap(), l);
+        let xf = round_to_blocks(&closed_form::x_freq(&spec, &os).unwrap(), l);
+        let rows = compare_schemes(
+            &spec,
+            &[("xt".into(), xt), ("xf".into(), xf)],
+            &d,
+            4000,
+            rng,
+        );
+        // Allow a small tolerance: the ordering is an expectation-level
+        // statement and both are within a few percent of optimal.
+        if rows[1].mean() > rows[0].mean() * 1.03 {
+            return Err(format!(
+                "x^(f) ({}) much worse than x^(t) ({}) at N={n}, mu={mu:.2e}",
+                rows[1].mean(),
+                rows[0].mean()
+            ));
+        }
+        Ok(())
+    });
+}

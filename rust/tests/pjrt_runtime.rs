@@ -1,0 +1,133 @@
+//! PJRT runtime integration: load the AOT HLO artifacts, execute them,
+//! and cross-check numerics against the pure-Rust host oracle.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target orders this);
+//! tests are skipped with a loud message when artifacts are absent.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use bcgc::data::synthetic;
+use bcgc::runtime::artifact::Manifest;
+use bcgc::runtime::host::{HostExecutor, HostModel};
+use bcgc::runtime::pjrt::PjrtExecutor;
+use bcgc::runtime::GradExecutor;
+use bcgc::util::rng::Rng;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.toml").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} — run `make artifacts`", dir.display());
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_expected_entries() {
+    let Some(dir) = artifact_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let names: Vec<&str> = m.names().collect();
+    assert!(names.contains(&"linreg_d32_s16"), "{names:?}");
+    assert!(names.contains(&"mlp_d16_h32_c4_s8"), "{names:?}");
+    assert!(names.contains(&"mlp_d64_h256_c10_s128"), "{names:?}");
+}
+
+#[test]
+fn linreg_pjrt_matches_host_oracle() {
+    let Some(dir) = artifact_dir() else { return };
+    let n = 4;
+    let (ds, _) = synthetic::linear_regression(32, 16 * n, n, 0.1, 77).unwrap();
+    let mut pjrt = PjrtExecutor::load(&dir, "linreg_d32_s16", ds.clone()).unwrap();
+    let mut host = HostExecutor::new(ds, HostModel::LinearRegression).unwrap();
+    let mut rng = Rng::new(5);
+    let theta: Vec<f32> = (0..32).map(|_| rng.normal() as f32 * 0.3).collect();
+    for shard in 0..n {
+        let a = pjrt.grad_shard(&theta, shard).unwrap();
+        let b = host.grad_shard(&theta, shard).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+    let la = pjrt.loss(&theta).unwrap();
+    let lb = host.loss(&theta).unwrap();
+    assert!((la - lb).abs() < 1e-2 * (1.0 + lb.abs()), "loss {la} vs {lb}");
+}
+
+#[test]
+fn mlp_pjrt_matches_host_oracle() {
+    let Some(dir) = artifact_dir() else { return };
+    let n = 4;
+    let ds = synthetic::classification(16, 4, 8 * n, n, 0.2, 13).unwrap();
+    let mut pjrt = PjrtExecutor::load(&dir, "mlp_d16_h32_c4_s8", ds.clone()).unwrap();
+    let mut host = HostExecutor::new(ds, HostModel::Mlp { hidden: 32 }).unwrap();
+    assert_eq!(pjrt.dim(), host.dim());
+    let dim = pjrt.dim();
+    let mut rng = Rng::new(9);
+    let theta: Vec<f32> = (0..dim).map(|_| rng.normal() as f32 * 0.2).collect();
+    for shard in 0..n {
+        let a = pjrt.grad_shard(&theta, shard).unwrap();
+        let b = host.grad_shard(&theta, shard).unwrap();
+        let mut max_rel = 0.0f32;
+        for (x, y) in a.iter().zip(b.iter()) {
+            max_rel = max_rel.max((x - y).abs() / (1.0 + y.abs()));
+        }
+        assert!(max_rel < 1e-3, "shard {shard}: max rel err {max_rel}");
+    }
+    let la = pjrt.loss(&theta).unwrap();
+    let lb = host.loss(&theta).unwrap();
+    assert!((la - lb).abs() < 1e-2 * (1.0 + lb.abs()), "loss {la} vs {lb}");
+}
+
+#[test]
+fn dataset_shape_mismatch_rejected() {
+    let Some(dir) = artifact_dir() else { return };
+    // Wrong feature dim for the artifact.
+    let (ds, _) = synthetic::linear_regression(16, 64, 4, 0.1, 1).unwrap();
+    assert!(PjrtExecutor::load(&dir, "linreg_d32_s16", ds).is_err());
+    // Wrong shard size.
+    let (ds, _) = synthetic::linear_regression(32, 32 * 4, 4, 0.1, 1).unwrap();
+    assert!(PjrtExecutor::load(&dir, "linreg_d32_s16", ds).is_err());
+}
+
+#[test]
+fn coded_training_over_pjrt_end_to_end() {
+    // The full stack: optimizer → codec → coordinator threads → PJRT
+    // executors running the AOT Pallas/JAX artifacts → decoded exact
+    // gradient → descending loss.
+    let Some(dir) = artifact_dir() else { return };
+    use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+    use bcgc::distribution::shifted_exp::ShiftedExponential;
+    use bcgc::optimizer::runtime_model::ProblemSpec;
+    use bcgc::optimizer::solver::{solve, SchemeKind, SolveOptions};
+    use bcgc::runtime::pjrt_factory;
+
+    let n = 4usize;
+    let ds = synthetic::classification(16, 4, 8 * n, n, 0.2, 99).unwrap();
+    let dim = 16 * 32 + 32 + 32 * 4 + 4; // mlp_d16_h32_c4_s8
+    let factory = pjrt_factory(dir, "mlp_d16_h32_c4_s8".into(), ds);
+    let spec = ProblemSpec::new(n, dim, 8 * n, 1.0);
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let mut rng = Rng::new(99);
+    let blocks = solve(&spec, &dist, SchemeKind::ClosedFormFreq, &SolveOptions::fast(), &mut rng)
+        .unwrap();
+    let mut cfg = TrainConfig::new(spec, blocks);
+    cfg.steps = 25;
+    cfg.lr = 5e-3;
+    cfg.eval_every = 5;
+    cfg.seed = 99;
+    let report = Trainer::new(cfg, Box::new(dist), factory).run().unwrap();
+    let first = report.first_loss().unwrap();
+    let last = report.final_loss().unwrap();
+    assert!(last < first, "PJRT coded training must descend: {first} -> {last}");
+    assert_eq!(report.steps(), 25);
+}
+
+#[test]
+fn unknown_entry_rejected() {
+    let Some(dir) = artifact_dir() else { return };
+    let (ds, _) = synthetic::linear_regression(32, 64, 4, 0.1, 1).unwrap();
+    assert!(PjrtExecutor::load(&dir, "not_a_real_entry", Arc::clone(&ds)).is_err());
+}
