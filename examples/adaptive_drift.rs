@@ -1,0 +1,108 @@
+//! Adaptive coding engine, end to end on the threaded coordinator: the
+//! straggler distribution **shifts mid-training**, the trainer detects
+//! the drift online (windowed shifted-exponential MLE over the observed
+//! cycle times), re-optimizes `x^(f)` for the fitted parameters and
+//! hot-swaps the coding scheme between iterations — no dropped
+//! iterations, no worker respawn. A static arm with identical seeds
+//! shows the virtual-runtime gap the swap buys.
+//!
+//! Run: `cargo run --release --example adaptive_drift`
+//! Options: `--workers 8 --steps 160 --shift-at 60 --mu 2e-2 --mu2 1e-3`
+
+use bcgc::cli::Args;
+use bcgc::coordinator::adaptive::AdaptiveConfig;
+use bcgc::coordinator::metrics::TrainReport;
+use bcgc::coordinator::straggler::StragglerSchedule;
+use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+use bcgc::data::synthetic;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::distribution::CycleTimeDistribution;
+use bcgc::optimizer::closed_form::x_freq_blocks;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::runtime::{host, host_factory};
+
+fn main() -> bcgc::Result<()> {
+    bcgc::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let n: usize = args.get("workers", 8)?;
+    let steps: usize = args.get("steps", 160)?;
+    let shift_at: usize = args.get("shift-at", 60)?;
+    let mu: f64 = args.get("mu", 2e-2)?;
+    let mu2: f64 = args.get("mu2", 1e-3)?;
+    let t0: f64 = args.get("t0", 50.0)?;
+    let seed: u64 = args.get("seed", 2021)?;
+
+    // Host-backend MLP (artifact-free), paper-style dimensions.
+    let (d, h, c, shard) = (32usize, 64usize, 10usize, 64usize);
+    let ds = synthetic::classification(d, c, shard * n, n, 0.2, seed)?;
+    let dim = host::HostExecutor::mlp_dim(d, h, c);
+    let factory = host_factory(ds, host::HostModel::Mlp { hidden: h });
+    let spec = ProblemSpec::new(n, dim, shard * n, 1.0);
+
+    let d0 = ShiftedExponential::new(mu, t0);
+    let d1 = ShiftedExponential::new(mu2, t0);
+    let blocks = x_freq_blocks(&spec, &d0, dim)?;
+    println!("model          : {d}-feature {c}-class MLP, L = {dim} parameters");
+    println!("phase 0 (iters 0..{shift_at})    : {}", d0.label());
+    println!("phase 1 (iters {shift_at}..{steps}) : {}", d1.label());
+    println!("initial x^(f) for phase 0      : {blocks}");
+
+    let run = |adaptive: Option<AdaptiveConfig>| -> bcgc::Result<TrainReport> {
+        let mut cfg = TrainConfig::new(spec, blocks.clone());
+        cfg.steps = steps;
+        cfg.lr = 2e-3;
+        cfg.eval_every = (steps / 4).max(1);
+        cfg.seed = seed;
+        cfg.adaptive = adaptive;
+        let schedule = StragglerSchedule::stationary(Box::new(d0.clone()))
+            .then(shift_at, Box::new(d1.clone()));
+        Trainer::with_schedule(cfg, schedule, factory.clone()).run()
+    };
+
+    let adaptive_cfg = AdaptiveConfig {
+        window: 24 * n,
+        min_samples: 12 * n,
+        check_every: 5,
+        cooldown: 10,
+        drift_threshold: 0.3,
+        ..Default::default()
+    };
+    println!("\n--- adaptive arm ---");
+    let adaptive = run(Some(adaptive_cfg))?;
+    println!("{}", adaptive.summary());
+    println!("scheme epochs:\n{}", adaptive.render_epochs());
+
+    println!("--- static arm (same seeds) ---");
+    let fixed = run(None)?;
+    println!("{}", fixed.summary());
+
+    // Post-shift comparison, once the adaptive arm has had time to react.
+    let measure_from = shift_at + (steps - shift_at) / 3;
+    let a_after = adaptive.virtual_runtime_stats_in(measure_from, steps).mean();
+    let s_after = fixed.virtual_runtime_stats_in(measure_from, steps).mean();
+    println!("\n=== results ===");
+    println!(
+        "iterations completed : adaptive {}/{steps}, static {}/{steps} (no drops)",
+        adaptive.steps(),
+        fixed.steps()
+    );
+    println!(
+        "scheme epochs        : adaptive {}, static {}",
+        adaptive.epochs(),
+        fixed.epochs()
+    );
+    println!(
+        "stale-epoch messages dropped safely: {}",
+        adaptive.stale_epoch_total()
+    );
+    println!(
+        "mean virtual runtime in iters [{measure_from}, {steps}): adaptive {a_after:.1} vs static {s_after:.1} ({:.1}% faster)",
+        100.0 * (1.0 - a_after / s_after)
+    );
+    println!(
+        "loss: adaptive {:?} → {:?}",
+        adaptive.first_loss(),
+        adaptive.final_loss()
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Adaptive-vs-static under a drifting shifted-exponential straggler
+//! model — the perf-trajectory bench behind `BENCH_adaptive.json`.
+//!
+//! Scenario: N = 20 workers, L = 2·10⁴ coordinates (the paper's Fig. 4
+//! scale). Phase 0 is a mild straggler regime (μ = 10⁻², t0 = 50); at
+//! iteration 150 the cluster degrades to the paper's §VI regime
+//! (μ = 10⁻³, t0 = 50) — a 6× jump in mean cycle time and a 10× fatter
+//! exponential tail. Three arms, all on common random numbers:
+//!
+//! * **static** — `x^(f)` optimized for phase 0, kept for the whole run
+//!   (what the non-adaptive paper system would do);
+//! * **adaptive** — same initial scheme, online MLE + drift-triggered
+//!   closed-form re-solve (the adaptive coding engine);
+//! * **oracle** — `x^(f)` optimized for phase 1 from iteration 0 (the
+//!   adaptive arm's post-shift upper bound).
+//!
+//! The headline metric is the mean per-iteration overall runtime after
+//! the shift (+grace); the JSON artifact tracks it across PRs.
+//!
+//! Run: `cargo bench --bench adaptive_drift` (set `BENCH_OUT` to move
+//! the artifact; defaults to ./BENCH_adaptive.json).
+
+use bcgc::bench_harness::banner;
+use bcgc::coordinator::adaptive::AdaptiveConfig;
+use bcgc::coordinator::straggler::StragglerSchedule;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::closed_form::x_freq_blocks;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::sim::{compare_adaptive_vs_static, MultiSimConfig};
+
+fn main() {
+    banner(
+        "Adaptive coding engine — drifting shifted-exponential",
+        "N=20, L=2e4; mu 1e-2 -> 1e-3 at iter 150 of 450; grace 50; CRN across arms.",
+    );
+    let (n, coords) = (20usize, 20_000usize);
+    let (iters, shift_at, grace, seed) = (450usize, 150usize, 50usize, 2021u64);
+    let spec = ProblemSpec::paper_default(n, coords);
+    let d0 = ShiftedExponential::new(1e-2, 50.0);
+    let d1 = ShiftedExponential::new(1e-3, 50.0);
+    let schedule =
+        StragglerSchedule::stationary(Box::new(d0.clone())).then(shift_at, Box::new(d1.clone()));
+    let initial = x_freq_blocks(&spec, &d0, coords).unwrap();
+    let oracle = x_freq_blocks(&spec, &d1, coords).unwrap();
+    println!("initial x^(f): {initial}");
+    println!("oracle  x^(f): {oracle}\n");
+
+    let acfg = AdaptiveConfig {
+        window: 20 * n,
+        min_samples: 10 * n,
+        check_every: 10,
+        cooldown: 20,
+        drift_threshold: 0.2,
+        ..Default::default()
+    };
+    let cfg = MultiSimConfig { iters, seed, comm_latency: 0.0 };
+    let cmp = compare_adaptive_vs_static(
+        &spec,
+        &initial,
+        Some(&oracle),
+        &schedule,
+        &cfg,
+        acfg,
+        grace,
+    )
+    .unwrap();
+
+    print!("{}", cmp.render_report());
+    assert!(
+        cmp.adaptive_after() < cmp.static_after(),
+        "adaptive must beat the stale static scheme after the shift"
+    );
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_adaptive.json".into());
+    std::fs::write(&out, cmp.render_json()).expect("write bench artifact");
+    println!("wrote {out}");
+}

@@ -123,6 +123,13 @@ impl DecodeCache {
         Self { map: HashMap::new(), capacity, hits: 0, misses: 0 }
     }
 
+    /// Drop every cached vector while keeping the hit/miss counters.
+    /// Required on a scheme-epoch swap: decode vectors are specific to
+    /// one code's coefficients, but the key is only `(s, survivor set)`.
+    pub fn reset(&mut self) {
+        self.map.clear();
+    }
+
     /// Get (or compute and insert) the decode vector for `(code, survivors)`.
     /// Only the first `N − s` survivors are used.
     ///

@@ -1,9 +1,18 @@
 //! Typed experiment configuration, loadable from a TOML-subset file
 //! (see `configs/` for the shipped experiment definitions).
+//!
+//! Beyond the paper's stationary setting, a config may declare a
+//! `[drift]` phase (the straggler distribution shifts mid-run) and an
+//! `[adaptive]` policy (the coordinator re-estimates parameters online
+//! and re-optimizes the coding scheme) — the inputs to the adaptive
+//! coding engine.
 
 use std::path::Path;
 
 use crate::config::toml_lite::TomlDoc;
+use crate::coordinator::adaptive::{AdaptiveConfig, ResolveStrategy};
+use crate::coordinator::straggler::StragglerSchedule;
+use crate::distribution::fit::FitMethod;
 use crate::distribution::{
     gamma::Gamma, lognormal::LogNormal, pareto::Pareto, shifted_exp::ShiftedExponential,
     weibull::Weibull, CycleTimeDistribution, Deterministic, TwoPoint,
@@ -12,7 +21,7 @@ use crate::optimizer::runtime_model::ProblemSpec;
 use crate::{Error, Result};
 
 /// A fully-specified experiment: problem dimensions, straggler model,
-/// Monte-Carlo budget and seed.
+/// Monte-Carlo budget and seed, plus optional drift/adaptive settings.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub name: String,
@@ -23,6 +32,10 @@ pub struct ExperimentConfig {
     pub trials: usize,
     pub seed: u64,
     pub distribution: DistConfig,
+    /// Optional mid-run distribution shift (`[drift]` section).
+    pub drift: Option<DriftPhase>,
+    /// Optional adaptive re-optimization policy (`[adaptive]` section).
+    pub adaptive: Option<AdaptiveSettings>,
 }
 
 /// Straggler-model choice (mirrors `distribution::*`).
@@ -56,6 +69,112 @@ impl DistConfig {
             DistConfig::Gamma { shape, scale, shift } => Box::new(Gamma::new(shape, scale, shift)),
         }
     }
+
+    /// Parse a distribution from `{section}.kind` + parameters. Returns
+    /// `Ok(None)` when the section declares no `kind`.
+    pub fn from_doc_section(doc: &TomlDoc, section: &str) -> Result<Option<Self>> {
+        let key = |k: &str| format!("{section}.{k}");
+        let need = |k: &str| {
+            doc.get_f64(&key(k))
+                .ok_or_else(|| Error::Config(format!("[{section}] needs {k}")))
+        };
+        let Some(kind) = doc.get_str(&key("kind")) else {
+            return Ok(None);
+        };
+        let dist = match kind {
+            "shifted_exp" => DistConfig::ShiftedExp {
+                mu: need("mu")?,
+                t0: doc.get_f64(&key("t0")).unwrap_or(50.0),
+            },
+            "weibull" => DistConfig::Weibull {
+                shape: need("shape")?,
+                scale: need("scale")?,
+                shift: doc.get_f64(&key("shift")).unwrap_or(0.0),
+            },
+            "pareto" => DistConfig::Pareto { alpha: need("alpha")?, xm: need("xm")? },
+            "two_point" => DistConfig::TwoPoint {
+                fast: need("fast")?,
+                slow: need("slow")?,
+                p_slow: doc.get_f64(&key("p_slow")).unwrap_or(0.5),
+            },
+            "lognormal" => DistConfig::LogNormal {
+                mu: need("mu")?,
+                sigma: need("sigma")?,
+                shift: doc.get_f64(&key("shift")).unwrap_or(0.0),
+            },
+            "gamma" => DistConfig::Gamma {
+                shape: need("shape")?,
+                scale: need("scale")?,
+                shift: doc.get_f64(&key("shift")).unwrap_or(0.0),
+            },
+            "deterministic" => DistConfig::Deterministic { value: need("value")? },
+            other => {
+                return Err(Error::Config(format!("unknown distribution kind {other:?}")))
+            }
+        };
+        Ok(Some(dist))
+    }
+}
+
+/// A mid-run distribution shift: from `at_iter` on, cycle times follow
+/// `distribution`.
+#[derive(Debug, Clone)]
+pub struct DriftPhase {
+    pub at_iter: usize,
+    pub distribution: DistConfig,
+}
+
+/// `[adaptive]` section: plain data, buildable into an
+/// [`AdaptiveConfig`].
+#[derive(Debug, Clone)]
+pub struct AdaptiveSettings {
+    pub window: usize,
+    pub check_every: usize,
+    pub cooldown: usize,
+    pub min_samples: usize,
+    pub drift_threshold: f64,
+    /// `"mle"` or `"moments"`.
+    pub estimator: String,
+    /// `"closed_form"` or `"subgradient"`.
+    pub resolve: String,
+}
+
+impl AdaptiveSettings {
+    pub fn build(&self) -> Result<AdaptiveConfig> {
+        if self.window < 2 {
+            return Err(Error::Config("adaptive.window must be ≥ 2".into()));
+        }
+        if self.min_samples < 2 {
+            return Err(Error::Config("adaptive.min_samples must be ≥ 2".into()));
+        }
+        if self.check_every == 0 {
+            return Err(Error::Config("adaptive.check_every must be ≥ 1".into()));
+        }
+        if self.drift_threshold <= 0.0 || !self.drift_threshold.is_finite() {
+            return Err(Error::Config("adaptive.drift_threshold must be a positive number".into()));
+        }
+        let method = match self.estimator.as_str() {
+            "mle" => FitMethod::Mle,
+            "moments" => FitMethod::Moments,
+            other => return Err(Error::Config(format!("unknown estimator {other:?}"))),
+        };
+        let strategy = match self.resolve.as_str() {
+            "closed_form" => ResolveStrategy::ClosedFormFreq,
+            "subgradient" => {
+                ResolveStrategy::Subgradient { iters: 1500, playoff_trials: 800 }
+            }
+            other => return Err(Error::Config(format!("unknown resolve strategy {other:?}"))),
+        };
+        Ok(AdaptiveConfig {
+            window: self.window,
+            check_every: self.check_every,
+            cooldown: self.cooldown,
+            min_samples: self.min_samples,
+            drift_threshold: self.drift_threshold,
+            method,
+            strategy,
+        })
+    }
 }
 
 impl Default for ExperimentConfig {
@@ -69,6 +188,8 @@ impl Default for ExperimentConfig {
             trials: 2000,
             seed: 2021,
             distribution: DistConfig::ShiftedExp { mu: 1e-3, t0: 50.0 },
+            drift: None,
+            adaptive: None,
         }
     }
 }
@@ -102,67 +223,48 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_i64("seed") {
             cfg.seed = v as u64;
         }
-        if let Some(kind) = doc.get_str("distribution.kind") {
-            cfg.distribution = match kind {
-                "shifted_exp" => DistConfig::ShiftedExp {
-                    mu: doc
-                        .get_f64("distribution.mu")
-                        .ok_or_else(|| Error::Config("shifted_exp needs mu".into()))?,
-                    t0: doc.get_f64("distribution.t0").unwrap_or(50.0),
-                },
-                "weibull" => DistConfig::Weibull {
-                    shape: doc
-                        .get_f64("distribution.shape")
-                        .ok_or_else(|| Error::Config("weibull needs shape".into()))?,
-                    scale: doc
-                        .get_f64("distribution.scale")
-                        .ok_or_else(|| Error::Config("weibull needs scale".into()))?,
-                    shift: doc.get_f64("distribution.shift").unwrap_or(0.0),
-                },
-                "pareto" => DistConfig::Pareto {
-                    alpha: doc
-                        .get_f64("distribution.alpha")
-                        .ok_or_else(|| Error::Config("pareto needs alpha".into()))?,
-                    xm: doc
-                        .get_f64("distribution.xm")
-                        .ok_or_else(|| Error::Config("pareto needs xm".into()))?,
-                },
-                "two_point" => DistConfig::TwoPoint {
-                    fast: doc
-                        .get_f64("distribution.fast")
-                        .ok_or_else(|| Error::Config("two_point needs fast".into()))?,
-                    slow: doc
-                        .get_f64("distribution.slow")
-                        .ok_or_else(|| Error::Config("two_point needs slow".into()))?,
-                    p_slow: doc.get_f64("distribution.p_slow").unwrap_or(0.5),
-                },
-                "lognormal" => DistConfig::LogNormal {
-                    mu: doc
-                        .get_f64("distribution.mu")
-                        .ok_or_else(|| Error::Config("lognormal needs mu".into()))?,
-                    sigma: doc
-                        .get_f64("distribution.sigma")
-                        .ok_or_else(|| Error::Config("lognormal needs sigma".into()))?,
-                    shift: doc.get_f64("distribution.shift").unwrap_or(0.0),
-                },
-                "gamma" => DistConfig::Gamma {
-                    shape: doc
-                        .get_f64("distribution.shape")
-                        .ok_or_else(|| Error::Config("gamma needs shape".into()))?,
-                    scale: doc
-                        .get_f64("distribution.scale")
-                        .ok_or_else(|| Error::Config("gamma needs scale".into()))?,
-                    shift: doc.get_f64("distribution.shift").unwrap_or(0.0),
-                },
-                "deterministic" => DistConfig::Deterministic {
-                    value: doc
-                        .get_f64("distribution.value")
-                        .ok_or_else(|| Error::Config("deterministic needs value".into()))?,
-                },
-                other => {
-                    return Err(Error::Config(format!("unknown distribution kind {other:?}")))
+        if let Some(d) = DistConfig::from_doc_section(doc, "distribution")? {
+            cfg.distribution = d;
+        }
+        cfg.drift = match (doc.get_i64("drift.at_iter"), DistConfig::from_doc_section(doc, "drift")?)
+        {
+            (None, None) => None,
+            (Some(at), Some(distribution)) => {
+                let at_iter = usize::try_from(at)
+                    .ok()
+                    .filter(|&v| v >= 1)
+                    .ok_or_else(|| Error::Config("drift.at_iter must be ≥ 1".into()))?;
+                Some(DriftPhase { at_iter, distribution })
+            }
+            (Some(_), None) => return Err(Error::Config("[drift] needs a kind".into())),
+            (None, Some(_)) => {
+                return Err(Error::Config(
+                    "[drift] declares a distribution but no at_iter".into(),
+                ))
+            }
+        };
+        if doc.get_bool("adaptive.enabled").unwrap_or(false) {
+            let d = AdaptiveConfig::default();
+            let get_usize = |key: &str, default: usize| -> Result<usize> {
+                match doc.get_i64(key) {
+                    None => Ok(default),
+                    Some(v) => usize::try_from(v)
+                        .map_err(|_| Error::Config(format!("{key} must be nonnegative"))),
                 }
             };
+            let settings = AdaptiveSettings {
+                window: get_usize("adaptive.window", d.window)?,
+                check_every: get_usize("adaptive.check_every", d.check_every)?,
+                cooldown: get_usize("adaptive.cooldown", d.cooldown)?,
+                min_samples: get_usize("adaptive.min_samples", d.min_samples)?,
+                drift_threshold: doc
+                    .get_f64("adaptive.drift_threshold")
+                    .unwrap_or(d.drift_threshold),
+                estimator: doc.get_str("adaptive.estimator").unwrap_or("mle").to_string(),
+                resolve: doc.get_str("adaptive.resolve").unwrap_or("closed_form").to_string(),
+            };
+            settings.build()?; // validate eagerly so load-time errors are loud
+            cfg.adaptive = Some(settings);
         }
         if cfg.workers == 0 || cfg.coords == 0 || cfg.samples == 0 {
             return Err(Error::Config("workers/coords/samples must be ≥ 1".into()));
@@ -179,6 +281,16 @@ impl ExperimentConfig {
     pub fn spec(&self) -> ProblemSpec {
         ProblemSpec::new(self.workers, self.coords, self.samples, self.cycles_per_coord)
     }
+
+    /// The straggler schedule: stationary, or two-phase when `[drift]`
+    /// is declared.
+    pub fn schedule(&self) -> StragglerSchedule {
+        let base = StragglerSchedule::stationary(self.distribution.build());
+        match &self.drift {
+            Some(p) => base.then(p.at_iter, p.distribution.build()),
+            None => base,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -191,6 +303,8 @@ mod tests {
         let spec = cfg.spec();
         assert_eq!(spec.n, 20);
         assert_eq!(spec.coords, 20_000);
+        assert!(cfg.drift.is_none());
+        assert!(cfg.adaptive.is_none());
     }
 
     #[test]
@@ -215,6 +329,79 @@ mod tests {
         assert_eq!(cfg.seed, 7);
         let d = cfg.distribution.build();
         assert!((d.mean() - 1050.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_drift_and_adaptive_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+            workers = 16
+            [distribution]
+            kind = "shifted_exp"
+            mu = 1e-2
+            [drift]
+            at_iter = 150
+            kind = "shifted_exp"
+            mu = 1e-3
+            t0 = 80
+            [adaptive]
+            enabled = true
+            window = 320
+            drift_threshold = 0.25
+            estimator = "moments"
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        let drift = cfg.drift.as_ref().expect("drift parsed");
+        assert_eq!(drift.at_iter, 150);
+        assert!((drift.distribution.build().mean() - 1080.0).abs() < 1e-9);
+        let ad = cfg.adaptive.as_ref().expect("adaptive parsed");
+        assert_eq!(ad.window, 320);
+        assert_eq!(ad.estimator, "moments");
+        let built = ad.build().unwrap();
+        assert!((built.drift_threshold - 0.25).abs() < 1e-12);
+        // Defaults fill unset knobs.
+        assert_eq!(built.check_every, AdaptiveConfig::default().check_every);
+        // The schedule shifts at the declared iteration.
+        let sched = cfg.schedule();
+        assert_eq!(sched.shift_points(), vec![150]);
+        assert!((sched.dist_at(0).mean() - 150.0).abs() < 1e-9);
+        assert!((sched.dist_at(150).mean() - 1080.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adaptive_disabled_by_default_and_bad_values_rejected() {
+        let doc = TomlDoc::parse("[adaptive]\nwindow = 100").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert!(cfg.adaptive.is_none(), "adaptive requires enabled = true");
+
+        let doc = TomlDoc::parse("[adaptive]\nenabled = true\nestimator = \"magic\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+
+        // Out-of-range numeric knobs fail at load time, not at spawn.
+        for bad in [
+            "[adaptive]\nenabled = true\nwindow = 0",
+            "[adaptive]\nenabled = true\nwindow = -1",
+            "[adaptive]\nenabled = true\nmin_samples = 1",
+            "[adaptive]\nenabled = true\ncheck_every = 0",
+            "[adaptive]\nenabled = true\ndrift_threshold = 0.0",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_doc(&doc).is_err(), "{bad}");
+        }
+
+        let doc = TomlDoc::parse("[drift]\nat_iter = 0\nkind = \"deterministic\"\nvalue = 1")
+            .unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+
+        let doc = TomlDoc::parse("[drift]\nat_iter = 10").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err(), "[drift] without kind");
+
+        // The inverse omission must be just as loud: a drift distribution
+        // without at_iter must not silently run stationary.
+        let doc = TomlDoc::parse("[drift]\nkind = \"deterministic\"\nvalue = 1").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err(), "[drift] without at_iter");
     }
 
     #[test]

@@ -7,5 +7,5 @@
 pub mod experiment;
 pub mod toml_lite;
 
-pub use experiment::ExperimentConfig;
+pub use experiment::{AdaptiveSettings, DistConfig, DriftPhase, ExperimentConfig};
 pub use toml_lite::{TomlValue, TomlDoc};

@@ -1,0 +1,319 @@
+//! The adaptive re-optimization policy: *when* to re-solve the block
+//! partition and *how*.
+//!
+//! The controller consumes every iteration's observed cycle times
+//! ([`AdaptiveController::observe`]) into a sliding-window
+//! shifted-exponential estimator ([`crate::distribution::fit`]). Every
+//! `check_every` iterations (outside a post-swap cooldown) it fits the
+//! window and measures the relative parameter drift against the
+//! parameters the live scheme was optimized for. Past the threshold it
+//! re-solves:
+//!
+//! * [`ResolveStrategy::ClosedFormFreq`] — Theorem 3's `x^(f)` closed
+//!   form on the *exact* order statistics of the fitted distribution.
+//!   O(N²) quadratures, microseconds at paper scale; the default.
+//! * [`ResolveStrategy::Subgradient`] — the full stochastic projected
+//!   subgradient method, warm-started from the live partition so a mild
+//!   drift converges in a fraction of the cold-start iterations.
+//!
+//! The caller (threaded trainer or the multi-iteration simulator)
+//! installs the returned partition as a new **scheme epoch**.
+
+use crate::distribution::fit::{FitMethod, OnlineEstimator, ShiftedExpEstimate};
+use crate::optimizer::blocks::BlockPartition;
+use crate::optimizer::closed_form;
+use crate::optimizer::rounding::round_to_blocks;
+use crate::optimizer::runtime_model::ProblemSpec;
+use crate::optimizer::subgradient::{self, SubgradientOptions};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// How a triggered re-solve computes the new partition.
+#[derive(Debug, Clone)]
+pub enum ResolveStrategy {
+    /// Theorem 3 closed form `x^(f)` for the fitted parameters (cheap).
+    ClosedFormFreq,
+    /// Stochastic projected subgradient, warm-started from the live
+    /// partition (heavier, slightly better optima).
+    Subgradient { iters: usize, playoff_trials: usize },
+}
+
+/// Tuning knobs for the adaptive engine.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// Sliding-window size in *observations* (N per iteration).
+    pub window: usize,
+    /// Poll the drift detector every this many iterations.
+    pub check_every: usize,
+    /// Minimum iterations between scheme swaps.
+    pub cooldown: usize,
+    /// Minimum observations before the first fit is trusted.
+    pub min_samples: usize,
+    /// Relative drift (max over mean and scale) that triggers a re-solve.
+    pub drift_threshold: f64,
+    /// Estimator family.
+    pub method: FitMethod,
+    /// Re-solve strategy.
+    pub strategy: ResolveStrategy,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self {
+            window: 512,
+            check_every: 10,
+            cooldown: 20,
+            min_samples: 64,
+            drift_threshold: 0.2,
+            method: FitMethod::Mle,
+            strategy: ResolveStrategy::ClosedFormFreq,
+        }
+    }
+}
+
+/// A triggered re-plan: the new partition plus the evidence behind it.
+#[derive(Debug, Clone)]
+pub struct ReplanDecision {
+    pub blocks: BlockPartition,
+    /// The fitted parameters the new partition is optimal for.
+    pub estimate: ShiftedExpEstimate,
+    /// The relative drift that tripped the threshold.
+    pub drift: f64,
+}
+
+/// Online drift detector + re-solver.
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    window: OnlineEstimator,
+    /// Parameters the live scheme was optimized for (None until known —
+    /// with no reference, the first trustworthy fit triggers a re-plan).
+    reference: Option<ShiftedExpEstimate>,
+    last_swap: Option<usize>,
+    /// Number of re-plans issued so far.
+    pub swaps: usize,
+}
+
+impl AdaptiveController {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        // Defensive floors: the estimator needs at least two samples to
+        // fit, whatever the config layer let through.
+        let mut cfg = cfg;
+        cfg.window = cfg.window.max(2);
+        cfg.min_samples = cfg.min_samples.max(2);
+        let window = OnlineEstimator::new(cfg.window, cfg.method);
+        Self { cfg, window, reference: None, last_swap: None, swaps: 0 }
+    }
+
+    /// Seed the reference with the parameters the initial scheme was
+    /// optimized for (so a stationary run never re-plans spuriously).
+    pub fn with_reference(cfg: AdaptiveConfig, mu: f64, t0: f64) -> Self {
+        let mut c = Self::new(cfg);
+        c.reference = Some(ShiftedExpEstimate { mu, t0, samples: 0 });
+        c
+    }
+
+    /// Feed one iteration's observed cycle times.
+    pub fn observe(&mut self, times: &[f64]) {
+        self.window.extend(times);
+    }
+
+    /// Observations currently in the window.
+    pub fn observations(&self) -> usize {
+        self.window.len()
+    }
+
+    /// The current windowed fit, if the window supports one.
+    pub fn current_fit(&self) -> Option<ShiftedExpEstimate> {
+        self.window.fit()
+    }
+
+    /// Relative drift of `fit` against the live reference
+    /// (infinite when no reference exists yet).
+    pub fn drift(&self, fit: &ShiftedExpEstimate) -> f64 {
+        match &self.reference {
+            Some(r) => fit.drift_from(r),
+            None => f64::INFINITY,
+        }
+    }
+
+    /// Poll the policy at iteration `iter`. Returns a re-plan when the
+    /// schedule allows a check, the window holds enough evidence, and the
+    /// fitted parameters drifted past the threshold. `warm_x` is the live
+    /// (continuous) partition used to warm-start the subgradient path.
+    pub fn maybe_replan(
+        &mut self,
+        iter: usize,
+        spec: &ProblemSpec,
+        warm_x: &[f64],
+        rng: &mut Rng,
+    ) -> Result<Option<ReplanDecision>> {
+        if iter == 0 || self.cfg.check_every == 0 || iter % self.cfg.check_every != 0 {
+            return Ok(None);
+        }
+        if let Some(last) = self.last_swap {
+            if iter - last < self.cfg.cooldown {
+                return Ok(None);
+            }
+        }
+        if self.window.len() < self.cfg.min_samples {
+            return Ok(None);
+        }
+        let Some(fit) = self.window.fit() else {
+            return Ok(None);
+        };
+        let drift = self.drift(&fit);
+        if drift <= self.cfg.drift_threshold {
+            return Ok(None);
+        }
+        let dist = fit.to_distribution();
+        // The new scheme must cover exactly the coordinates the live one
+        // does — the deployed model's dim may legitimately differ from
+        // `spec.coords` (the trainer only warns on that mismatch), so the
+        // rounding target comes from the live partition, not the spec.
+        let target = warm_x.iter().sum::<f64>().round().max(1.0) as usize;
+        let blocks = match &self.cfg.strategy {
+            ResolveStrategy::ClosedFormFreq => closed_form::x_freq_blocks(spec, &dist, target)?,
+            ResolveStrategy::Subgradient { iters, playoff_trials } => {
+                let opts = SubgradientOptions {
+                    iters: *iters,
+                    playoff_trials: *playoff_trials,
+                    ..Default::default()
+                };
+                let mut x = subgradient::solve(spec, &dist, Some(warm_x.to_vec()), &opts, rng)?.x;
+                if target != spec.coords {
+                    let scale = target as f64 / spec.coords as f64;
+                    for v in x.iter_mut() {
+                        *v *= scale;
+                    }
+                }
+                round_to_blocks(&x, target)
+            }
+        };
+        self.reference = Some(fit.clone());
+        self.last_swap = Some(iter);
+        self.swaps += 1;
+        Ok(Some(ReplanDecision { blocks, estimate: fit, drift }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::shifted_exp::ShiftedExponential;
+    use crate::distribution::CycleTimeDistribution;
+
+    fn observe_from(ctrl: &mut AdaptiveController, d: &ShiftedExponential, iters: usize, n: usize, rng: &mut Rng) {
+        for _ in 0..iters {
+            let t = d.sample_vec(n, rng);
+            ctrl.observe(&t);
+        }
+    }
+
+    #[test]
+    fn stationary_run_never_replans() {
+        let spec = ProblemSpec::paper_default(20, 20_000);
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let mut ctrl = AdaptiveController::with_reference(AdaptiveConfig::default(), d.mu, d.t0);
+        let mut rng = Rng::new(5);
+        observe_from(&mut ctrl, &d, 40, spec.n, &mut rng);
+        let warm = vec![spec.coords as f64 / spec.n as f64; spec.n];
+        for iter in [10usize, 20, 30, 40] {
+            let plan = ctrl.maybe_replan(iter, &spec, &warm, &mut rng).unwrap();
+            assert!(plan.is_none(), "spurious re-plan at iter {iter}");
+        }
+        assert_eq!(ctrl.swaps, 0);
+    }
+
+    #[test]
+    fn large_drift_triggers_one_replan_then_cooldown() {
+        let spec = ProblemSpec::paper_default(20, 20_000);
+        let before = ShiftedExponential::new(1e-2, 50.0); // mean 150
+        let after = ShiftedExponential::new(1e-3, 50.0); // mean 1050
+        let mut ctrl =
+            AdaptiveController::with_reference(AdaptiveConfig::default(), before.mu, before.t0);
+        let mut rng = Rng::new(7);
+        observe_from(&mut ctrl, &after, 40, spec.n, &mut rng);
+        let warm = vec![spec.coords as f64 / spec.n as f64; spec.n];
+        let plan = ctrl
+            .maybe_replan(10, &spec, &warm, &mut rng)
+            .unwrap()
+            .expect("6x mean drift must trigger a re-plan");
+        assert!(plan.drift > 1.0, "drift={}", plan.drift);
+        assert_eq!(plan.blocks.total(), spec.coords);
+        assert_eq!(plan.blocks.n(), spec.n);
+        assert!((plan.estimate.mean() - after.mean()).abs() / after.mean() < 0.2);
+        assert_eq!(ctrl.swaps, 1);
+        // Inside the cooldown window nothing fires, and once the fit
+        // matches the new reference nothing fires either.
+        assert!(ctrl.maybe_replan(20, &spec, &warm, &mut rng).unwrap().is_none());
+        observe_from(&mut ctrl, &after, 40, spec.n, &mut rng);
+        assert!(ctrl.maybe_replan(50, &spec, &warm, &mut rng).unwrap().is_none());
+        assert_eq!(ctrl.swaps, 1);
+    }
+
+    #[test]
+    fn off_schedule_and_underfilled_windows_do_not_fire() {
+        let spec = ProblemSpec::paper_default(10, 1_000);
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let mut ctrl = AdaptiveController::new(AdaptiveConfig::default());
+        let mut rng = Rng::new(9);
+        let warm = vec![100.0; 10];
+        // iter 0 and off-multiples never check.
+        assert!(ctrl.maybe_replan(0, &spec, &warm, &mut rng).unwrap().is_none());
+        assert!(ctrl.maybe_replan(7, &spec, &warm, &mut rng).unwrap().is_none());
+        // On-schedule but with an empty window: no evidence, no plan.
+        assert!(ctrl.maybe_replan(10, &spec, &warm, &mut rng).unwrap().is_none());
+        // With no reference, the first trustworthy fit triggers.
+        observe_from(&mut ctrl, &d, 20, spec.n, &mut rng);
+        let plan = ctrl.maybe_replan(20, &spec, &warm, &mut rng).unwrap();
+        assert!(plan.is_some(), "no-reference controller must adopt the first fit");
+    }
+
+    #[test]
+    fn replan_targets_the_live_partition_not_the_spec() {
+        // The deployed model's dim (= sum of the live partition) differs
+        // from spec.coords — the trainer only warns on that mismatch, so
+        // a re-solved scheme must cover the model's dim, not the spec's.
+        let spec = ProblemSpec::paper_default(10, 2_000);
+        let before = ShiftedExponential::new(1e-2, 50.0);
+        let after = ShiftedExponential::new(1e-3, 50.0);
+        let mut ctrl =
+            AdaptiveController::with_reference(AdaptiveConfig::default(), before.mu, before.t0);
+        let mut rng = Rng::new(13);
+        observe_from(&mut ctrl, &after, 20, spec.n, &mut rng);
+        let warm = vec![173.1; 10]; // live model dim = 1731
+        let plan = ctrl
+            .maybe_replan(10, &spec, &warm, &mut rng)
+            .unwrap()
+            .expect("drift fires");
+        assert_eq!(plan.blocks.total(), 1731);
+    }
+
+    #[test]
+    fn tiny_window_configs_are_clamped_not_panicking() {
+        let cfg = AdaptiveConfig { window: 0, min_samples: 0, ..Default::default() };
+        let ctrl = AdaptiveController::new(cfg);
+        assert_eq!(ctrl.observations(), 0);
+    }
+
+    #[test]
+    fn subgradient_strategy_produces_a_feasible_partition() {
+        let spec = ProblemSpec::paper_default(8, 400);
+        let before = ShiftedExponential::new(1e-2, 50.0);
+        let after = ShiftedExponential::new(1e-3, 50.0);
+        let cfg = AdaptiveConfig {
+            strategy: ResolveStrategy::Subgradient { iters: 300, playoff_trials: 200 },
+            ..Default::default()
+        };
+        let mut ctrl = AdaptiveController::with_reference(cfg, before.mu, before.t0);
+        let mut rng = Rng::new(11);
+        observe_from(&mut ctrl, &after, 20, spec.n, &mut rng);
+        let warm = vec![50.0; 8];
+        let plan = ctrl
+            .maybe_replan(10, &spec, &warm, &mut rng)
+            .unwrap()
+            .expect("drift must trigger");
+        assert_eq!(plan.blocks.total(), 400);
+        assert_eq!(plan.blocks.n(), 8);
+    }
+}

@@ -1,14 +1,28 @@
 //! Message types exchanged between master and workers
 //! (std `mpsc`; no async runtime is available offline, and the message
 //! rates here — `N × blocks` per iteration — don't need one).
+//!
+//! The coding scheme travels *with* each compute task as an
+//! epoch-versioned `Arc`, so the master can hot-swap a re-optimized
+//! scheme between iterations without respawning worker threads. Every
+//! coded block is stamped with the epoch it was encoded under; the master
+//! drops contributions from superseded epochs exactly like
+//! stale-iteration messages (mixing codes across epochs would corrupt the
+//! decoded gradient).
 
 use std::sync::Arc;
+
+use crate::coding::scheme::CodingScheme;
 
 /// Master → worker.
 pub enum WorkerTask {
     /// Compute and stream all coded blocks for one GD iteration.
     Compute {
         iter: usize,
+        /// Scheme epoch this task was issued under (monotone).
+        epoch: usize,
+        /// The coding scheme of that epoch.
+        scheme: Arc<CodingScheme>,
         /// Current model parameters (shared, read-only).
         theta: Arc<Vec<f32>>,
         /// This worker's sampled CPU cycle time `T_n` for the iteration
@@ -22,6 +36,9 @@ pub enum WorkerTask {
 /// Worker → master: one coded block.
 pub struct BlockContribution {
     pub iter: usize,
+    /// Scheme epoch the block was **encoded** under. The master only
+    /// mixes contributions of its current epoch into a decode.
+    pub epoch: usize,
     pub worker: usize,
     /// Index into the scheme's non-empty block ranges.
     pub block_idx: usize,
@@ -35,7 +52,11 @@ pub struct BlockContribution {
 /// Worker → master control-plane event.
 pub enum WorkerEvent {
     Block(BlockContribution),
-    /// The worker failed (executor error, poisoned state…); carries a
-    /// description. The master treats it as a permanent straggler.
-    Failed { worker: usize, iter: usize, reason: String },
+    /// The worker failed and will contribute nothing this iteration;
+    /// carries a description. `fatal` distinguishes a dead worker (its
+    /// thread exited — executor init failure) from a transient
+    /// per-iteration error (the thread keeps serving tasks): only fatal
+    /// failures remove the worker from future iterations' quorum
+    /// accounting.
+    Failed { worker: usize, iter: usize, reason: String, fatal: bool },
 }

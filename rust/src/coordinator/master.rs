@@ -1,6 +1,11 @@
 //! Master-side iteration engine: broadcast, collect, decode-on-arrival.
+//!
+//! The master owns the **current scheme epoch**: [`Master::install_scheme`]
+//! swaps in a re-optimized [`CodingScheme`] between iterations, and
+//! [`Master::collect`] rejects contributions stamped with a superseded
+//! epoch exactly like stale-iteration messages — coded blocks from two
+//! different codes must never mix into one decode.
 
-use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -18,7 +23,13 @@ pub struct IterOutcome {
     pub decode_ns: u64,
     /// Contributions that arrived after their block had decoded.
     pub late_contributions: usize,
-    /// Workers that reported failure this iteration.
+    /// Contributions encoded under a superseded scheme epoch (dropped
+    /// before they could touch a decode).
+    pub stale_epoch: usize,
+    /// Workers that reported a **fatal** failure this iteration (their
+    /// thread exited; exclude them from future quorum accounting).
+    /// Transient per-iteration failures only affect the current
+    /// iteration's satisfiability bookkeeping.
     pub failed: Vec<usize>,
 }
 
@@ -26,6 +37,7 @@ pub struct IterOutcome {
 /// iterations (survivor patterns repeat, so cached solves dominate).
 pub struct Master {
     scheme: Arc<CodingScheme>,
+    epoch: usize,
     dim: usize,
     cache: DecodeCache,
     /// Receive timeout before declaring the iteration stalled.
@@ -40,14 +52,40 @@ struct BlockState {
 
 impl Master {
     pub fn new(scheme: Arc<CodingScheme>, dim: usize) -> Self {
-        Self { scheme, dim, cache: DecodeCache::new(4096), timeout: Duration::from_secs(30) }
+        Self {
+            scheme,
+            epoch: 0,
+            dim,
+            cache: DecodeCache::new(4096),
+            timeout: Duration::from_secs(30),
+        }
     }
 
     pub fn cache_stats(&self) -> (u64, u64) {
         (self.cache.hits, self.cache.misses)
     }
 
-    /// Broadcast one iteration's tasks.
+    /// The scheme epoch tasks are currently issued under.
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// The currently installed scheme.
+    pub fn scheme(&self) -> &Arc<CodingScheme> {
+        &self.scheme
+    }
+
+    /// Install a new scheme as epoch `epoch`. Decode vectors are specific
+    /// to one code's coefficients (the cache keys only by `(s, survivor
+    /// set)`), so the cache map is reset; hit/miss counters survive.
+    pub fn install_scheme(&mut self, scheme: Arc<CodingScheme>, epoch: usize) {
+        assert!(epoch > self.epoch, "scheme epochs must be monotone");
+        self.scheme = scheme;
+        self.epoch = epoch;
+        self.cache.reset();
+    }
+
+    /// Broadcast one iteration's tasks under the current scheme epoch.
     pub fn broadcast(
         &self,
         iter: usize,
@@ -60,6 +98,8 @@ impl Master {
             // absorbs it like any straggler.
             let _ = tx.send(WorkerTask::Compute {
                 iter,
+                epoch: self.epoch,
+                scheme: self.scheme.clone(),
                 theta: theta.clone(),
                 cycle_time: times[w],
             });
@@ -70,15 +110,23 @@ impl Master {
     ///
     /// Faithful to §III: block `b` (redundancy `s`) decodes using the
     /// first `N − s` contributions to arrive; later ones are counted as
-    /// `late_contributions` and dropped.
+    /// `late_contributions` and dropped. Contributions stamped with a
+    /// superseded scheme epoch are dropped as `stale_epoch` — they are
+    /// coded under different coefficients and would corrupt the decode.
+    ///
+    /// `live` flags which workers are up at iteration start (dead /
+    /// previously failed workers excluded); it seeds the per-(worker,
+    /// block) outstanding-message tracking used to detect unrecoverable
+    /// blocks without waiting for the timeout.
     pub fn collect(
         &mut self,
         iter: usize,
         events: &Receiver<WorkerEvent>,
-        live_workers: usize,
+        live: &[bool],
     ) -> Result<IterOutcome> {
         let ranges = self.scheme.ranges();
         let n = self.scheme.n();
+        debug_assert_eq!(live.len(), n);
         let mut blocks: Vec<BlockState> = ranges
             .iter()
             .map(|r| BlockState { need: n - r.s, arrivals: Vec::new(), decoded: false })
@@ -86,13 +134,20 @@ impl Master {
         let mut gradient = vec![0.0f64; self.dim];
         let mut decoded_count = 0usize;
         let mut late = 0usize;
+        let mut stale_epoch = 0usize;
         let mut decode_ns = 0u64;
         let mut failed: Vec<usize> = Vec::new();
-        // Messages still expected from live workers (used to detect
-        // unrecoverable stalls without waiting for the timeout).
-        let mut outstanding: HashMap<usize, usize> =
-            (0..n).map(|w| (w, ranges.len())).collect();
-        let mut live = live_workers;
+        // Per-(worker, block) delivery state: `sent[w][b]` is true once
+        // worker `w`'s contribution to block `b` was received this
+        // iteration. Together with `alive` this tracks exactly which
+        // messages are still outstanding, so satisfiability checks count
+        // each worker only toward blocks it can actually still deliver.
+        let mut sent = vec![vec![false; ranges.len()]; n];
+        let mut alive: Vec<bool> = live.to_vec();
+
+        // Dead workers are known up front: fail fast when a block can
+        // never reach quorum instead of waiting out the stall timeout.
+        self.check_still_satisfiable(&blocks, &sent, &alive, iter)?;
 
         while decoded_count < blocks.len() {
             let ev = match events.recv_timeout(self.timeout) {
@@ -110,18 +165,29 @@ impl Master {
                 }
             };
             match ev {
-                WorkerEvent::Failed { worker, iter: ev_iter, reason } => {
+                WorkerEvent::Failed { worker, iter: ev_iter, reason, fatal } => {
                     if ev_iter == iter {
-                        log::warn!("worker {worker} failed in iter {iter}: {reason}");
-                        failed.push(worker);
-                        outstanding.remove(&worker);
-                        live = live.saturating_sub(1);
-                        self.check_still_satisfiable(&blocks, &outstanding, iter)?;
+                        crate::log_warn!(
+                            "worker {worker} failed in iter {iter} (fatal={fatal}): {reason}"
+                        );
+                        if fatal {
+                            failed.push(worker);
+                        }
+                        // Either way the worker contributes nothing more
+                        // *this* iteration.
+                        alive[worker] = false;
+                        self.check_still_satisfiable(&blocks, &sent, &alive, iter)?;
                     }
                 }
                 WorkerEvent::Block(c) => {
                     if c.iter != iter {
                         continue; // stale from a previous iteration
+                    }
+                    if c.epoch != self.epoch {
+                        // Encoded under a superseded scheme: its block
+                        // index and coefficients belong to another code.
+                        stale_epoch += 1;
+                        continue;
                     }
                     self.on_block(
                         c,
@@ -130,13 +196,18 @@ impl Master {
                         &mut decoded_count,
                         &mut late,
                         &mut decode_ns,
-                        &mut outstanding,
+                        &mut sent,
                     )?;
                 }
             }
-            let _ = live;
         }
-        Ok(IterOutcome { gradient, decode_ns, late_contributions: late, failed })
+        Ok(IterOutcome {
+            gradient,
+            decode_ns,
+            late_contributions: late,
+            stale_epoch,
+            failed,
+        })
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -148,14 +219,9 @@ impl Master {
         decoded_count: &mut usize,
         late: &mut usize,
         decode_ns: &mut u64,
-        outstanding: &mut HashMap<usize, usize>,
+        sent: &mut [Vec<bool>],
     ) -> Result<()> {
-        if let Some(left) = outstanding.get_mut(&c.worker) {
-            *left -= 1;
-            if *left == 0 {
-                outstanding.remove(&c.worker);
-            }
-        }
+        sent[c.worker][c.block_idx] = true;
         let ranges = self.scheme.ranges();
         let b = &mut blocks[c.block_idx];
         if b.decoded {
@@ -192,24 +258,28 @@ impl Master {
     }
 
     /// After a failure, verify every undecoded block can still reach its
-    /// quorum from arrivals + outstanding messages.
+    /// quorum. A worker counts toward a block only if it is alive *and*
+    /// has not yet delivered that block — tracking outstanding status per
+    /// (worker, block) rather than per worker, so an unrecoverable block
+    /// is never declared recoverable just because some worker still owes
+    /// messages to *other* blocks.
     fn check_still_satisfiable(
         &self,
         blocks: &[BlockState],
-        outstanding: &HashMap<usize, usize>,
+        sent: &[Vec<bool>],
+        alive: &[bool],
         iter: usize,
     ) -> Result<()> {
         for (idx, b) in blocks.iter().enumerate() {
             if b.decoded {
                 continue;
             }
-            // Workers that can still deliver this block: have not failed
-            // and have not yet sent it.
-            let possible = b.arrivals.len()
-                + outstanding
-                    .values()
-                    .filter(|&&left| left > 0)
-                    .count();
+            let pending = alive
+                .iter()
+                .zip(sent.iter())
+                .filter(|&(a, s)| *a && !s[idx])
+                .count();
+            let possible = b.arrivals.len() + pending;
             if possible < b.need {
                 return Err(Error::Runtime(format!(
                     "iteration {iter}: block {idx} unrecoverable \
@@ -221,5 +291,247 @@ impl Master {
             }
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::blocks::BlockPartition;
+    use crate::util::rng::Rng;
+    use std::sync::mpsc;
+
+    /// Build the full set of coded block events worker `w` would emit for
+    /// one iteration under `scheme`, from per-subset global gradients
+    /// (`subset_grads[k]` is subset `k`'s full-dimension gradient).
+    fn contributions(
+        scheme: &CodingScheme,
+        iter: usize,
+        epoch: usize,
+        subset_grads: &[Vec<f64>],
+        worker: usize,
+    ) -> Vec<WorkerEvent> {
+        let held: Vec<Vec<f64>> = scheme
+            .worker_subsets(worker)
+            .iter()
+            .map(|&k| subset_grads[k].clone())
+            .collect();
+        scheme
+            .ranges()
+            .iter()
+            .enumerate()
+            .map(|(block_idx, r)| {
+                WorkerEvent::Block(BlockContribution {
+                    iter,
+                    epoch,
+                    worker,
+                    block_idx,
+                    virtual_time: 0.0,
+                    coded: scheme.encode_block_range(worker, r, &held),
+                })
+            })
+            .collect()
+    }
+
+    fn random_subset_grads(n: usize, dim: usize, rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let grads: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..dim).map(|_| rng.normal()).collect()).collect();
+        let want: Vec<f64> =
+            (0..dim).map(|d| grads.iter().map(|g| g[d]).sum()).collect();
+        (grads, want)
+    }
+
+    #[test]
+    fn stale_epoch_contributions_never_mix_into_a_decode() {
+        let (n, dim) = (4usize, 8usize);
+        let mut rng = Rng::new(71);
+        // Two schemes over the same dimensions but different random codes
+        // (and different partitions): mixing their codewords would
+        // corrupt the decode.
+        let scheme_a =
+            Arc::new(CodingScheme::new(BlockPartition::new(vec![0, 8, 0, 0]), &mut rng).unwrap());
+        let scheme_b =
+            Arc::new(CodingScheme::new(BlockPartition::new(vec![0, 4, 4, 0]), &mut rng).unwrap());
+        let (subset_grads, want) = random_subset_grads(n, dim, &mut rng);
+
+        let mut master = Master::new(scheme_a.clone(), dim);
+        master.install_scheme(scheme_b.clone(), 1);
+        assert_eq!(master.epoch(), 1);
+
+        let (tx, rx) = mpsc::channel();
+        // A contribution encoded under the superseded epoch-0 scheme
+        // arrives first, same iteration number.
+        for ev in contributions(&scheme_a, 0, 0, &subset_grads, 0) {
+            tx.send(ev).unwrap();
+        }
+        // Then the full epoch-1 traffic.
+        for w in 0..n {
+            for ev in contributions(&scheme_b, 0, 1, &subset_grads, w) {
+                tx.send(ev).unwrap();
+            }
+        }
+        let live = vec![true; n];
+        let out = master.collect(0, &rx, &live).unwrap();
+        assert_eq!(out.stale_epoch, 1, "the epoch-0 codeword must be dropped");
+        for d in 0..dim {
+            assert!(
+                (out.gradient[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()),
+                "coordinate {d}: got {} want {}",
+                out.gradient[d],
+                want[d]
+            );
+        }
+    }
+
+    #[test]
+    fn current_epoch_traffic_decodes_exactly_after_a_swap() {
+        // Same partition before and after the swap — only the code's
+        // random coefficients change. The decode cache must not serve
+        // epoch-0 decode vectors to epoch-1 survivor sets.
+        let (n, dim) = (5usize, 10usize);
+        let mut rng = Rng::new(73);
+        let part = BlockPartition::new(vec![0, 0, 10, 0, 0]); // s=2, need 3
+        let scheme_a = Arc::new(CodingScheme::new(part.clone(), &mut rng).unwrap());
+        let scheme_b = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, want) = random_subset_grads(n, dim, &mut rng);
+
+        let mut master = Master::new(scheme_a.clone(), dim);
+        let live = vec![true; n];
+
+        // Epoch 0 round.
+        let (tx, rx) = mpsc::channel();
+        for w in 0..n {
+            for ev in contributions(&scheme_a, 0, 0, &subset_grads, w) {
+                tx.send(ev).unwrap();
+            }
+        }
+        let out0 = master.collect(0, &rx, &live).unwrap();
+        // Epoch 1 round with the new code, same survivor pattern.
+        master.install_scheme(scheme_b.clone(), 1);
+        let (tx, rx) = mpsc::channel();
+        for w in 0..n {
+            for ev in contributions(&scheme_b, 1, 1, &subset_grads, w) {
+                tx.send(ev).unwrap();
+            }
+        }
+        let out1 = master.collect(1, &rx, &live).unwrap();
+        for d in 0..dim {
+            assert!((out0.gradient[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()));
+            assert!(
+                (out1.gradient[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()),
+                "epoch-1 decode used a stale cached vector: got {} want {}",
+                out1.gradient[d],
+                want[d]
+            );
+        }
+    }
+
+    #[test]
+    fn unrecoverable_block_detected_per_worker_block() {
+        // Regression for the satisfiability bug: block 0 (s=0) needs all
+        // three workers. Workers 0 and 1 have already delivered it when
+        // worker 2 fails — block 0 is unrecoverable even though worker 0
+        // still owes a message to *block 1*. The old per-worker
+        // outstanding count declared it recoverable and stalled into the
+        // timeout.
+        let (n, dim) = (3usize, 3usize);
+        let mut rng = Rng::new(79);
+        let part = BlockPartition::new(vec![2, 1, 0]); // block0 s=0 need 3, block1 s=1 need 2
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, _) = random_subset_grads(n, dim, &mut rng);
+
+        let mut master = Master::new(scheme.clone(), dim);
+        master.timeout = Duration::from_secs(30); // the fix must not wait for this
+
+        let (tx, rx) = mpsc::channel();
+        // Worker 0 delivers only block 0.
+        let mut evs0 = contributions(&scheme, 0, 0, &subset_grads, 0).into_iter();
+        tx.send(evs0.next().unwrap()).unwrap();
+        // Worker 1 delivers both blocks.
+        for ev in contributions(&scheme, 0, 0, &subset_grads, 1) {
+            tx.send(ev).unwrap();
+        }
+        // Worker 2 fails having delivered nothing.
+        tx.send(WorkerEvent::Failed { worker: 2, iter: 0, reason: "boom".into(), fatal: true })
+            .unwrap();
+
+        let start = Instant::now();
+        let live = vec![true; n];
+        let err = master.collect(0, &rx, &live).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unrecoverable"), "{msg}");
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "unrecoverability must be detected without waiting out the stall timeout"
+        );
+    }
+
+    #[test]
+    fn satisfiable_despite_failure_keeps_collecting() {
+        // Block tolerates one straggler: a failure after two deliveries
+        // must NOT error, and the decode completes from the other three.
+        let (n, dim) = (4usize, 4usize);
+        let mut rng = Rng::new(83);
+        let part = BlockPartition::new(vec![0, 4, 0, 0]); // s=1, need 3
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, want) = random_subset_grads(n, dim, &mut rng);
+
+        let mut master = Master::new(scheme.clone(), dim);
+        let (tx, rx) = mpsc::channel();
+        for ev in contributions(&scheme, 0, 0, &subset_grads, 0) {
+            tx.send(ev).unwrap();
+        }
+        tx.send(WorkerEvent::Failed {
+            worker: 3,
+            iter: 0,
+            reason: "slow death".into(),
+            fatal: true,
+        })
+        .unwrap();
+        for w in 1..3 {
+            for ev in contributions(&scheme, 0, 0, &subset_grads, w) {
+                tx.send(ev).unwrap();
+            }
+        }
+        let live = vec![true; n];
+        let out = master.collect(0, &rx, &live).unwrap();
+        assert_eq!(out.failed, vec![3]);
+        for d in 0..dim {
+            assert!((out.gradient[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()));
+        }
+    }
+
+    #[test]
+    fn transient_failure_counts_this_iteration_but_not_the_worker() {
+        // A grad-shards error is per-iteration: the worker contributes
+        // nothing *now* (satisfiability must account for that), but it is
+        // not reported in `failed`, so the trainer keeps it in the quorum
+        // accounting of future iterations — where it may well recover.
+        let (n, dim) = (4usize, 4usize);
+        let mut rng = Rng::new(89);
+        let part = BlockPartition::new(vec![0, 4, 0, 0]); // s=1, need 3
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, want) = random_subset_grads(n, dim, &mut rng);
+
+        let mut master = Master::new(scheme.clone(), dim);
+        let (tx, rx) = mpsc::channel();
+        tx.send(WorkerEvent::Failed {
+            worker: 2,
+            iter: 0,
+            reason: "flaky executor".into(),
+            fatal: false,
+        })
+        .unwrap();
+        for w in [0usize, 1, 3] {
+            for ev in contributions(&scheme, 0, 0, &subset_grads, w) {
+                tx.send(ev).unwrap();
+            }
+        }
+        let live = vec![true; n];
+        let out = master.collect(0, &rx, &live).unwrap();
+        assert!(out.failed.is_empty(), "transient failures must not be permanent");
+        for d in 0..dim {
+            assert!((out.gradient[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()));
+        }
     }
 }

@@ -1,5 +1,7 @@
 //! Coordinator metrics: per-iteration accounting plus the training
-//! report the examples and the e2e bench print.
+//! report the examples and the e2e bench print. Epoch-aware: every
+//! iteration records the scheme epoch it ran under, and the report keeps
+//! the full [`SchemeEpoch`] install history.
 
 use crate::util::stats::RunningStats;
 
@@ -7,6 +9,8 @@ use crate::util::stats::RunningStats;
 #[derive(Debug, Clone)]
 pub struct IterMetrics {
     pub iter: usize,
+    /// Scheme epoch this iteration ran under.
+    pub epoch: usize,
     /// Eq. (2) overall runtime under the sampled `T` (model time units).
     pub virtual_runtime: f64,
     /// Wall-clock nanoseconds spent in the iteration (compute + decode).
@@ -18,8 +22,28 @@ pub struct IterMetrics {
     /// Coded contributions that arrived after their block was already
     /// decoded (pure overhead under the partial-straggler model).
     pub late_contributions: usize,
+    /// Contributions encoded under a superseded scheme epoch, dropped
+    /// before they could mix into a decode.
+    pub stale_epoch_contributions: usize,
     /// Gradient L2 norm (diagnostic).
     pub grad_norm: f64,
+}
+
+/// One installed coding scheme (the trainer hot-swaps these mid-run).
+#[derive(Debug, Clone)]
+pub struct SchemeEpoch {
+    pub epoch: usize,
+    /// Iteration before which the scheme was installed (0 for the
+    /// initial scheme).
+    pub installed_at_iter: usize,
+    /// The partition's block sizes `x_0..x_{N-1}`.
+    pub block_sizes: Vec<usize>,
+    /// Estimated straggler parameters that triggered the re-solve
+    /// (None for the initial scheme / manual installs).
+    pub estimated_mu: Option<f64>,
+    pub estimated_t0: Option<f64>,
+    /// Relative parameter drift measured at install time.
+    pub drift: f64,
 }
 
 /// Full training run report.
@@ -28,6 +52,8 @@ pub struct TrainReport {
     pub iters: Vec<IterMetrics>,
     /// `(iteration, loss)` at each evaluation point.
     pub loss_curve: Vec<(usize, f32)>,
+    /// Every scheme epoch installed during the run, in order.
+    pub scheme_epochs: Vec<SchemeEpoch>,
     /// Decode-vector cache statistics.
     pub decode_cache_hits: u64,
     pub decode_cache_misses: u64,
@@ -40,10 +66,23 @@ impl TrainReport {
         self.iters.len()
     }
 
+    /// Number of scheme epochs the run used (≥ 1 once training started).
+    pub fn epochs(&self) -> usize {
+        self.scheme_epochs.len().max(1)
+    }
+
     pub fn virtual_runtime_stats(&self) -> RunningStats {
+        self.virtual_runtime_stats_in(0, usize::MAX)
+    }
+
+    /// Virtual-runtime stats over iterations in `[from_iter, to_iter)` —
+    /// the before/after-shift comparison the adaptive experiments report.
+    pub fn virtual_runtime_stats_in(&self, from_iter: usize, to_iter: usize) -> RunningStats {
         let mut s = RunningStats::new();
         for m in &self.iters {
-            s.push(m.virtual_runtime);
+            if m.iter >= from_iter && m.iter < to_iter {
+                s.push(m.virtual_runtime);
+            }
         }
         s
     }
@@ -64,6 +103,11 @@ impl TrainReport {
         s
     }
 
+    /// Total stale-epoch contributions dropped across the run.
+    pub fn stale_epoch_total(&self) -> usize {
+        self.iters.iter().map(|m| m.stale_epoch_contributions).sum()
+    }
+
     pub fn final_loss(&self) -> Option<f32> {
         self.loss_curve.last().map(|&(_, l)| l)
     }
@@ -81,11 +125,30 @@ impl TrainReport {
         out
     }
 
+    /// Render the scheme-epoch history as a compact text block.
+    pub fn render_epochs(&self) -> String {
+        let mut out = String::from("epoch,installed_at,levels_used,est_mu,est_t0,drift\n");
+        for e in &self.scheme_epochs {
+            let levels = e.block_sizes.iter().filter(|&&c| c > 0).count();
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.3}\n",
+                e.epoch,
+                e.installed_at_iter,
+                levels,
+                e.estimated_mu.map(|v| format!("{v:.3e}")).unwrap_or_else(|| "-".into()),
+                e.estimated_t0.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
+                e.drift,
+            ));
+        }
+        out
+    }
+
     /// One-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "steps={} E[virt]={:.1} wall/iter={} decode/iter={} loss {}→{} cache {}/{} hit",
+            "steps={} epochs={} E[virt]={:.1} wall/iter={} decode/iter={} loss {}→{} cache {}/{} hit",
             self.steps(),
+            self.epochs(),
             self.virtual_runtime_stats().mean(),
             crate::bench_harness::fmt_ns(self.wall_ns_stats().mean()),
             crate::bench_harness::fmt_ns(self.decode_ns_stats().mean()),
@@ -101,19 +164,25 @@ impl TrainReport {
 mod tests {
     use super::*;
 
+    fn metric(iter: usize, epoch: usize, vr: f64) -> IterMetrics {
+        IterMetrics {
+            iter,
+            epoch,
+            virtual_runtime: vr,
+            wall_ns: 1000,
+            decode_ns: 100,
+            blocks_decoded: 2,
+            late_contributions: 0,
+            stale_epoch_contributions: 0,
+            grad_norm: 1.0,
+        }
+    }
+
     #[test]
     fn report_aggregates() {
         let mut r = TrainReport::default();
         for i in 0..3 {
-            r.iters.push(IterMetrics {
-                iter: i,
-                virtual_runtime: (i + 1) as f64,
-                wall_ns: 1000,
-                decode_ns: 100,
-                blocks_decoded: 2,
-                late_contributions: 0,
-                grad_norm: 1.0,
-            });
+            r.iters.push(metric(i, 0, (i + 1) as f64));
         }
         r.loss_curve.push((0, 5.0));
         r.loss_curve.push((2, 1.0));
@@ -122,5 +191,43 @@ mod tests {
         assert_eq!(r.final_loss(), Some(1.0));
         assert!(r.summary().contains("steps=3"));
         assert!(r.render_loss_curve().contains("2,1.000000"));
+    }
+
+    #[test]
+    fn ranged_stats_slice_the_run() {
+        let mut r = TrainReport::default();
+        for i in 0..10 {
+            let vr = if i < 5 { 1.0 } else { 3.0 };
+            r.iters.push(metric(i, usize::from(i >= 5), vr));
+        }
+        assert!((r.virtual_runtime_stats_in(0, 5).mean() - 1.0).abs() < 1e-12);
+        assert!((r.virtual_runtime_stats_in(5, 10).mean() - 3.0).abs() < 1e-12);
+        assert_eq!(r.virtual_runtime_stats_in(5, 10).count(), 5);
+    }
+
+    #[test]
+    fn epoch_history_renders() {
+        let mut r = TrainReport::default();
+        assert_eq!(r.epochs(), 1); // implicit initial epoch
+        r.scheme_epochs.push(SchemeEpoch {
+            epoch: 0,
+            installed_at_iter: 0,
+            block_sizes: vec![4, 0, 2],
+            estimated_mu: None,
+            estimated_t0: None,
+            drift: 0.0,
+        });
+        r.scheme_epochs.push(SchemeEpoch {
+            epoch: 1,
+            installed_at_iter: 40,
+            block_sizes: vec![2, 2, 2],
+            estimated_mu: Some(1e-3),
+            estimated_t0: Some(49.0),
+            drift: 0.8,
+        });
+        assert_eq!(r.epochs(), 2);
+        let txt = r.render_epochs();
+        assert!(txt.contains("1,40,3"), "{txt}");
+        assert!(txt.contains("1.000e-3") || txt.contains("1.000e-03"), "{txt}");
     }
 }

@@ -5,7 +5,8 @@
 //! Each GD iteration:
 //!
 //! 1. The master samples the workers' cycle times `T_n` from the
-//!    straggler model ([`straggler`]) and broadcasts `(iter, θ, T_n)`.
+//!    straggler model ([`straggler`]) and broadcasts
+//!    `(iter, epoch, scheme, θ, T_n)`.
 //! 2. Every worker computes the partial gradients of its held data
 //!    subsets (via a [`crate::runtime::GradExecutor`] — PJRT artifacts in
 //!    production), encodes each coordinate *block* with that block's
@@ -16,11 +17,21 @@
 //!    the model-faithful *virtual* runtime of Eq. (2) ([`master`],
 //!    [`metrics`]).
 //!
+//! The coding scheme is an **epoch-versioned, swappable artifact**, not
+//! an immutable `Arc` baked in at spawn: the adaptive engine
+//! ([`adaptive`]) watches the observed cycle times through a sliding
+//! window estimator ([`crate::distribution::fit`]) and, on parameter
+//! drift, re-solves the partition and installs it as a new epoch between
+//! iterations. Contributions encoded under a superseded epoch are
+//! rejected like stale-iteration messages, so codewords from two schemes
+//! never mix into one decode.
+//!
 //! Pacing is virtual by default (timing comes from the paper's cost
 //! model; numerics are real); `PacingMode::RealScaled` makes workers
 //! actually sleep proportionally, so arrival order matches the model and
 //! the decode-on-arrival path is exercised end-to-end.
 
+pub mod adaptive;
 pub mod channel;
 pub mod master;
 pub mod metrics;

@@ -1,30 +1,99 @@
 //! Per-iteration straggler sampling and the virtual-runtime accounting of
 //! Eq. (2) — the substitution for a physical heterogeneous cluster
 //! (DESIGN.md §4).
+//!
+//! [`StragglerSchedule`] generalizes the paper's stationary model to a
+//! piecewise-stationary one: the cycle-time distribution may *shift* at
+//! chosen iterations (machines get preempted, co-tenants arrive, networks
+//! degrade). The adaptive coding engine exists to chase exactly these
+//! shifts.
 
 use crate::coding::scheme::CodingScheme;
 use crate::distribution::CycleTimeDistribution;
 use crate::optimizer::runtime_model::{sort_times, ProblemSpec};
 use crate::util::rng::Rng;
 
-/// Samples each iteration's worker cycle times.
+/// A piecewise-stationary cycle-time model: phase `k` applies from its
+/// start iteration until the next phase begins.
+pub struct StragglerSchedule {
+    /// `(start_iter, dist)`, strictly increasing starts, first at 0.
+    segments: Vec<(usize, Box<dyn CycleTimeDistribution>)>,
+}
+
+impl StragglerSchedule {
+    /// The paper's stationary model: one distribution for the whole run.
+    pub fn stationary(dist: Box<dyn CycleTimeDistribution>) -> Self {
+        Self { segments: vec![(0, dist)] }
+    }
+
+    /// Append a phase: from `start_iter` on, cycle times follow `dist`.
+    /// Phases must be appended in strictly increasing start order.
+    pub fn then(mut self, start_iter: usize, dist: Box<dyn CycleTimeDistribution>) -> Self {
+        assert!(
+            start_iter > self.segments.last().unwrap().0,
+            "schedule phases must start in strictly increasing order"
+        );
+        self.segments.push((start_iter, dist));
+        self
+    }
+
+    /// The distribution governing iteration `iter`.
+    pub fn dist_at(&self, iter: usize) -> &dyn CycleTimeDistribution {
+        let mut cur: &dyn CycleTimeDistribution = self.segments[0].1.as_ref();
+        for (start, d) in &self.segments {
+            if *start <= iter {
+                cur = d.as_ref();
+            } else {
+                break;
+            }
+        }
+        cur
+    }
+
+    /// Iterations at which the distribution changes (excludes 0).
+    pub fn shift_points(&self) -> Vec<usize> {
+        self.segments.iter().skip(1).map(|(s, _)| *s).collect()
+    }
+
+    pub fn num_phases(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Human-readable phase listing for logs and reports.
+    pub fn label(&self) -> String {
+        self.segments
+            .iter()
+            .map(|(s, d)| format!("{}→{}", s, d.label()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// Samples each iteration's worker cycle times from a (possibly
+/// non-stationary) schedule.
 pub struct StragglerSampler {
-    dist: Box<dyn CycleTimeDistribution>,
+    schedule: StragglerSchedule,
     rng: Rng,
 }
 
 impl StragglerSampler {
+    /// Stationary convenience constructor.
     pub fn new(dist: Box<dyn CycleTimeDistribution>, seed: u64) -> Self {
-        Self { dist, rng: Rng::new(seed) }
+        Self::from_schedule(StragglerSchedule::stationary(dist), seed)
     }
 
-    /// Draw `T_1..T_N` for one iteration.
-    pub fn sample(&mut self, n: usize) -> Vec<f64> {
-        self.dist.sample_vec(n, &mut self.rng)
+    pub fn from_schedule(schedule: StragglerSchedule, seed: u64) -> Self {
+        Self { schedule, rng: Rng::new(seed) }
     }
 
-    pub fn distribution(&self) -> &dyn CycleTimeDistribution {
-        self.dist.as_ref()
+    /// Draw `T_1..T_N` for iteration `iter`.
+    pub fn sample(&mut self, iter: usize, n: usize) -> Vec<f64> {
+        self.schedule.dist_at(iter).sample_vec(n, &mut self.rng)
+    }
+
+    /// The distribution governing iteration `iter`.
+    pub fn distribution_at(&self, iter: usize) -> &dyn CycleTimeDistribution {
+        self.schedule.dist_at(iter)
     }
 }
 
@@ -73,6 +142,7 @@ pub fn block_completion_stamps(
 mod tests {
     use super::*;
     use crate::distribution::shifted_exp::ShiftedExponential;
+    use crate::distribution::Deterministic;
     use crate::optimizer::blocks::BlockPartition;
     use crate::optimizer::runtime_model::tau_s;
 
@@ -109,6 +179,40 @@ mod tests {
         let d = ShiftedExponential::new(1e-3, 50.0);
         let mut a = StragglerSampler::new(Box::new(d.clone()), 7);
         let mut b = StragglerSampler::new(Box::new(d), 7);
-        assert_eq!(a.sample(5), b.sample(5));
+        assert_eq!(a.sample(0, 5), b.sample(0, 5));
+    }
+
+    #[test]
+    fn schedule_switches_phases_at_boundaries() {
+        let sched = StragglerSchedule::stationary(Box::new(Deterministic::new(1.0)))
+            .then(10, Box::new(Deterministic::new(2.0)))
+            .then(20, Box::new(Deterministic::new(3.0)));
+        assert_eq!(sched.num_phases(), 3);
+        assert_eq!(sched.shift_points(), vec![10, 20]);
+        let mut rng = Rng::new(0);
+        assert_eq!(sched.dist_at(0).sample(&mut rng), 1.0);
+        assert_eq!(sched.dist_at(9).sample(&mut rng), 1.0);
+        assert_eq!(sched.dist_at(10).sample(&mut rng), 2.0);
+        assert_eq!(sched.dist_at(19).sample(&mut rng), 2.0);
+        assert_eq!(sched.dist_at(20).sample(&mut rng), 3.0);
+        assert_eq!(sched.dist_at(10_000).sample(&mut rng), 3.0);
+    }
+
+    #[test]
+    fn sampler_follows_schedule() {
+        let sched = StragglerSchedule::stationary(Box::new(Deterministic::new(1.0)))
+            .then(5, Box::new(Deterministic::new(4.0)));
+        let mut s = StragglerSampler::from_schedule(sched, 3);
+        assert_eq!(s.sample(4, 3), vec![1.0, 1.0, 1.0]);
+        assert_eq!(s.sample(5, 3), vec![4.0, 4.0, 4.0]);
+        assert!((s.distribution_at(5).mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn schedule_rejects_out_of_order_phases() {
+        let _ = StragglerSchedule::stationary(Box::new(Deterministic::new(1.0)))
+            .then(10, Box::new(Deterministic::new(2.0)))
+            .then(10, Box::new(Deterministic::new(3.0)));
     }
 }

@@ -1,28 +1,40 @@
-//! The end-to-end trainer: spawns the worker topology, runs coded
-//! gradient descent, and produces a [`TrainReport`].
+//! The end-to-end trainer, decomposed into a setup phase and an
+//! iteration loop so the coding scheme can be **hot-swapped between
+//! iterations** (adaptive coding engine).
+//!
+//! [`Trainer::run`] = [`TrainSession::start`] (validate, build the
+//! epoch-0 scheme, spawn the worker topology) + a loop of
+//! [`TrainSession::adapt`] (poll the drift detector, install a
+//! re-optimized scheme as a new epoch) and [`TrainSession::step`] (one
+//! coded GD iteration) + [`TrainSession::finish`] (shutdown + report).
+//! Embedders that need custom control flow (manual scheme installs,
+//! interleaved evaluation…) can drive a [`TrainSession`] directly.
 
-use std::sync::mpsc;
+use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coding::scheme::CodingScheme;
+use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveController};
 use crate::coordinator::channel::{WorkerEvent, WorkerTask};
 use crate::coordinator::master::Master;
-use crate::coordinator::metrics::{IterMetrics, TrainReport};
+use crate::coordinator::metrics::{IterMetrics, SchemeEpoch, TrainReport};
 use crate::coordinator::state::ModelState;
-use crate::coordinator::straggler::{virtual_runtime, StragglerSampler};
+use crate::coordinator::straggler::{virtual_runtime, StragglerSampler, StragglerSchedule};
 use crate::coordinator::worker::{self, WorkerContext};
 use crate::coordinator::PacingMode;
+use crate::distribution::fit::ShiftedExpEstimate;
 use crate::distribution::CycleTimeDistribution;
 use crate::optimizer::blocks::BlockPartition;
 use crate::optimizer::runtime_model::ProblemSpec;
-use crate::runtime::ExecutorFactory;
+use crate::runtime::{ExecutorFactory, GradExecutor};
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 
 /// Training configuration.
 pub struct TrainConfig {
     pub spec: ProblemSpec,
+    /// The initial (epoch-0) block partition.
     pub blocks: BlockPartition,
     pub steps: usize,
     pub lr: f64,
@@ -38,6 +50,8 @@ pub struct TrainConfig {
     /// How long the master waits on an empty event channel before
     /// declaring the iteration stalled.
     pub stall_timeout: std::time::Duration,
+    /// Online re-optimization policy (None = the scheme stays fixed).
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 impl TrainConfig {
@@ -53,6 +67,7 @@ impl TrainConfig {
             dead_workers: Vec::new(),
             init_scale: 0.05,
             stall_timeout: std::time::Duration::from_secs(30),
+            adaptive: None,
         }
     }
 }
@@ -60,22 +75,70 @@ impl TrainConfig {
 /// Coded distributed GD driver.
 pub struct Trainer {
     cfg: TrainConfig,
-    dist: Box<dyn CycleTimeDistribution>,
+    schedule: StragglerSchedule,
     factory: ExecutorFactory,
 }
 
 impl Trainer {
+    /// Stationary straggler model (the paper's setting).
     pub fn new(
         cfg: TrainConfig,
         dist: Box<dyn CycleTimeDistribution>,
         factory: ExecutorFactory,
     ) -> Self {
-        Self { cfg, dist, factory }
+        Self::with_schedule(cfg, StragglerSchedule::stationary(dist), factory)
+    }
+
+    /// Piecewise-stationary straggler model: the distribution may shift
+    /// mid-training (what the adaptive engine is for).
+    pub fn with_schedule(
+        cfg: TrainConfig,
+        schedule: StragglerSchedule,
+        factory: ExecutorFactory,
+    ) -> Self {
+        Self { cfg, schedule, factory }
     }
 
     /// Run the full training loop.
     pub fn run(self) -> Result<TrainReport> {
-        let Trainer { cfg, dist, factory } = self;
+        let steps = self.cfg.steps;
+        let mut session = TrainSession::start(self.cfg, self.schedule, self.factory)?;
+        for iter in 0..steps {
+            session.adapt(iter)?;
+            session.step(iter)?;
+        }
+        session.finish()
+    }
+}
+
+/// A live worker topology plus all per-run mutable state.
+pub struct TrainSession {
+    cfg: TrainConfig,
+    dim: usize,
+    scheme: Arc<CodingScheme>,
+    epoch: usize,
+    master: Master,
+    task_txs: Vec<Sender<WorkerTask>>,
+    event_rx: Receiver<WorkerEvent>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    sampler: StragglerSampler,
+    state: ModelState,
+    eval_exec: Option<Box<dyn GradExecutor>>,
+    live_mask: Vec<bool>,
+    failed_set: Vec<usize>,
+    controller: Option<AdaptiveController>,
+    rng: Rng,
+    report: TrainReport,
+}
+
+impl TrainSession {
+    /// Setup phase: validate the config, build the epoch-0 scheme and
+    /// spawn the worker topology.
+    pub fn start(
+        cfg: TrainConfig,
+        schedule: StragglerSchedule,
+        factory: ExecutorFactory,
+    ) -> Result<Self> {
         let n = cfg.spec.n;
         if cfg.blocks.n() != n {
             return Err(Error::InvalidArgument("blocks.n() != spec.n".into()));
@@ -91,7 +154,7 @@ impl Trainer {
             factory(n)?.dim()
         };
         if dim != cfg.spec.coords {
-            log::warn!(
+            crate::log_warn!(
                 "model dim {} != spec.coords {} — virtual-runtime accounting uses the model dim",
                 dim,
                 cfg.spec.coords
@@ -108,18 +171,17 @@ impl Trainer {
         let (event_tx, event_rx) = mpsc::channel::<WorkerEvent>();
         let mut task_txs = Vec::with_capacity(n);
         let mut handles = Vec::new();
-        let mut live = 0usize;
+        let mut live_mask = vec![false; n];
         for w in 0..n {
             let (tx, rx) = mpsc::channel::<WorkerTask>();
             task_txs.push(tx);
             if cfg.dead_workers.contains(&w) {
                 continue; // injected failure: worker never comes up
             }
-            live += 1;
+            live_mask[w] = true;
             let ctx = WorkerContext {
                 id: w,
                 spec: cfg.spec,
-                scheme: scheme.clone(),
                 factory: factory.clone(),
                 tasks: rx,
                 events: event_tx.clone(),
@@ -136,63 +198,180 @@ impl Trainer {
 
         let mut master = Master::new(scheme.clone(), dim);
         master.timeout = cfg.stall_timeout;
-        let mut sampler = StragglerSampler::new(dist, rng.next_u64());
-        let mut state = if cfg.init_scale > 0.0 {
+
+        // Seed the drift detector with the parameters the initial scheme
+        // is presumed optimal for (when the phase-0 model is shifted-exp).
+        let controller = cfg.adaptive.clone().map(|acfg| match schedule.dist_at(0).as_shifted_exp()
+        {
+            Some(d) => AdaptiveController::with_reference(acfg, d.mu, d.t0),
+            None => AdaptiveController::new(acfg),
+        });
+        let sampler = StragglerSampler::from_schedule(schedule, rng.next_u64());
+        let state = if cfg.init_scale > 0.0 {
             ModelState::random(dim, cfg.init_scale, &mut rng)
         } else {
             ModelState::zeros(dim)
         };
 
         let mut report = TrainReport::default();
-        let mut failed_set: Vec<usize> = cfg.dead_workers.clone();
+        report.scheme_epochs.push(SchemeEpoch {
+            epoch: 0,
+            installed_at_iter: 0,
+            block_sizes: cfg.blocks.sizes().to_vec(),
+            estimated_mu: None,
+            estimated_t0: None,
+            drift: 0.0,
+        });
+        let failed_set = cfg.dead_workers.clone();
 
-        if cfg.eval_every > 0 {
+        let mut session = Self {
+            cfg,
+            dim,
+            scheme,
+            epoch: 0,
+            master,
+            task_txs,
+            event_rx,
+            handles,
+            sampler,
+            state,
+            eval_exec: None,
+            live_mask,
+            failed_set,
+            controller,
+            rng,
+            report,
+        };
+        if session.cfg.eval_every > 0 {
             if let Some(e) = eval_exec.as_mut() {
-                report.loss_curve.push((0, e.loss(state.as_slice())?));
+                let l = e.loss(session.state.as_slice())?;
+                session.report.loss_curve.push((0, l));
             }
         }
+        session.eval_exec = eval_exec;
+        Ok(session)
+    }
 
-        for iter in 0..cfg.steps {
-            let t_iter = Instant::now();
-            let times = sampler.sample(n);
-            master.broadcast(iter, state.shared(), &times, &task_txs);
-            let outcome = master.collect(iter, &event_rx, live)?;
-            for w in outcome.failed {
-                if !failed_set.contains(&w) {
-                    failed_set.push(w);
-                    live -= 1;
-                }
-            }
-            let grad_norm = outcome.gradient.iter().map(|g| g * g).sum::<f64>().sqrt();
-            state.step(&outcome.gradient, cfg.lr);
-            report.iters.push(IterMetrics {
-                iter,
-                virtual_runtime: virtual_runtime(&cfg.spec, &scheme, &times),
-                wall_ns: t_iter.elapsed().as_nanos() as u64,
-                decode_ns: outcome.decode_ns,
-                blocks_decoded: scheme.ranges().len(),
-                late_contributions: outcome.late_contributions,
-                grad_norm,
-            });
-            if cfg.eval_every > 0 && (iter + 1) % cfg.eval_every == 0 {
-                if let Some(e) = eval_exec.as_mut() {
-                    report.loss_curve.push((iter + 1, e.loss(state.as_slice())?));
-                }
+    /// The current scheme epoch (0-based, monotone).
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// The currently installed scheme.
+    pub fn scheme(&self) -> &Arc<CodingScheme> {
+        &self.scheme
+    }
+
+    /// Poll the adaptive policy before iteration `iter`; on a triggered
+    /// re-plan, install the re-optimized scheme as a new epoch.
+    pub fn adapt(&mut self, iter: usize) -> Result<()> {
+        if self.controller.is_none() {
+            return Ok(());
+        }
+        let warm = self.scheme.blocks().as_f64();
+        let plan = {
+            let ctrl = self.controller.as_mut().unwrap();
+            ctrl.maybe_replan(iter, &self.cfg.spec, &warm, &mut self.rng)?
+        };
+        if let Some(plan) = plan {
+            crate::log_info!(
+                "iter {iter}: drift {:.2} → installing scheme epoch {} (fit mu={:.3e}, t0={:.1})",
+                plan.drift,
+                self.epoch + 1,
+                plan.estimate.mu,
+                plan.estimate.t0
+            );
+            self.install_scheme(plan.blocks, iter, Some(&plan.estimate), plan.drift)?;
+        }
+        Ok(())
+    }
+
+    /// Install a new partition as the next scheme epoch. Safe between
+    /// iterations: workers receive the new scheme with their next task,
+    /// and the master rejects contributions encoded under any previous
+    /// epoch like stale-iteration messages.
+    pub fn install_scheme(
+        &mut self,
+        blocks: BlockPartition,
+        iter: usize,
+        estimate: Option<&ShiftedExpEstimate>,
+        drift: f64,
+    ) -> Result<()> {
+        if blocks.n() != self.cfg.spec.n {
+            return Err(Error::InvalidArgument("new scheme: blocks.n() != spec.n".into()));
+        }
+        if blocks.total() != self.dim {
+            return Err(Error::InvalidArgument(format!(
+                "new scheme covers {} coordinates but the model has {}",
+                blocks.total(),
+                self.dim
+            )));
+        }
+        let scheme = Arc::new(CodingScheme::new(blocks, &mut self.rng)?);
+        self.epoch += 1;
+        self.scheme = scheme.clone();
+        self.master.install_scheme(scheme, self.epoch);
+        self.report.scheme_epochs.push(SchemeEpoch {
+            epoch: self.epoch,
+            installed_at_iter: iter,
+            block_sizes: self.scheme.blocks().sizes().to_vec(),
+            estimated_mu: estimate.map(|e| e.mu),
+            estimated_t0: estimate.map(|e| e.t0),
+            drift,
+        });
+        Ok(())
+    }
+
+    /// One coded GD iteration under the current scheme epoch.
+    pub fn step(&mut self, iter: usize) -> Result<()> {
+        let t_iter = Instant::now();
+        let times = self.sampler.sample(iter, self.cfg.spec.n);
+        if let Some(ctrl) = self.controller.as_mut() {
+            ctrl.observe(&times);
+        }
+        self.master.broadcast(iter, self.state.shared(), &times, &self.task_txs);
+        let outcome = self.master.collect(iter, &self.event_rx, &self.live_mask)?;
+        for w in outcome.failed {
+            if self.live_mask[w] {
+                self.live_mask[w] = false;
+                self.failed_set.push(w);
             }
         }
+        let grad_norm = outcome.gradient.iter().map(|g| g * g).sum::<f64>().sqrt();
+        self.state.step(&outcome.gradient, self.cfg.lr);
+        self.report.iters.push(IterMetrics {
+            iter,
+            epoch: self.epoch,
+            virtual_runtime: virtual_runtime(&self.cfg.spec, &self.scheme, &times),
+            wall_ns: t_iter.elapsed().as_nanos() as u64,
+            decode_ns: outcome.decode_ns,
+            blocks_decoded: self.scheme.ranges().len(),
+            late_contributions: outcome.late_contributions,
+            stale_epoch_contributions: outcome.stale_epoch,
+            grad_norm,
+        });
+        if self.cfg.eval_every > 0 && (iter + 1) % self.cfg.eval_every == 0 {
+            if let Some(e) = self.eval_exec.as_mut() {
+                let l = e.loss(self.state.as_slice())?;
+                self.report.loss_curve.push((iter + 1, l));
+            }
+        }
+        Ok(())
+    }
 
-        // Shutdown.
-        for tx in &task_txs {
+    /// Shut the topology down and produce the report.
+    pub fn finish(mut self) -> Result<TrainReport> {
+        for tx in &self.task_txs {
             let _ = tx.send(WorkerTask::Shutdown);
         }
-        drop(task_txs);
-        for h in handles {
+        self.task_txs.clear();
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
-        let (hits, misses) = master.cache_stats();
-        report.decode_cache_hits = hits;
-        report.decode_cache_misses = misses;
-        report.failed_workers = failed_set;
-        Ok(report)
+        let (hits, misses) = self.master.cache_stats();
+        self.report.decode_cache_hits = hits;
+        self.report.decode_cache_misses = misses;
+        self.report.failed_workers = self.failed_set;
+        Ok(self.report)
     }
 }

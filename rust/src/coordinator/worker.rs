@@ -1,13 +1,19 @@
 //! Worker thread: sequentially computes, encodes and streams coded
 //! gradient blocks for each GD iteration.
+//!
+//! The coding scheme is **not** baked in at spawn: it arrives with every
+//! [`WorkerTask::Compute`] as an epoch-versioned `Arc`, so the master can
+//! install a re-optimized scheme between iterations (adaptive coding
+//! engine) without respawning the thread. The per-scheme derived state
+//! (held subsets, block ranges) is cached and refreshed only when the
+//! epoch changes.
 
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
 
-use crate::coding::scheme::CodingScheme;
 use crate::coordinator::channel::{BlockContribution, WorkerEvent, WorkerTask};
 use crate::coordinator::straggler::block_completion_stamps;
 use crate::coordinator::PacingMode;
+use crate::optimizer::blocks::BlockRange;
 use crate::optimizer::runtime_model::ProblemSpec;
 use crate::runtime::ExecutorFactory;
 
@@ -15,7 +21,6 @@ use crate::runtime::ExecutorFactory;
 pub struct WorkerContext {
     pub id: usize,
     pub spec: ProblemSpec,
-    pub scheme: Arc<CodingScheme>,
     pub factory: ExecutorFactory,
     pub tasks: Receiver<WorkerTask>,
     pub events: Sender<WorkerEvent>,
@@ -27,7 +32,7 @@ pub struct WorkerContext {
 /// [`WorkerEvent::Failed`] (the coded scheme tolerates them like any
 /// other straggler, up to each block's redundancy).
 pub fn run(ctx: WorkerContext) {
-    let WorkerContext { id, spec, scheme, factory, tasks, events, pacing } = ctx;
+    let WorkerContext { id, spec, factory, tasks, events, pacing } = ctx;
     let mut exec = match factory(id) {
         Ok(e) => e,
         Err(e) => {
@@ -35,28 +40,38 @@ pub fn run(ctx: WorkerContext) {
                 worker: id,
                 iter: 0,
                 reason: format!("executor init: {e}"),
+                fatal: true, // the thread exits: gone for the whole run
             });
             return;
         }
     };
-    let held = scheme.worker_subsets(id).to_vec();
-    let ranges = scheme.ranges();
+    // Per-scheme derived state, keyed by epoch (schemes swap rarely, so
+    // recomputing only on an epoch change keeps the hot path identical to
+    // the static design).
+    let mut cached: Option<(usize, Vec<usize>, Vec<BlockRange>)> = None;
 
     while let Ok(task) = tasks.recv() {
-        let (iter, theta, cycle_time) = match task {
-            WorkerTask::Compute { iter, theta, cycle_time } => (iter, theta, cycle_time),
+        let (iter, epoch, scheme, theta, cycle_time) = match task {
+            WorkerTask::Compute { iter, epoch, scheme, theta, cycle_time } => {
+                (iter, epoch, scheme, theta, cycle_time)
+            }
             WorkerTask::Shutdown => return,
         };
+        if cached.as_ref().map(|(e, _, _)| *e) != Some(epoch) {
+            cached = Some((epoch, scheme.worker_subsets(id).to_vec(), scheme.ranges()));
+        }
+        let (_, held, ranges) = cached.as_ref().unwrap();
         // Real compute: partial gradients of every held subset (batched
         // so the executor can stage θ once — §Perf opt 2). Encoding
         // consumes the f32 results directly (§Perf opt 1).
-        let grads = match exec.grad_shards(&theta, &held) {
+        let grads = match exec.grad_shards(&theta, held) {
             Ok(g) => g,
             Err(e) => {
                 let _ = events.send(WorkerEvent::Failed {
                     worker: id,
                     iter,
                     reason: format!("grad_shards: {e}"),
+                    fatal: false, // the loop continues: next task may succeed
                 });
                 continue;
             }
@@ -78,6 +93,7 @@ pub fn run(ctx: WorkerContext) {
             if events
                 .send(WorkerEvent::Block(BlockContribution {
                     iter,
+                    epoch,
                     worker: id,
                     block_idx,
                     virtual_time: stamps[block_idx],

@@ -1,0 +1,254 @@
+//! Online estimation of straggler parameters from observed cycle times —
+//! the sensing half of the adaptive coding engine.
+//!
+//! The paper's optimizer (§IV–§V) assumes the cycle-time distribution is
+//! known a priori. Here the master instead *tracks* it: every iteration's
+//! sampled/observed `T_1..T_N` feed a sliding window, and the window is
+//! periodically fitted to the shifted-exponential family of §V-C
+//! (`T = t0 + Exp(μ)`), which is also the family the closed-form
+//! re-solvers need ([`crate::distribution::order_stats::shifted_exp_exact`]).
+//!
+//! Two estimators:
+//!
+//! * **MLE** (bias-corrected / UMVU): with order statistic `x_(1)` and
+//!   sample mean `x̄`, `σ̂ = n(x̄ − x_(1))/(n−1)` and
+//!   `t̂0 = x_(1) − (x̄ − x_(1))/(n−1)` — removes the `σ/n` upward bias of
+//!   the raw minimum. Sharp when the data really is shifted-exponential.
+//! * **Method of moments**: `σ̂ = s` (sample std), `t̂0 = x̄ − s`. Noisier
+//!   for the location when `μ·t0 ≪ 1`, but robust to mild mis-specification
+//!   (it never chases a single extreme minimum).
+//!
+//! In both cases `μ̂ = 1/σ̂`.
+
+use std::collections::VecDeque;
+
+use super::shifted_exp::ShiftedExponential;
+
+/// Which estimator [`fit_shifted_exp`] applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitMethod {
+    /// Bias-corrected maximum likelihood (UMVU for the shifted-exp family).
+    Mle,
+    /// Mean/std method of moments.
+    Moments,
+}
+
+/// A fitted shifted-exponential parameter pair.
+#[derive(Debug, Clone)]
+pub struct ShiftedExpEstimate {
+    /// Estimated rate `μ̂`.
+    pub mu: f64,
+    /// Estimated shift `t̂0` (clamped strictly positive — the
+    /// order-statistic machinery requires `μ·t0 > 0`).
+    pub t0: f64,
+    /// Number of samples the fit used.
+    pub samples: usize,
+}
+
+impl ShiftedExpEstimate {
+    /// `E[T] = t0 + 1/μ` under the fitted parameters.
+    pub fn mean(&self) -> f64 {
+        self.t0 + 1.0 / self.mu
+    }
+
+    /// The exponential scale `σ = 1/μ` (also the distribution's std dev).
+    pub fn sigma(&self) -> f64 {
+        1.0 / self.mu
+    }
+
+    /// Materialize the fitted distribution.
+    pub fn to_distribution(&self) -> ShiftedExponential {
+        ShiftedExponential::new(self.mu, self.t0)
+    }
+
+    /// Symmetric relative drift between two parameter estimates: the max
+    /// of the relative changes in mean and in scale. This is the quantity
+    /// the adaptive policy thresholds on — it reacts both to the base
+    /// speed shifting (`t0`) and to the straggler tail fattening (`1/μ`).
+    pub fn drift_from(&self, other: &ShiftedExpEstimate) -> f64 {
+        let rel = |a: f64, b: f64| ((a - b) / b).abs();
+        rel(self.mean(), other.mean()).max(rel(self.sigma(), other.sigma()))
+    }
+}
+
+/// Fit a shifted exponential to a batch of positive cycle times. Returns
+/// `None` when the sample is too small or degenerate (fewer than two
+/// points, zero spread, non-positive values).
+pub fn fit_shifted_exp(samples: &[f64], method: FitMethod) -> Option<ShiftedExpEstimate> {
+    let n = samples.len();
+    if n < 2 {
+        return None;
+    }
+    let mut sum = 0.0f64;
+    let mut min = f64::INFINITY;
+    for &x in samples {
+        if x <= 0.0 || !x.is_finite() {
+            return None;
+        }
+        sum += x;
+        min = min.min(x);
+    }
+    let mean = sum / n as f64;
+    let (t0, sigma) = match method {
+        FitMethod::Mle => {
+            let excess = mean - min; // x̄ − x_(1) ≥ 0
+            if excess <= 0.0 {
+                return None; // all samples equal: no exponential part
+            }
+            let sigma = excess * n as f64 / (n - 1) as f64;
+            let t0 = min - excess / (n - 1) as f64;
+            (t0, sigma)
+        }
+        FitMethod::Moments => {
+            let var = samples
+                .iter()
+                .map(|&x| (x - mean) * (x - mean))
+                .sum::<f64>()
+                / (n - 1) as f64;
+            let sigma = var.sqrt();
+            if sigma <= 0.0 || sigma.is_nan() {
+                return None;
+            }
+            (mean - sigma, sigma)
+        }
+    };
+    // The order-statistic quadrature (Lemma 2 route) requires t0 > 0;
+    // clamp the location to a sliver of the mean rather than failing.
+    let t0 = t0.max(1e-6 * mean);
+    let mu = 1.0 / sigma;
+    if !mu.is_finite() || mu <= 0.0 || !t0.is_finite() {
+        return None;
+    }
+    Some(ShiftedExpEstimate { mu, t0, samples: n })
+}
+
+/// Sliding-window online estimator: push every observed cycle time, fit
+/// on demand. Old observations age out, so the fit tracks non-stationary
+/// clusters with a lag of `capacity` observations.
+#[derive(Debug, Clone)]
+pub struct OnlineEstimator {
+    buf: VecDeque<f64>,
+    capacity: usize,
+    method: FitMethod,
+}
+
+impl OnlineEstimator {
+    pub fn new(capacity: usize, method: FitMethod) -> Self {
+        assert!(capacity >= 2, "estimator window must hold at least 2 samples");
+        Self { buf: VecDeque::with_capacity(capacity), capacity, method }
+    }
+
+    /// Record one observed cycle time, evicting the oldest at capacity.
+    pub fn push(&mut self, t: f64) {
+        if self.buf.len() == self.capacity {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(t);
+    }
+
+    /// Record a whole iteration's `T_1..T_N`.
+    pub fn extend(&mut self, times: &[f64]) {
+        for &t in times {
+            self.push(t);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.capacity
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    pub fn method(&self) -> FitMethod {
+        self.method
+    }
+
+    /// Fit the current window (None while degenerate or near-empty).
+    pub fn fit(&self) -> Option<ShiftedExpEstimate> {
+        let v: Vec<f64> = self.buf.iter().copied().collect();
+        fit_shifted_exp(&v, self.method)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::CycleTimeDistribution;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mle_recovers_shifted_exp_parameters() {
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let mut rng = Rng::new(11);
+        let samples = d.sample_vec(4000, &mut rng);
+        let est = fit_shifted_exp(&samples, FitMethod::Mle).unwrap();
+        assert!((est.mu - 1e-3).abs() / 1e-3 < 0.1, "mu={}", est.mu);
+        // The MLE location is min-based: accurate to ~sigma/n.
+        assert!((est.t0 - 50.0).abs() < 5.0, "t0={}", est.t0);
+        assert!((est.mean() - d.mean()).abs() / d.mean() < 0.1);
+    }
+
+    #[test]
+    fn moments_recover_parameters_when_shift_dominates() {
+        // mu·t0 = 2: location is a large fraction of the mean, where the
+        // moments estimator is well-conditioned.
+        let d = ShiftedExponential::new(0.02, 100.0);
+        let mut rng = Rng::new(13);
+        let samples = d.sample_vec(8000, &mut rng);
+        let est = fit_shifted_exp(&samples, FitMethod::Moments).unwrap();
+        assert!((est.mu - 0.02).abs() / 0.02 < 0.1, "mu={}", est.mu);
+        assert!((est.t0 - 100.0).abs() / 100.0 < 0.1, "t0={}", est.t0);
+    }
+
+    #[test]
+    fn degenerate_samples_return_none() {
+        assert!(fit_shifted_exp(&[], FitMethod::Mle).is_none());
+        assert!(fit_shifted_exp(&[1.0], FitMethod::Mle).is_none());
+        assert!(fit_shifted_exp(&[2.0, 2.0, 2.0], FitMethod::Mle).is_none());
+        assert!(fit_shifted_exp(&[2.0, 2.0, 2.0], FitMethod::Moments).is_none());
+        assert!(fit_shifted_exp(&[1.0, -1.0], FitMethod::Mle).is_none());
+    }
+
+    #[test]
+    fn window_slides_onto_the_new_regime() {
+        let a = ShiftedExponential::new(1e-2, 50.0); // mean 150
+        let b = ShiftedExponential::new(1e-3, 50.0); // mean 1050
+        let mut rng = Rng::new(17);
+        let mut est = OnlineEstimator::new(500, FitMethod::Mle);
+        est.extend(&a.sample_vec(1000, &mut rng));
+        let before = est.fit().unwrap();
+        assert!((before.mean() - a.mean()).abs() / a.mean() < 0.15);
+        // Fill the whole window with the new regime: the fit must follow.
+        est.extend(&b.sample_vec(500, &mut rng));
+        assert!(est.is_full());
+        assert_eq!(est.len(), 500);
+        let after = est.fit().unwrap();
+        assert!((after.mean() - b.mean()).abs() / b.mean() < 0.15);
+        assert!(after.drift_from(&before) > 1.0, "drift should be large");
+    }
+
+    #[test]
+    fn drift_is_zero_against_self_and_symmetric_in_scale() {
+        let e = ShiftedExpEstimate { mu: 1e-3, t0: 50.0, samples: 100 };
+        assert!(e.drift_from(&e).abs() < 1e-12);
+        let f = ShiftedExpEstimate { mu: 2e-3, t0: 50.0, samples: 100 };
+        assert!(e.drift_from(&f) > 0.4); // sigma halves: 100% in one direction
+    }
+
+    #[test]
+    fn estimate_materializes_a_distribution() {
+        let e = ShiftedExpEstimate { mu: 5e-3, t0: 20.0, samples: 64 };
+        let d = e.to_distribution();
+        assert!((d.mean() - e.mean()).abs() < 1e-12);
+    }
+}

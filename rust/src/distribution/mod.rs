@@ -15,7 +15,11 @@
 //!   full-straggler limit when `slow = ∞`).
 //! * [`Deterministic`] — degenerate (used by Fig. 1 and unit tests).
 //! * [`Empirical`] — resampling from a recorded trace.
+//!
+//! [`fit`] closes the loop for the adaptive coding engine: it estimates
+//! shifted-exponential parameters online from observed cycle times.
 
+pub mod fit;
 pub mod gamma;
 pub mod lognormal;
 pub mod order_stats;

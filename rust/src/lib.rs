@@ -2,9 +2,10 @@
 //!
 //! A straggler-tolerant distributed gradient-descent framework reproducing
 //! Wang, Cui, Li, Zou & Xiong, *"Optimization-based Block Coordinate Gradient
-//! Coding"*, IEEE GLOBECOM 2021.
+//! Coding"*, IEEE GLOBECOM 2021, extended with an **adaptive coding engine**
+//! in the spirit of the journal version (arXiv:2206.02450).
 //!
-//! The system is a three-layer stack:
+//! The system is a three-layer stack plus an adaptive control loop:
 //!
 //! * **Layer 3 (this crate)** — the coordination contribution: a
 //!   master/worker runtime ([`coordinator`]) that streams *coded* gradient
@@ -13,9 +14,37 @@
 //!   coding-parameter optimizer suite ([`optimizer`]).
 //! * **Layer 2 (JAX, build time)** — per-worker shard-gradient compute
 //!   graphs, AOT-lowered to HLO text under `artifacts/` and executed from
-//!   Rust via PJRT ([`runtime`]).
+//!   Rust via PJRT ([`runtime`]; requires the `pjrt` cargo feature — the
+//!   pure-Rust host backend is always available).
 //! * **Layer 1 (Pallas, build time)** — the tiled matmul / encode kernels
 //!   inside the Layer-2 graphs.
+//!
+//! ## The adaptive layer (scheme epochs)
+//!
+//! The paper's optimizer assumes the cycle-time distribution is known a
+//! priori and fixes one block partition for the whole run. Real clusters
+//! drift, so the coordinator treats the [`coding::scheme::CodingScheme`] as
+//! an **epoch-versioned, swappable artifact** rather than an immutable
+//! `Arc` baked into worker threads:
+//!
+//! * every `WorkerTask::Compute` carries the `Arc<CodingScheme>` of its
+//!   epoch, and every `BlockContribution` is stamped with that epoch; the
+//!   master rejects contributions encoded under a superseded scheme exactly
+//!   like stale-iteration messages ([`coordinator::master`]);
+//! * [`distribution::fit`] estimates shifted-exponential straggler
+//!   parameters online (windowed MLE / method of moments) from the
+//!   per-iteration cycle times the trainer observes;
+//! * [`coordinator::adaptive`] decides *when* to re-solve (every K
+//!   iterations, on estimated-parameter drift, behind a cooldown) and *how*
+//!   (cheap closed-form `x^(f)` re-solve, or the full stochastic subgradient
+//!   method warm-started from the live partition);
+//! * [`coordinator::trainer`] is decomposed into a setup phase
+//!   (`TrainSession::start`) and an iteration loop that can hot-swap a
+//!   re-optimized scheme between iterations without respawning workers or
+//!   dropping an iteration;
+//! * [`sim::multi`] plays out multi-iteration, *non-stationary* runs in
+//!   virtual time so adaptive-vs-static can be evaluated at scale without
+//!   spawning threads.
 //!
 //! ## Quick start
 //!
@@ -36,7 +65,8 @@
 //! assert_eq!(blocks.total(), 20_000);
 //! ```
 //!
-//! See `examples/` for end-to-end coded training and the figure
+//! See `examples/` for end-to-end coded training (including the adaptive
+//! mid-training drift demo `examples/adaptive_drift.rs`) and the figure
 //! reproductions in `rust/benches/`.
 
 pub mod bench_harness;
@@ -56,6 +86,8 @@ pub mod util;
 /// Convenient re-exports of the types most programs need.
 pub mod prelude {
     pub use crate::coding::scheme::CodingScheme;
+    pub use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveController};
+    pub use crate::coordinator::straggler::StragglerSchedule;
     pub use crate::coordinator::trainer::{TrainConfig, Trainer};
     pub use crate::distribution::{
         shifted_exp::ShiftedExponential, CycleTimeDistribution,
@@ -66,29 +98,53 @@ pub mod prelude {
     pub use crate::util::rng::Rng;
 }
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+/// offline build environment has no `thiserror`).
+#[derive(Debug)]
 pub enum Error {
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
-    #[error("linear algebra failure: {0}")]
     Linalg(String),
-    #[error("coding failure: {0}")]
     Coding(String),
-    #[error("optimizer failure: {0}")]
     Optimizer(String),
-    #[error("runtime failure: {0}")]
     Runtime(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-pub type Result<T> = std::result::Result<T, Error>;
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::Linalg(m) => write!(f, "linear algebra failure: {m}"),
+            Error::Coding(m) => write!(f, "coding failure: {m}"),
+            Error::Optimizer(m) => write!(f, "optimizer failure: {m}"),
+            Error::Runtime(m) => write!(f, "runtime failure: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
 
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<anyhow::Error> for Error {
     fn from(e: anyhow::Error) -> Self {
         Error::Runtime(format!("{e:#}"))
     }
 }
+
+pub type Result<T> = std::result::Result<T, Error>;

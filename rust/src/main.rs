@@ -4,21 +4,27 @@
 //! * `optimize`  — compute a scheme's block partition for given (N, L, μ, t0).
 //! * `compare`   — expected-runtime table of all schemes at one operating point.
 //! * `simulate`  — discrete-event playout of one iteration.
-//! * `train`     — run coded distributed GD (host or PJRT backend).
+//! * `adaptive`  — multi-iteration adaptive-vs-static playout under a
+//!                 drifting straggler distribution (optionally emits JSON).
+//! * `train`     — run coded distributed GD (host or PJRT backend), with
+//!                 optional mid-training drift and online re-optimization.
 //! * `artifacts` — list the AOT artifact manifest.
 
 use std::sync::Arc;
 
 use bcgc::cli::Args;
+use bcgc::coordinator::adaptive::AdaptiveConfig;
+use bcgc::coordinator::straggler::StragglerSchedule;
 use bcgc::coordinator::trainer::{TrainConfig, Trainer};
 use bcgc::coordinator::PacingMode;
 use bcgc::data::synthetic;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::closed_form;
 use bcgc::optimizer::evaluate::{compare_schemes, reduction_vs_best_baseline};
 use bcgc::optimizer::runtime_model::ProblemSpec;
 use bcgc::optimizer::solver::{self, SchemeKind, SolveOptions};
 use bcgc::runtime::{host, host_factory, pjrt_factory};
-use bcgc::sim::{simulate_iteration, SimConfig};
+use bcgc::sim::{compare_adaptive_vs_static, simulate_iteration, MultiSimConfig, SimConfig};
 use bcgc::util::rng::Rng;
 use bcgc::{bench_harness::Table, Result};
 
@@ -40,6 +46,7 @@ fn run(args: &Args) -> Result<()> {
         Some("optimize") => cmd_optimize(args),
         Some("compare") => cmd_compare(args),
         Some("simulate") => cmd_simulate(args),
+        Some("adaptive") => cmd_adaptive(args),
         Some("train") => cmd_train(args),
         Some("artifacts") => cmd_artifacts(args),
         _ => {
@@ -57,7 +64,10 @@ fn print_usage() {
            optimize   --workers N --coords L [--mu 1e-3 --t0 50 --scheme x_f|x_t|subgradient|...]\n\
            compare    --workers N --coords L [--mu 1e-3 --t0 50 --trials 2000]\n\
            simulate   --workers N --coords L [--mu 1e-3 --t0 50 --comm-latency 0]\n\
+           adaptive   --workers N --coords L [--iters 450 --shift-at 150 --mu 1e-2 --mu2 1e-3\n\
+                       --grace 50 --window 400 --check-every 10 --json BENCH_adaptive.json]\n\
            train      --workers N [--steps 100 --lr 0.01 --model mlp|linreg --backend host|pjrt]\n\
+                      [--shift-at K --mu2 M --t0-2 T  --adaptive [--adapt-window W --adapt-every K]]\n\
            artifacts  [--dir artifacts]\n"
     );
 }
@@ -170,6 +180,61 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_adaptive(args: &Args) -> Result<()> {
+    let n: usize = args.get("workers", 20)?;
+    let coords: usize = args.get("coords", 20_000)?;
+    let iters: usize = args.get("iters", 450)?;
+    let shift_at: usize = args.get("shift-at", 150)?;
+    let grace: usize = args.get("grace", 50)?;
+    let mu: f64 = args.get("mu", 1e-2)?;
+    let t0: f64 = args.get("t0", 50.0)?;
+    let mu2: f64 = args.get("mu2", 1e-3)?;
+    let t0b: f64 = args.get("t0-2", t0)?;
+    let seed: u64 = args.get("seed", 2021)?;
+    if shift_at == 0 || shift_at >= iters {
+        return Err(bcgc::Error::InvalidArgument(
+            "--shift-at must lie strictly inside (0, --iters)".into(),
+        ));
+    }
+
+    let spec = ProblemSpec::paper_default(n, coords);
+    let d0 = ShiftedExponential::new(mu, t0);
+    let d1 = ShiftedExponential::new(mu2, t0b);
+    let schedule = StragglerSchedule::stationary(Box::new(d0.clone()))
+        .then(shift_at, Box::new(d1.clone()));
+    let initial = closed_form::x_freq_blocks(&spec, &d0, coords)?;
+    let oracle = closed_form::x_freq_blocks(&spec, &d1, coords)?;
+    println!("schedule        : {}", schedule.label());
+    println!("initial x^(f)   : {initial}");
+    println!("oracle  x^(f)   : {oracle}");
+
+    let acfg = AdaptiveConfig {
+        window: args.get("window", 20 * n)?,
+        check_every: args.get("check-every", 10)?,
+        cooldown: args.get("cooldown", 20)?,
+        min_samples: args.get("min-samples", 10 * n)?,
+        drift_threshold: args.get("drift-threshold", 0.2)?,
+        ..Default::default()
+    };
+    let sim_cfg = MultiSimConfig { iters, seed, comm_latency: args.get("comm-latency", 0.0)? };
+    let cmp = compare_adaptive_vs_static(
+        &spec,
+        &initial,
+        Some(&oracle),
+        &schedule,
+        &sim_cfg,
+        acfg,
+        grace,
+    )?;
+
+    print!("{}", cmp.render_report());
+    if let Some(path) = args.value("json") {
+        std::fs::write(path, cmp.render_json())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let n: usize = args.get("workers", 8)?;
     let steps: usize = args.get("steps", 100)?;
@@ -233,6 +298,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     )?;
     println!("blocks: {blocks}");
 
+    // Optional mid-training drift + online re-optimization.
+    let shift_at: usize = args.get("shift-at", 0)?;
+    let schedule = if shift_at > 0 {
+        let mu2: f64 = args.get("mu2", mu)?;
+        let t02: f64 = args.get("t0-2", t0)?;
+        StragglerSchedule::stationary(Box::new(dist.clone()))
+            .then(shift_at, Box::new(ShiftedExponential::new(mu2, t02)))
+    } else {
+        StragglerSchedule::stationary(Box::new(dist.clone()))
+    };
+
     let mut cfg = TrainConfig::new(spec, blocks);
     cfg.steps = steps;
     cfg.lr = lr;
@@ -241,8 +317,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.flag("real-pacing") {
         cfg.pacing = PacingMode::RealScaled { ns_per_unit: args.get("ns-per-unit", 50.0)? };
     }
-    let report = Trainer::new(cfg, Box::new(dist), factory).run()?;
+    if args.flag("adaptive") {
+        let d = AdaptiveConfig::default();
+        cfg.adaptive = Some(AdaptiveConfig {
+            window: args.get("adapt-window", d.window)?,
+            check_every: args.get("adapt-every", d.check_every)?,
+            cooldown: args.get("adapt-cooldown", d.cooldown)?,
+            min_samples: args.get("adapt-min-samples", d.min_samples)?,
+            drift_threshold: args.get("drift-threshold", d.drift_threshold)?,
+            ..d
+        });
+    }
+    let report = Trainer::with_schedule(cfg, schedule, factory).run()?;
     println!("{}", report.summary());
+    if report.scheme_epochs.len() > 1 {
+        println!("\nscheme epochs:\n{}", report.render_epochs());
+    }
     println!("\nloss curve:\n{}", report.render_loss_curve());
     Ok(())
 }

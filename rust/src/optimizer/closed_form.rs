@@ -12,7 +12,10 @@
 //! Theorem 2/3's expression. The generalized form (any positive `w_i`)
 //! also powers the Ferdinand hierarchical baseline (MDS factors).
 
-use crate::distribution::order_stats::OrderStats;
+use crate::distribution::order_stats::{shifted_exp_exact, OrderStats};
+use crate::distribution::shifted_exp::ShiftedExponential;
+use crate::optimizer::blocks::BlockPartition;
+use crate::optimizer::rounding::round_to_blocks;
 use crate::optimizer::runtime_model::{ProblemSpec, WorkModel};
 use crate::{Error, Result};
 
@@ -65,6 +68,30 @@ pub fn x_time(spec: &ProblemSpec, os: &OrderStats) -> Result<Vec<f64>> {
 /// `t'_n = 1/E[1/T_(n)]`.
 pub fn x_freq(spec: &ProblemSpec, os: &OrderStats) -> Result<Vec<f64>> {
     Ok(x_from_deterministic_t(spec, &os.t_prime, WorkModel::GradientCoding)?.0)
+}
+
+/// Convenience: Theorem 3's `x^(f)` for a shifted-exponential model,
+/// rounded to an integer partition over exactly `coords` coordinates
+/// (exact order statistics — no Monte Carlo). This is the adaptive
+/// engine's cheap re-solve; the drift experiments and CLI share it.
+///
+/// `coords` may differ from `spec.coords` (e.g. the deployed model's
+/// true parameter count): `x^(f)` is proportional to `L`, so the
+/// solution is rescaled before rounding.
+pub fn x_freq_blocks(
+    spec: &ProblemSpec,
+    dist: &ShiftedExponential,
+    coords: usize,
+) -> Result<BlockPartition> {
+    let os = shifted_exp_exact(dist, spec.n);
+    let mut x = x_freq(spec, &os)?;
+    if coords != spec.coords {
+        let scale = coords as f64 / spec.coords as f64;
+        for v in x.iter_mut() {
+            *v *= scale;
+        }
+    }
+    Ok(round_to_blocks(&x, coords))
 }
 
 /// The paper's explicit `m^(t)` (Theorem 2) — exposed for tests.
@@ -172,6 +199,24 @@ mod tests {
         let ends = x[0] + x[19];
         let total: f64 = x.iter().sum();
         assert!(ends / total > 1.0 / 3.0, "ends fraction = {}", ends / total);
+    }
+
+    #[test]
+    fn x_freq_blocks_rounds_and_rescales() {
+        let spec = ProblemSpec::paper_default(10, 5_000);
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let p = x_freq_blocks(&spec, &d, 5_000).unwrap();
+        assert_eq!(p.total(), 5_000);
+        // A model whose true dim differs from spec.coords still gets a
+        // full cover with the same proportions.
+        let q = x_freq_blocks(&spec, &d, 4_321).unwrap();
+        assert_eq!(q.total(), 4_321);
+        for (a, b) in p.sizes().iter().zip(q.sizes()) {
+            assert!(
+                ((*a as f64) * 4_321.0 / 5_000.0 - *b as f64).abs() < 2.0,
+                "{a} vs {b}"
+            );
+        }
     }
 
     #[test]

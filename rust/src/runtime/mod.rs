@@ -7,7 +7,9 @@
 //!   HLO text artifacts produced by `python/compile/aot.py` (Layer 2 JAX
 //!   graphs wrapping Layer 1 Pallas kernels) and executes them on the
 //!   PJRT CPU client via the `xla` crate. Python is never involved at
-//!   runtime.
+//!   runtime. Requires the `pjrt` cargo feature (the offline build image
+//!   ships no `xla` bindings); without it, a stub that fails loudly at
+//!   `load` time is exported instead.
 //! * [`host::HostExecutor`] — a pure-Rust mirror of the same models
 //!   (linear regression, MLP). Used for artifact-free unit tests and as a
 //!   numerical cross-check oracle against the PJRT path.

@@ -5,156 +5,238 @@
 //! Interchange is HLO **text** (not serialized protos): jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
 //! text parser reassigns ids (see DESIGN.md and the aot recipe).
+//!
+//! The whole backend sits behind the `pjrt` cargo feature because the
+//! offline build image ships neither the `xla` bindings nor `anyhow`;
+//! without the feature a stub `PjrtExecutor` is exported whose `load`
+//! fails with a descriptive error, so every caller (CLI `--backend
+//! pjrt`, `pjrt_factory`) degrades gracefully while the host backend
+//! stays fully functional.
 
-use std::path::Path;
-use std::sync::Arc;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::path::Path;
+    use std::sync::Arc;
 
-use anyhow::Context;
+    use anyhow::Context;
 
-use crate::data::Dataset;
-use crate::runtime::artifact::{ArtifactEntry, Manifest};
-use crate::runtime::GradExecutor;
-use crate::{Error, Result};
+    use crate::data::Dataset;
+    use crate::runtime::artifact::{ArtifactEntry, Manifest};
+    use crate::runtime::GradExecutor;
+    use crate::{Error, Result};
 
-/// A compiled (grad, loss) executable pair for one model variant.
-pub struct PjrtExecutor {
-    entry: ArtifactEntry,
-    data: Arc<Dataset>,
-    _client: xla::PjRtClient,
-    grad_exe: xla::PjRtLoadedExecutable,
-    loss_exe: xla::PjRtLoadedExecutable,
-    /// Pre-staged per-shard input literals (built once, reused per call).
-    shard_x: Vec<xla::Literal>,
-    shard_y: Vec<xla::Literal>,
+    /// A compiled (grad, loss) executable pair for one model variant.
+    pub struct PjrtExecutor {
+        entry: ArtifactEntry,
+        data: Arc<Dataset>,
+        _client: xla::PjRtClient,
+        grad_exe: xla::PjRtLoadedExecutable,
+        loss_exe: xla::PjRtLoadedExecutable,
+        /// Pre-staged per-shard input literals (built once, reused per call).
+        shard_x: Vec<xla::Literal>,
+        shard_y: Vec<xla::Literal>,
+    }
+
+    fn compile(
+        client: &xla::PjRtClient,
+        path: &Path,
+    ) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+    }
+
+    fn literal_2d(data: &[f32], rows: usize, cols: usize) -> anyhow::Result<xla::Literal> {
+        anyhow::ensure!(data.len() == rows * cols, "literal shape mismatch");
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    impl PjrtExecutor {
+        /// Load artifact `entry_name` from `artifact_dir` and stage the
+        /// dataset's shards as device literals.
+        pub fn load(artifact_dir: &Path, entry_name: &str, data: Arc<Dataset>) -> Result<Self> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let entry = manifest.get(entry_name)?.clone();
+            if data.features != entry.features || data.targets != entry.targets {
+                return Err(Error::Runtime(format!(
+                    "dataset ({}x{}) does not match artifact {} ({}x{})",
+                    data.features, data.targets, entry.name, entry.features, entry.targets
+                )));
+            }
+            if data.shard_size() != entry.shard {
+                return Err(Error::Runtime(format!(
+                    "dataset shard size {} != artifact shard size {}",
+                    data.shard_size(),
+                    entry.shard
+                )));
+            }
+            let client = xla::PjRtClient::cpu().map_err(anyhow::Error::from)?;
+            let grad_exe = compile(&client, &manifest.grad_path(&entry))?;
+            let loss_exe = compile(&client, &manifest.loss_path(&entry))?;
+            let mut shard_x = Vec::with_capacity(data.num_shards());
+            let mut shard_y = Vec::with_capacity(data.num_shards());
+            for s in 0..data.num_shards() {
+                shard_x.push(literal_2d(data.shard_x(s), entry.shard, entry.features)?);
+                shard_y.push(literal_2d(data.shard_y(s), entry.shard, entry.targets)?);
+            }
+            Ok(Self { entry, data, _client: client, grad_exe, loss_exe, shard_x, shard_y })
+        }
+
+        fn run_one(
+            exe: &xla::PjRtLoadedExecutable,
+            theta: &xla::Literal,
+            x: &xla::Literal,
+            y: &xla::Literal,
+        ) -> anyhow::Result<Vec<f32>> {
+            // `execute` is generic over Borrow<Literal>, so staged inputs are
+            // passed by reference — no per-call host copies.
+            let out = exe.execute::<&xla::Literal>(&[theta, x, y])?;
+            let lit = out[0][0].to_literal_sync()?;
+            // Artifacts are lowered with return_tuple=True ⇒ a 1-tuple.
+            let inner = lit.to_tuple1()?;
+            Ok(inner.to_vec::<f32>()?)
+        }
+
+        /// The artifact this executor runs.
+        pub fn entry(&self) -> &ArtifactEntry {
+            &self.entry
+        }
+    }
+
+    impl GradExecutor for PjrtExecutor {
+        fn grad_shard(&mut self, theta: &[f32], shard: usize) -> Result<Vec<f32>> {
+            if theta.len() != self.entry.param_dim {
+                return Err(Error::Runtime(format!(
+                    "theta dim {} != artifact param_dim {}",
+                    theta.len(),
+                    self.entry.param_dim
+                )));
+            }
+            let theta_lit = xla::Literal::vec1(theta);
+            let g = Self::run_one(
+                &self.grad_exe,
+                &theta_lit,
+                &self.shard_x[shard],
+                &self.shard_y[shard],
+            )?;
+            if g.len() != self.entry.param_dim {
+                return Err(Error::Runtime(format!(
+                    "artifact returned {} gradient entries, expected {}",
+                    g.len(),
+                    self.entry.param_dim
+                )));
+            }
+            Ok(g)
+        }
+
+        fn grad_shards(&mut self, theta: &[f32], shards: &[usize]) -> Result<Vec<Vec<f32>>> {
+            if theta.len() != self.entry.param_dim {
+                return Err(Error::Runtime(format!(
+                    "theta dim {} != artifact param_dim {}",
+                    theta.len(),
+                    self.entry.param_dim
+                )));
+            }
+            // Stage θ once for the whole batch (§Perf opt 2).
+            let theta_lit = xla::Literal::vec1(theta);
+            shards
+                .iter()
+                .map(|&s| {
+                    let g = Self::run_one(
+                        &self.grad_exe,
+                        &theta_lit,
+                        &self.shard_x[s],
+                        &self.shard_y[s],
+                    )?;
+                    if g.len() != self.entry.param_dim {
+                        return Err(Error::Runtime(format!(
+                            "artifact returned {} gradient entries, expected {}",
+                            g.len(),
+                            self.entry.param_dim
+                        )));
+                    }
+                    Ok(g)
+                })
+                .collect()
+        }
+
+        fn loss(&mut self, theta: &[f32]) -> Result<f32> {
+            let theta_lit = xla::Literal::vec1(theta);
+            let mut total = 0.0f32;
+            for s in 0..self.data.num_shards() {
+                let v = Self::run_one(
+                    &self.loss_exe,
+                    &theta_lit,
+                    &self.shard_x[s],
+                    &self.shard_y[s],
+                )?;
+                total += v[0];
+            }
+            Ok(total)
+        }
+
+        fn dim(&self) -> usize {
+            self.entry.param_dim
+        }
+
+        fn num_shards(&self) -> usize {
+            self.data.num_shards()
+        }
+    }
 }
 
-fn compile(client: &xla::PjRtClient, path: &Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path)
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
-}
+#[cfg(feature = "pjrt")]
+pub use imp::PjrtExecutor;
 
-fn literal_2d(data: &[f32], rows: usize, cols: usize) -> anyhow::Result<xla::Literal> {
-    anyhow::ensure!(data.len() == rows * cols, "literal shape mismatch");
-    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
+    use std::sync::Arc;
 
-impl PjrtExecutor {
-    /// Load artifact `entry_name` from `artifact_dir` and stage the
-    /// dataset's shards as device literals.
-    pub fn load(artifact_dir: &Path, entry_name: &str, data: Arc<Dataset>) -> Result<Self> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let entry = manifest.get(entry_name)?.clone();
-        if data.features != entry.features || data.targets != entry.targets {
-            return Err(Error::Runtime(format!(
-                "dataset ({}x{}) does not match artifact {} ({}x{})",
-                data.features, data.targets, entry.name, entry.features, entry.targets
-            )));
-        }
-        if data.shard_size() != entry.shard {
-            return Err(Error::Runtime(format!(
-                "dataset shard size {} != artifact shard size {}",
-                data.shard_size(),
-                entry.shard
-            )));
-        }
-        let client = xla::PjRtClient::cpu().map_err(anyhow::Error::from)?;
-        let grad_exe = compile(&client, &manifest.grad_path(&entry))?;
-        let loss_exe = compile(&client, &manifest.loss_path(&entry))?;
-        let mut shard_x = Vec::with_capacity(data.num_shards());
-        let mut shard_y = Vec::with_capacity(data.num_shards());
-        for s in 0..data.num_shards() {
-            shard_x.push(literal_2d(data.shard_x(s), entry.shard, entry.features)?);
-            shard_y.push(literal_2d(data.shard_y(s), entry.shard, entry.targets)?);
-        }
-        Ok(Self { entry, data, _client: client, grad_exe, loss_exe, shard_x, shard_y })
+    use crate::data::Dataset;
+    use crate::runtime::GradExecutor;
+    use crate::{Error, Result};
+
+    /// Built without the `pjrt` feature: [`PjrtExecutor::load`] always
+    /// fails with a descriptive error and the type cannot otherwise be
+    /// constructed. The pure-Rust host backend remains fully functional.
+    pub struct PjrtExecutor {
+        _unconstructible: std::convert::Infallible,
     }
 
-    fn run_one(
-        exe: &xla::PjRtLoadedExecutable,
-        theta: &xla::Literal,
-        x: &xla::Literal,
-        y: &xla::Literal,
-    ) -> anyhow::Result<Vec<f32>> {
-        // `execute` is generic over Borrow<Literal>, so staged inputs are
-        // passed by reference — no per-call host copies.
-        let out = exe.execute::<&xla::Literal>(&[theta, x, y])?;
-        let lit = out[0][0].to_literal_sync()?;
-        // Artifacts are lowered with return_tuple=True ⇒ a 1-tuple.
-        let inner = lit.to_tuple1()?;
-        Ok(inner.to_vec::<f32>()?)
+    impl PjrtExecutor {
+        pub fn load(
+            _artifact_dir: &Path,
+            entry_name: &str,
+            _data: Arc<Dataset>,
+        ) -> Result<Self> {
+            Err(Error::Runtime(format!(
+                "PJRT backend unavailable for artifact {entry_name:?}: \
+                 bcgc was built without the `pjrt` cargo feature \
+                 (requires the `xla` bindings; use the host backend instead)"
+            )))
+        }
     }
 
-    /// The artifact this executor runs.
-    pub fn entry(&self) -> &ArtifactEntry {
-        &self.entry
+    impl GradExecutor for PjrtExecutor {
+        fn grad_shard(&mut self, _theta: &[f32], _shard: usize) -> Result<Vec<f32>> {
+            match self._unconstructible {}
+        }
+
+        fn loss(&mut self, _theta: &[f32]) -> Result<f32> {
+            match self._unconstructible {}
+        }
+
+        fn dim(&self) -> usize {
+            match self._unconstructible {}
+        }
+
+        fn num_shards(&self) -> usize {
+            match self._unconstructible {}
+        }
     }
 }
 
-impl GradExecutor for PjrtExecutor {
-    fn grad_shard(&mut self, theta: &[f32], shard: usize) -> Result<Vec<f32>> {
-        if theta.len() != self.entry.param_dim {
-            return Err(Error::Runtime(format!(
-                "theta dim {} != artifact param_dim {}",
-                theta.len(),
-                self.entry.param_dim
-            )));
-        }
-        let theta_lit = xla::Literal::vec1(theta);
-        let g = Self::run_one(&self.grad_exe, &theta_lit, &self.shard_x[shard], &self.shard_y[shard])?;
-        if g.len() != self.entry.param_dim {
-            return Err(Error::Runtime(format!(
-                "artifact returned {} gradient entries, expected {}",
-                g.len(),
-                self.entry.param_dim
-            )));
-        }
-        Ok(g)
-    }
-
-    fn grad_shards(&mut self, theta: &[f32], shards: &[usize]) -> Result<Vec<Vec<f32>>> {
-        if theta.len() != self.entry.param_dim {
-            return Err(Error::Runtime(format!(
-                "theta dim {} != artifact param_dim {}",
-                theta.len(),
-                self.entry.param_dim
-            )));
-        }
-        // Stage θ once for the whole batch (§Perf opt 2).
-        let theta_lit = xla::Literal::vec1(theta);
-        shards
-            .iter()
-            .map(|&s| {
-                let g =
-                    Self::run_one(&self.grad_exe, &theta_lit, &self.shard_x[s], &self.shard_y[s])?;
-                if g.len() != self.entry.param_dim {
-                    return Err(Error::Runtime(format!(
-                        "artifact returned {} gradient entries, expected {}",
-                        g.len(),
-                        self.entry.param_dim
-                    )));
-                }
-                Ok(g)
-            })
-            .collect()
-    }
-
-    fn loss(&mut self, theta: &[f32]) -> Result<f32> {
-        let theta_lit = xla::Literal::vec1(theta);
-        let mut total = 0.0f32;
-        for s in 0..self.data.num_shards() {
-            let v = Self::run_one(&self.loss_exe, &theta_lit, &self.shard_x[s], &self.shard_y[s])?;
-            total += v[0];
-        }
-        Ok(total)
-    }
-
-    fn dim(&self) -> usize {
-        self.entry.param_dim
-    }
-
-    fn num_shards(&self) -> usize {
-        self.data.num_shards()
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtExecutor;

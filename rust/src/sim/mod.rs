@@ -1,13 +1,23 @@
-//! Discrete-event virtual-time simulator of the coded streaming protocol.
+//! Discrete-event virtual-time simulation of the coded streaming protocol.
 //!
-//! Independently validates Eq. (2): instead of evaluating the closed-form
-//! max, it *plays out* the protocol — workers emit block-completion
-//! events on a virtual clock, the master decodes each block at its
-//! quorum — and reports when the full gradient was assembled. The two
-//! must agree exactly when communication is free, and the simulator
-//! additionally supports per-message latency (an extension the closed
-//! form cannot express).
+//! [`event_sim`] independently validates Eq. (2) for a single iteration:
+//! instead of evaluating the closed-form max, it *plays out* the protocol
+//! — workers emit block-completion events on a virtual clock, the master
+//! decodes each block at its quorum — and reports when the full gradient
+//! was assembled. The two must agree exactly when communication is free,
+//! and the simulator additionally supports per-message latency (an
+//! extension the closed form cannot express).
+//!
+//! [`multi`] extends this to whole *training runs* under non-stationary
+//! straggler schedules, with the adaptive re-planning engine optionally
+//! in the loop — the scale-out evaluation harness for adaptive-vs-static
+//! comparisons (no threads, no gradients, pure virtual time).
 
 pub mod event_sim;
+pub mod multi;
 
 pub use event_sim::{simulate_iteration, SimConfig, SimOutcome};
+pub use multi::{
+    compare_adaptive_vs_static, simulate_adaptive, simulate_static, AdaptiveComparison,
+    MultiSimConfig, MultiSimReport,
+};

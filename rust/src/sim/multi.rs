@@ -1,0 +1,445 @@
+//! Multi-iteration, **non-stationary** training-time simulation: play
+//! out hundreds of coded GD iterations in virtual time — the straggler
+//! distribution shifting per a [`StragglerSchedule`], the adaptive
+//! controller re-planning the partition online — without spawning a
+//! single thread or computing a single gradient. This is how
+//! adaptive-vs-static is evaluated at scale (`benches/adaptive_drift.rs`
+//! and the `bcgc adaptive` subcommand are thin wrappers).
+//!
+//! Both arms of a comparison draw their cycle times from identically
+//! seeded streams (common random numbers), so runtime differences are
+//! pure scheme differences.
+
+use crate::bench_harness::Table;
+use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveController};
+use crate::coordinator::metrics::SchemeEpoch;
+use crate::coordinator::straggler::StragglerSchedule;
+use crate::optimizer::blocks::BlockPartition;
+use crate::optimizer::runtime_model::ProblemSpec;
+use crate::sim::event_sim::{simulate_iteration, SimConfig};
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// Multi-iteration simulation knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiSimConfig {
+    /// Number of GD iterations to play out.
+    pub iters: usize,
+    /// Seed for the cycle-time stream (share across arms for CRN).
+    pub seed: u64,
+    /// Fixed per-message master-link latency (0 = the paper's model).
+    pub comm_latency: f64,
+}
+
+impl Default for MultiSimConfig {
+    fn default() -> Self {
+        Self { iters: 300, seed: 2021, comm_latency: 0.0 }
+    }
+}
+
+/// Result of one multi-iteration run.
+#[derive(Debug, Clone)]
+pub struct MultiSimReport {
+    /// Per-iteration overall (virtual) completion times.
+    pub completion_times: Vec<f64>,
+    /// Scheme epoch each iteration ran under (all zero for static arms).
+    pub epochs: Vec<usize>,
+    /// Scheme swaps in order, recorded as the same [`SchemeEpoch`] the
+    /// threaded trainer reports (empty for static arms).
+    pub swaps: Vec<SchemeEpoch>,
+}
+
+impl MultiSimReport {
+    /// Mean completion time over iterations `[from, to)`.
+    pub fn mean_in(&self, from: usize, to: usize) -> f64 {
+        let to = to.min(self.completion_times.len());
+        if from >= to {
+            return f64::NAN;
+        }
+        let slice = &self.completion_times[from..to];
+        slice.iter().sum::<f64>() / slice.len() as f64
+    }
+
+    /// Mean completion time from iteration `from` to the end.
+    pub fn mean_from(&self, from: usize) -> f64 {
+        self.mean_in(from, self.completion_times.len())
+    }
+
+    /// Mean completion time before iteration `to`.
+    pub fn mean_before(&self, to: usize) -> f64 {
+        self.mean_in(0, to)
+    }
+
+    /// Sum of all per-iteration completion times (the run's Eq. (2)
+    /// overall runtime).
+    pub fn total(&self) -> f64 {
+        self.completion_times.iter().sum()
+    }
+}
+
+/// Play out `cfg.iters` iterations with one fixed partition.
+pub fn simulate_static(
+    spec: &ProblemSpec,
+    blocks: &BlockPartition,
+    schedule: &StragglerSchedule,
+    cfg: &MultiSimConfig,
+) -> MultiSimReport {
+    let mut rng = Rng::new(cfg.seed);
+    let sim_cfg = SimConfig { comm_latency: cfg.comm_latency };
+    let mut completion_times = Vec::with_capacity(cfg.iters);
+    for iter in 0..cfg.iters {
+        let times = schedule.dist_at(iter).sample_vec(spec.n, &mut rng);
+        let out = simulate_iteration(spec, blocks, &times, &sim_cfg);
+        completion_times.push(out.completion_time);
+    }
+    let epochs = vec![0; cfg.iters];
+    MultiSimReport { completion_times, epochs, swaps: Vec::new() }
+}
+
+/// Play out `cfg.iters` iterations with the adaptive engine in the loop:
+/// the controller observes each iteration's times and may install a
+/// re-optimized partition before any iteration (a new scheme epoch).
+///
+/// The cycle-time stream is seeded exactly like [`simulate_static`]'s
+/// (CRN); the re-solver draws from an independent stream so adaptive
+/// planning never perturbs the comparison.
+pub fn simulate_adaptive(
+    spec: &ProblemSpec,
+    initial: &BlockPartition,
+    schedule: &StragglerSchedule,
+    cfg: &MultiSimConfig,
+    adaptive_cfg: AdaptiveConfig,
+) -> Result<MultiSimReport> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut plan_rng = Rng::new(cfg.seed ^ 0x5EED_CAFE);
+    let sim_cfg = SimConfig { comm_latency: cfg.comm_latency };
+    let mut ctrl = match schedule.dist_at(0).as_shifted_exp() {
+        Some(d) => AdaptiveController::with_reference(adaptive_cfg, d.mu, d.t0),
+        None => AdaptiveController::new(adaptive_cfg),
+    };
+    let mut blocks = initial.clone();
+    let mut epoch = 0usize;
+    let mut completion_times = Vec::with_capacity(cfg.iters);
+    let mut epochs = Vec::with_capacity(cfg.iters);
+    let mut swaps = Vec::new();
+    for iter in 0..cfg.iters {
+        let warm = blocks.as_f64();
+        if let Some(plan) = ctrl.maybe_replan(iter, spec, &warm, &mut plan_rng)? {
+            blocks = plan.blocks;
+            epoch += 1;
+            swaps.push(SchemeEpoch {
+                epoch,
+                installed_at_iter: iter,
+                block_sizes: blocks.sizes().to_vec(),
+                estimated_mu: Some(plan.estimate.mu),
+                estimated_t0: Some(plan.estimate.t0),
+                drift: plan.drift,
+            });
+        }
+        let times = schedule.dist_at(iter).sample_vec(spec.n, &mut rng);
+        let out = simulate_iteration(spec, &blocks, &times, &sim_cfg);
+        completion_times.push(out.completion_time);
+        epochs.push(epoch);
+        ctrl.observe(&times);
+    }
+    Ok(MultiSimReport { completion_times, epochs, swaps })
+}
+
+/// Adaptive-vs-static comparison under one schedule: the static arm
+/// keeps the initial partition, the adaptive arm re-plans online, and an
+/// optional oracle arm runs a partition optimized for the *final* phase
+/// (the adaptive arm's upper bound).
+pub struct AdaptiveComparison {
+    pub spec_n: usize,
+    pub coords: usize,
+    pub iters: usize,
+    /// First shift point of the schedule (0 when stationary).
+    pub shift_at: usize,
+    /// Iterations after the shift excluded from the "after" means while
+    /// the estimator window refills.
+    pub grace: usize,
+    pub schedule_label: String,
+    pub static_run: MultiSimReport,
+    pub adaptive_run: MultiSimReport,
+    pub oracle_run: Option<MultiSimReport>,
+}
+
+impl AdaptiveComparison {
+    /// First iteration of the post-shift measurement window.
+    pub fn measure_from(&self) -> usize {
+        (self.shift_at + self.grace).min(self.iters)
+    }
+
+    pub fn static_after(&self) -> f64 {
+        self.static_run.mean_from(self.measure_from())
+    }
+
+    pub fn adaptive_after(&self) -> f64 {
+        self.adaptive_run.mean_from(self.measure_from())
+    }
+
+    pub fn oracle_after(&self) -> Option<f64> {
+        self.oracle_run.as_ref().map(|r| r.mean_from(self.measure_from()))
+    }
+
+    /// Post-shift improvement of adaptive over static, in percent.
+    pub fn improvement_pct(&self) -> f64 {
+        100.0 * (1.0 - self.adaptive_after() / self.static_after())
+    }
+
+    /// The standard human-readable report block (three-arm table, swap
+    /// log, improvement line) shared by the CLI and the bench.
+    pub fn render_report(&self) -> String {
+        let row = |label: &str, r: &MultiSimReport, after: f64| -> Vec<String> {
+            vec![
+                label.to_string(),
+                format!("{:.1}", r.mean_before(self.shift_at)),
+                format!("{after:.1}"),
+                format!("{:.0}", r.total()),
+            ]
+        };
+        let mut table =
+            Table::new(&["arm", "E[τ] before shift", "E[τ] after shift+grace", "Σ runtime"]);
+        table.row(&row("static (phase-0 optimal)", &self.static_run, self.static_after()));
+        table.row(&row("adaptive (online re-solve)", &self.adaptive_run, self.adaptive_after()));
+        if let Some(oracle) = &self.oracle_run {
+            table.row(&row("oracle (phase-1 optimal)", oracle, self.oracle_after().unwrap()));
+        }
+        let mut out = table.render();
+        for s in &self.adaptive_run.swaps {
+            out.push_str(&format!(
+                "swap at iter {:4}: fitted mu={}, t0={} (drift {:.2})\n",
+                s.installed_at_iter,
+                s.estimated_mu.map_or_else(|| "-".into(), |v| format!("{v:.3e}")),
+                s.estimated_t0.map_or_else(|| "-".into(), |v| format!("{v:.1}")),
+                s.drift
+            ));
+        }
+        out.push_str(&format!(
+            "\nadaptive vs static after the shift: {:.1}% faster\n",
+            self.improvement_pct()
+        ));
+        out
+    }
+
+    /// Serialize the comparison (hand-rolled JSON; no `serde` offline).
+    pub fn render_json(&self) -> String {
+        fn num(x: f64) -> String {
+            if x.is_finite() {
+                format!("{x:.6}")
+            } else {
+                "null".into()
+            }
+        }
+        let mut out = String::from("{\n");
+        out.push_str("  \"bench\": \"adaptive_drift\",\n");
+        out.push_str(&format!("  \"n\": {},\n", self.spec_n));
+        out.push_str(&format!("  \"coords\": {},\n", self.coords));
+        out.push_str(&format!("  \"iters\": {},\n", self.iters));
+        out.push_str(&format!("  \"shift_at\": {},\n", self.shift_at));
+        out.push_str(&format!("  \"grace\": {},\n", self.grace));
+        out.push_str(&format!(
+            "  \"schedule\": \"{}\",\n",
+            self.schedule_label.replace('"', "\\\"")
+        ));
+        out.push_str(&format!(
+            "  \"static\": {{\"mean_before\": {}, \"mean_after\": {}, \"total\": {}}},\n",
+            num(self.static_run.mean_before(self.shift_at)),
+            num(self.static_after()),
+            num(self.static_run.total()),
+        ));
+        out.push_str(&format!(
+            "  \"adaptive\": {{\"mean_before\": {}, \"mean_after\": {}, \"total\": {}, \"swaps\": [",
+            num(self.adaptive_run.mean_before(self.shift_at)),
+            num(self.adaptive_after()),
+            num(self.adaptive_run.total()),
+        ));
+        for (i, s) in self.adaptive_run.swaps.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!(
+                "{{\"iter\": {}, \"mu\": {}, \"t0\": {}, \"drift\": {}}}",
+                s.installed_at_iter,
+                s.estimated_mu.map_or_else(|| "null".to_string(), num),
+                s.estimated_t0.map_or_else(|| "null".to_string(), num),
+                num(s.drift)
+            ));
+        }
+        out.push_str("]},\n");
+        match &self.oracle_run {
+            Some(r) => out.push_str(&format!(
+                "  \"oracle\": {{\"mean_after\": {}, \"total\": {}}},\n",
+                num(r.mean_from(self.measure_from())),
+                num(r.total()),
+            )),
+            None => out.push_str("  \"oracle\": null,\n"),
+        }
+        out.push_str(&format!(
+            "  \"improvement_after_pct\": {}\n",
+            num(self.improvement_pct())
+        ));
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// Run all arms of the comparison with common random numbers.
+pub fn compare_adaptive_vs_static(
+    spec: &ProblemSpec,
+    initial: &BlockPartition,
+    oracle: Option<&BlockPartition>,
+    schedule: &StragglerSchedule,
+    cfg: &MultiSimConfig,
+    adaptive_cfg: AdaptiveConfig,
+    grace: usize,
+) -> Result<AdaptiveComparison> {
+    let shift_at = schedule.shift_points().first().copied().unwrap_or(0);
+    if shift_at + grace >= cfg.iters {
+        return Err(Error::InvalidArgument(format!(
+            "post-shift measurement window is empty: shift_at {shift_at} + grace {grace} \
+             must be < iters {}",
+            cfg.iters
+        )));
+    }
+    let static_run = simulate_static(spec, initial, schedule, cfg);
+    let adaptive_run = simulate_adaptive(spec, initial, schedule, cfg, adaptive_cfg)?;
+    let oracle_run = oracle.map(|b| simulate_static(spec, b, schedule, cfg));
+    Ok(AdaptiveComparison {
+        spec_n: spec.n,
+        coords: spec.coords,
+        iters: cfg.iters,
+        shift_at,
+        grace,
+        schedule_label: schedule.label(),
+        static_run,
+        adaptive_run,
+        oracle_run,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::straggler::StragglerSchedule;
+    use crate::distribution::shifted_exp::ShiftedExponential;
+    use crate::optimizer::runtime_model::{tau_hat, WorkModel};
+
+    fn spec() -> ProblemSpec {
+        ProblemSpec::paper_default(8, 800)
+    }
+
+    #[test]
+    fn stationary_static_run_matches_event_sim_per_iteration() {
+        let spec = spec();
+        let blocks = BlockPartition::new(vec![100; 8]);
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let schedule = StragglerSchedule::stationary(Box::new(d.clone()));
+        let cfg = MultiSimConfig { iters: 50, seed: 9, comm_latency: 0.0 };
+        let report = simulate_static(&spec, &blocks, &schedule, &cfg);
+        assert_eq!(report.completion_times.len(), 50);
+        // Replay the identical CRN stream through the closed form.
+        let mut rng = Rng::new(9);
+        for (iter, &got) in report.completion_times.iter().enumerate() {
+            let times = schedule.dist_at(iter).sample_vec(spec.n, &mut rng);
+            let want = tau_hat(&spec, &blocks.as_f64(), &times, WorkModel::GradientCoding);
+            assert!(
+                (got - want).abs() < 1e-9 * want.max(1.0),
+                "iter {iter}: sim {got} vs closed {want}"
+            );
+        }
+        assert!(report.swaps.is_empty());
+    }
+
+    #[test]
+    fn adaptive_run_swaps_after_a_shift_and_is_crn_aligned() {
+        let spec = spec();
+        let d0 = ShiftedExponential::new(1e-2, 50.0);
+        let d1 = ShiftedExponential::new(1e-3, 50.0);
+        let schedule = StragglerSchedule::stationary(Box::new(d0))
+            .then(40, Box::new(d1));
+        let blocks = BlockPartition::new(vec![100; 8]);
+        let cfg = MultiSimConfig { iters: 120, seed: 33, comm_latency: 0.0 };
+        let acfg = AdaptiveConfig {
+            window: 20 * spec.n,
+            min_samples: 10 * spec.n,
+            check_every: 10,
+            cooldown: 10,
+            // Generous threshold: the real shift moves the scale 10x, so
+            // detection is immediate while estimator noise (~8% rel SE at
+            // this window) stays far below the trigger.
+            drift_threshold: 0.3,
+            ..Default::default()
+        };
+        let adaptive = simulate_adaptive(&spec, &blocks, &schedule, &cfg, acfg).unwrap();
+        assert_eq!(adaptive.completion_times.len(), 120);
+        assert!(!adaptive.swaps.is_empty(), "the 7x mean shift must trigger a swap");
+        assert!(adaptive.swaps[0].installed_at_iter > 40, "swap must follow the shift");
+        // Epochs are monotone and match the swap record.
+        assert!(adaptive.epochs.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*adaptive.epochs.last().unwrap(), adaptive.swaps.len());
+        // CRN: before the first swap the adaptive arm is bit-identical to
+        // the static arm (same partition, same stream).
+        let static_run = simulate_static(&spec, &blocks, &schedule, &cfg);
+        let first_swap = adaptive.swaps[0].installed_at_iter;
+        for i in 0..first_swap {
+            assert_eq!(adaptive.completion_times[i], static_run.completion_times[i]);
+        }
+    }
+
+    #[test]
+    fn comparison_json_is_well_formed_enough() {
+        let spec = spec();
+        let d0 = ShiftedExponential::new(1e-2, 50.0);
+        let d1 = ShiftedExponential::new(1e-3, 50.0);
+        let schedule = StragglerSchedule::stationary(Box::new(d0)).then(30, Box::new(d1));
+        let blocks = BlockPartition::new(vec![100; 8]);
+        let cfg = MultiSimConfig { iters: 90, seed: 5, comm_latency: 0.0 };
+        let cmp = compare_adaptive_vs_static(
+            &spec,
+            &blocks,
+            Some(&blocks),
+            &schedule,
+            &cfg,
+            AdaptiveConfig {
+                window: 10 * spec.n,
+                min_samples: 5 * spec.n,
+                ..Default::default()
+            },
+            20,
+        )
+        .unwrap();
+        assert_eq!(cmp.shift_at, 30);
+        let json = cmp.render_json();
+        assert!(json.contains("\"bench\": \"adaptive_drift\""));
+        assert!(json.contains("\"static\""));
+        assert!(json.contains("\"adaptive\""));
+        assert!(json.contains("\"improvement_after_pct\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        let report = cmp.render_report();
+        assert!(report.contains("adaptive vs static after the shift"));
+        assert!(report.contains("oracle (phase-1 optimal)"));
+    }
+
+    #[test]
+    fn empty_measurement_window_is_rejected() {
+        let spec = spec();
+        let d0 = ShiftedExponential::new(1e-2, 50.0);
+        let d1 = ShiftedExponential::new(1e-3, 50.0);
+        let schedule = StragglerSchedule::stationary(Box::new(d0)).then(30, Box::new(d1));
+        let blocks = BlockPartition::new(vec![100; 8]);
+        let cfg = MultiSimConfig { iters: 90, seed: 5, comm_latency: 0.0 };
+        // shift_at 30 + grace 60 == iters 90 → nothing to measure.
+        let err = compare_adaptive_vs_static(
+            &spec,
+            &blocks,
+            None,
+            &schedule,
+            &cfg,
+            AdaptiveConfig::default(),
+            60,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("measurement window"), "{err}");
+    }
+}

@@ -1,64 +1,142 @@
-//! Minimal `log` backend (no `env_logger` in the offline environment).
+//! Minimal leveled stderr logging (the offline environment has no `log` /
+//! `env_logger` crates, so the crate ships its own shim).
 //!
-//! Level is chosen by the `BCGC_LOG` environment variable
-//! (`error|warn|info|debug|trace`), defaulting to `info`.
+//! The level is chosen by the `BCGC_LOG` environment variable
+//! (`error|warn|info|debug|trace`), defaulting to `info`. Emit records
+//! through the crate-root macros `log_error!` / `log_warn!` / `log_info!`
+//! / `log_debug!` (exported with `#[macro_export]`, so inside the crate
+//! they are `crate::log_warn!(...)` etc.).
 
+use std::fmt;
 use std::io::Write;
+use std::sync::OnceLock;
 use std::time::Instant;
 
-use once_cell::sync::OnceCell;
-
-static START: OnceCell<Instant> = OnceCell::new();
-
-struct StderrLogger {
-    level: log::LevelFilter,
+/// Verbosity levels, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
 }
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &log::Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-
-    fn log(&self, record: &log::Record) {
-        if !self.enabled(record.metadata()) {
-            return;
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
         }
-        let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
-        let mut err = std::io::stderr().lock();
-        let _ = writeln!(
-            err,
-            "[{t:10.4}s {:5} {}] {}",
-            record.level(),
-            record.target(),
-            record.args()
-        );
     }
-
-    fn flush(&self) {}
 }
 
-/// Install the logger. Idempotent; safe to call from tests and examples.
+static START: OnceLock<Instant> = OnceLock::new();
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+fn level_from_env() -> Level {
+    match std::env::var("BCGC_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    }
+}
+
+/// Install the logger clock and level. Idempotent; safe to call from
+/// tests and examples.
 pub fn init() {
     let _ = START.set(Instant::now());
-    let level = match std::env::var("BCGC_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        _ => log::LevelFilter::Info,
-    };
-    let logger = Box::new(StderrLogger { level });
-    if log::set_boxed_logger(logger).is_ok() {
-        log::set_max_level(level);
+    let _ = LEVEL.get_or_init(level_from_env);
+}
+
+/// The active verbosity ceiling.
+pub fn max_level() -> Level {
+    *LEVEL.get_or_init(level_from_env)
+}
+
+/// Emit one record (the `log_*!` macros call this; prefer those).
+pub fn log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if level > max_level() {
+        return;
     }
+    let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:10.4}s {:5} {target}] {args}", level.tag());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging works");
+        init();
+        init();
+        crate::log_info!("logging works");
+    }
+
+    #[test]
+    fn levels_are_ordered() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn records_above_ceiling_are_suppressed() {
+        // max_level() defaults to Info: trace must be filtered without
+        // panicking, and an error-level record must pass the gate.
+        log(Level::Trace, "test", format_args!("suppressed"));
+        log(Level::Error, "test", format_args!("emitted"));
     }
 }

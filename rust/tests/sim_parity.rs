@@ -1,0 +1,88 @@
+//! Sim/coordinator parity property: the event-driven simulator
+//! ([`bcgc::sim::simulate_iteration`]), the closed-form Eq. (2)
+//! accounting the threaded coordinator reports
+//! ([`bcgc::coordinator::straggler::virtual_runtime`]), and the
+//! per-worker block completion stamps its workers attach to every
+//! contribution ([`block_completion_stamps`]) must all tell the same
+//! story, across random partitions and cycle-time distributions.
+//!
+//! Concretely: block `j` decodes at the `(N − s_j)`-th smallest of the
+//! workers' completion stamps for `j`, the iteration completes at the
+//! max over blocks, and that equals both the simulator's completion time
+//! and `virtual_runtime`.
+
+use bcgc::coding::scheme::CodingScheme;
+use bcgc::coordinator::straggler::{block_completion_stamps, virtual_runtime};
+use bcgc::distribution::{
+    pareto::Pareto, shifted_exp::ShiftedExponential, weibull::Weibull, CycleTimeDistribution,
+};
+use bcgc::optimizer::rounding::round_to_blocks;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::sim::{simulate_iteration, SimConfig};
+use bcgc::testing::{gens, Runner};
+
+#[test]
+fn sim_completion_equals_stamp_quorum_and_eq2() {
+    Runner::new(150, 0xADA7).run("sim/coordinator parity", |rng| {
+        let n = gens::usize_in(rng, 2, 12);
+        let coords = n + gens::usize_in(rng, 0, 60);
+        let spec = ProblemSpec::new(n, coords, n * 8, 1.0);
+        let x = gens::feasible_x(rng, n, coords as f64);
+        let blocks = round_to_blocks(&x, coords);
+        let scheme = CodingScheme::new(blocks.clone(), rng).map_err(|e| e.to_string())?;
+
+        let dist: Box<dyn CycleTimeDistribution> = match rng.below(3) {
+            0 => Box::new(ShiftedExponential::new(
+                1e-3 + rng.uniform() * 0.02,
+                1.0 + rng.uniform() * 60.0,
+            )),
+            1 => Box::new(Weibull::new(
+                0.8 + rng.uniform() * 2.0,
+                5.0 + rng.uniform() * 20.0,
+                0.5,
+            )),
+            _ => Box::new(Pareto::new(1.5 + rng.uniform() * 2.0, 1.0 + rng.uniform())),
+        };
+        let times = dist.sample_vec(n, rng);
+
+        // Arm 1: event-driven playout.
+        let sim = simulate_iteration(&spec, &blocks, &times, &SimConfig::default());
+
+        // Arm 2: per-(worker, block) completion stamps → quorum decode
+        // times (exactly the stamps the threaded workers attach).
+        let stamps: Vec<Vec<f64>> = times
+            .iter()
+            .map(|&t| block_completion_stamps(&spec, &scheme, t))
+            .collect();
+        let ranges = blocks.ranges();
+        let mut completion = 0.0f64;
+        for (j, r) in ranges.iter().enumerate() {
+            let mut arrivals: Vec<f64> = stamps.iter().map(|s| s[j]).collect();
+            arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let decode = arrivals[n - r.s - 1]; // (N − s)-th smallest
+            let sim_decode = sim.block_decode_times[j];
+            if (sim_decode - decode).abs() > 1e-9 * decode.max(1.0) {
+                return Err(format!(
+                    "block {j}: sim decode {sim_decode} vs stamp quorum {decode}"
+                ));
+            }
+            completion = completion.max(decode);
+        }
+        if (sim.completion_time - completion).abs() > 1e-9 * completion.max(1.0) {
+            return Err(format!(
+                "completion: sim {} vs stamps {completion}",
+                sim.completion_time
+            ));
+        }
+
+        // Arm 3: the Eq. (2) closed form the trainer records.
+        let vr = virtual_runtime(&spec, &scheme, &times);
+        if (vr - sim.completion_time).abs() > 1e-9 * vr.max(1.0) {
+            return Err(format!(
+                "virtual_runtime {vr} vs sim completion {}",
+                sim.completion_time
+            ));
+        }
+        Ok(())
+    });
+}
