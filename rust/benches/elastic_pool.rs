@@ -1,0 +1,68 @@
+//! Elastic-vs-static under worker churn — the perf-trajectory bench
+//! behind `BENCH_elastic.json`.
+//!
+//! Scenario: N = 20 workers, L = 2·10⁴ coordinates (the paper's Fig. 4
+//! scale), stationary §VI stragglers (μ = 10⁻³, t0 = 50). At iteration
+//! 100 of 300, two workers depart for good. Two arms, on common random
+//! numbers:
+//!
+//! * **static** — the initial `x^(f)` (redundancy floor raised to s ≥ 2
+//!   so the fixed-`N` code can still decode with two dead rows) kept
+//!   for the whole run; the departed workers become permanent
+//!   stragglers it must code around forever;
+//! * **elastic** — same initial scheme; at the churn the coordinator
+//!   re-solves `x^(f)` for the live `N' = 18` from its windowed online
+//!   fit and installs the re-dimensioned scheme as a fresh epoch.
+//!
+//! The headline metric is the mean per-iteration overall runtime after
+//! the churn (+grace); the JSON artifact tracks it across PRs.
+//!
+//! Run: `cargo bench --bench elastic_pool` (set `BENCH_OUT` to move
+//! the artifact; defaults to ./BENCH_elastic.json).
+
+use bcgc::bench_harness::banner;
+use bcgc::coordinator::straggler::StragglerSchedule;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::closed_form::x_freq_blocks;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::sim::{compare_elastic_vs_static, ChurnSchedule, MultiSimConfig};
+
+fn main() {
+    banner(
+        "Elastic worker pool — departures mid-run, re-dimensioned x^(f)",
+        "N=20, L=2e4; 2 workers depart at iter 100 of 300; grace 40; CRN across arms.",
+    );
+    let (n, coords) = (20usize, 20_000usize);
+    let (iters, churn_at, departures, grace, seed) = (300usize, 100usize, 2usize, 40usize, 2021u64);
+    let spec = ProblemSpec::paper_default(n, coords);
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let schedule = StragglerSchedule::stationary(Box::new(dist.clone()));
+    // Floor the redundancy at the departure count so the static arm
+    // stays decodable — the fairest non-adaptive baseline.
+    let initial = x_freq_blocks(&spec, &dist, coords).unwrap().raise_min_level(departures);
+    let churn = ChurnSchedule::none().then_depart(churn_at, departures);
+    println!("initial x^(f) (floor s≥{departures}): {initial}");
+    println!("churn schedule: {}\n", churn.label());
+
+    let cfg = MultiSimConfig { iters, seed, comm_latency: 0.0 };
+    let cmp = compare_elastic_vs_static(
+        &spec,
+        &initial,
+        &schedule,
+        &churn,
+        &cfg,
+        20 * n, // fit window: ~20 iterations of observations
+        grace,
+    )
+    .unwrap();
+
+    print!("{}", cmp.render_report());
+    assert!(
+        cmp.elastic_after() < cmp.static_after(),
+        "the elastic coordinator must beat the static-N scheme after a departure"
+    );
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_elastic.json".into());
+    std::fs::write(&out, cmp.render_json()).expect("write bench artifact");
+    println!("wrote {out}");
+}

@@ -92,20 +92,31 @@ pub fn decode(a: &[f64], contributions: &[&[f64]]) -> Vec<f64> {
     out
 }
 
-/// Key for a cached decode vector: redundancy level + survivor bitmask.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-struct Key {
-    s: usize,
-    mask: u128,
+/// Key for a cached decode vector: redundancy level + survivor set.
+///
+/// The compact bitmask form only holds worker indices < 128; a `1u128
+/// << w` with `w ≥ 128` would wrap in release builds and silently
+/// collide cache keys (the old `debug_assert!` guard vanished exactly
+/// where it mattered), so larger indices fall back to the sorted index
+/// vector as the key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum Key {
+    Mask { s: usize, mask: u128 },
+    Wide { s: usize, survivors: Vec<usize> },
 }
 
-fn mask_of(survivors: &[usize]) -> u128 {
-    let mut m = 0u128;
-    for &w in survivors {
-        debug_assert!(w < 128, "DecodeCache supports N ≤ 128");
-        m |= 1u128 << w;
+/// Build the cache key for a **sorted-ascending** survivor slice.
+fn key_of(s: usize, sorted_survivors: &[usize]) -> Key {
+    match sorted_survivors.last() {
+        Some(&w) if w >= 128 => Key::Wide { s, survivors: sorted_survivors.to_vec() },
+        _ => {
+            let mut m = 0u128;
+            for &w in sorted_survivors {
+                m |= 1u128 << w;
+            }
+            Key::Mask { s, mask: m }
+        }
     }
-    m
 }
 
 /// LRU-less memo of decode vectors (survivor-set patterns per iteration are
@@ -148,14 +159,14 @@ impl DecodeCache {
         }
         let mut canon: Vec<usize> = survivors[..need].to_vec();
         canon.sort_unstable();
-        let key = Key { s: code.s, mask: mask_of(&canon) };
+        let key = key_of(code.s, &canon);
         if !self.map.contains_key(&key) {
             self.misses += 1;
             if self.map.len() >= self.capacity {
                 self.map.clear(); // cheap wholesale eviction
             }
             let a = decode_vector(code, &canon)?;
-            self.map.insert(key, a);
+            self.map.insert(key.clone(), a);
         } else {
             self.hits += 1;
         }
@@ -284,6 +295,48 @@ mod tests {
         }
         assert_eq!(cache.misses, 1);
         assert_eq!(cache.hits, 2);
+    }
+
+    #[test]
+    fn cache_keys_do_not_collide_for_worker_indices_past_127() {
+        // Regression: with N > 128 the old `1u128 << w` key wrapped in
+        // release builds, so the survivor sets {0,1,…} and {…,128,129}
+        // (bits 128/129 wrap onto 0/1) collided and the second decode
+        // silently reused the first set's vector. N = 130, s = 1: a
+        // block decodes from any 129 rows.
+        let mut rng = Rng::new(37);
+        let (n, s) = (130usize, 1usize);
+        let code = GradientCode::cyclic_mds(n, s, &mut rng).unwrap();
+        let grads: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.normal()]).collect();
+        let want: f64 = grads.iter().map(|g| g[0]).sum();
+        let contribs: Vec<Vec<f64>> = (0..n)
+            .map(|w| {
+                let held: Vec<&[f64]> =
+                    code.supports[w].iter().map(|&i| grads[i].as_slice()).collect();
+                code.encode(w, &held)
+            })
+            .collect();
+        // Set A drops row 129, set B drops row 0 — under the wrapping
+        // bitmask both hashed to "bits 0..129 mod 128".
+        let set_a: Vec<usize> = (0..129).collect();
+        let set_b: Vec<usize> = (1..130).collect();
+        let mut cache = DecodeCache::new(16);
+        for set in [&set_a, &set_b] {
+            let a = cache.get(&code, set).unwrap().to_vec();
+            let picked: Vec<&[f64]> = set.iter().map(|&w| contribs[w].as_slice()).collect();
+            let got = decode(&a, &picked);
+            assert!(
+                (got[0] - want).abs() < 1e-6 * (1.0 + want.abs()),
+                "set starting at {}: got {} want {want}",
+                set[0],
+                got[0]
+            );
+        }
+        assert_eq!(cache.misses, 2, "distinct survivor sets must get distinct keys");
+        assert_eq!(cache.hits, 0);
+        // And a repeat of the wide-key set still hits.
+        let _ = cache.get(&code, &set_b).unwrap();
+        assert_eq!(cache.hits, 1);
     }
 
     #[test]

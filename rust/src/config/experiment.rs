@@ -12,6 +12,8 @@ use std::path::Path;
 use crate::config::toml_lite::TomlDoc;
 use crate::coordinator::adaptive::{AdaptiveConfig, ResolveStrategy};
 use crate::coordinator::straggler::StragglerSchedule;
+use crate::coordinator::trainer::ElasticConfig;
+use crate::sim::ChurnSchedule;
 use crate::distribution::fit::FitMethod;
 use crate::distribution::{
     gamma::Gamma, lognormal::LogNormal, pareto::Pareto, shifted_exp::ShiftedExponential,
@@ -36,6 +38,8 @@ pub struct ExperimentConfig {
     pub drift: Option<DriftPhase>,
     /// Optional adaptive re-optimization policy (`[adaptive]` section).
     pub adaptive: Option<AdaptiveSettings>,
+    /// Optional elastic worker-pool policy (`[elastic]` section).
+    pub elastic: Option<ElasticSettings>,
 }
 
 /// Straggler-model choice (mirrors `distribution::*`).
@@ -177,6 +181,91 @@ impl AdaptiveSettings {
     }
 }
 
+/// `[elastic]` section: plain data, buildable into the trainer's
+/// [`ElasticConfig`] or a simulator [`ChurnSchedule`].
+///
+/// ```toml
+/// [elastic]
+/// enabled = true
+/// churn_threshold = 1
+/// depart_at = [100, 150]   # drain one worker before each iteration
+/// arrive_at = [220]        # spawn one worker before the iteration
+/// ```
+#[derive(Debug, Clone)]
+pub struct ElasticSettings {
+    /// Membership changes since the last rebind that trigger a
+    /// re-dimension.
+    pub churn_threshold: usize,
+    /// One departure scheduled before each listed iteration.
+    pub depart_at: Vec<usize>,
+    /// One arrival scheduled before each listed iteration.
+    pub arrive_at: Vec<usize>,
+}
+
+impl ElasticSettings {
+    fn parse(doc: &TomlDoc) -> Result<Option<Self>> {
+        if !doc.get_bool("elastic.enabled").unwrap_or(false) {
+            return Ok(None);
+        }
+        let iters_list = |key: &str| -> Result<Vec<usize>> {
+            let Some(v) = doc.get(key) else { return Ok(Vec::new()) };
+            let arr = v
+                .as_array()
+                .ok_or_else(|| Error::Config(format!("{key} must be an array")))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for item in arr {
+                let it = item
+                    .as_i64()
+                    .filter(|&i| i >= 1)
+                    .ok_or_else(|| Error::Config(format!("{key} entries must be ≥ 1")))?;
+                out.push(it as usize);
+            }
+            if out.windows(2).any(|w| w[0] > w[1]) {
+                return Err(Error::Config(format!("{key} must be in ascending order")));
+            }
+            Ok(out)
+        };
+        let threshold = match doc.get_i64("elastic.churn_threshold") {
+            None => 1,
+            Some(v) if v >= 1 => v as usize,
+            Some(_) => {
+                return Err(Error::Config("elastic.churn_threshold must be ≥ 1".into()))
+            }
+        };
+        Ok(Some(Self {
+            churn_threshold: threshold,
+            depart_at: iters_list("elastic.depart_at")?,
+            arrive_at: iters_list("elastic.arrive_at")?,
+        }))
+    }
+
+    /// The threaded trainer's elastic policy.
+    pub fn build(&self) -> ElasticConfig {
+        ElasticConfig {
+            churn_threshold: self.churn_threshold.max(1),
+            departures: self.depart_at.iter().map(|&at| (at, 1)).collect(),
+            arrivals: self.arrive_at.iter().map(|&at| (at, 1)).collect(),
+        }
+    }
+
+    /// The virtual-time simulator's churn schedule (events merged in
+    /// iteration order).
+    pub fn churn_schedule(&self) -> ChurnSchedule {
+        let mut events: Vec<(usize, bool)> = self
+            .depart_at
+            .iter()
+            .map(|&at| (at, true))
+            .chain(self.arrive_at.iter().map(|&at| (at, false)))
+            .collect();
+        events.sort_by_key(|&(at, _)| at);
+        let mut sched = ChurnSchedule::none();
+        for (at, depart) in events {
+            sched = if depart { sched.then_depart(at, 1) } else { sched.then_arrive(at, 1) };
+        }
+        sched
+    }
+}
+
 impl Default for ExperimentConfig {
     fn default() -> Self {
         Self {
@@ -190,6 +279,7 @@ impl Default for ExperimentConfig {
             distribution: DistConfig::ShiftedExp { mu: 1e-3, t0: 50.0 },
             drift: None,
             adaptive: None,
+            elastic: None,
         }
     }
 }
@@ -266,6 +356,7 @@ impl ExperimentConfig {
             settings.build()?; // validate eagerly so load-time errors are loud
             cfg.adaptive = Some(settings);
         }
+        cfg.elastic = ElasticSettings::parse(doc)?;
         if cfg.workers == 0 || cfg.coords == 0 || cfg.samples == 0 {
             return Err(Error::Config("workers/coords/samples must be ≥ 1".into()));
         }
@@ -402,6 +493,49 @@ mod tests {
         // without at_iter must not silently run stationary.
         let doc = TomlDoc::parse("[drift]\nkind = \"deterministic\"\nvalue = 1").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err(), "[drift] without at_iter");
+    }
+
+    #[test]
+    fn parse_elastic_section() {
+        let doc = TomlDoc::parse(
+            r#"
+            workers = 10
+            [elastic]
+            enabled = true
+            churn_threshold = 2
+            depart_at = [100, 150]
+            arrive_at = [220]
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        let el = cfg.elastic.as_ref().expect("elastic parsed");
+        assert_eq!(el.churn_threshold, 2);
+        assert_eq!(el.depart_at, vec![100, 150]);
+        assert_eq!(el.arrive_at, vec![220]);
+        let built = el.build();
+        assert_eq!(built.departures, vec![(100, 1), (150, 1)]);
+        assert_eq!(built.arrivals, vec![(220, 1)]);
+        let churn = el.churn_schedule();
+        assert_eq!(churn.first_change(), Some(100));
+        assert_eq!(churn.n_at(160, 10), 8);
+        assert_eq!(churn.n_at(220, 10), 9);
+    }
+
+    #[test]
+    fn elastic_disabled_by_default_and_bad_values_rejected() {
+        let doc = TomlDoc::parse("[elastic]\ndepart_at = [10]").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert!(cfg.elastic.is_none(), "elastic requires enabled = true");
+        for bad in [
+            "[elastic]\nenabled = true\nchurn_threshold = 0",
+            "[elastic]\nenabled = true\ndepart_at = [0]",
+            "[elastic]\nenabled = true\ndepart_at = 7",
+            "[elastic]\nenabled = true\narrive_at = [30, 10]",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_doc(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

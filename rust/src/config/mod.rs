@@ -7,5 +7,7 @@
 pub mod experiment;
 pub mod toml_lite;
 
-pub use experiment::{AdaptiveSettings, DistConfig, DriftPhase, ExperimentConfig};
+pub use experiment::{
+    AdaptiveSettings, DistConfig, DriftPhase, ElasticSettings, ExperimentConfig,
+};
 pub use toml_lite::{TomlValue, TomlDoc};

@@ -171,29 +171,72 @@ impl AdaptiveController {
         // `spec.coords` (the trainer only warns on that mismatch), so the
         // rounding target comes from the live partition, not the spec.
         let target = warm_x.iter().sum::<f64>().round().max(1.0) as usize;
-        let blocks = match &self.cfg.strategy {
-            ResolveStrategy::ClosedFormFreq => closed_form::x_freq_blocks(spec, &dist, target)?,
-            ResolveStrategy::Subgradient { iters, playoff_trials } => {
-                let opts = SubgradientOptions {
-                    iters: *iters,
-                    playoff_trials: *playoff_trials,
-                    ..Default::default()
-                };
-                let mut x = subgradient::solve(spec, &dist, Some(warm_x.to_vec()), &opts, rng)?.x;
-                if target != spec.coords {
-                    let scale = target as f64 / spec.coords as f64;
-                    for v in x.iter_mut() {
-                        *v *= scale;
-                    }
-                }
-                round_to_blocks(&x, target)
-            }
-        };
+        let blocks =
+            resolve_partition(&self.cfg.strategy, spec, &dist, Some(warm_x), target, rng)?;
         self.reference = Some(fit.clone());
         self.last_swap = Some(iter);
         self.swaps += 1;
         Ok(Some(ReplanDecision { blocks, estimate: fit, drift }))
     }
+}
+
+/// Re-solve the block partition under `strategy` for `spec` — the
+/// shared re-solve primitive behind both drift-triggered re-plans and
+/// elastic re-**dimensioning** (`spec.n` is whatever the live roster
+/// says; both the closed form and the subgradient method take `N` as an
+/// input). `target` is the coordinate count the partition must cover;
+/// `warm_x` (any length — it is resized to `spec.n`) warm-starts the
+/// subgradient path.
+pub fn resolve_partition(
+    strategy: &ResolveStrategy,
+    spec: &ProblemSpec,
+    dist: &crate::distribution::shifted_exp::ShiftedExponential,
+    warm_x: Option<&[f64]>,
+    target: usize,
+    rng: &mut Rng,
+) -> Result<BlockPartition> {
+    match strategy {
+        ResolveStrategy::ClosedFormFreq => closed_form::x_freq_blocks(spec, dist, target),
+        ResolveStrategy::Subgradient { iters, playoff_trials } => {
+            let opts = SubgradientOptions {
+                iters: *iters,
+                playoff_trials: *playoff_trials,
+                ..Default::default()
+            };
+            let warm = warm_x.map(|w| resize_warm(w, spec.n));
+            let mut x = subgradient::solve(spec, dist, warm, &opts, rng)?.x;
+            if target != spec.coords {
+                let scale = target as f64 / spec.coords as f64;
+                for v in x.iter_mut() {
+                    *v *= scale;
+                }
+            }
+            Ok(round_to_blocks(&x, target))
+        }
+    }
+}
+
+/// Adapt a warm-start vector to a different worker count: unchanged
+/// when the length already matches; otherwise truncated/zero-padded to
+/// `n` rows with the original mass preserved (rescaled), so a mild
+/// re-dimension still warm-starts near the old optimum.
+fn resize_warm(w: &[f64], n: usize) -> Vec<f64> {
+    if w.len() == n {
+        return w.to_vec();
+    }
+    let total: f64 = w.iter().sum();
+    let mut out = vec![0.0f64; n];
+    for (o, &v) in out.iter_mut().zip(w.iter()) {
+        *o = v;
+    }
+    let kept: f64 = out.iter().sum();
+    if kept > 0.0 && total > 0.0 {
+        let scale = total / kept;
+        for v in out.iter_mut() {
+            *v *= scale;
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -294,6 +337,26 @@ mod tests {
         let cfg = AdaptiveConfig { window: 0, min_samples: 0, ..Default::default() };
         let ctrl = AdaptiveController::new(cfg);
         assert_eq!(ctrl.observations(), 0);
+    }
+
+    #[test]
+    fn resolve_partition_accepts_a_different_n_than_the_warm_start() {
+        // Elastic re-dimensioning: the warm start comes from an N=10
+        // partition but the live roster shrank to N=8 (and grew to 12).
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let mut rng = Rng::new(17);
+        let warm = vec![100.0; 10];
+        for (n_new, strategy) in [
+            (8usize, ResolveStrategy::ClosedFormFreq),
+            (12, ResolveStrategy::ClosedFormFreq),
+            (8, ResolveStrategy::Subgradient { iters: 200, playoff_trials: 100 }),
+        ] {
+            let spec = ProblemSpec::paper_default(n_new, 1_000);
+            let p = resolve_partition(&strategy, &spec, &d, Some(warm.as_slice()), 1_000, &mut rng)
+                .unwrap();
+            assert_eq!(p.n(), n_new, "{strategy:?}");
+            assert_eq!(p.total(), 1_000, "{strategy:?}");
+        }
     }
 
     #[test]

@@ -4,15 +4,28 @@
 //!
 //! The coding scheme travels *with* each compute task as an
 //! epoch-versioned `Arc`, so the master can hot-swap a re-optimized
-//! scheme between iterations without respawning worker threads. Every
-//! coded block is stamped with the epoch it was encoded under; the master
+//! scheme between iterations without respawning worker threads. Workers
+//! have a **stable id** for their whole lifetime but are bound to a code
+//! **row position** per epoch (the elastic pool re-dimensions `N` on
+//! membership change — [`crate::coordinator::membership`]), so each task
+//! carries the worker's row for that epoch and every coded block is
+//! stamped with both the id and the row it was encoded as. The master
 //! drops contributions from superseded epochs exactly like
-//! stale-iteration messages (mixing codes across epochs would corrupt the
-//! decoded gradient).
+//! stale-iteration messages (mixing codes across epochs would corrupt
+//! the decoded gradient), and drops contributions whose id↔row binding
+//! no longer matches the live roster.
 
 use std::sync::Arc;
 
 use crate::coding::scheme::CodingScheme;
+
+/// Dataset shards backing each code subset: `shard_map[k]` lists the
+/// dataset shards whose summed gradient is subset `k`'s partial
+/// gradient. Identity (`[[0], [1], …]`) while `N` matches the dataset's
+/// shard count; after an elastic re-dimension the surviving subsets
+/// take over the full dataset (round-robin), so the decoded gradient
+/// still covers every sample exactly.
+pub type ShardMap = Vec<Vec<usize>>;
 
 /// Master → worker.
 pub enum WorkerTask {
@@ -21,15 +34,26 @@ pub enum WorkerTask {
         iter: usize,
         /// Scheme epoch this task was issued under (monotone).
         epoch: usize,
+        /// The code row this worker is bound to for `epoch`.
+        row: usize,
         /// The coding scheme of that epoch.
         scheme: Arc<CodingScheme>,
+        /// Subset → dataset shards mapping of that epoch.
+        shards: Arc<ShardMap>,
         /// Current model parameters (shared, read-only).
         theta: Arc<Vec<f32>>,
         /// This worker's sampled CPU cycle time `T_n` for the iteration
         /// (drives virtual completion stamps and real pacing).
         cycle_time: f64,
+        /// One unit of per-coordinate work, `(M/N)·b` cycles, under the
+        /// epoch's `N` (workers must not bake `N` in at spawn).
+        unit_work: f64,
     },
-    /// Clean shutdown.
+    /// Finish up and exit cleanly: acknowledge with
+    /// [`WorkerEvent::Left`], then return. Used to drain a worker out
+    /// of the elastic pool without killing its thread mid-encode.
+    Drain,
+    /// Clean shutdown (end of run; no acknowledgment expected).
     Shutdown,
 }
 
@@ -39,7 +63,11 @@ pub struct BlockContribution {
     /// Scheme epoch the block was **encoded** under. The master only
     /// mixes contributions of its current epoch into a decode.
     pub epoch: usize,
+    /// Stable id of the contributing worker.
     pub worker: usize,
+    /// Code row the block was encoded as (the worker's position in
+    /// `epoch`'s roster; decode survivor sets are sets of rows).
+    pub row: usize,
     /// Index into the scheme's non-empty block ranges.
     pub block_idx: usize,
     /// Virtual completion time of this block at this worker:
@@ -52,6 +80,15 @@ pub struct BlockContribution {
 /// Worker → master control-plane event.
 pub enum WorkerEvent {
     Block(BlockContribution),
+    /// The worker's executor came up: it is ready to be bound to a code
+    /// row at the next epoch rebind. Sent once per thread, right after
+    /// successful init (a join is not assigned work until the master
+    /// has seen this and swapped in a re-dimensioned epoch).
+    Joined { worker: usize },
+    /// The worker drained cleanly (in response to [`WorkerTask::Drain`])
+    /// and will contribute nothing more — mid-iteration this is
+    /// accounted exactly like a fatal straggler.
+    Left { worker: usize },
     /// The worker failed and will contribute nothing this iteration;
     /// carries a description. `fatal` distinguishes a dead worker (its
     /// thread exited — executor init failure) from a transient

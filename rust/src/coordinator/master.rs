@@ -1,10 +1,19 @@
 //! Master-side iteration engine: broadcast, collect, decode-on-arrival.
 //!
 //! The master owns the **current scheme epoch**: [`Master::install_scheme`]
-//! swaps in a re-optimized [`CodingScheme`] between iterations, and
-//! [`Master::collect`] rejects contributions stamped with a superseded
-//! epoch exactly like stale-iteration messages — coded blocks from two
-//! different codes must never mix into one decode.
+//! swaps in a re-optimized — possibly re-*dimensioned* (different `N`) —
+//! [`CodingScheme`] between iterations together with that epoch's roster
+//! (row → stable worker id binding), and [`Master::collect`] rejects
+//! contributions stamped with a superseded epoch exactly like
+//! stale-iteration messages — coded blocks from two different codes must
+//! never mix into one decode. Contributions whose id↔row binding does
+//! not match the live roster are dropped the same way (a drained worker's
+//! row may belong to someone else next epoch).
+//!
+//! All quorum accounting is **row**-indexed (rows are what the code's
+//! survivor sets are made of); stable worker ids appear only at the
+//! roster boundary and in the membership signals surfaced through
+//! [`IterOutcome`].
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -12,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use crate::coding::decoder::{decode, DecodeCache};
 use crate::coding::scheme::CodingScheme;
-use crate::coordinator::channel::{BlockContribution, WorkerEvent, WorkerTask};
+use crate::coordinator::channel::{BlockContribution, ShardMap, WorkerEvent, WorkerTask};
 use crate::{Error, Result};
 
 /// Outcome of one collected iteration.
@@ -26,11 +35,21 @@ pub struct IterOutcome {
     /// Contributions encoded under a superseded scheme epoch (dropped
     /// before they could touch a decode).
     pub stale_epoch: usize,
-    /// Workers that reported a **fatal** failure this iteration (their
+    /// Current-epoch contributions whose (worker id, row) stamp did not
+    /// match the live roster binding (dropped).
+    pub mismatched_binding: usize,
+    /// Workers (stable ids) that reported a **fatal** failure (their
     /// thread exited; exclude them from future quorum accounting).
     /// Transient per-iteration failures only affect the current
     /// iteration's satisfiability bookkeeping.
     pub failed: Vec<usize>,
+    /// Workers (stable ids) that announced a ready executor this
+    /// iteration — joins the registry should confirm for the next
+    /// epoch rebind.
+    pub joined: Vec<usize>,
+    /// Workers (stable ids) that drained cleanly this iteration;
+    /// mid-iteration this was accounted like a fatal straggler.
+    pub left: Vec<usize>,
 }
 
 /// Decode-on-arrival collector; owns the decode-vector cache across
@@ -39,6 +58,10 @@ pub struct Master {
     scheme: Arc<CodingScheme>,
     epoch: usize,
     dim: usize,
+    /// Row → stable worker id for the current epoch.
+    roster: Vec<usize>,
+    /// Subset → dataset shards for the current epoch.
+    shards: Arc<ShardMap>,
     cache: DecodeCache,
     /// Receive timeout before declaring the iteration stalled.
     pub timeout: Duration,
@@ -46,16 +69,29 @@ pub struct Master {
 
 struct BlockState {
     need: usize,
-    arrivals: Vec<(usize, Vec<f64>)>, // (worker, coded)
+    arrivals: Vec<(usize, Vec<f64>)>, // (row, coded)
     decoded: bool,
 }
 
 impl Master {
+    /// A master whose epoch-0 roster binds row `r` to worker id `r` and
+    /// whose subsets are backed 1:1 by dataset shards (the static-pool
+    /// identity; elastic sessions install rebound rosters later).
     pub fn new(scheme: Arc<CodingScheme>, dim: usize) -> Self {
+        let n = scheme.n();
+        Self::with_roster(scheme, dim, (0..n).collect())
+    }
+
+    /// A master with an explicit epoch-0 roster (row → stable id).
+    pub fn with_roster(scheme: Arc<CodingScheme>, dim: usize, roster: Vec<usize>) -> Self {
+        assert_eq!(roster.len(), scheme.n(), "roster must bind every code row");
+        let shards = Arc::new(identity_shards(scheme.n()));
         Self {
             scheme,
             epoch: 0,
             dim,
+            roster,
+            shards,
             cache: DecodeCache::new(4096),
             timeout: Duration::from_secs(30),
         }
@@ -75,33 +111,68 @@ impl Master {
         &self.scheme
     }
 
-    /// Install a new scheme as epoch `epoch`. Decode vectors are specific
-    /// to one code's coefficients (the cache keys only by `(s, survivor
+    /// The current epoch's roster (row → stable worker id).
+    pub fn roster(&self) -> &[usize] {
+        &self.roster
+    }
+
+    /// The current epoch's subset → dataset shards mapping.
+    pub fn shard_map(&self) -> &Arc<ShardMap> {
+        &self.shards
+    }
+
+    fn row_of(&self, worker: usize) -> Option<usize> {
+        self.roster.iter().position(|&id| id == worker)
+    }
+
+    /// Install a new scheme as epoch `epoch`, rebinding rows to
+    /// `roster` and subsets to `shards` (pass the previous mappings for
+    /// a same-`N` re-optimization). Decode vectors are specific to one
+    /// code's coefficients (the cache keys only by `(s, survivor
     /// set)`), so the cache map is reset; hit/miss counters survive.
-    pub fn install_scheme(&mut self, scheme: Arc<CodingScheme>, epoch: usize) {
+    pub fn install_scheme(
+        &mut self,
+        scheme: Arc<CodingScheme>,
+        epoch: usize,
+        roster: Vec<usize>,
+        shards: Arc<ShardMap>,
+    ) {
         assert!(epoch > self.epoch, "scheme epochs must be monotone");
+        assert_eq!(roster.len(), scheme.n(), "roster must bind every code row");
         self.scheme = scheme;
         self.epoch = epoch;
+        self.roster = roster;
+        self.shards = shards;
         self.cache.reset();
     }
 
     /// Broadcast one iteration's tasks under the current scheme epoch.
+    /// `tasks[row]` is the channel of the worker bound to that row
+    /// (`None` for rows whose worker already departed — the coded
+    /// scheme absorbs them like any straggler); `times[row]` its
+    /// sampled cycle time; `unit_work` the epoch's `(M/N)·b`.
     pub fn broadcast(
         &self,
         iter: usize,
         theta: Arc<Vec<f32>>,
         times: &[f64],
-        tasks: &[Sender<WorkerTask>],
+        unit_work: f64,
+        tasks: &[Option<Sender<WorkerTask>>],
     ) {
-        for (w, tx) in tasks.iter().enumerate() {
+        debug_assert_eq!(tasks.len(), self.scheme.n());
+        for (row, tx) in tasks.iter().enumerate() {
+            let Some(tx) = tx else { continue };
             // A send error just means that worker died; the coded scheme
             // absorbs it like any straggler.
             let _ = tx.send(WorkerTask::Compute {
                 iter,
                 epoch: self.epoch,
+                row,
                 scheme: self.scheme.clone(),
+                shards: self.shards.clone(),
                 theta: theta.clone(),
-                cycle_time: times[w],
+                cycle_time: times[row],
+                unit_work,
             });
         }
     }
@@ -114,10 +185,13 @@ impl Master {
     /// superseded scheme epoch are dropped as `stale_epoch` — they are
     /// coded under different coefficients and would corrupt the decode.
     ///
-    /// `live` flags which workers are up at iteration start (dead /
-    /// previously failed workers excluded); it seeds the per-(worker,
-    /// block) outstanding-message tracking used to detect unrecoverable
-    /// blocks without waiting for the timeout.
+    /// `live` flags which **rows** are up at iteration start (dead /
+    /// previously failed / departed workers excluded); it seeds the
+    /// per-(row, block) outstanding-message tracking used to detect
+    /// unrecoverable blocks without waiting for the timeout. A
+    /// [`WorkerEvent::Left`] arriving mid-iteration is accounted exactly
+    /// like a fatal failure: the row goes dead and satisfiability is
+    /// re-checked immediately.
     pub fn collect(
         &mut self,
         iter: usize,
@@ -135,17 +209,20 @@ impl Master {
         let mut decoded_count = 0usize;
         let mut late = 0usize;
         let mut stale_epoch = 0usize;
+        let mut mismatched = 0usize;
         let mut decode_ns = 0u64;
         let mut failed: Vec<usize> = Vec::new();
-        // Per-(worker, block) delivery state: `sent[w][b]` is true once
-        // worker `w`'s contribution to block `b` was received this
+        let mut joined: Vec<usize> = Vec::new();
+        let mut left: Vec<usize> = Vec::new();
+        // Per-(row, block) delivery state: `sent[row][b]` is true once
+        // that row's contribution to block `b` was received this
         // iteration. Together with `alive` this tracks exactly which
         // messages are still outstanding, so satisfiability checks count
-        // each worker only toward blocks it can actually still deliver.
+        // each row only toward blocks it can actually still deliver.
         let mut sent = vec![vec![false; ranges.len()]; n];
         let mut alive: Vec<bool> = live.to_vec();
 
-        // Dead workers are known up front: fail fast when a block can
+        // Dead rows are known up front: fail fast when a block can
         // never reach quorum instead of waiting out the stall timeout.
         self.check_still_satisfiable(&blocks, &sent, &alive, iter)?;
 
@@ -165,18 +242,36 @@ impl Master {
                 }
             };
             match ev {
-                WorkerEvent::Failed { worker, iter: ev_iter, reason, fatal } => {
-                    if ev_iter == iter {
-                        crate::log_warn!(
-                            "worker {worker} failed in iter {iter} (fatal={fatal}): {reason}"
-                        );
-                        if fatal {
-                            failed.push(worker);
+                WorkerEvent::Joined { worker } => {
+                    joined.push(worker);
+                }
+                WorkerEvent::Left { worker } => {
+                    crate::log_info!("worker {worker} drained (iter {iter})");
+                    left.push(worker);
+                    if let Some(row) = self.row_of(worker) {
+                        if alive[row] {
+                            alive[row] = false;
+                            self.check_still_satisfiable(&blocks, &sent, &alive, iter)?;
                         }
-                        // Either way the worker contributes nothing more
-                        // *this* iteration.
-                        alive[worker] = false;
-                        self.check_still_satisfiable(&blocks, &sent, &alive, iter)?;
+                    }
+                }
+                WorkerEvent::Failed { worker, iter: ev_iter, reason, fatal } => {
+                    crate::log_warn!(
+                        "worker {worker} failed in iter {ev_iter} (fatal={fatal}): {reason}"
+                    );
+                    if fatal {
+                        failed.push(worker);
+                    }
+                    // A fatal failure kills the worker whenever its
+                    // report arrives; a transient one only voids the
+                    // iteration it happened in.
+                    if fatal || ev_iter == iter {
+                        if let Some(row) = self.row_of(worker) {
+                            if alive[row] {
+                                alive[row] = false;
+                                self.check_still_satisfiable(&blocks, &sent, &alive, iter)?;
+                            }
+                        }
                     }
                 }
                 WorkerEvent::Block(c) => {
@@ -187,6 +282,12 @@ impl Master {
                         // Encoded under a superseded scheme: its block
                         // index and coefficients belong to another code.
                         stale_epoch += 1;
+                        continue;
+                    }
+                    if c.row >= n || self.roster[c.row] != c.worker {
+                        // The id↔row binding no longer matches the live
+                        // roster (e.g. a drained worker's leftovers).
+                        mismatched += 1;
                         continue;
                     }
                     self.on_block(
@@ -206,7 +307,10 @@ impl Master {
             decode_ns,
             late_contributions: late,
             stale_epoch,
+            mismatched_binding: mismatched,
             failed,
+            joined,
+            left,
         })
     }
 
@@ -221,25 +325,25 @@ impl Master {
         decode_ns: &mut u64,
         sent: &mut [Vec<bool>],
     ) -> Result<()> {
-        sent[c.worker][c.block_idx] = true;
+        sent[c.row][c.block_idx] = true;
         let ranges = self.scheme.ranges();
         let b = &mut blocks[c.block_idx];
         if b.decoded {
             *late += 1;
             return Ok(());
         }
-        b.arrivals.push((c.worker, c.coded));
+        b.arrivals.push((c.row, c.coded));
         if b.arrivals.len() < b.need {
             return Ok(());
         }
         // Decode now: the first `need` arrivals are the survivors.
-        // Canonicalize to ascending worker order — decode vectors are
+        // Canonicalize to ascending row order — decode vectors are
         // order-aligned, and the cache keys by survivor *set*, so the
         // same set must always be presented in the same order.
         let t0 = Instant::now();
         let r = &ranges[c.block_idx];
-        b.arrivals.sort_by_key(|(w, _)| *w);
-        let survivors: Vec<usize> = b.arrivals.iter().map(|(w, _)| *w).collect();
+        b.arrivals.sort_by_key(|(row, _)| *row);
+        let survivors: Vec<usize> = b.arrivals.iter().map(|(row, _)| *row).collect();
         // Borrow the cached decode vector without copying it (§Perf opt 3):
         // the scheme handle is an independent Arc, so the cache's mutable
         // borrow of `self` does not conflict.
@@ -258,10 +362,10 @@ impl Master {
     }
 
     /// After a failure, verify every undecoded block can still reach its
-    /// quorum. A worker counts toward a block only if it is alive *and*
+    /// quorum. A row counts toward a block only if it is alive *and*
     /// has not yet delivered that block — tracking outstanding status per
-    /// (worker, block) rather than per worker, so an unrecoverable block
-    /// is never declared recoverable just because some worker still owes
+    /// (row, block) rather than per row, so an unrecoverable block is
+    /// never declared recoverable just because some row still owes
     /// messages to *other* blocks.
     fn check_still_satisfiable(
         &self,
@@ -294,6 +398,24 @@ impl Master {
     }
 }
 
+/// The identity subset → shard mapping (subset `k` ↔ dataset shard `k`).
+pub fn identity_shards(n: usize) -> ShardMap {
+    (0..n).map(|k| vec![k]).collect()
+}
+
+/// Subset → dataset shards after re-dimensioning to `n` subsets over a
+/// dataset sharded `num_shards` ways: round-robin, so every shard stays
+/// covered by exactly one subset and the decoded gradient still equals
+/// the full-dataset gradient. Subsets beyond `num_shards` (a pool grown
+/// past the data's sharding) back nothing and contribute exact zeros.
+pub fn redistribute_shards(n: usize, num_shards: usize) -> ShardMap {
+    let mut map: ShardMap = vec![Vec::new(); n];
+    for shard in 0..num_shards {
+        map[shard % n].push(shard);
+    }
+    map
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,18 +423,20 @@ mod tests {
     use crate::util::rng::Rng;
     use std::sync::mpsc;
 
-    /// Build the full set of coded block events worker `w` would emit for
-    /// one iteration under `scheme`, from per-subset global gradients
-    /// (`subset_grads[k]` is subset `k`'s full-dimension gradient).
-    fn contributions(
+    /// Build the full set of coded block events the worker bound to
+    /// `row` (stable id `worker`) would emit for one iteration under
+    /// `scheme`, from per-subset global gradients (`subset_grads[k]` is
+    /// subset `k`'s full-dimension gradient).
+    fn row_contributions(
         scheme: &CodingScheme,
         iter: usize,
         epoch: usize,
         subset_grads: &[Vec<f64>],
         worker: usize,
+        row: usize,
     ) -> Vec<WorkerEvent> {
         let held: Vec<Vec<f64>> = scheme
-            .worker_subsets(worker)
+            .worker_subsets(row)
             .iter()
             .map(|&k| subset_grads[k].clone())
             .collect();
@@ -325,12 +449,24 @@ mod tests {
                     iter,
                     epoch,
                     worker,
+                    row,
                     block_idx,
                     virtual_time: 0.0,
-                    coded: scheme.encode_block_range(worker, r, &held),
+                    coded: scheme.encode_block_range(row, r, &held),
                 })
             })
             .collect()
+    }
+
+    /// Identity-roster shorthand (row == worker id).
+    fn contributions(
+        scheme: &CodingScheme,
+        iter: usize,
+        epoch: usize,
+        subset_grads: &[Vec<f64>],
+        worker: usize,
+    ) -> Vec<WorkerEvent> {
+        row_contributions(scheme, iter, epoch, subset_grads, worker, worker)
     }
 
     fn random_subset_grads(n: usize, dim: usize, rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<f64>) {
@@ -339,6 +475,12 @@ mod tests {
         let want: Vec<f64> =
             (0..dim).map(|d| grads.iter().map(|g| g[d]).sum()).collect();
         (grads, want)
+    }
+
+    fn install_identity(master: &mut Master, scheme: Arc<CodingScheme>, epoch: usize) {
+        let n = scheme.n();
+        let shards = Arc::new(identity_shards(n));
+        master.install_scheme(scheme, epoch, (0..n).collect(), shards);
     }
 
     #[test]
@@ -355,7 +497,7 @@ mod tests {
         let (subset_grads, want) = random_subset_grads(n, dim, &mut rng);
 
         let mut master = Master::new(scheme_a.clone(), dim);
-        master.install_scheme(scheme_b.clone(), 1);
+        install_identity(&mut master, scheme_b.clone(), 1);
         assert_eq!(master.epoch(), 1);
 
         let (tx, rx) = mpsc::channel();
@@ -407,7 +549,7 @@ mod tests {
         }
         let out0 = master.collect(0, &rx, &live).unwrap();
         // Epoch 1 round with the new code, same survivor pattern.
-        master.install_scheme(scheme_b.clone(), 1);
+        install_identity(&mut master, scheme_b.clone(), 1);
         let (tx, rx) = mpsc::channel();
         for w in 0..n {
             for ev in contributions(&scheme_b, 1, 1, &subset_grads, w) {
@@ -423,6 +565,76 @@ mod tests {
                 out1.gradient[d],
                 want[d]
             );
+        }
+    }
+
+    #[test]
+    fn redimensioned_epoch_decodes_exactly_with_a_compacted_roster() {
+        // N = 5 shrinks to N' = 3 (stable ids 0, 2, 4 survive): the
+        // re-dimensioned scheme's rows are positions in the *new*
+        // roster, and the decoded gradient is exactly the sum over the
+        // new scheme's subsets.
+        let (dim, n0, n1) = (6usize, 5usize, 3usize);
+        let mut rng = Rng::new(97);
+        let part0 = BlockPartition::new(vec![0, 6, 0, 0, 0]);
+        let scheme0 = Arc::new(CodingScheme::new(part0, &mut rng).unwrap());
+        let scheme1 =
+            Arc::new(CodingScheme::new(BlockPartition::new(vec![0, 6, 0]), &mut rng).unwrap());
+        let mut master = Master::new(scheme0, dim);
+        let roster: Vec<usize> = vec![0, 2, 4];
+        master.install_scheme(
+            scheme1.clone(),
+            1,
+            roster.clone(),
+            Arc::new(redistribute_shards(n1, n0)),
+        );
+        assert_eq!(master.roster(), &[0, 2, 4]);
+
+        let (subset_grads, want) = random_subset_grads(n1, dim, &mut rng);
+        let (tx, rx) = mpsc::channel();
+        for (row, &worker) in roster.iter().enumerate() {
+            for ev in row_contributions(&scheme1, 0, 1, &subset_grads, worker, row) {
+                tx.send(ev).unwrap();
+            }
+        }
+        let live = vec![true; n1];
+        let out = master.collect(0, &rx, &live).unwrap();
+        assert_eq!(out.mismatched_binding, 0);
+        for d in 0..dim {
+            assert!(
+                (out.gradient[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()),
+                "coordinate {d}: got {} want {}",
+                out.gradient[d],
+                want[d]
+            );
+        }
+    }
+
+    #[test]
+    fn mismatched_binding_is_dropped_not_decoded() {
+        // A contribution stamped with the current epoch but a row that
+        // belongs to a different stable id must be dropped.
+        let (n, dim) = (4usize, 4usize);
+        let mut rng = Rng::new(101);
+        let part = BlockPartition::new(vec![0, 4, 0, 0]); // s=1, need 3
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, want) = random_subset_grads(n, dim, &mut rng);
+        let mut master = Master::new(scheme.clone(), dim);
+        let (tx, rx) = mpsc::channel();
+        // Worker 9 falsely claims row 0 (bound to id 0).
+        for ev in row_contributions(&scheme, 0, 0, &subset_grads, 9, 0) {
+            tx.send(ev).unwrap();
+        }
+        for w in 0..3 {
+            for ev in contributions(&scheme, 0, 0, &subset_grads, w) {
+                tx.send(ev).unwrap();
+            }
+        }
+        let live = vec![true; n];
+        let out = master.collect(0, &rx, &live).unwrap();
+        assert_eq!(out.mismatched_binding, 1);
+        for d in 0..dim {
+            assert!((out.gradient[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()));
         }
     }
 
@@ -464,6 +676,62 @@ mod tests {
             start.elapsed() < Duration::from_secs(5),
             "unrecoverability must be detected without waiting out the stall timeout"
         );
+    }
+
+    #[test]
+    fn leave_mid_iteration_fail_fasts_like_a_fatal_straggler() {
+        // Same shape as the fatal-failure case, but the worker departs
+        // *cleanly* (a drain ack landing mid-iteration): block 0 (s=0)
+        // becomes unrecoverable and the master must fail fast via
+        // check_still_satisfiable instead of stalling into the timeout.
+        let (n, dim) = (3usize, 3usize);
+        let mut rng = Rng::new(103);
+        let part = BlockPartition::new(vec![2, 1, 0]); // block0 s=0 need 3
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, _) = random_subset_grads(n, dim, &mut rng);
+
+        let mut master = Master::new(scheme.clone(), dim);
+        master.timeout = Duration::from_secs(30);
+
+        let (tx, rx) = mpsc::channel();
+        for ev in contributions(&scheme, 0, 0, &subset_grads, 0) {
+            tx.send(ev).unwrap();
+        }
+        tx.send(WorkerEvent::Left { worker: 2 }).unwrap();
+
+        let start = Instant::now();
+        let live = vec![true; n];
+        let err = master.collect(0, &rx, &live).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unrecoverable"), "{msg}");
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "a mid-iteration Leave must fail fast, not stall into the timeout"
+        );
+    }
+
+    #[test]
+    fn leave_within_redundancy_still_decodes_and_is_reported() {
+        let (n, dim) = (4usize, 4usize);
+        let mut rng = Rng::new(107);
+        let part = BlockPartition::new(vec![0, 4, 0, 0]); // s=1, need 3
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, want) = random_subset_grads(n, dim, &mut rng);
+        let mut master = Master::new(scheme.clone(), dim);
+        let (tx, rx) = mpsc::channel();
+        tx.send(WorkerEvent::Left { worker: 3 }).unwrap();
+        for w in 0..3 {
+            for ev in contributions(&scheme, 0, 0, &subset_grads, w) {
+                tx.send(ev).unwrap();
+            }
+        }
+        let live = vec![true; n];
+        let out = master.collect(0, &rx, &live).unwrap();
+        assert_eq!(out.left, vec![3]);
+        assert!(out.failed.is_empty(), "a clean departure is not a failure");
+        for d in 0..dim {
+            assert!((out.gradient[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()));
+        }
     }
 
     #[test]
@@ -533,5 +801,23 @@ mod tests {
         for d in 0..dim {
             assert!((out.gradient[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()));
         }
+    }
+
+    #[test]
+    fn shard_redistribution_covers_every_shard_exactly_once() {
+        for (n, shards) in [(3usize, 8usize), (8, 8), (5, 3), (1, 4)] {
+            let map = redistribute_shards(n, shards);
+            assert_eq!(map.len(), n);
+            let mut seen = vec![0usize; shards];
+            for backing in &map {
+                for &s in backing {
+                    seen[s] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "n={n} shards={shards}: {seen:?}");
+        }
+        // More subsets than shards: the overflow subsets back nothing.
+        let map = redistribute_shards(6, 4);
+        assert!(map[4].is_empty() && map[5].is_empty());
     }
 }

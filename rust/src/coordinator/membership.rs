@@ -1,0 +1,295 @@
+//! Worker-pool membership: stable **worker ids** decoupled from per-epoch
+//! **code row positions**.
+//!
+//! The paper (and PR 1's adaptive engine) treat the worker count `N` as a
+//! construction-time constant: worker `n` *is* row `n` of the encoding
+//! matrix for the whole run. At production scale workers join, leave and
+//! die mid-training, so the coordinator instead gives every worker thread
+//! a stable [`WorkerId`] for its whole lifetime and binds ids to code
+//! rows **per scheme epoch** through a [`WorkerRegistry`]:
+//!
+//! * a *join* registers a new id as `Pending`; it is assigned no work
+//!   (and no row) until the next epoch rebind — and only once its
+//!   executor has come up ([`WorkerRegistry::confirm`], driven by the
+//!   worker's `Joined` event);
+//! * a *leave* (clean drain or fatal failure) marks the id `Departed`;
+//!   it keeps its row for the remainder of the current epoch — the
+//!   master treats it exactly like a fatal straggler — and is dropped at
+//!   the next rebind;
+//! * [`WorkerRegistry::rebind`] starts a membership epoch: confirmed
+//!   pending ids become `Active`, departed ids are dropped, and rows
+//!   `0..N'` are assigned to the active ids in ascending id order. The
+//!   caller re-dimensions the coding scheme to the new `N'` and installs
+//!   it as a fresh scheme epoch, so within any epoch decoding stays
+//!   exact.
+//!
+//! The registry tracks *churn* (confirmed joins + leaves) since the last
+//! rebind; the trainer re-dimensions once churn passes a threshold, or
+//! immediately when departures exceed what the live scheme's redundancy
+//! can absorb.
+
+/// Stable worker identity: allocated monotonically, never reused.
+pub type WorkerId = usize;
+
+/// Lifecycle state of a registered worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemberStatus {
+    /// Joined but not yet bound to a code row (waiting for the next
+    /// epoch rebind).
+    Pending,
+    /// Bound to a row in the current epoch's roster.
+    Active,
+    /// Left (drained, died, or never came up); dropped at the next
+    /// rebind.
+    Departed,
+}
+
+/// Id ↔ row bookkeeping for the elastic worker pool.
+#[derive(Debug, Clone)]
+pub struct WorkerRegistry {
+    /// Status per worker id (ids are indices; never reused).
+    status: Vec<MemberStatus>,
+    /// Whether the worker's executor is known to be up (its `Joined`
+    /// event was observed). Initial members are presumed up.
+    confirmed: Vec<bool>,
+    /// Current epoch's roster: row → worker id.
+    roster: Vec<WorkerId>,
+    /// Inverse map: worker id → row in the current roster.
+    rows: Vec<Option<usize>>,
+    /// Membership changes (confirmed joins + leaves of rostered or
+    /// confirmed members) since the last [`Self::rebind`].
+    churn: usize,
+}
+
+impl WorkerRegistry {
+    /// A registry for an initial pool of `n0` workers (ids `0..n0`),
+    /// all active and bound to rows `0..n0` (row = id for epoch 0).
+    pub fn new(n0: usize) -> Self {
+        assert!(n0 >= 1, "the pool needs at least one worker");
+        Self {
+            status: vec![MemberStatus::Active; n0],
+            confirmed: vec![true; n0],
+            roster: (0..n0).collect(),
+            rows: (0..n0).map(Some).collect(),
+            churn: 0,
+        }
+    }
+
+    /// Register a new worker. It stays `Pending` — unassigned to any
+    /// row — until it is [confirmed](Self::confirm) and the next
+    /// [rebind](Self::rebind) runs.
+    pub fn join(&mut self) -> WorkerId {
+        let id = self.status.len();
+        self.status.push(MemberStatus::Pending);
+        self.confirmed.push(false);
+        self.rows.push(None);
+        id
+    }
+
+    /// Mark a pending worker's executor as up (its `Joined` event was
+    /// observed). Counts toward churn: a confirmed join is a membership
+    /// change the next rebind must absorb. Idempotent.
+    pub fn confirm(&mut self, id: WorkerId) {
+        if id < self.status.len()
+            && self.status[id] == MemberStatus::Pending
+            && !self.confirmed[id]
+        {
+            self.confirmed[id] = true;
+            self.churn += 1;
+        }
+    }
+
+    /// Mark a worker as departed (clean drain or fatal failure). It
+    /// keeps its current row — the master accounts for it like a fatal
+    /// straggler — until the next rebind drops it. Idempotent.
+    pub fn leave(&mut self, id: WorkerId) {
+        if id >= self.status.len() || self.status[id] == MemberStatus::Departed {
+            return;
+        }
+        match self.status[id] {
+            MemberStatus::Active => self.churn += 1,
+            // A confirmed-but-unbound join cancels out: it never held a
+            // row, so its arrival and departure are a net no-op.
+            MemberStatus::Pending => {
+                if self.confirmed[id] {
+                    self.churn = self.churn.saturating_sub(1);
+                }
+            }
+            MemberStatus::Departed => unreachable!(),
+        }
+        self.status[id] = MemberStatus::Departed;
+    }
+
+    /// Start a membership epoch: promote confirmed pending workers,
+    /// drop departed ones, and bind rows `0..N'` to the active ids in
+    /// ascending id order. Returns the new roster. Resets churn.
+    pub fn rebind(&mut self) -> &[WorkerId] {
+        for (s, &confirmed) in self.status.iter_mut().zip(self.confirmed.iter()) {
+            if *s == MemberStatus::Pending && confirmed {
+                *s = MemberStatus::Active;
+            }
+        }
+        self.roster = (0..self.status.len())
+            .filter(|&id| self.status[id] == MemberStatus::Active)
+            .collect();
+        for r in self.rows.iter_mut() {
+            *r = None;
+        }
+        for (row, &id) in self.roster.iter().enumerate() {
+            self.rows[id] = Some(row);
+        }
+        self.churn = 0;
+        &self.roster
+    }
+
+    /// The current epoch's roster (row → worker id).
+    pub fn roster(&self) -> &[WorkerId] {
+        &self.roster
+    }
+
+    /// Rows in the current roster, i.e. the live scheme's `N`.
+    pub fn n(&self) -> usize {
+        self.roster.len()
+    }
+
+    /// The roster size a rebind would produce *now*: active members not
+    /// yet departed, plus confirmed pending joins.
+    pub fn next_n(&self) -> usize {
+        self.status
+            .iter()
+            .zip(self.confirmed.iter())
+            .filter(|&(s, c)| {
+                *s == MemberStatus::Active || (*s == MemberStatus::Pending && *c)
+            })
+            .count()
+    }
+
+    /// The row worker `id` holds in the current roster (None while
+    /// pending, after departure + rebind, or for unknown ids).
+    pub fn row_of(&self, id: WorkerId) -> Option<usize> {
+        self.rows.get(id).copied().flatten()
+    }
+
+    /// The worker id bound to `row` in the current roster.
+    pub fn id_at(&self, row: usize) -> Option<WorkerId> {
+        self.roster.get(row).copied()
+    }
+
+    /// Lifecycle state of `id` (None for unknown ids).
+    pub fn status(&self, id: WorkerId) -> Option<MemberStatus> {
+        self.status.get(id).copied()
+    }
+
+    /// Membership changes since the last rebind.
+    pub fn churn_since_rebind(&self) -> usize {
+        self.churn
+    }
+
+    /// Rostered workers that have departed this epoch — dead rows the
+    /// live scheme's redundancy must currently absorb.
+    pub fn departed_in_roster(&self) -> usize {
+        self.roster
+            .iter()
+            .filter(|&&id| self.status[id] == MemberStatus::Departed)
+            .count()
+    }
+
+    /// Total ids ever allocated (capacity of id-indexed side tables).
+    pub fn capacity(&self) -> usize {
+        self.status.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_pool_is_identity_bound() {
+        let reg = WorkerRegistry::new(4);
+        assert_eq!(reg.n(), 4);
+        assert_eq!(reg.roster(), &[0, 1, 2, 3]);
+        for id in 0..4 {
+            assert_eq!(reg.row_of(id), Some(id));
+            assert_eq!(reg.id_at(id), Some(id));
+            assert_eq!(reg.status(id), Some(MemberStatus::Active));
+        }
+        assert_eq!(reg.churn_since_rebind(), 0);
+        assert_eq!(reg.next_n(), 4);
+    }
+
+    #[test]
+    fn join_is_unbound_until_confirmed_and_rebound() {
+        let mut reg = WorkerRegistry::new(3);
+        let id = reg.join();
+        assert_eq!(id, 3);
+        assert_eq!(reg.status(id), Some(MemberStatus::Pending));
+        assert_eq!(reg.row_of(id), None);
+        // Unconfirmed joins neither count as churn nor survive a rebind
+        // into the roster.
+        assert_eq!(reg.churn_since_rebind(), 0);
+        assert_eq!(reg.next_n(), 3);
+        reg.rebind();
+        assert_eq!(reg.n(), 3);
+        assert_eq!(reg.row_of(id), None);
+        // Confirmation makes it churn; the next rebind binds a row.
+        reg.confirm(id);
+        reg.confirm(id); // idempotent
+        assert_eq!(reg.churn_since_rebind(), 1);
+        assert_eq!(reg.next_n(), 4);
+        reg.rebind();
+        assert_eq!(reg.n(), 4);
+        assert_eq!(reg.row_of(id), Some(3));
+        assert_eq!(reg.churn_since_rebind(), 0);
+    }
+
+    #[test]
+    fn leave_keeps_the_row_until_rebind() {
+        let mut reg = WorkerRegistry::new(4);
+        reg.leave(1);
+        reg.leave(1); // idempotent
+        assert_eq!(reg.status(1), Some(MemberStatus::Departed));
+        // Still rostered this epoch (the master sees it as a dead row)…
+        assert_eq!(reg.row_of(1), Some(1));
+        assert_eq!(reg.departed_in_roster(), 1);
+        assert_eq!(reg.churn_since_rebind(), 1);
+        assert_eq!(reg.next_n(), 3);
+        // …and dropped at the rebind, with rows compacted in id order.
+        reg.rebind();
+        assert_eq!(reg.roster(), &[0, 2, 3]);
+        assert_eq!(reg.row_of(1), None);
+        assert_eq!(reg.row_of(2), Some(1));
+        assert_eq!(reg.row_of(3), Some(2));
+        assert_eq!(reg.departed_in_roster(), 0);
+    }
+
+    #[test]
+    fn confirmed_join_that_leaves_before_rebind_cancels_out() {
+        let mut reg = WorkerRegistry::new(2);
+        let id = reg.join();
+        reg.confirm(id);
+        assert_eq!(reg.churn_since_rebind(), 1);
+        reg.leave(id);
+        assert_eq!(reg.churn_since_rebind(), 0);
+        reg.rebind();
+        assert_eq!(reg.roster(), &[0, 1]);
+    }
+
+    #[test]
+    fn mixed_churn_rebinds_to_the_surviving_set() {
+        let mut reg = WorkerRegistry::new(5);
+        reg.leave(0);
+        reg.leave(3);
+        let a = reg.join(); // 5
+        let b = reg.join(); // 6
+        reg.confirm(b);
+        // a unconfirmed: waits for a later rebind.
+        assert_eq!(reg.churn_since_rebind(), 3);
+        assert_eq!(reg.next_n(), 4);
+        reg.rebind();
+        assert_eq!(reg.roster(), &[1, 2, 4, 6]);
+        assert_eq!(reg.id_at(3), Some(6));
+        assert_eq!(reg.row_of(a), None);
+        assert_eq!(reg.status(a), Some(MemberStatus::Pending));
+    }
+}

@@ -11,6 +11,9 @@ pub struct IterMetrics {
     pub iter: usize,
     /// Scheme epoch this iteration ran under.
     pub epoch: usize,
+    /// Code rows (= the epoch's `N`) in the scheme this iteration ran
+    /// under — shrinks/grows as the elastic pool re-dimensions.
+    pub workers: usize,
     /// Eq. (2) overall runtime under the sampled `T` (model time units).
     pub virtual_runtime: f64,
     /// Wall-clock nanoseconds spent in the iteration (compute + decode).
@@ -22,8 +25,9 @@ pub struct IterMetrics {
     /// Coded contributions that arrived after their block was already
     /// decoded (pure overhead under the partial-straggler model).
     pub late_contributions: usize,
-    /// Contributions encoded under a superseded scheme epoch, dropped
-    /// before they could mix into a decode.
+    /// Contributions dropped before they could mix into a decode:
+    /// encoded under a superseded scheme epoch, or stamped with an
+    /// id↔row binding that no longer matches the live roster.
     pub stale_epoch_contributions: usize,
     /// Gradient L2 norm (diagnostic).
     pub grad_norm: f64,
@@ -46,6 +50,28 @@ pub struct SchemeEpoch {
     pub drift: f64,
 }
 
+/// One membership change in an elastic run (joins, leaves, and the
+/// epoch swaps that re-dimensioned the scheme around them).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MembershipRecord {
+    /// Iteration before which the change was applied/observed.
+    pub iter: usize,
+    pub event: MembershipEvent,
+}
+
+/// What changed in the worker pool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MembershipEvent {
+    /// A worker (stable id) was registered; it waits for the next
+    /// epoch rebind before receiving work.
+    Join { worker: usize },
+    /// A worker (stable id) left: clean drain or fatal failure.
+    Leave { worker: usize },
+    /// The scheme was re-dimensioned from `from_n` to `to_n` rows and
+    /// installed as scheme epoch `epoch`.
+    Redimension { from_n: usize, to_n: usize, epoch: usize },
+}
+
 /// Full training run report.
 #[derive(Debug, Clone, Default)]
 pub struct TrainReport {
@@ -54,6 +80,8 @@ pub struct TrainReport {
     pub loss_curve: Vec<(usize, f32)>,
     /// Every scheme epoch installed during the run, in order.
     pub scheme_epochs: Vec<SchemeEpoch>,
+    /// Worker-pool membership changes, in order (empty for static runs).
+    pub membership: Vec<MembershipRecord>,
     /// Decode-vector cache statistics.
     pub decode_cache_hits: u64,
     pub decode_cache_misses: u64,
@@ -143,6 +171,22 @@ impl TrainReport {
         out
     }
 
+    /// Render the membership log as a compact text block.
+    pub fn render_membership(&self) -> String {
+        let mut out = String::from("iter,event\n");
+        for m in &self.membership {
+            let ev = match &m.event {
+                MembershipEvent::Join { worker } => format!("join worker {worker}"),
+                MembershipEvent::Leave { worker } => format!("leave worker {worker}"),
+                MembershipEvent::Redimension { from_n, to_n, epoch } => {
+                    format!("redimension N {from_n}→{to_n} (epoch {epoch})")
+                }
+            };
+            out.push_str(&format!("{},{ev}\n", m.iter));
+        }
+        out
+    }
+
     /// One-line summary.
     pub fn summary(&self) -> String {
         format!(
@@ -168,6 +212,7 @@ mod tests {
         IterMetrics {
             iter,
             epoch,
+            workers: 4,
             virtual_runtime: vr,
             wall_ns: 1000,
             decode_ns: 100,
@@ -229,5 +274,26 @@ mod tests {
         let txt = r.render_epochs();
         assert!(txt.contains("1,40,3"), "{txt}");
         assert!(txt.contains("1.000e-3") || txt.contains("1.000e-03"), "{txt}");
+    }
+
+    #[test]
+    fn membership_log_renders() {
+        let mut r = TrainReport::default();
+        r.membership.push(MembershipRecord {
+            iter: 12,
+            event: MembershipEvent::Leave { worker: 3 },
+        });
+        r.membership.push(MembershipRecord {
+            iter: 12,
+            event: MembershipEvent::Redimension { from_n: 8, to_n: 7, epoch: 2 },
+        });
+        r.membership.push(MembershipRecord {
+            iter: 30,
+            event: MembershipEvent::Join { worker: 8 },
+        });
+        let txt = r.render_membership();
+        assert!(txt.contains("12,leave worker 3"), "{txt}");
+        assert!(txt.contains("redimension N 8→7 (epoch 2)"), "{txt}");
+        assert!(txt.contains("30,join worker 8"), "{txt}");
     }
 }

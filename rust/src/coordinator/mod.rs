@@ -26,6 +26,15 @@
 //! rejected like stale-iteration messages, so codewords from two schemes
 //! never mix into one decode.
 //!
+//! On top of scheme epochs sit **membership epochs** ([`membership`]):
+//! worker identity is decoupled from code row position, so `N` itself is
+//! an epoch property. Joins wait unassigned until the next epoch swap,
+//! leaves (clean drains or fatal failures) are accounted as fatal
+//! stragglers for the rest of the current epoch, and once churn passes a
+//! threshold the trainer re-solves the partition for the live roster's
+//! `N'` and installs the re-dimensioned scheme — decoding stays exact
+//! within every epoch.
+//!
 //! Pacing is virtual by default (timing comes from the paper's cost
 //! model; numerics are real); `PacingMode::RealScaled` makes workers
 //! actually sleep proportionally, so arrival order matches the model and
@@ -34,6 +43,7 @@
 pub mod adaptive;
 pub mod channel;
 pub mod master;
+pub mod membership;
 pub mod metrics;
 pub mod state;
 pub mod straggler;

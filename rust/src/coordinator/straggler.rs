@@ -126,7 +126,18 @@ pub fn block_completion_stamps(
     scheme: &CodingScheme,
     cycle_time: f64,
 ) -> Vec<f64> {
-    let unit = spec.unit_work();
+    block_completion_stamps_unit(spec.unit_work(), scheme, cycle_time)
+}
+
+/// [`block_completion_stamps`] from a precomputed unit of work
+/// (`(M/N)·b` cycles). The elastic pool re-dimensions `N` mid-run, so
+/// workers receive the epoch's unit with each task instead of baking a
+/// `ProblemSpec` in at spawn.
+pub fn block_completion_stamps_unit(
+    unit: f64,
+    scheme: &CodingScheme,
+    cycle_time: f64,
+) -> Vec<f64> {
     let mut cum = 0.0;
     scheme
         .ranges()

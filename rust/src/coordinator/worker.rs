@@ -1,38 +1,55 @@
 //! Worker thread: sequentially computes, encodes and streams coded
 //! gradient blocks for each GD iteration.
 //!
-//! The coding scheme is **not** baked in at spawn: it arrives with every
-//! [`WorkerTask::Compute`] as an epoch-versioned `Arc`, so the master can
-//! install a re-optimized scheme between iterations (adaptive coding
-//! engine) without respawning the thread. The per-scheme derived state
-//! (held subsets, block ranges) is cached and refreshed only when the
-//! epoch changes.
+//! Neither the coding scheme nor the worker's code-row position is baked
+//! in at spawn: both arrive with every [`WorkerTask::Compute`] as
+//! epoch-versioned state, so the master can install a re-optimized —
+//! even re-**dimensioned** (different `N`) — scheme between iterations
+//! without respawning the thread. The thread's stable id is only used
+//! for control-plane events; all encoding is done as the task's `row`.
+//! The per-scheme derived state (held subsets, block ranges, backing
+//! dataset shards) is cached and refreshed only when the epoch changes.
+//!
+//! Lifecycle: the thread announces itself with [`WorkerEvent::Joined`]
+//! once its executor is up, and acknowledges a [`WorkerTask::Drain`]
+//! with [`WorkerEvent::Left`] before exiting (the elastic pool's clean
+//! departure path).
 
 use std::sync::mpsc::{Receiver, Sender};
 
 use crate::coordinator::channel::{BlockContribution, WorkerEvent, WorkerTask};
-use crate::coordinator::straggler::block_completion_stamps;
+use crate::coordinator::straggler::block_completion_stamps_unit;
 use crate::coordinator::PacingMode;
 use crate::optimizer::blocks::BlockRange;
-use crate::optimizer::runtime_model::ProblemSpec;
 use crate::runtime::ExecutorFactory;
 
 /// Everything a worker thread needs (moved into the thread at spawn).
 pub struct WorkerContext {
+    /// Stable worker id (thread identity; not a code row).
     pub id: usize,
-    pub spec: ProblemSpec,
     pub factory: ExecutorFactory,
     pub tasks: Receiver<WorkerTask>,
     pub events: Sender<WorkerEvent>,
     pub pacing: PacingMode,
 }
 
-/// Worker main loop. Returns when the task channel closes or a Shutdown
-/// arrives; executor errors are reported to the master as
+/// Per-epoch derived state, recomputed only on an epoch change.
+struct EpochState {
+    epoch: usize,
+    row: usize,
+    /// Subsets held as the epoch's `row` (nested allocation prefix).
+    held: Vec<usize>,
+    ranges: Vec<BlockRange>,
+    /// Dataset shards backing each held subset.
+    held_shards: Vec<Vec<usize>>,
+}
+
+/// Worker main loop. Returns when the task channel closes or a
+/// Shutdown/Drain arrives; executor errors are reported to the master as
 /// [`WorkerEvent::Failed`] (the coded scheme tolerates them like any
 /// other straggler, up to each block's redundancy).
 pub fn run(ctx: WorkerContext) {
-    let WorkerContext { id, spec, factory, tasks, events, pacing } = ctx;
+    let WorkerContext { id, factory, tasks, events, pacing } = ctx;
     let mut exec = match factory(id) {
         Ok(e) => e,
         Err(e) => {
@@ -45,26 +62,55 @@ pub fn run(ctx: WorkerContext) {
             return;
         }
     };
-    // Per-scheme derived state, keyed by epoch (schemes swap rarely, so
-    // recomputing only on an epoch change keeps the hot path identical to
-    // the static design).
-    let mut cached: Option<(usize, Vec<usize>, Vec<BlockRange>)> = None;
+    // Ready to be bound to a code row (joins wait for the next epoch).
+    if events.send(WorkerEvent::Joined { worker: id }).is_err() {
+        return; // master gone
+    }
+    let dim = exec.dim();
+    // Schemes swap rarely, so recomputing derived state only on an epoch
+    // change keeps the hot path identical to the static design.
+    let mut cached: Option<EpochState> = None;
 
     while let Ok(task) = tasks.recv() {
-        let (iter, epoch, scheme, theta, cycle_time) = match task {
-            WorkerTask::Compute { iter, epoch, scheme, theta, cycle_time } => {
-                (iter, epoch, scheme, theta, cycle_time)
+        let (iter, epoch, row, scheme, shards, theta, cycle_time, unit_work) = match task {
+            WorkerTask::Compute {
+                iter,
+                epoch,
+                row,
+                scheme,
+                shards,
+                theta,
+                cycle_time,
+                unit_work,
+            } => (iter, epoch, row, scheme, shards, theta, cycle_time, unit_work),
+            WorkerTask::Drain => {
+                let _ = events.send(WorkerEvent::Left { worker: id });
+                return;
             }
             WorkerTask::Shutdown => return,
         };
-        if cached.as_ref().map(|(e, _, _)| *e) != Some(epoch) {
-            cached = Some((epoch, scheme.worker_subsets(id).to_vec(), scheme.ranges()));
+        if cached.as_ref().map(|c| (c.epoch, c.row)) != Some((epoch, row)) {
+            let held = scheme.worker_subsets(row).to_vec();
+            let held_shards: Vec<Vec<usize>> = held
+                .iter()
+                .map(|&k| shards.get(k).cloned().unwrap_or_default())
+                .collect();
+            cached = Some(EpochState {
+                epoch,
+                row,
+                held,
+                ranges: scheme.ranges(),
+                held_shards,
+            });
         }
-        let (_, held, ranges) = cached.as_ref().unwrap();
-        // Real compute: partial gradients of every held subset (batched
-        // so the executor can stage θ once — §Perf opt 2). Encoding
-        // consumes the f32 results directly (§Perf opt 1).
-        let grads = match exec.grad_shards(&theta, held) {
+        let state = cached.as_ref().unwrap();
+        // Real compute: partial gradients of every dataset shard backing
+        // a held subset, batched so the executor can stage θ once
+        // (§Perf opt 2). Encoding consumes the f32 results directly
+        // (§Perf opt 1).
+        let flat: Vec<usize> =
+            state.held_shards.iter().flat_map(|s| s.iter().copied()).collect();
+        let flat_grads = match exec.grad_shards(&theta, &flat) {
             Ok(g) => g,
             Err(e) => {
                 let _ = events.send(WorkerEvent::Failed {
@@ -76,12 +122,34 @@ pub fn run(ctx: WorkerContext) {
                 continue;
             }
         };
+        // Re-assemble per held subset: a subset's gradient is the sum
+        // over its backing shards (after an elastic re-dimension a
+        // subset can back several shards, or — when N grew past the
+        // dataset's shard count — none, contributing exact zeros).
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(state.held.len());
+        let mut flat_iter = flat_grads.into_iter();
+        for backing in &state.held_shards {
+            match backing.len() {
+                0 => grads.push(vec![0.0f32; dim]),
+                1 => grads.push(flat_iter.next().unwrap()),
+                _ => {
+                    let mut acc = flat_iter.next().unwrap();
+                    for _ in 1..backing.len() {
+                        let g = flat_iter.next().unwrap();
+                        for (a, v) in acc.iter_mut().zip(g.iter()) {
+                            *a += v;
+                        }
+                    }
+                    grads.push(acc);
+                }
+            }
+        }
         // Stream coded blocks in coordinate order (the paper's sequential
         // emission), stamping each with its virtual completion time.
-        let stamps = block_completion_stamps(&spec, &scheme, cycle_time);
+        let stamps = block_completion_stamps_unit(unit_work, &scheme, cycle_time);
         let mut elapsed_virtual = 0.0f64;
-        for (block_idx, r) in ranges.iter().enumerate() {
-            let coded = scheme.encode_block_range_f32(id, r, &grads);
+        for (block_idx, r) in state.ranges.iter().enumerate() {
+            let coded = scheme.encode_block_range_f32(row, r, &grads);
             if let PacingMode::RealScaled { ns_per_unit } = pacing {
                 let wait_units = stamps[block_idx] - elapsed_virtual;
                 elapsed_virtual = stamps[block_idx];
@@ -95,6 +163,7 @@ pub fn run(ctx: WorkerContext) {
                     iter,
                     epoch,
                     worker: id,
+                    row,
                     block_idx,
                     virtual_time: stamps[block_idx],
                     coded,

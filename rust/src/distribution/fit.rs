@@ -23,6 +23,8 @@
 use std::collections::VecDeque;
 
 use super::shifted_exp::ShiftedExponential;
+use super::weibull::Weibull;
+use crate::util::special::ln_gamma;
 
 /// Which estimator [`fit_shifted_exp`] applies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -122,6 +124,90 @@ pub fn fit_shifted_exp(samples: &[f64], method: FitMethod) -> Option<ShiftedExpE
     Some(ShiftedExpEstimate { mu, t0, samples: n })
 }
 
+/// A fitted shifted-Weibull parameter triple.
+#[derive(Debug, Clone)]
+pub struct WeibullEstimate {
+    /// Estimated shape `k` (k < 1 = heavier-than-exponential tails).
+    pub shape: f64,
+    /// Estimated scale `λ`.
+    pub scale: f64,
+    /// Estimated shift (clamped ≥ 0; [`Weibull`] requires it).
+    pub shift: f64,
+    /// Number of samples the fit used.
+    pub samples: usize,
+}
+
+impl WeibullEstimate {
+    /// `E[T] = shift + λ·Γ(1 + 1/k)` under the fitted parameters.
+    pub fn mean(&self) -> f64 {
+        self.shift + self.scale * ln_gamma(1.0 + 1.0 / self.shape).exp()
+    }
+
+    /// Materialize the fitted distribution.
+    pub fn to_distribution(&self) -> Weibull {
+        Weibull::new(self.shape, self.scale, self.shift)
+    }
+}
+
+/// The squared coefficient of variation of a (non-shifted) Weibull with
+/// shape `k`: `Γ(1+2/k)/Γ(1+1/k)² − 1`. Strictly decreasing in `k`.
+fn weibull_cv2(k: f64) -> f64 {
+    (ln_gamma(1.0 + 2.0 / k) - 2.0 * ln_gamma(1.0 + 1.0 / k)).exp() - 1.0
+}
+
+/// Fit a shifted Weibull by the method of moments (ROADMAP "estimator
+/// families beyond shifted-exp"). The shift is located from the sample
+/// minimum with the same `(x̄ − x_(1))/(n−1)` bias correction the
+/// shifted-exp MLE uses (clamped ≥ 0 — [`Weibull`] requires it); the
+/// shape then solves `CV² = Γ(1+2/k)/Γ(1+1/k)² − 1` on the de-shifted
+/// moments by bisection (the left side is strictly decreasing in `k`),
+/// and the scale follows as `m/Γ(1+1/k)`. Returns `None` for samples
+/// too small or degenerate to support a fit.
+pub fn fit_weibull_mom(samples: &[f64]) -> Option<WeibullEstimate> {
+    let n = samples.len();
+    if n < 3 {
+        return None;
+    }
+    let mut sum = 0.0f64;
+    let mut min = f64::INFINITY;
+    for &x in samples {
+        if x <= 0.0 || !x.is_finite() {
+            return None;
+        }
+        sum += x;
+        min = min.min(x);
+    }
+    let mean = sum / n as f64;
+    let excess = mean - min;
+    if excess <= 0.0 {
+        return None; // all samples equal: no stochastic part
+    }
+    let shift = (min - excess / (n - 1) as f64).max(0.0);
+    let m = mean - shift;
+    let var = samples.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+    if var <= 0.0 || !var.is_finite() || m <= 0.0 {
+        return None;
+    }
+    // Solve weibull_cv2(k) = var/m² on k ∈ [0.05, 50] (CV² ≈ 1.7e5 down
+    // to ≈ 4e-4 over that bracket); clamp targets outside it.
+    let target = (var / (m * m)).clamp(weibull_cv2(50.0), weibull_cv2(0.05));
+    let (mut lo, mut hi) = (0.05f64, 50.0f64);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if weibull_cv2(mid) > target {
+            lo = mid; // CV² too big ⇒ shape must grow
+        } else {
+            hi = mid;
+        }
+    }
+    let shape = 0.5 * (lo + hi);
+    let scale = m / ln_gamma(1.0 + 1.0 / shape).exp();
+    if !shape.is_finite() || !scale.is_finite() || scale <= 0.0 {
+        return None;
+    }
+    Some(WeibullEstimate { shape, scale, shift, samples: n })
+}
+
 /// Sliding-window online estimator: push every observed cycle time, fit
 /// on demand. Old observations age out, so the fit tracks non-stationary
 /// clusters with a lag of `capacity` observations.
@@ -217,6 +303,61 @@ mod tests {
         assert!(fit_shifted_exp(&[2.0, 2.0, 2.0], FitMethod::Mle).is_none());
         assert!(fit_shifted_exp(&[2.0, 2.0, 2.0], FitMethod::Moments).is_none());
         assert!(fit_shifted_exp(&[1.0, -1.0], FitMethod::Mle).is_none());
+    }
+
+    #[test]
+    fn weibull_mom_recovers_parameters_on_synthetic_samples() {
+        use crate::distribution::weibull::Weibull;
+        let mut rng = Rng::new(19);
+        let cases = [(2.0f64, 10.0f64, 5.0f64), (0.8, 100.0, 20.0), (1.0, 50.0, 0.0)];
+        for (shape, scale, shift) in cases {
+            let d = Weibull::new(shape, scale, shift);
+            let samples = d.sample_vec(20_000, &mut rng);
+            let est = fit_weibull_mom(&samples).unwrap();
+            assert!(
+                (est.shape - shape).abs() / shape < 0.15,
+                "shape: fitted {} vs true {shape}",
+                est.shape
+            );
+            assert!(
+                (est.mean() - d.mean()).abs() / d.mean() < 0.05,
+                "mean: fitted {} vs true {}",
+                est.mean(),
+                d.mean()
+            );
+            assert!(
+                (est.scale - scale).abs() / scale < 0.2,
+                "scale: fitted {} vs true {scale}",
+                est.scale
+            );
+            // The min-based shift lands within a small fraction of the
+            // stochastic part's spread.
+            assert!((est.shift - shift).abs() < 0.15 * scale, "shift: {}", est.shift);
+            let back = est.to_distribution();
+            assert!((back.mean() - est.mean()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn weibull_mom_shape_one_looks_exponential() {
+        // A shifted exponential IS a shape-1 Weibull: the MoM fit must
+        // land near k = 1 and agree with the shifted-exp estimators.
+        let d = ShiftedExponential::new(1e-2, 50.0);
+        let mut rng = Rng::new(23);
+        let samples = d.sample_vec(20_000, &mut rng);
+        let weib = fit_weibull_mom(&samples).unwrap();
+        assert!((weib.shape - 1.0).abs() < 0.1, "shape={}", weib.shape);
+        let exp = fit_shifted_exp(&samples, FitMethod::Mle).unwrap();
+        assert!((weib.mean() - exp.mean()).abs() / exp.mean() < 0.05);
+    }
+
+    #[test]
+    fn weibull_mom_degenerate_samples_return_none() {
+        assert!(fit_weibull_mom(&[]).is_none());
+        assert!(fit_weibull_mom(&[1.0, 2.0]).is_none());
+        assert!(fit_weibull_mom(&[2.0, 2.0, 2.0]).is_none());
+        assert!(fit_weibull_mom(&[1.0, -1.0, 2.0]).is_none());
+        assert!(fit_weibull_mom(&[1.0, f64::NAN, 2.0]).is_none());
     }
 
     #[test]

@@ -46,6 +46,33 @@
 //!   virtual time so adaptive-vs-static can be evaluated at scale without
 //!   spawning threads.
 //!
+//! ## The elastic layer (membership epochs)
+//!
+//! On top of scheme epochs, `N` itself is an epoch property: worker
+//! **identity** is decoupled from code **row position**
+//! ([`coordinator::membership::WorkerRegistry`]), so the pool can grow
+//! and shrink mid-run while decoding stays exact within every epoch:
+//!
+//! * worker threads carry a stable id for life; each task binds them to
+//!   a code row *for that epoch only*, and every contribution is
+//!   stamped with both — the master drops contributions whose id↔row
+//!   binding no longer matches the live roster;
+//! * a **join** spawns a thread that announces itself (`Joined`) and
+//!   waits unassigned until the next epoch swap; a **leave** (clean
+//!   `Drain`/`Left` handshake, or a fatal failure) keeps its row as a
+//!   dead straggler for the rest of the epoch and is dropped at the
+//!   next rebind;
+//! * once churn passes a threshold — or departures exceed what the live
+//!   scheme's redundancy absorbs — the trainer re-solves the partition
+//!   with the existing adaptive machinery at the **new** `N'`
+//!   ([`coordinator::adaptive::resolve_partition`]), rebinds rows, and
+//!   installs the re-dimensioned scheme as a fresh epoch; surviving
+//!   subsets take over the full dataset (round-robin re-sharding), so
+//!   the decoded gradient still covers every sample exactly;
+//! * [`sim::multi`]'s churn schedules replay departures/arrivals in
+//!   virtual time (`ChurnSchedule`, `compare_elastic_vs_static`) — the
+//!   elastic-vs-static evaluation behind `BENCH_elastic.json`.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -87,8 +114,9 @@ pub mod util;
 pub mod prelude {
     pub use crate::coding::scheme::CodingScheme;
     pub use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveController};
+    pub use crate::coordinator::membership::{WorkerId, WorkerRegistry};
     pub use crate::coordinator::straggler::StragglerSchedule;
-    pub use crate::coordinator::trainer::{TrainConfig, Trainer};
+    pub use crate::coordinator::trainer::{ElasticConfig, TrainConfig, TrainSession, Trainer};
     pub use crate::distribution::{
         shifted_exp::ShiftedExponential, CycleTimeDistribution,
     };

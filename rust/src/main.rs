@@ -15,7 +15,7 @@ use std::sync::Arc;
 use bcgc::cli::Args;
 use bcgc::coordinator::adaptive::AdaptiveConfig;
 use bcgc::coordinator::straggler::StragglerSchedule;
-use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+use bcgc::coordinator::trainer::{ElasticConfig, TrainConfig, Trainer};
 use bcgc::coordinator::PacingMode;
 use bcgc::data::synthetic;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
@@ -68,6 +68,8 @@ fn print_usage() {
                        --grace 50 --window 400 --check-every 10 --json BENCH_adaptive.json]\n\
            train      --workers N [--steps 100 --lr 0.01 --model mlp|linreg --backend host|pjrt]\n\
                       [--shift-at K --mu2 M --t0-2 T  --adaptive [--adapt-window W --adapt-every K]]\n\
+                      [--elastic [--churn-at K --churn-count 1 --arrive-at K2 --arrive-count 1\n\
+                       --churn-threshold 1]]  (elastic pool: re-dimensions N on membership change)\n\
            artifacts  [--dir artifacts]\n"
     );
 }
@@ -328,10 +330,47 @@ fn cmd_train(args: &Args) -> Result<()> {
             ..d
         });
     }
+    // Elastic worker pool: scheduled churn + membership-driven
+    // re-dimensioning of the scheme.
+    if args.flag("elastic") || args.value("churn-at").is_some() || args.value("arrive-at").is_some()
+    {
+        let mut e = ElasticConfig {
+            churn_threshold: args.get("churn-threshold", 1)?,
+            ..Default::default()
+        };
+        if args.value("churn-at").is_some() {
+            let at: usize = args.require("churn-at")?;
+            let count: usize = args.get("churn-count", 1)?;
+            if at == 0 || at >= steps {
+                return Err(bcgc::Error::InvalidArgument(
+                    "--churn-at must lie strictly inside (0, --steps)".into(),
+                ));
+            }
+            if count >= n {
+                return Err(bcgc::Error::InvalidArgument(
+                    "--churn-count must leave at least one worker".into(),
+                ));
+            }
+            e.departures.push((at, count));
+        }
+        if args.value("arrive-at").is_some() {
+            let at: usize = args.require("arrive-at")?;
+            if at == 0 || at >= steps {
+                return Err(bcgc::Error::InvalidArgument(
+                    "--arrive-at must lie strictly inside (0, --steps)".into(),
+                ));
+            }
+            e.arrivals.push((at, args.get("arrive-count", 1)?));
+        }
+        cfg.elastic = Some(e);
+    }
     let report = Trainer::with_schedule(cfg, schedule, factory).run()?;
     println!("{}", report.summary());
     if report.scheme_epochs.len() > 1 {
         println!("\nscheme epochs:\n{}", report.render_epochs());
+    }
+    if !report.membership.is_empty() {
+        println!("\nmembership:\n{}", report.render_membership());
     }
     println!("\nloss curve:\n{}", report.render_loss_curve());
     Ok(())

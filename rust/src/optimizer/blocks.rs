@@ -111,6 +111,21 @@ impl BlockPartition {
     pub fn as_f64(&self) -> Vec<f64> {
         self.sizes.iter().map(|&c| c as f64).collect()
     }
+
+    /// A copy with every coordinate below redundancy level `smin` moved
+    /// up to `smin` (total preserved). A partition with floor `smin`
+    /// keeps decoding after up to `smin` departures — the elastic
+    /// comparisons use this so the static arm stays feasible.
+    pub fn raise_min_level(&self, smin: usize) -> BlockPartition {
+        assert!(smin < self.n(), "smin must be a valid redundancy level");
+        let mut sizes = self.sizes.clone();
+        let moved: usize = sizes[..smin].iter().sum();
+        for v in sizes[..smin].iter_mut() {
+            *v = 0;
+        }
+        sizes[smin] += moved;
+        BlockPartition { sizes }
+    }
 }
 
 impl std::fmt::Display for BlockPartition {
@@ -175,5 +190,17 @@ mod tests {
     #[test]
     fn invalid_s_rejected() {
         assert!(BlockPartition::from_s_vector(3, &[0, 3]).is_err());
+    }
+
+    #[test]
+    fn raise_min_level_moves_low_mass_up() {
+        let p = BlockPartition::new(vec![3, 2, 4, 1]);
+        let q = p.raise_min_level(2);
+        assert_eq!(q.sizes(), &[0, 0, 9, 1]);
+        assert_eq!(q.total(), p.total());
+        assert_eq!(q.ranges().iter().map(|r| r.s).min(), Some(2));
+        // Already above the floor: unchanged.
+        let r = q.raise_min_level(1);
+        assert_eq!(r.sizes(), q.sizes());
     }
 }

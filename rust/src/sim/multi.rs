@@ -14,7 +14,9 @@ use crate::bench_harness::Table;
 use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveController};
 use crate::coordinator::metrics::SchemeEpoch;
 use crate::coordinator::straggler::StragglerSchedule;
+use crate::distribution::fit::{FitMethod, OnlineEstimator};
 use crate::optimizer::blocks::BlockPartition;
+use crate::optimizer::closed_form::x_freq_blocks;
 use crate::optimizer::runtime_model::ProblemSpec;
 use crate::sim::event_sim::{simulate_iteration, SimConfig};
 use crate::util::rng::Rng;
@@ -318,6 +320,408 @@ pub fn compare_adaptive_vs_static(
     })
 }
 
+/// One worker-pool membership change for the elastic simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnEvent {
+    /// Iteration before which the change applies.
+    pub at_iter: usize,
+    /// Pool-size delta: negative = departures, positive = arrivals.
+    pub delta: isize,
+}
+
+/// A schedule of worker departures/arrivals at given iterations — the
+/// virtual-time counterpart of the threaded trainer's elastic pool.
+#[derive(Debug, Clone, Default)]
+pub struct ChurnSchedule {
+    events: Vec<ChurnEvent>,
+}
+
+impl ChurnSchedule {
+    /// No membership changes.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Append a departure of `count` workers before iteration `at_iter`.
+    pub fn then_depart(mut self, at_iter: usize, count: usize) -> Self {
+        self.push(at_iter, -(count as isize));
+        self
+    }
+
+    /// Append an arrival of `count` workers before iteration `at_iter`.
+    pub fn then_arrive(mut self, at_iter: usize, count: usize) -> Self {
+        self.push(at_iter, count as isize);
+        self
+    }
+
+    fn push(&mut self, at_iter: usize, delta: isize) {
+        assert!(at_iter >= 1, "churn before iteration 0 is just a different N");
+        assert!(delta != 0, "a churn event must change the pool size");
+        if let Some(last) = self.events.last() {
+            assert!(at_iter >= last.at_iter, "churn events must be in iteration order");
+        }
+        self.events.push(ChurnEvent { at_iter, delta });
+    }
+
+    pub fn events(&self) -> &[ChurnEvent] {
+        &self.events
+    }
+
+    /// Whether a membership change applies before iteration `iter`.
+    pub fn has_event_at(&self, iter: usize) -> bool {
+        self.events.iter().any(|e| e.at_iter == iter)
+    }
+
+    /// Pool size at iteration `iter` for an initial pool of `n0`.
+    pub fn n_at(&self, iter: usize, n0: usize) -> usize {
+        let mut n = n0 as isize;
+        for e in &self.events {
+            if e.at_iter <= iter {
+                n += e.delta;
+            }
+        }
+        n.max(0) as usize
+    }
+
+    /// Cumulative departures up to and including iteration `iter` (what
+    /// the static arm's fixed-`N` scheme must absorb as dead rows).
+    pub fn departed_by(&self, iter: usize) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.at_iter <= iter && e.delta < 0)
+            .map(|e| (-e.delta) as usize)
+            .sum()
+    }
+
+    /// The largest pool size the schedule ever reaches (the shared CRN
+    /// stream draws this many cycle times per iteration in every arm).
+    pub fn max_n(&self, n0: usize) -> usize {
+        let mut n = n0 as isize;
+        let mut best = n;
+        for e in &self.events {
+            n += e.delta;
+            best = best.max(n);
+        }
+        best.max(1) as usize
+    }
+
+    /// The first iteration at which membership changes.
+    pub fn first_change(&self) -> Option<usize> {
+        self.events.first().map(|e| e.at_iter)
+    }
+
+    /// Human-readable event listing for logs and reports.
+    pub fn label(&self) -> String {
+        if self.events.is_empty() {
+            return "static".into();
+        }
+        self.events
+            .iter()
+            .map(|e| {
+                if e.delta < 0 {
+                    format!("{}→depart {}", e.at_iter, -e.delta)
+                } else {
+                    format!("{}→arrive {}", e.at_iter, e.delta)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// Error unless the pool stays non-empty for an initial size `n0`.
+    fn validate(&self, n0: usize) -> Result<()> {
+        let mut n = n0 as isize;
+        for e in &self.events {
+            n += e.delta;
+            if n < 1 {
+                return Err(Error::InvalidArgument(format!(
+                    "churn schedule drains the pool below 1 worker at iter {}",
+                    e.at_iter
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Play out a **fixed-`N`** scheme through worker churn: departed
+/// workers become permanent stragglers (infinite cycle times) and
+/// arrivals are useless to a code that has no rows for them. Blocks
+/// whose redundancy the departures exceed never decode (infinite
+/// completion time) — exactly why the static scheme needs the elastic
+/// coordinator. Departures drain the newest members first (the
+/// trainer's policy), so only the *net* pool shrinkage below the
+/// original `N` kills static rows — a departure that merely removes a
+/// post-churn arrival costs the fixed pool nothing. The cycle-time
+/// stream draws `churn.max_n(N)` samples per iteration so it stays
+/// CRN-aligned with [`simulate_elastic`].
+pub fn simulate_static_churn(
+    spec: &ProblemSpec,
+    blocks: &BlockPartition,
+    schedule: &StragglerSchedule,
+    churn: &ChurnSchedule,
+    cfg: &MultiSimConfig,
+) -> MultiSimReport {
+    let n0 = spec.n;
+    let max_n = churn.max_n(n0);
+    let mut rng = Rng::new(cfg.seed);
+    let sim_cfg = SimConfig { comm_latency: cfg.comm_latency };
+    let mut completion_times = Vec::with_capacity(cfg.iters);
+    for iter in 0..cfg.iters {
+        let all = schedule.dist_at(iter).sample_vec(max_n, &mut rng);
+        let mut times = all[..n0].to_vec();
+        let dead = n0.saturating_sub(churn.n_at(iter, n0));
+        for t in times[n0 - dead..].iter_mut() {
+            *t = f64::INFINITY;
+        }
+        let out = simulate_iteration(spec, blocks, &times, &sim_cfg);
+        completion_times.push(out.completion_time);
+    }
+    let epochs = vec![0; cfg.iters];
+    MultiSimReport { completion_times, epochs, swaps: Vec::new() }
+}
+
+/// Play out the **elastic coordinator** through worker churn: at every
+/// membership change the scheme is re-dimensioned to the live pool size
+/// — re-solved via the closed-form `x^(f)` for the windowed online fit
+/// (falling back to the schedule's current phase when the window is
+/// still cold) — and installed as a fresh scheme epoch, mirroring the
+/// threaded trainer's churn → re-solve → epoch-swap flow in virtual
+/// time.
+pub fn simulate_elastic(
+    spec: &ProblemSpec,
+    initial: &BlockPartition,
+    schedule: &StragglerSchedule,
+    churn: &ChurnSchedule,
+    cfg: &MultiSimConfig,
+    fit_window: usize,
+) -> Result<MultiSimReport> {
+    let n0 = spec.n;
+    if initial.n() != n0 {
+        return Err(Error::InvalidArgument("initial.n() != spec.n".into()));
+    }
+    churn.validate(n0)?;
+    let coords = initial.total();
+    let max_n = churn.max_n(n0);
+    let mut rng = Rng::new(cfg.seed);
+    let sim_cfg = SimConfig { comm_latency: cfg.comm_latency };
+    let mut est = OnlineEstimator::new(fit_window.max(2), FitMethod::Mle);
+    let mut blocks = initial.clone();
+    let mut n_cur = n0;
+    let mut epoch = 0usize;
+    let mut completion_times = Vec::with_capacity(cfg.iters);
+    let mut epochs = Vec::with_capacity(cfg.iters);
+    let mut swaps = Vec::new();
+    for iter in 0..cfg.iters {
+        if churn.has_event_at(iter) {
+            let n_new = churn.n_at(iter, n0);
+            if n_new != n_cur {
+                let mut spec_new = *spec;
+                spec_new.n = n_new;
+                let fit = est.fit();
+                let dist = fit
+                    .as_ref()
+                    .map(|f| f.to_distribution())
+                    .or_else(|| schedule.dist_at(iter).as_shifted_exp().cloned());
+                blocks = match dist {
+                    Some(d) => x_freq_blocks(&spec_new, &d, coords)?,
+                    None => {
+                        let s = if n_new > 1 { 1 } else { 0 };
+                        BlockPartition::single_level(n_new, s, coords)
+                    }
+                };
+                epoch += 1;
+                swaps.push(SchemeEpoch {
+                    epoch,
+                    installed_at_iter: iter,
+                    block_sizes: blocks.sizes().to_vec(),
+                    estimated_mu: fit.as_ref().map(|f| f.mu),
+                    estimated_t0: fit.as_ref().map(|f| f.t0),
+                    drift: 0.0,
+                });
+                n_cur = n_new;
+            }
+        }
+        let all = schedule.dist_at(iter).sample_vec(max_n, &mut rng);
+        let times = &all[..n_cur];
+        let mut spec_cur = *spec;
+        spec_cur.n = n_cur;
+        let out = simulate_iteration(&spec_cur, &blocks, times, &sim_cfg);
+        completion_times.push(out.completion_time);
+        epochs.push(epoch);
+        est.extend(times);
+    }
+    Ok(MultiSimReport { completion_times, epochs, swaps })
+}
+
+/// Elastic-vs-static comparison under one churn schedule, on common
+/// random numbers: the static arm keeps the initial fixed-`N` scheme
+/// (departures become permanent stragglers), the elastic arm
+/// re-dimensions at every membership change.
+pub struct ElasticComparison {
+    pub spec_n: usize,
+    pub coords: usize,
+    pub iters: usize,
+    /// First membership change of the schedule.
+    pub first_change: usize,
+    /// Iterations after the change excluded from the "after" means.
+    pub grace: usize,
+    pub churn_label: String,
+    pub schedule_label: String,
+    pub static_run: MultiSimReport,
+    pub elastic_run: MultiSimReport,
+}
+
+impl ElasticComparison {
+    /// First iteration of the post-churn measurement window.
+    pub fn measure_from(&self) -> usize {
+        (self.first_change + self.grace).min(self.iters)
+    }
+
+    pub fn static_after(&self) -> f64 {
+        self.static_run.mean_from(self.measure_from())
+    }
+
+    pub fn elastic_after(&self) -> f64 {
+        self.elastic_run.mean_from(self.measure_from())
+    }
+
+    /// Post-churn improvement of elastic over static, in percent
+    /// (100% when the static arm cannot decode at all).
+    pub fn improvement_pct(&self) -> f64 {
+        100.0 * (1.0 - self.elastic_after() / self.static_after())
+    }
+
+    /// The standard human-readable report block shared by the bench and
+    /// the examples.
+    pub fn render_report(&self) -> String {
+        let fmt_mean = |v: f64| {
+            if v.is_finite() {
+                format!("{v:.1}")
+            } else {
+                "∞ (undecodable)".into()
+            }
+        };
+        let row = |label: &str, r: &MultiSimReport, after: f64| -> Vec<String> {
+            vec![
+                label.to_string(),
+                fmt_mean(r.mean_before(self.first_change)),
+                fmt_mean(after),
+                fmt_mean(r.total()),
+            ]
+        };
+        let mut table =
+            Table::new(&["arm", "E[τ] before churn", "E[τ] after churn+grace", "Σ runtime"]);
+        table.row(&row("static (fixed N)", &self.static_run, self.static_after()));
+        table.row(&row("elastic (re-dimensioned)", &self.elastic_run, self.elastic_after()));
+        let mut out = table.render();
+        for s in &self.elastic_run.swaps {
+            out.push_str(&format!(
+                "re-dimension at iter {:4}: N={} (fitted mu={}, t0={})\n",
+                s.installed_at_iter,
+                s.block_sizes.len(),
+                s.estimated_mu.map_or_else(|| "-".into(), |v| format!("{v:.3e}")),
+                s.estimated_t0.map_or_else(|| "-".into(), |v| format!("{v:.1}")),
+            ));
+        }
+        out.push_str(&format!(
+            "\nelastic vs static after the churn: {:.1}% faster\n",
+            self.improvement_pct()
+        ));
+        out
+    }
+
+    /// Serialize the comparison (hand-rolled JSON; no `serde` offline).
+    pub fn render_json(&self) -> String {
+        fn num(x: f64) -> String {
+            if x.is_finite() {
+                format!("{x:.6}")
+            } else {
+                "null".into()
+            }
+        }
+        let mut out = String::from("{\n");
+        out.push_str("  \"bench\": \"elastic_pool\",\n");
+        out.push_str(&format!("  \"n\": {},\n", self.spec_n));
+        out.push_str(&format!("  \"coords\": {},\n", self.coords));
+        out.push_str(&format!("  \"iters\": {},\n", self.iters));
+        out.push_str(&format!("  \"first_change\": {},\n", self.first_change));
+        out.push_str(&format!("  \"grace\": {},\n", self.grace));
+        out.push_str(&format!("  \"churn\": \"{}\",\n", self.churn_label.replace('"', "\\\"")));
+        out.push_str(&format!(
+            "  \"schedule\": \"{}\",\n",
+            self.schedule_label.replace('"', "\\\"")
+        ));
+        out.push_str(&format!(
+            "  \"static\": {{\"mean_before\": {}, \"mean_after\": {}, \"total\": {}}},\n",
+            num(self.static_run.mean_before(self.first_change)),
+            num(self.static_after()),
+            num(self.static_run.total()),
+        ));
+        out.push_str(&format!(
+            "  \"elastic\": {{\"mean_before\": {}, \"mean_after\": {}, \"total\": {}, \"swaps\": [",
+            num(self.elastic_run.mean_before(self.first_change)),
+            num(self.elastic_after()),
+            num(self.elastic_run.total()),
+        ));
+        for (i, s) in self.elastic_run.swaps.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!(
+                "{{\"iter\": {}, \"n\": {}, \"mu\": {}, \"t0\": {}}}",
+                s.installed_at_iter,
+                s.block_sizes.len(),
+                s.estimated_mu.map_or_else(|| "null".to_string(), num),
+                s.estimated_t0.map_or_else(|| "null".to_string(), num),
+            ));
+        }
+        out.push_str("]},\n");
+        out.push_str(&format!(
+            "  \"improvement_after_pct\": {}\n",
+            num(self.improvement_pct())
+        ));
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// Run both arms of the elastic comparison with common random numbers.
+pub fn compare_elastic_vs_static(
+    spec: &ProblemSpec,
+    initial: &BlockPartition,
+    schedule: &StragglerSchedule,
+    churn: &ChurnSchedule,
+    cfg: &MultiSimConfig,
+    fit_window: usize,
+    grace: usize,
+) -> Result<ElasticComparison> {
+    let first_change = churn.first_change().ok_or_else(|| {
+        Error::InvalidArgument("the churn schedule must contain at least one event".into())
+    })?;
+    if first_change + grace >= cfg.iters {
+        return Err(Error::InvalidArgument(format!(
+            "post-churn measurement window is empty: first change {first_change} + grace \
+             {grace} must be < iters {}",
+            cfg.iters
+        )));
+    }
+    churn.validate(spec.n)?;
+    let static_run = simulate_static_churn(spec, initial, schedule, churn, cfg);
+    let elastic_run = simulate_elastic(spec, initial, schedule, churn, cfg, fit_window)?;
+    Ok(ElasticComparison {
+        spec_n: spec.n,
+        coords: initial.total(),
+        iters: cfg.iters,
+        first_change,
+        grace,
+        churn_label: churn.label(),
+        schedule_label: schedule.label(),
+        static_run,
+        elastic_run,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -419,6 +823,180 @@ mod tests {
         let report = cmp.render_report();
         assert!(report.contains("adaptive vs static after the shift"));
         assert!(report.contains("oracle (phase-1 optimal)"));
+    }
+
+    #[test]
+    fn churn_schedule_accounting() {
+        let c = ChurnSchedule::none().then_depart(40, 2).then_arrive(90, 3);
+        assert_eq!(c.first_change(), Some(40));
+        assert_eq!(c.n_at(0, 10), 10);
+        assert_eq!(c.n_at(39, 10), 10);
+        assert_eq!(c.n_at(40, 10), 8);
+        assert_eq!(c.n_at(90, 10), 11);
+        assert_eq!(c.departed_by(39), 0);
+        assert_eq!(c.departed_by(40), 2);
+        assert_eq!(c.departed_by(1000), 2);
+        assert_eq!(c.max_n(10), 11);
+        assert!(c.has_event_at(40) && c.has_event_at(90) && !c.has_event_at(41));
+        assert!(c.label().contains("depart 2") && c.label().contains("arrive 3"));
+        assert_eq!(ChurnSchedule::none().label(), "static");
+        assert!(ChurnSchedule::none().then_depart(5, 9).validate(8).is_err());
+        assert!(c.validate(10).is_ok());
+    }
+
+    #[test]
+    fn elastic_run_redimensions_and_matches_eq2_per_iteration() {
+        // Parity through churn: every iteration's simulated completion
+        // time must equal the Eq. (2) closed form evaluated with the
+        // *live* pool size and the blocks of the epoch it ran under.
+        let spec = spec(); // N = 8
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let schedule = StragglerSchedule::stationary(Box::new(d));
+        let churn = ChurnSchedule::none().then_depart(20, 2).then_arrive(45, 1);
+        let blocks = BlockPartition::new(vec![100; 8]);
+        let cfg = MultiSimConfig { iters: 70, seed: 41, comm_latency: 0.0 };
+        let report = simulate_elastic(&spec, &blocks, &schedule, &churn, &cfg, 200).unwrap();
+        assert_eq!(report.completion_times.len(), 70);
+        assert_eq!(report.swaps.len(), 2, "both churn events must re-dimension");
+        assert_eq!(report.swaps[0].block_sizes.len(), 6);
+        assert_eq!(report.swaps[1].block_sizes.len(), 7);
+        // Replay the identical CRN stream through the closed form.
+        let max_n = churn.max_n(spec.n);
+        let mut rng = Rng::new(cfg.seed);
+        let mut blocks_at = blocks.clone();
+        let mut swap_idx = 0usize;
+        for (iter, &got) in report.completion_times.iter().enumerate() {
+            while swap_idx < report.swaps.len()
+                && report.swaps[swap_idx].installed_at_iter == iter
+            {
+                blocks_at =
+                    BlockPartition::new(report.swaps[swap_idx].block_sizes.clone());
+                swap_idx += 1;
+            }
+            let n_t = churn.n_at(iter, spec.n);
+            assert_eq!(blocks_at.n(), n_t, "iter {iter}");
+            let all = schedule.dist_at(iter).sample_vec(max_n, &mut rng);
+            let mut spec_t = spec;
+            spec_t.n = n_t;
+            let want =
+                tau_hat(&spec_t, &blocks_at.as_f64(), &all[..n_t], WorkModel::GradientCoding);
+            assert!(
+                (got - want).abs() < 1e-9 * want.max(1.0),
+                "iter {iter}: sim {got} vs closed {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn elastic_beats_static_after_a_departure() {
+        // The static fixed-N arm keeps decoding (its redundancy floor
+        // covers the departures) but pays for two permanently-dead rows;
+        // the elastic arm re-dimensions to the live pool and wins.
+        let (n, coords) = (10usize, 1_000usize);
+        let spec = ProblemSpec::paper_default(n, coords);
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let schedule = StragglerSchedule::stationary(Box::new(d.clone()));
+        let initial = x_freq_blocks(&spec, &d, coords).unwrap().raise_min_level(2);
+        let churn = ChurnSchedule::none().then_depart(60, 2);
+        let cfg = MultiSimConfig { iters: 200, seed: 23, comm_latency: 0.0 };
+        let cmp = compare_elastic_vs_static(
+            &spec, &initial, &schedule, &churn, &cfg, 40 * n, 20,
+        )
+        .unwrap();
+        // CRN: identical before the churn.
+        for i in 0..60 {
+            assert_eq!(
+                cmp.elastic_run.completion_times[i],
+                cmp.static_run.completion_times[i],
+                "iter {i}"
+            );
+        }
+        let (s_after, e_after) = (cmp.static_after(), cmp.elastic_after());
+        assert!(s_after.is_finite(), "floor s=2 must keep the static arm decodable");
+        assert!(
+            e_after < s_after,
+            "elastic ({e_after:.1}) must beat the static fixed-N arm ({s_after:.1})"
+        );
+        assert!(cmp.improvement_pct() > 0.0);
+    }
+
+    #[test]
+    fn static_arm_ignores_departures_that_only_remove_arrivals() {
+        // Arrive 1 at iter 5, depart 1 at iter 10: the departure drains
+        // the newest member (the arrival), so the fixed-N pool never
+        // loses one of its own rows — even an s=0-only partition stays
+        // decodable throughout.
+        let (n, coords) = (4usize, 40usize);
+        let spec = ProblemSpec::paper_default(n, coords);
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let schedule = StragglerSchedule::stationary(Box::new(d));
+        let blocks = BlockPartition::new(vec![40, 0, 0, 0]); // s=0 only
+        let churn = ChurnSchedule::none().then_arrive(5, 1).then_depart(10, 1);
+        let cfg = MultiSimConfig { iters: 20, seed: 7, comm_latency: 0.0 };
+        let report = simulate_static_churn(&spec, &blocks, &schedule, &churn, &cfg);
+        assert!(
+            report.completion_times.iter().all(|t| t.is_finite()),
+            "a departure that only removes an arrival must not kill a static row"
+        );
+    }
+
+    #[test]
+    fn static_arm_goes_undecodable_when_departures_exceed_redundancy() {
+        // A partition with an s=0 block cannot survive any departure:
+        // the static arm's completion times become infinite while the
+        // elastic arm re-dimensions and keeps decoding.
+        let (n, coords) = (6usize, 120usize);
+        let spec = ProblemSpec::paper_default(n, coords);
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let schedule = StragglerSchedule::stationary(Box::new(d));
+        let initial = BlockPartition::new(vec![120, 0, 0, 0, 0, 0]); // s=0 only
+        let churn = ChurnSchedule::none().then_depart(10, 1);
+        let cfg = MultiSimConfig { iters: 40, seed: 3, comm_latency: 0.0 };
+        let cmp =
+            compare_elastic_vs_static(&spec, &initial, &schedule, &churn, &cfg, 100, 5).unwrap();
+        assert!(cmp.static_after().is_infinite());
+        assert!(cmp.elastic_after().is_finite());
+        assert!((cmp.improvement_pct() - 100.0).abs() < 1e-9);
+        let json = cmp.render_json();
+        assert!(json.contains("\"mean_after\": null"), "{json}");
+        let report = cmp.render_report();
+        assert!(report.contains("undecodable"), "{report}");
+    }
+
+    #[test]
+    fn elastic_comparison_json_is_well_formed_enough() {
+        let (n, coords) = (8usize, 400usize);
+        let spec = ProblemSpec::paper_default(n, coords);
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let schedule = StragglerSchedule::stationary(Box::new(d.clone()));
+        let initial = x_freq_blocks(&spec, &d, coords).unwrap().raise_min_level(1);
+        let churn = ChurnSchedule::none().then_depart(30, 1);
+        let cfg = MultiSimConfig { iters: 90, seed: 5, comm_latency: 0.0 };
+        let cmp =
+            compare_elastic_vs_static(&spec, &initial, &schedule, &churn, &cfg, 20 * n, 20)
+                .unwrap();
+        assert_eq!(cmp.first_change, 30);
+        let json = cmp.render_json();
+        assert!(json.contains("\"bench\": \"elastic_pool\""));
+        assert!(json.contains("\"static\""));
+        assert!(json.contains("\"elastic\""));
+        assert!(json.contains("\"improvement_after_pct\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        // Empty churn or empty measurement window are loud errors.
+        assert!(compare_elastic_vs_static(
+            &spec,
+            &initial,
+            &schedule,
+            &ChurnSchedule::none(),
+            &cfg,
+            100,
+            20
+        )
+        .is_err());
+        assert!(compare_elastic_vs_static(
+            &spec, &initial, &schedule, &churn, &cfg, 100, 60
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Elastic worker pool, end to end: workers leave and join mid-training,
+//! the trainer re-dimensions the coding scheme around the live roster as
+//! fresh scheme epochs, and training completes every iteration with
+//! exact decoding inside each epoch. Complements the master-level
+//! binding/quorum tests (`rust/src/coordinator/master.rs`) and the
+//! virtual-time churn parity test (`rust/src/sim/multi.rs`).
+
+use bcgc::coordinator::membership::MemberStatus;
+use bcgc::coordinator::metrics::MembershipEvent;
+use bcgc::coordinator::straggler::StragglerSchedule;
+use bcgc::coordinator::trainer::{ElasticConfig, TrainConfig, TrainSession, Trainer};
+use bcgc::data::synthetic;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::closed_form::x_freq_blocks;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::runtime::host::{HostExecutor, HostModel};
+use bcgc::runtime::host_factory;
+
+fn mlp_setup(
+    n: usize,
+    seed: u64,
+) -> (bcgc::runtime::ExecutorFactory, ProblemSpec, usize) {
+    let ds = synthetic::classification(8, 4, 16 * n, n, 0.2, seed).unwrap();
+    let dim = HostExecutor::mlp_dim(8, 16, 4);
+    let factory = host_factory(ds, HostModel::Mlp { hidden: 16 });
+    let spec = ProblemSpec::new(n, dim, 16 * n, 1.0);
+    (factory, spec, dim)
+}
+
+#[test]
+fn shrinking_the_pool_by_two_redimensions_and_completes_every_iteration() {
+    // N = 8 → 6: two workers drain before iteration 12. The trainer
+    // re-dimensions before the same iteration's step, so no iteration
+    // ever runs against an undecodable roster; later one worker joins
+    // back and is absorbed as another epoch.
+    let n = 8usize;
+    let steps = 45usize;
+    let seed = 11u64;
+    let (factory, spec, dim) = mlp_setup(n, seed);
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let blocks = x_freq_blocks(&spec, &dist, dim).unwrap();
+
+    let mut cfg = TrainConfig::new(spec, blocks);
+    cfg.steps = steps;
+    cfg.lr = 2e-3;
+    cfg.eval_every = 15;
+    cfg.seed = seed;
+    cfg.elastic = Some(ElasticConfig {
+        churn_threshold: 1,
+        departures: vec![(12, 2)],
+        arrivals: vec![(25, 1)],
+    });
+    let schedule = StragglerSchedule::stationary(Box::new(dist));
+    let report = Trainer::with_schedule(cfg, schedule, factory).run().unwrap();
+
+    // Every iteration ran and decoded a full gradient.
+    assert_eq!(report.steps(), steps);
+    assert!(report.iters.iter().all(|m| m.blocks_decoded >= 1 && m.grad_norm.is_finite()));
+    // Clean drains are departures, not failures.
+    assert!(report.failed_workers.is_empty());
+
+    // Pool-size trajectory: 8 until the departure, then 6, then 7 once
+    // the join's epoch swap lands (the join waits for its confirmation,
+    // so the exact swap iteration may trail the arrival by a step).
+    for m in &report.iters {
+        match m.iter {
+            i if i < 12 => assert_eq!(m.workers, n, "iter {i}"),
+            i if i < 25 => assert_eq!(m.workers, n - 2, "iter {i}"),
+            i => assert!(m.workers == n - 2 || m.workers == n - 1, "iter {i}: {}", m.workers),
+        }
+    }
+    assert_eq!(
+        report.iters.last().unwrap().workers,
+        n - 1,
+        "the arrival must eventually be absorbed"
+    );
+
+    // Membership log: two leaves, one join, and ≥ 2 re-dimensions whose
+    // sizes match the trajectory.
+    let leaves =
+        report.membership.iter().filter(|m| matches!(m.event, MembershipEvent::Leave { .. }));
+    assert_eq!(leaves.count(), 2);
+    let joins =
+        report.membership.iter().filter(|m| matches!(m.event, MembershipEvent::Join { .. }));
+    assert_eq!(joins.count(), 1);
+    let redims: Vec<(usize, usize)> = report
+        .membership
+        .iter()
+        .filter_map(|m| match m.event {
+            MembershipEvent::Redimension { from_n, to_n, .. } => Some((from_n, to_n)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(redims[0], (8, 6));
+    assert!(redims.contains(&(6, 7)), "{redims:?}");
+
+    // Each re-dimension is a fresh scheme epoch sized to the roster.
+    assert!(report.epochs() >= 3, "expected ≥ 2 re-dimension epochs");
+    let last_epoch = report.scheme_epochs.last().unwrap();
+    assert_eq!(last_epoch.block_sizes.len(), n - 1);
+    assert_eq!(last_epoch.block_sizes.iter().sum::<usize>(), dim);
+
+    // Training still converged through the churn.
+    let first = report.first_loss().unwrap();
+    let last = report.final_loss().unwrap();
+    assert!(last < first, "loss {first} -> {last}");
+}
+
+#[test]
+fn departure_below_threshold_is_absorbed_as_a_dead_row_then_rebound() {
+    // churn_threshold = 2: the first departure does NOT re-dimension —
+    // the fixed scheme (redundancy floor s ≥ 1) absorbs the dead row
+    // like a fatal straggler — and the second departure trips the
+    // threshold and shrinks N 8 → 6.
+    let n = 8usize;
+    let steps = 30usize;
+    let seed = 13u64;
+    let (factory, spec, dim) = mlp_setup(n, seed);
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let blocks = x_freq_blocks(&spec, &dist, dim).unwrap().raise_min_level(1);
+
+    let mut cfg = TrainConfig::new(spec, blocks);
+    cfg.steps = steps;
+    cfg.lr = 2e-3;
+    cfg.eval_every = 0;
+    cfg.seed = seed;
+    cfg.elastic = Some(ElasticConfig {
+        churn_threshold: 2,
+        departures: vec![(8, 1), (18, 1)],
+        arrivals: vec![],
+    });
+    let schedule = StragglerSchedule::stationary(Box::new(dist));
+    let report = Trainer::with_schedule(cfg, schedule, factory).run().unwrap();
+
+    assert_eq!(report.steps(), steps);
+    assert!(report.iters.iter().all(|m| m.grad_norm.is_finite()));
+    // Between the departures the scheme keeps its 8 rows (one dead).
+    for m in &report.iters {
+        match m.iter {
+            i if i < 18 => assert_eq!(m.workers, n, "iter {i}"),
+            i => assert_eq!(m.workers, n - 2, "iter {i}"),
+        }
+    }
+    let redims: Vec<(usize, usize)> = report
+        .membership
+        .iter()
+        .filter_map(|m| match m.event {
+            MembershipEvent::Redimension { from_n, to_n, .. } => Some((from_n, to_n)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(redims, vec![(8, 6)], "exactly one re-dimension, at the threshold");
+}
+
+#[test]
+fn join_is_not_assigned_work_until_the_next_epoch_swap() {
+    let n = 4usize;
+    let seed = 17u64;
+    let (factory, spec, dim) = mlp_setup(n, seed);
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let blocks = x_freq_blocks(&spec, &dist, dim).unwrap();
+    let mut cfg = TrainConfig::new(spec, blocks);
+    cfg.steps = 30;
+    cfg.lr = 2e-3;
+    cfg.eval_every = 0;
+    cfg.seed = seed;
+    cfg.elastic = Some(ElasticConfig::default());
+    let schedule = StragglerSchedule::stationary(Box::new(dist));
+
+    let mut session = TrainSession::start(cfg, schedule, factory).unwrap();
+    session.step(0).unwrap();
+    let id = session.add_worker(1).unwrap();
+    assert_eq!(id, n, "ids are allocated monotonically");
+    assert_eq!(session.registry().status(id), Some(MemberStatus::Pending));
+    assert_eq!(session.registry().row_of(id), None, "a join holds no row yet");
+
+    // Step until the join's confirmation triggers a re-dimension; every
+    // iteration before the swap must run with the old N (the pending
+    // worker is assigned no work).
+    let mut swapped_at = None;
+    for iter in 1..20 {
+        if session.maybe_redimension(iter).unwrap() {
+            swapped_at = Some(iter);
+            break;
+        }
+        assert_eq!(session.registry().n(), n, "no rebind before the epoch swap");
+        session.step(iter).unwrap();
+    }
+    let swapped_at = swapped_at.expect("a confirmed join must trigger a re-dimension");
+    assert_eq!(session.registry().n(), n + 1);
+    assert_eq!(session.registry().status(id), Some(MemberStatus::Active));
+    let row = session.registry().row_of(id).expect("bound to a row after the swap");
+    assert_eq!(row, n, "rows are assigned in ascending id order");
+
+    // The re-dimensioned epoch runs with the join contributing.
+    for iter in swapped_at..swapped_at + 3 {
+        session.step(iter).unwrap();
+    }
+    let report = session.finish().unwrap();
+    for m in &report.iters {
+        if m.iter < swapped_at {
+            assert_eq!(m.workers, n, "iter {} ran before the swap", m.iter);
+        }
+    }
+    assert_eq!(report.iters.last().unwrap().workers, n + 1);
+    assert!(report.iters.iter().all(|m| m.grad_norm.is_finite()));
+}
