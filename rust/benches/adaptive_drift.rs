@@ -20,7 +20,7 @@
 //! Run: `cargo bench --bench adaptive_drift` (set `BENCH_OUT` to move
 //! the artifact; defaults to ./BENCH_adaptive.json).
 
-use bcgc::bench_harness::banner;
+use bcgc::bench_harness::{banner, stamp_bench_meta};
 use bcgc::coordinator::adaptive::AdaptiveConfig;
 use bcgc::coordinator::straggler::StragglerSchedule;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
@@ -72,6 +72,11 @@ fn main() {
     );
 
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_adaptive.json".into());
-    std::fs::write(&out, cmp.render_json()).expect("write bench artifact");
+    let json = stamp_bench_meta(
+        &cmp.render_json(),
+        seed,
+        &format!("N={n} L={coords} iters={iters} shift_at={shift_at} grace={grace}"),
+    );
+    std::fs::write(&out, json).expect("write bench artifact");
     println!("wrote {out}");
 }

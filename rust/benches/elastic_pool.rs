@@ -20,7 +20,7 @@
 //! Run: `cargo bench --bench elastic_pool` (set `BENCH_OUT` to move
 //! the artifact; defaults to ./BENCH_elastic.json).
 
-use bcgc::bench_harness::banner;
+use bcgc::bench_harness::{banner, stamp_bench_meta};
 use bcgc::coordinator::straggler::StragglerSchedule;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
 use bcgc::optimizer::closed_form::x_freq_blocks;
@@ -63,6 +63,13 @@ fn main() {
     );
 
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_elastic.json".into());
-    std::fs::write(&out, cmp.render_json()).expect("write bench artifact");
+    let json = stamp_bench_meta(
+        &cmp.render_json(),
+        seed,
+        &format!(
+            "N={n} L={coords} iters={iters} churn_at={churn_at} departures={departures} grace={grace}"
+        ),
+    );
+    std::fs::write(&out, json).expect("write bench artifact");
     println!("wrote {out}");
 }

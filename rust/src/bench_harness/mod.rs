@@ -149,6 +149,41 @@ pub fn banner(name: &str, what: &str) {
     println!("{what}\n");
 }
 
+/// The commit under benchmark: `$GITHUB_SHA` in CI, `git rev-parse HEAD`
+/// locally, `"unknown"` outside a checkout.
+pub fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Stamp a hand-rolled `BENCH_*.json` artifact with `{git_sha, seed,
+/// config}` trajectory metadata, injected as a `"meta"` key right after
+/// the opening brace. Every bench JSON in this crate is rendered as
+/// `"{\n  ..."`; anything else is returned unchanged.
+pub fn stamp_bench_meta(json: &str, seed: u64, config: &str) -> String {
+    let Some(pos) = json.find('\n') else { return json.to_string() };
+    if !json.starts_with('{') {
+        return json.to_string();
+    }
+    let meta = format!(
+        "  \"meta\": {{\"git_sha\": \"{}\", \"seed\": {seed}, \"config\": \"{}\"}},\n",
+        git_sha().replace('"', ""),
+        config.replace('\\', "\\\\").replace('"', "\\\"")
+    );
+    format!("{}{}{}", &json[..pos + 1], meta, &json[pos + 1..])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +208,22 @@ mod tests {
         // All lines same width.
         let widths: Vec<usize> = r.lines().map(|l| l.len()).collect();
         assert!(widths.windows(2).all(|w| w[0] == w[1]), "{r}");
+    }
+
+    #[test]
+    fn stamp_bench_meta_injects_trajectory_metadata() {
+        let json = "{\n  \"bench\": \"x\",\n  \"v\": 1\n}\n";
+        let stamped = stamp_bench_meta(json, 2021, "N=20 pool=weibull");
+        assert!(stamped.starts_with("{\n  \"meta\": {\"git_sha\": \""), "{stamped}");
+        assert!(stamped.contains("\"seed\": 2021"));
+        assert!(stamped.contains("\"config\": \"N=20 pool=weibull\""));
+        assert!(stamped.contains("\"bench\": \"x\""));
+        assert_eq!(stamped.matches('{').count(), stamped.matches('}').count());
+        // Quotes in the config string stay escaped JSON.
+        let q = stamp_bench_meta(json, 1, "say \"hi\"");
+        assert!(q.contains("\\\"hi\\\""));
+        // Non-object payloads pass through untouched.
+        assert_eq!(stamp_bench_meta("[1, 2]", 0, "c"), "[1, 2]");
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::coordinator::adaptive::{AdaptiveConfig, ResolveStrategy};
 use crate::coordinator::straggler::StragglerSchedule;
 use crate::coordinator::trainer::ElasticConfig;
 use crate::sim::ChurnSchedule;
-use crate::distribution::fit::FitMethod;
+use crate::distribution::fit::{FamilyPolicy, FitMethod};
 use crate::distribution::{
     gamma::Gamma, lognormal::LogNormal, pareto::Pareto, shifted_exp::ShiftedExponential,
     weibull::Weibull, CycleTimeDistribution, Deterministic, TwoPoint,
@@ -139,6 +139,10 @@ pub struct AdaptiveSettings {
     pub drift_threshold: f64,
     /// `"mle"` or `"moments"`.
     pub estimator: String,
+    /// `"auto"`, `"shifted-exp"`, `"weibull"` or `"empirical"` — the
+    /// straggler-model family the window is fitted to (`auto` = KS-gated
+    /// selection with an empirical fallback).
+    pub family: String,
     /// `"closed_form"` or `"subgradient"`.
     pub resolve: String,
 }
@@ -162,6 +166,12 @@ impl AdaptiveSettings {
             "moments" => FitMethod::Moments,
             other => return Err(Error::Config(format!("unknown estimator {other:?}"))),
         };
+        let family = FamilyPolicy::parse(&self.family).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown straggler family {:?} (auto|shifted-exp|weibull|empirical)",
+                self.family
+            ))
+        })?;
         let strategy = match self.resolve.as_str() {
             "closed_form" => ResolveStrategy::ClosedFormFreq,
             "subgradient" => {
@@ -176,6 +186,7 @@ impl AdaptiveSettings {
             min_samples: self.min_samples,
             drift_threshold: self.drift_threshold,
             method,
+            family,
             strategy,
         })
     }
@@ -351,6 +362,7 @@ impl ExperimentConfig {
                     .get_f64("adaptive.drift_threshold")
                     .unwrap_or(d.drift_threshold),
                 estimator: doc.get_str("adaptive.estimator").unwrap_or("mle").to_string(),
+                family: doc.get_str("adaptive.family").unwrap_or("auto").to_string(),
                 resolve: doc.get_str("adaptive.resolve").unwrap_or("closed_form").to_string(),
             };
             settings.build()?; // validate eagerly so load-time errors are loud
@@ -440,6 +452,7 @@ mod tests {
             window = 320
             drift_threshold = 0.25
             estimator = "moments"
+            family = "weibull"
             "#,
         )
         .unwrap();
@@ -450,8 +463,10 @@ mod tests {
         let ad = cfg.adaptive.as_ref().expect("adaptive parsed");
         assert_eq!(ad.window, 320);
         assert_eq!(ad.estimator, "moments");
+        assert_eq!(ad.family, "weibull");
         let built = ad.build().unwrap();
         assert!((built.drift_threshold - 0.25).abs() < 1e-12);
+        assert_eq!(built.family, FamilyPolicy::Weibull);
         // Defaults fill unset knobs.
         assert_eq!(built.check_every, AdaptiveConfig::default().check_every);
         // The schedule shifts at the declared iteration.
@@ -477,6 +492,7 @@ mod tests {
             "[adaptive]\nenabled = true\nmin_samples = 1",
             "[adaptive]\nenabled = true\ncheck_every = 0",
             "[adaptive]\nenabled = true\ndrift_threshold = 0.0",
+            "[adaptive]\nenabled = true\nfamily = \"cauchy\"",
         ] {
             let doc = TomlDoc::parse(bad).unwrap();
             assert!(ExperimentConfig::from_doc(&doc).is_err(), "{bad}");

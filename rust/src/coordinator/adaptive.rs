@@ -1,27 +1,42 @@
 //! The adaptive re-optimization policy: *when* to re-solve the block
-//! partition and *how*.
+//! partition and *how* — and under **which straggler model**.
 //!
 //! The controller consumes every iteration's observed cycle times
-//! ([`AdaptiveController::observe`]) into a sliding-window
-//! shifted-exponential estimator ([`crate::distribution::fit`]). Every
-//! `check_every` iterations (outside a post-swap cooldown) it fits the
-//! window and measures the relative parameter drift against the
-//! parameters the live scheme was optimized for. Past the threshold it
-//! re-solves:
+//! ([`AdaptiveController::observe`]) into a sliding window. Every
+//! `check_every` iterations (outside a post-swap cooldown) it runs
+//! **family selection** over the window
+//! ([`crate::distribution::fit::select_model`], governed by
+//! [`AdaptiveConfig::family`]): under `auto` both parametric families
+//! (shifted-exp, shifted-Weibull) are fitted and scored by windowed KS
+//! distance, with the window's own ECDF as the fall-back when neither
+//! fits. The winning [`FittedModel`]'s moments are compared against the
+//! model the live scheme was optimized for; past the drift threshold it
+//! re-solves **for the selected model**:
 //!
-//! * [`ResolveStrategy::ClosedFormFreq`] — Theorem 3's `x^(f)` closed
-//!   form on the *exact* order statistics of the fitted distribution.
-//!   O(N²) quadratures, microseconds at paper scale; the default.
+//! * [`ResolveStrategy::ClosedFormFreq`] — Theorem 3's `x^(f)` shape on
+//!   the selected model's order-stat moments
+//!   ([`crate::distribution::runtime_dist::RuntimeDistribution`]): exact
+//!   quadrature for shifted-exp, exact ECDF sums for empirical,
+//!   CRN-seeded Monte Carlo for Weibull. The default.
 //! * [`ResolveStrategy::Subgradient`] — the full stochastic projected
-//!   subgradient method, warm-started from the live partition so a mild
-//!   drift converges in a fraction of the cold-start iterations.
+//!   subgradient method sampling the selected model, warm-started from
+//!   the live partition (re-projected onto the feasible simplex first —
+//!   see [`resize_warm`]).
 //!
 //! The caller (threaded trainer or the multi-iteration simulator)
-//! installs the returned partition as a new **scheme epoch**.
+//! installs the returned partition as a new **scheme epoch**. On an
+//! elastic re-**dimension** the caller should also [`AdaptiveController::rebase`]
+//! the controller: the window is flushed (observations from the old
+//! epoch's `N` / unit work are not comparable) and the drift reference
+//! becomes the model the re-dimensioned scheme was solved for.
 
-use crate::distribution::fit::{FitMethod, OnlineEstimator, ShiftedExpEstimate};
+use crate::distribution::fit::{
+    FamilyPolicy, FitMethod, FittedModel, OnlineEstimator, ShiftedExpEstimate,
+};
+use crate::distribution::runtime_dist::{OrderStatConfig, RuntimeDistribution};
 use crate::optimizer::blocks::BlockPartition;
 use crate::optimizer::closed_form;
+use crate::optimizer::projection::project_simplex;
 use crate::optimizer::rounding::round_to_blocks;
 use crate::optimizer::runtime_model::ProblemSpec;
 use crate::optimizer::subgradient::{self, SubgradientOptions};
@@ -51,8 +66,12 @@ pub struct AdaptiveConfig {
     pub min_samples: usize,
     /// Relative drift (max over mean and scale) that triggers a re-solve.
     pub drift_threshold: f64,
-    /// Estimator family.
+    /// Shifted-exp estimator flavor (MLE or moments) — also the location
+    /// estimator the Weibull fit shares.
     pub method: FitMethod,
+    /// Straggler-model family the window is fitted to (`Auto` = KS-gated
+    /// selection between shifted-exp, Weibull and the empirical ECDF).
+    pub family: FamilyPolicy,
     /// Re-solve strategy.
     pub strategy: ResolveStrategy,
 }
@@ -66,6 +85,7 @@ impl Default for AdaptiveConfig {
             min_samples: 64,
             drift_threshold: 0.2,
             method: FitMethod::Mle,
+            family: FamilyPolicy::Auto,
             strategy: ResolveStrategy::ClosedFormFreq,
         }
     }
@@ -75,8 +95,8 @@ impl Default for AdaptiveConfig {
 #[derive(Debug, Clone)]
 pub struct ReplanDecision {
     pub blocks: BlockPartition,
-    /// The fitted parameters the new partition is optimal for.
-    pub estimate: ShiftedExpEstimate,
+    /// The fitted model the new partition is optimal for.
+    pub estimate: FittedModel,
     /// The relative drift that tripped the threshold.
     pub drift: f64,
 }
@@ -85,9 +105,9 @@ pub struct ReplanDecision {
 pub struct AdaptiveController {
     cfg: AdaptiveConfig,
     window: OnlineEstimator,
-    /// Parameters the live scheme was optimized for (None until known —
+    /// Model the live scheme was optimized for (None until known —
     /// with no reference, the first trustworthy fit triggers a re-plan).
-    reference: Option<ShiftedExpEstimate>,
+    reference: Option<FittedModel>,
     last_swap: Option<usize>,
     /// Number of re-plans issued so far.
     pub swaps: usize,
@@ -104,11 +124,20 @@ impl AdaptiveController {
         Self { cfg, window, reference: None, last_swap: None, swaps: 0 }
     }
 
-    /// Seed the reference with the parameters the initial scheme was
-    /// optimized for (so a stationary run never re-plans spuriously).
+    /// Seed the reference with the shifted-exp parameters the initial
+    /// scheme was optimized for (so a stationary run never re-plans
+    /// spuriously).
     pub fn with_reference(cfg: AdaptiveConfig, mu: f64, t0: f64) -> Self {
+        Self::with_reference_model(
+            cfg,
+            FittedModel::ShiftedExp(ShiftedExpEstimate { mu, t0, samples: 0 }),
+        )
+    }
+
+    /// Seed the reference with an arbitrary fitted model.
+    pub fn with_reference_model(cfg: AdaptiveConfig, model: FittedModel) -> Self {
         let mut c = Self::new(cfg);
-        c.reference = Some(ShiftedExpEstimate { mu, t0, samples: 0 });
+        c.reference = Some(model);
         c
     }
 
@@ -122,14 +151,27 @@ impl AdaptiveController {
         self.window.len()
     }
 
-    /// The current windowed fit, if the window supports one.
-    pub fn current_fit(&self) -> Option<ShiftedExpEstimate> {
-        self.window.fit()
+    /// The current windowed family-selected fit, if the window supports
+    /// one.
+    pub fn current_fit(&self) -> Option<FittedModel> {
+        self.window.fit_model(self.cfg.family)
+    }
+
+    /// Epoch-swap hook for elastic re-dimensions: flushes the window —
+    /// observations recorded under the previous epoch's `N` / unit work
+    /// would bias the first post-churn fits toward the old regime — and
+    /// rebases the drift reference on the model the re-dimensioned
+    /// scheme was solved for (kept unchanged when `None`).
+    pub fn rebase(&mut self, reference: Option<FittedModel>) {
+        self.window.clear();
+        if reference.is_some() {
+            self.reference = reference;
+        }
     }
 
     /// Relative drift of `fit` against the live reference
     /// (infinite when no reference exists yet).
-    pub fn drift(&self, fit: &ShiftedExpEstimate) -> f64 {
+    pub fn drift(&self, fit: &FittedModel) -> f64 {
         match &self.reference {
             Some(r) => fit.drift_from(r),
             None => f64::INFINITY,
@@ -158,21 +200,21 @@ impl AdaptiveController {
         if self.window.len() < self.cfg.min_samples {
             return Ok(None);
         }
-        let Some(fit) = self.window.fit() else {
+        let Some(fit) = self.current_fit() else {
             return Ok(None);
         };
         let drift = self.drift(&fit);
         if drift <= self.cfg.drift_threshold {
             return Ok(None);
         }
-        let dist = fit.to_distribution();
+        let dist = fit.build();
         // The new scheme must cover exactly the coordinates the live one
         // does — the deployed model's dim may legitimately differ from
         // `spec.coords` (the trainer only warns on that mismatch), so the
         // rounding target comes from the live partition, not the spec.
         let target = warm_x.iter().sum::<f64>().round().max(1.0) as usize;
         let blocks =
-            resolve_partition(&self.cfg.strategy, spec, &dist, Some(warm_x), target, rng)?;
+            resolve_partition(&self.cfg.strategy, spec, dist.as_ref(), Some(warm_x), target, rng)?;
         self.reference = Some(fit.clone());
         self.last_swap = Some(iter);
         self.swaps += 1;
@@ -184,27 +226,35 @@ impl AdaptiveController {
 /// shared re-solve primitive behind both drift-triggered re-plans and
 /// elastic re-**dimensioning** (`spec.n` is whatever the live roster
 /// says; both the closed form and the subgradient method take `N` as an
-/// input). `target` is the coordinate count the partition must cover;
-/// `warm_x` (any length — it is resized to `spec.n`) warm-starts the
-/// subgradient path.
+/// input). `dist` is whichever [`RuntimeDistribution`] family the model
+/// selection picked — the `x^(f)` shape is computed from *its*
+/// order-stat moments, not a hard-wired shifted exponential. `target`
+/// is the coordinate count the partition must cover; `warm_x` (any
+/// length — it is resized and re-projected onto the feasible simplex,
+/// see [`resize_warm`]) warm-starts the subgradient path.
 pub fn resolve_partition(
     strategy: &ResolveStrategy,
     spec: &ProblemSpec,
-    dist: &crate::distribution::shifted_exp::ShiftedExponential,
+    dist: &dyn RuntimeDistribution,
     warm_x: Option<&[f64]>,
     target: usize,
     rng: &mut Rng,
 ) -> Result<BlockPartition> {
     match strategy {
-        ResolveStrategy::ClosedFormFreq => closed_form::x_freq_blocks(spec, dist, target),
+        ResolveStrategy::ClosedFormFreq => {
+            // CRN: one seed per re-solve, so a Monte-Carlo family yields
+            // a reproducible partition for this decision.
+            let os_cfg = OrderStatConfig { seed: rng.next_u64(), ..Default::default() };
+            closed_form::x_freq_blocks_model(spec, dist, target, &os_cfg)
+        }
         ResolveStrategy::Subgradient { iters, playoff_trials } => {
             let opts = SubgradientOptions {
                 iters: *iters,
                 playoff_trials: *playoff_trials,
                 ..Default::default()
             };
-            let warm = warm_x.map(|w| resize_warm(w, spec.n));
-            let mut x = subgradient::solve(spec, dist, warm, &opts, rng)?.x;
+            let warm = warm_x.map(|w| resize_warm(w, spec.n, spec.coords as f64));
+            let mut x = subgradient::solve(spec, dist.as_cycle_time(), warm, &opts, rng)?.x;
             if target != spec.coords {
                 let scale = target as f64 / spec.coords as f64;
                 for v in x.iter_mut() {
@@ -216,27 +266,20 @@ pub fn resolve_partition(
     }
 }
 
-/// Adapt a warm-start vector to a different worker count: unchanged
-/// when the length already matches; otherwise truncated/zero-padded to
-/// `n` rows with the original mass preserved (rescaled), so a mild
-/// re-dimension still warm-starts near the old optimum.
-fn resize_warm(w: &[f64], n: usize) -> Vec<f64> {
-    if w.len() == n {
-        return w.to_vec();
-    }
-    let total: f64 = w.iter().sum();
+/// Adapt a warm-start vector to a different worker count, then project
+/// it onto Problem 3's feasible set `{x ≥ 0, Σx = l}`: truncated or
+/// zero-padded to `n` rows, negatives/non-finites clamped, and
+/// Euclidean-projected onto the scaled simplex. A shrink that drops
+/// most of the old mass (the high-redundancy tail blocks are large —
+/// Fig. 3) still yields a feasible start, and an all-zero truncation
+/// projects to the uniform point instead of handing the subgradient
+/// method an infeasible `Σx = 0` vector.
+pub fn resize_warm(w: &[f64], n: usize, l: f64) -> Vec<f64> {
     let mut out = vec![0.0f64; n];
     for (o, &v) in out.iter_mut().zip(w.iter()) {
-        *o = v;
+        *o = if v.is_finite() { v.max(0.0) } else { 0.0 };
     }
-    let kept: f64 = out.iter().sum();
-    if kept > 0.0 && total > 0.0 {
-        let scale = total / kept;
-        for v in out.iter_mut() {
-            *v *= scale;
-        }
-    }
-    out
+    project_simplex(&out, l)
 }
 
 #[cfg(test)]
@@ -357,6 +400,107 @@ mod tests {
             assert_eq!(p.n(), n_new, "{strategy:?}");
             assert_eq!(p.total(), 1_000, "{strategy:?}");
         }
+    }
+
+    #[test]
+    fn resized_warm_start_is_feasible_after_a_shrink() {
+        // N = 10 → 4: the old optimum keeps most of its mass in the
+        // high-redundancy tail, which the truncation drops entirely.
+        let warm = vec![10.0, 10.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 380.0, 600.0];
+        let l = 1_000.0;
+        for n_new in [4usize, 7, 10, 13] {
+            let x = resize_warm(&warm, n_new, l);
+            assert_eq!(x.len(), n_new);
+            assert!(x.iter().all(|&v| v >= 0.0 && v.is_finite()), "{x:?}");
+            let sum: f64 = x.iter().sum();
+            assert!((sum - l).abs() < 1e-6, "n={n_new}: sum={sum}");
+        }
+        // All kept mass zero: the projection falls back to uniform
+        // rather than an infeasible all-zero vector.
+        let x = resize_warm(&warm[2..8], 4, 100.0);
+        assert!(x.iter().all(|&v| (v - 25.0).abs() < 1e-9), "{x:?}");
+        // Garbage entries are clamped, not propagated.
+        let x = resize_warm(&[f64::NAN, -5.0, 30.0], 3, 60.0);
+        assert!(x.iter().all(|&v| v.is_finite() && v >= 0.0));
+        assert!((x.iter().sum::<f64>() - 60.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rebase_flushes_the_window_so_post_churn_fits_are_unbiased() {
+        // Regression for the cross-epoch window bug: observations from
+        // the previous scheme epoch must not blend into the first
+        // post-re-dimension fits.
+        let a = ShiftedExponential::new(1e-2, 50.0); // mean 150
+        let b = ShiftedExponential::new(1e-3, 50.0); // mean 1050
+        let mut ctrl = AdaptiveController::with_reference(
+            AdaptiveConfig { window: 400, ..Default::default() },
+            a.mu,
+            a.t0,
+        );
+        let mut rng = Rng::new(21);
+        observe_from(&mut ctrl, &a, 50, 8, &mut rng); // window full of regime A
+        assert_eq!(ctrl.observations(), 400);
+        // Re-dimension: flush + rebase on the estimate the new scheme
+        // was solved for.
+        let basis = ctrl.current_fit().unwrap();
+        ctrl.rebase(Some(basis.clone()));
+        assert_eq!(ctrl.observations(), 0);
+        // 120 post-churn observations of regime B. A blended 400-window
+        // would average ~(280·150 + 120·1050)/400 ≈ 420 — 60% off; the
+        // flushed window must track B directly.
+        observe_from(&mut ctrl, &b, 15, 8, &mut rng);
+        let fit = ctrl.current_fit().expect("120 fresh samples fit");
+        assert!(
+            (fit.mean() - b.mean()).abs() / b.mean() < 0.2,
+            "post-churn fit mean {} should track {} (not a cross-epoch blend)",
+            fit.mean(),
+            b.mean()
+        );
+        // The drift reference moved with the rebase.
+        assert!(ctrl.drift(&basis) < 1e-12);
+        // rebase(None) flushes but keeps the reference.
+        ctrl.rebase(None);
+        assert_eq!(ctrl.observations(), 0);
+        assert!(ctrl.drift(&basis) < 1e-12);
+    }
+
+    #[test]
+    fn closed_form_resolve_follows_the_selected_family() {
+        // The same re-solve primitive must produce family-appropriate
+        // partitions: a heavy-tailed Weibull model asks for a different
+        // x^(f) shape than a shifted exponential of equal mean/spread.
+        use crate::distribution::weibull::Weibull;
+        let spec = ProblemSpec::paper_default(12, 6_000);
+        let mut rng = Rng::new(23);
+        let exp = ShiftedExponential::new(1e-3, 50.0);
+        let weib = Weibull::new(0.6, 800.0, 50.0);
+        let p_exp = resolve_partition(
+            &ResolveStrategy::ClosedFormFreq,
+            &spec,
+            &exp,
+            None,
+            6_000,
+            &mut rng,
+        )
+        .unwrap();
+        let p_weib = resolve_partition(
+            &ResolveStrategy::ClosedFormFreq,
+            &spec,
+            &weib,
+            None,
+            6_000,
+            &mut rng,
+        )
+        .unwrap();
+        for p in [&p_exp, &p_weib] {
+            assert_eq!(p.n(), 12);
+            assert_eq!(p.total(), 6_000);
+        }
+        assert_ne!(
+            p_exp.sizes(),
+            p_weib.sizes(),
+            "the model family must shape the partition"
+        );
     }
 
     #[test]

@@ -404,15 +404,34 @@ pub fn identity_shards(n: usize) -> ShardMap {
 }
 
 /// Subset → dataset shards after re-dimensioning to `n` subsets over a
-/// dataset sharded `num_shards` ways: round-robin, so every shard stays
-/// covered by exactly one subset and the decoded gradient still equals
-/// the full-dataset gradient. Subsets beyond `num_shards` (a pool grown
-/// past the data's sharding) back nothing and contribute exact zeros.
+/// dataset sharded `num_shards` ways (equal-size shards —
+/// `data::partition::equal_shards` enforces it). Every shard stays
+/// covered by exactly one subset, so the decoded gradient still equals
+/// the full-dataset gradient.
+///
+/// The split is **largest-remainder** (quota boundaries
+/// `round(k·m/n)`): per-subset sample loads differ by at most one
+/// shard — a max/min ratio of `1 + 1/⌊m/n⌋` — *and* the `+1`-loaded
+/// subsets are spread evenly around the subset ring. The old
+/// `shard % n` round-robin also kept the count gap at one, but piled
+/// every remainder shard onto subsets `0..m mod n`; since a code row
+/// holds a *contiguous window* of subsets, the surviving low-index rows
+/// absorbed the whole overload, inflating their cycle times and biasing
+/// the next online fit. Subsets beyond `num_shards` (a pool grown past
+/// the data's sharding) back nothing and contribute exact zeros; the
+/// empty subsets are spread evenly too.
 pub fn redistribute_shards(n: usize, num_shards: usize) -> ShardMap {
+    assert!(n >= 1, "need at least one subset");
     let mut map: ShardMap = vec![Vec::new(); n];
-    for shard in 0..num_shards {
-        map[shard % n].push(shard);
+    let mut start = 0usize;
+    for (k, backing) in map.iter_mut().enumerate() {
+        // Largest-remainder quota boundary: after subset k, exactly
+        // round((k+1)·m/n) shards are assigned.
+        let end = (((k + 1) * num_shards + n / 2) / n).min(num_shards);
+        backing.extend(start..end);
+        start = end;
     }
+    debug_assert_eq!(start, num_shards, "every shard must stay covered");
     map
 }
 
@@ -805,7 +824,7 @@ mod tests {
 
     #[test]
     fn shard_redistribution_covers_every_shard_exactly_once() {
-        for (n, shards) in [(3usize, 8usize), (8, 8), (5, 3), (1, 4)] {
+        for (n, shards) in [(3usize, 8usize), (8, 8), (5, 3), (1, 4), (6, 4), (4, 10)] {
             let map = redistribute_shards(n, shards);
             assert_eq!(map.len(), n);
             let mut seen = vec![0usize; shards];
@@ -816,8 +835,43 @@ mod tests {
             }
             assert!(seen.iter().all(|&c| c == 1), "n={n} shards={shards}: {seen:?}");
         }
-        // More subsets than shards: the overflow subsets back nothing.
+        // More subsets than shards: exactly n − m subsets back nothing,
+        // and the empties are spread rather than clustered at the end.
         let map = redistribute_shards(6, 4);
-        assert!(map[4].is_empty() && map[5].is_empty());
+        let empties: Vec<usize> =
+            (0..6).filter(|&k| map[k].is_empty()).collect();
+        assert_eq!(empties.len(), 2, "{map:?}");
+        assert!(empties.windows(2).all(|w| w[1] - w[0] > 1), "clustered: {empties:?}");
+    }
+
+    #[test]
+    fn shard_redistribution_balances_sample_load_and_spreads_the_remainder() {
+        // Load balance (regression for the round-robin skew): per-subset
+        // counts differ by at most one shard, i.e. with equal-size
+        // shards the max/min sample ratio is ≤ 1 + 1/⌊m/n⌋.
+        for (n, m) in [(4usize, 10usize), (24, 30), (6, 8), (7, 21), (5, 9)] {
+            let map = redistribute_shards(n, m);
+            let counts: Vec<usize> = map.iter().map(Vec::len).collect();
+            let max = *counts.iter().max().unwrap();
+            let min = *counts.iter().min().unwrap();
+            assert!(max - min <= 1, "n={n} m={m}: {counts:?}");
+            let q = m / n;
+            assert!(
+                max as f64 / min as f64 <= 1.0 + 1.0 / q as f64 + 1e-12,
+                "n={n} m={m}: ratio {}",
+                max as f64 / min as f64
+            );
+        }
+        // Remainder spread: 30 shards over 24 subsets leaves 6 subsets
+        // with a double load. Round-robin parked them at subsets 0..6
+        // (gap 1) — the contiguous windows low rows hold; the
+        // largest-remainder split spaces them ≥ 3 apart.
+        let map = redistribute_shards(24, 30);
+        let heavy: Vec<usize> =
+            (0..24).filter(|&k| map[k].len() == 2).collect();
+        assert_eq!(heavy.len(), 6, "{map:?}");
+        for w in heavy.windows(2) {
+            assert!(w[1] - w[0] >= 3, "heavy subsets clustered: {heavy:?}");
+        }
     }
 }

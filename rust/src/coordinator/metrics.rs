@@ -42,10 +42,18 @@ pub struct SchemeEpoch {
     pub installed_at_iter: usize,
     /// The partition's block sizes `x_0..x_{N-1}`.
     pub block_sizes: Vec<usize>,
-    /// Estimated straggler parameters that triggered the re-solve
-    /// (None for the initial scheme / manual installs).
+    /// Estimated shifted-exp parameters that triggered the re-solve
+    /// (None for the initial scheme, manual installs, and fits from a
+    /// non-exponential family — see `family`).
     pub estimated_mu: Option<f64>,
     pub estimated_t0: Option<f64>,
+    /// `E[T]` under the fit behind this install — defined for **every**
+    /// family, unlike the shifted-exp parameter hints above.
+    pub estimated_mean: Option<f64>,
+    /// Straggler-model family the re-solve used (`"shifted-exp"`,
+    /// `"weibull"`, `"empirical"`; None for the initial scheme and
+    /// manual installs).
+    pub family: Option<String>,
     /// Relative parameter drift measured at install time.
     pub drift: f64,
 }
@@ -155,16 +163,19 @@ impl TrainReport {
 
     /// Render the scheme-epoch history as a compact text block.
     pub fn render_epochs(&self) -> String {
-        let mut out = String::from("epoch,installed_at,levels_used,est_mu,est_t0,drift\n");
+        let mut out =
+            String::from("epoch,installed_at,levels_used,est_mu,est_t0,est_mean,family,drift\n");
         for e in &self.scheme_epochs {
             let levels = e.block_sizes.iter().filter(|&&c| c > 0).count();
             out.push_str(&format!(
-                "{},{},{},{},{},{:.3}\n",
+                "{},{},{},{},{},{},{},{:.3}\n",
                 e.epoch,
                 e.installed_at_iter,
                 levels,
                 e.estimated_mu.map(|v| format!("{v:.3e}")).unwrap_or_else(|| "-".into()),
                 e.estimated_t0.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
+                e.estimated_mean.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
+                e.family.as_deref().unwrap_or("-"),
                 e.drift,
             ));
         }
@@ -260,6 +271,8 @@ mod tests {
             block_sizes: vec![4, 0, 2],
             estimated_mu: None,
             estimated_t0: None,
+            estimated_mean: None,
+            family: None,
             drift: 0.0,
         });
         r.scheme_epochs.push(SchemeEpoch {
@@ -268,12 +281,16 @@ mod tests {
             block_sizes: vec![2, 2, 2],
             estimated_mu: Some(1e-3),
             estimated_t0: Some(49.0),
+            estimated_mean: Some(1049.0),
+            family: Some("shifted-exp".into()),
             drift: 0.8,
         });
         assert_eq!(r.epochs(), 2);
         let txt = r.render_epochs();
         assert!(txt.contains("1,40,3"), "{txt}");
         assert!(txt.contains("1.000e-3") || txt.contains("1.000e-03"), "{txt}");
+        assert!(txt.contains("shifted-exp"), "{txt}");
+        assert!(txt.contains("1049.0"), "{txt}");
     }
 
     #[test]

@@ -34,7 +34,7 @@ use crate::coordinator::state::ModelState;
 use crate::coordinator::straggler::{virtual_runtime, StragglerSampler, StragglerSchedule};
 use crate::coordinator::worker::{self, WorkerContext};
 use crate::coordinator::PacingMode;
-use crate::distribution::fit::ShiftedExpEstimate;
+use crate::distribution::fit::{FittedModel, ShiftedExpEstimate};
 use crate::distribution::CycleTimeDistribution;
 use crate::optimizer::blocks::BlockPartition;
 use crate::optimizer::runtime_model::ProblemSpec;
@@ -275,6 +275,8 @@ impl TrainSession {
             block_sizes: cfg.blocks.sizes().to_vec(),
             estimated_mu: None,
             estimated_t0: None,
+            estimated_mean: None,
+            family: None,
             drift: 0.0,
         });
         let failed_set = cfg.dead_workers.clone();
@@ -454,11 +456,10 @@ impl TrainSession {
         };
         if let Some(plan) = plan {
             crate::log_info!(
-                "iter {iter}: drift {:.2} → installing scheme epoch {} (fit mu={:.3e}, t0={:.1})",
+                "iter {iter}: drift {:.2} → installing scheme epoch {} (fit {})",
                 plan.drift,
                 self.epoch + 1,
-                plan.estimate.mu,
-                plan.estimate.t0
+                plan.estimate.label()
             );
             self.install_scheme(plan.blocks, iter, Some(&plan.estimate), plan.drift)?;
         }
@@ -490,17 +491,21 @@ impl TrainSession {
             )));
         }
         // Re-solve with the *new* N. Evidence, in order of preference:
-        // the online estimator's live fit, then the schedule's current
-        // phase (when shifted-exp), else a uniform level-1 fallback.
-        let mut spec_new = self.cfg.spec;
-        spec_new.n = to_n;
-        let estimate: Option<ShiftedExpEstimate> = self
+        // the online estimator's live family-selected fit, then the
+        // schedule's current phase (when shifted-exp), else a uniform
+        // level-1 fallback.
+        let spec_new = self.cfg.spec.with_n(to_n);
+        let estimate: Option<FittedModel> = self
             .controller
             .as_ref()
             .and_then(|c| c.current_fit())
             .or_else(|| {
                 self.sampler.distribution_at(iter).as_shifted_exp().map(|d| {
-                    ShiftedExpEstimate { mu: d.mu, t0: d.t0, samples: 0 }
+                    FittedModel::ShiftedExp(ShiftedExpEstimate {
+                        mu: d.mu,
+                        t0: d.t0,
+                        samples: 0,
+                    })
                 })
             });
         let strategy = self
@@ -511,14 +516,17 @@ impl TrainSession {
             .unwrap_or(ResolveStrategy::ClosedFormFreq);
         let warm = self.scheme.blocks().as_f64();
         let blocks = match &estimate {
-            Some(est) => adaptive::resolve_partition(
-                &strategy,
-                &spec_new,
-                &est.to_distribution(),
-                Some(warm.as_slice()),
-                self.dim,
-                &mut self.rng,
-            )?,
+            Some(est) => {
+                let dist = est.build();
+                adaptive::resolve_partition(
+                    &strategy,
+                    &spec_new,
+                    dist.as_ref(),
+                    Some(warm.as_slice()),
+                    self.dim,
+                    &mut self.rng,
+                )?
+            }
             None => {
                 let s = if to_n > 1 { 1 } else { 0 };
                 BlockPartition::single_level(to_n, s, self.dim)
@@ -548,14 +556,24 @@ impl TrainSession {
             epoch: self.epoch,
             installed_at_iter: iter,
             block_sizes: self.scheme.blocks().sizes().to_vec(),
-            estimated_mu: estimate.as_ref().map(|e| e.mu),
-            estimated_t0: estimate.as_ref().map(|e| e.t0),
+            estimated_mu: estimate.as_ref().and_then(|e| e.mu_hint()),
+            estimated_t0: estimate.as_ref().and_then(|e| e.t0_hint()),
+            estimated_mean: estimate.as_ref().map(|e| e.mean()),
+            family: estimate.as_ref().map(|e| e.family().name().to_string()),
             drift: 0.0,
         });
         self.report.membership.push(MembershipRecord {
             iter,
             event: MembershipEvent::Redimension { from_n, to_n, epoch: self.epoch },
         });
+        // The re-dimension changed N (and with it the per-coordinate
+        // unit of work): observations recorded under the old epoch are
+        // no longer comparable, so flush the estimator window and
+        // rebase the drift reference on the model this scheme was
+        // solved for.
+        if let Some(ctrl) = self.controller.as_mut() {
+            ctrl.rebase(estimate);
+        }
         Ok(true)
     }
 
@@ -568,7 +586,7 @@ impl TrainSession {
         &mut self,
         blocks: BlockPartition,
         iter: usize,
-        estimate: Option<&ShiftedExpEstimate>,
+        estimate: Option<&FittedModel>,
         drift: f64,
     ) -> Result<()> {
         if blocks.n() != self.cfg.spec.n {
@@ -591,8 +609,10 @@ impl TrainSession {
             epoch: self.epoch,
             installed_at_iter: iter,
             block_sizes: self.scheme.blocks().sizes().to_vec(),
-            estimated_mu: estimate.map(|e| e.mu),
-            estimated_t0: estimate.map(|e| e.t0),
+            estimated_mu: estimate.and_then(|e| e.mu_hint()),
+            estimated_t0: estimate.and_then(|e| e.t0_hint()),
+            estimated_mean: estimate.map(|e| e.mean()),
+            family: estimate.map(|e| e.family().name().to_string()),
             drift,
         });
         Ok(())

@@ -19,11 +19,26 @@
 //!   (it never chases a single extreme minimum).
 //!
 //! In both cases `μ̂ = 1/σ̂`.
+//!
+//! On top of the per-family estimators sits **model selection**
+//! ([`select_model`]): under `family = "auto"` the window is fitted to
+//! both parametric families and each candidate is scored by its
+//! Kolmogorov–Smirnov distance to the window's ECDF. A candidate stays
+//! in the running only while its own KS distance passes a `1.36/√m`
+//! acceptance gate (the classical 5% coefficient — conservative here,
+//! since parameters fitted on the same window shrink the statistic);
+//! among surviving candidates the shifted-exp family wins unless the
+//! Weibull is decisively better (parsimony: two parameters beat three
+//! at equal fit), and when neither parametric family survives its gate
+//! the selection falls back to the window's own ECDF
+//! ([`FittedModel::Empirical`]).
 
 use std::collections::VecDeque;
 
+use super::runtime_dist::{ModelFamily, RuntimeDistribution};
 use super::shifted_exp::ShiftedExponential;
 use super::weibull::Weibull;
+use super::{CycleTimeDistribution, Empirical};
 use crate::util::special::ln_gamma;
 
 /// Which estimator [`fit_shifted_exp`] applies.
@@ -143,6 +158,12 @@ impl WeibullEstimate {
         self.shift + self.scale * ln_gamma(1.0 + 1.0 / self.shape).exp()
     }
 
+    /// Standard deviation under the fitted parameters (the shift does
+    /// not spread): `λ·Γ(1+1/k)·CV(k)`.
+    pub fn std(&self) -> f64 {
+        self.scale * ln_gamma(1.0 + 1.0 / self.shape).exp() * weibull_cv2(self.shape).sqrt()
+    }
+
     /// Materialize the fitted distribution.
     pub fn to_distribution(&self) -> Weibull {
         Weibull::new(self.shape, self.scale, self.shift)
@@ -208,6 +229,270 @@ pub fn fit_weibull_mom(samples: &[f64]) -> Option<WeibullEstimate> {
     Some(WeibullEstimate { shape, scale, shift, samples: n })
 }
 
+/// A windowed ECDF snapshot — the non-parametric fall-back "family"
+/// adopted when neither parametric model survives the KS gate.
+#[derive(Debug, Clone)]
+pub struct EmpiricalEstimate {
+    /// The window's cycle times, ascending.
+    samples: Vec<f64>,
+    mean: f64,
+    std: f64,
+}
+
+impl EmpiricalEstimate {
+    /// Snapshot a window. `None` when the sample is too small or
+    /// degenerate to say anything (mirrors the parametric fitters).
+    pub fn from_samples(samples: &[f64]) -> Option<Self> {
+        let n = samples.len();
+        if n < 2 || samples.iter().any(|&x| x <= 0.0 || !x.is_finite()) {
+            return None;
+        }
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var =
+            samples.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+        let std = var.sqrt();
+        if std <= 0.0 || !std.is_finite() {
+            return None;
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(Self { samples: sorted, mean, std })
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        self.std
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Materialize the window's ECDF as a distribution.
+    pub fn to_distribution(&self) -> Empirical {
+        Empirical::new(self.samples.clone())
+    }
+}
+
+/// A fitted straggler model from one of the supported families — the
+/// currency between the online estimator and the re-solve path.
+#[derive(Debug, Clone)]
+pub enum FittedModel {
+    ShiftedExp(ShiftedExpEstimate),
+    Weibull(WeibullEstimate),
+    Empirical(EmpiricalEstimate),
+}
+
+impl FittedModel {
+    pub fn family(&self) -> ModelFamily {
+        match self {
+            FittedModel::ShiftedExp(_) => ModelFamily::ShiftedExp,
+            FittedModel::Weibull(_) => ModelFamily::Weibull,
+            FittedModel::Empirical(_) => ModelFamily::Empirical,
+        }
+    }
+
+    /// `E[T]` under the fit.
+    pub fn mean(&self) -> f64 {
+        match self {
+            FittedModel::ShiftedExp(e) => e.mean(),
+            FittedModel::Weibull(w) => w.mean(),
+            FittedModel::Empirical(e) => e.mean(),
+        }
+    }
+
+    /// Spread scale under the fit (the distribution's standard
+    /// deviation — for shifted-exp this is the paper's `σ = 1/μ`).
+    pub fn scale(&self) -> f64 {
+        match self {
+            FittedModel::ShiftedExp(e) => e.sigma(),
+            FittedModel::Weibull(w) => w.std(),
+            FittedModel::Empirical(e) => e.std(),
+        }
+    }
+
+    /// Number of samples the fit used.
+    pub fn samples(&self) -> usize {
+        match self {
+            FittedModel::ShiftedExp(e) => e.samples,
+            FittedModel::Weibull(w) => w.samples,
+            FittedModel::Empirical(e) => e.len(),
+        }
+    }
+
+    /// Symmetric relative drift against another fit: the max of the
+    /// relative changes in mean and spread. Defined on moments, so the
+    /// drift detector can compare fits **across families** (a regime
+    /// that shifts from exponential to heavy-tailed still registers).
+    pub fn drift_from(&self, other: &FittedModel) -> f64 {
+        let rel = |a: f64, b: f64| ((a - b) / b).abs();
+        rel(self.mean(), other.mean()).max(rel(self.scale(), other.scale()))
+    }
+
+    /// Materialize the fitted model for the re-solve path.
+    pub fn build(&self) -> Box<dyn RuntimeDistribution> {
+        match self {
+            FittedModel::ShiftedExp(e) => Box::new(e.to_distribution()),
+            FittedModel::Weibull(w) => Box::new(w.to_distribution()),
+            FittedModel::Empirical(e) => Box::new(e.to_distribution()),
+        }
+    }
+
+    /// Fitted `μ̂` when this is the shifted-exp family (the legacy
+    /// reporting hook; other families have no rate parameter).
+    pub fn mu_hint(&self) -> Option<f64> {
+        match self {
+            FittedModel::ShiftedExp(e) => Some(e.mu),
+            _ => None,
+        }
+    }
+
+    /// Fitted `t̂0` when this is the shifted-exp family.
+    pub fn t0_hint(&self) -> Option<f64> {
+        match self {
+            FittedModel::ShiftedExp(e) => Some(e.t0),
+            _ => None,
+        }
+    }
+
+    /// Human-readable fit description for logs.
+    pub fn label(&self) -> String {
+        match self {
+            FittedModel::ShiftedExp(e) => {
+                format!("shifted-exp(mu={:.3e}, t0={:.1}, m={})", e.mu, e.t0, e.samples)
+            }
+            FittedModel::Weibull(w) => format!(
+                "weibull(k={:.2}, scale={:.1}, shift={:.1}, m={})",
+                w.shape, w.scale, w.shift, w.samples
+            ),
+            FittedModel::Empirical(e) => format!("empirical(m={})", e.len()),
+        }
+    }
+}
+
+/// Which family the online estimator is allowed to fit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FamilyPolicy {
+    /// Fit both parametric families, pick by windowed KS distance,
+    /// fall back to the empirical ECDF when neither fits.
+    #[default]
+    Auto,
+    /// Always the paper's shifted exponential (the pre-selection
+    /// behavior).
+    ShiftedExp,
+    /// Always the shifted Weibull (method of moments).
+    Weibull,
+    /// Always the window's own ECDF.
+    Empirical,
+}
+
+impl FamilyPolicy {
+    /// Parse the config/CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(FamilyPolicy::Auto),
+            "shifted-exp" | "shifted_exp" => Some(FamilyPolicy::ShiftedExp),
+            "weibull" => Some(FamilyPolicy::Weibull),
+            "empirical" => Some(FamilyPolicy::Empirical),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FamilyPolicy::Auto => "auto",
+            FamilyPolicy::ShiftedExp => "shifted-exp",
+            FamilyPolicy::Weibull => "weibull",
+            FamilyPolicy::Empirical => "empirical",
+        }
+    }
+}
+
+/// Kolmogorov–Smirnov distance between a **sorted** sample and a model
+/// CDF: `sup_x |F_m(x) − F(x)|`, evaluated at the ECDF's jump points.
+pub fn ks_distance(sorted: &[f64], dist: &dyn CycleTimeDistribution) -> f64 {
+    let m = sorted.len();
+    assert!(m > 0, "KS distance needs samples");
+    let mf = m as f64;
+    let mut d = 0.0f64;
+    for (i, &x) in sorted.iter().enumerate() {
+        let f = dist.cdf(x);
+        d = d.max((f - i as f64 / mf).abs()).max(((i + 1) as f64 / mf - f).abs());
+    }
+    d
+}
+
+/// KS acceptance gate coefficient (see module docs).
+const KS_GATE: f64 = 1.36;
+/// Absolute floor of the acceptance gate: moment-fitted parameters
+/// carry `O(1/√m)` systematic CDF error of their own, so the gate must
+/// not tighten without bound as the window grows — a family that truly
+/// does not fit shows a `Θ(1)` distance regardless of `m`.
+const KS_GATE_FLOOR: f64 = 0.035;
+/// Parsimony margin: the Weibull must beat the shifted-exp's KS distance
+/// by this factor to displace the paper's two-parameter family. On
+/// genuinely Weibull windows the ratio is 3–5×, so the margin only
+/// filters the extra parameter's chance advantage on exponential data.
+const WEIBULL_MARGIN: f64 = 0.75;
+
+/// Fit a window under a family policy. For [`FamilyPolicy::Auto`] this
+/// is the model-selection flow of the module docs; forced policies
+/// simply run that family's estimator. `None` when the window is too
+/// small or degenerate to support any fit.
+pub fn select_model(
+    samples: &[f64],
+    policy: FamilyPolicy,
+    method: FitMethod,
+) -> Option<FittedModel> {
+    match policy {
+        FamilyPolicy::ShiftedExp => {
+            fit_shifted_exp(samples, method).map(FittedModel::ShiftedExp)
+        }
+        FamilyPolicy::Weibull => fit_weibull_mom(samples).map(FittedModel::Weibull),
+        FamilyPolicy::Empirical => {
+            EmpiricalEstimate::from_samples(samples).map(FittedModel::Empirical)
+        }
+        FamilyPolicy::Auto => {
+            let exp = fit_shifted_exp(samples, method);
+            let weib = fit_weibull_mom(samples);
+            if exp.is_none() && weib.is_none() {
+                return EmpiricalEstimate::from_samples(samples).map(FittedModel::Empirical);
+            }
+            let mut sorted = samples.to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let ks_e = exp.as_ref().map(|e| ks_distance(&sorted, &e.to_distribution()));
+            let ks_w = weib.as_ref().map(|w| ks_distance(&sorted, &w.to_distribution()));
+            // The gate is applied per candidate: a parametric family is
+            // in the running only while its own KS distance passes.
+            let gate = (KS_GATE / (sorted.len() as f64).sqrt()).max(KS_GATE_FLOOR);
+            let exp_ok = ks_e.is_some_and(|k| k <= gate);
+            let weib_ok = ks_w.is_some_and(|k| k <= gate);
+            let pick = if weib_ok
+                && (!exp_ok || ks_w.unwrap() < ks_e.unwrap() * WEIBULL_MARGIN)
+            {
+                weib.map(FittedModel::Weibull)
+            } else if exp_ok {
+                exp.map(FittedModel::ShiftedExp)
+            } else {
+                // Neither parametric family survives its gate: let the
+                // data speak. (Any successful parametric fit implies
+                // positive spread, so the snapshot succeeds here.)
+                None
+            };
+            pick.or_else(|| {
+                EmpiricalEstimate::from_samples(samples).map(FittedModel::Empirical)
+            })
+        }
+    }
+}
+
 /// Sliding-window online estimator: push every observed cycle time, fit
 /// on demand. Old observations age out, so the fit tracks non-stationary
 /// clusters with a lag of `capacity` observations.
@@ -263,6 +548,17 @@ impl OnlineEstimator {
     pub fn fit(&self) -> Option<ShiftedExpEstimate> {
         let v: Vec<f64> = self.buf.iter().copied().collect();
         fit_shifted_exp(&v, self.method)
+    }
+
+    /// The window contents, oldest first.
+    pub fn samples(&self) -> Vec<f64> {
+        self.buf.iter().copied().collect()
+    }
+
+    /// Family-selected fit of the current window ([`select_model`]).
+    pub fn fit_model(&self, policy: FamilyPolicy) -> Option<FittedModel> {
+        let v = self.samples();
+        select_model(&v, policy, self.method)
     }
 }
 
@@ -358,6 +654,106 @@ mod tests {
         assert!(fit_weibull_mom(&[2.0, 2.0, 2.0]).is_none());
         assert!(fit_weibull_mom(&[1.0, -1.0, 2.0]).is_none());
         assert!(fit_weibull_mom(&[1.0, f64::NAN, 2.0]).is_none());
+    }
+
+    #[test]
+    fn ks_distance_is_small_for_the_true_model_and_large_for_a_wrong_one() {
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let mut rng = Rng::new(29);
+        let mut s = d.sample_vec(2000, &mut rng);
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let own = ks_distance(&s, &d);
+        // 2.0/√m is the ~0.1% point of the null KS distribution — a
+        // comfortable bound for a seeded draw from the true model.
+        assert!(own < 2.0 / (2000f64).sqrt(), "own-model KS {own}");
+        let wrong = ShiftedExponential::new(5e-3, 50.0);
+        assert!(ks_distance(&s, &wrong) > 0.2, "a 5x rate error must be visible");
+    }
+
+    #[test]
+    fn auto_selects_shifted_exp_on_shifted_exp_data() {
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let mut rng = Rng::new(31);
+        let samples = d.sample_vec(3000, &mut rng);
+        let m = select_model(&samples, FamilyPolicy::Auto, FitMethod::Mle).unwrap();
+        assert!(matches!(m, FittedModel::ShiftedExp(_)), "picked {}", m.label());
+        assert!((m.mean() - d.mean()).abs() / d.mean() < 0.1);
+        assert!(m.mu_hint().is_some());
+    }
+
+    #[test]
+    fn auto_selects_weibull_on_weibull_data() {
+        use crate::distribution::weibull::Weibull;
+        let mut rng = Rng::new(37);
+        for (shape, scale, shift) in [(2.0f64, 10.0f64, 5.0f64), (0.7, 100.0, 20.0)] {
+            let d = Weibull::new(shape, scale, shift);
+            let samples = d.sample_vec(3000, &mut rng);
+            let m = select_model(&samples, FamilyPolicy::Auto, FitMethod::Mle).unwrap();
+            match &m {
+                FittedModel::Weibull(w) => {
+                    assert!((w.shape - shape).abs() / shape < 0.2, "shape {}", w.shape)
+                }
+                other => panic!("k={shape} data picked {}", other.label()),
+            }
+            assert!(m.mu_hint().is_none());
+        }
+    }
+
+    #[test]
+    fn auto_falls_back_to_empirical_when_neither_family_fits() {
+        use crate::distribution::TwoPoint;
+        // A bimodal fast/slow mixture: no shifted-exp or Weibull CDF can
+        // track the two atoms.
+        let d = TwoPoint::new(1.0, 6.0, 0.5);
+        let mut rng = Rng::new(41);
+        let samples = d.sample_vec(2000, &mut rng);
+        let m = select_model(&samples, FamilyPolicy::Auto, FitMethod::Mle).unwrap();
+        assert!(matches!(m, FittedModel::Empirical(_)), "picked {}", m.label());
+        // The snapshot reproduces the mixture's moments exactly.
+        assert!((m.mean() - d.mean()).abs() / d.mean() < 0.05);
+        let emp = m.build();
+        assert!((emp.mean() - m.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn forced_policies_run_their_family() {
+        let d = ShiftedExponential::new(1e-2, 50.0);
+        let mut rng = Rng::new(43);
+        let samples = d.sample_vec(500, &mut rng);
+        for (policy, want) in [
+            (FamilyPolicy::ShiftedExp, "shifted-exp"),
+            (FamilyPolicy::Weibull, "weibull"),
+            (FamilyPolicy::Empirical, "empirical"),
+        ] {
+            let m = select_model(&samples, policy, FitMethod::Mle).unwrap();
+            assert_eq!(m.family().name(), want);
+        }
+        assert!(select_model(&[], FamilyPolicy::Auto, FitMethod::Mle).is_none());
+        assert!(select_model(&[2.0, 2.0], FamilyPolicy::Empirical, FitMethod::Mle).is_none());
+        assert_eq!(FamilyPolicy::parse("shifted_exp"), Some(FamilyPolicy::ShiftedExp));
+        assert_eq!(FamilyPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn cross_family_drift_is_defined_on_moments() {
+        let e = FittedModel::ShiftedExp(ShiftedExpEstimate { mu: 1e-3, t0: 50.0, samples: 64 });
+        // A Weibull with the same mean and std registers ~zero drift.
+        let shape = 1.0f64;
+        let w = FittedModel::Weibull(WeibullEstimate {
+            shape,
+            scale: 1000.0,
+            shift: 50.0,
+            samples: 64,
+        });
+        assert!(e.drift_from(&w) < 0.01, "drift {}", e.drift_from(&w));
+        // Tripling the spread registers regardless of family.
+        let w3 = FittedModel::Weibull(WeibullEstimate {
+            shape,
+            scale: 3000.0,
+            shift: 50.0,
+            samples: 64,
+        });
+        assert!(e.drift_from(&w3) > 0.5);
     }
 
     #[test]

@@ -14,16 +14,22 @@
 //! * [`TwoPoint`] — fast/slow mixture (α-partial stragglers of [1], and the
 //!   full-straggler limit when `slow = ∞`).
 //! * [`Deterministic`] — degenerate (used by Fig. 1 and unit tests).
-//! * [`Empirical`] — resampling from a recorded trace.
+//! * [`Empirical`] — resampling from a recorded trace (the windowed-ECDF
+//!   family of the adaptive engine's `family = "empirical"` fallback).
 //!
 //! [`fit`] closes the loop for the adaptive coding engine: it estimates
-//! shifted-exponential parameters online from observed cycle times.
+//! straggler parameters online from observed cycle times — shifted-exp
+//! and shifted-Weibull parametric fits plus KS-gated model selection
+//! ([`fit::select_model`]) — and [`runtime_dist::RuntimeDistribution`]
+//! exposes each family's expected order-stat moments (exact quadrature
+//! or CRN-seeded Monte Carlo) to the re-solve path.
 
 pub mod fit;
 pub mod gamma;
 pub mod lognormal;
 pub mod order_stats;
 pub mod pareto;
+pub mod runtime_dist;
 pub mod shifted_exp;
 pub mod weibull;
 
@@ -199,19 +205,30 @@ impl CycleTimeDistribution for TwoPoint {
     }
 }
 
-/// Resample uniformly from a recorded trace of cycle times.
+/// Resample uniformly (with replacement) from a recorded trace of cycle
+/// times — the ECDF as a distribution. The trace is kept **ascending**,
+/// so the CDF is a binary search, quantiles are exact, and
+/// [`runtime_dist`]'s exact ECDF order-stat sums can consume it
+/// directly.
 #[derive(Debug, Clone)]
 pub struct Empirical {
+    /// Recorded cycle times, ascending.
     samples: Vec<f64>,
     mean: f64,
 }
 
 impl Empirical {
-    pub fn new(samples: Vec<f64>) -> Self {
+    pub fn new(mut samples: Vec<f64>) -> Self {
         assert!(!samples.is_empty(), "empirical distribution needs samples");
         assert!(samples.iter().all(|&s| s > 0.0), "cycle times must be positive");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         Self { samples, mean }
+    }
+
+    /// The recorded trace, ascending.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
     }
 }
 
@@ -225,11 +242,18 @@ impl CycleTimeDistribution for Empirical {
     }
 
     fn cdf(&self, t: f64) -> f64 {
-        self.samples.iter().filter(|&&s| s <= t).count() as f64 / self.samples.len() as f64
+        self.samples.partition_point(|&s| s <= t) as f64 / self.samples.len() as f64
     }
 
     fn label(&self) -> String {
         format!("Empirical(n={})", self.samples.len())
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..1.0).contains(&q), "quantile q must be in [0,1)");
+        let m = self.samples.len();
+        let j = ((q * m as f64).ceil() as usize).clamp(1, m);
+        self.samples[j - 1]
     }
 }
 
@@ -271,6 +295,18 @@ mod tests {
         }
         assert!((d.mean() - 2.0).abs() < 1e-12);
         assert!((d.cdf(2.0) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empirical_trace_is_sorted_with_exact_quantiles() {
+        let d = Empirical::new(vec![3.0, 1.0, 2.0, 2.0]);
+        assert_eq!(d.samples(), &[1.0, 2.0, 2.0, 3.0]);
+        assert_eq!(d.quantile(0.0), 1.0);
+        assert_eq!(d.quantile(0.5), 2.0);
+        assert_eq!(d.quantile(0.9), 3.0);
+        assert!((d.cdf(2.0) - 0.75).abs() < 1e-12);
+        assert_eq!(d.cdf(0.5), 0.0);
+        assert_eq!(d.cdf(3.0), 1.0);
     }
 
     #[test]

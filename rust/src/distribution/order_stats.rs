@@ -19,6 +19,56 @@ use super::CycleTimeDistribution;
 use crate::util::rng::Rng;
 use crate::util::special::{expint_e1, harmonic, integrate_gl, ln_binomial};
 
+/// Exact order statistics of `n` i.i.d. draws from the **ECDF** of a
+/// recorded trace (sampling with replacement — the
+/// [`crate::distribution::Empirical`] model).
+///
+/// For ascending trace values `t_(1) ≤ … ≤ t_(m)`,
+/// `P[T_(k) ≤ t_(j)] = P[Binom(n, j/m) ≥ k]`, so both moment vectors are
+/// finite sums over the trace's jump points — no Monte Carlo, no noise,
+/// `O(m·n)` after the binomial tail recurrences. Duplicated trace values
+/// telescope correctly (each copy carries its own `j/m` increment).
+pub fn ecdf_exact(sorted: &[f64], n: usize) -> OrderStats {
+    assert!(n >= 1, "need at least one draw");
+    assert!(!sorted.is_empty(), "ECDF order stats need a non-empty trace");
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "ecdf_exact requires an ascending trace"
+    );
+    let m = sorted.len();
+    let ln_binom: Vec<f64> = (0..=n).map(|i| ln_binomial(n, i)).collect();
+    let mut sum_t = vec![0.0f64; n];
+    let mut sum_inv = vec![0.0f64; n];
+    // `prev[k-1]` holds P[Binom(n, (j-1)/m) ≥ k] from the previous atom.
+    let mut prev = vec![0.0f64; n];
+    let mut tail = vec![0.0f64; n];
+    for (j, &t) in sorted.iter().enumerate() {
+        debug_assert!(t > 0.0, "cycle times must be positive");
+        let p = (j + 1) as f64 / m as f64;
+        if p >= 1.0 {
+            // All n draws land at or below the last atom: every tail
+            // probability is exactly 1.
+            tail.fill(1.0);
+        } else {
+            let (ln_p, ln_q) = (p.ln(), (1.0 - p).ln());
+            // pmf in log space (stable for large n·|ln| at the edges),
+            // accumulated into suffix sums P[Binom ≥ k].
+            let mut acc = 0.0f64;
+            for i in (1..=n).rev() {
+                acc += (ln_binom[i] + i as f64 * ln_p + (n - i) as f64 * ln_q).exp();
+                tail[i - 1] = acc.min(1.0);
+            }
+        }
+        for k in 0..n {
+            let mass = tail[k] - prev[k];
+            sum_t[k] += t * mass;
+            sum_inv[k] += mass / t;
+        }
+        prev.copy_from_slice(&tail);
+    }
+    OrderStats { t: sum_t, t_prime: sum_inv.iter().map(|&s| 1.0 / s).collect() }
+}
+
 /// Expected order statistics of `N` i.i.d. cycle times.
 ///
 /// Index convention: `t[k]` is `E[T_(k+1)]`, i.e. `t[0]` is the fastest
@@ -223,6 +273,39 @@ mod tests {
         // Max: t0 + H_n/μ.
         let want_max = d.t0 + harmonic(n) / d.mu;
         assert!((os.t[n - 1] - want_max).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ecdf_exact_matches_monte_carlo_resampling() {
+        use crate::distribution::Empirical;
+        // A trace with duplicates and a heavy outlier.
+        let mut trace = vec![1.0, 1.0, 2.0, 3.0, 3.0, 3.0, 5.0, 9.0, 20.0, 60.0];
+        trace.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = 6;
+        let exact = ecdf_exact(&trace, n);
+        let emp = Empirical::new(trace.clone());
+        let mut rng = Rng::new(2024);
+        let mc = estimate(&emp, n, 120_000, &mut rng);
+        for k in 0..n {
+            let rel_t = (exact.t[k] - mc.t[k]).abs() / exact.t[k];
+            let rel_p = (exact.t_prime[k] - mc.t_prime[k]).abs() / exact.t_prime[k];
+            assert!(rel_t < 0.02, "k={k}: exact t={} mc={}", exact.t[k], mc.t[k]);
+            assert!(rel_p < 0.02, "k={k}: exact t'={} mc={}", exact.t_prime[k], mc.t_prime[k]);
+        }
+        // Monotone in k, and t' ≤ t by Jensen.
+        for k in 1..n {
+            assert!(exact.t[k] >= exact.t[k - 1]);
+            assert!(exact.t_prime[k] >= exact.t_prime[k - 1]);
+        }
+        for k in 0..n {
+            assert!(exact.t_prime[k] <= exact.t[k] + 1e-12);
+        }
+        // Degenerate one-point trace: every order stat is that point.
+        let one = ecdf_exact(&[4.0], 3);
+        for k in 0..3 {
+            assert!((one.t[k] - 4.0).abs() < 1e-12);
+            assert!((one.t_prime[k] - 4.0).abs() < 1e-9);
+        }
     }
 
     #[test]

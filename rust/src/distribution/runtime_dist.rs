@@ -1,0 +1,202 @@
+//! The distribution-agnostic order-statistic interface behind the
+//! adaptive re-solve.
+//!
+//! The closed-form approximate solutions (Theorems 2/3) only need the
+//! expected order-stat moment vectors `t` and `t'` of the cycle-time
+//! model — *how* those vectors are produced is a per-family detail:
+//!
+//! * **shifted-exponential** — exact: Eq. (11) for `t`, Gauss–Legendre
+//!   quadrature of the order-statistic integral for `t'`
+//!   ([`super::order_stats::shifted_exp_exact`]);
+//! * **empirical (windowed ECDF)** — exact: the order-stat CDF of
+//!   resampling is a finite sum over the trace's jump points
+//!   ([`super::order_stats::ecdf_exact`]);
+//! * **everything else** (shifted-Weibull, …) — common-random-number
+//!   Monte Carlo ([`mc_order_stats`]): the sampler is seeded from
+//!   [`OrderStatConfig::seed`], so the same model re-solved twice yields
+//!   the same partition and two candidate models are compared on
+//!   identical noise.
+//!
+//! [`RuntimeDistribution`] packages this behind one trait so
+//! `coordinator::adaptive` can route `ResolveStrategy::ClosedFormFreq`
+//! through whichever family the online model selection picked
+//! ([`super::fit::select_model`]) instead of silently assuming §V-C's
+//! shifted exponential.
+
+use super::order_stats::{self, OrderStats};
+use super::shifted_exp::ShiftedExponential;
+use super::weibull::Weibull;
+use super::{CycleTimeDistribution, Empirical};
+use crate::util::rng::Rng;
+
+/// Monte-Carlo budget and CRN seed for families without closed-form
+/// order-stat moments (exact families ignore it).
+#[derive(Debug, Clone, Copy)]
+pub struct OrderStatConfig {
+    /// Rounds of `n` i.i.d. draws per estimate.
+    pub trials: usize,
+    /// Sampler seed: fixed per re-solve so the estimate is reproducible.
+    pub seed: u64,
+}
+
+impl Default for OrderStatConfig {
+    fn default() -> Self {
+        Self { trials: 4000, seed: 0x0DDB_1A5E }
+    }
+}
+
+/// The straggler-model family a runtime distribution belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelFamily {
+    /// §V-C's `T = t0 + Exp(μ)` (the paper's model).
+    ShiftedExp,
+    /// `T = shift + scale·Weibull(shape)` (heavier/lighter tails).
+    Weibull,
+    /// Windowed ECDF of observed cycle times (no parametric assumption).
+    Empirical,
+}
+
+impl ModelFamily {
+    /// The config-file / CLI spelling of the family.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelFamily::ShiftedExp => "shifted-exp",
+            ModelFamily::Weibull => "weibull",
+            ModelFamily::Empirical => "empirical",
+        }
+    }
+}
+
+/// A cycle-time model the re-solve path can consume directly: expected
+/// order-stat moments plus the plain sampling interface the subgradient
+/// method needs.
+pub trait RuntimeDistribution: CycleTimeDistribution {
+    /// `E[T_(k)]` and `1/E[1/T_(k)]` for `n` i.i.d. draws — exact where
+    /// a closed form exists, CRN-seeded Monte Carlo otherwise.
+    fn order_stat_moments(&self, n: usize, cfg: &OrderStatConfig) -> OrderStats;
+
+    /// Which family this model belongs to.
+    fn model_family(&self) -> ModelFamily;
+
+    /// Explicit upcast to the sampling trait (the crate's MSRV predates
+    /// `dyn` trait upcasting).
+    fn as_cycle_time(&self) -> &dyn CycleTimeDistribution;
+}
+
+/// CRN-seeded Monte-Carlo order-stat moments — the generic fallback for
+/// families without closed forms. Same `cfg` → identical result.
+pub fn mc_order_stats(
+    dist: &dyn CycleTimeDistribution,
+    n: usize,
+    cfg: &OrderStatConfig,
+) -> OrderStats {
+    let mut rng = Rng::new(cfg.seed);
+    order_stats::estimate(dist, n, cfg.trials.max(1), &mut rng)
+}
+
+impl RuntimeDistribution for ShiftedExponential {
+    fn order_stat_moments(&self, n: usize, _cfg: &OrderStatConfig) -> OrderStats {
+        order_stats::shifted_exp_exact(self, n)
+    }
+
+    fn model_family(&self) -> ModelFamily {
+        ModelFamily::ShiftedExp
+    }
+
+    fn as_cycle_time(&self) -> &dyn CycleTimeDistribution {
+        self
+    }
+}
+
+impl RuntimeDistribution for Weibull {
+    fn order_stat_moments(&self, n: usize, cfg: &OrderStatConfig) -> OrderStats {
+        mc_order_stats(self, n, cfg)
+    }
+
+    fn model_family(&self) -> ModelFamily {
+        ModelFamily::Weibull
+    }
+
+    fn as_cycle_time(&self) -> &dyn CycleTimeDistribution {
+        self
+    }
+}
+
+impl RuntimeDistribution for Empirical {
+    fn order_stat_moments(&self, n: usize, _cfg: &OrderStatConfig) -> OrderStats {
+        order_stats::ecdf_exact(self.samples(), n)
+    }
+
+    fn model_family(&self) -> ModelFamily {
+        ModelFamily::Empirical
+    }
+
+    fn as_cycle_time(&self) -> &dyn CycleTimeDistribution {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::order_stats::shifted_exp_exact;
+
+    #[test]
+    fn shifted_exp_route_is_the_exact_quadrature() {
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let os = RuntimeDistribution::order_stat_moments(&d, 12, &OrderStatConfig::default());
+        let exact = shifted_exp_exact(&d, 12);
+        for k in 0..12 {
+            assert_eq!(os.t[k], exact.t[k]);
+            assert_eq!(os.t_prime[k], exact.t_prime[k]);
+        }
+        assert_eq!(d.model_family(), ModelFamily::ShiftedExp);
+    }
+
+    #[test]
+    fn mc_route_is_crn_deterministic_and_close_to_exact() {
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let cfg = OrderStatConfig { trials: 40_000, seed: 99 };
+        let a = mc_order_stats(&d, 10, &cfg);
+        let b = mc_order_stats(&d, 10, &cfg);
+        let exact = shifted_exp_exact(&d, 10);
+        for k in 0..10 {
+            // Same seed → bit-identical (common random numbers).
+            assert_eq!(a.t[k], b.t[k]);
+            assert_eq!(a.t_prime[k], b.t_prime[k]);
+            assert!((a.t[k] - exact.t[k]).abs() / exact.t[k] < 0.02, "k={k}");
+            assert!(
+                (a.t_prime[k] - exact.t_prime[k]).abs() / exact.t_prime[k] < 0.02,
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn weibull_route_is_monotone_and_positive() {
+        let d = Weibull::new(0.7, 100.0, 20.0);
+        let os = d.order_stat_moments(8, &OrderStatConfig { trials: 20_000, seed: 3 });
+        for k in 1..8 {
+            assert!(os.t[k] >= os.t[k - 1]);
+            assert!(os.t_prime[k] >= os.t_prime[k - 1]);
+        }
+        assert!(os.t_prime[0] > 20.0, "moments live above the shift");
+        assert_eq!(d.model_family(), ModelFamily::Weibull);
+    }
+
+    #[test]
+    fn empirical_route_matches_resampling_mc() {
+        let emp = Empirical::new(vec![3.0, 1.0, 8.0, 1.0, 2.5, 40.0]);
+        let exact = emp.order_stat_moments(5, &OrderStatConfig::default());
+        let mc = mc_order_stats(&emp, 5, &OrderStatConfig { trials: 120_000, seed: 17 });
+        for k in 0..5 {
+            assert!((exact.t[k] - mc.t[k]).abs() / exact.t[k] < 0.02, "k={k}");
+            assert!(
+                (exact.t_prime[k] - mc.t_prime[k]).abs() / exact.t_prime[k] < 0.02,
+                "k={k}"
+            );
+        }
+        assert_eq!(emp.model_family(), ModelFamily::Empirical);
+        assert_eq!(ModelFamily::Empirical.name(), "empirical");
+    }
+}

@@ -31,13 +31,23 @@
 //!   epoch, and every `BlockContribution` is stamped with that epoch; the
 //!   master rejects contributions encoded under a superseded scheme exactly
 //!   like stale-iteration messages ([`coordinator::master`]);
-//! * [`distribution::fit`] estimates shifted-exponential straggler
-//!   parameters online (windowed MLE / method of moments) from the
-//!   per-iteration cycle times the trainer observes;
+//! * [`distribution::fit`] estimates straggler models online from the
+//!   per-iteration cycle times the trainer observes: windowed
+//!   shifted-exp MLE / method of moments, a shifted-Weibull
+//!   method-of-moments fit, and **KS-gated family selection**
+//!   (`family = "auto"`) with the window's own ECDF as the
+//!   non-parametric fallback;
+//! * [`distribution::runtime_dist::RuntimeDistribution`] makes the
+//!   re-solve distribution-agnostic: each family exposes its expected
+//!   order-stat moment vectors (`t`, `t'`) — exact quadrature for
+//!   shifted-exp, exact ECDF sums for empirical, CRN-seeded Monte Carlo
+//!   for Weibull — so Theorem 3's `x^(f)` *shape* is computed for the
+//!   **selected** model instead of a hard-wired exponential;
 //! * [`coordinator::adaptive`] decides *when* to re-solve (every K
-//!   iterations, on estimated-parameter drift, behind a cooldown) and *how*
-//!   (cheap closed-form `x^(f)` re-solve, or the full stochastic subgradient
-//!   method warm-started from the live partition);
+//!   iterations, on fitted-moment drift — defined across families,
+//!   behind a cooldown) and *how* (cheap closed-form `x^(f)` re-solve
+//!   on the selected model's order stats, or the full stochastic
+//!   subgradient method warm-started from the live partition);
 //! * [`coordinator::trainer`] is decomposed into a setup phase
 //!   (`TrainSession::start`) and an iteration loop that can hot-swap a
 //!   re-optimized scheme between iterations without respawning workers or
@@ -117,6 +127,8 @@ pub mod prelude {
     pub use crate::coordinator::membership::{WorkerId, WorkerRegistry};
     pub use crate::coordinator::straggler::StragglerSchedule;
     pub use crate::coordinator::trainer::{ElasticConfig, TrainConfig, TrainSession, Trainer};
+    pub use crate::distribution::fit::{FamilyPolicy, FittedModel};
+    pub use crate::distribution::runtime_dist::RuntimeDistribution;
     pub use crate::distribution::{
         shifted_exp::ShiftedExponential, CycleTimeDistribution,
     };

@@ -18,7 +18,10 @@ use bcgc::coordinator::straggler::StragglerSchedule;
 use bcgc::coordinator::trainer::{ElasticConfig, TrainConfig, Trainer};
 use bcgc::coordinator::PacingMode;
 use bcgc::data::synthetic;
+use bcgc::distribution::fit::FamilyPolicy;
+use bcgc::distribution::runtime_dist::OrderStatConfig;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::distribution::weibull::Weibull;
 use bcgc::optimizer::closed_form;
 use bcgc::optimizer::evaluate::{compare_schemes, reduction_vs_best_baseline};
 use bcgc::optimizer::runtime_model::ProblemSpec;
@@ -66,8 +69,11 @@ fn print_usage() {
            simulate   --workers N --coords L [--mu 1e-3 --t0 50 --comm-latency 0]\n\
            adaptive   --workers N --coords L [--iters 450 --shift-at 150 --mu 1e-2 --mu2 1e-3\n\
                        --grace 50 --window 400 --check-every 10 --json BENCH_adaptive.json]\n\
+                      [--family auto|shifted-exp|weibull|empirical]  (estimator family policy)\n\
+                      [--dist2 weibull --shape2 0.7 --scale2 1000 --shift2 50]  (heavy-tail phase 1)\n\
            train      --workers N [--steps 100 --lr 0.01 --model mlp|linreg --backend host|pjrt]\n\
-                      [--shift-at K --mu2 M --t0-2 T  --adaptive [--adapt-window W --adapt-every K]]\n\
+                      [--shift-at K --mu2 M --t0-2 T  --adaptive [--adapt-window W --adapt-every K\n\
+                       --family auto|shifted-exp|weibull|empirical]]\n\
                       [--elastic [--churn-at K --churn-count 1 --arrive-at K2 --arrive-count 1\n\
                        --churn-threshold 1]]  (elastic pool: re-dimensions N on membership change)\n\
            artifacts  [--dir artifacts]\n"
@@ -201,21 +207,48 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
 
     let spec = ProblemSpec::paper_default(n, coords);
     let d0 = ShiftedExponential::new(mu, t0);
-    let d1 = ShiftedExponential::new(mu2, t0b);
-    let schedule = StragglerSchedule::stationary(Box::new(d0.clone()))
-        .then(shift_at, Box::new(d1.clone()));
+    // Phase 1 may be a heavy-tailed shifted Weibull (`--dist2 weibull`):
+    // the scenario the distribution-agnostic re-solve exists for. The
+    // oracle partition is solved from the true phase-1 model either way.
+    let weibull_phase = args.value("dist2") == Some("weibull") || args.value("shape2").is_some();
+    let (schedule, oracle) = if weibull_phase {
+        let d1 = Weibull::new(
+            args.get("shape2", 0.7)?,
+            args.get("scale2", 1.0 / mu2)?,
+            args.get("shift2", t0b)?,
+        );
+        let oracle =
+            closed_form::x_freq_blocks_model(&spec, &d1, coords, &OrderStatConfig::default())?;
+        (
+            StragglerSchedule::stationary(Box::new(d0.clone())).then(shift_at, Box::new(d1)),
+            oracle,
+        )
+    } else {
+        let d1 = ShiftedExponential::new(mu2, t0b);
+        let oracle = closed_form::x_freq_blocks(&spec, &d1, coords)?;
+        (
+            StragglerSchedule::stationary(Box::new(d0.clone())).then(shift_at, Box::new(d1)),
+            oracle,
+        )
+    };
     let initial = closed_form::x_freq_blocks(&spec, &d0, coords)?;
-    let oracle = closed_form::x_freq_blocks(&spec, &d1, coords)?;
     println!("schedule        : {}", schedule.label());
     println!("initial x^(f)   : {initial}");
     println!("oracle  x^(f)   : {oracle}");
 
+    let family_arg = args.value("family").unwrap_or("auto");
+    let family = FamilyPolicy::parse(family_arg).ok_or_else(|| {
+        bcgc::Error::InvalidArgument(format!(
+            "--family {family_arg:?}: expected auto|shifted-exp|weibull|empirical"
+        ))
+    })?;
     let acfg = AdaptiveConfig {
         window: args.get("window", 20 * n)?,
         check_every: args.get("check-every", 10)?,
         cooldown: args.get("cooldown", 20)?,
         min_samples: args.get("min-samples", 10 * n)?,
         drift_threshold: args.get("drift-threshold", 0.2)?,
+        family,
         ..Default::default()
     };
     let sim_cfg = MultiSimConfig { iters, seed, comm_latency: args.get("comm-latency", 0.0)? };
@@ -231,7 +264,12 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
 
     print!("{}", cmp.render_report());
     if let Some(path) = args.value("json") {
-        std::fs::write(path, cmp.render_json())?;
+        let json = bcgc::bench_harness::stamp_bench_meta(
+            &cmp.render_json(),
+            seed,
+            &format!("N={n} L={coords} iters={iters} shift_at={shift_at} family={family_arg}"),
+        );
+        std::fs::write(path, json)?;
         println!("wrote {path}");
     }
     Ok(())
@@ -321,12 +359,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if args.flag("adaptive") {
         let d = AdaptiveConfig::default();
+        let family_arg = args.value("family").unwrap_or("auto");
+        let family = FamilyPolicy::parse(family_arg).ok_or_else(|| {
+            bcgc::Error::InvalidArgument(format!(
+                "--family {family_arg:?}: expected auto|shifted-exp|weibull|empirical"
+            ))
+        })?;
         cfg.adaptive = Some(AdaptiveConfig {
             window: args.get("adapt-window", d.window)?,
             check_every: args.get("adapt-every", d.check_every)?,
             cooldown: args.get("adapt-cooldown", d.cooldown)?,
             min_samples: args.get("adapt-min-samples", d.min_samples)?,
             drift_threshold: args.get("drift-threshold", d.drift_threshold)?,
+            family,
             ..d
         });
     }

@@ -12,7 +12,8 @@
 //! Theorem 2/3's expression. The generalized form (any positive `w_i`)
 //! also powers the Ferdinand hierarchical baseline (MDS factors).
 
-use crate::distribution::order_stats::{shifted_exp_exact, OrderStats};
+use crate::distribution::order_stats::OrderStats;
+use crate::distribution::runtime_dist::{OrderStatConfig, RuntimeDistribution};
 use crate::distribution::shifted_exp::ShiftedExponential;
 use crate::optimizer::blocks::BlockPartition;
 use crate::optimizer::rounding::round_to_blocks;
@@ -70,20 +71,24 @@ pub fn x_freq(spec: &ProblemSpec, os: &OrderStats) -> Result<Vec<f64>> {
     Ok(x_from_deterministic_t(spec, &os.t_prime, WorkModel::GradientCoding)?.0)
 }
 
-/// Convenience: Theorem 3's `x^(f)` for a shifted-exponential model,
-/// rounded to an integer partition over exactly `coords` coordinates
-/// (exact order statistics — no Monte Carlo). This is the adaptive
-/// engine's cheap re-solve; the drift experiments and CLI share it.
+/// Theorem 3's `x^(f)` shape for **any** runtime-distribution family,
+/// rounded to an integer partition over exactly `coords` coordinates.
+/// The order-stat moments come from the model itself
+/// ([`RuntimeDistribution::order_stat_moments`]): exact quadrature for
+/// shifted-exp, exact ECDF sums for the empirical family, CRN-seeded
+/// Monte Carlo otherwise — this is how the adaptive engine's cheap
+/// re-solve follows whichever family the online model selection picked.
 ///
 /// `coords` may differ from `spec.coords` (e.g. the deployed model's
 /// true parameter count): `x^(f)` is proportional to `L`, so the
 /// solution is rescaled before rounding.
-pub fn x_freq_blocks(
+pub fn x_freq_blocks_model(
     spec: &ProblemSpec,
-    dist: &ShiftedExponential,
+    dist: &dyn RuntimeDistribution,
     coords: usize,
+    os_cfg: &OrderStatConfig,
 ) -> Result<BlockPartition> {
-    let os = shifted_exp_exact(dist, spec.n);
+    let os = dist.order_stat_moments(spec.n, os_cfg);
     let mut x = x_freq(spec, &os)?;
     if coords != spec.coords {
         let scale = coords as f64 / spec.coords as f64;
@@ -92,6 +97,17 @@ pub fn x_freq_blocks(
         }
     }
     Ok(round_to_blocks(&x, coords))
+}
+
+/// Convenience: [`x_freq_blocks_model`] for the shifted-exponential
+/// model (exact order statistics — no Monte Carlo, so the config is
+/// irrelevant). The paper-facing experiments and CLI share it.
+pub fn x_freq_blocks(
+    spec: &ProblemSpec,
+    dist: &ShiftedExponential,
+    coords: usize,
+) -> Result<BlockPartition> {
+    x_freq_blocks_model(spec, dist, coords, &OrderStatConfig::default())
 }
 
 /// The paper's explicit `m^(t)` (Theorem 2) — exposed for tests.
@@ -217,6 +233,31 @@ mod tests {
                 "{a} vs {b}"
             );
         }
+    }
+
+    #[test]
+    fn x_freq_blocks_model_covers_every_family() {
+        use crate::distribution::weibull::Weibull;
+        use crate::distribution::Empirical;
+        let spec = ProblemSpec::paper_default(8, 2_000);
+        let cfg = OrderStatConfig::default();
+        let exp = ShiftedExponential::new(1e-3, 50.0);
+        let weib = Weibull::new(0.8, 500.0, 50.0);
+        let trace: Vec<f64> = (1..=200).map(|i| 40.0 + 7.0 * i as f64).collect();
+        let emp = Empirical::new(trace);
+        for d in [
+            &exp as &dyn crate::distribution::runtime_dist::RuntimeDistribution,
+            &weib,
+            &emp,
+        ] {
+            let p = x_freq_blocks_model(&spec, d, 2_000, &cfg).unwrap();
+            assert_eq!(p.n(), 8, "{}", d.label());
+            assert_eq!(p.total(), 2_000, "{}", d.label());
+        }
+        // The shifted-exp convenience wrapper is the same computation.
+        let a = x_freq_blocks(&spec, &exp, 2_000).unwrap();
+        let b = x_freq_blocks_model(&spec, &exp, 2_000, &cfg).unwrap();
+        assert_eq!(a.sizes(), b.sizes());
     }
 
     #[test]

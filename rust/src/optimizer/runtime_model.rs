@@ -52,6 +52,16 @@ impl ProblemSpec {
     pub fn unit_work(&self) -> f64 {
         self.samples as f64 / self.n as f64 * self.cycles_per_coord
     }
+
+    /// This spec with a different worker count — the elastic
+    /// re-dimension's problem statement (`M`, `L`, `b` unchanged; the
+    /// per-coordinate unit of work shifts with `N`).
+    #[inline]
+    pub fn with_n(mut self, n: usize) -> Self {
+        assert!(n >= 1);
+        self.n = n;
+        self
+    }
 }
 
 /// Per-level work model (see module docs).
@@ -246,6 +256,15 @@ mod tests {
             .into_iter()
             .fold(f64::MIN, f64::max);
         assert!((tau - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn with_n_rescales_the_unit_work() {
+        let spec = ProblemSpec::new(10, 1000, 50, 2.0);
+        let shrunk = spec.with_n(5);
+        assert_eq!(shrunk.n, 5);
+        assert_eq!(shrunk.coords, 1000);
+        assert!((shrunk.unit_work() - 2.0 * spec.unit_work()).abs() < 1e-12);
     }
 
     #[test]

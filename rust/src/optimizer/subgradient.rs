@@ -141,14 +141,15 @@ pub fn solve(
 
     // Common-random-number playoff between candidates. Besides the
     // averaged and last iterates and the warm start, enter the two
-    // closed-form solutions (Theorems 2/3) built from Monte-Carlo order
-    // statistics — a cheap multi-start that guarantees the solver never
-    // returns worse than the analytic approximations.
+    // closed-form solutions (Theorems 2/3) built from CRN-seeded
+    // Monte-Carlo order statistics — a cheap multi-start that works for
+    // any distribution family the re-solve selected and guarantees the
+    // solver never returns worse than the analytic approximations.
     let mut candidates: Vec<Vec<f64>> = vec![averaged, x, project_simplex(&start, l)];
     {
-        use crate::distribution::order_stats::estimate;
+        use crate::distribution::runtime_dist::{mc_order_stats, OrderStatConfig};
         use crate::optimizer::closed_form;
-        let os = estimate(dist, n, 2000, rng);
+        let os = mc_order_stats(dist, n, &OrderStatConfig { trials: 2000, seed: rng.next_u64() });
         if let Ok(xt) = closed_form::x_time(spec, &os) {
             candidates.push(xt);
         }

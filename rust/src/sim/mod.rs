@@ -19,6 +19,6 @@ pub mod multi;
 pub use event_sim::{simulate_iteration, SimConfig, SimOutcome};
 pub use multi::{
     compare_adaptive_vs_static, compare_elastic_vs_static, simulate_adaptive, simulate_elastic,
-    simulate_static, simulate_static_churn, AdaptiveComparison, ChurnEvent, ChurnSchedule,
-    ElasticComparison, MultiSimConfig, MultiSimReport,
+    simulate_elastic_with_family, simulate_static, simulate_static_churn, AdaptiveComparison,
+    ChurnEvent, ChurnSchedule, ElasticComparison, MultiSimConfig, MultiSimReport,
 };

@@ -14,9 +14,10 @@ use crate::bench_harness::Table;
 use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveController};
 use crate::coordinator::metrics::SchemeEpoch;
 use crate::coordinator::straggler::StragglerSchedule;
-use crate::distribution::fit::{FitMethod, OnlineEstimator};
+use crate::distribution::fit::{FamilyPolicy, FitMethod, OnlineEstimator};
+use crate::distribution::runtime_dist::OrderStatConfig;
 use crate::optimizer::blocks::BlockPartition;
-use crate::optimizer::closed_form::x_freq_blocks;
+use crate::optimizer::closed_form::{x_freq_blocks, x_freq_blocks_model};
 use crate::optimizer::runtime_model::ProblemSpec;
 use crate::sim::event_sim::{simulate_iteration, SimConfig};
 use crate::util::rng::Rng;
@@ -133,8 +134,10 @@ pub fn simulate_adaptive(
                 epoch,
                 installed_at_iter: iter,
                 block_sizes: blocks.sizes().to_vec(),
-                estimated_mu: Some(plan.estimate.mu),
-                estimated_t0: Some(plan.estimate.t0),
+                estimated_mu: plan.estimate.mu_hint(),
+                estimated_t0: plan.estimate.t0_hint(),
+                estimated_mean: Some(plan.estimate.mean()),
+                family: Some(plan.estimate.family().name().to_string()),
                 drift: plan.drift,
             });
         }
@@ -210,8 +213,10 @@ impl AdaptiveComparison {
         let mut out = table.render();
         for s in &self.adaptive_run.swaps {
             out.push_str(&format!(
-                "swap at iter {:4}: fitted mu={}, t0={} (drift {:.2})\n",
+                "swap at iter {:4}: family={} E[T]={}, mu={}, t0={} (drift {:.2})\n",
                 s.installed_at_iter,
+                s.family.as_deref().unwrap_or("-"),
+                s.estimated_mean.map_or_else(|| "-".into(), |v| format!("{v:.1}")),
                 s.estimated_mu.map_or_else(|| "-".into(), |v| format!("{v:.3e}")),
                 s.estimated_t0.map_or_else(|| "-".into(), |v| format!("{v:.1}")),
                 s.drift
@@ -261,8 +266,12 @@ impl AdaptiveComparison {
                 out.push_str(", ");
             }
             out.push_str(&format!(
-                "{{\"iter\": {}, \"mu\": {}, \"t0\": {}, \"drift\": {}}}",
+                "{{\"iter\": {}, \"family\": {}, \"mean\": {}, \"mu\": {}, \"t0\": {}, \"drift\": {}}}",
                 s.installed_at_iter,
+                s.family
+                    .as_ref()
+                    .map_or_else(|| "null".to_string(), |f| format!("\"{f}\"")),
+                s.estimated_mean.map_or_else(|| "null".to_string(), num),
                 s.estimated_mu.map_or_else(|| "null".to_string(), num),
                 s.estimated_t0.map_or_else(|| "null".to_string(), num),
                 num(s.drift)
@@ -483,11 +492,17 @@ pub fn simulate_static_churn(
 
 /// Play out the **elastic coordinator** through worker churn: at every
 /// membership change the scheme is re-dimensioned to the live pool size
-/// — re-solved via the closed-form `x^(f)` for the windowed online fit
-/// (falling back to the schedule's current phase when the window is
-/// still cold) — and installed as a fresh scheme epoch, mirroring the
-/// threaded trainer's churn → re-solve → epoch-swap flow in virtual
-/// time.
+/// — re-solved via the `x^(f)` shape on the windowed **family-selected**
+/// fit's order-stat moments (falling back to the schedule's current
+/// phase when the window is still cold) — and installed as a fresh
+/// scheme epoch, mirroring the threaded trainer's churn → re-solve →
+/// epoch-swap flow in virtual time. Like the trainer, the estimator
+/// window is flushed after each re-dimension so post-churn fits never
+/// blend observations across epochs.
+///
+/// Uses the default `family = auto` selection; to pin the family the
+/// way `[adaptive] family =` pins the threaded trainer's, use
+/// [`simulate_elastic_with_family`].
 pub fn simulate_elastic(
     spec: &ProblemSpec,
     initial: &BlockPartition,
@@ -495,6 +510,29 @@ pub fn simulate_elastic(
     churn: &ChurnSchedule,
     cfg: &MultiSimConfig,
     fit_window: usize,
+) -> Result<MultiSimReport> {
+    simulate_elastic_with_family(
+        spec,
+        initial,
+        schedule,
+        churn,
+        cfg,
+        fit_window,
+        FamilyPolicy::Auto,
+    )
+}
+
+/// [`simulate_elastic`] with an explicit straggler-model family policy
+/// for the churn re-solves (mirrors the trainer's `[adaptive] family =`
+/// knob, e.g. to reproduce the old forced-shifted-exp behavior).
+pub fn simulate_elastic_with_family(
+    spec: &ProblemSpec,
+    initial: &BlockPartition,
+    schedule: &StragglerSchedule,
+    churn: &ChurnSchedule,
+    cfg: &MultiSimConfig,
+    fit_window: usize,
+    family: FamilyPolicy,
 ) -> Result<MultiSimReport> {
     let n0 = spec.n;
     if initial.n() != n0 {
@@ -516,36 +554,41 @@ pub fn simulate_elastic(
         if churn.has_event_at(iter) {
             let n_new = churn.n_at(iter, n0);
             if n_new != n_cur {
-                let mut spec_new = *spec;
-                spec_new.n = n_new;
-                let fit = est.fit();
-                let dist = fit
-                    .as_ref()
-                    .map(|f| f.to_distribution())
-                    .or_else(|| schedule.dist_at(iter).as_shifted_exp().cloned());
-                blocks = match dist {
-                    Some(d) => x_freq_blocks(&spec_new, &d, coords)?,
-                    None => {
-                        let s = if n_new > 1 { 1 } else { 0 };
-                        BlockPartition::single_level(n_new, s, coords)
-                    }
+                let spec_new = spec.with_n(n_new);
+                let fit = est.fit_model(family);
+                blocks = if let Some(f) = &fit {
+                    let d = f.build();
+                    let os_cfg = OrderStatConfig {
+                        seed: cfg.seed ^ 0x0E1A_5710 ^ ((iter as u64) << 1),
+                        ..Default::default()
+                    };
+                    x_freq_blocks_model(&spec_new, d.as_ref(), coords, &os_cfg)?
+                } else if let Some(d) = schedule.dist_at(iter).as_shifted_exp() {
+                    x_freq_blocks(&spec_new, d, coords)?
+                } else {
+                    let s = if n_new > 1 { 1 } else { 0 };
+                    BlockPartition::single_level(n_new, s, coords)
                 };
                 epoch += 1;
                 swaps.push(SchemeEpoch {
                     epoch,
                     installed_at_iter: iter,
                     block_sizes: blocks.sizes().to_vec(),
-                    estimated_mu: fit.as_ref().map(|f| f.mu),
-                    estimated_t0: fit.as_ref().map(|f| f.t0),
+                    estimated_mu: fit.as_ref().and_then(|f| f.mu_hint()),
+                    estimated_t0: fit.as_ref().and_then(|f| f.t0_hint()),
+                    estimated_mean: fit.as_ref().map(|f| f.mean()),
+                    family: fit.as_ref().map(|f| f.family().name().to_string()),
                     drift: 0.0,
                 });
                 n_cur = n_new;
+                // New epoch, new N/unit work: old observations would
+                // bias the next fit — flush like the threaded trainer.
+                est.clear();
             }
         }
         let all = schedule.dist_at(iter).sample_vec(max_n, &mut rng);
         let times = &all[..n_cur];
-        let mut spec_cur = *spec;
-        spec_cur.n = n_cur;
+        let spec_cur = spec.with_n(n_cur);
         let out = simulate_iteration(&spec_cur, &blocks, times, &sim_cfg);
         completion_times.push(out.completion_time);
         epochs.push(epoch);
@@ -669,9 +712,12 @@ impl ElasticComparison {
                 out.push_str(", ");
             }
             out.push_str(&format!(
-                "{{\"iter\": {}, \"n\": {}, \"mu\": {}, \"t0\": {}}}",
+                "{{\"iter\": {}, \"n\": {}, \"family\": {}, \"mu\": {}, \"t0\": {}}}",
                 s.installed_at_iter,
                 s.block_sizes.len(),
+                s.family
+                    .as_ref()
+                    .map_or_else(|| "null".to_string(), |f| format!("\"{f}\"")),
                 s.estimated_mu.map_or_else(|| "null".to_string(), num),
                 s.estimated_t0.map_or_else(|| "null".to_string(), num),
             ));
@@ -826,6 +872,55 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_auto_family_tracks_a_weibull_drift() {
+        // The cluster degrades from a mild shifted-exp regime into a
+        // heavy-tailed Weibull one. The old engine would keep forcing
+        // Theorem 3's shifted-exp closed form onto the window; with
+        // family = auto the re-solve must leave the exponential family
+        // once the window is purely post-shift — and beat the static
+        // phase-0-optimal scheme.
+        use crate::distribution::weibull::Weibull;
+        use crate::distribution::CycleTimeDistribution;
+        let spec = spec(); // N = 8, L = 800
+        let d0 = ShiftedExponential::new(1e-2, 50.0);
+        let d1 = Weibull::new(0.7, 1000.0, 50.0);
+        let schedule =
+            StragglerSchedule::stationary(Box::new(d0.clone())).then(40, Box::new(d1));
+        let initial = x_freq_blocks(&spec, &d0, 800).unwrap();
+        let cfg = MultiSimConfig { iters: 260, seed: 61, comm_latency: 0.0 };
+        let acfg = AdaptiveConfig {
+            window: 40 * spec.n,
+            min_samples: 20 * spec.n,
+            check_every: 10,
+            cooldown: 15,
+            drift_threshold: 0.15,
+            ..Default::default()
+        };
+        let cmp =
+            compare_adaptive_vs_static(&spec, &initial, None, &schedule, &cfg, acfg, 80)
+                .unwrap();
+        assert!(!cmp.adaptive_run.swaps.is_empty(), "the regime change must trigger");
+        // Later swaps see a window dominated by the Weibull phase: the
+        // selected family must not be the shifted exponential (weibull,
+        // or the empirical fallback while the window still mixes).
+        let last = cmp.adaptive_run.swaps.last().unwrap();
+        assert!(last.family.is_some());
+        assert_ne!(
+            last.family.as_deref(),
+            Some("shifted-exp"),
+            "auto selection stayed locked to the exponential family: {:?}",
+            cmp.adaptive_run.swaps.iter().map(|s| s.family.clone()).collect::<Vec<_>>()
+        );
+        let (s_after, a_after) = (cmp.static_after(), cmp.adaptive_after());
+        assert!(
+            a_after < s_after,
+            "family-aware adaptive ({a_after:.1}) must beat the stale static arm ({s_after:.1})"
+        );
+        // The swap log records the generic mean for every family.
+        assert!(last.estimated_mean.unwrap() > d0.mean());
+    }
+
+    #[test]
     fn churn_schedule_accounting() {
         let c = ChurnSchedule::none().then_depart(40, 2).then_arrive(90, 3);
         assert_eq!(c.first_change(), Some(40));
@@ -883,6 +978,32 @@ mod tests {
             assert!(
                 (got - want).abs() < 1e-9 * want.max(1.0),
                 "iter {iter}: sim {got} vs closed {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn elastic_simulator_honors_a_forced_family_policy() {
+        // The simulator mirrors the trainer, so a pinned `[adaptive]
+        // family =` must reach its churn re-solves too: forcing the
+        // shifted-exp family on exponential data records that family in
+        // the swap log (Auto could legitimately pick another fit).
+        let spec = spec(); // N = 8
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let schedule = StragglerSchedule::stationary(Box::new(d));
+        let churn = ChurnSchedule::none().then_depart(20, 2);
+        let blocks = BlockPartition::new(vec![100; 8]);
+        let cfg = MultiSimConfig { iters: 40, seed: 13, comm_latency: 0.0 };
+        for family in [FamilyPolicy::ShiftedExp, FamilyPolicy::Empirical] {
+            let report = simulate_elastic_with_family(
+                &spec, &blocks, &schedule, &churn, &cfg, 200, family,
+            )
+            .unwrap();
+            assert_eq!(report.swaps.len(), 1);
+            assert_eq!(
+                report.swaps[0].family.as_deref(),
+                Some(family.name()),
+                "{family:?}"
             );
         }
     }

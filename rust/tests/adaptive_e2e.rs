@@ -68,13 +68,18 @@ fn threaded_trainer_hot_swaps_mid_training_without_dropping_iterations() {
     );
     // The re-solve was driven by a fit that moved decisively toward the
     // new regime (early swaps may fit a pre/post mixture, so bound the
-    // direction rather than the exact value).
+    // direction rather than the exact value). `estimated_mean` is the
+    // family-agnostic hook: with `family = auto` the mixture window may
+    // legitimately be fitted by a non-exponential family, in which case
+    // no `mu` is recorded.
     let last = report.scheme_epochs.last().unwrap();
-    let fitted_mu = last.estimated_mu.expect("adaptive swap records its fit");
+    assert!(last.family.is_some(), "adaptive swaps record their family");
+    let fitted_mean = last.estimated_mean.expect("adaptive swap records its fit");
     assert!(
-        fitted_mu < d0.mu / 2.0 && fitted_mu > d1.mu / 3.0,
-        "fitted mu {fitted_mu} should sit between the regimes, near {}",
-        d1.mu
+        fitted_mean > 1.5 * d0.mean() && fitted_mean < 1.5 * d1.mean(),
+        "fitted mean {fitted_mean} should sit between the regimes ({} → {})",
+        d0.mean(),
+        d1.mean()
     );
 
     // Epochs recorded per iteration are monotone and end > 0.

@@ -1,0 +1,129 @@
+//! Property tests for the distribution-agnostic re-solve: Monte-Carlo
+//! order-stat moments agree with the exact shifted-exp quadrature under
+//! common random numbers, `family = "auto"` recovers the generating
+//! family on synthetic windows (reusing `fit_weibull_mom`'s sample
+//! generators), and every family's model routes through the generic
+//! `x^(f)` re-solve to a feasible partition.
+
+use bcgc::coordinator::adaptive::{resolve_partition, ResolveStrategy};
+use bcgc::distribution::fit::{select_model, FamilyPolicy, FitMethod, FittedModel};
+use bcgc::distribution::order_stats::shifted_exp_exact;
+use bcgc::distribution::runtime_dist::{
+    mc_order_stats, ModelFamily, OrderStatConfig, RuntimeDistribution,
+};
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::distribution::weibull::Weibull;
+use bcgc::distribution::{CycleTimeDistribution, TwoPoint};
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::util::rng::Rng;
+
+#[test]
+fn mc_order_stats_match_the_exact_shifted_exp_quadrature() {
+    // Satellite property: the Monte-Carlo route (what Weibull fits use)
+    // agrees with the exact Eq.(11)/Lemma-2 quadrature route within MC
+    // tolerance, and is CRN-reproducible.
+    for (mu, t0) in [(1e-3, 50.0), (1e-2, 50.0), (2e-2, 100.0)] {
+        let d = ShiftedExponential::new(mu, t0);
+        for n in [5usize, 12, 20] {
+            let exact = shifted_exp_exact(&d, n);
+            let cfg = OrderStatConfig { trials: 60_000, seed: 0xC0FFEE ^ n as u64 };
+            let mc = mc_order_stats(&d, n, &cfg);
+            let mc_again = mc_order_stats(&d, n, &cfg);
+            for k in 0..n {
+                // CRN: bit-identical on the same seed.
+                assert_eq!(mc.t[k], mc_again.t[k]);
+                assert_eq!(mc.t_prime[k], mc_again.t_prime[k]);
+                let rel_t = (mc.t[k] - exact.t[k]).abs() / exact.t[k];
+                let rel_p = (mc.t_prime[k] - exact.t_prime[k]).abs() / exact.t_prime[k];
+                assert!(rel_t < 0.02, "mu={mu} n={n} k={k}: rel_t={rel_t}");
+                assert!(rel_p < 0.02, "mu={mu} n={n} k={k}: rel_p={rel_p}");
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_recovers_the_generating_family_on_synthetic_windows() {
+    let mut rng = Rng::new(2021);
+    // Shifted-exp data → shifted-exp (the paper's model keeps priority).
+    let exp = ShiftedExponential::new(1e-3, 50.0);
+    let window = exp.sample_vec(4000, &mut rng);
+    let m = select_model(&window, FamilyPolicy::Auto, FitMethod::Mle).unwrap();
+    assert_eq!(m.family(), ModelFamily::ShiftedExp, "picked {}", m.label());
+    assert!((m.mean() - exp.mean()).abs() / exp.mean() < 0.1);
+
+    // Weibull data (the fit_weibull_mom synthetic generators) → Weibull.
+    for (shape, scale, shift) in [(2.0f64, 10.0f64, 5.0f64), (0.8, 100.0, 20.0)] {
+        let d = Weibull::new(shape, scale, shift);
+        let window = d.sample_vec(4000, &mut rng);
+        let m = select_model(&window, FamilyPolicy::Auto, FitMethod::Mle).unwrap();
+        match &m {
+            FittedModel::Weibull(w) => {
+                assert!(
+                    (w.shape - shape).abs() / shape < 0.2,
+                    "fitted shape {} vs true {shape}",
+                    w.shape
+                );
+                assert!((m.mean() - d.mean()).abs() / d.mean() < 0.05);
+            }
+            other => panic!("Weibull(k={shape}) window selected {}", other.label()),
+        }
+    }
+
+    // A bimodal mixture no parametric family can track → empirical.
+    let two = TwoPoint::new(1.0, 6.0, 0.5);
+    let window = two.sample_vec(3000, &mut rng);
+    let m = select_model(&window, FamilyPolicy::Auto, FitMethod::Mle).unwrap();
+    assert_eq!(m.family(), ModelFamily::Empirical, "picked {}", m.label());
+}
+
+#[test]
+fn every_family_routes_through_the_generic_resolve_to_a_feasible_partition() {
+    let mut rng = Rng::new(7);
+    let exp = ShiftedExponential::new(1e-3, 50.0);
+    let weib = Weibull::new(0.7, 900.0, 50.0);
+    let trace = exp.sample_vec(400, &mut rng);
+    let emp = bcgc::distribution::Empirical::new(trace);
+    let warm = vec![125.0; 16]; // from an N=16 epoch; the pool shrank
+    for n_new in [12usize, 16] {
+        let spec = ProblemSpec::paper_default(n_new, 2_000);
+        for d in [&exp as &dyn RuntimeDistribution, &weib, &emp] {
+            for strategy in [
+                ResolveStrategy::ClosedFormFreq,
+                ResolveStrategy::Subgradient { iters: 150, playoff_trials: 100 },
+            ] {
+                let p = resolve_partition(
+                    &strategy,
+                    &spec,
+                    d,
+                    Some(warm.as_slice()),
+                    2_000,
+                    &mut rng,
+                )
+                .unwrap();
+                assert_eq!(p.n(), n_new, "{} / {strategy:?}", d.label());
+                assert_eq!(p.total(), 2_000, "{} / {strategy:?}", d.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn fitted_models_rebuild_into_their_own_family() {
+    let mut rng = Rng::new(99);
+    let weib = Weibull::new(0.8, 200.0, 30.0);
+    let window = weib.sample_vec(3000, &mut rng);
+    for policy in [FamilyPolicy::ShiftedExp, FamilyPolicy::Weibull, FamilyPolicy::Empirical] {
+        let m = select_model(&window, policy, FitMethod::Moments).unwrap();
+        let d = m.build();
+        assert_eq!(d.model_family().name(), m.family().name());
+        // Moments survive the round trip (empirical exactly, parametric
+        // families to within their estimator's accuracy on 3k samples).
+        assert!((d.mean() - m.mean()).abs() / m.mean() < 1e-6, "{}", m.label());
+        let os = d.order_stat_moments(6, &OrderStatConfig::default());
+        for k in 1..6 {
+            assert!(os.t[k] >= os.t[k - 1]);
+            assert!(os.t_prime[k] >= os.t_prime[k - 1]);
+        }
+    }
+}
