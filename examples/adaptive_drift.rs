@@ -13,7 +13,7 @@ use bcgc::cli::Args;
 use bcgc::coordinator::adaptive::AdaptiveConfig;
 use bcgc::coordinator::metrics::TrainReport;
 use bcgc::coordinator::straggler::StragglerSchedule;
-use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+use bcgc::coordinator::trainer::{train, TrainConfig};
 use bcgc::data::synthetic;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
 use bcgc::distribution::CycleTimeDistribution;
@@ -56,7 +56,7 @@ fn main() -> bcgc::Result<()> {
         cfg.adaptive = adaptive;
         let schedule = StragglerSchedule::stationary(Box::new(d0.clone()))
             .then(shift_at, Box::new(d1.clone()));
-        Trainer::with_schedule(cfg, schedule, factory.clone()).run()
+        train(cfg, schedule, factory.clone())
     };
 
     let adaptive_cfg = AdaptiveConfig {

@@ -12,7 +12,7 @@
 
 use bcgc::cli::Args;
 use bcgc::coordinator::straggler::StragglerSchedule;
-use bcgc::coordinator::trainer::{ElasticConfig, TrainConfig, Trainer};
+use bcgc::coordinator::trainer::{train, ElasticConfig, TrainConfig};
 use bcgc::data::synthetic;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
 use bcgc::distribution::CycleTimeDistribution;
@@ -61,7 +61,7 @@ fn main() -> bcgc::Result<()> {
         arrivals: vec![(arrive_at, 1)],
     });
     let schedule = StragglerSchedule::stationary(Box::new(dist));
-    let report = Trainer::with_schedule(cfg, schedule, factory).run()?;
+    let report = train(cfg, schedule, factory)?;
 
     println!("\n{}", report.summary());
     println!("\nmembership:\n{}", report.render_membership());

@@ -3,14 +3,16 @@
 //! 1. Define the problem (N workers, L coordinates, straggler model).
 //! 2. Solve for the optimal block partition (closed form x^(f)).
 //! 3. Inspect the expected runtime against the classical baselines.
-//! 4. Run coded distributed training for a few steps (PJRT artifacts if
-//!    built, pure-host fallback otherwise).
+//! 4. Run coded distributed training for a few steps on a worker pool
+//!    (PJRT artifacts if built, pure-host fallback otherwise) via the
+//!    `JobSpec` builder.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use std::path::PathBuf;
 
-use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+use bcgc::coordinator::pool::{JobSpec, PoolConfig, WorkerPool};
+use bcgc::coordinator::straggler::StragglerSchedule;
 use bcgc::data::synthetic;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
 use bcgc::optimizer::evaluate::compare_schemes;
@@ -54,12 +56,17 @@ fn main() -> bcgc::Result<()> {
         println!("backend: host (run `make artifacts` for the PJRT path)");
         host_factory(ds, host::HostModel::LinearRegression)
     };
-    let mut cfg = TrainConfig::new(spec, blocks);
-    cfg.steps = 30;
-    cfg.lr = 0.05;
-    cfg.eval_every = 5;
-    cfg.seed = 42;
-    let report = Trainer::new(cfg, Box::new(dist), factory).run()?;
+    // Builder facade: spawn a pool, submit the job, run to completion.
+    let mut pool =
+        WorkerPool::new(PoolConfig::new(n), StragglerSchedule::stationary(Box::new(dist)))?;
+    JobSpec::new(spec, blocks)
+        .steps(30)
+        .lr(0.05)
+        .eval_every(5)
+        .seed(42)
+        .executor(factory)
+        .submit(&mut pool)?;
+    let report = pool.run_to_completion()?.remove(0);
     println!("{}", report.summary());
     for (it, loss) in &report.loss_curve {
         println!("  step {it:3}  loss {loss:10.4}");

@@ -15,7 +15,8 @@
 use std::path::PathBuf;
 
 use bcgc::cli::Args;
-use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+use bcgc::coordinator::pool::{JobSpec, PoolConfig, WorkerPool};
+use bcgc::coordinator::straggler::StragglerSchedule;
 use bcgc::data::synthetic;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
 use bcgc::optimizer::runtime_model::ProblemSpec;
@@ -73,14 +74,20 @@ fn main() -> bcgc::Result<()> {
     let blocks = solve(&spec, &dist, kind, &SolveOptions::fast(), &mut rng)?;
     println!("scheme  : {} → {blocks}", kind.label());
 
-    let mut cfg = TrainConfig::new(spec, blocks);
-    cfg.steps = steps;
-    cfg.lr = lr;
-    cfg.eval_every = args.get("eval-every", 20)?;
-    cfg.seed = seed;
-    cfg.init_scale = 0.05;
+    // Builder facade over the shared worker pool (one job here; see
+    // examples/multi_job.rs for several tenants on one pool).
+    let mut pool =
+        WorkerPool::new(PoolConfig::new(n), StragglerSchedule::stationary(Box::new(dist)))?;
+    JobSpec::new(spec, blocks)
+        .steps(steps)
+        .lr(lr)
+        .eval_every(args.get("eval-every", 20)?)
+        .seed(seed)
+        .init_scale(0.05)
+        .executor(factory)
+        .submit(&mut pool)?;
     let t0 = std::time::Instant::now();
-    let report = Trainer::new(cfg, Box::new(dist), factory).run()?;
+    let report = pool.run_to_completion()?.remove(0);
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n=== results ===");

@@ -7,7 +7,7 @@
 //! Run: `cargo bench --bench e2e_train`
 
 use bcgc::bench_harness::{banner, fmt_ns, Table};
-use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+use bcgc::coordinator::trainer::{train_stationary, TrainConfig};
 use bcgc::data::synthetic;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
 use bcgc::optimizer::runtime_model::ProblemSpec;
@@ -53,7 +53,7 @@ fn main() {
         cfg.eval_every = 0;
         cfg.seed = 11;
         let t0 = std::time::Instant::now();
-        let report = Trainer::new(cfg, Box::new(dist.clone()), factory).run().unwrap();
+        let report = train_stationary(cfg, Box::new(dist.clone()), factory).unwrap();
         let wall = t0.elapsed().as_secs_f64();
         let wall_iter = report.wall_ns_stats().mean();
         let decode_iter = report.decode_ns_stats().mean();

@@ -1,0 +1,171 @@
+//! Shared worker pool vs disjoint split — the perf-trajectory bench
+//! behind `BENCH_multijob.json`.
+//!
+//! Scenario: two tenants of **unequal length** (150-step and 50-step
+//! MLP jobs, same dataset size) on `N = 8` workers with §VI
+//! shifted-exponential stragglers. Two arms, both on the *real
+//! threaded* coordinator (virtual pacing, real gradients, real
+//! decodes):
+//!
+//! * **shared** — one [`WorkerPool`] of 8; the pool interleaves the
+//!   jobs' per-iteration broadcasts round-robin and reassigns the full
+//!   fleet to the long job once the short one finishes. Makespan =
+//!   the serialized sum of every round's Eq. (2) virtual runtime.
+//! * **disjoint** — the classic static split: two independent 4-worker
+//!   pools, each job's dataset re-sharded 4 ways and its `x^(f)`
+//!   re-solved for `N = 4`. The pools run concurrently, so makespan =
+//!   the slower pool's summed virtual runtime.
+//!
+//! Pooling wins on asymmetric tenants because the disjoint split
+//! strands half the fleet when the short job ends — the production
+//! story for multi-tenant straggler mitigation (redundancy priced per
+//! cluster, not per job). On perfectly symmetric tenants the split is
+//! competitive (larger-`N` order statistics decay slower than 1/N);
+//! the headline config is the asymmetric one.
+//!
+//! The JSON artifact (same schema as
+//! `sim::multi::MultiJobComparison::render_json`) tracks the makespan
+//! improvement across PRs.
+//!
+//! Run: `cargo bench --bench multi_job` (set `BENCH_OUT` to move the
+//! artifact; defaults to ./BENCH_multijob.json).
+
+use bcgc::bench_harness::{banner, stamp_bench_meta};
+use bcgc::coordinator::metrics::TrainReport;
+use bcgc::coordinator::pool::{JobSpec, PoolConfig, WorkerPool};
+use bcgc::coordinator::straggler::StragglerSchedule;
+use bcgc::data::synthetic;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::distribution::CycleTimeDistribution;
+use bcgc::optimizer::closed_form::x_freq_blocks;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::runtime::{host, host_factory};
+use bcgc::sim::{MultiJobComparison, SimJob};
+
+const N: usize = 8;
+const STEPS: [usize; 2] = [150, 50];
+const SEED: u64 = 2021;
+const MU: f64 = 1e-3;
+const T0: f64 = 50.0;
+
+/// MLP dimensions shared by both tenants (each gets its own dataset).
+const FEATURES: usize = 32;
+const HIDDEN: usize = 64;
+const CLASSES: usize = 10;
+/// Total samples per job — fixed across arms (re-sharded per `N`).
+const SAMPLES: usize = 512;
+
+fn virtual_total(report: &TrainReport) -> f64 {
+    report.iters.iter().map(|m| m.virtual_runtime).sum()
+}
+
+/// One single-job pool of `n` workers: the disjoint arm's half-pools.
+fn run_isolated(job: usize, n: usize, steps: usize) -> bcgc::Result<f64> {
+    let dist = ShiftedExponential::new(MU, T0);
+    let ds = synthetic::classification(FEATURES, CLASSES, SAMPLES, n, 0.2, SEED + 1 + job as u64)?;
+    let dim = host::HostExecutor::mlp_dim(FEATURES, HIDDEN, CLASSES);
+    let spec = ProblemSpec::new(n, dim, SAMPLES, 1.0);
+    let blocks = x_freq_blocks(&spec, &dist, dim)?;
+    let mut pcfg = PoolConfig::new(n);
+    pcfg.seed = SEED ^ (0xD15_701A17 + job as u64);
+    let mut pool = WorkerPool::new(pcfg, StragglerSchedule::stationary(Box::new(dist)))?;
+    JobSpec::new(spec, blocks)
+        .steps(steps)
+        .lr(2e-3)
+        .eval_every(0)
+        .seed(SEED + 1 + job as u64)
+        .executor(host_factory(ds, host::HostModel::Mlp { hidden: HIDDEN }))
+        .submit(&mut pool)?;
+    let reports = pool.run_to_completion()?;
+    Ok(virtual_total(&reports[0]))
+}
+
+fn main() {
+    banner(
+        "Multi-job coordinator — 2 jobs on one shared pool vs 2 disjoint half pools",
+        "N=8 shared vs 2x4 split; 150+50-step MLP tenants; shifted-exp(mu=1e-3, t0=50); \
+         threaded coordinator, virtual pacing; makespan in Eq. (2) virtual time.",
+    );
+    let dim = host::HostExecutor::mlp_dim(FEATURES, HIDDEN, CLASSES);
+    let dist = ShiftedExponential::new(MU, T0);
+
+    // --- Shared arm: one 8-worker pool, both tenants interleaved.
+    let mut pcfg = PoolConfig::new(N);
+    pcfg.seed = SEED;
+    let mut pool =
+        WorkerPool::new(pcfg, StragglerSchedule::stationary(Box::new(dist.clone()))).unwrap();
+    for (j, &steps) in STEPS.iter().enumerate() {
+        let ds =
+            synthetic::classification(FEATURES, CLASSES, SAMPLES, N, 0.2, SEED + 1 + j as u64)
+                .unwrap();
+        let spec = ProblemSpec::new(N, dim, SAMPLES, 1.0);
+        let blocks = x_freq_blocks(&spec, &dist, dim).unwrap();
+        JobSpec::new(spec, blocks)
+            .steps(steps)
+            .lr(2e-3)
+            .eval_every(0)
+            .seed(SEED + 1 + j as u64)
+            .executor(host_factory(ds, host::HostModel::Mlp { hidden: HIDDEN }))
+            .submit(&mut pool)
+            .unwrap();
+    }
+    pool.run_all().unwrap();
+    let shared_rounds = pool.rounds();
+    let shared_makespan = pool.virtual_makespan();
+    let cross = pool.cross_job_dropped();
+    let reports = pool.finish().unwrap();
+    let shared_per_job: Vec<f64> = reports.iter().map(virtual_total).collect();
+    let shared_decode_cache: Vec<(u64, u64)> = reports
+        .iter()
+        .map(|r| (r.decode_cache_hits, r.decode_cache_misses))
+        .collect();
+    for (j, r) in reports.iter().enumerate() {
+        assert_eq!(r.steps(), STEPS[j], "job {j} dropped iterations");
+        assert!(
+            r.iters.iter().all(|m| m.grad_norm.is_finite()),
+            "job {j} decoded a non-finite gradient"
+        );
+    }
+    assert_eq!(cross, 0, "no contribution may carry an unknown job id");
+
+    // --- Disjoint arm: two independent half pools, run back to back in
+    // wall time; their virtual clocks are independent (concurrent).
+    let disjoint_per_pool: Vec<f64> = STEPS
+        .iter()
+        .enumerate()
+        .map(|(j, &steps)| run_isolated(j, N / 2, steps).unwrap())
+        .collect();
+
+    let cmp = MultiJobComparison {
+        pool_n: N,
+        split_n: N / 2,
+        jobs: STEPS.iter().map(|&steps| SimJob { coords: dim, steps }).collect(),
+        schedule_label: dist.label(),
+        shared_rounds,
+        shared_makespan,
+        shared_per_job,
+        shared_decode_cache,
+        disjoint_per_pool,
+    };
+    print!("{}", cmp.render_report());
+    assert!(
+        cmp.shared_makespan <= cmp.disjoint_makespan(),
+        "the shared pool must finish asymmetric tenants no later than a disjoint split \
+         (shared {} vs disjoint {})",
+        cmp.shared_makespan,
+        cmp.disjoint_makespan()
+    );
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_multijob.json".into());
+    let json = stamp_bench_meta(
+        &cmp.render_json(),
+        SEED,
+        &format!(
+            "N={N} split={} jobs={:?} L={dim} M={SAMPLES} mu={MU} t0={T0} threaded",
+            N / 2,
+            STEPS
+        ),
+    );
+    std::fs::write(&out, json).expect("write bench artifact");
+    println!("wrote {out}");
+}

@@ -2,7 +2,14 @@
 //!
 //! Grammar: `bcgc <subcommand> [--key value | --key=value | --flag] ...`
 //! Boolean flags take no value; everything else is `key value`.
+//!
+//! Every lookup (`flag`, `value`, `get`, `require`) records the queried
+//! name, so after a command has pulled everything it understands,
+//! [`Args::check_unused`] turns leftover — unknown or typo'd — options
+//! into a hard error instead of silently ignoring them (`--familly`
+//! must not quietly run with the default family).
 
+use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::str::FromStr;
 
@@ -14,6 +21,10 @@ pub struct Args {
     pub positional: Vec<String>,
     values: HashMap<String, String>,
     flags: HashSet<String>,
+    /// Option names a command has looked up (present or not) — the
+    /// vocabulary it understands. Interior-mutable so read-only lookup
+    /// methods keep their `&self` signatures.
+    queried: RefCell<HashSet<String>>,
 }
 
 impl Args {
@@ -48,18 +59,25 @@ impl Args {
         self.positional.first().map(|s| s.as_str())
     }
 
+    fn note(&self, name: &str) {
+        self.queried.borrow_mut().insert(name.to_string());
+    }
+
     /// Boolean flag presence.
     pub fn flag(&self, name: &str) -> bool {
+        self.note(name);
         self.flags.contains(name)
     }
 
     /// Raw value lookup.
     pub fn value(&self, name: &str) -> Option<&str> {
+        self.note(name);
         self.values.get(name).map(|s| s.as_str())
     }
 
     /// Typed value with default.
     pub fn get<T: FromStr>(&self, name: &str, default: T) -> Result<T> {
+        self.note(name);
         match self.values.get(name) {
             None => Ok(default),
             Some(v) => v.parse::<T>().map_err(|_| {
@@ -70,12 +88,50 @@ impl Args {
 
     /// Typed required value.
     pub fn require<T: FromStr>(&self, name: &str) -> Result<T> {
+        self.note(name);
         let v = self
             .values
             .get(name)
             .ok_or_else(|| Error::InvalidArgument(format!("missing required --{name}")))?;
         v.parse::<T>()
             .map_err(|_| Error::InvalidArgument(format!("--{name}: cannot parse {v:?}")))
+    }
+
+    /// Mark option names as part of the command's vocabulary without
+    /// reading them — for documented options that are only *read*
+    /// inside conditional branches (`--churn-count` without
+    /// `--elastic`, `--shape2` without `--dist2 weibull`, …), so
+    /// [`Self::check_unused`] flags typos, not valid-but-inert flags.
+    pub fn declare(&self, names: &[&str]) {
+        let mut queried = self.queried.borrow_mut();
+        for name in names {
+            queried.insert((*name).to_string());
+        }
+    }
+
+    /// Error on any option that was **passed** but never looked up (or
+    /// [declared](Self::declare)) by the command — unknown or
+    /// misspelled flags must fail loudly, not silently fall back to
+    /// defaults. Call after a command has pulled everything it
+    /// understands, ideally *before* its expensive work.
+    pub fn check_unused(&self) -> Result<()> {
+        let queried = self.queried.borrow();
+        let mut leftovers: Vec<&str> = self
+            .values
+            .keys()
+            .chain(self.flags.iter())
+            .map(|s| s.as_str())
+            .filter(|k| !queried.contains(*k))
+            .collect();
+        if leftovers.is_empty() {
+            return Ok(());
+        }
+        leftovers.sort_unstable();
+        let list: Vec<String> = leftovers.iter().map(|k| format!("--{k}")).collect();
+        Err(Error::InvalidArgument(format!(
+            "unknown option(s): {} (misspelled? see usage)",
+            list.join(", ")
+        )))
     }
 }
 
@@ -118,5 +174,51 @@ mod tests {
         let a = args("x --fast");
         assert!(a.flag("fast"));
         assert_eq!(a.value("fast"), None);
+    }
+
+    #[test]
+    fn unknown_options_error_instead_of_being_ignored() {
+        // Typo'd `--familly`: the command only ever queries `family`,
+        // so the leftover must fail the run rather than silently use
+        // the default.
+        let a = args("adaptive --workers 8 --familly weibull");
+        let _ = a.get::<usize>("workers", 20).unwrap();
+        let _ = a.value("family");
+        let err = a.check_unused().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--familly"), "{msg}");
+
+        // Unknown boolean flags are caught too.
+        let a = args("train --workers 4 --turbo");
+        let _ = a.get::<usize>("workers", 20).unwrap();
+        assert!(format!("{}", a.check_unused().unwrap_err()).contains("--turbo"));
+    }
+
+    #[test]
+    fn queried_options_are_not_leftovers() {
+        let a = args("train --workers 8 --elastic --churn-at 10");
+        let _ = a.get::<usize>("workers", 20).unwrap();
+        // Querying an absent option is fine, and a queried flag/value is
+        // consumed whether or not it was present.
+        assert!(!a.flag("adaptive"));
+        assert!(a.flag("elastic"));
+        let _ = a.value("churn-at");
+        a.check_unused().unwrap();
+    }
+
+    #[test]
+    fn declared_options_are_inert_not_unknown() {
+        // A documented option whose read sits behind a condition the
+        // user didn't enable (e.g. --churn-count without --elastic)
+        // must not be diagnosed as a misspelling — but a real typo
+        // alongside it still is.
+        let a = args("train --churn-count 2 --turbo");
+        a.declare(&["churn-count"]);
+        let err = format!("{}", a.check_unused().unwrap_err());
+        assert!(err.contains("--turbo"), "{err}");
+        assert!(!err.contains("--churn-count"), "{err}");
+        let b = args("train --churn-count 2");
+        b.declare(&["churn-count"]);
+        b.check_unused().unwrap();
     }
 }

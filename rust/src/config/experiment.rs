@@ -11,6 +11,7 @@ use std::path::Path;
 
 use crate::config::toml_lite::TomlDoc;
 use crate::coordinator::adaptive::{AdaptiveConfig, ResolveStrategy};
+use crate::coordinator::pool::ScheduleMode;
 use crate::coordinator::straggler::StragglerSchedule;
 use crate::coordinator::trainer::ElasticConfig;
 use crate::sim::ChurnSchedule;
@@ -40,6 +41,10 @@ pub struct ExperimentConfig {
     pub adaptive: Option<AdaptiveSettings>,
     /// Optional elastic worker-pool policy (`[elastic]` section).
     pub elastic: Option<ElasticSettings>,
+    /// Optional shared-pool settings (`[pool]` section — multi-job runs).
+    pub pool: Option<PoolSettings>,
+    /// Optional multi-job settings (`[jobs]` section).
+    pub jobs: Option<JobsSettings>,
 }
 
 /// Straggler-model choice (mirrors `distribution::*`).
@@ -277,6 +282,113 @@ impl ElasticSettings {
     }
 }
 
+/// `[pool]` section: the shared worker fleet a multi-job run submits
+/// its jobs to.
+///
+/// ```toml
+/// [pool]
+/// workers = 8
+/// schedule = "weighted"   # or "round_robin"
+/// ```
+#[derive(Debug, Clone)]
+pub struct PoolSettings {
+    /// Worker count (None = the CLI/default decides).
+    pub workers: Option<usize>,
+    /// Scheduler spelling (validated at parse time).
+    pub schedule: String,
+}
+
+impl PoolSettings {
+    fn parse(doc: &TomlDoc) -> Result<Option<Self>> {
+        let workers = match doc.get_i64("pool.workers") {
+            None => None,
+            Some(v) if v >= 1 => Some(v as usize),
+            Some(_) => return Err(Error::Config("pool.workers must be ≥ 1".into())),
+        };
+        let schedule = doc.get_str("pool.schedule").map(str::to_string);
+        if workers.is_none() && schedule.is_none() {
+            return Ok(None);
+        }
+        let schedule = schedule.unwrap_or_else(|| "round_robin".into());
+        if ScheduleMode::parse(&schedule).is_none() {
+            return Err(Error::Config(format!(
+                "pool.schedule {schedule:?}: expected round_robin|weighted"
+            )));
+        }
+        Ok(Some(Self { workers, schedule }))
+    }
+
+    /// The parsed scheduler mode (validated at load).
+    pub fn schedule_mode(&self) -> ScheduleMode {
+        ScheduleMode::parse(&self.schedule).expect("validated at parse time")
+    }
+}
+
+/// `[jobs]` section: how many concurrent jobs a multi-job run submits
+/// and how many steps each runs.
+///
+/// ```toml
+/// [jobs]
+/// count = 2
+/// steps = [150, 50]   # or a scalar applied to every job
+/// ```
+#[derive(Debug, Clone)]
+pub struct JobsSettings {
+    pub count: usize,
+    /// Per-job step counts; a scalar in the file is replicated. May be
+    /// shorter than `count` (consumers fall back to their default).
+    pub steps: Vec<usize>,
+}
+
+impl JobsSettings {
+    fn parse(doc: &TomlDoc) -> Result<Option<Self>> {
+        let Some(count) = doc.get_i64("jobs.count") else {
+            if doc.get("jobs.steps").is_some() {
+                return Err(Error::Config("[jobs] declares steps but no count".into()));
+            }
+            return Ok(None);
+        };
+        let count = usize::try_from(count)
+            .ok()
+            .filter(|&c| c >= 1)
+            .ok_or_else(|| Error::Config("jobs.count must be ≥ 1".into()))?;
+        let steps = match doc.get("jobs.steps") {
+            None => Vec::new(),
+            Some(v) => {
+                if let Some(one) = v.as_i64() {
+                    if one < 1 {
+                        return Err(Error::Config("jobs.steps must be ≥ 1".into()));
+                    }
+                    vec![one as usize; count]
+                } else if let Some(arr) = v.as_array() {
+                    let mut out = Vec::with_capacity(arr.len());
+                    for item in arr {
+                        let s = item
+                            .as_i64()
+                            .filter(|&s| s >= 1)
+                            .ok_or_else(|| {
+                                Error::Config("jobs.steps entries must be ≥ 1".into())
+                            })?;
+                        out.push(s as usize);
+                    }
+                    if out.len() > count {
+                        return Err(Error::Config(format!(
+                            "jobs.steps lists {} entries for {count} jobs",
+                            out.len()
+                        )));
+                    }
+                    out
+                } else {
+                    return Err(Error::Config(
+                        "jobs.steps must be an integer or an integer array".into(),
+                    ));
+                }
+            }
+        };
+        Ok(Some(Self { count, steps }))
+    }
+}
+
 impl Default for ExperimentConfig {
     fn default() -> Self {
         Self {
@@ -291,6 +403,8 @@ impl Default for ExperimentConfig {
             drift: None,
             adaptive: None,
             elastic: None,
+            pool: None,
+            jobs: None,
         }
     }
 }
@@ -369,6 +483,8 @@ impl ExperimentConfig {
             cfg.adaptive = Some(settings);
         }
         cfg.elastic = ElasticSettings::parse(doc)?;
+        cfg.pool = PoolSettings::parse(doc)?;
+        cfg.jobs = JobsSettings::parse(doc)?;
         if cfg.workers == 0 || cfg.coords == 0 || cfg.samples == 0 {
             return Err(Error::Config("workers/coords/samples must be ≥ 1".into()));
         }
@@ -552,6 +668,54 @@ mod tests {
             let doc = TomlDoc::parse(bad).unwrap();
             assert!(ExperimentConfig::from_doc(&doc).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn parse_pool_and_jobs_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+            workers = 8
+            [pool]
+            workers = 8
+            schedule = "weighted"
+            [jobs]
+            count = 2
+            steps = [150, 50]
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        let pool = cfg.pool.as_ref().expect("pool parsed");
+        assert_eq!(pool.workers, Some(8));
+        assert_eq!(pool.schedule_mode(), ScheduleMode::WeightedUnitWork);
+        let jobs = cfg.jobs.as_ref().expect("jobs parsed");
+        assert_eq!(jobs.count, 2);
+        assert_eq!(jobs.steps, vec![150, 50]);
+
+        // Scalar steps replicate; schedule defaults to round_robin.
+        let doc = TomlDoc::parse("[pool]\nworkers = 4\n[jobs]\ncount = 3\nsteps = 40").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.pool.as_ref().unwrap().schedule_mode(), ScheduleMode::RoundRobin);
+        assert_eq!(cfg.jobs.as_ref().unwrap().steps, vec![40, 40, 40]);
+    }
+
+    #[test]
+    fn pool_and_jobs_sections_reject_bad_values() {
+        for bad in [
+            "[pool]\nworkers = 0",
+            "[pool]\nschedule = \"lottery\"",
+            "[jobs]\ncount = 0",
+            "[jobs]\nsteps = [10]",
+            "[jobs]\ncount = 1\nsteps = [10, 20]",
+            "[jobs]\ncount = 2\nsteps = 0",
+            "[jobs]\ncount = 2\nsteps = \"many\"",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_doc(&doc).is_err(), "{bad}");
+        }
+        // Absent sections parse to None.
+        let cfg = ExperimentConfig::from_doc(&TomlDoc::parse("workers = 4").unwrap()).unwrap();
+        assert!(cfg.pool.is_none() && cfg.jobs.is_none());
     }
 
     #[test]

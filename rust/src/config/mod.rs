@@ -8,6 +8,7 @@ pub mod experiment;
 pub mod toml_lite;
 
 pub use experiment::{
-    AdaptiveSettings, DistConfig, DriftPhase, ElasticSettings, ExperimentConfig,
+    AdaptiveSettings, DistConfig, DriftPhase, ElasticSettings, ExperimentConfig, JobsSettings,
+    PoolSettings,
 };
 pub use toml_lite::{TomlValue, TomlDoc};

@@ -1,38 +1,57 @@
-//! Message types exchanged between master and workers
+//! Message types exchanged between the worker pool and its workers
 //! (std `mpsc`; no async runtime is available offline, and the message
-//! rates here — `N × blocks` per iteration — don't need one).
+//! rates here — `N × blocks` per iteration per job — don't need one).
+//!
+//! A single pool of worker threads serves **multiple training jobs**
+//! ([`crate::coordinator::pool::WorkerPool`]): every task and every coded
+//! block is stamped with the [`JobId`] it belongs to, and the worker loop
+//! multiplexes tasks from different jobs over one thread (building one
+//! executor per job lazily, from the factory that travels with the task).
 //!
 //! The coding scheme travels *with* each compute task as an
-//! epoch-versioned `Arc`, so the master can hot-swap a re-optimized
-//! scheme between iterations without respawning worker threads. Workers
-//! have a **stable id** for their whole lifetime but are bound to a code
-//! **row position** per epoch (the elastic pool re-dimensions `N` on
+//! epoch-versioned `Arc`, so a job can hot-swap a re-optimized scheme
+//! between iterations without respawning worker threads. Workers have a
+//! **stable id** for their whole lifetime but are bound to a code **row
+//! position** per scheme epoch (the elastic pool re-dimensions `N` on
 //! membership change — [`crate::coordinator::membership`]), so each task
 //! carries the worker's row for that epoch and every coded block is
-//! stamped with both the id and the row it was encoded as. The master
-//! drops contributions from superseded epochs exactly like
-//! stale-iteration messages (mixing codes across epochs would corrupt
-//! the decoded gradient), and drops contributions whose id↔row binding
-//! no longer matches the live roster.
+//! stamped with the job, the id and the row it was encoded as. The
+//! per-job master drops contributions from superseded epochs exactly like
+//! stale-iteration messages (mixing codes across epochs would corrupt the
+//! decoded gradient), drops contributions whose id↔row binding no longer
+//! matches the live roster, and drops contributions stamped with another
+//! job's id the same way (codewords from two jobs must never mix into one
+//! decode).
 
 use std::sync::Arc;
 
 use crate::coding::scheme::CodingScheme;
+use crate::runtime::ExecutorFactory;
+
+/// Stable identity of a training job within one [`WorkerPool`]
+/// (allocated monotonically at submit, never reused).
+///
+/// [`WorkerPool`]: crate::coordinator::pool::WorkerPool
+pub type JobId = usize;
 
 /// Dataset shards backing each code subset: `shard_map[k]` lists the
 /// dataset shards whose summed gradient is subset `k`'s partial
 /// gradient. Identity (`[[0], [1], …]`) while `N` matches the dataset's
 /// shard count; after an elastic re-dimension the surviving subsets
-/// take over the full dataset (round-robin), so the decoded gradient
-/// still covers every sample exactly.
+/// take over the full dataset (largest-remainder split), so the decoded
+/// gradient still covers every sample exactly.
 pub type ShardMap = Vec<Vec<usize>>;
 
 /// Master → worker.
 pub enum WorkerTask {
-    /// Compute and stream all coded blocks for one GD iteration.
+    /// Compute and stream all coded blocks for one GD iteration of one
+    /// job.
     Compute {
+        /// The job this task belongs to (workers key executors and
+        /// per-epoch derived state by it; contributions echo it back).
+        job: JobId,
         iter: usize,
-        /// Scheme epoch this task was issued under (monotone).
+        /// Scheme epoch this task was issued under (monotone per job).
         epoch: usize,
         /// The code row this worker is bound to for `epoch`.
         row: usize,
@@ -42,6 +61,10 @@ pub enum WorkerTask {
         shards: Arc<ShardMap>,
         /// Current model parameters (shared, read-only).
         theta: Arc<Vec<f32>>,
+        /// Builds this job's executor inside the worker thread the first
+        /// time the worker sees the job (jobs own their dataset/model,
+        /// so one thread holds one executor per job it serves).
+        factory: ExecutorFactory,
         /// This worker's sampled CPU cycle time `T_n` for the iteration
         /// (drives virtual completion stamps and real pacing).
         cycle_time: f64,
@@ -59,6 +82,10 @@ pub enum WorkerTask {
 
 /// Worker → master: one coded block.
 pub struct BlockContribution {
+    /// The job whose code this block was encoded under. A per-job
+    /// master drops contributions stamped with another job's id exactly
+    /// like stale-epoch messages.
+    pub job: JobId,
     pub iter: usize,
     /// Scheme epoch the block was **encoded** under. The master only
     /// mixes contributions of its current epoch into a decode.
@@ -80,20 +107,23 @@ pub struct BlockContribution {
 /// Worker → master control-plane event.
 pub enum WorkerEvent {
     Block(BlockContribution),
-    /// The worker's executor came up: it is ready to be bound to a code
+    /// The worker thread came up: it is ready to be bound to a code
     /// row at the next epoch rebind. Sent once per thread, right after
-    /// successful init (a join is not assigned work until the master
-    /// has seen this and swapped in a re-dimensioned epoch).
+    /// spawn (a join is not assigned work until the pool has seen this
+    /// and swapped in re-dimensioned schemes).
     Joined { worker: usize },
     /// The worker drained cleanly (in response to [`WorkerTask::Drain`])
     /// and will contribute nothing more — mid-iteration this is
-    /// accounted exactly like a fatal straggler.
+    /// accounted exactly like a fatal straggler, for every job.
     Left { worker: usize },
-    /// The worker failed and will contribute nothing this iteration;
-    /// carries a description. `fatal` distinguishes a dead worker (its
-    /// thread exited — executor init failure) from a transient
-    /// per-iteration error (the thread keeps serving tasks): only fatal
-    /// failures remove the worker from future iterations' quorum
-    /// accounting.
-    Failed { worker: usize, iter: usize, reason: String, fatal: bool },
+    /// The worker failed while serving `job` and contributes nothing to
+    /// that job this iteration; carries a description. `fatal`
+    /// distinguishes a dead worker (its thread exited — e.g. its very
+    /// first executor build failed, a broken host) from a per-job,
+    /// per-iteration error — an executor build or gradient failure on a
+    /// thread that serves other jobs fine — after which the thread
+    /// keeps serving tasks (including the same job's next iterations):
+    /// only fatal failures remove the worker from every job's future
+    /// quorum accounting.
+    Failed { worker: usize, job: JobId, iter: usize, reason: String, fatal: bool },
 }

@@ -1,19 +1,37 @@
-//! Master-side iteration engine: broadcast, collect, decode-on-arrival.
+//! Per-job decode state: broadcast, collect, decode-on-arrival.
 //!
-//! The master owns the **current scheme epoch**: [`Master::install_scheme`]
-//! swaps in a re-optimized — possibly re-*dimensioned* (different `N`) —
+//! One [`Master`] is the decode engine of **one job** on the shared
+//! worker pool — it is keyed by `(job, epoch)`: it owns the job's
+//! **current scheme epoch** ([`Master::install_scheme`] swaps in a
+//! re-optimized — possibly re-*dimensioned* (different `N`) —
 //! [`CodingScheme`] between iterations together with that epoch's roster
-//! (row → stable worker id binding), and [`Master::collect`] rejects
+//! (row → stable worker id binding)), and its collect path rejects
 //! contributions stamped with a superseded epoch exactly like
 //! stale-iteration messages — coded blocks from two different codes must
 //! never mix into one decode. Contributions whose id↔row binding does
-//! not match the live roster are dropped the same way (a drained worker's
-//! row may belong to someone else next epoch).
+//! not match the live roster are dropped the same way (a drained
+//! worker's row may belong to someone else next epoch), as are
+//! contributions stamped with **another job's id** (each job has its own
+//! code; cross-job codewords are as corrupting as cross-epoch ones).
+//!
+//! Collection is **resumable** so the pool can multiplex one event
+//! channel across jobs: [`Master::begin_collect`] opens an iteration,
+//! [`Master::offer`] feeds it one event at a time (returning whether the
+//! full gradient is assembled), and [`Master::take_outcome`] closes it.
+//! The single-consumer convenience [`Master::collect`] drives a whole
+//! iteration off a private receiver — the shape the master-level tests
+//! use.
 //!
 //! All quorum accounting is **row**-indexed (rows are what the code's
 //! survivor sets are made of); stable worker ids appear only at the
 //! roster boundary and in the membership signals surfaced through
 //! [`IterOutcome`].
+//!
+//! The decode-vector cache lives for the whole life of the job: its map
+//! is reset on every epoch swap (decode vectors are specific to one
+//! code's coefficients) but its **hit/miss counters accumulate across
+//! epochs**, so a job's end-of-run cache statistics describe the whole
+//! run, not just the last scheme.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -21,7 +39,8 @@ use std::time::{Duration, Instant};
 
 use crate::coding::decoder::{decode, DecodeCache};
 use crate::coding::scheme::CodingScheme;
-use crate::coordinator::channel::{BlockContribution, ShardMap, WorkerEvent, WorkerTask};
+use crate::coordinator::channel::{BlockContribution, JobId, ShardMap, WorkerEvent, WorkerTask};
+use crate::runtime::ExecutorFactory;
 use crate::{Error, Result};
 
 /// Outcome of one collected iteration.
@@ -38,12 +57,16 @@ pub struct IterOutcome {
     /// Current-epoch contributions whose (worker id, row) stamp did not
     /// match the live roster binding (dropped).
     pub mismatched_binding: usize,
+    /// Contributions stamped with a different job's id (dropped — the
+    /// pool normally routes by job before they reach a master, so a
+    /// nonzero count means a misrouted or forged codeword was refused).
+    pub cross_job: usize,
     /// Workers (stable ids) that reported a **fatal** failure (their
-    /// thread exited; exclude them from future quorum accounting).
-    /// Transient per-iteration failures only affect the current
-    /// iteration's satisfiability bookkeeping.
+    /// thread exited; exclude them from every job's future quorum
+    /// accounting). Transient per-iteration failures only affect the
+    /// current iteration's satisfiability bookkeeping.
     pub failed: Vec<usize>,
-    /// Workers (stable ids) that announced a ready executor this
+    /// Workers (stable ids) that announced a ready thread this
     /// iteration — joins the registry should confirm for the next
     /// epoch rebind.
     pub joined: Vec<usize>,
@@ -52,9 +75,37 @@ pub struct IterOutcome {
     pub left: Vec<usize>,
 }
 
+struct BlockState {
+    need: usize,
+    arrivals: Vec<(usize, Vec<f64>)>, // (row, coded)
+    decoded: bool,
+}
+
+/// In-flight state of one iteration's collection.
+struct CollectState {
+    iter: usize,
+    blocks: Vec<BlockState>,
+    gradient: Vec<f64>,
+    decoded_count: usize,
+    late: usize,
+    stale_epoch: usize,
+    mismatched: usize,
+    cross_job: usize,
+    decode_ns: u64,
+    failed: Vec<usize>,
+    joined: Vec<usize>,
+    left: Vec<usize>,
+    /// Per-(row, block) delivery state: `sent[row][b]` is true once that
+    /// row's contribution to block `b` was received this iteration.
+    sent: Vec<Vec<bool>>,
+    alive: Vec<bool>,
+}
+
 /// Decode-on-arrival collector; owns the decode-vector cache across
-/// iterations (survivor patterns repeat, so cached solves dominate).
+/// iterations *and epochs* (survivor patterns repeat, so cached solves
+/// dominate).
 pub struct Master {
+    job: JobId,
     scheme: Arc<CodingScheme>,
     epoch: usize,
     dim: usize,
@@ -63,42 +114,58 @@ pub struct Master {
     /// Subset → dataset shards for the current epoch.
     shards: Arc<ShardMap>,
     cache: DecodeCache,
+    collect: Option<CollectState>,
     /// Receive timeout before declaring the iteration stalled.
     pub timeout: Duration,
 }
 
-struct BlockState {
-    need: usize,
-    arrivals: Vec<(usize, Vec<f64>)>, // (row, coded)
-    decoded: bool,
-}
-
 impl Master {
-    /// A master whose epoch-0 roster binds row `r` to worker id `r` and
-    /// whose subsets are backed 1:1 by dataset shards (the static-pool
-    /// identity; elastic sessions install rebound rosters later).
+    /// A job-0 master whose epoch-0 roster binds row `r` to worker id
+    /// `r` and whose subsets are backed 1:1 by dataset shards (the
+    /// static-pool identity; elastic sessions install rebound rosters
+    /// later).
     pub fn new(scheme: Arc<CodingScheme>, dim: usize) -> Self {
         let n = scheme.n();
         Self::with_roster(scheme, dim, (0..n).collect())
     }
 
-    /// A master with an explicit epoch-0 roster (row → stable id).
+    /// A job-0 master with an explicit epoch-0 roster (row → stable id).
     pub fn with_roster(scheme: Arc<CodingScheme>, dim: usize, roster: Vec<usize>) -> Self {
+        Self::for_job(0, scheme, dim, roster)
+    }
+
+    /// A master decoding for job `job` on a shared pool.
+    pub fn for_job(
+        job: JobId,
+        scheme: Arc<CodingScheme>,
+        dim: usize,
+        roster: Vec<usize>,
+    ) -> Self {
         assert_eq!(roster.len(), scheme.n(), "roster must bind every code row");
         let shards = Arc::new(identity_shards(scheme.n()));
         Self {
+            job,
             scheme,
             epoch: 0,
             dim,
             roster,
             shards,
             cache: DecodeCache::new(4096),
+            collect: None,
             timeout: Duration::from_secs(30),
         }
     }
 
+    /// Decode-vector cache statistics, accumulated across every scheme
+    /// epoch this master has served (`install_scheme` resets the cached
+    /// vectors, never the counters).
     pub fn cache_stats(&self) -> (u64, u64) {
         (self.cache.hits, self.cache.misses)
+    }
+
+    /// The job this master decodes for.
+    pub fn job(&self) -> JobId {
+        self.job
     }
 
     /// The scheme epoch tasks are currently issued under.
@@ -129,7 +196,8 @@ impl Master {
     /// `roster` and subsets to `shards` (pass the previous mappings for
     /// a same-`N` re-optimization). Decode vectors are specific to one
     /// code's coefficients (the cache keys only by `(s, survivor
-    /// set)`), so the cache map is reset; hit/miss counters survive.
+    /// set)`), so the cache map is reset; hit/miss counters survive
+    /// across epochs.
     pub fn install_scheme(
         &mut self,
         scheme: Arc<CodingScheme>,
@@ -139,6 +207,7 @@ impl Master {
     ) {
         assert!(epoch > self.epoch, "scheme epochs must be monotone");
         assert_eq!(roster.len(), scheme.n(), "roster must bind every code row");
+        assert!(self.collect.is_none(), "scheme swaps happen between iterations");
         self.scheme = scheme;
         self.epoch = epoch;
         self.roster = roster;
@@ -150,13 +219,17 @@ impl Master {
     /// `tasks[row]` is the channel of the worker bound to that row
     /// (`None` for rows whose worker already departed — the coded
     /// scheme absorbs them like any straggler); `times[row]` its
-    /// sampled cycle time; `unit_work` the epoch's `(M/N)·b`.
+    /// sampled cycle time; `unit_work` the epoch's `(M/N)·b`; `factory`
+    /// builds this job's executor inside workers that have not served
+    /// the job yet.
+    #[allow(clippy::too_many_arguments)]
     pub fn broadcast(
         &self,
         iter: usize,
         theta: Arc<Vec<f32>>,
         times: &[f64],
         unit_work: f64,
+        factory: &ExecutorFactory,
         tasks: &[Option<Sender<WorkerTask>>],
     ) {
         debug_assert_eq!(tasks.len(), self.scheme.n());
@@ -165,171 +238,233 @@ impl Master {
             // A send error just means that worker died; the coded scheme
             // absorbs it like any straggler.
             let _ = tx.send(WorkerTask::Compute {
+                job: self.job,
                 iter,
                 epoch: self.epoch,
                 row,
                 scheme: self.scheme.clone(),
                 shards: self.shards.clone(),
                 theta: theta.clone(),
+                factory: factory.clone(),
                 cycle_time: times[row],
                 unit_work,
             });
         }
     }
 
-    /// Collect events for iteration `iter` until every block decodes.
-    ///
-    /// Faithful to §III: block `b` (redundancy `s`) decodes using the
-    /// first `N − s` contributions to arrive; later ones are counted as
-    /// `late_contributions` and dropped. Contributions stamped with a
-    /// superseded scheme epoch are dropped as `stale_epoch` — they are
-    /// coded under different coefficients and would corrupt the decode.
+    /// Open the collection of iteration `iter`.
     ///
     /// `live` flags which **rows** are up at iteration start (dead /
     /// previously failed / departed workers excluded); it seeds the
     /// per-(row, block) outstanding-message tracking used to detect
-    /// unrecoverable blocks without waiting for the timeout. A
-    /// [`WorkerEvent::Left`] arriving mid-iteration is accounted exactly
-    /// like a fatal failure: the row goes dead and satisfiability is
-    /// re-checked immediately.
+    /// unrecoverable blocks without waiting for a timeout. Fails fast
+    /// when a block already cannot reach quorum.
+    pub fn begin_collect(&mut self, iter: usize, live: &[bool]) -> Result<()> {
+        assert!(self.collect.is_none(), "previous iteration still collecting");
+        let ranges = self.scheme.ranges();
+        let n = self.scheme.n();
+        debug_assert_eq!(live.len(), n);
+        let st = CollectState {
+            iter,
+            blocks: ranges
+                .iter()
+                .map(|r| BlockState { need: n - r.s, arrivals: Vec::new(), decoded: false })
+                .collect(),
+            gradient: vec![0.0f64; self.dim],
+            decoded_count: 0,
+            late: 0,
+            stale_epoch: 0,
+            mismatched: 0,
+            cross_job: 0,
+            decode_ns: 0,
+            failed: Vec::new(),
+            joined: Vec::new(),
+            left: Vec::new(),
+            sent: vec![vec![false; ranges.len()]; n],
+            alive: live.to_vec(),
+        };
+        // Dead rows are known up front: fail fast when a block can
+        // never reach quorum instead of waiting out the stall timeout.
+        let r = check_still_satisfiable(&st, iter);
+        self.collect = Some(st);
+        if r.is_err() {
+            self.collect = None;
+        }
+        r
+    }
+
+    /// Whether an iteration is currently being collected.
+    pub fn is_collecting(&self) -> bool {
+        self.collect.is_some()
+    }
+
+    /// Whether the open collection has already decoded every block
+    /// (true immediately after `begin_collect` for a degenerate scheme
+    /// with nothing to decode).
+    pub fn collect_complete(&self) -> bool {
+        self.collect
+            .as_ref()
+            .map(|st| st.decoded_count == st.blocks.len())
+            .unwrap_or(false)
+    }
+
+    /// Feed one event into the open collection. Returns `true` once
+    /// every block of the iteration has decoded (the caller then takes
+    /// the outcome with [`Self::take_outcome`]).
+    ///
+    /// Faithful to §III: block `b` (redundancy `s`) decodes using the
+    /// first `N − s` contributions to arrive; later ones are counted as
+    /// `late_contributions` and dropped. Contributions stamped with a
+    /// superseded scheme epoch are dropped as `stale_epoch`, a foreign
+    /// job id as `cross_job`, a roster-mismatched binding as
+    /// `mismatched_binding` — all before they can touch a decode. A
+    /// [`WorkerEvent::Left`] or fatal failure arriving mid-iteration is
+    /// accounted exactly like a fatal straggler: the row goes dead and
+    /// satisfiability is re-checked immediately.
+    pub fn offer(&mut self, ev: WorkerEvent) -> Result<bool> {
+        let mut st = self.collect.take().expect("offer outside begin_collect/take_outcome");
+        let r = self.offer_inner(&mut st, ev);
+        let done = st.decoded_count == st.blocks.len();
+        self.collect = Some(st);
+        if let Err(e) = r {
+            self.collect = None;
+            return Err(e);
+        }
+        Ok(done)
+    }
+
+    fn offer_inner(&mut self, st: &mut CollectState, ev: WorkerEvent) -> Result<()> {
+        let iter = st.iter;
+        match ev {
+            WorkerEvent::Joined { worker } => {
+                st.joined.push(worker);
+            }
+            WorkerEvent::Left { worker } => {
+                crate::log_info!("worker {worker} drained (iter {iter})");
+                st.left.push(worker);
+                if let Some(row) = self.row_of(worker) {
+                    if st.alive[row] {
+                        st.alive[row] = false;
+                        check_still_satisfiable(st, iter)?;
+                    }
+                }
+            }
+            WorkerEvent::Failed { worker, job, iter: ev_iter, reason, fatal } => {
+                crate::log_warn!(
+                    "worker {worker} failed in job {job} iter {ev_iter} (fatal={fatal}): {reason}"
+                );
+                if fatal {
+                    st.failed.push(worker);
+                }
+                // A fatal failure kills the worker whenever its report
+                // arrives; a transient one only voids the (job,
+                // iteration) it happened in.
+                if fatal || (job == self.job && ev_iter == iter) {
+                    if let Some(row) = self.row_of(worker) {
+                        if st.alive[row] {
+                            st.alive[row] = false;
+                            check_still_satisfiable(st, iter)?;
+                        }
+                    }
+                }
+            }
+            WorkerEvent::Block(c) => {
+                if c.job != self.job {
+                    // Another job's codeword: its coefficients belong to
+                    // a different code entirely.
+                    st.cross_job += 1;
+                    return Ok(());
+                }
+                if c.iter != iter {
+                    return Ok(()); // stale from a previous iteration
+                }
+                if c.epoch != self.epoch {
+                    // Encoded under a superseded scheme: its block
+                    // index and coefficients belong to another code.
+                    st.stale_epoch += 1;
+                    return Ok(());
+                }
+                let n = self.scheme.n();
+                if c.row >= n || self.roster[c.row] != c.worker {
+                    // The id↔row binding no longer matches the live
+                    // roster (e.g. a drained worker's leftovers).
+                    st.mismatched += 1;
+                    return Ok(());
+                }
+                self.on_block(st, c)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Close the open collection and return its outcome. Panics unless
+    /// [`Self::offer`] reported completion.
+    pub fn take_outcome(&mut self) -> IterOutcome {
+        let st = self.collect.take().expect("take_outcome without an open collection");
+        assert_eq!(st.decoded_count, st.blocks.len(), "collection not complete");
+        IterOutcome {
+            gradient: st.gradient,
+            decode_ns: st.decode_ns,
+            late_contributions: st.late,
+            stale_epoch: st.stale_epoch,
+            mismatched_binding: st.mismatched,
+            cross_job: st.cross_job,
+            failed: st.failed,
+            joined: st.joined,
+            left: st.left,
+        }
+    }
+
+    /// Abort the open collection, if any (shutdown path).
+    pub fn abort_collect(&mut self) {
+        self.collect = None;
+    }
+
+    /// Collect events for iteration `iter` from a dedicated receiver
+    /// until every block decodes — the single-job convenience over
+    /// [`Self::begin_collect`] / [`Self::offer`] /
+    /// [`Self::take_outcome`]. Multi-job pools route the shared event
+    /// channel themselves.
     pub fn collect(
         &mut self,
         iter: usize,
         events: &Receiver<WorkerEvent>,
         live: &[bool],
     ) -> Result<IterOutcome> {
-        let ranges = self.scheme.ranges();
-        let n = self.scheme.n();
-        debug_assert_eq!(live.len(), n);
-        let mut blocks: Vec<BlockState> = ranges
-            .iter()
-            .map(|r| BlockState { need: n - r.s, arrivals: Vec::new(), decoded: false })
-            .collect();
-        let mut gradient = vec![0.0f64; self.dim];
-        let mut decoded_count = 0usize;
-        let mut late = 0usize;
-        let mut stale_epoch = 0usize;
-        let mut mismatched = 0usize;
-        let mut decode_ns = 0u64;
-        let mut failed: Vec<usize> = Vec::new();
-        let mut joined: Vec<usize> = Vec::new();
-        let mut left: Vec<usize> = Vec::new();
-        // Per-(row, block) delivery state: `sent[row][b]` is true once
-        // that row's contribution to block `b` was received this
-        // iteration. Together with `alive` this tracks exactly which
-        // messages are still outstanding, so satisfiability checks count
-        // each row only toward blocks it can actually still deliver.
-        let mut sent = vec![vec![false; ranges.len()]; n];
-        let mut alive: Vec<bool> = live.to_vec();
-
-        // Dead rows are known up front: fail fast when a block can
-        // never reach quorum instead of waiting out the stall timeout.
-        self.check_still_satisfiable(&blocks, &sent, &alive, iter)?;
-
-        while decoded_count < blocks.len() {
+        self.begin_collect(iter, live)?;
+        if self.collect_complete() {
+            return Ok(self.take_outcome());
+        }
+        loop {
             let ev = match events.recv_timeout(self.timeout) {
                 Ok(ev) => ev,
                 Err(RecvTimeoutError::Timeout) => {
+                    let decoded = self.collect.as_ref().map(|s| s.decoded_count).unwrap_or(0);
+                    let total = self.collect.as_ref().map(|s| s.blocks.len()).unwrap_or(0);
+                    self.collect = None;
                     return Err(Error::Runtime(format!(
-                        "iteration {iter}: stalled ({decoded_count}/{} blocks decoded)",
-                        blocks.len()
+                        "iteration {iter}: stalled ({decoded}/{total} blocks decoded)"
                     )));
                 }
                 Err(RecvTimeoutError::Disconnected) => {
+                    self.collect = None;
                     return Err(Error::Runtime(format!(
                         "iteration {iter}: all workers disconnected"
                     )));
                 }
             };
-            match ev {
-                WorkerEvent::Joined { worker } => {
-                    joined.push(worker);
-                }
-                WorkerEvent::Left { worker } => {
-                    crate::log_info!("worker {worker} drained (iter {iter})");
-                    left.push(worker);
-                    if let Some(row) = self.row_of(worker) {
-                        if alive[row] {
-                            alive[row] = false;
-                            self.check_still_satisfiable(&blocks, &sent, &alive, iter)?;
-                        }
-                    }
-                }
-                WorkerEvent::Failed { worker, iter: ev_iter, reason, fatal } => {
-                    crate::log_warn!(
-                        "worker {worker} failed in iter {ev_iter} (fatal={fatal}): {reason}"
-                    );
-                    if fatal {
-                        failed.push(worker);
-                    }
-                    // A fatal failure kills the worker whenever its
-                    // report arrives; a transient one only voids the
-                    // iteration it happened in.
-                    if fatal || ev_iter == iter {
-                        if let Some(row) = self.row_of(worker) {
-                            if alive[row] {
-                                alive[row] = false;
-                                self.check_still_satisfiable(&blocks, &sent, &alive, iter)?;
-                            }
-                        }
-                    }
-                }
-                WorkerEvent::Block(c) => {
-                    if c.iter != iter {
-                        continue; // stale from a previous iteration
-                    }
-                    if c.epoch != self.epoch {
-                        // Encoded under a superseded scheme: its block
-                        // index and coefficients belong to another code.
-                        stale_epoch += 1;
-                        continue;
-                    }
-                    if c.row >= n || self.roster[c.row] != c.worker {
-                        // The id↔row binding no longer matches the live
-                        // roster (e.g. a drained worker's leftovers).
-                        mismatched += 1;
-                        continue;
-                    }
-                    self.on_block(
-                        c,
-                        &mut blocks,
-                        &mut gradient,
-                        &mut decoded_count,
-                        &mut late,
-                        &mut decode_ns,
-                        &mut sent,
-                    )?;
-                }
+            if self.offer(ev)? {
+                return Ok(self.take_outcome());
             }
         }
-        Ok(IterOutcome {
-            gradient,
-            decode_ns,
-            late_contributions: late,
-            stale_epoch,
-            mismatched_binding: mismatched,
-            failed,
-            joined,
-            left,
-        })
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn on_block(
-        &mut self,
-        c: BlockContribution,
-        blocks: &mut [BlockState],
-        gradient: &mut [f64],
-        decoded_count: &mut usize,
-        late: &mut usize,
-        decode_ns: &mut u64,
-        sent: &mut [Vec<bool>],
-    ) -> Result<()> {
-        sent[c.row][c.block_idx] = true;
+    fn on_block(&mut self, st: &mut CollectState, c: BlockContribution) -> Result<()> {
+        st.sent[c.row][c.block_idx] = true;
         let ranges = self.scheme.ranges();
-        let b = &mut blocks[c.block_idx];
+        let b = &mut st.blocks[c.block_idx];
         if b.decoded {
-            *late += 1;
+            st.late += 1;
             return Ok(());
         }
         b.arrivals.push((c.row, c.coded));
@@ -352,50 +487,45 @@ impl Master {
         let a = self.cache.get(code, &survivors)?;
         let picked: Vec<&[f64]> = b.arrivals.iter().map(|(_, v)| v.as_slice()).collect();
         let block_grad = decode(a, &picked);
-        gradient[r.start..r.end].copy_from_slice(&block_grad);
+        st.gradient[r.start..r.end].copy_from_slice(&block_grad);
         b.decoded = true;
         b.arrivals.clear();
         b.arrivals.shrink_to_fit();
-        *decoded_count += 1;
-        *decode_ns += t0.elapsed().as_nanos() as u64;
+        st.decoded_count += 1;
+        st.decode_ns += t0.elapsed().as_nanos() as u64;
         Ok(())
     }
+}
 
-    /// After a failure, verify every undecoded block can still reach its
-    /// quorum. A row counts toward a block only if it is alive *and*
-    /// has not yet delivered that block — tracking outstanding status per
-    /// (row, block) rather than per row, so an unrecoverable block is
-    /// never declared recoverable just because some row still owes
-    /// messages to *other* blocks.
-    fn check_still_satisfiable(
-        &self,
-        blocks: &[BlockState],
-        sent: &[Vec<bool>],
-        alive: &[bool],
-        iter: usize,
-    ) -> Result<()> {
-        for (idx, b) in blocks.iter().enumerate() {
-            if b.decoded {
-                continue;
-            }
-            let pending = alive
-                .iter()
-                .zip(sent.iter())
-                .filter(|&(a, s)| *a && !s[idx])
-                .count();
-            let possible = b.arrivals.len() + pending;
-            if possible < b.need {
-                return Err(Error::Runtime(format!(
-                    "iteration {iter}: block {idx} unrecoverable \
-                     ({} arrivals, {} possible, need {})",
-                    b.arrivals.len(),
-                    possible,
-                    b.need
-                )));
-            }
+/// After a failure, verify every undecoded block can still reach its
+/// quorum. A row counts toward a block only if it is alive *and* has
+/// not yet delivered that block — tracking outstanding status per
+/// (row, block) rather than per row, so an unrecoverable block is never
+/// declared recoverable just because some row still owes messages to
+/// *other* blocks.
+fn check_still_satisfiable(st: &CollectState, iter: usize) -> Result<()> {
+    for (idx, b) in st.blocks.iter().enumerate() {
+        if b.decoded {
+            continue;
         }
-        Ok(())
+        let pending = st
+            .alive
+            .iter()
+            .zip(st.sent.iter())
+            .filter(|&(a, s)| *a && !s[idx])
+            .count();
+        let possible = b.arrivals.len() + pending;
+        if possible < b.need {
+            return Err(Error::Runtime(format!(
+                "iteration {iter}: block {idx} unrecoverable \
+                 ({} arrivals, {} possible, need {})",
+                b.arrivals.len(),
+                possible,
+                b.need
+            )));
+        }
     }
+    Ok(())
 }
 
 /// The identity subset → shard mapping (subset `k` ↔ dataset shard `k`).
@@ -443,11 +573,13 @@ mod tests {
     use std::sync::mpsc;
 
     /// Build the full set of coded block events the worker bound to
-    /// `row` (stable id `worker`) would emit for one iteration under
-    /// `scheme`, from per-subset global gradients (`subset_grads[k]` is
-    /// subset `k`'s full-dimension gradient).
-    fn row_contributions(
+    /// `row` (stable id `worker`) would emit for one iteration of job
+    /// `job` under `scheme`, from per-subset global gradients
+    /// (`subset_grads[k]` is subset `k`'s full-dimension gradient).
+    #[allow(clippy::too_many_arguments)]
+    fn job_row_contributions(
         scheme: &CodingScheme,
+        job: JobId,
         iter: usize,
         epoch: usize,
         subset_grads: &[Vec<f64>],
@@ -465,6 +597,7 @@ mod tests {
             .enumerate()
             .map(|(block_idx, r)| {
                 WorkerEvent::Block(BlockContribution {
+                    job,
                     iter,
                     epoch,
                     worker,
@@ -477,7 +610,18 @@ mod tests {
             .collect()
     }
 
-    /// Identity-roster shorthand (row == worker id).
+    fn row_contributions(
+        scheme: &CodingScheme,
+        iter: usize,
+        epoch: usize,
+        subset_grads: &[Vec<f64>],
+        worker: usize,
+        row: usize,
+    ) -> Vec<WorkerEvent> {
+        job_row_contributions(scheme, 0, iter, epoch, subset_grads, worker, row)
+    }
+
+    /// Identity-roster shorthand (row == worker id, job 0).
     fn contributions(
         scheme: &CodingScheme,
         iter: usize,
@@ -545,6 +689,44 @@ mod tests {
     }
 
     #[test]
+    fn cross_job_contributions_are_dropped_like_stale_epochs() {
+        // Two jobs share the pool. Job 7's master must refuse a codeword
+        // stamped with job 3 — even one whose iter/epoch/binding all
+        // match — and still decode job 7's traffic exactly.
+        let (n, dim) = (4usize, 6usize);
+        let mut rng = Rng::new(131);
+        let part = BlockPartition::new(vec![0, 6, 0, 0]); // s=1, need 3
+        let scheme_mine = Arc::new(CodingScheme::new(part.clone(), &mut rng).unwrap());
+        let scheme_other = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, want) = random_subset_grads(n, dim, &mut rng);
+
+        let mut master = Master::for_job(7, scheme_mine.clone(), dim, (0..n).collect());
+        assert_eq!(master.job(), 7);
+        let (tx, rx) = mpsc::channel();
+        // A full worker's worth of job-3 codewords arrives first.
+        for ev in job_row_contributions(&scheme_other, 3, 0, 0, &subset_grads, 0, 0) {
+            tx.send(ev).unwrap();
+        }
+        for w in 0..n {
+            for ev in job_row_contributions(&scheme_mine, 7, 0, 0, &subset_grads, w, w) {
+                tx.send(ev).unwrap();
+            }
+        }
+        let live = vec![true; n];
+        let out = master.collect(0, &rx, &live).unwrap();
+        assert_eq!(out.cross_job, scheme_other.ranges().len());
+        assert_eq!(out.stale_epoch, 0);
+        for d in 0..dim {
+            assert!(
+                (out.gradient[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()),
+                "coordinate {d}: got {} want {}",
+                out.gradient[d],
+                want[d]
+            );
+        }
+    }
+
+    #[test]
     fn current_epoch_traffic_decodes_exactly_after_a_swap() {
         // Same partition before and after the swap — only the code's
         // random coefficients change. The decode cache must not serve
@@ -585,6 +767,53 @@ mod tests {
                 want[d]
             );
         }
+    }
+
+    #[test]
+    fn cache_stats_survive_install_scheme() {
+        // Regression: a job's hit/miss counters must accumulate across
+        // scheme epochs — `install_scheme` resets the cached vectors
+        // (they belong to one code's coefficients) but never the
+        // counters, so end-of-run statistics describe the whole run.
+        let (n, dim) = (4usize, 8usize);
+        let mut rng = Rng::new(137);
+        let part = BlockPartition::new(vec![0, 8, 0, 0]); // s=1, need 3
+        let scheme_a = Arc::new(CodingScheme::new(part.clone(), &mut rng).unwrap());
+        let scheme_b = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, _) = random_subset_grads(n, dim, &mut rng);
+        let live = vec![true; n];
+
+        let mut master = Master::new(scheme_a.clone(), dim);
+        // Two epoch-0 rounds: 1 miss (first solve) + 1 hit (same set).
+        for iter in 0..2 {
+            let (tx, rx) = mpsc::channel();
+            for w in 0..n {
+                for ev in contributions(&scheme_a, iter, 0, &subset_grads, w) {
+                    tx.send(ev).unwrap();
+                }
+            }
+            master.collect(iter, &rx, &live).unwrap();
+        }
+        let (h0, m0) = master.cache_stats();
+        assert_eq!((h0, m0), (1, 1));
+
+        install_identity(&mut master, scheme_b.clone(), 1);
+        // Epoch 1 round: the same survivor set must MISS (vectors were
+        // reset with the code) while the counters carry the epoch-0
+        // history forward.
+        let (tx, rx) = mpsc::channel();
+        for w in 0..n {
+            for ev in contributions(&scheme_b, 2, 1, &subset_grads, w) {
+                tx.send(ev).unwrap();
+            }
+        }
+        master.collect(2, &rx, &live).unwrap();
+        let (h1, m1) = master.cache_stats();
+        assert_eq!(
+            (h1, m1),
+            (1, 2),
+            "counters must survive the swap and the vectors must not"
+        );
     }
 
     #[test]
@@ -683,8 +912,14 @@ mod tests {
             tx.send(ev).unwrap();
         }
         // Worker 2 fails having delivered nothing.
-        tx.send(WorkerEvent::Failed { worker: 2, iter: 0, reason: "boom".into(), fatal: true })
-            .unwrap();
+        tx.send(WorkerEvent::Failed {
+            worker: 2,
+            job: 0,
+            iter: 0,
+            reason: "boom".into(),
+            fatal: true,
+        })
+        .unwrap();
 
         let start = Instant::now();
         let live = vec![true; n];
@@ -702,7 +937,7 @@ mod tests {
         // Same shape as the fatal-failure case, but the worker departs
         // *cleanly* (a drain ack landing mid-iteration): block 0 (s=0)
         // becomes unrecoverable and the master must fail fast via
-        // check_still_satisfiable instead of stalling into the timeout.
+        // the satisfiability check instead of stalling into the timeout.
         let (n, dim) = (3usize, 3usize);
         let mut rng = Rng::new(103);
         let part = BlockPartition::new(vec![2, 1, 0]); // block0 s=0 need 3
@@ -770,6 +1005,7 @@ mod tests {
         }
         tx.send(WorkerEvent::Failed {
             worker: 3,
+            job: 0,
             iter: 0,
             reason: "slow death".into(),
             fatal: true,
@@ -792,7 +1028,7 @@ mod tests {
     fn transient_failure_counts_this_iteration_but_not_the_worker() {
         // A grad-shards error is per-iteration: the worker contributes
         // nothing *now* (satisfiability must account for that), but it is
-        // not reported in `failed`, so the trainer keeps it in the quorum
+        // not reported in `failed`, so the pool keeps it in the quorum
         // accounting of future iterations — where it may well recover.
         let (n, dim) = (4usize, 4usize);
         let mut rng = Rng::new(89);
@@ -804,6 +1040,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         tx.send(WorkerEvent::Failed {
             worker: 2,
+            job: 0,
             iter: 0,
             reason: "flaky executor".into(),
             fatal: false,
@@ -817,6 +1054,39 @@ mod tests {
         let live = vec![true; n];
         let out = master.collect(0, &rx, &live).unwrap();
         assert!(out.failed.is_empty(), "transient failures must not be permanent");
+        for d in 0..dim {
+            assert!((out.gradient[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()));
+        }
+    }
+
+    #[test]
+    fn transient_failure_for_another_job_does_not_void_this_jobs_row() {
+        // Worker 3 reports a transient failure while serving job 5; job
+        // 0's in-flight iteration must keep counting worker 3 toward its
+        // own quorum (only fatal failures cross job boundaries).
+        let (n, dim) = (3usize, 3usize);
+        let mut rng = Rng::new(139);
+        let part = BlockPartition::new(vec![3, 0, 0]); // s=0: needs everyone
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, want) = random_subset_grads(n, dim, &mut rng);
+        let mut master = Master::new(scheme.clone(), dim);
+        let (tx, rx) = mpsc::channel();
+        tx.send(WorkerEvent::Failed {
+            worker: 2,
+            job: 5,
+            iter: 0,
+            reason: "other tenant's dataset".into(),
+            fatal: false,
+        })
+        .unwrap();
+        for w in 0..n {
+            for ev in contributions(&scheme, 0, 0, &subset_grads, w) {
+                tx.send(ev).unwrap();
+            }
+        }
+        let live = vec![true; n];
+        let out = master.collect(0, &rx, &live).unwrap();
+        assert!(out.failed.is_empty());
         for d in 0..dim {
             assert!((out.gradient[d] - want[d]).abs() < 1e-8 * (1.0 + want[d].abs()));
         }

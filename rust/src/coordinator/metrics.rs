@@ -26,8 +26,10 @@ pub struct IterMetrics {
     /// decoded (pure overhead under the partial-straggler model).
     pub late_contributions: usize,
     /// Contributions dropped before they could mix into a decode:
-    /// encoded under a superseded scheme epoch, or stamped with an
-    /// id↔row binding that no longer matches the live roster.
+    /// encoded under a superseded scheme epoch, stamped with an id↔row
+    /// binding that no longer matches the live roster, or stamped with
+    /// another job's id (multi-job pools route by job, so this is a
+    /// misrouted/forged-codeword backstop).
     pub stale_epoch_contributions: usize,
     /// Gradient L2 norm (diagnostic).
     pub grad_norm: f64,

@@ -1,39 +1,56 @@
-//! Layer-3 coordinator: the master/worker runtime that executes
-//! block-coordinate-gradient-coded distributed gradient descent.
+//! Layer-3 coordinator: the shared worker pool that executes
+//! block-coordinate-gradient-coded distributed gradient descent for
+//! **any number of concurrent training jobs**.
 //!
-//! Topology: one master (the calling thread) and `N` worker threads.
-//! Each GD iteration:
+//! Topology: one [`pool::WorkerPool`] owning `N` worker threads, and one
+//! [`pool::JobHandle`] per submitted job. Each pool round, the
+//! scheduler picks a job and runs one of its GD iterations:
 //!
-//! 1. The master samples the workers' cycle times `T_n` from the
-//!    straggler model ([`straggler`]) and broadcasts
-//!    `(iter, epoch, scheme, θ, T_n)`.
-//! 2. Every worker computes the partial gradients of its held data
-//!    subsets (via a [`crate::runtime::GradExecutor`] — PJRT artifacts in
-//!    production), encodes each coordinate *block* with that block's
-//!    gradient code and streams the coded blocks back ([`worker`]).
-//! 3. The master decodes each block as soon as any `N − s` workers have
-//!    delivered it (cached decode vectors), assembles the exact full
-//!    gradient `Σ_n g_n`, steps θ, and records both the wall clock and
-//!    the model-faithful *virtual* runtime of Eq. (2) ([`master`],
+//! 1. The pool samples the round's worker cycle times `T_n` from the
+//!    straggler model ([`straggler`]) and the job's master broadcasts
+//!    `(job, iter, epoch, scheme, θ, T_n)` to every rostered worker.
+//! 2. Every worker computes the partial gradients of the job's data
+//!    subsets it holds (via a per-job [`crate::runtime::GradExecutor`]
+//!    built lazily in-thread — PJRT artifacts in production), encodes
+//!    each coordinate *block* with that block's gradient code and
+//!    streams the coded blocks back, stamped with the job ([`worker`]).
+//! 3. The pool routes the shared event channel by job id; the active
+//!    job's master decodes each block as soon as any `N − s` workers
+//!    have delivered it (cached decode vectors), assembles the exact
+//!    full gradient `Σ_n g_n`, steps θ, and records both the wall clock
+//!    and the model-faithful *virtual* runtime of Eq. (2) ([`master`],
 //!    [`metrics`]).
 //!
-//! The coding scheme is an **epoch-versioned, swappable artifact**, not
-//! an immutable `Arc` baked in at spawn: the adaptive engine
-//! ([`adaptive`]) watches the observed cycle times through a sliding
-//! window estimator ([`crate::distribution::fit`]) and, on parameter
-//! drift, re-solves the partition and installs it as a new epoch between
-//! iterations. Contributions encoded under a superseded epoch are
-//! rejected like stale-iteration messages, so codewords from two schemes
-//! never mix into one decode.
+//! Jobs are isolated by construction: every contribution carries its
+//! [`channel::JobId`], a master refuses cross-job codewords exactly like
+//! stale-epoch ones, and one job's stragglers cost another job nothing
+//! beyond the worker-FIFO delay its own redundancy already absorbs —
+//! while the **pooled** cycle-time feed lets every job's online
+//! estimator learn from every round (worker speeds are a pool property,
+//! not a job property).
 //!
-//! On top of scheme epochs sit **membership epochs** ([`membership`]):
-//! worker identity is decoupled from code row position, so `N` itself is
-//! an epoch property. Joins wait unassigned until the next epoch swap,
-//! leaves (clean drains or fatal failures) are accounted as fatal
-//! stragglers for the rest of the current epoch, and once churn passes a
-//! threshold the trainer re-solves the partition for the live roster's
-//! `N'` and installs the re-dimensioned scheme — decoding stays exact
-//! within every epoch.
+//! The coding scheme is an **epoch-versioned, swappable artifact** per
+//! job, not an immutable `Arc` baked in at spawn: each job's adaptive
+//! engine ([`adaptive`]) watches the observed cycle times through a
+//! sliding window estimator ([`crate::distribution::fit`]) and, on
+//! parameter drift, re-solves the partition and installs it as a new
+//! epoch between iterations. Contributions encoded under a superseded
+//! epoch are rejected like stale-iteration messages, so codewords from
+//! two schemes never mix into one decode.
+//!
+//! On top of scheme epochs sit **membership epochs** ([`membership`]),
+//! which are pool-level: worker identity is decoupled from code row
+//! position, so `N` itself is an epoch property shared by every job.
+//! Joins wait unassigned until the next epoch swap, leaves (clean
+//! drains or fatal failures) are accounted as fatal stragglers for the
+//! rest of the current epoch, and once churn passes a threshold the
+//! pool rebinds rows **once** and every job re-solves its partition for
+//! the live roster's `N'` — decoding stays exact within every (job,
+//! epoch).
+//!
+//! Single-job callers keep the classic facade ([`trainer`]):
+//! `train(cfg, schedule, factory)` or a driveable
+//! [`trainer::TrainSession`].
 //!
 //! Pacing is virtual by default (timing comes from the paper's cost
 //! model; numerics are real); `PacingMode::RealScaled` makes workers
@@ -45,6 +62,7 @@ pub mod channel;
 pub mod master;
 pub mod membership;
 pub mod metrics;
+pub mod pool;
 pub mod state;
 pub mod straggler;
 pub mod trainer;

@@ -1,0 +1,1168 @@
+//! The shared worker pool and its multi-job coordinator.
+//!
+//! PRs 1–3 made the coding scheme an epoch-versioned artifact over a
+//! stable [`WorkerId`] registry — but the public API still hard-wired
+//! one training job to one thread pool. This module finishes the
+//! decoupling: a [`WorkerPool`] owns the threads, the
+//! [`WorkerRegistry`], the channels and the pooled cycle-time feed, and
+//! any number of **jobs** — each a [`JobHandle`] with its own scheme
+//! epochs, decode state ([`Master`] keyed by `(job, epoch)`), model
+//! state and adapt/re-dimension loop — are multiplexed over it. This is
+//! how production straggler-mitigation systems amortize stragglers
+//! across tenants: redundancy is priced per cluster, not per job, and
+//! straggler statistics are pooled.
+//!
+//! ## Submitting work
+//!
+//! Jobs are described by a builder-style [`JobSpec`] and submitted to a
+//! live pool:
+//!
+//! ```ignore
+//! let mut pool = WorkerPool::new(PoolConfig::new(8), schedule)?;
+//! let a = JobSpec::new(spec_a, blocks_a).executor(factory_a).steps(150).submit(&mut pool)?;
+//! let b = JobSpec::new(spec_b, blocks_b).executor(factory_b).steps(50)
+//!     .adaptive(AdaptiveConfig::default()).submit(&mut pool)?;
+//! let reports = pool.run_to_completion()?;
+//! ```
+//!
+//! ## Scheduling
+//!
+//! The pool interleaves **per-iteration broadcasts**: each round, the
+//! scheduler picks one unfinished job, broadcasts its iteration to every
+//! worker, and decodes it to completion before the next round
+//! (synchronous GD needs the decoded gradient before its next
+//! broadcast anyway). [`ScheduleMode::RoundRobin`] cycles fairly over
+//! unfinished jobs; [`ScheduleMode::WeightedUnitWork`] is deficit-fair
+//! in *work*: it always picks the job that has consumed the least total
+//! coded work (`unit_work × Σ(s+1)x` per iteration), so cheap jobs get
+//! proportionally more turns and no tenant can starve the others with
+//! huge iterations.
+//!
+//! ## Isolation
+//!
+//! Every task and contribution is stamped with its [`JobId`]. The pool
+//! routes the shared event channel by job: the active job's master
+//! consumes its own traffic; another job's late blocks are counted
+//! against *that* job (off-cycle arrivals — late or stale by
+//! definition, since the job is not collecting); blocks for unknown
+//! jobs are dropped and counted. A job's quorum only ever contains its
+//! own codewords ([`Master`] refuses cross-job contributions like
+//! stale epochs), and a straggling job cannot stall a healthy one
+//! beyond the worker-FIFO delay its own redundancy already absorbs.
+//!
+//! ## Membership
+//!
+//! Churn is a **pool-level** event: joins/leaves update the one shared
+//! registry, and once churn passes the elastic threshold — or
+//! departures exceed what the most fragile live scheme absorbs — the
+//! pool rebinds rows **once** and every job re-solves its partition for
+//! the new `N'` (each from its own family-selected fit, all off the
+//! shared membership epoch) and installs it as a fresh scheme epoch.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coding::scheme::CodingScheme;
+use crate::coordinator::adaptive::{self, AdaptiveConfig, AdaptiveController, ResolveStrategy};
+use crate::coordinator::channel::{BlockContribution, JobId, WorkerEvent, WorkerTask};
+use crate::coordinator::master::{redistribute_shards, IterOutcome, Master};
+use crate::coordinator::membership::{MemberStatus, WorkerId, WorkerRegistry};
+use crate::coordinator::metrics::{
+    IterMetrics, MembershipEvent, MembershipRecord, SchemeEpoch, TrainReport,
+};
+use crate::coordinator::state::ModelState;
+use crate::coordinator::straggler::{virtual_runtime, StragglerSampler, StragglerSchedule};
+use crate::coordinator::worker::{self, WorkerContext};
+use crate::coordinator::PacingMode;
+use crate::distribution::fit::{FittedModel, ShiftedExpEstimate};
+use crate::optimizer::blocks::BlockPartition;
+use crate::optimizer::runtime_model::ProblemSpec;
+use crate::runtime::{ExecutorFactory, GradExecutor};
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// Elastic worker-pool policy: when membership changes, when to
+/// re-dimension the jobs' schemes around the new roster.
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Re-dimension once this many membership changes (confirmed joins
+    /// + leaves) accumulated since the last rebind. Departures that
+    /// exceed a live scheme's redundancy always force an immediate
+    /// re-dimension regardless of this threshold. Clamped to ≥ 1.
+    pub churn_threshold: usize,
+    /// Scheduled departures `(round, count)`: before pool round
+    /// `round`, drain `count` workers (highest-id live workers first).
+    /// For a single-job pool, rounds and job iterations coincide.
+    pub departures: Vec<(usize, usize)>,
+    /// Scheduled arrivals `(round, count)`: before pool round `round`,
+    /// spawn `count` new workers (assigned work from the next epoch).
+    pub arrivals: Vec<(usize, usize)>,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        Self { churn_threshold: 1, departures: Vec::new(), arrivals: Vec::new() }
+    }
+}
+
+/// How the pool interleaves per-iteration broadcasts across jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScheduleMode {
+    /// Fair rotation over unfinished jobs: every job gets one
+    /// iteration per cycle.
+    #[default]
+    RoundRobin,
+    /// Deficit-fair in work: each round goes to the job that has
+    /// consumed the least total coded work so far (`unit_work ×
+    /// Σ(s+1)x` per iteration), so per-iteration cost differences
+    /// between tenants even out.
+    WeightedUnitWork,
+}
+
+impl ScheduleMode {
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "round_robin" | "round-robin" | "rr" => Some(Self::RoundRobin),
+            "weighted" | "weighted_unit_work" => Some(Self::WeightedUnitWork),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::RoundRobin => "round_robin",
+            Self::WeightedUnitWork => "weighted",
+        }
+    }
+}
+
+/// Pool-wide configuration (everything that is a property of the
+/// worker fleet rather than of any one job).
+#[derive(Clone)]
+pub struct PoolConfig {
+    /// Initial worker count `N` (ids `0..N`).
+    pub workers: usize,
+    pub pacing: PacingMode,
+    /// Seeds the pooled cycle-time sampler.
+    pub seed: u64,
+    /// How long a collect waits on an empty event channel before
+    /// declaring the iteration stalled.
+    pub stall_timeout: Duration,
+    /// Worker ids that are never spawned — failure injection. Every
+    /// job's coded scheme must tolerate them.
+    pub dead_workers: Vec<usize>,
+    /// Elastic membership policy (None = `N` frozen at spawn).
+    pub elastic: Option<ElasticConfig>,
+    /// How rounds are interleaved across jobs.
+    pub schedule: ScheduleMode,
+    /// Pooled estimator feed: when true (default), every job's drift
+    /// controller observes **every** round's sampled cycle times —
+    /// worker speeds are a pool property, so tenants share straggler
+    /// statistics and windows fill `K×` faster on a `K`-job pool.
+    pub shared_observations: bool,
+}
+
+impl PoolConfig {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers,
+            pacing: PacingMode::Virtual,
+            seed: 2021,
+            stall_timeout: Duration::from_secs(30),
+            dead_workers: Vec::new(),
+            elastic: None,
+            schedule: ScheduleMode::RoundRobin,
+            shared_observations: true,
+        }
+    }
+}
+
+/// Builder-style description of one training job, submitted to a
+/// [`WorkerPool`]. The problem spec's `n` must match the pool's
+/// current worker count (solve the partition for the pool you are
+/// joining).
+pub struct JobSpec {
+    spec: ProblemSpec,
+    blocks: BlockPartition,
+    steps: usize,
+    lr: f64,
+    eval_every: usize,
+    seed: u64,
+    init_scale: f64,
+    adaptive: Option<AdaptiveConfig>,
+    elastic: Option<ElasticConfig>,
+    factory: Option<ExecutorFactory>,
+}
+
+impl JobSpec {
+    /// A job over `spec` dimensions with an initial (epoch-0) block
+    /// partition.
+    pub fn new(spec: ProblemSpec, blocks: BlockPartition) -> Self {
+        Self {
+            spec,
+            blocks,
+            steps: 100,
+            lr: 1e-2,
+            eval_every: 10,
+            seed: 2021,
+            init_scale: 0.05,
+            adaptive: None,
+            elastic: None,
+            factory: None,
+        }
+    }
+
+    /// GD iterations to run.
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Learning rate.
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    /// Evaluate the loss every `k` steps (0 = never).
+    pub fn eval_every(mut self, k: usize) -> Self {
+        self.eval_every = k;
+        self
+    }
+
+    /// Seed for the job's scheme construction and θ init.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// θ init scale (Gaussian); 0 = zeros.
+    pub fn init_scale(mut self, scale: f64) -> Self {
+        self.init_scale = scale;
+        self
+    }
+
+    /// Online re-optimization policy (drift-triggered re-solves).
+    pub fn adaptive(mut self, cfg: AdaptiveConfig) -> Self {
+        self.adaptive = Some(cfg);
+        self
+    }
+
+    /// Elastic membership policy. Membership is pool-level, so this is
+    /// a convenience that installs the policy on the pool at submit
+    /// time; submitting a second elastic policy to a pool that already
+    /// has one is an error.
+    pub fn elastic(mut self, cfg: ElasticConfig) -> Self {
+        self.elastic = Some(cfg);
+        self
+    }
+
+    /// The executor factory backing this job's gradient compute
+    /// (required).
+    pub fn executor(mut self, factory: ExecutorFactory) -> Self {
+        self.factory = Some(factory);
+        self
+    }
+
+    /// Submit to a pool; the job starts receiving broadcast rounds on
+    /// the next scheduler pass.
+    pub fn submit(self, pool: &mut WorkerPool) -> Result<JobId> {
+        pool.submit(self)
+    }
+}
+
+/// Per-job state on the pool: scheme epochs, decode state, adaptive
+/// controller, model parameters and the job's training report — the
+/// surface `TrainSession` used to expose for exactly one job.
+pub struct JobHandle {
+    id: JobId,
+    spec: ProblemSpec,
+    dim: usize,
+    /// Dataset shard count (fixed at submit; elastic subsets are
+    /// re-mapped onto these shards when `N` changes).
+    num_data_shards: usize,
+    steps: usize,
+    lr: f64,
+    eval_every: usize,
+    factory: ExecutorFactory,
+    scheme: Arc<CodingScheme>,
+    epoch: usize,
+    master: Master,
+    controller: Option<AdaptiveController>,
+    /// Re-solve strategy for elastic re-dimensions (the adaptive
+    /// strategy when configured, closed-form `x^(f)` otherwise).
+    resolve_strategy: ResolveStrategy,
+    state: ModelState,
+    eval_exec: Option<Box<dyn GradExecutor>>,
+    iters_done: usize,
+    /// Total coded work consumed, in cycles (`unit_work × Σ(s+1)x` per
+    /// iteration) — the deficit counter behind
+    /// [`ScheduleMode::WeightedUnitWork`].
+    issued_work: f64,
+    /// Contributions that arrived while this job was **not** collecting
+    /// (tail blocks outrun by the decode quorum, delivered during some
+    /// other job's round), split by whether they were also stale-epoch.
+    offcycle_late: usize,
+    offcycle_stale: usize,
+    rng: Rng,
+    report: TrainReport,
+}
+
+impl JobHandle {
+    /// The job's id on its pool.
+    pub fn id(&self) -> JobId {
+        self.id
+    }
+
+    /// The current scheme epoch (0-based, monotone).
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// The currently installed scheme.
+    pub fn scheme(&self) -> &Arc<CodingScheme> {
+        &self.scheme
+    }
+
+    /// The job's problem spec (`n` tracks membership epochs).
+    pub fn spec(&self) -> &ProblemSpec {
+        &self.spec
+    }
+
+    /// Iterations completed so far.
+    pub fn iters_done(&self) -> usize {
+        self.iters_done
+    }
+
+    /// Iterations the job was submitted for.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Whether the job has completed all its steps.
+    pub fn done(&self) -> bool {
+        self.iters_done >= self.steps
+    }
+
+    /// Live view of the job's training report (finalized counters —
+    /// cache stats, failed workers — land at pool finish).
+    pub fn report(&self) -> &TrainReport {
+        &self.report
+    }
+
+    /// Decode-vector cache statistics, accumulated across **all** of
+    /// this job's scheme epochs.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.master.cache_stats()
+    }
+
+    /// Contributions that arrived while the job was not collecting
+    /// (late tail blocks routed during other jobs' rounds), as
+    /// `(late, stale_epoch)`.
+    pub fn offcycle_contributions(&self) -> (usize, usize) {
+        (self.offcycle_late, self.offcycle_stale)
+    }
+
+    /// Count a contribution that arrived outside the job's own collect
+    /// window.
+    fn note_offcycle(&mut self, c: &BlockContribution) {
+        if c.epoch == self.epoch {
+            self.offcycle_late += 1;
+        } else {
+            self.offcycle_stale += 1;
+        }
+    }
+
+    /// Install a new same-`N` partition as the job's next scheme epoch.
+    /// Safe between iterations: workers receive the new scheme with
+    /// their next task, and the master rejects contributions encoded
+    /// under any previous epoch like stale-iteration messages.
+    /// (Re-dimensioning to a different `N` goes through the pool's
+    /// [`WorkerPool::maybe_redimension`].)
+    pub fn install_scheme(
+        &mut self,
+        blocks: BlockPartition,
+        iter: usize,
+        estimate: Option<&FittedModel>,
+        drift: f64,
+    ) -> Result<()> {
+        if blocks.n() != self.spec.n {
+            return Err(Error::InvalidArgument("new scheme: blocks.n() != spec.n".into()));
+        }
+        if blocks.total() != self.dim {
+            return Err(Error::InvalidArgument(format!(
+                "new scheme covers {} coordinates but the model has {}",
+                blocks.total(),
+                self.dim
+            )));
+        }
+        let scheme = Arc::new(CodingScheme::new(blocks, &mut self.rng)?);
+        self.epoch += 1;
+        self.scheme = scheme.clone();
+        let roster = self.master.roster().to_vec();
+        let shards = self.master.shard_map().clone();
+        self.master.install_scheme(scheme, self.epoch, roster, shards);
+        self.report.scheme_epochs.push(SchemeEpoch {
+            epoch: self.epoch,
+            installed_at_iter: iter,
+            block_sizes: self.scheme.blocks().sizes().to_vec(),
+            estimated_mu: estimate.and_then(|e| e.mu_hint()),
+            estimated_t0: estimate.and_then(|e| e.t0_hint()),
+            estimated_mean: estimate.map(|e| e.mean()),
+            family: estimate.map(|e| e.family().name().to_string()),
+            drift,
+        });
+        Ok(())
+    }
+
+    /// Poll the job's adaptive policy; on a triggered re-plan, install
+    /// the re-optimized scheme as a new epoch.
+    fn adapt(&mut self) -> Result<()> {
+        if self.controller.is_none() || self.done() {
+            return Ok(());
+        }
+        let iter = self.iters_done;
+        let warm = self.scheme.blocks().as_f64();
+        let plan = {
+            let ctrl = self.controller.as_mut().unwrap();
+            ctrl.maybe_replan(iter, &self.spec, &warm, &mut self.rng)?
+        };
+        if let Some(plan) = plan {
+            crate::log_info!(
+                "job {}: iter {iter}: drift {:.2} → installing scheme epoch {} (fit {})",
+                self.id,
+                plan.drift,
+                self.epoch + 1,
+                plan.estimate.label()
+            );
+            self.install_scheme(plan.blocks, iter, Some(&plan.estimate), plan.drift)?;
+        }
+        Ok(())
+    }
+
+    /// Re-dimension this job onto a rebound roster of `to_n` rows:
+    /// re-solve the partition for `N' = to_n` from the job's own
+    /// family-selected fit (falling back to `fallback`, then to a
+    /// uniform level-1 partition), install it as a fresh scheme epoch,
+    /// and flush/rebase the drift estimator (observations under the old
+    /// `N`'s unit work are not comparable).
+    fn redimension(
+        &mut self,
+        to_n: usize,
+        roster: &[WorkerId],
+        fallback: Option<FittedModel>,
+    ) -> Result<()> {
+        let from_n = self.spec.n;
+        let iter = self.iters_done;
+        let spec_new = self.spec.with_n(to_n);
+        let estimate: Option<FittedModel> =
+            self.controller.as_ref().and_then(|c| c.current_fit()).or(fallback);
+        let warm = self.scheme.blocks().as_f64();
+        let blocks = match &estimate {
+            Some(est) => {
+                let dist = est.build();
+                adaptive::resolve_partition(
+                    &self.resolve_strategy,
+                    &spec_new,
+                    dist.as_ref(),
+                    Some(warm.as_slice()),
+                    self.dim,
+                    &mut self.rng,
+                )?
+            }
+            None => {
+                let s = if to_n > 1 { 1 } else { 0 };
+                BlockPartition::single_level(to_n, s, self.dim)
+            }
+        };
+        self.spec.n = to_n;
+        let scheme = Arc::new(CodingScheme::new(blocks, &mut self.rng)?);
+        self.epoch += 1;
+        self.scheme = scheme.clone();
+        self.master.install_scheme(
+            scheme,
+            self.epoch,
+            roster.to_vec(),
+            Arc::new(redistribute_shards(to_n, self.num_data_shards)),
+        );
+        crate::log_info!(
+            "job {}: iter {iter}: re-dimensioned N {from_n}→{to_n} as scheme epoch {}",
+            self.id,
+            self.epoch
+        );
+        self.report.scheme_epochs.push(SchemeEpoch {
+            epoch: self.epoch,
+            installed_at_iter: iter,
+            block_sizes: self.scheme.blocks().sizes().to_vec(),
+            estimated_mu: estimate.as_ref().and_then(|e| e.mu_hint()),
+            estimated_t0: estimate.as_ref().and_then(|e| e.t0_hint()),
+            estimated_mean: estimate.as_ref().map(|e| e.mean()),
+            family: estimate.as_ref().map(|e| e.family().name().to_string()),
+            drift: 0.0,
+        });
+        self.report.membership.push(MembershipRecord {
+            iter,
+            event: MembershipEvent::Redimension { from_n, to_n, epoch: self.epoch },
+        });
+        if let Some(ctrl) = self.controller.as_mut() {
+            ctrl.rebase(estimate);
+        }
+        Ok(())
+    }
+
+    /// The smallest redundancy any live block of this job's scheme has
+    /// (how many dead rows the job absorbs without re-dimensioning).
+    fn min_redundancy(&self) -> usize {
+        self.scheme.ranges().iter().map(|r| r.s).min().unwrap_or(0)
+    }
+
+    fn record_membership(&mut self, event: MembershipEvent) {
+        self.report.membership.push(MembershipRecord { iter: self.iters_done, event });
+    }
+
+    fn finalize(&mut self, failed: &[usize]) {
+        let (hits, misses) = self.master.cache_stats();
+        self.report.decode_cache_hits = hits;
+        self.report.decode_cache_misses = misses;
+        self.report.failed_workers = failed.to_vec();
+    }
+}
+
+/// The shared worker fleet and the jobs multiplexed over it.
+pub struct WorkerPool {
+    cfg: PoolConfig,
+    registry: WorkerRegistry,
+    /// Task channel per worker **id** (None once drained/dead/never
+    /// spawned). Indexed by stable id, not row.
+    task_txs: Vec<Option<Sender<WorkerTask>>>,
+    /// Kept for spawning late joiners; the channel therefore never
+    /// disconnects while the pool lives (stalls still time out).
+    event_tx: Sender<WorkerEvent>,
+    event_rx: Receiver<WorkerEvent>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    sampler: StragglerSampler,
+    /// Row-indexed liveness for the current membership epoch's roster.
+    live_mask: Vec<bool>,
+    failed_set: Vec<usize>,
+    jobs: Vec<JobHandle>,
+    /// Pool-level broadcast rounds completed (one job iteration each).
+    rounds: usize,
+    rr_cursor: usize,
+    /// Sum of every round's virtual runtime — rounds serialize on the
+    /// shared pool, so this is the pool's virtual **makespan**.
+    virtual_makespan: f64,
+    /// Contributions stamped with a job id the pool has never seen.
+    cross_job_dropped: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `cfg.workers` threads whose cycle times follow
+    /// `schedule` (sampled per round at broadcast).
+    pub fn new(cfg: PoolConfig, schedule: StragglerSchedule) -> Result<Self> {
+        if cfg.workers == 0 {
+            return Err(Error::InvalidArgument("the pool needs at least one worker".into()));
+        }
+        let n = cfg.workers;
+        let mut registry = WorkerRegistry::new(n);
+        let (event_tx, event_rx) = mpsc::channel::<WorkerEvent>();
+        let mut task_txs: Vec<Option<Sender<WorkerTask>>> = Vec::with_capacity(n);
+        let mut handles = Vec::new();
+        let mut live_mask = vec![false; n];
+        for w in 0..n {
+            if cfg.dead_workers.contains(&w) {
+                // Injected failure: worker never comes up. It keeps its
+                // epoch-0 row (every scheme must absorb it) and is
+                // dropped at the first rebind, like any departure.
+                task_txs.push(None);
+                registry.leave(w);
+                continue;
+            }
+            let tx = spawn_worker(w, &event_tx, cfg.pacing, &mut handles)?;
+            task_txs.push(Some(tx));
+            live_mask[w] = true;
+        }
+        let mut rng = Rng::new(cfg.seed);
+        let sampler = StragglerSampler::from_schedule(schedule, rng.next_u64());
+        // Injected-dead workers are permanent failures from round 0
+        // (they also never get a Leave record re-logged per job).
+        let failed_set = cfg.dead_workers.clone();
+        Ok(Self {
+            cfg,
+            registry,
+            task_txs,
+            event_tx,
+            event_rx,
+            handles,
+            sampler,
+            live_mask,
+            failed_set,
+            jobs: Vec::new(),
+            rounds: 0,
+            rr_cursor: 0,
+            virtual_makespan: 0.0,
+            cross_job_dropped: 0,
+        })
+    }
+
+    /// Current worker count (rows in the live membership epoch).
+    pub fn n(&self) -> usize {
+        self.registry.n()
+    }
+
+    /// The membership registry (id ↔ row bindings, churn counters).
+    pub fn registry(&self) -> &WorkerRegistry {
+        &self.registry
+    }
+
+    /// Broadcast rounds completed so far (one job iteration each).
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Number of jobs ever submitted.
+    pub fn num_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// A submitted job's live state.
+    pub fn job(&self, id: JobId) -> &JobHandle {
+        &self.jobs[id]
+    }
+
+    /// Sum of every round's virtual runtime — the shared pool's virtual
+    /// makespan (rounds serialize on the fleet).
+    pub fn virtual_makespan(&self) -> f64 {
+        self.virtual_makespan
+    }
+
+    /// Contributions dropped because they were stamped with a job id
+    /// this pool has never issued.
+    pub fn cross_job_dropped(&self) -> usize {
+        self.cross_job_dropped
+    }
+
+    /// Register and start a job (see [`JobSpec`]). The job's `spec.n`
+    /// and partition must be dimensioned for the pool's **current**
+    /// worker count.
+    pub fn submit(&mut self, js: JobSpec) -> Result<JobId> {
+        let id = self.jobs.len();
+        let n = self.registry.n();
+        if js.spec.n != n {
+            return Err(Error::InvalidArgument(format!(
+                "job spec is dimensioned for N={} but the pool has {n} workers",
+                js.spec.n
+            )));
+        }
+        if js.blocks.n() != js.spec.n {
+            return Err(Error::InvalidArgument("blocks.n() != spec.n".into()));
+        }
+        let factory = js.factory.ok_or_else(|| {
+            Error::InvalidArgument("JobSpec needs an executor factory (JobSpec::executor)".into())
+        })?;
+        if let Some(elastic) = js.elastic {
+            if self.cfg.elastic.is_some() {
+                return Err(Error::InvalidArgument(
+                    "the pool already has an elastic policy; configure it on PoolConfig".into(),
+                ));
+            }
+            self.cfg.elastic = Some(elastic);
+        }
+        let mut rng = Rng::new(js.seed);
+        let scheme = Arc::new(CodingScheme::new(js.blocks.clone(), &mut rng)?);
+
+        // Master-side executor for loss evaluation (worker id n = master).
+        let mut eval_exec = if js.eval_every > 0 { Some(factory(n)?) } else { None };
+        let dim = if let Some(e) = &eval_exec { e.dim() } else { factory(n)?.dim() };
+        if dim != js.spec.coords {
+            crate::log_warn!(
+                "job {id}: model dim {} != spec.coords {} — virtual-runtime accounting uses \
+                 the model dim",
+                dim,
+                js.spec.coords
+            );
+        }
+        if js.blocks.total() != dim {
+            return Err(Error::InvalidArgument(format!(
+                "block partition covers {} coordinates but the model has {dim}",
+                js.blocks.total()
+            )));
+        }
+
+        let mut master = Master::for_job(id, scheme.clone(), dim, self.registry.roster().to_vec());
+        master.timeout = self.cfg.stall_timeout;
+
+        // Seed the drift detector with the parameters the initial scheme
+        // is presumed optimal for (when the current phase is shifted-exp).
+        let resolve_strategy = js
+            .adaptive
+            .as_ref()
+            .map(|a| a.strategy.clone())
+            .unwrap_or(ResolveStrategy::ClosedFormFreq);
+        let controller = js.adaptive.map(|acfg| {
+            match self.sampler.distribution_at(self.rounds).as_shifted_exp() {
+                Some(d) => AdaptiveController::with_reference(acfg, d.mu, d.t0),
+                None => AdaptiveController::new(acfg),
+            }
+        });
+        let state = if js.init_scale > 0.0 {
+            ModelState::random(dim, js.init_scale, &mut rng)
+        } else {
+            ModelState::zeros(dim)
+        };
+
+        let mut report = TrainReport::default();
+        report.scheme_epochs.push(SchemeEpoch {
+            epoch: 0,
+            installed_at_iter: 0,
+            block_sizes: js.blocks.sizes().to_vec(),
+            estimated_mu: None,
+            estimated_t0: None,
+            estimated_mean: None,
+            family: None,
+            drift: 0.0,
+        });
+        if js.eval_every > 0 {
+            if let Some(e) = eval_exec.as_mut() {
+                let l = e.loss(state.as_slice())?;
+                report.loss_curve.push((0, l));
+            }
+        }
+
+        self.jobs.push(JobHandle {
+            id,
+            spec: js.spec,
+            dim,
+            num_data_shards: js.spec.n,
+            steps: js.steps,
+            lr: js.lr,
+            eval_every: js.eval_every,
+            factory,
+            scheme,
+            epoch: 0,
+            master,
+            controller,
+            resolve_strategy,
+            state,
+            eval_exec,
+            iters_done: 0,
+            issued_work: 0.0,
+            offcycle_late: 0,
+            offcycle_stale: 0,
+            rng,
+            report,
+        });
+        Ok(id)
+    }
+
+    /// Spawn a new worker thread into the pool. It is registered as
+    /// pending and **receives no work until the next epoch swap**: its
+    /// `Joined` event confirms the thread came up, and the following
+    /// [`Self::maybe_redimension`] binds it to a code row of every
+    /// job's fresh, re-dimensioned scheme epoch.
+    pub fn add_worker(&mut self) -> Result<WorkerId> {
+        if self.cfg.elastic.is_none() {
+            return Err(Error::InvalidArgument(
+                "add_worker requires an elastic pool (PoolConfig::elastic)".into(),
+            ));
+        }
+        let id = self.registry.join();
+        let tx = spawn_worker(id, &self.event_tx, self.cfg.pacing, &mut self.handles)?;
+        if self.task_txs.len() <= id {
+            self.task_txs.resize_with(id + 1, || None);
+        }
+        self.task_txs[id] = Some(tx);
+        crate::log_info!("round {}: worker {id} joined (pending next epoch)", self.rounds);
+        for job in &mut self.jobs {
+            job.record_membership(MembershipEvent::Join { worker: id });
+        }
+        Ok(id)
+    }
+
+    /// Drain a worker out of the pool without dropping an iteration:
+    /// its thread finishes cleanly, its row counts as a fatal straggler
+    /// for the remainder of every job's current epoch, and the next
+    /// [`Self::maybe_redimension`] drops it from the roster.
+    pub fn remove_worker(&mut self, id: WorkerId) -> Result<()> {
+        if self.cfg.elastic.is_none() {
+            return Err(Error::InvalidArgument(
+                "remove_worker requires an elastic pool (PoolConfig::elastic)".into(),
+            ));
+        }
+        if self.registry.status(id) != Some(MemberStatus::Active)
+            && self.registry.status(id) != Some(MemberStatus::Pending)
+        {
+            return Err(Error::InvalidArgument(format!(
+                "worker {id} is not a live pool member"
+            )));
+        }
+        if let Some(tx) = self.task_txs.get_mut(id).and_then(Option::take) {
+            let _ = tx.send(WorkerTask::Drain);
+        }
+        self.mark_departed(id);
+        crate::log_info!("round {}: worker {id} draining out of the pool", self.rounds);
+        for job in &mut self.jobs {
+            job.record_membership(MembershipEvent::Leave { worker: id });
+        }
+        Ok(())
+    }
+
+    /// Shared departure bookkeeping (clean drain and fatal failure):
+    /// the registry marks the id departed — keeping its row for the
+    /// rest of the membership epoch — its task channel is dropped, and
+    /// its row, if any, goes dead in the shared live mask.
+    fn mark_departed(&mut self, id: WorkerId) {
+        self.registry.leave(id);
+        if let Some(tx) = self.task_txs.get_mut(id) {
+            *tx = None;
+        }
+        if let Some(row) = self.registry.row_of(id) {
+            if row < self.live_mask.len() {
+                self.live_mask[row] = false;
+            }
+        }
+    }
+
+    /// Apply the elastic config's scheduled churn for pool round `at`
+    /// (arrivals first, then departures of the highest-id live
+    /// workers). No-op without an elastic config.
+    pub fn apply_scheduled_churn_at(&mut self, at: usize) -> Result<()> {
+        let (arrive, depart) = match &self.cfg.elastic {
+            None => return Ok(()),
+            Some(e) => (
+                e.arrivals.iter().filter(|&&(t, _)| t == at).map(|&(_, c)| c).sum::<usize>(),
+                e.departures.iter().filter(|&&(t, _)| t == at).map(|&(_, c)| c).sum::<usize>(),
+            ),
+        };
+        for _ in 0..arrive {
+            self.add_worker()?;
+        }
+        for _ in 0..depart {
+            let victim = self
+                .registry
+                .roster()
+                .iter()
+                .rev()
+                .copied()
+                .find(|&id| self.registry.status(id) == Some(MemberStatus::Active));
+            match victim {
+                Some(id) => self.remove_worker(id)?,
+                None => {
+                    return Err(Error::Runtime(format!(
+                        "round {at}: scheduled departure but no live worker remains"
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Poll one job's adaptive policy (see [`JobHandle::install_scheme`]).
+    pub fn adapt_job(&mut self, id: JobId) -> Result<()> {
+        self.jobs[id].adapt()
+    }
+
+    /// Install a same-`N` scheme for one job (manual hot-swap).
+    pub fn install_scheme(
+        &mut self,
+        id: JobId,
+        blocks: BlockPartition,
+        iter: usize,
+        estimate: Option<&FittedModel>,
+        drift: f64,
+    ) -> Result<()> {
+        self.jobs[id].install_scheme(blocks, iter, estimate, drift)
+    }
+
+    /// Membership epochs, pool-wide: once churn since the last rebind
+    /// reaches the elastic threshold — or immediately when departures
+    /// exceed what the most fragile live scheme's redundancy absorbs —
+    /// rebind rows **once** and re-dimension **every** unfinished job
+    /// onto the new roster (each re-solving with its own fit). Returns
+    /// whether a re-dimension happened.
+    pub fn maybe_redimension(&mut self) -> Result<bool> {
+        let Some(threshold) = self.cfg.elastic.as_ref().map(|e| e.churn_threshold.max(1))
+        else {
+            return Ok(false);
+        };
+        if self.jobs.iter().all(|j| j.done()) {
+            return Ok(false);
+        }
+        let dead_rows = self.registry.departed_in_roster();
+        let min_s = self
+            .jobs
+            .iter()
+            .filter(|j| !j.done())
+            .map(|j| j.min_redundancy())
+            .min()
+            .unwrap_or(0);
+        let forced = dead_rows > min_s;
+        if !forced && self.registry.churn_since_rebind() < threshold {
+            return Ok(false);
+        }
+        let to_n = self.registry.next_n();
+        if to_n == 0 {
+            return Err(Error::Runtime(format!(
+                "round {}: elastic pool drained to zero workers",
+                self.rounds
+            )));
+        }
+        // The fallback evidence when a job has no live fit: the
+        // schedule's current phase, when shifted-exponential.
+        let fallback: Option<FittedModel> =
+            self.sampler.distribution_at(self.rounds).as_shifted_exp().map(|d| {
+                FittedModel::ShiftedExp(ShiftedExpEstimate { mu: d.mu, t0: d.t0, samples: 0 })
+            });
+        let roster = self.registry.rebind().to_vec();
+        debug_assert_eq!(roster.len(), to_n);
+        self.live_mask = vec![true; to_n];
+        for job in &mut self.jobs {
+            if job.done() {
+                continue;
+            }
+            job.redimension(to_n, &roster, fallback.clone())?;
+        }
+        Ok(true)
+    }
+
+    /// One GD iteration for job `id`: sample the round's pool-wide
+    /// cycle times, broadcast, route the shared event channel until the
+    /// job's every block decodes, then step its model.
+    pub fn step_job(&mut self, id: JobId) -> Result<()> {
+        if id >= self.jobs.len() {
+            return Err(Error::InvalidArgument(format!("no such job {id}")));
+        }
+        if self.jobs[id].done() {
+            return Err(Error::InvalidArgument(format!(
+                "job {id} already ran its {} steps",
+                self.jobs[id].steps
+            )));
+        }
+        let t_iter = Instant::now();
+        let n = self.registry.n();
+        debug_assert_eq!(self.jobs[id].spec.n, n, "job not re-dimensioned to the live roster");
+        let times = self.sampler.sample(self.rounds, n);
+        // Pooled estimator feed: worker speeds are a pool property, so
+        // every tenant's window may learn from every round.
+        if self.cfg.shared_observations {
+            for job in self.jobs.iter_mut() {
+                if let Some(ctrl) = job.controller.as_mut() {
+                    ctrl.observe(&times);
+                }
+            }
+        } else if let Some(ctrl) = self.jobs[id].controller.as_mut() {
+            ctrl.observe(&times);
+        }
+
+        // Row-ordered task channels for the current roster (None where
+        // the bound worker already departed).
+        let senders: Vec<Option<Sender<WorkerTask>>> = self
+            .registry
+            .roster()
+            .iter()
+            .map(|&wid| self.task_txs.get(wid).cloned().flatten())
+            .collect();
+        let iter = self.jobs[id].iters_done;
+        {
+            let job = &self.jobs[id];
+            job.master.broadcast(
+                iter,
+                job.state.shared(),
+                &times,
+                job.spec.unit_work(),
+                &job.factory,
+                &senders,
+            );
+        }
+        let outcome = self.collect_for(id, iter)?;
+
+        for w in outcome.joined {
+            self.registry.confirm(w);
+        }
+        for w in outcome.left {
+            // Clean departures observed mid-iteration (their Leave was
+            // already logged by remove_worker); keep masks in sync.
+            self.mark_departed(w);
+        }
+        for w in outcome.failed {
+            if !self.failed_set.contains(&w) {
+                self.failed_set.push(w);
+                // Elastic pools treat a fatal failure as a departure; a
+                // static run's membership log stays empty by contract.
+                if self.cfg.elastic.is_some() {
+                    for job in &mut self.jobs {
+                        job.record_membership(MembershipEvent::Leave { worker: w });
+                    }
+                }
+            }
+            // A fatal failure is a departure the worker never got to
+            // announce: same bookkeeping as a drain.
+            self.mark_departed(w);
+        }
+
+        let job = &mut self.jobs[id];
+        let grad_norm = outcome.gradient.iter().map(|g| g * g).sum::<f64>().sqrt();
+        job.state.step(&outcome.gradient, job.lr);
+        let vr = virtual_runtime(&job.spec, &job.scheme, &times);
+        self.virtual_makespan += vr;
+        job.issued_work += job.spec.unit_work() * job.scheme.work_units_per_worker();
+        job.report.iters.push(IterMetrics {
+            iter,
+            epoch: job.epoch,
+            workers: n,
+            virtual_runtime: vr,
+            wall_ns: t_iter.elapsed().as_nanos() as u64,
+            decode_ns: outcome.decode_ns,
+            blocks_decoded: job.scheme.ranges().len(),
+            late_contributions: outcome.late_contributions,
+            stale_epoch_contributions: outcome.stale_epoch
+                + outcome.mismatched_binding
+                + outcome.cross_job,
+            grad_norm,
+        });
+        job.iters_done += 1;
+        if job.eval_every > 0 && job.iters_done % job.eval_every == 0 {
+            if let Some(e) = job.eval_exec.as_mut() {
+                let l = e.loss(job.state.as_slice())?;
+                job.report.loss_curve.push((job.iters_done, l));
+            }
+        }
+        self.rounds += 1;
+        Ok(())
+    }
+
+    /// Route the shared event channel until job `id`'s iteration
+    /// decodes completely. Foreign jobs' stray blocks are charged to
+    /// their own off-cycle counters; unknown job ids are dropped.
+    fn collect_for(&mut self, id: JobId, iter: usize) -> Result<IterOutcome> {
+        self.jobs[id].master.begin_collect(iter, &self.live_mask)?;
+        if self.jobs[id].master.collect_complete() {
+            // Degenerate scheme with nothing to decode: don't wait on
+            // events that will never come.
+            return Ok(self.jobs[id].master.take_outcome());
+        }
+        loop {
+            let ev = match self.event_rx.recv_timeout(self.cfg.stall_timeout) {
+                Ok(ev) => ev,
+                Err(RecvTimeoutError::Timeout) => {
+                    self.jobs[id].master.abort_collect();
+                    return Err(Error::Runtime(format!(
+                        "job {id}: iteration {iter}: stalled waiting for contributions"
+                    )));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.jobs[id].master.abort_collect();
+                    return Err(Error::Runtime(format!(
+                        "job {id}: iteration {iter}: all workers disconnected"
+                    )));
+                }
+            };
+            // Route blocks by job: only the active job's master consumes
+            // its traffic; a non-active job's tail blocks are by
+            // definition late (or stale-epoch) for that job.
+            let ev = match ev {
+                WorkerEvent::Block(c) if c.job != id => {
+                    match self.jobs.get_mut(c.job) {
+                        Some(other) => other.note_offcycle(&c),
+                        None => self.cross_job_dropped += 1,
+                    }
+                    continue;
+                }
+                ev => ev,
+            };
+            if self.jobs[id].master.offer(ev)? {
+                return Ok(self.jobs[id].master.take_outcome());
+            }
+        }
+    }
+
+    /// Pick the next job to broadcast (None when every job is done).
+    pub fn next_job(&mut self) -> Option<JobId> {
+        let k = self.jobs.len();
+        if k == 0 {
+            return None;
+        }
+        match self.cfg.schedule {
+            ScheduleMode::RoundRobin => {
+                for off in 0..k {
+                    let id = (self.rr_cursor + off) % k;
+                    if !self.jobs[id].done() {
+                        self.rr_cursor = (id + 1) % k;
+                        return Some(id);
+                    }
+                }
+                None
+            }
+            ScheduleMode::WeightedUnitWork => self
+                .jobs
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| !j.done())
+                .min_by(|a, b| {
+                    a.1.issued_work
+                        .partial_cmp(&b.1.issued_work)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .map(|(i, _)| i),
+        }
+    }
+
+    /// Drive every submitted job to completion under the pool's
+    /// scheduler: per round — scheduled churn, the picked job's adapt
+    /// poll, a pool-wide re-dimension check, one broadcast+collect.
+    pub fn run_all(&mut self) -> Result<()> {
+        while let Some(id) = self.next_job() {
+            self.apply_scheduled_churn_at(self.rounds)?;
+            self.adapt_job(id)?;
+            self.maybe_redimension()?;
+            self.step_job(id)?;
+        }
+        Ok(())
+    }
+
+    /// Shut the fleet down and produce every job's report (indexed by
+    /// [`JobId`]).
+    pub fn finish(mut self) -> Result<Vec<TrainReport>> {
+        for tx in self.task_txs.iter().flatten() {
+            let _ = tx.send(WorkerTask::Shutdown);
+        }
+        self.task_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let failed = std::mem::take(&mut self.failed_set);
+        Ok(self
+            .jobs
+            .drain(..)
+            .map(|mut job| {
+                job.finalize(&failed);
+                job.report
+            })
+            .collect())
+    }
+
+    /// [`Self::run_all`] + [`Self::finish`].
+    pub fn run_to_completion(mut self) -> Result<Vec<TrainReport>> {
+        self.run_all()?;
+        self.finish()
+    }
+}
+
+/// Spawn one worker thread (shared by initial spawn and elastic joins).
+fn spawn_worker(
+    id: WorkerId,
+    event_tx: &Sender<WorkerEvent>,
+    pacing: PacingMode,
+    handles: &mut Vec<std::thread::JoinHandle<()>>,
+) -> Result<Sender<WorkerTask>> {
+    let (tx, rx) = mpsc::channel::<WorkerTask>();
+    let ctx = WorkerContext { id, tasks: rx, events: event_tx.clone(), pacing };
+    handles.push(
+        std::thread::Builder::new()
+            .name(format!("bcgc-worker-{id}"))
+            .spawn(move || worker::run(ctx))
+            .map_err(|e| Error::Runtime(format!("spawn: {e}")))?,
+    );
+    Ok(tx)
+}

@@ -1,71 +1,52 @@
-//! The end-to-end trainer, decomposed into a setup phase and an
-//! iteration loop so the coding scheme can be **hot-swapped between
-//! iterations** (adaptive coding engine) and the worker pool itself can
-//! **change size mid-run** (elastic pool).
+//! Single-job training facade over the multi-job worker pool.
 //!
-//! [`Trainer::run`] = [`TrainSession::start`] (validate, build the
-//! epoch-0 scheme, spawn the worker topology) + a loop of
-//! [`TrainSession::apply_scheduled_churn`] (config-driven joins/leaves),
-//! [`TrainSession::adapt`] (poll the drift detector, install a
-//! re-optimized scheme as a new epoch),
-//! [`TrainSession::maybe_redimension`] (membership epochs: once churn
-//! passes the threshold — or departures exceed what the live scheme's
-//! redundancy absorbs — re-solve with the live roster's `N'` and install
-//! the re-dimensioned scheme as a fresh epoch) and [`TrainSession::step`]
-//! (one coded GD iteration) + [`TrainSession::finish`] (shutdown +
-//! report). Embedders that need custom control flow (manual scheme
-//! installs, interleaved evaluation, explicit
-//! [`TrainSession::add_worker`] / [`TrainSession::remove_worker`]
-//! calls…) can drive a [`TrainSession`] directly.
+//! The coordinator's real engine lives in [`crate::coordinator::pool`]:
+//! a [`WorkerPool`] owns the threads, registry and channels, and any
+//! number of [`JobSpec`]-submitted jobs run interleaved on it. Most
+//! callers train exactly one model, so this module keeps the classic
+//! one-job surface:
+//!
+//! * [`train`] / [`train_stationary`] — run a [`TrainConfig`] to
+//!   completion and return its [`TrainReport`] (what `Trainer::run` used
+//!   to do);
+//! * [`TrainSession`] — a driveable session (per-iteration `step`,
+//!   `adapt`, `maybe_redimension`, explicit `add_worker` /
+//!   `remove_worker`, manual `install_scheme`) for embedders that need
+//!   custom control flow. It is a thin veneer over a single-job
+//!   [`WorkerPool`]: pool rounds and job iterations coincide.
+//!
+//! Multi-job callers go to the pool directly:
+//!
+//! ```ignore
+//! let mut pool = WorkerPool::new(PoolConfig::new(n), schedule)?;
+//! JobSpec::new(spec_a, blocks_a).executor(fac_a).submit(&mut pool)?;
+//! JobSpec::new(spec_b, blocks_b).executor(fac_b).submit(&mut pool)?;
+//! let reports = pool.run_to_completion()?;
+//! ```
+//!
+//! The pre-pool [`Trainer`] struct survives as a deprecated shim for
+//! one release; all in-repo callers have been migrated.
 
-use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::coding::scheme::CodingScheme;
-use crate::coordinator::adaptive::{self, AdaptiveConfig, AdaptiveController, ResolveStrategy};
-use crate::coordinator::channel::{WorkerEvent, WorkerTask};
-use crate::coordinator::master::{redistribute_shards, Master};
-use crate::coordinator::membership::{MemberStatus, WorkerId, WorkerRegistry};
-use crate::coordinator::metrics::{
-    IterMetrics, MembershipEvent, MembershipRecord, SchemeEpoch, TrainReport,
-};
-use crate::coordinator::state::ModelState;
-use crate::coordinator::straggler::{virtual_runtime, StragglerSampler, StragglerSchedule};
-use crate::coordinator::worker::{self, WorkerContext};
+use crate::coordinator::membership::{WorkerId, WorkerRegistry};
+use crate::coordinator::metrics::TrainReport;
+use crate::coordinator::pool::{JobHandle, JobSpec, PoolConfig, WorkerPool};
+// Re-exported from the pool (membership is a pool-level concern now);
+// kept importable from `trainer` for source compatibility.
+pub use crate::coordinator::pool::ElasticConfig;
+use crate::coordinator::adaptive::AdaptiveConfig;
+use crate::coordinator::straggler::StragglerSchedule;
 use crate::coordinator::PacingMode;
-use crate::distribution::fit::{FittedModel, ShiftedExpEstimate};
+use crate::distribution::fit::FittedModel;
 use crate::distribution::CycleTimeDistribution;
 use crate::optimizer::blocks::BlockPartition;
 use crate::optimizer::runtime_model::ProblemSpec;
-use crate::runtime::{ExecutorFactory, GradExecutor};
-use crate::util::rng::Rng;
-use crate::{Error, Result};
+use crate::runtime::ExecutorFactory;
+use crate::Result;
 
-/// Elastic worker-pool policy: when membership changes, when to
-/// re-dimension the scheme around the new roster.
-#[derive(Debug, Clone)]
-pub struct ElasticConfig {
-    /// Re-dimension once this many membership changes (confirmed joins
-    /// + leaves) accumulated since the last rebind. Departures that
-    /// exceed the live scheme's redundancy always force an immediate
-    /// re-dimension regardless of this threshold. Clamped to ≥ 1.
-    pub churn_threshold: usize,
-    /// Scheduled departures `(iter, count)`: before iteration `iter`,
-    /// drain `count` workers (highest-row live workers first).
-    pub departures: Vec<(usize, usize)>,
-    /// Scheduled arrivals `(iter, count)`: before iteration `iter`,
-    /// spawn `count` new workers (assigned work from the next epoch).
-    pub arrivals: Vec<(usize, usize)>,
-}
-
-impl Default for ElasticConfig {
-    fn default() -> Self {
-        Self { churn_threshold: 1, departures: Vec::new(), arrivals: Vec::new() }
-    }
-}
-
-/// Training configuration.
+/// Training configuration for a single job on its own pool.
 pub struct TrainConfig {
     pub spec: ProblemSpec,
     /// The initial (epoch-0) block partition.
@@ -110,13 +91,172 @@ impl TrainConfig {
     }
 }
 
-/// Coded distributed GD driver.
+/// Run a [`TrainConfig`] to completion under a (possibly
+/// non-stationary) straggler schedule and return the job's report —
+/// the whole churn → adapt → re-dimension → step loop per iteration.
+pub fn train(
+    cfg: TrainConfig,
+    schedule: StragglerSchedule,
+    factory: ExecutorFactory,
+) -> Result<TrainReport> {
+    let steps = cfg.steps;
+    let mut session = TrainSession::start(cfg, schedule, factory)?;
+    for iter in 0..steps {
+        session.apply_scheduled_churn(iter)?;
+        session.adapt(iter)?;
+        session.maybe_redimension(iter)?;
+        session.step(iter)?;
+    }
+    session.finish()
+}
+
+/// [`train`] under the paper's stationary straggler model.
+pub fn train_stationary(
+    cfg: TrainConfig,
+    dist: Box<dyn CycleTimeDistribution>,
+    factory: ExecutorFactory,
+) -> Result<TrainReport> {
+    train(cfg, StragglerSchedule::stationary(dist), factory)
+}
+
+/// A live single-job topology: one [`WorkerPool`] carrying exactly one
+/// job, exposed through the classic per-iteration driving surface.
+/// Pool rounds and job iterations coincide, so the `iter` arguments
+/// below are the job's 0-based iteration counter.
+pub struct TrainSession {
+    pool: WorkerPool,
+    job: usize,
+}
+
+impl TrainSession {
+    /// Setup phase: spawn the pool and submit the one job (validates
+    /// the config, builds the epoch-0 scheme).
+    pub fn start(
+        cfg: TrainConfig,
+        schedule: StragglerSchedule,
+        factory: ExecutorFactory,
+    ) -> Result<Self> {
+        let mut pcfg = PoolConfig::new(cfg.spec.n);
+        pcfg.pacing = cfg.pacing;
+        pcfg.seed = cfg.seed;
+        pcfg.stall_timeout = cfg.stall_timeout;
+        pcfg.dead_workers = cfg.dead_workers.clone();
+        pcfg.elastic = cfg.elastic.clone();
+        let mut pool = WorkerPool::new(pcfg, schedule)?;
+        let mut js = JobSpec::new(cfg.spec, cfg.blocks)
+            .steps(cfg.steps)
+            .lr(cfg.lr)
+            .eval_every(cfg.eval_every)
+            .seed(cfg.seed)
+            .init_scale(cfg.init_scale)
+            .executor(factory);
+        if let Some(a) = cfg.adaptive {
+            js = js.adaptive(a);
+        }
+        let job = js.submit(&mut pool)?;
+        Ok(Self { pool, job })
+    }
+
+    /// The job's live state on the pool.
+    pub fn job(&self) -> &JobHandle {
+        self.pool.job(self.job)
+    }
+
+    /// The underlying pool (registry, rounds, makespan accounting).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// The current scheme epoch (0-based, monotone).
+    pub fn epoch(&self) -> usize {
+        self.job().epoch()
+    }
+
+    /// The currently installed scheme.
+    pub fn scheme(&self) -> &Arc<CodingScheme> {
+        self.pool.job(self.job).scheme()
+    }
+
+    /// The membership registry (id ↔ row bindings, churn counters).
+    pub fn registry(&self) -> &WorkerRegistry {
+        self.pool.registry()
+    }
+
+    /// Spawn a new worker thread into the pool (see
+    /// [`WorkerPool::add_worker`]); it waits unassigned until the next
+    /// epoch swap.
+    pub fn add_worker(&mut self, iter: usize) -> Result<WorkerId> {
+        let _ = iter; // rounds == iterations on a single-job pool
+        self.pool.add_worker()
+    }
+
+    /// Drain a worker out of the pool (see
+    /// [`WorkerPool::remove_worker`]).
+    pub fn remove_worker(&mut self, id: WorkerId, iter: usize) -> Result<()> {
+        let _ = iter;
+        self.pool.remove_worker(id)
+    }
+
+    /// Apply the config's scheduled churn for iteration `iter`
+    /// (arrivals first, then departures). No-op without an elastic
+    /// config.
+    pub fn apply_scheduled_churn(&mut self, iter: usize) -> Result<()> {
+        self.pool.apply_scheduled_churn_at(iter)
+    }
+
+    /// Poll the adaptive policy before iteration `iter`; on a triggered
+    /// re-plan, install the re-optimized scheme as a new epoch.
+    pub fn adapt(&mut self, iter: usize) -> Result<()> {
+        debug_assert_eq!(iter, self.job().iters_done(), "sessions step contiguously");
+        self.pool.adapt_job(self.job)
+    }
+
+    /// Membership epochs (see [`WorkerPool::maybe_redimension`]).
+    /// Returns whether a re-dimension happened.
+    pub fn maybe_redimension(&mut self, iter: usize) -> Result<bool> {
+        let _ = iter;
+        self.pool.maybe_redimension()
+    }
+
+    /// Install a new same-`N` partition as the next scheme epoch (see
+    /// [`JobHandle::install_scheme`]).
+    pub fn install_scheme(
+        &mut self,
+        blocks: BlockPartition,
+        iter: usize,
+        estimate: Option<&FittedModel>,
+        drift: f64,
+    ) -> Result<()> {
+        self.pool.install_scheme(self.job, blocks, iter, estimate, drift)
+    }
+
+    /// One coded GD iteration under the current scheme epoch.
+    pub fn step(&mut self, iter: usize) -> Result<()> {
+        debug_assert_eq!(iter, self.job().iters_done(), "sessions step contiguously");
+        self.pool.step_job(self.job)
+    }
+
+    /// Shut the topology down and produce the report.
+    pub fn finish(self) -> Result<TrainReport> {
+        let job = self.job;
+        let mut reports = self.pool.finish()?;
+        Ok(reports.remove(job))
+    }
+}
+
+/// Pre-pool driver, kept as a thin shim for one release.
+#[deprecated(
+    since = "0.3.0",
+    note = "use coordinator::pool::{WorkerPool, JobSpec} (multi-job) or \
+            coordinator::trainer::train / TrainSession (single job)"
+)]
 pub struct Trainer {
     cfg: TrainConfig,
     schedule: StragglerSchedule,
     factory: ExecutorFactory,
 }
 
+#[allow(deprecated)]
 impl Trainer {
     /// Stationary straggler model (the paper's setting).
     pub fn new(
@@ -139,570 +279,6 @@ impl Trainer {
 
     /// Run the full training loop.
     pub fn run(self) -> Result<TrainReport> {
-        let steps = self.cfg.steps;
-        let mut session = TrainSession::start(self.cfg, self.schedule, self.factory)?;
-        for iter in 0..steps {
-            session.apply_scheduled_churn(iter)?;
-            session.adapt(iter)?;
-            session.maybe_redimension(iter)?;
-            session.step(iter)?;
-        }
-        session.finish()
-    }
-}
-
-/// A live worker topology plus all per-run mutable state.
-pub struct TrainSession {
-    cfg: TrainConfig,
-    dim: usize,
-    /// Dataset shard count (fixed at spawn; elastic subsets are
-    /// re-mapped onto these shards when `N` changes).
-    num_data_shards: usize,
-    scheme: Arc<CodingScheme>,
-    epoch: usize,
-    master: Master,
-    registry: WorkerRegistry,
-    /// Task channel per worker **id** (None once drained/dead/never
-    /// spawned). Indexed by stable id, not row.
-    task_txs: Vec<Option<Sender<WorkerTask>>>,
-    /// Kept for spawning late joiners; the channel therefore never
-    /// disconnects while the session lives (stalls still time out).
-    event_tx: Sender<WorkerEvent>,
-    event_rx: Receiver<WorkerEvent>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    factory: ExecutorFactory,
-    sampler: StragglerSampler,
-    state: ModelState,
-    eval_exec: Option<Box<dyn GradExecutor>>,
-    /// Row-indexed liveness for the current epoch's roster.
-    live_mask: Vec<bool>,
-    failed_set: Vec<usize>,
-    controller: Option<AdaptiveController>,
-    rng: Rng,
-    report: TrainReport,
-}
-
-impl TrainSession {
-    /// Setup phase: validate the config, build the epoch-0 scheme and
-    /// spawn the worker topology.
-    pub fn start(
-        cfg: TrainConfig,
-        schedule: StragglerSchedule,
-        factory: ExecutorFactory,
-    ) -> Result<Self> {
-        let n = cfg.spec.n;
-        if cfg.blocks.n() != n {
-            return Err(Error::InvalidArgument("blocks.n() != spec.n".into()));
-        }
-        let mut rng = Rng::new(cfg.seed);
-        let scheme = Arc::new(CodingScheme::new(cfg.blocks.clone(), &mut rng)?);
-
-        // Master-side executor for loss evaluation (worker id n = master).
-        let mut eval_exec = if cfg.eval_every > 0 { Some(factory(n)?) } else { None };
-        let dim = if let Some(e) = &eval_exec {
-            e.dim()
-        } else {
-            factory(n)?.dim()
-        };
-        if dim != cfg.spec.coords {
-            crate::log_warn!(
-                "model dim {} != spec.coords {} — virtual-runtime accounting uses the model dim",
-                dim,
-                cfg.spec.coords
-            );
-        }
-        if cfg.blocks.total() != dim {
-            return Err(Error::InvalidArgument(format!(
-                "block partition covers {} coordinates but the model has {dim}",
-                cfg.blocks.total()
-            )));
-        }
-
-        // Topology: per-worker task channels + one shared event channel.
-        let mut registry = WorkerRegistry::new(n);
-        let (event_tx, event_rx) = mpsc::channel::<WorkerEvent>();
-        let mut task_txs: Vec<Option<Sender<WorkerTask>>> = Vec::with_capacity(n);
-        let mut handles = Vec::new();
-        let mut live_mask = vec![false; n];
-        for w in 0..n {
-            if cfg.dead_workers.contains(&w) {
-                // Injected failure: worker never comes up. It keeps its
-                // epoch-0 row (the scheme must absorb it) and is dropped
-                // at the first rebind, like any departure.
-                task_txs.push(None);
-                registry.leave(w);
-                continue;
-            }
-            let (tx, rx) = mpsc::channel::<WorkerTask>();
-            task_txs.push(Some(tx));
-            live_mask[w] = true;
-            let ctx = WorkerContext {
-                id: w,
-                factory: factory.clone(),
-                tasks: rx,
-                events: event_tx.clone(),
-                pacing: cfg.pacing,
-            };
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("bcgc-worker-{w}"))
-                    .spawn(move || worker::run(ctx))
-                    .map_err(|e| Error::Runtime(format!("spawn: {e}")))?,
-            );
-        }
-
-        let mut master = Master::new(scheme.clone(), dim);
-        master.timeout = cfg.stall_timeout;
-
-        // Seed the drift detector with the parameters the initial scheme
-        // is presumed optimal for (when the phase-0 model is shifted-exp).
-        let controller = cfg.adaptive.clone().map(|acfg| match schedule.dist_at(0).as_shifted_exp()
-        {
-            Some(d) => AdaptiveController::with_reference(acfg, d.mu, d.t0),
-            None => AdaptiveController::new(acfg),
-        });
-        let sampler = StragglerSampler::from_schedule(schedule, rng.next_u64());
-        let state = if cfg.init_scale > 0.0 {
-            ModelState::random(dim, cfg.init_scale, &mut rng)
-        } else {
-            ModelState::zeros(dim)
-        };
-
-        let mut report = TrainReport::default();
-        report.scheme_epochs.push(SchemeEpoch {
-            epoch: 0,
-            installed_at_iter: 0,
-            block_sizes: cfg.blocks.sizes().to_vec(),
-            estimated_mu: None,
-            estimated_t0: None,
-            estimated_mean: None,
-            family: None,
-            drift: 0.0,
-        });
-        let failed_set = cfg.dead_workers.clone();
-
-        let mut session = Self {
-            cfg,
-            dim,
-            num_data_shards: n,
-            scheme,
-            epoch: 0,
-            master,
-            registry,
-            task_txs,
-            event_tx,
-            event_rx,
-            handles,
-            factory,
-            sampler,
-            state,
-            eval_exec: None,
-            live_mask,
-            failed_set,
-            controller,
-            rng,
-            report,
-        };
-        if session.cfg.eval_every > 0 {
-            if let Some(e) = eval_exec.as_mut() {
-                let l = e.loss(session.state.as_slice())?;
-                session.report.loss_curve.push((0, l));
-            }
-        }
-        session.eval_exec = eval_exec;
-        Ok(session)
-    }
-
-    /// The current scheme epoch (0-based, monotone).
-    pub fn epoch(&self) -> usize {
-        self.epoch
-    }
-
-    /// The currently installed scheme.
-    pub fn scheme(&self) -> &Arc<CodingScheme> {
-        &self.scheme
-    }
-
-    /// The membership registry (id ↔ row bindings, churn counters).
-    pub fn registry(&self) -> &WorkerRegistry {
-        &self.registry
-    }
-
-    /// Spawn a new worker thread into the pool. It is registered as
-    /// pending and **receives no work until the next epoch swap**: its
-    /// `Joined` event confirms the executor came up, and the following
-    /// [`Self::maybe_redimension`] binds it to a code row of a fresh,
-    /// re-dimensioned scheme epoch.
-    pub fn add_worker(&mut self, iter: usize) -> Result<WorkerId> {
-        if self.cfg.elastic.is_none() {
-            return Err(Error::InvalidArgument(
-                "add_worker requires an elastic pool (TrainConfig::elastic)".into(),
-            ));
-        }
-        let id = self.registry.join();
-        let (tx, rx) = mpsc::channel::<WorkerTask>();
-        if self.task_txs.len() <= id {
-            self.task_txs.resize_with(id + 1, || None);
-        }
-        self.task_txs[id] = Some(tx);
-        let ctx = WorkerContext {
-            id,
-            factory: self.factory.clone(),
-            tasks: rx,
-            events: self.event_tx.clone(),
-            pacing: self.cfg.pacing,
-        };
-        self.handles.push(
-            std::thread::Builder::new()
-                .name(format!("bcgc-worker-{id}"))
-                .spawn(move || worker::run(ctx))
-                .map_err(|e| Error::Runtime(format!("spawn: {e}")))?,
-        );
-        crate::log_info!("iter {iter}: worker {id} joined (pending next epoch)");
-        self.report
-            .membership
-            .push(MembershipRecord { iter, event: MembershipEvent::Join { worker: id } });
-        Ok(id)
-    }
-
-    /// Drain a worker out of the pool without dropping an iteration:
-    /// its thread finishes cleanly, its row counts as a fatal straggler
-    /// for the remainder of the current epoch, and the next
-    /// [`Self::maybe_redimension`] drops it from the roster.
-    pub fn remove_worker(&mut self, id: WorkerId, iter: usize) -> Result<()> {
-        if self.cfg.elastic.is_none() {
-            return Err(Error::InvalidArgument(
-                "remove_worker requires an elastic pool (TrainConfig::elastic)".into(),
-            ));
-        }
-        if self.registry.status(id) != Some(MemberStatus::Active)
-            && self.registry.status(id) != Some(MemberStatus::Pending)
-        {
-            return Err(Error::InvalidArgument(format!(
-                "worker {id} is not a live pool member"
-            )));
-        }
-        if let Some(tx) = self.task_txs.get_mut(id).and_then(Option::take) {
-            let _ = tx.send(WorkerTask::Drain);
-        }
-        self.mark_departed(id);
-        crate::log_info!("iter {iter}: worker {id} draining out of the pool");
-        self.report
-            .membership
-            .push(MembershipRecord { iter, event: MembershipEvent::Leave { worker: id } });
-        Ok(())
-    }
-
-    /// Shared departure bookkeeping (clean drain and fatal failure):
-    /// the registry marks the id departed — keeping its row for the
-    /// rest of the epoch — its task channel is dropped, and its row, if
-    /// any, goes dead in the live mask.
-    fn mark_departed(&mut self, id: WorkerId) {
-        self.registry.leave(id);
-        if let Some(tx) = self.task_txs.get_mut(id) {
-            *tx = None;
-        }
-        if let Some(row) = self.registry.row_of(id) {
-            if row < self.live_mask.len() {
-                self.live_mask[row] = false;
-            }
-        }
-    }
-
-    /// Apply the config's scheduled churn for iteration `iter`
-    /// (arrivals first, then departures of the highest-row live
-    /// workers). No-op without an elastic config.
-    pub fn apply_scheduled_churn(&mut self, iter: usize) -> Result<()> {
-        let (arrive, depart) = match &self.cfg.elastic {
-            None => return Ok(()),
-            Some(e) => (
-                e.arrivals.iter().filter(|&&(at, _)| at == iter).map(|&(_, c)| c).sum::<usize>(),
-                e.departures.iter().filter(|&&(at, _)| at == iter).map(|&(_, c)| c).sum::<usize>(),
-            ),
-        };
-        for _ in 0..arrive {
-            self.add_worker(iter)?;
-        }
-        for _ in 0..depart {
-            let victim = self
-                .registry
-                .roster()
-                .iter()
-                .rev()
-                .copied()
-                .find(|&id| self.registry.status(id) == Some(MemberStatus::Active));
-            match victim {
-                Some(id) => self.remove_worker(id, iter)?,
-                None => {
-                    return Err(Error::Runtime(format!(
-                        "iter {iter}: scheduled departure but no live worker remains"
-                    )))
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Poll the adaptive policy before iteration `iter`; on a triggered
-    /// re-plan, install the re-optimized scheme as a new epoch.
-    pub fn adapt(&mut self, iter: usize) -> Result<()> {
-        if self.controller.is_none() {
-            return Ok(());
-        }
-        let warm = self.scheme.blocks().as_f64();
-        let plan = {
-            let ctrl = self.controller.as_mut().unwrap();
-            ctrl.maybe_replan(iter, &self.cfg.spec, &warm, &mut self.rng)?
-        };
-        if let Some(plan) = plan {
-            crate::log_info!(
-                "iter {iter}: drift {:.2} → installing scheme epoch {} (fit {})",
-                plan.drift,
-                self.epoch + 1,
-                plan.estimate.label()
-            );
-            self.install_scheme(plan.blocks, iter, Some(&plan.estimate), plan.drift)?;
-        }
-        Ok(())
-    }
-
-    /// Membership epochs: once churn since the last rebind reaches the
-    /// threshold — or immediately when departures exceed what the live
-    /// scheme's redundancy can absorb — re-solve the partition for the
-    /// live roster's `N'` (the existing adaptive re-solve, wired to the
-    /// new worker count), rebind rows, and install the re-dimensioned
-    /// scheme as a fresh epoch. Returns whether a re-dimension happened.
-    pub fn maybe_redimension(&mut self, iter: usize) -> Result<bool> {
-        let Some(threshold) = self.cfg.elastic.as_ref().map(|e| e.churn_threshold.max(1))
-        else {
-            return Ok(false);
-        };
-        let dead_rows = self.registry.departed_in_roster();
-        let min_s = self.scheme.ranges().iter().map(|r| r.s).min().unwrap_or(0);
-        let forced = dead_rows > min_s;
-        if !forced && self.registry.churn_since_rebind() < threshold {
-            return Ok(false);
-        }
-        let from_n = self.cfg.spec.n;
-        let to_n = self.registry.next_n();
-        if to_n == 0 {
-            return Err(Error::Runtime(format!(
-                "iter {iter}: elastic pool drained to zero workers"
-            )));
-        }
-        // Re-solve with the *new* N. Evidence, in order of preference:
-        // the online estimator's live family-selected fit, then the
-        // schedule's current phase (when shifted-exp), else a uniform
-        // level-1 fallback.
-        let spec_new = self.cfg.spec.with_n(to_n);
-        let estimate: Option<FittedModel> = self
-            .controller
-            .as_ref()
-            .and_then(|c| c.current_fit())
-            .or_else(|| {
-                self.sampler.distribution_at(iter).as_shifted_exp().map(|d| {
-                    FittedModel::ShiftedExp(ShiftedExpEstimate {
-                        mu: d.mu,
-                        t0: d.t0,
-                        samples: 0,
-                    })
-                })
-            });
-        let strategy = self
-            .cfg
-            .adaptive
-            .as_ref()
-            .map(|a| a.strategy.clone())
-            .unwrap_or(ResolveStrategy::ClosedFormFreq);
-        let warm = self.scheme.blocks().as_f64();
-        let blocks = match &estimate {
-            Some(est) => {
-                let dist = est.build();
-                adaptive::resolve_partition(
-                    &strategy,
-                    &spec_new,
-                    dist.as_ref(),
-                    Some(warm.as_slice()),
-                    self.dim,
-                    &mut self.rng,
-                )?
-            }
-            None => {
-                let s = if to_n > 1 { 1 } else { 0 };
-                BlockPartition::single_level(to_n, s, self.dim)
-            }
-        };
-
-        // Rebind rows and install the re-dimensioned scheme atomically
-        // (from the workers' point of view: with their next task).
-        let roster = self.registry.rebind().to_vec();
-        debug_assert_eq!(roster.len(), to_n);
-        self.cfg.spec.n = to_n;
-        let scheme = Arc::new(CodingScheme::new(blocks, &mut self.rng)?);
-        self.epoch += 1;
-        self.scheme = scheme.clone();
-        self.master.install_scheme(
-            scheme,
-            self.epoch,
-            roster,
-            Arc::new(redistribute_shards(to_n, self.num_data_shards)),
-        );
-        self.live_mask = vec![true; to_n];
-        crate::log_info!(
-            "iter {iter}: re-dimensioned N {from_n}→{to_n} as scheme epoch {}",
-            self.epoch
-        );
-        self.report.scheme_epochs.push(SchemeEpoch {
-            epoch: self.epoch,
-            installed_at_iter: iter,
-            block_sizes: self.scheme.blocks().sizes().to_vec(),
-            estimated_mu: estimate.as_ref().and_then(|e| e.mu_hint()),
-            estimated_t0: estimate.as_ref().and_then(|e| e.t0_hint()),
-            estimated_mean: estimate.as_ref().map(|e| e.mean()),
-            family: estimate.as_ref().map(|e| e.family().name().to_string()),
-            drift: 0.0,
-        });
-        self.report.membership.push(MembershipRecord {
-            iter,
-            event: MembershipEvent::Redimension { from_n, to_n, epoch: self.epoch },
-        });
-        // The re-dimension changed N (and with it the per-coordinate
-        // unit of work): observations recorded under the old epoch are
-        // no longer comparable, so flush the estimator window and
-        // rebase the drift reference on the model this scheme was
-        // solved for.
-        if let Some(ctrl) = self.controller.as_mut() {
-            ctrl.rebase(estimate);
-        }
-        Ok(true)
-    }
-
-    /// Install a new same-`N` partition as the next scheme epoch. Safe
-    /// between iterations: workers receive the new scheme with their
-    /// next task, and the master rejects contributions encoded under any
-    /// previous epoch like stale-iteration messages. (Re-dimensioning to
-    /// a different `N` goes through [`Self::maybe_redimension`].)
-    pub fn install_scheme(
-        &mut self,
-        blocks: BlockPartition,
-        iter: usize,
-        estimate: Option<&FittedModel>,
-        drift: f64,
-    ) -> Result<()> {
-        if blocks.n() != self.cfg.spec.n {
-            return Err(Error::InvalidArgument("new scheme: blocks.n() != spec.n".into()));
-        }
-        if blocks.total() != self.dim {
-            return Err(Error::InvalidArgument(format!(
-                "new scheme covers {} coordinates but the model has {}",
-                blocks.total(),
-                self.dim
-            )));
-        }
-        let scheme = Arc::new(CodingScheme::new(blocks, &mut self.rng)?);
-        self.epoch += 1;
-        self.scheme = scheme.clone();
-        let roster = self.master.roster().to_vec();
-        let shards = self.master.shard_map().clone();
-        self.master.install_scheme(scheme, self.epoch, roster, shards);
-        self.report.scheme_epochs.push(SchemeEpoch {
-            epoch: self.epoch,
-            installed_at_iter: iter,
-            block_sizes: self.scheme.blocks().sizes().to_vec(),
-            estimated_mu: estimate.and_then(|e| e.mu_hint()),
-            estimated_t0: estimate.and_then(|e| e.t0_hint()),
-            estimated_mean: estimate.map(|e| e.mean()),
-            family: estimate.map(|e| e.family().name().to_string()),
-            drift,
-        });
-        Ok(())
-    }
-
-    /// One coded GD iteration under the current scheme epoch.
-    pub fn step(&mut self, iter: usize) -> Result<()> {
-        let t_iter = Instant::now();
-        let n = self.cfg.spec.n;
-        debug_assert_eq!(n, self.registry.n());
-        let times = self.sampler.sample(iter, n);
-        if let Some(ctrl) = self.controller.as_mut() {
-            ctrl.observe(&times);
-        }
-        // Row-ordered task channels for the current roster (None where
-        // the bound worker already departed).
-        let senders: Vec<Option<Sender<WorkerTask>>> = self
-            .registry
-            .roster()
-            .iter()
-            .map(|&id| self.task_txs.get(id).cloned().flatten())
-            .collect();
-        self.master.broadcast(
-            iter,
-            self.state.shared(),
-            &times,
-            self.cfg.spec.unit_work(),
-            &senders,
-        );
-        let outcome = self.master.collect(iter, &self.event_rx, &self.live_mask)?;
-        for id in outcome.joined {
-            self.registry.confirm(id);
-        }
-        for id in outcome.left {
-            // Clean departures observed mid-iteration (their Leave was
-            // already logged by remove_worker); keep masks in sync.
-            self.mark_departed(id);
-        }
-        for id in outcome.failed {
-            if !self.failed_set.contains(&id) {
-                self.failed_set.push(id);
-                // Elastic pools treat a fatal failure as a departure; a
-                // static run's membership log stays empty by contract.
-                if self.cfg.elastic.is_some() {
-                    self.report.membership.push(MembershipRecord {
-                        iter,
-                        event: MembershipEvent::Leave { worker: id },
-                    });
-                }
-            }
-            // A fatal failure is a departure the worker never got to
-            // announce: same bookkeeping as a drain.
-            self.mark_departed(id);
-        }
-        let grad_norm = outcome.gradient.iter().map(|g| g * g).sum::<f64>().sqrt();
-        self.state.step(&outcome.gradient, self.cfg.lr);
-        self.report.iters.push(IterMetrics {
-            iter,
-            epoch: self.epoch,
-            workers: n,
-            virtual_runtime: virtual_runtime(&self.cfg.spec, &self.scheme, &times),
-            wall_ns: t_iter.elapsed().as_nanos() as u64,
-            decode_ns: outcome.decode_ns,
-            blocks_decoded: self.scheme.ranges().len(),
-            late_contributions: outcome.late_contributions,
-            stale_epoch_contributions: outcome.stale_epoch + outcome.mismatched_binding,
-            grad_norm,
-        });
-        if self.cfg.eval_every > 0 && (iter + 1) % self.cfg.eval_every == 0 {
-            if let Some(e) = self.eval_exec.as_mut() {
-                let l = e.loss(self.state.as_slice())?;
-                self.report.loss_curve.push((iter + 1, l));
-            }
-        }
-        Ok(())
-    }
-
-    /// Shut the topology down and produce the report.
-    pub fn finish(mut self) -> Result<TrainReport> {
-        for tx in self.task_txs.iter().flatten() {
-            let _ = tx.send(WorkerTask::Shutdown);
-        }
-        self.task_txs.clear();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-        let (hits, misses) = self.master.cache_stats();
-        self.report.decode_cache_hits = hits;
-        self.report.decode_cache_misses = misses;
-        self.report.failed_workers = self.failed_set;
-        Ok(self.report)
+        train(self.cfg, self.schedule, self.factory)
     }
 }

@@ -1,39 +1,57 @@
 //! Worker thread: sequentially computes, encodes and streams coded
-//! gradient blocks for each GD iteration.
+//! gradient blocks — **multiplexing tasks from every job** that shares
+//! the pool.
 //!
-//! Neither the coding scheme nor the worker's code-row position is baked
-//! in at spawn: both arrive with every [`WorkerTask::Compute`] as
-//! epoch-versioned state, so the master can install a re-optimized —
-//! even re-**dimensioned** (different `N`) — scheme between iterations
-//! without respawning the thread. The thread's stable id is only used
-//! for control-plane events; all encoding is done as the task's `row`.
-//! The per-scheme derived state (held subsets, block ranges, backing
-//! dataset shards) is cached and refreshed only when the epoch changes.
+//! Nothing job- or scheme-specific is baked in at spawn: every
+//! [`WorkerTask::Compute`] carries its job id, its epoch-versioned
+//! scheme, the worker's code-row binding for that epoch, and the
+//! executor factory of the job — so one thread serves any number of
+//! jobs, each with its own dataset and model. Per-job state is built
+//! lazily and cached:
+//!
+//! * an **executor** per job, constructed from the task's factory the
+//!   first time the thread sees the job. A build failure on a worker
+//!   that already serves some *other* job successfully is a per-tenant
+//!   problem: it is remembered and re-reported per task as a transient
+//!   [`WorkerEvent::Failed`], so that job's coded redundancy absorbs
+//!   the worker like any straggler while the healthy jobs keep
+//!   computing. A build failure on a worker that has **never** built
+//!   any executor is presumed a broken host (missing artifacts, bad
+//!   runtime): the thread reports a **fatal** failure and exits, so the
+//!   pool accounts it as departed and an elastic pool re-dimensions
+//!   around it instead of burning a redundancy slot forever;
+//! * the **per-epoch derived state** per job (held subsets, block
+//!   ranges, backing dataset shards), refreshed only when the job's
+//!   epoch or row binding changes.
+//!
+//! Tasks are processed strictly in arrival order (per-worker FIFO): the
+//! pool interleaves jobs at broadcast granularity, and a worker finishes
+//! one job's iteration before starting the next task.
 //!
 //! Lifecycle: the thread announces itself with [`WorkerEvent::Joined`]
-//! once its executor is up, and acknowledges a [`WorkerTask::Drain`]
-//! with [`WorkerEvent::Left`] before exiting (the elastic pool's clean
+//! right after spawn, and acknowledges a [`WorkerTask::Drain`] with
+//! [`WorkerEvent::Left`] before exiting (the elastic pool's clean
 //! departure path).
 
+use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
 
-use crate::coordinator::channel::{BlockContribution, WorkerEvent, WorkerTask};
+use crate::coordinator::channel::{BlockContribution, JobId, WorkerEvent, WorkerTask};
 use crate::coordinator::straggler::block_completion_stamps_unit;
 use crate::coordinator::PacingMode;
 use crate::optimizer::blocks::BlockRange;
-use crate::runtime::ExecutorFactory;
+use crate::runtime::GradExecutor;
 
 /// Everything a worker thread needs (moved into the thread at spawn).
 pub struct WorkerContext {
     /// Stable worker id (thread identity; not a code row).
     pub id: usize,
-    pub factory: ExecutorFactory,
     pub tasks: Receiver<WorkerTask>,
     pub events: Sender<WorkerEvent>,
     pub pacing: PacingMode,
 }
 
-/// Per-epoch derived state, recomputed only on an epoch change.
+/// Per-(job, epoch) derived state, recomputed only on an epoch change.
 struct EpochState {
     epoch: usize,
     row: usize,
@@ -44,58 +62,96 @@ struct EpochState {
     held_shards: Vec<Vec<usize>>,
 }
 
+/// Per-job state a worker caches between tasks. `exec` stays `None`
+/// once the job's executor failed to build (the failure is re-reported
+/// per task instead of retrying an expensive broken constructor).
+struct JobState {
+    exec: Option<Box<dyn GradExecutor>>,
+    init_attempted: bool,
+    epoch: Option<EpochState>,
+}
+
 /// Worker main loop. Returns when the task channel closes or a
 /// Shutdown/Drain arrives; executor errors are reported to the master as
 /// [`WorkerEvent::Failed`] (the coded scheme tolerates them like any
 /// other straggler, up to each block's redundancy).
 pub fn run(ctx: WorkerContext) {
-    let WorkerContext { id, factory, tasks, events, pacing } = ctx;
-    let mut exec = match factory(id) {
-        Ok(e) => e,
-        Err(e) => {
-            let _ = events.send(WorkerEvent::Failed {
-                worker: id,
-                iter: 0,
-                reason: format!("executor init: {e}"),
-                fatal: true, // the thread exits: gone for the whole run
-            });
-            return;
-        }
-    };
+    let WorkerContext { id, tasks, events, pacing } = ctx;
     // Ready to be bound to a code row (joins wait for the next epoch).
     if events.send(WorkerEvent::Joined { worker: id }).is_err() {
         return; // master gone
     }
-    let dim = exec.dim();
-    // Schemes swap rarely, so recomputing derived state only on an epoch
-    // change keeps the hot path identical to the static design.
-    let mut cached: Option<EpochState> = None;
+    // Jobs are few and long-lived; per-job executors and per-epoch
+    // derived state are cached so the hot path stays identical to the
+    // single-job design.
+    let mut jobs: HashMap<JobId, JobState> = HashMap::new();
+    // Whether this thread has ever successfully built an executor —
+    // distinguishes a per-job dependency problem (transient, the job
+    // codes around this worker) from a globally broken host (fatal,
+    // the thread exits and the pool drops the worker at the next
+    // rebind).
+    let mut ever_built = false;
 
     while let Ok(task) = tasks.recv() {
-        let (iter, epoch, row, scheme, shards, theta, cycle_time, unit_work) = match task {
-            WorkerTask::Compute {
-                iter,
-                epoch,
-                row,
-                scheme,
-                shards,
-                theta,
-                cycle_time,
-                unit_work,
-            } => (iter, epoch, row, scheme, shards, theta, cycle_time, unit_work),
-            WorkerTask::Drain => {
-                let _ = events.send(WorkerEvent::Left { worker: id });
-                return;
+        let (job, iter, epoch, row, scheme, shards, theta, factory, cycle_time, unit_work) =
+            match task {
+                WorkerTask::Compute {
+                    job,
+                    iter,
+                    epoch,
+                    row,
+                    scheme,
+                    shards,
+                    theta,
+                    factory,
+                    cycle_time,
+                    unit_work,
+                } => (job, iter, epoch, row, scheme, shards, theta, factory, cycle_time, unit_work),
+                WorkerTask::Drain => {
+                    let _ = events.send(WorkerEvent::Left { worker: id });
+                    return;
+                }
+                WorkerTask::Shutdown => return,
+            };
+        let state = jobs
+            .entry(job)
+            .or_insert_with(|| JobState { exec: None, init_attempted: false, epoch: None });
+        if !state.init_attempted {
+            // First task for this job: build its executor in-thread.
+            state.init_attempted = true;
+            match factory(id) {
+                Ok(e) => {
+                    ever_built = true;
+                    state.exec = Some(e);
+                }
+                Err(e) => {
+                    // No executor has ever come up on this thread: the
+                    // host itself is broken — exit fatally so the pool
+                    // stops binding rows to it. With at least one
+                    // working executor it is a per-job problem: stay,
+                    // and let that job code around us.
+                    let fatal = !ever_built;
+                    let _ = events.send(WorkerEvent::Failed {
+                        worker: id,
+                        job,
+                        iter,
+                        reason: format!("executor init: {e}"),
+                        fatal,
+                    });
+                    if fatal {
+                        return;
+                    }
+                    continue;
+                }
             }
-            WorkerTask::Shutdown => return,
-        };
-        if cached.as_ref().map(|c| (c.epoch, c.row)) != Some((epoch, row)) {
+        }
+        if state.epoch.as_ref().map(|c| (c.epoch, c.row)) != Some((epoch, row)) {
             let held = scheme.worker_subsets(row).to_vec();
             let held_shards: Vec<Vec<usize>> = held
                 .iter()
                 .map(|&k| shards.get(k).cloned().unwrap_or_default())
                 .collect();
-            cached = Some(EpochState {
+            state.epoch = Some(EpochState {
                 epoch,
                 row,
                 held,
@@ -103,18 +159,33 @@ pub fn run(ctx: WorkerContext) {
                 held_shards,
             });
         }
-        let state = cached.as_ref().unwrap();
+        let Some(exec) = state.exec.as_mut() else {
+            // Executor known-broken for this job: re-report (the first
+            // failure above already covered this task's iteration; later
+            // tasks need their own report).
+            let _ = events.send(WorkerEvent::Failed {
+                worker: id,
+                job,
+                iter,
+                reason: "executor init failed earlier for this job".into(),
+                fatal: false,
+            });
+            continue;
+        };
+        let dim = exec.dim();
+        let epoch_state = state.epoch.as_ref().unwrap();
         // Real compute: partial gradients of every dataset shard backing
         // a held subset, batched so the executor can stage θ once
         // (§Perf opt 2). Encoding consumes the f32 results directly
         // (§Perf opt 1).
         let flat: Vec<usize> =
-            state.held_shards.iter().flat_map(|s| s.iter().copied()).collect();
+            epoch_state.held_shards.iter().flat_map(|s| s.iter().copied()).collect();
         let flat_grads = match exec.grad_shards(&theta, &flat) {
             Ok(g) => g,
             Err(e) => {
                 let _ = events.send(WorkerEvent::Failed {
                     worker: id,
+                    job,
                     iter,
                     reason: format!("grad_shards: {e}"),
                     fatal: false, // the loop continues: next task may succeed
@@ -126,9 +197,9 @@ pub fn run(ctx: WorkerContext) {
         // over its backing shards (after an elastic re-dimension a
         // subset can back several shards, or — when N grew past the
         // dataset's shard count — none, contributing exact zeros).
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(state.held.len());
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(epoch_state.held.len());
         let mut flat_iter = flat_grads.into_iter();
-        for backing in &state.held_shards {
+        for backing in &epoch_state.held_shards {
             match backing.len() {
                 0 => grads.push(vec![0.0f32; dim]),
                 1 => grads.push(flat_iter.next().unwrap()),
@@ -148,7 +219,7 @@ pub fn run(ctx: WorkerContext) {
         // emission), stamping each with its virtual completion time.
         let stamps = block_completion_stamps_unit(unit_work, &scheme, cycle_time);
         let mut elapsed_virtual = 0.0f64;
-        for (block_idx, r) in state.ranges.iter().enumerate() {
+        for (block_idx, r) in epoch_state.ranges.iter().enumerate() {
             let coded = scheme.encode_block_range_f32(row, r, &grads);
             if let PacingMode::RealScaled { ns_per_unit } = pacing {
                 let wait_units = stamps[block_idx] - elapsed_virtual;
@@ -160,6 +231,7 @@ pub fn run(ctx: WorkerContext) {
             }
             if events
                 .send(WorkerEvent::Block(BlockContribution {
+                    job,
                     iter,
                     epoch,
                     worker: id,

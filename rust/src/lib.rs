@@ -8,10 +8,11 @@
 //! The system is a three-layer stack plus an adaptive control loop:
 //!
 //! * **Layer 3 (this crate)** — the coordination contribution: a
-//!   master/worker runtime ([`coordinator`]) that streams *coded* gradient
-//!   blocks from workers with heterogeneous, random speeds and decodes each
-//!   block as soon as enough workers have delivered it, plus the paper's full
-//!   coding-parameter optimizer suite ([`optimizer`]).
+//!   **multi-job worker-pool runtime** ([`coordinator`]) that streams
+//!   *coded* gradient blocks from workers with heterogeneous, random
+//!   speeds and decodes each block as soon as enough workers have
+//!   delivered it, plus the paper's full coding-parameter optimizer
+//!   suite ([`optimizer`]).
 //! * **Layer 2 (JAX, build time)** — per-worker shard-gradient compute
 //!   graphs, AOT-lowered to HLO text under `artifacts/` and executed from
 //!   Rust via PJRT ([`runtime`]; requires the `pjrt` cargo feature — the
@@ -48,13 +49,42 @@
 //!   behind a cooldown) and *how* (cheap closed-form `x^(f)` re-solve
 //!   on the selected model's order stats, or the full stochastic
 //!   subgradient method warm-started from the live partition);
-//! * [`coordinator::trainer`] is decomposed into a setup phase
-//!   (`TrainSession::start`) and an iteration loop that can hot-swap a
-//!   re-optimized scheme between iterations without respawning workers or
-//!   dropping an iteration;
+//! * a job's iteration loop can hot-swap a re-optimized scheme between
+//!   iterations without respawning workers or dropping an iteration;
 //! * [`sim::multi`] plays out multi-iteration, *non-stationary* runs in
 //!   virtual time so adaptive-vs-static can be evaluated at scale without
 //!   spawning threads.
+//!
+//! ## The pool layer (multi-job coordination)
+//!
+//! The coordinator's public API is built around two types
+//! ([`coordinator::pool`]):
+//!
+//! * [`coordinator::pool::WorkerPool`] owns the worker threads, the
+//!   membership registry, the channels and the **pooled** cycle-time
+//!   feed — redundancy is priced per cluster, not per job, and every
+//!   job's online estimator learns from every round's observations;
+//! * [`coordinator::pool::JobHandle`] is one tenant: its scheme epochs,
+//!   its `(job, epoch)`-keyed decode state, its adapt/re-dimension
+//!   loop, its model and report.
+//!
+//! Jobs are described by a builder ([`coordinator::pool::JobSpec`]):
+//!
+//! ```ignore
+//! let mut pool = WorkerPool::new(PoolConfig::new(8), schedule)?;
+//! JobSpec::new(spec_a, blocks_a).executor(factory_a).steps(150).submit(&mut pool)?;
+//! JobSpec::new(spec_b, blocks_b).executor(factory_b).steps(50)
+//!     .adaptive(AdaptiveConfig::default()).submit(&mut pool)?;
+//! let reports = pool.run_to_completion()?;
+//! ```
+//!
+//! The pool scheduler interleaves per-iteration broadcasts (fair
+//! round-robin, or deficit-fair in `unit_work`); every task and
+//! contribution is stamped with its `JobId`, cross-job codewords are
+//! dropped like stale epochs, and churn re-dimensions **every** job off
+//! one shared membership epoch. Single-job callers keep the classic
+//! facade: [`coordinator::trainer::train`] or a driveable
+//! [`coordinator::trainer::TrainSession`].
 //!
 //! ## The elastic layer (membership epochs)
 //!
@@ -124,9 +154,13 @@ pub mod util;
 pub mod prelude {
     pub use crate::coding::scheme::CodingScheme;
     pub use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveController};
+    pub use crate::coordinator::channel::JobId;
     pub use crate::coordinator::membership::{WorkerId, WorkerRegistry};
+    pub use crate::coordinator::pool::{
+        ElasticConfig, JobHandle, JobSpec, PoolConfig, ScheduleMode, WorkerPool,
+    };
     pub use crate::coordinator::straggler::StragglerSchedule;
-    pub use crate::coordinator::trainer::{ElasticConfig, TrainConfig, TrainSession, Trainer};
+    pub use crate::coordinator::trainer::{train, train_stationary, TrainConfig, TrainSession};
     pub use crate::distribution::fit::{FamilyPolicy, FittedModel};
     pub use crate::distribution::runtime_dist::RuntimeDistribution;
     pub use crate::distribution::{

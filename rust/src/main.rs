@@ -8,14 +8,19 @@
 //!                 drifting straggler distribution (optionally emits JSON).
 //! * `train`     — run coded distributed GD (host or PJRT backend), with
 //!                 optional mid-training drift and online re-optimization.
+//! * `multi`     — run several concurrent training jobs on ONE shared
+//!                 worker pool (the multi-job coordinator).
 //! * `artifacts` — list the AOT artifact manifest.
+//!
+//! Unknown or misspelled options are a hard error (`Args::check_unused`).
 
 use std::sync::Arc;
 
 use bcgc::cli::Args;
 use bcgc::coordinator::adaptive::AdaptiveConfig;
+use bcgc::coordinator::pool::{JobSpec, PoolConfig, ScheduleMode, WorkerPool};
 use bcgc::coordinator::straggler::StragglerSchedule;
-use bcgc::coordinator::trainer::{ElasticConfig, TrainConfig, Trainer};
+use bcgc::coordinator::trainer::{train, ElasticConfig, TrainConfig};
 use bcgc::coordinator::PacingMode;
 use bcgc::data::synthetic;
 use bcgc::distribution::fit::FamilyPolicy;
@@ -45,18 +50,22 @@ fn main() {
 }
 
 fn run(args: &Args) -> Result<()> {
-    match args.subcommand() {
+    let out = match args.subcommand() {
         Some("optimize") => cmd_optimize(args),
         Some("compare") => cmd_compare(args),
         Some("simulate") => cmd_simulate(args),
         Some("adaptive") => cmd_adaptive(args),
         Some("train") => cmd_train(args),
+        Some("multi") => cmd_multi(args),
         Some("artifacts") => cmd_artifacts(args),
         _ => {
             print_usage();
-            Ok(())
+            return Ok(());
         }
-    }
+    };
+    // A command that succeeded while silently ignoring options the user
+    // passed is a lie — typos fail loudly instead.
+    out.and_then(|()| args.check_unused())
 }
 
 fn print_usage() {
@@ -76,6 +85,9 @@ fn print_usage() {
                        --family auto|shifted-exp|weibull|empirical]]\n\
                       [--elastic [--churn-at K --churn-count 1 --arrive-at K2 --arrive-count 1\n\
                        --churn-threshold 1]]  (elastic pool: re-dimensions N on membership change)\n\
+           multi      --jobs 2 --workers 8 [--steps 60 --steps2 S --lr 2e-3 --mu 1e-3 --t0 50\n\
+                       --schedule round_robin|weighted --adaptive --elastic --churn-at K\n\
+                       --config file.toml]  (K concurrent jobs on ONE shared worker pool)\n\
            artifacts  [--dir artifacts]\n"
     );
 }
@@ -189,6 +201,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_adaptive(args: &Args) -> Result<()> {
+    // Phase-1 Weibull knobs are only read with `--dist2 weibull`;
+    // declared so they are inert (not "unknown") without it.
+    args.declare(&["shape2", "scale2", "shift2"]);
     let n: usize = args.get("workers", 20)?;
     let coords: usize = args.get("coords", 20_000)?;
     let iters: usize = args.get("iters", 450)?;
@@ -252,6 +267,9 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let sim_cfg = MultiSimConfig { iters, seed, comm_latency: args.get("comm-latency", 0.0)? };
+    let json_path = args.value("json").map(str::to_string);
+    // Every option is parsed by now: fail on typos BEFORE simulating.
+    args.check_unused()?;
     let cmp = compare_adaptive_vs_static(
         &spec,
         &initial,
@@ -263,19 +281,41 @@ fn cmd_adaptive(args: &Args) -> Result<()> {
     )?;
 
     print!("{}", cmp.render_report());
-    if let Some(path) = args.value("json") {
+    if let Some(path) = json_path {
         let json = bcgc::bench_harness::stamp_bench_meta(
             &cmp.render_json(),
             seed,
             &format!("N={n} L={coords} iters={iters} shift_at={shift_at} family={family_arg}"),
         );
-        std::fs::write(path, json)?;
+        std::fs::write(&path, json)?;
         println!("wrote {path}");
     }
     Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // Documented options read only inside conditional branches below —
+    // declared up front so an inert-but-valid flag is not diagnosed as
+    // a typo by check_unused.
+    args.declare(&[
+        "features",
+        "hidden",
+        "classes",
+        "artifact-dir",
+        "entry",
+        "mu2",
+        "t0-2",
+        "ns-per-unit",
+        "family",
+        "adapt-window",
+        "adapt-every",
+        "adapt-cooldown",
+        "adapt-min-samples",
+        "drift-threshold",
+        "churn-threshold",
+        "churn-count",
+        "arrive-count",
+    ]);
     let n: usize = args.get("workers", 8)?;
     let steps: usize = args.get("steps", 100)?;
     let lr: f64 = args.get("lr", 0.02)?;
@@ -409,7 +449,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         cfg.elastic = Some(e);
     }
-    let report = Trainer::with_schedule(cfg, schedule, factory).run()?;
+    // Every option is parsed by now: fail on typos BEFORE training.
+    args.check_unused()?;
+    let report = train(cfg, schedule, factory)?;
     println!("{}", report.summary());
     if report.scheme_epochs.len() > 1 {
         println!("\nscheme epochs:\n{}", report.render_epochs());
@@ -418,6 +460,163 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("\nmembership:\n{}", report.render_membership());
     }
     println!("\nloss curve:\n{}", report.render_loss_curve());
+    Ok(())
+}
+
+/// `bcgc multi` — several concurrent training jobs multiplexed over
+/// ONE shared worker pool. Each job is a host-backend MLP over its own
+/// synthetic dataset and its own `x^(f)` scheme; the pool interleaves
+/// per-iteration broadcasts under the chosen scheduler and reports
+/// per-job summaries plus the shared virtual makespan.
+fn cmd_multi(args: &Args) -> Result<()> {
+    use bcgc::distribution::CycleTimeDistribution;
+    // Pool/job dimensioning: inline flags, optionally seeded from a
+    // `[pool]`/`[jobs]` config file.
+    let cfg_file = args
+        .value("config")
+        .map(|p| bcgc::config::ExperimentConfig::load(std::path::Path::new(p)))
+        .transpose()?;
+    let pool_cfg_file = cfg_file.as_ref().and_then(|c| c.pool.clone());
+    let jobs_cfg_file = cfg_file.as_ref().and_then(|c| c.jobs.clone());
+
+    let n: usize = args.get(
+        "workers",
+        pool_cfg_file.as_ref().and_then(|p| p.workers).unwrap_or(8),
+    )?;
+    let jobs: usize =
+        args.get("jobs", jobs_cfg_file.as_ref().map(|j| j.count).unwrap_or(2))?;
+    if jobs == 0 {
+        return Err(bcgc::Error::InvalidArgument("--jobs must be ≥ 1".into()));
+    }
+    let steps0: usize = args.get(
+        "steps",
+        jobs_cfg_file.as_ref().and_then(|j| j.steps.first().copied()).unwrap_or(60),
+    )?;
+    let steps2: usize = args.get("steps2", 0)?;
+    let lr: f64 = args.get("lr", 2e-3)?;
+    let mu: f64 = args.get("mu", 1e-3)?;
+    let t0: f64 = args.get("t0", 50.0)?;
+    let seed: u64 = args.get("seed", 2021)?;
+    let schedule_arg = args
+        .value("schedule")
+        .map(str::to_string)
+        .or_else(|| pool_cfg_file.as_ref().map(|p| p.schedule.clone()))
+        .unwrap_or_else(|| "round_robin".into());
+    let schedule_mode = ScheduleMode::parse(&schedule_arg).ok_or_else(|| {
+        bcgc::Error::InvalidArgument(format!(
+            "--schedule {schedule_arg:?}: expected round_robin|weighted"
+        ))
+    })?;
+    // Per-job step counts: [jobs].steps from the config, then --steps
+    // (all jobs) with --steps2 overriding job 1.
+    let mut steps: Vec<usize> = (0..jobs)
+        .map(|j| {
+            jobs_cfg_file
+                .as_ref()
+                .and_then(|c| c.steps.get(j).copied())
+                .unwrap_or(steps0)
+        })
+        .collect();
+    if steps2 > 0 && jobs >= 2 {
+        steps[1] = steps2;
+    }
+
+    let dist = ShiftedExponential::new(mu, t0);
+    let mut pcfg = PoolConfig::new(n);
+    pcfg.seed = seed;
+    pcfg.schedule = schedule_mode;
+    if args.flag("elastic") || args.value("churn-at").is_some() {
+        let mut e = ElasticConfig {
+            churn_threshold: args.get("churn-threshold", 1)?,
+            ..Default::default()
+        };
+        if args.value("churn-at").is_some() {
+            let at: usize = args.require("churn-at")?;
+            let count: usize = args.get("churn-count", 1)?;
+            if count >= n {
+                return Err(bcgc::Error::InvalidArgument(
+                    "--churn-count must leave at least one worker".into(),
+                ));
+            }
+            e.departures.push((at, count));
+        }
+        pcfg.elastic = Some(e);
+    }
+    let adaptive = args.flag("adaptive");
+    args.declare(&["churn-threshold", "churn-count"]);
+    // Every option is parsed by now: fail on typos BEFORE training.
+    args.check_unused()?;
+    let mut pool = WorkerPool::new(pcfg, StragglerSchedule::stationary(Box::new(dist.clone())))?;
+
+    let (d, h, c, shard) = (32usize, 64usize, 10usize, 64usize);
+    let dim = host::HostExecutor::mlp_dim(d, h, c);
+    println!(
+        "pool   : N={n} workers, schedule={}, stragglers {}",
+        schedule_mode.name(),
+        dist.label()
+    );
+    for (j, &job_steps) in steps.iter().enumerate() {
+        // Each tenant owns its dataset (distinct seed) and its own
+        // x^(f) scheme solved for the shared pool's N.
+        let job_seed = seed.wrapping_add(1 + j as u64);
+        let ds = synthetic::classification(d, c, shard * n, n, 0.2, job_seed)?;
+        let factory = host_factory(ds, host::HostModel::Mlp { hidden: h });
+        let spec = ProblemSpec::new(n, dim, shard * n, 1.0);
+        let mut rng = Rng::new(job_seed);
+        let blocks = solver::solve(
+            &spec,
+            &dist,
+            SchemeKind::ClosedFormFreq,
+            &SolveOptions::fast(),
+            &mut rng,
+        )?;
+        let mut js = JobSpec::new(spec, blocks)
+            .steps(job_steps)
+            .lr(lr)
+            .eval_every((job_steps / 4).max(1))
+            .seed(job_seed)
+            .executor(factory);
+        if adaptive {
+            js = js.adaptive(AdaptiveConfig::default());
+        }
+        let id = js.submit(&mut pool)?;
+        println!("job {id}  : {d}-feature {c}-class MLP, L={dim}, {job_steps} steps");
+    }
+
+    pool.run_all()?;
+    let makespan = pool.virtual_makespan();
+    let rounds = pool.rounds();
+    let cross = pool.cross_job_dropped();
+    let reports = pool.finish()?;
+
+    let mut table = Table::new(&[
+        "job", "steps", "epochs", "E[virt]/iter", "loss first→last", "cache hit",
+    ]);
+    for (j, r) in reports.iter().enumerate() {
+        table.row(&[
+            j.to_string(),
+            r.steps().to_string(),
+            r.epochs().to_string(),
+            format!("{:.1}", r.virtual_runtime_stats().mean()),
+            format!(
+                "{}→{}",
+                r.first_loss().map(|l| format!("{l:.3}")).unwrap_or_else(|| "-".into()),
+                r.final_loss().map(|l| format!("{l:.3}")).unwrap_or_else(|| "-".into()),
+            ),
+            format!("{}/{}", r.decode_cache_hits, r.decode_cache_hits + r.decode_cache_misses),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nshared pool: {rounds} rounds, virtual makespan {makespan:.0}, \
+         cross-job drops {cross}"
+    );
+    for (j, r) in reports.iter().enumerate() {
+        assert!(
+            r.iters.iter().all(|m| m.grad_norm.is_finite()),
+            "job {j} decoded a non-finite gradient"
+        );
+    }
     Ok(())
 }
 

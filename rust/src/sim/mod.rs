@@ -18,7 +18,8 @@ pub mod multi;
 
 pub use event_sim::{simulate_iteration, SimConfig, SimOutcome};
 pub use multi::{
-    compare_adaptive_vs_static, compare_elastic_vs_static, simulate_adaptive, simulate_elastic,
-    simulate_elastic_with_family, simulate_static, simulate_static_churn, AdaptiveComparison,
-    ChurnEvent, ChurnSchedule, ElasticComparison, MultiSimConfig, MultiSimReport,
+    compare_adaptive_vs_static, compare_elastic_vs_static, compare_shared_vs_split,
+    simulate_adaptive, simulate_elastic, simulate_elastic_with_family, simulate_static,
+    simulate_static_churn, AdaptiveComparison, ChurnEvent, ChurnSchedule, ElasticComparison,
+    MultiJobComparison, MultiSimConfig, MultiSimReport, SimJob,
 };

@@ -768,6 +768,227 @@ pub fn compare_elastic_vs_static(
     })
 }
 
+/// One virtual-time job for the shared-pool simulator: `coords`
+/// model coordinates trained for `steps` iterations. (`M` and `b` come
+/// from the pool spec; jobs may differ in size and length.)
+#[derive(Debug, Clone, Copy)]
+pub struct SimJob {
+    pub coords: usize,
+    pub steps: usize,
+}
+
+/// Shared-pool vs disjoint-split comparison: `K` jobs on one `N`-worker
+/// pool (per-iteration broadcasts interleaved round-robin, rounds
+/// serialized on the fleet) against the same `K` jobs on `K` disjoint
+/// pools of `N/K` workers each (running concurrently). Schemes are
+/// solved per arm for the arm's worker count, so the comparison is
+/// optimal-vs-optimal.
+///
+/// Makespans are virtual: the shared arm's is the **sum** of every
+/// round's completion time (one fleet, serialized rounds); the disjoint
+/// arm's is the **max** over pools of each pool's summed completion
+/// times (independent fleets in parallel).
+pub struct MultiJobComparison {
+    pub pool_n: usize,
+    pub split_n: usize,
+    pub jobs: Vec<SimJob>,
+    pub schedule_label: String,
+    /// Shared arm: total rounds and serialized virtual makespan.
+    pub shared_rounds: usize,
+    pub shared_makespan: f64,
+    /// Shared arm: each job's own summed completion time (Σ over its
+    /// iterations; the makespan is the sum over jobs).
+    pub shared_per_job: Vec<f64>,
+    /// Shared arm: each job's decode-cache `(hits, misses)` counters,
+    /// accumulated across all of its scheme epochs (empty for
+    /// virtual-time runs, which decode nothing).
+    pub shared_decode_cache: Vec<(u64, u64)>,
+    /// Disjoint arm: each half-pool's summed completion time.
+    pub disjoint_per_pool: Vec<f64>,
+}
+
+impl MultiJobComparison {
+    /// The disjoint arm's makespan: its slowest pool.
+    pub fn disjoint_makespan(&self) -> f64 {
+        self.disjoint_per_pool.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Makespan improvement of pooling over splitting, in percent
+    /// (positive = the shared pool finishes everything earlier).
+    pub fn improvement_pct(&self) -> f64 {
+        100.0 * (1.0 - self.shared_makespan / self.disjoint_makespan())
+    }
+
+    /// The standard human-readable report block.
+    pub fn render_report(&self) -> String {
+        let mut table = Table::new(&["arm", "workers/job", "makespan"]);
+        table.row(&[
+            format!("shared pool ({} jobs interleaved)", self.jobs.len()),
+            format!("{}", self.pool_n),
+            format!("{:.0}", self.shared_makespan),
+        ]);
+        table.row(&[
+            format!("disjoint split ({} pools)", self.jobs.len()),
+            format!("{}", self.split_n),
+            format!("{:.0}", self.disjoint_makespan()),
+        ]);
+        let mut out = table.render();
+        for (j, (job, total)) in self.jobs.iter().zip(self.shared_per_job.iter()).enumerate() {
+            out.push_str(&format!(
+                "job {j}: L={} steps={} shared Σ={:.0} disjoint Σ={:.0}\n",
+                job.coords, job.steps, total, self.disjoint_per_pool[j]
+            ));
+        }
+        out.push_str(&format!(
+            "\nshared pool vs disjoint split: {:.1}% makespan improvement\n",
+            self.improvement_pct()
+        ));
+        out
+    }
+
+    /// Serialize the comparison (hand-rolled JSON; no `serde` offline).
+    pub fn render_json(&self) -> String {
+        fn num(x: f64) -> String {
+            if x.is_finite() {
+                format!("{x:.6}")
+            } else {
+                "null".into()
+            }
+        }
+        let mut out = String::from("{\n");
+        out.push_str("  \"bench\": \"multi_job\",\n");
+        out.push_str(&format!("  \"n\": {},\n", self.pool_n));
+        out.push_str(&format!("  \"split_n\": {},\n", self.split_n));
+        out.push_str(&format!(
+            "  \"schedule\": \"{}\",\n",
+            self.schedule_label.replace('"', "\\\"")
+        ));
+        out.push_str("  \"jobs\": [");
+        for (i, j) in self.jobs.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("{{\"coords\": {}, \"steps\": {}}}", j.coords, j.steps));
+        }
+        out.push_str("],\n");
+        out.push_str(&format!(
+            "  \"shared\": {{\"rounds\": {}, \"makespan\": {}, \"per_job_total\": [{}], \
+             \"decode_cache\": [{}]}},\n",
+            self.shared_rounds,
+            num(self.shared_makespan),
+            self.shared_per_job.iter().map(|&v| num(v)).collect::<Vec<_>>().join(", "),
+            self.shared_decode_cache
+                .iter()
+                .map(|&(h, m)| format!("{{\"hits\": {h}, \"misses\": {m}}}"))
+                .collect::<Vec<_>>()
+                .join(", "),
+        ));
+        out.push_str(&format!(
+            "  \"disjoint\": {{\"makespan\": {}, \"per_pool_total\": [{}]}},\n",
+            num(self.disjoint_makespan()),
+            self.disjoint_per_pool.iter().map(|&v| num(v)).collect::<Vec<_>>().join(", "),
+        ));
+        out.push_str(&format!(
+            "  \"improvement_pct\": {}\n",
+            num(self.improvement_pct())
+        ));
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// Solve a job's `x^(f)` partition for a given worker count (uniform
+/// level-1 fallback for non-shifted-exp phase-0 models).
+fn solve_for(
+    spec: &ProblemSpec,
+    schedule: &StragglerSchedule,
+    coords: usize,
+) -> Result<BlockPartition> {
+    match schedule.dist_at(0).as_shifted_exp() {
+        Some(d) => x_freq_blocks(spec, d, coords),
+        None => {
+            let s = if spec.n > 1 { 1 } else { 0 };
+            Ok(BlockPartition::single_level(spec.n, s, coords))
+        }
+    }
+}
+
+/// Play out `K` jobs on one shared `spec.n`-worker pool (round-robin
+/// interleave, serialized rounds) and the same jobs on `K` disjoint
+/// `spec.n / K` pools, in virtual time with per-arm-optimal `x^(f)`
+/// schemes. `spec.n` must split evenly across the jobs.
+pub fn compare_shared_vs_split(
+    spec: &ProblemSpec,
+    jobs: &[SimJob],
+    schedule: &StragglerSchedule,
+    cfg: &MultiSimConfig,
+) -> Result<MultiJobComparison> {
+    let k = jobs.len();
+    if k == 0 {
+        return Err(Error::InvalidArgument("need at least one job".into()));
+    }
+    if spec.n % k != 0 || spec.n / k == 0 {
+        return Err(Error::InvalidArgument(format!(
+            "pool of {} workers cannot split evenly over {k} jobs",
+            spec.n
+        )));
+    }
+    let split_n = spec.n / k;
+    let sim_cfg = SimConfig { comm_latency: cfg.comm_latency };
+
+    // Shared arm: schemes solved at the pool's N; rounds serialized.
+    let shared_blocks: Vec<BlockPartition> = jobs
+        .iter()
+        .map(|j| solve_for(spec, schedule, j.coords))
+        .collect::<Result<_>>()?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut remaining: Vec<usize> = jobs.iter().map(|j| j.steps).collect();
+    let mut shared_per_job = vec![0.0f64; k];
+    let mut shared_rounds = 0usize;
+    let mut cursor = 0usize;
+    while remaining.iter().any(|&r| r > 0) {
+        // Fair round-robin over unfinished jobs.
+        while remaining[cursor] == 0 {
+            cursor = (cursor + 1) % k;
+        }
+        let j = cursor;
+        cursor = (cursor + 1) % k;
+        let times = schedule.dist_at(shared_rounds).sample_vec(spec.n, &mut rng);
+        let out = simulate_iteration(spec, &shared_blocks[j], &times, &sim_cfg);
+        shared_per_job[j] += out.completion_time;
+        remaining[j] -= 1;
+        shared_rounds += 1;
+    }
+    let shared_makespan: f64 = shared_per_job.iter().sum();
+
+    // Disjoint arm: schemes re-solved at N/K; pools run concurrently,
+    // each on its own stream.
+    let split_spec = spec.with_n(split_n);
+    let mut disjoint_per_pool = Vec::with_capacity(k);
+    for (j, job) in jobs.iter().enumerate() {
+        let blocks = solve_for(&split_spec, schedule, job.coords)?;
+        let mut rng = Rng::new(cfg.seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(j as u64 + 1)));
+        let mut total = 0.0f64;
+        for iter in 0..job.steps {
+            let times = schedule.dist_at(iter).sample_vec(split_n, &mut rng);
+            total += simulate_iteration(&split_spec, &blocks, &times, &sim_cfg).completion_time;
+        }
+        disjoint_per_pool.push(total);
+    }
+
+    Ok(MultiJobComparison {
+        pool_n: spec.n,
+        split_n,
+        jobs: jobs.to_vec(),
+        schedule_label: schedule.label(),
+        shared_rounds,
+        shared_makespan,
+        shared_per_job,
+        shared_decode_cache: Vec::new(),
+        disjoint_per_pool,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1118,6 +1339,49 @@ mod tests {
             &spec, &initial, &schedule, &churn, &cfg, 100, 60
         )
         .is_err());
+    }
+
+    #[test]
+    fn shared_pool_beats_disjoint_split_on_asymmetric_jobs() {
+        // Two tenants of unequal length: the disjoint split strands a
+        // half-pool once the short job finishes, while the shared pool
+        // reassigns all N workers to the long job's remaining rounds.
+        let spec = ProblemSpec::paper_default(8, 800);
+        let schedule =
+            StragglerSchedule::stationary(Box::new(ShiftedExponential::new(1e-3, 50.0)));
+        let jobs = [SimJob { coords: 800, steps: 90 }, SimJob { coords: 800, steps: 30 }];
+        let cfg = MultiSimConfig { iters: 0, seed: 17, comm_latency: 0.0 };
+        let cmp = compare_shared_vs_split(&spec, &jobs, &schedule, &cfg).unwrap();
+        assert_eq!(cmp.split_n, 4);
+        assert_eq!(cmp.shared_rounds, 120, "every job ran all its steps");
+        assert!(
+            (cmp.shared_makespan - cmp.shared_per_job.iter().sum::<f64>()).abs() < 1e-9,
+            "serialized rounds: makespan = Σ per-job totals"
+        );
+        assert!(cmp.disjoint_makespan() >= cmp.disjoint_per_pool[1]);
+        assert!(
+            cmp.shared_makespan < cmp.disjoint_makespan(),
+            "pooling must win on a 3:1 step split: shared {} vs disjoint {}",
+            cmp.shared_makespan,
+            cmp.disjoint_makespan()
+        );
+        assert!(cmp.improvement_pct() > 10.0, "{}", cmp.improvement_pct());
+        let json = cmp.render_json();
+        assert!(json.contains("\"bench\": \"multi_job\""));
+        assert!(json.contains("\"improvement_pct\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(cmp.render_report().contains("makespan improvement"));
+    }
+
+    #[test]
+    fn shared_vs_split_rejects_uneven_pools() {
+        let spec = ProblemSpec::paper_default(9, 800);
+        let schedule =
+            StragglerSchedule::stationary(Box::new(ShiftedExponential::new(1e-3, 50.0)));
+        let jobs = [SimJob { coords: 800, steps: 10 }, SimJob { coords: 800, steps: 10 }];
+        let cfg = MultiSimConfig { iters: 0, seed: 3, comm_latency: 0.0 };
+        assert!(compare_shared_vs_split(&spec, &jobs, &schedule, &cfg).is_err());
+        assert!(compare_shared_vs_split(&spec, &[], &schedule, &cfg).is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use bcgc::coordinator::adaptive::AdaptiveConfig;
 use bcgc::coordinator::straggler::StragglerSchedule;
-use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+use bcgc::coordinator::trainer::{train, train_stationary, TrainConfig};
 use bcgc::data::synthetic;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
 use bcgc::optimizer::blocks::BlockPartition;
@@ -47,7 +47,7 @@ fn threaded_trainer_hot_swaps_mid_training_without_dropping_iterations() {
     });
     let schedule =
         StragglerSchedule::stationary(Box::new(d0.clone())).then(shift_at, Box::new(d1.clone()));
-    let report = Trainer::with_schedule(cfg, schedule, factory).run().unwrap();
+    let report = train(cfg, schedule, factory).unwrap();
 
     // No iteration dropped: every step ran and decoded a full gradient.
     assert_eq!(report.steps(), steps);
@@ -104,8 +104,7 @@ fn static_run_records_exactly_one_epoch() {
     cfg.steps = 8;
     cfg.eval_every = 0;
     cfg.seed = 5;
-    let report = Trainer::new(cfg, Box::new(ShiftedExponential::new(1e-3, 50.0)), factory)
-        .run()
+    let report = train_stationary(cfg, Box::new(ShiftedExponential::new(1e-3, 50.0)), factory)
         .unwrap();
     assert_eq!(report.epochs(), 1);
     assert_eq!(report.stale_epoch_total(), 0);

@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+use bcgc::coordinator::trainer::{train_stationary, TrainConfig};
 use bcgc::coordinator::PacingMode;
 use bcgc::data::synthetic;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
@@ -36,7 +36,7 @@ fn run_once(
     cfg.eval_every = (steps / 4).max(1);
     cfg.seed = seed;
     cfg.dead_workers = dead;
-    Trainer::new(cfg, Box::new(ShiftedExponential::new(1e-3, 50.0)), factory).run().unwrap()
+    train_stationary(cfg, Box::new(ShiftedExponential::new(1e-3, 50.0)), factory).unwrap()
 }
 
 #[test]
@@ -105,9 +105,7 @@ fn stalls_are_detected_not_hung() {
     cfg.dead_workers = vec![2];
     cfg.seed = 9;
     cfg.stall_timeout = std::time::Duration::from_millis(500);
-    let err = Trainer::new(cfg, Box::new(Deterministic::new(1.0)), factory)
-        .run()
-        .unwrap_err();
+    let err = train_stationary(cfg, Box::new(Deterministic::new(1.0)), factory).unwrap_err();
     let msg = format!("{err}");
     assert!(msg.contains("unrecoverable") || msg.contains("stalled"), "{msg}");
 }
@@ -126,7 +124,7 @@ fn real_pacing_mode_runs() {
     cfg.seed = 13;
     // Tiny scale so the test stays fast but sleeps actually happen.
     cfg.pacing = PacingMode::RealScaled { ns_per_unit: 0.05 };
-    let report = Trainer::new(cfg, Box::new(Deterministic::new(1.0)), factory).run().unwrap();
+    let report = train_stationary(cfg, Box::new(Deterministic::new(1.0)), factory).unwrap();
     assert_eq!(report.steps(), 5);
 }
 
@@ -152,8 +150,26 @@ fn eval_every_zero_disables_loss_curve() {
     cfg.steps = 4;
     cfg.eval_every = 0;
     let report =
-        Trainer::new(cfg, Box::new(Deterministic::new(1.0)), factory).run().unwrap();
+        train_stationary(cfg, Box::new(Deterministic::new(1.0)), factory).unwrap();
     assert!(report.loss_curve.is_empty());
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_trainer_shim_still_runs() {
+    // The pre-pool `Trainer` survives as a shim for one release; it
+    // must keep producing the same kind of report as `train()`.
+    use bcgc::coordinator::trainer::Trainer;
+    let n = 4;
+    let (ds, dim) = mlp_setup(n, 29);
+    let factory = host_factory(ds, HostModel::Mlp { hidden: 16 });
+    let spec = ProblemSpec::new(n, dim, 16 * n, 1.0);
+    let mut cfg = TrainConfig::new(spec, BlockPartition::single_level(n, 1, dim));
+    cfg.steps = 3;
+    cfg.eval_every = 0;
+    cfg.seed = 29;
+    let report = Trainer::new(cfg, Box::new(Deterministic::new(1.0)), factory).run().unwrap();
+    assert_eq!(report.steps(), 3);
 }
 
 #[test]
@@ -174,9 +190,7 @@ fn decoded_gradient_norm_matches_direct_sum() {
     cfg.eval_every = 0;
     cfg.init_scale = 0.0; // θ0 = 0
     cfg.seed = 23;
-    let report = Trainer::new(cfg, Box::new(Deterministic::new(1.0)), factory)
-        .run()
-        .unwrap();
+    let report = train_stationary(cfg, Box::new(Deterministic::new(1.0)), factory).unwrap();
 
     let mut exec = HostExecutor::new(ds, HostModel::Mlp { hidden: 16 }).unwrap();
     let theta0 = vec![0.0f32; dim];

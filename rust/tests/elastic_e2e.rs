@@ -8,7 +8,7 @@
 use bcgc::coordinator::membership::MemberStatus;
 use bcgc::coordinator::metrics::MembershipEvent;
 use bcgc::coordinator::straggler::StragglerSchedule;
-use bcgc::coordinator::trainer::{ElasticConfig, TrainConfig, TrainSession, Trainer};
+use bcgc::coordinator::trainer::{train, ElasticConfig, TrainConfig, TrainSession};
 use bcgc::data::synthetic;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
 use bcgc::optimizer::closed_form::x_freq_blocks;
@@ -51,7 +51,7 @@ fn shrinking_the_pool_by_two_redimensions_and_completes_every_iteration() {
         arrivals: vec![(25, 1)],
     });
     let schedule = StragglerSchedule::stationary(Box::new(dist));
-    let report = Trainer::with_schedule(cfg, schedule, factory).run().unwrap();
+    let report = train(cfg, schedule, factory).unwrap();
 
     // Every iteration ran and decoded a full gradient.
     assert_eq!(report.steps(), steps);
@@ -130,7 +130,7 @@ fn departure_below_threshold_is_absorbed_as_a_dead_row_then_rebound() {
         arrivals: vec![],
     });
     let schedule = StragglerSchedule::stationary(Box::new(dist));
-    let report = Trainer::with_schedule(cfg, schedule, factory).run().unwrap();
+    let report = train(cfg, schedule, factory).unwrap();
 
     assert_eq!(report.steps(), steps);
     assert!(report.iters.iter().all(|m| m.grad_norm.is_finite()));

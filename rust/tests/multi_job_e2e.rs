@@ -1,0 +1,213 @@
+//! Multi-job coordinator, end to end: several training jobs share ONE
+//! worker pool with exact per-job gradient decode and full isolation —
+//! one tenant's trouble (executor failures, its own stragglers) never
+//! stalls or corrupts another tenant's quorum, and pool-level churn
+//! re-dimensions every job's scheme off the shared membership epoch.
+//! Complements the master-level cross-job drop test
+//! (`rust/src/coordinator/master.rs`) and the virtual-time
+//! shared-vs-split comparison (`rust/src/sim/multi.rs`).
+
+use std::sync::Arc;
+
+use bcgc::coordinator::metrics::MembershipEvent;
+use bcgc::coordinator::pool::{ElasticConfig, JobSpec, PoolConfig, WorkerPool};
+use bcgc::coordinator::straggler::StragglerSchedule;
+use bcgc::data::synthetic;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::optimizer::closed_form::x_freq_blocks;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::runtime::host::{HostExecutor, HostModel};
+use bcgc::runtime::{host_factory, ExecutorFactory, GradExecutor};
+
+fn stationary(mu: f64) -> StragglerSchedule {
+    StragglerSchedule::stationary(Box::new(ShiftedExponential::new(mu, 50.0)))
+}
+
+#[test]
+fn two_jobs_decode_their_own_exact_gradients_on_one_pool() {
+    // Two tenants with different models and datasets, θ0 = 0 for both:
+    // each job's first decoded gradient must equal the direct sum over
+    // its OWN dataset's shards — any cross-job codeword leakage would
+    // corrupt the match.
+    let n = 4usize;
+    let seed = 31u64;
+
+    let ds_a = synthetic::classification(8, 4, 16 * n, n, 0.2, seed).unwrap();
+    let dim_a = HostExecutor::mlp_dim(8, 16, 4);
+    let (ds_b, _) = synthetic::linear_regression(24, 16 * n, n, 0.05, seed + 1).unwrap();
+    let dim_b = 24usize;
+
+    let mut pool = WorkerPool::new(PoolConfig::new(n), stationary(1e-3)).unwrap();
+    let spec_a = ProblemSpec::new(n, dim_a, 16 * n, 1.0);
+    let mut sizes = vec![0usize; n];
+    sizes[1] = dim_a / 3;
+    sizes[3] = dim_a - dim_a / 3;
+    let a = JobSpec::new(spec_a, BlockPartition::new(sizes))
+        .steps(6)
+        .lr(2e-3)
+        .eval_every(3)
+        .seed(seed)
+        .init_scale(0.0)
+        .executor(host_factory(ds_a.clone(), HostModel::Mlp { hidden: 16 }))
+        .submit(&mut pool)
+        .unwrap();
+    let spec_b = ProblemSpec::new(n, dim_b, 16 * n, 1.0);
+    let b = JobSpec::new(spec_b, BlockPartition::single_level(n, 1, dim_b))
+        .steps(6)
+        .lr(5e-3)
+        .eval_every(3)
+        .seed(seed + 1)
+        .init_scale(0.0)
+        .executor(host_factory(ds_b.clone(), HostModel::LinearRegression))
+        .submit(&mut pool)
+        .unwrap();
+    assert_eq!((a, b), (0, 1), "job ids are allocated in submit order");
+
+    pool.run_all().unwrap();
+    assert_eq!(pool.rounds(), 12, "6 + 6 interleaved iterations");
+    assert_eq!(pool.cross_job_dropped(), 0);
+    // JobHandle metrics are readable mid-flight (before finish).
+    assert!(pool.job(0).cache_stats().1 >= 1, "job 0 decoded at least one block");
+    assert!(pool.job(0).done() && pool.job(1).done());
+    let reports = pool.finish().unwrap();
+
+    // Exact decode per job at θ0 = 0.
+    for (r, (ds, model, dim)) in reports.iter().zip([
+        (ds_a, HostModel::Mlp { hidden: 16 }, dim_a),
+        (ds_b, HostModel::LinearRegression, dim_b),
+    ]) {
+        let mut exec = HostExecutor::new(ds, model).unwrap();
+        let theta0 = vec![0.0f32; dim];
+        let mut g = vec![0.0f64; dim];
+        for s in 0..n {
+            for (acc, v) in g.iter_mut().zip(exec.grad_shard(&theta0, s).unwrap()) {
+                *acc += v as f64;
+            }
+        }
+        let want: f64 = g.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!(want > 0.0);
+        assert!(
+            (r.iters[0].grad_norm - want).abs() < 1e-6 * (1.0 + want),
+            "decoded {} vs direct {}",
+            r.iters[0].grad_norm,
+            want
+        );
+        assert_eq!(r.steps(), 6);
+        assert!(r.iters.iter().all(|m| m.grad_norm.is_finite()));
+        assert_eq!(r.iters.iter().map(|m| m.stale_epoch_contributions).sum::<usize>(), 0);
+        // Both jobs converge on their own loss.
+        assert!(r.final_loss().unwrap() < r.first_loss().unwrap());
+    }
+}
+
+#[test]
+fn per_job_executor_failure_never_stalls_the_healthy_tenant() {
+    // Worker 3 cannot build job 1's executor (a per-tenant dependency
+    // problem): job 1's redundancy must absorb it like a straggler,
+    // job 0 must keep decoding with all four workers, and the shared
+    // thread must survive (transient, not fatal).
+    let n = 4usize;
+    let seed = 37u64;
+    let ds = synthetic::classification(8, 4, 16 * n, n, 0.2, seed).unwrap();
+    let dim = HostExecutor::mlp_dim(8, 16, 4);
+
+    let mut pool = WorkerPool::new(PoolConfig::new(n), stationary(1e-3)).unwrap();
+    let spec = ProblemSpec::new(n, dim, 16 * n, 1.0);
+    JobSpec::new(spec, BlockPartition::single_level(n, 0, dim))
+        .steps(8)
+        .lr(2e-3)
+        .eval_every(4)
+        .seed(seed)
+        .executor(host_factory(ds.clone(), HostModel::Mlp { hidden: 16 }))
+        .submit(&mut pool)
+        .unwrap();
+    let base = host_factory(ds, HostModel::Mlp { hidden: 16 });
+    let flaky: ExecutorFactory = Arc::new(move |worker| {
+        if worker == 3 {
+            Err(bcgc::Error::Runtime("injected: worker 3 lacks job 1's dataset".into()))
+        } else {
+            base(worker)
+        }
+    });
+    JobSpec::new(spec, BlockPartition::single_level(n, 1, dim))
+        .steps(8)
+        .lr(2e-3)
+        .eval_every(4)
+        .seed(seed + 1)
+        .executor(flaky)
+        .submit(&mut pool)
+        .unwrap();
+
+    pool.run_all().unwrap();
+    let reports = pool.finish().unwrap();
+    // Job 0 needed ALL FOUR workers every iteration (s = 0): the other
+    // tenant's broken worker must not have leaked into its quorum.
+    assert_eq!(reports[0].steps(), 8);
+    assert!(reports[0].iters.iter().all(|m| m.grad_norm.is_finite()));
+    // Job 1 completed every iteration coded around the failure, and a
+    // per-job transient failure is not a pool-level fatality.
+    assert_eq!(reports[1].steps(), 8);
+    assert!(reports[1].iters.iter().all(|m| m.grad_norm.is_finite()));
+    assert!(reports[1].failed_workers.is_empty());
+    assert!(reports[1].final_loss().unwrap() < reports[1].first_loss().unwrap());
+}
+
+#[test]
+fn pool_churn_redimensions_every_job_off_one_membership_epoch() {
+    // One scheduled departure: BOTH tenants must re-dimension N → N−1
+    // as fresh scheme epochs, complete every iteration, and keep their
+    // decode exact through the swap.
+    let n = 6usize;
+    let seed = 41u64;
+    let dist = ShiftedExponential::new(1e-3, 50.0);
+    let dim = HostExecutor::mlp_dim(8, 16, 4);
+
+    let mut pcfg = PoolConfig::new(n);
+    pcfg.seed = seed;
+    pcfg.elastic = Some(ElasticConfig {
+        churn_threshold: 1,
+        departures: vec![(5, 1)],
+        arrivals: vec![],
+    });
+    let mut pool = WorkerPool::new(pcfg, stationary(1e-3)).unwrap();
+    for j in 0..2u64 {
+        let ds = synthetic::classification(8, 4, 16 * n, n, 0.2, seed + j).unwrap();
+        let spec = ProblemSpec::new(n, dim, 16 * n, 1.0);
+        let blocks = x_freq_blocks(&spec, &dist, dim).unwrap();
+        JobSpec::new(spec, blocks)
+            .steps(16)
+            .lr(2e-3)
+            .eval_every(8)
+            .seed(seed + j)
+            .executor(host_factory(ds, HostModel::Mlp { hidden: 16 }))
+            .submit(&mut pool)
+            .unwrap();
+    }
+
+    pool.run_all().unwrap();
+    let reports = pool.finish().unwrap();
+    for (j, r) in reports.iter().enumerate() {
+        assert_eq!(r.steps(), 16, "job {j} dropped iterations through churn");
+        assert!(r.iters.iter().all(|m| m.grad_norm.is_finite()));
+        let redims: Vec<(usize, usize)> = r
+            .membership
+            .iter()
+            .filter_map(|m| match m.event {
+                MembershipEvent::Redimension { from_n, to_n, .. } => Some((from_n, to_n)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(redims, vec![(n, n - 1)], "job {j}: {redims:?}");
+        // The re-dimension is a fresh scheme epoch sized to the roster.
+        let last = r.scheme_epochs.last().unwrap();
+        assert_eq!(last.block_sizes.len(), n - 1, "job {j}");
+        assert_eq!(last.block_sizes.iter().sum::<usize>(), dim, "job {j}");
+        // Pool size trajectory: n before the swap, n−1 after.
+        assert_eq!(r.iters.first().unwrap().workers, n, "job {j}");
+        assert_eq!(r.iters.last().unwrap().workers, n - 1, "job {j}");
+        // Cache stats accumulated across both epochs (satellite:
+        // counters survive install_scheme).
+        assert!(r.decode_cache_misses >= 2, "job {j}: misses across 2 epochs");
+    }
+}

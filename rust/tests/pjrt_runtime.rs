@@ -106,7 +106,7 @@ fn coded_training_over_pjrt_end_to_end() {
     // executors running the AOT Pallas/JAX artifacts → decoded exact
     // gradient → descending loss.
     let Some(dir) = artifact_dir() else { return };
-    use bcgc::coordinator::trainer::{TrainConfig, Trainer};
+    use bcgc::coordinator::trainer::{train_stationary, TrainConfig};
     use bcgc::distribution::shifted_exp::ShiftedExponential;
     use bcgc::optimizer::runtime_model::ProblemSpec;
     use bcgc::optimizer::solver::{solve, SchemeKind, SolveOptions};
@@ -126,7 +126,7 @@ fn coded_training_over_pjrt_end_to_end() {
     cfg.lr = 5e-3;
     cfg.eval_every = 5;
     cfg.seed = 99;
-    let report = Trainer::new(cfg, Box::new(dist), factory).run().unwrap();
+    let report = train_stationary(cfg, Box::new(dist), factory).unwrap();
     let first = report.first_loss().unwrap();
     let last = report.final_loss().unwrap();
     assert!(last < first, "PJRT coded training must descend: {first} -> {last}");
