@@ -1,0 +1,101 @@
+//! Heterogeneity-aware vs pooled-i.i.d. re-solve on a 2-speed fleet —
+//! the perf-trajectory bench behind `BENCH_hetero.json`.
+//!
+//! Scenario: N = 20 workers, L = 10⁴ coordinates; half the fleet is a
+//! 4× slower machine generation (`T_slow = 4·T_fast` in distribution —
+//! stationary, so this is pure heterogeneity, not drift). Both arms run
+//! the same adaptive policy from the same naive uniform-s=1 partition
+//! with no prior reference, on one CRN cycle-time stream; the *only*
+//! difference is the sensing/actuation model:
+//!
+//! * **pooled** — the i.i.d. assumption the paper (and PRs 1–4)
+//!   baked in: the mixed fleet is fitted as ONE family and `x^(f)`
+//!   comes from pooled order statistics; every worker carries `1/N` of
+//!   the data;
+//! * **hetero** — per-worker windows keyed by stable `WorkerId`, the
+//!   re-solve computed from the fleet's non-identical order statistics
+//!   (`distribution::hetero`), and the dataset re-sharded in proportion
+//!   to fitted mean rates, so fast workers carry more data instead of
+//!   idling at the quorum barrier.
+//!
+//! The headline `improvement_pct` — how much faster the
+//! heterogeneity-aware arm runs after both arms have converged — must
+//! be strictly positive; the JSON artifact tracks it across PRs.
+//!
+//! Run: `cargo bench --bench hetero_fleet` (set `BENCH_OUT` to move the
+//! artifact; defaults to ./BENCH_hetero.json).
+
+use bcgc::bench_harness::{banner, stamp_bench_meta};
+use bcgc::coordinator::adaptive::{AdaptiveConfig, HeteroConfig};
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::sim::{compare_hetero_vs_pooled, MultiSimConfig};
+
+fn main() {
+    banner(
+        "Heterogeneous fleet — per-worker models + speed-weighted shards vs pooled i.i.d.",
+        "N=20 (10 fast + 10 slow, 4×), L=1e4; 400 iters, measured from 100; CRN across arms.",
+    );
+    let (n, n_slow, slow_factor, coords) = (20usize, 10usize, 4.0f64, 10_000usize);
+    let (iters, seed, measure_from) = (400usize, 2021u64, 100usize);
+    let spec = ProblemSpec::paper_default(n, coords);
+    let fast = ShiftedExponential::new(1e-2, 50.0);
+    let initial = BlockPartition::single_level(n, 1, coords);
+    let base = AdaptiveConfig {
+        window: 32 * n,
+        min_samples: 16 * n,
+        check_every: 10,
+        cooldown: 20,
+        drift_threshold: 0.2,
+        ..Default::default()
+    };
+    let hetero_cfg = HeteroConfig {
+        per_worker_window: 128,
+        min_worker_samples: 16,
+        speed_weighted_shards: true,
+    };
+    let cfg = MultiSimConfig { iters, seed, comm_latency: 0.0 };
+    let cmp = compare_hetero_vs_pooled(
+        &spec,
+        &initial,
+        &fast,
+        n_slow,
+        slow_factor,
+        &cfg,
+        base,
+        hetero_cfg,
+        measure_from,
+    )
+    .expect("comparison runs");
+    println!("fleet: {}\n", cmp.fleet_label);
+
+    let (p_after, h_after) = (cmp.pooled_after(), cmp.hetero_after());
+    print!("{}", cmp.render_report());
+
+    // Headline guarantees the artifact tracks a real effect.
+    assert!(
+        h_after < p_after,
+        "the heterogeneity-aware re-solve ({h_after:.1}) must strictly beat the \
+         pooled-i.i.d. baseline ({p_after:.1}) on a 2-speed fleet"
+    );
+    let min_fast = cmp.hetero_shard_counts[..n - n_slow].iter().min().copied().unwrap();
+    let max_slow = cmp.hetero_shard_counts[n - n_slow..].iter().max().copied().unwrap();
+    assert!(
+        max_slow < min_fast,
+        "speed-weighted actuation must load slow rows strictly lighter: {:?}",
+        cmp.hetero_shard_counts
+    );
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_hetero.json".into());
+    let stamped = stamp_bench_meta(
+        &cmp.render_json(),
+        seed,
+        &format!(
+            "N={n} L={coords} iters={iters} fleet=2speed({}fast+{n_slow}slow,{slow_factor}x)",
+            n - n_slow
+        ),
+    );
+    std::fs::write(&out, stamped).expect("write bench artifact");
+    println!("wrote {out}");
+}

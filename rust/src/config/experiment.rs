@@ -10,7 +10,7 @@
 use std::path::Path;
 
 use crate::config::toml_lite::TomlDoc;
-use crate::coordinator::adaptive::{AdaptiveConfig, ResolveStrategy};
+use crate::coordinator::adaptive::{AdaptiveConfig, HeteroConfig, ResolveStrategy};
 use crate::coordinator::pool::ScheduleMode;
 use crate::coordinator::straggler::StragglerSchedule;
 use crate::coordinator::trainer::ElasticConfig;
@@ -39,6 +39,9 @@ pub struct ExperimentConfig {
     pub drift: Option<DriftPhase>,
     /// Optional adaptive re-optimization policy (`[adaptive]` section).
     pub adaptive: Option<AdaptiveSettings>,
+    /// Optional heterogeneity-aware sensing/actuation (`[hetero]`
+    /// section; attaches to the adaptive policy).
+    pub hetero: Option<HeteroSettings>,
     /// Optional elastic worker-pool policy (`[elastic]` section).
     pub elastic: Option<ElasticSettings>,
     /// Optional shared-pool settings (`[pool]` section — multi-job runs).
@@ -193,7 +196,57 @@ impl AdaptiveSettings {
             method,
             family,
             strategy,
+            hetero: None,
         })
+    }
+}
+
+/// `[hetero]` section: heterogeneity-aware sensing/actuation, attached
+/// to the `[adaptive]` policy at build time.
+///
+/// ```toml
+/// [hetero]
+/// enabled = true
+/// per_worker_window = 128
+/// min_worker_samples = 24
+/// speed_weighted_shards = true
+/// ```
+#[derive(Debug, Clone)]
+pub struct HeteroSettings {
+    pub per_worker_window: usize,
+    pub min_worker_samples: usize,
+    pub speed_weighted_shards: bool,
+}
+
+impl HeteroSettings {
+    fn parse(doc: &TomlDoc) -> Result<Option<Self>> {
+        if !doc.get_bool("hetero.enabled").unwrap_or(false) {
+            return Ok(None);
+        }
+        let d = HeteroConfig::default();
+        let get = |key: &str, default: usize| -> Result<usize> {
+            match doc.get_i64(key) {
+                None => Ok(default),
+                Some(v) if v >= 2 => Ok(v as usize),
+                Some(_) => Err(Error::Config(format!("{key} must be ≥ 2"))),
+            }
+        };
+        Ok(Some(Self {
+            per_worker_window: get("hetero.per_worker_window", d.per_worker_window)?,
+            min_worker_samples: get("hetero.min_worker_samples", d.min_worker_samples)?,
+            speed_weighted_shards: doc
+                .get_bool("hetero.speed_weighted_shards")
+                .unwrap_or(d.speed_weighted_shards),
+        }))
+    }
+
+    /// The controller's hetero knobs.
+    pub fn build(&self) -> HeteroConfig {
+        HeteroConfig {
+            per_worker_window: self.per_worker_window,
+            min_worker_samples: self.min_worker_samples,
+            speed_weighted_shards: self.speed_weighted_shards,
+        }
     }
 }
 
@@ -402,6 +455,7 @@ impl Default for ExperimentConfig {
             distribution: DistConfig::ShiftedExp { mu: 1e-3, t0: 50.0 },
             drift: None,
             adaptive: None,
+            hetero: None,
             elastic: None,
             pool: None,
             jobs: None,
@@ -482,6 +536,14 @@ impl ExperimentConfig {
             settings.build()?; // validate eagerly so load-time errors are loud
             cfg.adaptive = Some(settings);
         }
+        cfg.hetero = HeteroSettings::parse(doc)?;
+        if cfg.hetero.is_some() && cfg.adaptive.is_none() {
+            return Err(Error::Config(
+                "[hetero] requires an enabled [adaptive] section (it is a sensing/actuation \
+                 extension of the adaptive policy)"
+                    .into(),
+            ));
+        }
         cfg.elastic = ElasticSettings::parse(doc)?;
         cfg.pool = PoolSettings::parse(doc)?;
         cfg.jobs = JobsSettings::parse(doc)?;
@@ -499,6 +561,19 @@ impl ExperimentConfig {
     /// The [`ProblemSpec`] these dimensions define.
     pub fn spec(&self) -> ProblemSpec {
         ProblemSpec::new(self.workers, self.coords, self.samples, self.cycles_per_coord)
+    }
+
+    /// The fully-assembled adaptive policy: `[adaptive]` with the
+    /// `[hetero]` extension attached when declared.
+    pub fn adaptive_config(&self) -> Result<Option<AdaptiveConfig>> {
+        match &self.adaptive {
+            None => Ok(None),
+            Some(a) => {
+                let mut cfg = a.build()?;
+                cfg.hetero = self.hetero.as_ref().map(HeteroSettings::build);
+                Ok(Some(cfg))
+            }
+        }
     }
 
     /// The straggler schedule: stationary, or two-phase when `[drift]`
@@ -625,6 +700,61 @@ mod tests {
         // without at_iter must not silently run stationary.
         let doc = TomlDoc::parse("[drift]\nkind = \"deterministic\"\nvalue = 1").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err(), "[drift] without at_iter");
+    }
+
+    #[test]
+    fn parse_hetero_section() {
+        let doc = TomlDoc::parse(
+            r#"
+            workers = 8
+            [adaptive]
+            enabled = true
+            [hetero]
+            enabled = true
+            per_worker_window = 96
+            min_worker_samples = 12
+            speed_weighted_shards = false
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        let h = cfg.hetero.as_ref().expect("hetero parsed");
+        assert_eq!(h.per_worker_window, 96);
+        assert_eq!(h.min_worker_samples, 12);
+        assert!(!h.speed_weighted_shards);
+        let built = cfg.adaptive_config().unwrap().expect("adaptive policy assembled");
+        let hc = built.hetero.expect("hetero attached to the adaptive policy");
+        assert_eq!(hc.per_worker_window, 96);
+        assert_eq!(hc.min_worker_samples, 12);
+        assert!(!hc.speed_weighted_shards);
+
+        // Defaults fill unset knobs; shards weighting defaults on.
+        let doc = TomlDoc::parse("[adaptive]\nenabled = true\n[hetero]\nenabled = true").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        let h = cfg.hetero.unwrap();
+        let d = HeteroConfig::default();
+        assert_eq!(h.per_worker_window, d.per_worker_window);
+        assert_eq!(h.min_worker_samples, d.min_worker_samples);
+        assert!(h.speed_weighted_shards);
+    }
+
+    #[test]
+    fn hetero_section_rejects_bad_values_and_requires_adaptive() {
+        for bad in [
+            "[adaptive]\nenabled = true\n[hetero]\nenabled = true\nper_worker_window = 1",
+            "[adaptive]\nenabled = true\n[hetero]\nenabled = true\nmin_worker_samples = 0",
+            // [hetero] without an adaptive policy has nothing to attach to.
+            "[hetero]\nenabled = true",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_doc(&doc).is_err(), "{bad}");
+        }
+        // Disabled by default; an adaptive-only config carries no hetero.
+        let doc = TomlDoc::parse("[adaptive]\nenabled = true\n[hetero]\nper_worker_window = 9")
+            .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert!(cfg.hetero.is_none(), "hetero requires enabled = true");
+        assert!(cfg.adaptive_config().unwrap().unwrap().hetero.is_none());
     }
 
     #[test]

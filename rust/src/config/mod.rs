@@ -8,7 +8,7 @@ pub mod experiment;
 pub mod toml_lite;
 
 pub use experiment::{
-    AdaptiveSettings, DistConfig, DriftPhase, ElasticSettings, ExperimentConfig, JobsSettings,
-    PoolSettings,
+    AdaptiveSettings, DistConfig, DriftPhase, ElasticSettings, ExperimentConfig, HeteroSettings,
+    JobsSettings, PoolSettings,
 };
 pub use toml_lite::{TomlValue, TomlDoc};

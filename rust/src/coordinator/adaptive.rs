@@ -23,16 +23,33 @@
 //!   the live partition (re-projected onto the feasible simplex first —
 //!   see [`resize_warm`]).
 //!
+//! **Heterogeneity-aware sensing** ([`HeteroConfig`], the `[hetero]`
+//! config section): on top of the pooled window, every observation can
+//! be stamped with the stable [`WorkerId`] that produced it
+//! ([`AdaptiveController::observe_rows`]) and kept in that worker's own
+//! window. A triggered re-solve then optimizes against a
+//! [`HeteroFleet`] of per-worker family-selected fits (workers below
+//! `min_worker_samples` fall back to the pooled fit) — the expected
+//! order statistics of *non-identically* distributed draws — and, with
+//! `speed_weighted_shards` on, reports per-row mean rates so the caller
+//! re-shards the dataset proportionally (fast workers carry more data).
+//!
 //! The caller (threaded trainer or the multi-iteration simulator)
 //! installs the returned partition as a new **scheme epoch**. On an
 //! elastic re-**dimension** the caller should also [`AdaptiveController::rebase`]
-//! the controller: the window is flushed (observations from the old
-//! epoch's `N` / unit work are not comparable) and the drift reference
-//! becomes the model the re-dimensioned scheme was solved for.
+//! the controller: the pooled and per-worker windows are flushed
+//! (observations from the old epoch's `N` / unit work are not
+//! comparable) and the drift reference becomes the model the
+//! re-dimensioned scheme was solved for.
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::membership::WorkerId;
 use crate::distribution::fit::{
     FamilyPolicy, FitMethod, FittedModel, OnlineEstimator, ShiftedExpEstimate,
 };
+use crate::distribution::hetero::HeteroFleet;
 use crate::distribution::runtime_dist::{OrderStatConfig, RuntimeDistribution};
 use crate::optimizer::blocks::BlockPartition;
 use crate::optimizer::closed_form;
@@ -51,6 +68,28 @@ pub enum ResolveStrategy {
     /// Stochastic projected subgradient, warm-started from the live
     /// partition (heavier, slightly better optima).
     Subgradient { iters: usize, playoff_trials: usize },
+}
+
+/// Heterogeneity-aware sensing/actuation knobs: per-worker cycle-time
+/// models on top of the pooled window, and speed-weighted shard loads.
+#[derive(Debug, Clone)]
+pub struct HeteroConfig {
+    /// Sliding-window capacity **per worker**, in observations (one per
+    /// round per worker).
+    pub per_worker_window: usize,
+    /// Below this many samples a worker's model falls back to the
+    /// pooled fit (its row behaves i.i.d. until evidence accumulates).
+    pub min_worker_samples: usize,
+    /// Re-shard the dataset proportionally to fitted mean rates on
+    /// every hetero re-solve, so fast workers carry more data instead
+    /// of idling at the quorum barrier.
+    pub speed_weighted_shards: bool,
+}
+
+impl Default for HeteroConfig {
+    fn default() -> Self {
+        Self { per_worker_window: 128, min_worker_samples: 24, speed_weighted_shards: true }
+    }
 }
 
 /// Tuning knobs for the adaptive engine.
@@ -74,6 +113,10 @@ pub struct AdaptiveConfig {
     pub family: FamilyPolicy,
     /// Re-solve strategy.
     pub strategy: ResolveStrategy,
+    /// Heterogeneity-aware sensing (`None` = the pooled i.i.d. model,
+    /// the paper's assumption): per-worker windows keyed by stable
+    /// [`WorkerId`], fleet-model re-solves, speed-weighted shard loads.
+    pub hetero: Option<HeteroConfig>,
 }
 
 impl Default for AdaptiveConfig {
@@ -87,6 +130,7 @@ impl Default for AdaptiveConfig {
             method: FitMethod::Mle,
             family: FamilyPolicy::Auto,
             strategy: ResolveStrategy::ClosedFormFreq,
+            hetero: None,
         }
     }
 }
@@ -95,16 +139,28 @@ impl Default for AdaptiveConfig {
 #[derive(Debug, Clone)]
 pub struct ReplanDecision {
     pub blocks: BlockPartition,
-    /// The fitted model the new partition is optimal for.
+    /// The fitted (pooled) model the drift detector tripped on.
     pub estimate: FittedModel,
     /// The relative drift that tripped the threshold.
     pub drift: f64,
+    /// Per-row fitted mean rates (`1/E[T]`, roster order) when the
+    /// re-solve was heterogeneity-aware with speed-weighted shards on —
+    /// the caller re-shards the dataset proportionally
+    /// ([`crate::coordinator::master::redistribute_shards_weighted`]).
+    pub fleet_rates: Option<Vec<f64>>,
 }
 
 /// Online drift detector + re-solver.
 pub struct AdaptiveController {
     cfg: AdaptiveConfig,
     window: OnlineEstimator,
+    /// Per-worker windows keyed by **stable id** (not row position), so
+    /// a churn rebind never blends one machine's history into another's.
+    /// Populated only under `cfg.hetero`.
+    per_worker: HashMap<WorkerId, OnlineEstimator>,
+    /// Latest row → stable-id binding (kept by [`Self::observe_rows`] /
+    /// [`Self::set_roster`]); orders the fleet fit by code row.
+    roster: Vec<WorkerId>,
     /// Model the live scheme was optimized for (None until known —
     /// with no reference, the first trustworthy fit triggers a re-plan).
     reference: Option<FittedModel>,
@@ -120,8 +176,20 @@ impl AdaptiveController {
         let mut cfg = cfg;
         cfg.window = cfg.window.max(2);
         cfg.min_samples = cfg.min_samples.max(2);
+        if let Some(h) = cfg.hetero.as_mut() {
+            h.per_worker_window = h.per_worker_window.max(2);
+            h.min_worker_samples = h.min_worker_samples.max(2);
+        }
         let window = OnlineEstimator::new(cfg.window, cfg.method);
-        Self { cfg, window, reference: None, last_swap: None, swaps: 0 }
+        Self {
+            cfg,
+            window,
+            per_worker: HashMap::new(),
+            roster: Vec::new(),
+            reference: None,
+            last_swap: None,
+            swaps: 0,
+        }
     }
 
     /// Seed the reference with the shifted-exp parameters the initial
@@ -141,14 +209,60 @@ impl AdaptiveController {
         c
     }
 
-    /// Feed one iteration's observed cycle times.
+    /// Feed one iteration's observed cycle times with no worker
+    /// identity — pooled sensing only (the pre-hetero behavior; the
+    /// per-worker windows see nothing).
     pub fn observe(&mut self, times: &[f64]) {
         self.window.extend(times);
     }
 
-    /// Observations currently in the window.
+    /// Feed one iteration's observed cycle times **stamped with the
+    /// stable worker ids** that produced them: `times[row]` was
+    /// measured on worker `roster[row]`. The pooled window sees every
+    /// sample; under `[hetero]` each sample also lands in its worker's
+    /// own id-keyed window, so a churn rebind that hands row `r` to a
+    /// different machine never blends the two histories.
+    pub fn observe_rows(&mut self, times: &[f64], roster: &[WorkerId]) {
+        debug_assert_eq!(times.len(), roster.len(), "one cycle time per rostered row");
+        self.window.extend(times);
+        self.roster.clear();
+        self.roster.extend_from_slice(roster);
+        let Some(h) = self.cfg.hetero.as_ref() else { return };
+        let (cap, method) = (h.per_worker_window, self.cfg.method);
+        for (&t, &id) in times.iter().zip(roster.iter()) {
+            self.per_worker
+                .entry(id)
+                .or_insert_with(|| OnlineEstimator::new(cap, method))
+                .push(t);
+        }
+    }
+
+    /// Record the live row → stable-id binding without feeding samples
+    /// (e.g. right after a rebind, before the first post-churn round).
+    pub fn set_roster(&mut self, roster: &[WorkerId]) {
+        self.roster.clear();
+        self.roster.extend_from_slice(roster);
+    }
+
+    /// Observations currently in the pooled window.
     pub fn observations(&self) -> usize {
         self.window.len()
+    }
+
+    /// Observations currently in worker `id`'s own window (0 when the
+    /// id was never observed or hetero sensing is off).
+    pub fn worker_observations(&self, id: WorkerId) -> usize {
+        self.per_worker.get(&id).map(OnlineEstimator::len).unwrap_or(0)
+    }
+
+    /// Family-selected fit of worker `id`'s own window, when it holds
+    /// at least `[hetero].min_worker_samples` observations.
+    pub fn worker_fit(&self, id: WorkerId) -> Option<FittedModel> {
+        let h = self.cfg.hetero.as_ref()?;
+        self.per_worker
+            .get(&id)
+            .filter(|est| est.len() >= h.min_worker_samples)
+            .and_then(|est| est.fit_model(self.cfg.family))
     }
 
     /// The current windowed family-selected fit, if the window supports
@@ -157,13 +271,104 @@ impl AdaptiveController {
         self.window.fit_model(self.cfg.family)
     }
 
-    /// Epoch-swap hook for elastic re-dimensions: flushes the window —
-    /// observations recorded under the previous epoch's `N` / unit work
-    /// would bias the first post-churn fits toward the old regime — and
-    /// rebases the drift reference on the model the re-dimensioned
-    /// scheme was solved for (kept unchanged when `None`).
+    /// Row-ordered per-worker fitted models for `roster`: each worker's
+    /// own family-selected fit once its window passes
+    /// `[hetero].min_worker_samples`, the pooled fit below that. `None`
+    /// unless hetero sensing is on and at least the pooled fallback (or
+    /// every per-worker fit) is available.
+    pub fn fleet_models_for(&self, roster: &[WorkerId]) -> Option<Vec<FittedModel>> {
+        self.fleet_models_inner(roster).map(|(models, _)| models)
+    }
+
+    /// The one implementation of the per-worker-or-pooled fallback
+    /// policy; the bool reports whether ANY row carried its own fit
+    /// (false = the fleet is the pooled i.i.d. special case).
+    fn fleet_models_inner(&self, roster: &[WorkerId]) -> Option<(Vec<FittedModel>, bool)> {
+        self.cfg.hetero.as_ref()?;
+        if roster.is_empty() {
+            return None;
+        }
+        let pooled = self.current_fit();
+        let mut models = Vec::with_capacity(roster.len());
+        let mut any_worker_fit = false;
+        for &id in roster {
+            match self.worker_fit(id) {
+                Some(m) => {
+                    any_worker_fit = true;
+                    models.push(m);
+                }
+                None => match &pooled {
+                    Some(p) => models.push(p.clone()),
+                    None => return None,
+                },
+            }
+        }
+        Some((models, any_worker_fit))
+    }
+
+    /// Per-row fitted mean rates `1/E[T]` for speed-weighted shard
+    /// actuation, in `roster` order. `None` unless `[hetero]` is on
+    /// with `speed_weighted_shards` and at least one worker carries its
+    /// own fit (an all-pooled fleet is i.i.d. — nothing to weight).
+    pub fn fleet_rates_for(&self, roster: &[WorkerId]) -> Option<Vec<f64>> {
+        self.fleet_plan_for(roster).and_then(|(_, rates)| rates)
+    }
+
+    /// The full heterogeneity-aware re-solve plan for `roster`: the
+    /// fleet model to optimize against, plus (when speed-weighted shard
+    /// actuation is on and per-worker evidence exists) the raw per-row
+    /// rates the caller re-shards with. `None` when hetero sensing is
+    /// off or no fit is available — callers fall back to the pooled
+    /// path.
+    ///
+    /// When **every** row fell back to the pooled fit, the fleet is the
+    /// i.i.d. special case: one shared model handle (so
+    /// [`HeteroFleet::order_stat_moments`] keeps the exact
+    /// quadrature/ECDF routes instead of Monte Carlo) and no actuation
+    /// rates (uniform rates would only re-derive the uniform split).
+    /// With actuation on and real per-worker evidence, each model is
+    /// pre-scaled by its *planned* load multiplier `ρ_w = N·r_w/Σr`
+    /// (the ideal proportional share; the shard split quantizes it), so
+    /// the partition is optimal for the cycle times the fleet will
+    /// exhibit *after* the re-shard, not before.
+    pub fn fleet_plan_for(
+        &self,
+        roster: &[WorkerId],
+    ) -> Option<(HeteroFleet, Option<Vec<f64>>)> {
+        let h = self.cfg.hetero.as_ref()?;
+        let (models, any_worker_fit) = self.fleet_models_inner(roster)?;
+        if !any_worker_fit {
+            // All rows share the pooled fit: one handle, exact moments.
+            let fleet = HeteroFleet::homogeneous(Arc::from(models[0].build()), roster.len());
+            return Some((fleet, None));
+        }
+        if !h.speed_weighted_shards {
+            return Some((HeteroFleet::from_fits(&models), None));
+        }
+        let rates: Vec<f64> = models.iter().map(|m| rate_of(m.mean())).collect();
+        let rho = planned_loads(&rates);
+        let scaled: Vec<FittedModel> = models
+            .iter()
+            .zip(rho.iter())
+            // A degenerate (zero-rate) fit gets rho = 0: keep its model
+            // UNscaled — pricing a broken fit as near-instant would
+            // invert the intent; unscaled stays conservative.
+            .map(|(m, &r)| if r > 0.0 { m.scaled(r) } else { m.clone() })
+            .collect();
+        Some((HeteroFleet::from_fits(&scaled), Some(rates)))
+    }
+
+    /// Epoch-swap hook for elastic re-dimensions: flushes the pooled
+    /// **and** every per-worker window — observations recorded under
+    /// the previous scheme epoch must never blend into post-churn
+    /// fits — and rebases the drift reference on the model the
+    /// re-dimensioned scheme was solved for (kept unchanged when
+    /// `None`).
     pub fn rebase(&mut self, reference: Option<FittedModel>) {
         self.window.clear();
+        for est in self.per_worker.values_mut() {
+            est.clear();
+        }
         if reference.is_some() {
             self.reference = reference;
         }
@@ -207,19 +412,68 @@ impl AdaptiveController {
         if drift <= self.cfg.drift_threshold {
             return Ok(None);
         }
-        let dist = fit.build();
         // The new scheme must cover exactly the coordinates the live one
         // does — the deployed model's dim may legitimately differ from
         // `spec.coords` (the trainer only warns on that mismatch), so the
         // rounding target comes from the live partition, not the spec.
         let target = warm_x.iter().sum::<f64>().round().max(1.0) as usize;
-        let blocks =
-            resolve_partition(&self.cfg.strategy, spec, dist.as_ref(), Some(warm_x), target, rng)?;
+        // Heterogeneity-aware path: with per-worker evidence for the
+        // live roster, the re-solve optimizes against the fleet of
+        // per-worker models (load-adjusted when speed-weighted shard
+        // actuation is on) instead of the pooled i.i.d. fiction.
+        let mut fleet_rates = None;
+        let blocks = match self.hetero_fleet_for_resolve(spec.n) {
+            Some((fleet, rates)) => {
+                let b =
+                    resolve_partition(&self.cfg.strategy, spec, &fleet, Some(warm_x), target, rng)?;
+                fleet_rates = rates;
+                b
+            }
+            None => {
+                let dist = fit.build();
+                let d = dist.as_ref();
+                resolve_partition(&self.cfg.strategy, spec, d, Some(warm_x), target, rng)?
+            }
+        };
         self.reference = Some(fit.clone());
         self.last_swap = Some(iter);
         self.swaps += 1;
-        Ok(Some(ReplanDecision { blocks, estimate: fit, drift }))
+        Ok(Some(ReplanDecision { blocks, estimate: fit, drift, fleet_rates }))
     }
+
+    /// [`Self::fleet_plan_for`] on the stored roster, when it covers
+    /// exactly `n` rows — the drift path's entry point.
+    fn hetero_fleet_for_resolve(&self, n: usize) -> Option<(HeteroFleet, Option<Vec<f64>>)> {
+        if self.roster.len() != n {
+            return None;
+        }
+        self.fleet_plan_for(&self.roster)
+    }
+}
+
+/// `1/mean`, guarded against degenerate fits (0 for an infinite or
+/// non-positive mean — such a worker gets no speed-weighted load).
+fn rate_of(mean: f64) -> f64 {
+    if mean.is_finite() && mean > 0.0 {
+        1.0 / mean
+    } else {
+        0.0
+    }
+}
+
+/// Ideal per-worker load multipliers under rate-proportional sharding:
+/// `ρ_w = N·r_w/Σr` (uniform share ⇒ 1). All-ones when the rates are
+/// degenerate (non-positive sum).
+pub fn planned_loads(rates: &[f64]) -> Vec<f64> {
+    let n = rates.len();
+    let total: f64 = rates.iter().copied().filter(|r| r.is_finite() && *r > 0.0).sum();
+    if n == 0 || total <= 0.0 || !total.is_finite() {
+        return vec![1.0; n];
+    }
+    rates
+        .iter()
+        .map(|&r| if r.is_finite() && r > 0.0 { n as f64 * r / total } else { 0.0 })
+        .collect()
 }
 
 /// Re-solve the block partition under `strategy` for `spec` — the
@@ -501,6 +755,220 @@ mod tests {
             p_weib.sizes(),
             "the model family must shape the partition"
         );
+    }
+
+    fn hetero_cfg() -> AdaptiveConfig {
+        AdaptiveConfig {
+            hetero: Some(HeteroConfig {
+                per_worker_window: 64,
+                min_worker_samples: 8,
+                speed_weighted_shards: true,
+            }),
+            ..Default::default()
+        }
+    }
+
+    /// Feed `iters` rounds of a 3-row roster where each row's times come
+    /// from its own distribution.
+    fn observe_fleet_rows(
+        ctrl: &mut AdaptiveController,
+        dists: &[&ShiftedExponential],
+        roster: &[usize],
+        iters: usize,
+        rng: &mut Rng,
+    ) {
+        for _ in 0..iters {
+            let times: Vec<f64> = dists.iter().map(|d| d.sample(rng)).collect();
+            ctrl.observe_rows(&times, roster);
+        }
+    }
+
+    #[test]
+    fn per_worker_windows_are_keyed_by_stable_id_not_row() {
+        // Regression for the row-attribution bug: after a churn rebind
+        // hands a worker's old row to someone else, the two histories
+        // must never blend — observations are stamped with WorkerId.
+        let fast = ShiftedExponential::new(1e-2, 50.0); // mean 150
+        let slow = ShiftedExponential::new(1e-3, 200.0); // mean 1200
+        let mut ctrl = AdaptiveController::new(hetero_cfg());
+        let mut rng = Rng::new(31);
+
+        // Epoch 0: roster [0, 1, 2]; id 2 (row 2) is the slow machine.
+        observe_fleet_rows(&mut ctrl, &[&fast, &fast, &slow], &[0, 1, 2], 30, &mut rng);
+        assert_eq!(ctrl.worker_observations(2), 30);
+        let slow_fit = ctrl.worker_fit(2).expect("30 samples fit");
+        assert!((slow_fit.mean() - slow.mean()).abs() / slow.mean() < 0.35);
+
+        // Rebind: id 1 left, id 3 joined → roster [0, 2, 3]. Row 1 now
+        // belongs to the slow id 2 and row 2 to the fresh fast id 3.
+        observe_fleet_rows(&mut ctrl, &[&fast, &slow, &fast], &[0, 2, 3], 30, &mut rng);
+
+        // Id 2's window kept ONLY its own (slow) samples across the
+        // rebind — a row-keyed window would now be half fast.
+        let f2 = ctrl.worker_fit(2).expect("id 2 fit");
+        assert!(
+            (f2.mean() - slow.mean()).abs() / slow.mean() < 0.35,
+            "id 2 mean {} must track the slow machine ({}), not a row blend",
+            f2.mean(),
+            slow.mean()
+        );
+        // Id 3 never inherits the slow history that lived in its row.
+        let f3 = ctrl.worker_fit(3).expect("id 3 fit");
+        assert!(
+            (f3.mean() - fast.mean()).abs() / fast.mean() < 0.35,
+            "id 3 mean {} must track the fast machine ({})",
+            f3.mean(),
+            fast.mean()
+        );
+        // Id 1 departed mid-history: its window holds only epoch-0 rounds.
+        assert_eq!(ctrl.worker_observations(1), 30);
+    }
+
+    #[test]
+    fn rebase_flushes_per_worker_windows_so_epochs_never_mix() {
+        let fast = ShiftedExponential::new(1e-2, 50.0);
+        let slow = ShiftedExponential::new(1e-3, 200.0);
+        let mut ctrl = AdaptiveController::new(hetero_cfg());
+        let mut rng = Rng::new(33);
+        observe_fleet_rows(&mut ctrl, &[&fast, &fast, &slow], &[0, 1, 2], 20, &mut rng);
+        assert!(ctrl.worker_observations(2) > 0);
+        // Re-dimension: every window flushes — per-worker included.
+        ctrl.rebase(None);
+        assert_eq!(ctrl.observations(), 0);
+        for id in 0..3 {
+            assert_eq!(
+                ctrl.worker_observations(id),
+                0,
+                "id {id}: per-worker windows must not leak across scheme epochs"
+            );
+        }
+        // Fresh post-epoch evidence stands alone: id 2 is now FAST
+        // (machine rebooted), and its fit must not remember the old slow
+        // regime.
+        observe_fleet_rows(&mut ctrl, &[&fast, &fast, &fast], &[0, 1, 2], 30, &mut rng);
+        let f2 = ctrl.worker_fit(2).unwrap();
+        assert!((f2.mean() - fast.mean()).abs() / fast.mean() < 0.35, "mean {}", f2.mean());
+    }
+
+    #[test]
+    fn fleet_fit_falls_back_to_the_pooled_model_below_min_samples() {
+        let fast = ShiftedExponential::new(1e-2, 50.0);
+        let slow = ShiftedExponential::new(1e-3, 200.0);
+        let mut ctrl = AdaptiveController::new(hetero_cfg());
+        let mut rng = Rng::new(37);
+        observe_fleet_rows(&mut ctrl, &[&fast, &fast, &slow], &[0, 1, 2], 30, &mut rng);
+        // Id 9 was never observed: its slot uses the pooled fit, whose
+        // mean sits between the two speeds.
+        let models = ctrl.fleet_models_for(&[0, 2, 9]).expect("pooled fallback covers id 9");
+        assert_eq!(models.len(), 3);
+        assert!(models[1].mean() > 2.0 * models[0].mean(), "row 1 is the slow machine");
+        let pooled = ctrl.current_fit().unwrap();
+        assert!((models[2].mean() - pooled.mean()).abs() < 1e-9);
+        // Rates follow: fast row > pooled row > slow row.
+        let rates = ctrl.fleet_rates_for(&[0, 2, 9]).unwrap();
+        assert!(rates[0] > rates[2] && rates[2] > rates[1], "{rates:?}");
+        // Without hetero sensing there is no fleet fit at all.
+        let mut plain = AdaptiveController::new(AdaptiveConfig::default());
+        plain.observe_rows(&[1.0, 2.0, 3.0], &[0, 1, 2]);
+        assert!(plain.fleet_models_for(&[0, 1, 2]).is_none());
+        assert_eq!(plain.worker_observations(0), 0, "no per-worker windows without [hetero]");
+    }
+
+    #[test]
+    fn all_pooled_fleet_plan_is_the_exact_iid_special_case() {
+        // Regression: when NO worker has reached min_worker_samples,
+        // every row falls back to the pooled fit — the plan must be a
+        // shared-handle (exact-moments) fleet with no actuation rates,
+        // not n value-clones forced through Monte Carlo.
+        let fast = ShiftedExponential::new(1e-2, 50.0);
+        let slow = ShiftedExponential::new(1e-3, 200.0);
+        let cfg = AdaptiveConfig {
+            hetero: Some(HeteroConfig {
+                per_worker_window: 64,
+                min_worker_samples: 1_000, // unreachable in this test
+                speed_weighted_shards: true,
+            }),
+            ..Default::default()
+        };
+        let mut ctrl = AdaptiveController::new(cfg);
+        let mut rng = Rng::new(39);
+        observe_fleet_rows(&mut ctrl, &[&fast, &fast, &slow], &[0, 1, 2], 30, &mut rng);
+        let (fleet, rates) = ctrl.fleet_plan_for(&[0, 1, 2]).expect("pooled fallback plan");
+        assert!(
+            fleet.is_homogeneous(),
+            "an all-pooled fleet must share one model handle (exact order-stat route)"
+        );
+        assert_eq!(fleet.n(), 3);
+        assert!(rates.is_none(), "uniform evidence must not trigger a re-shard");
+        // And the companion helpers agree.
+        assert!(ctrl.fleet_rates_for(&[0, 1, 2]).is_none());
+    }
+
+    #[test]
+    fn hetero_replan_resolves_on_the_fleet_and_reports_rates() {
+        // A 2-speed fleet: the hetero re-plan must (a) trigger off the
+        // pooled drift, (b) return per-row actuation rates with the
+        // slow rows strictly below the fast rows, and (c) shape the
+        // partition differently from the pooled i.i.d. re-solve on the
+        // same evidence.
+        let spec = ProblemSpec::paper_default(8, 4_000);
+        let fast = ShiftedExponential::new(1e-2, 50.0);
+        let slow = ShiftedExponential::new(2e-3, 250.0); // 5× slower
+        let mk = |hetero: Option<HeteroConfig>| AdaptiveConfig {
+            min_samples: 64,
+            check_every: 10,
+            hetero,
+            ..Default::default()
+        };
+        let run = |hetero: Option<HeteroConfig>| {
+            let mut ctrl = AdaptiveController::with_reference(mk(hetero), fast.mu, fast.t0);
+            let mut rng = Rng::new(41);
+            let roster: Vec<usize> = (0..8).collect();
+            for _ in 0..30 {
+                let times: Vec<f64> = (0..8)
+                    .map(|w| if w < 4 { fast.sample(&mut rng) } else { slow.sample(&mut rng) })
+                    .collect();
+                ctrl.observe_rows(&times, &roster);
+            }
+            let warm = vec![500.0; 8];
+            let mut rng = Rng::new(43);
+            ctrl.maybe_replan(10, &spec, &warm, &mut rng).unwrap().expect("drift fires")
+        };
+        let hetero = run(Some(HeteroConfig {
+            per_worker_window: 64,
+            min_worker_samples: 8,
+            speed_weighted_shards: true,
+        }));
+        let pooled = run(None);
+        assert!(pooled.fleet_rates.is_none());
+        let rates = hetero.fleet_rates.expect("hetero replan carries actuation rates");
+        assert_eq!(rates.len(), 8);
+        let min_fast = rates[..4].iter().cloned().fold(f64::INFINITY, f64::min);
+        let max_slow = rates[4..].iter().cloned().fold(0.0, f64::max);
+        assert!(
+            max_slow < min_fast,
+            "slow rows must rate strictly below fast rows: {rates:?}"
+        );
+        assert_eq!(hetero.blocks.total(), 4_000);
+        assert_eq!(hetero.blocks.n(), 8);
+        assert_ne!(
+            hetero.blocks.sizes(),
+            pooled.blocks.sizes(),
+            "the fleet model must shape the partition differently from the pooled fit"
+        );
+    }
+
+    #[test]
+    fn planned_loads_are_proportional_and_guarded() {
+        let rho = planned_loads(&[2.0, 1.0, 1.0]);
+        assert!((rho.iter().sum::<f64>() - 3.0).abs() < 1e-12, "loads preserve total work");
+        assert!((rho[0] - 1.5).abs() < 1e-12 && (rho[1] - 0.75).abs() < 1e-12);
+        assert_eq!(planned_loads(&[0.0, 0.0]), vec![1.0, 1.0], "degenerate rates → uniform");
+        let with_dead = planned_loads(&[1.0, 0.0, f64::NAN]);
+        assert_eq!(with_dead[1], 0.0);
+        assert_eq!(with_dead[2], 0.0);
+        assert!((with_dead[0] - 3.0).abs() < 1e-12);
+        assert!(planned_loads(&[]).is_empty());
     }
 
     #[test]

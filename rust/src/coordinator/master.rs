@@ -565,6 +565,85 @@ pub fn redistribute_shards(n: usize, num_shards: usize) -> ShardMap {
     map
 }
 
+/// Per-subset shard **counts** proportional to `weights` (Hamilton /
+/// largest-remainder apportionment): subset `i`'s exact quota is
+/// `q_i = w_i·m/Σw`; every subset gets `⌊q_i⌋` shards and the leftover
+/// shards go to the largest fractional remainders (ties broken by
+/// larger weight, then lower index). Guarantees `c_i ∈ {⌊q_i⌋, ⌈q_i⌉}`
+/// — each subset within one shard of its exact quota — and, because
+/// the apportionment depends on each weight only through its own quota,
+/// permuting the workers permutes the counts with them (exact for
+/// distinct remainders; ties resolve by the stated deterministic
+/// order). Non-finite or non-positive weights count as zero; if no
+/// positive weight remains the split degrades to uniform.
+pub fn shard_quota_weighted(weights: &[f64], num_shards: usize) -> Vec<usize> {
+    let n = weights.len();
+    assert!(n >= 1, "need at least one subset");
+    let w: Vec<f64> =
+        weights.iter().map(|&v| if v.is_finite() && v > 0.0 { v } else { 0.0 }).collect();
+    let total: f64 = w.iter().sum();
+    if total <= 0.0 {
+        let uniform = redistribute_shards(n, num_shards);
+        return uniform.iter().map(Vec::len).collect();
+    }
+    let quotas: Vec<f64> = w.iter().map(|&v| v * num_shards as f64 / total).collect();
+    let mut counts: Vec<usize> = quotas.iter().map(|&q| q.floor() as usize).collect();
+    let assigned: usize = counts.iter().sum();
+    let mut leftover = num_shards.saturating_sub(assigned);
+    if leftover > 0 {
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            let (ra, rb) = (quotas[a] - quotas[a].floor(), quotas[b] - quotas[b].floor());
+            rb.partial_cmp(&ra)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(w[b].partial_cmp(&w[a]).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.cmp(&b))
+        });
+        for &i in order.iter() {
+            if leftover == 0 {
+                break;
+            }
+            counts[i] += 1;
+            leftover -= 1;
+        }
+    }
+    debug_assert_eq!(counts.iter().sum::<usize>(), num_shards);
+    counts
+}
+
+/// Subset → dataset shards proportional to per-worker `weights`
+/// (fitted mean **rates** `1/E[T]` — the speed-weighted actuation of
+/// the heterogeneity-aware engine). Subset `i` backs the contiguous
+/// shard range sized by [`shard_quota_weighted`], so every shard stays
+/// covered by exactly one subset and the decoded gradient still equals
+/// the full-dataset gradient; fast workers simply carry more of it.
+pub fn redistribute_shards_weighted(weights: &[f64], num_shards: usize) -> ShardMap {
+    let counts = shard_quota_weighted(weights, num_shards);
+    let mut map: ShardMap = Vec::with_capacity(counts.len());
+    let mut start = 0usize;
+    for c in counts {
+        map.push((start..start + c).collect());
+        start += c;
+    }
+    debug_assert_eq!(start, num_shards, "every shard must stay covered");
+    map
+}
+
+/// Per-row data-load multipliers of a shard map relative to the
+/// uniform `m/n` share: `ρ_i = c_i·n/m` (1 everywhere for a balanced
+/// map, 0 for a subset that backs nothing). The virtual-time layer
+/// scales row `i`'s cycle time by `ρ_i` so Eq. (2) accounting reflects
+/// the weighted data placement (primary-subset load model: row `i`'s
+/// per-unit work tracks the share of subset `i`, the subset it is the
+/// first holder of).
+pub fn load_multipliers(map: &ShardMap, num_shards: usize) -> Vec<f64> {
+    let n = map.len().max(1);
+    if num_shards == 0 {
+        return vec![1.0; map.len()];
+    }
+    map.iter().map(|backing| backing.len() as f64 * n as f64 / num_shards as f64).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1112,6 +1191,90 @@ mod tests {
             (0..6).filter(|&k| map[k].is_empty()).collect();
         assert_eq!(empties.len(), 2, "{map:?}");
         assert!(empties.windows(2).all(|w| w[1] - w[0] > 1), "clustered: {empties:?}");
+    }
+
+    #[test]
+    fn weighted_shard_split_covers_once_and_respects_quotas() {
+        // 2-speed fleet, rate weights: every shard covered exactly once
+        // and each subset within one shard of its exact quota.
+        for (weights, m) in [
+            (vec![1.0, 1.0, 0.25, 0.25], 4usize),
+            (vec![1.0, 1.0, 1.0, 0.2, 0.2, 0.2], 24),
+            (vec![3.0, 1.0], 7),
+            (vec![5.0], 3),
+        ] {
+            let map = redistribute_shards_weighted(&weights, m);
+            assert_eq!(map.len(), weights.len());
+            let mut seen = vec![0usize; m];
+            for backing in &map {
+                for &s in backing {
+                    seen[s] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "{weights:?} m={m}: {seen:?}");
+            let total: f64 = weights.iter().sum();
+            for (i, backing) in map.iter().enumerate() {
+                let q = weights[i] * m as f64 / total;
+                assert!(
+                    (backing.len() as f64 - q).abs() < 1.0,
+                    "subset {i}: count {} vs quota {q}",
+                    backing.len()
+                );
+            }
+        }
+        // Fast workers get strictly more when granularity allows.
+        let map = redistribute_shards_weighted(&[1.0, 1.0, 0.25, 0.25], 20);
+        assert!(map[0].len() > map[2].len(), "{map:?}");
+        assert!(map[1].len() > map[3].len(), "{map:?}");
+        // The load multipliers mirror the counts.
+        let rho = load_multipliers(&map, 20);
+        assert!((rho.iter().sum::<f64>() - 4.0).abs() < 1e-12, "total work conserved");
+        assert!(rho[0] > 1.0 && rho[2] < 1.0, "{rho:?}");
+    }
+
+    #[test]
+    fn weighted_shard_split_degrades_gracefully() {
+        // Degenerate weights (dead rows, NaNs, zero total) fall back to
+        // a covering split instead of panicking.
+        let map = redistribute_shards_weighted(&[0.0, f64::NAN, -1.0], 6);
+        let counts: Vec<usize> = map.iter().map(Vec::len).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 6);
+        let max = counts.iter().max().unwrap();
+        let min = counts.iter().min().unwrap();
+        assert!(max - min <= 1, "{counts:?}: zero-total weights split uniformly");
+        // A single dead row among live ones backs nothing.
+        let map = redistribute_shards_weighted(&[1.0, 0.0, 1.0], 6);
+        assert!(map[1].is_empty(), "{map:?}");
+        assert_eq!(map[0].len() + map[2].len(), 6);
+        // Uniform weights reproduce the unweighted counts.
+        let uni = redistribute_shards(5, 13);
+        let wuni = redistribute_shards_weighted(&[2.0; 5], 13);
+        let mut a: Vec<usize> = uni.iter().map(Vec::len).collect();
+        let mut b: Vec<usize> = wuni.iter().map(Vec::len).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        // load_multipliers guards the no-shard case.
+        assert_eq!(load_multipliers(&vec![Vec::new(); 3], 0), vec![1.0; 3]);
+    }
+
+    #[test]
+    fn weighted_shard_counts_are_permutation_equivariant() {
+        // Distinct weights: permuting the workers permutes the counts
+        // with them (the apportionment sees each worker only through
+        // its own quota).
+        let weights = vec![3.1, 0.7, 1.9, 5.3, 0.2, 2.6];
+        let m = 17usize;
+        let base = shard_quota_weighted(&weights, m);
+        let perm = [4usize, 2, 0, 5, 1, 3];
+        let permuted_w: Vec<f64> = perm.iter().map(|&i| weights[i]).collect();
+        let permuted_c = shard_quota_weighted(&permuted_w, m);
+        for (slot, &i) in perm.iter().enumerate() {
+            assert_eq!(
+                permuted_c[slot], base[i],
+                "worker {i} must keep its count under permutation: {base:?} vs {permuted_c:?}"
+            );
+        }
     }
 
     #[test]

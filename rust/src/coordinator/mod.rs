@@ -27,7 +27,12 @@
 //! beyond the worker-FIFO delay its own redundancy already absorbs —
 //! while the **pooled** cycle-time feed lets every job's online
 //! estimator learn from every round (worker speeds are a pool property,
-//! not a job property).
+//! not a job property). Every observation in that feed is stamped with
+//! the worker's **stable id**, so under the `[hetero]` policy each
+//! machine also gets its own window and fit — the heterogeneity-aware
+//! engine re-solves against the fleet of per-worker models and
+//! re-shards data in proportion to fitted speed
+//! ([`master::redistribute_shards_weighted`]).
 //!
 //! The coding scheme is an **epoch-versioned, swappable artifact** per
 //! job, not an immutable `Arc` baked in at spawn: each job's adaptive

@@ -65,8 +65,10 @@ use std::time::{Duration, Instant};
 
 use crate::coding::scheme::CodingScheme;
 use crate::coordinator::adaptive::{self, AdaptiveConfig, AdaptiveController, ResolveStrategy};
-use crate::coordinator::channel::{BlockContribution, JobId, WorkerEvent, WorkerTask};
-use crate::coordinator::master::{redistribute_shards, IterOutcome, Master};
+use crate::coordinator::channel::{BlockContribution, JobId, ShardMap, WorkerEvent, WorkerTask};
+use crate::coordinator::master::{
+    load_multipliers, redistribute_shards, redistribute_shards_weighted, IterOutcome, Master,
+};
 use crate::coordinator::membership::{MemberStatus, WorkerId, WorkerRegistry};
 use crate::coordinator::metrics::{
     IterMetrics, MembershipEvent, MembershipRecord, SchemeEpoch, TrainReport,
@@ -296,6 +298,12 @@ pub struct JobHandle {
     resolve_strategy: ResolveStrategy,
     state: ModelState,
     eval_exec: Option<Box<dyn GradExecutor>>,
+    /// Per-row data-load multipliers of the installed shard map
+    /// (`c_row·N/m`; all ones until a speed-weighted re-shard). The
+    /// virtual-time layer scales each row's cycle time by its
+    /// multiplier so Eq. (2) accounting reflects the weighted
+    /// placement.
+    load_mult: Vec<f64>,
     iters_done: usize,
     /// Total coded work consumed, in cycles (`unit_work × Σ(s+1)x` per
     /// iteration) — the deficit counter behind
@@ -365,6 +373,18 @@ impl JobHandle {
         (self.offcycle_late, self.offcycle_stale)
     }
 
+    /// The live subset → dataset-shard mapping (identity until an
+    /// elastic or speed-weighted re-shard).
+    pub fn shard_map(&self) -> &Arc<ShardMap> {
+        self.master.shard_map()
+    }
+
+    /// Per-row data-load multipliers of the live shard map (all ones
+    /// until a speed-weighted re-shard).
+    pub fn load_multipliers(&self) -> &[f64] {
+        &self.load_mult
+    }
+
     /// Count a contribution that arrived outside the job's own collect
     /// window.
     fn note_offcycle(&mut self, c: &BlockContribution) {
@@ -388,6 +408,20 @@ impl JobHandle {
         estimate: Option<&FittedModel>,
         drift: f64,
     ) -> Result<()> {
+        self.install_scheme_with_shards(blocks, iter, estimate, drift, None)
+    }
+
+    /// [`Self::install_scheme`] with an optional subset → shard
+    /// re-mapping installed alongside the new epoch (the speed-weighted
+    /// actuation path; `None` keeps the live mapping).
+    fn install_scheme_with_shards(
+        &mut self,
+        blocks: BlockPartition,
+        iter: usize,
+        estimate: Option<&FittedModel>,
+        drift: f64,
+        shards: Option<Arc<ShardMap>>,
+    ) -> Result<()> {
         if blocks.n() != self.spec.n {
             return Err(Error::InvalidArgument("new scheme: blocks.n() != spec.n".into()));
         }
@@ -402,7 +436,8 @@ impl JobHandle {
         self.epoch += 1;
         self.scheme = scheme.clone();
         let roster = self.master.roster().to_vec();
-        let shards = self.master.shard_map().clone();
+        let shards = shards.unwrap_or_else(|| self.master.shard_map().clone());
+        self.load_mult = load_multipliers(&shards, self.num_data_shards);
         self.master.install_scheme(scheme, self.epoch, roster, shards);
         self.report.scheme_epochs.push(SchemeEpoch {
             epoch: self.epoch,
@@ -431,13 +466,28 @@ impl JobHandle {
         };
         if let Some(plan) = plan {
             crate::log_info!(
-                "job {}: iter {iter}: drift {:.2} → installing scheme epoch {} (fit {})",
+                "job {}: iter {iter}: drift {:.2} → installing scheme epoch {} (fit {}{})",
                 self.id,
                 plan.drift,
                 self.epoch + 1,
-                plan.estimate.label()
+                plan.estimate.label(),
+                if plan.fleet_rates.is_some() { ", hetero speed-weighted" } else { "" }
             );
-            self.install_scheme(plan.blocks, iter, Some(&plan.estimate), plan.drift)?;
+            // Speed-weighted actuation: a hetero re-plan re-shards the
+            // dataset proportionally to the fitted per-row rates, so
+            // fast workers carry more data instead of idling at the
+            // quorum barrier.
+            let shards = plan
+                .fleet_rates
+                .as_ref()
+                .map(|r| Arc::new(redistribute_shards_weighted(r, self.num_data_shards)));
+            self.install_scheme_with_shards(
+                plan.blocks,
+                iter,
+                Some(&plan.estimate),
+                plan.drift,
+                shards,
+            )?;
         }
         Ok(())
     }
@@ -460,33 +510,51 @@ impl JobHandle {
         let estimate: Option<FittedModel> =
             self.controller.as_ref().and_then(|c| c.current_fit()).or(fallback);
         let warm = self.scheme.blocks().as_f64();
-        let blocks = match &estimate {
-            Some(est) => {
-                let dist = est.build();
-                adaptive::resolve_partition(
-                    &self.resolve_strategy,
-                    &spec_new,
-                    dist.as_ref(),
-                    Some(warm.as_slice()),
-                    self.dim,
-                    &mut self.rng,
-                )?
-            }
-            None => {
-                let s = if to_n > 1 { 1 } else { 0 };
-                BlockPartition::single_level(to_n, s, self.dim)
-            }
+        // Heterogeneity-aware re-dimension: with per-worker evidence
+        // for the surviving roster (the windows are id-keyed, so
+        // survivors keep their histories through the rebind), the
+        // partition is solved against the load-adjusted fleet AND the
+        // shards are re-split by fitted rate — one consistent plan,
+        // like the drift path. Otherwise the pooled estimate shapes x
+        // and the split stays uniform.
+        let fleet_plan = self.controller.as_ref().and_then(|c| c.fleet_plan_for(roster));
+        let blocks = match &fleet_plan {
+            Some((fleet, _)) => adaptive::resolve_partition(
+                &self.resolve_strategy,
+                &spec_new,
+                fleet,
+                Some(warm.as_slice()),
+                self.dim,
+                &mut self.rng,
+            )?,
+            None => match &estimate {
+                Some(est) => {
+                    let dist = est.build();
+                    adaptive::resolve_partition(
+                        &self.resolve_strategy,
+                        &spec_new,
+                        dist.as_ref(),
+                        Some(warm.as_slice()),
+                        self.dim,
+                        &mut self.rng,
+                    )?
+                }
+                None => {
+                    let s = if to_n > 1 { 1 } else { 0 };
+                    BlockPartition::single_level(to_n, s, self.dim)
+                }
+            },
         };
         self.spec.n = to_n;
         let scheme = Arc::new(CodingScheme::new(blocks, &mut self.rng)?);
         self.epoch += 1;
         self.scheme = scheme.clone();
-        self.master.install_scheme(
-            scheme,
-            self.epoch,
-            roster.to_vec(),
-            Arc::new(redistribute_shards(to_n, self.num_data_shards)),
-        );
+        let shards = match fleet_plan.as_ref().and_then(|(_, rates)| rates.as_ref()) {
+            Some(rates) => Arc::new(redistribute_shards_weighted(rates, self.num_data_shards)),
+            None => Arc::new(redistribute_shards(to_n, self.num_data_shards)),
+        };
+        self.load_mult = load_multipliers(&shards, self.num_data_shards);
+        self.master.install_scheme(scheme, self.epoch, roster.to_vec(), shards);
         crate::log_info!(
             "job {}: iter {iter}: re-dimensioned N {from_n}→{to_n} as scheme epoch {}",
             self.id,
@@ -507,6 +575,7 @@ impl JobHandle {
             event: MembershipEvent::Redimension { from_n, to_n, epoch: self.epoch },
         });
         if let Some(ctrl) = self.controller.as_mut() {
+            ctrl.set_roster(roster);
             ctrl.rebase(estimate);
         }
         Ok(())
@@ -561,6 +630,26 @@ impl WorkerPool {
     /// Spawn a pool of `cfg.workers` threads whose cycle times follow
     /// `schedule` (sampled per round at broadcast).
     pub fn new(cfg: PoolConfig, schedule: StragglerSchedule) -> Result<Self> {
+        Self::build(cfg, schedule, None)
+    }
+
+    /// Spawn a **heterogeneous** pool: worker id `w`'s cycle times come
+    /// from `fleet[w]`'s own model (ids beyond the list — elastic joins
+    /// — fall back to `schedule`, which also remains the pool's prior
+    /// for seeding drift references).
+    pub fn new_fleet(
+        cfg: PoolConfig,
+        schedule: StragglerSchedule,
+        fleet: Vec<Box<dyn crate::distribution::CycleTimeDistribution>>,
+    ) -> Result<Self> {
+        Self::build(cfg, schedule, Some(fleet))
+    }
+
+    fn build(
+        cfg: PoolConfig,
+        schedule: StragglerSchedule,
+        fleet: Option<Vec<Box<dyn crate::distribution::CycleTimeDistribution>>>,
+    ) -> Result<Self> {
         if cfg.workers == 0 {
             return Err(Error::InvalidArgument("the pool needs at least one worker".into()));
         }
@@ -584,7 +673,10 @@ impl WorkerPool {
             live_mask[w] = true;
         }
         let mut rng = Rng::new(cfg.seed);
-        let sampler = StragglerSampler::from_schedule(schedule, rng.next_u64());
+        let mut sampler = StragglerSampler::from_schedule(schedule, rng.next_u64());
+        if let Some(fleet) = fleet {
+            sampler = sampler.with_fleet(fleet);
+        }
         // Injected-dead workers are permanent failures from round 0
         // (they also never get a Leave record re-logged per job).
         let failed_set = cfg.dead_workers.clone();
@@ -701,10 +793,12 @@ impl WorkerPool {
             .map(|a| a.strategy.clone())
             .unwrap_or(ResolveStrategy::ClosedFormFreq);
         let controller = js.adaptive.map(|acfg| {
-            match self.sampler.distribution_at(self.rounds).as_shifted_exp() {
+            let mut c = match self.sampler.distribution_at(self.rounds).as_shifted_exp() {
                 Some(d) => AdaptiveController::with_reference(acfg, d.mu, d.t0),
                 None => AdaptiveController::new(acfg),
-            }
+            };
+            c.set_roster(self.registry.roster());
+            c
         });
         let state = if js.init_scale > 0.0 {
             ModelState::random(dim, js.init_scale, &mut rng)
@@ -746,6 +840,7 @@ impl WorkerPool {
             resolve_strategy,
             state,
             eval_exec,
+            load_mult: vec![1.0; n],
             iters_done: 0,
             issued_work: 0.0,
             offcycle_late: 0,
@@ -942,34 +1037,46 @@ impl WorkerPool {
         let t_iter = Instant::now();
         let n = self.registry.n();
         debug_assert_eq!(self.jobs[id].spec.n, n, "job not re-dimensioned to the live roster");
-        let times = self.sampler.sample(self.rounds, n);
+        let roster = self.registry.roster().to_vec();
+        // Cycle times are drawn per stable id (a machine keeps its
+        // speed across rebinds); `times[row]` belongs to `roster[row]`.
+        let times = self.sampler.sample_roster(self.rounds, &roster);
         // Pooled estimator feed: worker speeds are a pool property, so
-        // every tenant's window may learn from every round.
+        // every tenant's window may learn from every round. Every
+        // observation is stamped with the worker's stable id, so
+        // per-worker windows never blend identities across rebinds.
         if self.cfg.shared_observations {
             for job in self.jobs.iter_mut() {
                 if let Some(ctrl) = job.controller.as_mut() {
-                    ctrl.observe(&times);
+                    ctrl.observe_rows(&times, &roster);
                 }
             }
         } else if let Some(ctrl) = self.jobs[id].controller.as_mut() {
-            ctrl.observe(&times);
+            ctrl.observe_rows(&times, &roster);
         }
 
         // Row-ordered task channels for the current roster (None where
         // the bound worker already departed).
-        let senders: Vec<Option<Sender<WorkerTask>>> = self
-            .registry
-            .roster()
+        let senders: Vec<Option<Sender<WorkerTask>>> = roster
             .iter()
             .map(|&wid| self.task_txs.get(wid).cloned().flatten())
             .collect();
         let iter = self.jobs[id].iters_done;
+        // Effective per-row cycle times: a speed-weighted re-shard
+        // changes each row's per-unit data load, so its compute pace
+        // scales by the load multiplier (raw times keep feeding the
+        // estimators — the model tracks the machine, not its load).
+        let eff: Vec<f64> = times
+            .iter()
+            .enumerate()
+            .map(|(row, &t)| t * self.jobs[id].load_mult.get(row).copied().unwrap_or(1.0))
+            .collect();
         {
             let job = &self.jobs[id];
             job.master.broadcast(
                 iter,
                 job.state.shared(),
-                &times,
+                &eff,
                 job.spec.unit_work(),
                 &job.factory,
                 &senders,
@@ -1004,7 +1111,7 @@ impl WorkerPool {
         let job = &mut self.jobs[id];
         let grad_norm = outcome.gradient.iter().map(|g| g * g).sum::<f64>().sqrt();
         job.state.step(&outcome.gradient, job.lr);
-        let vr = virtual_runtime(&job.spec, &job.scheme, &times);
+        let vr = virtual_runtime(&job.spec, &job.scheme, &eff);
         self.virtual_makespan += vr;
         job.issued_work += job.spec.unit_work() * job.scheme.work_units_per_worker();
         job.report.iters.push(IterMetrics {

@@ -70,9 +70,14 @@ impl StragglerSchedule {
 }
 
 /// Samples each iteration's worker cycle times from a (possibly
-/// non-stationary) schedule.
+/// non-stationary) schedule — optionally overridden per **stable
+/// worker id** by a heterogeneous fleet (machines keep their speed
+/// across rebinds; rows do not).
 pub struct StragglerSampler {
     schedule: StragglerSchedule,
+    /// Per-worker models keyed by stable id. Ids beyond the list (e.g.
+    /// elastic joins) draw from the schedule's current phase.
+    fleet: Option<Vec<Box<dyn CycleTimeDistribution>>>,
     rng: Rng,
 }
 
@@ -83,12 +88,39 @@ impl StragglerSampler {
     }
 
     pub fn from_schedule(schedule: StragglerSchedule, seed: u64) -> Self {
-        Self { schedule, rng: Rng::new(seed) }
+        Self { schedule, fleet: None, rng: Rng::new(seed) }
     }
 
-    /// Draw `T_1..T_N` for iteration `iter`.
+    /// Give each stable worker id its own cycle-time model
+    /// (`fleet[id]`); the schedule remains the fallback for ids beyond
+    /// the list and the pool-level prior.
+    pub fn with_fleet(mut self, fleet: Vec<Box<dyn CycleTimeDistribution>>) -> Self {
+        assert!(!fleet.is_empty(), "a fleet needs at least one worker model");
+        self.fleet = Some(fleet);
+        self
+    }
+
+    /// Draw `T_1..T_N` for iteration `iter` (pooled: every worker from
+    /// the schedule's phase — the i.i.d. case of [`Self::sample_roster`]).
     pub fn sample(&mut self, iter: usize, n: usize) -> Vec<f64> {
         self.schedule.dist_at(iter).sample_vec(n, &mut self.rng)
+    }
+
+    /// Draw one cycle time per rostered row: `times[row]` comes from
+    /// worker `roster[row]`'s own model when a fleet is installed (the
+    /// schedule phase otherwise / for unknown ids). Without a fleet
+    /// this is exactly [`Self::sample`] — same stream, same order.
+    pub fn sample_roster(&mut self, iter: usize, roster: &[usize]) -> Vec<f64> {
+        match &self.fleet {
+            None => self.schedule.dist_at(iter).sample_vec(roster.len(), &mut self.rng),
+            Some(fleet) => roster
+                .iter()
+                .map(|&id| match fleet.get(id) {
+                    Some(d) => d.sample(&mut self.rng),
+                    None => self.schedule.dist_at(iter).sample(&mut self.rng),
+                })
+                .collect(),
+        }
     }
 
     /// The distribution governing iteration `iter`.
@@ -217,6 +249,34 @@ mod tests {
         assert_eq!(s.sample(4, 3), vec![1.0, 1.0, 1.0]);
         assert_eq!(s.sample(5, 3), vec![4.0, 4.0, 4.0]);
         assert!((s.distribution_at(5).mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_sampler_keys_speeds_by_stable_id_not_row() {
+        // Ids 0/1 fast, id 2 slow. After a rebind moves id 2 to row 0,
+        // row 0's draws must be slow — the machine kept its speed.
+        let fleet: Vec<Box<dyn CycleTimeDistribution>> = vec![
+            Box::new(Deterministic::new(1.0)),
+            Box::new(Deterministic::new(1.0)),
+            Box::new(Deterministic::new(9.0)),
+        ];
+        let mut s = StragglerSampler::new(Box::new(Deterministic::new(5.0)), 7)
+            .with_fleet(fleet);
+        assert_eq!(s.sample_roster(0, &[0, 1, 2]), vec![1.0, 1.0, 9.0]);
+        assert_eq!(s.sample_roster(1, &[2, 0]), vec![9.0, 1.0]);
+        // Unknown ids (a later join) fall back to the schedule's phase.
+        assert_eq!(s.sample_roster(2, &[0, 7]), vec![1.0, 5.0]);
+    }
+
+    #[test]
+    fn pooled_sample_roster_matches_sample_stream() {
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let mut a = StragglerSampler::new(Box::new(d.clone()), 11);
+        let mut b = StragglerSampler::new(Box::new(d), 11);
+        assert_eq!(a.sample(0, 4), b.sample_roster(0, &[0, 1, 2, 3]));
+        // Row→id binding is irrelevant without a fleet: only the count
+        // drives the stream.
+        assert_eq!(a.sample(1, 3), b.sample_roster(1, &[9, 4, 0]));
     }
 
     #[test]

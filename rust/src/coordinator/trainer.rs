@@ -119,6 +119,27 @@ pub fn train_stationary(
     train(cfg, StragglerSchedule::stationary(dist), factory)
 }
 
+/// [`train`] on a **heterogeneous fleet**: worker id `w` draws its
+/// cycle times from `fleet[w]`'s own model (non-i.i.d. workers — what
+/// the `[hetero]` engine senses and actuates against); `schedule`
+/// stays the pooled fallback/prior.
+pub fn train_fleet(
+    cfg: TrainConfig,
+    schedule: StragglerSchedule,
+    fleet: Vec<Box<dyn CycleTimeDistribution>>,
+    factory: ExecutorFactory,
+) -> Result<TrainReport> {
+    let steps = cfg.steps;
+    let mut session = TrainSession::start_fleet(cfg, schedule, fleet, factory)?;
+    for iter in 0..steps {
+        session.apply_scheduled_churn(iter)?;
+        session.adapt(iter)?;
+        session.maybe_redimension(iter)?;
+        session.step(iter)?;
+    }
+    session.finish()
+}
+
 /// A live single-job topology: one [`WorkerPool`] carrying exactly one
 /// job, exposed through the classic per-iteration driving surface.
 /// Pool rounds and job iterations coincide, so the `iter` arguments
@@ -136,13 +157,37 @@ impl TrainSession {
         schedule: StragglerSchedule,
         factory: ExecutorFactory,
     ) -> Result<Self> {
+        Self::start_inner(cfg, schedule, None, factory)
+    }
+
+    /// [`Self::start`] on a heterogeneous fleet: worker id `w`'s cycle
+    /// times come from `fleet[w]`'s own model (see
+    /// [`WorkerPool::new_fleet`]).
+    pub fn start_fleet(
+        cfg: TrainConfig,
+        schedule: StragglerSchedule,
+        fleet: Vec<Box<dyn CycleTimeDistribution>>,
+        factory: ExecutorFactory,
+    ) -> Result<Self> {
+        Self::start_inner(cfg, schedule, Some(fleet), factory)
+    }
+
+    fn start_inner(
+        cfg: TrainConfig,
+        schedule: StragglerSchedule,
+        fleet: Option<Vec<Box<dyn CycleTimeDistribution>>>,
+        factory: ExecutorFactory,
+    ) -> Result<Self> {
         let mut pcfg = PoolConfig::new(cfg.spec.n);
         pcfg.pacing = cfg.pacing;
         pcfg.seed = cfg.seed;
         pcfg.stall_timeout = cfg.stall_timeout;
         pcfg.dead_workers = cfg.dead_workers.clone();
         pcfg.elastic = cfg.elastic.clone();
-        let mut pool = WorkerPool::new(pcfg, schedule)?;
+        let mut pool = match fleet {
+            Some(fleet) => WorkerPool::new_fleet(pcfg, schedule, fleet)?,
+            None => WorkerPool::new(pcfg, schedule)?,
+        };
         let mut js = JobSpec::new(cfg.spec, cfg.blocks)
             .steps(cfg.steps)
             .lr(cfg.lr)

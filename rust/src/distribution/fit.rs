@@ -362,6 +362,38 @@ impl FittedModel {
         }
     }
 
+    /// The fit of `c·T` for `c > 0` — the model of the same worker
+    /// carrying `c×` its current per-unit data load. Exact per family
+    /// (every supported family is closed under positive scaling):
+    /// shifted-exp `(μ/c, c·t0)` — note `μ·t0` is scale-invariant, so
+    /// the order-stat quadrature's `μ·t0 > 0` precondition survives —
+    /// Weibull `(k, c·λ, c·shift)`, empirical `c·samples`. This is how
+    /// the heterogeneity-aware re-solve prices speed-weighted shard
+    /// loads into each worker's cycle-time model.
+    pub fn scaled(&self, c: f64) -> FittedModel {
+        assert!(c > 0.0 && c.is_finite(), "load scale must be positive, got {c}");
+        match self {
+            FittedModel::ShiftedExp(e) => FittedModel::ShiftedExp(ShiftedExpEstimate {
+                mu: e.mu / c,
+                t0: e.t0 * c,
+                samples: e.samples,
+            }),
+            FittedModel::Weibull(w) => FittedModel::Weibull(WeibullEstimate {
+                shape: w.shape,
+                scale: w.scale * c,
+                shift: w.shift * c,
+                samples: w.samples,
+            }),
+            FittedModel::Empirical(e) => {
+                let scaled: Vec<f64> = e.samples.iter().map(|&s| s * c).collect();
+                FittedModel::Empirical(
+                    EmpiricalEstimate::from_samples(&scaled)
+                        .expect("scaling a valid snapshot by c > 0 keeps it valid"),
+                )
+            }
+        }
+    }
+
     /// Human-readable fit description for logs.
     pub fn label(&self) -> String {
         match self {
@@ -780,6 +812,48 @@ mod tests {
         assert!(e.drift_from(&e).abs() < 1e-12);
         let f = ShiftedExpEstimate { mu: 2e-3, t0: 50.0, samples: 100 };
         assert!(e.drift_from(&f) > 0.4); // sigma halves: 100% in one direction
+    }
+
+    #[test]
+    fn scaled_fits_scale_their_moments_exactly() {
+        let fits = [
+            FittedModel::ShiftedExp(ShiftedExpEstimate { mu: 1e-3, t0: 50.0, samples: 64 }),
+            FittedModel::Weibull(WeibullEstimate {
+                shape: 0.8,
+                scale: 200.0,
+                shift: 30.0,
+                samples: 64,
+            }),
+            FittedModel::Empirical(
+                EmpiricalEstimate::from_samples(&[3.0, 9.0, 20.0, 44.0, 80.0]).unwrap(),
+            ),
+        ];
+        for f in &fits {
+            for c in [0.25f64, 1.0, 3.5] {
+                let s = f.scaled(c);
+                assert_eq!(s.family(), f.family());
+                assert!(
+                    (s.mean() - c * f.mean()).abs() < 1e-9 * (1.0 + c * f.mean()),
+                    "{}: mean {} vs {}·{}",
+                    f.label(),
+                    s.mean(),
+                    c,
+                    f.mean()
+                );
+                assert!((s.scale() - c * f.scale()).abs() < 1e-9 * (1.0 + c * f.scale()));
+                // The materialized distribution agrees (CDF scaling law).
+                let (d, ds) = (f.build(), s.build());
+                for q in [60.0f64, 150.0, 1000.0] {
+                    assert!((ds.cdf(q * c) - d.cdf(q)).abs() < 1e-9, "{}", f.label());
+                }
+            }
+        }
+        // μ·t0 is invariant for shifted-exp, so the quadrature guard holds.
+        if let FittedModel::ShiftedExp(e) = fits[0].scaled(1e-3) {
+            assert!((e.mu * e.t0 - 1e-3 * 50.0).abs() < 1e-15);
+        } else {
+            panic!("family changed under scaling");
+        }
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Heterogeneous fleets: per-worker cycle-time models and the order
+//! statistics of **non-identically** distributed draws.
+//!
+//! The paper's system model (§II) takes the workers' cycle times
+//! `T_1..T_N` to be i.i.d. — one distribution describes the whole
+//! fleet. Real clusters mix machine generations, co-tenancy levels and
+//! thermal envelopes, so the adaptive engine's sensing layer fits **one
+//! model per worker** ([`crate::coordinator::adaptive`]) and this
+//! module supplies the moment machinery the re-solve needs on top of
+//! those fits:
+//!
+//! * [`HeteroFleet`] — a row-ordered vector of per-worker
+//!   [`RuntimeDistribution`]s. It implements [`RuntimeDistribution`]
+//!   itself, so [`crate::optimizer::closed_form::x_freq_blocks_model`]
+//!   and [`crate::coordinator::adaptive::resolve_partition`] consume it
+//!   unchanged: Theorem 3's `x^(f)` shape is computed from the fleet's
+//!   expected order statistics `E[T_(k)]`, `1/E[1/T_(k)]` of one draw
+//!   **per worker** — not `N` draws from a pooled fiction.
+//! * [`fleet_mc_order_stats`] — CRN-seeded Monte Carlo for those
+//!   non-identical order statistics (no closed form exists in general:
+//!   the Bapat–Beg permanent formula is `#P`-hard). The sampler is
+//!   seeded from [`OrderStatConfig::seed`], so the same fleet re-solved
+//!   twice yields the same partition.
+//! * The **homogeneous special case stays exact**: a fleet whose rows
+//!   all share one model handle (ptr-equal — e.g. every worker fell
+//!   back to the pooled fit) routes through that model's own exact
+//!   path: Eq. (11)/quadrature for shifted-exp, the finite ECDF sums
+//!   for empirical ([`super::order_stats::ecdf_exact`]).
+//!
+//! Sampling semantics: [`CycleTimeDistribution::sample`] cycles the
+//! rows round-robin, so any consumer that draws in whole multiples of
+//! `N` — the subgradient method's per-iteration `T` vector, the
+//! Monte-Carlo playoff — receives exactly one draw per worker per
+//! round, in row order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::fit::FittedModel;
+use super::order_stats::OrderStats;
+use super::runtime_dist::{ModelFamily, OrderStatConfig, RuntimeDistribution};
+use super::CycleTimeDistribution;
+use crate::util::rng::Rng;
+
+/// A fleet of per-worker cycle-time models, indexed by code row.
+pub struct HeteroFleet {
+    models: Vec<Arc<dyn RuntimeDistribution>>,
+    /// Round-robin cursor for the sampling interface (one draw per
+    /// worker per window of `n` calls).
+    cursor: AtomicUsize,
+}
+
+impl Clone for HeteroFleet {
+    fn clone(&self) -> Self {
+        Self { models: self.models.clone(), cursor: AtomicUsize::new(0) }
+    }
+}
+
+impl std::fmt::Debug for HeteroFleet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HeteroFleet").field("n", &self.models.len()).finish()
+    }
+}
+
+impl HeteroFleet {
+    /// A fleet with one model per code row (row order).
+    pub fn per_worker(models: Vec<Arc<dyn RuntimeDistribution>>) -> Self {
+        assert!(!models.is_empty(), "a fleet needs at least one worker");
+        Self { models, cursor: AtomicUsize::new(0) }
+    }
+
+    /// The i.i.d. special case: every row shares `model` (one handle, so
+    /// [`Self::is_homogeneous`] holds and moments stay exact).
+    pub fn homogeneous(model: Arc<dyn RuntimeDistribution>, n: usize) -> Self {
+        assert!(n >= 1, "a fleet needs at least one worker");
+        Self::per_worker(vec![model; n])
+    }
+
+    /// Materialize a fleet from row-ordered fitted models.
+    pub fn from_fits(fits: &[FittedModel]) -> Self {
+        Self::per_worker(fits.iter().map(|f| Arc::from(f.build())).collect())
+    }
+
+    /// Number of workers (code rows).
+    pub fn n(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Worker `row`'s model.
+    pub fn model(&self, row: usize) -> &dyn RuntimeDistribution {
+        self.models[row].as_ref()
+    }
+
+    /// Per-worker expected cycle times, row order.
+    pub fn means(&self) -> Vec<f64> {
+        self.models.iter().map(|m| m.mean()).collect()
+    }
+
+    /// Per-worker mean *rates* `1/E[T]`, row order (0 for an
+    /// infinite-mean model) — the weights of the speed-weighted shard
+    /// split ([`crate::coordinator::master::redistribute_shards_weighted`]).
+    pub fn rates(&self) -> Vec<f64> {
+        self.models
+            .iter()
+            .map(|m| {
+                let mean = m.mean();
+                if mean.is_finite() && mean > 0.0 {
+                    1.0 / mean
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Whether every row shares one model handle — the i.i.d. special
+    /// case whose order statistics stay exact. (Detection is by handle,
+    /// not by value: the adaptive layer's pooled fallback hands every
+    /// row the same `Arc`, which is the case that matters.)
+    pub fn is_homogeneous(&self) -> bool {
+        let first = &self.models[0];
+        self.models.iter().all(|m| Arc::ptr_eq(first, m))
+    }
+}
+
+impl CycleTimeDistribution for HeteroFleet {
+    /// Round-robin over rows: call `k` draws from row `k mod N`'s model.
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) % self.models.len();
+        self.models[i].as_cycle_time().sample(rng)
+    }
+
+    /// Fleet-average expected cycle time.
+    fn mean(&self) -> f64 {
+        self.means().iter().sum::<f64>() / self.models.len() as f64
+    }
+
+    /// The mixture CDF (a uniformly random worker's cycle time).
+    fn cdf(&self, t: f64) -> f64 {
+        self.models.iter().map(|m| m.as_cycle_time().cdf(t)).sum::<f64>()
+            / self.models.len() as f64
+    }
+
+    fn label(&self) -> String {
+        let n = self.models.len();
+        if self.is_homogeneous() {
+            format!("HeteroFleet(n={n}, homogeneous {})", self.models[0].label())
+        } else {
+            format!(
+                "HeteroFleet(n={n}, [{}, …, {}])",
+                self.models[0].label(),
+                self.models[n - 1].label()
+            )
+        }
+    }
+}
+
+impl RuntimeDistribution for HeteroFleet {
+    /// Expected order-stat moments of one draw **per worker**. `n` must
+    /// equal the fleet size (the fleet *is* the roster). Homogeneous
+    /// fleets route through the shared model's exact path; genuinely
+    /// mixed fleets use CRN-seeded Monte Carlo
+    /// ([`fleet_mc_order_stats`]).
+    fn order_stat_moments(&self, n: usize, cfg: &OrderStatConfig) -> OrderStats {
+        assert_eq!(
+            n,
+            self.models.len(),
+            "a hetero fleet's order statistics are defined for exactly its own N"
+        );
+        if self.is_homogeneous() {
+            return self.models[0].order_stat_moments(n, cfg);
+        }
+        fleet_mc_order_stats(self, cfg)
+    }
+
+    fn model_family(&self) -> ModelFamily {
+        ModelFamily::Hetero
+    }
+
+    fn as_cycle_time(&self) -> &dyn CycleTimeDistribution {
+        self
+    }
+}
+
+/// CRN-seeded Monte-Carlo order-stat moments for non-identically
+/// distributed draws: each trial draws one `T` per worker from *its
+/// own* model, sorts, and accumulates both `T_(k)` and `1/T_(k)`. Same
+/// `cfg` → bit-identical result (common random numbers), so two
+/// candidate fleets are compared on identical noise and a re-solve is
+/// reproducible.
+pub fn fleet_mc_order_stats(fleet: &HeteroFleet, cfg: &OrderStatConfig) -> OrderStats {
+    let n = fleet.n();
+    let trials = cfg.trials.max(1);
+    let mut rng = Rng::new(cfg.seed);
+    let mut sum_t = vec![0.0f64; n];
+    let mut sum_inv = vec![0.0f64; n];
+    let mut buf = vec![0.0f64; n];
+    for _ in 0..trials {
+        for (b, m) in buf.iter_mut().zip(fleet.models.iter()) {
+            *b = m.as_cycle_time().sample(&mut rng);
+        }
+        buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (k, &v) in buf.iter().enumerate() {
+            sum_t[k] += v;
+            sum_inv[k] += 1.0 / v;
+        }
+    }
+    let inv_trials = 1.0 / trials as f64;
+    OrderStats {
+        t: sum_t.iter().map(|s| s * inv_trials).collect(),
+        t_prime: sum_inv.iter().map(|s| 1.0 / (s * inv_trials)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distribution::order_stats::shifted_exp_exact;
+    use crate::distribution::shifted_exp::ShiftedExponential;
+
+    fn two_speed(n: usize, n_slow: usize, factor: f64) -> HeteroFleet {
+        let fast = ShiftedExponential::new(1e-2, 50.0);
+        let slow = ShiftedExponential::new(fast.mu / factor, fast.t0 * factor);
+        HeteroFleet::per_worker(
+            (0..n)
+                .map(|i| {
+                    if i < n - n_slow {
+                        Arc::new(fast.clone()) as Arc<dyn RuntimeDistribution>
+                    } else {
+                        Arc::new(slow.clone())
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn homogeneous_fleet_routes_through_the_exact_path() {
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let fleet = HeteroFleet::homogeneous(Arc::new(d.clone()), 9);
+        assert!(fleet.is_homogeneous());
+        let os = fleet.order_stat_moments(9, &OrderStatConfig::default());
+        let exact = shifted_exp_exact(&d, 9);
+        for k in 0..9 {
+            assert_eq!(os.t[k], exact.t[k], "k={k}: the exact path must be bit-identical");
+            assert_eq!(os.t_prime[k], exact.t_prime[k], "k={k}");
+        }
+        assert_eq!(fleet.model_family(), ModelFamily::Hetero);
+        assert_eq!(ModelFamily::Hetero.name(), "hetero");
+    }
+
+    #[test]
+    fn fleet_mc_is_crn_deterministic() {
+        let fleet = two_speed(8, 4, 5.0);
+        assert!(!fleet.is_homogeneous());
+        let cfg = OrderStatConfig { trials: 2000, seed: 77 };
+        let a = fleet.order_stat_moments(8, &cfg);
+        let b = fleet.order_stat_moments(8, &cfg);
+        for k in 0..8 {
+            assert_eq!(a.t[k], b.t[k]);
+            assert_eq!(a.t_prime[k], b.t_prime[k]);
+        }
+    }
+
+    #[test]
+    fn two_speed_order_stats_split_around_the_speed_boundary() {
+        // 4 fast + 4 slow (5×): the fast half's order stats sit near the
+        // fast model's own, and the top stats are dominated by the slow
+        // half — an i.i.d. pooled mixture would smear this structure.
+        let (n, n_slow, f) = (8usize, 4usize, 5.0f64);
+        let fleet = two_speed(n, n_slow, f);
+        let cfg = OrderStatConfig { trials: 30_000, seed: 5 };
+        let os = fleet.order_stat_moments(n, &cfg);
+        let fast = ShiftedExponential::new(1e-2, 50.0);
+        let slow = ShiftedExponential::new(fast.mu / f, fast.t0 * f);
+        for k in 1..n {
+            assert!(os.t[k] >= os.t[k - 1]);
+            assert!(os.t_prime[k] >= os.t_prime[k - 1]);
+        }
+        // The 4 lowest order stats are dominated by fast draws (the 4th
+        // smallest of the union never exceeds the fast half's max)…
+        assert!(
+            os.t[n_slow - 1] < 0.5 * slow.mean(),
+            "t_(4)={} must sit far below the slow mean {}",
+            os.t[3],
+            slow.mean()
+        );
+        // …and the max is far above anything the fast half produces alone.
+        let fast_only = shifted_exp_exact(&fast, n - n_slow);
+        assert!(os.t[n - 1] > 2.0 * fast_only.t[n - n_slow - 1]);
+    }
+
+    #[test]
+    fn round_robin_sampling_gives_one_draw_per_worker_per_window() {
+        // Deterministic per-worker models make the row assignment visible.
+        use crate::distribution::Empirical;
+        let models: Vec<Arc<dyn RuntimeDistribution>> = (1..=4)
+            .map(|i| Arc::new(Empirical::new(vec![i as f64])) as Arc<dyn RuntimeDistribution>)
+            .collect();
+        let fleet = HeteroFleet::per_worker(models);
+        let mut rng = Rng::new(3);
+        let draws = fleet.sample_vec(8, &mut rng);
+        assert_eq!(draws, vec![1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 3.0, 4.0]);
+        assert!((fleet.mean() - 2.5).abs() < 1e-12);
+        assert!((CycleTimeDistribution::cdf(&fleet, 2.0) - 0.5).abs() < 1e-12);
+        // A clone starts its own window at row 0.
+        let clone = fleet.clone();
+        let mut rng2 = Rng::new(3);
+        assert_eq!(clone.sample_vec(4, &mut rng2), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rates_invert_means_and_guard_degenerate_models() {
+        let fleet = two_speed(4, 2, 4.0);
+        let rates = fleet.rates();
+        let means = fleet.means();
+        for (r, m) in rates.iter().zip(means.iter()) {
+            assert!((r * m - 1.0).abs() < 1e-12);
+        }
+        assert!(rates[0] > rates[3], "fast workers must carry larger rates");
+    }
+
+    #[test]
+    #[should_panic(expected = "exactly its own N")]
+    fn moments_reject_a_mismatched_n() {
+        let fleet = two_speed(4, 2, 3.0);
+        let _ = fleet.order_stat_moments(5, &OrderStatConfig::default());
+    }
+}

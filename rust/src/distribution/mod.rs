@@ -1,10 +1,18 @@
 //! Straggler model substrate: per-worker CPU **cycle-time** distributions.
 //!
-//! The paper's system model (§II): at any instant the CPU cycle times
-//! `T_n, n ∈ [N]` of the workers are i.i.d. random variables; the master
-//! knows the distribution but not the realizations. The *partial straggler*
-//! model is general — a two-point distribution recovers the classical full
-//! (persistent) straggler model as a special case.
+//! The paper's system model (§II) assumes the CPU cycle times
+//! `T_n, n ∈ [N]` of the workers are **i.i.d.** random variables known to
+//! the master. This crate no longer inherits that assumption wholesale:
+//! the i.i.d. model is the *pooled special case* of a heterogeneous
+//! fleet. The sensing layer stamps every observation with the worker's
+//! stable identity and fits one model per worker
+//! ([`crate::coordinator::adaptive`]); [`hetero::HeteroFleet`] then
+//! exposes the expected order statistics of **non-identically**
+//! distributed draws (CRN-seeded Monte Carlo, with the exact
+//! quadrature/ECDF routes as the homogeneous special case) so the
+//! re-solve optimizes against who is actually slow. The *partial
+//! straggler* model stays general — a two-point distribution recovers
+//! the classical full (persistent) straggler model as a special case.
 //!
 //! Implemented families:
 //! * [`shifted_exp::ShiftedExponential`] — `P[T ≤ t] = 1 − e^{−μ(t−t0)}`,
@@ -26,6 +34,7 @@
 
 pub mod fit;
 pub mod gamma;
+pub mod hetero;
 pub mod lognormal;
 pub mod order_stats;
 pub mod pareto;

@@ -54,6 +54,10 @@ pub enum ModelFamily {
     Weibull,
     /// Windowed ECDF of observed cycle times (no parametric assumption).
     Empirical,
+    /// A heterogeneous fleet of per-worker models
+    /// ([`super::hetero::HeteroFleet`]) — the workers are *not*
+    /// identically distributed, so there is no single family.
+    Hetero,
 }
 
 impl ModelFamily {
@@ -63,6 +67,7 @@ impl ModelFamily {
             ModelFamily::ShiftedExp => "shifted-exp",
             ModelFamily::Weibull => "weibull",
             ModelFamily::Empirical => "empirical",
+            ModelFamily::Hetero => "hetero",
         }
     }
 }

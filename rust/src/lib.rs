@@ -38,6 +38,20 @@
 //!   method-of-moments fit, and **KS-gated family selection**
 //!   (`family = "auto"`) with the window's own ECDF as the
 //!   non-parametric fallback;
+//! * **per-worker sensing** (`[hetero]`,
+//!   [`coordinator::adaptive::HeteroConfig`]): every observation is
+//!   stamped with the worker's stable `WorkerId` — not its code-row
+//!   position — so each machine gets its own window and family-selected
+//!   fit (pooled fallback below a min-samples threshold), histories
+//!   never blend across churn rebinds, and re-dimensions flush every
+//!   window. [`distribution::hetero::HeteroFleet`] turns the per-worker
+//!   fits into the expected order statistics of **non-identically**
+//!   distributed draws (CRN-seeded Monte Carlo; the exact
+//!   quadrature/ECDF paths remain the homogeneous special case), so
+//!   `x^(f)` reflects who is actually slow; actuation then re-shards
+//!   the dataset in proportion to fitted mean rates
+//!   ([`coordinator::master::redistribute_shards_weighted`]) — fast
+//!   workers carry more data instead of idling at the quorum barrier;
 //! * [`distribution::runtime_dist::RuntimeDistribution`] makes the
 //!   re-solve distribution-agnostic: each family exposes its expected
 //!   order-stat moment vectors (`t`, `t'`) — exact quadrature for
@@ -153,7 +167,7 @@ pub mod util;
 /// Convenient re-exports of the types most programs need.
 pub mod prelude {
     pub use crate::coding::scheme::CodingScheme;
-    pub use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveController};
+    pub use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveController, HeteroConfig};
     pub use crate::coordinator::channel::JobId;
     pub use crate::coordinator::membership::{WorkerId, WorkerRegistry};
     pub use crate::coordinator::pool::{
@@ -162,6 +176,7 @@ pub mod prelude {
     pub use crate::coordinator::straggler::StragglerSchedule;
     pub use crate::coordinator::trainer::{train, train_stationary, TrainConfig, TrainSession};
     pub use crate::distribution::fit::{FamilyPolicy, FittedModel};
+    pub use crate::distribution::hetero::HeteroFleet;
     pub use crate::distribution::runtime_dist::RuntimeDistribution;
     pub use crate::distribution::{
         shifted_exp::ShiftedExponential, CycleTimeDistribution,

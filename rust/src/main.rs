@@ -17,10 +17,10 @@
 use std::sync::Arc;
 
 use bcgc::cli::Args;
-use bcgc::coordinator::adaptive::AdaptiveConfig;
+use bcgc::coordinator::adaptive::{AdaptiveConfig, HeteroConfig};
 use bcgc::coordinator::pool::{JobSpec, PoolConfig, ScheduleMode, WorkerPool};
 use bcgc::coordinator::straggler::StragglerSchedule;
-use bcgc::coordinator::trainer::{train, ElasticConfig, TrainConfig};
+use bcgc::coordinator::trainer::{train, train_fleet, ElasticConfig, TrainConfig};
 use bcgc::coordinator::PacingMode;
 use bcgc::data::synthetic;
 use bcgc::distribution::fit::FamilyPolicy;
@@ -85,6 +85,9 @@ fn print_usage() {
                        --family auto|shifted-exp|weibull|empirical]]\n\
                       [--elastic [--churn-at K --churn-count 1 --arrive-at K2 --arrive-count 1\n\
                        --churn-threshold 1]]  (elastic pool: re-dimensions N on membership change)\n\
+                      [--hetero [--slow-factor 4 --slow-count N/2 --hetero-min-samples 24\n\
+                       --hetero-window 128]]  (2-speed fleet + per-worker sensing, fleet-model\n\
+                       re-solve and speed-weighted shards; implies --adaptive)\n\
            multi      --jobs 2 --workers 8 [--steps 60 --steps2 S --lr 2e-3 --mu 1e-3 --t0 50\n\
                        --schedule round_robin|weighted --adaptive --elastic --churn-at K\n\
                        --config file.toml]  (K concurrent jobs on ONE shared worker pool)\n\
@@ -315,6 +318,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         "churn-threshold",
         "churn-count",
         "arrive-count",
+        "slow-factor",
+        "slow-count",
+        "hetero-min-samples",
+        "hetero-window",
     ]);
     let n: usize = args.get("workers", 8)?;
     let steps: usize = args.get("steps", 100)?;
@@ -397,7 +404,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.flag("real-pacing") {
         cfg.pacing = PacingMode::RealScaled { ns_per_unit: args.get("ns-per-unit", 50.0)? };
     }
-    if args.flag("adaptive") {
+    // --hetero: a 2-speed fleet plus the heterogeneity-aware engine
+    // (per-worker sensing, fleet-model re-solve, speed-weighted
+    // shards). It is an extension of the adaptive policy, so it
+    // implies --adaptive.
+    let hetero = args.flag("hetero");
+    if args.flag("adaptive") || hetero {
         let d = AdaptiveConfig::default();
         let family_arg = args.value("family").unwrap_or("auto");
         let family = FamilyPolicy::parse(family_arg).ok_or_else(|| {
@@ -405,6 +417,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 "--family {family_arg:?}: expected auto|shifted-exp|weibull|empirical"
             ))
         })?;
+        let hd = HeteroConfig::default();
         cfg.adaptive = Some(AdaptiveConfig {
             window: args.get("adapt-window", d.window)?,
             check_every: args.get("adapt-every", d.check_every)?,
@@ -412,6 +425,11 @@ fn cmd_train(args: &Args) -> Result<()> {
             min_samples: args.get("adapt-min-samples", d.min_samples)?,
             drift_threshold: args.get("drift-threshold", d.drift_threshold)?,
             family,
+            hetero: hetero.then_some(HeteroConfig {
+                per_worker_window: args.get("hetero-window", hd.per_worker_window)?,
+                min_worker_samples: args.get("hetero-min-samples", hd.min_worker_samples)?,
+                speed_weighted_shards: true,
+            }),
             ..d
         });
     }
@@ -449,9 +467,36 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         cfg.elastic = Some(e);
     }
+    // The 2-speed fleet behind --hetero: the first N−slow_count ids
+    // keep the base model, the rest are slow-factor× slower.
+    let fleet = if hetero {
+        let slow_factor: f64 = args.get("slow-factor", 4.0)?;
+        let slow_count: usize = args.get("slow-count", n / 2)?;
+        if slow_count >= n {
+            return Err(bcgc::Error::InvalidArgument(
+                "--slow-count must leave at least one fast worker".into(),
+            ));
+        }
+        if slow_factor < 1.0 {
+            return Err(bcgc::Error::InvalidArgument(
+                "--slow-factor must be ≥ 1".into(),
+            ));
+        }
+        println!(
+            "fleet : {} fast {} + {slow_count} slow ({slow_factor}× slower)",
+            n - slow_count,
+            bcgc::distribution::CycleTimeDistribution::label(&dist),
+        );
+        Some(bcgc::sim::two_speed_fleet(n, slow_count, &dist, slow_factor))
+    } else {
+        None
+    };
     // Every option is parsed by now: fail on typos BEFORE training.
     args.check_unused()?;
-    let report = train(cfg, schedule, factory)?;
+    let report = match fleet {
+        Some(fleet) => train_fleet(cfg, schedule, fleet, factory)?,
+        None => train(cfg, schedule, factory)?,
+    };
     println!("{}", report.summary());
     if report.scheme_epochs.len() > 1 {
         println!("\nscheme epochs:\n{}", report.render_epochs());
@@ -542,8 +587,22 @@ fn cmd_multi(args: &Args) -> Result<()> {
         }
         pcfg.elastic = Some(e);
     }
-    let adaptive = args.flag("adaptive");
-    args.declare(&["churn-threshold", "churn-count"]);
+    // Adaptive policy: `[adaptive]` (+ its `[hetero]` extension) from
+    // the config file when declared there, the default policy under a
+    // bare `--adaptive` flag.
+    let config_adaptive: Option<AdaptiveConfig> = cfg_file
+        .as_ref()
+        .map(|c| c.adaptive_config())
+        .transpose()?
+        .flatten();
+    let adaptive_cfg: Option<AdaptiveConfig> = if config_adaptive.is_some() {
+        config_adaptive
+    } else if args.flag("adaptive") {
+        Some(AdaptiveConfig::default())
+    } else {
+        None
+    };
+    args.declare(&["adaptive", "churn-threshold", "churn-count"]);
     // Every option is parsed by now: fail on typos BEFORE training.
     args.check_unused()?;
     let mut pool = WorkerPool::new(pcfg, StragglerSchedule::stationary(Box::new(dist.clone())))?;
@@ -576,8 +635,8 @@ fn cmd_multi(args: &Args) -> Result<()> {
             .eval_every((job_steps / 4).max(1))
             .seed(job_seed)
             .executor(factory);
-        if adaptive {
-            js = js.adaptive(AdaptiveConfig::default());
+        if let Some(a) = adaptive_cfg.clone() {
+            js = js.adaptive(a);
         }
         let id = js.submit(&mut pool)?;
         println!("job {id}  : {d}-feature {c}-class MLP, L={dim}, {job_steps} steps");

@@ -12,10 +12,13 @@
 
 use crate::bench_harness::Table;
 use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveController};
+use crate::coordinator::master::{load_multipliers, redistribute_shards_weighted};
 use crate::coordinator::metrics::SchemeEpoch;
 use crate::coordinator::straggler::StragglerSchedule;
 use crate::distribution::fit::{FamilyPolicy, FitMethod, OnlineEstimator};
 use crate::distribution::runtime_dist::OrderStatConfig;
+use crate::distribution::shifted_exp::ShiftedExponential;
+use crate::distribution::CycleTimeDistribution;
 use crate::optimizer::blocks::BlockPartition;
 use crate::optimizer::closed_form::{x_freq_blocks, x_freq_blocks_model};
 use crate::optimizer::runtime_model::ProblemSpec;
@@ -989,6 +992,299 @@ pub fn compare_shared_vs_split(
     })
 }
 
+/// A 2-speed heterogeneous fleet: the first `n − n_slow` workers follow
+/// `fast`, the rest are `slow_factor×` slower in distribution
+/// (`T_slow = slow_factor · T_fast`: rate `μ/f`, shift `f·t0`).
+pub fn two_speed_fleet(
+    n: usize,
+    n_slow: usize,
+    fast: &ShiftedExponential,
+    slow_factor: f64,
+) -> Vec<Box<dyn CycleTimeDistribution>> {
+    assert!(n >= 1 && n_slow <= n, "need 0 ≤ n_slow ≤ n");
+    assert!(slow_factor >= 1.0, "the slow half must not be faster");
+    let slow = ShiftedExponential::new(fast.mu / slow_factor, fast.t0 * slow_factor);
+    (0..n)
+        .map(|w| {
+            if w < n - n_slow {
+                Box::new(fast.clone()) as Box<dyn CycleTimeDistribution>
+            } else {
+                Box::new(slow.clone())
+            }
+        })
+        .collect()
+}
+
+/// Virtual dataset shards per worker in the fleet simulator: finer than
+/// the threaded pool's 1-shard-per-worker so the speed-weighted split
+/// quantizes gently — a 4× slow row keeps a small nonzero load instead
+/// of rounding to zero (and thus to a zero effective cycle time, which
+/// would flatter the hetero arm).
+pub const FLEET_SIM_SHARDS_PER_WORKER: usize = 4;
+
+/// Result of one fleet playout: the usual per-iteration report plus the
+/// final actuation state.
+pub struct FleetSimReport {
+    pub report: MultiSimReport,
+    /// Final per-row shard counts out of
+    /// `N·FLEET_SIM_SHARDS_PER_WORKER` virtual shards (uniform until
+    /// the first speed-weighted re-shard).
+    pub shard_counts: Vec<usize>,
+}
+
+/// Play out `cfg.iters` iterations on a **heterogeneous fleet**
+/// (`fleet[row]` is worker `row`'s own cycle-time model) with the
+/// adaptive engine in the loop. This single function is both arms of
+/// the hetero-vs-pooled comparison:
+///
+/// * `acfg.hetero = None` — the pooled-i.i.d. baseline: observations
+///   are fitted as one family, re-solves use the pooled model, shards
+///   stay uniform;
+/// * `acfg.hetero = Some(..)` — per-worker sensing → fleet-model
+///   re-solve → speed-weighted shard actuation. After a weighted
+///   re-shard each row's cycle time is scaled by its load multiplier
+///   `ρ_row = c_row·N/m` (primary-subset load model), so Eq. (2)
+///   accounting reflects fast workers carrying more data.
+///
+/// CRN: the cycle-time stream depends only on `cfg.seed` (one draw per
+/// worker per iteration, row order), so two arms on the same seed see
+/// identical machines; the estimators always observe the **raw** times
+/// (the model tracks the machine, not its assigned load).
+pub fn simulate_fleet_adaptive(
+    spec: &ProblemSpec,
+    initial: &BlockPartition,
+    fleet: &[Box<dyn CycleTimeDistribution>],
+    cfg: &MultiSimConfig,
+    acfg: AdaptiveConfig,
+) -> Result<FleetSimReport> {
+    let n = spec.n;
+    if fleet.len() != n {
+        return Err(Error::InvalidArgument(format!(
+            "fleet has {} workers but the spec says N={n}",
+            fleet.len()
+        )));
+    }
+    if initial.n() != n {
+        return Err(Error::InvalidArgument("initial.n() != spec.n".into()));
+    }
+    let num_shards = n * FLEET_SIM_SHARDS_PER_WORKER;
+    let mut rng = Rng::new(cfg.seed);
+    let mut plan_rng = Rng::new(cfg.seed ^ 0x5EED_CAFE);
+    let sim_cfg = SimConfig { comm_latency: cfg.comm_latency };
+    let mut ctrl = AdaptiveController::new(acfg);
+    let roster: Vec<usize> = (0..n).collect();
+    ctrl.set_roster(&roster);
+    let mut blocks = initial.clone();
+    let mut rho = vec![1.0f64; n];
+    let mut shard_counts = vec![FLEET_SIM_SHARDS_PER_WORKER; n];
+    let mut epoch = 0usize;
+    let mut completion_times = Vec::with_capacity(cfg.iters);
+    let mut epochs = Vec::with_capacity(cfg.iters);
+    let mut swaps = Vec::new();
+    for iter in 0..cfg.iters {
+        let warm = blocks.as_f64();
+        if let Some(plan) = ctrl.maybe_replan(iter, spec, &warm, &mut plan_rng)? {
+            blocks = plan.blocks;
+            if let Some(rates) = &plan.fleet_rates {
+                let map = redistribute_shards_weighted(rates, num_shards);
+                rho = load_multipliers(&map, num_shards);
+                shard_counts = map.iter().map(Vec::len).collect();
+            }
+            epoch += 1;
+            swaps.push(SchemeEpoch {
+                epoch,
+                installed_at_iter: iter,
+                block_sizes: blocks.sizes().to_vec(),
+                estimated_mu: plan.estimate.mu_hint(),
+                estimated_t0: plan.estimate.t0_hint(),
+                estimated_mean: Some(plan.estimate.mean()),
+                family: Some(plan.estimate.family().name().to_string()),
+                drift: plan.drift,
+            });
+        }
+        let times: Vec<f64> = fleet.iter().map(|d| d.sample(&mut rng)).collect();
+        let eff: Vec<f64> = times.iter().zip(rho.iter()).map(|(&t, &r)| t * r).collect();
+        let out = simulate_iteration(spec, &blocks, &eff, &sim_cfg);
+        completion_times.push(out.completion_time);
+        epochs.push(epoch);
+        ctrl.observe_rows(&times, &roster);
+    }
+    Ok(FleetSimReport {
+        report: MultiSimReport { completion_times, epochs, swaps },
+        shard_counts,
+    })
+}
+
+/// Hetero-vs-pooled comparison on one 2-speed fleet, common random
+/// numbers: both arms run [`simulate_fleet_adaptive`] on identical
+/// machines; the only difference is whether the sensing/actuation is
+/// heterogeneity-aware.
+pub struct HeteroComparison {
+    pub spec_n: usize,
+    pub coords: usize,
+    pub iters: usize,
+    pub n_slow: usize,
+    pub slow_factor: f64,
+    /// Iterations excluded from the "after" means while the windows
+    /// fill and the first re-solves land.
+    pub measure_from: usize,
+    pub fleet_label: String,
+    pub pooled_run: MultiSimReport,
+    pub hetero_run: MultiSimReport,
+    /// The hetero arm's final per-row shard counts.
+    pub hetero_shard_counts: Vec<usize>,
+}
+
+impl HeteroComparison {
+    pub fn pooled_after(&self) -> f64 {
+        self.pooled_run.mean_from(self.measure_from)
+    }
+
+    pub fn hetero_after(&self) -> f64 {
+        self.hetero_run.mean_from(self.measure_from)
+    }
+
+    /// Post-convergence improvement of the heterogeneity-aware arm over
+    /// the pooled-i.i.d. baseline, in percent.
+    pub fn improvement_pct(&self) -> f64 {
+        100.0 * (1.0 - self.hetero_after() / self.pooled_after())
+    }
+
+    /// The standard human-readable report block shared by the example
+    /// and the bench.
+    pub fn render_report(&self) -> String {
+        let mut table = Table::new(&["arm", "E[τ] after convergence", "Σ runtime", "swaps"]);
+        let row = |label: &str, r: &MultiSimReport, after: f64| -> Vec<String> {
+            vec![
+                label.to_string(),
+                format!("{after:.1}"),
+                format!("{:.0}", r.total()),
+                r.swaps.len().to_string(),
+            ]
+        };
+        table.row(&row("pooled i.i.d. (one family)", &self.pooled_run, self.pooled_after()));
+        table.row(&row("hetero (per-worker models)", &self.hetero_run, self.hetero_after()));
+        let mut out = table.render();
+        out.push_str(&format!(
+            "hetero shard counts (fast→slow rows): {:?}\n",
+            self.hetero_shard_counts
+        ));
+        out.push_str(&format!(
+            "\nhetero-aware vs pooled-i.i.d. re-solve: {:.1}% faster\n",
+            self.improvement_pct()
+        ));
+        out
+    }
+
+    /// Serialize the comparison (hand-rolled JSON; no `serde` offline).
+    pub fn render_json(&self) -> String {
+        fn num(x: f64) -> String {
+            if x.is_finite() {
+                format!("{x:.6}")
+            } else {
+                "null".into()
+            }
+        }
+        let arm = |r: &MultiSimReport, after: f64| -> String {
+            let families: Vec<String> = r
+                .swaps
+                .iter()
+                .map(|s| {
+                    s.family
+                        .as_ref()
+                        .map_or_else(|| "null".to_string(), |f| format!("\"{f}\""))
+                })
+                .collect();
+            format!(
+                "{{\"mean_after\": {}, \"total\": {}, \"swaps\": {}, \"families\": [{}]}}",
+                num(after),
+                num(r.total()),
+                r.swaps.len(),
+                families.join(", ")
+            )
+        };
+        let mut out = String::from("{\n");
+        out.push_str("  \"bench\": \"hetero_fleet\",\n");
+        out.push_str(&format!("  \"n\": {},\n", self.spec_n));
+        out.push_str(&format!("  \"n_slow\": {},\n", self.n_slow));
+        out.push_str(&format!("  \"slow_factor\": {},\n", num(self.slow_factor)));
+        out.push_str(&format!("  \"coords\": {},\n", self.coords));
+        out.push_str(&format!("  \"iters\": {},\n", self.iters));
+        out.push_str(&format!("  \"measure_from\": {},\n", self.measure_from));
+        out.push_str(&format!(
+            "  \"fleet\": \"{}\",\n",
+            self.fleet_label.replace('"', "\\\"")
+        ));
+        out.push_str(&format!(
+            "  \"pooled\": {},\n",
+            arm(&self.pooled_run, self.pooled_after())
+        ));
+        out.push_str(&format!(
+            "  \"hetero\": {},\n",
+            arm(&self.hetero_run, self.hetero_after())
+        ));
+        out.push_str(&format!(
+            "  \"hetero_shard_counts\": [{}],\n",
+            self.hetero_shard_counts
+                .iter()
+                .map(|c| c.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+        out.push_str(&format!("  \"improvement_pct\": {}\n", num(self.improvement_pct())));
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// Run both arms of the hetero comparison on a 2-speed fleet with
+/// common random numbers. `base_acfg.hetero` is overridden per arm
+/// (`None` for the pooled baseline, `Some(hetero_cfg)` for the aware
+/// arm).
+#[allow(clippy::too_many_arguments)]
+pub fn compare_hetero_vs_pooled(
+    spec: &ProblemSpec,
+    initial: &BlockPartition,
+    fast: &ShiftedExponential,
+    n_slow: usize,
+    slow_factor: f64,
+    cfg: &MultiSimConfig,
+    base_acfg: AdaptiveConfig,
+    hetero_cfg: crate::coordinator::adaptive::HeteroConfig,
+    measure_from: usize,
+) -> Result<HeteroComparison> {
+    if measure_from >= cfg.iters {
+        return Err(Error::InvalidArgument(format!(
+            "measurement window is empty: measure_from {measure_from} must be < iters {}",
+            cfg.iters
+        )));
+    }
+    let fleet = two_speed_fleet(spec.n, n_slow, fast, slow_factor);
+    let pooled_cfg = AdaptiveConfig { hetero: None, ..base_acfg.clone() };
+    let hetero_acfg = AdaptiveConfig { hetero: Some(hetero_cfg), ..base_acfg };
+    let pooled = simulate_fleet_adaptive(spec, initial, &fleet, cfg, pooled_cfg)?;
+    let hetero = simulate_fleet_adaptive(spec, initial, &fleet, cfg, hetero_acfg)?;
+    let fleet_label = format!(
+        "2-speed: {}×{} + {}×{}",
+        spec.n - n_slow,
+        fleet[0].label(),
+        n_slow,
+        fleet[spec.n - 1].label()
+    );
+    Ok(HeteroComparison {
+        spec_n: spec.n,
+        coords: initial.total(),
+        iters: cfg.iters,
+        n_slow,
+        slow_factor,
+        measure_from,
+        fleet_label,
+        pooled_run: pooled.report,
+        hetero_run: hetero.report,
+        hetero_shard_counts: hetero.shard_counts,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1382,6 +1678,125 @@ mod tests {
         let cfg = MultiSimConfig { iters: 0, seed: 3, comm_latency: 0.0 };
         assert!(compare_shared_vs_split(&spec, &jobs, &schedule, &cfg).is_err());
         assert!(compare_shared_vs_split(&spec, &[], &schedule, &cfg).is_err());
+    }
+
+    #[test]
+    fn hetero_aware_resolve_beats_the_pooled_iid_baseline_on_a_two_speed_fleet() {
+        use crate::coordinator::adaptive::HeteroConfig;
+        // 5 fast + 5 slow (5×) machines. Both arms adapt off the same
+        // CRN streams from the same naive initial partition; the hetero
+        // arm additionally fits one model per worker and re-shards the
+        // data by fitted rate. The acceptance headline: the
+        // heterogeneity-aware re-solve strictly beats the pooled-i.i.d.
+        // one in expected overall runtime.
+        let (n, coords) = (10usize, 1_000usize);
+        let spec = ProblemSpec::paper_default(n, coords);
+        let fast = ShiftedExponential::new(1e-2, 50.0); // mean 150
+        let initial = BlockPartition::single_level(n, 1, coords);
+        let base = AdaptiveConfig {
+            window: 24 * n,
+            min_samples: 12 * n,
+            check_every: 10,
+            cooldown: 20,
+            drift_threshold: 0.2,
+            ..Default::default()
+        };
+        let hcfg = HeteroConfig {
+            per_worker_window: 96,
+            min_worker_samples: 10,
+            speed_weighted_shards: true,
+        };
+        let cfg = MultiSimConfig { iters: 200, seed: 4_021, comm_latency: 0.0 };
+        let cmp = compare_hetero_vs_pooled(
+            &spec, &initial, &fast, 5, 5.0, &cfg, base, hcfg, 60,
+        )
+        .unwrap();
+
+        // Both arms re-planned at least once off the filled window.
+        assert!(!cmp.pooled_run.swaps.is_empty());
+        assert!(!cmp.hetero_run.swaps.is_empty());
+        // CRN: identical machines until the first swap diverges the arms.
+        let first_swap = cmp
+            .pooled_run
+            .swaps[0]
+            .installed_at_iter
+            .min(cmp.hetero_run.swaps[0].installed_at_iter);
+        for i in 0..first_swap {
+            assert_eq!(
+                cmp.pooled_run.completion_times[i], cmp.hetero_run.completion_times[i],
+                "iter {i}: arms must share the cycle-time stream"
+            );
+        }
+        // Actuation: the slow half carries strictly fewer shards — but
+        // NOT zero: the simulator's finer virtual sharding keeps slow
+        // rows loaded (a zero count would zero their effective cycle
+        // time and flatter the hetero arm).
+        let counts = &cmp.hetero_shard_counts;
+        assert_eq!(
+            counts.iter().sum::<usize>(),
+            n * FLEET_SIM_SHARDS_PER_WORKER,
+            "every shard stays covered"
+        );
+        let min_fast = counts[..5].iter().min().unwrap();
+        let max_slow = counts[5..].iter().max().unwrap();
+        assert!(
+            max_slow < min_fast,
+            "slow rows must carry strictly fewer shards: {counts:?}"
+        );
+        assert!(
+            counts[5..].iter().all(|&c| c > 0),
+            "5× slower rows must keep a nonzero load at this granularity: {counts:?}"
+        );
+        // Headline: strictly faster after convergence.
+        let (p_after, h_after) = (cmp.pooled_after(), cmp.hetero_after());
+        assert!(
+            h_after < p_after,
+            "hetero-aware ({h_after:.1}) must beat the pooled i.i.d. arm ({p_after:.1})"
+        );
+        assert!(cmp.improvement_pct() > 0.0);
+        // The JSON artifact is well-formed enough and self-describing.
+        let json = cmp.render_json();
+        assert!(json.contains("\"bench\": \"hetero_fleet\""));
+        assert!(json.contains("\"hetero_shard_counts\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(cmp.render_report().contains("hetero-aware vs pooled-i.i.d."));
+        // Degenerate measurement windows are loud errors.
+        assert!(compare_hetero_vs_pooled(
+            &spec,
+            &initial,
+            &fast,
+            5,
+            5.0,
+            &cfg,
+            AdaptiveConfig::default(),
+            HeteroConfig::default(),
+            200,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fleet_sim_pooled_arm_matches_iid_machinery_on_a_homogeneous_fleet() {
+        // A "fleet" of identical machines with adaptation disabled (huge
+        // min_samples) must reproduce simulate_static on the same seed:
+        // one draw per worker per iteration in row order is exactly the
+        // i.i.d. stream.
+        let spec = spec(); // N = 8
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let fleet = two_speed_fleet(spec.n, 0, &d, 1.0);
+        let blocks = BlockPartition::new(vec![100; 8]);
+        let cfg = MultiSimConfig { iters: 40, seed: 9, comm_latency: 0.0 };
+        let acfg = AdaptiveConfig { min_samples: usize::MAX, ..Default::default() };
+        let run = simulate_fleet_adaptive(&spec, &blocks, &fleet, &cfg, acfg).unwrap();
+        let schedule = StragglerSchedule::stationary(Box::new(d));
+        let want = simulate_static(&spec, &blocks, &schedule, &cfg);
+        assert_eq!(run.report.completion_times, want.completion_times);
+        assert!(run.report.swaps.is_empty());
+        assert_eq!(
+            run.shard_counts,
+            vec![FLEET_SIM_SHARDS_PER_WORKER; 8],
+            "no actuation without a re-plan"
+        );
     }
 
     #[test]

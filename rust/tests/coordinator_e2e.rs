@@ -13,6 +13,7 @@ use bcgc::optimizer::blocks::BlockPartition;
 use bcgc::optimizer::runtime_model::ProblemSpec;
 use bcgc::runtime::host::{HostExecutor, HostModel};
 use bcgc::runtime::{host_factory, GradExecutor};
+use bcgc::testing::suite_seed;
 
 fn mlp_setup(n: usize, seed: u64) -> (Arc<bcgc::data::Dataset>, usize) {
     let ds = synthetic::classification(8, 4, 16 * n, n, 0.2, seed).unwrap();
@@ -42,13 +43,14 @@ fn run_once(
 #[test]
 fn coded_training_reduces_loss_multi_level() {
     let n = 6;
-    let (_, dim) = mlp_setup(n, 3);
+    let seed = suite_seed(3);
+    let (_, dim) = mlp_setup(n, seed);
     // A genuinely multi-level partition.
     let mut sizes = vec![0usize; n];
     sizes[0] = dim / 2;
     sizes[2] = dim / 4;
     sizes[n - 1] = dim - sizes[0] - sizes[2];
-    let report = run_once(BlockPartition::new(sizes), n, 200, vec![], 3);
+    let report = run_once(BlockPartition::new(sizes), n, 200, vec![], seed);
     let first = report.first_loss().unwrap();
     let last = report.final_loss().unwrap();
     assert!(last < first * 0.85, "loss {first} -> {last}");
@@ -62,12 +64,13 @@ fn coded_gradient_equals_uncoded_gradient_trajectory() {
     // coded run and an uncoded run must produce (nearly) identical loss
     // curves because the decoded gradient is exact.
     let n = 4;
-    let (_, dim) = mlp_setup(n, 11);
-    let uncoded = run_once(BlockPartition::single_level(n, 0, dim), n, 20, vec![], 11);
+    let seed = suite_seed(11);
+    let (_, dim) = mlp_setup(n, seed);
+    let uncoded = run_once(BlockPartition::single_level(n, 0, dim), n, 20, vec![], seed);
     let mut sizes = vec![0usize; n];
     sizes[1] = dim / 3;
     sizes[3] = dim - dim / 3;
-    let coded = run_once(BlockPartition::new(sizes), n, 20, vec![], 11);
+    let coded = run_once(BlockPartition::new(sizes), n, 20, vec![], seed);
     for ((i1, l1), (i2, l2)) in uncoded.loss_curve.iter().zip(coded.loss_curve.iter()) {
         assert_eq!(i1, i2);
         assert!(
@@ -80,12 +83,13 @@ fn coded_gradient_equals_uncoded_gradient_trajectory() {
 #[test]
 fn survives_dead_workers_up_to_min_redundancy() {
     let n = 5;
-    let (_, dim) = mlp_setup(n, 7);
+    let seed = suite_seed(7);
+    let (_, dim) = mlp_setup(n, seed);
     // All blocks tolerate ≥ 2 stragglers.
     let mut sizes = vec![0usize; n];
     sizes[2] = dim / 2;
     sizes[4] = dim - dim / 2;
-    let report = run_once(BlockPartition::new(sizes), n, 15, vec![1, 3], 7);
+    let report = run_once(BlockPartition::new(sizes), n, 15, vec![1, 3], seed);
     let first = report.first_loss().unwrap();
     let last = report.final_loss().unwrap();
     assert!(last < first, "loss {first} -> {last}");
@@ -131,8 +135,9 @@ fn real_pacing_mode_runs() {
 #[test]
 fn virtual_runtime_metrics_recorded() {
     let n = 4;
-    let (_, dim) = mlp_setup(n, 17);
-    let report = run_once(BlockPartition::single_level(n, 1, dim), n, 10, vec![], 17);
+    let seed = suite_seed(17);
+    let (_, dim) = mlp_setup(n, seed);
+    let report = run_once(BlockPartition::single_level(n, 1, dim), n, 10, vec![], seed);
     let stats = report.virtual_runtime_stats();
     assert_eq!(stats.count(), 10);
     assert!(stats.mean() > 0.0);
@@ -177,7 +182,8 @@ fn decoded_gradient_norm_matches_direct_sum() {
     // One iteration from θ0 = 0: the recorded grad_norm must equal the
     // norm of the directly-computed Σ_i g_i.
     let n = 4;
-    let ds = synthetic::classification(8, 4, 16 * n, n, 0.2, 23).unwrap();
+    let seed = suite_seed(23);
+    let ds = synthetic::classification(8, 4, 16 * n, n, 0.2, seed).unwrap();
     let dim = HostExecutor::mlp_dim(8, 16, 4);
     let factory = host_factory(ds.clone(), HostModel::Mlp { hidden: 16 });
 
@@ -189,7 +195,7 @@ fn decoded_gradient_norm_matches_direct_sum() {
     cfg.steps = 1;
     cfg.eval_every = 0;
     cfg.init_scale = 0.0; // θ0 = 0
-    cfg.seed = 23;
+    cfg.seed = seed;
     let report = train_stationary(cfg, Box::new(Deterministic::new(1.0)), factory).unwrap();
 
     let mut exec = HostExecutor::new(ds, HostModel::Mlp { hidden: 16 }).unwrap();

@@ -15,6 +15,7 @@ use bcgc::optimizer::closed_form::x_freq_blocks;
 use bcgc::optimizer::runtime_model::ProblemSpec;
 use bcgc::runtime::host::{HostExecutor, HostModel};
 use bcgc::runtime::host_factory;
+use bcgc::testing::suite_seed;
 
 fn mlp_setup(
     n: usize,
@@ -35,7 +36,7 @@ fn shrinking_the_pool_by_two_redimensions_and_completes_every_iteration() {
     // back and is absorbed as another epoch.
     let n = 8usize;
     let steps = 45usize;
-    let seed = 11u64;
+    let seed = suite_seed(11);
     let (factory, spec, dim) = mlp_setup(n, seed);
     let dist = ShiftedExponential::new(1e-3, 50.0);
     let blocks = x_freq_blocks(&spec, &dist, dim).unwrap();
@@ -114,7 +115,7 @@ fn departure_below_threshold_is_absorbed_as_a_dead_row_then_rebound() {
     // threshold and shrinks N 8 → 6.
     let n = 8usize;
     let steps = 30usize;
-    let seed = 13u64;
+    let seed = suite_seed(13);
     let (factory, spec, dim) = mlp_setup(n, seed);
     let dist = ShiftedExponential::new(1e-3, 50.0);
     let blocks = x_freq_blocks(&spec, &dist, dim).unwrap().raise_min_level(1);
@@ -155,7 +156,7 @@ fn departure_below_threshold_is_absorbed_as_a_dead_row_then_rebound() {
 #[test]
 fn join_is_not_assigned_work_until_the_next_epoch_swap() {
     let n = 4usize;
-    let seed = 17u64;
+    let seed = suite_seed(17);
     let (factory, spec, dim) = mlp_setup(n, seed);
     let dist = ShiftedExponential::new(1e-3, 50.0);
     let blocks = x_freq_blocks(&spec, &dist, dim).unwrap();

@@ -1,0 +1,166 @@
+//! Heterogeneity-aware engine, end to end on the threaded coordinator:
+//! a 2-speed fleet under the `[hetero]` policy keeps decoding exactly
+//! every iteration while the per-worker sensing → fleet re-solve →
+//! speed-weighted shard actuation loop runs, and after the first
+//! re-solve the slow workers carry strictly fewer shards than the fast
+//! ones. Complements the controller-level identity-keying regressions
+//! (`rust/src/coordinator/adaptive.rs`) and the virtual-time
+//! hetero-vs-pooled comparison (`rust/src/sim/multi.rs`).
+
+use bcgc::coordinator::adaptive::{AdaptiveConfig, HeteroConfig};
+use bcgc::coordinator::straggler::StragglerSchedule;
+use bcgc::coordinator::trainer::{train_fleet, TrainConfig};
+use bcgc::data::synthetic;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::runtime::host::{HostExecutor, HostModel};
+use bcgc::runtime::{host_factory, GradExecutor};
+use bcgc::sim::two_speed_fleet;
+use bcgc::testing::suite_seed;
+
+#[test]
+fn two_speed_fleet_decodes_exactly_and_weights_shards_after_the_first_resolve() {
+    // 3 fast + 3 slow (6×) machines. θ0 = 0 with lr = 0 keeps the model
+    // pinned, so EVERY iteration's decoded gradient must equal the
+    // direct full-dataset sum — before, through, and after the
+    // speed-weighted re-shard (which moves data between subsets but
+    // must never change the decoded total).
+    let n = 6usize;
+    let steps = 36usize;
+    let seed = suite_seed(47);
+    let fast = ShiftedExponential::new(1e-2, 50.0);
+    let fleet = two_speed_fleet(n, 3, &fast, 6.0);
+
+    let ds = synthetic::classification(8, 4, 16 * n, n, 0.2, seed).unwrap();
+    let dim = HostExecutor::mlp_dim(8, 16, 4);
+    let factory = host_factory(ds.clone(), HostModel::Mlp { hidden: 16 });
+    let spec = ProblemSpec::new(n, dim, 16 * n, 1.0);
+
+    let mut cfg = TrainConfig::new(spec, BlockPartition::single_level(n, 1, dim));
+    cfg.steps = steps;
+    cfg.lr = 0.0; // pin θ so every decode is checkable against θ0
+    cfg.eval_every = 0;
+    cfg.seed = seed;
+    cfg.init_scale = 0.0;
+    cfg.adaptive = Some(AdaptiveConfig {
+        window: 60 * n,
+        min_samples: 10 * n,
+        check_every: 5,
+        cooldown: 10,
+        drift_threshold: 0.2,
+        hetero: Some(HeteroConfig {
+            per_worker_window: 64,
+            min_worker_samples: 8,
+            speed_weighted_shards: true,
+        }),
+        ..Default::default()
+    });
+    let schedule = StragglerSchedule::stationary(Box::new(fast));
+    let report = train_fleet(cfg, schedule, fleet, factory).unwrap();
+
+    // The mixture drifts far from the fast-only prior: at least one
+    // re-solve landed (epoch 0 + ≥ 1 install).
+    assert!(
+        report.scheme_epochs.len() >= 2,
+        "the 2-speed fleet must trigger a re-solve: {} epochs",
+        report.scheme_epochs.len()
+    );
+
+    // Exact decode EVERY iteration: the recorded grad norm equals the
+    // direct Σ over all dataset shards at θ0 = 0.
+    let mut exec = HostExecutor::new(ds, HostModel::Mlp { hidden: 16 }).unwrap();
+    let theta0 = vec![0.0f32; dim];
+    let mut g = vec![0.0f64; dim];
+    for s in 0..n {
+        for (acc, v) in g.iter_mut().zip(exec.grad_shard(&theta0, s).unwrap()) {
+            *acc += v as f64;
+        }
+    }
+    let want: f64 = g.iter().map(|x| x * x).sum::<f64>().sqrt();
+    assert!(want > 0.0);
+    assert_eq!(report.steps(), steps);
+    for m in &report.iters {
+        assert!(
+            (m.grad_norm - want).abs() < 1e-6 * (1.0 + want),
+            "iter {}: decoded {} vs direct {} — the weighted re-shard must not change \
+             the decoded gradient",
+            m.iter,
+            m.grad_norm,
+            want
+        );
+    }
+}
+
+#[test]
+fn slow_workers_carry_strictly_fewer_shards_after_the_first_resolve() {
+    // Same fleet shape, driven through the session so the live shard
+    // map is inspectable: after the first hetero re-solve the slow ids'
+    // subsets back strictly fewer shards than the fast ids'.
+    use bcgc::coordinator::trainer::TrainSession;
+    let n = 6usize;
+    let seed = suite_seed(53);
+    let fast = ShiftedExponential::new(1e-2, 50.0);
+    let fleet = two_speed_fleet(n, 3, &fast, 6.0);
+
+    let ds = synthetic::classification(8, 4, 16 * n, n, 0.2, seed).unwrap();
+    let dim = HostExecutor::mlp_dim(8, 16, 4);
+    let factory = host_factory(ds, HostModel::Mlp { hidden: 16 });
+    let spec = ProblemSpec::new(n, dim, 16 * n, 1.0);
+
+    let mut cfg = TrainConfig::new(spec, BlockPartition::single_level(n, 1, dim));
+    cfg.steps = 40;
+    cfg.lr = 2e-3;
+    cfg.eval_every = 20;
+    cfg.seed = seed;
+    cfg.adaptive = Some(AdaptiveConfig {
+        window: 60 * n,
+        min_samples: 10 * n,
+        check_every: 5,
+        cooldown: 10,
+        drift_threshold: 0.2,
+        hetero: Some(HeteroConfig {
+            per_worker_window: 64,
+            min_worker_samples: 8,
+            speed_weighted_shards: true,
+        }),
+        ..Default::default()
+    });
+    let schedule = StragglerSchedule::stationary(Box::new(fast));
+    let mut session = TrainSession::start_fleet(cfg, schedule, fleet, factory).unwrap();
+
+    let mut resolved_at = None;
+    for iter in 0..40 {
+        session.adapt(iter).unwrap();
+        if resolved_at.is_none() && session.epoch() > 0 {
+            resolved_at = Some(iter);
+        }
+        session.step(iter).unwrap();
+    }
+    let resolved_at = resolved_at.expect("the 2-speed fleet must trigger a re-solve");
+
+    // Ids 0..3 are fast, 3..6 slow (identity roster: no churn here, so
+    // row == id). The live shard map must load them by fitted speed.
+    let map = session.job().shard_map().clone();
+    let counts: Vec<usize> = map.iter().map(Vec::len).collect();
+    assert_eq!(counts.iter().sum::<usize>(), n, "every shard stays covered exactly once");
+    let min_fast = *counts[..3].iter().min().unwrap();
+    let max_slow = *counts[3..].iter().max().unwrap();
+    assert!(
+        max_slow < min_fast,
+        "after the re-solve at iter {resolved_at}, slow workers must carry strictly \
+         fewer shards: {counts:?}"
+    );
+    // The load multipliers mirror the placement (Σρ = N preserves work).
+    let rho = session.job().load_multipliers().to_vec();
+    assert!((rho.iter().sum::<f64>() - n as f64).abs() < 1e-9, "{rho:?}");
+    assert!(rho[..3].iter().all(|&r| r >= 1.0), "{rho:?}");
+    assert!(rho[3..].iter().all(|&r| r <= 1.0), "{rho:?}");
+
+    let report = session.finish().unwrap();
+    assert!(report.iters.iter().all(|m| m.grad_norm.is_finite()));
+    assert!(
+        report.final_loss().unwrap() < report.first_loss().unwrap(),
+        "training must still converge under weighted shards"
+    );
+}

@@ -1,0 +1,188 @@
+//! Property tests for the heterogeneity-aware engine, driven by
+//! `testing::Runner` (replay any failure with `BCGC_PROP_SEED`; crank
+//! cases with `BCGC_PROP_CASES` — see `rust/src/testing/mod.rs`):
+//!
+//! * the fleet's Monte-Carlo order statistics collapse to the exact
+//!   i.i.d. quadrature when every worker shares one model — bit-exact
+//!   on the shared-handle (pooled-fallback) route, and within MC
+//!   tolerance under CRN for per-worker clones;
+//! * the speed-weighted shard split covers every shard exactly once,
+//!   keeps every subset within one shard of its exact quota, and is
+//!   permutation-equivariant in the worker order.
+
+use std::sync::Arc;
+
+use bcgc::coordinator::master::{redistribute_shards_weighted, shard_quota_weighted};
+use bcgc::distribution::hetero::{fleet_mc_order_stats, HeteroFleet};
+use bcgc::distribution::order_stats::shifted_exp_exact;
+use bcgc::distribution::runtime_dist::{OrderStatConfig, RuntimeDistribution};
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::testing::{gens, Runner};
+
+/// Heavy MC properties keep the runner's seed (so `BCGC_PROP_SEED`
+/// still pins the stream) but cap the case count.
+fn capped_runner(cap: usize) -> Runner {
+    let r = Runner::default();
+    Runner::new(r.cases.min(cap), r.seed)
+}
+
+#[test]
+fn homogeneous_fleet_mc_collapses_to_the_exact_iid_quadrature_under_crn() {
+    capped_runner(20).run("hetero-mc-collapses-to-iid", |rng| {
+        let n = gens::usize_in(rng, 3, 10);
+        let mu = gens::f64_in(rng, 1e-3, 1e-2);
+        let t0 = gens::f64_in(rng, 20.0, 100.0);
+        let d = ShiftedExponential::new(mu, t0);
+        let exact = shifted_exp_exact(&d, n);
+
+        // Route 1 — shared handle (every worker fell back to the pooled
+        // fit): the homogeneous special case must be EXACT, not MC.
+        let shared = HeteroFleet::homogeneous(Arc::new(d.clone()), n);
+        if !shared.is_homogeneous() {
+            return Err("a shared-handle fleet must detect as homogeneous".into());
+        }
+        let os = shared.order_stat_moments(n, &OrderStatConfig::default());
+        for k in 0..n {
+            if os.t[k] != exact.t[k] || os.t_prime[k] != exact.t_prime[k] {
+                return Err(format!(
+                    "k={k}: homogeneous route must be bit-identical to the quadrature \
+                     ({} vs {}, {} vs {})",
+                    os.t[k], exact.t[k], os.t_prime[k], exact.t_prime[k]
+                ));
+            }
+        }
+
+        // Route 2 — per-worker clones (distinct handles): the generic
+        // non-identical MC must agree with the i.i.d. closed form
+        // within Monte-Carlo tolerance, and be CRN-deterministic.
+        let clones = HeteroFleet::per_worker(
+            (0..n)
+                .map(|_| Arc::new(d.clone()) as Arc<dyn RuntimeDistribution>)
+                .collect(),
+        );
+        if clones.is_homogeneous() {
+            return Err("distinct handles must take the MC route".into());
+        }
+        let cfg = OrderStatConfig { trials: 20_000, seed: rng.next_u64() };
+        let mc = clones.order_stat_moments(n, &cfg);
+        let mc2 = fleet_mc_order_stats(&clones, &cfg);
+        for k in 0..n {
+            if mc.t[k] != mc2.t[k] || mc.t_prime[k] != mc2.t_prime[k] {
+                return Err(format!("k={k}: CRN must make the MC bit-reproducible"));
+            }
+            let rel_t = (mc.t[k] - exact.t[k]).abs() / exact.t[k];
+            let rel_p = (mc.t_prime[k] - exact.t_prime[k]).abs() / exact.t_prime[k];
+            if rel_t > 0.06 || rel_p > 0.06 {
+                return Err(format!(
+                    "k={k}: hetero MC strays from the i.i.d. quadrature: t rel {rel_t:.4}, \
+                     t' rel {rel_p:.4} (n={n}, mu={mu:.2e}, t0={t0:.1})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn weighted_shard_split_covers_once_within_quota_gap() {
+    Runner::default().run("weighted-split-cover-quota", |rng| {
+        let n = gens::usize_in(rng, 1, 24);
+        let m = gens::usize_in(rng, 1, 60);
+        let weights: Vec<f64> = (0..n).map(|_| gens::f64_in(rng, 0.05, 10.0)).collect();
+        let map = redistribute_shards_weighted(&weights, m);
+        if map.len() != n {
+            return Err(format!("map has {} subsets, want {n}", map.len()));
+        }
+        // Exact cover: every shard in exactly one subset.
+        let mut seen = vec![0usize; m];
+        for backing in &map {
+            for &s in backing {
+                if s >= m {
+                    return Err(format!("shard {s} out of range (m={m})"));
+                }
+                seen[s] += 1;
+            }
+        }
+        if seen.iter().any(|&c| c != 1) {
+            return Err(format!("cover violated: {seen:?} (weights {weights:?})"));
+        }
+        // Quota gap: every subset within one shard of its exact quota.
+        let total: f64 = weights.iter().sum();
+        for (i, backing) in map.iter().enumerate() {
+            let q = weights[i] * m as f64 / total;
+            if (backing.len() as f64 - q).abs() >= 1.0 {
+                return Err(format!(
+                    "subset {i}: count {} vs quota {q:.3} breaks the ≤1-shard gap",
+                    backing.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn weighted_shard_counts_are_permutation_equivariant() {
+    Runner::default().run("weighted-split-equivariance", |rng| {
+        let n = gens::usize_in(rng, 2, 16);
+        let m = gens::usize_in(rng, 1, 48);
+        // Continuous random weights: remainder ties have measure zero,
+        // so the apportionment sees each worker only through its own
+        // quota and must follow any reshuffle of the workers.
+        let weights: Vec<f64> = (0..n).map(|_| gens::f64_in(rng, 0.05, 10.0)).collect();
+        let base = shard_quota_weighted(&weights, m);
+        // A random permutation (Fisher–Yates off the case RNG).
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            perm.swap(i, j);
+        }
+        let permuted_w: Vec<f64> = perm.iter().map(|&i| weights[i]).collect();
+        let permuted_c = shard_quota_weighted(&permuted_w, m);
+        for (slot, &i) in perm.iter().enumerate() {
+            if permuted_c[slot] != base[i] {
+                return Err(format!(
+                    "worker {i} changed count under permutation: {base:?} → {permuted_c:?} \
+                     (perm {perm:?}, weights {weights:?}, m={m})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn weighted_split_matches_fleet_rates_end_to_end() {
+    // The composition the engine actually runs: fleet → rates →
+    // weighted split. Fast workers never receive fewer shards than
+    // slow ones.
+    capped_runner(40).run("fleet-rates-into-split", |rng| {
+        let n = gens::usize_in(rng, 2, 12);
+        let n_slow = gens::usize_in(rng, 1, n - 1);
+        let factor = gens::f64_in(rng, 1.5, 8.0);
+        let fast = ShiftedExponential::new(1e-2, 50.0);
+        let slow = ShiftedExponential::new(fast.mu / factor, fast.t0 * factor);
+        let fleet = HeteroFleet::per_worker(
+            (0..n)
+                .map(|w| {
+                    if w < n - n_slow {
+                        Arc::new(fast.clone()) as Arc<dyn RuntimeDistribution>
+                    } else {
+                        Arc::new(slow.clone())
+                    }
+                })
+                .collect(),
+        );
+        let m = gens::usize_in(rng, n, 4 * n);
+        let map = redistribute_shards_weighted(&fleet.rates(), m);
+        let counts: Vec<usize> = map.iter().map(Vec::len).collect();
+        let min_fast = counts[..n - n_slow].iter().min().unwrap();
+        let max_slow = counts[n - n_slow..].iter().max().unwrap();
+        if max_slow > min_fast {
+            return Err(format!(
+                "a slow worker out-carries a fast one: {counts:?} (factor {factor:.2})"
+            ));
+        }
+        Ok(())
+    });
+}

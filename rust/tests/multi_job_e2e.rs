@@ -19,6 +19,7 @@ use bcgc::optimizer::closed_form::x_freq_blocks;
 use bcgc::optimizer::runtime_model::ProblemSpec;
 use bcgc::runtime::host::{HostExecutor, HostModel};
 use bcgc::runtime::{host_factory, ExecutorFactory, GradExecutor};
+use bcgc::testing::suite_seed;
 
 fn stationary(mu: f64) -> StragglerSchedule {
     StragglerSchedule::stationary(Box::new(ShiftedExponential::new(mu, 50.0)))
@@ -31,7 +32,7 @@ fn two_jobs_decode_their_own_exact_gradients_on_one_pool() {
     // its OWN dataset's shards — any cross-job codeword leakage would
     // corrupt the match.
     let n = 4usize;
-    let seed = 31u64;
+    let seed = suite_seed(31);
 
     let ds_a = synthetic::classification(8, 4, 16 * n, n, 0.2, seed).unwrap();
     let dim_a = HostExecutor::mlp_dim(8, 16, 4);
@@ -108,7 +109,7 @@ fn per_job_executor_failure_never_stalls_the_healthy_tenant() {
     // job 0 must keep decoding with all four workers, and the shared
     // thread must survive (transient, not fatal).
     let n = 4usize;
-    let seed = 37u64;
+    let seed = suite_seed(37);
     let ds = synthetic::classification(8, 4, 16 * n, n, 0.2, seed).unwrap();
     let dim = HostExecutor::mlp_dim(8, 16, 4);
 
@@ -159,7 +160,7 @@ fn pool_churn_redimensions_every_job_off_one_membership_epoch() {
     // as fresh scheme epochs, complete every iteration, and keep their
     // decode exact through the swap.
     let n = 6usize;
-    let seed = 41u64;
+    let seed = suite_seed(41);
     let dist = ShiftedExponential::new(1e-3, 50.0);
     let dim = HostExecutor::mlp_dim(8, 16, 4);
 
