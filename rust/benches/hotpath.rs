@@ -1,28 +1,35 @@
 //! Micro-benchmarks of the coordinator hot path, used by the §Perf pass:
 //! runtime-model evaluation, simplex projection, block encode, decode
-//! (cold/cached), straggler sampling, event-sim playout.
+//! (cold/cached), straggler sampling, event-sim playout — plus the
+//! large-L data-plane section behind `BENCH_hotpath.json`: at L = 1M the
+//! fused f32 encode kernel must strictly beat the one-pass-per-source
+//! axpy baseline, and the cached decode+combine must land within 3× of
+//! a memcpy over the same bytes.
 //!
 //! Run: `cargo bench --bench hotpath`
 
-use bcgc::bench_harness::{banner, black_box, fmt_ns, Bencher, Table};
-use bcgc::coding::decoder::DecodeCache;
+use bcgc::bench_harness::{banner, black_box, fmt_ns, stamp_bench_meta, Bencher, Sample, Table};
+use bcgc::coding::decoder::{decode_into, DecodeCache};
+use bcgc::coding::encoder::GradientCode;
 use bcgc::coding::scheme::CodingScheme;
 use bcgc::distribution::shifted_exp::ShiftedExponential;
 use bcgc::distribution::CycleTimeDistribution;
-use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::linalg::kernels::{fused_combine_f32, naive_combine_f32_to_f64};
 use bcgc::optimizer::projection::{project_simplex, project_simplex_bisect};
 use bcgc::optimizer::rounding::round_to_blocks;
 use bcgc::optimizer::runtime_model::{sort_times, tau_hat_sorted, ProblemSpec, WorkModel};
 use bcgc::sim::{simulate_iteration, SimConfig};
+use bcgc::util::buffers::BufferPool;
 use bcgc::util::rng::Rng;
 
 fn main() {
     banner("hot path micro-benchmarks", "N=20 (paper's Fig. 3 scale) unless noted.");
+    let seed = 3u64;
     let n = 20usize;
     let l = 20_000usize;
     let spec = ProblemSpec::paper_default(n, l);
     let dist = ShiftedExponential::new(1e-3, 50.0);
-    let mut rng = Rng::new(3);
+    let mut rng = Rng::new(seed);
     let b = Bencher::new(5, 25);
 
     // A representative optimized partition.
@@ -35,7 +42,7 @@ fn main() {
     sort_times(&mut times);
 
     let mut table = Table::new(&["op", "median", "p10", "p90"]);
-    let mut add = |name: &str, s: bcgc::bench_harness::Sample| {
+    let mut add = |name: &str, s: Sample| {
         table.row(&[
             name.to_string(),
             fmt_ns(s.median_ns()),
@@ -118,5 +125,137 @@ fn main() {
     }
 
     table.print();
-    let _ = BlockPartition::single_level(2, 0, 2); // keep import used
+
+    // ---- Large-L data plane (the BENCH_hotpath.json acceptance rows) ----
+    //
+    // One L = 1M block at s = 5: the worker's fused f32 encode over the
+    // 6 held shard gradients vs the one-pass-per-source axpy it
+    // replaced, and the master's cached decode+combine over the 15
+    // survivor codewords vs a memcpy of the same survivor bytes.
+    let big_l = 1_000_000usize;
+    let big_s = 5usize;
+    banner(
+        "large-L data plane",
+        "L=1M, N=20, s=5: fused f32 encode vs axpy; cached decode_into vs memcpy.",
+    );
+    let code_big = GradientCode::cyclic_mds(n, big_s, &mut rng).unwrap();
+    let big_b = Bencher::new(2, 9);
+
+    // Worker side: 6 full-length f32 shard gradients, row-0 coefficients.
+    let shards32: Vec<Vec<f32>> = (0..big_s + 1)
+        .map(|_| (0..big_l).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let enc_sources: Vec<(f64, &[f32])> = code_big.supports[0]
+        .iter()
+        .enumerate()
+        .map(|(k, &subset)| (code_big.b[(0, subset)], shards32[k].as_slice()))
+        .collect();
+    let pool = BufferPool::new(4);
+    let s_enc_fused = big_b.run("enc_fused", || {
+        let mut out = pool.take(big_l);
+        fused_combine_f32(&enc_sources, big_l, &mut out);
+        let v = out[0];
+        pool.put(out);
+        v
+    });
+    let s_enc_axpy = big_b.run("enc_axpy", || {
+        let out = naive_combine_f32_to_f64(&enc_sources, big_l);
+        black_box(out[0])
+    });
+
+    // Master side: 15 survivor codewords on the f32 wire, decode vector
+    // served by the cache, combine written straight into a preallocated
+    // gradient slice.
+    let survivors_big: Vec<usize> = (0..n - big_s).collect();
+    let wire: Vec<Vec<f32>> = survivors_big
+        .iter()
+        .map(|&w| {
+            let srcs: Vec<(f64, &[f32])> = code_big.supports[w]
+                .iter()
+                .enumerate()
+                .map(|(k, &subset)| (code_big.b[(w, subset)], shards32[k].as_slice()))
+                .collect();
+            let mut out = Vec::new();
+            fused_combine_f32(&srcs, big_l, &mut out);
+            out
+        })
+        .collect();
+    let picked: Vec<&[f32]> = wire.iter().map(|c| c.as_slice()).collect();
+    let mut cache_big = DecodeCache::new(8);
+    let _ = cache_big.get(&code_big, &survivors_big).unwrap();
+    let mut grad_out = vec![0.0f64; big_l];
+    let s_decode = big_b.run("dec_into", || {
+        let a = cache_big.get(&code_big, &survivors_big).unwrap().to_vec();
+        decode_into(&a, &picked, &mut grad_out);
+        grad_out[0]
+    });
+    // Baseline: memcpy the same survivor bytes (15 × 1M f32).
+    let mut stage = vec![0.0f32; big_l];
+    let s_memcpy = big_b.run("memcpy", || {
+        for c in &picked {
+            stage.copy_from_slice(c);
+        }
+        black_box(stage[0])
+    });
+
+    let mut big_table = Table::new(&["op", "median", "p10", "p90"]);
+    for s in [&s_enc_fused, &s_enc_axpy, &s_decode, &s_memcpy] {
+        big_table.row(&[
+            s.name.clone(),
+            fmt_ns(s.median_ns()),
+            fmt_ns(s.p10_ns()),
+            fmt_ns(s.p90_ns()),
+        ]);
+    }
+    big_table.print();
+
+    let enc_speedup = s_enc_axpy.median_ns() / s_enc_fused.median_ns();
+    let dec_vs_memcpy = s_decode.median_ns() / s_memcpy.median_ns();
+    println!("\nfused encode speedup over axpy: {enc_speedup:.2}x");
+    println!("cached decode+combine vs memcpy: {dec_vs_memcpy:.2}x");
+
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"hotpath\",\n");
+    json.push_str(&format!(
+        "  \"large_l\": {{\"l\": {big_l}, \"n\": {n}, \"s\": {big_s}, \"survivors\": {}}},\n",
+        survivors_big.len()
+    ));
+    json.push_str("  \"rows\": [\n");
+    let rows = [&s_enc_fused, &s_enc_axpy, &s_decode, &s_memcpy];
+    for (i, s) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"op\": \"{}\", \"median_ns\": {:.1}, \"p10_ns\": {:.1}, \"p90_ns\": {:.1}}}{}\n",
+            s.name,
+            s.median_ns(),
+            s.p10_ns(),
+            s.p90_ns(),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!("  \"encode_fused_speedup\": {enc_speedup:.3},\n"));
+    json.push_str(&format!("  \"decode_vs_memcpy\": {dec_vs_memcpy:.3}\n"));
+    json.push_str("}\n");
+    let stamped = stamp_bench_meta(
+        &json,
+        seed,
+        &format!("N={n} L={big_l} s={big_s} fused-data-plane"),
+    );
+    std::fs::write("BENCH_hotpath.json", &stamped).expect("write BENCH_hotpath.json");
+    println!("\nwrote BENCH_hotpath.json");
+
+    // Acceptance gates (after the artifact is on disk, so a failure
+    // still leaves the numbers inspectable).
+    assert!(
+        s_enc_fused.median_ns() < s_enc_axpy.median_ns(),
+        "fused encode ({}) must strictly beat the axpy baseline ({}) at L={big_l}",
+        fmt_ns(s_enc_fused.median_ns()),
+        fmt_ns(s_enc_axpy.median_ns()),
+    );
+    assert!(
+        dec_vs_memcpy <= 3.0,
+        "cached decode+combine ({}) must be within 3x of memcpy ({}) over the same bytes",
+        fmt_ns(s_decode.median_ns()),
+        fmt_ns(s_memcpy.median_ns()),
+    );
 }

@@ -13,7 +13,7 @@
 use std::collections::HashMap;
 
 use crate::coding::encoder::{Construction, GradientCode};
-use crate::linalg::lu;
+use crate::linalg::{kernels, lu};
 use crate::{Error, Result};
 
 /// Compute the decode vector for a survivor set (0-based worker indices).
@@ -75,6 +75,19 @@ pub fn decode_vector(code: &GradientCode, survivors: &[usize]) -> Result<Vec<f64
     Ok(a)
 }
 
+/// Apply a decode vector to `f32` wire contributions, writing straight
+/// into a caller-owned `f64` slice (typically the job's preallocated
+/// gradient range) — no intermediate vector, no copy. Accumulation is
+/// f64 via the fused tiled kernel; large blocks combine tiles on scoped
+/// threads ([`kernels::fused_combine_into_f64_auto`]).
+pub fn decode_into(a: &[f64], contributions: &[&[f32]], out: &mut [f64]) {
+    assert_eq!(a.len(), contributions.len());
+    debug_assert!(contributions.iter().all(|c| c.len() == out.len()));
+    let sources: Vec<(f64, &[f32])> =
+        a.iter().copied().zip(contributions.iter().copied()).collect();
+    kernels::fused_combine_into_f64_auto(&sources, out);
+}
+
 /// Apply a decode vector: `Σ_k a_k · contribution_k`.
 pub fn decode(a: &[f64], contributions: &[&[f64]]) -> Vec<f64> {
     assert_eq!(a.len(), contributions.len());
@@ -119,19 +132,28 @@ fn key_of(s: usize, sorted_survivors: &[usize]) -> Key {
     }
 }
 
-/// LRU-less memo of decode vectors (survivor-set patterns per iteration are
-/// few — one per redundancy level — so an unbounded map with a generous cap
-/// and full reset is simpler and faster than real LRU).
+/// Bounded memo of decode vectors with least-recently-used eviction.
+///
+/// Survivor-set patterns per iteration are few — one per redundancy
+/// level in the common case — but under churny straggler patterns more
+/// than `capacity` distinct sets can stream through. The old wholesale
+/// `map.clear()` on every miss at capacity evicted the *hot* sets along
+/// with the cold ones, turning every subsequent access into a fresh
+/// `(N−s)³` solve. Entries now carry a last-touch tick; a miss at
+/// capacity evicts only the stalest entry (an O(len) scan — capacity is
+/// small and eviction is the rare path), so hot sets keep hitting no
+/// matter how many cold patterns churn past.
 pub struct DecodeCache {
-    map: HashMap<Key, Vec<f64>>,
+    map: HashMap<Key, (u64, Vec<f64>)>,
     capacity: usize,
+    tick: u64,
     pub hits: u64,
     pub misses: u64,
 }
 
 impl DecodeCache {
     pub fn new(capacity: usize) -> Self {
-        Self { map: HashMap::new(), capacity, hits: 0, misses: 0 }
+        Self { map: HashMap::new(), capacity, tick: 0, hits: 0, misses: 0 }
     }
 
     /// Drop every cached vector while keeping the hit/miss counters.
@@ -160,17 +182,25 @@ impl DecodeCache {
         let mut canon: Vec<usize> = survivors[..need].to_vec();
         canon.sort_unstable();
         let key = key_of(code.s, &canon);
-        if !self.map.contains_key(&key) {
+        self.tick += 1;
+        let now = self.tick;
+        if let Some(entry) = self.map.get_mut(&key) {
+            self.hits += 1;
+            entry.0 = now;
+        } else {
             self.misses += 1;
             if self.map.len() >= self.capacity {
-                self.map.clear(); // cheap wholesale eviction
+                // Evict only the least-recently-touched entry.
+                if let Some(stale) =
+                    self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k.clone())
+                {
+                    self.map.remove(&stale);
+                }
             }
             let a = decode_vector(code, &canon)?;
-            self.map.insert(key.clone(), a);
-        } else {
-            self.hits += 1;
+            self.map.insert(key.clone(), (now, a));
         }
-        Ok(self.map.get(&key).unwrap())
+        Ok(&self.map.get(&key).unwrap().1)
     }
 }
 
@@ -354,5 +384,73 @@ mod tests {
         let s2 = [0usize, 2, 4, 5, 1];
         let _ = cache.get(&code, &s2).unwrap();
         assert_eq!(cache.hits, 2);
+    }
+
+    #[test]
+    fn cache_keeps_hot_entries_while_cold_patterns_churn() {
+        // Regression for the wholesale-clear eviction: at capacity, every
+        // miss cleared the whole map, so a survivor set re-used every
+        // round still missed after each cold insert. With LRU eviction
+        // the constantly-touched hot set must never be evicted, however
+        // many distinct cold patterns stream past capacity.
+        let mut rng = Rng::new(41);
+        let (n, s) = (12usize, 2usize);
+        let code = GradientCode::cyclic_mds(n, s, &mut rng).unwrap();
+        let mut cache = DecodeCache::new(4);
+        let hot: Vec<usize> = (0..n - s).collect(); // drops workers {10, 11}
+        let _ = cache.get(&code, &hot).unwrap();
+        // Distinct cold sets: drop a different pair (i, j) ≠ (10, 11).
+        let mut cold: Vec<Vec<usize>> = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if (i, j) != (n - 2, n - 1) {
+                    cold.push((0..n).filter(|&w| w != i && w != j).collect());
+                }
+            }
+        }
+        let rounds = 3 * cache.capacity; // well past capacity
+        for set in cold.iter().take(rounds) {
+            let _ = cache.get(&code, &hot).unwrap(); // hot touch every round
+            let _ = cache.get(&code, set).unwrap(); // cold miss every round
+        }
+        assert_eq!(cache.hits, rounds as u64, "hot set must hit every round");
+        assert_eq!(cache.misses, 1 + rounds as u64, "cold sets each miss once");
+    }
+
+    #[test]
+    fn decode_into_matches_decode_on_f32_wire() {
+        let mut rng = Rng::new(43);
+        let (n, s, dim) = (6usize, 2usize, 1500usize);
+        let code = GradientCode::cyclic_mds(n, s, &mut rng).unwrap();
+        let grads: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+        let contribs: Vec<Vec<f64>> = (0..n)
+            .map(|w| {
+                let held: Vec<&[f64]> =
+                    code.supports[w].iter().map(|&i| grads[i].as_slice()).collect();
+                code.encode(w, &held)
+            })
+            .collect();
+        let survivors: Vec<usize> = (0..n - s).collect();
+        let a = decode_vector(&code, &survivors).unwrap();
+        let picked64: Vec<&[f64]> = survivors.iter().map(|&w| contribs[w].as_slice()).collect();
+        let want = decode(&a, &picked64);
+        // Same contributions rounded to the f32 wire.
+        let wire: Vec<Vec<f32>> = survivors
+            .iter()
+            .map(|&w| contribs[w].iter().map(|&v| v as f32).collect())
+            .collect();
+        let picked32: Vec<&[f32]> = wire.iter().map(|c| c.as_slice()).collect();
+        let mut got = vec![f64::NAN; dim]; // must be fully overwritten
+        decode_into(&a, &picked32, &mut got);
+        for d in 0..dim {
+            assert!(
+                (got[d] - want[d]).abs() < 1e-5 * (1.0 + want[d].abs()),
+                "coord {d}: {} vs {}",
+                got[d],
+                want[d]
+            );
+        }
     }
 }

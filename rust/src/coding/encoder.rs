@@ -7,7 +7,7 @@
 //! its cyclic data allocation).
 
 use crate::coding::assignment;
-use crate::linalg::{lu, Matrix};
+use crate::linalg::{kernels, lu, Matrix};
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 
@@ -137,15 +137,16 @@ impl GradientCode {
         let support = &self.supports[w];
         assert_eq!(shard_grads.len(), support.len(), "need one gradient per held subset");
         let dim = shard_grads[0].len();
-        let mut out = vec![0.0; dim];
-        for (k, &subset) in support.iter().enumerate() {
-            let coef = self.b[(w, subset)];
-            let g = shard_grads[k];
-            assert_eq!(g.len(), dim);
-            for (o, &v) in out.iter_mut().zip(g.iter()) {
-                *o += coef * v;
-            }
-        }
+        let sources: Vec<(f64, &[f64])> = support
+            .iter()
+            .enumerate()
+            .map(|(k, &subset)| {
+                assert_eq!(shard_grads[k].len(), dim);
+                (self.b[(w, subset)], shard_grads[k])
+            })
+            .collect();
+        let mut out = Vec::new();
+        kernels::fused_combine_f64(&sources, dim, &mut out);
         out
     }
 

@@ -9,6 +9,7 @@ use std::collections::HashMap;
 
 use crate::coding::assignment;
 use crate::coding::encoder::GradientCode;
+use crate::linalg::kernels;
 use crate::optimizer::blocks::{BlockPartition, BlockRange};
 use crate::util::rng::Rng;
 use crate::{Error, Result};
@@ -85,47 +86,38 @@ impl CodingScheme {
     ) -> Vec<f64> {
         let code = &self.codes[&r.s];
         debug_assert!(shard_grads.len() > r.s, "worker holds too few shards");
-        let support = &code.supports[w];
-        let mut out = vec![0.0f64; r.len()];
-        for (k, &subset) in support.iter().take(r.s + 1).enumerate() {
-            let coef = code.b[(w, subset)];
-            if coef == 0.0 {
-                continue;
-            }
-            let g = &shard_grads[k][r.start..r.end];
-            for (o, &v) in out.iter_mut().zip(g.iter()) {
-                *o += coef * v;
-            }
-        }
+        let sources: Vec<(f64, &[f64])> = code.supports[w]
+            .iter()
+            .take(r.s + 1)
+            .enumerate()
+            .map(|(k, &subset)| (code.b[(w, subset)], &shard_grads[k][r.start..r.end]))
+            .collect();
+        let mut out = Vec::new();
+        kernels::fused_combine_f64(&sources, r.len(), &mut out);
         out
     }
 
     /// [`Self::encode_block_range`] straight from `f32` shard gradients
-    /// (the executors' native dtype): accumulates in f64 without
-    /// materializing f64 copies of the shard gradients — saves
-    /// `(max_s+1)·L` conversions+writes per worker per iteration on the
-    /// hot path (§Perf opt 1).
-    pub fn encode_block_range_f32(
+    /// (the executors' native dtype) into a caller-supplied — typically
+    /// pooled — `f32` wire buffer. Accumulates in f64 inside the fused
+    /// kernel without materializing f64 copies of the shard gradients,
+    /// and allocates nothing when `out` has capacity (§data plane).
+    pub fn encode_block_range_f32_into(
         &self,
         w: usize,
         r: &BlockRange,
         shard_grads: &[Vec<f32>],
-    ) -> Vec<f64> {
+        out: &mut Vec<f32>,
+    ) {
         let code = &self.codes[&r.s];
         debug_assert!(shard_grads.len() > r.s, "worker holds too few shards");
-        let support = &code.supports[w];
-        let mut out = vec![0.0f64; r.len()];
-        for (k, &subset) in support.iter().take(r.s + 1).enumerate() {
-            let coef = code.b[(w, subset)];
-            if coef == 0.0 {
-                continue;
-            }
-            let g = &shard_grads[k][r.start..r.end];
-            for (o, &v) in out.iter_mut().zip(g.iter()) {
-                *o += coef * v as f64;
-            }
-        }
-        out
+        let sources: Vec<(f64, &[f32])> = code.supports[w]
+            .iter()
+            .take(r.s + 1)
+            .enumerate()
+            .map(|(k, &subset)| (code.b[(w, subset)], &shard_grads[k][r.start..r.end]))
+            .collect();
+        kernels::fused_combine_f32(&sources, r.len(), out);
     }
 
     /// Per-worker total work in units of `(M/N)·b` cycles: `Σ_l (s_l + 1)`.

@@ -100,8 +100,18 @@ pub struct BlockContribution {
     /// Virtual completion time of this block at this worker:
     /// `(M/N)·b·T_n·Σ_{l ≤ block end}(s_l+1)` — Eq. (2)'s inner term.
     pub virtual_time: f64,
-    /// The coded partial derivatives for the block's coordinates.
-    pub coded: Vec<f64>,
+    /// The coded partial derivatives for the block's coordinates, in
+    /// the **f32 wire format**: workers compute gradients in f32 and
+    /// accumulate the coded combination in f64 inside the fused encode
+    /// kernel, then round once to f32 for the wire — half the payload
+    /// bytes of an f64 wire, with no intermediate-sum precision loss
+    /// (the master decodes back in f64). The backing buffer usually
+    /// comes from the pool's shared [`BufferPool`] and is recycled by
+    /// the master after decode (see the data-plane notes in
+    /// [`crate::coordinator`]).
+    ///
+    /// [`BufferPool`]: crate::util::buffers::BufferPool
+    pub coded: Vec<f32>,
 }
 
 /// Worker → master control-plane event.

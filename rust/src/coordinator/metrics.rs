@@ -95,6 +95,15 @@ pub struct TrainReport {
     /// Decode-vector cache statistics.
     pub decode_cache_hits: u64,
     pub decode_cache_misses: u64,
+    /// Wire-buffer pool statistics (the pool-wide freelist shared by
+    /// every job on the pool: a `hit` is a coded-block buffer served
+    /// without allocating, a `miss` allocated a fresh one, `returned`
+    /// counts buffers recycled after decode/drop). In steady state
+    /// misses plateau at the in-flight high-water mark and every
+    /// further block is a hit — zero per-block heap allocation.
+    pub wire_pool_hits: u64,
+    pub wire_pool_misses: u64,
+    pub wire_pool_returned: u64,
     /// Workers that failed permanently during the run.
     pub failed_workers: Vec<usize>,
 }
@@ -203,7 +212,7 @@ impl TrainReport {
     /// One-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "steps={} epochs={} E[virt]={:.1} wall/iter={} decode/iter={} loss {}→{} cache {}/{} hit",
+            "steps={} epochs={} E[virt]={:.1} wall/iter={} decode/iter={} loss {}→{} cache {}/{} hit pool {}/{} hit",
             self.steps(),
             self.epochs(),
             self.virtual_runtime_stats().mean(),
@@ -213,6 +222,8 @@ impl TrainReport {
             self.final_loss().map(|l| format!("{l:.3}")).unwrap_or_else(|| "-".into()),
             self.decode_cache_hits,
             self.decode_cache_hits + self.decode_cache_misses,
+            self.wire_pool_hits,
+            self.wire_pool_hits + self.wire_pool_misses,
         )
     }
 }

@@ -53,6 +53,39 @@
 //! the live roster's `N'` — decoding stays exact within every (job,
 //! epoch).
 //!
+//! ## The data plane (zero-copy tiled kernels, f32 wire, pooled buffers)
+//!
+//! The per-block payload path is allocation- and copy-free in steady
+//! state:
+//!
+//! * **f32 wire, f64 accumulate.** Workers compute gradients in `f32`
+//!   and encode each block with the fused tiled kernels
+//!   ([`crate::linalg::kernels`]): the `s+1` shard-gradient tiles are
+//!   read once each, combined in an on-stack `f64` accumulator, and
+//!   rounded to `f32` exactly once for the wire — half the channel
+//!   bytes of an `f64` wire with no intermediate-sum precision loss.
+//!   The master decodes back in `f64` (the same kernels), so the
+//!   assembled gradient is exact up to one `f32` rounding of the
+//!   *inputs*, which is why the e2e exactness assertions hold unchanged
+//!   on the f32 wire.
+//! * **Buffer lifecycle.** Wire buffers come from one pool-wide
+//!   freelist ([`crate::util::buffers::BufferPool`]): a worker `take`s
+//!   a buffer per block, ownership travels with the
+//!   [`channel::BlockContribution`] through the channel, and whoever
+//!   disposes of the contribution — the master after a decode, any
+//!   drop path (late / stale-epoch / stale-iter / cross-job /
+//!   mismatched binding / abort) — `put`s it back. One owner at a
+//!   time; returning is optional for correctness (a dropped buffer
+//!   costs one future miss), which keeps every error path safe. After
+//!   one warm-up iteration the same buffers cycle forever; pool
+//!   counters are reported per job next to the decode-cache stats
+//!   ([`metrics::TrainReport`]).
+//! * **Decode writes in place.** The master's combine writes straight
+//!   into the job's preallocated gradient slice
+//!   ([`crate::coding::decoder::decode_into`]) — no intermediate
+//!   decode vector, no copy — and fans large blocks out over scoped
+//!   threads ([`crate::linalg::kernels::fused_combine_into_f64_auto`]).
+//!
 //! Single-job callers keep the classic facade ([`trainer`]):
 //! `train(cfg, schedule, factory)` or a driveable
 //! [`trainer::TrainSession`].

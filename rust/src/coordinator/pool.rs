@@ -81,6 +81,7 @@ use crate::distribution::fit::{FittedModel, ShiftedExpEstimate};
 use crate::optimizer::blocks::BlockPartition;
 use crate::optimizer::runtime_model::ProblemSpec;
 use crate::runtime::{ExecutorFactory, GradExecutor};
+use crate::util::buffers::BufferPool;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 
@@ -595,6 +596,12 @@ impl JobHandle {
         let (hits, misses) = self.master.cache_stats();
         self.report.decode_cache_hits = hits;
         self.report.decode_cache_misses = misses;
+        // Wire-pool counters are pool-wide (the freelist is shared by
+        // every worker and job on the pool), snapshotted at job finish.
+        let ws = self.master.wire_pool_stats();
+        self.report.wire_pool_hits = ws.hits;
+        self.report.wire_pool_misses = ws.misses;
+        self.report.wire_pool_returned = ws.returned;
         self.report.failed_workers = failed.to_vec();
     }
 }
@@ -624,6 +631,10 @@ pub struct WorkerPool {
     virtual_makespan: f64,
     /// Contributions stamped with a job id the pool has never seen.
     cross_job_dropped: usize,
+    /// Shared wire-buffer freelist: workers take coded-block buffers
+    /// from it, every job's master recycles arrivals back into it (see
+    /// the data-plane notes in [`crate::coordinator`]).
+    wire_pool: BufferPool,
 }
 
 impl WorkerPool {
@@ -659,6 +670,7 @@ impl WorkerPool {
         let mut task_txs: Vec<Option<Sender<WorkerTask>>> = Vec::with_capacity(n);
         let mut handles = Vec::new();
         let mut live_mask = vec![false; n];
+        let wire_pool = BufferPool::default();
         for w in 0..n {
             if cfg.dead_workers.contains(&w) {
                 // Injected failure: worker never comes up. It keeps its
@@ -668,7 +680,7 @@ impl WorkerPool {
                 registry.leave(w);
                 continue;
             }
-            let tx = spawn_worker(w, &event_tx, cfg.pacing, &mut handles)?;
+            let tx = spawn_worker(w, &event_tx, cfg.pacing, &wire_pool, &mut handles)?;
             task_txs.push(Some(tx));
             live_mask[w] = true;
         }
@@ -695,6 +707,7 @@ impl WorkerPool {
             rr_cursor: 0,
             virtual_makespan: 0.0,
             cross_job_dropped: 0,
+            wire_pool,
         })
     }
 
@@ -784,6 +797,8 @@ impl WorkerPool {
 
         let mut master = Master::for_job(id, scheme.clone(), dim, self.registry.roster().to_vec());
         master.timeout = self.cfg.stall_timeout;
+        // Decoded arrival buffers cycle back to the pool's encoders.
+        master.set_wire_pool(self.wire_pool.clone());
 
         // Seed the drift detector with the parameters the initial scheme
         // is presumed optimal for (when the current phase is shifted-exp).
@@ -863,7 +878,8 @@ impl WorkerPool {
             ));
         }
         let id = self.registry.join();
-        let tx = spawn_worker(id, &self.event_tx, self.cfg.pacing, &mut self.handles)?;
+        let tx =
+            spawn_worker(id, &self.event_tx, self.cfg.pacing, &self.wire_pool, &mut self.handles)?;
         if self.task_txs.len() <= id {
             self.task_txs.resize_with(id + 1, || None);
         }
@@ -1174,6 +1190,9 @@ impl WorkerPool {
                         Some(other) => other.note_offcycle(&c),
                         None => self.cross_job_dropped += 1,
                     }
+                    // The router dropped this contribution, so the
+                    // router recycles its wire buffer.
+                    self.wire_pool.put(c.coded);
                     continue;
                 }
                 ev => ev,
@@ -1261,10 +1280,17 @@ fn spawn_worker(
     id: WorkerId,
     event_tx: &Sender<WorkerEvent>,
     pacing: PacingMode,
+    wire_pool: &BufferPool,
     handles: &mut Vec<std::thread::JoinHandle<()>>,
 ) -> Result<Sender<WorkerTask>> {
     let (tx, rx) = mpsc::channel::<WorkerTask>();
-    let ctx = WorkerContext { id, tasks: rx, events: event_tx.clone(), pacing };
+    let ctx = WorkerContext {
+        id,
+        tasks: rx,
+        events: event_tx.clone(),
+        pacing,
+        wire_pool: wire_pool.clone(),
+    };
     handles.push(
         std::thread::Builder::new()
             .name(format!("bcgc-worker-{id}"))

@@ -41,6 +41,7 @@ use crate::coordinator::straggler::block_completion_stamps_unit;
 use crate::coordinator::PacingMode;
 use crate::optimizer::blocks::BlockRange;
 use crate::runtime::GradExecutor;
+use crate::util::buffers::BufferPool;
 
 /// Everything a worker thread needs (moved into the thread at spawn).
 pub struct WorkerContext {
@@ -49,6 +50,12 @@ pub struct WorkerContext {
     pub tasks: Receiver<WorkerTask>,
     pub events: Sender<WorkerEvent>,
     pub pacing: PacingMode,
+    /// Pool-wide freelist for coded wire buffers: the worker takes one
+    /// per block before encoding, ownership travels with the
+    /// [`BlockContribution`], and the master returns it after decode —
+    /// zero per-block allocation once warm (see [`crate::coordinator`]'s
+    /// data-plane notes).
+    pub wire_pool: BufferPool,
 }
 
 /// Per-(job, epoch) derived state, recomputed only on an epoch change.
@@ -76,7 +83,12 @@ struct JobState {
 /// [`WorkerEvent::Failed`] (the coded scheme tolerates them like any
 /// other straggler, up to each block's redundancy).
 pub fn run(ctx: WorkerContext) {
-    let WorkerContext { id, tasks, events, pacing } = ctx;
+    let WorkerContext { id, tasks, events, pacing, wire_pool } = ctx;
+    // Thread-local scratch freelist for the per-subset gradient
+    // re-assembly buffers (zero-backed subsets and nothing else allocate
+    // from it; executor outputs are moved in directly). Unshared, so no
+    // lock contention with other workers.
+    let scratch = BufferPool::new(32);
     // Ready to be bound to a code row (joins wait for the next epoch).
     if events.send(WorkerEvent::Joined { worker: id }).is_err() {
         return; // master gone
@@ -201,7 +213,13 @@ pub fn run(ctx: WorkerContext) {
         let mut flat_iter = flat_grads.into_iter();
         for backing in &epoch_state.held_shards {
             match backing.len() {
-                0 => grads.push(vec![0.0f32; dim]),
+                0 => {
+                    // Recycled scratch buffer, zero-filled to the model
+                    // dimension (take() hands it back cleared).
+                    let mut z = scratch.take(dim);
+                    z.resize(dim, 0.0);
+                    grads.push(z);
+                }
                 1 => grads.push(flat_iter.next().unwrap()),
                 _ => {
                     let mut acc = flat_iter.next().unwrap();
@@ -220,7 +238,10 @@ pub fn run(ctx: WorkerContext) {
         let stamps = block_completion_stamps_unit(unit_work, &scheme, cycle_time);
         let mut elapsed_virtual = 0.0f64;
         for (block_idx, r) in epoch_state.ranges.iter().enumerate() {
-            let coded = scheme.encode_block_range_f32(row, r, &grads);
+            // Pooled wire buffer; the master owns it from the send on
+            // and recycles it once the block decodes (or is dropped).
+            let mut coded = wire_pool.take(r.len());
+            scheme.encode_block_range_f32_into(row, r, &grads, &mut coded);
             if let PacingMode::RealScaled { ns_per_unit } = pacing {
                 let wait_units = stamps[block_idx] - elapsed_virtual;
                 elapsed_virtual = stamps[block_idx];
@@ -244,6 +265,11 @@ pub fn run(ctx: WorkerContext) {
             {
                 return; // master gone
             }
+        }
+        // Subset-assembly buffers go back to the thread-local scratch
+        // freelist for the next iteration's zero-backed subsets.
+        for g in grads {
+            scratch.put(g);
         }
     }
 }

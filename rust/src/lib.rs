@@ -127,6 +127,23 @@
 //!   virtual time (`ChurnSchedule`, `compare_elastic_vs_static`) — the
 //!   elastic-vs-static evaluation behind `BENCH_elastic.json`.
 //!
+//! ## The data plane (fused kernels, f32 wire, buffer pooling)
+//!
+//! Both hot directions of the coded payload path are one primitive — a
+//! linear combination over a handful of equally-long vectors — and both
+//! run on the hand-rolled tiled kernels in [`linalg::kernels`]: worker
+//! encode fuses the `s+1` shard-gradient passes into a single sweep
+//! (each source byte read once, each output byte written once), and
+//! master decode combines survivor codewords **directly into the job's
+//! preallocated gradient slice** ([`coding::decoder::decode_into`]).
+//! The wire format is `f32` (half the bytes), with all accumulation in
+//! `f64` on both sides, so decoded gradients are exact up to one `f32`
+//! rounding of the inputs. Wire buffers are recycled through a shared
+//! freelist ([`util::buffers::BufferPool`]) — zero per-block heap
+//! allocation in steady state; see [`coordinator`]'s data-plane notes
+//! for the ownership contract and `benches/hotpath.rs` for the
+//! measured encode/decode rows behind `BENCH_hotpath.json`.
+//!
 //! ## Quick start
 //!
 //! ```no_run

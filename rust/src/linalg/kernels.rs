@@ -1,0 +1,305 @@
+//! Tiled, fused multi-source combine kernels — the data plane's inner
+//! loops.
+//!
+//! Both hot directions of the coded data plane are the same primitive: a
+//! linear combination `out[i] = Σ_k coef_k · src_k[i]` over a handful of
+//! equally-long sources (worker encode combines `s+1` shard gradients;
+//! master decode combines `N−s` survivor codewords). The naive
+//! implementation makes one full pass over `out` **per source** — for
+//! `L` in the millions that is `s+1` read-modify-write sweeps of a
+//! multi-megabyte vector per block, all memory traffic. The fused
+//! kernels here instead walk the coordinates once in L1-sized tiles: per
+//! tile, an on-stack `f64` accumulator is filled from every source while
+//! the tile is hot, and the result is written out exactly once. Each
+//! source byte is read once, each output byte written once.
+//!
+//! ## Numeric contract
+//!
+//! Accumulation is always `f64`, regardless of source/output dtype —
+//! this is what lets the wire format carry `f32` (half the bytes) while
+//! the decoded gradient stays exact to `f32`-rounding of the *inputs*
+//! only, never of the intermediate sums. Within one coordinate, sources
+//! are accumulated in slice order, identical to the naive reference, so
+//! the fused kernels are bit-compatible with it (the property suite
+//! pins this).
+//!
+//! ## Variants
+//!
+//! * [`fused_combine_f64`] — `f64` sources → `f64` output (the codec's
+//!   generic/unit-test path).
+//! * [`fused_combine_f32`] — `f32` sources → `f32` output with `f64`
+//!   accumulation (worker encode → wire). Writes via `clear` + `extend`,
+//!   so a recycled pool buffer needs no pre-zeroing.
+//! * [`fused_combine_into_f64`] — `f32` sources → a caller-owned `f64`
+//!   slice (master decode straight into the job's preallocated gradient
+//!   — no intermediate vector, no copy).
+//! * [`fused_combine_into_f64_auto`] — same, but combines coordinate
+//!   tiles on scoped threads once the block is large enough to pay for
+//!   them ([`PAR_MIN_LEN`]); small blocks stay single-threaded.
+//!
+//! Zero coefficients are skipped source-wise (identity and
+//! fractional-repetition codes are mostly zeros); skipping only ever
+//! drops exact `±0.0` addends.
+
+/// Coordinates per tile: 1024 × 8 B of `f64` accumulator = 8 KiB, small
+/// enough to stay L1-resident alongside the source tiles being streamed
+/// through.
+pub const TILE: usize = 1024;
+
+/// Minimum output length before [`fused_combine_into_f64_auto`] fans the
+/// tile sweep out to scoped threads; below this the spawn overhead
+/// outweighs the memory-bandwidth win.
+pub const PAR_MIN_LEN: usize = 1 << 18;
+
+/// Cap on combine threads (memory-bound work stops scaling long before
+/// the core count on big machines).
+pub const MAX_COMBINE_THREADS: usize = 8;
+
+/// `acc[i] += coef · src[i]`, 4-wide unrolled so the compiler keeps four
+/// independent accumulator lanes in flight.
+#[inline]
+fn axpy_tile_f64(acc: &mut [f64], coef: f64, src: &[f64]) {
+    debug_assert_eq!(acc.len(), src.len());
+    let mut a = acc.chunks_exact_mut(4);
+    let mut s = src.chunks_exact(4);
+    for (a4, s4) in (&mut a).zip(&mut s) {
+        a4[0] += coef * s4[0];
+        a4[1] += coef * s4[1];
+        a4[2] += coef * s4[2];
+        a4[3] += coef * s4[3];
+    }
+    for (o, &v) in a.into_remainder().iter_mut().zip(s.remainder()) {
+        *o += coef * v;
+    }
+}
+
+/// `acc[i] += coef · f64(src[i])` for `f32` sources.
+#[inline]
+fn axpy_tile_f32(acc: &mut [f64], coef: f64, src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    let mut a = acc.chunks_exact_mut(4);
+    let mut s = src.chunks_exact(4);
+    for (a4, s4) in (&mut a).zip(&mut s) {
+        a4[0] += coef * s4[0] as f64;
+        a4[1] += coef * s4[1] as f64;
+        a4[2] += coef * s4[2] as f64;
+        a4[3] += coef * s4[3] as f64;
+    }
+    for (o, &v) in a.into_remainder().iter_mut().zip(s.remainder()) {
+        *o += coef * v as f64;
+    }
+}
+
+/// Fused combine, `f64` sources → `f64` output. `out` is overwritten
+/// (cleared, then filled with exactly `len` values); every source must
+/// be at least `len` long.
+pub fn fused_combine_f64(sources: &[(f64, &[f64])], len: usize, out: &mut Vec<f64>) {
+    debug_assert!(sources.iter().all(|(_, s)| s.len() >= len));
+    out.clear();
+    out.reserve(len);
+    let mut acc = [0.0f64; TILE];
+    let mut start = 0usize;
+    while start < len {
+        let t = TILE.min(len - start);
+        let acc = &mut acc[..t];
+        acc.fill(0.0);
+        for &(coef, src) in sources {
+            if coef == 0.0 {
+                continue;
+            }
+            axpy_tile_f64(acc, coef, &src[start..start + t]);
+        }
+        out.extend_from_slice(acc);
+        start += t;
+    }
+}
+
+/// Fused combine, `f32` sources → `f32` output with `f64` accumulation
+/// (the worker → wire encode). `out` is overwritten via `clear` +
+/// `extend`, so recycled pool buffers need no pre-zeroing.
+pub fn fused_combine_f32(sources: &[(f64, &[f32])], len: usize, out: &mut Vec<f32>) {
+    debug_assert!(sources.iter().all(|(_, s)| s.len() >= len));
+    out.clear();
+    out.reserve(len);
+    let mut acc = [0.0f64; TILE];
+    let mut start = 0usize;
+    while start < len {
+        let t = TILE.min(len - start);
+        let acc = &mut acc[..t];
+        acc.fill(0.0);
+        for &(coef, src) in sources {
+            if coef == 0.0 {
+                continue;
+            }
+            axpy_tile_f32(acc, coef, &src[start..start + t]);
+        }
+        out.extend(acc.iter().map(|&v| v as f32));
+        start += t;
+    }
+}
+
+/// Fused combine, `f32` sources → a caller-owned `f64` slice (the
+/// master decode writing straight into the job's gradient). Every
+/// source must be at least `out.len()` long; `out` is fully overwritten.
+pub fn fused_combine_into_f64(sources: &[(f64, &[f32])], out: &mut [f64]) {
+    let len = out.len();
+    debug_assert!(sources.iter().all(|(_, s)| s.len() >= len));
+    let mut acc = [0.0f64; TILE];
+    let mut start = 0usize;
+    while start < len {
+        let t = TILE.min(len - start);
+        let acc = &mut acc[..t];
+        acc.fill(0.0);
+        for &(coef, src) in sources {
+            if coef == 0.0 {
+                continue;
+            }
+            axpy_tile_f32(acc, coef, &src[start..start + t]);
+        }
+        out[start..start + t].copy_from_slice(acc);
+        start += t;
+    }
+}
+
+/// [`fused_combine_into_f64`], parallelized over coordinate tiles with
+/// scoped threads once the block is at least [`PAR_MIN_LEN`] long.
+/// Chunk boundaries are tile-aligned and per-coordinate accumulation
+/// order is unchanged, so the result is bit-identical to the serial
+/// kernel.
+pub fn fused_combine_into_f64_auto(sources: &[(f64, &[f32])], out: &mut [f64]) {
+    let len = out.len();
+    let threads = if len >= PAR_MIN_LEN {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(MAX_COMBINE_THREADS)
+    } else {
+        1
+    };
+    if threads <= 1 {
+        return fused_combine_into_f64(sources, out);
+    }
+    let chunk = len.div_ceil(threads).div_ceil(TILE) * TILE;
+    std::thread::scope(|scope| {
+        for (i, out_chunk) in out.chunks_mut(chunk).enumerate() {
+            let off = i * chunk;
+            scope.spawn(move || {
+                let shifted: Vec<(f64, &[f32])> =
+                    sources.iter().map(|&(c, s)| (c, &s[off..off + out_chunk.len()])).collect();
+                fused_combine_into_f64(&shifted, out_chunk);
+            });
+        }
+    });
+}
+
+/// Naive reference combine (`f64`): one full read-modify-write pass
+/// over the output **per source** — the support-wise axpy the fused
+/// kernels replace. Kept as the property-test oracle and the bench
+/// baseline.
+pub fn naive_combine_f64(sources: &[(f64, &[f64])], len: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; len];
+    for &(coef, src) in sources {
+        for (o, &v) in out.iter_mut().zip(src.iter()) {
+            *o += coef * v;
+        }
+    }
+    out
+}
+
+/// Naive reference combine, `f32` sources with `f64` accumulation.
+pub fn naive_combine_f32_to_f64(sources: &[(f64, &[f32])], len: usize) -> Vec<f64> {
+    let mut out = vec![0.0f64; len];
+    for &(coef, src) in sources {
+        for (o, &v) in out.iter_mut().zip(src.iter()) {
+            *o += coef * v as f64;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gen_f64(rng: &mut Rng, k: usize, len: usize) -> (Vec<f64>, Vec<Vec<f64>>) {
+        let coefs: Vec<f64> =
+            (0..k).map(|i| if i == 1 { 0.0 } else { rng.normal() }).collect();
+        let srcs: Vec<Vec<f64>> =
+            (0..k).map(|_| (0..len).map(|_| rng.normal()).collect()).collect();
+        (coefs, srcs)
+    }
+
+    /// Awkward boundaries: empty, single element, one short of a tile,
+    /// exact tiles, and a ragged multi-tile length.
+    const LENS: [usize; 7] = [0, 1, TILE - 1, TILE, TILE + 1, 3 * TILE, 3 * TILE + 7];
+
+    #[test]
+    fn fused_f64_matches_naive_bitwise_at_tile_boundaries() {
+        let mut rng = Rng::new(17);
+        for &len in &LENS {
+            let (coefs, srcs) = gen_f64(&mut rng, 4, len);
+            let sources: Vec<(f64, &[f64])> =
+                coefs.iter().copied().zip(srcs.iter().map(|s| s.as_slice())).collect();
+            let want = naive_combine_f64(&sources, len);
+            let mut got = vec![999.0; 3]; // dirty: must be fully overwritten
+            fused_combine_f64(&sources, len, &mut got);
+            assert_eq!(got.len(), len);
+            // Same per-coordinate accumulation order ⇒ bit-compatible
+            // (== also equates ±0.0 from the skipped zero coefficient).
+            assert!(got.iter().zip(want.iter()).all(|(a, b)| a == b), "len={len}");
+        }
+    }
+
+    #[test]
+    fn fused_f32_wire_roundtrip_within_f32_rounding() {
+        let mut rng = Rng::new(19);
+        for &len in &LENS {
+            let srcs: Vec<Vec<f32>> = (0..3)
+                .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let coefs = [1.0, -0.75, rng.normal()];
+            let sources: Vec<(f64, &[f32])> =
+                coefs.iter().copied().zip(srcs.iter().map(|s| s.as_slice())).collect();
+            let want = naive_combine_f32_to_f64(&sources, len);
+            let mut wire = vec![5.0f32; 7]; // dirty pool buffer
+            fused_combine_f32(&sources, len, &mut wire);
+            assert_eq!(wire.len(), len);
+            for (w, v) in wire.iter().zip(want.iter()) {
+                let err = (*w as f64 - v).abs() / (1.0 + v.abs());
+                assert!(err < 1e-6, "len={len}: wire {w} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_slice_kernel_matches_naive() {
+        let mut rng = Rng::new(23);
+        for &len in &LENS {
+            let srcs: Vec<Vec<f32>> = (0..5)
+                .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let coefs: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+            let sources: Vec<(f64, &[f32])> =
+                coefs.iter().copied().zip(srcs.iter().map(|s| s.as_slice())).collect();
+            let want = naive_combine_f32_to_f64(&sources, len);
+            let mut got = vec![-3.25f64; len]; // dirty gradient slice
+            fused_combine_into_f64(&sources, &mut got);
+            assert!(got.iter().zip(want.iter()).all(|(a, b)| a == b), "len={len}");
+        }
+    }
+
+    #[test]
+    fn parallel_combine_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(29);
+        let len = PAR_MIN_LEN + 4 * TILE + 13;
+        let srcs: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let coefs: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+        let sources: Vec<(f64, &[f32])> =
+            coefs.iter().copied().zip(srcs.iter().map(|s| s.as_slice())).collect();
+        let mut serial = vec![0.0f64; len];
+        fused_combine_into_f64(&sources, &mut serial);
+        let mut par = vec![7.0f64; len];
+        fused_combine_into_f64_auto(&sources, &mut par);
+        assert!(par.iter().zip(serial.iter()).all(|(a, b)| a == b));
+    }
+}

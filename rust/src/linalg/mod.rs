@@ -5,6 +5,7 @@
 //! system per row; decoding solves an `(N−s)`-sized system per survivor
 //! set), so we implement a row-major [`Matrix`] with LU-based solves.
 
+pub mod kernels;
 pub mod lu;
 pub mod matrix;
 

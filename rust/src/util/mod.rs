@@ -1,6 +1,7 @@
 //! Foundational utilities built from scratch for the offline environment:
 //! deterministic RNG, special functions, statistics and a tiny logger.
 
+pub mod buffers;
 pub mod logging;
 pub mod rng;
 pub mod special;

@@ -178,6 +178,35 @@ fn deprecated_trainer_shim_still_runs() {
 }
 
 #[test]
+fn wire_buffer_pool_amortizes_to_zero_allocations() {
+    // Steady state of the zero-copy data plane: coded-block wire buffers
+    // come from the shared freelist, so pool misses (fresh allocations)
+    // plateau at the in-flight high-water mark while hits grow with the
+    // iteration count — i.e. zero per-block heap allocation once warm.
+    let n = 4;
+    let steps = 40;
+    let seed = suite_seed(31);
+    let (_, dim) = mlp_setup(n, seed);
+    let mut sizes = vec![0usize; n];
+    sizes[1] = dim / 2;
+    sizes[2] = dim - dim / 2;
+    let report = run_once(BlockPartition::new(sizes), n, steps, vec![], seed);
+    let blocks = 2u64;
+    let sent = (steps * n) as u64 * blocks;
+    assert_eq!(report.wire_pool_hits + report.wire_pool_misses, sent);
+    // In-flight bound: at most N buffers queued per block plus slack for
+    // the decode-then-recycle window — independent of `steps`.
+    assert!(
+        report.wire_pool_misses <= 3 * n as u64 * blocks,
+        "pool misses did not plateau: {} misses over {} sends",
+        report.wire_pool_misses,
+        sent
+    );
+    assert!(report.wire_pool_hits > 4 * report.wire_pool_misses);
+    assert!(report.wire_pool_returned >= report.wire_pool_hits);
+}
+
+#[test]
 fn decoded_gradient_norm_matches_direct_sum() {
     // One iteration from θ0 = 0: the recorded grad_norm must equal the
     // norm of the directly-computed Σ_i g_i.

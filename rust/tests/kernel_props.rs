@@ -1,0 +1,251 @@
+//! Property tests over the fused data-plane kernels (proptest-lite
+//! runner): the tiled/fused/pooled paths must agree with the naive
+//! one-pass-per-source reference across random schemes, survivor
+//! arrival orders and awkward tile boundaries.
+
+use bcgc::coding::decoder::{decode, decode_into, decode_vector};
+use bcgc::coding::encoder::GradientCode;
+use bcgc::coding::scheme::CodingScheme;
+use bcgc::linalg::kernels::{
+    fused_combine_f32, fused_combine_f64, fused_combine_into_f64, fused_combine_into_f64_auto,
+    naive_combine_f32_to_f64, naive_combine_f64, PAR_MIN_LEN, TILE,
+};
+use bcgc::testing::{gens, Runner};
+use bcgc::util::buffers::BufferPool;
+use bcgc::util::rng::Rng;
+
+/// Draw a combine length that stresses the tiling: empty, single
+/// element, one off a tile boundary in either direction, exact
+/// multiples, or a ragged multi-tile length.
+fn awkward_len(rng: &mut Rng) -> usize {
+    match gens::usize_in(rng, 0, 6) {
+        0 => 0,
+        1 => 1,
+        2 => TILE - 1,
+        3 => TILE,
+        4 => TILE + 1,
+        5 => gens::usize_in(rng, 2, TILE - 2),
+        _ => gens::usize_in(rng, 2, 4) * TILE + gens::usize_in(rng, 0, 9),
+    }
+}
+
+#[test]
+fn prop_fused_combines_match_naive_reference() {
+    Runner::new(120, 0xF05E).run("fused-vs-naive", |rng| {
+        let k = gens::usize_in(rng, 1, 6);
+        let len = awkward_len(rng);
+        // Zero coefficients exercised explicitly (identity / frac-rep
+        // codes are mostly zeros, and the fused kernels skip them).
+        let coefs: Vec<f64> = (0..k)
+            .map(|_| if rng.uniform() < 0.25 { 0.0 } else { rng.normal() })
+            .collect();
+        let srcs64: Vec<Vec<f64>> =
+            (0..k).map(|_| (0..len).map(|_| rng.normal()).collect()).collect();
+        let s64: Vec<(f64, &[f64])> =
+            coefs.iter().copied().zip(srcs64.iter().map(|s| s.as_slice())).collect();
+        let want64 = naive_combine_f64(&s64, len);
+        let mut got64 = vec![f64::NAN; gens::usize_in(rng, 0, 5)]; // dirty
+        fused_combine_f64(&s64, len, &mut got64);
+        if got64.len() != len || got64.iter().zip(want64.iter()).any(|(a, b)| a != b) {
+            return Err(format!("f64 fused != naive at len {len}, k {k}"));
+        }
+
+        let srcs32: Vec<Vec<f32>> = srcs64
+            .iter()
+            .map(|s| s.iter().map(|&v| v as f32).collect())
+            .collect();
+        let s32: Vec<(f64, &[f32])> =
+            coefs.iter().copied().zip(srcs32.iter().map(|s| s.as_slice())).collect();
+        let want32 = naive_combine_f32_to_f64(&s32, len);
+        let mut into = vec![f64::NAN; len]; // dirty slice, fully overwritten
+        fused_combine_into_f64(&s32, &mut into);
+        if into.iter().zip(want32.iter()).any(|(a, b)| a != b) {
+            return Err(format!("into_f64 fused != naive at len {len}, k {k}"));
+        }
+        let mut wire = vec![9.0f32; gens::usize_in(rng, 0, 5)]; // dirty
+        fused_combine_f32(&s32, len, &mut wire);
+        if wire.len() != len {
+            return Err(format!("wire length {} != {len}", wire.len()));
+        }
+        for (w, v) in wire.iter().zip(want32.iter()) {
+            let err = (*w as f64 - v).abs() / (1.0 + v.abs());
+            if err > 1e-6 {
+                return Err(format!("f32 wire off by {err:.2e} at len {len}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheme_f32_encode_matches_f64_encode_on_random_schemes() {
+    // The worker's pooled f32 wire encode must agree with the f64 codec
+    // path (the one coding_props pins against the generic encode) to
+    // within a single f32 rounding of the result.
+    Runner::new(60, 0xE27C).run("scheme-f32-encode", |rng| {
+        let n = gens::usize_in(rng, 2, 8);
+        let coords = gens::usize_in(rng, n, 3 * TILE);
+        let x = gens::feasible_x(rng, n, coords as f64);
+        let blocks = bcgc::optimizer::rounding::round_to_blocks(&x, coords);
+        let scheme = CodingScheme::new(blocks, rng).map_err(|e| e.to_string())?;
+        let max_s = scheme.blocks().max_level();
+        let w = gens::usize_in(rng, 0, n - 1);
+        let shard32: Vec<Vec<f32>> = (0..max_s + 1)
+            .map(|_| (0..coords).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let shard64: Vec<Vec<f64>> = shard32
+            .iter()
+            .map(|g| g.iter().map(|&v| v as f64).collect())
+            .collect();
+        let pool = BufferPool::new(8);
+        for r in scheme.ranges() {
+            let want = scheme.encode_block_range(w, &r, &shard64);
+            // Recycled (dirty) pool buffer: take → encode → put → take.
+            let mut wire = pool.take(r.len());
+            scheme.encode_block_range_f32_into(w, &r, &shard32, &mut wire);
+            if wire.len() != r.len() {
+                return Err(format!("wire len {} != block len {}", wire.len(), r.len()));
+            }
+            for (a, b) in wire.iter().zip(want.iter()) {
+                let err = (*a as f64 - b).abs() / (1.0 + b.abs());
+                if err > 1e-6 {
+                    return Err(format!("s={} block encode off by {err:.2e}", r.s));
+                }
+            }
+            pool.put(wire);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decode_into_exact_over_random_survivor_orders() {
+    // f32 wire end-to-end: encode through the fused f32 kernel, decode
+    // through `decode_into` with survivors arriving in a random order,
+    // and the recovered block must equal Σ_i g_i to f32-rounding.
+    Runner::new(80, 0xDEC0).run("decode-into-orders", |rng| {
+        let n = gens::usize_in(rng, 2, 10);
+        let s = gens::usize_in(rng, 0, n - 1);
+        let dim = awkward_len(rng).max(1);
+        let code = GradientCode::cyclic_mds(n, s, rng).map_err(|e| e.to_string())?;
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let want: Vec<f64> = (0..dim)
+            .map(|d| grads.iter().map(|g| g[d] as f64).sum())
+            .collect();
+        // Worker wire contributions via the fused f32 encode kernel.
+        let wire: Vec<Vec<f32>> = (0..n)
+            .map(|w| {
+                let sources: Vec<(f64, &[f32])> = code.supports[w]
+                    .iter()
+                    .map(|&i| (code.b[(w, i)], grads[i].as_slice()))
+                    .collect();
+                let mut out = Vec::new();
+                fused_combine_f32(&sources, dim, &mut out);
+                out
+            })
+            .collect();
+        // Random arrival order; the decode contract pairs coefficients
+        // with ASCENDING survivor ids (the master sorts arrivals).
+        let arrival = rng.sample_indices(n, n - s);
+        let mut sorted = arrival.clone();
+        sorted.sort_unstable();
+        let a = decode_vector(&code, &sorted).map_err(|e| e.to_string())?;
+        let picked: Vec<&[f32]> = sorted.iter().map(|&w| wire[w].as_slice()).collect();
+        let mut got = vec![f64::NAN; dim];
+        decode_into(&a, &picked, &mut got);
+        // Oracle: the f64 decode over f64-widened wire values.
+        let wide: Vec<Vec<f64>> = sorted
+            .iter()
+            .map(|&w| wire[w].iter().map(|&v| v as f64).collect())
+            .collect();
+        let refs: Vec<&[f64]> = wide.iter().map(|c| c.as_slice()).collect();
+        let oracle = decode(&a, &refs);
+        // Forward-error budget of the f32 wire: each contribution is
+        // exact to one f32 rounding (2⁻²⁴), amplified by its decode
+        // coefficient — random codes can be ill-conditioned, so the
+        // bound is computed, not guessed.
+        let amp: f64 = a
+            .iter()
+            .zip(picked.iter())
+            .map(|(&ak, c)| ak.abs() * c.iter().fold(0.0f64, |m, &v| m.max(v.abs() as f64)))
+            .sum();
+        let tol = 1e-6 * (1.0 + amp);
+        for d in 0..dim {
+            if got[d] != oracle[d] {
+                return Err(format!(
+                    "n={n} s={s} arrival={arrival:?}: decode_into {} != decode {} at {d}",
+                    got[d], oracle[d]
+                ));
+            }
+            let err = (got[d] - want[d]).abs();
+            if err > tol {
+                return Err(format!(
+                    "n={n} s={s} S={sorted:?} dim {d}: got {} want {} (err {err:.2e} > {tol:.2e})",
+                    got[d], want[d]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pooled_buffers_never_leak_stale_data() {
+    // Shrinking, growing and interleaving buffer sizes through one pool:
+    // a recycled buffer must behave exactly like a fresh allocation.
+    Runner::new(60, 0xB00F).run("pool-recycling", |rng| {
+        let pool = BufferPool::new(4);
+        for _ in 0..8 {
+            // ≥ 1: a length-0 encode leaves the buffer unallocated, and
+            // `put` drops (without counting) buffers that never allocated.
+            let len = awkward_len(rng).max(1);
+            let src: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let coef = rng.normal();
+            let sources = [(coef, src.as_slice())];
+            let want = naive_combine_f32_to_f64(&sources, len);
+            let mut buf = pool.take(len);
+            fused_combine_f32(&sources, len, &mut buf);
+            if buf.len() != len {
+                return Err(format!("pooled buffer wrong length {}", buf.len()));
+            }
+            for (g, w) in buf.iter().zip(want.iter()) {
+                let err = (*g as f64 - w).abs() / (1.0 + w.abs());
+                if err > 1e-6 {
+                    return Err(format!("stale data through pool at len {len}"));
+                }
+            }
+            pool.put(buf);
+        }
+        let st = pool.stats();
+        if st.hits + st.misses != 8 || st.returned != 8 {
+            return Err(format!("pool stats off: {st:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_combine_bit_identical_to_serial() {
+    // Few cases — each allocates multi-megabyte sources — but enough to
+    // vary the ragged tail across thread-chunk boundaries.
+    Runner::new(4, 0x9A51).run("parallel-combine", |rng| {
+        let len = PAR_MIN_LEN + gens::usize_in(rng, 0, 3 * TILE + 5);
+        let k = gens::usize_in(rng, 2, 5);
+        let srcs: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let coefs: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let sources: Vec<(f64, &[f32])> =
+            coefs.iter().copied().zip(srcs.iter().map(|s| s.as_slice())).collect();
+        let mut serial = vec![0.0f64; len];
+        fused_combine_into_f64(&sources, &mut serial);
+        let mut par = vec![f64::NAN; len];
+        fused_combine_into_f64_auto(&sources, &mut par);
+        if par.iter().zip(serial.iter()).any(|(a, b)| a != b) {
+            return Err(format!("parallel != serial at len {len}, k {k}"));
+        }
+        Ok(())
+    });
+}
