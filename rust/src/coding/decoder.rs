@@ -75,6 +75,41 @@ pub fn decode_vector(code: &GradientCode, survivors: &[usize]) -> Result<Vec<f64
     Ok(a)
 }
 
+/// Least-squares decode vector from a *short* quorum (semi-async mode).
+///
+/// With `q < N − s` survivors the system `aᵀ·B_S = 1ᵀ` is overdetermined
+/// and generally inconsistent; the same normal equations
+/// `B_S·B_Sᵀ·a = B_S·1` (now a `q×q` system) yield the least-squares
+/// minimizer of `‖B_Sᵀ·a − 1‖₂`. Returns `(a, residual)` where
+/// `residual = ‖B_Sᵀ·a − 1‖₂`: since
+/// `decoded − Σ_k g_k = Σ_k e_k·g_k` with `e = B_Sᵀ·a − 1`, the decode
+/// error is bounded by `residual · ‖G‖_F` (Cauchy–Schwarz over the data
+/// subsets). A full quorum reduces to the exact solve with residual ≈ 0.
+///
+/// Errs when the gram matrix is singular (e.g. duplicated
+/// fractional-repetition rows) — callers should fall back to waiting
+/// for the exact quorum.
+pub fn decode_vector_ls(code: &GradientCode, survivors: &[usize]) -> Result<(Vec<f64>, f64)> {
+    let n = code.n;
+    if survivors.is_empty() {
+        return Err(Error::Coding("least-squares decode needs at least one survivor".into()));
+    }
+    if survivors.iter().any(|&w| w >= n) {
+        return Err(Error::Coding("survivor index out of range".into()));
+    }
+    let b_s = code.b.select_rows(survivors);
+    let gram = b_s.matmul(&b_s.transpose());
+    let rhs: Vec<f64> = (0..b_s.rows()).map(|i| b_s.row(i).iter().sum()).collect();
+    let a = lu::solve(&gram, &rhs)
+        .map_err(|e| Error::Coding(format!("least-squares decode solve failed: {e}")))?;
+    let recon = b_s.vecmat(&a);
+    let residual = recon.iter().map(|r| (r - 1.0) * (r - 1.0)).sum::<f64>().sqrt();
+    if !residual.is_finite() {
+        return Err(Error::Coding("least-squares decode residual not finite".into()));
+    }
+    Ok((a, residual))
+}
+
 /// Apply a decode vector to `f32` wire contributions, writing straight
 /// into a caller-owned `f64` slice (typically the job's preallocated
 /// gradient range) — no intermediate vector, no copy. Accumulation is
@@ -281,6 +316,56 @@ mod tests {
             let picked: Vec<&[f64]> = survivors.iter().map(|&w| contribs[w].as_slice()).collect();
             let got = decode(&a, &picked);
             assert!((got[0] - want).abs() < 1e-10, "S={survivors:?}");
+        }
+    }
+
+    #[test]
+    fn ls_decode_full_quorum_is_exact_and_short_quorum_error_is_bounded() {
+        let mut rng = Rng::new(47);
+        for (n, s) in [(6usize, 2usize), (8, 3)] {
+            let code = GradientCode::cyclic_mds(n, s, &mut rng).unwrap();
+            let dim = 5;
+            let grads: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..dim).map(|_| rng.normal()).collect())
+                .collect();
+            let want: Vec<f64> = (0..dim).map(|d| grads.iter().map(|g| g[d]).sum()).collect();
+            let frob: f64 = grads
+                .iter()
+                .map(|g| g.iter().map(|v| v * v).sum::<f64>())
+                .sum::<f64>()
+                .sqrt();
+            let contribs: Vec<Vec<f64>> = (0..n)
+                .map(|w| {
+                    let held: Vec<&[f64]> =
+                        code.supports[w].iter().map(|&i| grads[i].as_slice()).collect();
+                    code.encode(w, &held)
+                })
+                .collect();
+            // Full quorum: least-squares reduces to the exact decode.
+            let full: Vec<usize> = (0..n - s).collect();
+            let (a_ls, res) = decode_vector_ls(&code, &full).unwrap();
+            assert!(res < 1e-8, "full-quorum residual should vanish, got {res:.3e}");
+            let picked: Vec<&[f64]> = full.iter().map(|&w| contribs[w].as_slice()).collect();
+            let got = decode(&a_ls, &picked);
+            for d in 0..dim {
+                assert!((got[d] - want[d]).abs() < 1e-6 * (1.0 + want[d].abs()));
+            }
+            // One-short quorum: positive residual, and the decode error
+            // obeys the Cauchy–Schwarz bound residual · ‖G‖_F.
+            let short: Vec<usize> = (0..n - s - 1).collect();
+            let (a_ls, res) = decode_vector_ls(&code, &short).unwrap();
+            assert!(res > 0.0, "short quorum cannot be exact for cyclic MDS");
+            let picked: Vec<&[f64]> = short.iter().map(|&w| contribs[w].as_slice()).collect();
+            let got = decode(&a_ls, &picked);
+            let err: f64 = (0..dim)
+                .map(|d| (got[d] - want[d]) * (got[d] - want[d]))
+                .sum::<f64>()
+                .sqrt();
+            assert!(
+                err <= res * frob * (1.0 + 1e-9),
+                "n={n} s={s}: error {err:.3e} exceeds bound {:.3e}",
+                res * frob
+            );
         }
     }
 

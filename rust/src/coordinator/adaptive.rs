@@ -43,7 +43,7 @@
 //! re-dimensioned scheme was solved for.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::coordinator::membership::WorkerId;
 use crate::distribution::fit::{
@@ -150,14 +150,163 @@ pub struct ReplanDecision {
     pub fleet_rates: Option<Vec<f64>>,
 }
 
-/// Online drift detector + re-solver.
-pub struct AdaptiveController {
-    cfg: AdaptiveConfig,
+/// The sensing half of the adaptive engine, split out of the
+/// controller so a pool can hold it **once per fleet** instead of once
+/// per tenant: the pooled sliding window, the per-worker id-keyed
+/// windows, and round-memoized family-selected fits. In a K-job pool
+/// under `shared_observations`, every tenant observes the same machines
+/// produce the same cycle times — K private copies meant K identical
+/// windows and K identical fits per round. Controllers now hold an
+/// `Arc<Mutex<ObservationStore>>`; compatible tenants attach to one
+/// store ([`AdaptiveController::attach_store`]), the pool feeds it once
+/// per round, and every fit query in the same round returns the same
+/// memoized [`Arc<FittedModel>`] snapshot.
+pub struct ObservationStore {
+    method: FitMethod,
+    family: FamilyPolicy,
+    window_cap: usize,
+    /// `(per_worker_window, min_worker_samples)` when hetero sensing is
+    /// on — actuation knobs like `speed_weighted_shards` are per-tenant
+    /// policy and deliberately not part of the store.
+    hetero: Option<(usize, usize)>,
     window: OnlineEstimator,
     /// Per-worker windows keyed by **stable id** (not row position), so
     /// a churn rebind never blends one machine's history into another's.
-    /// Populated only under `cfg.hetero`.
     per_worker: HashMap<WorkerId, OnlineEstimator>,
+    /// Bumped on every observe/clear — the memo epoch for fits.
+    round: u64,
+    pooled_memo: Option<(u64, Option<Arc<FittedModel>>)>,
+    worker_memo: HashMap<WorkerId, (u64, Option<Arc<FittedModel>>)>,
+}
+
+impl ObservationStore {
+    /// Build a store for `cfg`'s sensing parameters (window sizes are
+    /// clamped to the estimator's ≥ 2 floor, mirroring the controller).
+    pub fn new(cfg: &AdaptiveConfig) -> Self {
+        let window_cap = cfg.window.max(2);
+        let hetero = cfg
+            .hetero
+            .as_ref()
+            .map(|h| (h.per_worker_window.max(2), h.min_worker_samples.max(2)));
+        Self {
+            method: cfg.method,
+            family: cfg.family,
+            window_cap,
+            hetero,
+            window: OnlineEstimator::new(window_cap, cfg.method),
+            per_worker: HashMap::new(),
+            round: 0,
+            pooled_memo: None,
+            worker_memo: HashMap::new(),
+        }
+    }
+
+    /// Whether a controller configured with `cfg` can share this store:
+    /// every **sensing** parameter must match (window capacity, fit
+    /// method, family policy, hetero window/min-samples). Actuation and
+    /// policy knobs (drift threshold, cadence, strategy, shard
+    /// weighting) stay per-tenant and don't gate sharing.
+    pub fn compatible(&self, cfg: &AdaptiveConfig) -> bool {
+        let hetero = cfg
+            .hetero
+            .as_ref()
+            .map(|h| (h.per_worker_window.max(2), h.min_worker_samples.max(2)));
+        self.method == cfg.method
+            && self.family == cfg.family
+            && self.window_cap == cfg.window.max(2)
+            && self.hetero == hetero
+    }
+
+    /// Feed cycle times with no worker identity (pooled sensing only).
+    pub fn observe(&mut self, times: &[f64]) {
+        self.window.extend(times);
+        self.round += 1;
+    }
+
+    /// Feed one round's cycle times stamped with the stable ids that
+    /// produced them: `times[row]` was measured on `roster[row]`.
+    pub fn observe_rows(&mut self, times: &[f64], roster: &[WorkerId]) {
+        debug_assert_eq!(times.len(), roster.len(), "one cycle time per rostered row");
+        self.window.extend(times);
+        self.round += 1;
+        let Some((cap, _)) = self.hetero else { return };
+        let method = self.method;
+        for (&t, &id) in times.iter().zip(roster.iter()) {
+            self.per_worker
+                .entry(id)
+                .or_insert_with(|| OnlineEstimator::new(cap, method))
+                .push(t);
+        }
+    }
+
+    /// Observations currently in the pooled window.
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+
+    /// Observations in worker `id`'s own window (0 when never observed
+    /// or hetero sensing is off).
+    pub fn worker_len(&self, id: WorkerId) -> usize {
+        self.per_worker.get(&id).map(OnlineEstimator::len).unwrap_or(0)
+    }
+
+    /// The windowed family-selected pooled fit, memoized per observe
+    /// round: however many tenants ask, the window is fitted once.
+    pub fn pooled_fit(&mut self) -> Option<Arc<FittedModel>> {
+        if let Some((round, memo)) = &self.pooled_memo {
+            if *round == self.round {
+                return memo.clone();
+            }
+        }
+        let fit = self.window.fit_model(self.family).map(Arc::new);
+        self.pooled_memo = Some((self.round, fit.clone()));
+        fit
+    }
+
+    /// Worker `id`'s own family-selected fit (requires hetero sensing
+    /// and ≥ `min_worker_samples` observations), memoized per round —
+    /// one fit per machine per round, shared by every tenant.
+    pub fn worker_fit(&mut self, id: WorkerId) -> Option<Arc<FittedModel>> {
+        let (_, min_samples) = self.hetero?;
+        if let Some((round, memo)) = self.worker_memo.get(&id) {
+            if *round == self.round {
+                return memo.clone();
+            }
+        }
+        let fit = self
+            .per_worker
+            .get(&id)
+            .filter(|est| est.len() >= min_samples)
+            .and_then(|est| est.fit_model(self.family))
+            .map(Arc::new);
+        self.worker_memo.insert(id, (self.round, fit.clone()));
+        fit
+    }
+
+    /// Flush every window and memo (elastic re-dimension). Idempotent,
+    /// so K tenants rebasing one shared store at the same epoch swap is
+    /// harmless.
+    pub fn clear(&mut self) {
+        self.window.clear();
+        for est in self.per_worker.values_mut() {
+            est.clear();
+        }
+        self.pooled_memo = None;
+        self.worker_memo.clear();
+        self.round += 1;
+    }
+}
+
+/// Online drift detector + re-solver.
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    /// The sensing state — possibly shared with other tenants on the
+    /// same pool (see [`ObservationStore`]).
+    store: Arc<Mutex<ObservationStore>>,
     /// Latest row → stable-id binding (kept by [`Self::observe_rows`] /
     /// [`Self::set_roster`]); orders the fleet fit by code row.
     roster: Vec<WorkerId>,
@@ -180,16 +329,31 @@ impl AdaptiveController {
             h.per_worker_window = h.per_worker_window.max(2);
             h.min_worker_samples = h.min_worker_samples.max(2);
         }
-        let window = OnlineEstimator::new(cfg.window, cfg.method);
-        Self {
-            cfg,
-            window,
-            per_worker: HashMap::new(),
-            roster: Vec::new(),
-            reference: None,
-            last_swap: None,
-            swaps: 0,
+        let store = Arc::new(Mutex::new(ObservationStore::new(&cfg)));
+        Self { cfg, store, roster: Vec::new(), reference: None, last_swap: None, swaps: 0 }
+    }
+
+    /// The controller's observation store handle — hand this to other
+    /// compatible tenants ([`Self::attach_store`]) or feed it directly.
+    pub fn shared_store(&self) -> Arc<Mutex<ObservationStore>> {
+        self.store.clone()
+    }
+
+    /// Adopt `store` as this controller's sensing state when its
+    /// sensing parameters match ([`ObservationStore::compatible`]).
+    /// Returns whether the attach happened; on `false` the controller
+    /// keeps its private store (mismatched tenants must not blend
+    /// incomparable windows).
+    pub fn attach_store(&mut self, store: &Arc<Mutex<ObservationStore>>) -> bool {
+        let ok = lock_store(store).compatible(&self.cfg);
+        if ok {
+            self.store = store.clone();
         }
+        ok
+    }
+
+    fn store_mut(&self) -> MutexGuard<'_, ObservationStore> {
+        lock_store(&self.store)
     }
 
     /// Seed the reference with the shifted-exp parameters the initial
@@ -213,7 +377,7 @@ impl AdaptiveController {
     /// identity — pooled sensing only (the pre-hetero behavior; the
     /// per-worker windows see nothing).
     pub fn observe(&mut self, times: &[f64]) {
-        self.window.extend(times);
+        self.store_mut().observe(times);
     }
 
     /// Feed one iteration's observed cycle times **stamped with the
@@ -223,18 +387,9 @@ impl AdaptiveController {
     /// own id-keyed window, so a churn rebind that hands row `r` to a
     /// different machine never blends the two histories.
     pub fn observe_rows(&mut self, times: &[f64], roster: &[WorkerId]) {
-        debug_assert_eq!(times.len(), roster.len(), "one cycle time per rostered row");
-        self.window.extend(times);
+        self.store_mut().observe_rows(times, roster);
         self.roster.clear();
         self.roster.extend_from_slice(roster);
-        let Some(h) = self.cfg.hetero.as_ref() else { return };
-        let (cap, method) = (h.per_worker_window, self.cfg.method);
-        for (&t, &id) in times.iter().zip(roster.iter()) {
-            self.per_worker
-                .entry(id)
-                .or_insert_with(|| OnlineEstimator::new(cap, method))
-                .push(t);
-        }
     }
 
     /// Record the live row → stable-id binding without feeding samples
@@ -246,29 +401,32 @@ impl AdaptiveController {
 
     /// Observations currently in the pooled window.
     pub fn observations(&self) -> usize {
-        self.window.len()
+        self.store_mut().len()
     }
 
     /// Observations currently in worker `id`'s own window (0 when the
     /// id was never observed or hetero sensing is off).
     pub fn worker_observations(&self, id: WorkerId) -> usize {
-        self.per_worker.get(&id).map(OnlineEstimator::len).unwrap_or(0)
+        self.store_mut().worker_len(id)
     }
 
     /// Family-selected fit of worker `id`'s own window, when it holds
     /// at least `[hetero].min_worker_samples` observations.
     pub fn worker_fit(&self, id: WorkerId) -> Option<FittedModel> {
-        let h = self.cfg.hetero.as_ref()?;
-        self.per_worker
-            .get(&id)
-            .filter(|est| est.len() >= h.min_worker_samples)
-            .and_then(|est| est.fit_model(self.cfg.family))
+        self.cfg.hetero.as_ref()?;
+        self.store_mut().worker_fit(id).map(|m| (*m).clone())
     }
 
     /// The current windowed family-selected fit, if the window supports
     /// one.
     pub fn current_fit(&self) -> Option<FittedModel> {
-        self.window.fit_model(self.cfg.family)
+        self.current_fit_shared().map(|m| (*m).clone())
+    }
+
+    /// The current pooled fit as the store's memoized shared snapshot —
+    /// every tenant asking in the same round gets the same `Arc`.
+    pub fn current_fit_shared(&self) -> Option<Arc<FittedModel>> {
+        self.store_mut().pooled_fit()
     }
 
     /// Row-ordered per-worker fitted models for `roster`: each worker's
@@ -288,17 +446,21 @@ impl AdaptiveController {
         if roster.is_empty() {
             return None;
         }
-        let pooled = self.current_fit();
+        // One lock for the whole fleet build: the store memoizes each
+        // fit per round, so repeat queries (other tenants, repeated
+        // rows) cost an Arc clone, not a re-fit.
+        let mut store = self.store_mut();
+        let pooled = store.pooled_fit();
         let mut models = Vec::with_capacity(roster.len());
         let mut any_worker_fit = false;
         for &id in roster {
-            match self.worker_fit(id) {
+            match store.worker_fit(id) {
                 Some(m) => {
                     any_worker_fit = true;
-                    models.push(m);
+                    models.push((*m).clone());
                 }
                 None => match &pooled {
-                    Some(p) => models.push(p.clone()),
+                    Some(p) => models.push((**p).clone()),
                     None => return None,
                 },
             }
@@ -365,10 +527,7 @@ impl AdaptiveController {
     /// re-dimensioned scheme was solved for (kept unchanged when
     /// `None`).
     pub fn rebase(&mut self, reference: Option<FittedModel>) {
-        self.window.clear();
-        for est in self.per_worker.values_mut() {
-            est.clear();
-        }
+        self.store_mut().clear();
         if reference.is_some() {
             self.reference = reference;
         }
@@ -402,7 +561,7 @@ impl AdaptiveController {
                 return Ok(None);
             }
         }
-        if self.window.len() < self.cfg.min_samples {
+        if self.observations() < self.cfg.min_samples {
             return Ok(None);
         }
         let Some(fit) = self.current_fit() else {
@@ -449,6 +608,43 @@ impl AdaptiveController {
         }
         self.fleet_plan_for(&self.roster)
     }
+
+    /// The backlog-priced cycle-time model for an async dispatch:
+    /// row `r`'s fitted model translated by `delays[r]` units of queued
+    /// virtual time per unit work ([`FittedModel::delayed`]). Feeding
+    /// this fleet to [`resolve_partition`] makes Eq. (2) and the
+    /// subgradient solver price queue position natively — a row stuck
+    /// behind a deep backlog looks like a slow-shift machine, so the
+    /// planner steers low-redundancy blocks away from waiting on it.
+    /// Uses per-worker fits when hetero sensing has them, else the
+    /// pooled fit on every row; `None` when no fit exists yet.
+    pub fn delay_priced_fleet(
+        &self,
+        roster: &[WorkerId],
+        delays: &[f64],
+    ) -> Option<HeteroFleet> {
+        debug_assert_eq!(roster.len(), delays.len(), "one queued delay per rostered row");
+        let base: Vec<FittedModel> = match self.fleet_models_for(roster) {
+            Some(models) => models,
+            None => {
+                let pooled = self.current_fit()?;
+                vec![pooled; roster.len()]
+            }
+        };
+        let priced: Vec<FittedModel> = base
+            .iter()
+            .zip(delays.iter())
+            .map(|(m, &d)| m.delayed(if d.is_finite() { d.max(0.0) } else { 0.0 }))
+            .collect();
+        Some(HeteroFleet::from_fits(&priced))
+    }
+}
+
+/// Lock an observation store, surviving a poisoned mutex: the store
+/// holds plain sample windows, which stay internally consistent even if
+/// another tenant's thread panicked mid-observe.
+fn lock_store(store: &Arc<Mutex<ObservationStore>>) -> MutexGuard<'_, ObservationStore> {
+    store.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// `1/mean`, guarded against degenerate fits (0 for an infinite or
@@ -956,6 +1152,89 @@ mod tests {
             pooled.blocks.sizes(),
             "the fleet model must shape the partition differently from the pooled fit"
         );
+    }
+
+    #[test]
+    fn shared_store_feeds_every_attached_tenant_with_one_fit() {
+        // Two tenants with identical sensing attach to one store: a
+        // single pool-level observe round is visible to both, and both
+        // get the SAME memoized Arc snapshot instead of fitting twice.
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        let mut a = AdaptiveController::new(AdaptiveConfig::default());
+        let mut b = AdaptiveController::new(AdaptiveConfig::default());
+        assert!(b.attach_store(&a.shared_store()), "identical sensing must attach");
+        let mut rng = Rng::new(51);
+        let roster: Vec<usize> = (0..8).collect();
+        for _ in 0..20 {
+            let t = d.sample_vec(8, &mut rng);
+            // Pool-level: observed once, not once per tenant.
+            a.observe_rows(&t, &roster);
+            b.set_roster(&roster);
+        }
+        assert_eq!(a.observations(), 160);
+        assert_eq!(b.observations(), 160, "tenant B sees the shared window");
+        let fa = a.current_fit_shared().expect("fit");
+        let fb = b.current_fit_shared().expect("fit");
+        assert!(Arc::ptr_eq(&fa, &fb), "same round must return one memoized snapshot");
+        // A fresh observation invalidates the memo.
+        a.observe(&[100.0]);
+        let fa2 = a.current_fit_shared().unwrap();
+        assert!(!Arc::ptr_eq(&fa, &fa2), "new evidence must re-fit");
+        // Rebase through either tenant flushes the one shared store.
+        b.rebase(None);
+        assert_eq!(a.observations(), 0);
+    }
+
+    #[test]
+    fn incompatible_sensing_refuses_to_share_a_store() {
+        let a = AdaptiveController::new(AdaptiveConfig::default());
+        let mut b = AdaptiveController::new(AdaptiveConfig {
+            window: 99, // different pooled window capacity
+            ..Default::default()
+        });
+        assert!(!b.attach_store(&a.shared_store()));
+        let mut c = AdaptiveController::new(AdaptiveConfig {
+            hetero: Some(HeteroConfig::default()), // hetero vs pooled sensing
+            ..Default::default()
+        });
+        assert!(!c.attach_store(&a.shared_store()));
+        // Policy-only differences (threshold, cadence, strategy) DO share.
+        let mut e = AdaptiveController::new(AdaptiveConfig {
+            drift_threshold: 0.9,
+            check_every: 3,
+            cooldown: 1,
+            strategy: ResolveStrategy::Subgradient { iters: 10, playoff_trials: 5 },
+            ..Default::default()
+        });
+        assert!(e.attach_store(&a.shared_store()), "policy knobs must not gate sharing");
+    }
+
+    #[test]
+    fn delay_priced_fleet_shifts_each_row_by_its_backlog() {
+        let d = ShiftedExponential::new(1e-3, 50.0);
+        // Pooled (no hetero) controller: every row starts from the same
+        // pooled fit; the delays alone differentiate the rows.
+        let mut ctrl = AdaptiveController::new(AdaptiveConfig::default());
+        let mut rng = Rng::new(53);
+        observe_from(&mut ctrl, &d, 20, 4, &mut rng);
+        let base_mean = ctrl.current_fit().unwrap().mean();
+        let delays = [0.0, 250.0, 0.0, 1000.0];
+        let fleet = ctrl.delay_priced_fleet(&[0, 1, 2, 3], &delays).expect("fit exists");
+        assert_eq!(fleet.n(), 4);
+        let means = fleet.means();
+        for (row, &q) in delays.iter().enumerate() {
+            assert!(
+                (means[row] - (base_mean + q)).abs() < 1e-9 * (1.0 + base_mean + q),
+                "row {row}: mean {} should be base {base_mean} + queue {q}",
+                means[row]
+            );
+        }
+        // Garbage delays are clamped, not propagated.
+        let fleet = ctrl.delay_priced_fleet(&[0, 1], &[f64::NAN, -3.0]).unwrap();
+        assert!(fleet.means().iter().all(|m| (m - base_mean).abs() < 1e-9 * base_mean));
+        // No evidence at all → no priced fleet.
+        let empty = AdaptiveController::new(AdaptiveConfig::default());
+        assert!(empty.delay_priced_fleet(&[0, 1], &[0.0, 0.0]).is_none());
     }
 
     #[test]

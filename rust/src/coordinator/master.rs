@@ -37,7 +37,7 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coding::decoder::{decode_into, DecodeCache};
+use crate::coding::decoder::{decode_into, decode_vector_ls, DecodeCache};
 use crate::coding::scheme::CodingScheme;
 use crate::coordinator::channel::{BlockContribution, JobId, ShardMap, WorkerEvent, WorkerTask};
 use crate::runtime::ExecutorFactory;
@@ -74,12 +74,107 @@ pub struct IterOutcome {
     /// Workers (stable ids) that drained cleanly this iteration;
     /// mid-iteration this was accounted like a fatal straggler.
     pub left: Vec<usize>,
+    /// Blocks applied from a semi-async **least-squares approximate**
+    /// decode (quorum short only of deeply-backlogged rows); empty in
+    /// fully-exact mode. Each entry's exact quorum is tracked in the
+    /// master's pending-reconcile set until it lands or is discarded.
+    pub approx: Vec<ApproxDecode>,
+}
+
+/// Semi-asynchronous decode policy: when a block's quorum is short only
+/// of deeply-backlogged rows, the master may apply a least-squares
+/// approximate decode now and reconcile (or discard) when the exact
+/// quorum lands. Convergence survives the bounded decode error
+/// (Stochastic Gradient Coding, Bitar et al.), which is exactly the
+/// slack an overlapped pipeline needs.
+#[derive(Debug, Clone)]
+pub struct SemiAsyncConfig {
+    /// Maximum rows a quorum may be short by for an approximate decode
+    /// (0 disables semi-async decoding).
+    pub max_shortfall: usize,
+    /// A row counts as *deeply backlogged* when its queued virtual time
+    /// exceeds this multiple of the job's expected round time (the
+    /// pool's dispatch layer computes the mask).
+    pub backlog_factor: f64,
+    /// Skip the approximation when the least-squares residual
+    /// `‖B_Sᵀa − 1‖₂` exceeds this (the decode error is bounded by
+    /// `residual · ‖G‖_F`).
+    pub max_residual: f64,
+}
+
+impl Default for SemiAsyncConfig {
+    fn default() -> Self {
+        Self { max_shortfall: 1, backlog_factor: 2.0, max_residual: 0.5 }
+    }
+}
+
+/// One block applied from a least-squares approximate decode.
+#[derive(Debug, Clone)]
+pub struct ApproxDecode {
+    pub block_idx: usize,
+    /// Survivors the least-squares solve used.
+    pub used: usize,
+    /// Rows short of the exact quorum (`need − used`).
+    pub shortfall: usize,
+    /// `‖B_Sᵀa − 1‖₂` of the least-squares solve.
+    pub residual: f64,
+    /// Tracked error bound `residual · sqrt(Σ_{j∈S}‖c_j‖₂²)` — the
+    /// observable surrogate for `residual · ‖G‖_F` (it uses the coded
+    /// contributions' energy in place of the unobserved gradients').
+    pub bound: f64,
+}
+
+/// A completed reconciliation: the exact quorum landed for a block that
+/// was applied approximately. `delta = exact − approximate` over the
+/// block's coordinate range; the job applies `θ[start..end] −= lr·delta`
+/// ([`crate::coordinator::state::ModelState::correct`]), landing θ where
+/// an exact decode would have put it.
+#[derive(Debug, Clone)]
+pub struct ReconcileOutcome {
+    pub iter: usize,
+    pub block_idx: usize,
+    /// Coordinate range of the block in the job's gradient/θ.
+    pub start: usize,
+    pub end: usize,
+    pub delta: Vec<f64>,
+    /// The bound that was tracked while the approximation was live.
+    pub bound: f64,
+}
+
+/// An approximately-decoded block waiting for its exact quorum: the
+/// retained arrivals, the applied approximate block gradient, and the
+/// scheme coordinates needed to finish the exact decode later.
+struct PendingReconcile {
+    iter: usize,
+    block_idx: usize,
+    start: usize,
+    end: usize,
+    need: usize,
+    /// Redundancy level — fetches the right per-level code for the
+    /// exact decode.
+    s: usize,
+    arrivals: Vec<(usize, Vec<f32>)>,
+    approx: Vec<f64>,
+    bound: f64,
 }
 
 struct BlockState {
     need: usize,
     arrivals: Vec<(usize, Vec<f32>)>, // (row, coded f32 wire buffer)
+    /// Exactly decoded — arrivals recycled, later copies are `late`.
     decoded: bool,
+    /// Applied from a least-squares approximate decode; arrivals are
+    /// RETAINED so the exact quorum can still assemble (in-collect the
+    /// block silently upgrades to exact; at `take_outcome` the leftovers
+    /// move into the pending-reconcile set).
+    approx: Option<ApproxDecode>,
+}
+
+impl BlockState {
+    /// Complete for quorum accounting (exact or approximate).
+    fn complete(&self) -> bool {
+        self.decoded || self.approx.is_some()
+    }
 }
 
 /// In-flight state of one iteration's collection.
@@ -100,6 +195,11 @@ struct CollectState {
     /// row's contribution to block `b` was received this iteration.
     sent: Vec<Vec<bool>>,
     alive: Vec<bool>,
+    /// Rows flagged deeply backlogged at dispatch (async engine) — the
+    /// only rows a semi-async approximate decode may go short of.
+    deep: Vec<bool>,
+    /// Semi-async decode policy (`None` = exact decodes only).
+    semi: Option<SemiAsyncConfig>,
 }
 
 /// Decode-on-arrival collector; owns the decode-vector cache across
@@ -122,6 +222,16 @@ pub struct Master {
     /// [`WorkerPool`]: crate::coordinator::pool::WorkerPool
     wire_pool: BufferPool,
     collect: Option<CollectState>,
+    /// Approximately-decoded blocks from closed iterations whose exact
+    /// quorum has not landed yet (semi-async mode). Entries are keyed
+    /// by `(iter, block)` within the current epoch; an epoch swap
+    /// discards them (their arrivals belong to the superseded code).
+    pending: Vec<PendingReconcile>,
+    /// Completed reconciliations the job has not applied yet.
+    reconciled: Vec<ReconcileOutcome>,
+    /// Lifetime count of pending reconciles discarded before their
+    /// exact quorum landed (epoch swaps, failed solves, shutdown).
+    discarded: usize,
     /// Receive timeout before declaring the iteration stalled.
     pub timeout: Duration,
 }
@@ -160,6 +270,9 @@ impl Master {
             cache: DecodeCache::new(4096),
             wire_pool: BufferPool::default(),
             collect: None,
+            pending: Vec::new(),
+            reconciled: Vec::new(),
+            discarded: 0,
             timeout: Duration::from_secs(30),
         }
     }
@@ -234,11 +347,48 @@ impl Master {
         assert!(epoch > self.epoch, "scheme epochs must be monotone");
         assert_eq!(roster.len(), scheme.n(), "roster must bind every code row");
         assert!(self.collect.is_none(), "scheme swaps happen between iterations");
+        // Pending reconciles hold arrivals encoded under the superseded
+        // code — they can never mix with the new epoch's coefficients.
+        self.discard_pending();
         self.scheme = scheme;
         self.epoch = epoch;
         self.roster = roster;
         self.shards = shards;
         self.cache.reset();
+    }
+
+    /// Discard every pending reconcile (epoch swap / shutdown),
+    /// recycling the retained wire buffers. Returns how many
+    /// approximations were abandoned; the lifetime total is
+    /// [`Self::approx_discarded`]. Already-completed reconciliations
+    /// ([`Self::take_reconciled`]) are kept — their θ-range corrections
+    /// stay valid across scheme epochs (the model dimension is fixed).
+    pub fn discard_pending(&mut self) -> usize {
+        let dropped = self.pending.len();
+        for entry in self.pending.drain(..) {
+            for (_, buf) in entry.arrivals {
+                self.wire_pool.put(buf);
+            }
+        }
+        self.discarded += dropped;
+        dropped
+    }
+
+    /// Approximately-decoded blocks still waiting for their exact quorum.
+    pub fn pending_reconciles(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Lifetime count of pending reconciles discarded unreconciled.
+    pub fn approx_discarded(&self) -> usize {
+        self.discarded
+    }
+
+    /// Drain the completed reconciliations (exact quorum landed for a
+    /// block that was applied approximately); the job applies each
+    /// delta with [`crate::coordinator::state::ModelState::correct`].
+    pub fn take_reconciled(&mut self) -> Vec<ReconcileOutcome> {
+        std::mem::take(&mut self.reconciled)
     }
 
     /// Broadcast one iteration's tasks under the current scheme epoch.
@@ -286,15 +436,35 @@ impl Master {
     /// unrecoverable blocks without waiting for a timeout. Fails fast
     /// when a block already cannot reach quorum.
     pub fn begin_collect(&mut self, iter: usize, live: &[bool]) -> Result<()> {
+        self.begin_collect_async(iter, live, &vec![false; live.len()], None)
+    }
+
+    /// [`Self::begin_collect`] with the async engine's extras: `deep`
+    /// flags rows dispatched behind a deep backlog (the only rows a
+    /// semi-async approximate decode may go short of), and `semi` is
+    /// the approximate-decode policy (`None` keeps decodes exact).
+    pub fn begin_collect_async(
+        &mut self,
+        iter: usize,
+        live: &[bool],
+        deep: &[bool],
+        semi: Option<SemiAsyncConfig>,
+    ) -> Result<()> {
         assert!(self.collect.is_none(), "previous iteration still collecting");
         let ranges = self.scheme.ranges();
         let n = self.scheme.n();
         debug_assert_eq!(live.len(), n);
+        debug_assert_eq!(deep.len(), n);
         let st = CollectState {
             iter,
             blocks: ranges
                 .iter()
-                .map(|r| BlockState { need: n - r.s, arrivals: Vec::new(), decoded: false })
+                .map(|r| BlockState {
+                    need: n - r.s,
+                    arrivals: Vec::new(),
+                    decoded: false,
+                    approx: None,
+                })
                 .collect(),
             gradient: vec![0.0f64; self.dim],
             decoded_count: 0,
@@ -308,6 +478,8 @@ impl Master {
             left: Vec::new(),
             sent: vec![vec![false; ranges.len()]; n],
             alive: live.to_vec(),
+            deep: deep.to_vec(),
+            semi,
         };
         // Dead rows are known up front: fail fast when a block can
         // never reach quorum instead of waiting out the stall timeout.
@@ -372,6 +544,9 @@ impl Master {
                     if st.alive[row] {
                         st.alive[row] = false;
                         check_still_satisfiable(st, iter)?;
+                        if st.semi.is_some() {
+                            self.try_approx(st);
+                        }
                     }
                 }
             }
@@ -390,6 +565,9 @@ impl Master {
                         if st.alive[row] {
                             st.alive[row] = false;
                             check_still_satisfiable(st, iter)?;
+                            if st.semi.is_some() {
+                                self.try_approx(st);
+                            }
                         }
                     }
                 }
@@ -405,7 +583,12 @@ impl Master {
                     return Ok(());
                 }
                 if c.iter != iter {
-                    self.wire_pool.put(c.coded); // stale previous iteration
+                    // A previous iteration's straggler: in semi-async
+                    // mode it may complete a pending reconcile's exact
+                    // quorum; otherwise recycle it.
+                    if let Some(c) = self.feed_pending(c) {
+                        self.wire_pool.put(c.coded);
+                    }
                     return Ok(());
                 }
                 if c.epoch != self.epoch {
@@ -432,8 +615,33 @@ impl Master {
     /// Close the open collection and return its outcome. Panics unless
     /// [`Self::offer`] reported completion.
     pub fn take_outcome(&mut self) -> IterOutcome {
-        let st = self.collect.take().expect("take_outcome without an open collection");
+        let mut st = self.collect.take().expect("take_outcome without an open collection");
         assert_eq!(st.decoded_count, st.blocks.len(), "collection not complete");
+        // Blocks closing on an approximation owe an exact decode: their
+        // retained arrivals move into the pending-reconcile set, keyed
+        // (iter, block), together with the applied approximate gradient
+        // so the eventual reconcile can form `delta = exact − approx`.
+        let ranges = self.scheme.ranges();
+        let mut approx = Vec::new();
+        for (idx, b) in st.blocks.iter_mut().enumerate() {
+            let Some(record) = b.approx.take() else { continue };
+            if b.decoded {
+                continue; // upgraded in-collect; nothing owed
+            }
+            let r = &ranges[idx];
+            self.pending.push(PendingReconcile {
+                iter: st.iter,
+                block_idx: idx,
+                start: r.start,
+                end: r.end,
+                need: b.need,
+                s: r.s,
+                arrivals: std::mem::take(&mut b.arrivals),
+                approx: st.gradient[r.start..r.end].to_vec(),
+                bound: record.bound,
+            });
+            approx.push(record);
+        }
         IterOutcome {
             gradient: st.gradient,
             decode_ns: st.decode_ns,
@@ -444,6 +652,7 @@ impl Master {
             failed: st.failed,
             joined: st.joined,
             left: st.left,
+            approx,
         }
     }
 
@@ -509,6 +718,13 @@ impl Master {
         }
         b.arrivals.push((c.row, c.coded));
         if b.arrivals.len() < b.need {
+            // Short of the exact quorum. In semi-async mode, see whether
+            // any block is now blocked only on deeply-backlogged rows —
+            // if so, apply a bounded least-squares approximation now
+            // instead of idling behind another job's queue.
+            if st.semi.is_some() {
+                self.try_approx(st);
+            }
             return Ok(());
         }
         // Decode now: the first `need` arrivals are the survivors.
@@ -528,16 +744,160 @@ impl Master {
         let picked: Vec<&[f32]> = b.arrivals.iter().map(|(_, v)| v.as_slice()).collect();
         // Fused f32→f64 combine straight into the job's preallocated
         // gradient slice — no intermediate decode vector, no copy; the
-        // kernel fans large blocks out over scoped threads.
+        // kernel fans large blocks out over scoped threads. An exact
+        // quorum landing in-collect silently *upgrades* an approximately
+        // decoded block: the exact combine overwrites the approximation
+        // and no reconcile is ever owed.
         decode_into(a, &picked, &mut st.gradient[r.start..r.end]);
+        let was_approx = b.approx.take().is_some();
         b.decoded = true;
         for (_, buf) in b.arrivals.drain(..) {
             self.wire_pool.put(buf);
         }
         b.arrivals.shrink_to_fit();
-        st.decoded_count += 1;
+        if !was_approx {
+            st.decoded_count += 1;
+        }
         st.decode_ns += t0.elapsed().as_nanos() as u64;
         Ok(())
+    }
+
+    /// Semi-async sweep: approximately decode every incomplete block
+    /// whose exact quorum is short (by at most `max_shortfall`) only of
+    /// deeply-backlogged rows, applying the least-squares combine with
+    /// its tracked error bound. Arrivals stay in place so the exact
+    /// quorum can still upgrade the block in-collect or reconcile it
+    /// after the iteration closes; solves that fail or exceed the
+    /// residual cap are skipped silently — the block just keeps waiting.
+    fn try_approx(&self, st: &mut CollectState) {
+        let Some(semi) = st.semi.clone() else { return };
+        if semi.max_shortfall == 0 {
+            return;
+        }
+        let scheme = self.scheme.clone();
+        let ranges = scheme.ranges();
+        for (idx, b) in st.blocks.iter_mut().enumerate() {
+            if b.complete() || b.arrivals.is_empty() {
+                continue;
+            }
+            let have = b.arrivals.len();
+            let shortfall = b.need - have;
+            if shortfall > semi.max_shortfall {
+                continue;
+            }
+            // Every live row still owing this block must be deeply
+            // backlogged — otherwise an exact decode is imminent and the
+            // approximation buys nothing.
+            let all_deep = st
+                .alive
+                .iter()
+                .zip(st.sent.iter())
+                .zip(st.deep.iter())
+                .all(|((alive, sent), deep)| !*alive || sent[idx] || *deep);
+            if !all_deep {
+                continue;
+            }
+            let t0 = Instant::now();
+            b.arrivals.sort_by_key(|(row, _)| *row);
+            let survivors: Vec<usize> = b.arrivals.iter().map(|(row, _)| *row).collect();
+            let code = scheme.code(ranges[idx].s);
+            // `decode_vector_ls` guarantees a finite residual.
+            let Ok((a, residual)) = decode_vector_ls(code, &survivors) else { continue };
+            if residual > semi.max_residual {
+                continue;
+            }
+            // Observable surrogate of the Cauchy–Schwarz bound
+            // `residual·‖G‖_F`: the coded survivors' energy stands in
+            // for the unobserved per-subset gradients'.
+            let energy: f64 = b
+                .arrivals
+                .iter()
+                .map(|(_, v)| v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+                .sum();
+            let r = &ranges[idx];
+            let picked: Vec<&[f32]> = b.arrivals.iter().map(|(_, v)| v.as_slice()).collect();
+            decode_into(&a, &picked, &mut st.gradient[r.start..r.end]);
+            b.approx = Some(ApproxDecode {
+                block_idx: idx,
+                used: have,
+                shortfall,
+                residual,
+                bound: residual * energy.sqrt(),
+            });
+            st.decoded_count += 1;
+            st.decode_ns += t0.elapsed().as_nanos() as u64;
+        }
+    }
+
+    /// Try to complete a pending reconcile with a stale-iteration
+    /// contribution. Consumes the contribution (returns `None`) when it
+    /// belongs to a tracked entry — the buffer is retained until the
+    /// entry reconciles or is discarded — and hands it back otherwise so
+    /// the caller can recycle or reroute it.
+    pub fn offer_pending(&mut self, c: BlockContribution) -> Option<BlockContribution> {
+        self.feed_pending(c)
+    }
+
+    fn feed_pending(&mut self, c: BlockContribution) -> Option<BlockContribution> {
+        if c.job != self.job || c.epoch != self.epoch {
+            return Some(c);
+        }
+        if c.row >= self.roster.len() || self.roster[c.row] != c.worker {
+            return Some(c);
+        }
+        let Some(pos) =
+            self.pending.iter().position(|e| e.iter == c.iter && e.block_idx == c.block_idx)
+        else {
+            return Some(c); // not a tracked entry — hand the event back
+        };
+        let entry = &mut self.pending[pos];
+        if entry.arrivals.iter().any(|&(row, _)| row == c.row) {
+            // Duplicate row (retry / requeue): consume and recycle.
+            self.wire_pool.put(c.coded);
+            return None;
+        }
+        entry.arrivals.push((c.row, c.coded));
+        if entry.arrivals.len() >= entry.need {
+            let entry = self.pending.swap_remove(pos);
+            self.reconcile_entry(entry);
+        }
+        None
+    }
+
+    /// The exact quorum landed for an approximately-applied block:
+    /// decode exactly, queue `delta = exact − approx` for the job to
+    /// apply, recycle the retained buffers. A failed solve discards the
+    /// entry instead (counted in [`Self::approx_discarded`]).
+    fn reconcile_entry(&mut self, mut entry: PendingReconcile) {
+        entry.arrivals.sort_by_key(|(row, _)| *row);
+        let survivors: Vec<usize> = entry.arrivals.iter().map(|(row, _)| *row).collect();
+        let scheme = self.scheme.clone();
+        let code = scheme.code(entry.s);
+        let decoded = self.cache.get(code, &survivors).map(|a| {
+            let picked: Vec<&[f32]> =
+                entry.arrivals.iter().map(|(_, v)| v.as_slice()).collect();
+            let mut exact = vec![0.0f64; entry.end - entry.start];
+            decode_into(a, &picked, &mut exact);
+            exact
+        });
+        for (_, buf) in entry.arrivals.drain(..) {
+            self.wire_pool.put(buf);
+        }
+        match decoded {
+            Ok(exact) => {
+                let delta: Vec<f64> =
+                    exact.iter().zip(entry.approx.iter()).map(|(e, a)| e - a).collect();
+                self.reconciled.push(ReconcileOutcome {
+                    iter: entry.iter,
+                    block_idx: entry.block_idx,
+                    start: entry.start,
+                    end: entry.end,
+                    delta,
+                    bound: entry.bound,
+                });
+            }
+            Err(_) => self.discarded += 1,
+        }
     }
 }
 
@@ -549,7 +909,7 @@ impl Master {
 /// *other* blocks.
 fn check_still_satisfiable(st: &CollectState, iter: usize) -> Result<()> {
     for (idx, b) in st.blocks.iter().enumerate() {
-        if b.decoded {
+        if b.complete() {
             continue;
         }
         let pending = st
@@ -1400,5 +1760,153 @@ mod tests {
         for w in heavy.windows(2) {
             assert!(w[1] - w[0] >= 3, "heavy subsets clustered: {heavy:?}");
         }
+    }
+
+    /// A lenient semi-async policy for tests: one-row shortfall, any
+    /// residual accepted (the assertions check the tracked values).
+    fn lenient_semi() -> SemiAsyncConfig {
+        SemiAsyncConfig { max_shortfall: 1, backlog_factor: 2.0, max_residual: 10.0 }
+    }
+
+    #[test]
+    fn approx_decode_fires_on_deep_rows_and_reconciles_to_exact() {
+        // Single block, s=1, need 3 of 4. Rows 2 and 3 are flagged
+        // deeply backlogged; after rows 0 and 1 deliver, the block is
+        // short exactly one row and every missing row is deep — the
+        // approximation fires. The straggler's exact quorum then lands
+        // as a stale-iteration event and reconciles.
+        let (n, dim) = (4usize, 8usize);
+        let mut rng = Rng::new(211);
+        let part = BlockPartition::new(vec![0, 8, 0, 0]); // one block, s=1
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, want) = random_subset_grads(n, dim, &mut rng);
+        let mut master = Master::new(scheme.clone(), dim);
+        let pool = crate::util::buffers::BufferPool::new(64);
+        master.set_wire_pool(pool.clone());
+
+        let live = vec![true; n];
+        let deep = vec![false, false, true, true];
+        master.begin_collect_async(0, &live, &deep, Some(lenient_semi())).unwrap();
+        let mut sent = 0u64;
+        for w in 0..2 {
+            for ev in contributions(&scheme, 0, 0, &subset_grads, w) {
+                sent += 1;
+                master.offer(ev).unwrap();
+            }
+        }
+        assert!(master.collect_complete(), "approx must complete the iteration");
+        let out = master.take_outcome();
+        assert_eq!(out.approx.len(), 1);
+        let rec = &out.approx[0];
+        assert_eq!((rec.used, rec.shortfall), (2, 1));
+        assert!(rec.residual > 0.0, "a short quorum cannot be exact");
+        assert!(rec.bound > 0.0 && rec.bound.is_finite());
+        assert_eq!(master.pending_reconciles(), 1);
+
+        // The deep row's contribution arrives for iteration 0 while
+        // iteration 1 is already open → routed to the pending set.
+        master.begin_collect(1, &live).unwrap();
+        for ev in contributions(&scheme, 0, 0, &subset_grads, 2) {
+            sent += 1;
+            master.offer(ev).unwrap();
+        }
+        master.abort_collect();
+        assert_eq!(master.pending_reconciles(), 0, "exact quorum landed");
+        let rec = master.take_reconciled();
+        assert_eq!(rec.len(), 1);
+        // approx + delta == exact == the full-dataset gradient.
+        for d in rec[0].start..rec[0].end {
+            let fixed = out.gradient[d] + rec[0].delta[d - rec[0].start];
+            assert!(
+                (fixed - want[d]).abs() < 1e-4 * (1.0 + want[d].abs()),
+                "coordinate {d}: reconciled {fixed} want {}",
+                want[d]
+            );
+        }
+        // Every wire buffer (two approx survivors + the reconciler)
+        // was recycled once the reconcile closed.
+        assert_eq!(master.wire_pool_stats().returned, sent);
+    }
+
+    #[test]
+    fn exact_quorum_in_collect_upgrades_an_approximation_silently() {
+        let (n, dim) = (4usize, 6usize);
+        let mut rng = Rng::new(223);
+        let part = BlockPartition::new(vec![0, 6, 0, 0]); // one block, s=1, need 3
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, want) = random_subset_grads(n, dim, &mut rng);
+        let mut master = Master::new(scheme.clone(), dim);
+        let pool = crate::util::buffers::BufferPool::new(64);
+        master.set_wire_pool(pool.clone());
+
+        let live = vec![true; n];
+        let deep = vec![false, false, true, true];
+        master.begin_collect_async(0, &live, &deep, Some(lenient_semi())).unwrap();
+        let mut sent = 0u64;
+        // Rows 0, 1 → approximation fires; rows 2, 3 still deliver
+        // in-collect: the exact decode overwrites it, the 4th is late.
+        for w in 0..n {
+            for ev in contributions(&scheme, 0, 0, &subset_grads, w) {
+                sent += 1;
+                master.offer(ev).unwrap();
+            }
+        }
+        let out = master.take_outcome();
+        assert!(out.approx.is_empty(), "upgraded blocks owe no reconcile");
+        assert_eq!(out.late_contributions, 1);
+        assert_eq!(master.pending_reconciles(), 0);
+        for d in 0..dim {
+            assert!(
+                (out.gradient[d] - want[d]).abs() < 1e-5 * (1.0 + want[d].abs()),
+                "upgrade must land the exact decode: got {} want {}",
+                out.gradient[d],
+                want[d]
+            );
+        }
+        assert_eq!(master.wire_pool_stats().returned, sent);
+    }
+
+    #[test]
+    fn epoch_swap_discards_pending_reconciles_and_recycles_buffers() {
+        let (n, dim) = (4usize, 8usize);
+        let mut rng = Rng::new(227);
+        let part = BlockPartition::new(vec![0, 8, 0, 0]);
+        let scheme_a = Arc::new(CodingScheme::new(part.clone(), &mut rng).unwrap());
+        let scheme_b = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (subset_grads, _) = random_subset_grads(n, dim, &mut rng);
+        let mut master = Master::new(scheme_a.clone(), dim);
+        let pool = crate::util::buffers::BufferPool::new(64);
+        master.set_wire_pool(pool.clone());
+
+        let live = vec![true; n];
+        let deep = vec![false, false, true, true];
+        master.begin_collect_async(0, &live, &deep, Some(lenient_semi())).unwrap();
+        let mut sent = 0u64;
+        for w in 0..2 {
+            for ev in contributions(&scheme_a, 0, 0, &subset_grads, w) {
+                sent += 1;
+                master.offer(ev).unwrap();
+            }
+        }
+        let _ = master.take_outcome();
+        assert_eq!(master.pending_reconciles(), 1);
+
+        // A stale contribution that matches no pending entry is handed
+        // back untouched (the caller recycles or reroutes it).
+        let stray = job_row_contributions(&scheme_a, 0, 7, 0, &subset_grads, 3, 3);
+        for ev in stray {
+            if let WorkerEvent::Block(c) = ev {
+                let back = master.offer_pending(c).expect("untracked event is handed back");
+                sent += 1;
+                pool.put(back.coded);
+            }
+        }
+
+        // The swap invalidates the retained epoch-0 arrivals.
+        install_identity(&mut master, scheme_b, 1);
+        assert_eq!(master.pending_reconciles(), 0);
+        assert_eq!(master.approx_discarded(), 1);
+        assert!(master.take_reconciled().is_empty());
+        assert_eq!(master.wire_pool_stats().returned, sent);
     }
 }

@@ -33,6 +33,13 @@ pub struct IterMetrics {
     pub stale_epoch_contributions: usize,
     /// Gradient L2 norm (diagnostic).
     pub grad_norm: f64,
+    /// Blocks applied from a semi-async least-squares approximate
+    /// decode this iteration (0 in fully-exact mode).
+    pub approx_blocks: usize,
+    /// Queued virtual time this iteration's broadcast waited behind
+    /// in-flight work from other jobs (0 when rounds are serialized):
+    /// the max over rows of the backlog depth priced into dispatch.
+    pub queue_wait: f64,
 }
 
 /// One installed coding scheme (the trainer hot-swaps these mid-run).
@@ -104,6 +111,15 @@ pub struct TrainReport {
     pub wire_pool_hits: u64,
     pub wire_pool_misses: u64,
     pub wire_pool_returned: u64,
+    /// Semi-async decode accounting: blocks applied from a
+    /// least-squares approximate decode, how many of those were later
+    /// reconciled against the exact quorum, how many were discarded
+    /// before it landed (epoch swap / shutdown), and the largest
+    /// tracked error bound among the approximations applied.
+    pub approx_decodes: usize,
+    pub approx_reconciled: usize,
+    pub approx_discarded: usize,
+    pub max_approx_bound: f64,
     /// Workers that failed permanently during the run.
     pub failed_workers: Vec<usize>,
 }
@@ -153,6 +169,11 @@ impl TrainReport {
     /// Total stale-epoch contributions dropped across the run.
     pub fn stale_epoch_total(&self) -> usize {
         self.iters.iter().map(|m| m.stale_epoch_contributions).sum()
+    }
+
+    /// Total blocks applied via semi-async approximate decode.
+    pub fn approx_blocks_total(&self) -> usize {
+        self.iters.iter().map(|m| m.approx_blocks).sum()
     }
 
     pub fn final_loss(&self) -> Option<f32> {
@@ -244,6 +265,8 @@ mod tests {
             late_contributions: 0,
             stale_epoch_contributions: 0,
             grad_norm: 1.0,
+            approx_blocks: 0,
+            queue_wait: 0.0,
         }
     }
 

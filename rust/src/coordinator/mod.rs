@@ -86,6 +86,47 @@
 //!   decode vector, no copy — and fans large blocks out over scoped
 //!   threads ([`crate::linalg::kernels::fused_combine_into_f64_auto`]).
 //!
+//! ## Round lifecycle under asynchronous, position-aware dispatch
+//!
+//! [`pool::WorkerPool::run_all_async`] generalizes step 1–3 above from
+//! a decode-to-completion barrier to a **pipeline** ([`pool::AsyncConfig`]):
+//!
+//! 1. **Dispatch.** While fewer than `max_inflight` collects are open,
+//!    the scheduler picks a ready job (not already mid-iteration) and
+//!    broadcasts its next iteration immediately — job B's iteration
+//!    `t+1` goes out while job A's tail blocks are still in flight.
+//!    Each worker's unfinished queued work at dispatch is its
+//!    **backlog**, tracked on per-worker virtual-time segment queues.
+//! 2. **Backlog-priced re-solve.** Before broadcasting, each row's
+//!    backlog (converted to cycles of the dispatching job's unit work)
+//!    is folded into its fitted cycle-time model as an added shift —
+//!    [`distribution::fit::FittedModel::delayed`](crate::distribution::fit::FittedModel::delayed)
+//!    — so Eq. (2) and the subgradient solver price queue position
+//!    natively; a backlog skew beyond the configured threshold installs
+//!    the re-solved partition as a fresh scheme epoch.
+//! 3. **Approximate / exact decode.** Each block still decodes exactly
+//!    from its first `N − s` arrivals. With
+//!    [`master::SemiAsyncConfig`], a block whose quorum is short *only*
+//!    of deeply-backlogged rows is instead decoded **approximately**
+//!    (least-squares over the arrived codewords,
+//!    [`crate::coding::decoder::decode_vector_ls`]) and applied with a
+//!    tracked error bound; an exact quorum landing later in the same
+//!    collect silently upgrades it.
+//! 4. **Reconcile.** Approximate blocks still short at finalize become
+//!    pending reconciliations: when their exact quorum arrives in later
+//!    rounds (stale-iteration arrivals feed them instead of being
+//!    dropped), the master emits `delta = exact − approx` and the pool
+//!    re-bases θ over just that block range
+//!    ([`state::ModelState::correct`]); a scheme-epoch swap discards
+//!    what is left, with buffers recycled and counts reported.
+//!
+//! A finalized round truncates its segments at the decode's virtual
+//! completion and reflows the queues, so `max_inflight = 1` reproduces
+//! the serialized schedule bit-for-bit; stale-iteration and stale-epoch
+//! drops, buffer recycling and per-job accounting all extend to
+//! overlapped iterations ([`pool`]'s module docs cover the dispatch
+//! gates and accounting invariants).
+//!
 //! Single-job callers keep the classic facade ([`trainer`]):
 //! `train(cfg, schedule, factory)` or a driveable
 //! [`trainer::TrainSession`].

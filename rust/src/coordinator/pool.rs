@@ -58,16 +58,48 @@
 //! pool rebinds rows **once** and every job re-solves its partition for
 //! the new `N'` (each from its own family-selected fit, all off the
 //! shared membership epoch) and installs it as a fresh scheme epoch.
+//!
+//! ## Asynchronous rounds
+//!
+//! [`WorkerPool::run_all_async`] replaces the decode-to-completion
+//! barrier with a **pipelined** dispatcher ([`AsyncConfig`]): up to
+//! `max_inflight` jobs have a broadcast iteration open at once, so job
+//! B's iteration `t+1` goes out while job A's tail blocks are still in
+//! flight. The engine keeps a per-worker **virtual-time queue** of
+//! compute segments; at each dispatch, a row's queued-but-unfinished
+//! work is its *backlog*, which
+//!
+//! 1. **prices the scheme** — each row's backlog divided by the round's
+//!    unit work becomes an added shift on its fitted cycle-time model
+//!    (Eq. (2) and the subgradient solver then price queue position
+//!    natively), and a sufficiently skewed backlog triggers a re-solve
+//!    ([`AsyncConfig::reprice_threshold`]);
+//! 2. **marks deep rows** — rows whose backlog exceeds
+//!    `backlog_factor ×` one average round feed the master's
+//!    semi-asynchronous decode ([`SemiAsyncConfig`]): a block short only
+//!    of deeply-backlogged rows is decoded approximately
+//!    (least-squares, with a tracked error bound) and reconciled — or
+//!    discarded — when the exact quorum lands.
+//!
+//! A finalized round **truncates** its segments at the decode's virtual
+//! completion (tail compute past the quorum is abandoned, exactly like
+//! the serialized barrier) and reflows the queues behind it, so with
+//! `max_inflight = 1` the async engine reproduces the serialized
+//! schedule bit-for-bit — pipelining only ever adds overlap, never
+//! accounting drift.
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coding::scheme::CodingScheme;
-use crate::coordinator::adaptive::{self, AdaptiveConfig, AdaptiveController, ResolveStrategy};
+use crate::coordinator::adaptive::{
+    self, AdaptiveConfig, AdaptiveController, ObservationStore, ResolveStrategy,
+};
 use crate::coordinator::channel::{BlockContribution, JobId, ShardMap, WorkerEvent, WorkerTask};
 use crate::coordinator::master::{
     load_multipliers, redistribute_shards, redistribute_shards_weighted, IterOutcome, Master,
+    SemiAsyncConfig,
 };
 use crate::coordinator::membership::{MemberStatus, WorkerId, WorkerRegistry};
 use crate::coordinator::metrics::{
@@ -141,6 +173,36 @@ impl ScheduleMode {
     }
 }
 
+/// Asynchronous round engine policy (see the module docs): how deep the
+/// broadcast pipeline runs and how queue backlog feeds scheme selection
+/// and semi-asynchronous decoding.
+#[derive(Debug, Clone)]
+pub struct AsyncConfig {
+    /// Maximum simultaneously open collects (clamped to ≥ 1; a job
+    /// never has two of its own iterations open — synchronous GD needs
+    /// the decoded gradient before the next broadcast — so depth beyond
+    /// the job count buys nothing).
+    pub max_inflight: usize,
+    /// Fold each row's queued virtual time into its cycle-time model as
+    /// an added shift before solving the partition (the position-aware
+    /// part of position-aware rounds).
+    pub backlog_pricing: bool,
+    /// Re-solve the dispatching job's partition when the rows' backlog
+    /// skew (max − min, in cycle-time units) exceeds this multiple of
+    /// the fitted mean cycle time. Requires an adaptive controller on
+    /// the job; 0 re-prices on any skew.
+    pub reprice_threshold: f64,
+    /// Enable semi-asynchronous decoding for blocks short only of
+    /// deeply-backlogged rows (None = exact quorums only).
+    pub semi_async: Option<SemiAsyncConfig>,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        Self { max_inflight: 2, backlog_pricing: true, reprice_threshold: 0.25, semi_async: None }
+    }
+}
+
 /// Pool-wide configuration (everything that is a property of the
 /// worker fleet rather than of any one job).
 #[derive(Clone)]
@@ -165,6 +227,10 @@ pub struct PoolConfig {
     /// worker speeds are a pool property, so tenants share straggler
     /// statistics and windows fill `K×` faster on a `K`-job pool.
     pub shared_observations: bool,
+    /// Pipelined dispatch policy for [`WorkerPool::run_all_async`]
+    /// (None = that entry point falls back to the serialized
+    /// [`WorkerPool::run_all`]).
+    pub async_rounds: Option<AsyncConfig>,
 }
 
 impl PoolConfig {
@@ -178,6 +244,7 @@ impl PoolConfig {
             elastic: None,
             schedule: ScheduleMode::RoundRobin,
             shared_observations: true,
+            async_rounds: None,
         }
     }
 }
@@ -593,6 +660,11 @@ impl JobHandle {
     }
 
     fn finalize(&mut self, failed: &[usize]) {
+        // Un-reconciled semi-async approximations die with the run:
+        // their retained arrival buffers go back to the pool before the
+        // wire stats are snapshotted, and they count as discarded.
+        self.master.discard_pending();
+        self.report.approx_discarded = self.master.approx_discarded();
         let (hits, misses) = self.master.cache_stats();
         self.report.decode_cache_hits = hits;
         self.report.decode_cache_misses = misses;
@@ -613,6 +685,11 @@ pub struct WorkerPool {
     /// Task channel per worker **id** (None once drained/dead/never
     /// spawned). Indexed by stable id, not row.
     task_txs: Vec<Option<Sender<WorkerTask>>>,
+    /// Row-ordered task channels for the current roster, cached per
+    /// membership epoch (rebuilding this per iteration was measurable
+    /// broadcast overhead). Invalidated on rebind, join and departure.
+    row_senders: Vec<Option<Sender<WorkerTask>>>,
+    row_senders_dirty: bool,
     /// Kept for spawning late joiners; the channel therefore never
     /// disconnects while the pool lives (stalls still time out).
     event_tx: Sender<WorkerEvent>,
@@ -696,6 +773,8 @@ impl WorkerPool {
             cfg,
             registry,
             task_txs,
+            row_senders: Vec::new(),
+            row_senders_dirty: true,
             event_tx,
             event_rx,
             handles,
@@ -813,6 +892,20 @@ impl WorkerPool {
                 None => AdaptiveController::new(acfg),
             };
             c.set_roster(self.registry.roster());
+            // Pool-level shared observation store: a compatible tenant
+            // borrows the first existing tenant's store instead of
+            // keeping its own copy of the same per-machine evidence —
+            // one write and one memoized fit per machine per round,
+            // however many jobs share the pool.
+            if self.cfg.shared_observations {
+                for existing in &self.jobs {
+                    if let Some(other) = existing.controller.as_ref() {
+                        if c.attach_store(&other.shared_store()) {
+                            break;
+                        }
+                    }
+                }
+            }
             c
         });
         let state = if js.init_scale > 0.0 {
@@ -884,6 +977,7 @@ impl WorkerPool {
             self.task_txs.resize_with(id + 1, || None);
         }
         self.task_txs[id] = Some(tx);
+        self.row_senders_dirty = true;
         crate::log_info!("round {}: worker {id} joined (pending next epoch)", self.rounds);
         for job in &mut self.jobs {
             job.record_membership(MembershipEvent::Join { worker: id });
@@ -928,6 +1022,7 @@ impl WorkerPool {
         if let Some(tx) = self.task_txs.get_mut(id) {
             *tx = None;
         }
+        self.row_senders_dirty = true;
         if let Some(row) = self.registry.row_of(id) {
             if row < self.live_mask.len() {
                 self.live_mask[row] = false;
@@ -1028,6 +1123,7 @@ impl WorkerPool {
         let roster = self.registry.rebind().to_vec();
         debug_assert_eq!(roster.len(), to_n);
         self.live_mask = vec![true; to_n];
+        self.row_senders_dirty = true;
         for job in &mut self.jobs {
             if job.done() {
                 continue;
@@ -1035,6 +1131,52 @@ impl WorkerPool {
             job.redimension(to_n, &roster, fallback.clone())?;
         }
         Ok(true)
+    }
+
+    /// Feed one round's sampled cycle times to the drift estimators.
+    /// Pooled feed (`shared_observations`): worker speeds are a pool
+    /// property, so every tenant's window may learn from every round —
+    /// but tenants attached to the same shared [`ObservationStore`]
+    /// get **one** write (and one memoized fit) per machine per round,
+    /// not `K` copies; only controllers whose configs were incompatible
+    /// at submit keep (and feed) their own stores. Every observation is
+    /// stamped with the worker's stable id, so per-worker windows never
+    /// blend identities across rebinds.
+    fn observe_round(&mut self, id: JobId, times: &[f64], roster: &[WorkerId]) {
+        if self.cfg.shared_observations {
+            let mut seen: Vec<Arc<Mutex<ObservationStore>>> = Vec::new();
+            for job in self.jobs.iter_mut() {
+                if let Some(ctrl) = job.controller.as_mut() {
+                    let store = ctrl.shared_store();
+                    if seen.iter().any(|s| Arc::ptr_eq(s, &store)) {
+                        // Another tenant already fed this store this
+                        // round; just refresh the roster binding.
+                        ctrl.set_roster(roster);
+                    } else {
+                        ctrl.observe_rows(times, roster);
+                        seen.push(store);
+                    }
+                }
+            }
+        } else if let Some(ctrl) = self.jobs[id].controller.as_mut() {
+            ctrl.observe_rows(times, roster);
+        }
+    }
+
+    /// Rebuild the cached row → task-channel table if membership moved
+    /// since the last broadcast (None where the bound worker already
+    /// departed).
+    fn refresh_row_senders(&mut self) {
+        if !self.row_senders_dirty {
+            return;
+        }
+        self.row_senders = self
+            .registry
+            .roster()
+            .iter()
+            .map(|&wid| self.task_txs.get(wid).cloned().flatten())
+            .collect();
+        self.row_senders_dirty = false;
     }
 
     /// One GD iteration for job `id`: sample the round's pool-wide
@@ -1057,26 +1199,8 @@ impl WorkerPool {
         // Cycle times are drawn per stable id (a machine keeps its
         // speed across rebinds); `times[row]` belongs to `roster[row]`.
         let times = self.sampler.sample_roster(self.rounds, &roster);
-        // Pooled estimator feed: worker speeds are a pool property, so
-        // every tenant's window may learn from every round. Every
-        // observation is stamped with the worker's stable id, so
-        // per-worker windows never blend identities across rebinds.
-        if self.cfg.shared_observations {
-            for job in self.jobs.iter_mut() {
-                if let Some(ctrl) = job.controller.as_mut() {
-                    ctrl.observe_rows(&times, &roster);
-                }
-            }
-        } else if let Some(ctrl) = self.jobs[id].controller.as_mut() {
-            ctrl.observe_rows(&times, &roster);
-        }
-
-        // Row-ordered task channels for the current roster (None where
-        // the bound worker already departed).
-        let senders: Vec<Option<Sender<WorkerTask>>> = roster
-            .iter()
-            .map(|&wid| self.task_txs.get(wid).cloned().flatten())
-            .collect();
+        self.observe_round(id, &times, &roster);
+        self.refresh_row_senders();
         let iter = self.jobs[id].iters_done;
         // Effective per-row cycle times: a speed-weighted re-shard
         // changes each row's per-unit data load, so its compute pace
@@ -1095,10 +1219,11 @@ impl WorkerPool {
                 &eff,
                 job.spec.unit_work(),
                 &job.factory,
-                &senders,
+                &self.row_senders,
             );
         }
         let outcome = self.collect_for(id, iter)?;
+        let approx_blocks = outcome.approx.len();
 
         for w in outcome.joined {
             self.registry.confirm(w);
@@ -1143,6 +1268,9 @@ impl WorkerPool {
                 + outcome.mismatched_binding
                 + outcome.cross_job,
             grad_norm,
+            approx_blocks,
+            // The serialized barrier never dispatches into a backlog.
+            queue_wait: 0.0,
         });
         job.iters_done += 1;
         if job.eval_every > 0 && job.iters_done % job.eval_every == 0 {
@@ -1205,6 +1333,19 @@ impl WorkerPool {
 
     /// Pick the next job to broadcast (None when every job is done).
     pub fn next_job(&mut self) -> Option<JobId> {
+        self.pick_job(|j| !j.done())
+    }
+
+    /// The async dispatcher's eligibility: unfinished and not already
+    /// collecting an in-flight iteration (synchronous GD needs the
+    /// decoded gradient before its next broadcast).
+    fn pick_ready_job(&mut self) -> Option<JobId> {
+        self.pick_job(|j| !j.done() && !j.master.is_collecting())
+    }
+
+    /// Scheduler core shared by the serialized and async drivers: the
+    /// schedule mode picks among `eligible` jobs.
+    fn pick_job(&mut self, eligible: impl Fn(&JobHandle) -> bool) -> Option<JobId> {
         let k = self.jobs.len();
         if k == 0 {
             return None;
@@ -1213,7 +1354,7 @@ impl WorkerPool {
             ScheduleMode::RoundRobin => {
                 for off in 0..k {
                     let id = (self.rr_cursor + off) % k;
-                    if !self.jobs[id].done() {
+                    if eligible(&self.jobs[id]) {
                         self.rr_cursor = (id + 1) % k;
                         return Some(id);
                     }
@@ -1224,7 +1365,7 @@ impl WorkerPool {
                 .jobs
                 .iter()
                 .enumerate()
-                .filter(|(_, j)| !j.done())
+                .filter(|(_, j)| eligible(j))
                 .min_by(|a, b| {
                     a.1.issued_work
                         .partial_cmp(&b.1.issued_work)
@@ -1272,6 +1413,563 @@ impl WorkerPool {
     pub fn run_to_completion(mut self) -> Result<Vec<TrainReport>> {
         self.run_all()?;
         self.finish()
+    }
+
+    /// Drive every job to completion with **pipelined** broadcasts (see
+    /// the module docs): up to [`AsyncConfig::max_inflight`] collects
+    /// stay open at once, dispatches price each row's queue backlog
+    /// into the scheme, and semi-asynchronous decodes (when configured)
+    /// trade a tracked approximation error for not waiting on
+    /// deeply-backlogged rows. Falls back to the serialized
+    /// [`Self::run_all`] when `PoolConfig::async_rounds` is unset.
+    pub fn run_all_async(&mut self) -> Result<()> {
+        let Some(cfg) = self.cfg.async_rounds.clone() else {
+            return self.run_all();
+        };
+        let mut eng = AsyncEngine::new(cfg, self.task_txs.len());
+        let out = self.drive_async(&mut eng);
+        if out.is_err() {
+            // Recycle what the open collects held before surfacing.
+            self.abort_open(&mut eng);
+        }
+        if eng.makespan > self.virtual_makespan {
+            self.virtual_makespan = eng.makespan;
+        }
+        out
+    }
+
+    /// [`Self::run_all_async`] + [`Self::finish`].
+    pub fn run_to_completion_async(mut self) -> Result<Vec<TrainReport>> {
+        self.run_all_async()?;
+        self.finish()
+    }
+
+    fn drive_async(&mut self, eng: &mut AsyncEngine) -> Result<()> {
+        let max_inflight = eng.cfg.max_inflight.max(1);
+        loop {
+            // Fill the pipeline: dispatch every ready job up to depth.
+            while eng.open.len() < max_inflight {
+                let Some(id) = self.pick_ready_job() else { break };
+                self.dispatch_round(eng, id)?;
+            }
+            // Finalize whatever completed (including degenerate rounds
+            // that were complete at dispatch); freed slots re-enter the
+            // dispatch loop before we block on the channel.
+            if self.finalize_complete(eng)? > 0 {
+                continue;
+            }
+            if eng.open.is_empty() {
+                // Nothing open and nothing dispatchable: all jobs done.
+                return Ok(());
+            }
+            let ev = match self.event_rx.recv_timeout(self.cfg.stall_timeout) {
+                Ok(ev) => ev,
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(Error::Runtime(format!(
+                        "async rounds: stalled with {} open collect(s)",
+                        eng.open.len()
+                    )));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Runtime("async rounds: all workers disconnected".into()));
+                }
+            };
+            self.route_event_async(ev)?;
+        }
+    }
+
+    /// Abort every open collect (error path), recycling master-held
+    /// buffers.
+    fn abort_open(&mut self, eng: &mut AsyncEngine) {
+        for open in eng.open.drain(..) {
+            self.jobs[open.job].master.abort_collect();
+        }
+    }
+
+    /// Dispatch one pipelined iteration of job `id`. Mirrors the
+    /// serialized per-round order exactly — scheduled churn, the job's
+    /// adapt poll, the pool-wide re-dimension check (deferred to
+    /// pipeline-drain points: a rebind swaps every job's epoch and must
+    /// not land under an open collect), then broadcast — plus the
+    /// position-aware parts: backlog pricing and the deep-row mask.
+    fn dispatch_round(&mut self, eng: &mut AsyncEngine, id: JobId) -> Result<()> {
+        self.apply_scheduled_churn_at(self.rounds)?;
+        self.adapt_job(id)?;
+        if eng.open.is_empty() {
+            self.maybe_redimension()?;
+        }
+        let t_wall = Instant::now();
+        let n = self.registry.n();
+        debug_assert_eq!(self.jobs[id].spec.n, n, "job not re-dimensioned to the live roster");
+        let roster = self.registry.roster().to_vec();
+        let times = self.sampler.sample_roster(self.rounds, &roster);
+        self.observe_round(id, &times, &roster);
+        let iter = self.jobs[id].iters_done;
+        let eff: Vec<f64> = times
+            .iter()
+            .enumerate()
+            .map(|(row, &t)| t * self.jobs[id].load_mult.get(row).copied().unwrap_or(1.0))
+            .collect();
+
+        // Dispatch stamp: the job's own GD dependency (θ needs the
+        // previous iteration's gradient) and, when the pipeline was
+        // full, the finalize that freed this slot.
+        let t_b = eng.avail(id).max(eng.slot_gate);
+        // Per-row backlog: queued-but-unfinished virtual work at t_b.
+        let q: Vec<f64> = roster.iter().map(|&wid| (eng.wfree(wid) - t_b).max(0.0)).collect();
+        let queue_wait = q.iter().cloned().fold(0.0, f64::max);
+
+        if eng.cfg.backlog_pricing {
+            self.maybe_reprice(eng, id, iter, &q)?;
+        }
+
+        self.refresh_row_senders();
+        {
+            let job = &self.jobs[id];
+            job.master.broadcast(
+                iter,
+                job.state.shared(),
+                &eff,
+                job.spec.unit_work(),
+                &job.factory,
+                &self.row_senders,
+            );
+        }
+        // Deep-row mask for the semi-async decode: a row whose backlog
+        // exceeds `backlog_factor ×` one average round of this job's
+        // work is not worth waiting on.
+        let semi = eng.cfg.semi_async.clone();
+        let deep: Vec<bool> = match &semi {
+            Some(cfg) => {
+                let job = &self.jobs[id];
+                let mean_t = eff.iter().sum::<f64>() / eff.len().max(1) as f64;
+                let round_v = job.spec.unit_work() * job.scheme.work_units_per_worker() * mean_t;
+                q.iter().map(|&b| b > cfg.backlog_factor * round_v).collect()
+            }
+            None => vec![false; n],
+        };
+        self.jobs[id].master.begin_collect_async(iter, &self.live_mask, &deep, semi)?;
+
+        // Enqueue the round's compute segments on the virtual-time
+        // queues and open the round.
+        let job = &mut self.jobs[id];
+        let unit = job.spec.unit_work();
+        let ranges = job.scheme.ranges();
+        let mut cum = Vec::with_capacity(ranges.len());
+        let mut ks = Vec::with_capacity(ranges.len());
+        let mut acc = 0.0f64;
+        for r in &ranges {
+            acc += ((r.s + 1) * r.len()) as f64;
+            cum.push(acc);
+            ks.push(n - 1 - r.s);
+        }
+        for (row, &wid) in roster.iter().enumerate() {
+            eng.push_seg(wid, id, iter, t_b, unit * (eff[row] * acc));
+        }
+        job.issued_work += unit * job.scheme.work_units_per_worker();
+        eng.open.push(OpenRound {
+            job: id,
+            iter,
+            t_b,
+            roster,
+            eff,
+            unit,
+            cum,
+            ks,
+            queue_wait,
+            t_wall,
+        });
+        self.rounds += 1;
+        Ok(())
+    }
+
+    /// Backlog-aware scheme selection: express each row's queued
+    /// virtual time as an added shift on its fitted cycle-time model
+    /// (`delay = backlog / (unit·W)` cycles — Eq. (2) and the
+    /// subgradient solver then price queue position natively) and
+    /// re-solve the partition when the backlog skew across rows exceeds
+    /// [`AsyncConfig::reprice_threshold`] mean cycle times. No-op for
+    /// jobs without an adaptive controller or without fit evidence.
+    fn maybe_reprice(
+        &mut self,
+        eng: &AsyncEngine,
+        id: JobId,
+        iter: usize,
+        q: &[f64],
+    ) -> Result<()> {
+        let job = &self.jobs[id];
+        let Some(ctrl) = job.controller.as_ref() else { return Ok(()) };
+        let w = job.spec.unit_work() * job.scheme.work_units_per_worker();
+        if w <= 0.0 || q.is_empty() {
+            return Ok(());
+        }
+        let Some(fit) = ctrl.current_fit() else { return Ok(()) };
+        let mean = fit.mean();
+        if !mean.is_finite() || mean <= 0.0 {
+            return Ok(());
+        }
+        let max_q = q.iter().cloned().fold(0.0f64, f64::max);
+        let min_q = q.iter().cloned().fold(f64::INFINITY, f64::min);
+        // Backlog skew in cycle-time units: a uniform backlog shifts
+        // every row equally and leaves the optimal partition unchanged.
+        let skew = (max_q - min_q) / w;
+        if !skew.is_finite() || skew <= eng.cfg.reprice_threshold * mean {
+            return Ok(());
+        }
+        let delays: Vec<f64> = q.iter().map(|&v| v / w).collect();
+        let roster = self.registry.roster().to_vec();
+        let Some(fleet) = ctrl.delay_priced_fleet(&roster, &delays) else { return Ok(()) };
+        let warm = job.scheme.blocks().as_f64();
+        let spec = job.spec;
+        let strategy = job.resolve_strategy.clone();
+        let dim = job.dim;
+        let job = &mut self.jobs[id];
+        let blocks = adaptive::resolve_partition(
+            &strategy,
+            &spec,
+            &fleet,
+            Some(warm.as_slice()),
+            dim,
+            &mut job.rng,
+        )?;
+        crate::log_info!(
+            "job {id}: iter {iter}: backlog skew {:.2}× mean → repricing scheme epoch {}",
+            skew / mean,
+            job.epoch + 1
+        );
+        job.install_scheme(blocks, iter, Some(&fit), skew / mean)
+    }
+
+    /// Route one shared-channel event while async rounds are open.
+    /// Blocks go to their own job's master — its open collect when it
+    /// has one (stale-iteration arrivals feed pending reconciliations
+    /// internally), the reconciliation path otherwise, the off-cycle
+    /// counters as a last resort. Membership events fan out to every
+    /// open collect; the registry reconciles once per finalize (its
+    /// transitions are idempotent).
+    fn route_event_async(&mut self, ev: WorkerEvent) -> Result<()> {
+        match ev {
+            WorkerEvent::Block(c) => {
+                let jid = c.job;
+                match self.jobs.get_mut(jid) {
+                    None => {
+                        self.cross_job_dropped += 1;
+                        self.wire_pool.put(c.coded);
+                    }
+                    Some(job) => {
+                        if job.master.is_collecting() {
+                            job.master.offer(WorkerEvent::Block(c))?;
+                        } else if let Some(c) = job.master.offer_pending(c) {
+                            // Not a pending reconciliation either: a
+                            // plain off-cycle tail block.
+                            job.note_offcycle(&c);
+                            self.wire_pool.put(c.coded);
+                        }
+                        self.apply_reconciles(jid);
+                    }
+                }
+            }
+            WorkerEvent::Joined { worker } => {
+                for job in self.jobs.iter_mut() {
+                    if job.master.is_collecting() {
+                        job.master.offer(WorkerEvent::Joined { worker })?;
+                    }
+                }
+            }
+            WorkerEvent::Left { worker } => {
+                for job in self.jobs.iter_mut() {
+                    if job.master.is_collecting() {
+                        job.master.offer(WorkerEvent::Left { worker })?;
+                    }
+                }
+            }
+            WorkerEvent::Failed { worker, job, iter, reason, fatal } => {
+                for j in self.jobs.iter_mut() {
+                    if j.master.is_collecting() {
+                        j.master.offer(WorkerEvent::Failed {
+                            worker,
+                            job,
+                            iter,
+                            reason: reason.clone(),
+                            fatal,
+                        })?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Land any completed semi-async reconciliations for job `id`:
+    /// `θ[start..end] −= lr·(exact − approx)` retroactively re-bases
+    /// each block on its exact decode.
+    fn apply_reconciles(&mut self, id: JobId) {
+        let job = &mut self.jobs[id];
+        for rec in job.master.take_reconciled() {
+            if rec.bound > job.report.max_approx_bound {
+                job.report.max_approx_bound = rec.bound;
+            }
+            job.state.correct(rec.start, &rec.delta, job.lr);
+            job.report.approx_reconciled += 1;
+        }
+    }
+
+    /// Finalize every open round whose collect completed; returns how
+    /// many were closed. Finalization order is dispatch order among the
+    /// complete set, so accounting is deterministic given the same
+    /// completion pattern.
+    fn finalize_complete(&mut self, eng: &mut AsyncEngine) -> Result<usize> {
+        let mut closed = 0;
+        loop {
+            let Some(pos) =
+                eng.open.iter().position(|o| self.jobs[o.job].master.collect_complete())
+            else {
+                return Ok(closed);
+            };
+            let open = eng.open.remove(pos);
+            self.finalize_round(eng, open)?;
+            closed += 1;
+        }
+    }
+
+    /// Close one round: take the decode outcome, reconcile pool-level
+    /// membership, settle the round's virtual-time accounting (truncate
+    /// + reflow the queues), step the model and record metrics.
+    fn finalize_round(&mut self, eng: &mut AsyncEngine, open: OpenRound) -> Result<()> {
+        let id = open.job;
+        let outcome = self.jobs[id].master.take_outcome();
+        let approx_blocks = outcome.approx.len();
+        for a in &outcome.approx {
+            if a.bound > self.jobs[id].report.max_approx_bound {
+                self.jobs[id].report.max_approx_bound = a.bound;
+            }
+        }
+        for w in outcome.joined {
+            self.registry.confirm(w);
+        }
+        for w in outcome.left {
+            self.mark_departed(w);
+        }
+        for w in outcome.failed {
+            if !self.failed_set.contains(&w) {
+                self.failed_set.push(w);
+                if self.cfg.elastic.is_some() {
+                    for job in &mut self.jobs {
+                        job.record_membership(MembershipEvent::Leave { worker: w });
+                    }
+                }
+            }
+            self.mark_departed(w);
+        }
+
+        let vr = eng.complete(&open);
+        let v = open.t_b + vr;
+        if eng.open.len() + 1 >= eng.cfg.max_inflight.max(1) {
+            // This finalize freed a slot in a full pipeline: the next
+            // dispatch could not have gone out before it.
+            eng.slot_gate = v;
+        }
+        eng.set_avail(id, v);
+        if v > eng.makespan {
+            eng.makespan = v;
+        }
+
+        let job = &mut self.jobs[id];
+        let grad_norm = outcome.gradient.iter().map(|g| g * g).sum::<f64>().sqrt();
+        job.state.step(&outcome.gradient, job.lr);
+        job.report.approx_decodes += approx_blocks;
+        job.report.iters.push(IterMetrics {
+            iter: open.iter,
+            epoch: job.epoch,
+            workers: open.roster.len(),
+            virtual_runtime: vr,
+            wall_ns: open.t_wall.elapsed().as_nanos() as u64,
+            decode_ns: outcome.decode_ns,
+            blocks_decoded: job.scheme.ranges().len(),
+            late_contributions: outcome.late_contributions,
+            stale_epoch_contributions: outcome.stale_epoch
+                + outcome.mismatched_binding
+                + outcome.cross_job,
+            grad_norm,
+            approx_blocks,
+            queue_wait: open.queue_wait,
+        });
+        job.iters_done += 1;
+        if job.eval_every > 0 && job.iters_done % job.eval_every == 0 {
+            if let Some(e) = job.eval_exec.as_mut() {
+                let l = e.loss(job.state.as_slice())?;
+                job.report.loss_curve.push((job.iters_done, l));
+            }
+        }
+        self.apply_reconciles(id);
+        Ok(())
+    }
+}
+
+/// One queued compute segment on a worker's virtual-time schedule.
+#[derive(Debug, Clone)]
+struct Seg {
+    job: JobId,
+    iter: usize,
+    /// Virtual time the broadcast was issued (the segment can never
+    /// start earlier).
+    dispatch: f64,
+    /// Natural compute duration, `unit·T_eff·Σ(s+1)x`.
+    cost: f64,
+    start: f64,
+    end: f64,
+    /// Finalized: the interval is settled; reflow moves only live
+    /// segments.
+    frozen: bool,
+}
+
+/// One broadcast whose collect is still open.
+struct OpenRound {
+    job: JobId,
+    iter: usize,
+    /// Dispatch virtual time (`max(job ready, slot gate)`).
+    t_b: f64,
+    roster: Vec<WorkerId>,
+    /// Effective per-row cycle times sampled at dispatch.
+    eff: Vec<f64>,
+    unit: f64,
+    /// Per-block cumulative work prefix `Σ_{b'≤b}(s+1)·x`.
+    cum: Vec<f64>,
+    /// Per-block quorum order-statistic index (`n−1−s`).
+    ks: Vec<usize>,
+    /// Largest row backlog priced at dispatch (metrics).
+    queue_wait: f64,
+    t_wall: Instant,
+}
+
+/// Virtual-time state of the pipelined dispatcher: per-worker segment
+/// queues, open rounds, and the dispatch gates.
+struct AsyncEngine {
+    cfg: AsyncConfig,
+    /// Per-worker-**id** queues of in-flight compute segments.
+    queues: Vec<Vec<Seg>>,
+    /// Per-worker completion floor of the collapsed finalized prefix.
+    floor: Vec<f64>,
+    open: Vec<OpenRound>,
+    /// Per-job virtual time its previous iteration finalized at.
+    job_avail: Vec<f64>,
+    /// Virtual time the most recent full-pipeline finalize freed a
+    /// dispatch slot.
+    slot_gate: f64,
+    makespan: f64,
+}
+
+impl AsyncEngine {
+    fn new(cfg: AsyncConfig, workers: usize) -> Self {
+        Self {
+            cfg,
+            queues: vec![Vec::new(); workers],
+            floor: vec![0.0; workers],
+            open: Vec::new(),
+            job_avail: Vec::new(),
+            slot_gate: 0.0,
+            makespan: 0.0,
+        }
+    }
+
+    fn ensure(&mut self, wid: WorkerId) {
+        if self.queues.len() <= wid {
+            self.queues.resize_with(wid + 1, Vec::new);
+            self.floor.resize(wid + 1, 0.0);
+        }
+    }
+
+    /// Virtual time worker `wid`'s queue drains (its next segment can
+    /// start no earlier).
+    fn wfree(&self, wid: WorkerId) -> f64 {
+        match self.queues.get(wid).and_then(|q| q.last()) {
+            Some(seg) => seg.end,
+            None => self.floor.get(wid).copied().unwrap_or(0.0),
+        }
+    }
+
+    fn avail(&self, job: JobId) -> f64 {
+        self.job_avail.get(job).copied().unwrap_or(0.0)
+    }
+
+    fn set_avail(&mut self, job: JobId, v: f64) {
+        if self.job_avail.len() <= job {
+            self.job_avail.resize(job + 1, 0.0);
+        }
+        self.job_avail[job] = v;
+    }
+
+    fn push_seg(&mut self, wid: WorkerId, job: JobId, iter: usize, dispatch: f64, cost: f64) {
+        self.ensure(wid);
+        let start = self.wfree(wid).max(dispatch);
+        let end = start + cost;
+        self.queues[wid].push(Seg { job, iter, dispatch, cost, start, end, frozen: false });
+    }
+
+    /// Settle a finalized round's virtual-time accounting and return
+    /// its virtual runtime **relative to its dispatch stamp**.
+    ///
+    /// Each row's decode-relevant completion is its queue offset at
+    /// dispatch plus its natural block-completion stamp; per block, the
+    /// quorum lands at the `(n−1−s)`-th order statistic, and the round
+    /// completes at the slowest block (Eq. (2) with per-row shifts —
+    /// with empty queues the offsets are exactly 0 and this reproduces
+    /// [`virtual_runtime`] bit-for-bit). The round's segments are then
+    /// **truncated** at the decode time — tail compute past the quorum
+    /// is abandoned, exactly like the serialized barrier — queued
+    /// segments behind them reflow, and the finalized prefix collapses
+    /// into each worker's completion floor.
+    fn complete(&mut self, open: &OpenRound) -> f64 {
+        let n = open.roster.len();
+        let offs: Vec<f64> = open
+            .roster
+            .iter()
+            .map(|&wid| {
+                self.queues
+                    .get(wid)
+                    .and_then(|q| q.iter().find(|s| s.job == open.job && s.iter == open.iter))
+                    .map(|s| s.start - open.t_b)
+                    .unwrap_or(0.0)
+            })
+            .collect();
+        let mut vr = 0.0f64;
+        let mut vals = vec![0.0f64; n];
+        for (b, &cum) in open.cum.iter().enumerate() {
+            for (row, v) in vals.iter_mut().enumerate() {
+                *v = offs[row] + open.unit * (open.eff[row] * cum);
+            }
+            vals.sort_by(f64::total_cmp);
+            let v = vals[open.ks[b]];
+            if v > vr {
+                vr = v;
+            }
+        }
+        let v_abs = open.t_b + vr;
+        for &wid in &open.roster {
+            let Some(q) = self.queues.get_mut(wid) else { continue };
+            let Some(i) = q.iter().position(|s| s.job == open.job && s.iter == open.iter) else {
+                continue;
+            };
+            q[i].end = q[i].end.min(q[i].start.max(v_abs));
+            q[i].frozen = true;
+            let mut prev = q[i].end;
+            for seg in q.iter_mut().skip(i + 1) {
+                if seg.frozen {
+                    prev = seg.end;
+                    continue;
+                }
+                seg.start = prev.max(seg.dispatch);
+                seg.end = seg.start + seg.cost;
+                prev = seg.end;
+            }
+            while q.first().is_some_and(|s| s.frozen) {
+                let e = q.remove(0).end;
+                if e > self.floor[wid] {
+                    self.floor[wid] = e;
+                }
+            }
+        }
+        vr
     }
 }
 

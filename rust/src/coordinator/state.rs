@@ -42,6 +42,19 @@ impl ModelState {
             *t -= (lr * g) as f32;
         }
     }
+
+    /// Semi-async reconciliation: re-apply the step for one block range
+    /// with the *correction* `delta = exact − approximate`, i.e.
+    /// `θ[offset+i] ← θ[offset+i] − lr·delta[i]`. Equivalent to having
+    /// stepped with the exact block gradient in the first place, applied
+    /// retroactively once the exact quorum lands.
+    pub fn correct(&mut self, offset: usize, delta: &[f64], lr: f64) {
+        assert!(offset + delta.len() <= self.theta.len());
+        let theta = Arc::make_mut(&mut self.theta);
+        for (t, &d) in theta[offset..offset + delta.len()].iter_mut().zip(delta.iter()) {
+            *t -= (lr * d) as f32;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -56,6 +69,25 @@ mod tests {
         assert_eq!(st.as_slice(), &[-0.1, 0.2, -0.05]);
         // The broadcast copy is unaffected (copy-on-write).
         assert_eq!(broadcast.as_slice(), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn correct_matches_having_stepped_exactly() {
+        // step(approx) then correct(exact − approx) over the block's
+        // range lands where step(exact) would have, up to one extra
+        // f32 rounding per corrected coordinate.
+        let grad_exact = [1.0, -2.0, 0.5, 3.0];
+        let grad_approx = [1.0, -1.5, 0.75, 3.0]; // block = coords 1..3
+        let lr = 0.1;
+        let mut direct = ModelState::zeros(4);
+        direct.step(&grad_exact, lr);
+        let mut reconciled = ModelState::zeros(4);
+        reconciled.step(&grad_approx, lr);
+        let delta: Vec<f64> = (1..3).map(|i| grad_exact[i] - grad_approx[i]).collect();
+        reconciled.correct(1, &delta, lr);
+        for (a, b) in direct.as_slice().iter().zip(reconciled.as_slice()) {
+            assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -394,6 +394,42 @@ impl FittedModel {
         }
     }
 
+    /// The fit of `T + d` for `d ≥ 0` — the model of the same worker
+    /// whose next task sits behind `d` units of queued virtual time
+    /// (per unit of work, so the shift composes with Eq. (2)'s
+    /// `unit·T·cum` accounting). Exact per family (every supported
+    /// family is closed under positive translation): shifted-exp
+    /// `(μ, t0 + d)`, Weibull `(k, λ, shift + d)`, empirical
+    /// `samples + d`. This is how the backlog-aware async planner
+    /// prices queue position into each row's cycle-time model before
+    /// handing the fleet to [`crate::coordinator::adaptive::resolve_partition`].
+    pub fn delayed(&self, d: f64) -> FittedModel {
+        assert!(d >= 0.0 && d.is_finite(), "queued delay must be non-negative, got {d}");
+        if d == 0.0 {
+            return self.clone();
+        }
+        match self {
+            FittedModel::ShiftedExp(e) => FittedModel::ShiftedExp(ShiftedExpEstimate {
+                mu: e.mu,
+                t0: e.t0 + d,
+                samples: e.samples,
+            }),
+            FittedModel::Weibull(w) => FittedModel::Weibull(WeibullEstimate {
+                shape: w.shape,
+                scale: w.scale,
+                shift: w.shift + d,
+                samples: w.samples,
+            }),
+            FittedModel::Empirical(e) => {
+                let shifted: Vec<f64> = e.samples.iter().map(|&s| s + d).collect();
+                FittedModel::Empirical(
+                    EmpiricalEstimate::from_samples(&shifted)
+                        .expect("translating a valid snapshot by d ≥ 0 keeps it valid"),
+                )
+            }
+        }
+    }
+
     /// Human-readable fit description for logs.
     pub fn label(&self) -> String {
         match self {
@@ -853,6 +889,45 @@ mod tests {
             assert!((e.mu * e.t0 - 1e-3 * 50.0).abs() < 1e-15);
         } else {
             panic!("family changed under scaling");
+        }
+    }
+
+    #[test]
+    fn delayed_fits_translate_mean_and_keep_spread() {
+        let fits = [
+            FittedModel::ShiftedExp(ShiftedExpEstimate { mu: 1e-3, t0: 50.0, samples: 64 }),
+            FittedModel::Weibull(WeibullEstimate {
+                shape: 0.8,
+                scale: 200.0,
+                shift: 30.0,
+                samples: 64,
+            }),
+            FittedModel::Empirical(
+                EmpiricalEstimate::from_samples(&[3.0, 9.0, 20.0, 44.0, 80.0]).unwrap(),
+            ),
+        ];
+        for f in &fits {
+            for d in [0.0f64, 12.5, 400.0] {
+                let s = f.delayed(d);
+                assert_eq!(s.family(), f.family());
+                // A pure translation: the mean shifts by exactly d...
+                assert!(
+                    (s.mean() - (f.mean() + d)).abs() < 1e-9 * (1.0 + f.mean() + d),
+                    "{}: mean {} vs {} + {}",
+                    f.label(),
+                    s.mean(),
+                    f.mean(),
+                    d
+                );
+                // ...and the spread is untouched (queue wait is
+                // deterministic, not extra straggle).
+                assert!((s.scale() - f.scale()).abs() < 1e-9 * (1.0 + f.scale()));
+                // The materialized distribution obeys the translation law.
+                let (base, del) = (f.build(), s.build());
+                for q in [60.0f64, 150.0, 1000.0] {
+                    assert!((del.cdf(q + d) - base.cdf(q)).abs() < 1e-9, "{}", f.label());
+                }
+            }
         }
     }
 

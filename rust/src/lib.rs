@@ -100,6 +100,38 @@
 //! facade: [`coordinator::trainer::train`] or a driveable
 //! [`coordinator::trainer::TrainSession`].
 //!
+//! ## The async round engine (position-aware pipelining)
+//!
+//! The serialized scheduler decodes one job's iteration to completion
+//! before the next broadcast — correct, but the fleet idles at every
+//! quorum barrier, and naive overlap (just broadcasting early) measured
+//! 2–6× *worse*: the backlog a broadcast lands on is exactly what the
+//! scheme optimizer was never told about.
+//! [`coordinator::pool::WorkerPool::run_all_async`]
+//! ([`coordinator::pool::AsyncConfig`]) makes overlap *position-aware*
+//! instead:
+//!
+//! * **Pipelined dispatch** — up to `max_inflight` jobs keep an open
+//!   collect at once, with per-worker virtual-time segment queues
+//!   tracking every row's backlog;
+//! * **Backlog-priced scheme selection** — at dispatch, each row's
+//!   queued time becomes an added shift on its fitted cycle-time model
+//!   ([`distribution::fit::FittedModel::delayed`]), so Eq. (2) and the
+//!   subgradient solver price queue position natively, and skewed
+//!   backlogs trigger a re-solve;
+//! * **Semi-asynchronous decode**
+//!   ([`coordinator::master::SemiAsyncConfig`]) — a block short of its
+//!   quorum *only* by deeply-backlogged rows decodes approximately
+//!   (least-squares, [`coding::decoder::decode_vector_ls`]) with a
+//!   tracked error bound, and is reconciled to the exact gradient —
+//!   [`coordinator::state::ModelState::correct`] — when the exact
+//!   quorum lands in a later round, or discarded on an epoch swap.
+//!
+//! With `max_inflight = 1` the engine reproduces the serialized
+//! schedule bit-for-bit (see `tests/async_e2e.rs`);
+//! `benches/async_rounds.rs` measures async vs serialized makespans and
+//! the convergence-vs-wall-clock frontier behind `BENCH_async.json`.
+//!
 //! ## The elastic layer (membership epochs)
 //!
 //! On top of scheme epochs, `N` itself is an epoch property: worker
@@ -184,11 +216,14 @@ pub mod util;
 /// Convenient re-exports of the types most programs need.
 pub mod prelude {
     pub use crate::coding::scheme::CodingScheme;
-    pub use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveController, HeteroConfig};
+    pub use crate::coordinator::adaptive::{
+        AdaptiveConfig, AdaptiveController, HeteroConfig, ObservationStore,
+    };
     pub use crate::coordinator::channel::JobId;
+    pub use crate::coordinator::master::SemiAsyncConfig;
     pub use crate::coordinator::membership::{WorkerId, WorkerRegistry};
     pub use crate::coordinator::pool::{
-        ElasticConfig, JobHandle, JobSpec, PoolConfig, ScheduleMode, WorkerPool,
+        AsyncConfig, ElasticConfig, JobHandle, JobSpec, PoolConfig, ScheduleMode, WorkerPool,
     };
     pub use crate::coordinator::straggler::StragglerSchedule;
     pub use crate::coordinator::trainer::{train, train_stationary, TrainConfig, TrainSession};

@@ -900,6 +900,242 @@ impl MultiJobComparison {
     }
 }
 
+/// One arm of the async-rounds comparison: a full *threaded-pool* run
+/// of the same tenant mix under one dispatch policy, summarized from
+/// the pool's per-job train reports (`benches/async_rounds.rs` builds
+/// these from `WorkerPool::run_all` / `run_all_async` runs).
+#[derive(Debug, Clone)]
+pub struct AsyncArm {
+    pub label: String,
+    /// Pool-level virtual makespan of the arm.
+    pub makespan: f64,
+    pub rounds: usize,
+    /// Per job: Σ over its own iterations of the Eq. (2) virtual
+    /// runtime (queue-position offsets included for pipelined arms).
+    pub per_job_total: Vec<f64>,
+    /// Largest queue wait priced into any dispatch (virtual time; 0 for
+    /// the serialized arm by construction).
+    pub max_queue_wait: f64,
+    /// Semi-asynchronous decode accounting, summed over jobs.
+    pub approx_decodes: usize,
+    pub approx_reconciled: usize,
+    pub approx_discarded: usize,
+    /// Worst tracked least-squares error bound across approx decodes.
+    pub max_approx_bound: f64,
+    /// Convergence-vs-virtual-time frontier: per job, `(completion
+    /// time, loss)` at each recorded eval point.
+    pub frontier: Vec<Vec<(f64, f64)>>,
+}
+
+impl AsyncArm {
+    /// One arm as a JSON object (no surrounding newlines).
+    fn render_json_inner(&self) -> String {
+        fn num(x: f64) -> String {
+            if x.is_finite() {
+                format!("{x:.6}")
+            } else {
+                "null".into()
+            }
+        }
+        let frontier = self
+            .frontier
+            .iter()
+            .map(|pts| {
+                let pts = pts
+                    .iter()
+                    .map(|&(t, l)| format!("[{}, {}]", num(t), num(l)))
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                format!("[{pts}]")
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            "{{\"label\": \"{}\", \"rounds\": {}, \"makespan\": {}, \"per_job_total\": [{}], \
+             \"max_queue_wait\": {}, \"approx\": {{\"decodes\": {}, \"reconciled\": {}, \
+             \"discarded\": {}, \"max_bound\": {}}}, \"frontier\": [{}]}}",
+            self.label.replace('"', "\\\""),
+            self.rounds,
+            num(self.makespan),
+            self.per_job_total.iter().map(|&v| num(v)).collect::<Vec<_>>().join(", "),
+            num(self.max_queue_wait),
+            self.approx_decodes,
+            self.approx_reconciled,
+            self.approx_discarded,
+            num(self.max_approx_bound),
+            frontier,
+        )
+    }
+}
+
+/// Serialized barrier vs position-aware pipelined dispatch on ONE
+/// shared threaded pool (`WorkerPool::run_all` vs `run_all_async`),
+/// same tenants and identically seeded straggler streams in every arm.
+/// The headline is the asymmetric pair; the symmetric pair is the
+/// no-regression control.
+pub struct AsyncRoundsComparison {
+    pub n: usize,
+    pub jobs: Vec<SimJob>,
+    pub schedule_label: String,
+    /// Asymmetric tenants (unequal step counts), serialized barrier.
+    pub serialized: AsyncArm,
+    /// Same tenants, pipelined dispatch, exact decode only.
+    pub async_exact: AsyncArm,
+    /// Same tenants, pipelined dispatch + semi-async approximate decode.
+    pub async_semi: AsyncArm,
+    /// Symmetric control (equal steps): serialized vs pipelined-exact.
+    pub sym_serialized_makespan: f64,
+    pub sym_async_makespan: f64,
+}
+
+impl AsyncRoundsComparison {
+    /// Makespan reduction of pipelined-exact over serialized on the
+    /// asymmetric tenants, in percent (positive = async finishes
+    /// everything earlier).
+    pub fn speedup_pct(&self) -> f64 {
+        100.0 * (1.0 - self.async_exact.makespan / self.serialized.makespan)
+    }
+
+    /// Symmetric-control makespan ratio (async / serialized).
+    pub fn sym_ratio(&self) -> f64 {
+        self.sym_async_makespan / self.sym_serialized_makespan
+    }
+
+    /// The standard human-readable report block.
+    pub fn render_report(&self) -> String {
+        let mut table = Table::new(&["arm", "makespan", "rounds", "max queue wait"]);
+        for arm in [&self.serialized, &self.async_exact, &self.async_semi] {
+            table.row(&[
+                arm.label.clone(),
+                format!("{:.0}", arm.makespan),
+                format!("{}", arm.rounds),
+                format!("{:.0}", arm.max_queue_wait),
+            ]);
+        }
+        let mut out = table.render();
+        for (j, job) in self.jobs.iter().enumerate() {
+            out.push_str(&format!(
+                "job {j}: L={} steps={} serialized Σ={:.0} async Σ={:.0}\n",
+                job.coords,
+                job.steps,
+                self.serialized.per_job_total[j],
+                self.async_exact.per_job_total[j]
+            ));
+        }
+        out.push_str(&format!(
+            "\nasync vs serialized (asymmetric): {:.1}% makespan reduction\n",
+            self.speedup_pct()
+        ));
+        out.push_str(&format!(
+            "symmetric control: async/serialized = {:.3}\n",
+            self.sym_ratio()
+        ));
+        out.push_str(&format!(
+            "semi-async: {} approx decodes ({} reconciled, {} discarded), max bound {:.3e}\n",
+            self.async_semi.approx_decodes,
+            self.async_semi.approx_reconciled,
+            self.async_semi.approx_discarded,
+            self.async_semi.max_approx_bound
+        ));
+        out
+    }
+
+    /// Serialize the comparison (hand-rolled JSON; no `serde` offline).
+    pub fn render_json(&self) -> String {
+        fn num(x: f64) -> String {
+            if x.is_finite() {
+                format!("{x:.6}")
+            } else {
+                "null".into()
+            }
+        }
+        let mut out = String::from("{\n");
+        out.push_str("  \"bench\": \"async_rounds\",\n");
+        out.push_str(&format!("  \"n\": {},\n", self.n));
+        out.push_str(&format!(
+            "  \"schedule\": \"{}\",\n",
+            self.schedule_label.replace('"', "\\\"")
+        ));
+        out.push_str("  \"jobs\": [");
+        for (i, j) in self.jobs.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("{{\"coords\": {}, \"steps\": {}}}", j.coords, j.steps));
+        }
+        out.push_str("],\n");
+        out.push_str(&format!("  \"serialized\": {},\n", self.serialized.render_json_inner()));
+        out.push_str(&format!("  \"async_exact\": {},\n", self.async_exact.render_json_inner()));
+        out.push_str(&format!("  \"async_semi\": {},\n", self.async_semi.render_json_inner()));
+        out.push_str(&format!("  \"speedup_pct\": {},\n", num(self.speedup_pct())));
+        out.push_str(&format!(
+            "  \"symmetric\": {{\"serialized_makespan\": {}, \"async_makespan\": {}, \
+             \"ratio\": {}}}\n",
+            num(self.sym_serialized_makespan),
+            num(self.sym_async_makespan),
+            num(self.sym_ratio())
+        ));
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// Map per-job `(iter, loss)` eval points onto per-job completion
+/// clocks: point `(it, l)` becomes `(done_at[it], l)`.
+fn frontier_points(done_at: &[Vec<f64>], losses: &[Vec<(usize, f32)>]) -> Vec<Vec<(f64, f64)>> {
+    done_at
+        .iter()
+        .zip(losses)
+        .map(|(d, ls)| ls.iter().filter_map(|&(it, l)| d.get(it).map(|&t| (t, l as f64))).collect())
+        .collect()
+}
+
+/// Convergence-vs-virtual-time frontier of a **serialized** shared-pool
+/// run: replay the pool's fair round-robin over unfinished jobs (submit
+/// order) to place every iteration on ONE global clock — job `j`'s
+/// iteration `t` completes at the running sum over every round played
+/// so far — then map each job's `(iter, loss)` eval points to that
+/// clock. `vr[j][t]` is job `j`'s iteration-`t` virtual runtime.
+pub fn serialized_frontier(vr: &[Vec<f64>], losses: &[Vec<(usize, f32)>]) -> Vec<Vec<(f64, f64)>> {
+    let k = vr.len();
+    let mut done_at: Vec<Vec<f64>> = vr.iter().map(|v| vec![0.0; v.len()]).collect();
+    let mut next = vec![0usize; k];
+    let mut clock = 0.0f64;
+    let mut cursor = 0usize;
+    while next.iter().zip(vr).any(|(&t, v)| t < v.len()) {
+        while next[cursor] >= vr[cursor].len() {
+            cursor = (cursor + 1) % k;
+        }
+        let j = cursor;
+        cursor = (cursor + 1) % k;
+        clock += vr[j][next[j]];
+        done_at[j][next[j]] = clock;
+        next[j] += 1;
+    }
+    frontier_points(&done_at, losses)
+}
+
+/// Frontier of a **pipelined** run with at most one open iteration per
+/// job (job count ≤ `max_inflight`): each dispatch waits only on the
+/// job's own previous completion, so job `j`'s iteration `t` completes
+/// at its own running sum of virtual runtimes — queue-position offsets
+/// are already priced into each round's Eq. (2) value.
+pub fn pipelined_frontier(vr: &[Vec<f64>], losses: &[Vec<(usize, f32)>]) -> Vec<Vec<(f64, f64)>> {
+    let done_at: Vec<Vec<f64>> = vr
+        .iter()
+        .map(|v| {
+            let mut acc = 0.0f64;
+            v.iter()
+                .map(|&x| {
+                    acc += x;
+                    acc
+                })
+                .collect()
+        })
+        .collect();
+    frontier_points(&done_at, losses)
+}
+
 /// Solve a job's `x^(f)` partition for a given worker count (uniform
 /// level-1 fallback for non-shifted-exp phase-0 models).
 fn solve_for(
@@ -1294,6 +1530,69 @@ mod tests {
 
     fn spec() -> ProblemSpec {
         ProblemSpec::paper_default(8, 800)
+    }
+
+    #[test]
+    fn serialized_frontier_replays_the_round_robin_clock() {
+        // Job 0: vr [10, 20]; job 1: vr [5]. Fair RR plays j0@10,
+        // j1@15, j0@35 on one global clock.
+        let vr = vec![vec![10.0, 20.0], vec![5.0]];
+        let losses = vec![vec![(0usize, 4.0f32), (1, 2.0)], vec![(0, 3.0)]];
+        let f = serialized_frontier(&vr, &losses);
+        assert_eq!(f[0], vec![(10.0, 4.0), (35.0, 2.0)]);
+        assert_eq!(f[1], vec![(15.0, 3.0)]);
+        // Pipelined: each job advances on its own chain.
+        let p = pipelined_frontier(&vr, &losses);
+        assert_eq!(p[0], vec![(10.0, 4.0), (30.0, 2.0)]);
+        assert_eq!(p[1], vec![(5.0, 3.0)]);
+        // Eval points past the recorded iterations are dropped, not
+        // misplaced.
+        let short = serialized_frontier(&vr, &[vec![(7, 1.0)], vec![]]);
+        assert!(short[0].is_empty() && short[1].is_empty());
+    }
+
+    #[test]
+    fn async_rounds_comparison_renders_schema_stable_json() {
+        let arm = |label: &str, makespan: f64| AsyncArm {
+            label: label.into(),
+            makespan,
+            rounds: 3,
+            per_job_total: vec![makespan * 0.7, makespan * 0.3],
+            max_queue_wait: 12.5,
+            approx_decodes: 2,
+            approx_reconciled: 1,
+            approx_discarded: 1,
+            max_approx_bound: 0.25,
+            frontier: vec![vec![(10.0, 4.0)], vec![(15.0, 3.0)]],
+        };
+        let cmp = AsyncRoundsComparison {
+            n: 8,
+            jobs: vec![SimJob { coords: 64, steps: 2 }, SimJob { coords: 64, steps: 1 }],
+            schedule_label: "stationary".into(),
+            serialized: arm("serialized", 100.0),
+            async_exact: arm("async exact", 80.0),
+            async_semi: arm("async semi", 78.0),
+            sym_serialized_makespan: 90.0,
+            sym_async_makespan: 88.0,
+        };
+        assert!((cmp.speedup_pct() - 20.0).abs() < 1e-12);
+        let json = cmp.render_json();
+        for key in [
+            "\"bench\": \"async_rounds\"",
+            "\"serialized\"",
+            "\"async_exact\"",
+            "\"async_semi\"",
+            "\"max_queue_wait\"",
+            "\"approx\"",
+            "\"frontier\"",
+            "\"speedup_pct\"",
+            "\"symmetric\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        let report = cmp.render_report();
+        assert!(report.contains("20.0% makespan reduction"), "{report}");
+        assert!(report.contains("symmetric control"), "{report}");
     }
 
     #[test]

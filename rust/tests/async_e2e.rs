@@ -1,0 +1,219 @@
+//! Async round engine, end to end: the pipelined position-aware
+//! dispatcher (`WorkerPool::run_all_async`) against the serialized
+//! barrier (`run_all`).
+//!
+//! The anchor property is the ISSUE's: **async with queue depth 0
+//! reproduces the serialized schedule exactly**. At `max_inflight = 1`
+//! every dispatch waits for the previous finalize, so every backlog is
+//! zero, every queue-position offset is exactly `0.0`, and the virtual
+//! accounting folds in the same order with the same operands — the two
+//! engines must agree bit for bit, not approximately.
+//!
+//! Two equality tests split by what virtual pacing can promise:
+//!
+//! * With `s = 0` schemes every block needs EVERY live row, so the
+//!   decode's contributor set is arrival-order independent and the
+//!   whole run — gradients, θ, losses — is bit-deterministic: compare
+//!   everything.
+//! * With `s ≥ 1`, which `N − s` rows decode a block is a thread race
+//!   under virtual pacing (no sleeping), so only the *virtual*
+//!   quantities (Eq. (2) runtimes, makespan) are deterministic:
+//!   compare exactly those.
+//!
+//! The overlapped test (`max_inflight = 2`, semi-async decode on)
+//! asserts the invariants that survive real concurrency: every
+//! approximate decode is reconciled or discarded, cross-job and stale
+//! contributions recycle their wire buffers, and both tenants finish
+//! every iteration.
+
+use bcgc::coordinator::master::SemiAsyncConfig;
+use bcgc::coordinator::metrics::TrainReport;
+use bcgc::coordinator::pool::{AsyncConfig, JobSpec, PoolConfig, WorkerPool};
+use bcgc::coordinator::straggler::StragglerSchedule;
+use bcgc::data::synthetic;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::runtime::host::{HostExecutor, HostModel};
+use bcgc::runtime::host_factory;
+use bcgc::testing::suite_seed;
+
+const N: usize = 6;
+const STEPS: [usize; 2] = [12, 8];
+
+fn stationary(mu: f64) -> StragglerSchedule {
+    StragglerSchedule::stationary(Box::new(ShiftedExponential::new(mu, 50.0)))
+}
+
+/// Build the standard two-tenant pool: two MLP jobs with `s`-redundant
+/// single-level schemes, identical across arms for a given `seed`.
+fn build_pool(seed: u64, s: usize, async_cfg: Option<AsyncConfig>) -> WorkerPool {
+    let dim = HostExecutor::mlp_dim(8, 16, 4);
+    let mut pcfg = PoolConfig::new(N);
+    pcfg.seed = seed;
+    pcfg.async_rounds = async_cfg;
+    let mut pool = WorkerPool::new(pcfg, stationary(1e-3)).unwrap();
+    for (j, &steps) in STEPS.iter().enumerate() {
+        let ds = synthetic::classification(8, 4, 16 * N, N, 0.2, seed + j as u64).unwrap();
+        let spec = ProblemSpec::new(N, dim, 16 * N, 1.0);
+        JobSpec::new(spec, BlockPartition::single_level(N, s, dim))
+            .steps(steps)
+            .lr(2e-3)
+            .eval_every(4)
+            .seed(seed + 100 + j as u64)
+            .executor(host_factory(ds, HostModel::Mlp { hidden: 16 }))
+            .submit(&mut pool)
+            .unwrap();
+    }
+    pool
+}
+
+fn bits(x: f64) -> u64 {
+    x.to_bits()
+}
+
+/// Zero-depth pipeline knobs: one inflight round, everything else on.
+fn depth_zero() -> AsyncConfig {
+    AsyncConfig {
+        max_inflight: 1,
+        backlog_pricing: true,
+        reprice_threshold: 0.25,
+        semi_async: Some(SemiAsyncConfig::default()),
+    }
+}
+
+#[test]
+fn depth_zero_async_is_bit_equal_to_serialized_on_s0_schemes() {
+    // s = 0: every block decodes from ALL live rows, so the decoded
+    // gradients are arrival-order independent and the serialized and
+    // async runs must agree bit for bit end to end.
+    let seed = suite_seed(61);
+    let mut serial = build_pool(seed, 0, None);
+    serial.run_all().unwrap();
+    let serial_rounds = serial.rounds();
+    let serial_makespan = serial.virtual_makespan();
+    let serial_reports = serial.finish().unwrap();
+
+    let mut asynch = build_pool(seed, 0, Some(depth_zero()));
+    asynch.run_all_async().unwrap();
+    assert_eq!(asynch.rounds(), serial_rounds, "same round count");
+    assert_eq!(
+        bits(asynch.virtual_makespan()),
+        bits(serial_makespan),
+        "virtual makespan must be IDENTICAL, not close: async {} vs serialized {}",
+        asynch.virtual_makespan(),
+        serial_makespan
+    );
+    let async_reports = asynch.finish().unwrap();
+
+    for (j, (a, s)) in async_reports.iter().zip(&serial_reports).enumerate() {
+        assert_eq!(a.steps(), STEPS[j], "job {j}");
+        assert_eq!(a.iters.len(), s.iters.len(), "job {j}");
+        for (t, (ia, is)) in a.iters.iter().zip(&s.iters).enumerate() {
+            assert_eq!(
+                bits(ia.virtual_runtime),
+                bits(is.virtual_runtime),
+                "job {j} iter {t}: vr {} vs {}",
+                ia.virtual_runtime,
+                is.virtual_runtime
+            );
+            assert_eq!(
+                bits(ia.grad_norm),
+                bits(is.grad_norm),
+                "job {j} iter {t}: grad {} vs {}",
+                ia.grad_norm,
+                is.grad_norm
+            );
+            assert_eq!(ia.queue_wait, 0.0, "job {j} iter {t}: backlog must be zero");
+            assert_eq!(ia.approx_blocks, 0, "job {j} iter {t}: no approx at depth zero");
+        }
+        // Same losses to the last bit (f32 eval on identical θ).
+        let la: Vec<(usize, u32)> = a.loss_curve.iter().map(|&(i, l)| (i, l.to_bits())).collect();
+        let ls: Vec<(usize, u32)> = s.loss_curve.iter().map(|&(i, l)| (i, l.to_bits())).collect();
+        assert_eq!(la, ls, "job {j}: loss curves diverged");
+        assert_eq!(
+            (a.approx_decodes, a.approx_reconciled, a.approx_discarded),
+            (0, 0, 0),
+            "job {j}: semi-async must never fire at queue depth 0"
+        );
+    }
+}
+
+#[test]
+fn depth_zero_async_matches_serialized_virtual_accounting_with_redundancy() {
+    // s = 1: WHICH n−1 rows decode each block is a thread race under
+    // virtual pacing, so gradients are not comparable across runs —
+    // but the Eq. (2) virtual accounting depends only on the sampled
+    // times and the dispatch order, and must still match bit for bit.
+    let seed = suite_seed(67);
+    let mut serial = build_pool(seed, 1, None);
+    serial.run_all().unwrap();
+    let serial_makespan = serial.virtual_makespan();
+    let serial_reports = serial.finish().unwrap();
+
+    let mut asynch = build_pool(seed, 1, Some(depth_zero()));
+    asynch.run_all_async().unwrap();
+    assert_eq!(bits(asynch.virtual_makespan()), bits(serial_makespan));
+    let async_reports = asynch.finish().unwrap();
+
+    for (j, (a, s)) in async_reports.iter().zip(&serial_reports).enumerate() {
+        let va: Vec<u64> = a.iters.iter().map(|m| bits(m.virtual_runtime)).collect();
+        let vs: Vec<u64> = s.iters.iter().map(|m| bits(m.virtual_runtime)).collect();
+        assert_eq!(va, vs, "job {j}: virtual runtime sequences diverged");
+        assert!(a.iters.iter().all(|m| m.queue_wait == 0.0), "job {j}");
+        assert!(a.iters.iter().all(|m| m.grad_norm.is_finite()), "job {j}");
+        assert_eq!(a.steps(), STEPS[j], "job {j}");
+    }
+}
+
+fn overlap_invariants(r: &TrainReport, j: usize, steps: usize) {
+    assert_eq!(r.steps(), steps, "job {j} dropped iterations");
+    assert!(r.iters.iter().all(|m| m.grad_norm.is_finite()), "job {j}");
+    assert!(r.iters.iter().all(|m| m.queue_wait >= 0.0 && m.queue_wait.is_finite()), "job {j}");
+    // Every approximate decode is accounted for exactly once: either
+    // reconciled against its late exact quorum or discarded (epoch
+    // swap / finish). Exact counts are thread-racy; the identity is not.
+    assert_eq!(
+        r.approx_decodes,
+        r.approx_reconciled + r.approx_discarded,
+        "job {j} leaked approx decodes"
+    );
+    assert_eq!(r.approx_decodes, r.approx_blocks_total(), "job {j}: per-iter counts disagree");
+    assert!(r.max_approx_bound >= 0.0 && r.max_approx_bound.is_finite(), "job {j}");
+    if r.approx_decodes == 0 {
+        assert_eq!(r.max_approx_bound, 0.0, "job {j}: bound without an approx decode");
+    }
+    // Overlapped rounds drop stale/cross-job arrivals back into the
+    // wire freelist: recycling must at least cover what decodes took.
+    assert!(r.wire_pool_returned > 0, "job {j}: no wire buffers recycled");
+}
+
+#[test]
+fn overlapped_rounds_keep_isolation_and_approx_accounting() {
+    // max_inflight = 2 with an aggressive semi-async policy: job B's
+    // rounds dispatch while job A's tails are in flight, so stale and
+    // off-cycle contributions actually occur; the run must stay
+    // isolated (zero cross-job drops), complete both tenants, and
+    // balance the approximate-decode ledger.
+    let seed = suite_seed(71);
+    let cfg = AsyncConfig {
+        max_inflight: 2,
+        backlog_pricing: true,
+        reprice_threshold: 0.25,
+        semi_async: Some(SemiAsyncConfig {
+            max_shortfall: 1,
+            backlog_factor: 0.25,
+            max_residual: 1e9,
+        }),
+    };
+    let mut pool = build_pool(seed, 1, Some(cfg));
+    pool.run_all_async().unwrap();
+    assert!(pool.rounds() >= STEPS.iter().sum::<usize>(), "one round per completed iteration");
+    assert_eq!(pool.cross_job_dropped(), 0, "tenant isolation broke under overlap");
+    let makespan = pool.virtual_makespan();
+    assert!(makespan > 0.0 && makespan.is_finite());
+    let reports = pool.finish().unwrap();
+    for (j, r) in reports.iter().enumerate() {
+        overlap_invariants(r, j, STEPS[j]);
+    }
+}
