@@ -1,0 +1,475 @@
+//! A lightweight lexical model of one Rust source file — just enough
+//! structure for the `bcgc-lint` rules, with zero dependencies (no
+//! `syn`, matching the crate's vendored-everything stance).
+//!
+//! One character-level pass classifies every byte as **code**,
+//! **comment**, or **literal contents**, producing two parallel
+//! streams of identical length: `code` (comments and string/char
+//! contents blanked to spaces) and `comment` (only comment text kept).
+//! Newlines survive in both streams, so line numbers line up with the
+//! raw file even across multi-line literals and block comments. Rules
+//! then search `code` without tripping over tokens that only occur
+//! inside strings or docs, and read `// lint: allow(...)` annotations
+//! out of `comment`.
+//!
+//! A second pass scopes items: every `fn` gets a [`FnSpan`] (name,
+//! signature text, brace-matched body range), and `#[cfg(test)] mod`
+//! bodies become test spans so per-function and per-line rules can
+//! exempt test code.
+
+/// `true` for characters that can continue a Rust identifier.
+pub fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// One `fn` item found in the code stream.
+pub struct FnSpan {
+    /// The function's name.
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    /// Signature text (comments/literals blanked), from `fn` up to the
+    /// body's opening brace.
+    pub signature: String,
+    /// Char-offset span of the body: opening `{` ..= matching `}`.
+    pub body: (usize, usize),
+    /// Inside a `#[cfg(test)]` module, or carries `#[test]` directly.
+    pub is_test: bool,
+}
+
+/// The lexical model rules operate on. Offsets are char indices into
+/// the parallel `code`/`comment` streams (same length as the raw
+/// file's char sequence).
+pub struct SourceModel {
+    /// Path relative to the repo root, `/`-separated.
+    pub rel_path: String,
+    /// The raw file text (used only by rules that must see string
+    /// literal contents, e.g. bench stamping's `BENCH_` probe).
+    pub raw: String,
+    /// Code stream: comments and literal contents blanked.
+    pub code: Vec<char>,
+    /// Comment stream: everything but comment text blanked.
+    pub comment: Vec<char>,
+    line_starts: Vec<usize>,
+    /// Every `fn` item, in source order (nested fns included).
+    pub fns: Vec<FnSpan>,
+    /// Brace-matched bodies of `#[cfg(test)] mod` items.
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+impl SourceModel {
+    /// Lex `text` into a model; `rel_path` is carried into findings.
+    pub fn build(rel_path: &str, text: &str) -> SourceModel {
+        let chars: Vec<char> = text.chars().collect();
+        let (code, comment) = blank(&chars);
+        let mut line_starts = vec![0usize];
+        for (i, &c) in chars.iter().enumerate() {
+            if c == '\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        let test_spans = scan_test_spans(&code);
+        let mut fns = scan_fns(&code, &line_starts);
+        for f in &mut fns {
+            if test_spans.iter().any(|&(a, b)| (a..=b).contains(&f.body.0)) {
+                f.is_test = true;
+            }
+        }
+        SourceModel {
+            rel_path: rel_path.to_string(),
+            raw: text.to_string(),
+            code,
+            comment,
+            line_starts,
+            fns,
+            test_spans,
+        }
+    }
+
+    /// 1-based line number of a char offset.
+    pub fn line_of(&self, pos: usize) -> usize {
+        self.line_starts.partition_point(|&s| s <= pos)
+    }
+
+    /// The code stream as a string (blanked positions are spaces).
+    pub fn code_text(&self) -> String {
+        self.code.iter().collect()
+    }
+
+    /// The comment stream as a string.
+    pub fn comment_text(&self) -> String {
+        self.comment.iter().collect()
+    }
+
+    /// Whether a char offset falls inside a `#[cfg(test)]` module.
+    pub fn in_test(&self, pos: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| (a..=b).contains(&pos))
+    }
+
+    /// Whether any part of a (1-based) line is inside test code.
+    pub fn line_in_test(&self, line: usize) -> bool {
+        let lo = self.line_starts[line - 1];
+        let hi = self.line_starts.get(line).copied().unwrap_or(self.code.len());
+        self.test_spans.iter().any(|&(a, b)| a < hi && lo <= b)
+    }
+}
+
+/// Split source chars into parallel code and comment streams. String
+/// and char-literal contents are blanked from both; comment text is
+/// kept only in the comment stream; newlines are kept in both.
+fn blank(chars: &[char]) -> (Vec<char>, Vec<char>) {
+    let n = chars.len();
+    let mut code = vec![' '; n];
+    let mut comment = vec![' '; n];
+    for (i, &c) in chars.iter().enumerate() {
+        if c == '\n' {
+            code[i] = '\n';
+            comment[i] = '\n';
+        }
+    }
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+        let prev_ident = i > 0 && is_ident(chars[i - 1]);
+        if c == '/' && next == '/' {
+            while i < n && chars[i] != '\n' {
+                comment[i] = chars[i];
+                i += 1;
+            }
+        } else if c == '/' && next == '*' {
+            // Block comments nest in Rust.
+            let mut depth = 0i32;
+            while i < n {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    comment[i] = '/';
+                    comment[i + 1] = '*';
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    comment[i] = '*';
+                    comment[i + 1] = '/';
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    if chars[i] != '\n' {
+                        comment[i] = chars[i];
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            i = skip_string(chars, i + 1);
+        } else if c == '\'' {
+            if next == '\\' {
+                // Escaped char literal: '\n', '\'', '\u{1F600}'.
+                i += 2;
+                while i < n && chars[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+            } else if i + 2 < n && chars[i + 2] == '\'' {
+                i += 3; // plain char literal 'x'
+            } else {
+                code[i] = '\''; // lifetime or loop label
+                i += 1;
+            }
+        } else if !prev_ident && (c == 'r' || c == 'b') {
+            i = literal_prefix(chars, i, &mut code);
+        } else {
+            code[i] = c;
+            i += 1;
+        }
+    }
+    (code, comment)
+}
+
+/// Consume a (non-raw) string body starting just past the opening
+/// quote; returns the position after the closing quote.
+fn skip_string(chars: &[char], mut i: usize) -> usize {
+    let n = chars.len();
+    while i < n {
+        match chars[i] {
+            '\\' => i += 2,
+            '"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    n
+}
+
+/// At an `r`/`b` outside an identifier: consume the raw string, byte
+/// string, or byte-char literal that starts here, if any; otherwise
+/// emit the char as code. Returns the next scan position.
+fn literal_prefix(chars: &[char], i: usize, code: &mut [char]) -> usize {
+    let n = chars.len();
+    let mut j = i + 1;
+    let mut raw = chars[i] == 'r';
+    if chars[i] == 'b' && j < n {
+        if chars[j] == 'r' {
+            raw = true;
+            j += 1;
+        } else if chars[j] == '\'' {
+            // Byte-char literal: b'x', b'\n'.
+            j += 1;
+            if j < n && chars[j] == '\\' {
+                j += 1;
+            }
+            j += 1;
+            while j < n && chars[j] != '\'' {
+                j += 1;
+            }
+            return j + 1;
+        }
+    }
+    let mut hashes = 0usize;
+    while raw && j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < n && chars[j] == '"' {
+        if !raw {
+            return skip_string(chars, j + 1);
+        }
+        j += 1;
+        while j < n {
+            if chars[j] == '"' {
+                let mut k = 0;
+                while k < hashes && j + 1 + k < n && chars[j + 1 + k] == '#' {
+                    k += 1;
+                }
+                if k == hashes {
+                    return j + 1 + hashes;
+                }
+            }
+            j += 1;
+        }
+        return n;
+    }
+    // Not a literal: plain identifier/keyword starting with r or b.
+    code[i] = chars[i];
+    i + 1
+}
+
+/// Char-level substring search (patterns are ASCII rule tokens).
+fn find_at(code: &[char], pat: &str, from: usize) -> Option<usize> {
+    let p: Vec<char> = pat.chars().collect();
+    let m = p.len();
+    if m == 0 || code.len() < m {
+        return None;
+    }
+    let mut i = from;
+    while i + m <= code.len() {
+        if code[i..i + m] == p[..] {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Position of the delimiter matching the one at `open`.
+pub fn match_delim(code: &[char], open: usize, o: char, c: char) -> usize {
+    let mut depth = 0i32;
+    let mut k = open;
+    while k < code.len() {
+        if code[k] == o {
+            depth += 1;
+        } else if code[k] == c {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+        k += 1;
+    }
+    code.len().saturating_sub(1)
+}
+
+/// Skip whitespace and `#[...]` attributes starting at `j`.
+fn skip_ws_and_attrs(code: &[char], mut j: usize) -> usize {
+    let n = code.len();
+    loop {
+        while j < n && code[j].is_whitespace() {
+            j += 1;
+        }
+        if j + 1 < n && code[j] == '#' && code[j + 1] == '[' {
+            j = match_delim(code, j + 1, '[', ']') + 1;
+        } else {
+            return j;
+        }
+    }
+}
+
+/// Whether `kw` appears at `j` as a whole word.
+fn matches_kw(code: &[char], j: usize, kw: &str) -> bool {
+    let k: Vec<char> = kw.chars().collect();
+    j + k.len() <= code.len()
+        && code[j..j + k.len()] == k[..]
+        && (j == 0 || !is_ident(code[j - 1]))
+        && !code.get(j + k.len()).is_some_and(|&c| is_ident(c))
+}
+
+/// Brace-matched bodies of `#[cfg(test)] mod` items.
+fn scan_test_spans(code: &[char]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut from = 0;
+    while let Some(p) = find_at(code, "#[cfg(test)]", from) {
+        from = p + 12;
+        let mut j = skip_ws_and_attrs(code, from);
+        if matches_kw(code, j, "pub") {
+            j = skip_ws_and_attrs(code, j + 3);
+        }
+        if matches_kw(code, j, "mod") {
+            if let Some(open) = find_at(code, "{", j) {
+                let close = match_delim(code, open, '{', '}');
+                spans.push((open, close));
+                from = open + 1;
+            }
+        }
+    }
+    spans
+}
+
+/// Whether the item starting at `pos` carries a `#[test]`-style
+/// attribute: scan back to the previous statement/item boundary and
+/// look for it.
+fn has_test_attr(code: &[char], pos: usize) -> bool {
+    let mut k = pos;
+    while k > 0 {
+        let c = code[k - 1];
+        if c == ';' || c == '{' || c == '}' {
+            break;
+        }
+        k -= 1;
+    }
+    let prefix: String = code[k..pos].iter().collect();
+    prefix.contains("#[test]")
+}
+
+fn line_of_pos(line_starts: &[usize], pos: usize) -> usize {
+    line_starts.partition_point(|&s| s <= pos)
+}
+
+/// Every `fn` item: name, signature span, brace-matched body.
+fn scan_fns(code: &[char], line_starts: &[usize]) -> Vec<FnSpan> {
+    let n = code.len();
+    let mut fns = Vec::new();
+    let mut i = 0;
+    while i + 1 < n {
+        let kw = code[i] == 'f'
+            && code[i + 1] == 'n'
+            && (i == 0 || !is_ident(code[i - 1]))
+            && !code.get(i + 2).is_some_and(|&c| is_ident(c));
+        if !kw {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        while j < n && code[j].is_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < n && is_ident(code[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            // `fn` of a closure type (`Fn(...)`) or malformed; skip.
+            i += 2;
+            continue;
+        }
+        let name: String = code[name_start..j].iter().collect();
+        // Find the body `{` at bracket depth 0; a `;` first means a
+        // bodyless trait/extern fn.
+        let mut depth = 0i32;
+        let mut body_open = None;
+        let mut k = j;
+        while k < n {
+            match code[k] {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                '{' if depth == 0 => {
+                    body_open = Some(k);
+                    break;
+                }
+                ';' if depth == 0 => break,
+                _ => {}
+            }
+            k += 1;
+        }
+        if let Some(open) = body_open {
+            let close = match_delim(code, open, '{', '}');
+            fns.push(FnSpan {
+                name,
+                line: line_of_pos(line_starts, i),
+                signature: code[i..open].iter().collect(),
+                body: (open, close),
+                is_test: has_test_attr(code, i),
+            });
+        }
+        i = j;
+    }
+    fns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked_from_code() {
+        let src = "let a = \"Instant::now()\"; // Instant::now()\nlet b = 1;\n";
+        let m = SourceModel::build("rust/src/x.rs", src);
+        let code = m.code_text();
+        assert!(!code.contains("Instant::now"), "code stream: {code}");
+        assert!(m.comment_text().contains("Instant::now()"));
+        assert!(code.contains("let b = 1;"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_blanked() {
+        let src = "let a = r#\"x \" .lock() \"#; let b = b\"y .lock(\"; let c = br#\"z\"#;\nlet live: &'static str = \"\"; let ch = '\\'';\n";
+        let m = SourceModel::build("rust/src/x.rs", src);
+        let code = m.code_text();
+        assert!(!code.contains(".lock("), "code stream: {code}");
+        assert!(code.contains("let live: &'static str"));
+        assert_eq!(m.line_of(src.chars().count() - 1), 2);
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let src = "/* a /* b */ still comment .lock( */ let x = 2;\n";
+        let m = SourceModel::build("rust/src/x.rs", src);
+        assert!(!m.code_text().contains(".lock("));
+        assert!(m.code_text().contains("let x = 2;"));
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies_and_names() {
+        let src = "fn alpha(a: usize) -> usize {\n    a + 1\n}\n\npub fn beta() {\n    fn gamma() {}\n}\n";
+        let m = SourceModel::build("rust/src/x.rs", src);
+        let names: Vec<&str> = m.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["alpha", "beta", "gamma"]);
+        let alpha = &m.fns[0];
+        assert_eq!(alpha.line, 1);
+        assert!(alpha.signature.contains("a: usize"));
+        assert_eq!(m.code[alpha.body.0], '{');
+        assert_eq!(m.code[alpha.body.1], '}');
+    }
+
+    #[test]
+    fn cfg_test_modules_and_test_attrs_are_flagged() {
+        let src = "fn real() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn probe() {}\n}\n";
+        let m = SourceModel::build("rust/src/x.rs", src);
+        assert_eq!(m.test_spans.len(), 1);
+        let real = m.fns.iter().find(|f| f.name == "real").unwrap();
+        let probe = m.fns.iter().find(|f| f.name == "probe").unwrap();
+        assert!(!real.is_test);
+        assert!(probe.is_test);
+        assert!(!m.line_in_test(1));
+        assert!(m.line_in_test(6));
+    }
+}

@@ -1,0 +1,162 @@
+//! `bcgc-lint`: static enforcement of the project's cross-PR
+//! invariants (the pass behind `cargo run --release --bin bcgc-lint`).
+//!
+//! PRs 6 and 7 made correctness rest on contracts the compiler cannot
+//! see: the wire-buffer ownership rule, the approx-decode ledger
+//! identity, and the serialized bit-equality property that only holds
+//! because the round lifecycle never touches wall-clock time or
+//! entropy. Dynamic assertions guard single executions; this module
+//! checks the *source* — the way the paper's Eq. (2) accounting fixes
+//! decodability by construction rather than by runtime residual
+//! checks — so a future PR cannot silently route around a contract.
+//!
+//! Six named rules (see [`rules`] for each contract):
+//! `determinism`, `buffer_ownership`, `lock_order`, `panic_hygiene`,
+//! `ledger_discipline`, `bench_stamping`. Any finding is suppressible
+//! per line with `// lint: allow(<rule>) — <reason>`; the reason is
+//! mandatory.
+//!
+//! The pass is budgeted at ~2 s over the whole tree: one char-level
+//! lexing pass per file ([`lexer`]), then scoped per-rule scans — no
+//! regex engine, no parser generator, no dependencies.
+
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+/// The named rules, in reporting order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// No wall-clock/entropy in round-lifecycle library code.
+    Determinism,
+    /// Pooled wire buffers recycle on every drop path.
+    BufferOwnership,
+    /// Nested `.lock()`s must follow the declared rank table.
+    LockOrder,
+    /// No `unwrap()`/`expect()` in coordinator non-test code.
+    PanicHygiene,
+    /// Approx counters move only beside their ledger witness.
+    LedgerDiscipline,
+    /// `BENCH_*.json` writers must call `stamp_bench_meta`.
+    BenchStamping,
+}
+
+impl Rule {
+    /// Every rule, in reporting order.
+    pub const ALL: [Rule; 6] = [
+        Rule::Determinism,
+        Rule::BufferOwnership,
+        Rule::LockOrder,
+        Rule::PanicHygiene,
+        Rule::LedgerDiscipline,
+        Rule::BenchStamping,
+    ];
+
+    /// The name used in findings and in `// lint: allow(<name>)`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::Determinism => "determinism",
+            Rule::BufferOwnership => "buffer_ownership",
+            Rule::LockOrder => "lock_order",
+            Rule::PanicHygiene => "panic_hygiene",
+            Rule::LedgerDiscipline => "ledger_discipline",
+            Rule::BenchStamping => "bench_stamping",
+        }
+    }
+}
+
+impl std::fmt::Display for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Which rule fired.
+    pub rule: Rule,
+    /// Repo-relative `/`-separated path.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// What the contract is and how to satisfy it.
+    pub message: String,
+}
+
+impl Finding {
+    pub(crate) fn new(rule: Rule, path: &str, line: usize, message: String) -> Finding {
+        Finding { rule, path: path.to_string(), line, message }
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// The result of linting a tree: findings plus how many files the
+/// walk covered (so an empty report can't mean "walked nothing").
+pub struct LintReport {
+    /// All findings, sorted by path, line, rule.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+/// Lint one file's text. `rel_path` selects which rules apply and is
+/// carried into findings; use `/`-separated repo-relative paths.
+pub fn lint_source(rel_path: &str, text: &str) -> Vec<Finding> {
+    let model = lexer::SourceModel::build(rel_path, text);
+    let allows = rules::Allows::parse(&model);
+    let mut out = Vec::new();
+    rules::determinism(&model, &allows, &mut out);
+    rules::buffer_ownership(&model, &allows, &mut out);
+    rules::lock_order(&model, &allows, &mut out);
+    rules::panic_hygiene(&model, &allows, &mut out);
+    rules::ledger_discipline(&model, &allows, &mut out);
+    rules::bench_stamping(&model, &allows, &mut out);
+    out.sort_by(|x, y| (x.line, x.rule).cmp(&(y.line, y.rule)));
+    out
+}
+
+/// Walk `rust/src`, `rust/tests`, and `rust/benches` under `root` and
+/// lint every `.rs` file.
+pub fn lint_tree(root: &Path) -> crate::Result<LintReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in ["rust/src", "rust/tests", "rust/benches"] {
+        collect_rs(&root.join(dir), &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for p in &files {
+        let text = std::fs::read_to_string(p)?;
+        let rel = rel_path(root, p);
+        findings.extend(lint_source(&rel, &text));
+    }
+    findings
+        .sort_by(|x, y| (x.path.as_str(), x.line, x.rule).cmp(&(y.path.as_str(), y.line, y.rule)));
+    Ok(LintReport { findings, files: files.len() })
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    let r = p.strip_prefix(root).unwrap_or(p);
+    r.to_string_lossy().replace('\\', "/")
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

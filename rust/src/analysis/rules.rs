@@ -1,0 +1,851 @@
+//! The six `bcgc-lint` rules and the `// lint: allow(...)` parser.
+//!
+//! Each rule is a function from a [`SourceModel`] to findings. Rules
+//! are deliberately *scoped*: they fire only on the files/functions
+//! where the contract they encode lives, so the pass stays fast and
+//! the findings stay actionable. Every rule is individually allowable
+//! per line with
+//!
+//! ```text
+//! // lint: allow(<rule>) — <reason>
+//! ```
+//!
+//! where the reason is mandatory — an allow without one suppresses
+//! nothing. The annotation covers the code on its own line, or (for a
+//! standalone comment line) the next line that has code.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{self, is_ident, FnSpan, SourceModel};
+use super::{Finding, Rule};
+
+// ---------------------------------------------------------------------------
+// Allow annotations
+// ---------------------------------------------------------------------------
+
+/// Parsed `// lint: allow(<rule>) — <reason>` annotations for one file.
+pub struct Allows {
+    lines: BTreeMap<String, BTreeSet<usize>>,
+}
+
+impl Allows {
+    /// Read annotations out of the model's comment stream.
+    pub fn parse(model: &SourceModel) -> Allows {
+        let comment = model.comment_text();
+        let code = model.code_text();
+        let code_lines: Vec<&str> = code.lines().collect();
+        let mut lines: BTreeMap<String, BTreeSet<usize>> = BTreeMap::new();
+        for (idx, cline) in comment.lines().enumerate() {
+            let Some(p) = cline.find("lint: allow(") else {
+                continue;
+            };
+            let rest = &cline[p + "lint: allow(".len()..];
+            let Some(close) = rest.find(')') else {
+                continue;
+            };
+            let rule = rest[..close].trim();
+            let after = rest[close + 1..].trim_start();
+            // The dash-separated reason is mandatory: exemptions must
+            // carry their justification in the diff.
+            if rule.is_empty() || !(after.starts_with('—') || after.starts_with('-')) {
+                continue;
+            }
+            let reason = after.trim_start_matches(|c: char| c == '—' || c == '-').trim();
+            if reason.is_empty() {
+                continue;
+            }
+            let mut target = idx;
+            while target < code_lines.len() && code_lines[target].trim().is_empty() {
+                target += 1;
+            }
+            if target < code_lines.len() {
+                lines.entry(rule.to_string()).or_default().insert(target + 1);
+            }
+        }
+        Allows { lines }
+    }
+
+    /// Whether `rule` is allowed on (1-based) `line`.
+    pub fn allowed(&self, rule: Rule, line: usize) -> bool {
+        self.lines.get(rule.name()).is_some_and(|s| s.contains(&line))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared char-level helpers
+// ---------------------------------------------------------------------------
+
+/// First occurrence of `pat` within `code[from..=to]`.
+fn find_range(code: &[char], from: usize, to: usize, pat: &str) -> Option<usize> {
+    let p: Vec<char> = pat.chars().collect();
+    let m = p.len();
+    if m == 0 {
+        return None;
+    }
+    let mut i = from;
+    while i + m <= to + 1 && i + m <= code.len() {
+        if code[i..i + m] == p[..] {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Whether `pat` occurs anywhere in `code[from..=to]`.
+fn contains_range(code: &[char], from: usize, to: usize, pat: &str) -> bool {
+    find_range(code, from, to, pat).is_some()
+}
+
+/// The identifier ending just before position `k`, skipping one
+/// balanced `(...)` call suffix (so `stderr().lock()` resolves to
+/// `stderr`, and `self.inner.lock()` to `inner`).
+fn receiver_before(code: &[char], mut k: usize) -> String {
+    while k > 0 && code[k - 1].is_whitespace() {
+        k -= 1;
+    }
+    if k > 0 && code[k - 1] == ')' {
+        let mut depth = 0i32;
+        while k > 0 {
+            k -= 1;
+            if code[k] == ')' {
+                depth += 1;
+            } else if code[k] == '(' {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    let end = k;
+    let mut s = k;
+    while s > 0 && is_ident(code[s - 1]) {
+        s -= 1;
+    }
+    code[s..end].iter().collect()
+}
+
+/// Positions in `code[a..=b]` where `name` is *written* (`name += …`
+/// or `name = …`). Word-boundary matches only; declarations
+/// (`name:`), calls (`name(`), comparisons (`==`) and match arms
+/// (`=>`) do not count.
+fn counter_writes(code: &[char], a: usize, b: usize, name: &str) -> Vec<usize> {
+    let pat: Vec<char> = name.chars().collect();
+    let m = pat.len();
+    let mut out = Vec::new();
+    let mut i = a;
+    while i + m <= b + 1 {
+        let word = code[i..i + m] == pat[..]
+            && (i == 0 || !is_ident(code[i - 1]))
+            && !code.get(i + m).is_some_and(|&c| is_ident(c));
+        if word {
+            let mut j = i + m;
+            while j <= b && (code[j] == ' ' || code[j] == '\t') {
+                j += 1;
+            }
+            let c0 = if j <= b { code[j] } else { ' ' };
+            let c1 = if j + 1 <= b { code[j + 1] } else { ' ' };
+            if (c0 == '+' && c1 == '=') || (c0 == '=' && c1 != '=' && c1 != '>') {
+                out.push(i);
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: determinism
+// ---------------------------------------------------------------------------
+
+/// Library paths where wall-clock/entropy access is legitimate:
+/// measurement harnesses, logging, executor backends, and tooling
+/// binaries — everything *outside* the round lifecycle.
+const DETERMINISM_EXEMPT: [&str; 4] = [
+    "rust/src/bench_harness/",
+    "rust/src/util/logging.rs",
+    "rust/src/runtime/",
+    "rust/src/bin/",
+];
+
+const DETERMINISM_TOKENS: [&str; 5] =
+    ["Instant::now", "SystemTime", "thread_rng", "from_entropy", "getrandom"];
+
+/// PR 7's `max_inflight = 1` bit-equality property holds because round
+/// control flow runs on virtual time and the seeded `util::rng` path
+/// only. Wall-clock reads and entropy sources in library code are
+/// findings unless the file is an exempt measurement/tooling path.
+pub fn determinism(model: &SourceModel, allows: &Allows, out: &mut Vec<Finding>) {
+    let path = model.rel_path.as_str();
+    if !path.starts_with("rust/src/") || DETERMINISM_EXEMPT.iter().any(|p| path.starts_with(p)) {
+        return;
+    }
+    let code = model.code_text();
+    for (idx, line) in code.lines().enumerate() {
+        let lineno = idx + 1;
+        if model.line_in_test(lineno) || allows.allowed(Rule::Determinism, lineno) {
+            continue;
+        }
+        for tok in DETERMINISM_TOKENS {
+            if line.contains(tok) {
+                out.push(Finding::new(
+                    Rule::Determinism,
+                    path,
+                    lineno,
+                    format!(
+                        "`{tok}` in library code: round control flow must stay on \
+                         virtual time + seeded rng (PR 7 bit-equality); move it to \
+                         bench_harness/runtime/logging or annotate with a reason"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: panic_hygiene
+// ---------------------------------------------------------------------------
+
+const PANIC_TOKENS: [&str; 2] = [".unwrap()", ".expect("];
+
+/// Coordinator non-test code must not panic on recoverable states:
+/// convert to `crate::Result`, or document the API contract that makes
+/// the panic correct with an allow annotation.
+pub fn panic_hygiene(model: &SourceModel, allows: &Allows, out: &mut Vec<Finding>) {
+    let path = model.rel_path.as_str();
+    if !path.starts_with("rust/src/coordinator/") {
+        return;
+    }
+    let code = model.code_text();
+    for (idx, line) in code.lines().enumerate() {
+        let lineno = idx + 1;
+        if model.line_in_test(lineno) || allows.allowed(Rule::PanicHygiene, lineno) {
+            continue;
+        }
+        for tok in PANIC_TOKENS {
+            if line.contains(tok) {
+                out.push(Finding::new(
+                    Rule::PanicHygiene,
+                    path,
+                    lineno,
+                    format!(
+                        "`{tok}` in coordinator non-test code — return \
+                         crate::Error, recover (poisoned locks: into_inner), or \
+                         annotate the contract that makes this unreachable"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: bench_stamping
+// ---------------------------------------------------------------------------
+
+/// Every bench that writes a `BENCH_*.json` artifact must stamp it
+/// with `{git_sha, seed, config}` metadata via `stamp_bench_meta` —
+/// this promotes the CI schema check to a pre-merge static check.
+pub fn bench_stamping(model: &SourceModel, allows: &Allows, out: &mut Vec<Finding>) {
+    if !model.rel_path.starts_with("rust/benches/") {
+        return;
+    }
+    // The artifact name lives inside a string literal, so probe raw.
+    if model.raw.contains("BENCH_")
+        && !model.raw.contains("stamp_bench_meta")
+        && !allows.allowed(Rule::BenchStamping, 1)
+    {
+        out.push(Finding::new(
+            Rule::BenchStamping,
+            &model.rel_path,
+            1,
+            "writes a BENCH_*.json artifact without calling stamp_bench_meta \
+             ({git_sha, seed, config} header) — artifacts must be comparable \
+             across PRs"
+                .to_string(),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: ledger_discipline
+// ---------------------------------------------------------------------------
+
+/// Counter → witness token that must appear in any function writing
+/// it. The witnesses are the operations that keep the PR-7 ledger
+/// identity `approx_decodes == approx_reconciled + approx_discarded`
+/// (and the drop counter fed by drained arrivals) self-consistent.
+const LEDGER_PAIRS: [(&str, &str); 4] = [
+    ("approx_decodes", "take_outcome"),
+    ("approx_reconciled", "take_reconciled"),
+    ("approx_discarded", "discard_pending"),
+    ("discarded", ".drain("),
+];
+
+/// Approx-ledger counters may only be written in functions that also
+/// perform the paired ledger-maintaining operation; a counter bumped
+/// in isolation silently breaks the pinned `TrainReport` invariant.
+pub fn ledger_discipline(model: &SourceModel, allows: &Allows, out: &mut Vec<Finding>) {
+    if !model.rel_path.starts_with("rust/src/coordinator/") {
+        return;
+    }
+    let code = &model.code[..];
+    for f in model.fns.iter().filter(|f| !f.is_test) {
+        let (a, b) = f.body;
+        for (counter, witness) in LEDGER_PAIRS {
+            let writes = counter_writes(code, a, b, counter);
+            if writes.is_empty() || contains_range(code, a, b, witness) {
+                continue;
+            }
+            for pos in writes {
+                let line = model.line_of(pos);
+                if allows.allowed(Rule::LedgerDiscipline, line) {
+                    continue;
+                }
+                out.push(Finding::new(
+                    Rule::LedgerDiscipline,
+                    &model.rel_path,
+                    line,
+                    format!(
+                        "`{counter}` written in `{}` which never calls \
+                         `{witness}` — approx counters move only alongside their \
+                         ledger witness (approx_decodes == approx_reconciled + \
+                         approx_discarded)",
+                        f.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: buffer_ownership
+// ---------------------------------------------------------------------------
+
+/// The data-plane files where pooled wire buffers change hands.
+const OWNERSHIP_FILES: [&str; 3] = [
+    "rust/src/coordinator/pool.rs",
+    "rust/src/coordinator/master.rs",
+    "rust/src/coordinator/worker.rs",
+];
+
+/// Counters that mark a drop path for an owned contribution.
+const DROP_COUNTERS: [&str; 7] = [
+    "late",
+    "stale_epoch",
+    "cross_job",
+    "mismatched",
+    "cross_job_dropped",
+    "offcycle_late",
+    "offcycle_stale",
+];
+
+/// Tokens that recycle or hand off an owned buffer.
+const RECYCLE_TOKENS: [&str; 3] = [".put(", "feed_pending(", "offer_pending("];
+
+/// PR 6's ownership contract: whoever takes a pooled buffer, or owns a
+/// `BlockContribution` by value, must recycle it (`.put(`) or hand it
+/// onward on every path — including the counted drop paths
+/// (late/stale/cross-job/mismatched). Functions that count drops
+/// without ever recycling leak the freelist dry.
+pub fn buffer_ownership(model: &SourceModel, allows: &Allows, out: &mut Vec<Finding>) {
+    if !OWNERSHIP_FILES.contains(&model.rel_path.as_str()) {
+        return;
+    }
+    let code = &model.code[..];
+    for f in model.fns.iter().filter(|f| !f.is_test) {
+        let (a, b) = f.body;
+        // (a) Pool takes pair with a recycle or an onward send.
+        let pairs_take = contains_range(code, a, b, ".put(") || contains_range(code, a, b, ".send(");
+        let mut i = a;
+        while let Some(p) = find_range(code, i, b, ".take(") {
+            i = p + 1;
+            let recv = receiver_before(code, p);
+            let pooled = recv == "wire_pool"
+                || recv == "scratch"
+                || recv == "pool"
+                || recv.ends_with("_pool");
+            if !pooled || pairs_take {
+                continue;
+            }
+            let line = model.line_of(p);
+            if !allows.allowed(Rule::BufferOwnership, line) {
+                out.push(Finding::new(
+                    Rule::BufferOwnership,
+                    &model.rel_path,
+                    line,
+                    format!(
+                        "pooled buffer taken from `{recv}` but `{}` has no \
+                         `.put(`/`.send(` — every owner recycles or hands the \
+                         buffer onward on all paths",
+                        f.name
+                    ),
+                ));
+            }
+        }
+        // (b) By-value contribution owners that count drops must
+        // recycle. By-ref observers (`&BlockContribution`) are exempt:
+        // ownership stayed with their caller.
+        let owns = f.signature.contains(": BlockContribution")
+            || contains_range(code, a, b, "WorkerEvent::Block(");
+        if !owns {
+            continue;
+        }
+        let recycles = RECYCLE_TOKENS.iter().any(|t| contains_range(code, a, b, t));
+        if recycles {
+            continue;
+        }
+        for counter in DROP_COUNTERS {
+            for pos in counter_writes(code, a, b, counter) {
+                let line = model.line_of(pos);
+                if allows.allowed(Rule::BufferOwnership, line) {
+                    continue;
+                }
+                out.push(Finding::new(
+                    Rule::BufferOwnership,
+                    &model.rel_path,
+                    line,
+                    format!(
+                        "`{}` owns a BlockContribution and counts a drop \
+                         (`{counter}`) but never recycles — the wire buffer \
+                         leaks out of the pool on this path",
+                        f.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: lock_order
+// ---------------------------------------------------------------------------
+
+/// Files holding the crate's `Mutex`es.
+const LOCK_FILES: [&str; 4] = [
+    "rust/src/coordinator/pool.rs",
+    "rust/src/coordinator/adaptive.rs",
+    "rust/src/coordinator/master.rs",
+    "rust/src/util/buffers.rs",
+];
+
+/// The declared lock-order table. A lock may be acquired only while
+/// holding locks of strictly *lower* rank:
+///
+/// | rank | class             | receivers                      |
+/// |------|-------------------|--------------------------------|
+/// | 0    | observation-store | `*store*`                      |
+/// | 1    | buffer-pool       | `inner`, `*pool*`              |
+/// | 2    | stdio             | `*stderr*`, `*stdout*`         |
+fn lock_class(receiver: &str) -> Option<u8> {
+    if receiver.contains("store") {
+        Some(0)
+    } else if receiver == "inner" || receiver.contains("pool") {
+        Some(1)
+    } else if receiver.contains("stderr") || receiver.contains("stdout") {
+        Some(2)
+    } else {
+        None
+    }
+}
+
+fn class_label(rank: u8) -> &'static str {
+    match rank {
+        0 => "observation-store",
+        1 => "buffer-pool",
+        _ => "stdio",
+    }
+}
+
+/// One acquisition event inside a function body.
+struct LockEvent {
+    /// Char offset of the acquisition (for reporting and ordering).
+    pos: usize,
+    /// Lock classes this event may acquire (transitive, for calls).
+    classes: Vec<u8>,
+    /// Guard liveness span; `None` for a transient helper call that
+    /// releases before returning.
+    held: Option<(usize, usize)>,
+}
+
+/// Nested `.lock()` acquisitions (including through same-file helper
+/// functions) that contradict the declared table are errors — the
+/// deadlock-prevention story for the coming multi-process transport.
+/// `.lock()` on a receiver missing from the table is also an error, so
+/// new mutexes must declare a rank before they land.
+pub fn lock_order(model: &SourceModel, allows: &Allows, out: &mut Vec<Finding>) {
+    if !LOCK_FILES.contains(&model.rel_path.as_str()) {
+        return;
+    }
+    let code = &model.code[..];
+    struct Info<'a> {
+        f: &'a FnSpan,
+        locks: Vec<(usize, String)>,
+        calls: Vec<(usize, String)>,
+    }
+    let infos: Vec<Info> = model
+        .fns
+        .iter()
+        .filter(|f| !f.is_test)
+        .map(|f| {
+            let (a, b) = f.body;
+            Info { f, locks: find_lock_calls(code, a, b), calls: find_local_calls(code, a, b) }
+        })
+        .collect();
+
+    // Per-name transitive lock-class summaries (fixpoint over
+    // same-file calls), plus which helpers return their guard.
+    let mut summary: BTreeMap<&str, BTreeSet<u8>> = BTreeMap::new();
+    let mut guard_ret: BTreeSet<&str> = BTreeSet::new();
+    for info in &infos {
+        let entry = summary.entry(info.f.name.as_str()).or_default();
+        entry.extend(info.locks.iter().filter_map(|(_, r)| lock_class(r)));
+        if info.f.signature.contains("MutexGuard") {
+            guard_ret.insert(info.f.name.as_str());
+        }
+    }
+    loop {
+        let mut changed = false;
+        for info in &infos {
+            let mut acc = summary[info.f.name.as_str()].clone();
+            for (_, callee) in &info.calls {
+                if let Some(s) = summary.get(callee.as_str()) {
+                    acc.extend(s.iter().copied());
+                }
+            }
+            let cur = summary.get_mut(info.f.name.as_str()).expect("seeded above");
+            if acc.len() > cur.len() {
+                *cur = acc;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    for info in &infos {
+        let (_, b) = info.f.body;
+        let mut events: Vec<LockEvent> = Vec::new();
+        for (pos, recv) in &info.locks {
+            let Some(rank) = lock_class(recv) else {
+                let line = model.line_of(*pos);
+                if !allows.allowed(Rule::LockOrder, line) {
+                    out.push(Finding::new(
+                        Rule::LockOrder,
+                        &model.rel_path,
+                        line,
+                        format!(
+                            "`.lock()` on `{recv}`, which is not in the declared \
+                             lock-order table (store < buffer-pool < stdio) — \
+                             give the new mutex a rank in analysis::rules"
+                        ),
+                    ));
+                }
+                continue;
+            };
+            let open = pos + 5; // ".lock" is 5 chars; its `(` follows
+            let close = if code.get(open) == Some(&'(') {
+                lexer::match_delim(code, open, '(', ')')
+            } else {
+                open
+            };
+            let end = guard_liveness(code, b, *pos, close);
+            events.push(LockEvent { pos: *pos, classes: vec![rank], held: Some((*pos, end)) });
+        }
+        for (pos, callee) in &info.calls {
+            let Some(s) = summary.get(callee.as_str()) else {
+                continue;
+            };
+            if s.is_empty() {
+                continue;
+            }
+            let classes: Vec<u8> = s.iter().copied().collect();
+            if guard_ret.contains(callee.as_str()) {
+                // The helper hands its guard back: the caller holds it.
+                let mut open = pos + callee.chars().count();
+                while open < b && code[open] != '(' {
+                    open += 1;
+                }
+                let close = lexer::match_delim(code, open, '(', ')');
+                let end = guard_liveness(code, b, *pos, close);
+                events.push(LockEvent { pos: *pos, classes, held: Some((*pos, end)) });
+            } else {
+                // Acquired and released inside the callee.
+                events.push(LockEvent { pos: *pos, classes, held: None });
+            }
+        }
+        events.sort_by_key(|e| e.pos);
+        for held in &events {
+            let Some((_, hend)) = held.held else {
+                continue;
+            };
+            for inner in &events {
+                if inner.pos <= held.pos || inner.pos > hend {
+                    continue;
+                }
+                for &hc in &held.classes {
+                    for &ic in &inner.classes {
+                        if ic > hc {
+                            continue;
+                        }
+                        let line = model.line_of(inner.pos);
+                        if allows.allowed(Rule::LockOrder, line) {
+                            continue;
+                        }
+                        out.push(Finding::new(
+                            Rule::LockOrder,
+                            &model.rel_path,
+                            line,
+                            format!(
+                                "acquires {} (rank {ic}) while a {} guard (rank \
+                                 {hc}, taken on line {}) is live — contradicts \
+                                 the declared order store < buffer-pool < stdio",
+                                class_label(ic),
+                                class_label(hc),
+                                model.line_of(held.pos)
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// All `.lock(` call sites in `code[a..=b]` with their receivers.
+fn find_lock_calls(code: &[char], a: usize, b: usize) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut i = a;
+    while let Some(p) = find_range(code, i, b, ".lock(") {
+        out.push((p, receiver_before(code, p)));
+        i = p + 1;
+    }
+    out
+}
+
+/// Same-file function calls in `code[a..=b]`: bare `name(...)` or
+/// `self.name(...)`. Method calls on any other receiver are skipped —
+/// `store.fit()` resolves to the *store's* method, not a same-file
+/// helper that happens to share the name.
+fn find_local_calls(code: &[char], a: usize, b: usize) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut i = a;
+    while i <= b {
+        if !(is_ident(code[i]) && (i == 0 || !is_ident(code[i - 1]))) {
+            i += 1;
+            continue;
+        }
+        let s = i;
+        while i <= b && is_ident(code[i]) {
+            i += 1;
+        }
+        let name: String = code[s..i].iter().collect();
+        let mut j = i;
+        while j <= b && code[j] == ' ' {
+            j += 1;
+        }
+        if j > b || code[j] != '(' {
+            continue;
+        }
+        let qualified = if s > 0 && code[s - 1] == '.' {
+            // Method call: count it only on `self`.
+            let recv_end = s - 1;
+            let mut t = recv_end;
+            while t > 0 && is_ident(code[t - 1]) {
+                t -= 1;
+            }
+            code[t..recv_end].iter().collect::<String>() == "self"
+        } else if s > 0 && code[s - 1] == ':' {
+            false // path call `Type::name(` — not a same-file helper
+        } else {
+            // Bare call — unless this is actually an `fn name(` item.
+            let mut t = s;
+            while t > 0 && code[t - 1].is_whitespace() {
+                t -= 1;
+            }
+            !(t >= 2 && code[t - 2] == 'f' && code[t - 1] == 'n')
+        };
+        if qualified {
+            out.push((s, name));
+        }
+    }
+    out
+}
+
+/// Where the guard produced by an acquisition whose call closes at
+/// `close` stops being live. Guard-preserving adapters
+/// (`.unwrap()`/`.expect(…)`/`.unwrap_or_else(…)`) keep it; any other
+/// chained method consumes it into a temporary that dies at the end of
+/// the statement. A `let`-bound guard lives to `drop(var)` or the end
+/// of the enclosing block.
+fn guard_liveness(code: &[char], b: usize, acq_start: usize, mut close: usize) -> usize {
+    loop {
+        let mut j = close + 1;
+        while j <= b && code[j].is_whitespace() {
+            j += 1;
+        }
+        if j <= b && code[j] == '.' {
+            let s = j + 1;
+            let mut e = s;
+            while e <= b && is_ident(code[e]) {
+                e += 1;
+            }
+            let m: String = code[s..e].iter().collect();
+            if m == "unwrap" || m == "expect" || m == "unwrap_or_else" {
+                let mut o = e;
+                while o <= b && code[o].is_whitespace() {
+                    o += 1;
+                }
+                if o <= b && code[o] == '(' {
+                    close = lexer::match_delim(code, o, '(', ')');
+                    continue;
+                }
+            }
+            return stmt_end(code, b, close);
+        }
+        break;
+    }
+    if let Some(var) = let_binding(code, acq_start) {
+        if let Some(d) = find_drop_of(code, close, b, &var) {
+            return d;
+        }
+        return block_end(code, close, b);
+    }
+    stmt_end(code, b, close)
+}
+
+/// End of the statement containing `from`: the next `;` at relative
+/// depth 0, or the `}` that closes the surrounding block.
+fn stmt_end(code: &[char], b: usize, from: usize) -> usize {
+    let mut depth = 0i32;
+    let mut k = from + 1;
+    while k <= b {
+        match code[k] {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' => depth -= 1,
+            '}' => {
+                depth -= 1;
+                if depth < 0 {
+                    return k;
+                }
+            }
+            ';' if depth == 0 => return k,
+            _ => {}
+        }
+        k += 1;
+    }
+    b
+}
+
+/// End of the block enclosing `from` (the first unmatched `}`).
+fn block_end(code: &[char], from: usize, b: usize) -> usize {
+    let mut depth = 0i32;
+    let mut k = from + 1;
+    while k <= b {
+        match code[k] {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth < 0 {
+                    return k;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    b
+}
+
+/// If the statement containing `pos` is a `let` binding, its variable.
+fn let_binding(code: &[char], pos: usize) -> Option<String> {
+    let mut k = pos;
+    while k > 0 {
+        let c = code[k - 1];
+        if c == ';' || c == '{' || c == '}' {
+            break;
+        }
+        k -= 1;
+    }
+    let stmt: String = code[k..pos].iter().collect();
+    let t = stmt.trim_start().strip_prefix("let ")?.trim_start();
+    let t = t.strip_prefix("mut ").unwrap_or(t).trim_start();
+    let name: String = t.chars().take_while(|&c| is_ident(c)).collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// First `drop(var)` after `from` (ends a let-bound guard early).
+fn find_drop_of(code: &[char], from: usize, b: usize, var: &str) -> Option<usize> {
+    let pat = format!("drop({var})");
+    let mut i = from;
+    while let Some(p) = find_range(code, i, b, &pat) {
+        if p == 0 || !is_ident(code[p - 1]) {
+            return Some(p);
+        }
+        i = p + 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn receiver_resolution_skips_call_suffixes() {
+        let src: Vec<char> = "let g = std::io::stderr().lock();".chars().collect();
+        let dot = find_range(&src, 0, src.len() - 1, ".lock(").unwrap();
+        assert_eq!(receiver_before(&src, dot), "stderr");
+        let src2: Vec<char> = "let g = self.inner.lock();".chars().collect();
+        let dot2 = find_range(&src2, 0, src2.len() - 1, ".lock(").unwrap();
+        assert_eq!(receiver_before(&src2, dot2), "inner");
+    }
+
+    #[test]
+    fn counter_writes_require_word_boundary_and_assignment() {
+        let src: Vec<char> =
+            "self.late += 1; let late_blocks = late; if late == 2 {} c.offcycle_late += 1; late: 0,"
+                .chars()
+                .collect();
+        let hits = counter_writes(&src, 0, src.len() - 1, "late");
+        assert_eq!(hits.len(), 1, "only `self.late += 1` is a write");
+        let hits2 = counter_writes(&src, 0, src.len() - 1, "offcycle_late");
+        assert_eq!(hits2.len(), 1);
+    }
+
+    #[test]
+    fn allow_without_reason_is_ignored() {
+        let with = "// lint: allow(determinism) — wall-clock metric only\nlet a = 1;\n";
+        let without = "// lint: allow(determinism)\nlet a = 1;\n";
+        let m1 = SourceModel::build("rust/src/x.rs", with);
+        let m2 = SourceModel::build("rust/src/x.rs", without);
+        assert!(Allows::parse(&m1).allowed(Rule::Determinism, 2));
+        assert!(!Allows::parse(&m2).allowed(Rule::Determinism, 2));
+    }
+
+    #[test]
+    fn allow_on_same_line_covers_that_line() {
+        let src = "let a = 1; // lint: allow(panic_hygiene) - startup only\n";
+        let m = SourceModel::build("rust/src/x.rs", src);
+        let allows = Allows::parse(&m);
+        assert!(allows.allowed(Rule::PanicHygiene, 1));
+        assert!(!allows.allowed(Rule::Determinism, 1));
+    }
+
+    #[test]
+    fn lock_classes_cover_the_declared_table() {
+        assert_eq!(lock_class("store"), Some(0));
+        assert_eq!(lock_class("inner"), Some(1));
+        assert_eq!(lock_class("wire_pool"), Some(1));
+        assert_eq!(lock_class("stderr"), Some(2));
+        assert_eq!(lock_class("mystery"), None);
+    }
+}

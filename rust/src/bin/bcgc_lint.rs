@@ -1,0 +1,38 @@
+//! `bcgc-lint` — walk `rust/src`, `rust/tests`, `rust/benches` and
+//! enforce the project's checked invariants (see `bcgc::analysis`).
+//!
+//! Usage: `bcgc-lint [ROOT]` (default: current directory).
+//! Exit code 0 = clean, 1 = findings, 2 = walk/read error.
+//!
+//! The runtime is printed against the ~2 s budget so CI logs make it
+//! obvious when the pass starts creeping.
+
+use std::path::Path;
+use std::process::ExitCode;
+use std::time::Instant;
+
+fn main() -> ExitCode {
+    let root = std::env::args().nth(1).unwrap_or_else(|| ".".to_string());
+    let t0 = Instant::now();
+    let report = match bcgc::analysis::lint_tree(Path::new(&root)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bcgc-lint: error walking {root}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for f in &report.findings {
+        println!("{f}");
+    }
+    let ms = t0.elapsed().as_millis();
+    println!(
+        "bcgc-lint: {} file(s), {} finding(s) in {ms} ms (budget ~2000 ms)",
+        report.files,
+        report.findings.len()
+    );
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

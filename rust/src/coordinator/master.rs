@@ -520,6 +520,7 @@ impl Master {
     /// accounted exactly like a fatal straggler: the row goes dead and
     /// satisfiability is re-checked immediately.
     pub fn offer(&mut self, ev: WorkerEvent) -> Result<bool> {
+        // lint: allow(panic_hygiene) — API contract: offer outside a collection is a caller bug
         let mut st = self.collect.take().expect("offer outside begin_collect/take_outcome");
         let r = self.offer_inner(&mut st, ev);
         let done = st.decoded_count == st.blocks.len();
@@ -615,6 +616,7 @@ impl Master {
     /// Close the open collection and return its outcome. Panics unless
     /// [`Self::offer`] reported completion.
     pub fn take_outcome(&mut self) -> IterOutcome {
+        // lint: allow(panic_hygiene) — API contract: the doc comment promises this panic
         let mut st = self.collect.take().expect("take_outcome without an open collection");
         assert_eq!(st.decoded_count, st.blocks.len(), "collection not complete");
         // Blocks closing on an approximation owe an exact decode: their
@@ -731,6 +733,7 @@ impl Master {
         // Canonicalize to ascending row order — decode vectors are
         // order-aligned, and the cache keys by survivor *set*, so the
         // same set must always be presented in the same order.
+        // lint: allow(determinism) — decode_ns metric only; control flow is virtual-time
         let t0 = Instant::now();
         let r = &ranges[c.block_idx];
         b.arrivals.sort_by_key(|(row, _)| *row);
@@ -797,6 +800,7 @@ impl Master {
             if !all_deep {
                 continue;
             }
+            // lint: allow(determinism) — decode_ns metric only; control flow is virtual-time
             let t0 = Instant::now();
             b.arrivals.sort_by_key(|(row, _)| *row);
             let survivors: Vec<usize> = b.arrivals.iter().map(|(row, _)| *row).collect();

@@ -135,6 +135,45 @@
 //! model; numerics are real); `PacingMode::RealScaled` makes workers
 //! actually sleep proportionally, so arrival order matches the model and
 //! the decode-on-arrival path is exercised end-to-end.
+//!
+//! ## Checked invariants
+//!
+//! The contracts above are enforced mechanically by `bcgc-lint`
+//! ([`crate::analysis`], blocking in CI). Inside `coordinator/` the
+//! load-bearing rules are:
+//!
+//! * **`panic_hygiene`** — no `.unwrap()` / `.expect(` outside tests:
+//!   every recoverable condition routes through [`crate::Result`], and
+//!   the two *documented* panics ([`master::Master`]'s offer/take
+//!   contract) carry inline allows naming the contract.
+//! * **`buffer_ownership`** — any function here that takes a pooled
+//!   buffer or counts a dropped [`channel::BlockContribution`] (late,
+//!   stale-epoch, cross-job, mismatched, off-cycle) must recycle the
+//!   wire buffer in the same function; this is the PR 6 data-plane
+//!   ownership contract, and the rule caught a real leak on the
+//!   worker's failed-send path (fixed in PR 8, regression-tested in
+//!   [`worker`]).
+//! * **`ledger_discipline`** — the PR 7 semi-async ledger counters
+//!   (`approx_decodes`, `approx_reconciled`, `approx_discarded`,
+//!   `discarded`) may only be written next to their witness calls
+//!   (`take_outcome`, `take_reconciled`, `discard_pending`,
+//!   `.drain(`), so the reconciliation accounting in
+//!   [`metrics::TrainReport`] cannot silently drift from the decode
+//!   state it describes.
+//! * **`lock_order`** — mutex nesting follows the table order
+//!   observation store → buffer-pool inner → stdio (see
+//!   [`adaptive::ObservationStore`] and
+//!   [`crate::util::buffers::BufferPool`]); unranked receivers are
+//!   findings by construction.
+//! * **`determinism`** — round control flow never reads wall clocks or
+//!   OS entropy (virtual time only); the decode-latency *metrics* in
+//!   [`master`] and [`pool`] carry inline allows because they measure
+//!   without steering.
+//!
+//! Waivers are inline and reasoned:
+//! `// lint: allow(<rule>) — <reason>`. New code that trips a rule
+//! should be restructured first; an allow is for contracts the rule
+//! cannot see, not for convenience.
 
 pub mod adaptive;
 pub mod channel;

@@ -29,8 +29,11 @@ impl StragglerSchedule {
     /// Append a phase: from `start_iter` on, cycle times follow `dist`.
     /// Phases must be appended in strictly increasing start order.
     pub fn then(mut self, start_iter: usize, dist: Box<dyn CycleTimeDistribution>) -> Self {
+        // Constructors seed one segment, so `last()` is always Some;
+        // map_or keeps the invariant check without an unwrap.
+        let last_start = self.segments.last().map_or(0, |(s, _)| *s);
         assert!(
-            start_iter > self.segments.last().unwrap().0,
+            start_iter > last_start,
             "schedule phases must start in strictly increasing order"
         );
         self.segments.push((start_iter, dist));

@@ -157,20 +157,26 @@ pub fn run(ctx: WorkerContext) {
                 }
             }
         }
-        if state.epoch.as_ref().map(|c| (c.epoch, c.row)) != Some((epoch, row)) {
-            let held = scheme.worker_subsets(row).to_vec();
-            let held_shards: Vec<Vec<usize>> = held
-                .iter()
-                .map(|&k| shards.get(k).cloned().unwrap_or_default())
-                .collect();
-            state.epoch = Some(EpochState {
-                epoch,
-                row,
-                held,
-                ranges: scheme.ranges(),
-                held_shards,
-            });
-        }
+        // Refresh per-epoch derived state only when the job's epoch or
+        // row binding changed; `insert` hands the fresh state back, so
+        // the hot path reads one binding either way (no unwrap).
+        let epoch_state = match &mut state.epoch {
+            Some(c) if (c.epoch, c.row) == (epoch, row) => c,
+            stale => {
+                let held = scheme.worker_subsets(row).to_vec();
+                let held_shards: Vec<Vec<usize>> = held
+                    .iter()
+                    .map(|&k| shards.get(k).cloned().unwrap_or_default())
+                    .collect();
+                stale.insert(EpochState {
+                    epoch,
+                    row,
+                    held,
+                    ranges: scheme.ranges(),
+                    held_shards,
+                })
+            }
+        };
         let Some(exec) = state.exec.as_mut() else {
             // Executor known-broken for this job: re-report (the first
             // failure above already covered this task's iteration; later
@@ -185,7 +191,6 @@ pub fn run(ctx: WorkerContext) {
             continue;
         };
         let dim = exec.dim();
-        let epoch_state = state.epoch.as_ref().unwrap();
         // Real compute: partial gradients of every dataset shard backing
         // a held subset, batched so the executor can stage θ once
         // (§Perf opt 2). Encoding consumes the f32 results directly
@@ -211,6 +216,8 @@ pub fn run(ctx: WorkerContext) {
         // dataset's shard count — none, contributing exact zeros).
         let mut grads: Vec<Vec<f32>> = Vec::with_capacity(epoch_state.held.len());
         let mut flat_iter = flat_grads.into_iter();
+        // lint: allow(panic_hygiene) — grad_shards yields one gradient per requested shard
+        let mut next_grad = || flat_iter.next().expect("grad_shards shorted the request");
         for backing in &epoch_state.held_shards {
             match backing.len() {
                 0 => {
@@ -220,11 +227,11 @@ pub fn run(ctx: WorkerContext) {
                     z.resize(dim, 0.0);
                     grads.push(z);
                 }
-                1 => grads.push(flat_iter.next().unwrap()),
+                1 => grads.push(next_grad()),
                 _ => {
-                    let mut acc = flat_iter.next().unwrap();
+                    let mut acc = next_grad();
                     for _ in 1..backing.len() {
-                        let g = flat_iter.next().unwrap();
+                        let g = next_grad();
                         for (a, v) in acc.iter_mut().zip(g.iter()) {
                             *a += v;
                         }
@@ -250,20 +257,25 @@ pub fn run(ctx: WorkerContext) {
                     std::thread::sleep(std::time::Duration::from_nanos(ns as u64));
                 }
             }
-            if events
-                .send(WorkerEvent::Block(BlockContribution {
-                    job,
-                    iter,
-                    epoch,
-                    worker: id,
-                    row,
-                    block_idx,
-                    virtual_time: stamps[block_idx],
-                    coded,
-                }))
-                .is_err()
-            {
-                return; // master gone
+            let sent = events.send(WorkerEvent::Block(BlockContribution {
+                job,
+                iter,
+                epoch,
+                worker: id,
+                row,
+                block_idx,
+                virtual_time: stamps[block_idx],
+                coded,
+            }));
+            if let Err(undelivered) = sent {
+                // Master gone mid-iteration: reclaim the pooled wire
+                // buffer from the undeliverable event before exiting,
+                // so a shared pool's freelist stays balanced instead of
+                // leaking one buffer per worker on shutdown.
+                if let WorkerEvent::Block(c) = undelivered.0 {
+                    wire_pool.put(c.coded);
+                }
+                return;
             }
         }
         // Subset-assembly buffers go back to the thread-local scratch
@@ -271,5 +283,74 @@ pub fn run(ctx: WorkerContext) {
         for g in grads {
             scratch.put(g);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::{mpsc, Arc};
+
+    use super::*;
+    use crate::coding::scheme::CodingScheme;
+    use crate::coordinator::channel::ShardMap;
+    use crate::data::synthetic;
+    use crate::optimizer::blocks::BlockPartition;
+    use crate::runtime::host::HostModel;
+    use crate::runtime::host_factory;
+    use crate::util::rng::Rng;
+
+    /// Regression (found by bcgc-lint's buffer-ownership audit): when
+    /// the master hangs up mid-iteration, the pooled wire buffer
+    /// travelling inside the undeliverable `Block` event must flow
+    /// back to the pool — previously it leaked with the dropped
+    /// `SendError`, draining a shared freelist by one buffer per
+    /// worker on every shutdown race.
+    #[test]
+    fn failed_block_send_recycles_the_wire_buffer() {
+        let n = 3;
+        let (dataset, theta) = synthetic::linear_regression(4, 24, n, 0.0, 7).unwrap();
+        let blocks = BlockPartition::single_level(n, 0, 4);
+        let mut rng = Rng::new(42);
+        let scheme = Arc::new(CodingScheme::new(blocks, &mut rng).unwrap());
+        let shards: Arc<ShardMap> = Arc::new((0..n).map(|k| vec![k]).collect());
+        let factory = host_factory(dataset, HostModel::LinearRegression);
+        let wire_pool = BufferPool::new(8);
+        let (task_tx, task_rx) = mpsc::channel();
+        let (event_tx, event_rx) = mpsc::channel();
+        let ctx = WorkerContext {
+            id: 0,
+            tasks: task_rx,
+            events: event_tx,
+            pacing: PacingMode::Virtual,
+            wire_pool: wire_pool.clone(),
+        };
+        let handle = std::thread::spawn(move || run(ctx));
+        match event_rx.recv().expect("worker announces itself") {
+            WorkerEvent::Joined { worker } => assert_eq!(worker, 0),
+            _ => panic!("expected Joined first"),
+        }
+        // Hang up before the worker can deliver its block, then hand
+        // it one compute task: the Block send fails and the worker
+        // exits — the buffer it took must already be back in the pool.
+        drop(event_rx);
+        task_tx
+            .send(WorkerTask::Compute {
+                job: 0,
+                iter: 0,
+                epoch: 0,
+                row: 0,
+                scheme,
+                shards,
+                theta: Arc::new(theta),
+                factory,
+                cycle_time: 1.0,
+                unit_work: 1.0,
+            })
+            .expect("worker is alive and waiting");
+        drop(task_tx);
+        handle.join().expect("worker exits cleanly");
+        let stats = wire_pool.stats();
+        assert_eq!(stats.returned, 1, "wire buffer not recycled on send failure");
+        assert_eq!(wire_pool.free_len(), 1);
     }
 }

@@ -198,7 +198,33 @@
 //! See `examples/` for end-to-end coded training (including the adaptive
 //! mid-training drift demo `examples/adaptive_drift.rs`) and the figure
 //! reproductions in `rust/benches/`.
+//!
+//! ## Checked invariants (`bcgc-lint`)
+//!
+//! The crate ships its own zero-dependency static analysis pass
+//! ([`analysis`], binary `bcgc-lint`) that walks `rust/src`,
+//! `rust/tests` and `rust/benches` on every CI run (blocking, in the
+//! lint job) and enforces the cross-cutting contracts the type system
+//! cannot see:
+//!
+//! | rule | contract | since |
+//! |------|----------|-------|
+//! | `determinism` | library code (`rust/src/`, outside `bench_harness`, `runtime`, `util/logging` and the binaries) never reads wall clocks or OS entropy — scheduling runs on virtual time so reruns are bit-identical (PR 7's serialized-vs-async equality depends on it) | PR 8 |
+//! | `buffer_ownership` | in `pool.rs`/`master.rs`/`worker.rs`, every pooled-buffer `take` and every counted contribution drop recycles the wire buffer back to [`util::buffers::BufferPool`] (the PR 6 ownership contract) | PR 8 |
+//! | `lock_order` | mutexes are acquired in table order — observation store → buffer-pool inner → stdio — and every lock receiver has a declared rank; checked through same-file helper calls | PR 8 |
+//! | `panic_hygiene` | no `.unwrap()`/`.expect(` in `coordinator/` non-test code; recovering forms or a documented allow only | PR 8 |
+//! | `ledger_discipline` | `approx_*`/`discarded` ledger counters (PR 7's semi-async accounting) are only written next to their witness call (`take_outcome`, `take_reconciled`, `discard_pending`, `.drain(`) | PR 8 |
+//! | `bench_stamping` | every bench that writes a `BENCH_*.json` artifact stamps it via `stamp_bench_meta` (the PR 5 provenance contract) | PR 8 |
+//!
+//! A violation may be waived only inline, with a reason:
+//! `// lint: allow(<rule>) — <reason>` (the reason is mandatory; the
+//! allow binds to the same line or, for a comment-only line, the next
+//! code line). See `rust/tests/analysis_lint.rs` for fixture coverage
+//! of every rule.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod bench_harness;
 pub mod cli;
 pub mod coding;

@@ -29,7 +29,7 @@
 //! `extend`). The freelist is bounded: beyond `max_free` idle buffers,
 //! `put` drops instead of hoarding.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Idle buffers a pool holds onto before `put` starts dropping.
 pub const DEFAULT_MAX_FREE: usize = 512;
@@ -72,12 +72,20 @@ impl BufferPool {
         }
     }
 
+    /// Lock the freelist, recovering from poisoning: a holder can only
+    /// panic between counter updates, so the freelist itself is always
+    /// structurally intact and the pool stays usable (at worst one
+    /// counter bump is lost with the panicking thread).
+    fn lock_inner(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
     /// Get a cleared buffer with capacity for at least `len_hint`
     /// values: the most recently freed one when available (its capacity
     /// converges to the largest block size after warm-up), else a fresh
     /// allocation (counted as a miss).
     pub fn take(&self, len_hint: usize) -> Vec<f32> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock_inner();
         match g.free.pop() {
             Some(mut buf) => {
                 g.stats.hits += 1;
@@ -102,7 +110,7 @@ impl BufferPool {
             return;
         }
         buf.clear();
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock_inner();
         g.stats.returned += 1;
         if g.free.len() < self.max_free {
             g.free.push(buf);
@@ -111,12 +119,12 @@ impl BufferPool {
 
     /// Snapshot of the pool counters.
     pub fn stats(&self) -> PoolStats {
-        self.inner.lock().unwrap().stats
+        self.lock_inner().stats
     }
 
     /// Idle buffers currently on the freelist.
     pub fn free_len(&self) -> usize {
-        self.inner.lock().unwrap().free.len()
+        self.lock_inner().free.len()
     }
 }
 

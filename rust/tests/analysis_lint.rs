@@ -1,0 +1,231 @@
+//! Fixture tests for the `bcgc-lint` rules: each rule has a violating
+//! snippet (finding), a clean/fixed form (no finding), and an allow
+//! check — plus the full-tree gate asserting the real crate is clean.
+//!
+//! Fixtures are plain strings handed to `lint_source` under a path
+//! chosen to put them in the rule's scope; nothing here touches the
+//! filesystem except the final `lint_tree` walk.
+
+use bcgc::analysis::{lint_source, lint_tree, Finding, Rule};
+
+fn count(findings: &[Finding], rule: Rule) -> usize {
+    findings.iter().filter(|f| f.rule == rule).count()
+}
+
+fn lines(findings: &[Finding], rule: Rule) -> Vec<usize> {
+    findings.iter().filter(|f| f.rule == rule).map(|f| f.line).collect()
+}
+
+// ---------------------------------------------------------------------------
+// determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn determinism_flags_wall_clock_in_library_code() {
+    let src = "pub fn pace() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+    let f = lint_source("rust/src/coordinator/pacing.rs", src);
+    assert_eq!(count(&f, Rule::Determinism), 1);
+    assert_eq!(lines(&f, Rule::Determinism), [2]);
+}
+
+#[test]
+fn determinism_exempts_measurement_paths_and_tests() {
+    let src = "pub fn pace() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+    for path in
+        ["rust/src/bench_harness/timer.rs", "rust/src/runtime/host.rs", "rust/src/bin/tool.rs"]
+    {
+        assert_eq!(count(&lint_source(path, src), Rule::Determinism), 0, "{path}");
+    }
+    let test_mod = "#[cfg(test)]\nmod tests {\n    fn t() {\n        let _ = std::time::Instant::now();\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/pacing.rs", test_mod);
+    assert_eq!(count(&f, Rule::Determinism), 0);
+}
+
+#[test]
+fn determinism_allow_needs_a_reason() {
+    let with = "fn t() {\n    // lint: allow(determinism) — wall-clock metric only, not control flow\n    let _ = std::time::Instant::now();\n}\n";
+    let without = "fn t() {\n    // lint: allow(determinism)\n    let _ = std::time::Instant::now();\n}\n";
+    assert_eq!(count(&lint_source("rust/src/coordinator/p.rs", with), Rule::Determinism), 0);
+    assert_eq!(count(&lint_source("rust/src/coordinator/p.rs", without), Rule::Determinism), 1);
+}
+
+// ---------------------------------------------------------------------------
+// panic_hygiene
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panic_hygiene_flags_unwrap_in_coordinator() {
+    let src = "pub fn pick(v: &[u32]) -> u32 {\n    *v.first().unwrap()\n}\nfn read(v: &[u32]) -> u32 {\n    *v.first().expect(\"nonempty\")\n}\n";
+    let f = lint_source("rust/src/coordinator/helper.rs", src);
+    assert_eq!(lines(&f, Rule::PanicHygiene), [2, 5]);
+    // Outside the coordinator the rule does not apply.
+    assert_eq!(count(&lint_source("rust/src/linalg/kernels.rs", src), Rule::PanicHygiene), 0);
+}
+
+#[test]
+fn panic_hygiene_accepts_recovering_forms_and_allows() {
+    let clean = "pub fn pick(v: &[u32]) -> u32 {\n    v.first().copied().unwrap_or_else(|| 0)\n}\n";
+    assert_eq!(count(&lint_source("rust/src/coordinator/h.rs", clean), Rule::PanicHygiene), 0);
+    let allowed = "pub fn pick(v: &[u32]) -> u32 {\n    // lint: allow(panic_hygiene) — caller guarantees non-empty by construction\n    *v.first().unwrap()\n}\n";
+    assert_eq!(count(&lint_source("rust/src/coordinator/h.rs", allowed), Rule::PanicHygiene), 0);
+}
+
+// ---------------------------------------------------------------------------
+// ledger_discipline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ledger_flags_counter_bumped_without_witness() {
+    let rogue = "impl M {\n    fn bump(&mut self) {\n        self.approx_decodes += 1;\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/master.rs", rogue);
+    assert_eq!(lines(&f, Rule::LedgerDiscipline), [3]);
+}
+
+#[test]
+fn ledger_accepts_writes_beside_their_witness() {
+    let settled = "impl M {\n    fn finalize(&mut self) {\n        self.approx_decodes += 1;\n        self.outcome = self.take_outcome();\n    }\n    fn drop_rest(&mut self) {\n        self.discarded += self.pending.drain(..).count();\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/master.rs", settled);
+    assert_eq!(count(&f, Rule::LedgerDiscipline), 0);
+}
+
+#[test]
+fn ledger_reads_and_declarations_do_not_count() {
+    let reads = "impl M {\n    fn report(&self) -> usize {\n        self.approx_decodes + self.approx_discarded\n    }\n}\nstruct S {\n    approx_reconciled: usize,\n}\n";
+    let f = lint_source("rust/src/coordinator/metrics.rs", reads);
+    assert_eq!(count(&f, Rule::LedgerDiscipline), 0);
+}
+
+// ---------------------------------------------------------------------------
+// buffer_ownership
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ownership_flags_pool_take_without_recycle() {
+    let leak = "impl W {\n    fn fetch(&mut self) -> Vec<f32> {\n        self.wire_pool.take(64)\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/worker.rs", leak);
+    assert_eq!(lines(&f, Rule::BufferOwnership), [3]);
+    let paired = "impl W {\n    fn cycle(&mut self) {\n        let b = self.wire_pool.take(64);\n        self.wire_pool.put(b);\n    }\n}\n";
+    assert_eq!(
+        count(&lint_source("rust/src/coordinator/worker.rs", paired), Rule::BufferOwnership),
+        0
+    );
+    // Iterator adapters named `take` are not pool receipts.
+    let iter = "impl W {\n    fn head(&self) -> Vec<u32> {\n        self.items.iter().take(3).copied().collect()\n    }\n}\n";
+    assert_eq!(
+        count(&lint_source("rust/src/coordinator/worker.rs", iter), Rule::BufferOwnership),
+        0
+    );
+}
+
+/// The deliberate-violation canary required by the issue: a drop path
+/// that counts the drop but forgets to recycle the owned wire buffer
+/// — exactly the bug class the rule exists for (and the class fixed
+/// for real in `worker.rs`'s send-failure path this PR).
+#[test]
+fn ownership_canary_counted_drop_without_recycle_is_caught() {
+    let canary = "impl M {\n    fn drop_late(&mut self, c: BlockContribution) {\n        self.late += 1;\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/master.rs", canary);
+    assert_eq!(lines(&f, Rule::BufferOwnership), [3]);
+    let fixed = "impl M {\n    fn drop_late(&mut self, c: BlockContribution) {\n        self.late += 1;\n        self.wire_pool.put(c.coded);\n    }\n}\n";
+    assert_eq!(
+        count(&lint_source("rust/src/coordinator/master.rs", fixed), Rule::BufferOwnership),
+        0
+    );
+    // By-ref observers never owned the buffer; their caller recycles.
+    let by_ref = "impl M {\n    fn note_late(&mut self, c: &BlockContribution) {\n        self.late += 1;\n    }\n}\n";
+    assert_eq!(
+        count(&lint_source("rust/src/coordinator/master.rs", by_ref), Rule::BufferOwnership),
+        0
+    );
+}
+
+// ---------------------------------------------------------------------------
+// lock_order
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lock_order_flags_direct_inversion() {
+    let bad = "impl P {\n    fn bad(&self) {\n        let g = self.wire_pool.lock().unwrap();\n        let s = self.store.lock().unwrap();\n        drop(s);\n        drop(g);\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/pool.rs", bad);
+    assert_eq!(lines(&f, Rule::LockOrder), [4]);
+}
+
+#[test]
+fn lock_order_accepts_table_order_nesting() {
+    let good = "impl P {\n    fn good(&self) {\n        let s = self.store.lock().unwrap();\n        let g = self.wire_pool.lock().unwrap();\n        drop(g);\n        drop(s);\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/pool.rs", good);
+    assert_eq!(count(&f, Rule::LockOrder), 0);
+}
+
+/// The required indirection case: the outer fn holds a buffer-pool
+/// guard returned by one helper while a *second* helper transiently
+/// takes the observation-store lock — an inversion no single function
+/// body shows.
+#[test]
+fn lock_order_sees_through_same_file_helpers() {
+    let src = "impl P {\n    fn lock_pool(&self) -> MutexGuard<'_, Vec<f32>> {\n        self.wire_pool.lock().unwrap()\n    }\n    fn observe(&self) {\n        let g = self.lock_pool();\n        self.fit_store();\n        drop(g);\n    }\n    fn fit_store(&self) {\n        let s = self.store.lock().unwrap();\n        drop(s);\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/adaptive.rs", src);
+    assert_eq!(lines(&f, Rule::LockOrder), [7], "findings: {f:?}");
+}
+
+#[test]
+fn lock_order_helper_in_table_order_is_clean() {
+    let src = "impl P {\n    fn observe(&self) {\n        let s = self.store.lock().unwrap();\n        self.recycle();\n        drop(s);\n    }\n    fn recycle(&self) {\n        let g = self.wire_pool.lock().unwrap();\n        drop(g);\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/adaptive.rs", src);
+    assert_eq!(count(&f, Rule::LockOrder), 0, "findings: {f:?}");
+}
+
+#[test]
+fn lock_order_drop_releases_the_guard() {
+    // Same two acquisitions as the direct-inversion case, but the
+    // pool guard is dropped first — no overlap, no finding.
+    let src = "impl P {\n    fn seq(&self) {\n        let g = self.wire_pool.lock().unwrap();\n        drop(g);\n        let s = self.store.lock().unwrap();\n        drop(s);\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/pool.rs", src);
+    assert_eq!(count(&f, Rule::LockOrder), 0, "findings: {f:?}");
+}
+
+#[test]
+fn lock_order_unknown_receiver_must_declare_a_rank() {
+    let src = "impl P {\n    fn odd(&self) {\n        let q = self.registry.lock().unwrap();\n        drop(q);\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/pool.rs", src);
+    assert_eq!(lines(&f, Rule::LockOrder), [3]);
+}
+
+#[test]
+fn lock_order_allow_is_honored_with_reason() {
+    let src = "impl P {\n    fn bad(&self) {\n        let g = self.wire_pool.lock().unwrap();\n        // lint: allow(lock_order) — startup path, single-threaded by construction\n        let s = self.store.lock().unwrap();\n        drop(s);\n        drop(g);\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/pool.rs", src);
+    assert_eq!(count(&f, Rule::LockOrder), 0, "findings: {f:?}");
+}
+
+// ---------------------------------------------------------------------------
+// bench_stamping
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bench_stamping_requires_stamp_bench_meta() {
+    let bad = "fn main() {\n    std::fs::write(\"BENCH_probe.json\", \"{}\").unwrap();\n}\n";
+    let f = lint_source("rust/benches/probe.rs", bad);
+    assert_eq!(count(&f, Rule::BenchStamping), 1);
+    let good = "fn main() {\n    let mut doc = String::new();\n    bcgc::bench_harness::stamp_bench_meta(&mut doc, seed, &config);\n    std::fs::write(\"BENCH_probe.json\", doc).unwrap();\n}\n";
+    assert_eq!(count(&lint_source("rust/benches/probe.rs", good), Rule::BenchStamping), 0);
+    // A bench with no artifact, and non-bench files, are out of scope.
+    let plain = "fn main() {\n    println!(\"elapsed\");\n}\n";
+    assert_eq!(count(&lint_source("rust/benches/plain.rs", plain), Rule::BenchStamping), 0);
+    assert_eq!(count(&lint_source("rust/src/coordinator/m.rs", bad), Rule::BenchStamping), 0);
+}
+
+// ---------------------------------------------------------------------------
+// full tree
+// ---------------------------------------------------------------------------
+
+/// The gate CI enforces: the real tree is clean. Any new violation
+/// either gets fixed or carries an explicit, reasoned allow.
+#[test]
+fn full_tree_is_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_tree(root).expect("tree walk failed");
+    assert!(report.files >= 40, "walked only {} files — wrong root?", report.files);
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(report.findings.is_empty(), "bcgc-lint findings:\n{}", rendered.join("\n"));
+}
