@@ -210,12 +210,12 @@ pub fn determinism(model: &SourceModel, allows: &Allows, out: &mut Vec<Finding>)
 
 const PANIC_TOKENS: [&str; 2] = [".unwrap()", ".expect("];
 
-/// Coordinator non-test code must not panic on recoverable states:
-/// convert to `crate::Result`, or document the API contract that makes
-/// the panic correct with an allow annotation.
+/// Coordinator and transport non-test code must not panic on
+/// recoverable states: convert to `crate::Result`, or document the API
+/// contract that makes the panic correct with an allow annotation.
 pub fn panic_hygiene(model: &SourceModel, allows: &Allows, out: &mut Vec<Finding>) {
     let path = model.rel_path.as_str();
-    if !path.starts_with("rust/src/coordinator/") {
+    if !path.starts_with("rust/src/coordinator/") && !path.starts_with("rust/src/transport/") {
         return;
     }
     let code = model.code_text();
@@ -231,7 +231,7 @@ pub fn panic_hygiene(model: &SourceModel, allows: &Allows, out: &mut Vec<Finding
                     path,
                     lineno,
                     format!(
-                        "`{tok}` in coordinator non-test code — return \
+                        "`{tok}` in coordinator/transport non-test code — return \
                          crate::Error, recover (poisoned locks: into_inner), or \
                          annotate the contract that makes this unreachable"
                     ),
@@ -425,11 +425,13 @@ pub fn buffer_ownership(model: &SourceModel, allows: &Allows, out: &mut Vec<Find
 // ---------------------------------------------------------------------------
 
 /// Files holding the crate's `Mutex`es.
-const LOCK_FILES: [&str; 4] = [
+const LOCK_FILES: [&str; 6] = [
     "rust/src/coordinator/pool.rs",
     "rust/src/coordinator/adaptive.rs",
     "rust/src/coordinator/master.rs",
     "rust/src/util/buffers.rs",
+    "rust/src/transport/lease.rs",
+    "rust/src/transport/tcp.rs",
 ];
 
 /// The declared lock-order table. A lock may be acquired only while
@@ -438,15 +440,26 @@ const LOCK_FILES: [&str; 4] = [
 /// | rank | class             | receivers                      |
 /// |------|-------------------|--------------------------------|
 /// | 0    | observation-store | `*store*`                      |
-/// | 1    | buffer-pool       | `inner`, `*pool*`              |
-/// | 2    | stdio             | `*stderr*`, `*stdout*`         |
+/// | 1    | lease-table       | `*lease*`                      |
+/// | 2    | buffer-pool       | `inner`, `*pool*`              |
+/// | 3    | wire-writer       | `*writer*`                     |
+/// | 4    | stdio             | `*stderr*`, `*stdout*`         |
+///
+/// The wire-writer rank above buffer-pool encodes the transport's
+/// send-path contract: the socket-writer guard must be dropped *before*
+/// recycling a wire buffer into the pool (see
+/// `transport::tcp::TcpEventSender`).
 fn lock_class(receiver: &str) -> Option<u8> {
     if receiver.contains("store") {
         Some(0)
-    } else if receiver == "inner" || receiver.contains("pool") {
+    } else if receiver.contains("lease") {
         Some(1)
-    } else if receiver.contains("stderr") || receiver.contains("stdout") {
+    } else if receiver == "inner" || receiver.contains("pool") {
         Some(2)
+    } else if receiver.contains("writer") {
+        Some(3)
+    } else if receiver.contains("stderr") || receiver.contains("stdout") {
+        Some(4)
     } else {
         None
     }
@@ -455,7 +468,9 @@ fn lock_class(receiver: &str) -> Option<u8> {
 fn class_label(rank: u8) -> &'static str {
     match rank {
         0 => "observation-store",
-        1 => "buffer-pool",
+        1 => "lease-table",
+        2 => "buffer-pool",
+        3 => "wire-writer",
         _ => "stdio",
     }
 }
@@ -540,8 +555,9 @@ pub fn lock_order(model: &SourceModel, allows: &Allows, out: &mut Vec<Finding>) 
                         line,
                         format!(
                             "`.lock()` on `{recv}`, which is not in the declared \
-                             lock-order table (store < buffer-pool < stdio) — \
-                             give the new mutex a rank in analysis::rules"
+                             lock-order table (store < lease < buffer-pool < \
+                             writer < stdio) — give the new mutex a rank in \
+                             analysis::rules"
                         ),
                     ));
                 }
@@ -603,7 +619,8 @@ pub fn lock_order(model: &SourceModel, allows: &Allows, out: &mut Vec<Finding>) 
                             format!(
                                 "acquires {} (rank {ic}) while a {} guard (rank \
                                  {hc}, taken on line {}) is live — contradicts \
-                                 the declared order store < buffer-pool < stdio",
+                                 the declared order store < lease < buffer-pool \
+                                 < writer < stdio",
                                 class_label(ic),
                                 class_label(hc),
                                 model.line_of(held.pos)
@@ -843,9 +860,12 @@ mod tests {
     #[test]
     fn lock_classes_cover_the_declared_table() {
         assert_eq!(lock_class("store"), Some(0));
-        assert_eq!(lock_class("inner"), Some(1));
-        assert_eq!(lock_class("wire_pool"), Some(1));
-        assert_eq!(lock_class("stderr"), Some(2));
+        assert_eq!(lock_class("lease"), Some(1));
+        assert_eq!(lock_class("leases"), Some(1));
+        assert_eq!(lock_class("inner"), Some(2));
+        assert_eq!(lock_class("wire_pool"), Some(2));
+        assert_eq!(lock_class("writer"), Some(3));
+        assert_eq!(lock_class("stderr"), Some(4));
         assert_eq!(lock_class("mystery"), None);
     }
 }

@@ -39,8 +39,43 @@ impl CodingScheme {
         Ok(Self { n, blocks, codes, allocation })
     }
 
+    /// Rebuild a scheme from its serialized parts (the wire codec's
+    /// entry point): partition sizes plus one code per level in use.
+    /// The cyclic allocation is deterministic from the partition and is
+    /// reconstructed here rather than shipped.
+    pub fn from_parts(blocks: BlockPartition, codes: Vec<GradientCode>) -> Result<Self> {
+        let n = blocks.n();
+        if blocks.total() == 0 {
+            return Err(Error::Coding("empty block partition".into()));
+        }
+        let mut by_level = HashMap::new();
+        for code in codes {
+            if code.n != n {
+                return Err(Error::Coding(format!(
+                    "code for level {} built for n = {}, partition has n = {n}",
+                    code.s, code.n
+                )));
+            }
+            by_level.insert(code.s, code);
+        }
+        for r in blocks.ranges() {
+            if !by_level.contains_key(&r.s) {
+                return Err(Error::Coding(format!("missing code for level s = {}", r.s)));
+            }
+        }
+        let allocation = assignment::allocation(blocks.max_level(), n);
+        Ok(Self { n, blocks, codes: by_level, allocation })
+    }
+
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// Every code in use, ordered by level (the serialization order).
+    pub fn codes(&self) -> Vec<&GradientCode> {
+        let mut out: Vec<&GradientCode> = self.codes.values().collect();
+        out.sort_by_key(|c| c.s);
+        out
     }
 
     pub fn blocks(&self) -> &BlockPartition {

@@ -1,6 +1,11 @@
-//! Message types exchanged between the worker pool and its workers
-//! (std `mpsc`; no async runtime is available offline, and the message
-//! rates here — `N × blocks` per iteration per job — don't need one).
+//! Message types exchanged between the worker pool and its workers.
+//!
+//! These types define the logical protocol; *how* they move is the
+//! transport's business ([`crate::transport`]): in-process lanes carry
+//! them over std `mpsc` (no async runtime is needed — the message rates
+//! here, `N × blocks` per iteration per job, don't warrant one), and the
+//! `tcp` transport serializes the same types into length-prefixed frames
+//! ([`crate::transport::codec`]).
 //!
 //! A single pool of worker threads serves **multiple training jobs**
 //! ([`crate::coordinator::pool::WorkerPool`]): every task and every coded

@@ -33,7 +33,7 @@
 //! epochs**, so a job's end-of-run cache statistics describe the whole
 //! run, not just the last scheme.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -41,6 +41,7 @@ use crate::coding::decoder::{decode_into, decode_vector_ls, DecodeCache};
 use crate::coding::scheme::CodingScheme;
 use crate::coordinator::channel::{BlockContribution, JobId, ShardMap, WorkerEvent, WorkerTask};
 use crate::runtime::ExecutorFactory;
+use crate::transport::TaskSender;
 use crate::util::buffers::{BufferPool, PoolStats};
 use crate::{Error, Result};
 
@@ -392,9 +393,10 @@ impl Master {
     }
 
     /// Broadcast one iteration's tasks under the current scheme epoch.
-    /// `tasks[row]` is the channel of the worker bound to that row
-    /// (`None` for rows whose worker already departed — the coded
-    /// scheme absorbs them like any straggler); `times[row]` its
+    /// `tasks[row]` is the task lane of the worker bound to that row —
+    /// an in-process channel or a framed socket ([`crate::transport`]);
+    /// `None` for rows whose worker already departed — the coded
+    /// scheme absorbs them like any straggler. `times[row]` is its
     /// sampled cycle time; `unit_work` the epoch's `(M/N)·b`; `factory`
     /// builds this job's executor inside workers that have not served
     /// the job yet.
@@ -406,7 +408,7 @@ impl Master {
         times: &[f64],
         unit_work: f64,
         factory: &ExecutorFactory,
-        tasks: &[Option<Sender<WorkerTask>>],
+        tasks: &[Option<TaskSender>],
     ) {
         debug_assert_eq!(tasks.len(), self.scheme.n());
         for (row, tx) in tasks.iter().enumerate() {

@@ -12,7 +12,10 @@
 //!   (and no row) until the next epoch rebind — and only once its
 //!   executor has come up ([`WorkerRegistry::confirm`], driven by the
 //!   worker's `Joined` event);
-//! * a *leave* (clean drain or fatal failure) marks the id `Departed`;
+//! * a *leave* (clean drain, fatal failure, or — over the `tcp`
+//!   transport — an expired heartbeat lease, which
+//!   [`crate::transport::tcp`] surfaces as the same `Left` event) marks
+//!   the id `Departed`;
 //!   it keeps its row for the remainder of the current epoch — the
 //!   master treats it exactly like a fatal straggler — and is dropped at
 //!   the next rebind;

@@ -3,6 +3,7 @@
 //! iteration records the scheme epoch it ran under, and the report keeps
 //! the full [`SchemeEpoch`] install history.
 
+use crate::transport::WireSnapshot;
 use crate::util::stats::RunningStats;
 
 /// One GD iteration's accounting.
@@ -111,6 +112,11 @@ pub struct TrainReport {
     pub wire_pool_hits: u64,
     pub wire_pool_misses: u64,
     pub wire_pool_returned: u64,
+    /// Wire-level transport counters (bytes/frames each way, missed
+    /// heartbeat intervals, expired leases), snapshotted at pool
+    /// finish. All zeros for the in-process transport — there is no
+    /// wire — and pool-wide (the transport is shared) otherwise.
+    pub wire: WireSnapshot,
     /// Semi-async decode accounting: blocks applied from a
     /// least-squares approximate decode, how many of those were later
     /// reconciled against the exact quorum, how many were discarded
@@ -230,9 +236,11 @@ impl TrainReport {
         out
     }
 
-    /// One-line summary.
+    /// One-line summary. The trailing wire segment (frames/bytes each
+    /// way, missed heartbeat intervals, expired leases) only appears
+    /// for runs that actually crossed a wire.
     pub fn summary(&self) -> String {
-        format!(
+        let mut out = format!(
             "steps={} epochs={} E[virt]={:.1} wall/iter={} decode/iter={} loss {}→{} cache {}/{} hit pool {}/{} hit",
             self.steps(),
             self.epochs(),
@@ -245,7 +253,19 @@ impl TrainReport {
             self.decode_cache_hits + self.decode_cache_misses,
             self.wire_pool_hits,
             self.wire_pool_hits + self.wire_pool_misses,
-        )
+        );
+        if self.wire != WireSnapshot::default() {
+            out.push_str(&format!(
+                " wire tx {}f/{}B rx {}f/{}B hb-miss {} lease-exp {}",
+                self.wire.frames_sent,
+                self.wire.bytes_sent,
+                self.wire.frames_recv,
+                self.wire.bytes_recv,
+                self.wire.heartbeats_missed,
+                self.wire.leases_expired,
+            ));
+        }
+        out
     }
 }
 

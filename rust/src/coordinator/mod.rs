@@ -127,6 +127,25 @@
 //! overlapped iterations ([`pool`]'s module docs cover the dispatch
 //! gates and accounting invariants).
 //!
+//! ## The transport boundary
+//!
+//! Everything above speaks **task lanes and event channels**, not
+//! threads or sockets: the pool builds one [`crate::transport::Transport`]
+//! from its config and asks it for a [`crate::transport::WorkerLane`]
+//! per rostered worker. With the default in-process transport the lane
+//! is the familiar `mpsc` pair feeding a spawned [`worker`] thread — the
+//! pre-PR-9 topology, bit-for-bit. With the `tcp` feature the same lane
+//! is a framed socket to a remote peer running
+//! [`crate::transport::tcp::serve_worker`]: tasks and coded blocks cross
+//! as length-prefixed frames (the f32 wire blocks move without copies),
+//! and **liveness becomes explicit** — peers heartbeat on a fixed
+//! period, the master grants each a lease, and a lease that goes silent
+//! past its TTL surfaces as the *same* `Left` event a clean drain
+//! produces, feeding the membership re-dimension path unchanged. The
+//! master, pool and adaptive layers cannot tell the difference; that is
+//! the contract. Wire-level counters (bytes/frames each way, missed
+//! heartbeats, expired leases) land in [`metrics::TrainReport::wire`].
+//!
 //! Single-job callers keep the classic facade ([`trainer`]):
 //! `train(cfg, schedule, factory)` or a driveable
 //! [`trainer::TrainSession`].
@@ -161,8 +180,9 @@
 //!   [`metrics::TrainReport`] cannot silently drift from the decode
 //!   state it describes.
 //! * **`lock_order`** — mutex nesting follows the table order
-//!   observation store → buffer-pool inner → stdio (see
-//!   [`adaptive::ObservationStore`] and
+//!   observation store → lease table → buffer-pool inner → socket
+//!   writer → stdio (see [`adaptive::ObservationStore`],
+//!   [`crate::transport::lease::LeaseTable`] and
 //!   [`crate::util::buffers::BufferPool`]); unranked receivers are
 //!   findings by construction.
 //! * **`determinism`** — round control flow never reads wall clocks or

@@ -107,12 +107,12 @@ use crate::coordinator::metrics::{
 };
 use crate::coordinator::state::ModelState;
 use crate::coordinator::straggler::{virtual_runtime, StragglerSampler, StragglerSchedule};
-use crate::coordinator::worker::{self, WorkerContext};
 use crate::coordinator::PacingMode;
 use crate::distribution::fit::{FittedModel, ShiftedExpEstimate};
 use crate::optimizer::blocks::BlockPartition;
 use crate::optimizer::runtime_model::ProblemSpec;
 use crate::runtime::{ExecutorFactory, GradExecutor};
+use crate::transport::{TaskSender, Transport, TransportConfig, WireSnapshot};
 use crate::util::buffers::BufferPool;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
@@ -231,6 +231,9 @@ pub struct PoolConfig {
     /// (None = that entry point falls back to the serialized
     /// [`WorkerPool::run_all`]).
     pub async_rounds: Option<AsyncConfig>,
+    /// How workers are reached: in-process threads (default) or remote
+    /// peers over the framed TCP codec ([`crate::transport`]).
+    pub transport: TransportConfig,
 }
 
 impl PoolConfig {
@@ -245,6 +248,7 @@ impl PoolConfig {
             schedule: ScheduleMode::RoundRobin,
             shared_observations: true,
             async_rounds: None,
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -684,13 +688,13 @@ impl JobHandle {
 pub struct WorkerPool {
     cfg: PoolConfig,
     registry: WorkerRegistry,
-    /// Task channel per worker **id** (None once drained/dead/never
-    /// spawned). Indexed by stable id, not row.
-    task_txs: Vec<Option<Sender<WorkerTask>>>,
-    /// Row-ordered task channels for the current roster, cached per
+    /// Task lane per worker **id** (None once drained/dead/never
+    /// attached). Indexed by stable id, not row.
+    task_txs: Vec<Option<TaskSender>>,
+    /// Row-ordered task lanes for the current roster, cached per
     /// membership epoch (rebuilding this per iteration was measurable
     /// broadcast overhead). Invalidated on rebind, join and departure.
-    row_senders: Vec<Option<Sender<WorkerTask>>>,
+    row_senders: Vec<Option<TaskSender>>,
     row_senders_dirty: bool,
     /// Kept for spawning late joiners; the channel therefore never
     /// disconnects while the pool lives (stalls still time out).
@@ -714,6 +718,9 @@ pub struct WorkerPool {
     /// from it, every job's master recycles arrivals back into it (see
     /// the data-plane notes in [`crate::coordinator`]).
     wire_pool: BufferPool,
+    /// How worker lanes are realized (threads or sockets); also owns
+    /// the transport's service threads and wire counters.
+    transport: Box<dyn Transport>,
 }
 
 impl WorkerPool {
@@ -746,10 +753,11 @@ impl WorkerPool {
         let n = cfg.workers;
         let mut registry = WorkerRegistry::new(n);
         let (event_tx, event_rx) = mpsc::channel::<WorkerEvent>();
-        let mut task_txs: Vec<Option<Sender<WorkerTask>>> = Vec::with_capacity(n);
+        let mut task_txs: Vec<Option<TaskSender>> = Vec::with_capacity(n);
         let mut handles = Vec::new();
         let mut live_mask = vec![false; n];
         let wire_pool = BufferPool::default();
+        let mut transport = cfg.transport.build(event_tx.clone(), cfg.pacing, wire_pool.clone())?;
         for w in 0..n {
             if cfg.dead_workers.contains(&w) {
                 // Injected failure: worker never comes up. It keeps its
@@ -759,8 +767,11 @@ impl WorkerPool {
                 registry.leave(w);
                 continue;
             }
-            let tx = spawn_worker(w, &event_tx, cfg.pacing, &wire_pool, &mut handles)?;
-            task_txs.push(Some(tx));
+            let lane = transport.attach_worker(w)?;
+            task_txs.push(Some(lane.tasks));
+            if let Some(h) = lane.handle {
+                handles.push(h);
+            }
             live_mask[w] = true;
         }
         let mut rng = Rng::new(cfg.seed);
@@ -789,6 +800,7 @@ impl WorkerPool {
             virtual_makespan: 0.0,
             cross_job_dropped: 0,
             wire_pool,
+            transport,
         })
     }
 
@@ -973,12 +985,14 @@ impl WorkerPool {
             ));
         }
         let id = self.registry.join();
-        let tx =
-            spawn_worker(id, &self.event_tx, self.cfg.pacing, &self.wire_pool, &mut self.handles)?;
+        let lane = self.transport.attach_worker(id)?;
+        if let Some(h) = lane.handle {
+            self.handles.push(h);
+        }
         if self.task_txs.len() <= id {
             self.task_txs.resize_with(id + 1, || None);
         }
-        self.task_txs[id] = Some(tx);
+        self.task_txs[id] = Some(lane.tasks);
         self.row_senders_dirty = true;
         crate::log_info!("round {}: worker {id} joined (pending next epoch)", self.rounds);
         for job in &mut self.jobs {
@@ -1401,12 +1415,18 @@ impl WorkerPool {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        // Reap transport service threads (socket readers, lease
+        // sweeper) after the workers themselves, then snapshot the
+        // final wire counters into every report.
+        self.transport.shutdown();
+        let wire: WireSnapshot = self.transport.wire_stats();
         let failed = std::mem::take(&mut self.failed_set);
         Ok(self
             .jobs
             .drain(..)
             .map(|mut job| {
                 job.finalize(&failed);
+                job.report.wire = wire;
                 job.report
             })
             .collect())
@@ -1977,27 +1997,3 @@ impl AsyncEngine {
     }
 }
 
-/// Spawn one worker thread (shared by initial spawn and elastic joins).
-fn spawn_worker(
-    id: WorkerId,
-    event_tx: &Sender<WorkerEvent>,
-    pacing: PacingMode,
-    wire_pool: &BufferPool,
-    handles: &mut Vec<std::thread::JoinHandle<()>>,
-) -> Result<Sender<WorkerTask>> {
-    let (tx, rx) = mpsc::channel::<WorkerTask>();
-    let ctx = WorkerContext {
-        id,
-        tasks: rx,
-        events: event_tx.clone(),
-        pacing,
-        wire_pool: wire_pool.clone(),
-    };
-    handles.push(
-        std::thread::Builder::new()
-            .name(format!("bcgc-worker-{id}"))
-            .spawn(move || worker::run(ctx))
-            .map_err(|e| Error::Runtime(format!("spawn: {e}")))?,
-    );
-    Ok(tx)
-}

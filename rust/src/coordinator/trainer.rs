@@ -70,6 +70,9 @@ pub struct TrainConfig {
     /// Elastic worker-pool policy (None = `N` frozen at spawn, the
     /// paper's setting).
     pub elastic: Option<ElasticConfig>,
+    /// How workers are reached (in-process threads by default; remote
+    /// TCP peers under `--features tcp` — see [`crate::transport`]).
+    pub transport: crate::transport::TransportConfig,
 }
 
 impl TrainConfig {
@@ -87,6 +90,7 @@ impl TrainConfig {
             stall_timeout: std::time::Duration::from_secs(30),
             adaptive: None,
             elastic: None,
+            transport: crate::transport::TransportConfig::default(),
         }
     }
 }
@@ -184,6 +188,7 @@ impl TrainSession {
         pcfg.stall_timeout = cfg.stall_timeout;
         pcfg.dead_workers = cfg.dead_workers.clone();
         pcfg.elastic = cfg.elastic.clone();
+        pcfg.transport = cfg.transport.clone();
         let mut pool = match fleet {
             Some(fleet) => WorkerPool::new_fleet(pcfg, schedule, fleet)?,
             None => WorkerPool::new(pcfg, schedule)?,

@@ -34,13 +34,14 @@
 //! departure path).
 
 use std::collections::HashMap;
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::Receiver;
 
 use crate::coordinator::channel::{BlockContribution, JobId, WorkerEvent, WorkerTask};
 use crate::coordinator::straggler::block_completion_stamps_unit;
 use crate::coordinator::PacingMode;
 use crate::optimizer::blocks::BlockRange;
 use crate::runtime::GradExecutor;
+use crate::transport::EventSender;
 use crate::util::buffers::BufferPool;
 
 /// Everything a worker thread needs (moved into the thread at spawn).
@@ -48,7 +49,10 @@ pub struct WorkerContext {
     /// Stable worker id (thread identity; not a code row).
     pub id: usize,
     pub tasks: Receiver<WorkerTask>,
-    pub events: Sender<WorkerEvent>,
+    /// Event path back to the master — the in-process channel, or a
+    /// framed socket on a remote peer ([`crate::transport`]); send
+    /// semantics are identical either way.
+    pub events: EventSender,
     pub pacing: PacingMode,
     /// Pool-wide freelist for coded wire buffers: the worker takes one
     /// per block before encoding, ownership travels with the
@@ -320,7 +324,7 @@ mod tests {
         let ctx = WorkerContext {
             id: 0,
             tasks: task_rx,
-            events: event_tx,
+            events: EventSender::InProc(event_tx),
             pacing: PacingMode::Virtual,
             wire_pool: wire_pool.clone(),
         };

@@ -176,6 +176,28 @@
 //! for the ownership contract and `benches/hotpath.rs` for the
 //! measured encode/decode rows behind `BENCH_hotpath.json`.
 //!
+//! ## The transport boundary (in-process vs real sockets)
+//!
+//! Everything above — pool scheduling, decode state, membership epochs,
+//! the adaptive engine — talks to workers through exactly two flows:
+//! a [`transport::TaskSender`] per worker (the per-iteration broadcast)
+//! and one shared `WorkerEvent` channel back. The [`transport`] module
+//! makes that boundary explicit: a [`transport::Transport`] decides how
+//! the flows are realized per worker. The default
+//! [`transport::inproc::InProcTransport`] spawns the classic worker
+//! thread on in-process channels (bit-for-bit the pre-transport
+//! behavior — pinned in `tests/transport_e2e.rs`); the feature-gated
+//! TCP transport (`--features tcp`, `bcgc serve-worker`) accepts one
+//! **remote peer process** per worker over `std::net::TcpStream`,
+//! speaking a hand-rolled length-prefixed, versioned little-endian
+//! codec ([`transport::codec`]) that moves the f32 wire blocks
+//! bit-exactly. Remote liveness replaces the in-channel `Joined`/`Left`
+//! handshake with **heartbeat + lease failure detection**
+//! ([`transport::lease`]): a peer that goes silent past its lease TTL
+//! surfaces as the *same* `Left` event the in-process drain produces,
+//! feeding the existing membership re-dimension path — nothing above
+//! the trait knows whether its workers are threads or hosts.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -211,8 +233,8 @@
 //! |------|----------|-------|
 //! | `determinism` | library code (`rust/src/`, outside `bench_harness`, `runtime`, `util/logging` and the binaries) never reads wall clocks or OS entropy — scheduling runs on virtual time so reruns are bit-identical (PR 7's serialized-vs-async equality depends on it) | PR 8 |
 //! | `buffer_ownership` | in `pool.rs`/`master.rs`/`worker.rs`, every pooled-buffer `take` and every counted contribution drop recycles the wire buffer back to [`util::buffers::BufferPool`] (the PR 6 ownership contract) | PR 8 |
-//! | `lock_order` | mutexes are acquired in table order — observation store → buffer-pool inner → stdio — and every lock receiver has a declared rank; checked through same-file helper calls | PR 8 |
-//! | `panic_hygiene` | no `.unwrap()`/`.expect(` in `coordinator/` non-test code; recovering forms or a documented allow only | PR 8 |
+//! | `lock_order` | mutexes are acquired in table order — observation store → lease table → buffer-pool inner → socket writer → stdio — and every lock receiver has a declared rank; checked through same-file helper calls | PR 8, extended PR 9 |
+//! | `panic_hygiene` | no `.unwrap()`/`.expect(` in `coordinator/` or `transport/` non-test code; recovering forms or a documented allow only | PR 8, extended PR 9 |
 //! | `ledger_discipline` | `approx_*`/`discarded` ledger counters (PR 7's semi-async accounting) are only written next to their witness call (`take_outcome`, `take_reconciled`, `discard_pending`, `.drain(`) | PR 8 |
 //! | `bench_stamping` | every bench that writes a `BENCH_*.json` artifact stamps it via `stamp_bench_meta` (the PR 5 provenance contract) | PR 8 |
 //!
@@ -237,6 +259,7 @@ pub mod optimizer;
 pub mod runtime;
 pub mod sim;
 pub mod testing;
+pub mod transport;
 pub mod util;
 
 /// Convenient re-exports of the types most programs need.

@@ -10,6 +10,8 @@
 //!                 optional mid-training drift and online re-optimization.
 //! * `multi`     — run several concurrent training jobs on ONE shared
 //!                 worker pool (the multi-job coordinator).
+//! * `serve-worker` — join a TCP master as one worker peer (`tcp`
+//!                 feature; pairs with `train --transport tcp`).
 //! * `artifacts` — list the AOT artifact manifest.
 //!
 //! Unknown or misspelled options are a hard error (`Args::check_unused`).
@@ -57,6 +59,7 @@ fn run(args: &Args) -> Result<()> {
         Some("adaptive") => cmd_adaptive(args),
         Some("train") => cmd_train(args),
         Some("multi") => cmd_multi(args),
+        Some("serve-worker") => cmd_serve_worker(args),
         Some("artifacts") => cmd_artifacts(args),
         _ => {
             print_usage();
@@ -91,7 +94,12 @@ fn print_usage() {
            multi      --jobs 2 --workers 8 [--steps 60 --steps2 S --lr 2e-3 --mu 1e-3 --t0 50\n\
                        --schedule round_robin|weighted --adaptive --elastic --churn-at K\n\
                        --config file.toml]  (K concurrent jobs on ONE shared worker pool)\n\
-           artifacts  [--dir artifacts]\n"
+           serve-worker --addr HOST:PORT [--workers N --model mlp|linreg --seed S ...]\n\
+                       (tcp feature: join a `train --transport tcp` master as one peer;\n\
+                        pass the SAME model/dataset flags as the master's train command)\n\
+           artifacts  [--dir artifacts]\n\n\
+         `train` also takes --transport inproc|tcp; tcp binds --listen (default 127.0.0.1:0)\n\
+         and waits for N `serve-worker` peers [--lease-ttl-ms 1000 --heartbeat-ms 250].\n"
     );
 }
 
@@ -322,6 +330,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         "slow-count",
         "hetero-min-samples",
         "hetero-window",
+        "listen",
+        "lease-ttl-ms",
+        "heartbeat-ms",
+        "accept-timeout-ms",
     ]);
     let n: usize = args.get("workers", 8)?;
     let steps: usize = args.get("steps", 100)?;
@@ -403,6 +415,39 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.seed = seed;
     if args.flag("real-pacing") {
         cfg.pacing = PacingMode::RealScaled { ns_per_unit: args.get("ns-per-unit", 50.0)? };
+    }
+    // --transport tcp: bind a listener here (before the pool exists)
+    // so N `bcgc serve-worker --addr <printed>` peers can connect and
+    // queue in the accept backlog while the pool attaches them.
+    match args.value("transport").unwrap_or("inproc") {
+        "inproc" => {}
+        #[cfg(feature = "tcp")]
+        "tcp" => {
+            let listen = args.value("listen").unwrap_or("127.0.0.1:0");
+            let tcp = bcgc::transport::tcp::TcpTransportConfig {
+                listener: Arc::new(std::net::TcpListener::bind(listen)?),
+                lease_ttl_ms: args.get("lease-ttl-ms", 1000)?,
+                heartbeat_ms: args.get("heartbeat-ms", 250)?,
+                accept_timeout_ms: args.get("accept-timeout-ms", 30_000)?,
+            };
+            println!(
+                "listen: {} — waiting for {n} peers (`bcgc serve-worker --addr <that>`)",
+                tcp.addr()?
+            );
+            cfg.transport = bcgc::transport::TransportConfig::Tcp(tcp);
+        }
+        #[cfg(not(feature = "tcp"))]
+        "tcp" => {
+            return Err(bcgc::Error::InvalidArgument(
+                "--transport tcp needs the framed-TCP transport; rebuild with --features tcp"
+                    .into(),
+            ))
+        }
+        other => {
+            return Err(bcgc::Error::InvalidArgument(format!(
+                "--transport {other:?}: expected inproc|tcp"
+            )))
+        }
     }
     // --hetero: a 2-speed fleet plus the heterogeneity-aware engine
     // (per-worker sensing, fleet-model re-solve, speed-weighted
@@ -677,6 +722,60 @@ fn cmd_multi(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `bcgc serve-worker` — run ONE worker peer against a TCP master.
+///
+/// The wire never carries executor factories (only job ids), so the
+/// peer rebuilds the master's job-0 dataset and model locally: invoke
+/// it with the SAME --workers/--model/--features/--hidden/--classes/
+/// --seed the master's `train --transport tcp` was given, or the
+/// gradients it computes will be for a different problem.
+#[cfg(feature = "tcp")]
+fn cmd_serve_worker(args: &Args) -> Result<()> {
+    use bcgc::transport::tcp::{serve_worker, FactoryRegistry};
+    args.declare(&["features", "hidden", "classes"]);
+    let addr: String = args.require("addr")?;
+    let n: usize = args.get("workers", 8)?;
+    let seed: u64 = args.get("seed", 2021)?;
+    let model = args.value("model").unwrap_or("mlp").to_string();
+    let factory = match model.as_str() {
+        "linreg" => {
+            let d: usize = args.get("features", 128)?;
+            let (ds, _) = synthetic::linear_regression(d, n * 64, n, 0.05, seed)?;
+            host_factory(ds, host::HostModel::LinearRegression)
+        }
+        "mlp" => {
+            let d: usize = args.get("features", 32)?;
+            let h: usize = args.get("hidden", 64)?;
+            let c: usize = args.get("classes", 10)?;
+            let ds = synthetic::classification(d, c, n * 64, n, 0.2, seed)?;
+            host_factory(ds, host::HostModel::Mlp { hidden: h })
+        }
+        other => {
+            return Err(bcgc::Error::InvalidArgument(format!(
+                "serve-worker supports host models mlp|linreg, not {other:?}"
+            )))
+        }
+    };
+    // Fail on typos BEFORE blocking on the connect retry loop.
+    args.check_unused()?;
+    let registry = FactoryRegistry::new();
+    registry.register(0, factory);
+    println!("peer  : connecting to {addr} ({model}, N={n}, seed {seed})");
+    let wire = serve_worker(addr.as_str(), registry)?;
+    println!(
+        "peer  : drained — tx {}f/{}B rx {}f/{}B",
+        wire.frames_sent, wire.bytes_sent, wire.frames_recv, wire.bytes_recv
+    );
+    Ok(())
+}
+
+#[cfg(not(feature = "tcp"))]
+fn cmd_serve_worker(_args: &Args) -> Result<()> {
+    Err(bcgc::Error::InvalidArgument(
+        "serve-worker needs the framed-TCP transport; rebuild with --features tcp".into(),
+    ))
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {

@@ -1,0 +1,739 @@
+//! Hand-rolled framed wire codec for the TCP transport (zero external
+//! deps; see the wire-format table in [`crate::transport`]).
+//!
+//! The codec is pure and feature-ungated so its round-trip properties
+//! run everywhere (`rust/tests/transport_props.rs`), not just under
+//! `--features tcp`. Every encoder returns a complete frame — length
+//! prefix included — ready for one `write_all`; [`decode_frame`] takes
+//! the frame *body* (everything after the length prefix, as returned by
+//! [`read_frame`]). All integers are little-endian, `usize` travels as
+//! `u64`, and floats travel as raw IEEE-754 bits, so payloads —
+//! including the f32 wire blocks — round-trip bit-exactly.
+//!
+//! Malformed input is never a panic: every decode path bounds-checks
+//! before it reads, length fields are validated against the bytes
+//! actually present before any allocation, and unknown tags/versions
+//! are [`Error::Runtime`] values the caller can drop a connection over.
+
+use std::io::Read;
+use std::sync::Arc;
+
+use crate::coding::encoder::{Construction, GradientCode};
+use crate::coding::scheme::CodingScheme;
+use crate::coordinator::channel::{BlockContribution, JobId, ShardMap, WorkerEvent, WorkerTask};
+use crate::coordinator::PacingMode;
+use crate::linalg::Matrix;
+use crate::optimizer::blocks::BlockPartition;
+use crate::util::buffers::BufferPool;
+use crate::{Error, Result};
+
+/// Wire protocol version; bumped on any incompatible layout change. A
+/// frame carrying a different version is rejected at decode, so
+/// incompatible builds fail loudly at the first message.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Upper bound on one frame's body (version + tag + payload), applied
+/// before the body is allocated: a garbage length prefix costs at most
+/// an error, never memory.
+pub const MAX_FRAME: usize = 64 << 20;
+
+const TAG_HELLO: u8 = 1;
+const TAG_ASSIGN: u8 = 2;
+const TAG_COMPUTE: u8 = 3;
+const TAG_DRAIN: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+const TAG_BLOCK: u8 = 6;
+const TAG_FAILED: u8 = 7;
+const TAG_HEARTBEAT: u8 = 8;
+const TAG_GOODBYE: u8 = 9;
+
+/// A decoded frame — the full bidirectional vocabulary of the wire.
+pub enum Frame {
+    /// Peer → master connection request (the peer has no id yet; the
+    /// master assigns one in [`Frame::Assign`]).
+    Hello,
+    /// Master → peer handshake reply: identity plus liveness contract.
+    Assign {
+        /// The worker id this connection is bound to.
+        worker: usize,
+        /// Lease duration; the peer must make the master hear from it
+        /// at least this often or be declared gone.
+        lease_ttl_ms: u64,
+        /// How often the peer should heartbeat when otherwise idle.
+        heartbeat_ms: u64,
+        /// Pacing the worker loop should run under.
+        pacing: PacingMode,
+    },
+    /// Master → peer work item ([`WorkerTask`] minus the executor
+    /// factory, which cannot cross a wire — the peer resolves it from
+    /// its local registry by job id).
+    Task(WireTask),
+    /// Peer → master: one coded block.
+    Block(BlockContribution),
+    /// Peer → master: a [`WorkerEvent::Failed`].
+    Failed {
+        worker: usize,
+        job: JobId,
+        iter: usize,
+        reason: String,
+        fatal: bool,
+    },
+    /// Peer → master lease renewal.
+    Heartbeat { worker: usize },
+    /// Peer → master clean departure (becomes [`WorkerEvent::Left`]).
+    Goodbye { worker: usize },
+}
+
+/// [`WorkerTask`] as it travels: everything except the executor
+/// factory. Shared payloads stay behind `Arc`s so the peer can clone
+/// them straight into the rebuilt task.
+pub enum WireTask {
+    /// One GD iteration's compute order.
+    Compute {
+        job: JobId,
+        iter: usize,
+        epoch: usize,
+        row: usize,
+        scheme: Arc<CodingScheme>,
+        shards: Arc<ShardMap>,
+        theta: Arc<Vec<f32>>,
+        cycle_time: f64,
+        unit_work: f64,
+    },
+    /// Drain and acknowledge with Goodbye.
+    Drain,
+    /// Clean shutdown, no acknowledgment.
+    Shutdown,
+}
+
+fn bad(what: &str) -> Error {
+    Error::Runtime(format!("codec: {what}"))
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+/// Little-endian frame builder: reserves the length prefix, appends the
+/// version byte and tag, and patches the prefix in `finish`.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Enc {
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(&[0, 0, 0, 0, WIRE_VERSION, tag]);
+        Enc { buf }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn uz(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32s(&mut self, vs: &[f32]) {
+        self.uz(vs.len());
+        self.buf.reserve(vs.len() * 4);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn f64s(&mut self, vs: &[f64]) {
+        self.uz(vs.len());
+        self.buf.reserve(vs.len() * 8);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn uzs(&mut self, vs: &[usize]) {
+        self.uz(vs.len());
+        for &v in vs {
+            self.uz(v);
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.uz(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        let body = (self.buf.len() - 4) as u32;
+        self.buf[..4].copy_from_slice(&body.to_le_bytes());
+        self.buf
+    }
+}
+
+fn enc_pacing(e: &mut Enc, pacing: PacingMode) {
+    match pacing {
+        PacingMode::Virtual => e.u8(0),
+        PacingMode::RealScaled { ns_per_unit } => {
+            e.u8(1);
+            e.f64(ns_per_unit);
+        }
+    }
+}
+
+fn enc_code(e: &mut Enc, code: &GradientCode) {
+    e.uz(code.n);
+    e.uz(code.s);
+    e.u8(match code.construction {
+        Construction::CyclicMds => 0,
+        Construction::FractionalRepetition => 1,
+        Construction::Identity => 2,
+    });
+    e.uz(code.b.rows());
+    e.uz(code.b.cols());
+    e.f64s(code.b.data());
+    e.uz(code.supports.len());
+    for row in &code.supports {
+        e.uzs(row);
+    }
+}
+
+fn enc_scheme(e: &mut Enc, scheme: &CodingScheme) {
+    e.uzs(scheme.blocks().sizes());
+    let codes = scheme.codes();
+    e.uz(codes.len());
+    for code in codes {
+        enc_code(e, code);
+    }
+}
+
+/// Peer → master connection request.
+pub fn frame_hello() -> Vec<u8> {
+    Enc::new(TAG_HELLO).finish()
+}
+
+/// Master → peer handshake reply.
+pub fn frame_assign(
+    worker: usize,
+    lease_ttl_ms: u64,
+    heartbeat_ms: u64,
+    pacing: PacingMode,
+) -> Vec<u8> {
+    let mut e = Enc::new(TAG_ASSIGN);
+    e.uz(worker);
+    e.u64(lease_ttl_ms);
+    e.u64(heartbeat_ms);
+    enc_pacing(&mut e, pacing);
+    e.finish()
+}
+
+/// Master → peer task. `Compute` serializes the full scheme (partition
+/// sizes + one code per level; the cyclic allocation is deterministic
+/// and rebuilt peer-side), the shard map and theta — everything but the
+/// executor factory.
+pub fn frame_task(task: &WorkerTask) -> Vec<u8> {
+    match task {
+        WorkerTask::Compute {
+            job,
+            iter,
+            epoch,
+            row,
+            scheme,
+            shards,
+            theta,
+            factory: _,
+            cycle_time,
+            unit_work,
+        } => {
+            let mut e = Enc::new(TAG_COMPUTE);
+            e.uz(*job);
+            e.uz(*iter);
+            e.uz(*epoch);
+            e.uz(*row);
+            enc_scheme(&mut e, scheme);
+            e.uz(shards.len());
+            for subset in shards.iter() {
+                e.uzs(subset);
+            }
+            e.f32s(theta);
+            e.f64(*cycle_time);
+            e.f64(*unit_work);
+            e.finish()
+        }
+        WorkerTask::Drain => Enc::new(TAG_DRAIN).finish(),
+        WorkerTask::Shutdown => Enc::new(TAG_SHUTDOWN).finish(),
+    }
+}
+
+/// Peer → master coded block.
+pub fn frame_block(c: &BlockContribution) -> Vec<u8> {
+    let mut e = Enc::new(TAG_BLOCK);
+    e.uz(c.job);
+    e.uz(c.iter);
+    e.uz(c.epoch);
+    e.uz(c.worker);
+    e.uz(c.row);
+    e.uz(c.block_idx);
+    e.f64(c.virtual_time);
+    e.f32s(&c.coded);
+    e.finish()
+}
+
+/// Peer → master failure report.
+pub fn frame_failed(worker: usize, job: JobId, iter: usize, reason: &str, fatal: bool) -> Vec<u8> {
+    let mut e = Enc::new(TAG_FAILED);
+    e.uz(worker);
+    e.uz(job);
+    e.uz(iter);
+    e.str(reason);
+    e.u8(fatal as u8);
+    e.finish()
+}
+
+/// Peer → master lease renewal.
+pub fn frame_heartbeat(worker: usize) -> Vec<u8> {
+    let mut e = Enc::new(TAG_HEARTBEAT);
+    e.uz(worker);
+    e.finish()
+}
+
+/// Peer → master clean departure.
+pub fn frame_goodbye(worker: usize) -> Vec<u8> {
+    let mut e = Enc::new(TAG_GOODBYE);
+    e.uz(worker);
+    e.finish()
+}
+
+/// Encode a peer-side [`WorkerEvent`] as its wire frame. `Joined` has
+/// no frame — over TCP the handshake itself announces the join — so it
+/// returns `None`; `Left` becomes `Goodbye`.
+pub fn frame_event(ev: &WorkerEvent) -> Option<Vec<u8>> {
+    match ev {
+        WorkerEvent::Block(c) => Some(frame_block(c)),
+        WorkerEvent::Joined { .. } => None,
+        WorkerEvent::Left { worker } => Some(frame_goodbye(*worker)),
+        WorkerEvent::Failed { worker, job, iter, reason, fatal } => {
+            Some(frame_failed(*worker, *job, *iter, reason, *fatal))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over one frame body.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(bad("truncated frame"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn uz(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| bad("usize overflow"))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let s = self.take(8)?;
+        Ok(f64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    /// A length field for `elem`-byte elements, validated against the
+    /// bytes actually remaining — a garbage length can't drive a huge
+    /// allocation (or a capacity-overflow panic).
+    fn len_of(&mut self, elem: usize) -> Result<usize> {
+        let len = self.uz()?;
+        match len.checked_mul(elem) {
+            Some(bytes) if bytes <= self.remaining() => Ok(len),
+            _ => Err(bad("length field exceeds frame")),
+        }
+    }
+
+    fn f32s_into(&mut self, out: &mut Vec<f32>) -> Result<()> {
+        let len = self.len_of(4)?;
+        let bytes = self.take(len * 4)?;
+        out.reserve(len);
+        for ch in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+        }
+        Ok(())
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let len = self.len_of(8)?;
+        let bytes = self.take(len * 8)?;
+        let mut out = Vec::with_capacity(len);
+        for ch in bytes.chunks_exact(8) {
+            out.push(f64::from_le_bytes([ch[0], ch[1], ch[2], ch[3], ch[4], ch[5], ch[6], ch[7]]));
+        }
+        Ok(out)
+    }
+
+    fn uzs(&mut self) -> Result<Vec<usize>> {
+        let len = self.len_of(8)?;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.uz()?);
+        }
+        Ok(out)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.len_of(1)?;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| bad("invalid utf8"))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(bad("trailing bytes after payload"))
+        }
+    }
+}
+
+fn dec_pacing(d: &mut Dec) -> Result<PacingMode> {
+    match d.u8()? {
+        0 => Ok(PacingMode::Virtual),
+        1 => Ok(PacingMode::RealScaled { ns_per_unit: d.f64()? }),
+        t => Err(bad(&format!("unknown pacing mode {t}"))),
+    }
+}
+
+fn dec_code(d: &mut Dec) -> Result<GradientCode> {
+    let n = d.uz()?;
+    let s = d.uz()?;
+    let construction = match d.u8()? {
+        0 => Construction::CyclicMds,
+        1 => Construction::FractionalRepetition,
+        2 => Construction::Identity,
+        t => return Err(bad(&format!("unknown construction {t}"))),
+    };
+    let rows = d.uz()?;
+    let cols = d.uz()?;
+    let data = d.f64s()?;
+    if data.len() != rows.checked_mul(cols).ok_or_else(|| bad("matrix dims overflow"))? {
+        return Err(bad("matrix data length mismatch"));
+    }
+    let b = Matrix::from_vec(rows, cols, data);
+    let nsup = d.len_of(8)?;
+    let mut supports = Vec::with_capacity(nsup);
+    for _ in 0..nsup {
+        supports.push(d.uzs()?);
+    }
+    Ok(GradientCode { n, s, construction, b, supports })
+}
+
+fn dec_scheme(d: &mut Dec) -> Result<CodingScheme> {
+    let sizes = d.uzs()?;
+    if sizes.is_empty() {
+        return Err(bad("empty block partition"));
+    }
+    let ncodes = d.len_of(8)?;
+    let mut codes = Vec::with_capacity(ncodes);
+    for _ in 0..ncodes {
+        codes.push(dec_code(d)?);
+    }
+    CodingScheme::from_parts(BlockPartition::new(sizes), codes)
+}
+
+fn dec_block(d: &mut Dec, mut coded: Vec<f32>) -> Result<BlockContribution> {
+    let job = d.uz()?;
+    let iter = d.uz()?;
+    let epoch = d.uz()?;
+    let worker = d.uz()?;
+    let row = d.uz()?;
+    let block_idx = d.uz()?;
+    let virtual_time = d.f64()?;
+    d.f32s_into(&mut coded)?;
+    d.done()?;
+    Ok(BlockContribution { job, iter, epoch, worker, row, block_idx, virtual_time, coded })
+}
+
+fn dec_body(d: &mut Dec, tag: u8, coded: Vec<f32>) -> Result<Frame> {
+    match tag {
+        TAG_HELLO => {
+            d.done()?;
+            Ok(Frame::Hello)
+        }
+        TAG_ASSIGN => {
+            let worker = d.uz()?;
+            let lease_ttl_ms = d.u64()?;
+            let heartbeat_ms = d.u64()?;
+            let pacing = dec_pacing(d)?;
+            d.done()?;
+            Ok(Frame::Assign { worker, lease_ttl_ms, heartbeat_ms, pacing })
+        }
+        TAG_COMPUTE => {
+            let job = d.uz()?;
+            let iter = d.uz()?;
+            let epoch = d.uz()?;
+            let row = d.uz()?;
+            let scheme = Arc::new(dec_scheme(d)?);
+            let nshards = d.len_of(8)?;
+            let mut shards: ShardMap = Vec::with_capacity(nshards);
+            for _ in 0..nshards {
+                shards.push(d.uzs()?);
+            }
+            let mut theta = Vec::new();
+            d.f32s_into(&mut theta)?;
+            let cycle_time = d.f64()?;
+            let unit_work = d.f64()?;
+            d.done()?;
+            Ok(Frame::Task(WireTask::Compute {
+                job,
+                iter,
+                epoch,
+                row,
+                scheme,
+                shards: Arc::new(shards),
+                theta: Arc::new(theta),
+                cycle_time,
+                unit_work,
+            }))
+        }
+        TAG_DRAIN => {
+            d.done()?;
+            Ok(Frame::Task(WireTask::Drain))
+        }
+        TAG_SHUTDOWN => {
+            d.done()?;
+            Ok(Frame::Task(WireTask::Shutdown))
+        }
+        TAG_BLOCK => Ok(Frame::Block(dec_block(d, coded)?)),
+        TAG_FAILED => {
+            let worker = d.uz()?;
+            let job = d.uz()?;
+            let iter = d.uz()?;
+            let reason = d.str()?;
+            let fatal = match d.u8()? {
+                0 => false,
+                1 => true,
+                t => return Err(bad(&format!("bad bool {t}"))),
+            };
+            d.done()?;
+            Ok(Frame::Failed { worker, job, iter, reason, fatal })
+        }
+        TAG_HEARTBEAT => {
+            let worker = d.uz()?;
+            d.done()?;
+            Ok(Frame::Heartbeat { worker })
+        }
+        TAG_GOODBYE => {
+            let worker = d.uz()?;
+            d.done()?;
+            Ok(Frame::Goodbye { worker })
+        }
+        t => Err(bad(&format!("unknown tag {t}"))),
+    }
+}
+
+fn dec_header(body: &[u8]) -> Result<(u8, Dec<'_>)> {
+    if body.len() < 2 {
+        return Err(bad("frame body shorter than header"));
+    }
+    if body[0] != WIRE_VERSION {
+        return Err(bad(&format!("wire version {} (want {WIRE_VERSION})", body[0])));
+    }
+    Ok((body[1], Dec::new(&body[2..])))
+}
+
+/// Decode one frame body (as returned by [`read_frame`]: version byte,
+/// tag, payload — the length prefix already stripped).
+pub fn decode_frame(body: &[u8]) -> Result<Frame> {
+    let (tag, mut d) = dec_header(body)?;
+    dec_body(&mut d, tag, Vec::new())
+}
+
+/// [`decode_frame`], but a `Block` frame's coded payload lands in a
+/// buffer taken from `pool` — the master-side reader keeps incoming
+/// arrivals on the shared freelist exactly like in-process ones. A
+/// malformed block frame drops its buffer (one future pool miss; the
+/// ownership contract makes dropping always safe) and the connection
+/// is torn down anyway.
+pub fn decode_frame_pooled(body: &[u8], pool: &BufferPool) -> Result<Frame> {
+    let (tag, mut d) = dec_header(body)?;
+    if tag != TAG_BLOCK {
+        return dec_body(&mut d, tag, Vec::new());
+    }
+    // A block payload is the frame minus ~66 bytes of fixed fields; the
+    // hint overshoots slightly, which the pool tolerates.
+    let coded = pool.take(d.remaining() / 4);
+    dec_block(&mut d, coded).map(Frame::Block)
+}
+
+/// Peel one complete frame body off an accumulation buffer, if the
+/// buffer holds one. The master-side reader threads read raw bytes
+/// under a read-timeout and accumulate them here — `read_exact` under a
+/// timeout can consume a partial frame and lose stream sync, so frames
+/// are only ever parsed out whole. Returns `Ok(None)` while the frame
+/// is still incomplete; a malformed length prefix is an error (the
+/// stream can't recover its framing).
+pub fn next_frame(pending: &mut Vec<u8>, max: usize) -> Result<Option<Vec<u8>>> {
+    if pending.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([pending[0], pending[1], pending[2], pending[3]]) as usize;
+    if !(2..=max).contains(&len) {
+        return Err(bad(&format!("frame length {len} outside [2, {max}]")));
+    }
+    if pending.len() < 4 + len {
+        return Ok(None);
+    }
+    let body = pending[4..4 + len].to_vec();
+    pending.drain(..4 + len);
+    Ok(Some(body))
+}
+
+/// Read one length-prefixed frame off `r` and return its body (version
+/// byte, tag, payload). The length is validated against `max` *before*
+/// the body is allocated. Errors are `io::Error` so transport loops can
+/// distinguish timeouts (`WouldBlock`/`TimedOut`) from dead peers.
+/// Only safe on streams **without** a read timeout (handshakes, the
+/// peer's main loop) — timeout-tolerant readers use [`next_frame`].
+pub fn read_frame(r: &mut impl Read, max: usize) -> std::io::Result<Vec<u8>> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len < 2 || len > max {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("codec: frame length {len} outside [2, {max}]"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hello_heartbeat_goodbye_roundtrip() {
+        for (frame, want_worker) in [(frame_heartbeat(7), 7usize), (frame_goodbye(3), 3)] {
+            let body = read_frame(&mut frame.as_slice(), MAX_FRAME).expect("well-formed");
+            match decode_frame(&body).expect("decodes") {
+                Frame::Heartbeat { worker } | Frame::Goodbye { worker } => {
+                    assert_eq!(worker, want_worker)
+                }
+                _ => panic!("wrong frame"),
+            }
+        }
+        let body = read_frame(&mut frame_hello().as_slice(), MAX_FRAME).expect("well-formed");
+        assert!(matches!(decode_frame(&body), Ok(Frame::Hello)));
+    }
+
+    #[test]
+    fn block_roundtrips_bit_exactly() {
+        let c = BlockContribution {
+            job: 2,
+            iter: 41,
+            epoch: 3,
+            worker: 5,
+            row: 1,
+            block_idx: 0,
+            virtual_time: 1234.5678,
+            coded: vec![1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-30],
+        };
+        let frame = frame_block(&c);
+        let body = read_frame(&mut frame.as_slice(), MAX_FRAME).expect("well-formed");
+        let Ok(Frame::Block(d)) = decode_frame(&body) else {
+            panic!("wrong frame")
+        };
+        assert_eq!((d.job, d.iter, d.epoch, d.worker, d.row, d.block_idx), (2, 41, 3, 5, 1, 0));
+        assert_eq!(d.virtual_time.to_bits(), c.virtual_time.to_bits());
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&d.coded), bits(&c.coded));
+    }
+
+    #[test]
+    fn truncated_and_garbage_frames_error_not_panic() {
+        let frame = frame_failed(1, 0, 9, "boom", true);
+        let body = read_frame(&mut frame.as_slice(), MAX_FRAME).expect("well-formed");
+        for cut in 0..body.len() {
+            assert!(decode_frame(&body[..cut]).is_err() || cut == body.len());
+        }
+        // Garbage length prefix: bounded by max, never allocated.
+        let huge = [0xffu8, 0xff, 0xff, 0xff, WIRE_VERSION, TAG_HELLO];
+        assert!(read_frame(&mut huge.as_slice(), MAX_FRAME).is_err());
+        // Wrong version.
+        let mut wrong = body.clone();
+        wrong[0] = WIRE_VERSION + 1;
+        assert!(decode_frame(&wrong).is_err());
+    }
+
+    #[test]
+    fn scheme_survives_the_wire() {
+        let mut rng = Rng::new(9);
+        let blocks = BlockPartition::new(vec![2, 3, 0, 1]);
+        let scheme = Arc::new(CodingScheme::new(blocks, &mut rng).expect("valid scheme"));
+        let task = WorkerTask::Compute {
+            job: 0,
+            iter: 7,
+            epoch: 2,
+            row: 3,
+            scheme: scheme.clone(),
+            shards: Arc::new(vec![vec![0], vec![1, 2], vec![3], vec![4]]),
+            theta: Arc::new(vec![0.25f32, -1.0, 2.0]),
+            factory: Arc::new(|_| Err(Error::Runtime("factories never cross the wire".into()))),
+            cycle_time: 1.25,
+            unit_work: 0.5,
+        };
+        let frame = frame_task(&task);
+        let body = read_frame(&mut frame.as_slice(), MAX_FRAME).expect("well-formed");
+        let Ok(Frame::Task(WireTask::Compute { scheme: got, theta, row, .. })) =
+            decode_frame(&body)
+        else {
+            panic!("wrong frame")
+        };
+        assert_eq!(row, 3);
+        assert_eq!(theta.as_slice(), &[0.25f32, -1.0, 2.0]);
+        assert_eq!(got.n(), scheme.n());
+        assert_eq!(got.blocks().sizes(), scheme.blocks().sizes());
+        for r in scheme.ranges() {
+            assert_eq!(got.code(r.s).b.data(), scheme.code(r.s).b.data());
+            assert_eq!(got.code(r.s).supports, scheme.code(r.s).supports);
+        }
+        for w in 0..scheme.n() {
+            assert_eq!(got.worker_subsets(w), scheme.worker_subsets(w));
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! The in-process transport: worker threads on `mpsc` channels.
+//!
+//! This is the default and test path, and it is deliberately **exactly**
+//! the pre-transport wiring: one spawned thread per worker running
+//! [`crate::coordinator::worker::run`], a private task channel in, the
+//! pool's shared event channel out. No codec, no leases, no wire — the
+//! thread's own lifecycle provides the membership signals (`Joined` on
+//! spawn, `Left` on drain), so [`Transport::wire_stats`] stays all
+//! zeros. The serialized `s = 0` parity pin in
+//! `rust/tests/transport_e2e.rs` holds this implementation bit-for-bit
+//! to the pre-PR channel path.
+
+use std::sync::mpsc;
+
+use crate::coordinator::channel::WorkerEvent;
+use crate::coordinator::membership::WorkerId;
+use crate::coordinator::worker::{self, WorkerContext};
+use crate::coordinator::PacingMode;
+use crate::transport::{EventSender, TaskSender, Transport, WireSnapshot, WorkerLane};
+use crate::util::buffers::BufferPool;
+use crate::{Error, Result};
+
+/// Spawns one worker thread per attached id, wired to in-process
+/// channels (see the module docs).
+pub struct InProcTransport {
+    event_tx: mpsc::Sender<WorkerEvent>,
+    pacing: PacingMode,
+    wire_pool: BufferPool,
+}
+
+impl InProcTransport {
+    /// A transport that spawns workers around the pool's shared event
+    /// channel, pacing mode and wire-buffer freelist.
+    pub fn new(
+        event_tx: mpsc::Sender<WorkerEvent>,
+        pacing: PacingMode,
+        wire_pool: BufferPool,
+    ) -> InProcTransport {
+        InProcTransport { event_tx, pacing, wire_pool }
+    }
+}
+
+impl Transport for InProcTransport {
+    fn attach_worker(&mut self, id: WorkerId) -> Result<WorkerLane> {
+        let (tx, rx) = mpsc::channel();
+        let ctx = WorkerContext {
+            id,
+            tasks: rx,
+            events: EventSender::InProc(self.event_tx.clone()),
+            pacing: self.pacing,
+            wire_pool: self.wire_pool.clone(),
+        };
+        let handle = std::thread::Builder::new()
+            .name(format!("bcgc-worker-{id}"))
+            .spawn(move || worker::run(ctx))
+            .map_err(|e| Error::Runtime(format!("spawn: {e}")))?;
+        Ok(WorkerLane { tasks: TaskSender::InProc(tx), handle: Some(handle) })
+    }
+
+    fn wire_stats(&self) -> WireSnapshot {
+        // No wire: every counter is identically zero.
+        WireSnapshot::default()
+    }
+
+    fn shutdown(&mut self) {
+        // Worker threads are owned (and joined) by the pool via their
+        // lane handles; the transport itself holds no service threads.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::channel::WorkerTask;
+
+    #[test]
+    fn attached_worker_joins_drains_and_leaves() {
+        let (event_tx, event_rx) = mpsc::channel();
+        let mut t = InProcTransport::new(event_tx, PacingMode::Virtual, BufferPool::default());
+        let lane = t.attach_worker(4).expect("spawn succeeds");
+        match event_rx.recv().expect("worker announces itself") {
+            WorkerEvent::Joined { worker } => assert_eq!(worker, 4),
+            _ => panic!("expected Joined first"),
+        }
+        lane.tasks.send(WorkerTask::Drain).expect("worker is alive");
+        match event_rx.recv().expect("drain is acknowledged") {
+            WorkerEvent::Left { worker } => assert_eq!(worker, 4),
+            _ => panic!("expected Left"),
+        }
+        if let Some(h) = lane.handle {
+            h.join().expect("worker exits cleanly");
+        }
+        assert_eq!(t.wire_stats(), WireSnapshot::default());
+        t.shutdown();
+    }
+}

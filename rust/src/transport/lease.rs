@@ -1,0 +1,218 @@
+//! Lease-based liveness for remote workers.
+//!
+//! The master grants each attached peer a lease at handshake; every
+//! frame received from the peer (heartbeats included) renews it, and a
+//! sweeper declares leases expired after `ttl_ms` of silence. Expiry
+//! and socket EOF race to report the same departure, so removal is the
+//! dedup point: whoever successfully [`LeaseTable::remove`]s the lease
+//! injects the one `Left` event — the loser sees `false` and stays
+//! quiet.
+//!
+//! Time goes through the [`Clock`] trait so every lease decision is
+//! testable without sleeping: [`ManualClock`] advances by hand (the
+//! property/unit tests), [`SystemClock`] reads the monotonic clock (the
+//! real TCP transport — the only wall-clock consumer).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::coordinator::membership::WorkerId;
+
+/// Milliseconds from an arbitrary fixed origin.
+pub trait Clock: Send + Sync {
+    fn now_ms(&self) -> u64;
+}
+
+/// Monotonic wall clock for the real transport. Library code is
+/// otherwise wall-clock-free (the determinism contract); lease expiry
+/// is inherently about real elapsed time, so these two reads carry
+/// their exemption inline.
+pub struct SystemClock {
+    origin: std::time::Instant,
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        // lint: allow(determinism) — lease expiry measures real elapsed time by definition
+        SystemClock { origin: std::time::Instant::now() }
+    }
+}
+
+impl Clock for SystemClock {
+    fn now_ms(&self) -> u64 {
+        self.origin.elapsed().as_millis() as u64
+    }
+}
+
+/// Hand-advanced clock for deterministic lease tests.
+#[derive(Default)]
+pub struct ManualClock {
+    ms: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn advance(&self, ms: u64) {
+        self.ms.fetch_add(ms, Ordering::SeqCst);
+    }
+
+    pub fn set(&self, ms: u64) {
+        self.ms.store(ms, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ms(&self) -> u64 {
+        self.ms.load(Ordering::SeqCst)
+    }
+}
+
+/// Per-worker lease deadlines (shared across the transport's reader
+/// and sweeper threads; clone = same table).
+#[derive(Clone)]
+pub struct LeaseTable {
+    /// Worker → last-renewal timestamp (ms).
+    leases: Arc<Mutex<HashMap<WorkerId, u64>>>,
+    ttl_ms: u64,
+    clock: Arc<dyn Clock>,
+}
+
+impl LeaseTable {
+    pub fn new(ttl_ms: u64, clock: Arc<dyn Clock>) -> LeaseTable {
+        LeaseTable { leases: Arc::new(Mutex::new(HashMap::new())), ttl_ms, clock }
+    }
+
+    /// Lock the table, recovering from poisoning: holders only read or
+    /// update plain timestamps, so the map is always structurally
+    /// intact.
+    fn lock_leases(&self) -> MutexGuard<'_, HashMap<WorkerId, u64>> {
+        self.leases.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Grant (or re-grant) `worker`'s lease, renewed as of now.
+    pub fn grant(&self, worker: WorkerId) {
+        let now = self.clock.now_ms();
+        self.lock_leases().insert(worker, now);
+    }
+
+    /// Renew `worker`'s lease if it is still held. Returns whether it
+    /// was — a frame from a worker whose lease already expired must not
+    /// resurrect it (its `Left` is already in flight).
+    pub fn touch(&self, worker: WorkerId) -> bool {
+        let now = self.clock.now_ms();
+        match self.lock_leases().get_mut(&worker) {
+            Some(at) => {
+                *at = now;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Milliseconds since `worker`'s last renewal, if leased.
+    pub fn silence_ms(&self, worker: WorkerId) -> Option<u64> {
+        let now = self.clock.now_ms();
+        self.lock_leases().get(&worker).map(|&at| now.saturating_sub(at))
+    }
+
+    /// Workers whose leases have been silent past the ttl (still
+    /// leased — pair with [`LeaseTable::remove`] to act on them).
+    pub fn expired(&self) -> Vec<WorkerId> {
+        let now = self.clock.now_ms();
+        let g = self.lock_leases();
+        let mut out: Vec<WorkerId> = g
+            .iter()
+            .filter(|(_, &at)| now.saturating_sub(at) > self.ttl_ms)
+            .map(|(&w, _)| w)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Drop `worker`'s lease. Returns whether this call removed it —
+    /// the dedup hook: expiry sweeps and EOF readers race to report one
+    /// departure, and only the winner injects `Left`.
+    pub fn remove(&self, worker: WorkerId) -> bool {
+        self.lock_leases().remove(&worker).is_some()
+    }
+
+    /// Whether `worker` currently holds a lease.
+    pub fn held(&self, worker: WorkerId) -> bool {
+        self.lock_leases().contains_key(&worker)
+    }
+
+    /// Workers currently holding a lease, sorted (the sweeper's scan
+    /// set).
+    pub fn leased(&self) -> Vec<WorkerId> {
+        let mut out: Vec<WorkerId> = self.lock_leases().keys().copied().collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Live leases.
+    pub fn len(&self) -> usize {
+        self.lock_leases().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(ttl: u64) -> (LeaseTable, Arc<ManualClock>) {
+        let clock = Arc::new(ManualClock::default());
+        (LeaseTable::new(ttl, clock.clone()), clock)
+    }
+
+    #[test]
+    fn touch_keeps_a_lease_alive_past_the_ttl() {
+        let (t, clock) = table(100);
+        t.grant(3);
+        for _ in 0..10 {
+            clock.advance(90);
+            assert!(t.touch(3));
+            assert!(t.expired().is_empty());
+        }
+        clock.advance(101);
+        assert_eq!(t.expired(), vec![3]);
+    }
+
+    #[test]
+    fn silence_exactly_at_ttl_is_not_expiry() {
+        let (t, clock) = table(100);
+        t.grant(0);
+        clock.advance(100);
+        assert!(t.expired().is_empty(), "silence == ttl is still in contract");
+        clock.advance(1);
+        assert_eq!(t.expired(), vec![0]);
+        assert_eq!(t.silence_ms(0), Some(101));
+    }
+
+    #[test]
+    fn remove_dedups_racing_reporters() {
+        let (t, _clock) = table(50);
+        t.grant(7);
+        assert!(t.remove(7), "first reporter wins");
+        assert!(!t.remove(7), "second reporter stays quiet");
+        assert!(!t.touch(7), "an expired lease cannot be renewed");
+        assert!(!t.held(7));
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn expired_lists_every_silent_worker_sorted() {
+        let (t, clock) = table(10);
+        t.grant(5);
+        t.grant(1);
+        t.grant(9);
+        clock.advance(8);
+        assert!(t.touch(9));
+        clock.advance(5);
+        assert_eq!(t.expired(), vec![1, 5]);
+        assert_eq!(t.len(), 3, "expiry does not remove by itself");
+    }
+}

@@ -1,0 +1,344 @@
+//! The transport boundary: how the coordinator reaches its workers.
+//!
+//! Everything *above* this module — [`crate::coordinator::pool`]'s
+//! scheduling, [`crate::coordinator::master`]'s decode state, membership
+//! epochs, the adaptive engine — speaks two directions of traffic and
+//! nothing else:
+//!
+//! * **master → worker:** a [`WorkerTask`] per rostered worker per
+//!   iteration (broadcast), sent through a [`TaskSender`];
+//! * **worker → master:** a stream of [`WorkerEvent`]s (coded blocks,
+//!   failures, membership signals) that all land on the pool's single
+//!   `mpsc` event channel.
+//!
+//! A [`Transport`] owns how those two flows are realized for one
+//! worker: [`inproc::InProcTransport`] spawns the classic worker thread
+//! wired to in-process channels (the default and test path — bit-for-bit
+//! the pre-transport behavior), while the feature-gated
+//! [`tcp`] implementation (`--features tcp`) accepts a **remote peer
+//! process** per worker over `std::net::TcpStream`, speaking the framed
+//! wire codec below. The pool neither knows nor cares which it got: it
+//! calls [`Transport::attach_worker`] once per worker id and then sends
+//! tasks / receives events exactly as before.
+//!
+//! ## Failure detection: heartbeats and leases
+//!
+//! In-process workers signal membership by construction: their thread
+//! sends `Joined` on spawn and `Left` on drain, and a panic is a fatal
+//! `Failed`. A remote peer can simply *vanish* (host dies, link drops,
+//! process freezes), so the TCP transport replaces trust with a
+//! **lease** ([`lease::LeaseTable`]): the master grants a lease at
+//! handshake, every frame received from the peer (heartbeats included —
+//! peers ping on `heartbeat_ms`) renews it, and a sweeper thread expires
+//! leases that go quiet for `lease_ttl_ms`. An expired lease — or a
+//! socket EOF — surfaces as the **same [`WorkerEvent::Left`]** the
+//! in-process drain handshake produces, feeding the existing
+//! membership-epoch re-dimension path; nothing above the trait changes.
+//! Whichever side notices first wins: `Left` is injected exactly once
+//! per worker, deduplicated by [`lease::LeaseTable::remove`].
+//!
+//! ## Wire format (version 1)
+//!
+//! Every frame on a TCP connection, in both directions, is
+//!
+//! ```text
+//! ┌────────────┬──────────┬──────┬──────────────────┐
+//! │ len: u32 LE│ ver: u8  │ tag  │ payload (len−2 B)│
+//! └────────────┴──────────┴──────┴──────────────────┘
+//! ```
+//!
+//! `len` counts everything after itself (version byte + tag + payload)
+//! and is bounded by [`codec::MAX_FRAME`] — an oversized or truncated
+//! length is a decode error, never a panic or an unbounded allocation.
+//! `ver` is [`codec::WIRE_VERSION`] (currently 1); a mismatch rejects
+//! the frame so incompatible builds fail loudly at the first message.
+//! Integers are little-endian; `usize` travels as `u64`; floats travel
+//! as IEEE-754 bits (`f64`/`f32` LE), so payloads — in particular the
+//! PR 6 `f32` wire blocks — round-trip **bit-exactly**. Tags:
+//!
+//! | tag | frame | direction | payload |
+//! |-----|-------|-----------|---------|
+//! | 1 | `Hello` | peer → master | none (connection request) |
+//! | 2 | `Assign` | master → peer | worker id, lease ttl, heartbeat interval, pacing |
+//! | 3 | `Compute` | master → peer | full [`WorkerTask::Compute`] minus the executor factory |
+//! | 4 | `Drain` | master → peer | none |
+//! | 5 | `Shutdown` | master → peer | none |
+//! | 6 | `Block` | peer → master | a [`BlockContribution`] (f32 wire payload) |
+//! | 7 | `Failed` | peer → master | worker, job, iter, reason, fatal |
+//! | 8 | `Heartbeat` | peer → master | worker id (lease renewal) |
+//! | 9 | `Goodbye` | peer → master | worker id (clean `Left`) |
+//!
+//! Closures cannot cross a wire, so a `Compute` frame omits the
+//! [`crate::runtime::ExecutorFactory`]; the peer resolves the job's
+//! factory from its local [`tcp::FactoryRegistry`] and rebuilds a
+//! complete task. The coding scheme travels fully serialized (partition
+//! sizes + one [`crate::coding::encoder::GradientCode`] per level); the
+//! cyclic allocation is deterministic from the partition and is
+//! reconstructed, not shipped
+//! ([`crate::coding::scheme::CodingScheme::from_parts`]).
+//!
+//! ## Buffer ownership across the wire
+//!
+//! The PR 6 contract — whoever disposes of a contribution recycles its
+//! wire buffer — holds per process: a peer's encoder takes buffers from
+//! its *local* [`crate::util::buffers::BufferPool`] and the
+//! [`EventSender`] recycles them right after a successful serialization
+//! (on failure the event is handed back through the error so the worker
+//! loop's existing recovery path recycles it); the master-side reader
+//! decodes incoming `Block` payloads **into** buffers taken from the
+//! pool's shared freelist ([`codec::decode_frame_pooled`]), so decoded
+//! arrivals cycle through the master exactly like in-process ones.
+//!
+//! ## Lock order
+//!
+//! The transport adds two ranked mutex classes to the `bcgc-lint`
+//! `lock_order` table (see [`crate::analysis::rules`]): the lease table
+//! (`leases`, after the observation store) and the socket writer
+//! (`writer`, after the buffer pool) — a thread must release the shared
+//! stream writer before touching the buffer-pool freelist, so a slow
+//! socket can never stall buffer recycling.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::channel::{WorkerEvent, WorkerTask};
+use crate::coordinator::membership::WorkerId;
+use crate::Result;
+
+pub mod codec;
+pub mod inproc;
+pub mod lease;
+#[cfg(feature = "tcp")]
+pub mod tcp;
+
+/// Master-side handle for sending tasks to one attached worker.
+///
+/// A closed enum rather than a trait object: the send path is the
+/// per-iteration broadcast hot loop, and both variants are `Clone` so
+/// the pool's cached row→sender table keeps working.
+#[derive(Clone)]
+pub enum TaskSender {
+    /// In-process channel to a worker thread.
+    InProc(mpsc::Sender<WorkerTask>),
+    /// Framed codec over a TCP stream to a remote peer.
+    #[cfg(feature = "tcp")]
+    Tcp(tcp::TcpTaskSender),
+}
+
+impl TaskSender {
+    /// Send one task; mirrors `mpsc::Sender::send` (the task is handed
+    /// back on failure, e.g. a hung-up worker or a dead socket).
+    pub fn send(&self, task: WorkerTask) -> std::result::Result<(), mpsc::SendError<WorkerTask>> {
+        match self {
+            TaskSender::InProc(tx) => tx.send(task),
+            #[cfg(feature = "tcp")]
+            TaskSender::Tcp(tx) => tx.send(task),
+        }
+    }
+}
+
+/// Worker-side handle for emitting events toward the master.
+///
+/// Mirrors `mpsc::Sender<WorkerEvent>` — including returning the
+/// undelivered event inside [`mpsc::SendError`] on failure, which the
+/// worker loop relies on to recycle an unsent block's wire buffer.
+#[derive(Clone)]
+pub enum EventSender {
+    /// The pool's shared in-process event channel.
+    InProc(mpsc::Sender<WorkerEvent>),
+    /// Framed codec over the peer's TCP stream back to the master.
+    #[cfg(feature = "tcp")]
+    Tcp(tcp::TcpEventSender),
+}
+
+impl EventSender {
+    /// Send one event; on failure the event comes back undelivered so
+    /// the caller can recover owned resources (pooled wire buffers).
+    pub fn send(&self, ev: WorkerEvent) -> std::result::Result<(), mpsc::SendError<WorkerEvent>> {
+        match self {
+            EventSender::InProc(tx) => tx.send(ev),
+            #[cfg(feature = "tcp")]
+            EventSender::Tcp(tx) => tx.send(ev),
+        }
+    }
+}
+
+/// What [`Transport::attach_worker`] hands back to the pool for one
+/// worker: where to send its tasks, and (for transports that own a
+/// local thread per worker) the handle to join at shutdown.
+pub struct WorkerLane {
+    /// Task path to the worker.
+    pub tasks: TaskSender,
+    /// The worker's local thread, when the transport spawned one
+    /// (in-process transport); remote peers own their threads.
+    pub handle: Option<JoinHandle<()>>,
+}
+
+/// How a [`crate::coordinator::pool::WorkerPool`] reaches its workers.
+///
+/// Constructed by the pool at build time around its shared event
+/// channel, pacing mode and wire-buffer pool; [`Transport::attach_worker`]
+/// is called once per worker id (spawn or accept), and every attached
+/// worker's events flow into the one event channel the pool already
+/// drains. [`Transport::shutdown`] reaps transport-owned service
+/// threads (socket readers, lease sweeper) after the pool has joined
+/// the worker threads themselves.
+pub trait Transport: Send {
+    /// Bring up worker `id` and return its task lane. In-process this
+    /// spawns the worker thread; over TCP it accepts and handshakes the
+    /// next pending peer connection.
+    fn attach_worker(&mut self, id: WorkerId) -> Result<WorkerLane>;
+
+    /// Wire-level counters accumulated so far (all zeros for the
+    /// in-process transport: there is no wire).
+    fn wire_stats(&self) -> WireSnapshot;
+
+    /// Stop and join transport-owned service threads. Called by the
+    /// pool after worker shutdown; must not block indefinitely.
+    fn shutdown(&mut self);
+}
+
+/// Which transport a [`crate::coordinator::pool::PoolConfig`] builds.
+#[derive(Clone, Default)]
+pub enum TransportConfig {
+    /// Worker threads on in-process channels (default; bit-for-bit the
+    /// pre-transport behavior).
+    #[default]
+    InProc,
+    /// Remote peers over loopback/LAN TCP with heartbeat+lease failure
+    /// detection. The listener is pre-bound by the caller so tests and
+    /// the CLI know the address before the pool starts accepting.
+    #[cfg(feature = "tcp")]
+    Tcp(tcp::TcpTransportConfig),
+}
+
+impl TransportConfig {
+    /// Build the configured transport around the pool's shared event
+    /// channel, pacing mode and wire-buffer pool.
+    pub fn build(
+        &self,
+        event_tx: mpsc::Sender<WorkerEvent>,
+        pacing: crate::coordinator::PacingMode,
+        wire_pool: crate::util::buffers::BufferPool,
+    ) -> Result<Box<dyn Transport>> {
+        match self {
+            TransportConfig::InProc => {
+                Ok(Box::new(inproc::InProcTransport::new(event_tx, pacing, wire_pool)))
+            }
+            #[cfg(feature = "tcp")]
+            TransportConfig::Tcp(cfg) => {
+                Ok(Box::new(tcp::TcpTransport::new(cfg.clone(), event_tx, pacing, wire_pool)?))
+            }
+        }
+    }
+}
+
+/// Shared wire-level counters (lock-free; cloned handles observe the
+/// same totals). The transport's service threads bump these; the pool
+/// snapshots them into every job's
+/// [`crate::coordinator::metrics::TrainReport`] at finish.
+#[derive(Clone, Default)]
+pub struct WireStats {
+    inner: Arc<WireCounters>,
+}
+
+#[derive(Default)]
+struct WireCounters {
+    bytes_sent: AtomicU64,
+    bytes_recv: AtomicU64,
+    frames_sent: AtomicU64,
+    frames_recv: AtomicU64,
+    heartbeats_missed: AtomicU64,
+    leases_expired: AtomicU64,
+}
+
+impl WireStats {
+    /// Record one sent frame of `bytes` total length.
+    pub fn frame_sent(&self, bytes: usize) {
+        self.inner.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.inner.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Record one received frame of `bytes` total length.
+    pub fn frame_recv(&self, bytes: usize) {
+        self.inner.frames_recv.fetch_add(1, Ordering::Relaxed);
+        self.inner.bytes_recv.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Record a heartbeat interval that passed without any frame from a
+    /// still-leased worker (observed by the lease sweeper).
+    pub fn heartbeat_missed(&self) {
+        self.inner.heartbeats_missed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one lease expiry (the worker was declared gone).
+    pub fn lease_expired(&self) {
+        self.inner.leases_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of the counters.
+    pub fn snapshot(&self) -> WireSnapshot {
+        WireSnapshot {
+            bytes_sent: self.inner.bytes_sent.load(Ordering::Relaxed),
+            bytes_recv: self.inner.bytes_recv.load(Ordering::Relaxed),
+            frames_sent: self.inner.frames_sent.load(Ordering::Relaxed),
+            frames_recv: self.inner.frames_recv.load(Ordering::Relaxed),
+            heartbeats_missed: self.inner.heartbeats_missed.load(Ordering::Relaxed),
+            leases_expired: self.inner.leases_expired.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of a transport's [`WireStats`] counters, as
+/// surfaced in [`crate::coordinator::metrics::TrainReport`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireSnapshot {
+    /// Total frame bytes written to sockets (master side).
+    pub bytes_sent: u64,
+    /// Total frame bytes read from sockets (master side).
+    pub bytes_recv: u64,
+    /// Frames written.
+    pub frames_sent: u64,
+    /// Frames read.
+    pub frames_recv: u64,
+    /// Heartbeat intervals a still-leased worker went silent for.
+    pub heartbeats_missed: u64,
+    /// Leases expired (workers declared gone by the sweeper).
+    pub leases_expired: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_stats_clones_share_one_ledger() {
+        let a = WireStats::default();
+        let b = a.clone();
+        a.frame_sent(10);
+        b.frame_recv(4);
+        b.lease_expired();
+        a.heartbeat_missed();
+        let snap = a.snapshot();
+        assert_eq!(snap.bytes_sent, 10);
+        assert_eq!(snap.frames_sent, 1);
+        assert_eq!(snap.bytes_recv, 4);
+        assert_eq!(snap.frames_recv, 1);
+        assert_eq!(snap.leases_expired, 1);
+        assert_eq!(snap.heartbeats_missed, 1);
+        assert_eq!(snap, b.snapshot());
+    }
+
+    #[test]
+    fn task_sender_mirrors_mpsc_semantics() {
+        let (tx, rx) = mpsc::channel();
+        let sender = TaskSender::InProc(tx);
+        sender.send(WorkerTask::Drain).expect("receiver alive");
+        assert!(matches!(rx.recv(), Ok(WorkerTask::Drain)));
+        drop(rx);
+        let back = sender.send(WorkerTask::Shutdown);
+        assert!(matches!(back, Err(mpsc::SendError(WorkerTask::Shutdown))));
+    }
+}

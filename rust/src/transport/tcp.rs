@@ -1,0 +1,585 @@
+//! The TCP transport: one remote peer process per worker, speaking the
+//! framed wire codec over `std::net::TcpStream` (zero external deps).
+//!
+//! **Master side** ([`TcpTransport`]): the pool pre-binds a listener
+//! ([`TcpTransportConfig::bind_loopback`]) so peers know the address
+//! before the pool exists; [`crate::transport::Transport::attach_worker`]
+//! accepts the next pending connection, handshakes (`Hello` in,
+//! `Assign` out), grants a lease, injects `Joined`, and spawns a reader
+//! thread that forwards decoded `Block`/`Failed` frames onto the pool's
+//! event channel while renewing the lease on every frame. A lazily
+//! started sweeper thread expires silent leases; expiry, socket EOF and
+//! `Goodbye` all funnel through [`LeaseTable::remove`] so exactly one
+//! `Left` reaches the membership registry per departure.
+//!
+//! **Peer side** ([`serve_worker`]): connects, handshakes, then runs the
+//! ordinary [`crate::coordinator::worker::run`] loop on a local thread —
+//! tasks bridged in from the socket, events serialized back out through
+//! [`TcpEventSender`] — plus a heartbeat thread that keeps the lease
+//! alive through long local computations. Executor factories cannot
+//! cross the wire, so the peer resolves each job's factory from its
+//! [`FactoryRegistry`].
+//!
+//! Reader threads never trust the wire: frames are re-assembled from
+//! raw reads via [`codec::next_frame`] (a read-timeout can split a
+//! frame; `read_exact` would lose sync), and any decode error tears the
+//! connection down as a departure rather than panicking.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::channel::{JobId, WorkerEvent, WorkerTask};
+use crate::coordinator::membership::WorkerId;
+use crate::coordinator::worker::{self, WorkerContext};
+use crate::coordinator::PacingMode;
+use crate::runtime::ExecutorFactory;
+use crate::transport::codec::{self, Frame, WireTask};
+use crate::transport::lease::{LeaseTable, SystemClock};
+use crate::transport::{EventSender, TaskSender, Transport, WireSnapshot, WireStats, WorkerLane};
+use crate::util::buffers::BufferPool;
+use crate::{Error, Result};
+
+/// How long [`serve_worker`] keeps retrying its initial connect before
+/// giving up (the master may not be listening yet).
+const CONNECT_DEADLINE_MS: u64 = 10_000;
+const CONNECT_RETRY_MS: u64 = 100;
+
+/// Configuration for the master side of a TCP transport.
+///
+/// The listener is bound by the *caller* (tests, CLI) before the pool
+/// is built, so peers can be pointed at a concrete address first and
+/// queue in the accept backlog until the pool attaches them.
+#[derive(Clone)]
+pub struct TcpTransportConfig {
+    /// Pre-bound listening socket workers connect to.
+    pub listener: Arc<TcpListener>,
+    /// Silence after which a worker's lease expires and it is declared
+    /// gone (surfacing as `Left`).
+    pub lease_ttl_ms: u64,
+    /// Heartbeat interval assigned to peers, and the sweeper's period.
+    pub heartbeat_ms: u64,
+    /// How long `attach_worker` waits for the next peer to connect.
+    pub accept_timeout_ms: u64,
+}
+
+impl TcpTransportConfig {
+    /// Bind an OS-assigned loopback port with the default liveness
+    /// contract (1 s lease, 250 ms heartbeat, 10 s accept window).
+    pub fn bind_loopback() -> Result<TcpTransportConfig> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        Ok(TcpTransportConfig {
+            listener: Arc::new(listener),
+            lease_ttl_ms: 1000,
+            heartbeat_ms: 250,
+            accept_timeout_ms: 10_000,
+        })
+    }
+
+    /// The bound address peers should connect to.
+    pub fn addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+}
+
+/// Lock a shared socket writer, recovering from poisoning: a panicking
+/// writer leaves at worst a torn frame, which the receiver's decoder
+/// rejects by tearing the connection down — never corrupt local state.
+fn lock_writer(writer: &Mutex<TcpStream>) -> MutexGuard<'_, TcpStream> {
+    writer.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// State shared between one connection's reader thread, the sweeper and
+/// the transport itself.
+#[derive(Clone)]
+struct ReaderShared {
+    stop: Arc<AtomicBool>,
+    leases: LeaseTable,
+    event_tx: mpsc::Sender<WorkerEvent>,
+    wire_pool: BufferPool,
+    stats: WireStats,
+}
+
+/// Master side of the wire: accepts one peer per
+/// [`Transport::attach_worker`] call and turns its frames back into the
+/// same [`WorkerEvent`] stream in-process workers produce.
+pub struct TcpTransport {
+    cfg: TcpTransportConfig,
+    shared: ReaderShared,
+    pacing: PacingMode,
+    readers: Vec<JoinHandle<()>>,
+    sweeper: Option<JoinHandle<()>>,
+}
+
+impl TcpTransport {
+    /// A transport accepting peers on `cfg.listener`, forwarding their
+    /// events into `event_tx` and decoding block payloads into
+    /// `wire_pool` buffers.
+    pub fn new(
+        cfg: TcpTransportConfig,
+        event_tx: mpsc::Sender<WorkerEvent>,
+        pacing: PacingMode,
+        wire_pool: BufferPool,
+    ) -> Result<TcpTransport> {
+        // Non-blocking accepts let attach_worker enforce its own
+        // deadline instead of hanging forever on a missing peer.
+        cfg.listener.set_nonblocking(true)?;
+        let leases = LeaseTable::new(cfg.lease_ttl_ms, Arc::new(SystemClock::default()));
+        let shared = ReaderShared {
+            stop: Arc::new(AtomicBool::new(false)),
+            leases,
+            event_tx,
+            wire_pool,
+            stats: WireStats::default(),
+        };
+        Ok(TcpTransport { cfg, shared, pacing, readers: Vec::new(), sweeper: None })
+    }
+
+    /// Accept the next pending connection, waiting up to the configured
+    /// accept timeout.
+    fn accept_next(&self) -> Result<TcpStream> {
+        // lint: allow(determinism) — accept deadline is wall-clock by nature
+        let deadline = std::time::Instant::now()
+            + Duration::from_millis(self.cfg.accept_timeout_ms);
+        loop {
+            match self.cfg.listener.accept() {
+                Ok((stream, _addr)) => {
+                    // Accepted sockets may inherit the listener's
+                    // non-blocking mode on some platforms.
+                    stream.set_nonblocking(false)?;
+                    return Ok(stream);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    // lint: allow(determinism) — accept deadline is wall-clock by nature
+                    if std::time::Instant::now() >= deadline {
+                        return Err(Error::Runtime(format!(
+                            "tcp transport: no peer connected within {} ms",
+                            self.cfg.accept_timeout_ms
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(Error::Io(e)),
+            }
+        }
+    }
+
+    /// Handshake an accepted stream as worker `id`: expect `Hello`,
+    /// reply `Assign`.
+    fn handshake(&self, stream: &mut TcpStream, id: WorkerId) -> Result<()> {
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_millis(self.cfg.accept_timeout_ms)))?;
+        let body = codec::read_frame(stream, codec::MAX_FRAME)?;
+        self.shared.stats.frame_recv(body.len() + 4);
+        match codec::decode_frame(&body)? {
+            Frame::Hello => {}
+            _ => return Err(Error::Runtime("tcp transport: peer did not say Hello".into())),
+        }
+        let assign =
+            codec::frame_assign(id, self.cfg.lease_ttl_ms, self.cfg.heartbeat_ms, self.pacing);
+        stream.write_all(&assign)?;
+        self.shared.stats.frame_sent(assign.len());
+        Ok(())
+    }
+
+    /// Start the lease sweeper if it is not running yet.
+    fn ensure_sweeper(&mut self) -> Result<()> {
+        if self.sweeper.is_some() {
+            return Ok(());
+        }
+        let shared = self.shared.clone();
+        let ttl = self.cfg.lease_ttl_ms;
+        let period = self.cfg.heartbeat_ms.max(1);
+        let handle = std::thread::Builder::new()
+            .name("bcgc-lease-sweeper".into())
+            .spawn(move || sweeper_loop(shared, ttl, period))
+            .map_err(|e| Error::Runtime(format!("spawn sweeper: {e}")))?;
+        self.sweeper = Some(handle);
+        Ok(())
+    }
+}
+
+impl Transport for TcpTransport {
+    fn attach_worker(&mut self, id: WorkerId) -> Result<WorkerLane> {
+        self.ensure_sweeper()?;
+        let mut stream = self.accept_next()?;
+        self.handshake(&mut stream, id)?;
+        // Reader wake-up period: short enough to notice stop/expiry
+        // promptly, long enough to stay off the scheduler.
+        stream.set_read_timeout(Some(Duration::from_millis(self.cfg.heartbeat_ms.max(10))))?;
+        let writer = stream.try_clone().map_err(Error::Io)?;
+        writer.set_write_timeout(Some(Duration::from_millis(self.cfg.lease_ttl_ms.max(10))))?;
+        self.shared.leases.grant(id);
+        self.shared
+            .event_tx
+            .send(WorkerEvent::Joined { worker: id })
+            .map_err(|_| Error::Runtime("tcp transport: event channel closed".into()))?;
+        let shared = self.shared.clone();
+        let reader = std::thread::Builder::new()
+            .name(format!("bcgc-tcp-reader-{id}"))
+            .spawn(move || reader_loop(stream, id, shared))
+            .map_err(|e| Error::Runtime(format!("spawn reader: {e}")))?;
+        self.readers.push(reader);
+        let sender = TcpTaskSender {
+            writer: Arc::new(Mutex::new(writer)),
+            stats: self.shared.stats.clone(),
+        };
+        Ok(WorkerLane { tasks: TaskSender::Tcp(sender), handle: None })
+    }
+
+    fn wire_stats(&self) -> WireSnapshot {
+        self.shared.stats.snapshot()
+    }
+
+    fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        for r in self.readers.drain(..) {
+            let _ = r.join();
+        }
+        if let Some(s) = self.sweeper.take() {
+            let _ = s.join();
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Periodically expire silent leases; each expiry injects the one
+/// `Left` event (deduplicated against racing EOF readers via
+/// [`LeaseTable::remove`]) that drives the membership re-dimension
+/// path. Also counts heartbeat intervals a still-leased worker has gone
+/// silent for — an early-warning metric, not yet a failure.
+fn sweeper_loop(shared: ReaderShared, ttl_ms: u64, period_ms: u64) {
+    while !shared.stop.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(period_ms));
+        for w in shared.leases.leased() {
+            match shared.leases.silence_ms(w) {
+                Some(silence) if silence > ttl_ms => {
+                    if shared.leases.remove(w) {
+                        shared.stats.lease_expired();
+                        let _ = shared.event_tx.send(WorkerEvent::Left { worker: w });
+                    }
+                }
+                Some(silence) if silence > 2 * period_ms => shared.stats.heartbeat_missed(),
+                _ => {}
+            }
+        }
+    }
+}
+
+/// One connection's receive loop: re-assemble frames from raw reads,
+/// renew the lease on every frame, forward blocks and failures. Any
+/// EOF, I/O error, decode error or protocol violation ends the
+/// connection; the epilogue reports the departure unless the sweeper
+/// (or a Drain handshake) already removed the lease.
+fn reader_loop(mut stream: TcpStream, id: WorkerId, shared: ReaderShared) {
+    let mut pending: Vec<u8> = Vec::new();
+    'conn: loop {
+        if shared.stop.load(Ordering::Relaxed) || !shared.leases.held(id) {
+            // Shutdown, or the sweeper already declared this worker
+            // gone — nothing left to report.
+            return;
+        }
+        loop {
+            match codec::next_frame(&mut pending, codec::MAX_FRAME) {
+                Ok(Some(body)) => {
+                    shared.stats.frame_recv(body.len() + 4);
+                    if !handle_peer_frame(&body, id, &shared) {
+                        break 'conn;
+                    }
+                }
+                Ok(None) => break,
+                Err(_) => break 'conn,
+            }
+        }
+        let mut chunk = [0u8; 64 * 1024];
+        match stream.read(&mut chunk) {
+            Ok(0) => break 'conn,
+            Ok(n) => pending.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+            Err(_) => break 'conn,
+        }
+    }
+    if shared.leases.remove(id) {
+        let _ = shared.event_tx.send(WorkerEvent::Left { worker: id });
+    }
+}
+
+/// Dispatch one decoded peer frame; returns whether the connection
+/// stays up.
+fn handle_peer_frame(body: &[u8], id: WorkerId, shared: &ReaderShared) -> bool {
+    match codec::decode_frame_pooled(body, &shared.wire_pool) {
+        Ok(Frame::Block(c)) => {
+            shared.leases.touch(id);
+            if let Err(undelivered) = shared.event_tx.send(WorkerEvent::Block(c)) {
+                // Pool hung up mid-run; reclaim the decoded buffer.
+                if let WorkerEvent::Block(c) = undelivered.0 {
+                    shared.wire_pool.put(c.coded);
+                }
+                return false;
+            }
+            true
+        }
+        Ok(Frame::Failed { worker, job, iter, reason, fatal }) => {
+            shared.leases.touch(id);
+            shared
+                .event_tx
+                .send(WorkerEvent::Failed { worker, job, iter, reason, fatal })
+                .is_ok()
+        }
+        Ok(Frame::Heartbeat { .. }) => {
+            shared.leases.touch(id);
+            true
+        }
+        // Clean departure: the epilogue's lease-removal turns this into
+        // the one `Left` event.
+        Ok(Frame::Goodbye { .. }) => false,
+        // Master-direction frames from a peer are a protocol violation.
+        Ok(_) | Err(_) => false,
+    }
+}
+
+/// Master-side task path to one remote peer: each [`WorkerTask`] is
+/// serialized and written as one frame. A write failure hands the task
+/// back (mirroring `mpsc` semantics); liveness bookkeeping is the
+/// lease's job, not the send path's.
+#[derive(Clone)]
+pub struct TcpTaskSender {
+    writer: Arc<Mutex<TcpStream>>,
+    stats: WireStats,
+}
+
+impl TcpTaskSender {
+    pub fn send(&self, task: WorkerTask) -> std::result::Result<(), mpsc::SendError<WorkerTask>> {
+        let frame = codec::frame_task(&task);
+        let mut writer = lock_writer(&self.writer);
+        let ok = writer.write_all(&frame).is_ok();
+        drop(writer);
+        if !ok {
+            return Err(mpsc::SendError(task));
+        }
+        self.stats.frame_sent(frame.len());
+        Ok(())
+    }
+}
+
+/// Peer-side event path back to the master. `Joined` is swallowed (the
+/// handshake already announced it); a successfully shipped block's wire
+/// buffer is recycled into the peer's local pool — after the socket
+/// writer is released, per the lock order — and a failed send hands the
+/// event back so the worker loop's recovery path recycles it instead.
+#[derive(Clone)]
+pub struct TcpEventSender {
+    writer: Arc<Mutex<TcpStream>>,
+    wire_pool: BufferPool,
+    stats: WireStats,
+}
+
+impl TcpEventSender {
+    pub fn send(&self, ev: WorkerEvent) -> std::result::Result<(), mpsc::SendError<WorkerEvent>> {
+        let Some(frame) = codec::frame_event(&ev) else {
+            return Ok(());
+        };
+        let mut writer = lock_writer(&self.writer);
+        let ok = writer.write_all(&frame).is_ok();
+        drop(writer);
+        if !ok {
+            return Err(mpsc::SendError(ev));
+        }
+        self.stats.frame_sent(frame.len());
+        if let WorkerEvent::Block(c) = ev {
+            // The block is on the wire; its buffer is free again.
+            self.wire_pool.put(c.coded);
+        }
+        Ok(())
+    }
+}
+
+/// The peer's job-id → executor-factory table. Closures cannot cross
+/// the wire, so a peer registers (or constructs) factories for the jobs
+/// it serves before calling [`serve_worker`]; a `Compute` for an
+/// unknown job is answered with a transient `Failed` rather than a
+/// dead connection.
+#[derive(Clone, Default)]
+pub struct FactoryRegistry {
+    inner: Arc<Mutex<HashMap<JobId, ExecutorFactory>>>,
+}
+
+impl FactoryRegistry {
+    pub fn new() -> FactoryRegistry {
+        FactoryRegistry::default()
+    }
+
+    /// Register the factory used to build executors for `job`.
+    pub fn register(&self, job: JobId, factory: ExecutorFactory) {
+        self.lock_inner().insert(job, factory);
+    }
+
+    fn get(&self, job: JobId) -> Option<ExecutorFactory> {
+        self.lock_inner().get(&job).cloned()
+    }
+
+    /// Lock the table, recovering from poisoning (pure map of `Arc`d
+    /// closures; always structurally intact).
+    fn lock_inner(&self) -> MutexGuard<'_, HashMap<JobId, ExecutorFactory>> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+/// Connect to a master at `addr` and serve as one remote worker until
+/// told to stop. Blocks for the whole engagement; returns the peer's
+/// wire counters. Retries the initial connect for up to 10 s so peers
+/// can be launched before the master binds its accept loop into a pool.
+pub fn serve_worker(addr: impl ToSocketAddrs, registry: FactoryRegistry) -> Result<WireSnapshot> {
+    let mut stream = connect_with_retry(&addr)?;
+    stream.set_nodelay(true)?;
+    let stats = WireStats::default();
+
+    // Handshake: Hello out, Assign in.
+    let hello = codec::frame_hello();
+    stream.write_all(&hello)?;
+    stats.frame_sent(hello.len());
+    stream.set_read_timeout(Some(Duration::from_millis(CONNECT_DEADLINE_MS)))?;
+    let body = codec::read_frame(&mut stream, codec::MAX_FRAME)?;
+    stats.frame_recv(body.len() + 4);
+    let (worker_id, heartbeat_ms, pacing) = match codec::decode_frame(&body)? {
+        Frame::Assign { worker, heartbeat_ms, pacing, .. } => (worker, heartbeat_ms, pacing),
+        _ => return Err(Error::Runtime("serve_worker: expected Assign after Hello".into())),
+    };
+    stream.set_read_timeout(None)?;
+
+    let writer = stream.try_clone().map_err(Error::Io)?;
+    let writer = Arc::new(Mutex::new(writer));
+    let wire_pool = BufferPool::default();
+    let events = TcpEventSender {
+        writer: writer.clone(),
+        wire_pool: wire_pool.clone(),
+        stats: stats.clone(),
+    };
+
+    // Heartbeats keep the lease alive through long local computations.
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let writer = writer.clone();
+        let stats = stats.clone();
+        let stop = stop.clone();
+        let frame = codec::frame_heartbeat(worker_id);
+        let period = Duration::from_millis(heartbeat_ms.max(1));
+        std::thread::Builder::new()
+            .name(format!("bcgc-heartbeat-{worker_id}"))
+            .spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(period);
+                    let mut w = lock_writer(&writer);
+                    let ok = w.write_all(&frame).is_ok();
+                    drop(w);
+                    if !ok {
+                        return;
+                    }
+                    stats.frame_sent(frame.len());
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn heartbeat: {e}")))?
+    };
+
+    // The ordinary worker loop, fed from the socket through a local
+    // channel bridge.
+    let (task_tx, task_rx) = mpsc::channel();
+    let ctx = WorkerContext {
+        id: worker_id,
+        tasks: task_rx,
+        events: EventSender::Tcp(events.clone()),
+        pacing,
+        wire_pool,
+    };
+    let worker_thread = std::thread::Builder::new()
+        .name(format!("bcgc-peer-worker-{worker_id}"))
+        .spawn(move || worker::run(ctx))
+        .map_err(|e| Error::Runtime(format!("spawn worker: {e}")))?;
+
+    // Main loop: decode tasks, resolve factories, bridge to the worker.
+    loop {
+        let body = match codec::read_frame(&mut stream, codec::MAX_FRAME) {
+            Ok(b) => b,
+            Err(_) => break, // master gone or stream corrupt
+        };
+        stats.frame_recv(body.len() + 4);
+        match codec::decode_frame(&body) {
+            Ok(Frame::Task(WireTask::Compute {
+                job,
+                iter,
+                epoch,
+                row,
+                scheme,
+                shards,
+                theta,
+                cycle_time,
+                unit_work,
+            })) => {
+                let Some(factory) = registry.get(job) else {
+                    let _ = events.send(WorkerEvent::Failed {
+                        worker: worker_id,
+                        job,
+                        iter,
+                        reason: format!("peer has no executor factory for job {job}"),
+                        fatal: false,
+                    });
+                    continue;
+                };
+                let task = WorkerTask::Compute {
+                    job,
+                    iter,
+                    epoch,
+                    row,
+                    scheme,
+                    shards,
+                    theta,
+                    factory,
+                    cycle_time,
+                    unit_work,
+                };
+                if task_tx.send(task).is_err() {
+                    break;
+                }
+            }
+            Ok(Frame::Task(WireTask::Drain)) => {
+                // The worker acknowledges with Left → Goodbye and
+                // exits; nothing more will be asked of us.
+                let _ = task_tx.send(WorkerTask::Drain);
+                break;
+            }
+            Ok(Frame::Task(WireTask::Shutdown)) => {
+                let _ = task_tx.send(WorkerTask::Shutdown);
+                break;
+            }
+            Ok(_) | Err(_) => break, // protocol violation or garbage
+        }
+    }
+    drop(task_tx);
+    let _ = worker_thread.join();
+    stop.store(true, Ordering::Relaxed);
+    let _ = hb.join();
+    Ok(stats.snapshot())
+}
+
+fn connect_with_retry(addr: &impl ToSocketAddrs) -> Result<TcpStream> {
+    // lint: allow(determinism) — connect retry deadline is wall-clock by nature
+    let deadline = std::time::Instant::now() + Duration::from_millis(CONNECT_DEADLINE_MS);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            // lint: allow(determinism) — connect retry deadline is wall-clock by nature
+            Err(e) if std::time::Instant::now() >= deadline => return Err(Error::Io(e)),
+            Err(_) => std::thread::sleep(Duration::from_millis(CONNECT_RETRY_MS)),
+        }
+    }
+}

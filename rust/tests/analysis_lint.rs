@@ -63,6 +63,15 @@ fn panic_hygiene_flags_unwrap_in_coordinator() {
 }
 
 #[test]
+fn panic_hygiene_covers_the_transport_layer() {
+    // PR 9: the transport is the other side of the worker boundary —
+    // the same no-panic contract applies to its non-test code.
+    let src = "pub fn peer(v: &[u32]) -> u32 {\n    *v.first().unwrap()\n}\n";
+    let f = lint_source("rust/src/transport/tcp.rs", src);
+    assert_eq!(lines(&f, Rule::PanicHygiene), [2]);
+}
+
+#[test]
 fn panic_hygiene_accepts_recovering_forms_and_allows() {
     let clean = "pub fn pick(v: &[u32]) -> u32 {\n    v.first().copied().unwrap_or_else(|| 0)\n}\n";
     assert_eq!(count(&lint_source("rust/src/coordinator/h.rs", clean), Rule::PanicHygiene), 0);
@@ -198,6 +207,30 @@ fn lock_order_allow_is_honored_with_reason() {
     assert_eq!(count(&f, Rule::LockOrder), 0, "findings: {f:?}");
 }
 
+/// PR 9's send-path contract: recycling a wire buffer into the pool
+/// while the socket-writer guard is still live is an inversion (writer
+/// outranks buffer-pool); dropping the guard first is the clean form
+/// `transport::tcp` actually uses.
+#[test]
+fn lock_order_writer_must_release_before_pool_recycle() {
+    let bad = "impl S {\n    fn send(&self) {\n        let w = self.writer.lock().unwrap();\n        let p = self.wire_pool.lock().unwrap();\n        drop(p);\n        drop(w);\n    }\n}\n";
+    let f = lint_source("rust/src/transport/tcp.rs", bad);
+    assert_eq!(lines(&f, Rule::LockOrder), [4], "findings: {f:?}");
+    let good = "impl S {\n    fn send(&self) {\n        let w = self.writer.lock().unwrap();\n        drop(w);\n        let p = self.wire_pool.lock().unwrap();\n        drop(p);\n    }\n}\n";
+    assert_eq!(count(&lint_source("rust/src/transport/tcp.rs", good), Rule::LockOrder), 0);
+}
+
+/// The lease table sits between the observation store and the
+/// buffer pool: store → lease nests cleanly, lease → store inverts.
+#[test]
+fn lock_order_ranks_the_lease_table() {
+    let good = "impl T {\n    fn sweep(&self) {\n        let s = self.store.lock().unwrap();\n        let l = self.leases.lock().unwrap();\n        drop(l);\n        drop(s);\n    }\n}\n";
+    assert_eq!(count(&lint_source("rust/src/transport/lease.rs", good), Rule::LockOrder), 0);
+    let bad = "impl T {\n    fn sweep(&self) {\n        let l = self.leases.lock().unwrap();\n        let s = self.store.lock().unwrap();\n        drop(s);\n        drop(l);\n    }\n}\n";
+    let f = lint_source("rust/src/transport/lease.rs", bad);
+    assert_eq!(lines(&f, Rule::LockOrder), [4], "findings: {f:?}");
+}
+
 // ---------------------------------------------------------------------------
 // bench_stamping
 // ---------------------------------------------------------------------------
@@ -225,7 +258,7 @@ fn bench_stamping_requires_stamp_bench_meta() {
 fn full_tree_is_clean() {
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     let report = lint_tree(root).expect("tree walk failed");
-    assert!(report.files >= 40, "walked only {} files — wrong root?", report.files);
+    assert!(report.files >= 44, "walked only {} files — wrong root?", report.files);
     let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
     assert!(report.findings.is_empty(), "bcgc-lint findings:\n{}", rendered.join("\n"));
 }

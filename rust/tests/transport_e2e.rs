@@ -1,0 +1,293 @@
+//! End-to-end exercises of the transport boundary (PR 9).
+//!
+//! The in-process transport must reproduce the classic channel path
+//! bit-for-bit, and — under `--features tcp` — the same training run
+//! over real loopback sockets must (a) match the in-process run
+//! bit-for-bit on a serialized `s = 0` schedule, (b) converge with
+//! redundancy while decoding exactly every iteration, and (c) surface
+//! peer failures detected by the heartbeat/lease layer as the same
+//! `Left` → membership re-dimension path a clean drain takes, with no
+//! hang. Wire-level counters land in `TrainReport::wire`.
+
+use bcgc::coordinator::metrics::TrainReport;
+use bcgc::coordinator::straggler::StragglerSchedule;
+use bcgc::coordinator::trainer::{train, TrainConfig};
+use bcgc::data::synthetic;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::runtime::host::{HostExecutor, HostModel};
+use bcgc::runtime::{host_factory, ExecutorFactory};
+use bcgc::testing::suite_seed;
+use bcgc::transport::WireSnapshot;
+
+/// A small MLP job dimensioned for `n` workers with every block at
+/// redundancy level `s` (`s = 0`: every block needs every live row, so
+/// decode order is canonical and runs are bit-comparable).
+fn setup(n: usize, s: usize, steps: usize, seed: u64) -> (TrainConfig, ExecutorFactory) {
+    let ds = synthetic::classification(8, 4, 16 * n, n, 0.2, seed).unwrap();
+    let dim = HostExecutor::mlp_dim(8, 16, 4);
+    let factory = host_factory(ds, HostModel::Mlp { hidden: 16 });
+    let spec = ProblemSpec::new(n, dim, 16 * n, 1.0);
+    let mut cfg = TrainConfig::new(spec, BlockPartition::single_level(n, s, dim));
+    cfg.steps = steps;
+    cfg.lr = 2e-3;
+    cfg.eval_every = 5;
+    cfg.seed = seed;
+    (cfg, factory)
+}
+
+fn schedule() -> StragglerSchedule {
+    StragglerSchedule::stationary(Box::new(ShiftedExponential::new(1e-3, 50.0)))
+}
+
+/// Everything numeric an iteration produced, as bits — wall-clock
+/// metrics excluded, they are the one legitimately nondeterministic
+/// column.
+fn fingerprint(report: &TrainReport) -> Vec<(usize, usize, usize, usize, u64, u64)> {
+    report
+        .iters
+        .iter()
+        .map(|m| {
+            (
+                m.iter,
+                m.epoch,
+                m.workers,
+                m.blocks_decoded,
+                m.grad_norm.to_bits(),
+                m.virtual_runtime.to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn inproc_transport_is_bit_for_bit_deterministic_on_a_serialized_run() {
+    let seed = suite_seed(31);
+    let (cfg_a, f_a) = setup(4, 0, 20, seed);
+    let (cfg_b, f_b) = setup(4, 0, 20, seed);
+    let a = train(cfg_a, schedule(), f_a).unwrap();
+    let b = train(cfg_b, schedule(), f_b).unwrap();
+
+    assert_eq!(a.steps(), 20);
+    assert_eq!(fingerprint(&a), fingerprint(&b));
+    assert_eq!(a.loss_curve, b.loss_curve);
+    // No wire: the in-process transport reports all-zero counters.
+    assert_eq!(a.wire, WireSnapshot::default());
+}
+
+#[cfg(feature = "tcp")]
+mod tcp {
+    use std::io::Write;
+    use std::net::{SocketAddr, TcpStream};
+    use std::sync::mpsc;
+    use std::thread;
+    use std::time::Duration;
+
+    use bcgc::coordinator::metrics::MembershipEvent;
+    use bcgc::coordinator::trainer::{train, ElasticConfig, TrainSession};
+    use bcgc::transport::codec::{frame_hello, read_frame, MAX_FRAME};
+    use bcgc::transport::tcp::{serve_worker, FactoryRegistry, TcpTransportConfig};
+    use bcgc::transport::{TransportConfig, WireSnapshot};
+
+    use super::*;
+
+    /// Spawn `count` real worker peers serving the single trainer job
+    /// (job id 0) over loopback TCP.
+    fn spawn_peers(
+        addr: SocketAddr,
+        factory: &ExecutorFactory,
+        count: usize,
+    ) -> Vec<thread::JoinHandle<WireSnapshot>> {
+        (0..count)
+            .map(|_| {
+                let registry = FactoryRegistry::new();
+                registry.register(0, factory.clone());
+                thread::spawn(move || serve_worker(addr, registry).expect("peer run"))
+            })
+            .collect()
+    }
+
+    /// Handshakes like a real peer, then goes silent — no heartbeats,
+    /// no blocks — while holding the socket open, until the returned
+    /// sender is dropped. The lease sweeper must declare it gone.
+    fn spawn_silent_peer(addr: SocketAddr) -> mpsc::Sender<()> {
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            stream.write_all(&frame_hello()).expect("hello");
+            let _assign = read_frame(&mut stream, MAX_FRAME).expect("assign");
+            let _ = release_rx.recv_timeout(Duration::from_secs(60));
+        });
+        release_tx
+    }
+
+    /// Handshakes, then disconnects outright: the reader's EOF must
+    /// surface as an immediate `Left` without waiting out the lease.
+    fn spawn_eof_peer(addr: SocketAddr) -> thread::JoinHandle<()> {
+        thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            stream.write_all(&frame_hello()).expect("hello");
+            let _assign = read_frame(&mut stream, MAX_FRAME).expect("assign");
+        })
+    }
+
+    #[test]
+    fn loopback_training_matches_the_inproc_run_bit_for_bit() {
+        let seed = suite_seed(37);
+        let n = 4;
+        let (cfg, f) = setup(n, 0, 18, seed);
+        let reference = train(cfg, schedule(), f).unwrap();
+
+        let (mut cfg, f) = setup(n, 0, 18, seed);
+        let tcp = TcpTransportConfig::bind_loopback().unwrap();
+        let addr = tcp.addr().unwrap();
+        cfg.transport = TransportConfig::Tcp(tcp);
+        let peers = spawn_peers(addr, &f, n);
+        let report = train(cfg, schedule(), f).unwrap();
+        for p in peers {
+            p.join().expect("peer thread");
+        }
+
+        // Real sockets, identical numerics: every gradient, virtual
+        // runtime and loss matches the in-process run bit-for-bit.
+        assert_eq!(fingerprint(&reference), fingerprint(&report));
+        assert_eq!(reference.loss_curve, report.loss_curve);
+
+        let w = report.wire;
+        assert!(w.frames_sent > 0 && w.bytes_sent > 0, "{w:?}");
+        assert!(w.frames_recv > 0 && w.bytes_recv > 0, "{w:?}");
+        assert_eq!(w.leases_expired, 0, "{w:?}");
+        assert_eq!(report.failed_workers, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn loopback_training_with_redundancy_converges() {
+        let seed = suite_seed(41);
+        let n = 5;
+        let (mut cfg, f) = setup(n, 1, 40, seed);
+        let tcp = TcpTransportConfig::bind_loopback().unwrap();
+        let addr = tcp.addr().unwrap();
+        cfg.transport = TransportConfig::Tcp(tcp);
+        let peers = spawn_peers(addr, &f, n);
+        let report = train(cfg, schedule(), f).unwrap();
+        for p in peers {
+            p.join().expect("peer thread");
+        }
+
+        // s = 1: each block decodes exactly from its first N − 1
+        // arrivals, whatever order the sockets deliver them in.
+        assert_eq!(report.steps(), 40);
+        assert!(report.iters.iter().all(|m| m.blocks_decoded >= 1 && m.grad_norm.is_finite()));
+        let first = report.first_loss().unwrap();
+        let last = report.final_loss().unwrap();
+        assert!(last < first, "loss {first} -> {last}");
+        assert!(report.failed_workers.is_empty());
+    }
+
+    #[test]
+    fn an_expired_lease_surfaces_as_a_leave_and_redimensions_the_pool() {
+        let seed = suite_seed(43);
+        let n = 4;
+        let (mut cfg, f) = setup(n, 1, 40, seed);
+        cfg.elastic =
+            Some(ElasticConfig { churn_threshold: 1, departures: vec![], arrivals: vec![] });
+        let mut tcp = TcpTransportConfig::bind_loopback().unwrap();
+        tcp.lease_ttl_ms = 300;
+        tcp.heartbeat_ms = 50;
+        let addr = tcp.addr().unwrap();
+        cfg.transport = TransportConfig::Tcp(tcp);
+
+        let peers = spawn_peers(addr, &f, n - 1);
+        let release = spawn_silent_peer(addr);
+
+        let mut session = TrainSession::start(cfg, schedule(), f).unwrap();
+        // The silent peer contributes nothing; s = 1 absorbs it like a
+        // fatal straggler while its lease runs down.
+        for iter in 0..5 {
+            session.step(iter).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(700));
+
+        // The sweeper's `Left` lands in the event queue; the next
+        // collect consumes it and the re-dimension path fires.
+        let mut swapped_at = None;
+        for iter in 5..40 {
+            if session.maybe_redimension(iter).unwrap() {
+                swapped_at = Some(iter);
+                break;
+            }
+            session.step(iter).unwrap();
+        }
+        let swapped_at = swapped_at.expect("lease expiry never re-dimensioned the pool");
+        assert_eq!(session.registry().n(), n - 1);
+        for iter in swapped_at..swapped_at + 3 {
+            session.step(iter).unwrap();
+        }
+        let report = session.finish().unwrap();
+        drop(release);
+        for p in peers {
+            p.join().expect("peer thread");
+        }
+
+        assert!(report.wire.leases_expired >= 1, "{:?}", report.wire);
+        let leaves = report
+            .membership
+            .iter()
+            .filter(|m| matches!(m.event, MembershipEvent::Leave { .. }))
+            .count();
+        assert_eq!(leaves, 1);
+        let redims: Vec<(usize, usize)> = report
+            .membership
+            .iter()
+            .filter_map(|m| match m.event {
+                MembershipEvent::Redimension { from_n, to_n, .. } => Some((from_n, to_n)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(redims, vec![(n, n - 1)]);
+        assert!(report.iters.iter().all(|m| m.grad_norm.is_finite()));
+        assert_eq!(report.iters.last().unwrap().workers, n - 1);
+    }
+
+    #[test]
+    fn a_peer_that_disconnects_is_counted_out_immediately() {
+        let seed = suite_seed(47);
+        let n = 4;
+        let (mut cfg, f) = setup(n, 1, 25, seed);
+        cfg.elastic =
+            Some(ElasticConfig { churn_threshold: 1, departures: vec![], arrivals: vec![] });
+        // Default (long) lease TTL: only the EOF path can explain a
+        // prompt Leave here.
+        let tcp = TcpTransportConfig::bind_loopback().unwrap();
+        let addr = tcp.addr().unwrap();
+        cfg.transport = TransportConfig::Tcp(tcp);
+
+        let peers = spawn_peers(addr, &f, n - 1);
+        let eof = spawn_eof_peer(addr);
+        let report = train(cfg, schedule(), f).unwrap();
+        eof.join().expect("eof peer");
+        for p in peers {
+            p.join().expect("peer thread");
+        }
+
+        assert_eq!(report.steps(), 25);
+        assert!(report.iters.iter().all(|m| m.grad_norm.is_finite()));
+        let leaves = report
+            .membership
+            .iter()
+            .filter(|m| matches!(m.event, MembershipEvent::Leave { .. }))
+            .count();
+        assert_eq!(leaves, 1);
+        let redims: Vec<(usize, usize)> = report
+            .membership
+            .iter()
+            .filter_map(|m| match m.event {
+                MembershipEvent::Redimension { from_n, to_n, .. } => Some((from_n, to_n)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(redims, vec![(n, n - 1)]);
+        assert_eq!(report.iters.last().unwrap().workers, n - 1);
+    }
+}

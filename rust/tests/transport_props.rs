@@ -1,0 +1,324 @@
+//! Property tests for the transport wire codec (`bcgc::transport::codec`):
+//! every frame kind round-trips bit-exactly across randomized payloads
+//! (including zero-length, single-element and ragged coded blocks, and
+//! adversarial f32/f64 bit patterns), truncated and garbage frames error
+//! instead of panicking, and the incremental stream parser reassembles
+//! frame sequences across arbitrary chunk boundaries.
+//!
+//! All properties run under [`bcgc::testing::Runner`], so
+//! `BCGC_PROP_SEED` / `BCGC_PROP_CASES` replay and widen them exactly
+//! like the coding/kernel property suites.
+
+use std::sync::Arc;
+
+use bcgc::coding::scheme::CodingScheme;
+use bcgc::coordinator::channel::{BlockContribution, WorkerTask};
+use bcgc::coordinator::PacingMode;
+use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::testing::{gens, Runner};
+use bcgc::transport::codec::{
+    decode_frame, frame_assign, frame_block, frame_failed, frame_goodbye, frame_heartbeat,
+    frame_hello, frame_task, next_frame, read_frame, Frame, WireTask, MAX_FRAME,
+};
+use bcgc::util::rng::Rng;
+use bcgc::Error;
+
+/// An f32 drawn from the full bit space plus the named troublemakers —
+/// round-trips are compared on bits, so NaN payloads and signed zeros
+/// must survive too.
+fn rand_f32(rng: &mut Rng) -> f32 {
+    match rng.below(8) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f32::INFINITY,
+        3 => f32::NEG_INFINITY,
+        4 => f32::NAN,
+        5 => f32::MIN_POSITIVE / 2.0, // subnormal
+        _ => f32::from_bits(rng.next_u64() as u32),
+    }
+}
+
+/// A contribution with adversarial payload lengths: empty, one element,
+/// or a ragged mid-size buffer.
+fn rand_block(rng: &mut Rng) -> BlockContribution {
+    let len = match rng.below(4) {
+        0 => 0,
+        1 => 1,
+        _ => gens::usize_in(rng, 2, 300),
+    };
+    BlockContribution {
+        job: rng.below(1 << 20) as usize,
+        iter: rng.below(1 << 20) as usize,
+        epoch: rng.below(1 << 10) as usize,
+        worker: rng.below(1 << 16) as usize,
+        row: rng.below(1 << 16) as usize,
+        block_idx: rng.below(1 << 10) as usize,
+        virtual_time: f64::from_bits(rng.next_u64()),
+        coded: (0..len).map(|_| rand_f32(rng)).collect(),
+    }
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn block_frames_roundtrip_bit_exactly() {
+    Runner::default().run("block-roundtrip", |rng| {
+        let c = rand_block(rng);
+        let frame = frame_block(&c);
+        let body =
+            read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
+        let Frame::Block(got) = decode_frame(&body).map_err(|e| format!("decode: {e}"))? else {
+            return Err("decoded to a different frame kind".into());
+        };
+        if (got.job, got.iter, got.epoch, got.worker, got.row, got.block_idx)
+            != (c.job, c.iter, c.epoch, c.worker, c.row, c.block_idx)
+        {
+            return Err("header fields drifted".into());
+        }
+        if got.virtual_time.to_bits() != c.virtual_time.to_bits() {
+            return Err("virtual_time drifted".into());
+        }
+        if bits32(&got.coded) != bits32(&c.coded) {
+            return Err(format!("payload drifted at len {}", c.coded.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn control_frames_roundtrip() {
+    Runner::default().run("control-roundtrip", |rng| {
+        // Hello carries nothing but must still round-trip.
+        let body = read_frame(&mut frame_hello().as_slice(), MAX_FRAME)
+            .map_err(|e| format!("read: {e}"))?;
+        if !matches!(decode_frame(&body).map_err(|e| format!("decode: {e}"))?, Frame::Hello) {
+            return Err("hello did not round-trip".into());
+        }
+
+        // Assign: identity plus the liveness contract plus pacing.
+        let worker = rng.below(1 << 32) as usize;
+        let (ttl, hb) = (rng.next_u64(), rng.next_u64());
+        let pacing = if rng.below(2) == 0 {
+            PacingMode::Virtual
+        } else {
+            PacingMode::RealScaled { ns_per_unit: rng.uniform_range(0.0, 1e9) }
+        };
+        let frame = frame_assign(worker, ttl, hb, pacing);
+        let body =
+            read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
+        match decode_frame(&body).map_err(|e| format!("decode: {e}"))? {
+            Frame::Assign { worker: w, lease_ttl_ms, heartbeat_ms, pacing: p } => {
+                if (w, lease_ttl_ms, heartbeat_ms) != (worker, ttl, hb) || p != pacing {
+                    return Err("assign fields drifted".into());
+                }
+            }
+            _ => return Err("assign decoded to a different frame kind".into()),
+        }
+
+        // Heartbeat / Goodbye: bare worker ids.
+        for (frame, goodbye) in [(frame_heartbeat(worker), false), (frame_goodbye(worker), true)] {
+            let body =
+                read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
+            match (decode_frame(&body).map_err(|e| format!("decode: {e}"))?, goodbye) {
+                (Frame::Heartbeat { worker: w }, false) | (Frame::Goodbye { worker: w }, true) => {
+                    if w != worker {
+                        return Err("worker id drifted".into());
+                    }
+                }
+                _ => return Err("liveness frame decoded to a different kind".into()),
+            }
+        }
+
+        // Failed: arbitrary (possibly empty, possibly non-ASCII) reason.
+        let reason = match rng.below(3) {
+            0 => String::new(),
+            1 => "exécuteur mort — ¯\\_(ツ)_/¯".to_string(),
+            _ => (0..gens::usize_in(rng, 1, 40))
+                .map(|_| char::from(32 + (rng.below(95) as u8)))
+                .collect(),
+        };
+        let job = rng.below(1 << 20) as usize;
+        let iter = rng.below(1 << 20) as usize;
+        let fatal = rng.below(2) == 1;
+        let frame = frame_failed(worker, job, iter, &reason, fatal);
+        let body =
+            read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
+        match decode_frame(&body).map_err(|e| format!("decode: {e}"))? {
+            Frame::Failed { worker: w, job: j, iter: i, reason: r, fatal: f } => {
+                if (w, j, i, f) != (worker, job, iter, fatal) || r != reason {
+                    return Err("failed fields drifted".into());
+                }
+            }
+            _ => return Err("failed decoded to a different frame kind".into()),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn compute_tasks_roundtrip_everything_but_the_factory() {
+    // Schemes are expensive to generate; fewer cases keep the suite
+    // quick while still sweeping ragged partitions (zero-size levels
+    // included) and adversarial float payloads.
+    let runner = Runner::default();
+    Runner::new(runner.cases.clamp(1, 40), runner.seed).run("task-roundtrip", |rng| {
+        let n = gens::usize_in(rng, 3, 5);
+        let mut sizes = vec![0usize; n];
+        for s in sizes.iter_mut() {
+            *s = gens::usize_in(rng, 0, 6);
+        }
+        if sizes.iter().sum::<usize>() == 0 {
+            sizes[0] = 1;
+        }
+        let scheme = Arc::new(
+            CodingScheme::new(BlockPartition::new(sizes), rng).map_err(|e| e.to_string())?,
+        );
+        let theta: Vec<f32> = (0..gens::usize_in(rng, 0, 50)).map(|_| rand_f32(rng)).collect();
+        let shards: Vec<Vec<usize>> = (0..n)
+            .map(|_| (0..rng.below(4)).map(|_| rng.below(64) as usize).collect())
+            .collect();
+        let job = rng.below(1 << 10) as usize;
+        let iter = rng.below(1 << 20) as usize;
+        let epoch = rng.below(1 << 10) as usize;
+        let row = rng.below(n as u64) as usize;
+        let cycle_time = rng.uniform_range(1e-6, 1e3);
+        let unit_work = rng.uniform_range(1e-6, 1e3);
+        let task = WorkerTask::Compute {
+            job,
+            iter,
+            epoch,
+            row,
+            scheme: scheme.clone(),
+            shards: Arc::new(shards.clone()),
+            theta: Arc::new(theta.clone()),
+            factory: Arc::new(|_| Err(Error::Runtime("factories never cross the wire".into()))),
+            cycle_time,
+            unit_work,
+        };
+
+        let frame = frame_task(&task);
+        let body =
+            read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
+        let Frame::Task(WireTask::Compute {
+            job: gj,
+            iter: gi,
+            epoch: ge,
+            row: gr,
+            scheme: gs,
+            shards: gsh,
+            theta: gt,
+            cycle_time: gc,
+            unit_work: gu,
+        }) = decode_frame(&body).map_err(|e| format!("decode: {e}"))?
+        else {
+            return Err("compute decoded to a different frame kind".into());
+        };
+        if (gj, gi, ge, gr) != (job, iter, epoch, row) {
+            return Err("task header drifted".into());
+        }
+        if gc.to_bits() != cycle_time.to_bits() || gu.to_bits() != unit_work.to_bits() {
+            return Err("task timing fields drifted".into());
+        }
+        if bits32(&gt) != bits32(&theta) {
+            return Err("theta drifted".into());
+        }
+        if *gsh != shards {
+            return Err("shard map drifted".into());
+        }
+        if gs.n() != scheme.n() || gs.blocks().sizes() != scheme.blocks().sizes() {
+            return Err("scheme shape drifted".into());
+        }
+        for r in scheme.ranges() {
+            if gs.code(r.s).b.data() != scheme.code(r.s).b.data()
+                || gs.code(r.s).supports != scheme.code(r.s).supports
+            {
+                return Err(format!("code for level s={} drifted", r.s));
+            }
+        }
+
+        // Drain / Shutdown round-trip as bare tags.
+        for (task, want_drain) in [(WorkerTask::Drain, true), (WorkerTask::Shutdown, false)] {
+            let frame = frame_task(&task);
+            let body =
+                read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
+            let ok = match decode_frame(&body).map_err(|e| format!("decode: {e}"))? {
+                Frame::Task(WireTask::Drain) => want_drain,
+                Frame::Task(WireTask::Shutdown) => !want_drain,
+                _ => false,
+            };
+            if !ok {
+                return Err("control task decoded to a different kind".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_and_garbage_frames_error_not_panic() {
+    Runner::default().run("fuzz-robustness", |rng| {
+        // Every strict prefix of a well-formed body must error.
+        let frame = frame_block(&rand_block(rng));
+        let body = &frame[4..];
+        for cut in 0..body.len() {
+            if decode_frame(&body[..cut]).is_ok() {
+                return Err(format!("truncated body ({cut} of {}) decoded", body.len()));
+            }
+        }
+        // Random bytes through the stream parser: may reject, may wait
+        // for more input, may even parse — but never panics and never
+        // grows the pending buffer on its own.
+        let len = gens::usize_in(rng, 0, 64);
+        let mut garbage: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let before = garbage.len();
+        match next_frame(&mut garbage, MAX_FRAME) {
+            Ok(Some(b)) => {
+                let _ = decode_frame(&b);
+            }
+            Ok(None) | Err(_) => {}
+        }
+        if garbage.len() > before {
+            return Err("parser grew the pending buffer".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stream_parser_reassembles_frames_across_arbitrary_chunking() {
+    Runner::default().run("chunked-reassembly", |rng| {
+        let k = gens::usize_in(rng, 1, 6);
+        let frames: Vec<Vec<u8>> = (0..k)
+            .map(|_| match rng.below(4) {
+                0 => frame_hello(),
+                1 => frame_heartbeat(rng.below(1 << 16) as usize),
+                2 => frame_goodbye(rng.below(1 << 16) as usize),
+                _ => frame_block(&rand_block(rng)),
+            })
+            .collect();
+        let stream: Vec<u8> = frames.iter().flatten().copied().collect();
+
+        let mut pending: Vec<u8> = Vec::new();
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        let mut i = 0;
+        while i < stream.len() {
+            let step = gens::usize_in(rng, 1, 17).min(stream.len() - i);
+            pending.extend_from_slice(&stream[i..i + step]);
+            i += step;
+            while let Some(body) = next_frame(&mut pending, MAX_FRAME).map_err(|e| e.to_string())?
+            {
+                got.push(body);
+            }
+        }
+        let want: Vec<Vec<u8>> = frames.iter().map(|f| f[4..].to_vec()).collect();
+        if got != want {
+            return Err(format!("reassembled {} frames, wanted {}", got.len(), want.len()));
+        }
+        if !pending.is_empty() {
+            return Err("bytes left over after the last frame".into());
+        }
+        Ok(())
+    });
+}
