@@ -1,0 +1,93 @@
+//! Sample-granular loads + rotated partial-sum streaming on a 2-speed
+//! fleet — the perf-trajectory bench behind `BENCH_partial.json`.
+//!
+//! Scenario: N = 10 workers (5 fast + 5 slow, 2.5×), L = 10³
+//! coordinates, M = 7000 samples, single-level s = 1 partition. The
+//! speed ratio 2.5:1 is deliberately NOT representable at the
+//! simulator's shard granularity (the fast quota is 5.71 of 40 virtual
+//! shards), while 7000 samples split exactly 1000/400 per row. Three
+//! arms on one CRN cycle-time stream:
+//!
+//! 1. **shard-quantized** — speed-weighted loads rounded to whole
+//!    virtual shards (the PR 9 state of the art): fast rows run ~5%
+//!    heavy, so the quorum barrier waits on them;
+//! 2. **continuous** — the same oracle weights apportioned over
+//!    individual samples (`redistribute_samples_weighted`): quota
+//!    error under one sample, expected per-row finish times equalized;
+//! 3. **streaming** — continuous loads *plus* 4-part rotated
+//!    partial-sum streaming: a straggler's early strides fill part
+//!    quorums the whole-block protocol would have waited its full
+//!    round for.
+//!
+//! Headline: `continuous_gain_pct` AND `streaming_gain_pct` must both
+//! be strictly positive — each refinement beats the previous arm on
+//! mean iteration makespan. The JSON artifact tracks both across PRs.
+//!
+//! Run: `cargo bench --bench partial_stragglers` (set `BENCH_OUT` to
+//! move the artifact; defaults to ./BENCH_partial.json).
+
+use bcgc::bench_harness::{banner, stamp_bench_meta};
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::sim::{compare_partial_streaming, MultiSimConfig};
+
+fn main() {
+    banner(
+        "Partial stragglers — sample-granular loads + rotated partial-sum streaming",
+        "N=10 (5 fast + 5 slow, 2.5×), L=1e3, M=7000, s=1, 4 parts; 600 iters; CRN across arms.",
+    );
+    let (n, n_slow, slow_factor) = (10usize, 5usize, 2.5f64);
+    let (coords, samples, parts) = (1_000usize, 7_000usize, 4usize);
+    let (iters, seed) = (600usize, 2021u64);
+    let spec = ProblemSpec::paper_default(n, coords);
+    let fast = ShiftedExponential::new(1e-3, 50.0); // mean 1050
+    let blocks = BlockPartition::single_level(n, 1, coords);
+    let cfg = MultiSimConfig { iters, seed, comm_latency: 0.0 };
+    let cmp = compare_partial_streaming(
+        &spec,
+        &blocks,
+        &fast,
+        n_slow,
+        slow_factor,
+        samples,
+        parts,
+        &cfg,
+    )
+    .expect("comparison runs");
+    println!("fleet: {}\n", cmp.fleet_label);
+
+    print!("{}", cmp.render_report());
+
+    // Headline guarantees the artifact tracks a real effect.
+    let (q, c, s) = (cmp.quantized_mean(), cmp.continuous_mean(), cmp.streaming_mean());
+    assert!(
+        c < q,
+        "sample-granular apportionment ({c:.1}) must strictly beat shard-quantized \
+         loads ({q:.1}) when the speed ratio is not a multiple of 1/m"
+    );
+    assert!(
+        s < c,
+        "rotated {parts}-part streaming ({s:.1}) must strictly beat the whole-block \
+         continuous arm ({c:.1})"
+    );
+    // The continuous arm's apportionment is exact on this fleet.
+    assert_eq!(
+        cmp.sample_counts,
+        vec![1000, 1000, 1000, 1000, 1000, 400, 400, 400, 400, 400],
+        "2.5:1 weights over 7000 samples must split exactly"
+    );
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_partial.json".into());
+    let stamped = stamp_bench_meta(
+        &cmp.render_json(),
+        seed,
+        &format!(
+            "N={n} L={coords} M={samples} parts={parts} iters={iters} \
+             fleet=2speed({}fast+{n_slow}slow,{slow_factor}x)",
+            n - n_slow
+        ),
+    );
+    std::fs::write(&out, stamped).expect("write bench artifact");
+    println!("wrote {out}");
+}

@@ -276,12 +276,20 @@ pub fn bench_stamping(model: &SourceModel, allows: &Allows, out: &mut Vec<Findin
 /// Counter → witness token that must appear in any function writing
 /// it. The witnesses are the operations that keep the PR-7 ledger
 /// identity `approx_decodes == approx_reconciled + approx_discarded`
-/// (and the drop counter fed by drained arrivals) self-consistent.
-const LEDGER_PAIRS: [(&str, &str); 4] = [
+/// (and the drop counter fed by drained arrivals) self-consistent,
+/// plus the PR-10 streamed-part ledger: an accepted part is witnessed
+/// by its buffered arrival, a part-wise block completion by the drain
+/// of its redundant whole arrivals, and the run-level
+/// `partial_decodes` accumulator may only move by the per-iteration
+/// outcome's own `partial_blocks` count.
+const LEDGER_PAIRS: [(&str, &str); 7] = [
     ("approx_decodes", "take_outcome"),
     ("approx_reconciled", "take_reconciled"),
     ("approx_discarded", "discard_pending"),
     ("discarded", ".drain("),
+    ("partial_contributions", "part_arrivals"),
+    ("partial_blocks", ".drain("),
+    ("partial_decodes", ".partial_blocks"),
 ];
 
 /// Approx-ledger counters may only be written in functions that also
@@ -388,9 +396,12 @@ pub fn buffer_ownership(model: &SourceModel, allows: &Allows, out: &mut Vec<Find
         }
         // (b) By-value contribution owners that count drops must
         // recycle. By-ref observers (`&BlockContribution`) are exempt:
-        // ownership stayed with their caller.
+        // ownership stayed with their caller. Streamed-part payloads
+        // (PR 10) carry their pooled buffer exactly like whole blocks.
         let owns = f.signature.contains(": BlockContribution")
-            || contains_range(code, a, b, "WorkerEvent::Block(");
+            || f.signature.contains(": PartialBlockContribution")
+            || contains_range(code, a, b, "WorkerEvent::Block(")
+            || contains_range(code, a, b, "WorkerEvent::Partial(");
         if !owns {
             continue;
         }

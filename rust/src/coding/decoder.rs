@@ -123,6 +123,23 @@ pub fn decode_into(a: &[f64], contributions: &[&[f32]], out: &mut [f64]) {
     kernels::fused_combine_into_f64_auto(&sources, out);
 }
 
+/// Apply a decode vector to `f32` wire contributions, **adding** the
+/// result onto a caller-owned `f64` slice: `out[i] += Σ_k a_k·c_k[i]`.
+///
+/// The streaming collect path decodes each rotation part of a block
+/// independently (the decode vector depends only on the survivor set,
+/// and the code is linear, so per-part coded deltas decode with the
+/// same cached vector) and folds the parts into the shared gradient
+/// range as they land — hence accumulate, not overwrite. Same fused
+/// tiled kernel family as [`decode_into`].
+pub fn decode_into_add(a: &[f64], contributions: &[&[f32]], out: &mut [f64]) {
+    assert_eq!(a.len(), contributions.len());
+    debug_assert!(contributions.iter().all(|c| c.len() == out.len()));
+    let sources: Vec<(f64, &[f32])> =
+        a.iter().copied().zip(contributions.iter().copied()).collect();
+    kernels::fused_combine_into_f64_add_auto(&sources, out);
+}
+
 /// Apply a decode vector: `Σ_k a_k · contribution_k`.
 pub fn decode(a: &[f64], contributions: &[&[f64]]) -> Vec<f64> {
     assert_eq!(a.len(), contributions.len());
@@ -500,6 +517,59 @@ mod tests {
         }
         assert_eq!(cache.hits, rounds as u64, "hot set must hit every round");
         assert_eq!(cache.misses, 1 + rounds as u64, "cold sets each miss once");
+    }
+
+    #[test]
+    fn per_part_decode_into_add_sums_to_whole_block_decode() {
+        // Code linearity: a rotation part is a full-width coded delta
+        // (the samples are split worker-side, the wire payload is not),
+        // and the per-part deltas sum to the whole-block codeword.
+        // Decoding each delta with the same vector and accumulating must
+        // land within f32 forward error of the one-shot decode.
+        let mut rng = Rng::new(61);
+        let (n, s, dim, parts) = (6usize, 2usize, 900usize, 3usize);
+        let code = GradientCode::cyclic_mds(n, s, &mut rng).unwrap();
+        // Per-(worker, part) deltas whose sum is the worker's codeword.
+        let deltas: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|_| {
+                (0..parts)
+                    .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+                    .collect()
+            })
+            .collect();
+        let survivors: Vec<usize> = (0..n - s).collect();
+        let a = decode_vector(&code, &survivors).unwrap();
+        // One-shot: decode the per-worker sums.
+        let sums: Vec<Vec<f32>> = survivors
+            .iter()
+            .map(|&w| {
+                let mut acc = vec![0.0f64; dim];
+                for p in 0..parts {
+                    for (o, &v) in acc.iter_mut().zip(deltas[w][p].iter()) {
+                        *o += v as f64;
+                    }
+                }
+                acc.iter().map(|&v| v as f32).collect()
+            })
+            .collect();
+        let picked: Vec<&[f32]> = sums.iter().map(|c| c.as_slice()).collect();
+        let mut want = vec![0.0f64; dim];
+        decode_into(&a, &picked, &mut want);
+        // Streaming: decode each part's deltas, accumulating.
+        let mut got = vec![0.0f64; dim];
+        for p in 0..parts {
+            let picked: Vec<&[f32]> =
+                survivors.iter().map(|&w| deltas[w][p].as_slice()).collect();
+            decode_into_add(&a, &picked, &mut got);
+        }
+        for d in 0..dim {
+            assert!(
+                (got[d] - want[d]).abs() < 1e-4 * (1.0 + want[d].abs()),
+                "coord {d}: {} vs {}",
+                got[d],
+                want[d]
+            );
+        }
     }
 
     #[test]

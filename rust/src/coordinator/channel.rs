@@ -47,6 +47,18 @@ pub type JobId = usize;
 /// gradient still covers every sample exactly.
 pub type ShardMap = Vec<Vec<usize>>;
 
+/// Sample-granular refinement of [`ShardMap`]: `slices[k] = (lo, hi)`
+/// assigns subset `k` the contiguous sample span `[lo, hi)` of the
+/// job's dataset. The spans partition `[0, samples)` in subset order,
+/// so the decoded gradient covers every sample exactly once — but the
+/// cut points land on arbitrary sample indices instead of shard
+/// boundaries, giving a two-speed fleet whose speed ratio is not a
+/// multiple of `1/m` its exact proportional load (and a floor of one
+/// sample per live subset, so no rostered row ever idles). Requires an
+/// executor that can evaluate arbitrary spans
+/// ([`crate::runtime::GradExecutor::grad_span_into`]).
+pub type SliceMap = Vec<(usize, usize)>;
+
 /// Master → worker.
 pub enum WorkerTask {
     /// Compute and stream all coded blocks for one GD iteration of one
@@ -76,6 +88,21 @@ pub enum WorkerTask {
         /// One unit of per-coordinate work, `(M/N)·b` cycles, under the
         /// epoch's `N` (workers must not bake `N` in at spawn).
         unit_work: f64,
+        /// Sample-granular subset spans (see [`SliceMap`]); `None` keeps
+        /// the shard-granular path bit-for-bit (the worker never looks
+        /// at `parts` then).
+        slices: Option<Arc<SliceMap>>,
+        /// Rotation parts `P ≥ 1` for partial-straggler streaming: each
+        /// held span is split into `P` fixed sub-spans (data parts), and
+        /// at stride `j` the worker computes and emits the coded delta
+        /// of data part `(row + j) mod P`. The part's samples are the
+        /// same from every row — that is what lets any quorum decode a
+        /// part — while the rotated *visit order* makes every part
+        /// index complete first at some rotation of the fleet, so a
+        /// block can decode part-wise the moment any part's quorum
+        /// fills. `1` (with `slices` set) is sample-granular load
+        /// without streaming.
+        parts: usize,
     },
     /// Finish up and exit cleanly: acknowledge with
     /// [`WorkerEvent::Left`], then return. Used to drain a worker out
@@ -119,9 +146,56 @@ pub struct BlockContribution {
     pub coded: Vec<f32>,
 }
 
+/// Worker → master: one rotation part of one coded block — the coded
+/// **delta** contributed by one fixed `1/parts` sub-span (data part)
+/// of every subset the row holds. A part's sub-span is the same from
+/// every row, so the code's linearity lets the master decode each part
+/// independently, from whichever `N − s` rows delivered it first, and
+/// accumulate the results
+/// ([`crate::coding::decoder::decode_into_add`]). Summing a row's
+/// `parts` deltas for a block reproduces (to f32 rounding) the
+/// whole-block [`BlockContribution::coded`] payload.
+pub struct PartialBlockContribution {
+    /// The job whose code this delta was encoded under (dropped on
+    /// mismatch exactly like [`BlockContribution`]).
+    pub job: JobId,
+    pub iter: usize,
+    /// Scheme epoch the delta was encoded under.
+    pub epoch: usize,
+    /// Stable id of the contributing worker.
+    pub worker: usize,
+    /// Code row the delta was encoded as.
+    pub row: usize,
+    /// Index into the scheme's non-empty block ranges.
+    pub block_idx: usize,
+    /// Data part index in `[0, parts)` this delta covers: sub-span
+    /// `part` of each held span. This worker visited it at stride
+    /// `j = (part + parts − row%parts) mod parts` of its round.
+    pub part: usize,
+    /// Total rotation parts `P` the round was dispatched with (the
+    /// master rejects a mismatch against its collect state like a
+    /// stale epoch).
+    pub parts: usize,
+    /// Samples of this row's total allocation finished up to and
+    /// including this part (monotone within a round; diagnostics and
+    /// completion-fraction tracking).
+    pub samples_done: usize,
+    /// This row's total sample allocation for the round.
+    pub samples_total: usize,
+    /// Virtual completion time of this delta at this worker.
+    pub virtual_time: f64,
+    /// Coded delta in the f32 wire format, full block width. Pooled
+    /// and recycled under the same ownership contract as
+    /// [`BlockContribution::coded`].
+    pub coded: Vec<f32>,
+}
+
 /// Worker → master control-plane event.
 pub enum WorkerEvent {
     Block(BlockContribution),
+    /// One rotation part of a coded block (partial-straggler
+    /// streaming); see [`PartialBlockContribution`].
+    Partial(PartialBlockContribution),
     /// The worker thread came up: it is ready to be bound to a code
     /// row at the next epoch rebind. Sent once per thread, right after
     /// spawn (a join is not assigned work until the pool has seen this

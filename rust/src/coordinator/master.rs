@@ -37,9 +37,12 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coding::decoder::{decode_into, decode_vector_ls, DecodeCache};
+use crate::coding::decoder::{decode_into, decode_into_add, decode_vector_ls, DecodeCache};
 use crate::coding::scheme::CodingScheme;
-use crate::coordinator::channel::{BlockContribution, JobId, ShardMap, WorkerEvent, WorkerTask};
+use crate::coordinator::channel::{
+    BlockContribution, JobId, PartialBlockContribution, ShardMap, SliceMap, WorkerEvent,
+    WorkerTask,
+};
 use crate::runtime::ExecutorFactory;
 use crate::transport::TaskSender;
 use crate::util::buffers::{BufferPool, PoolStats};
@@ -80,6 +83,13 @@ pub struct IterOutcome {
     /// fully-exact mode. Each entry's exact quorum is tracked in the
     /// master's pending-reconcile set until it lands or is discarded.
     pub approx: Vec<ApproxDecode>,
+    /// Streamed per-part coded deltas accepted into a rotation-part
+    /// quorum this iteration (0 when streaming is off).
+    pub partial_contributions: usize,
+    /// Blocks whose decode completed through the rotation-part path
+    /// (every part folded via [`decode_into_add`]) rather than a
+    /// whole-contribution quorum.
+    pub partial_blocks: usize,
 }
 
 /// Semi-asynchronous decode policy: when a block's quorum is short only
@@ -162,6 +172,18 @@ struct PendingReconcile {
 struct BlockState {
     need: usize,
     arrivals: Vec<(usize, Vec<f32>)>, // (row, coded f32 wire buffer)
+    /// Per rotation part `p`: streamed coded deltas `(row, buffer)` not
+    /// yet folded. Emptied (buffers recycled) the moment part `p`'s
+    /// quorum fills and its decode lands via [`decode_into_add`].
+    part_arrivals: Vec<Vec<(usize, Vec<f32>)>>,
+    /// Rotation parts already folded into the gradient slice.
+    part_done: Vec<bool>,
+    /// How many entries of `part_done` are set.
+    parts_decoded: usize,
+    /// Per-row bitmask of rotation parts received for this block
+    /// (duplicate-part detection + part-path satisfiability). Parts are
+    /// capped at 32 ([`MAX_STREAM_PARTS`]).
+    psent: Vec<u32>,
     /// Exactly decoded — arrivals recycled, later copies are `late`.
     decoded: bool,
     /// Applied from a least-squares approximate decode; arrivals are
@@ -177,6 +199,9 @@ impl BlockState {
         self.decoded || self.approx.is_some()
     }
 }
+
+/// Cap on rotation parts: per-row receipt state is a `u32` bitmask.
+pub const MAX_STREAM_PARTS: usize = 32;
 
 /// In-flight state of one iteration's collection.
 struct CollectState {
@@ -201,6 +226,14 @@ struct CollectState {
     deep: Vec<bool>,
     /// Semi-async decode policy (`None` = exact decodes only).
     semi: Option<SemiAsyncConfig>,
+    /// Rotation parts the iteration was dispatched with (1 = no
+    /// streaming; partial frames carrying a different value are
+    /// refused like stale epochs).
+    parts: usize,
+    /// Streamed deltas accepted into a part quorum this iteration.
+    partial_contributions: usize,
+    /// Blocks completed through the part path this iteration.
+    partial_blocks: usize,
 }
 
 /// Decode-on-arrival collector; owns the decode-vector cache across
@@ -215,6 +248,12 @@ pub struct Master {
     roster: Vec<usize>,
     /// Subset → dataset shards for the current epoch.
     shards: Arc<ShardMap>,
+    /// Sample-granular subset spans overriding `shards` when set (the
+    /// sample-level actuation / streaming path); travels with every
+    /// broadcast task.
+    slices: Option<Arc<SliceMap>>,
+    /// Rotation parts for partial-straggler streaming (1 = off).
+    parts: usize,
     cache: DecodeCache,
     /// Freelist the wire buffers are recycled into after decode (shared
     /// with the pool's workers when running on a [`WorkerPool`];
@@ -268,6 +307,8 @@ impl Master {
             dim,
             roster,
             shards,
+            slices: None,
+            parts: 1,
             cache: DecodeCache::new(4096),
             wire_pool: BufferPool::default(),
             collect: None,
@@ -328,6 +369,31 @@ impl Master {
         &self.shards
     }
 
+    /// The current epoch's sample-granular subset spans, if installed.
+    pub fn slice_map(&self) -> Option<&Arc<SliceMap>> {
+        self.slices.as_ref()
+    }
+
+    /// Rotation parts broadcasts are currently issued with (1 = no
+    /// streaming).
+    pub fn stream_parts(&self) -> usize {
+        self.parts
+    }
+
+    /// Install sample-granular subset spans (and the rotation-part
+    /// count) for subsequent broadcasts; `None` restores the
+    /// shard-granular path exactly. Like scheme swaps, this happens
+    /// between iterations only.
+    pub fn install_slices(&mut self, slices: Option<Arc<SliceMap>>, parts: usize) {
+        assert!(self.collect.is_none(), "slice swaps happen between iterations");
+        assert!(parts >= 1 && parts <= MAX_STREAM_PARTS, "parts must be in [1, 32]");
+        if let Some(s) = &slices {
+            assert_eq!(s.len(), self.scheme.n(), "slice map must cover every subset");
+        }
+        self.slices = slices;
+        self.parts = if self.slices.is_some() { parts } else { 1 };
+    }
+
     fn row_of(&self, worker: usize) -> Option<usize> {
         self.roster.iter().position(|&id| id == worker)
     }
@@ -355,6 +421,11 @@ impl Master {
         self.epoch = epoch;
         self.roster = roster;
         self.shards = shards;
+        // Slice maps are sized to one epoch's subsets; the caller
+        // re-installs a fresh one (from the same re-plan that produced
+        // the scheme) if sample-granular actuation stays on.
+        self.slices = None;
+        self.parts = 1;
         self.cache.reset();
     }
 
@@ -426,6 +497,8 @@ impl Master {
                 factory: factory.clone(),
                 cycle_time: times[row],
                 unit_work,
+                slices: self.slices.clone(),
+                parts: self.parts,
             });
         }
     }
@@ -457,6 +530,7 @@ impl Master {
         let n = self.scheme.n();
         debug_assert_eq!(live.len(), n);
         debug_assert_eq!(deep.len(), n);
+        let parts = self.parts;
         let st = CollectState {
             iter,
             blocks: ranges
@@ -464,6 +538,10 @@ impl Master {
                 .map(|r| BlockState {
                     need: n - r.s,
                     arrivals: Vec::new(),
+                    part_arrivals: vec![Vec::new(); parts],
+                    part_done: vec![false; parts],
+                    parts_decoded: 0,
+                    psent: vec![0u32; n],
                     decoded: false,
                     approx: None,
                 })
@@ -482,6 +560,9 @@ impl Master {
             alive: live.to_vec(),
             deep: deep.to_vec(),
             semi,
+            parts,
+            partial_contributions: 0,
+            partial_blocks: 0,
         };
         // Dead rows are known up front: fail fast when a block can
         // never reach quorum instead of waiting out the stall timeout.
@@ -611,6 +692,37 @@ impl Master {
                 }
                 self.on_block(st, c)?;
             }
+            WorkerEvent::Partial(c) => {
+                // Same drop discipline as whole blocks: whoever drops a
+                // streamed delta recycles its wire buffer.
+                if c.job != self.job {
+                    st.cross_job += 1;
+                    self.wire_pool.put(c.coded);
+                    return Ok(());
+                }
+                if c.iter != iter {
+                    // A previous iteration's streamed delta can never
+                    // complete a pending reconcile (those hold whole
+                    // contributions); recycle it outright.
+                    self.wire_pool.put(c.coded);
+                    return Ok(());
+                }
+                if c.epoch != self.epoch || c.parts != st.parts || c.part >= st.parts {
+                    // Superseded scheme epoch, or a rotation geometry
+                    // from a superseded dispatch — either way the delta
+                    // belongs to another round's code.
+                    st.stale_epoch += 1;
+                    self.wire_pool.put(c.coded);
+                    return Ok(());
+                }
+                let n = self.scheme.n();
+                if c.row >= n || self.roster[c.row] != c.worker {
+                    st.mismatched += 1;
+                    self.wire_pool.put(c.coded);
+                    return Ok(());
+                }
+                self.on_partial(st, c)?;
+            }
         }
         Ok(())
     }
@@ -628,6 +740,14 @@ impl Master {
         let ranges = self.scheme.ranges();
         let mut approx = Vec::new();
         for (idx, b) in st.blocks.iter_mut().enumerate() {
+            // Undecoded streamed deltas buffered behind a completed
+            // block (e.g. one that closed on an approximation) are dead
+            // weight now — recycle before the state drops.
+            for part in b.part_arrivals.iter_mut() {
+                for (_, buf) in part.drain(..) {
+                    self.wire_pool.put(buf);
+                }
+            }
             let Some(record) = b.approx.take() else { continue };
             if b.decoded {
                 continue; // upgraded in-collect; nothing owed
@@ -657,16 +777,24 @@ impl Master {
             joined: st.joined,
             left: st.left,
             approx,
+            partial_contributions: st.partial_contributions,
+            partial_blocks: st.partial_blocks,
         }
     }
 
     /// Abort the open collection, if any (shutdown path). Buffered
-    /// arrival buffers of undecoded blocks go back to the wire pool.
+    /// arrival buffers of undecoded blocks — whole contributions and
+    /// streamed rotation deltas alike — go back to the wire pool.
     pub fn abort_collect(&mut self) {
         if let Some(st) = self.collect.take() {
             for block in st.blocks {
                 for (_, buf) in block.arrivals {
                     self.wire_pool.put(buf);
+                }
+                for part in block.part_arrivals {
+                    for (_, buf) in part {
+                        self.wire_pool.put(buf);
+                    }
                 }
             }
         }
@@ -760,8 +888,92 @@ impl Master {
             self.wire_pool.put(buf);
         }
         b.arrivals.shrink_to_fit();
+        // The overwrite discarded any partially-folded rotation sums;
+        // undecoded streamed deltas are redundant now — recycle them.
+        for part in b.part_arrivals.iter_mut() {
+            for (_, buf) in part.drain(..) {
+                self.wire_pool.put(buf);
+            }
+        }
         if !was_approx {
             st.decoded_count += 1;
+        }
+        st.decode_ns += t0.elapsed().as_nanos() as u64;
+        Ok(())
+    }
+
+    /// One streamed rotation-part delta. Part `p` of block `b` decodes
+    /// the moment `need` distinct rows' part-`p` deltas have arrived —
+    /// the code is linear, so the same cached decode vector that
+    /// combines whole contributions combines per-part deltas, and the
+    /// result **accumulates** onto the block's gradient slice
+    /// ([`decode_into_add`]). The block completes once every part has
+    /// folded; a whole-contribution quorum landing first wins instead
+    /// (its [`decode_into`] overwrite discards the partial sums).
+    fn on_partial(&mut self, st: &mut CollectState, c: PartialBlockContribution) -> Result<()> {
+        let ranges = self.scheme.ranges();
+        let b = &mut st.blocks[c.block_idx];
+        if b.decoded || b.part_done[c.part] {
+            // The block (or this part) already folded — pure overhead,
+            // same as a late whole contribution.
+            st.late += 1;
+            self.wire_pool.put(c.coded);
+            return Ok(());
+        }
+        if b.approx.is_some() {
+            // An approximate decode already occupies the gradient slice;
+            // accumulating a part on top would corrupt it, and the
+            // pending-reconcile path only understands whole
+            // contributions. Count as late overhead.
+            st.late += 1;
+            self.wire_pool.put(c.coded);
+            return Ok(());
+        }
+        if b.psent[c.row] & (1u32 << c.part) != 0 {
+            // Duplicate (retry / requeue): recycle.
+            st.late += 1;
+            self.wire_pool.put(c.coded);
+            return Ok(());
+        }
+        b.psent[c.row] |= 1u32 << c.part;
+        if b.psent[c.row].count_ones() as usize == st.parts {
+            // The row has delivered its entire allocation for this
+            // block — it owes the block nothing more.
+            st.sent[c.row][c.block_idx] = true;
+        }
+        b.part_arrivals[c.part].push((c.row, c.coded));
+        st.partial_contributions += 1;
+        if b.part_arrivals[c.part].len() < b.need {
+            return Ok(());
+        }
+        // Part quorum filled: fold it into the gradient slice now.
+        // lint: allow(determinism) — decode_ns metric only; control flow is virtual-time
+        let t0 = Instant::now();
+        let r = &ranges[c.block_idx];
+        b.part_arrivals[c.part].sort_by_key(|(row, _)| *row);
+        let survivors: Vec<usize> =
+            b.part_arrivals[c.part].iter().map(|(row, _)| *row).collect();
+        let scheme = self.scheme.clone();
+        let code = scheme.code(r.s);
+        let a = self.cache.get(code, &survivors)?;
+        let picked: Vec<&[f32]> =
+            b.part_arrivals[c.part].iter().map(|(_, v)| v.as_slice()).collect();
+        decode_into_add(a, &picked, &mut st.gradient[r.start..r.end]);
+        for (_, buf) in b.part_arrivals[c.part].drain(..) {
+            self.wire_pool.put(buf);
+        }
+        b.part_done[c.part] = true;
+        b.parts_decoded += 1;
+        if b.parts_decoded == st.parts {
+            // Every part folded: the block is complete. Any buffered
+            // whole contributions are now redundant — recycle them.
+            b.decoded = true;
+            st.partial_blocks += 1;
+            st.decoded_count += 1;
+            for (_, buf) in b.arrivals.drain(..) {
+                self.wire_pool.put(buf);
+            }
+            b.arrivals.shrink_to_fit();
         }
         st.decode_ns += t0.elapsed().as_nanos() as u64;
         Ok(())
@@ -783,6 +995,12 @@ impl Master {
         let ranges = scheme.ranges();
         for (idx, b) in st.blocks.iter_mut().enumerate() {
             if b.complete() || b.arrivals.is_empty() {
+                continue;
+            }
+            if b.parts_decoded > 0 {
+                // Rotation parts already folded into this block's
+                // gradient slice; a least-squares overwrite would mix
+                // two partial decodes. The part path finishes it.
                 continue;
             }
             let have = b.arrivals.len();
@@ -913,6 +1131,14 @@ impl Master {
 /// (row, block) rather than per row, so an unrecoverable block is never
 /// declared recoverable just because some row still owes messages to
 /// *other* blocks.
+///
+/// With streaming on, a block has a second route to completion: every
+/// rotation part reaching `need` deltas. A dead row's already-delivered
+/// parts stay usable (that is the whole point of partial-straggler
+/// streaming), so the block is unrecoverable only when the
+/// whole-contribution path **and** the part path are both impossible.
+/// Without streamed arrivals the part-path bound reduces to the
+/// whole-path one, so non-streaming behavior is unchanged.
 fn check_still_satisfiable(st: &CollectState, iter: usize) -> Result<()> {
     for (idx, b) in st.blocks.iter().enumerate() {
         if b.complete() {
@@ -924,13 +1150,32 @@ fn check_still_satisfiable(st: &CollectState, iter: usize) -> Result<()> {
             .zip(st.sent.iter())
             .filter(|&(a, s)| *a && !s[idx])
             .count();
-        let possible = b.arrivals.len() + pending;
-        if possible < b.need {
+        let whole_possible = b.arrivals.len() + pending >= b.need;
+        // Part path: every not-yet-folded part must still be able to
+        // reach `need` distinct rows (banked deltas + alive rows that
+        // have not delivered that part yet).
+        let parts_possible = (0..st.parts).all(|p| {
+            if b.part_done[p] {
+                return true;
+            }
+            let outstanding = st
+                .alive
+                .iter()
+                .enumerate()
+                .filter(|(row, alive)| {
+                    // A row that already delivered the whole block
+                    // streams nothing more for it.
+                    **alive && !st.sent[*row][idx] && b.psent[*row] & (1u32 << p) == 0
+                })
+                .count();
+            b.part_arrivals[p].len() + outstanding >= b.need
+        });
+        if !whole_possible && !parts_possible {
             return Err(Error::Runtime(format!(
                 "iteration {iter}: block {idx} unrecoverable \
-                 ({} arrivals, {} possible, need {})",
+                 ({} arrivals, {} rows outstanding, need {})",
                 b.arrivals.len(),
-                possible,
+                pending,
                 b.need
             )));
         }
@@ -1052,6 +1297,127 @@ pub fn load_multipliers(map: &ShardMap, num_shards: usize) -> Vec<f64> {
         return vec![1.0; map.len()];
     }
     map.iter().map(|backing| backing.len() as f64 * n as f64 / num_shards as f64).collect()
+}
+
+/// Strict weight sanitation for the sample-granular apportioners: any
+/// non-finite or **negative** weight is an [`Error::InvalidArgument`]
+/// (the shard-granular [`shard_quota_weighted`] predates this and keeps
+/// its documented silent degrade-to-uniform behavior for callers that
+/// rely on it). Zero weights are legal — they renormalize away, and
+/// the one-sample floor still covers their subset.
+fn validate_weights(weights: &[f64]) -> Result<()> {
+    for (i, &w) in weights.iter().enumerate() {
+        if !w.is_finite() || w < 0.0 {
+            return Err(Error::InvalidArgument(format!(
+                "weight[{i}] = {w}: sample apportionment needs finite non-negative weights"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Per-subset **sample** counts proportional to `weights` — the
+/// sample-granular refinement of [`shard_quota_weighted`]. Hamilton /
+/// largest-remainder apportionment over individual samples, so a
+/// two-speed fleet whose speed ratio is not a multiple of `1/m` gets
+/// its exact proportional load (quota error under one sample instead
+/// of one shard). Two extra guarantees over the shard variant:
+///
+/// * **Strict sanitation**: non-finite or negative weights are refused
+///   ([`Error::InvalidArgument`]) instead of silently producing an
+///   arbitrary split; an all-zero weight vector degrades to the uniform
+///   split (there is nothing to be proportional to).
+/// * **One-sample floor**: whenever `samples ≥ n`, every subset gets at
+///   least one sample — a live worker holding a code row is never
+///   assigned zero work (the floor samples come off the largest
+///   allocations, lowest index first on ties).
+pub fn sample_quota_weighted(weights: &[f64], samples: usize) -> Result<Vec<usize>> {
+    let n = weights.len();
+    assert!(n >= 1, "need at least one subset");
+    validate_weights(weights)?;
+    let total: f64 = weights.iter().sum();
+    let mut counts: Vec<usize> = if total <= 0.0 {
+        let uniform = redistribute_shards(n, samples);
+        uniform.iter().map(Vec::len).collect()
+    } else {
+        let quotas: Vec<f64> = weights.iter().map(|&v| v * samples as f64 / total).collect();
+        let mut counts: Vec<usize> = quotas.iter().map(|&q| q.floor() as usize).collect();
+        let assigned: usize = counts.iter().sum();
+        let mut leftover = samples.saturating_sub(assigned);
+        if leftover > 0 {
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                let (ra, rb) = (quotas[a] - quotas[a].floor(), quotas[b] - quotas[b].floor());
+                rb.partial_cmp(&ra)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(
+                        weights[b]
+                            .partial_cmp(&weights[a])
+                            .unwrap_or(std::cmp::Ordering::Equal),
+                    )
+                    .then(a.cmp(&b))
+            });
+            for &i in order.iter() {
+                if leftover == 0 {
+                    break;
+                }
+                counts[i] += 1;
+                leftover -= 1;
+            }
+        }
+        counts
+    };
+    // One-sample floor: top up empty subsets from the largest
+    // allocation (deterministic: max count, lowest index on ties).
+    if samples >= n {
+        for i in 0..n {
+            while counts[i] == 0 {
+                let donor = (0..n)
+                    .max_by(|&a, &b| counts[a].cmp(&counts[b]).then(b.cmp(&a)))
+                    .unwrap_or(i);
+                if counts[donor] <= 1 {
+                    break; // nothing left to shave — samples < n after all
+                }
+                counts[donor] -= 1;
+                counts[i] += 1;
+            }
+        }
+    }
+    debug_assert_eq!(counts.iter().sum::<usize>(), samples);
+    Ok(counts)
+}
+
+/// Subset → contiguous sample spans proportional to per-worker
+/// `weights` — the sample-granular actuation behind
+/// [`redistribute_shards_weighted`]. Subset `i` owns the span
+/// `[start_i, start_i + c_i)` with counts from
+/// [`sample_quota_weighted`]; the spans partition `[0, samples)` in
+/// subset order, so the decoded gradient covers every sample exactly
+/// once. Requires span-capable executors
+/// ([`crate::runtime::GradExecutor::supports_spans`]).
+pub fn redistribute_samples_weighted(weights: &[f64], samples: usize) -> Result<SliceMap> {
+    let counts = sample_quota_weighted(weights, samples)?;
+    let mut map: SliceMap = Vec::with_capacity(counts.len());
+    let mut start = 0usize;
+    for c in counts {
+        map.push((start, start + c));
+        start += c;
+    }
+    debug_assert_eq!(start, samples, "every sample must stay covered");
+    Ok(map)
+}
+
+/// Per-row data-load multipliers of a slice map relative to the
+/// uniform `samples/n` share: `ρ_i = len_i·n/samples` — the
+/// sample-granular mirror of [`load_multipliers`].
+pub fn sample_load_multipliers(map: &SliceMap, samples: usize) -> Vec<f64> {
+    let n = map.len().max(1);
+    if samples == 0 {
+        return vec![1.0; map.len()];
+    }
+    map.iter()
+        .map(|&(lo, hi)| (hi - lo) as f64 * n as f64 / samples as f64)
+        .collect()
 }
 
 #[cfg(test)]
@@ -1914,5 +2280,416 @@ mod tests {
         assert_eq!(master.approx_discarded(), 1);
         assert!(master.take_reconciled().is_empty());
         assert_eq!(master.wire_pool_stats().returned, sent);
+    }
+
+    // ---- sample-granular apportionment (PR 10 satellite) ----
+
+    #[test]
+    fn sample_apportionment_rejects_bad_weights_where_the_shard_path_degrades() {
+        // Strict sanitation on the NEW sample-granular variants: any
+        // non-finite or negative weight is a loud error…
+        for bad in [
+            vec![1.0, f64::NAN, 1.0],
+            vec![1.0, f64::INFINITY],
+            vec![0.5, -0.1, 2.0],
+            vec![f64::NEG_INFINITY],
+        ] {
+            assert!(sample_quota_weighted(&bad, 12).is_err(), "{bad:?}");
+            assert!(redistribute_samples_weighted(&bad, 12).is_err(), "{bad:?}");
+        }
+        // …while the legacy shard path KEEPS its documented silent
+        // degrade-to-uniform for the same inputs.
+        let legacy = shard_quota_weighted(&[0.0, f64::NAN, -1.0], 6);
+        assert_eq!(legacy.iter().sum::<usize>(), 6);
+        // All-zero weights are legal (nothing to be proportional to):
+        // degrade to the uniform split.
+        let counts = sample_quota_weighted(&[0.0, 0.0, 0.0], 10).unwrap();
+        assert_eq!(counts.iter().sum::<usize>(), 10);
+        assert!(counts.iter().max().unwrap() - counts.iter().min().unwrap() <= 1, "{counts:?}");
+        // A zero weight among live ones still gets the one-sample floor
+        // whenever samples ≥ n: a live row holding a code row is never
+        // assigned zero work.
+        let counts = sample_quota_weighted(&[5.0, 0.0, 5.0], 11).unwrap();
+        assert_eq!(counts.iter().sum::<usize>(), 11);
+        assert!(counts[1] >= 1, "{counts:?}");
+        let counts = sample_quota_weighted(&[1000.0, 1e-9, 1e-9], 10).unwrap();
+        assert!(counts.iter().all(|&c| c >= 1), "{counts:?}");
+        // With samples < n the floor cannot hold — the split still
+        // covers exactly.
+        let counts = sample_quota_weighted(&[1.0, 1.0, 1.0, 1.0, 1.0], 3).unwrap();
+        assert_eq!(counts.iter().sum::<usize>(), 3);
+        // Guards on the multiplier mirror.
+        assert_eq!(sample_load_multipliers(&vec![(0, 0); 3], 0), vec![1.0; 3]);
+    }
+
+    #[test]
+    fn sample_quota_is_exact_when_granularity_allows_and_within_one_otherwise() {
+        // The tentpole claim: a 2.5:1 two-speed fleet is NOT a multiple
+        // of 1/m at shard granularity, but 7000 samples split exactly.
+        let weights = [2.5, 2.5, 2.5, 2.5, 2.5, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let counts = sample_quota_weighted(&weights, 7_000).unwrap();
+        assert_eq!(counts, vec![1000, 1000, 1000, 1000, 1000, 400, 400, 400, 400, 400]);
+        // Hamilton property: every count within one sample of its exact
+        // quota (weights bounded away from the floor regime).
+        let mut rng = Rng::new(4021);
+        for _ in 0..200 {
+            let n = 2 + rng.below(14) as usize;
+            let samples = n * (10 + rng.below(90) as usize);
+            let weights: Vec<f64> =
+                (0..n).map(|_| 0.5 + 2.5 * rng.below(1000) as f64 / 1000.0).collect();
+            let counts = sample_quota_weighted(&weights, samples).unwrap();
+            assert_eq!(counts.iter().sum::<usize>(), samples);
+            let total: f64 = weights.iter().sum();
+            for (i, &c) in counts.iter().enumerate() {
+                let q = weights[i] * samples as f64 / total;
+                assert!(
+                    (c as f64 - q).abs() < 1.0 + 1e-9,
+                    "subset {i}: count {c} vs quota {q} ({weights:?}, {samples})"
+                );
+            }
+            // The slice map partitions [0, samples) contiguously in
+            // subset order with exactly those counts.
+            let map = redistribute_samples_weighted(&weights, samples).unwrap();
+            let mut cursor = 0usize;
+            for (i, &(lo, hi)) in map.iter().enumerate() {
+                assert_eq!(lo, cursor, "subset {i} must start where {i}−1 ended");
+                assert_eq!(hi - lo, counts[i]);
+                cursor = hi;
+            }
+            assert_eq!(cursor, samples);
+            // Load multipliers conserve total work: Σρ = n.
+            let rho = sample_load_multipliers(&map, samples);
+            assert!((rho.iter().sum::<f64>() - n as f64).abs() < 1e-9, "{rho:?}");
+        }
+        // Permutation equivariance on distinct weights.
+        let weights = vec![3.1, 0.7, 1.9, 5.3, 0.2, 2.6];
+        let base = sample_quota_weighted(&weights, 173).unwrap();
+        let perm = [4usize, 2, 0, 5, 1, 3];
+        let permuted_w: Vec<f64> = perm.iter().map(|&i| weights[i]).collect();
+        let permuted_c = sample_quota_weighted(&permuted_w, 173).unwrap();
+        for (slot, &i) in perm.iter().enumerate() {
+            assert_eq!(permuted_c[slot], base[i], "{base:?} vs {permuted_c:?}");
+        }
+    }
+
+    // ---- partial-straggler streaming collect (PR 10 tentpole) ----
+
+    /// Equal-span slice map over `n·span` virtual samples.
+    fn uniform_slices(n: usize, span: usize) -> Arc<SliceMap> {
+        Arc::new((0..n).map(|k| (k * span, (k + 1) * span)).collect())
+    }
+
+    /// Per-part random subset gradients (`grads[p][subset]` is the
+    /// delta of data part `p` — the same samples no matter which row
+    /// streams it) plus the whole-round total the decode must
+    /// reproduce.
+    fn random_part_grads(
+        n: usize,
+        dim: usize,
+        parts: usize,
+        rng: &mut Rng,
+    ) -> (Vec<Vec<Vec<f64>>>, Vec<f64>) {
+        let grads: Vec<Vec<Vec<f64>>> = (0..parts)
+            .map(|_| (0..n).map(|_| (0..dim).map(|_| rng.normal()).collect()).collect())
+            .collect();
+        let want: Vec<f64> = (0..dim)
+            .map(|d| grads.iter().flat_map(|g| g.iter()).map(|v| v[d]).sum())
+            .collect();
+        (grads, want)
+    }
+
+    /// The rotation-part event row `row` emits at stride `j` for the
+    /// (single-block) scheme. Mirrors the worker contract: stride `j`
+    /// carries **data part** `(row + j) mod parts` of every held
+    /// subset, so part-`p` deltas agree across rows and any quorum of
+    /// them decodes exactly.
+    fn partial_event(
+        scheme: &CodingScheme,
+        part_grads: &[Vec<Vec<f64>>],
+        row: usize,
+        j: usize,
+        parts: usize,
+    ) -> WorkerEvent {
+        let part = (row + j) % parts;
+        let held: Vec<Vec<f64>> = scheme
+            .worker_subsets(row)
+            .iter()
+            .map(|&k| part_grads[part][k].clone())
+            .collect();
+        let r = &scheme.ranges()[0];
+        WorkerEvent::Partial(PartialBlockContribution {
+            job: 0,
+            iter: 0,
+            epoch: 0,
+            worker: row,
+            row,
+            block_idx: 0,
+            part,
+            parts,
+            samples_done: (j + 1) * 5,
+            samples_total: parts * 5,
+            virtual_time: 0.0,
+            coded: scheme
+                .encode_block_range(row, r, &held)
+                .iter()
+                .map(|&v| v as f32)
+                .collect(),
+        })
+    }
+
+    #[test]
+    fn streamed_parts_decode_to_the_exact_gradient() {
+        // 4 rows, one s=1 block (need 3), 3 rotation parts. Rows 0–2
+        // streaming all their strides fills every part quorum; the
+        // folded per-part decodes must sum to the whole-round gradient,
+        // and row 3's late strides are pure overhead.
+        let (n, dim, parts) = (4usize, 8usize, 3usize);
+        let mut rng = Rng::new(233);
+        let part = BlockPartition::new(vec![0, 8, 0, 0]);
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (grads, want) = random_part_grads(n, dim, parts, &mut rng);
+        let mut master = Master::new(scheme.clone(), dim);
+        let pool = crate::util::buffers::BufferPool::new(64);
+        master.set_wire_pool(pool.clone());
+        master.install_slices(Some(uniform_slices(n, 5)), parts);
+
+        let live = vec![true; n];
+        master.begin_collect(0, &live).unwrap();
+        let mut done = false;
+        for row in 0..3 {
+            for j in 0..parts {
+                done = master.offer(partial_event(&scheme, &grads, row, j, parts)).unwrap();
+            }
+        }
+        assert!(done, "three full rows fill every rotation-part quorum");
+        for j in 0..parts {
+            master.offer(partial_event(&scheme, &grads, 3, j, parts)).unwrap();
+        }
+        let out = master.take_outcome();
+        assert_eq!(out.partial_blocks, 1, "the block must complete part-wise");
+        assert_eq!(out.partial_contributions, 9);
+        assert_eq!(out.late_contributions, 3, "row 3's strides arrive after the fold");
+        for d in 0..dim {
+            assert!(
+                (out.gradient[d] - want[d]).abs() < 1e-5 * (1.0 + want[d].abs()),
+                "coordinate {d}: got {} want {} — per-part decodes must sum to the \
+                 whole-block gradient",
+                out.gradient[d],
+                want[d]
+            );
+        }
+        assert_eq!(
+            master.wire_pool_stats().returned,
+            12,
+            "every streamed delta's wire buffer must recycle"
+        );
+    }
+
+    #[test]
+    fn part_quorums_decode_exactly_from_divergent_survivor_sets() {
+        // Regression: part 0 folds from rows {0, 1, 2} while part 1
+        // folds from rows {0, 1, 3}. Because the worker indexes each
+        // stride's sub-span by the rotated part — not by the stride —
+        // every row's part-`p` delta covers the same samples, so each
+        // quorum decodes exactly on its own and no common survivor set
+        // across parts is needed. (Stride-indexed data would decode to
+        // garbage here; rotation makes divergent sets the common case
+        // whenever streaming actually beats the whole-block quorum.)
+        let (n, dim, parts) = (4usize, 8usize, 2usize);
+        let mut rng = Rng::new(251);
+        let part = BlockPartition::new(vec![0, 8, 0, 0]); // s=1, need 3
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (grads, want) = random_part_grads(n, dim, parts, &mut rng);
+        let mut master = Master::new(scheme.clone(), dim);
+        let pool = crate::util::buffers::BufferPool::new(64);
+        master.set_wire_pool(pool.clone());
+        master.install_slices(Some(uniform_slices(n, 5)), parts);
+
+        let live = vec![true; n];
+        master.begin_collect(0, &live).unwrap();
+        let mut done = false;
+        // Part 0 ← rows 0, 2 at stride 0 and row 1 at stride 1;
+        // part 1 ← rows 1, 3 at stride 0 and row 0 at stride 1.
+        for (row, j) in [(0usize, 0usize), (2, 0), (1, 1), (1, 0), (3, 0), (0, 1)] {
+            done = master.offer(partial_event(&scheme, &grads, row, j, parts)).unwrap();
+        }
+        assert!(done, "both part quorums fill");
+        let out = master.take_outcome();
+        assert_eq!(out.partial_blocks, 1);
+        assert_eq!(out.partial_contributions, 6);
+        for d in 0..dim {
+            assert!(
+                (out.gradient[d] - want[d]).abs() < 1e-5 * (1.0 + want[d].abs()),
+                "coordinate {d}: got {} want {} — each part quorum must decode \
+                 exactly under its own survivor set",
+                out.gradient[d],
+                want[d]
+            );
+        }
+        assert_eq!(master.wire_pool_stats().returned, 6);
+    }
+
+    #[test]
+    fn part_geometry_mismatches_are_refused_and_recycled() {
+        // Every malformed streamed delta is dropped into the right
+        // counter with its buffer recycled — and none of them corrupt
+        // the decode that follows.
+        let (n, dim, parts) = (4usize, 8usize, 3usize);
+        let mut rng = Rng::new(239);
+        let part = BlockPartition::new(vec![0, 8, 0, 0]);
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (grads, want) = random_part_grads(n, dim, parts, &mut rng);
+        let mut master = Master::new(scheme.clone(), dim);
+        let pool = crate::util::buffers::BufferPool::new(64);
+        master.set_wire_pool(pool.clone());
+        master.install_slices(Some(uniform_slices(n, 5)), parts);
+
+        let live = vec![true; n];
+        master.begin_collect(0, &live).unwrap();
+        let mut sent = 0u64;
+        let mut feed = |master: &mut Master, ev: WorkerEvent| {
+            sent += 1;
+            master.offer(ev).unwrap()
+        };
+        // Rotation geometry from another dispatch: parts = 2 ≠ 3.
+        let stale_geom = match partial_event(&scheme, &grads, 0, 0, parts) {
+            WorkerEvent::Partial(mut c) => {
+                c.parts = 2;
+                WorkerEvent::Partial(c)
+            }
+            _ => unreachable!(),
+        };
+        feed(&mut master, stale_geom);
+        // Part index out of range.
+        let bad_part = match partial_event(&scheme, &grads, 0, 0, parts) {
+            WorkerEvent::Partial(mut c) => {
+                c.part = 5;
+                WorkerEvent::Partial(c)
+            }
+            _ => unreachable!(),
+        };
+        feed(&mut master, bad_part);
+        // Binding mismatch: worker 8 claims row 2.
+        let forged = match partial_event(&scheme, &grads, 2, 0, parts) {
+            WorkerEvent::Partial(mut c) => {
+                c.worker = 8;
+                WorkerEvent::Partial(c)
+            }
+            _ => unreachable!(),
+        };
+        feed(&mut master, forged);
+        // Cross-job and stale-iteration deltas.
+        let cross = match partial_event(&scheme, &grads, 0, 0, parts) {
+            WorkerEvent::Partial(mut c) => {
+                c.job = 9;
+                WorkerEvent::Partial(c)
+            }
+            _ => unreachable!(),
+        };
+        feed(&mut master, cross);
+        let old_iter = match partial_event(&scheme, &grads, 0, 0, parts) {
+            WorkerEvent::Partial(mut c) => {
+                c.iter = 7;
+                WorkerEvent::Partial(c)
+            }
+            _ => unreachable!(),
+        };
+        feed(&mut master, old_iter);
+        // A genuine delta, then its exact duplicate (retry).
+        feed(&mut master, partial_event(&scheme, &grads, 0, 0, parts));
+        feed(&mut master, partial_event(&scheme, &grads, 0, 0, parts));
+        // Fill every quorum with rows 0–2 (row 0's stride 0 is in).
+        let mut done = false;
+        for row in 0..3 {
+            for j in 0..parts {
+                if row == 0 && j == 0 {
+                    continue;
+                }
+                done = feed(&mut master, partial_event(&scheme, &grads, row, j, parts));
+            }
+        }
+        assert!(done);
+        let out = master.take_outcome();
+        assert_eq!(out.stale_epoch, 2, "bad geometry counts like a superseded epoch");
+        assert_eq!(out.mismatched_binding, 1);
+        assert_eq!(out.cross_job, 1);
+        assert_eq!(out.late_contributions, 1, "the duplicate stride is late overhead");
+        assert_eq!(out.partial_blocks, 1);
+        for d in 0..dim {
+            assert!(
+                (out.gradient[d] - want[d]).abs() < 1e-5 * (1.0 + want[d].abs()),
+                "coordinate {d}: got {} want {}",
+                out.gradient[d],
+                want[d]
+            );
+        }
+        assert_eq!(master.wire_pool_stats().returned, sent, "every drop path recycles");
+    }
+
+    #[test]
+    fn whole_quorum_overwrites_buffered_and_folded_parts() {
+        // Parts 0's quorum folds first (3 rows' deltas accumulate into
+        // the gradient slice); then a whole-contribution quorum lands.
+        // The exact decode must OVERWRITE the partial sums — not add to
+        // them — and later strides are late overhead.
+        let (n, dim, parts) = (4usize, 8usize, 2usize);
+        let mut rng = Rng::new(241);
+        let part = BlockPartition::new(vec![0, 8, 0, 0]); // s=1, need 3
+        let scheme = Arc::new(CodingScheme::new(part, &mut rng).unwrap());
+        let (grads, want) = random_part_grads(n, dim, parts, &mut rng);
+        // Whole-round per-subset gradients: sums over the data parts.
+        let whole: Vec<Vec<f64>> = (0..n)
+            .map(|k| {
+                (0..dim).map(|d| grads.iter().map(|g| g[k][d]).sum()).collect()
+            })
+            .collect();
+        let mut master = Master::new(scheme.clone(), dim);
+        let pool = crate::util::buffers::BufferPool::new(64);
+        master.set_wire_pool(pool.clone());
+        master.install_slices(Some(uniform_slices(n, 5)), parts);
+
+        let live = vec![true; n];
+        master.begin_collect(0, &live).unwrap();
+        let mut sent = 0u64;
+        // Part 0 arrives from rows 0 (stride 0), 2 (stride 0) and 1
+        // (stride 1): quorum of 3 → the fold lands in the slice.
+        for (row, j) in [(0usize, 0usize), (2, 0), (1, 1)] {
+            sent += 1;
+            assert_eq!((row + j) % parts, 0, "rotation must address part 0");
+            assert!(!master.offer(partial_event(&scheme, &grads, row, j, parts)).unwrap());
+        }
+        // One buffered (un-quorumed) part-1 delta from row 1's stride 0.
+        sent += 1;
+        assert!(!master.offer(partial_event(&scheme, &grads, 1, 0, parts)).unwrap());
+        // Whole-block quorum from rows 0, 1, 2 overwrites everything.
+        let mut done = false;
+        for w in 0..3 {
+            for ev in contributions(&scheme, 0, 0, &whole, w) {
+                sent += 1;
+                done = master.offer(ev).unwrap();
+            }
+        }
+        assert!(done, "the whole quorum completes the block");
+        // Any stride after the overwrite is late.
+        sent += 1;
+        master.offer(partial_event(&scheme, &grads, 0, 1, parts)).unwrap();
+        let out = master.take_outcome();
+        assert_eq!(out.partial_blocks, 0, "the block completed on the WHOLE path");
+        assert_eq!(out.partial_contributions, 4);
+        assert_eq!(out.late_contributions, 1);
+        for d in 0..dim {
+            assert!(
+                (out.gradient[d] - want[d]).abs() < 1e-5 * (1.0 + want[d].abs()),
+                "coordinate {d}: got {} want {} — the exact decode must overwrite the \
+                 folded parts, not stack on them",
+                out.gradient[d],
+                want[d]
+            );
+        }
+        assert_eq!(
+            master.wire_pool_stats().returned,
+            sent,
+            "folded, buffered and late buffers must all recycle"
+        );
     }
 }

@@ -37,6 +37,12 @@ pub struct IterMetrics {
     /// Blocks applied from a semi-async least-squares approximate
     /// decode this iteration (0 in fully-exact mode).
     pub approx_blocks: usize,
+    /// Streamed rotation-part contributions folded into decodes this
+    /// iteration (0 when partial-straggler streaming is off).
+    pub partial_contributions: usize,
+    /// Blocks completed part-wise — every rotation part decoded and
+    /// accumulated — rather than from whole contributions.
+    pub partial_blocks: usize,
     /// Queued virtual time this iteration's broadcast waited behind
     /// in-flight work from other jobs (0 when rounds are serialized):
     /// the max over rows of the backlog depth priced into dispatch.
@@ -126,6 +132,11 @@ pub struct TrainReport {
     pub approx_reconciled: usize,
     pub approx_discarded: usize,
     pub max_approx_bound: f64,
+    /// Blocks completed part-wise across the run (partial-straggler
+    /// streaming): the run-level ledger for the per-iteration
+    /// [`IterMetrics::partial_blocks`] counter, bumped beside the
+    /// master's outcome handoff exactly like the approx counters.
+    pub partial_decodes: usize,
     /// Workers that failed permanently during the run.
     pub failed_workers: Vec<usize>,
 }
@@ -180,6 +191,11 @@ impl TrainReport {
     /// Total blocks applied via semi-async approximate decode.
     pub fn approx_blocks_total(&self) -> usize {
         self.iters.iter().map(|m| m.approx_blocks).sum()
+    }
+
+    /// Total blocks completed part-wise (streamed rotation parts).
+    pub fn partial_blocks_total(&self) -> usize {
+        self.iters.iter().map(|m| m.partial_blocks).sum()
     }
 
     pub fn final_loss(&self) -> Option<f32> {
@@ -254,6 +270,9 @@ impl TrainReport {
             self.wire_pool_hits,
             self.wire_pool_hits + self.wire_pool_misses,
         );
+        if self.partial_decodes > 0 {
+            out.push_str(&format!(" partial-decodes {}", self.partial_decodes));
+        }
         if self.wire != WireSnapshot::default() {
             out.push_str(&format!(
                 " wire tx {}f/{}B rx {}f/{}B hb-miss {} lease-exp {}",
@@ -286,6 +305,8 @@ mod tests {
             stale_epoch_contributions: 0,
             grad_norm: 1.0,
             approx_blocks: 0,
+            partial_contributions: 0,
+            partial_blocks: 0,
             queue_wait: 0.0,
         }
     }

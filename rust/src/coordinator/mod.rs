@@ -127,6 +127,49 @@
 //! overlapped iterations ([`pool`]'s module docs cover the dispatch
 //! gates and accounting invariants).
 //!
+//! ## Round lifecycle with partial-sum streaming (rotated part quorums)
+//!
+//! With [`pool::JobSpec::stream_parts`]` = P ≥ 2` the three-step round
+//! above changes *when* payloads move, never *what* decodes:
+//!
+//! 1. **Dispatch** additionally carries the job's sample slice map —
+//!    [`master::redistribute_samples_weighted`] splits the dataset at
+//!    sample granularity in proportion to fitted speeds (Hamilton
+//!    largest-remainder, validated weights, one-sample floor), and
+//!    [`master::sample_load_multipliers`] feeds the same loads back
+//!    into Eq. (2) — plus the part count `P`.
+//! 2. **Workers stream strides.** Each held span is cut into `P` fixed
+//!    sub-spans — *data parts*, identical from every row that holds the
+//!    subset. A worker visits them in rotated order: at stride `j` it
+//!    computes data part `(row + j) mod P` and emits each block's coded
+//!    delta for it as a [`channel::PartialBlockContribution`]. Both
+//!    halves are load-bearing. Parts being data-indexed (not
+//!    stride-indexed) is what makes a part quorum decodable from *any*
+//!    `N − s` rows — different parts may fold from different survivor
+//!    sets. The rotation is where the speed comes from: the fleet's
+//!    early strides land on **different** parts, so every part quorum
+//!    fills without waiting for anyone's whole round (aligned,
+//!    non-rotated parts gain nothing).
+//! 3. **The master folds part quorums.** Each (block, part) decodes at
+//!    its own `N − s` arrivals — same cached decode vectors — and is
+//!    folded into the job's gradient slice in place
+//!    ([`crate::coding::decoder::decode_into_add`]); the block
+//!    completes when all `P` parts have folded. A **whole-block**
+//!    quorum landing first wins instead: its exact decode overwrites
+//!    the slice and every buffered or folded part is discarded and
+//!    recycled. Duplicate `(row, part)` deltas count as late; a part
+//!    geometry that does not match the installed `P` is refused like a
+//!    stale epoch; semi-async approximation skips any block that has
+//!    already folded parts. The per-iteration `partial_contributions` /
+//!    `partial_blocks` ledger ([`metrics`]) records which path
+//!    completed each block.
+//!
+//! Streamed part buffers ride the same pooled-buffer ownership contract
+//! as whole blocks (every drop path recycles), and `P = 1` (or the
+//! default `stream_parts = 0`) reproduces the whole-block schedule
+//! exactly — pinned by `tests/partial_e2e.rs` and the master's unit
+//! tests.
+//!
 //! ## The transport boundary
 //!
 //! Everything above speaks **task lanes and event channels**, not

@@ -96,10 +96,11 @@ use crate::coding::scheme::CodingScheme;
 use crate::coordinator::adaptive::{
     self, AdaptiveConfig, AdaptiveController, ObservationStore, ResolveStrategy,
 };
-use crate::coordinator::channel::{BlockContribution, JobId, ShardMap, WorkerEvent, WorkerTask};
+use crate::coordinator::channel::{JobId, ShardMap, SliceMap, WorkerEvent, WorkerTask};
 use crate::coordinator::master::{
-    load_multipliers, redistribute_shards, redistribute_shards_weighted, IterOutcome, Master,
-    SemiAsyncConfig,
+    load_multipliers, redistribute_samples_weighted, redistribute_shards,
+    redistribute_shards_weighted, sample_load_multipliers, IterOutcome, Master, SemiAsyncConfig,
+    MAX_STREAM_PARTS,
 };
 use crate::coordinator::membership::{MemberStatus, WorkerId, WorkerRegistry};
 use crate::coordinator::metrics::{
@@ -268,6 +269,7 @@ pub struct JobSpec {
     adaptive: Option<AdaptiveConfig>,
     elastic: Option<ElasticConfig>,
     factory: Option<ExecutorFactory>,
+    stream_parts: usize,
 }
 
 impl JobSpec {
@@ -285,6 +287,7 @@ impl JobSpec {
             adaptive: None,
             elastic: None,
             factory: None,
+            stream_parts: 0,
         }
     }
 
@@ -340,6 +343,22 @@ impl JobSpec {
         self
     }
 
+    /// Sample-granular dispatch and partial-straggler streaming. `0`
+    /// (the default) keeps shard-granular tasks; `1` assigns each code
+    /// row an exact sample-count load (continuous ratios — a two-speed
+    /// fleet whose speed ratio is not a multiple of `1/m` gets its
+    /// exact proportional split) without streaming; `p ≥ 2`
+    /// additionally checkpoints each row's compute at `p` sample
+    /// strides and streams rotated per-part coded deltas, so a block
+    /// can decode part-wise before any single worker finishes its whole
+    /// load. Requires an executor with span support
+    /// ([`crate::runtime::GradExecutor::grad_span_into`]); submit
+    /// rejects the combination otherwise.
+    pub fn stream_parts(mut self, parts: usize) -> Self {
+        self.stream_parts = parts;
+        self
+    }
+
     /// Submit to a pool; the job starts receiving broadcast rounds on
     /// the next scheduler pass.
     pub fn submit(self, pool: &mut WorkerPool) -> Result<JobId> {
@@ -376,6 +395,17 @@ pub struct JobHandle {
     /// multiplier so Eq. (2) accounting reflects the weighted
     /// placement.
     load_mult: Vec<f64>,
+    /// Dataset sample count reported by the job's executor (0 when
+    /// unknown; sample-granular dispatch is rejected at submit then).
+    samples: usize,
+    /// Rotation parts for sample-granular dispatch (0 = shard-granular
+    /// legacy tasks, 1 = exact sample loads without streaming, ≥ 2 =
+    /// rotated partial-delta streaming). See [`JobSpec::stream_parts`].
+    stream_parts: usize,
+    /// Live per-row sample weights (ones until a speed-weighted
+    /// re-plan); every scheme install re-derives the slice map from
+    /// these, since installs reset the master's dispatch plan.
+    sample_weights: Vec<f64>,
     iters_done: usize,
     /// Total coded work consumed, in cycles (`unit_work × Σ(s+1)x` per
     /// iteration) — the deficit counter behind
@@ -457,14 +487,42 @@ impl JobHandle {
         &self.load_mult
     }
 
-    /// Count a contribution that arrived outside the job's own collect
-    /// window.
-    fn note_offcycle(&mut self, c: &BlockContribution) {
-        if c.epoch == self.epoch {
+    /// Rotation parts configured for sample-granular dispatch (0 =
+    /// shard-granular legacy tasks; see [`JobSpec::stream_parts`]).
+    pub fn stream_parts(&self) -> usize {
+        self.stream_parts
+    }
+
+    /// The live sample-granular slice map (None for shard-granular
+    /// jobs): `slices[k]` is subset `k`'s contiguous sample span.
+    pub fn slice_map(&self) -> Option<&Arc<SliceMap>> {
+        self.master.slice_map()
+    }
+
+    /// Count a contribution (whole block or streamed part) that arrived
+    /// outside the job's own collect window, by its encoding epoch.
+    fn note_offcycle(&mut self, epoch: usize) {
+        if epoch == self.epoch {
             self.offcycle_late += 1;
         } else {
             self.offcycle_stale += 1;
         }
+    }
+
+    /// (Re-)derive the sample-granular slice map from the live weights
+    /// and install it on the master. Called after every scheme install
+    /// — installs reset the master's dispatch plan — and after a weight
+    /// update; a no-op for shard-granular jobs. The slice map is also
+    /// the job's load accounting: each row's multiplier is its sample
+    /// share relative to a uniform split.
+    fn reinstall_slices(&mut self) -> Result<()> {
+        if self.stream_parts == 0 {
+            return Ok(());
+        }
+        let map = Arc::new(redistribute_samples_weighted(&self.sample_weights, self.samples)?);
+        self.load_mult = sample_load_multipliers(&map, self.samples);
+        self.master.install_slices(Some(map), self.stream_parts);
+        Ok(())
     }
 
     /// Install a new same-`N` partition as the job's next scheme epoch.
@@ -511,6 +569,9 @@ impl JobHandle {
         let shards = shards.unwrap_or_else(|| self.master.shard_map().clone());
         self.load_mult = load_multipliers(&shards, self.num_data_shards);
         self.master.install_scheme(scheme, self.epoch, roster, shards);
+        // The install reset the master's dispatch plan; sample-granular
+        // jobs re-derive their slice map from the live weights.
+        self.reinstall_slices()?;
         self.report.scheme_epochs.push(SchemeEpoch {
             epoch: self.epoch,
             installed_at_iter: iter,
@@ -550,11 +611,23 @@ impl JobHandle {
             // Speed-weighted actuation: a hetero re-plan re-shards the
             // dataset proportionally to the fitted per-row rates, so
             // fast workers carry more data instead of idling at the
-            // quorum barrier.
-            let shards = plan
-                .fleet_rates
-                .as_ref()
-                .map(|r| Arc::new(redistribute_shards_weighted(r, self.num_data_shards)));
+            // quorum barrier. Sample-granular jobs re-cut the *sample*
+            // spans instead (shard quanta would round the ratio to a
+            // multiple of 1/m); the shard map stays as-is and the new
+            // weights flow into the slice map via the install's
+            // `reinstall_slices`.
+            let shards = if self.stream_parts > 0 {
+                if let Some(r) = plan.fleet_rates.as_ref() {
+                    if r.len() == self.spec.n && r.iter().all(|v| v.is_finite() && *v >= 0.0) {
+                        self.sample_weights = r.clone();
+                    }
+                }
+                None
+            } else {
+                plan.fleet_rates
+                    .as_ref()
+                    .map(|r| Arc::new(redistribute_shards_weighted(r, self.num_data_shards)))
+            };
             self.install_scheme_with_shards(
                 plan.blocks,
                 iter,
@@ -629,6 +702,19 @@ impl JobHandle {
         };
         self.load_mult = load_multipliers(&shards, self.num_data_shards);
         self.master.install_scheme(scheme, self.epoch, roster.to_vec(), shards);
+        if self.stream_parts > 0 {
+            // Weights are per-row: the rebind re-bases them on the new
+            // roster (fitted rates when the fleet plan has them, ones
+            // otherwise) before the slice map is re-cut for `to_n`.
+            self.sample_weights = match fleet_plan.as_ref().and_then(|(_, rates)| rates.as_ref())
+            {
+                Some(r) if r.len() == to_n && r.iter().all(|v| v.is_finite() && *v >= 0.0) => {
+                    r.clone()
+                }
+                _ => vec![1.0; to_n],
+            };
+            self.reinstall_slices()?;
+        }
         crate::log_info!(
             "job {}: iter {iter}: re-dimensioned N {from_n}→{to_n} as scheme epoch {}",
             self.id,
@@ -872,7 +958,27 @@ impl WorkerPool {
 
         // Master-side executor for loss evaluation (worker id n = master).
         let mut eval_exec = if js.eval_every > 0 { Some(factory(n)?) } else { None };
-        let dim = if let Some(e) = &eval_exec { e.dim() } else { factory(n)?.dim() };
+        let (dim, samples, spans_ok) = if let Some(e) = &eval_exec {
+            (e.dim(), e.num_samples(), e.supports_spans())
+        } else {
+            let probe = factory(n)?;
+            (probe.dim(), probe.num_samples(), probe.supports_spans())
+        };
+        if js.stream_parts > 0 {
+            if !spans_ok || samples == 0 {
+                return Err(Error::InvalidArgument(
+                    "stream_parts needs an executor with sample-span support \
+                     (GradExecutor::grad_span_into / num_samples)"
+                        .into(),
+                ));
+            }
+            if js.stream_parts > MAX_STREAM_PARTS {
+                return Err(Error::InvalidArgument(format!(
+                    "stream_parts {} exceeds the wire limit of {MAX_STREAM_PARTS}",
+                    js.stream_parts
+                )));
+            }
+        }
         if dim != js.spec.coords {
             crate::log_warn!(
                 "job {id}: model dim {} != spec.coords {} — virtual-runtime accounting uses \
@@ -892,6 +998,15 @@ impl WorkerPool {
         master.timeout = self.cfg.stall_timeout;
         // Decoded arrival buffers cycle back to the pool's encoders.
         master.set_wire_pool(self.wire_pool.clone());
+        // Sample-granular jobs dispatch with a slice map from round 0:
+        // a uniform split until a speed-weighted re-plan updates the
+        // weights. The map doubles as the load accounting.
+        let mut load_mult = vec![1.0; n];
+        if js.stream_parts > 0 {
+            let map = Arc::new(redistribute_samples_weighted(&vec![1.0; n], samples)?);
+            load_mult = sample_load_multipliers(&map, samples);
+            master.install_slices(Some(map), js.stream_parts);
+        }
 
         // Seed the drift detector with the parameters the initial scheme
         // is presumed optimal for (when the current phase is shifted-exp).
@@ -962,7 +1077,10 @@ impl WorkerPool {
             resolve_strategy,
             state,
             eval_exec,
-            load_mult: vec![1.0; n],
+            load_mult,
+            samples,
+            stream_parts: js.stream_parts,
+            sample_weights: vec![1.0; n],
             iters_done: 0,
             issued_work: 0.0,
             offcycle_late: 0,
@@ -1272,6 +1390,9 @@ impl WorkerPool {
         let vr = virtual_runtime(&job.spec, &job.scheme, &eff);
         self.virtual_makespan += vr;
         job.issued_work += job.spec.unit_work() * job.scheme.work_units_per_worker();
+        // Run-level partial-decode ledger, bumped beside the outcome
+        // handoff (the lint's ledger-discipline pair).
+        job.report.partial_decodes += outcome.partial_blocks;
         job.report.iters.push(IterMetrics {
             iter,
             epoch: job.epoch,
@@ -1286,6 +1407,8 @@ impl WorkerPool {
                 + outcome.cross_job,
             grad_norm,
             approx_blocks,
+            partial_contributions: outcome.partial_contributions,
+            partial_blocks: outcome.partial_blocks,
             // The serialized barrier never dispatches into a backlog.
             queue_wait: 0.0,
         });
@@ -1332,11 +1455,22 @@ impl WorkerPool {
             let ev = match ev {
                 WorkerEvent::Block(c) if c.job != id => {
                     match self.jobs.get_mut(c.job) {
-                        Some(other) => other.note_offcycle(&c),
+                        Some(other) => other.note_offcycle(c.epoch),
                         None => self.cross_job_dropped += 1,
                     }
                     // The router dropped this contribution, so the
                     // router recycles its wire buffer.
+                    self.wire_pool.put(c.coded);
+                    continue;
+                }
+                WorkerEvent::Partial(c) if c.job != id => {
+                    // Streamed deltas are late by definition off-cycle
+                    // (they never feed pending reconciliations); same
+                    // router-recycles-what-it-drops contract as blocks.
+                    match self.jobs.get_mut(c.job) {
+                        Some(other) => other.note_offcycle(c.epoch),
+                        None => self.cross_job_dropped += 1,
+                    }
                     self.wire_pool.put(c.coded);
                     continue;
                 }
@@ -1686,10 +1820,30 @@ impl WorkerPool {
                         } else if let Some(c) = job.master.offer_pending(c) {
                             // Not a pending reconciliation either: a
                             // plain off-cycle tail block.
-                            job.note_offcycle(&c);
+                            job.note_offcycle(c.epoch);
                             self.wire_pool.put(c.coded);
                         }
                         self.apply_reconciles(jid);
+                    }
+                }
+            }
+            WorkerEvent::Partial(c) => {
+                match self.jobs.get_mut(c.job) {
+                    None => {
+                        self.cross_job_dropped += 1;
+                        self.wire_pool.put(c.coded);
+                    }
+                    Some(job) => {
+                        if job.master.is_collecting() {
+                            job.master.offer(WorkerEvent::Partial(c))?;
+                        } else {
+                            // Streamed deltas never feed pending
+                            // reconciliations: an off-cycle part is a
+                            // plain late tail, recycled by the router
+                            // that dropped it.
+                            job.note_offcycle(c.epoch);
+                            self.wire_pool.put(c.coded);
+                        }
                     }
                 }
             }
@@ -1802,6 +1956,7 @@ impl WorkerPool {
         let grad_norm = outcome.gradient.iter().map(|g| g * g).sum::<f64>().sqrt();
         job.state.step(&outcome.gradient, job.lr);
         job.report.approx_decodes += approx_blocks;
+        job.report.partial_decodes += outcome.partial_blocks;
         job.report.iters.push(IterMetrics {
             iter: open.iter,
             epoch: job.epoch,
@@ -1816,6 +1971,8 @@ impl WorkerPool {
                 + outcome.cross_job,
             grad_norm,
             approx_blocks,
+            partial_contributions: outcome.partial_contributions,
+            partial_blocks: outcome.partial_blocks,
             queue_wait: open.queue_wait,
         });
         job.iters_done += 1;

@@ -36,7 +36,9 @@
 use std::collections::HashMap;
 use std::sync::mpsc::Receiver;
 
-use crate::coordinator::channel::{BlockContribution, JobId, WorkerEvent, WorkerTask};
+use crate::coordinator::channel::{
+    BlockContribution, JobId, PartialBlockContribution, WorkerEvent, WorkerTask,
+};
 use crate::coordinator::straggler::block_completion_stamps_unit;
 use crate::coordinator::PacingMode;
 use crate::optimizer::blocks::BlockRange;
@@ -109,7 +111,7 @@ pub fn run(ctx: WorkerContext) {
     let mut ever_built = false;
 
     while let Ok(task) = tasks.recv() {
-        let (job, iter, epoch, row, scheme, shards, theta, factory, cycle_time, unit_work) =
+        let (job, iter, epoch, row, scheme, shards, theta, factory, cycle_time, unit_work, slices, parts) =
             match task {
                 WorkerTask::Compute {
                     job,
@@ -122,7 +124,11 @@ pub fn run(ctx: WorkerContext) {
                     factory,
                     cycle_time,
                     unit_work,
-                } => (job, iter, epoch, row, scheme, shards, theta, factory, cycle_time, unit_work),
+                    slices,
+                    parts,
+                } => {
+                    (job, iter, epoch, row, scheme, shards, theta, factory, cycle_time, unit_work, slices, parts)
+                }
                 WorkerTask::Drain => {
                     let _ = events.send(WorkerEvent::Left { worker: id });
                     return;
@@ -195,55 +201,224 @@ pub fn run(ctx: WorkerContext) {
             continue;
         };
         let dim = exec.dim();
-        // Real compute: partial gradients of every dataset shard backing
-        // a held subset, batched so the executor can stage θ once
-        // (§Perf opt 2). Encoding consumes the f32 results directly
-        // (§Perf opt 1).
-        let flat: Vec<usize> =
-            epoch_state.held_shards.iter().flat_map(|s| s.iter().copied()).collect();
-        let flat_grads = match exec.grad_shards(&theta, &flat) {
-            Ok(g) => g,
-            Err(e) => {
+        // Sample-granular dispatch ([`SliceMap`] present): the held
+        // subsets' gradients come from arbitrary sample spans instead of
+        // dataset shards, and with `parts > 1` the spans are streamed as
+        // rotated per-stride coded deltas. `slices: None` keeps the
+        // shard-granular path below bit-for-bit.
+        let mut span_grads: Option<Vec<Vec<f32>>> = None;
+        if let Some(slice_map) = slices.as_deref() {
+            if !exec.supports_spans() {
+                // Transient: this job's executor is shard-only, so the
+                // job codes around this worker for the iteration exactly
+                // like any other straggler.
                 let _ = events.send(WorkerEvent::Failed {
                     worker: id,
                     job,
                     iter,
-                    reason: format!("grad_shards: {e}"),
-                    fatal: false, // the loop continues: next task may succeed
+                    reason: "sample-granular task but executor lacks span support".into(),
+                    fatal: false,
                 });
                 continue;
             }
-        };
-        // Re-assemble per held subset: a subset's gradient is the sum
-        // over its backing shards (after an elastic re-dimension a
-        // subset can back several shards, or — when N grew past the
-        // dataset's shard count — none, contributing exact zeros).
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(epoch_state.held.len());
-        let mut flat_iter = flat_grads.into_iter();
-        // lint: allow(panic_hygiene) — grad_shards yields one gradient per requested shard
-        let mut next_grad = || flat_iter.next().expect("grad_shards shorted the request");
-        for backing in &epoch_state.held_shards {
-            match backing.len() {
-                0 => {
-                    // Recycled scratch buffer, zero-filled to the model
-                    // dimension (take() hands it back cleared).
-                    let mut z = scratch.take(dim);
-                    z.resize(dim, 0.0);
-                    grads.push(z);
-                }
-                1 => grads.push(next_grad()),
-                _ => {
-                    let mut acc = next_grad();
-                    for _ in 1..backing.len() {
-                        let g = next_grad();
-                        for (a, v) in acc.iter_mut().zip(g.iter()) {
-                            *a += v;
+            let parts = parts.max(1);
+            // Spans of every held subset, in held (support) order — the
+            // order the encode kernel consumes gradients in. A subset
+            // past the map's end contributes exact zeros (defensive:
+            // the master sizes the map to the roster before dispatch).
+            let spans: Vec<(usize, usize)> =
+                epoch_state.held.iter().map(|&k| slice_map.get(k).copied().unwrap_or((0, 0))).collect();
+            if parts > 1 {
+                // Rotated partial streaming: at stride `j` this row
+                // computes the **part-indexed** sub-span
+                // `part = (row + j) mod parts` of every held subset,
+                // encodes it per block as a coded *delta*, and emits it
+                // under that part index. Indexing the data by the part
+                // (not the stride) is load-bearing: every holder of a
+                // subset covers the *same* samples for part `p`, so a
+                // part quorum decodes exactly from ANY `N − s` rows —
+                // while the rotation makes each part index complete
+                // first at a different rotation of the fleet (see
+                // [`PartialBlockContribution`]).
+                let stamps = block_completion_stamps_unit(unit_work, &scheme, cycle_time);
+                let round_virtual = stamps.last().copied().unwrap_or(0.0);
+                let samples_total: usize = spans.iter().map(|&(lo, hi)| hi - lo).sum();
+                let mut samples_done = 0usize;
+                let mut elapsed_virtual = 0.0f64;
+                'strides: for j in 0..parts {
+                    // The sub-span this stride covers is indexed by the
+                    // rotated part, not by `j`: rows disagree on *when*
+                    // they compute part `p` but must agree on *which*
+                    // samples it holds, or part-wise decode breaks.
+                    let part = (row + j) % parts;
+                    // Per-subset delta buffers for this stride, from the
+                    // thread-local scratch freelist (zero-filled so a
+                    // degenerate empty sub-span contributes exact zeros).
+                    let mut deltas: Vec<Vec<f32>> = Vec::with_capacity(spans.len());
+                    for &(lo, hi) in &spans {
+                        let w = hi - lo;
+                        let (sub_lo, sub_hi) =
+                            (lo + w * part / parts, lo + w * (part + 1) / parts);
+                        let mut d = scratch.take(dim);
+                        d.resize(dim, 0.0);
+                        if sub_lo < sub_hi {
+                            if let Err(e) = exec.grad_span_into(&theta, sub_lo, sub_hi, &mut d) {
+                                scratch.put(d);
+                                for d in deltas {
+                                    scratch.put(d);
+                                }
+                                let _ = events.send(WorkerEvent::Failed {
+                                    worker: id,
+                                    job,
+                                    iter,
+                                    reason: format!("grad_span_into: {e}"),
+                                    fatal: false, // delivered strides stay decodable
+                                });
+                                break 'strides;
+                            }
+                        }
+                        samples_done += sub_hi - sub_lo;
+                        deltas.push(d);
+                    }
+                    for (block_idx, r) in epoch_state.ranges.iter().enumerate() {
+                        let mut coded = wire_pool.take(r.len());
+                        scheme.encode_block_range_f32_into(row, r, &deltas, &mut coded);
+                        // One stride is a 1/parts compression of the
+                        // whole-round emission schedule, offset by the
+                        // `j` full strides before it.
+                        let stamp = (round_virtual * j as f64 + stamps[block_idx]) / parts as f64;
+                        if let PacingMode::RealScaled { ns_per_unit } = pacing {
+                            let wait_units = stamp - elapsed_virtual;
+                            elapsed_virtual = stamp;
+                            let ns = (wait_units * ns_per_unit).max(0.0);
+                            if ns > 0.0 {
+                                std::thread::sleep(std::time::Duration::from_nanos(ns as u64));
+                            }
+                        }
+                        let sent = events.send(WorkerEvent::Partial(PartialBlockContribution {
+                            job,
+                            iter,
+                            epoch,
+                            worker: id,
+                            row,
+                            block_idx,
+                            part,
+                            parts,
+                            samples_done,
+                            samples_total,
+                            virtual_time: stamp,
+                            coded,
+                        }));
+                        if let Err(undelivered) = sent {
+                            // Master gone mid-stream: reclaim the pooled
+                            // wire buffer (and this stride's scratch)
+                            // before exiting, mirroring the whole-block
+                            // send-failure path below.
+                            if let WorkerEvent::Partial(c) = undelivered.0 {
+                                wire_pool.put(c.coded);
+                            }
+                            for d in deltas {
+                                scratch.put(d);
+                            }
+                            return;
                         }
                     }
-                    grads.push(acc);
+                    for d in deltas {
+                        scratch.put(d);
+                    }
                 }
+                continue;
             }
+            // parts == 1: exact sample loads without streaming — the
+            // whole-span gradients feed the ordinary whole-block
+            // emission loop below, leaving the master's collect path
+            // untouched.
+            let mut grads: Vec<Vec<f32>> = Vec::with_capacity(spans.len());
+            let mut span_failed = false;
+            for &(lo, hi) in &spans {
+                let mut g = scratch.take(dim);
+                g.resize(dim, 0.0);
+                if lo < hi {
+                    if let Err(e) = exec.grad_span_into(&theta, lo, hi, &mut g) {
+                        scratch.put(g);
+                        let _ = events.send(WorkerEvent::Failed {
+                            worker: id,
+                            job,
+                            iter,
+                            reason: format!("grad_span_into: {e}"),
+                            fatal: false,
+                        });
+                        span_failed = true;
+                        break;
+                    }
+                }
+                grads.push(g);
+            }
+            if span_failed {
+                for g in grads {
+                    scratch.put(g);
+                }
+                continue;
+            }
+            span_grads = Some(grads);
         }
+        let grads: Vec<Vec<f32>> = match span_grads {
+            Some(g) => g,
+            None => {
+                // Real compute: partial gradients of every dataset shard
+                // backing a held subset, batched so the executor can
+                // stage θ once (§Perf opt 2). Encoding consumes the f32
+                // results directly (§Perf opt 1).
+                let flat: Vec<usize> =
+                    epoch_state.held_shards.iter().flat_map(|s| s.iter().copied()).collect();
+                let flat_grads = match exec.grad_shards(&theta, &flat) {
+                    Ok(g) => g,
+                    Err(e) => {
+                        let _ = events.send(WorkerEvent::Failed {
+                            worker: id,
+                            job,
+                            iter,
+                            reason: format!("grad_shards: {e}"),
+                            fatal: false, // the loop continues: next task may succeed
+                        });
+                        continue;
+                    }
+                };
+                // Re-assemble per held subset: a subset's gradient is the
+                // sum over its backing shards (after an elastic
+                // re-dimension a subset can back several shards, or —
+                // when N grew past the dataset's shard count — none,
+                // contributing exact zeros).
+                let mut grads: Vec<Vec<f32>> = Vec::with_capacity(epoch_state.held.len());
+                let mut flat_iter = flat_grads.into_iter();
+                // lint: allow(panic_hygiene) — grad_shards yields one gradient per requested shard
+                let mut next_grad = || flat_iter.next().expect("grad_shards shorted the request");
+                for backing in &epoch_state.held_shards {
+                    match backing.len() {
+                        0 => {
+                            // Recycled scratch buffer, zero-filled to the
+                            // model dimension (take() hands it back
+                            // cleared).
+                            let mut z = scratch.take(dim);
+                            z.resize(dim, 0.0);
+                            grads.push(z);
+                        }
+                        1 => grads.push(next_grad()),
+                        _ => {
+                            let mut acc = next_grad();
+                            for _ in 1..backing.len() {
+                                let g = next_grad();
+                                for (a, v) in acc.iter_mut().zip(g.iter()) {
+                                    *a += v;
+                                }
+                            }
+                            grads.push(acc);
+                        }
+                    }
+                }
+                grads
+            }
+        };
         // Stream coded blocks in coordinate order (the paper's sequential
         // emission), stamping each with its virtual completion time.
         let stamps = block_completion_stamps_unit(unit_work, &scheme, cycle_time);
@@ -296,7 +471,7 @@ mod tests {
 
     use super::*;
     use crate::coding::scheme::CodingScheme;
-    use crate::coordinator::channel::ShardMap;
+    use crate::coordinator::channel::{ShardMap, SliceMap};
     use crate::data::synthetic;
     use crate::optimizer::blocks::BlockPartition;
     use crate::runtime::host::HostModel;
@@ -349,6 +524,8 @@ mod tests {
                 factory,
                 cycle_time: 1.0,
                 unit_work: 1.0,
+                slices: None,
+                parts: 1,
             })
             .expect("worker is alive and waiting");
         drop(task_tx);
@@ -356,5 +533,97 @@ mod tests {
         let stats = wire_pool.stats();
         assert_eq!(stats.returned, 1, "wire buffer not recycled on send failure");
         assert_eq!(wire_pool.free_len(), 1);
+    }
+
+    /// The streaming path's per-part coded deltas must (a) rotate the
+    /// part index by the worker's row, (b) report monotone sample
+    /// progress, and (c) sum to the whole-block contribution the same
+    /// slice map produces without streaming — code linearity is what
+    /// lets the master decode each part independently and accumulate.
+    #[test]
+    fn rotated_partial_deltas_sum_to_the_whole_block() {
+        let n = 4;
+        let (dataset, theta) = synthetic::linear_regression(4, 24, n, 0.0, 7).unwrap();
+        let blocks = BlockPartition::single_level(n, 1, 4);
+        let mut rng = Rng::new(9);
+        let scheme = Arc::new(CodingScheme::new(blocks, &mut rng).unwrap());
+        let shards: Arc<ShardMap> = Arc::new((0..n).map(|k| vec![k]).collect());
+        let slices: Arc<SliceMap> = Arc::new(vec![(0, 6), (6, 12), (12, 18), (18, 24)]);
+        let factory = host_factory(dataset, HostModel::LinearRegression);
+        let wire_pool = BufferPool::new(8);
+        let (task_tx, task_rx) = mpsc::channel();
+        let (event_tx, event_rx) = mpsc::channel();
+        let ctx = WorkerContext {
+            id: 1,
+            tasks: task_rx,
+            events: EventSender::InProc(event_tx),
+            pacing: PacingMode::Virtual,
+            wire_pool,
+        };
+        let handle = std::thread::spawn(move || run(ctx));
+        let theta = Arc::new(theta);
+        // Same slice map twice: streamed in 3 rotation parts, then as a
+        // single whole-block contribution.
+        for (iter, parts) in [(0usize, 3usize), (1, 1)] {
+            task_tx
+                .send(WorkerTask::Compute {
+                    job: 0,
+                    iter,
+                    epoch: 0,
+                    row: 1,
+                    scheme: scheme.clone(),
+                    shards: shards.clone(),
+                    theta: theta.clone(),
+                    factory: factory.clone(),
+                    cycle_time: 1.0,
+                    unit_work: 1.0,
+                    slices: Some(slices.clone()),
+                    parts,
+                })
+                .expect("worker is alive and waiting");
+        }
+        task_tx.send(WorkerTask::Drain).expect("worker is alive");
+        let mut partials = Vec::new();
+        let mut whole: Option<Vec<f32>> = None;
+        loop {
+            match event_rx.recv().expect("worker events flow until Left") {
+                WorkerEvent::Joined { worker } => assert_eq!(worker, 1),
+                WorkerEvent::Partial(p) => partials.push(p),
+                WorkerEvent::Block(b) => {
+                    assert_eq!(b.iter, 1);
+                    whole = Some(b.coded);
+                }
+                WorkerEvent::Left { .. } => break,
+                WorkerEvent::Failed { reason, .. } => panic!("unexpected failure: {reason}"),
+            }
+        }
+        handle.join().expect("worker exits cleanly");
+        assert_eq!(partials.len(), 3, "one delta per stride for the single block");
+        let whole = whole.expect("parts == 1 emits a whole BlockContribution");
+        // Row 1 at (n=4, s=1) holds subsets {1, 2} → spans (6,12) and
+        // (12,18): 12 samples streamed in 3 strides of 4.
+        let mut last_stamp = f64::NEG_INFINITY;
+        for (j, p) in partials.iter().enumerate() {
+            assert_eq!(p.part, (1 + j) % 3, "part index rotates by the row");
+            assert_eq!(p.parts, 3);
+            assert_eq!((p.block_idx, p.row), (0, 1));
+            assert_eq!(p.samples_total, 12);
+            assert_eq!(p.samples_done, 4 * (j + 1), "monotone sample progress");
+            assert!(p.virtual_time > last_stamp, "stamps advance stride by stride");
+            last_stamp = p.virtual_time;
+        }
+        let mut sum = vec![0.0f64; whole.len()];
+        for p in &partials {
+            assert_eq!(p.coded.len(), whole.len());
+            for (s, v) in sum.iter_mut().zip(p.coded.iter()) {
+                *s += *v as f64;
+            }
+        }
+        for (s, w) in sum.iter().zip(whole.iter()) {
+            assert!(
+                (s - *w as f64).abs() <= 1e-4 * (1.0 + w.abs() as f64),
+                "per-part deltas must sum to the whole-block codeword: {s} vs {w}"
+            );
+        }
     }
 }

@@ -176,6 +176,47 @@
 //! for the ownership contract and `benches/hotpath.rs` for the
 //! measured encode/decode rows behind `BENCH_hotpath.json`.
 //!
+//! ## Sample-granular loads + partial-sum streaming (rotated parts)
+//!
+//! Two refinements close the gap between the optimizer's *continuous*
+//! per-row loads and what the protocol can actually ship:
+//!
+//! * **Continuous sample apportionment.** Speed-weighted re-sharding at
+//!   shard granularity quantizes every row's load to multiples of
+//!   `1/m`: a 2.5:1 two-speed fleet rounds to 6/2 of 8 virtual shards
+//!   and the nominally *fast* rows become the quorum stragglers.
+//!   [`coordinator::master::redistribute_samples_weighted`] apportions
+//!   **individual samples** instead (Hamilton largest-remainder over
+//!   validated weights — quota error under one sample, with a
+//!   one-sample floor so no live worker holding a code row is ever
+//!   assigned zero work), and the executor contract
+//!   ([`runtime::GradExecutor::grad_span_into`]) computes any
+//!   `[lo, hi)` sample span with bit-stable prefix+remainder
+//!   accumulation, so per-row loads follow fitted speeds exactly. The
+//!   sample-granular variants **reject** non-finite or negative weights
+//!   with an `Err` where the legacy shard path keeps its documented
+//!   silent degrade-to-uniform.
+//! * **Rotated partial-sum streaming**
+//!   ([`coordinator::pool::JobSpec::stream_parts`]). A streaming worker
+//!   cuts each held span into `P` fixed sub-spans (*data parts* — the
+//!   same samples from every row, so any `N − s` rows decode a part)
+//!   and emits each block's **coded delta** per part as a
+//!   [`coordinator::channel::PartialBlockContribution`]
+//!   (`samples_done / samples_total` + the f32 partial in a pooled
+//!   buffer). The *visit order* rotates per row — stride `j` computes
+//!   part `(row + j) mod P` — so the fleet's early strides cover
+//!   different parts and a part's quorum fills from `N − s` rows long
+//!   before any whole round ends (aligned, non-rotated parts provably
+//!   gain nothing). The
+//!   master folds each part quorum straight into the job's gradient
+//!   slice ([`coding::decoder::decode_into_add`]) and completes the
+//!   block when all `P` parts have decoded — or discards every buffered
+//!   and folded part the moment a whole-block quorum lands first
+//!   (exact overwrite). On single-level schemes, streaming completion
+//!   never trails whole-block completion draw by draw
+//!   ([`sim::event_sim::simulate_iteration_streaming`]); both gains are
+//!   tracked by `benches/partial_stragglers.rs` → `BENCH_partial.json`.
+//!
 //! ## The transport boundary (in-process vs real sockets)
 //!
 //! Everything above — pool scheduling, decode state, membership epochs,
@@ -232,10 +273,10 @@
 //! | rule | contract | since |
 //! |------|----------|-------|
 //! | `determinism` | library code (`rust/src/`, outside `bench_harness`, `runtime`, `util/logging` and the binaries) never reads wall clocks or OS entropy — scheduling runs on virtual time so reruns are bit-identical (PR 7's serialized-vs-async equality depends on it) | PR 8 |
-//! | `buffer_ownership` | in `pool.rs`/`master.rs`/`worker.rs`, every pooled-buffer `take` and every counted contribution drop recycles the wire buffer back to [`util::buffers::BufferPool`] (the PR 6 ownership contract) | PR 8 |
+//! | `buffer_ownership` | in `pool.rs`/`master.rs`/`worker.rs`, every pooled-buffer `take` and every counted contribution drop recycles the wire buffer back to [`util::buffers::BufferPool`] (the PR 6 ownership contract, covering whole-block *and* streamed-part payloads) | PR 8, extended PR 10 |
 //! | `lock_order` | mutexes are acquired in table order — observation store → lease table → buffer-pool inner → socket writer → stdio — and every lock receiver has a declared rank; checked through same-file helper calls | PR 8, extended PR 9 |
 //! | `panic_hygiene` | no `.unwrap()`/`.expect(` in `coordinator/` or `transport/` non-test code; recovering forms or a documented allow only | PR 8, extended PR 9 |
-//! | `ledger_discipline` | `approx_*`/`discarded` ledger counters (PR 7's semi-async accounting) are only written next to their witness call (`take_outcome`, `take_reconciled`, `discard_pending`, `.drain(`) | PR 8 |
+//! | `ledger_discipline` | `approx_*`/`discarded` and `partial_*` ledger counters (PR 7's semi-async accounting, PR 10's streamed-part accounting) are only written next to their witness call (`take_outcome`, `take_reconciled`, `discard_pending`, `.drain(`) | PR 8, extended PR 10 |
 //! | `bench_stamping` | every bench that writes a `BENCH_*.json` artifact stamps it via `stamp_bench_meta` (the PR 5 provenance contract) | PR 8 |
 //!
 //! A violation may be waived only inline, with a reason:

@@ -161,6 +161,62 @@ pub fn fused_combine_into_f64(sources: &[(f64, &[f32])], out: &mut [f64]) {
     }
 }
 
+/// Fused combine, `f32` sources **added onto** a caller-owned `f64`
+/// slice: `out[i] += Σ_k coef_k · src_k[i]`. The streaming collect path
+/// folds each per-part decode into the gradient range it shares with
+/// the other parts of the block, so the destination must accumulate
+/// rather than overwrite. Per-tile accumulation order matches
+/// [`fused_combine_into_f64`] exactly; only the final write differs
+/// (`+=` instead of `copy_from_slice`).
+pub fn fused_combine_into_f64_add(sources: &[(f64, &[f32])], out: &mut [f64]) {
+    let len = out.len();
+    debug_assert!(sources.iter().all(|(_, s)| s.len() >= len));
+    let mut acc = [0.0f64; TILE];
+    let mut start = 0usize;
+    while start < len {
+        let t = TILE.min(len - start);
+        let acc = &mut acc[..t];
+        acc.fill(0.0);
+        for &(coef, src) in sources {
+            if coef == 0.0 {
+                continue;
+            }
+            axpy_tile_f32(acc, coef, &src[start..start + t]);
+        }
+        for (o, &v) in out[start..start + t].iter_mut().zip(acc.iter()) {
+            *o += v;
+        }
+        start += t;
+    }
+}
+
+/// [`fused_combine_into_f64_add`], parallelized over coordinate tiles
+/// with scoped threads once the slice is at least [`PAR_MIN_LEN`] long.
+/// Tile-aligned chunking keeps per-coordinate accumulation order
+/// unchanged, so the result is bit-identical to the serial kernel.
+pub fn fused_combine_into_f64_add_auto(sources: &[(f64, &[f32])], out: &mut [f64]) {
+    let len = out.len();
+    let threads = if len >= PAR_MIN_LEN {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(MAX_COMBINE_THREADS)
+    } else {
+        1
+    };
+    if threads <= 1 {
+        return fused_combine_into_f64_add(sources, out);
+    }
+    let chunk = len.div_ceil(threads).div_ceil(TILE) * TILE;
+    std::thread::scope(|scope| {
+        for (i, out_chunk) in out.chunks_mut(chunk).enumerate() {
+            let off = i * chunk;
+            scope.spawn(move || {
+                let shifted: Vec<(f64, &[f32])> =
+                    sources.iter().map(|&(c, s)| (c, &s[off..off + out_chunk.len()])).collect();
+                fused_combine_into_f64_add(&shifted, out_chunk);
+            });
+        }
+    });
+}
+
 /// [`fused_combine_into_f64`], parallelized over coordinate tiles with
 /// scoped threads once the block is at least [`PAR_MIN_LEN`] long.
 /// Chunk boundaries are tile-aligned and per-coordinate accumulation
@@ -284,6 +340,46 @@ mod tests {
             fused_combine_into_f64(&sources, &mut got);
             assert!(got.iter().zip(want.iter()).all(|(a, b)| a == b), "len={len}");
         }
+    }
+
+    #[test]
+    fn additive_combine_accumulates_on_dirty_slice() {
+        let mut rng = Rng::new(53);
+        for &len in &LENS {
+            let srcs: Vec<Vec<f32>> = (0..4)
+                .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let coefs = [0.5, 0.0, -1.25, rng.normal()];
+            let sources: Vec<(f64, &[f32])> =
+                coefs.iter().copied().zip(srcs.iter().map(|s| s.as_slice())).collect();
+            let base: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            // Reference: overwrite combine, then add the base term.
+            let mut combined = vec![0.0f64; len];
+            fused_combine_into_f64(&sources, &mut combined);
+            let want: Vec<f64> =
+                base.iter().zip(combined.iter()).map(|(b, c)| b + c).collect();
+            let mut got = base.clone();
+            fused_combine_into_f64_add(&sources, &mut got);
+            assert!(got.iter().zip(want.iter()).all(|(a, b)| a == b), "len={len}");
+        }
+    }
+
+    #[test]
+    fn parallel_additive_combine_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(59);
+        let len = PAR_MIN_LEN + 2 * TILE + 5;
+        let srcs: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let coefs: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+        let sources: Vec<(f64, &[f32])> =
+            coefs.iter().copied().zip(srcs.iter().map(|s| s.as_slice())).collect();
+        let base: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+        let mut serial = base.clone();
+        fused_combine_into_f64_add(&sources, &mut serial);
+        let mut par = base;
+        fused_combine_into_f64_add_auto(&sources, &mut par);
+        assert!(par.iter().zip(serial.iter()).all(|(a, b)| a == b));
     }
 
     #[test]

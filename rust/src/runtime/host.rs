@@ -69,6 +69,49 @@ impl GradExecutor for HostExecutor {
         Ok(self.grad_range(theta, r.start, r.end)?.1)
     }
 
+    fn grad_span_into(
+        &mut self,
+        theta: &[f32],
+        lo: usize,
+        hi: usize,
+        acc: &mut [f32],
+    ) -> Result<f64> {
+        if theta.len() != self.dim {
+            return Err(Error::Runtime(format!(
+                "theta has {} entries, model needs {}",
+                theta.len(),
+                self.dim
+            )));
+        }
+        if acc.len() != self.dim {
+            return Err(Error::Runtime(format!(
+                "span accumulator has {} entries, model needs {}",
+                acc.len(),
+                self.dim
+            )));
+        }
+        if lo > hi || hi > self.data.samples() {
+            return Err(Error::Runtime(format!(
+                "sample span [{lo}, {hi}) out of range (m={})",
+                self.data.samples()
+            )));
+        }
+        match &self.model {
+            HostModel::LinearRegression => {
+                Ok(linreg_loss_grad_into(&self.data, theta, lo, hi, acc))
+            }
+            HostModel::Mlp { hidden } => mlp_loss_grad_into(&self.data, theta, *hidden, lo, hi, acc),
+        }
+    }
+
+    fn supports_spans(&self) -> bool {
+        true
+    }
+
+    fn num_samples(&self) -> usize {
+        self.data.samples()
+    }
+
     fn loss(&mut self, theta: &[f32]) -> Result<f32> {
         let m = self.data.samples();
         Ok(self.grad_range(theta, 0, m)?.0 as f32)
@@ -85,8 +128,24 @@ impl GradExecutor for HostExecutor {
 
 /// `(loss, grad)` of ½‖Xθ−y‖² over sample rows `[lo, hi)`.
 fn linreg_loss_grad(data: &Dataset, theta: &[f32], lo: usize, hi: usize) -> (f64, Vec<f32>) {
+    let mut grad = vec![0.0f32; data.features];
+    let loss = linreg_loss_grad_into(data, theta, lo, hi, &mut grad);
+    (loss, grad)
+}
+
+/// The linreg gradient **accumulated** onto `grad`, one sample at a
+/// time in index order. Splitting `[lo, hi)` at any point and calling
+/// this twice on the same accumulator runs the identical `+=` sequence
+/// as one call over the whole span — the bit-equality contract the
+/// streaming checkpoints rely on.
+fn linreg_loss_grad_into(
+    data: &Dataset,
+    theta: &[f32],
+    lo: usize,
+    hi: usize,
+    grad: &mut [f32],
+) -> f64 {
     let d = data.features;
-    let mut grad = vec![0.0f32; d];
     let mut loss = 0.0f64;
     for m in lo..hi {
         let row = &data.x[m * d..(m + 1) * d];
@@ -100,7 +159,7 @@ fn linreg_loss_grad(data: &Dataset, theta: &[f32], lo: usize, hi: usize) -> (f64
             *g += resid * xi;
         }
     }
-    (loss, grad)
+    loss
 }
 
 /// `(loss, grad)` of the summed softmax-CE MLP over rows `[lo, hi)`.
@@ -111,6 +170,23 @@ fn mlp_loss_grad(
     lo: usize,
     hi: usize,
 ) -> Result<(f64, Vec<f32>)> {
+    let mut grad = vec![0.0f32; theta.len()];
+    let loss = mlp_loss_grad_into(data, theta, hidden, lo, hi, &mut grad)?;
+    Ok((loss, grad))
+}
+
+/// The MLP gradient **accumulated** onto `grad`, one sample at a time
+/// in index order (same split-span bit-equality contract as
+/// [`linreg_loss_grad_into`]; the per-sample scratch buffers are fully
+/// rewritten each sample, so checkpoint boundaries are invisible).
+fn mlp_loss_grad_into(
+    data: &Dataset,
+    theta: &[f32],
+    hidden: usize,
+    lo: usize,
+    hi: usize,
+    grad: &mut [f32],
+) -> Result<f64> {
     let d = data.features;
     let h = hidden;
     let c = data.targets;
@@ -120,8 +196,10 @@ fn mlp_loss_grad(
     if b2.len() != c {
         return Err(Error::Runtime("theta length mismatch for MLP".into()));
     }
+    if grad.len() != theta.len() {
+        return Err(Error::Runtime("grad length mismatch for MLP".into()));
+    }
 
-    let mut grad = vec![0.0f32; theta.len()];
     let (gw1, grest) = grad.split_at_mut(d * h);
     let (gb1, grest) = grest.split_at_mut(h);
     let (gw2, gb2) = grest.split_at_mut(h * c);
@@ -211,7 +289,7 @@ fn mlp_loss_grad(
             *g += v;
         }
     }
-    Ok((loss, grad))
+    Ok(loss)
 }
 
 #[cfg(test)]
@@ -296,6 +374,68 @@ mod tests {
         for (a, b) in summed.iter().zip(full.iter()) {
             assert!((a - *b as f64).abs() < 1e-3, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn span_prefix_plus_remainder_is_bit_equal_to_whole_span() {
+        // The streaming checkpoint contract: accumulating [lo, mid) then
+        // [mid, hi) into ONE buffer runs the identical per-sample `+=`
+        // sequence as the whole span, so the results are bitwise equal —
+        // for every cut point, both model families.
+        let (lin, _) = synthetic::linear_regression(6, 23, 4, 0.3, 77).unwrap();
+        let cls = synthetic::classification(5, 3, 23, 4, 0.1, 78).unwrap();
+        let cases: Vec<(Arc<Dataset>, HostModel)> = vec![
+            (lin, HostModel::LinearRegression),
+            (cls, HostModel::Mlp { hidden: 6 }),
+        ];
+        for (ds, model) in cases {
+            let mut exec = HostExecutor::new(ds.clone(), model).unwrap();
+            let dim = exec.dim();
+            assert!(exec.supports_spans());
+            assert_eq!(exec.num_samples(), 23);
+            let mut rng = Rng::new(83);
+            let theta: Vec<f32> = (0..dim).map(|_| rng.normal() as f32 * 0.4).collect();
+            let (lo, hi) = (3usize, 20usize);
+            let mut whole = vec![0.0f32; dim];
+            let loss_whole = exec.grad_span_into(&theta, lo, hi, &mut whole).unwrap();
+            for mid in lo..=hi {
+                let mut split = vec![0.0f32; dim];
+                let l1 = exec.grad_span_into(&theta, lo, mid, &mut split).unwrap();
+                let l2 = exec.grad_span_into(&theta, mid, hi, &mut split).unwrap();
+                assert!(split.iter().zip(whole.iter()).all(|(a, b)| a == b), "mid={mid}");
+                // Loss accumulates in f64 across the calls; per-sample
+                // addends are identical but the running sum is split, so
+                // compare to f64 rounding only.
+                assert!((l1 + l2 - loss_whole).abs() < 1e-9 * (1.0 + loss_whole.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn span_over_a_shard_matches_grad_shard() {
+        let (ds, _) = synthetic::linear_regression(7, 24, 4, 0.2, 91).unwrap();
+        let mut exec = HostExecutor::new(ds.clone(), HostModel::LinearRegression).unwrap();
+        let mut rng = Rng::new(92);
+        let theta: Vec<f32> = (0..7).map(|_| rng.normal() as f32 * 0.5).collect();
+        for s in 0..4 {
+            let want = exec.grad_shard(&theta, s).unwrap();
+            let r = ds.shards[s].clone();
+            let mut got = vec![0.0f32; 7];
+            exec.grad_span_into(&theta, r.start, r.end, &mut got).unwrap();
+            assert!(got.iter().zip(want.iter()).all(|(a, b)| a == b), "shard {s}");
+        }
+    }
+
+    #[test]
+    fn span_rejects_bad_ranges_and_lengths() {
+        let (ds, _) = synthetic::linear_regression(5, 10, 2, 0.2, 93).unwrap();
+        let mut exec = HostExecutor::new(ds, HostModel::LinearRegression).unwrap();
+        let theta = vec![0.0f32; 5];
+        let mut acc = vec![0.0f32; 5];
+        assert!(exec.grad_span_into(&theta, 4, 3, &mut acc).is_err());
+        assert!(exec.grad_span_into(&theta, 0, 11, &mut acc).is_err());
+        let mut short = vec![0.0f32; 4];
+        assert!(exec.grad_span_into(&theta, 0, 5, &mut short).is_err());
     }
 
     #[test]

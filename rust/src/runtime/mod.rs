@@ -41,6 +41,33 @@ pub trait GradExecutor {
         shards.iter().map(|&s| self.grad_shard(theta, s)).collect()
     }
 
+    /// Gradient over the arbitrary sample span `[lo, hi)`, **added**
+    /// onto `acc` (which must be `dim()` long); returns the span's
+    /// loss. Sample-granular slice assignment and partial-straggler
+    /// streaming need spans that ignore shard boundaries, and the
+    /// accumulate-in-place contract is what makes a prefix span plus
+    /// its remainder bit-identical to the whole span (same `+=`
+    /// sequence into the same buffer). Backends that only know shards
+    /// keep the default `Err` and advertise it via
+    /// [`supports_spans`](Self::supports_spans); the coordinator then
+    /// falls back to shard-granular dispatch for them.
+    fn grad_span_into(&mut self, theta: &[f32], lo: usize, hi: usize, acc: &mut [f32])
+        -> Result<f64> {
+        let _ = (theta, lo, hi, acc);
+        Err(crate::Error::Runtime("executor does not support sample spans".into()))
+    }
+
+    /// Whether [`grad_span_into`](Self::grad_span_into) is implemented.
+    fn supports_spans(&self) -> bool {
+        false
+    }
+
+    /// Total samples in the backing dataset (`0` when unknown — span
+    /// dispatch is skipped for such executors).
+    fn num_samples(&self) -> usize {
+        0
+    }
+
     /// Full-dataset loss at `theta` (for monitoring / tests).
     fn loss(&mut self, theta: &[f32]) -> Result<f32>;
 

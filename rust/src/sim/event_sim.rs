@@ -38,6 +38,7 @@ struct Event {
     time: f64,
     worker: usize,
     block: usize,
+    part: usize,
 }
 
 impl Eq for Event {}
@@ -51,6 +52,7 @@ impl Ord for Event {
             .unwrap()
             .then_with(|| other.worker.cmp(&self.worker))
             .then_with(|| other.block.cmp(&self.block))
+            .then_with(|| other.part.cmp(&self.part))
     }
 }
 
@@ -86,7 +88,12 @@ pub fn simulate_iteration(
     let mut heap = BinaryHeap::with_capacity(n * ranges.len());
     for (w, &t) in times.iter().enumerate() {
         for (j, &c) in cum.iter().enumerate() {
-            heap.push(Event { time: unit * t * c + cfg.comm_latency, worker: w, block: j });
+            heap.push(Event {
+                time: unit * t * c + cfg.comm_latency,
+                worker: w,
+                block: j,
+                part: 0,
+            });
         }
     }
 
@@ -115,6 +122,115 @@ pub fn simulate_iteration(
                 late += heap.len();
                 messages += heap.len();
                 break;
+            }
+        }
+    }
+    SimOutcome {
+        completion_time: completion,
+        block_decode_times: decode_time,
+        messages,
+        late_messages: late,
+    }
+}
+
+/// Play out one iteration of **rotated partial-sum streaming**
+/// (PR 10): each worker splits its held sample span into `parts`
+/// equal strides and walks them in its own rotated order — worker `w`
+/// emits the coded delta for part `p = (w + j) mod parts` of every
+/// block at the end of its `j`-th stride, so from stride 0 on the
+/// fleet covers *all* parts at once instead of all workers racing
+/// through the same prefix. Part `p` of block `b` (redundancy `s_b`)
+/// decodes on its `(N−s_b)`-th distinct-worker arrival; a block
+/// completes when all `parts` of its parts have decoded; the
+/// iteration completes when the last block does.
+///
+/// Worker `w` finishes stride `j` of block `b` after
+/// `(j·W + W_b)/parts` of its round (`W_b` = cumulative work through
+/// block `b`, `W` = the whole round), so the event stamp is
+/// `unit · T_w · (j·W + W_b)/parts + comm_latency`.
+///
+/// With `parts == 1` stride 0 is the whole round and this reduces
+/// exactly to [`simulate_iteration`]. For a **single-level** partition
+/// every per-worker part arrival is ≤ that worker's whole-round finish
+/// (`(j·W + W_b)/parts ≤ W` for the last block, and earlier blocks'
+/// parts only have to beat the overall makespan), so streaming
+/// completion is never later than the plain simulator's — and is
+/// strictly earlier whenever a straggler's early strides plus the fast
+/// workers' late ones satisfy a part quorum before the straggler's
+/// full round would have.
+pub fn simulate_iteration_streaming(
+    spec: &ProblemSpec,
+    blocks: &BlockPartition,
+    times: &[f64],
+    parts: usize,
+    cfg: &SimConfig,
+) -> SimOutcome {
+    let n = spec.n;
+    assert_eq!(times.len(), n);
+    assert!(parts >= 1, "need at least one part");
+    let ranges = blocks.ranges();
+    let unit = spec.unit_work();
+
+    // Cumulative work through each non-empty block, and the round total.
+    let mut cum = Vec::with_capacity(ranges.len());
+    let mut acc = 0.0;
+    for r in &ranges {
+        acc += ((r.s + 1) * r.len()) as f64;
+        cum.push(acc);
+    }
+    let round = acc;
+    let p_f = parts as f64;
+
+    let mut heap = BinaryHeap::with_capacity(n * ranges.len() * parts);
+    for (w, &t) in times.iter().enumerate() {
+        for j in 0..parts {
+            let part = (w + j) % parts;
+            for (b, &c) in cum.iter().enumerate() {
+                let work = (round * j as f64 + c) / p_f;
+                heap.push(Event {
+                    time: unit * t * work + cfg.comm_latency,
+                    worker: w,
+                    block: b,
+                    part,
+                });
+            }
+        }
+    }
+
+    let nb = ranges.len();
+    let mut part_arrivals = vec![0usize; nb * parts];
+    let mut part_done = vec![false; nb * parts];
+    let mut parts_done = vec![0usize; nb];
+    let mut decode_time = vec![f64::NAN; nb];
+    let mut decoded = 0usize;
+    let mut late = 0usize;
+    let mut messages = 0usize;
+    let mut completion = 0.0f64;
+
+    while let Some(ev) = heap.pop() {
+        messages += 1;
+        let slot = ev.block * parts + ev.part;
+        if part_done[slot] {
+            late += 1;
+            continue;
+        }
+        // Every worker emits each (block, part) exactly once, so the
+        // arrival count is the distinct-row count the decoder needs.
+        part_arrivals[slot] += 1;
+        let need = n - ranges[ev.block].s;
+        if part_arrivals[slot] == need {
+            part_done[slot] = true;
+            parts_done[ev.block] += 1;
+            if parts_done[ev.block] == parts {
+                decode_time[ev.block] = ev.time;
+                decoded += 1;
+                completion = completion.max(ev.time);
+                if decoded == nb {
+                    // Count the rest as late without popping one by one.
+                    late += heap.len();
+                    messages += heap.len();
+                    break;
+                }
             }
         }
     }
@@ -182,6 +298,83 @@ mod tests {
         let delayed =
             simulate_iteration(&spec, &blocks, &times, &SimConfig { comm_latency: 0.5 });
         assert!((delayed.completion_time - base.completion_time - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_part_streaming_reduces_to_the_plain_simulator() {
+        // parts = 1 ⇒ stride 0 is the whole round: both simulators must
+        // agree bit-for-bit on every field, random partitions and times.
+        let mut rng = Rng::new(4021);
+        let dist = ShiftedExponential::new(1e-3, 50.0);
+        for _ in 0..100 {
+            let n = 2 + rng.below(10) as usize;
+            let coords = (n + rng.below(40) as usize) * 2;
+            let spec = ProblemSpec::new(n, coords, n * 2, 1.0);
+            let raw: Vec<f64> = (0..n).map(|_| rng.exponential(1.0)).collect();
+            let sum: f64 = raw.iter().sum();
+            let x: Vec<f64> = raw.iter().map(|v| v / sum * coords as f64).collect();
+            let blocks = crate::optimizer::rounding::round_to_blocks(&x, coords);
+            let times = dist.sample_vec(n, &mut rng);
+            let cfg = SimConfig::default();
+            let plain = simulate_iteration(&spec, &blocks, &times, &cfg);
+            let stream = simulate_iteration_streaming(&spec, &blocks, &times, 1, &cfg);
+            assert_eq!(stream.completion_time, plain.completion_time);
+            assert_eq!(stream.messages, plain.messages);
+            assert_eq!(stream.late_messages, plain.late_messages);
+            for (a, b) in
+                stream.block_decode_times.iter().zip(plain.block_decode_times.iter())
+            {
+                assert!((a.is_nan() && b.is_nan()) || a == b, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotated_parts_let_straggler_strides_fill_the_quorum_early() {
+        // 4 workers, one s=1 block of 4 coords (unit work 1, round 8).
+        // Two 1.8× stragglers: the plain simulator waits for the 3rd
+        // full round, T_(3)·8 = 14.4. With 2 rotated parts each
+        // straggler's *first* stride (7.2) plus the fast workers' two
+        // strides fill both part quorums by 8.0.
+        let spec = ProblemSpec::new(4, 4, 4, 1.0);
+        let blocks = BlockPartition::single_level(4, 1, 4);
+        let times = vec![1.0, 1.0, 1.8, 1.8];
+        let cfg = SimConfig::default();
+        let plain = simulate_iteration(&spec, &blocks, &times, &cfg);
+        assert!((plain.completion_time - 14.4).abs() < 1e-12);
+        let stream = simulate_iteration_streaming(&spec, &blocks, &times, 2, &cfg);
+        assert!((stream.completion_time - 8.0).abs() < 1e-12, "{}", stream.completion_time);
+        // The two straggler whole-round events (14.4) arrive after the
+        // block completed.
+        assert_eq!(stream.messages, 8);
+        assert_eq!(stream.late_messages, 2);
+    }
+
+    #[test]
+    fn streaming_never_trails_the_plain_simulator_on_single_level_schemes() {
+        // On a single-level partition every per-worker part arrival is
+        // ≤ that worker's whole-round finish, so streaming completion
+        // is ≤ the plain one for any draw and any part count.
+        let mut rng = Rng::new(77);
+        let dist = ShiftedExponential::new(1e-3, 50.0);
+        for _ in 0..100 {
+            let n = 3 + rng.below(9) as usize;
+            let s = rng.below(n as u64 / 2 + 1) as usize;
+            let coords = n * (2 + rng.below(30) as usize);
+            let spec = ProblemSpec::new(n, coords, n * 2, 1.0);
+            let blocks = BlockPartition::single_level(n, s, coords);
+            let times = dist.sample_vec(n, &mut rng);
+            let parts = 2 + rng.below(6) as usize;
+            let cfg = SimConfig::default();
+            let plain = simulate_iteration(&spec, &blocks, &times, &cfg);
+            let stream = simulate_iteration_streaming(&spec, &blocks, &times, parts, &cfg);
+            assert!(
+                stream.completion_time <= plain.completion_time + 1e-9,
+                "streaming {} must not trail plain {} (n={n} s={s} parts={parts})",
+                stream.completion_time,
+                plain.completion_time
+            );
+        }
     }
 
     #[test]

@@ -16,12 +16,15 @@
 pub mod event_sim;
 pub mod multi;
 
-pub use event_sim::{simulate_iteration, SimConfig, SimOutcome};
+pub use event_sim::{
+    simulate_iteration, simulate_iteration_streaming, SimConfig, SimOutcome,
+};
 pub use multi::{
     compare_adaptive_vs_static, compare_elastic_vs_static, compare_hetero_vs_pooled,
-    compare_shared_vs_split, pipelined_frontier, serialized_frontier, simulate_adaptive,
-    simulate_elastic, simulate_elastic_with_family, simulate_fleet_adaptive, simulate_static,
-    simulate_static_churn, two_speed_fleet, AdaptiveComparison, AsyncArm, AsyncRoundsComparison,
-    ChurnEvent, ChurnSchedule, ElasticComparison, FleetSimReport, HeteroComparison,
-    MultiJobComparison, MultiSimConfig, MultiSimReport, SimJob, FLEET_SIM_SHARDS_PER_WORKER,
+    compare_partial_streaming, compare_shared_vs_split, pipelined_frontier,
+    serialized_frontier, simulate_adaptive, simulate_elastic, simulate_elastic_with_family,
+    simulate_fleet_adaptive, simulate_static, simulate_static_churn, two_speed_fleet,
+    AdaptiveComparison, AsyncArm, AsyncRoundsComparison, ChurnEvent, ChurnSchedule,
+    ElasticComparison, FleetSimReport, HeteroComparison, MultiJobComparison, MultiSimConfig,
+    MultiSimReport, PartialComparison, SimJob, FLEET_SIM_SHARDS_PER_WORKER,
 };

@@ -12,7 +12,10 @@
 
 use crate::bench_harness::Table;
 use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveController};
-use crate::coordinator::master::{load_multipliers, redistribute_shards_weighted};
+use crate::coordinator::master::{
+    load_multipliers, redistribute_samples_weighted, redistribute_shards_weighted,
+    sample_load_multipliers,
+};
 use crate::coordinator::metrics::SchemeEpoch;
 use crate::coordinator::straggler::StragglerSchedule;
 use crate::distribution::fit::{FamilyPolicy, FitMethod, OnlineEstimator};
@@ -22,7 +25,7 @@ use crate::distribution::CycleTimeDistribution;
 use crate::optimizer::blocks::BlockPartition;
 use crate::optimizer::closed_form::{x_freq_blocks, x_freq_blocks_model};
 use crate::optimizer::runtime_model::ProblemSpec;
-use crate::sim::event_sim::{simulate_iteration, SimConfig};
+use crate::sim::event_sim::{simulate_iteration, simulate_iteration_streaming, SimConfig};
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 
@@ -1521,6 +1524,244 @@ pub fn compare_hetero_vs_pooled(
     })
 }
 
+/// Three-arm comparison of load apportionment granularity and partial
+/// streaming on one 2-speed fleet, common random numbers (PR 10's
+/// headline artifact, `benches/partial_stragglers.rs`):
+///
+/// 1. **shard-quantized** — speed-weighted loads rounded to whole
+///    virtual shards ([`redistribute_shards_weighted`] at
+///    [`FLEET_SIM_SHARDS_PER_WORKER`]·N granularity);
+/// 2. **continuous** — the same weights apportioned over individual
+///    samples ([`redistribute_samples_weighted`]), quota error under
+///    one sample;
+/// 3. **streaming** — continuous loads *plus* rotated partial-sum
+///    streaming ([`simulate_iteration_streaming`] with `parts`
+///    strides).
+///
+/// All three arms draw identical cycle times per iteration (one draw
+/// per worker, row order, same seed), so the deltas are pure scheme
+/// differences.
+pub struct PartialComparison {
+    pub spec_n: usize,
+    pub coords: usize,
+    pub iters: usize,
+    pub n_slow: usize,
+    pub slow_factor: f64,
+    /// Total samples apportioned by the continuous arms.
+    pub samples: usize,
+    /// Rotation part count of the streaming arm.
+    pub parts: usize,
+    pub fleet_label: String,
+    pub quantized_run: MultiSimReport,
+    pub continuous_run: MultiSimReport,
+    pub streaming_run: MultiSimReport,
+    /// Per-row load multipliers of the shard-quantized arm.
+    pub quantized_rho: Vec<f64>,
+    /// Per-row load multipliers of the continuous (and streaming) arms.
+    pub continuous_rho: Vec<f64>,
+    /// Per-row sample counts behind `continuous_rho`.
+    pub sample_counts: Vec<usize>,
+}
+
+impl PartialComparison {
+    pub fn quantized_mean(&self) -> f64 {
+        self.quantized_run.mean_from(0)
+    }
+
+    pub fn continuous_mean(&self) -> f64 {
+        self.continuous_run.mean_from(0)
+    }
+
+    pub fn streaming_mean(&self) -> f64 {
+        self.streaming_run.mean_from(0)
+    }
+
+    /// Gain of sample-granular apportionment over shard quantization,
+    /// in percent of the quantized mean.
+    pub fn continuous_gain_pct(&self) -> f64 {
+        100.0 * (1.0 - self.continuous_mean() / self.quantized_mean())
+    }
+
+    /// Gain of rotated partial streaming over the (already continuous)
+    /// whole-block arm, in percent of the continuous mean.
+    pub fn streaming_gain_pct(&self) -> f64 {
+        100.0 * (1.0 - self.streaming_mean() / self.continuous_mean())
+    }
+
+    /// The standard human-readable report block shared by the bench.
+    pub fn render_report(&self) -> String {
+        let mut table = Table::new(&["arm", "E[τ] per iteration", "Σ runtime"]);
+        let row = |label: &str, r: &MultiSimReport, mean: f64| -> Vec<String> {
+            vec![label.to_string(), format!("{mean:.1}"), format!("{:.0}", r.total())]
+        };
+        table.row(&row("shard-quantized loads", &self.quantized_run, self.quantized_mean()));
+        table.row(&row("continuous sample loads", &self.continuous_run, self.continuous_mean()));
+        table.row(&row(
+            &format!("continuous + {}-part streaming", self.parts),
+            &self.streaming_run,
+            self.streaming_mean(),
+        ));
+        let mut out = table.render();
+        out.push_str(&format!(
+            "sample counts (fast→slow rows): {:?} of {}\n",
+            self.sample_counts, self.samples
+        ));
+        out.push_str(&format!(
+            "\ncontinuous vs shard-quantized apportionment: {:.2}% faster\n",
+            self.continuous_gain_pct()
+        ));
+        out.push_str(&format!(
+            "rotated {}-part streaming vs whole-block: {:.2}% faster\n",
+            self.parts,
+            self.streaming_gain_pct()
+        ));
+        out
+    }
+
+    /// Serialize the comparison (hand-rolled JSON; no `serde` offline).
+    pub fn render_json(&self) -> String {
+        fn num(x: f64) -> String {
+            if x.is_finite() {
+                format!("{x:.6}")
+            } else {
+                "null".into()
+            }
+        }
+        let arm = |r: &MultiSimReport, mean: f64| -> String {
+            format!("{{\"mean\": {}, \"total\": {}}}", num(mean), num(r.total()))
+        };
+        let counts =
+            self.sample_counts.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", ");
+        let mut out = String::from("{\n");
+        out.push_str("  \"bench\": \"partial_stragglers\",\n");
+        out.push_str(&format!("  \"n\": {},\n", self.spec_n));
+        out.push_str(&format!("  \"n_slow\": {},\n", self.n_slow));
+        out.push_str(&format!("  \"slow_factor\": {},\n", num(self.slow_factor)));
+        out.push_str(&format!("  \"coords\": {},\n", self.coords));
+        out.push_str(&format!("  \"samples\": {},\n", self.samples));
+        out.push_str(&format!("  \"parts\": {},\n", self.parts));
+        out.push_str(&format!("  \"iters\": {},\n", self.iters));
+        out.push_str(&format!(
+            "  \"fleet\": \"{}\",\n",
+            self.fleet_label.replace('"', "\\\"")
+        ));
+        out.push_str(&format!(
+            "  \"quantized\": {},\n",
+            arm(&self.quantized_run, self.quantized_mean())
+        ));
+        out.push_str(&format!(
+            "  \"continuous\": {},\n",
+            arm(&self.continuous_run, self.continuous_mean())
+        ));
+        out.push_str(&format!(
+            "  \"streaming\": {},\n",
+            arm(&self.streaming_run, self.streaming_mean())
+        ));
+        out.push_str(&format!("  \"sample_counts\": [{counts}],\n"));
+        out.push_str(&format!(
+            "  \"continuous_gain_pct\": {},\n",
+            num(self.continuous_gain_pct())
+        ));
+        out.push_str(&format!(
+            "  \"streaming_gain_pct\": {}\n",
+            num(self.streaming_gain_pct())
+        ));
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// Run the three arms of [`PartialComparison`] on a 2-speed fleet with
+/// common random numbers. Weights are the oracle per-row rates
+/// (`1/E[T]`), so the comparison isolates apportionment granularity
+/// and streaming from estimation error. `blocks` should be a
+/// single-level partition: the streaming arm's never-trails guarantee
+/// (see [`simulate_iteration_streaming`]) is proved per-worker against
+/// the *last* block's finish.
+#[allow(clippy::too_many_arguments)]
+pub fn compare_partial_streaming(
+    spec: &ProblemSpec,
+    blocks: &BlockPartition,
+    fast: &ShiftedExponential,
+    n_slow: usize,
+    slow_factor: f64,
+    samples: usize,
+    parts: usize,
+    cfg: &MultiSimConfig,
+) -> Result<PartialComparison> {
+    if blocks.n() != spec.n {
+        return Err(Error::InvalidArgument("blocks.n() != spec.n".into()));
+    }
+    if parts < 2 {
+        return Err(Error::InvalidArgument(format!(
+            "streaming arm needs parts ≥ 2, got {parts}"
+        )));
+    }
+    if samples < spec.n {
+        return Err(Error::InvalidArgument(format!(
+            "need at least one sample per row: samples {samples} < n {}",
+            spec.n
+        )));
+    }
+    let fleet = two_speed_fleet(spec.n, n_slow, fast, slow_factor);
+    let rates: Vec<f64> = fleet.iter().map(|d| 1.0 / d.mean()).collect();
+
+    let num_shards = spec.n * FLEET_SIM_SHARDS_PER_WORKER;
+    let shard_map = redistribute_shards_weighted(&rates, num_shards);
+    let quantized_rho = load_multipliers(&shard_map, num_shards);
+    let slice_map = redistribute_samples_weighted(&rates, samples)?;
+    let continuous_rho = sample_load_multipliers(&slice_map, samples);
+    let sample_counts: Vec<usize> = slice_map.iter().map(|&(lo, hi)| hi - lo).collect();
+
+    // One arm = one replay of the identical CRN stream under its own
+    // load multipliers (the machines are the same; only the assigned
+    // load and the emission schedule differ).
+    let run = |rho: &[f64], stream_parts: usize| -> MultiSimReport {
+        let mut rng = Rng::new(cfg.seed);
+        let sim_cfg = SimConfig { comm_latency: cfg.comm_latency };
+        let mut completion_times = Vec::with_capacity(cfg.iters);
+        for _ in 0..cfg.iters {
+            let times: Vec<f64> = fleet.iter().map(|d| d.sample(&mut rng)).collect();
+            let eff: Vec<f64> =
+                times.iter().zip(rho.iter()).map(|(&t, &r)| t * r).collect();
+            let out = if stream_parts <= 1 {
+                simulate_iteration(spec, blocks, &eff, &sim_cfg)
+            } else {
+                simulate_iteration_streaming(spec, blocks, &eff, stream_parts, &sim_cfg)
+            };
+            completion_times.push(out.completion_time);
+        }
+        MultiSimReport { completion_times, epochs: vec![0; cfg.iters], swaps: Vec::new() }
+    };
+    let quantized_run = run(&quantized_rho, 1);
+    let continuous_run = run(&continuous_rho, 1);
+    let streaming_run = run(&continuous_rho, parts);
+
+    let fleet_label = format!(
+        "2-speed: {}×{} + {}×{}",
+        spec.n - n_slow,
+        fleet[0].label(),
+        n_slow,
+        fleet[spec.n - 1].label()
+    );
+    Ok(PartialComparison {
+        spec_n: spec.n,
+        coords: blocks.total(),
+        iters: cfg.iters,
+        n_slow,
+        slow_factor,
+        samples,
+        parts,
+        fleet_label,
+        quantized_run,
+        continuous_run,
+        streaming_run,
+        quantized_rho,
+        continuous_rho,
+        sample_counts,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2072,6 +2313,67 @@ mod tests {
             200,
         )
         .is_err());
+    }
+
+    #[test]
+    fn continuous_loads_beat_shard_quanta_and_streaming_beats_whole_blocks() {
+        // PR 10 acceptance fleet: 5 fast + 5 slow (2.5×) workers. The
+        // speed ratio is NOT a multiple of 1/m at shard granularity
+        // (fast quota 5.71 of 40 shards), so the quantized arm loads
+        // fast rows 5% heavy; 7000 samples split exactly (1000/400).
+        let (n, coords) = (10usize, 1_000usize);
+        let spec = ProblemSpec::paper_default(n, coords);
+        let fast = ShiftedExponential::new(1e-3, 50.0); // mean 1050
+        let blocks = BlockPartition::single_level(n, 1, coords);
+        let cfg = MultiSimConfig { iters: 300, seed: 2021, comm_latency: 0.0 };
+        let cmp = compare_partial_streaming(
+            &spec, &blocks, &fast, 5, 2.5, 7_000, 4, &cfg,
+        )
+        .unwrap();
+        // Exact sample apportionment: weights 2.5:1 over 7000 samples.
+        assert_eq!(cmp.sample_counts, vec![1000, 1000, 1000, 1000, 1000, 400, 400, 400, 400, 400]);
+        // The quantized arm cannot represent the 2.5:1 split in whole
+        // shards (6/2 of 4 each ⇒ 1.5/0.5 multipliers, not 10/7 & 4/7).
+        assert!(cmp.quantized_rho.iter().zip(cmp.continuous_rho.iter()).any(|(a, b)| a != b));
+        // Headline ordering, strict: continuous < quantized, streaming
+        // < continuous.
+        let (q, c, s) = (cmp.quantized_mean(), cmp.continuous_mean(), cmp.streaming_mean());
+        assert!(
+            c < q,
+            "sample-granular loads ({c:.1}) must beat shard-quantized ({q:.1})"
+        );
+        assert!(
+            s < c,
+            "rotated streaming ({s:.1}) must beat whole-block continuous ({c:.1})"
+        );
+        assert!(cmp.continuous_gain_pct() > 0.0 && cmp.streaming_gain_pct() > 0.0);
+        // CRN: the continuous and streaming arms share loads AND draws,
+        // so streaming never trails on any single iteration either.
+        for (i, (a, b)) in cmp
+            .streaming_run
+            .completion_times
+            .iter()
+            .zip(cmp.continuous_run.completion_times.iter())
+            .enumerate()
+        {
+            assert!(a <= &(b + 1e-9), "iter {i}: streaming {a} trails whole-block {b}");
+        }
+        // JSON artifact is well-formed enough and self-describing.
+        let json = cmp.render_json();
+        assert!(json.contains("\"bench\": \"partial_stragglers\""));
+        assert!(json.contains("\"quantized\""));
+        assert!(json.contains("\"continuous\""));
+        assert!(json.contains("\"streaming\""));
+        assert!(json.contains("\"sample_counts\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        let report = cmp.render_report();
+        assert!(report.contains("continuous vs shard-quantized"));
+        assert!(report.contains("streaming vs whole-block"));
+        // Degenerate inputs are loud errors.
+        assert!(compare_partial_streaming(&spec, &blocks, &fast, 5, 2.5, 7_000, 1, &cfg)
+            .is_err());
+        assert!(compare_partial_streaming(&spec, &blocks, &fast, 5, 2.5, 4, 4, &cfg)
+            .is_err());
     }
 
     #[test]

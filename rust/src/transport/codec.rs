@@ -20,7 +20,9 @@ use std::sync::Arc;
 
 use crate::coding::encoder::{Construction, GradientCode};
 use crate::coding::scheme::CodingScheme;
-use crate::coordinator::channel::{BlockContribution, JobId, ShardMap, WorkerEvent, WorkerTask};
+use crate::coordinator::channel::{
+    BlockContribution, JobId, PartialBlockContribution, ShardMap, SliceMap, WorkerEvent, WorkerTask,
+};
 use crate::coordinator::PacingMode;
 use crate::linalg::Matrix;
 use crate::optimizer::blocks::BlockPartition;
@@ -46,6 +48,7 @@ const TAG_BLOCK: u8 = 6;
 const TAG_FAILED: u8 = 7;
 const TAG_HEARTBEAT: u8 = 8;
 const TAG_GOODBYE: u8 = 9;
+const TAG_PARTIAL: u8 = 10;
 
 /// A decoded frame — the full bidirectional vocabulary of the wire.
 pub enum Frame {
@@ -70,6 +73,9 @@ pub enum Frame {
     Task(WireTask),
     /// Peer → master: one coded block.
     Block(BlockContribution),
+    /// Peer → master: one rotation part of one coded block
+    /// (partial-straggler streaming).
+    Partial(PartialBlockContribution),
     /// Peer → master: a [`WorkerEvent::Failed`].
     Failed {
         worker: usize,
@@ -99,6 +105,8 @@ pub enum WireTask {
         theta: Arc<Vec<f32>>,
         cycle_time: f64,
         unit_work: f64,
+        slices: Option<Arc<SliceMap>>,
+        parts: usize,
     },
     /// Drain and acknowledge with Goodbye.
     Drain,
@@ -171,10 +179,18 @@ impl Enc {
         self.buf.extend_from_slice(s.as_bytes());
     }
 
-    fn finish(mut self) -> Vec<u8> {
-        let body = (self.buf.len() - 4) as u32;
-        self.buf[..4].copy_from_slice(&body.to_le_bytes());
-        self.buf
+    fn finish(mut self) -> Result<Vec<u8>> {
+        // Validate against MAX_FRAME *before* the u32 cast: an
+        // over-limit body would otherwise truncate its length prefix
+        // silently (and any frame past the receiver's cap desyncs the
+        // stream at best). The sender gets an `Error` it can surface
+        // while recovering its buffers instead.
+        let body = self.buf.len() - 4;
+        if body > MAX_FRAME {
+            return Err(bad(&format!("frame body {body} exceeds MAX_FRAME {MAX_FRAME}")));
+        }
+        self.buf[..4].copy_from_slice(&(body as u32).to_le_bytes());
+        Ok(self.buf)
     }
 }
 
@@ -215,7 +231,7 @@ fn enc_scheme(e: &mut Enc, scheme: &CodingScheme) {
 }
 
 /// Peer → master connection request.
-pub fn frame_hello() -> Vec<u8> {
+pub fn frame_hello() -> Result<Vec<u8>> {
     Enc::new(TAG_HELLO).finish()
 }
 
@@ -225,7 +241,7 @@ pub fn frame_assign(
     lease_ttl_ms: u64,
     heartbeat_ms: u64,
     pacing: PacingMode,
-) -> Vec<u8> {
+) -> Result<Vec<u8>> {
     let mut e = Enc::new(TAG_ASSIGN);
     e.uz(worker);
     e.u64(lease_ttl_ms);
@@ -238,7 +254,7 @@ pub fn frame_assign(
 /// sizes + one code per level; the cyclic allocation is deterministic
 /// and rebuilt peer-side), the shard map and theta — everything but the
 /// executor factory.
-pub fn frame_task(task: &WorkerTask) -> Vec<u8> {
+pub fn frame_task(task: &WorkerTask) -> Result<Vec<u8>> {
     match task {
         WorkerTask::Compute {
             job,
@@ -251,6 +267,8 @@ pub fn frame_task(task: &WorkerTask) -> Vec<u8> {
             factory: _,
             cycle_time,
             unit_work,
+            slices,
+            parts,
         } => {
             let mut e = Enc::new(TAG_COMPUTE);
             e.uz(*job);
@@ -265,6 +283,18 @@ pub fn frame_task(task: &WorkerTask) -> Vec<u8> {
             e.f32s(theta);
             e.f64(*cycle_time);
             e.f64(*unit_work);
+            match slices.as_deref() {
+                None => e.u8(0),
+                Some(map) => {
+                    e.u8(1);
+                    e.uz(map.len());
+                    for &(lo, hi) in map {
+                        e.uz(lo);
+                        e.uz(hi);
+                    }
+                }
+            }
+            e.uz(*parts);
             e.finish()
         }
         WorkerTask::Drain => Enc::new(TAG_DRAIN).finish(),
@@ -273,7 +303,7 @@ pub fn frame_task(task: &WorkerTask) -> Vec<u8> {
 }
 
 /// Peer → master coded block.
-pub fn frame_block(c: &BlockContribution) -> Vec<u8> {
+pub fn frame_block(c: &BlockContribution) -> Result<Vec<u8>> {
     let mut e = Enc::new(TAG_BLOCK);
     e.uz(c.job);
     e.uz(c.iter);
@@ -286,8 +316,33 @@ pub fn frame_block(c: &BlockContribution) -> Vec<u8> {
     e.finish()
 }
 
+/// Peer → master rotation-part coded delta (partial-straggler
+/// streaming).
+pub fn frame_partial(c: &PartialBlockContribution) -> Result<Vec<u8>> {
+    let mut e = Enc::new(TAG_PARTIAL);
+    e.uz(c.job);
+    e.uz(c.iter);
+    e.uz(c.epoch);
+    e.uz(c.worker);
+    e.uz(c.row);
+    e.uz(c.block_idx);
+    e.uz(c.part);
+    e.uz(c.parts);
+    e.uz(c.samples_done);
+    e.uz(c.samples_total);
+    e.f64(c.virtual_time);
+    e.f32s(&c.coded);
+    e.finish()
+}
+
 /// Peer → master failure report.
-pub fn frame_failed(worker: usize, job: JobId, iter: usize, reason: &str, fatal: bool) -> Vec<u8> {
+pub fn frame_failed(
+    worker: usize,
+    job: JobId,
+    iter: usize,
+    reason: &str,
+    fatal: bool,
+) -> Result<Vec<u8>> {
     let mut e = Enc::new(TAG_FAILED);
     e.uz(worker);
     e.uz(job);
@@ -298,14 +353,14 @@ pub fn frame_failed(worker: usize, job: JobId, iter: usize, reason: &str, fatal:
 }
 
 /// Peer → master lease renewal.
-pub fn frame_heartbeat(worker: usize) -> Vec<u8> {
+pub fn frame_heartbeat(worker: usize) -> Result<Vec<u8>> {
     let mut e = Enc::new(TAG_HEARTBEAT);
     e.uz(worker);
     e.finish()
 }
 
 /// Peer → master clean departure.
-pub fn frame_goodbye(worker: usize) -> Vec<u8> {
+pub fn frame_goodbye(worker: usize) -> Result<Vec<u8>> {
     let mut e = Enc::new(TAG_GOODBYE);
     e.uz(worker);
     e.finish()
@@ -313,14 +368,17 @@ pub fn frame_goodbye(worker: usize) -> Vec<u8> {
 
 /// Encode a peer-side [`WorkerEvent`] as its wire frame. `Joined` has
 /// no frame — over TCP the handshake itself announces the join — so it
-/// returns `None`; `Left` becomes `Goodbye`.
-pub fn frame_event(ev: &WorkerEvent) -> Option<Vec<u8>> {
+/// yields `None`; `Left` becomes `Goodbye`. An `Err` means the event
+/// cannot be framed at all (body past [`MAX_FRAME`]); the caller still
+/// owns the event and must recycle any pooled payload it carries.
+pub fn frame_event(ev: &WorkerEvent) -> Result<Option<Vec<u8>>> {
     match ev {
-        WorkerEvent::Block(c) => Some(frame_block(c)),
-        WorkerEvent::Joined { .. } => None,
-        WorkerEvent::Left { worker } => Some(frame_goodbye(*worker)),
+        WorkerEvent::Block(c) => frame_block(c).map(Some),
+        WorkerEvent::Partial(c) => frame_partial(c).map(Some),
+        WorkerEvent::Joined { .. } => Ok(None),
+        WorkerEvent::Left { worker } => frame_goodbye(*worker).map(Some),
         WorkerEvent::Failed { worker, job, iter, reason, fatal } => {
-            Some(frame_failed(*worker, *job, *iter, reason, *fatal))
+            frame_failed(*worker, *job, *iter, reason, *fatal).map(Some)
         }
     }
 }
@@ -485,6 +543,36 @@ fn dec_block(d: &mut Dec, mut coded: Vec<f32>) -> Result<BlockContribution> {
     Ok(BlockContribution { job, iter, epoch, worker, row, block_idx, virtual_time, coded })
 }
 
+fn dec_partial(d: &mut Dec, mut coded: Vec<f32>) -> Result<PartialBlockContribution> {
+    let job = d.uz()?;
+    let iter = d.uz()?;
+    let epoch = d.uz()?;
+    let worker = d.uz()?;
+    let row = d.uz()?;
+    let block_idx = d.uz()?;
+    let part = d.uz()?;
+    let parts = d.uz()?;
+    let samples_done = d.uz()?;
+    let samples_total = d.uz()?;
+    let virtual_time = d.f64()?;
+    d.f32s_into(&mut coded)?;
+    d.done()?;
+    Ok(PartialBlockContribution {
+        job,
+        iter,
+        epoch,
+        worker,
+        row,
+        block_idx,
+        part,
+        parts,
+        samples_done,
+        samples_total,
+        virtual_time,
+        coded,
+    })
+}
+
 fn dec_body(d: &mut Dec, tag: u8, coded: Vec<f32>) -> Result<Frame> {
     match tag {
         TAG_HELLO => {
@@ -514,6 +602,21 @@ fn dec_body(d: &mut Dec, tag: u8, coded: Vec<f32>) -> Result<Frame> {
             d.f32s_into(&mut theta)?;
             let cycle_time = d.f64()?;
             let unit_work = d.f64()?;
+            let slices = match d.u8()? {
+                0 => None,
+                1 => {
+                    let len = d.len_of(16)?;
+                    let mut map: SliceMap = Vec::with_capacity(len);
+                    for _ in 0..len {
+                        let lo = d.uz()?;
+                        let hi = d.uz()?;
+                        map.push((lo, hi));
+                    }
+                    Some(Arc::new(map))
+                }
+                t => return Err(bad(&format!("bad slice-map flag {t}"))),
+            };
+            let parts = d.uz()?;
             d.done()?;
             Ok(Frame::Task(WireTask::Compute {
                 job,
@@ -525,6 +628,8 @@ fn dec_body(d: &mut Dec, tag: u8, coded: Vec<f32>) -> Result<Frame> {
                 theta: Arc::new(theta),
                 cycle_time,
                 unit_work,
+                slices,
+                parts,
             }))
         }
         TAG_DRAIN => {
@@ -536,6 +641,7 @@ fn dec_body(d: &mut Dec, tag: u8, coded: Vec<f32>) -> Result<Frame> {
             Ok(Frame::Task(WireTask::Shutdown))
         }
         TAG_BLOCK => Ok(Frame::Block(dec_block(d, coded)?)),
+        TAG_PARTIAL => Ok(Frame::Partial(dec_partial(d, coded)?)),
         TAG_FAILED => {
             let worker = d.uz()?;
             let job = d.uz()?;
@@ -580,21 +686,25 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
     dec_body(&mut d, tag, Vec::new())
 }
 
-/// [`decode_frame`], but a `Block` frame's coded payload lands in a
-/// buffer taken from `pool` — the master-side reader keeps incoming
-/// arrivals on the shared freelist exactly like in-process ones. A
-/// malformed block frame drops its buffer (one future pool miss; the
+/// [`decode_frame`], but a `Block` or `Partial` frame's coded payload
+/// lands in a buffer taken from `pool` — the master-side reader keeps
+/// incoming arrivals on the shared freelist exactly like in-process
+/// ones. A malformed frame drops its buffer (one future pool miss; the
 /// ownership contract makes dropping always safe) and the connection
 /// is torn down anyway.
 pub fn decode_frame_pooled(body: &[u8], pool: &BufferPool) -> Result<Frame> {
     let (tag, mut d) = dec_header(body)?;
-    if tag != TAG_BLOCK {
+    if tag != TAG_BLOCK && tag != TAG_PARTIAL {
         return dec_body(&mut d, tag, Vec::new());
     }
-    // A block payload is the frame minus ~66 bytes of fixed fields; the
-    // hint overshoots slightly, which the pool tolerates.
+    // A coded payload is the frame minus ~66–98 bytes of fixed fields;
+    // the hint overshoots slightly, which the pool tolerates.
     let coded = pool.take(d.remaining() / 4);
-    dec_block(&mut d, coded).map(Frame::Block)
+    if tag == TAG_BLOCK {
+        dec_block(&mut d, coded).map(Frame::Block)
+    } else {
+        dec_partial(&mut d, coded).map(Frame::Partial)
+    }
 }
 
 /// Peel one complete frame body off an accumulation buffer, if the
@@ -648,7 +758,8 @@ mod tests {
 
     #[test]
     fn hello_heartbeat_goodbye_roundtrip() {
-        for (frame, want_worker) in [(frame_heartbeat(7), 7usize), (frame_goodbye(3), 3)] {
+        let frames = [(frame_heartbeat(7).expect("fits"), 7usize), (frame_goodbye(3).expect("fits"), 3)];
+        for (frame, want_worker) in frames {
             let body = read_frame(&mut frame.as_slice(), MAX_FRAME).expect("well-formed");
             match decode_frame(&body).expect("decodes") {
                 Frame::Heartbeat { worker } | Frame::Goodbye { worker } => {
@@ -657,7 +768,8 @@ mod tests {
                 _ => panic!("wrong frame"),
             }
         }
-        let body = read_frame(&mut frame_hello().as_slice(), MAX_FRAME).expect("well-formed");
+        let hello = frame_hello().expect("fits");
+        let body = read_frame(&mut hello.as_slice(), MAX_FRAME).expect("well-formed");
         assert!(matches!(decode_frame(&body), Ok(Frame::Hello)));
     }
 
@@ -673,7 +785,7 @@ mod tests {
             virtual_time: 1234.5678,
             coded: vec![1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-30],
         };
-        let frame = frame_block(&c);
+        let frame = frame_block(&c).expect("fits");
         let body = read_frame(&mut frame.as_slice(), MAX_FRAME).expect("well-formed");
         let Ok(Frame::Block(d)) = decode_frame(&body) else {
             panic!("wrong frame")
@@ -686,7 +798,7 @@ mod tests {
 
     #[test]
     fn truncated_and_garbage_frames_error_not_panic() {
-        let frame = frame_failed(1, 0, 9, "boom", true);
+        let frame = frame_failed(1, 0, 9, "boom", true).expect("fits");
         let body = read_frame(&mut frame.as_slice(), MAX_FRAME).expect("well-formed");
         for cut in 0..body.len() {
             assert!(decode_frame(&body[..cut]).is_err() || cut == body.len());
@@ -716,16 +828,20 @@ mod tests {
             factory: Arc::new(|_| Err(Error::Runtime("factories never cross the wire".into()))),
             cycle_time: 1.25,
             unit_work: 0.5,
+            slices: Some(Arc::new(vec![(0, 7), (7, 13), (13, 20), (20, 31)])),
+            parts: 4,
         };
-        let frame = frame_task(&task);
+        let frame = frame_task(&task).expect("fits");
         let body = read_frame(&mut frame.as_slice(), MAX_FRAME).expect("well-formed");
-        let Ok(Frame::Task(WireTask::Compute { scheme: got, theta, row, .. })) =
+        let Ok(Frame::Task(WireTask::Compute { scheme: got, theta, row, slices, parts, .. })) =
             decode_frame(&body)
         else {
             panic!("wrong frame")
         };
         assert_eq!(row, 3);
         assert_eq!(theta.as_slice(), &[0.25f32, -1.0, 2.0]);
+        assert_eq!(slices.as_deref(), Some(&vec![(0, 7), (7, 13), (13, 20), (20, 31)]));
+        assert_eq!(parts, 4);
         assert_eq!(got.n(), scheme.n());
         assert_eq!(got.blocks().sizes(), scheme.blocks().sizes());
         for r in scheme.ranges() {
@@ -735,5 +851,60 @@ mod tests {
         for w in 0..scheme.n() {
             assert_eq!(got.worker_subsets(w), scheme.worker_subsets(w));
         }
+    }
+
+    #[test]
+    fn partial_roundtrips_bit_exactly() {
+        let c = PartialBlockContribution {
+            job: 4,
+            iter: 17,
+            epoch: 2,
+            worker: 6,
+            row: 3,
+            block_idx: 1,
+            part: 2,
+            parts: 5,
+            samples_done: 120,
+            samples_total: 300,
+            virtual_time: 98.75,
+            coded: vec![0.5f32, -2.25, f32::MIN_POSITIVE, -0.0],
+        };
+        let frame = frame_partial(&c).expect("fits");
+        let body = read_frame(&mut frame.as_slice(), MAX_FRAME).expect("well-formed");
+        let Ok(Frame::Partial(d)) = decode_frame(&body) else {
+            panic!("wrong frame")
+        };
+        assert_eq!(
+            (d.job, d.iter, d.epoch, d.worker, d.row, d.block_idx),
+            (c.job, c.iter, c.epoch, c.worker, c.row, c.block_idx)
+        );
+        assert_eq!((d.part, d.parts, d.samples_done, d.samples_total), (2, 5, 120, 300));
+        assert_eq!(d.virtual_time.to_bits(), c.virtual_time.to_bits());
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&d.coded), bits(&c.coded));
+        // And through the pooled path, same payload on a pooled buffer.
+        let pool = BufferPool::new(4);
+        let Ok(Frame::Partial(p)) = decode_frame_pooled(&body, &pool) else {
+            panic!("wrong frame")
+        };
+        assert_eq!(bits(&p.coded), bits(&c.coded));
+    }
+
+    #[test]
+    fn finish_rejects_oversized_body_before_the_cast() {
+        // Regression: `finish` used to do `(len - 4) as u32` with no
+        // bound, so a body past MAX_FRAME (or u32::MAX) silently
+        // truncated its length prefix. It must be an Error now.
+        let mut e = Enc::new(TAG_BLOCK);
+        e.buf.resize(4 + MAX_FRAME + 1, 0);
+        assert!(e.finish().is_err());
+        // At exactly the cap the frame is still legal.
+        let mut ok = Enc::new(TAG_BLOCK);
+        ok.buf.resize(4 + MAX_FRAME, 0);
+        let frame = ok.finish().expect("at the cap is legal");
+        assert_eq!(
+            u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]) as usize,
+            MAX_FRAME
+        );
     }
 }

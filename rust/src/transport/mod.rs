@@ -28,9 +28,11 @@
 //! `Failed`. A remote peer can simply *vanish* (host dies, link drops,
 //! process freezes), so the TCP transport replaces trust with a
 //! **lease** ([`lease::LeaseTable`]): the master grants a lease at
-//! handshake, every frame received from the peer (heartbeats included —
-//! peers ping on `heartbeat_ms`) renews it, and a sweeper thread expires
-//! leases that go quiet for `lease_ttl_ms`. An expired lease — or a
+//! handshake, **any inbound bytes** from the peer renew it (heartbeats
+//! included — peers ping on `heartbeat_ms` — but also the raw chunks of
+//! a still-incomplete large frame: transfer progress is proof of life),
+//! and a sweeper thread expires leases that go quiet for
+//! `lease_ttl_ms`. An expired lease — or a
 //! socket EOF — surfaces as the **same [`WorkerEvent::Left`]** the
 //! in-process drain handshake produces, feeding the existing
 //! membership-epoch re-dimension path; nothing above the trait changes.
@@ -67,6 +69,17 @@
 //! | 7 | `Failed` | peer → master | worker, job, iter, reason, fatal |
 //! | 8 | `Heartbeat` | peer → master | worker id (lease renewal) |
 //! | 9 | `Goodbye` | peer → master | worker id (clean `Left`) |
+//! | 10 | `Partial` | peer → master | a [`crate::coordinator::channel::PartialBlockContribution`] rotation-part coded delta (f32 wire payload) |
+//!
+//! A `Compute` frame additionally carries the optional sample-granular
+//! [`crate::coordinator::channel::SliceMap`] and the rotation part
+//! count `P` (PR 10 partial-straggler streaming); `P = 1` with no slice
+//! map is exactly the pre-PR-10 frame semantics, and the layout stays
+//! within wire version 1. Encoders are fallible end to end: a body that
+//! would exceed [`codec::MAX_FRAME`] is rejected **before** the length
+//! prefix is cast to `u32` (it used to truncate silently), and senders
+//! hand the unsent task/event back so pooled payload buffers are
+//! recovered, never leaked onto a dead wire.
 //!
 //! Closures cannot cross a wire, so a `Compute` frame omits the
 //! [`crate::runtime::ExecutorFactory`]; the peer resolves the job's
@@ -85,9 +98,10 @@
 //! [`EventSender`] recycles them right after a successful serialization
 //! (on failure the event is handed back through the error so the worker
 //! loop's existing recovery path recycles it); the master-side reader
-//! decodes incoming `Block` payloads **into** buffers taken from the
-//! pool's shared freelist ([`codec::decode_frame_pooled`]), so decoded
-//! arrivals cycle through the master exactly like in-process ones.
+//! decodes incoming `Block` **and `Partial`** payloads **into** buffers
+//! taken from the pool's shared freelist
+//! ([`codec::decode_frame_pooled`]), so decoded arrivals cycle through
+//! the master exactly like in-process ones.
 //!
 //! ## Lock order
 //!

@@ -6,8 +6,11 @@
 //! before the pool exists; [`crate::transport::Transport::attach_worker`]
 //! accepts the next pending connection, handshakes (`Hello` in,
 //! `Assign` out), grants a lease, injects `Joined`, and spawns a reader
-//! thread that forwards decoded `Block`/`Failed` frames onto the pool's
-//! event channel while renewing the lease on every frame. A lazily
+//! thread that forwards decoded `Block`/`Partial`/`Failed` frames onto
+//! the pool's event channel while renewing the lease on **any inbound
+//! bytes** — a peer mid-way through a multi-read frame (a large block
+//! under a slow link) is demonstrably alive even though no complete
+//! frame has landed yet, so progress alone keeps the lease. A lazily
 //! started sweeper thread expires silent leases; expiry, socket EOF and
 //! `Goodbye` all funnel through [`LeaseTable::remove`] so exactly one
 //! `Left` reaches the membership registry per departure.
@@ -181,7 +184,7 @@ impl TcpTransport {
             _ => return Err(Error::Runtime("tcp transport: peer did not say Hello".into())),
         }
         let assign =
-            codec::frame_assign(id, self.cfg.lease_ttl_ms, self.cfg.heartbeat_ms, self.pacing);
+            codec::frame_assign(id, self.cfg.lease_ttl_ms, self.cfg.heartbeat_ms, self.pacing)?;
         stream.write_all(&assign)?;
         self.shared.stats.frame_sent(assign.len());
         Ok(())
@@ -277,10 +280,12 @@ fn sweeper_loop(shared: ReaderShared, ttl_ms: u64, period_ms: u64) {
 }
 
 /// One connection's receive loop: re-assemble frames from raw reads,
-/// renew the lease on every frame, forward blocks and failures. Any
-/// EOF, I/O error, decode error or protocol violation ends the
-/// connection; the epilogue reports the departure unless the sweeper
-/// (or a Drain handshake) already removed the lease.
+/// renew the lease on **any inbound bytes** (not just complete frames —
+/// a peer streaming a block larger than one read chunk under a short
+/// TTL used to be declared gone mid-frame), forward blocks, partials
+/// and failures. Any EOF, I/O error, decode error or protocol violation
+/// ends the connection; the epilogue reports the departure unless the
+/// sweeper (or a Drain handshake) already removed the lease.
 fn reader_loop(mut stream: TcpStream, id: WorkerId, shared: ReaderShared) {
     let mut pending: Vec<u8> = Vec::new();
     'conn: loop {
@@ -304,7 +309,13 @@ fn reader_loop(mut stream: TcpStream, id: WorkerId, shared: ReaderShared) {
         let mut chunk = [0u8; 64 * 1024];
         match stream.read(&mut chunk) {
             Ok(0) => break 'conn,
-            Ok(n) => pending.extend_from_slice(&chunk[..n]),
+            Ok(n) => {
+                // Raw progress is proof of life: touch the lease here,
+                // before frame re-assembly, so a slow multi-read frame
+                // cannot expire its sender mid-transfer.
+                shared.leases.touch(id);
+                pending.extend_from_slice(&chunk[..n]);
+            }
             Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
             Err(_) => break 'conn,
         }
@@ -323,6 +334,16 @@ fn handle_peer_frame(body: &[u8], id: WorkerId, shared: &ReaderShared) -> bool {
             if let Err(undelivered) = shared.event_tx.send(WorkerEvent::Block(c)) {
                 // Pool hung up mid-run; reclaim the decoded buffer.
                 if let WorkerEvent::Block(c) = undelivered.0 {
+                    shared.wire_pool.put(c.coded);
+                }
+                return false;
+            }
+            true
+        }
+        Ok(Frame::Partial(c)) => {
+            shared.leases.touch(id);
+            if let Err(undelivered) = shared.event_tx.send(WorkerEvent::Partial(c)) {
+                if let WorkerEvent::Partial(c) = undelivered.0 {
                     shared.wire_pool.put(c.coded);
                 }
                 return false;
@@ -360,7 +381,12 @@ pub struct TcpTaskSender {
 
 impl TcpTaskSender {
     pub fn send(&self, task: WorkerTask) -> std::result::Result<(), mpsc::SendError<WorkerTask>> {
-        let frame = codec::frame_task(&task);
+        // An unframeable task (body past MAX_FRAME) is undeliverable on
+        // this wire; hand it back like a dead channel would, with its
+        // payload intact.
+        let Ok(frame) = codec::frame_task(&task) else {
+            return Err(mpsc::SendError(task));
+        };
         let mut writer = lock_writer(&self.writer);
         let ok = writer.write_all(&frame).is_ok();
         drop(writer);
@@ -386,8 +412,12 @@ pub struct TcpEventSender {
 
 impl TcpEventSender {
     pub fn send(&self, ev: WorkerEvent) -> std::result::Result<(), mpsc::SendError<WorkerEvent>> {
-        let Some(frame) = codec::frame_event(&ev) else {
-            return Ok(());
+        let frame = match codec::frame_event(&ev) {
+            Ok(Some(frame)) => frame,
+            Ok(None) => return Ok(()),
+            // Unframeable event: hand it back with its payload intact so
+            // the worker loop's recovery path recycles any pooled buffer.
+            Err(_) => return Err(mpsc::SendError(ev)),
         };
         let mut writer = lock_writer(&self.writer);
         let ok = writer.write_all(&frame).is_ok();
@@ -396,9 +426,11 @@ impl TcpEventSender {
             return Err(mpsc::SendError(ev));
         }
         self.stats.frame_sent(frame.len());
-        if let WorkerEvent::Block(c) = ev {
-            // The block is on the wire; its buffer is free again.
-            self.wire_pool.put(c.coded);
+        match ev {
+            // The payload is on the wire; its buffer is free again.
+            WorkerEvent::Block(c) => self.wire_pool.put(c.coded),
+            WorkerEvent::Partial(c) => self.wire_pool.put(c.coded),
+            _ => {}
         }
         Ok(())
     }
@@ -445,7 +477,7 @@ pub fn serve_worker(addr: impl ToSocketAddrs, registry: FactoryRegistry) -> Resu
     let stats = WireStats::default();
 
     // Handshake: Hello out, Assign in.
-    let hello = codec::frame_hello();
+    let hello = codec::frame_hello()?;
     stream.write_all(&hello)?;
     stats.frame_sent(hello.len());
     stream.set_read_timeout(Some(Duration::from_millis(CONNECT_DEADLINE_MS)))?;
@@ -472,7 +504,7 @@ pub fn serve_worker(addr: impl ToSocketAddrs, registry: FactoryRegistry) -> Resu
         let writer = writer.clone();
         let stats = stats.clone();
         let stop = stop.clone();
-        let frame = codec::frame_heartbeat(worker_id);
+        let frame = codec::frame_heartbeat(worker_id)?;
         let period = Duration::from_millis(heartbeat_ms.max(1));
         std::thread::Builder::new()
             .name(format!("bcgc-heartbeat-{worker_id}"))
@@ -524,6 +556,8 @@ pub fn serve_worker(addr: impl ToSocketAddrs, registry: FactoryRegistry) -> Resu
                 theta,
                 cycle_time,
                 unit_work,
+                slices,
+                parts,
             })) => {
                 let Some(factory) = registry.get(job) else {
                     let _ = events.send(WorkerEvent::Failed {
@@ -546,6 +580,8 @@ pub fn serve_worker(addr: impl ToSocketAddrs, registry: FactoryRegistry) -> Resu
                     factory,
                     cycle_time,
                     unit_work,
+                    slices,
+                    parts,
                 };
                 if task_tx.send(task).is_err() {
                     break;

@@ -97,6 +97,20 @@ fn ledger_accepts_writes_beside_their_witness() {
     assert_eq!(count(&f, Rule::LedgerDiscipline), 0);
 }
 
+/// PR 10: the streamed-part ledger counters ride the same discipline —
+/// a part acceptance is witnessed by its buffered arrival, a part-wise
+/// completion by the drain of the redundant whole arrivals, and the
+/// run-level accumulator only moves by the outcome's own count.
+#[test]
+fn ledger_covers_the_partial_counters() {
+    let rogue = "impl M {\n    fn bump(&mut self) {\n        self.partial_contributions += 1;\n    }\n    fn done(&mut self) {\n        self.partial_blocks += 1;\n    }\n    fn tally(&mut self) {\n        self.partial_decodes += 1;\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/master.rs", rogue);
+    assert_eq!(lines(&f, Rule::LedgerDiscipline), [3, 6, 9]);
+    let settled = "impl M {\n    fn accept(&mut self, c: PartialBlockContribution) {\n        self.part_arrivals[c.part].push((c.row, c.coded));\n        self.partial_contributions += 1;\n        self.wire_pool.put(b);\n    }\n    fn complete(&mut self) {\n        self.partial_blocks += 1;\n        for (_, buf) in self.arrivals.drain(..) {\n            self.wire_pool.put(buf);\n        }\n    }\n    fn tally(&mut self, outcome: &IterOutcome) {\n        self.partial_decodes += outcome.partial_blocks;\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/master.rs", settled);
+    assert_eq!(count(&f, Rule::LedgerDiscipline), 0, "findings: {f:?}");
+}
+
 #[test]
 fn ledger_reads_and_declarations_do_not_count() {
     let reads = "impl M {\n    fn report(&self) -> usize {\n        self.approx_decodes + self.approx_discarded\n    }\n}\nstruct S {\n    approx_reconciled: usize,\n}\n";
@@ -142,6 +156,32 @@ fn ownership_canary_counted_drop_without_recycle_is_caught() {
     );
     // By-ref observers never owned the buffer; their caller recycles.
     let by_ref = "impl M {\n    fn note_late(&mut self, c: &BlockContribution) {\n        self.late += 1;\n    }\n}\n";
+    assert_eq!(
+        count(&lint_source("rust/src/coordinator/master.rs", by_ref), Rule::BufferOwnership),
+        0
+    );
+}
+
+/// PR 10: streamed-part payloads carry pooled buffers exactly like
+/// whole blocks — a function that owns a `PartialBlockContribution`
+/// (by value, or by matching `WorkerEvent::Partial(`) and counts a
+/// drop must recycle on that path too.
+#[test]
+fn ownership_covers_streamed_part_payloads() {
+    let canary = "impl M {\n    fn drop_stale_part(&mut self, c: PartialBlockContribution) {\n        self.stale_epoch += 1;\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/master.rs", canary);
+    assert_eq!(lines(&f, Rule::BufferOwnership), [3]);
+    let fixed = "impl M {\n    fn drop_stale_part(&mut self, c: PartialBlockContribution) {\n        self.stale_epoch += 1;\n        self.wire_pool.put(c.coded);\n    }\n}\n";
+    assert_eq!(
+        count(&lint_source("rust/src/coordinator/master.rs", fixed), Rule::BufferOwnership),
+        0
+    );
+    // Matching the event variant marks ownership the same way.
+    let router = "impl P {\n    fn route(&mut self, ev: WorkerEvent) {\n        if let WorkerEvent::Partial(c) = ev {\n            self.cross_job_dropped += 1;\n        }\n    }\n}\n";
+    let f = lint_source("rust/src/coordinator/pool.rs", router);
+    assert_eq!(count(&f, Rule::BufferOwnership), 1, "findings: {f:?}");
+    // By-ref observers of a part never owned its buffer.
+    let by_ref = "impl M {\n    fn note(&mut self, c: &PartialBlockContribution) {\n        self.late += 1;\n    }\n}\n";
     assert_eq!(
         count(&lint_source("rust/src/coordinator/master.rs", by_ref), Rule::BufferOwnership),
         0
@@ -258,7 +298,7 @@ fn bench_stamping_requires_stamp_bench_meta() {
 fn full_tree_is_clean() {
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     let report = lint_tree(root).expect("tree walk failed");
-    assert!(report.files >= 44, "walked only {} files — wrong root?", report.files);
+    assert!(report.files >= 46, "walked only {} files — wrong root?", report.files);
     let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
     assert!(report.findings.is_empty(), "bcgc-lint findings:\n{}", rendered.join("\n"));
 }

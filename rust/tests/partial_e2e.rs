@@ -1,0 +1,198 @@
+//! Partial-straggler streaming, end to end on the threaded pool
+//! (PR 10): sample-granular dispatch and rotated per-part coded deltas
+//! must never change *what* decodes — only when.
+//!
+//! Three anchors:
+//!
+//! * **Exact decode every iteration** — with θ pinned (lr = 0) the
+//!   decoded gradient of a streaming job (`stream_parts ≥ 2`) equals
+//!   the direct full-dataset gradient every single iteration, and the
+//!   whole-block sample-granular variant (`stream_parts = 1`) agrees
+//!   too. Rotation parts re-order the f32 wire sums, so the comparison
+//!   is to accumulation tolerance, not bits.
+//! * **Span compute is bit-stable** — the executor contract the
+//!   streaming checkpoints ride on: a prefix + remainder pair of
+//!   [`bcgc::runtime::GradExecutor::grad_span_into`] calls into ONE
+//!   accumulator is bit-equal to the whole-span call (same per-sample
+//!   f32 addends in the same order).
+//! * **Approx ledger balances under overlap** — semi-async decodes with
+//!   streaming on still satisfy
+//!   `approx_decodes == approx_reconciled + approx_discarded`, with
+//!   both tenants completing and tenant isolation intact.
+
+use bcgc::coordinator::master::SemiAsyncConfig;
+use bcgc::coordinator::pool::{AsyncConfig, JobSpec, PoolConfig, WorkerPool};
+use bcgc::coordinator::straggler::StragglerSchedule;
+use bcgc::data::synthetic;
+use bcgc::distribution::shifted_exp::ShiftedExponential;
+use bcgc::optimizer::blocks::BlockPartition;
+use bcgc::optimizer::runtime_model::ProblemSpec;
+use bcgc::runtime::host::{HostExecutor, HostModel};
+use bcgc::runtime::{host_factory, GradExecutor};
+use bcgc::testing::suite_seed;
+use bcgc::util::rng::Rng;
+
+const N: usize = 6;
+
+fn stationary(mu: f64) -> StragglerSchedule {
+    StragglerSchedule::stationary(Box::new(ShiftedExponential::new(mu, 50.0)))
+}
+
+#[test]
+fn streaming_job_decodes_the_exact_gradient_every_iteration() {
+    // θ0 = 0 with lr = 0 keeps the model pinned, so EVERY iteration's
+    // decoded gradient must equal the direct full-dataset sum — for the
+    // whole-block sample-granular mode (parts = 1) and for genuine
+    // rotated streaming (parts = 2, 4). Parts that don't divide the
+    // per-row span exercise the uneven-stride boundaries.
+    let seed = suite_seed(101);
+    let steps = 12usize;
+    let dim = HostExecutor::mlp_dim(8, 16, 4);
+    let ds = synthetic::classification(8, 4, 16 * N, N, 0.2, seed).unwrap();
+
+    // Direct full-dataset gradient at θ0 = 0, f64-accumulated per span.
+    let mut exec = HostExecutor::new(ds.clone(), HostModel::Mlp { hidden: 16 }).unwrap();
+    let theta0 = vec![0.0f32; dim];
+    let mut g = vec![0.0f32; dim];
+    exec.grad_span_into(&theta0, 0, exec.num_samples(), &mut g).unwrap();
+    let want: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    assert!(want > 0.0);
+
+    for parts in [1usize, 2, 4] {
+        let mut pcfg = PoolConfig::new(N);
+        pcfg.seed = seed;
+        let mut pool = WorkerPool::new(pcfg, stationary(1e-3)).unwrap();
+        let spec = ProblemSpec::new(N, dim, 16 * N, 1.0);
+        JobSpec::new(spec, BlockPartition::single_level(N, 1, dim))
+            .steps(steps)
+            .lr(0.0) // pin θ so every decode is checkable against θ0
+            .eval_every(0)
+            .seed(seed)
+            .init_scale(0.0)
+            .stream_parts(parts)
+            .executor(host_factory(ds.clone(), HostModel::Mlp { hidden: 16 }))
+            .submit(&mut pool)
+            .unwrap();
+        pool.run_all().unwrap();
+        let report = pool.finish().unwrap().pop().unwrap();
+
+        assert_eq!(report.steps(), steps, "parts={parts}");
+        for m in &report.iters {
+            assert!(
+                (m.grad_norm - want).abs() < 1e-5 * (1.0 + want),
+                "parts={parts} iter {}: decoded {} vs direct {} — streamed parts must \
+                 sum to the exact whole-block gradient",
+                m.iter,
+                m.grad_norm,
+                want
+            );
+            assert_eq!(m.stale_epoch_contributions, 0, "parts={parts} iter {}", m.iter);
+        }
+        // The partial ledger mirrors the mode: rotation parts complete
+        // every block part-wise; the whole-block modes never touch it.
+        if parts >= 2 {
+            assert!(
+                report.partial_decodes > 0,
+                "parts={parts}: streaming ran but no block completed part-wise"
+            );
+            assert_eq!(report.partial_decodes, report.partial_blocks_total(), "parts={parts}");
+            for m in &report.iters {
+                assert_eq!(
+                    m.partial_blocks, m.blocks_decoded,
+                    "parts={parts} iter {}: a pure-streaming round must complete every \
+                     block part-wise",
+                    m.iter
+                );
+                assert!(m.partial_contributions > 0, "parts={parts} iter {}", m.iter);
+            }
+        } else {
+            assert_eq!(report.partial_decodes, 0, "parts={parts}");
+            assert_eq!(report.partial_blocks_total(), 0, "parts={parts}");
+        }
+    }
+}
+
+#[test]
+fn span_prefix_plus_remainder_is_bit_equal_to_the_whole_span() {
+    // The executor contract the worker's stride checkpoints rely on:
+    // splitting a span at ANY boundary and accumulating both pieces
+    // into one buffer reproduces the whole-span gradient bit for bit.
+    let seed = suite_seed(103);
+    let ds = synthetic::classification(8, 4, 16 * N, N, 0.2, seed).unwrap();
+    let mut exec = HostExecutor::new(ds, HostModel::Mlp { hidden: 16 }).unwrap();
+    let dim = exec.dim();
+    let total = exec.num_samples();
+    let mut rng = Rng::new(seed ^ 0xF00D);
+    let theta: Vec<f32> = (0..dim).map(|_| rng.normal() as f32 * 0.3).collect();
+
+    let (lo, hi) = (total / 8, total - total / 8);
+    let mut whole = vec![0.0f32; dim];
+    exec.grad_span_into(&theta, lo, hi, &mut whole).unwrap();
+    for k in 0..6 {
+        let mid = lo + (hi - lo) * k / 5;
+        let mut split = vec![0.0f32; dim];
+        exec.grad_span_into(&theta, lo, mid, &mut split).unwrap();
+        exec.grad_span_into(&theta, mid, hi, &mut split).unwrap();
+        assert!(
+            split.iter().zip(whole.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "mid={mid}: prefix+remainder must be bit-equal to the whole span"
+        );
+    }
+}
+
+#[test]
+fn semi_async_streaming_balances_the_approx_ledger() {
+    // Two streaming tenants under overlapped rounds with an aggressive
+    // semi-async policy: approximate decodes may fire on blocks whose
+    // part quorums haven't filled, and every one of them must be
+    // reconciled or discarded — never silently kept.
+    let seed = suite_seed(107);
+    let steps = [10usize, 7usize];
+    let dim = HostExecutor::mlp_dim(8, 16, 4);
+    let mut pcfg = PoolConfig::new(N);
+    pcfg.seed = seed;
+    pcfg.async_rounds = Some(AsyncConfig {
+        max_inflight: 2,
+        backlog_pricing: true,
+        reprice_threshold: 0.25,
+        semi_async: Some(SemiAsyncConfig {
+            max_shortfall: 1,
+            backlog_factor: 0.25,
+            max_residual: 1e9,
+        }),
+    });
+    let mut pool = WorkerPool::new(pcfg, stationary(1e-3)).unwrap();
+    for (j, &s) in steps.iter().enumerate() {
+        let ds = synthetic::classification(8, 4, 16 * N, N, 0.2, seed + j as u64).unwrap();
+        let spec = ProblemSpec::new(N, dim, 16 * N, 1.0);
+        JobSpec::new(spec, BlockPartition::single_level(N, 1, dim))
+            .steps(s)
+            .lr(2e-3)
+            .eval_every(4)
+            .seed(seed + 100 + j as u64)
+            .stream_parts(4)
+            .executor(host_factory(ds, HostModel::Mlp { hidden: 16 }))
+            .submit(&mut pool)
+            .unwrap();
+    }
+    pool.run_all_async().unwrap();
+    assert_eq!(pool.cross_job_dropped(), 0, "tenant isolation broke under streaming");
+    let reports = pool.finish().unwrap();
+    for (j, r) in reports.iter().enumerate() {
+        assert_eq!(r.steps(), steps[j], "job {j} dropped iterations");
+        assert!(r.iters.iter().all(|m| m.grad_norm.is_finite()), "job {j}");
+        assert_eq!(
+            r.approx_decodes,
+            r.approx_reconciled + r.approx_discarded,
+            "job {j} leaked approx decodes with streaming on"
+        );
+        assert_eq!(r.approx_decodes, r.approx_blocks_total(), "job {j}");
+        assert!(
+            r.partial_decodes > 0,
+            "job {j}: streaming tenants must complete blocks part-wise"
+        );
+        // Part buffers are pooled like whole-block payloads; the run
+        // must recycle them through the wire freelist.
+        assert!(r.wire_pool_returned > 0, "job {j}: no wire buffers recycled");
+    }
+}

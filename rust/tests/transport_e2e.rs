@@ -84,11 +84,14 @@ mod tcp {
     use std::thread;
     use std::time::Duration;
 
+    use bcgc::coordinator::channel::{BlockContribution, WorkerEvent};
     use bcgc::coordinator::metrics::MembershipEvent;
     use bcgc::coordinator::trainer::{train, ElasticConfig, TrainSession};
-    use bcgc::transport::codec::{frame_hello, read_frame, MAX_FRAME};
-    use bcgc::transport::tcp::{serve_worker, FactoryRegistry, TcpTransportConfig};
-    use bcgc::transport::{TransportConfig, WireSnapshot};
+    use bcgc::coordinator::PacingMode;
+    use bcgc::transport::codec::{frame_block, frame_hello, read_frame, MAX_FRAME};
+    use bcgc::transport::tcp::{serve_worker, FactoryRegistry, TcpTransport, TcpTransportConfig};
+    use bcgc::transport::{Transport, TransportConfig, WireSnapshot};
+    use bcgc::util::buffers::BufferPool;
 
     use super::*;
 
@@ -115,7 +118,7 @@ mod tcp {
         let (release_tx, release_rx) = mpsc::channel::<()>();
         thread::spawn(move || {
             let mut stream = TcpStream::connect(addr).expect("connect");
-            stream.write_all(&frame_hello()).expect("hello");
+            stream.write_all(&frame_hello().expect("fits")).expect("hello");
             let _assign = read_frame(&mut stream, MAX_FRAME).expect("assign");
             let _ = release_rx.recv_timeout(Duration::from_secs(60));
         });
@@ -127,7 +130,7 @@ mod tcp {
     fn spawn_eof_peer(addr: SocketAddr) -> thread::JoinHandle<()> {
         thread::spawn(move || {
             let mut stream = TcpStream::connect(addr).expect("connect");
-            stream.write_all(&frame_hello()).expect("hello");
+            stream.write_all(&frame_hello().expect("fits")).expect("hello");
             let _assign = read_frame(&mut stream, MAX_FRAME).expect("assign");
         })
     }
@@ -248,6 +251,72 @@ mod tcp {
         assert_eq!(redims, vec![(n, n - 1)]);
         assert!(report.iters.iter().all(|m| m.grad_norm.is_finite()));
         assert_eq!(report.iters.last().unwrap().workers, n - 1);
+    }
+
+    #[test]
+    fn a_slow_multi_chunk_frame_keeps_the_lease_alive() {
+        // Regression: the lease used to renew only on *complete* frames,
+        // so a peer dribbling one large block across many small writes
+        // under a short TTL was declared gone mid-transfer. Raw inbound
+        // bytes are proof of life now — the transfer below takes ~5× the
+        // TTL end to end, yet no `Left` may surface before the block.
+        let mut tcp = TcpTransportConfig::bind_loopback().unwrap();
+        tcp.lease_ttl_ms = 250;
+        tcp.heartbeat_ms = 40;
+        let addr = tcp.addr().unwrap();
+        let (event_tx, event_rx) = mpsc::channel();
+        let mut transport =
+            TcpTransport::new(tcp, event_tx, PacingMode::Virtual, BufferPool::default()).unwrap();
+
+        let peer = thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            stream.write_all(&frame_hello().expect("fits")).expect("hello");
+            let _assign = read_frame(&mut stream, MAX_FRAME).expect("assign");
+            let c = BlockContribution {
+                job: 0,
+                iter: 0,
+                epoch: 0,
+                worker: 0,
+                row: 0,
+                block_idx: 0,
+                virtual_time: 1.0,
+                coded: vec![1.0f32; 50_000],
+            };
+            let frame = frame_block(&c).expect("fits");
+            // ~200 KiB in 8 KiB chunks, 50 ms apart: every silence
+            // window stays far under the 250 ms TTL, but a whole-frame
+            // wait would blow through it five times over.
+            for chunk in frame.chunks(8 * 1024) {
+                stream.write_all(chunk).expect("chunk");
+                stream.flush().expect("flush");
+                thread::sleep(Duration::from_millis(50));
+            }
+            stream
+        });
+
+        transport.attach_worker(0).expect("attach");
+        let mut got_block = false;
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        while std::time::Instant::now() < deadline {
+            match event_rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(WorkerEvent::Joined { .. }) => {}
+                Ok(WorkerEvent::Block(c)) => {
+                    assert_eq!(c.coded.len(), 50_000);
+                    got_block = true;
+                    break;
+                }
+                Ok(WorkerEvent::Left { .. }) => {
+                    panic!("lease expired mid-transfer despite steady inbound bytes")
+                }
+                Ok(_) => panic!("unexpected event during the slow transfer"),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => panic!("transport hung up"),
+            }
+        }
+        assert!(got_block, "the slow block never arrived");
+        assert_eq!(transport.wire_stats().leases_expired, 0);
+        let _stream = peer.join().expect("peer thread");
+        transport.shutdown();
     }
 
     #[test]

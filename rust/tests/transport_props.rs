@@ -12,13 +12,13 @@
 use std::sync::Arc;
 
 use bcgc::coding::scheme::CodingScheme;
-use bcgc::coordinator::channel::{BlockContribution, WorkerTask};
+use bcgc::coordinator::channel::{BlockContribution, PartialBlockContribution, WorkerTask};
 use bcgc::coordinator::PacingMode;
 use bcgc::optimizer::blocks::BlockPartition;
 use bcgc::testing::{gens, Runner};
 use bcgc::transport::codec::{
     decode_frame, frame_assign, frame_block, frame_failed, frame_goodbye, frame_heartbeat,
-    frame_hello, frame_task, next_frame, read_frame, Frame, WireTask, MAX_FRAME,
+    frame_hello, frame_partial, frame_task, next_frame, read_frame, Frame, WireTask, MAX_FRAME,
 };
 use bcgc::util::rng::Rng;
 use bcgc::Error;
@@ -58,6 +58,28 @@ fn rand_block(rng: &mut Rng) -> BlockContribution {
     }
 }
 
+/// A rotation-part delta with the same adversarial payload coverage as
+/// [`rand_block`].
+fn rand_partial(rng: &mut Rng) -> PartialBlockContribution {
+    let base = rand_block(rng);
+    let parts = gens::usize_in(rng, 1, 9);
+    let samples_total = rng.below(1 << 20) as usize;
+    PartialBlockContribution {
+        job: base.job,
+        iter: base.iter,
+        epoch: base.epoch,
+        worker: base.worker,
+        row: base.row,
+        block_idx: base.block_idx,
+        part: rng.below(parts as u64) as usize,
+        parts,
+        samples_done: samples_total / 2,
+        samples_total,
+        virtual_time: base.virtual_time,
+        coded: base.coded,
+    }
+}
+
 fn bits32(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
 }
@@ -66,7 +88,7 @@ fn bits32(v: &[f32]) -> Vec<u32> {
 fn block_frames_roundtrip_bit_exactly() {
     Runner::default().run("block-roundtrip", |rng| {
         let c = rand_block(rng);
-        let frame = frame_block(&c);
+        let frame = frame_block(&c).map_err(|e| format!("frame: {e}"))?;
         let body =
             read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
         let Frame::Block(got) = decode_frame(&body).map_err(|e| format!("decode: {e}"))? else {
@@ -88,11 +110,42 @@ fn block_frames_roundtrip_bit_exactly() {
 }
 
 #[test]
+fn partial_frames_roundtrip_bit_exactly() {
+    Runner::default().run("partial-roundtrip", |rng| {
+        let c = rand_partial(rng);
+        let frame = frame_partial(&c).map_err(|e| format!("frame: {e}"))?;
+        let body =
+            read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
+        let Frame::Partial(got) = decode_frame(&body).map_err(|e| format!("decode: {e}"))? else {
+            return Err("decoded to a different frame kind".into());
+        };
+        if (got.job, got.iter, got.epoch, got.worker, got.row, got.block_idx)
+            != (c.job, c.iter, c.epoch, c.worker, c.row, c.block_idx)
+        {
+            return Err("header fields drifted".into());
+        }
+        if (got.part, got.parts, got.samples_done, got.samples_total)
+            != (c.part, c.parts, c.samples_done, c.samples_total)
+        {
+            return Err("rotation fields drifted".into());
+        }
+        if got.virtual_time.to_bits() != c.virtual_time.to_bits() {
+            return Err("virtual_time drifted".into());
+        }
+        if bits32(&got.coded) != bits32(&c.coded) {
+            return Err(format!("payload drifted at len {}", c.coded.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn control_frames_roundtrip() {
     Runner::default().run("control-roundtrip", |rng| {
         // Hello carries nothing but must still round-trip.
-        let body = read_frame(&mut frame_hello().as_slice(), MAX_FRAME)
-            .map_err(|e| format!("read: {e}"))?;
+        let hello = frame_hello().map_err(|e| format!("frame: {e}"))?;
+        let body =
+            read_frame(&mut hello.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
         if !matches!(decode_frame(&body).map_err(|e| format!("decode: {e}"))?, Frame::Hello) {
             return Err("hello did not round-trip".into());
         }
@@ -105,7 +158,7 @@ fn control_frames_roundtrip() {
         } else {
             PacingMode::RealScaled { ns_per_unit: rng.uniform_range(0.0, 1e9) }
         };
-        let frame = frame_assign(worker, ttl, hb, pacing);
+        let frame = frame_assign(worker, ttl, hb, pacing).map_err(|e| format!("frame: {e}"))?;
         let body =
             read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
         match decode_frame(&body).map_err(|e| format!("decode: {e}"))? {
@@ -118,7 +171,9 @@ fn control_frames_roundtrip() {
         }
 
         // Heartbeat / Goodbye: bare worker ids.
-        for (frame, goodbye) in [(frame_heartbeat(worker), false), (frame_goodbye(worker), true)] {
+        let hb_frame = frame_heartbeat(worker).map_err(|e| format!("frame: {e}"))?;
+        let gb_frame = frame_goodbye(worker).map_err(|e| format!("frame: {e}"))?;
+        for (frame, goodbye) in [(hb_frame, false), (gb_frame, true)] {
             let body =
                 read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
             match (decode_frame(&body).map_err(|e| format!("decode: {e}"))?, goodbye) {
@@ -142,7 +197,8 @@ fn control_frames_roundtrip() {
         let job = rng.below(1 << 20) as usize;
         let iter = rng.below(1 << 20) as usize;
         let fatal = rng.below(2) == 1;
-        let frame = frame_failed(worker, job, iter, &reason, fatal);
+        let frame =
+            frame_failed(worker, job, iter, &reason, fatal).map_err(|e| format!("frame: {e}"))?;
         let body =
             read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
         match decode_frame(&body).map_err(|e| format!("decode: {e}"))? {
@@ -185,6 +241,23 @@ fn compute_tasks_roundtrip_everything_but_the_factory() {
         let row = rng.below(n as u64) as usize;
         let cycle_time = rng.uniform_range(1e-6, 1e3);
         let unit_work = rng.uniform_range(1e-6, 1e3);
+        // Half the cases carry a sample-granular slice map + rotation
+        // parts, half stay on the shard-granular wire shape.
+        let slices = if rng.below(2) == 0 {
+            None
+        } else {
+            let mut lo = 0usize;
+            let map: Vec<(usize, usize)> = (0..n)
+                .map(|_| {
+                    let hi = lo + gens::usize_in(rng, 0, 40);
+                    let span = (lo, hi);
+                    lo = hi;
+                    span
+                })
+                .collect();
+            Some(Arc::new(map))
+        };
+        let parts = gens::usize_in(rng, 1, 8);
         let task = WorkerTask::Compute {
             job,
             iter,
@@ -196,9 +269,11 @@ fn compute_tasks_roundtrip_everything_but_the_factory() {
             factory: Arc::new(|_| Err(Error::Runtime("factories never cross the wire".into()))),
             cycle_time,
             unit_work,
+            slices: slices.clone(),
+            parts,
         };
 
-        let frame = frame_task(&task);
+        let frame = frame_task(&task).map_err(|e| format!("frame: {e}"))?;
         let body =
             read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
         let Frame::Task(WireTask::Compute {
@@ -211,12 +286,17 @@ fn compute_tasks_roundtrip_everything_but_the_factory() {
             theta: gt,
             cycle_time: gc,
             unit_work: gu,
+            slices: gsl,
+            parts: gp,
         }) = decode_frame(&body).map_err(|e| format!("decode: {e}"))?
         else {
             return Err("compute decoded to a different frame kind".into());
         };
         if (gj, gi, ge, gr) != (job, iter, epoch, row) {
             return Err("task header drifted".into());
+        }
+        if gsl.as_deref() != slices.as_deref() || gp != parts {
+            return Err("slice map / parts drifted".into());
         }
         if gc.to_bits() != cycle_time.to_bits() || gu.to_bits() != unit_work.to_bits() {
             return Err("task timing fields drifted".into());
@@ -240,7 +320,7 @@ fn compute_tasks_roundtrip_everything_but_the_factory() {
 
         // Drain / Shutdown round-trip as bare tags.
         for (task, want_drain) in [(WorkerTask::Drain, true), (WorkerTask::Shutdown, false)] {
-            let frame = frame_task(&task);
+            let frame = frame_task(&task).map_err(|e| format!("frame: {e}"))?;
             let body =
                 read_frame(&mut frame.as_slice(), MAX_FRAME).map_err(|e| format!("read: {e}"))?;
             let ok = match decode_frame(&body).map_err(|e| format!("decode: {e}"))? {
@@ -260,7 +340,7 @@ fn compute_tasks_roundtrip_everything_but_the_factory() {
 fn truncated_and_garbage_frames_error_not_panic() {
     Runner::default().run("fuzz-robustness", |rng| {
         // Every strict prefix of a well-formed body must error.
-        let frame = frame_block(&rand_block(rng));
+        let frame = frame_block(&rand_block(rng)).map_err(|e| format!("frame: {e}"))?;
         let body = &frame[4..];
         for cut in 0..body.len() {
             if decode_frame(&body[..cut]).is_ok() {
@@ -291,12 +371,14 @@ fn stream_parser_reassembles_frames_across_arbitrary_chunking() {
     Runner::default().run("chunked-reassembly", |rng| {
         let k = gens::usize_in(rng, 1, 6);
         let frames: Vec<Vec<u8>> = (0..k)
-            .map(|_| match rng.below(4) {
+            .map(|_| match rng.below(5) {
                 0 => frame_hello(),
                 1 => frame_heartbeat(rng.below(1 << 16) as usize),
                 2 => frame_goodbye(rng.below(1 << 16) as usize),
+                3 => frame_partial(&rand_partial(rng)),
                 _ => frame_block(&rand_block(rng)),
             })
+            .map(|f| f.expect("small frames always fit"))
             .collect();
         let stream: Vec<u8> = frames.iter().flatten().copied().collect();
 
